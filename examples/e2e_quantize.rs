@@ -1,0 +1,143 @@
+//! End-to-end driver: all layers of the stack composing on one workload.
+//!
+//! Pipeline exercised (after `make artifacts`, which runs the L2/L1 Python
+//! side once):
+//!
+//!   1. load the AOT artifacts (manifest + folded weights + HLO),
+//!   2. verify integer executor == PJRT-executed HLO == recorded JAX
+//!      logits on the parity vector,
+//!   3. run a 256-image synthetic batch workload through the integer
+//!      executor, measuring throughput,
+//!   4. run the same workload through the PJRT float path, compare
+//!      classifications,
+//!   5. simulate the FPGA deployment of this exact model (from the
+//!      manifest's layer shapes) and print the projected speedup of the
+//!      RMSMP ratio vs the Fixed-only baseline.
+//!
+//! The run is recorded in EXPERIMENTS.md §E2E.
+//!
+//! Run: `cargo run --release --example e2e_quantize`
+
+use std::time::Instant;
+
+use rmsmp::fpga::{simulate, Board, CoreCosts, Design, QuantConfig};
+use rmsmp::model::{Executor, Manifest, ModelWeights};
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::Ratio;
+use rmsmp::runtime::{artifacts_dir, Runtime};
+use rmsmp::util::json::Json;
+use rmsmp::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir.join("manifest.json"))?;
+    let weights = ModelWeights::load(&dir.join("weights.bin"))?;
+    let (n_in, c, h, w) = (
+        manifest.input_shape[0],
+        manifest.input_shape[1],
+        manifest.input_shape[2],
+        manifest.input_shape[3],
+    );
+    println!(
+        "[1] loaded {}: {} layers, ratio {}, {}x{}x{} input, {:.1}x compression",
+        manifest.model,
+        manifest.layers.len(),
+        manifest.ratio,
+        c, h, w,
+        weights.float_bytes() as f64 / weights.quantized_bytes() as f64,
+    );
+
+    // --- 2. three-way parity ----------------------------------------------
+    let parity = Json::load(&dir.join("parity.json"))?;
+    let input = parity.get("input")?.as_f32_vec()?;
+    let want = parity.get("logits")?.as_f32_vec()?;
+    let mut exec = Executor::new(manifest.clone(), weights.clone())?;
+    let mut x0 = Tensor4::zeros(n_in, c, h, w);
+    x0.data.copy_from_slice(&input);
+    let got = exec.infer(x0)?;
+    let int_err = got.data.iter().zip(&want).fold(0.0f32, |e, (a, b)| e.max((a - b).abs()));
+
+    let rt = Runtime::cpu()?;
+    let exe = rt.load(&dir.join("model.hlo.txt"))?;
+    let hlo_out = exe.run_f32(&[(&input, &[n_in, c, h, w])])?;
+    let hlo_err = hlo_out.iter().zip(&want).fold(0.0f32, |e, (a, b)| e.max((a - b).abs()));
+    println!("[2] parity: integer-vs-jax {int_err:.6}, hlo-vs-jax {hlo_err:.6}");
+    anyhow::ensure!(int_err < 1e-3 && hlo_err < 1e-3, "parity failure");
+
+    // --- 3. integer throughput workload ------------------------------------
+    let total = 256usize;
+    let batch = n_in;
+    let mut rng = Rng::new(1);
+    let t0 = Instant::now();
+    let mut int_classes = Vec::with_capacity(total);
+    for _ in 0..total / batch {
+        let mut x = Tensor4::zeros(batch, c, h, w);
+        for v in x.data.iter_mut() {
+            *v = rng.uniform(0.0, 1.0);
+        }
+        let y = exec.infer(x)?;
+        for b in 0..batch {
+            int_classes.push(argmax(y.row(b)));
+        }
+    }
+    let int_dt = t0.elapsed().as_secs_f64();
+    let gmacs = exec.macs as f64 / 1e9;
+    println!(
+        "[3] integer path: {total} images in {int_dt:.2}s ({:.1} img/s, {:.2} GMAC total)",
+        total as f64 / int_dt,
+        gmacs
+    );
+
+    // --- 4. PJRT float path on the same workload ---------------------------
+    let mut rng = Rng::new(1); // same stream
+    let t1 = Instant::now();
+    let mut agree = 0usize;
+    for chunk in 0..total / batch {
+        let data: Vec<f32> = (0..batch * c * h * w).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let out = exe.run_f32(&[(&data, &[batch, c, h, w])])?;
+        let classes_per = out.len() / batch;
+        for b in 0..batch {
+            let cls = argmax(&out[b * classes_per..(b + 1) * classes_per]);
+            if cls == int_classes[chunk * batch + b] {
+                agree += 1;
+            }
+        }
+    }
+    let hlo_dt = t1.elapsed().as_secs_f64();
+    println!(
+        "[4] pjrt path: {total} images in {hlo_dt:.2}s ({:.1} img/s); class agreement {agree}/{total}",
+        total as f64 / hlo_dt
+    );
+    anyhow::ensure!(agree == total, "integer and HLO paths classify differently");
+
+    // --- 5. FPGA projection -------------------------------------------------
+    let layers = manifest.layer_shapes();
+    let rmsmp = Design::allocate(
+        Board::XC7Z045,
+        QuantConfig { ratio: manifest.ratio, first_last_8bit: false, apot: false },
+        CoreCosts::default(),
+    );
+    let baseline = Design::allocate(
+        Board::XC7Z045,
+        QuantConfig { ratio: Ratio::new(0, 100, 0), first_last_8bit: true, apot: false },
+        CoreCosts::default(),
+    );
+    let r1 = simulate(&rmsmp, &layers);
+    let r0 = simulate(&baseline, &layers);
+    println!(
+        "[5] FPGA projection (XC7Z045, this model): RMSMP {:.2} ms vs Fixed-baseline {:.2} ms -> {:.2}x speedup",
+        r1.latency_ms,
+        r0.latency_ms,
+        r0.latency_ms / r1.latency_ms
+    );
+    println!("e2e OK");
+    Ok(())
+}
+
+fn argmax(xs: &[f32]) -> usize {
+    xs.iter()
+        .enumerate()
+        .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .map(|(i, _)| i)
+        .unwrap_or(0)
+}

@@ -1,0 +1,46 @@
+//! FPGA ratio sweep: find the optimal PoT:Fixed4:Fixed8 ratio per board.
+//!
+//! Reproduces the paper's design-space exploration behind Table 6's
+//! "optimal ratio" claims (60:35:5 on XC7Z020, 65:30:5 on XC7Z045): sweep
+//! the PoT share with Fixed-W8A4 pinned at 5% (paper §3.2), simulate the
+//! ResNet-18/ImageNet workload, and report throughput/latency/utilization.
+//!
+//! Run: `cargo run --release --example fpga_sweep`
+
+use rmsmp::fpga::{simulate, Board, CoreCosts, Design, QuantConfig};
+use rmsmp::quant::Ratio;
+
+fn main() {
+    let layers = rmsmp::fpga::sim::resnet18_imagenet_layers();
+    for board in [Board::XC7Z020, Board::XC7Z045] {
+        println!("\n== {} ({} LUTs, {} DSPs) ==", board.name, board.luts, board.dsps);
+        println!("{:>10} {:>7} {:>7} {:>12} {:>10}", "ratio", "LUT%", "DSP%", "GOP/s", "ms/img");
+        let mut best: Option<(Ratio, f64)> = None;
+        for pot in [0u32, 20, 35, 50, 60, 65, 70, 80, 90, 95] {
+            let fixed8 = 5u32;
+            let fixed4 = 100 - pot - fixed8;
+            let ratio = Ratio::new(pot, fixed4, fixed8);
+            let d = Design::allocate(
+                board,
+                QuantConfig { ratio, first_last_8bit: false, apot: false },
+                CoreCosts::default(),
+            );
+            let r = simulate(&d, &layers);
+            println!(
+                "{:>10} {:>6.0}% {:>6.0}% {:>12.1} {:>10.2}",
+                ratio.to_string(),
+                100.0 * r.lut_util,
+                100.0 * r.dsp_util,
+                r.gops,
+                r.latency_ms
+            );
+            if best.is_none() || r.gops > best.unwrap().1 {
+                best = Some((ratio, r.gops));
+            }
+        }
+        let (ratio, gops) = best.unwrap();
+        println!("best ratio on {}: {ratio} ({gops:.1} GOP/s)", board.name);
+        println!("(paper: 60:35:5 on XC7Z020, 65:30:5 on XC7Z045 — accuracy");
+        println!(" constraints cap the usable PoT share; see Fig. 3 / fig3.md)");
+    }
+}

@@ -1,0 +1,70 @@
+//! Quickstart: the RMSMP public API in one file.
+//!
+//! 1. Build a weight matrix, assign row-wise schemes under the 65:30:5
+//!    ratio (Alg. 1: sensitivity top-5% -> Fixed-8, low-variance -> PoT).
+//! 2. Quantize to integer codes and run the mixed GEMM.
+//! 3. Check the integer result against the float fake-quant reference.
+//! 4. Size the FPGA design for the same ratio and report Table-6-style
+//!    numbers.
+//!
+//! Run: `cargo run --release --example quickstart`
+
+use rmsmp::assign::{assign_layer, equivalent_bits, Sensitivity};
+use rmsmp::fpga::{simulate, Board, CoreCosts, Design, QuantConfig};
+use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights};
+use rmsmp::quant::{default_alpha, Mat, Ratio, Scheme};
+use rmsmp::util::rng::Rng;
+
+fn main() {
+    // --- 1. a layer's weights (64 filters x 288 inputs) -------------------
+    let (rows, cols) = (64, 288);
+    let mut rng = Rng::new(42);
+    let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.5));
+
+    let ratio = Ratio::RMSMP2; // 65:30:5, the paper's XC7Z045 optimum
+    let schemes = assign_layer(&w, ratio, Sensitivity::WeightNorm, Scheme::PotW4A4);
+    let (pot, f4, f8) = (
+        schemes.iter().filter(|&&s| s == Scheme::PotW4A4).count(),
+        schemes.iter().filter(|&&s| s == Scheme::FixedW4A4).count(),
+        schemes.iter().filter(|&&s| s == Scheme::FixedW8A4).count(),
+    );
+    println!("assignment @ {ratio}: PoT-W4A4={pot} Fixed-W4A4={f4} Fixed-W8A4={f8}");
+    println!("equivalent precision: {:.2} bits/weight", equivalent_bits(&schemes, cols));
+
+    // --- 2. quantize + mixed GEMM -----------------------------------------
+    let alpha: Vec<f32> = (0..rows).map(|r| default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    println!(
+        "weights: {} KiB float -> {} KiB quantized",
+        4 * rows * cols / 1024,
+        packed.storage_bits() / 8 / 1024
+    );
+
+    let batch = 8;
+    let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect());
+    let acts = PackedActs::quantize(&x, 1.0, 4);
+    let gemm = MixedGemm::new();
+    let y = gemm.run(&acts, &packed);
+
+    // --- 3. verify against the float fake-quant reference -----------------
+    let y_ref = gemm.run_float(&x, &w, &schemes, &alpha, 1.0, 4);
+    let err = y.max_abs_err(&y_ref);
+    println!("integer vs fake-quant GEMM: max |err| = {err:.6} (expect < 1e-3)");
+    assert!(err < 1e-3);
+
+    // --- 4. FPGA design for this ratio ------------------------------------
+    let design = Design::allocate(
+        Board::XC7Z045,
+        QuantConfig { ratio, first_last_8bit: false, apot: false },
+        CoreCosts::default(),
+    );
+    let r = simulate(&design, &rmsmp::fpga::sim::resnet18_imagenet_layers());
+    println!(
+        "XC7Z045 @ {ratio}: LUT {:.0}% DSP {:.0}% -> {:.1} GOP/s, {:.1} ms / image",
+        100.0 * r.lut_util,
+        100.0 * r.dsp_util,
+        r.gops,
+        r.latency_ms
+    );
+    println!("quickstart OK");
+}

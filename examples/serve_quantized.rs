@@ -1,0 +1,69 @@
+//! Serving example: load the AOT artifacts, start the dynamic-batching
+//! coordinator, drive it with an open-loop Poisson workload, and report
+//! latency percentiles + throughput — the L3 request path end to end
+//! (Python never runs here).
+//!
+//! Run after `make artifacts`:
+//!     cargo run --release --example serve_quantized [rate_rps] [n_requests]
+
+use std::time::{Duration, Instant};
+
+use rmsmp::coordinator::batcher::BatchPolicy;
+use rmsmp::coordinator::{OpenLoopGen, Server, ServerConfig};
+use rmsmp::model::{Manifest, ModelWeights};
+use rmsmp::runtime::artifacts_dir;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().collect();
+    let rate: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(20.0);
+    let n: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(80);
+
+    let dir = artifacts_dir();
+    let manifest = Manifest::load(&dir.join("manifest.json"))?;
+    let weights = ModelWeights::load(&dir.join("weights.bin"))?;
+    println!(
+        "serving {} ({} layers, ratio {}) — {n} requests at {rate} req/s",
+        manifest.model,
+        manifest.layers.len(),
+        manifest.ratio
+    );
+
+    let image_len = manifest.input_shape[1] * manifest.input_shape[2] * manifest.input_shape[3];
+    let server = Server::start(
+        manifest,
+        weights,
+        ServerConfig {
+            workers: 1,
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: Duration::from_millis(4),
+                queue_cap: 512,
+            },
+        },
+    )?;
+
+    let mut gen = OpenLoopGen::new(7, rate, image_len);
+    let trace = gen.trace(n);
+    let t0 = Instant::now();
+    let mut rxs = Vec::with_capacity(n);
+    for ev in &trace {
+        if let Some(sleep) = Duration::from_secs_f64(ev.at_s).checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match server.submit(ev.image.clone()) {
+            Ok(rx) => rxs.push(rx),
+            Err(e) => println!("rejected (backpressure): {e:?}"),
+        }
+    }
+    let mut ok = 0;
+    for rx in rxs {
+        if rx.recv().is_ok() {
+            ok += 1;
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("completed {ok}/{n} in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
+    println!("{}", server.metrics.summary());
+    server.shutdown();
+    Ok(())
+}

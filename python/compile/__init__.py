@@ -1,0 +1,5 @@
+"""RMSMP build-time package: L1 Pallas kernels, L2 JAX models/QAT, AOT export.
+
+Never imported at runtime — the Rust binary consumes only the artifacts this
+package emits (``make artifacts``).
+"""

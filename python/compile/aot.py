@@ -1,0 +1,129 @@
+"""AOT entry point: build, quantize, and export the inference artifacts.
+
+Usage (from python/):
+
+    python -m compile.aot --out ../artifacts [--model resnet18]
+                          [--ratio 65:30:5] [--train-steps 0] [--size 32]
+
+Emits into the output directory:
+
+    model.hlo.txt      quantized folded forward (Pallas kernels lowered in)
+    gemm.hlo.txt       standalone row-wise mixed GEMM kernel (microbench)
+    weights.bin        folded weights + schemes + alphas (Rust integer path)
+    manifest.json      graph program + layer table + config
+    testvec/*.json     cross-language quantizer test vectors
+    parity.json        input/output pair for runtime parity checks
+
+Python never runs at serving time; the Rust binary consumes these files.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import data, export, train
+from .kernels import ref, rowwise_gemm
+from .models import make, module_for
+from . import testvec as testvec_mod
+
+
+def build_model(args):
+    cfg = make(args.model, num_classes=args.classes)
+    model = module_for(cfg)
+    params, qstates = model.init(jax.random.PRNGKey(args.seed), cfg)
+    if args.train_steps > 0:
+        n = max(args.train_steps * args.batch, 256)
+        tr = data.image_dataset(args.classes, n=n, size=args.size, seed=args.seed)
+        te = data.image_dataset(args.classes, n=256, size=args.size,
+                                seed=args.seed, split="test")
+        tcfg = train.TrainConfig(epochs=1, batch_size=args.batch,
+                                 ratio=tuple(args.ratio), seed=args.seed)
+        res = train.train(cfg, tr, te, tcfg, quant=True, init_params=params)
+        params = res.params
+        print(f"  trained {args.train_steps} steps, eval acc {res.eval_acc:.3f}")
+    return cfg, params
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--model", default="resnet18",
+                    choices=["resnet18", "resnet50", "mobilenetv2"])
+    ap.add_argument("--ratio", default="65:30:5")
+    ap.add_argument("--classes", type=int, default=10)
+    ap.add_argument("--size", type=int, default=32)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--train-steps", type=int, default=0)
+    ap.add_argument("--seed", type=int, default=0)
+    args = ap.parse_args()
+    args.ratio = [int(v) for v in args.ratio.split(":")]
+    assert sum(args.ratio) == 100
+
+    os.makedirs(args.out, exist_ok=True)
+    print(f"[aot] building {args.model} ratio={args.ratio}")
+    cfg, params = build_model(args)
+
+    # 1. fold + assign + calibrate
+    lys, prog = export.fold_model(params, cfg)
+    export.assign_folded(lys, tuple(args.ratio))
+    probe, _ = data.image_dataset(args.classes, n=16, size=args.size,
+                                  seed=args.seed)
+    export.calibrate_folded(lys, prog, probe)
+
+    # 2. HLO artifacts
+    in_shape = (args.batch, 3, args.size, args.size)
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    fn = lambda x: (export.infer_folded(lys, prog, x, use_pallas=True),)
+    hlo = export.to_hlo_text(fn, spec)
+    with open(os.path.join(args.out, "model.hlo.txt"), "w") as f:
+        f.write(hlo)
+    print(f"[aot] model.hlo.txt ({len(hlo)} chars)")
+
+    gb, gr, gc = 8, 64, 576
+    gemm_fn = lambda x, w, a, s: (rowwise_gemm.rowwise_mixed_gemm(
+        x, w, a, s, act_alpha=1.0),)
+    gemm_hlo = export.to_hlo_text(
+        gemm_fn,
+        jax.ShapeDtypeStruct((gb, gc), jnp.float32),
+        jax.ShapeDtypeStruct((gr, gc), jnp.float32),
+        jax.ShapeDtypeStruct((gr,), jnp.float32),
+        jax.ShapeDtypeStruct((gr,), jnp.int32),
+    )
+    with open(os.path.join(args.out, "gemm.hlo.txt"), "w") as f:
+        f.write(gemm_hlo)
+    print(f"[aot] gemm.hlo.txt ({len(gemm_hlo)} chars) shape=({gb},{gr},{gc})")
+
+    # 3. weights + manifest
+    export.write_weights_bin(os.path.join(args.out, "weights.bin"), lys)
+    manifest = export.manifest_dict(cfg, lys, prog, args.ratio, in_shape)
+    manifest["gemm_shape"] = [gb, gr, gc]
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] weights.bin + manifest.json ({len(lys)} layers)")
+
+    # 4. parity vector: quantized forward on a fixed input
+    x0 = jnp.asarray(probe[: args.batch])
+    y0 = export.infer_folded(lys, prog, x0, use_pallas=False)
+    with open(os.path.join(args.out, "parity.json"), "w") as f:
+        json.dump({
+            "input": np.asarray(x0).reshape(-1).tolist(),
+            "input_shape": list(x0.shape),
+            "logits": np.asarray(y0).reshape(-1).tolist(),
+            "logits_shape": list(y0.shape),
+        }, f)
+    print("[aot] parity.json")
+
+    # 5. cross-language quantizer test vectors
+    tv_dir = os.path.join(args.out, "testvec")
+    testvec_mod.write_all(tv_dir)
+    print(f"[aot] testvec/ -> {tv_dir}")
+
+
+if __name__ == "__main__":
+    main()

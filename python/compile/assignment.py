@@ -1,0 +1,112 @@
+"""Row-wise scheme/precision assignment (paper Alg. 1, lines 2-14).
+
+Given the offline ratio  PoT-4 : Fixed-4 : Fixed-8 = A : B : C  (A+B+C=100),
+for each layer:
+
+1. rows with top-C% Hessian max eigenvalue              -> Fixed-W8A4
+2. remaining rows sorted by weight variance; the lowest
+   A/(A+B) fraction                                      -> PoT-W4A4
+3. the rest                                              -> Fixed-W4A4
+
+The ratio is enforced *exactly* per layer (layer-wise uniformality): counts
+are rounded with largest-remainder so every layer has the same scheme mix —
+the property the heterogeneous GEMM cores rely on (DESIGN.md §1).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def ratio_counts(rows: int, ratio: tuple[int, int, int]) -> tuple[int, int, int]:
+    """Largest-remainder split of ``rows`` into the A:B:C ratio."""
+    a, b, c = ratio
+    tot = a + b + c
+    exact = np.array([rows * a / tot, rows * b / tot, rows * c / tot])
+    base = np.floor(exact).astype(int)
+    rem = rows - base.sum()
+    order = np.argsort(-(exact - base))
+    for i in range(rem):
+        base[order[i]] += 1
+    return int(base[0]), int(base[1]), int(base[2])
+
+
+def assign_layer(w2d, ratio: tuple[int, int, int], eigen=None,
+                 nonlinear: int = ref.POT_W4A4) -> np.ndarray:
+    """Scheme codes for one layer's (rows, cols) weight view.
+
+    eigen: optional (rows,) Hessian max-eigenvalue estimates. When absent
+    (e.g. before the first Hessian pass) the C% falls back to weight-norm
+    ranking, which HAWQ shows is the zeroth-order proxy.
+    nonlinear: scheme code for the non-linear class (PoT for RMSMP; APoT for
+    the MSQ-style baseline rows of Tables 1/6).
+    """
+    w = np.asarray(w2d)
+    rows = w.shape[0]
+    na, nb, nc = ratio_counts(rows, ratio)
+
+    sens = np.asarray(eigen) if eigen is not None else np.linalg.norm(w, axis=1)
+    scheme = np.full((rows,), ref.FIXED_W4A4, np.int32)
+
+    # 1. top-C% most sensitive rows get the higher precision.
+    hi = np.argsort(-sens, kind="stable")[:nc]
+    scheme[hi] = ref.FIXED_W8A4
+
+    # 2. remaining rows: the na lowest-variance rows -> non-linear scheme
+    #    (PoT levels crowd near zero, so it fits low-variance rows, §3.1).
+    rest = np.setdiff1d(np.arange(rows), hi, assume_unique=False)
+    var = w.var(axis=1)
+    rest_sorted = rest[np.argsort(var[rest], kind="stable")]
+    scheme[rest_sorted[:na]] = nonlinear
+    # rest default to Fixed-W4A4 (nb rows)
+    return scheme
+
+
+def assign_model(weight_views: dict, ratio: tuple[int, int, int],
+                 eigens: dict | None = None,
+                 nonlinear: int = ref.POT_W4A4) -> dict:
+    """Assign schemes for every quantized layer; returns {name: (rows,) i32}."""
+    out = {}
+    for name, w2d in weight_views.items():
+        e = eigens.get(name) if eigens else None
+        out[name] = assign_layer(w2d, ratio, e, nonlinear)
+    return out
+
+
+def update_qstates(qstates: dict, weight_views: dict,
+                   ratio: tuple[int, int, int], eigens: dict | None = None,
+                   nonlinear: int = ref.POT_W4A4) -> dict:
+    """New qstates with refreshed schemes and per-row alphas (Alg. 1 l.2-14)."""
+    schemes = assign_model(weight_views, ratio, eigens, nonlinear)
+    new = {}
+    for name, qs in qstates.items():
+        w2d = weight_views[name]
+        new[name] = dict(qs, scheme=jnp.asarray(schemes[name]),
+                         w_alpha=ref.default_alpha(w2d, axis=1))
+    return new
+
+
+def scheme_histogram(qstates: dict) -> dict:
+    """Per-layer counts of (PoT4, Fixed4, Fixed8) — used by tests and the
+    manifest to verify layer-wise uniformality."""
+    out = {}
+    for name, qs in qstates.items():
+        s = np.asarray(qs["scheme"])
+        out[name] = (int((s == ref.POT_W4A4).sum()),
+                     int((s == ref.FIXED_W4A4).sum()),
+                     int((s == ref.FIXED_W8A4).sum()))
+    return out
+
+
+def equivalent_bits(qstates: dict) -> float:
+    """Weighted average weight bit-width (the paper's 'equivalent precision'):
+    PoT4 and Fixed4 rows count 4 bits, Fixed8 rows count 8."""
+    tot, bits = 0, 0.0
+    for qs in qstates.values():
+        s = np.asarray(qs["scheme"])
+        tot += s.size
+        bits += 4.0 * (s != ref.FIXED_W8A4).sum() + 8.0 * (s == ref.FIXED_W8A4).sum()
+    return bits / max(tot, 1)

@@ -1,0 +1,93 @@
+"""Synthetic datasets (DESIGN.md §3 substitutions for CIFAR/ImageNet/GLUE).
+
+Image tasks — ``synth{K}``: class-conditional images built from a per-class
+low-frequency template + per-class texture frequency + noise; learnable by a
+small CNN in a few hundred steps yet non-trivial (noise keeps Bayes accuracy
+< 100%), so quantization-induced accuracy deltas are visible.
+
+Text tasks — ``sst2-syn`` (2-class) / ``mnli-syn`` (3-class): token sequences
+where the class is the majority vote of class-indicative token groups with
+distractors, mimicking sentiment/NLI surface statistics.
+
+Everything is deterministic in (seed, split).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+
+def _class_templates(rng, num_classes: int, ch: int, size: int) -> np.ndarray:
+    """Low-frequency per-class templates in [0, 1]."""
+    base = rng.normal(size=(num_classes, ch, 4, 4)).astype(np.float32)
+    # bilinear upsample 4x4 -> size x size
+    t = np.zeros((num_classes, ch, size, size), np.float32)
+    xs = np.linspace(0, 3, size)
+    x0 = np.floor(xs).astype(int).clip(0, 2)
+    fx = xs - x0
+    for i in range(num_classes):
+        for c in range(ch):
+            g = base[i, c]
+            rows = (g[x0, :] * (1 - fx)[:, None] + g[x0 + 1, :] * fx[:, None])
+            t[i, c] = rows[:, x0] * (1 - fx)[None, :] + rows[:, x0 + 1] * fx[None, :]
+    t = (t - t.min()) / (t.max() - t.min() + 1e-8)
+    return t
+
+
+def image_dataset(num_classes: int = 10, n: int = 2048, size: int = 32,
+                  ch: int = 3, seed: int = 0, split: str = "train",
+                  noise: float = 0.25):
+    """Returns (images (n, ch, size, size) f32 in [0,1), labels (n,) int32)."""
+    rng = np.random.default_rng(seed * 7919 + (0 if split == "train" else 104729))
+    tpl_rng = np.random.default_rng(seed)  # templates shared across splits
+    templates = _class_templates(tpl_rng, num_classes, ch, size)
+    freqs = tpl_rng.uniform(1.0, float(max(2, size // 4)), size=(num_classes,))
+    labels = rng.integers(0, num_classes, size=n).astype(np.int32)
+    yy, xx = np.meshgrid(np.arange(size), np.arange(size), indexing="ij")
+    imgs = np.empty((n, ch, size, size), np.float32)
+    for i in range(n):
+        c = labels[i]
+        phase = rng.uniform(0, 2 * np.pi)
+        tex = 0.5 + 0.5 * np.sin(2 * np.pi * freqs[c] * (xx + yy) / size + phase)
+        img = 0.55 * templates[c] + 0.2 * tex[None] + noise * rng.random((ch, size, size))
+        imgs[i] = img
+    imgs = np.clip(imgs / imgs.max(axis=(1, 2, 3), keepdims=True), 0.0, 0.999)
+    return imgs.astype(np.float32), labels
+
+
+def text_dataset(task: str = "sst2-syn", n: int = 2048, seq: int = 32,
+                 vocab: int = 256, seed: int = 0, split: str = "train"):
+    """Returns (tokens (n, seq) int32, labels (n,) int32, num_classes)."""
+    num_classes = 2 if task.startswith("sst2") else 3
+    rng = np.random.default_rng(seed * 6101 + (0 if split == "train" else 15485863))
+    grp_rng = np.random.default_rng(seed + 17)
+    # Disjoint class-indicative token groups + shared distractor pool.
+    perm = grp_rng.permutation(vocab)
+    g = (vocab // 2) // num_classes
+    groups = [perm[i * g:(i + 1) * g] for i in range(num_classes)]
+    distractors = perm[num_classes * g:]
+    tokens = np.empty((n, seq), np.int64)
+    labels = rng.integers(0, num_classes, size=n).astype(np.int32)
+    for i in range(n):
+        c = labels[i]
+        k = rng.integers(seq // 4, seq // 2)  # indicative tokens
+        row = rng.choice(distractors, size=seq)
+        pos = rng.choice(seq, size=k, replace=False)
+        row[pos] = rng.choice(groups[c], size=k)
+        # inject a few tokens of a wrong class as noise
+        other = (c + 1) % num_classes
+        npos = rng.choice(seq, size=max(1, seq // 10), replace=False)
+        row[npos] = rng.choice(groups[other], size=len(npos))
+        tokens[i] = row
+    return tokens.astype(np.int32), labels, num_classes
+
+
+def batches(x, y, batch_size: int, seed: int = 0, epochs: int = 1):
+    """Shuffled minibatch iterator (drops the ragged tail)."""
+    n = x.shape[0]
+    for e in range(epochs):
+        rng = np.random.default_rng(seed + e)
+        idx = rng.permutation(n)
+        for i in range(0, n - batch_size + 1, batch_size):
+            j = idx[i:i + batch_size]
+            yield x[j], y[j]

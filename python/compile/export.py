@@ -1,0 +1,375 @@
+"""Inference export: BN folding, graph program, binary weights, HLO lowering.
+
+The deployment pipeline (what `make artifacts` ships to the Rust runtime):
+
+1. **Fold** every BatchNorm into its preceding conv (`bn_fold`), producing a
+   flat list of conv/linear layers with biases.
+2. **Re-assign** schemes/alphas on the folded weights (folding rescales rows,
+   so per-row alphas and the variance split are recomputed — same Alg. 1
+   machinery).
+3. **Emit**:
+   * ``model.hlo.txt``   — the quantized folded forward lowered via the L1
+     Pallas kernels (interpret mode -> plain HLO), loadable by the xla crate.
+   * ``weights.bin``     — integer-ready weights/schemes/alphas for the Rust
+     integer executor (format below).
+   * ``manifest.json``   — graph program + layer table + shapes + ratio.
+
+The graph *program* is a tiny SSA-ish op list (conv / linear / add / gap)
+interpreted identically by ``infer_folded`` here (for HLO lowering and
+parity tests) and by ``rust/src/model/graph.rs`` (integer path).
+
+``weights.bin`` layout (little-endian):
+    magic   b"RMSW"  u32 version=1  u32 n_layers
+    per layer:
+      u32 name_len, name bytes (utf-8)
+      u8  kind (0=conv 1=linear)   u8 relu_after (unused, 0)
+      u32 rows, cols               # quantization view (rows = filters)
+      u32 out_ch in_ch kh kw stride pad groups   # conv only (else zeros)
+      f32 a_alpha
+      rows * u8   scheme codes
+      rows * f32  alpha
+      rows * f32  bias
+      rows*cols * f32 weights (row-major, folded)
+"""
+
+from __future__ import annotations
+
+import struct
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import assignment, layers as L
+from .kernels import ref
+from .models import module_for
+
+
+# ---------------------------------------------------------------------------
+# Folding: model params -> flat layer dicts + graph program.
+# ---------------------------------------------------------------------------
+def _folded_conv(name, conv_p, bn_p, stride, groups=1):
+    if bn_p is not None:
+        f = L.bn_fold(conv_p, bn_p)
+        w, b = f["w"], f["b"]
+    else:
+        w = conv_p["w"]
+        b = conv_p.get("b", jnp.zeros((w.shape[0],), jnp.float32))
+    return {
+        "name": name, "kind": "conv", "w": w, "b": b,
+        "stride": stride, "pad": (w.shape[-1] - 1) // 2, "groups": groups,
+    }
+
+
+def _folded_linear(name, p):
+    return {"name": name, "kind": "linear", "w": p["w"], "b": p["b"],
+            "stride": 0, "pad": 0, "groups": 1}
+
+
+def fold_resnet(params, cfg):
+    """Returns (layers: [dict], program: [op dict])."""
+    lys, prog = [], []
+    lys.append(_folded_conv("stem", params["stem"], params["bn_stem"], 1))
+    prog.append({"op": "conv", "layer": "stem", "in": "in0", "out": "t", "relu": True})
+    t = 0  # running buffer id; ops read/write names "b{t}"
+
+    def buf(i):
+        return f"b{i}"
+
+    prog[-1]["in"], prog[-1]["out"] = "in0", buf(0)
+    for s, n in enumerate(cfg["blocks"]):
+        for b in range(n):
+            name = f"s{s}b{b}"
+            stride = 2 if (b == 0 and s > 0) else 1
+            p = params[name]
+            inp = buf(t)
+            if cfg["bottleneck"]:
+                lys.append(_folded_conv(f"{name}.conv1", p["conv1"], p["bn1"], 1))
+                prog.append({"op": "conv", "layer": f"{name}.conv1", "in": inp, "out": buf(t + 1), "relu": True})
+                lys.append(_folded_conv(f"{name}.conv2", p["conv2"], p["bn2"], stride))
+                prog.append({"op": "conv", "layer": f"{name}.conv2", "in": buf(t + 1), "out": buf(t + 2), "relu": True})
+                lys.append(_folded_conv(f"{name}.conv3", p["conv3"], p["bn3"], 1))
+                prog.append({"op": "conv", "layer": f"{name}.conv3", "in": buf(t + 2), "out": buf(t + 3), "relu": False})
+                t += 3
+            else:
+                lys.append(_folded_conv(f"{name}.conv1", p["conv1"], p["bn1"], stride))
+                prog.append({"op": "conv", "layer": f"{name}.conv1", "in": inp, "out": buf(t + 1), "relu": True})
+                lys.append(_folded_conv(f"{name}.conv2", p["conv2"], p["bn2"], 1))
+                prog.append({"op": "conv", "layer": f"{name}.conv2", "in": buf(t + 1), "out": buf(t + 2), "relu": False})
+                t += 2
+            main_out = buf(t)  # output of the block's main branch
+            if "down" in p:
+                lys.append(_folded_conv(f"{name}.down", p["down"], p["bn_down"], stride))
+                prog.append({"op": "conv", "layer": f"{name}.down", "in": inp, "out": buf(t + 1), "relu": False})
+                t += 1
+                sc = buf(t)
+            else:
+                sc = inp
+            assert sc != main_out, "residual branches must use distinct buffers"
+            prog.append({"op": "add", "a": main_out, "b": sc, "out": buf(t + 1), "relu": True})
+            t += 1
+    prog.append({"op": "gap", "in": buf(t), "out": buf(t + 1)})
+    t += 1
+    lys.append(_folded_linear("fc", params["fc"]))
+    prog.append({"op": "linear", "layer": "fc", "in": buf(t), "out": "logits"})
+    return lys, prog
+
+
+def fold_mobilenet(params, cfg):
+    from .models.mobilenet import _block_strides
+
+    lys, prog = [], []
+    lys.append(_folded_conv("stem", params["stem"], params["bn_stem"], 1))
+    prog.append({"op": "conv", "layer": "stem", "in": "in0", "out": "b0", "relu": True})
+    t = 0
+    # channel count of each buffer, to decide residual legality (must match
+    # mobilenet.apply's `inp.shape == h.shape` rule)
+    ch = {"b0": params["stem"]["w"].shape[0]}
+
+    def buf(i):
+        return f"b{i}"
+
+    for bi, stride in enumerate(_block_strides(cfg)):
+        name = f"ir{bi}"
+        p = params[name]
+        inp = buf(t)
+        cur = inp
+        if "expand" in p:
+            lys.append(_folded_conv(f"{name}.expand", p["expand"], p["bn_e"], 1))
+            prog.append({"op": "conv", "layer": f"{name}.expand", "in": cur, "out": buf(t + 1), "relu": True})
+            t += 1
+            cur = buf(t)
+            ch[cur] = p["expand"]["w"].shape[0]
+        mid = p["dw"]["w"].shape[0]
+        lys.append(_folded_conv(f"{name}.dw", p["dw"], p["bn_d"], stride, groups=mid))
+        prog.append({"op": "conv", "layer": f"{name}.dw", "in": cur, "out": buf(t + 1), "relu": True})
+        t += 1
+        ch[buf(t)] = mid
+        lys.append(_folded_conv(f"{name}.project", p["project"], p["bn_p"], 1))
+        prog.append({"op": "conv", "layer": f"{name}.project", "in": buf(t), "out": buf(t + 1), "relu": False})
+        t += 1
+        out_ch = p["project"]["w"].shape[0]
+        ch[buf(t)] = out_ch
+        if stride == 1 and ch[inp] == out_ch:
+            prog.append({"op": "add", "a": buf(t), "b": inp, "out": buf(t + 1), "relu": False})
+            t += 1
+            ch[buf(t)] = out_ch
+    lys.append(_folded_conv("head", params["head"], params["bn_head"], 1))
+    prog.append({"op": "conv", "layer": "head", "in": buf(t), "out": buf(t + 1), "relu": True})
+    t += 1
+    prog.append({"op": "gap", "in": buf(t), "out": buf(t + 1)})
+    t += 1
+    lys.append(_folded_linear("fc", params["fc"]))
+    prog.append({"op": "linear", "layer": "fc", "in": buf(t), "out": "logits"})
+    return lys, prog
+
+
+def fold_model(params, cfg):
+    if cfg["arch"] == "resnet":
+        return fold_resnet(params, cfg)
+    if cfg["arch"] == "mobilenet":
+        return fold_mobilenet(params, cfg)
+    raise ValueError(f"no folded export for arch {cfg['arch']!r}")
+
+
+# ---------------------------------------------------------------------------
+# Assignment on folded weights.
+# ---------------------------------------------------------------------------
+def folded_views(lys):
+    return {l["name"]: l["w"].reshape(l["w"].shape[0], -1) for l in lys}
+
+
+def assign_folded(lys, ratio, eigens=None, nonlinear=ref.POT_W4A4):
+    """Attach scheme/alpha per layer dict (in place) and return them."""
+    views = folded_views(lys)
+    schemes = assignment.assign_model(views, ratio, eigens, nonlinear)
+    for l in lys:
+        v = views[l["name"]]
+        l["scheme"] = schemes[l["name"]]
+        l["alpha"] = np.asarray(ref.default_alpha(v, axis=1))
+        l.setdefault("a_alpha", 4.0)
+    return schemes
+
+
+def calibrate_folded(lys, prog, x_probe, pct=99.5):
+    """Set per-layer a_alpha from a float forward of the folded graph."""
+    bufs = {"in0": jnp.asarray(x_probe)}
+    by_name = {l["name"]: l for l in lys}
+    for op in prog:
+        if op["op"] in ("conv", "linear"):
+            l = by_name[op["layer"]]
+            x = bufs[op["in"]]
+            l["a_alpha"] = float(np.percentile(np.abs(np.asarray(x)), pct))
+            y = _float_layer(l, x)
+            if op.get("relu"):
+                y = jax.nn.relu(y)
+            bufs[op["out"]] = y
+        elif op["op"] == "add":
+            y = bufs[op["a"]] + bufs[op["b"]]
+            if op.get("relu"):
+                y = jax.nn.relu(y)
+            bufs[op["out"]] = y
+        elif op["op"] == "gap":
+            bufs[op["out"]] = jnp.mean(bufs[op["in"]], axis=(2, 3))
+    return bufs["logits"]
+
+
+def _float_layer(l, x):
+    if l["kind"] == "conv":
+        y = jax.lax.conv_general_dilated(
+            x, l["w"], (l["stride"], l["stride"]),
+            [(l["pad"], l["pad"])] * 2,
+            dimension_numbers=("NCHW", "OIHW", "NCHW"),
+            feature_group_count=l["groups"])
+        return y + l["b"][None, :, None, None]
+    return x @ l["w"].T + l["b"]
+
+
+# ---------------------------------------------------------------------------
+# Quantized folded forward (the graph the HLO artifact contains).
+# ---------------------------------------------------------------------------
+def infer_folded(lys, prog, x, use_pallas: bool = False, act_bits: int = 4):
+    """Quantized inference over the folded graph — the exact computation the
+    Rust integer executor performs, expressed in jnp/Pallas for lowering."""
+    from .kernels import quantizers as qz
+
+    by_name = {l["name"]: l for l in lys}
+    bufs = {"in0": x}
+    for op in prog:
+        if op["op"] in ("conv", "linear"):
+            l = by_name[op["layer"]]
+            xin = bufs[op["in"]]
+            w = l["w"]
+            rows = w.shape[0]
+            w2d = w.reshape(rows, -1)
+            alpha = jnp.asarray(l["alpha"])
+            scheme = jnp.asarray(l["scheme"])
+            a_alpha = float(l["a_alpha"])
+            if use_pallas:
+                wq2d = qz.rowwise_quant(w2d, alpha, scheme)
+            else:
+                wq2d = ref.rowwise_quant(w2d, alpha, scheme)
+            if l["kind"] == "conv":
+                if use_pallas:
+                    xq = _act_quant_nchw_pallas(xin, a_alpha, act_bits)
+                else:
+                    xq = ref.act_quant(xin, a_alpha, act_bits)
+                y = jax.lax.conv_general_dilated(
+                    xq, wq2d.reshape(w.shape), (l["stride"], l["stride"]),
+                    [(l["pad"], l["pad"])] * 2,
+                    dimension_numbers=("NCHW", "OIHW", "NCHW"),
+                    feature_group_count=l["groups"])
+                y = y + l["b"][None, :, None, None]
+            else:
+                if use_pallas:
+                    xq = qz.act_quant(xin, a_alpha, act_bits)
+                else:
+                    xq = ref.act_quant(xin, a_alpha, act_bits)
+                # dot_general (contract dim 1 vs 1) instead of `@ wq2d.T`:
+                # the transpose form lowers with a non-default {0,1} layout
+                # that xla_extension 0.5.1 mis-executes (see DESIGN.md).
+                y = jax.lax.dot_general(
+                    xq, wq2d, (((1,), (1,)), ((), ()))) + l["b"]
+            if op.get("relu"):
+                y = jax.nn.relu(y)
+            bufs[op["out"]] = y
+        elif op["op"] == "add":
+            y = bufs[op["a"]] + bufs[op["b"]]
+            if op.get("relu"):
+                y = jax.nn.relu(y)
+            bufs[op["out"]] = y
+        elif op["op"] == "gap":
+            bufs[op["out"]] = jnp.mean(bufs[op["in"]], axis=(2, 3))
+        else:
+            raise ValueError(f"unknown op {op['op']!r}")
+    return bufs["logits"]
+
+
+def _act_quant_nchw_pallas(x, alpha, bits):
+    from .kernels import quantizers as qz
+
+    n, c, h, w = x.shape
+    return qz.act_quant(x.reshape(n, c * h * w), alpha, bits).reshape(x.shape)
+
+
+# ---------------------------------------------------------------------------
+# Binary weights writer.
+# ---------------------------------------------------------------------------
+def write_weights_bin(path, lys):
+    with open(path, "wb") as f:
+        f.write(b"RMSW")
+        f.write(struct.pack("<II", 1, len(lys)))
+        for l in lys:
+            name = l["name"].encode()
+            w = np.asarray(l["w"], np.float32)
+            rows = w.shape[0]
+            w2d = w.reshape(rows, -1)
+            kind = 0 if l["kind"] == "conv" else 1
+            f.write(struct.pack("<I", len(name)))
+            f.write(name)
+            f.write(struct.pack("<BB", kind, 0))
+            f.write(struct.pack("<II", rows, w2d.shape[1]))
+            if l["kind"] == "conv":
+                oc, ic, kh, kw = w.shape
+                f.write(struct.pack("<IIIIIII", oc, ic, kh, kw,
+                                    l["stride"], l["pad"], l["groups"]))
+            else:
+                f.write(struct.pack("<IIIIIII", rows, w2d.shape[1], 1, 1, 0, 0, 1))
+            f.write(struct.pack("<f", float(l["a_alpha"])))
+            f.write(np.asarray(l["scheme"], np.uint8).tobytes())
+            f.write(np.asarray(l["alpha"], np.float32).tobytes())
+            f.write(np.asarray(l["b"], np.float32).tobytes())
+            f.write(w2d.astype("<f4").tobytes())
+
+
+def manifest_dict(cfg, lys, prog, ratio, input_shape):
+    import json as _json
+
+    return {
+        "model": cfg["name"],
+        "arch": cfg["arch"],
+        "num_classes": cfg["num_classes"],
+        "input_shape": list(input_shape),
+        "ratio": list(ratio),
+        "act_bits": 4,
+        "layers": [
+            {
+                "name": l["name"], "kind": l["kind"],
+                "rows": int(l["w"].shape[0]),
+                "cols": int(np.prod(l["w"].shape[1:])),
+                "stride": l["stride"], "pad": l["pad"], "groups": l["groups"],
+                "a_alpha": float(l["a_alpha"]),
+                "scheme_counts": _counts(l["scheme"]),
+            }
+            for l in lys
+        ],
+        "program": prog,
+    }
+
+
+def _counts(scheme):
+    s = np.asarray(scheme)
+    return [int((s == i).sum()) for i in range(4)]
+
+
+# ---------------------------------------------------------------------------
+# HLO text lowering (the gotcha-aware path; see /opt/xla-example/README.md).
+# ---------------------------------------------------------------------------
+def to_hlo_text(fn, *example_args) -> str:
+    """Lower a jax function to HLO text via stablehlo -> XlaComputation.
+
+    HLO *text* (not serialized proto) is the interchange format: jax >= 0.5
+    emits 64-bit instruction ids that xla_extension 0.5.1 rejects; the text
+    parser reassigns ids.
+
+    `print_large_constants=True` is ESSENTIAL: the default printer elides
+    big literals as ``constant({...})``, which xla_extension 0.5.1's text
+    parser silently materializes as zeros — the lowered weights vanish.
+    """
+    from jax._src.lib import xla_client as xc
+
+    lowered = jax.jit(fn).lower(*example_args)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text(print_large_constants=True)

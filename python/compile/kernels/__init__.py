@@ -1,0 +1,1 @@
+"""L1: Pallas kernels (quantizers, row-wise mixed GEMM) + pure-jnp oracles."""

@@ -1,0 +1,165 @@
+"""L1 Pallas fake-quantization kernels.
+
+Row-tiled quantizer kernels used by the L2 model's forward pass. Each kernel
+processes a (block_rows, block_cols) VMEM tile of the weight matrix plus the
+per-row metadata (alpha, scheme) for that row block, and writes the
+fake-quantized tile.
+
+Hardware adaptation (see DESIGN.md §Hardware-Adaptation): the paper's
+per-row scheme dispatch onto heterogeneous FPGA PE arrays becomes a
+branchless per-row select inside one kernel — on TPU all three dequant paths
+are cheap VPU element-wise ops, and the select keeps the tile dense for the
+MXU consumer downstream.
+
+All kernels run with ``interpret=True`` (CPU PJRT cannot execute Mosaic
+custom-calls); on a real TPU the same code lowers to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+
+INTERPRET = True  # CPU PJRT: interpret mode is mandatory (see module doc).
+
+
+def _pad_to(x, mult, axis, value=0.0):
+    """Pad ``x`` along ``axis`` up to a multiple of ``mult``."""
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, rem)
+    return jnp.pad(x, widths, constant_values=value)
+
+
+def _block(n: int, pref: int) -> int:
+    """Pick a block size: the preferred tile unless the dim is smaller."""
+    return min(pref, max(n, 1))
+
+
+# ---------------------------------------------------------------------------
+# Element-wise quantizer bodies (shared by the kernels; identical math to
+# ref.py so kernel-vs-oracle tests are exact).
+# ---------------------------------------------------------------------------
+def _fixed_body(t, m: int):
+    n = float(2 ** (m - 1) - 1)
+    return jnp.round(t * n) / n
+
+
+def _pot_body(t, m: int):
+    k = 2 ** (m - 1) - 2
+    mag = jnp.abs(t)
+    sign = jnp.sign(t)
+    safe = jnp.maximum(mag, 2.0 ** (-k - 4))
+    e = jnp.clip(jnp.round(jnp.log2(safe)), -k, 0)
+    q = 2.0**e
+    zero = mag < (2.0 ** (-k)) / 2.0
+    return sign * jnp.where(zero, 0.0, q)
+
+
+def _clip(w, alpha):
+    return jnp.clip(w / alpha, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Kernels.
+# ---------------------------------------------------------------------------
+def _fixed_kernel(w_ref, alpha_ref, o_ref, *, m: int):
+    a = alpha_ref[...][:, None]
+    t = _clip(w_ref[...], a)
+    o_ref[...] = a * _fixed_body(t, m)
+
+
+def _pot_kernel(w_ref, alpha_ref, o_ref, *, m: int):
+    a = alpha_ref[...][:, None]
+    t = _clip(w_ref[...], a)
+    o_ref[...] = a * _pot_body(t, m)
+
+
+def _rowwise_kernel(w_ref, alpha_ref, scheme_ref, o_ref):
+    """Branchless row-wise mixed-scheme fake quant (PoT4 / Fixed4 / Fixed8)."""
+    a = alpha_ref[...][:, None]
+    s = scheme_ref[...][:, None]
+    t = _clip(w_ref[...], a)
+    qp = _pot_body(t, 4)
+    qf4 = _fixed_body(t, 4)
+    qf8 = _fixed_body(t, 8)
+    o_ref[...] = a * jnp.where(
+        s == ref.POT_W4A4, qp, jnp.where(s == ref.FIXED_W4A4, qf4, qf8)
+    )
+
+
+def _act_kernel(x_ref, o_ref, *, m: int, alpha: float):
+    n = float(2**m - 1)
+    t = jnp.clip(x_ref[...] / alpha, 0.0, 1.0)
+    o_ref[...] = alpha * jnp.round(t * n) / n
+
+
+# ---------------------------------------------------------------------------
+# Public entry points (pad → pallas_call → slice).
+# ---------------------------------------------------------------------------
+def _rowwise_call(kernel, w, alpha, extra, br: int = 128, bc: int = 256):
+    rows, cols = w.shape
+    br = _block(rows, br)
+    bc = _block(cols, bc)
+    wp = _pad_to(_pad_to(w, br, 0), bc, 1)
+    ap = _pad_to(alpha, br, 0, value=1.0)
+    args = [wp, ap]
+    specs = [
+        pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        pl.BlockSpec((br,), lambda i, j: (i,)),
+    ]
+    for e in extra:
+        args.append(_pad_to(e, br, 0))
+        specs.append(pl.BlockSpec((br,), lambda i, j: (i,)))
+    grid = (wp.shape[0] // br, wp.shape[1] // bc)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=specs,
+        out_specs=pl.BlockSpec((br, bc), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(wp.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(*args)
+    return out[:rows, :cols]
+
+
+def fixed_quant(w, alpha, m: int):
+    """Pallas row-tiled Fixed fake quant; matches ``ref.fixed_quant``."""
+    return _rowwise_call(functools.partial(_fixed_kernel, m=m), w, alpha, ())
+
+
+def pot_quant(w, alpha, m: int):
+    """Pallas row-tiled PoT fake quant; matches ``ref.pot_quant``."""
+    return _rowwise_call(functools.partial(_pot_kernel, m=m), w, alpha, ())
+
+
+def rowwise_quant(w, alpha, scheme):
+    """Pallas row-wise mixed-scheme fake quant; matches ``ref.rowwise_quant``."""
+    return _rowwise_call(_rowwise_kernel, w, alpha, (scheme.astype(jnp.int32),))
+
+
+def act_quant(x, alpha: float, m: int, bm: int = 128, bn: int = 256):
+    """Pallas unsigned activation fake quant; matches ``ref.act_quant``."""
+    orig_shape = x.shape
+    x2 = x.reshape(-1, orig_shape[-1]) if x.ndim != 2 else x
+    r, c = x2.shape
+    bm = _block(r, bm)
+    bn = _block(c, bn)
+    xp = _pad_to(_pad_to(x2, bm, 0), bn, 1)
+    out = pl.pallas_call(
+        functools.partial(_act_kernel, m=m, alpha=float(alpha)),
+        grid=(xp.shape[0] // bm, xp.shape[1] // bn),
+        in_specs=[pl.BlockSpec((bm, bn), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(xp.shape, jnp.float32),
+        interpret=INTERPRET,
+    )(xp)
+    return out[:r, :c].reshape(orig_shape)

@@ -1,0 +1,250 @@
+"""Pure-jnp reference oracles for the RMSMP quantizers and GEMMs.
+
+These implement the paper's equations directly and serve as the correctness
+ground truth for (a) the Pallas kernels in this package and (b) the bit-exact
+Rust implementations in ``rust/src/quant`` / ``rust/src/gemm`` (via shared
+test vectors emitted by ``python -m compile.testvec``).
+
+Conventions
+-----------
+* All quantizers are symmetric with a per-row scaling factor ``alpha``
+  (the paper quantizes per filter / per row of the weight matrix).
+* ``m`` is the bit-width *including* the sign bit, matching Eq. (1)/(4).
+* Activations are always Fixed (the paper quantizes activations to Fixed so
+  a PoT weight x Fixed activation multiply becomes a bit shift).
+
+Scheme codes (shared with Rust, ``rust/src/quant/scheme.rs``)::
+
+    0 = PoT-W4A4     1 = Fixed-W4A4     2 = Fixed-W8A4
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Scheme codes shared across L1/L2/L3. Codes 0-2 are the RMSMP classes the
+# hardware kernel implements; code 3 (APoT) exists for the Table 1/6
+# baseline schemes and is only used on the training/reference path.
+POT_W4A4 = 0
+FIXED_W4A4 = 1
+FIXED_W8A4 = 2
+APOT_W4A4 = 3
+
+SCHEME_NAMES = {POT_W4A4: "PoT-W4A4", FIXED_W4A4: "Fixed-W4A4",
+                FIXED_W8A4: "Fixed-W8A4", APOT_W4A4: "APoT-W4A4"}
+
+
+# ---------------------------------------------------------------------------
+# Eq. (3): clip w to [-1, 1] in units of alpha.
+# ---------------------------------------------------------------------------
+def clip_scale(w, alpha):
+    """``⌈w, α⌋`` from Eq. (3): w/alpha clipped into [-1, 1]."""
+    return jnp.clip(w / alpha, -1.0, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (1)-(2): Fixed-point quantizer.
+# ---------------------------------------------------------------------------
+def fixed_levels(m: int) -> jnp.ndarray:
+    """Positive quantization levels of m-bit Fixed (Eq. 1), without alpha."""
+    n = 2 ** (m - 1) - 1
+    return jnp.arange(0, n + 1, dtype=jnp.float32) / n
+
+
+def fixed_quant(w, alpha, m: int):
+    """Project w onto Q^Fixed(m, alpha) (Eq. 1-3).
+
+    Symmetric m-bit fixed point: the quantized value is
+    ``alpha * round(clip(w/alpha) * (2^{m-1}-1)) / (2^{m-1}-1)``.
+
+    This is the standard simplification of Eq. (2): the h(.)/h^{-1}(.)
+    affine shuffle with a (2^m - 1)-level rounding grid over [0, 1] is
+    exactly a (2^{m-1} - 1)-step symmetric grid over [-1, 1] once the
+    half-step offset cancels. We use the symmetric form because it is what
+    integer hardware (and our Rust GEMM cores) executes: an i(m) weight
+    code in [-(2^{m-1}-1), 2^{m-1}-1].
+    """
+    n = float(2 ** (m - 1) - 1)
+    t = clip_scale(w, alpha)
+    return alpha * jnp.round(t * n) / n
+
+
+def fixed_quant_code(w, alpha, m: int):
+    """Integer weight code in [-(2^{m-1}-1), +(2^{m-1}-1)] (what hardware stores)."""
+    n = float(2 ** (m - 1) - 1)
+    return jnp.round(clip_scale(w, alpha) * n).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Eq. (4)-(5): Power-of-Two quantizer.
+# ---------------------------------------------------------------------------
+def pot_levels(m: int) -> jnp.ndarray:
+    """Positive quantization levels of m-bit PoT (Eq. 4), without alpha.
+
+    {0} ∪ {2^-(2^{m-1}-2), ..., 2^-1, 2^0}; one bit is the sign, so there
+    are 2^{m-1}-1 nonzero exponent levels plus zero.
+    """
+    k = 2 ** (m - 1) - 2  # smallest exponent magnitude
+    exps = jnp.arange(-k, 1, dtype=jnp.float32)  # -k .. 0
+    return jnp.concatenate([jnp.zeros((1,), jnp.float32), 2.0**exps])
+
+
+def pot_quant(w, alpha, m: int):
+    """Project w onto Q^PoT(m, alpha) (Eq. 4-5).
+
+    Magnitudes round to the nearest power of two in log2 space; magnitudes
+    below the midpoint of the smallest level quantize to 0. Matches Eq. (5)
+    with the symmetric (sign + exponent) reading used by the hardware.
+    """
+    k = 2 ** (m - 1) - 2
+    t = clip_scale(w, alpha)
+    mag = jnp.abs(t)
+    sign = jnp.sign(t)
+    # round(log2 mag) with mag clamped into representable range.
+    safe = jnp.maximum(mag, 2.0 ** (-k - 4))
+    e = jnp.clip(jnp.round(jnp.log2(safe)), -k, 0)
+    q = 2.0**e
+    # Zero threshold: below half of the smallest nonzero level -> 0.
+    # (Eq. 5 uses 2^(-2^m + 1) in its h-domain formulation; in the
+    # symmetric domain the cut sits between 0's basin and 2^-k. We use
+    # half the smallest level, which is what a shift-only datapath
+    # implements.)
+    zero = mag < (2.0 ** (-k)) / 2.0
+    return alpha * sign * jnp.where(zero, 0.0, q)
+
+
+def pot_quant_code(w, alpha, m: int):
+    """(sign, exponent) code: sign in {-1,0,1}, exponent in [-k, 0].
+
+    Hardware stores sign + unsigned shift amount ``s = -e`` in m-1 bits,
+    with a reserved code for 0.
+    """
+    k = 2 ** (m - 1) - 2
+    t = clip_scale(w, alpha)
+    mag = jnp.abs(t)
+    sign = jnp.sign(t).astype(jnp.int32)
+    safe = jnp.maximum(mag, 2.0 ** (-k - 4))
+    e = jnp.clip(jnp.round(jnp.log2(safe)), -k, 0).astype(jnp.int32)
+    zero = mag < (2.0 ** (-k)) / 2.0
+    sign = jnp.where(zero, 0, sign)
+    e = jnp.where(zero, 0, e)
+    return sign, e
+
+
+# ---------------------------------------------------------------------------
+# APoT (Li et al. 2020) — baseline scheme for Table 1 / Table 6 rows.
+# ---------------------------------------------------------------------------
+def apot_levels(m: int) -> jnp.ndarray:
+    """Positive APoT levels for m bits (sum of two PoT terms), max-normalized.
+
+    Follows APoT's 4-bit weight construction: two additive terms, each from
+    a small PoT set, giving denser levels than PoT at the tails. For m = 4:
+    p0 in {0, 2^0, 2^-2, 2^-4}, p1 in {0, 2^-1, 2^-3, 2^-5};
+    levels = sorted unique (p0 + p1), 8 nonnegative levels after dedup-trim.
+    Other m fall back to a two-group generalization.
+    """
+    import numpy as np  # static table: computed in numpy so it traces as a constant
+
+    if m <= 2:
+        return jnp.asarray([0.0, 1.0], jnp.float32)
+    if m == 4:
+        # sign + 3 magnitude bits = 2-bit term + 1-bit term (k = 2):
+        # p0 in {0, 2^0, 2^-2, 2^-4}, p1 in {0, 2^-1} -> 8 distinct sums.
+        p0 = np.asarray([0.0, 1.0, 2.0**-2, 2.0**-4], np.float32)
+        p1 = np.asarray([0.0, 2.0**-1], np.float32)
+    else:
+        # generic k = 2 split of the m-1 magnitude bits into ceil/floor halves
+        b0 = (m - 1 + 1) // 2
+        b1 = (m - 1) - b0
+        p0 = np.concatenate(
+            [np.zeros((1,)), 2.0 ** -np.arange(0.0, 2.0 * (2**b0 - 1), 2.0)]
+        ).astype(np.float32)
+        p1 = np.concatenate(
+            [np.zeros((1,)), 2.0 ** -np.arange(1.0, 2.0 * (2**b1 - 1) + 1, 2.0)]
+        ).astype(np.float32)
+    lv = np.unique((p0[:, None] + p1[None, :]).reshape(-1))
+    return jnp.asarray(lv / lv.max(), jnp.float32)
+
+
+def project_levels(w, alpha, levels):
+    """Project w/alpha onto the nearest of ±levels (levels are nonnegative)."""
+    t = clip_scale(w, alpha)
+    mag = jnp.abs(t)[..., None]
+    idx = jnp.argmin(jnp.abs(mag - levels), axis=-1)
+    q = levels[idx]
+    return alpha * jnp.sign(t) * q
+
+
+def apot_quant(w, alpha, m: int):
+    """Project w onto the APoT grid (baseline for Table 1/6)."""
+    return project_levels(w, alpha, apot_levels(m))
+
+
+# ---------------------------------------------------------------------------
+# Activation quantizer: unsigned Fixed (post-ReLU) or signed Fixed.
+# ---------------------------------------------------------------------------
+def act_quant(x, alpha, m: int, signed: bool = False):
+    """Quantize activations to m-bit Fixed with clipping threshold alpha.
+
+    Post-ReLU activations are unsigned: levels {0, ..., 2^m - 1} / (2^m - 1).
+    The signed variant mirrors fixed_quant (used pre-GELU in the BERT path).
+    """
+    if signed:
+        return fixed_quant(x, alpha, m)
+    n = float(2**m - 1)
+    t = jnp.clip(x / alpha, 0.0, 1.0)
+    return alpha * jnp.round(t * n) / n
+
+
+def act_quant_code(x, alpha, m: int):
+    """Unsigned activation code in [0, 2^m - 1]."""
+    n = float(2**m - 1)
+    return jnp.round(jnp.clip(x / alpha, 0.0, 1.0) * n).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Row-wise mixed-scheme quantization (the RMSMP weight projector).
+# ---------------------------------------------------------------------------
+def rowwise_quant(w, alpha, scheme):
+    """Quantize each row of ``w`` per its scheme code.
+
+    Args:
+      w:       (rows, cols) float32 weight matrix.
+      alpha:   (rows,) per-row scaling factors.
+      scheme:  (rows,) int32 scheme codes (0=PoT4, 1=Fixed4, 2=Fixed8).
+
+    Returns: (rows, cols) fake-quantized float32 weights.
+    """
+    a = alpha[:, None]
+    qp = pot_quant(w, a, 4)
+    qf4 = fixed_quant(w, a, 4)
+    qf8 = fixed_quant(w, a, 8)
+    qa4 = apot_quant(w, a, 4)
+    s = scheme[:, None]
+    return jnp.where(
+        s == POT_W4A4, qp,
+        jnp.where(s == FIXED_W4A4, qf4, jnp.where(s == FIXED_W8A4, qf8, qa4)))
+
+
+def rowwise_mixed_gemm(x, w, alpha, scheme, act_alpha, act_bits: int = 4):
+    """Reference for the row-wise mixed-scheme quantized GEMM.
+
+    ``y[b, r] = sum_c act_quant(x)[b, c] * rowwise_quant(w)[r, c]``
+
+    i.e. a (batch, cols) x (rows, cols)^T matmul where each output row uses
+    its own weight quantizer — the computation the paper's three
+    heterogeneous GEMM cores execute on the FPGA, and the oracle for the L1
+    Pallas kernel.
+    """
+    xq = act_quant(x, act_alpha, act_bits)
+    wq = rowwise_quant(w, alpha, scheme)
+    return xq @ wq.T
+
+
+def default_alpha(w, axis=None):
+    """Per-row scaling factor: max |w| along the row (the paper clips at the
+    weight max; learned alphas are an orthogonal refinement)."""
+    if axis is None:
+        return jnp.maximum(jnp.max(jnp.abs(w)), 1e-8)
+    a = jnp.max(jnp.abs(w), axis=axis)
+    return jnp.maximum(a, 1e-8)

@@ -1,0 +1,166 @@
+"""L1 Pallas kernel: row-wise mixed-scheme quantized GEMM.
+
+Computes ``y = Qa(x) @ Qw(w)^T`` where Qa is the 4-bit Fixed activation
+quantizer and Qw quantizes each *row* of w with that row's scheme
+(PoT-W4A4 / Fixed-W4A4 / Fixed-W8A4) — the paper's heterogeneous-GEMM-core
+computation as a single TPU kernel.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation)
+----------------------------------------------------
+The FPGA version routes each row class to a different PE array (DSP-based
+multipliers for Fixed, LUT shift-add for PoT). On TPU there is one MXU, so
+instead of heterogeneous *compute*, we use heterogeneous *dequantization*:
+the weight tile is fake-quantized per row class in the VPU (element-wise,
+cheap) and a single dense MXU matmul consumes the result. The BlockSpec
+below expresses the paper's tiling: weights stream HBM→VMEM in
+(block_n x block_k) tiles with per-row metadata riding along the n axis,
+and the activation tile is reused across all n tiles (the paper's "layer-
+wise uniformality" means every tile has the same scheme mix, so tile cost
+is uniform and the schedule is static).
+
+VMEM budget per grid step (block_m=block_n=128, block_k=256, f32):
+  x tile 128x256 (128 KiB) + w tile 128x256 (128 KiB) + 3 dequant temps
+  (384 KiB) + out tile 128x128 (64 KiB) ≈ 0.7 MiB — comfortably inside the
+  16 MiB VMEM of a TPU core; see EXPERIMENTS.md §Perf for the sweep.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import ref
+from .quantizers import INTERPRET, _block, _clip, _fixed_body, _pad_to, _pot_body
+
+
+def _mixed_gemm_kernel(
+    x_ref, w_ref, alpha_ref, scheme_ref, o_ref, acc_ref, *, act_alpha: float,
+    act_bits: int, nk: int
+):
+    """One (i, j, k) grid step: acc += Qa(x[i,k]) @ Qw(w[j,k])^T.
+
+    Grid is (m_tiles, n_tiles, k_tiles) with k innermost; the f32 scratch
+    accumulator lives in VMEM across the k loop and is flushed to o_ref at
+    k == nk-1 (the standard Pallas matmul accumulation pattern).
+    """
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # Activation fake quant (4-bit unsigned Fixed), VPU element-wise.
+    n_a = float(2**act_bits - 1)
+    xq = act_alpha * jnp.round(jnp.clip(x_ref[...] / act_alpha, 0.0, 1.0) * n_a) / n_a
+
+    # Row-wise mixed-scheme weight dequant.
+    a = alpha_ref[...][:, None]
+    s = scheme_ref[...][:, None]
+    t = _clip(w_ref[...], a)
+    wq = a * jnp.where(
+        s == ref.POT_W4A4,
+        _pot_body(t, 4),
+        jnp.where(s == ref.FIXED_W4A4, _fixed_body(t, 4), _fixed_body(t, 8)),
+    )
+
+    acc_ref[...] += jax.lax.dot_general(
+        xq, wq, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+    )
+
+    @pl.when(k == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...]
+
+
+def rowwise_mixed_gemm(
+    x, w, alpha, scheme, act_alpha, act_bits: int = 4,
+    block_m: int = 128, block_n: int = 128, block_k: int = 256,
+):
+    """Pallas row-wise mixed-scheme quantized GEMM; oracle: ``ref.rowwise_mixed_gemm``.
+
+    Args:
+      x:        (batch, cols) f32 activations.
+      w:        (rows, cols) f32 weights (row-major, one scheme per row).
+      alpha:    (rows,) per-row weight scale.
+      scheme:   (rows,) int32 scheme codes.
+      act_alpha: scalar activation clip.
+      act_bits: activation bit-width (4 in the paper's W*A4 configs).
+
+    Returns: (batch, rows) f32.
+    """
+    batch, cols = x.shape
+    rows, cols_w = w.shape
+    assert cols == cols_w, f"x cols {cols} != w cols {cols_w}"
+    assert alpha.shape == (rows,) and scheme.shape == (rows,)
+
+    bm = _block(batch, block_m)
+    bn = _block(rows, block_n)
+    bk = _block(cols, block_k)
+
+    xp = _pad_to(_pad_to(x, bm, 0), bk, 1)
+    wp = _pad_to(_pad_to(w, bn, 0), bk, 1)
+    ap = _pad_to(alpha, bn, 0, value=1.0)
+    sp = _pad_to(scheme.astype(jnp.int32), bn, 0, value=ref.FIXED_W4A4)
+
+    nm, nn, nk = xp.shape[0] // bm, wp.shape[0] // bn, xp.shape[1] // bk
+    out = pl.pallas_call(
+        functools.partial(
+            _mixed_gemm_kernel, act_alpha=float(act_alpha), act_bits=act_bits, nk=nk
+        ),
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bn, bk), lambda i, j, k: (j, k)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((xp.shape[0], wp.shape[0]), jnp.float32),
+        scratch_shapes=[_vmem_scratch(bm, bn)],
+        interpret=INTERPRET,
+    )(xp, wp, ap, sp)
+    return out[:batch, :rows]
+
+
+def _vmem_scratch(bm: int, bn: int):
+    """f32 VMEM scratch accumulator (interpret mode executes it as ndarray)."""
+    from jax.experimental.pallas import tpu as pltpu  # local: TPU namespace
+
+    return pltpu.VMEM((bm, bn), jnp.float32)
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int) -> int:
+    """Static VMEM footprint estimate for one grid step (bytes, f32).
+
+    Used by the perf harness and DESIGN.md to pick block shapes: x tile +
+    w tile + 3 dequant temps + accumulator + out tile.
+    """
+    f = 4
+    x_t = block_m * block_k * f
+    w_t = block_n * block_k * f
+    temps = 3 * block_n * block_k * f
+    acc = block_m * block_n * f
+    out = block_m * block_n * f
+    return x_t + w_t + temps + acc + out
+
+
+def mxu_utilization_estimate(
+    batch: int, rows: int, cols: int, block_m: int = 128, block_n: int = 128,
+    block_k: int = 256,
+) -> float:
+    """Estimated MXU utilization: useful MACs / (padded tiles x tile MACs).
+
+    The MXU processes 128x128 tiles; padding waste is the only structural
+    inefficiency of this kernel (dequant runs on the VPU in parallel).
+    """
+    import math
+
+    nm = math.ceil(batch / block_m)
+    nn = math.ceil(rows / block_n)
+    nk = math.ceil(cols / block_k)
+    useful = batch * rows * cols
+    padded = nm * nn * nk * block_m * block_n * block_k
+    return useful / padded

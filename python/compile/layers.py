@@ -1,0 +1,207 @@
+"""L2 quantized layers: STE fake-quant wrappers over the L1 kernels.
+
+Functional layer library (no flax dependency): each layer is a pair of
+``init(rng, ...) -> params`` and ``apply(params, x, qstate) -> y`` functions
+operating on plain dicts, so the whole model is a pytree and AOT lowering is
+trivial.
+
+Quantization state (``qstate``) per quantized layer::
+
+    {"scheme": (rows,) int32,   # 0=PoT4 / 1=Fixed4 / 2=Fixed8 per row/filter
+     "w_alpha": (rows,) f32,    # per-row weight clip (refreshed from weights)
+     "a_alpha": () f32}         # activation clip
+
+All qstate leaves are arrays so the whole dict is jit-traceable; the
+activation bit-width is static (A4 throughout the paper) and passed as the
+``act_bits`` argument where it matters.
+
+During QAT the forward uses the pure-jnp oracles (fast on CPU); the AOT
+inference path (aot.py) routes the same math through the Pallas kernels so
+the shipped HLO contains the L1 kernel lowering. Both are covered by the
+kernel-vs-ref tests, so the two paths are numerically interchangeable.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def ste(q, w):
+    """Straight-Through Estimator (Eq. 6): forward q, backward identity."""
+    return w + jax.lax.stop_gradient(q - w)
+
+
+def fake_quant_weight(w2d, qstate, use_pallas: bool = False):
+    """Row-wise mixed-scheme fake quant of a (rows, cols) weight matrix."""
+    alpha = qstate["w_alpha"]
+    scheme = qstate["scheme"]
+    if use_pallas:
+        from .kernels import quantizers as qz
+
+        q = qz.rowwise_quant(w2d, alpha, scheme)
+    else:
+        q = ref.rowwise_quant(w2d, alpha, scheme)
+    return ste(q, w2d)
+
+
+# When not None, fake_quant_act records per-layer input percentiles into
+# this dict (keyed by id(qstate)) instead of quantizing — the activation-
+# clip calibration pass (train._calibrate_act) runs one unjitted forward in
+# this mode and maps the stats back to layer names.
+_CALIB: dict | None = None
+
+
+def fake_quant_act(x, qstate, use_pallas: bool = False, act_bits: int = 4,
+                   signed: bool = False):
+    """Fixed fake quant of activations (A4 in the paper).
+
+    Unsigned for post-ReLU paths; ``signed=True`` for transformer
+    activations (pre-GELU / residual streams)."""
+    global _CALIB
+    if _CALIB is not None:
+        import numpy as np
+
+        mag = float(np.percentile(np.abs(np.asarray(x)), 99.5))
+        prev = _CALIB.get(id(qstate), 0.0)
+        _CALIB[id(qstate)] = max(prev, mag)
+        return x
+    a = qstate["a_alpha"]
+    m = act_bits
+    if signed:
+        return ste(ref.fixed_quant(x, a, m), x)
+    if use_pallas:
+        from .kernels import quantizers as qz
+
+        q = qz.act_quant(x, a, m)
+    else:
+        q = ref.act_quant(x, a, m)
+    return ste(q, x)
+
+
+def default_qstate(rows: int) -> dict:
+    """All-rows Fixed-4 qstate; assignment.py rewrites ``scheme``."""
+    return {
+        "scheme": jnp.full((rows,), ref.FIXED_W4A4, jnp.int32),
+        "w_alpha": jnp.ones((rows,), jnp.float32),
+        "a_alpha": jnp.asarray(4.0, jnp.float32),
+    }
+
+
+def refresh_alpha(w2d, qstate) -> dict:
+    """Recompute per-row weight clips from current weights (max |w| per row)."""
+    return dict(qstate, w_alpha=ref.default_alpha(w2d, axis=1))
+
+
+# ---------------------------------------------------------------------------
+# Linear.
+# ---------------------------------------------------------------------------
+def linear_init(rng, in_dim: int, out_dim: int) -> dict:
+    k = jnp.sqrt(1.0 / in_dim)
+    w = jax.random.uniform(rng, (out_dim, in_dim), jnp.float32, -k, k)
+    return {"w": w, "b": jnp.zeros((out_dim,), jnp.float32)}
+
+
+def linear_apply(params, x, qstate=None, quant_in: bool = True,
+                 use_pallas: bool = False):
+    """y = Qa(x) @ Qw(w)^T + b ; unquantized when qstate is None."""
+    w = params["w"]
+    if qstate is not None:
+        if quant_in:
+            x = fake_quant_act(x, qstate, use_pallas)
+        w = fake_quant_weight(w, qstate, use_pallas)
+    return x @ w.T + params["b"]
+
+
+# ---------------------------------------------------------------------------
+# Conv2d (NCHW, OIHW weights). Rows of the weight matrix = output filters.
+# ---------------------------------------------------------------------------
+def conv_init(rng, in_ch: int, out_ch: int, k: int) -> dict:
+    fan_in = in_ch * k * k
+    std = jnp.sqrt(2.0 / fan_in)
+    w = jax.random.normal(rng, (out_ch, in_ch, k, k), jnp.float32) * std
+    return {"w": w}
+
+
+def conv_apply(params, x, qstate=None, stride: int = 1, padding=None,
+               quant_in: bool = True, use_pallas: bool = False,
+               groups: int = 1):
+    """Quantized conv: each output filter is one 'row' of the weight matrix.
+
+    Padding is explicit and *symmetric* ((k-1)/2 on each side) rather than
+    XLA's "SAME" (which pads asymmetrically for even inputs at stride 2):
+    training, the folded export, and the Rust im2col executor must agree on
+    alignment, and symmetric is what the hardware pipeline implements.
+    """
+    w = params["w"]
+    if qstate is not None:
+        if quant_in:
+            x = fake_quant_act(x, qstate, use_pallas)
+        oc = w.shape[0]
+        w2d = w.reshape(oc, -1)
+        w = fake_quant_weight(w2d, qstate, use_pallas).reshape(w.shape)
+    if padding is None:
+        p = (w.shape[-1] - 1) // 2
+        padding = [(p, p), (p, p)]
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding=padding,
+        dimension_numbers=("NCHW", "OIHW", "NCHW"), feature_group_count=groups,
+    )
+
+
+# ---------------------------------------------------------------------------
+# BatchNorm (train: batch stats + running update; eval: running stats).
+# ---------------------------------------------------------------------------
+def bn_init(ch: int) -> dict:
+    return {
+        "gamma": jnp.ones((ch,), jnp.float32),
+        "beta": jnp.zeros((ch,), jnp.float32),
+        "mean": jnp.zeros((ch,), jnp.float32),
+        "var": jnp.ones((ch,), jnp.float32),
+    }
+
+
+def bn_apply(params, x, train: bool, momentum: float = 0.9, eps: float = 1e-5):
+    """Returns (y, new_params). x is NCHW (or (N, C) for 1-D)."""
+    axes = (0, 2, 3) if x.ndim == 4 else (0,)
+    shape = (1, -1, 1, 1) if x.ndim == 4 else (1, -1)
+    if train:
+        mean = jnp.mean(x, axis=axes)
+        var = jnp.var(x, axis=axes)
+        new = dict(
+            params,
+            mean=momentum * params["mean"] + (1 - momentum) * mean,
+            var=momentum * params["var"] + (1 - momentum) * var,
+        )
+    else:
+        mean, var, new = params["mean"], params["var"], params
+    y = (x - mean.reshape(shape)) / jnp.sqrt(var.reshape(shape) + eps)
+    return y * params["gamma"].reshape(shape) + params["beta"].reshape(shape), new
+
+
+def bn_fold(conv_params: dict, bn_params: dict, eps: float = 1e-5) -> dict:
+    """Fold BN into the preceding conv for inference export.
+
+    w' = w * gamma / sqrt(var + eps)  (per output channel)
+    b' = beta - gamma * mean / sqrt(var + eps)
+    """
+    g = bn_params["gamma"] / jnp.sqrt(bn_params["var"] + eps)
+    w = conv_params["w"] * g[:, None, None, None]
+    b = bn_params["beta"] - bn_params["mean"] * g
+    return {"w": w, "b": b}
+
+
+# ---------------------------------------------------------------------------
+# LayerNorm (BERT path).
+# ---------------------------------------------------------------------------
+def ln_init(dim: int) -> dict:
+    return {"gamma": jnp.ones((dim,), jnp.float32),
+            "beta": jnp.zeros((dim,), jnp.float32)}
+
+
+def ln_apply(params, x, eps: float = 1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * params["gamma"] + params["beta"]

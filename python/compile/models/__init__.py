@@ -1,0 +1,31 @@
+"""Model zoo registry: resnet18/resnet50/mobilenetv2/tinybert.
+
+Each model module exposes::
+
+    config(**kw) -> cfg          # static config dict (cfg["arch"] selects)
+    init(rng, cfg) -> (params, qstates)
+    apply(params, qstates, x, cfg, train, quant) -> (logits, new_params)
+    quantized_weight_views(params, cfg) -> {layer_name: (rows, cols) view}
+"""
+
+from . import bert, mobilenet, resnet
+
+_ARCH = {"resnet": resnet, "mobilenet": mobilenet, "bert": bert}
+
+
+def module_for(cfg):
+    """Dispatch on cfg['arch']."""
+    return _ARCH[cfg["arch"]]
+
+
+def make(name: str, num_classes: int = 10, **kw):
+    """Build a model cfg by short name."""
+    if name in ("resnet18", "resnet50"):
+        cfg = resnet.config(name, num_classes=num_classes, **kw)
+    elif name == "mobilenetv2":
+        cfg = mobilenet.config(num_classes=num_classes, **kw)
+    elif name == "tinybert":
+        cfg = bert.config(num_classes=num_classes, **kw)
+    else:
+        raise ValueError(f"unknown model {name!r}")
+    return cfg

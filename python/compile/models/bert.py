@@ -1,0 +1,111 @@
+"""TinyBERT-style transformer encoder (the paper's BERT stand-in, Table 5).
+
+Substitution (DESIGN.md §3): BERT-base on SST-2/MNLI becomes a 2-layer
+encoder (d_model 64, 2 heads, d_ff 128) on synthetic sequence-classification
+corpora from data.py. The quantized matrices — Wq/Wk/Wv/Wo and the two FFN
+matrices per layer, plus the classifier head — have exactly the row/column
+structure the row-wise assignment operates on in Q-BERT-style quantization.
+
+Activation quantization uses the *signed* Fixed quantizer (transformer
+activations are not post-ReLU), matching how Q-BERT treats GELU inputs.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+from ..kernels import ref
+
+
+def config(num_classes: int = 2, vocab: int = 256, d_model: int = 64,
+           n_heads: int = 2, d_ff: int = 128, n_layers: int = 2,
+           max_len: int = 32) -> dict:
+    return {
+        "arch": "bert",
+        "name": f"tinybert{n_layers}",
+        "vocab": vocab,
+        "d_model": d_model,
+        "n_heads": n_heads,
+        "d_ff": d_ff,
+        "n_layers": n_layers,
+        "max_len": max_len,
+        "num_classes": num_classes,
+    }
+
+
+_QLAYERS = ("wq", "wk", "wv", "wo", "ff1", "ff2")
+
+
+def init(rng, cfg) -> tuple[dict, dict]:
+    d, f = cfg["d_model"], cfg["d_ff"]
+    rngs = jax.random.split(rng, 3 + 6 * cfg["n_layers"])
+    params = {
+        "embed": jax.random.normal(rngs[0], (cfg["vocab"], d), jnp.float32) * 0.02,
+        "pos": jax.random.normal(rngs[1], (cfg["max_len"], d), jnp.float32) * 0.02,
+    }
+    qstates = {}
+    ri = 2
+    for i in range(cfg["n_layers"]):
+        blk = {}
+        dims = {"wq": (d, d), "wk": (d, d), "wv": (d, d), "wo": (d, d),
+                "ff1": (d, f), "ff2": (f, d)}
+        for k in _QLAYERS:
+            i_d, o_d = dims[k]
+            blk[k] = L.linear_init(rngs[ri], i_d, o_d); ri += 1
+            qstates[f"l{i}.{k}"] = L.default_qstate(o_d)
+        blk["ln1"] = L.ln_init(d)
+        blk["ln2"] = L.ln_init(d)
+        params[f"l{i}"] = blk
+    params["cls"] = L.linear_init(rngs[-1], d, cfg["num_classes"])
+    qstates["cls"] = L.default_qstate(cfg["num_classes"])
+    return params, qstates
+
+
+def _qlinear_signed(p, x, qstate):
+    """Linear with signed activation quant + row-wise mixed weight quant."""
+    if qstate is None:
+        return x @ p["w"].T + p["b"]
+    xq = L.fake_quant_act(x, qstate, signed=True)
+    w = L.fake_quant_weight(p["w"], qstate)
+    return xq @ w.T + p["b"]
+
+
+def apply(params, qstates, tokens, cfg, train: bool = False, quant: bool = True):
+    """tokens: (batch, seq) int32. Returns (logits, params) — no BN state."""
+    d, nh = cfg["d_model"], cfg["n_heads"]
+    hd = d // nh
+    seq = tokens.shape[1]
+    h = params["embed"][tokens] + params["pos"][:seq]
+    for i in range(cfg["n_layers"]):
+        blk = params[f"l{i}"]
+        qs = (lambda k: qstates[f"l{i}.{k}"]) if quant else (lambda k: None)
+        x = L.ln_apply(blk["ln1"], h)
+        B = x.shape[0]
+
+        def heads(t):
+            return t.reshape(B, seq, nh, hd).transpose(0, 2, 1, 3)
+
+        q = heads(_qlinear_signed(blk["wq"], x, qs("wq")))
+        k = heads(_qlinear_signed(blk["wk"], x, qs("wk")))
+        v = heads(_qlinear_signed(blk["wv"], x, qs("wv")))
+        att = jax.nn.softmax(q @ k.transpose(0, 1, 3, 2) / jnp.sqrt(hd), axis=-1)
+        ctx = (att @ v).transpose(0, 2, 1, 3).reshape(B, seq, d)
+        h = h + _qlinear_signed(blk["wo"], ctx, qs("wo"))
+
+        x = L.ln_apply(blk["ln2"], h)
+        f = jax.nn.gelu(_qlinear_signed(blk["ff1"], x, qs("ff1")))
+        h = h + _qlinear_signed(blk["ff2"], f, qs("ff2"))
+    pooled = jnp.mean(h, axis=1)
+    logits = _qlinear_signed(params["cls"], pooled, qstates["cls"] if quant else None)
+    return logits, params
+
+
+def quantized_weight_views(params, cfg) -> dict:
+    out = {}
+    for i in range(cfg["n_layers"]):
+        for k in _QLAYERS:
+            out[f"l{i}.{k}"] = params[f"l{i}"][k]["w"]
+    out["cls"] = params["cls"]["w"]
+    return out

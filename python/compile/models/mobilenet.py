@@ -1,0 +1,152 @@
+"""MobileNetV2-style model (the paper's MobileNet-v2 stand-in).
+
+Inverted-residual blocks with expansion, depthwise 3x3, and linear
+bottleneck, scaled to CIFAR resolution and reduced width (DESIGN.md §3).
+Depthwise convs have one input channel per filter, so each depthwise filter
+is a 9-element row — the hardest case for row-wise assignment (tiny rows,
+many filters), which is why the paper's MobileNet numbers drop the most
+under PoT.
+
+Note: depthwise + pointwise convs are quantized per filter like any other
+layer; the fc head too.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+# (expansion t, out_ch c, repeats n, stride s) — MobileNetV2 table 2, scaled.
+_BLOCKS = (
+    (1, 8, 1, 1),
+    (4, 12, 2, 1),
+    (4, 16, 2, 2),
+    (4, 24, 2, 2),
+    (4, 32, 1, 1),
+)
+
+
+def config(num_classes: int = 10, width_mult: float = 1.0, in_ch: int = 3) -> dict:
+    def c(ch):
+        return max(8, int(ch * width_mult))
+
+    return {
+        "arch": "mobilenet",
+        "name": "mobilenetv2",
+        "blocks": tuple((t, c(ch), n, s) for (t, ch, n, s) in _BLOCKS),
+        "stem_ch": c(8),
+        "head_ch": c(64),
+        "num_classes": num_classes,
+        "in_ch": in_ch,
+    }
+
+
+def init(rng, cfg) -> tuple[dict, dict]:
+    params, qstates = {}, {}
+    n_blocks = sum(n for (_, _, n, _) in cfg["blocks"])
+    rngs = jax.random.split(rng, 3 + 3 * n_blocks)
+    ri = 0
+
+    params["stem"] = L.conv_init(rngs[ri], cfg["in_ch"], cfg["stem_ch"], 3); ri += 1
+    params["bn_stem"] = L.bn_init(cfg["stem_ch"])
+    qstates["stem"] = L.default_qstate(cfg["stem_ch"])
+
+    in_ch = cfg["stem_ch"]
+    bi = 0
+    for (t, c, n, s) in cfg["blocks"]:
+        for j in range(n):
+            name = f"ir{bi}"
+            stride = s if j == 0 else 1
+            mid = in_ch * t
+            p = {}
+            if t != 1:
+                p["expand"] = L.conv_init(rngs[ri], in_ch, mid, 1); ri += 1
+                p["bn_e"] = L.bn_init(mid)
+                qstates[f"{name}.expand"] = L.default_qstate(mid)
+            # depthwise: OIHW with I=1, groups=mid
+            p["dw"] = {"w": jax.random.normal(rngs[ri], (mid, 1, 3, 3), jnp.float32)
+                       * jnp.sqrt(2.0 / 9.0)}; ri += 1
+            p["bn_d"] = L.bn_init(mid)
+            qstates[f"{name}.dw"] = L.default_qstate(mid)
+            p["project"] = L.conv_init(rngs[ri], mid, c, 1); ri += 1
+            p["bn_p"] = L.bn_init(c)
+            qstates[f"{name}.project"] = L.default_qstate(c)
+            params[name] = p
+            in_ch = c
+            bi += 1
+
+    params["head"] = L.conv_init(rngs[ri], in_ch, cfg["head_ch"], 1); ri += 1
+    params["bn_head"] = L.bn_init(cfg["head_ch"])
+    qstates["head"] = L.default_qstate(cfg["head_ch"])
+    params["fc"] = L.linear_init(rngs[-1], cfg["head_ch"], cfg["num_classes"])
+    qstates["fc"] = L.default_qstate(cfg["num_classes"])
+    cfg["n_ir"] = bi
+    return params, qstates
+
+
+def _block_strides(cfg):
+    out = []
+    for (t, c, n, s) in cfg["blocks"]:
+        out.extend([s if j == 0 else 1 for j in range(n)])
+    return out
+
+
+def apply(params, qstates, x, cfg, train: bool = False, quant: bool = True):
+    new_params = {}
+    qs = (lambda k: qstates[k]) if quant else (lambda k: None)
+    h, new_params["bn_stem"] = L.bn_apply(
+        params["bn_stem"], L.conv_apply(params["stem"], x, qs("stem")), train)
+    h = jax.nn.relu(h)
+    new_params["stem"] = params["stem"]
+
+    strides = _block_strides(cfg)
+    for bi, stride in enumerate(strides):
+        name = f"ir{bi}"
+        p = params[name]
+        np_ = {}
+        inp = h
+        if "expand" in p:
+            h, np_["bn_e"] = L.bn_apply(p["bn_e"], L.conv_apply(p["expand"], h, qs(f"{name}.expand")), train)
+            h = jax.nn.relu(h)
+        mid = p["dw"]["w"].shape[0]
+        h, np_["bn_d"] = L.bn_apply(
+            p["bn_d"],
+            L.conv_apply(p["dw"], h, qs(f"{name}.dw"), stride=stride, groups=mid),
+            train)
+        h = jax.nn.relu(h)
+        # linear bottleneck: no ReLU after projection
+        h, np_["bn_p"] = L.bn_apply(p["bn_p"], L.conv_apply(p["project"], h, qs(f"{name}.project")), train)
+        if stride == 1 and inp.shape == h.shape:
+            h = h + inp
+        for k in ("expand", "dw", "project"):
+            if k in p:
+                np_[k] = p[k]
+        new_params[name] = np_
+
+    h, new_params["bn_head"] = L.bn_apply(
+        params["bn_head"], L.conv_apply(params["head"], h, qs("head")), train)
+    h = jax.nn.relu(h)
+    new_params["head"] = params["head"]
+    h = jnp.mean(h, axis=(2, 3))
+    logits = L.linear_apply(params["fc"], h, qstates["fc"] if quant else None)
+    new_params["fc"] = params["fc"]
+    return logits, new_params
+
+
+def quantized_weight_views(params, cfg) -> dict:
+    out = {"stem": params["stem"]["w"].reshape(params["stem"]["w"].shape[0], -1)}
+    bi = 0
+    for (t, c, n, s) in cfg["blocks"]:
+        for _ in range(n):
+            name = f"ir{bi}"
+            p = params[name]
+            for k in ("expand", "dw", "project"):
+                if k in p:
+                    w = p[k]["w"]
+                    out[f"{name}.{k}"] = w.reshape(w.shape[0], -1)
+            bi += 1
+    out["head"] = params["head"]["w"].reshape(params["head"]["w"].shape[0], -1)
+    out["fc"] = params["fc"]["w"]
+    return out

@@ -1,0 +1,157 @@
+"""ResNet-CIFAR family (the paper's ResNet-18 / ResNet-50 stand-ins).
+
+Substitution (DESIGN.md §3): the paper trains torchvision ResNet-18/50 on
+CIFAR/ImageNet GPUs; we build the same topologies (basic blocks for -18,
+bottleneck blocks for -50) at CIFAR scale and reduced width so the full QAT
+sweeps of Table 1 / Fig. 3 run on one CPU. Filter counts per layer stay
+>= 16 so the row-wise 65:30:5 split and the top-5% Hessian rule remain
+meaningful.
+
+Every conv and the final FC are quantized (RMSMP quantizes first/last layers
+like any other layer — the ✓ column in Tables 2-4).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .. import layers as L
+
+
+def config(name: str = "resnet18", num_classes: int = 10, width: int = 16,
+           in_ch: int = 3) -> dict:
+    """Model config. name in {resnet18, resnet50}."""
+    if name == "resnet18":
+        blocks, bottleneck = (2, 2, 2), False
+    elif name == "resnet50":
+        blocks, bottleneck = (3, 4, 3), True
+    else:
+        raise ValueError(f"unknown resnet {name!r}")
+    return {
+        "arch": "resnet",
+        "name": name,
+        "blocks": blocks,
+        "bottleneck": bottleneck,
+        "widths": (width, 2 * width, 4 * width),
+        "num_classes": num_classes,
+        "in_ch": in_ch,
+        "expansion": 2 if bottleneck else 1,
+    }
+
+
+def _block_convs(cfg, in_ch, out_ch, stride, rng):
+    """Params for one residual block; returns (params, conv_specs).
+
+    conv_specs: list of (key, rows, stride, k) for qstate construction.
+    """
+    e = cfg["expansion"]
+    p, spec = {}, []
+    rngs = jax.random.split(rng, 4)
+    if cfg["bottleneck"]:
+        mid = out_ch
+        p["conv1"] = L.conv_init(rngs[0], in_ch, mid, 1)
+        p["conv2"] = L.conv_init(rngs[1], mid, mid, 3)
+        p["conv3"] = L.conv_init(rngs[2], mid, out_ch * e, 1)
+        p["bn1"], p["bn2"], p["bn3"] = L.bn_init(mid), L.bn_init(mid), L.bn_init(out_ch * e)
+        spec = [("conv1", mid, 1, 1), ("conv2", mid, stride, 3),
+                ("conv3", out_ch * e, 1, 1)]
+    else:
+        p["conv1"] = L.conv_init(rngs[0], in_ch, out_ch, 3)
+        p["conv2"] = L.conv_init(rngs[1], out_ch, out_ch, 3)
+        p["bn1"], p["bn2"] = L.bn_init(out_ch), L.bn_init(out_ch)
+        spec = [("conv1", out_ch, stride, 3), ("conv2", out_ch, 1, 3)]
+    if stride != 1 or in_ch != out_ch * e:
+        p["down"] = L.conv_init(rngs[3], in_ch, out_ch * e, 1)
+        p["bn_down"] = L.bn_init(out_ch * e)
+        spec.append(("down", out_ch * e, stride, 1))
+    return p, spec
+
+
+def init(rng, cfg) -> tuple[dict, dict]:
+    """Returns (params, qstates). qstates keys are the quantized layer names."""
+    rngs = jax.random.split(rng, 2 + sum(cfg["blocks"]))
+    params = {"stem": L.conv_init(rngs[0], cfg["in_ch"], cfg["widths"][0], 3),
+              "bn_stem": L.bn_init(cfg["widths"][0])}
+    qstates = {"stem": L.default_qstate(cfg["widths"][0])}
+    in_ch = cfg["widths"][0]
+    ri = 1
+    e = cfg["expansion"]
+    for s, (n, w) in enumerate(zip(cfg["blocks"], cfg["widths"])):
+        for b in range(n):
+            stride = 2 if (b == 0 and s > 0) else 1
+            name = f"s{s}b{b}"
+            bp, spec = _block_convs(cfg, in_ch, w, stride, rngs[ri])
+            ri += 1
+            params[name] = bp
+            for key, rows, _, _ in spec:
+                qstates[f"{name}.{key}"] = L.default_qstate(rows)
+            in_ch = w * e
+    params["fc"] = L.linear_init(rngs[-1], in_ch, cfg["num_classes"])
+    qstates["fc"] = L.default_qstate(cfg["num_classes"])
+    return params, qstates
+
+
+def _apply_block(cfg, name, p, qstates, x, stride, train, quant, new_params):
+    """One residual block. ``stride`` is static (2 for the first block of
+    stages > 0, else 1) — the same rule used at init time."""
+    qs = (lambda k: qstates[f"{name}.{k}"]) if quant else (lambda k: None)
+    np_ = {}
+    if cfg["bottleneck"]:
+        h, np_["bn1"] = L.bn_apply(p["bn1"], L.conv_apply(p["conv1"], x, qs("conv1")), train)
+        h = jax.nn.relu(h)
+        h, np_["bn2"] = L.bn_apply(p["bn2"], L.conv_apply(p["conv2"], h, qs("conv2"), stride=stride), train)
+        h = jax.nn.relu(h)
+        h, np_["bn3"] = L.bn_apply(p["bn3"], L.conv_apply(p["conv3"], h, qs("conv3")), train)
+    else:
+        h, np_["bn1"] = L.bn_apply(p["bn1"], L.conv_apply(p["conv1"], x, qs("conv1"), stride=stride), train)
+        h = jax.nn.relu(h)
+        h, np_["bn2"] = L.bn_apply(p["bn2"], L.conv_apply(p["conv2"], h, qs("conv2")), train)
+    if "down" in p:
+        sc, np_["bn_down"] = L.bn_apply(
+            p["bn_down"], L.conv_apply(p["down"], x, qs("down"), stride=stride), train)
+    else:
+        sc = x
+    for k in ("conv1", "conv2", "conv3", "down"):
+        if k in p:
+            np_[k] = p[k]
+    new_params[name] = np_
+    return jax.nn.relu(h + sc)
+
+
+def apply(params, qstates, x, cfg, train: bool = False, quant: bool = True):
+    """Forward pass. Returns (logits, new_params) — new_params carries BN
+    running-stat updates when train=True."""
+    new_params = {}
+    qs = qstates["stem"] if quant else None
+    # The stem input is the image itself (not post-ReLU); quantizing raw
+    # pixels with an unsigned quantizer is fine because data.py normalizes
+    # images into [0, 1).
+    h, new_params["bn_stem"] = L.bn_apply(
+        params["bn_stem"], L.conv_apply(params["stem"], x, qs), train)
+    h = jax.nn.relu(h)
+    new_params["stem"] = params["stem"]
+    for s, n in enumerate(cfg["blocks"]):
+        for b in range(n):
+            name = f"s{s}b{b}"
+            stride = 2 if (b == 0 and s > 0) else 1
+            h = _apply_block(cfg, name, params[name], qstates, h, stride,
+                             train, quant, new_params)
+    h = jnp.mean(h, axis=(2, 3))
+    logits = L.linear_apply(params["fc"], h, qstates["fc"] if quant else None)
+    new_params["fc"] = params["fc"]
+    return logits, new_params
+
+
+def quantized_weight_views(params, cfg) -> dict:
+    """name -> (rows, cols) 2-D weight views for assignment/hessian/export."""
+    out = {"stem": params["stem"]["w"].reshape(params["stem"]["w"].shape[0], -1)}
+    for s, n in enumerate(cfg["blocks"]):
+        for b in range(n):
+            name = f"s{s}b{b}"
+            for k in ("conv1", "conv2", "conv3", "down"):
+                if k in params[name]:
+                    w = params[name][k]["w"]
+                    out[f"{name}.{k}"] = w.reshape(w.shape[0], -1)
+    out["fc"] = params["fc"]["w"]
+    return out

@@ -1,0 +1,109 @@
+"""Cross-language test vectors: pin Rust quantizers == JAX oracles bit-exactly.
+
+Emits JSON files consumed by ``rust/tests/test_testvec.rs``:
+
+    fixed.json    {m, alpha, w[], q[], code[]} per case
+    pot.json      {m, alpha, w[], q[], sign[], exp[]} per case
+    apot.json     {m, alpha, w[], q[]} per case
+    act.json      {m, alpha, x[], q[], code[]} per case
+    rowwise.json  one mixed matrix: w, alpha[], scheme[], q (flattened)
+    gemm.json     x, w, alpha[], scheme[], act_alpha, y (flattened)
+
+Values cover grid points, decision boundaries (half-steps, log2 midpoints),
+clip edges, and random draws.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+
+from .kernels import ref
+
+
+def _interesting(m, rng, n=64):
+    """Boundary-heavy sample of weights in [-1.5, 1.5]."""
+    pts = [0.0, 1.0, -1.0, 1.5, -1.5, 0.5, -0.5]
+    # fixed grid midpoints
+    k = 2 ** (m - 1) - 1
+    pts += [(i + 0.5) / k for i in range(k)]
+    # pot log-midpoints, nudged off the exact tie: log2 of the true
+    # geometric midpoint is exactly -(2i+1)/2, whose rounding depends on
+    # the last ulp of the platform's log2 — not a contract we can pin
+    # across XLA and Rust libm. +/-1e-3 probes both sides instead.
+    kk = 2 ** (m - 1) - 2
+    for i in range(kk):
+        mid = float(2.0 ** ((-(i) - (i + 1)) / 2.0))
+        pts += [mid * (1 + 1e-3), mid * (1 - 1e-3)]
+    pts += list(rng.uniform(-1.4, 1.4, size=n))
+    return np.asarray(pts, np.float32)
+
+
+def write_all(out_dir: str, seed: int = 0):
+    os.makedirs(out_dir, exist_ok=True)
+    rng = np.random.default_rng(seed)
+
+    fixed_cases, pot_cases, apot_cases, act_cases = [], [], [], []
+    for m in (2, 3, 4, 8):
+        for alpha in (1.0, 0.7, 2.3):
+            w = _interesting(m, rng)
+            q = np.asarray(ref.fixed_quant(jnp.asarray(w), alpha, m))
+            code = np.asarray(ref.fixed_quant_code(jnp.asarray(w), alpha, m))
+            fixed_cases.append({"m": m, "alpha": alpha, "w": w.tolist(),
+                                "q": q.tolist(), "code": code.tolist()})
+    for m in (3, 4, 5):
+        for alpha in (1.0, 0.8):
+            w = _interesting(m, rng)
+            q = np.asarray(ref.pot_quant(jnp.asarray(w), alpha, m))
+            s, e = ref.pot_quant_code(jnp.asarray(w), alpha, m)
+            pot_cases.append({"m": m, "alpha": alpha, "w": w.tolist(),
+                              "q": q.tolist(), "sign": np.asarray(s).tolist(),
+                              "exp": np.asarray(e).tolist()})
+    for alpha in (1.0, 1.3):
+        w = _interesting(4, rng)
+        q = np.asarray(ref.apot_quant(jnp.asarray(w), alpha, 4))
+        apot_cases.append({"m": 4, "alpha": alpha, "w": w.tolist(), "q": q.tolist()})
+    for m in (4, 8):
+        for alpha in (1.0, 2.0):
+            x = np.concatenate([
+                np.asarray([-0.5, 0.0, alpha, 2 * alpha], np.float32),
+                rng.uniform(0, 1.5 * alpha, size=32).astype(np.float32)])
+            q = np.asarray(ref.act_quant(jnp.asarray(x), alpha, m))
+            code = np.asarray(ref.act_quant_code(jnp.asarray(x), alpha, m))
+            act_cases.append({"m": m, "alpha": alpha, "x": x.tolist(),
+                              "q": q.tolist(), "code": code.tolist()})
+
+    rows, cols = 12, 17
+    w = rng.normal(size=(rows, cols)).astype(np.float32) * 0.6
+    alpha = np.maximum(np.abs(w).max(axis=1), 1e-8)
+    scheme = rng.integers(0, 4, size=rows).astype(np.int32)
+    q = np.asarray(ref.rowwise_quant(jnp.asarray(w), jnp.asarray(alpha),
+                                     jnp.asarray(scheme)))
+    rowwise = {"rows": rows, "cols": cols, "w": w.reshape(-1).tolist(),
+               "alpha": alpha.tolist(), "scheme": scheme.tolist(),
+               "q": q.reshape(-1).tolist()}
+
+    batch = 5
+    x = rng.uniform(0, 1.2, size=(batch, cols)).astype(np.float32)
+    y = np.asarray(ref.rowwise_mixed_gemm(
+        jnp.asarray(x), jnp.asarray(w), jnp.asarray(alpha),
+        jnp.asarray(scheme), act_alpha=1.0))
+    gemm = {"batch": batch, "rows": rows, "cols": cols,
+            "x": x.reshape(-1).tolist(), "w": w.reshape(-1).tolist(),
+            "alpha": alpha.tolist(), "scheme": scheme.tolist(),
+            "act_alpha": 1.0, "y": y.reshape(-1).tolist()}
+
+    for name, obj in [("fixed", fixed_cases), ("pot", pot_cases),
+                      ("apot", apot_cases), ("act", act_cases),
+                      ("rowwise", rowwise), ("gemm", gemm)]:
+        with open(os.path.join(out_dir, f"{name}.json"), "w") as f:
+            json.dump(obj, f)
+
+
+if __name__ == "__main__":
+    import sys
+
+    write_all(sys.argv[1] if len(sys.argv) > 1 else "../artifacts/testvec")

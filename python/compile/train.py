@@ -1,0 +1,214 @@
+"""QAT training loop (paper Alg. 1, lines 15-20).
+
+SGD + momentum with cosine decay, STE gradients through the fake quantizers,
+and periodic assignment refresh (Hessian + variance, every ``refresh_every``
+epochs — the paper uses 10). Works for every model in the zoo; the loss is
+softmax cross-entropy throughout (classification in all of the paper's
+tasks).
+
+BN running statistics ride along in ``params`` but receive no gradient: the
+train step overwrites them from the forward pass's ``new_params`` after the
+SGD update.
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import assignment, data, hessian
+from .models import module_for
+
+_BN_KEYS = ("mean", "var")
+
+
+@dataclass
+class TrainConfig:
+    lr: float = 8e-3
+    momentum: float = 0.9
+    weight_decay: float = 1e-4
+    epochs: int = 4
+    batch_size: int = 32
+    refresh_every: int = 2        # epochs between assignment refreshes
+    hessian_iters: int = 5        # power-iteration steps (paper caps at 20)
+    hessian_batch: int = 32
+    use_hessian: bool = True      # False -> weight-norm proxy (ablation)
+    ratio: tuple = (65, 30, 5)    # PoT4 : Fixed4 : Fixed8
+    nonlinear: int = 0            # scheme code of the non-linear class
+    act_alpha_pct: float = 99.5   # activation clip percentile
+    seed: int = 0
+    log_every: int = 50
+
+
+def cross_entropy(logits, labels):
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.take_along_axis(logp, labels[:, None], axis=1))
+
+
+def _is_bn_stat(path) -> bool:
+    return any(getattr(k, "key", None) in _BN_KEYS for k in path)
+
+
+def make_train_step(model, cfg, quant: bool, tcfg: TrainConfig, total_steps: int):
+    """Build the jitted SGD/momentum train step (closes over static config)."""
+
+    def loss_fn(params, qstates, batch):
+        x, y = batch
+        logits, new_params = model.apply(params, qstates, x, cfg,
+                                         train=True, quant=quant)
+        loss = cross_entropy(logits, y)
+        acc = jnp.mean((jnp.argmax(logits, 1) == y).astype(jnp.float32))
+        return loss, (new_params, acc)
+
+    @jax.jit
+    def step(params, qstates, vel, batch, it):
+        (loss, (new_params, acc)), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, qstates, batch)
+        lr = 0.5 * tcfg.lr * (1 + jnp.cos(jnp.pi * it / total_steps))
+
+        def upd(path, p, g, v):
+            if _is_bn_stat(path):
+                return p, v
+            g = g + tcfg.weight_decay * p
+            v = tcfg.momentum * v + g
+            return p - lr * v, v
+
+        flat = jax.tree_util.tree_map_with_path(
+            lambda path, p, g, v: upd(path, p, g, v), params, grads, vel)
+        new_p = jax.tree_util.tree_map(lambda t: t[0], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree_util.tree_map(lambda t: t[1], flat,
+                                       is_leaf=lambda t: isinstance(t, tuple))
+        # overwrite BN running stats from the forward pass
+        new_p = jax.tree_util.tree_map_with_path(
+            lambda path, p, s: s if _is_bn_stat(path) else p, new_p, new_params)
+        return new_p, new_v, loss, acc
+
+    return step, loss_fn
+
+
+def evaluate(model, cfg, params, qstates, x, y, quant: bool,
+             batch_size: int = 128) -> float:
+    """Top-1 accuracy over (x, y)."""
+    correct, n = 0, 0
+    apply_fn = jax.jit(lambda p, q, xb: model.apply(p, q, xb, cfg,
+                                                    train=False, quant=quant)[0])
+    for i in range(0, len(x), batch_size):
+        xb = jnp.asarray(x[i:i + batch_size])
+        yb = y[i:i + batch_size]
+        logits = apply_fn(params, qstates, xb)
+        correct += int((np.argmax(np.asarray(logits), 1) == yb).sum())
+        n += len(yb)
+    return correct / max(n, 1)
+
+
+def _layer_paths(cfg, qstates) -> dict:
+    """Map quantized-layer names to params paths ('a.b' -> ('a','b','w'))."""
+    return {name: tuple(name.split(".")) + ("w",) for name in qstates}
+
+
+def refresh_assignment(model, cfg, params, qstates, tcfg: TrainConfig,
+                       batch, loss_fn) -> dict:
+    """Alg. 1 lines 2-14: Hessian top-C% + variance split, exact ratio."""
+    views = model.quantized_weight_views(params, cfg)
+    eigens = None
+    if tcfg.use_hessian and tcfg.ratio[2] > 0:
+        paths = _layer_paths(cfg, qstates)
+        lf = lambda p, b: loss_fn(p, qstates, b)[0]
+        eigens = hessian.block_trace_estimates(
+            lf, params, paths, batch, samples=tcfg.hessian_iters, seed=tcfg.seed)
+    return assignment.update_qstates(
+        qstates, views, tcfg.ratio, eigens,
+        nonlinear=tcfg.nonlinear)
+
+
+@dataclass
+class TrainResult:
+    params: dict = None
+    qstates: dict = None
+    history: list = field(default_factory=list)  # (step, loss, acc)
+    eval_acc: float = 0.0
+    train_seconds: float = 0.0
+
+
+def train(model_cfg, train_set, test_set, tcfg: TrainConfig,
+          quant: bool = True, init_params=None, init_qstates=None,
+          verbose: bool = False) -> TrainResult:
+    """Train (or QAT-finetune, when init_params given) a model.
+
+    train_set/test_set: (inputs, labels) numpy arrays.
+    """
+    model = module_for(model_cfg)
+    rng = jax.random.PRNGKey(tcfg.seed)
+    params, qstates = model.init(rng, model_cfg)
+    if init_params is not None:
+        params = init_params
+    if init_qstates is not None:
+        qstates = init_qstates
+
+    x_tr, y_tr = train_set
+    steps_per_epoch = max(len(x_tr) // tcfg.batch_size, 1)
+    total = steps_per_epoch * tcfg.epochs
+    step_fn, loss_fn = make_train_step(model, model_cfg, quant, tcfg, total)
+
+    vel = jax.tree_util.tree_map(jnp.zeros_like, params)
+    res = TrainResult()
+    t0 = time.time()
+    it = 0
+    probe = (jnp.asarray(x_tr[: tcfg.hessian_batch]),
+             jnp.asarray(y_tr[: tcfg.hessian_batch]))
+
+    if quant and tcfg.epochs == 0:
+        # post-training quantization: assign + calibrate, no finetuning
+        qstates = refresh_assignment(model, model_cfg, params, qstates,
+                                     tcfg, probe, loss_fn)
+        qstates = _calibrate_act(model, model_cfg, params, qstates,
+                                 probe[0], tcfg.act_alpha_pct)
+
+    for epoch in range(tcfg.epochs):
+        if quant and epoch % tcfg.refresh_every == 0:
+            qstates = refresh_assignment(model, model_cfg, params, qstates,
+                                         tcfg, probe, loss_fn)
+            # calibrate activation clips from data percentile
+            qstates = _calibrate_act(model, model_cfg, params, qstates,
+                                     probe[0], tcfg.act_alpha_pct)
+        for xb, yb in data.batches(x_tr, y_tr, tcfg.batch_size,
+                                   seed=tcfg.seed + epoch):
+            params, vel, loss, acc = step_fn(
+                params, qstates, vel, (jnp.asarray(xb), jnp.asarray(yb)), it)
+            if it % tcfg.log_every == 0:
+                res.history.append((it, float(loss), float(acc)))
+                if verbose:
+                    print(f"  step {it:5d} loss {float(loss):.4f} acc {float(acc):.3f}")
+            it += 1
+
+    res.params, res.qstates = params, qstates
+    res.train_seconds = time.time() - t0
+    res.eval_acc = evaluate(model, model_cfg, params, qstates,
+                            test_set[0], test_set[1], quant)
+    return res
+
+
+def _calibrate_act(model, cfg, params, qstates, x_probe, pct: float) -> dict:
+    """Per-layer activation clips from a calibration forward pass.
+
+    Runs one unjitted forward with layers._CALIB armed; fake_quant_act
+    records the 99.5th percentile of each quantized layer's input magnitude
+    (keyed by qstate identity), which becomes that layer's a_alpha."""
+    from . import layers as L
+
+    L._CALIB = {}
+    try:
+        model.apply(params, qstates, x_probe, cfg, train=False, quant=True)
+        stats = L._CALIB
+    finally:
+        L._CALIB = None
+    out = {}
+    for name, q in qstates.items():
+        a = stats.get(id(q), 0.0)
+        out[name] = dict(q, a_alpha=jnp.asarray(max(a, 1e-2), jnp.float32))
+    return out

@@ -1,0 +1,89 @@
+"""Assignment engine (Alg. 1 lines 2-14): ratio exactness, Hessian/variance
+routing, equivalent-precision accounting."""
+
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile import assignment
+from compile.kernels import ref
+
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _ratio(a, c):
+    return (a, 100 - a - c, c)
+
+
+@settings(max_examples=40, deadline=None)
+@given(seed=seeds, rows=st.integers(min_value=1, max_value=300),
+       a=st.integers(min_value=0, max_value=100),
+       c=st.integers(min_value=0, max_value=20))
+def test_ratio_counts_sum_and_match(seed, rows, a, c):
+    c = min(c, 100 - a)
+    na, nb, nc = assignment.ratio_counts(rows, _ratio(a, c))
+    assert na + nb + nc == rows
+    # largest-remainder: each count within 1 of the exact share
+    for n, share in ((na, a), (nb, 100 - a - c), (nc, c)):
+        assert abs(n - rows * share / 100) <= 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=seeds, rows=st.integers(min_value=1, max_value=120))
+def test_assign_layer_counts_exact(seed, rows):
+    rng = np.random.default_rng(seed)
+    w = rng.normal(size=(rows, 16)).astype(np.float32)
+    scheme = assignment.assign_layer(w, (65, 30, 5))
+    na, nb, nc = assignment.ratio_counts(rows, (65, 30, 5))
+    assert (scheme == ref.POT_W4A4).sum() == na
+    assert (scheme == ref.FIXED_W4A4).sum() == nb
+    assert (scheme == ref.FIXED_W8A4).sum() == nc
+
+
+def test_hessian_rows_win_high_precision():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=(20, 8)).astype(np.float32)
+    eigen = np.zeros(20, np.float32)
+    eigen[[3, 17]] = 10.0
+    scheme = assignment.assign_layer(w, (50, 40, 10), eigen=eigen)
+    assert scheme[3] == ref.FIXED_W8A4
+    assert scheme[17] == ref.FIXED_W8A4
+
+
+def test_low_variance_rows_become_pot():
+    rng = np.random.default_rng(1)
+    w = rng.normal(size=(10, 32)).astype(np.float32)
+    w[4] = 0.3  # zero-variance row
+    scheme = assignment.assign_layer(w, (30, 70, 0))
+    assert scheme[4] == ref.POT_W4A4
+
+
+def test_nonlinear_override_apot():
+    rng = np.random.default_rng(2)
+    w = rng.normal(size=(10, 8)).astype(np.float32)
+    scheme = assignment.assign_layer(w, (60, 40, 0), nonlinear=ref.APOT_W4A4)
+    assert (scheme == ref.APOT_W4A4).sum() == 6
+    assert (scheme == ref.POT_W4A4).sum() == 0
+
+
+def test_update_qstates_refreshes_alpha_and_scheme():
+    rng = np.random.default_rng(3)
+    views = {"l1": jnp.asarray(rng.normal(size=(12, 9)).astype(np.float32))}
+    qstates = {"l1": {"scheme": jnp.zeros(12, jnp.int32),
+                      "w_alpha": jnp.ones(12), "a_alpha": jnp.asarray(1.0)}}
+    new = assignment.update_qstates(qstates, views, (0, 95, 5))
+    assert int((np.asarray(new["l1"]["scheme"]) == ref.FIXED_W8A4).sum()) == 1
+    np.testing.assert_allclose(
+        np.asarray(new["l1"]["w_alpha"]),
+        np.abs(np.asarray(views["l1"])).max(axis=1), rtol=1e-6)
+
+
+def test_equivalent_bits():
+    qs = {"l": {"scheme": jnp.asarray([0, 1, 2, 1], jnp.int32)}}
+    # (4+4+8+4)/4 = 5
+    assert assignment.equivalent_bits(qs) == 5.0
+
+
+def test_scheme_histogram():
+    qs = {"l": {"scheme": jnp.asarray([0, 0, 1, 2], jnp.int32)}}
+    assert assignment.scheme_histogram(qs)["l"] == (2, 1, 1)

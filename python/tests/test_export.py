@@ -1,0 +1,111 @@
+"""Export pipeline: folding correctness, quantized graph parity between the
+model apply() and the folded program, binary format round-trip, manifest
+consistency, and HLO text hygiene (no elided constants)."""
+
+import os
+import struct
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import assignment, data, export
+from compile.models import resnet, make
+
+
+@pytest.fixture(scope="module")
+def folded():
+    cfg = make("resnet18", num_classes=10)
+    params, qstates = resnet.init(jax.random.PRNGKey(0), cfg)
+    lys, prog = export.fold_model(params, cfg)
+    export.assign_folded(lys, (65, 30, 5))
+    probe, _ = data.image_dataset(10, n=8, size=32, seed=0)
+    export.calibrate_folded(lys, prog, probe)
+    return cfg, params, qstates, lys, prog, jnp.asarray(probe)
+
+
+def test_fold_covers_all_quantized_layers(folded):
+    cfg, params, qstates, lys, prog, _ = folded
+    names = {l["name"] for l in lys}
+    assert names == set(qstates), names ^ set(qstates)
+
+
+def test_folded_float_forward_matches_model_eval(folded):
+    """Float folded graph == model.apply(train=False, quant=False) after BN
+    folding (eval-mode BN is exactly what gets folded)."""
+    cfg, params, qstates, lys, prog, x = folded
+    want, _ = resnet.apply(params, qstates, x, cfg, train=False, quant=False)
+    got = export.calibrate_folded(lys, prog, x)  # returns float logits
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-4)
+
+
+def test_quantized_folded_graph_runs_and_is_quantized(folded):
+    cfg, params, qstates, lys, prog, x = folded
+    y = export.infer_folded(lys, prog, x)
+    assert y.shape == (x.shape[0], 10)
+    assert np.isfinite(np.asarray(y)).all()
+    # pallas path == ref path
+    y_p = export.infer_folded(lys, prog, x, use_pallas=True)
+    np.testing.assert_allclose(np.asarray(y_p), np.asarray(y), atol=1e-4)
+
+
+def test_assignment_on_folded_is_ratio_exact(folded):
+    cfg, params, qstates, lys, prog, _ = folded
+    for l in lys:
+        counts = assignment.ratio_counts(l["w"].shape[0], (65, 30, 5))
+        s = np.asarray(l["scheme"])
+        assert (s == 0).sum() == counts[0], l["name"]
+        assert (s == 1).sum() == counts[1], l["name"]
+        assert (s == 2).sum() == counts[2], l["name"]
+
+
+def test_weights_bin_roundtrip(tmp_path, folded):
+    cfg, params, qstates, lys, prog, _ = folded
+    path = tmp_path / "weights.bin"
+    export.write_weights_bin(path, lys)
+    raw = path.read_bytes()
+    assert raw[:4] == b"RMSW"
+    version, n_layers = struct.unpack("<II", raw[4:12])
+    assert version == 1
+    assert n_layers == len(lys)
+    # spot-check first layer record
+    name_len = struct.unpack("<I", raw[12:16])[0]
+    assert raw[16:16 + name_len].decode() == lys[0]["name"]
+
+
+def test_manifest_dict_schema(folded):
+    cfg, params, qstates, lys, prog, _ = folded
+    m = export.manifest_dict(cfg, lys, prog, [65, 30, 5], (8, 3, 32, 32))
+    assert m["model"] == "resnet18"
+    assert len(m["layers"]) == len(lys)
+    for lm in m["layers"]:
+        assert sum(lm["scheme_counts"]) == lm["rows"]
+    ops = {op["op"] for op in m["program"]}
+    assert ops <= {"conv", "linear", "add", "gap"}
+
+
+def test_hlo_text_has_no_elided_constants(folded):
+    """The xla_extension 0.5.1 text parser reads `constant({...})` as
+    zeros — the gotcha that silently drops weights. Never ship one."""
+    cfg, params, qstates, lys, prog, _ = folded
+    spec = jax.ShapeDtypeStruct((2, 3, 32, 32), jnp.float32)
+    fn = lambda x: (export.infer_folded(lys, prog, x),)
+    hlo = export.to_hlo_text(fn, spec)
+    assert "constant({...})" not in hlo
+    assert hlo.startswith("HloModule")
+
+
+def test_mobilenet_folds_too():
+    cfg = make("mobilenetv2", num_classes=10)
+    from compile.models import mobilenet
+
+    params, qstates = mobilenet.init(jax.random.PRNGKey(0), cfg)
+    lys, prog = export.fold_model(params, cfg)
+    assert {l["name"] for l in lys} == set(qstates)
+    export.assign_folded(lys, (65, 30, 5))
+    probe, _ = data.image_dataset(10, n=4, size=32, seed=0)
+    export.calibrate_folded(lys, prog, probe)
+    y = export.infer_folded(lys, prog, jnp.asarray(probe))
+    assert y.shape == (4, 10)

@@ -1,0 +1,130 @@
+"""L1 correctness: Pallas kernels vs the pure-jnp oracle (ref.py).
+
+Hypothesis sweeps shapes, bit-widths, scheme mixes, and scale ranges; every
+kernel must agree with its oracle to float32 round-off. This is the core
+correctness signal for the AOT pipeline — the same kernel code is lowered
+into the HLO artifacts the Rust runtime executes.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels import quantizers as qz
+from compile.kernels import rowwise_gemm as rg
+
+ATOL = 1e-5
+
+dims = st.integers(min_value=1, max_value=97)
+small_dims = st.integers(min_value=1, max_value=33)
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+
+
+def _mat(seed, rows, cols, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=(rows, cols)) * scale).astype(np.float32))
+
+
+def _rows_meta(seed, rows):
+    rng = np.random.default_rng(seed + 1)
+    alpha = jnp.asarray(rng.uniform(0.05, 3.0, size=rows).astype(np.float32))
+    scheme = jnp.asarray(rng.integers(0, 3, size=rows).astype(np.int32))
+    return alpha, scheme
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=seeds, rows=dims, cols=dims, m=st.sampled_from([2, 3, 4, 8]))
+def test_fixed_quant_matches_ref(seed, rows, cols, m):
+    w = _mat(seed, rows, cols)
+    alpha, _ = _rows_meta(seed, rows)
+    got = qz.fixed_quant(w, alpha, m)
+    want = ref.fixed_quant(w, alpha[:, None], m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=seeds, rows=dims, cols=dims, m=st.sampled_from([3, 4, 5]))
+def test_pot_quant_matches_ref(seed, rows, cols, m):
+    w = _mat(seed, rows, cols)
+    alpha, _ = _rows_meta(seed, rows)
+    got = qz.pot_quant(w, alpha, m)
+    want = ref.pot_quant(w, alpha[:, None], m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=seeds, rows=dims, cols=dims)
+def test_rowwise_quant_matches_ref(seed, rows, cols):
+    w = _mat(seed, rows, cols)
+    alpha, scheme = _rows_meta(seed, rows)
+    got = qz.rowwise_quant(w, alpha, scheme)
+    want = ref.rowwise_quant(w, alpha, scheme)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, r=dims, c=dims, m=st.sampled_from([4, 8]),
+       alpha=st.floats(min_value=0.1, max_value=8.0))
+def test_act_quant_matches_ref(seed, r, c, m, alpha):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-1, 2 * alpha, size=(r, c)).astype(np.float32))
+    got = qz.act_quant(x, alpha, m)
+    want = ref.act_quant(x, alpha, m)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=ATOL)
+
+
+def test_act_quant_3d_shape():
+    x = jnp.ones((2, 5, 7), jnp.float32) * 0.3
+    got = qz.act_quant(x, 1.0, 4)
+    assert got.shape == (2, 5, 7)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(ref.act_quant(x, 1.0, 4)), atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=seeds, batch=small_dims, rows=small_dims, cols=dims,
+       act_alpha=st.floats(min_value=0.2, max_value=4.0))
+def test_mixed_gemm_matches_ref(seed, batch, rows, cols, act_alpha):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(0, 2, size=(batch, cols)).astype(np.float32))
+    w = _mat(seed + 7, rows, cols)
+    alpha, scheme = _rows_meta(seed, rows)
+    got = rg.rowwise_mixed_gemm(x, w, alpha, scheme, act_alpha)
+    want = ref.rowwise_mixed_gemm(x, w, alpha, scheme, act_alpha)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4)
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 16), (16, 32, 32), (128, 128, 256)])
+def test_mixed_gemm_block_shapes(bm, bn, bk):
+    """Result must be independent of the BlockSpec tiling."""
+    rng = np.random.default_rng(3)
+    x = jnp.asarray(rng.uniform(0, 1, size=(19, 41)).astype(np.float32))
+    w = _mat(11, 23, 41)
+    alpha, scheme = _rows_meta(5, 23)
+    want = ref.rowwise_mixed_gemm(x, w, alpha, scheme, 1.0)
+    got = rg.rowwise_mixed_gemm(x, w, alpha, scheme, 1.0,
+                                block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3, rtol=1e-4)
+
+
+def test_mixed_gemm_all_single_scheme_reduces_to_plain():
+    """With all rows Fixed-4, the mixed GEMM equals act_quant(x) @ fixed(w)^T."""
+    rng = np.random.default_rng(9)
+    x = jnp.asarray(rng.uniform(0, 1, size=(7, 31)).astype(np.float32))
+    w = _mat(13, 11, 31)
+    alpha = ref.default_alpha(w, axis=1)
+    scheme = jnp.full((11,), ref.FIXED_W4A4, jnp.int32)
+    got = rg.rowwise_mixed_gemm(x, w, alpha, scheme, 1.0)
+    want = ref.act_quant(x, 1.0, 4) @ ref.fixed_quant(w, alpha[:, None], 4).T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want), atol=1e-3)
+
+
+def test_vmem_budget():
+    """Default block shapes stay well inside a TPU core's 16 MiB VMEM."""
+    assert rg.vmem_bytes(128, 128, 256) < 16 * 2**20 // 4
+
+
+def test_mxu_utilization_perfect_tiles():
+    assert rg.mxu_utilization_estimate(128, 128, 256) == pytest.approx(1.0)
+    assert rg.mxu_utilization_estimate(1, 1, 1) < 1e-4

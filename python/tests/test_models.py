@@ -1,0 +1,118 @@
+"""Model zoo: shapes, quantized-vs-float divergence bounds, weight-view
+consistency, BN state flow, and gradient flow through the STE."""
+
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from compile import data, layers as L
+from compile.models import bert, mobilenet, resnet, make, module_for
+
+
+@pytest.fixture(scope="module")
+def image_batch():
+    x, y = data.image_dataset(10, n=8, size=32, seed=0)
+    return jnp.asarray(x), jnp.asarray(y)
+
+
+@pytest.mark.parametrize("name", ["resnet18", "resnet50", "mobilenetv2"])
+def test_image_model_shapes_and_views(name, image_batch):
+    cfg = make(name, num_classes=10)
+    model = module_for(cfg)
+    params, qstates = model.init(jax.random.PRNGKey(0), cfg)
+    logits, newp = model.apply(params, qstates, image_batch[0], cfg, train=True)
+    assert logits.shape == (8, 10)
+    assert np.isfinite(np.asarray(logits)).all()
+    views = model.quantized_weight_views(params, cfg)
+    assert set(views) == set(qstates), "views and qstates must cover the same layers"
+    for lname, v in views.items():
+        assert v.ndim == 2
+        assert v.shape[0] == qstates[lname]["scheme"].shape[0]
+
+
+def test_bert_shapes_and_views():
+    cfg = make("tinybert", num_classes=3)
+    params, qstates = bert.init(jax.random.PRNGKey(0), cfg)
+    tok = jnp.zeros((4, 32), jnp.int32)
+    logits, _ = bert.apply(params, qstates, tok, cfg)
+    assert logits.shape == (4, 3)
+    views = bert.quantized_weight_views(params, cfg)
+    assert set(views) == set(qstates)
+
+
+def test_quantized_close_to_float_at_init(image_batch):
+    """With calibrated alphas, W4A4 logits stay within a bounded distance
+    of the float logits (quantization is a perturbation, not a rewrite)."""
+    cfg = make("resnet18", num_classes=10)
+    params, qstates = resnet.init(jax.random.PRNGKey(1), cfg)
+    # refresh per-row weight clips + activation clips so the comparison is
+    # meaningful (default qstates have w_alpha = 1, not max|w|)
+    from compile import assignment
+    from compile.train import _calibrate_act
+
+    views = resnet.quantized_weight_views(params, cfg)
+    qstates = assignment.update_qstates(qstates, views, (65, 30, 5))
+    qstates = _calibrate_act(resnet, cfg, params, qstates, image_batch[0], 99.5)
+    lq, _ = resnet.apply(params, qstates, image_batch[0], cfg, train=False, quant=True)
+    lf, _ = resnet.apply(params, qstates, image_batch[0], cfg, train=False, quant=False)
+    rel = float(jnp.max(jnp.abs(lq - lf)) / (jnp.max(jnp.abs(lf)) + 1e-6))
+    assert rel < 1.5, f"quantized logits diverged: rel={rel}"
+
+
+def test_bn_running_stats_update_only_in_train(image_batch):
+    cfg = make("resnet18", num_classes=10)
+    params, qstates = resnet.init(jax.random.PRNGKey(0), cfg)
+    _, p_train = resnet.apply(params, qstates, image_batch[0], cfg, train=True)
+    _, p_eval = resnet.apply(params, qstates, image_batch[0], cfg, train=False)
+    moved = np.abs(np.asarray(p_train["bn_stem"]["mean"])
+                   - np.asarray(params["bn_stem"]["mean"])).max()
+    frozen = np.abs(np.asarray(p_eval["bn_stem"]["mean"])
+                    - np.asarray(params["bn_stem"]["mean"])).max()
+    assert moved > 0.0
+    assert frozen == 0.0
+
+
+def test_ste_gradients_flow(image_batch):
+    """d loss / d weights must be nonzero through the fake quantizers."""
+    cfg = make("resnet18", num_classes=10)
+    params, qstates = resnet.init(jax.random.PRNGKey(0), cfg)
+    x, y = image_batch
+
+    def loss(p):
+        logits, _ = resnet.apply(p, qstates, x, cfg, train=True, quant=True)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, y[:, None], axis=1))
+
+    g = jax.grad(loss)(params)
+    gnorm = float(jnp.linalg.norm(g["stem"]["w"]))
+    assert np.isfinite(gnorm) and gnorm > 0, f"no gradient through STE: {gnorm}"
+    # BN running stats should receive no gradient contribution of use
+    assert float(jnp.linalg.norm(g["fc"]["w"])) > 0
+
+
+def test_mobilenet_depthwise_groups():
+    cfg = mobilenet.config(num_classes=10)
+    params, qstates = mobilenet.init(jax.random.PRNGKey(0), cfg)
+    # depthwise conv weights are (ch, 1, 3, 3)
+    assert params["ir0"]["dw"]["w"].shape[1] == 1
+    x = jnp.ones((2, 3, 32, 32), jnp.float32) * 0.4
+    logits, _ = mobilenet.apply(params, qstates, x, cfg, train=False)
+    assert logits.shape == (2, 10)
+
+
+def test_bn_fold_equivalence():
+    """conv+BN (eval mode) == folded conv for arbitrary stats."""
+    rng = jax.random.PRNGKey(3)
+    conv = L.conv_init(rng, 3, 8, 3)
+    bn = L.bn_init(8)
+    bn["mean"] = jnp.linspace(-0.5, 0.5, 8)
+    bn["var"] = jnp.linspace(0.5, 2.0, 8)
+    bn["gamma"] = jnp.linspace(0.8, 1.2, 8)
+    bn["beta"] = jnp.linspace(-0.1, 0.1, 8)
+    x = jax.random.normal(jax.random.PRNGKey(4), (2, 3, 16, 16))
+    y_ref, _ = L.bn_apply(bn, L.conv_apply(conv, x), train=False)
+    folded = L.bn_fold(conv, bn)
+    y_fold = L.conv_apply({"w": folded["w"]}, x) + folded["b"][None, :, None, None]
+    np.testing.assert_allclose(np.asarray(y_ref), np.asarray(y_fold),
+                               rtol=1e-4, atol=1e-5)

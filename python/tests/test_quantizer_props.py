@@ -1,0 +1,209 @@
+"""Property tests on the quantizer oracles themselves (ref.py).
+
+These pin down the *mathematical* invariants the paper relies on:
+idempotence, level membership, symmetry, scale equivariance, the PoT rigid
+resolution phenomenon, and APoT's tail-density advantage. The Rust
+implementations are held to the same invariants via shared test vectors.
+"""
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+
+seeds = st.integers(min_value=0, max_value=2**31 - 1)
+bits = st.sampled_from([3, 4, 5, 8])
+
+
+def _w(seed, n=64, scale=1.0):
+    rng = np.random.default_rng(seed)
+    return jnp.asarray((rng.normal(size=(n,)) * scale).astype(np.float32))
+
+
+# ---------------------------------------------------------------------------
+# Idempotence: quantizing a quantized tensor is the identity.
+# ---------------------------------------------------------------------------
+@settings(max_examples=30, deadline=None)
+@given(seed=seeds, m=bits, alpha=st.floats(min_value=0.1, max_value=4.0))
+def test_fixed_idempotent(seed, m, alpha):
+    w = _w(seed)
+    q1 = ref.fixed_quant(w, alpha, m)
+    q2 = ref.fixed_quant(q1, alpha, m)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=seeds, m=st.sampled_from([3, 4, 5]), alpha=st.floats(min_value=0.1, max_value=4.0))
+def test_pot_idempotent(seed, m, alpha):
+    w = _w(seed)
+    q1 = ref.pot_quant(w, alpha, m)
+    q2 = ref.pot_quant(q1, alpha, m)
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Level membership: outputs land exactly on ±alpha * levels.
+# ---------------------------------------------------------------------------
+def _assert_on_levels(q, alpha, levels, atol=1e-6):
+    q = np.abs(np.asarray(q)) / alpha
+    lv = np.asarray(levels)
+    d = np.min(np.abs(q[:, None] - lv[None, :]), axis=1)
+    assert d.max() < atol, f"value off-grid by {d.max()}"
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=bits)
+def test_fixed_on_levels(seed, m):
+    w = _w(seed, scale=2.0)
+    _assert_on_levels(ref.fixed_quant(w, 1.3, m), 1.3, ref.fixed_levels(m))
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=st.sampled_from([3, 4, 5]))
+def test_pot_on_levels(seed, m):
+    w = _w(seed, scale=2.0)
+    _assert_on_levels(ref.pot_quant(w, 0.9, m), 0.9, ref.pot_levels(m))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds)
+def test_apot_on_levels(seed):
+    w = _w(seed, scale=2.0)
+    _assert_on_levels(ref.apot_quant(w, 1.0, 4), 1.0, ref.apot_levels(4), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Symmetry and scale equivariance.
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=bits)
+def test_fixed_odd_symmetry(seed, m):
+    w = _w(seed)
+    np.testing.assert_allclose(
+        np.asarray(ref.fixed_quant(-w, 1.0, m)),
+        -np.asarray(ref.fixed_quant(w, 1.0, m)), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=st.sampled_from([3, 4]), c=st.floats(min_value=0.25, max_value=4.0))
+def test_quant_scale_equivariance(seed, m, c):
+    """Q(c*w, c*alpha) == c * Q(w, alpha) for both schemes."""
+    w = _w(seed)
+    for q in (ref.fixed_quant, ref.pot_quant):
+        a = np.asarray(q(w * c, c * 1.1, m))
+        b = c * np.asarray(q(w, 1.1, m))
+        np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# Error bounds & the rigid-resolution phenomenon (paper §1, §2.1.2).
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=st.sampled_from([4, 8]))
+def test_fixed_error_bound(seed, m):
+    """|w - Q(w)| <= alpha/(2*(2^{m-1}-1)) for w inside the clip range."""
+    w = jnp.clip(_w(seed), -1.0, 1.0) * 0.999
+    q = ref.fixed_quant(w, 1.0, m)
+    step = 1.0 / (2 ** (m - 1) - 1)
+    assert np.abs(np.asarray(w - q)).max() <= step / 2 + 1e-6
+
+
+def test_pot_rigid_resolution():
+    """PoT error does NOT vanish with more bits (rigid resolution, §2.1.2):
+    extra bits only refine near zero, the gap at e.g. 0.75 stays ~0.25/1."""
+    w = jnp.asarray([0.75], jnp.float32)
+    e4 = abs(float(ref.pot_quant(w, 1.0, 4)[0]) - 0.75)
+    e8 = abs(float(ref.pot_quant(w, 1.0, 8)[0]) - 0.75)
+    assert e4 == pytest.approx(0.25, abs=1e-6)
+    assert e8 == pytest.approx(0.25, abs=1e-6)  # unchanged: rigid resolution
+
+
+def test_fixed_resolution_improves_with_bits():
+    w = jnp.asarray([0.75], jnp.float32)
+    e4 = abs(float(ref.fixed_quant(w, 1.0, 4)[0]) - 0.75)
+    e8 = abs(float(ref.fixed_quant(w, 1.0, 8)[0]) - 0.75)
+    assert e8 < e4 or e4 < 1e-6
+
+
+def test_apot_beats_pot_at_tails():
+    """APoT levels are denser near |w|=1 than PoT (its design goal)."""
+    pot = np.asarray(ref.pot_levels(4))
+    apot = np.asarray(ref.apot_levels(4))
+    tail = lambda lv: np.sort(lv)[-2]  # second-largest level
+    assert tail(apot) > tail(pot)
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=seeds)
+def test_mse_ordering_gaussian(seed):
+    """For Gaussian rows: MSE(Fixed8) < MSE(Fixed4) < MSE(PoT4) and
+    MSE(APoT4) < MSE(PoT4) — the per-scheme orderings behind Table 1
+    (Fixed > APoT > PoT in accuracy; APoT fixes PoT's rigid resolution)."""
+    rng = np.random.default_rng(seed)
+    w = jnp.asarray((rng.normal(size=(8192,)) * 0.5).astype(np.float32))
+    a = ref.default_alpha(w)
+    mse = lambda q: float(jnp.mean((w - q) ** 2))
+    m_f4 = mse(ref.fixed_quant(w, a, 4))
+    m_f8 = mse(ref.fixed_quant(w, a, 8))
+    m_p4 = mse(ref.pot_quant(w, a, 4))
+    m_a4 = mse(ref.apot_quant(w, a, 4))
+    assert m_f8 < m_f4
+    assert m_f4 < m_p4
+    assert m_a4 < m_p4
+
+
+# ---------------------------------------------------------------------------
+# Variance rule sanity (paper §3.1): PoT fits low-variance rows better.
+# ---------------------------------------------------------------------------
+def test_pot_favours_low_variance_rows():
+    """Relative MSE advantage of Fixed over PoT grows with row variance —
+    the basis of the variance-threshold scheme assignment."""
+    rng = np.random.default_rng(0)
+    rel = []
+    for s in (0.1, 0.4, 1.0):
+        w = jnp.asarray((rng.normal(size=(8192,)) * s).astype(np.float32))
+        a = ref.default_alpha(w)
+        mse_f = float(jnp.mean((w - ref.fixed_quant(w, a, 4)) ** 2))
+        mse_p = float(jnp.mean((w - ref.pot_quant(w, a, 4)) ** 2))
+        rel.append(mse_p / max(mse_f, 1e-12))
+    assert rel[0] <= rel[-1] * 1.5  # advantage does not shrink with variance
+
+
+# ---------------------------------------------------------------------------
+# Codes round-trip: integer codes reproduce the fake-quant values.
+# ---------------------------------------------------------------------------
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=st.sampled_from([4, 8]))
+def test_fixed_code_roundtrip(seed, m):
+    w = _w(seed)
+    code = ref.fixed_quant_code(w, 1.2, m)
+    n = 2 ** (m - 1) - 1
+    assert int(jnp.abs(code).max()) <= n
+    recon = 1.2 * code.astype(jnp.float32) / n
+    np.testing.assert_allclose(np.asarray(recon),
+                               np.asarray(ref.fixed_quant(w, 1.2, m)), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds)
+def test_pot_code_roundtrip(seed):
+    w = _w(seed)
+    sign, e = ref.pot_quant_code(w, 0.8, 4)
+    assert int(e.min()) >= -(2**3 - 2) and int(e.max()) <= 0
+    recon = 0.8 * sign.astype(jnp.float32) * (2.0 ** e.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(recon),
+                               np.asarray(ref.pot_quant(w, 0.8, 4)), atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=seeds, m=st.sampled_from([4, 8]))
+def test_act_code_roundtrip(seed, m):
+    rng = np.random.default_rng(seed)
+    x = jnp.asarray(rng.uniform(-0.5, 2.0, size=(256,)).astype(np.float32))
+    code = ref.act_quant_code(x, 1.5, m)
+    assert int(code.min()) >= 0 and int(code.max()) <= 2**m - 1
+    recon = 1.5 * code.astype(jnp.float32) / (2**m - 1)
+    np.testing.assert_allclose(np.asarray(recon),
+                               np.asarray(ref.act_quant(x, 1.5, m)), atol=1e-6)

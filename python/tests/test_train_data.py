@@ -1,0 +1,93 @@
+"""Training loop + dataset generators: determinism, learning signal,
+assignment refresh during QAT, and dataset statistics."""
+
+import numpy as np
+import jax.numpy as jnp
+
+from compile import assignment, data, train
+from compile.models import make
+
+
+def test_image_dataset_deterministic_and_bounded():
+    a_x, a_y = data.image_dataset(10, n=64, seed=3)
+    b_x, b_y = data.image_dataset(10, n=64, seed=3)
+    np.testing.assert_array_equal(a_x, b_x)
+    np.testing.assert_array_equal(a_y, b_y)
+    assert a_x.min() >= 0.0 and a_x.max() < 1.0
+    c_x, _ = data.image_dataset(10, n=64, seed=4)
+    assert np.abs(a_x - c_x).max() > 0
+
+
+def test_image_dataset_split_differs_templates_shared():
+    tr_x, _ = data.image_dataset(10, n=32, seed=0, split="train")
+    te_x, _ = data.image_dataset(10, n=32, seed=0, split="test")
+    assert np.abs(tr_x - te_x).max() > 0  # different draws
+
+
+def test_text_dataset_classes_and_determinism():
+    tok, lab, nc = data.text_dataset("mnli-syn", n=128, seed=1)
+    assert nc == 3
+    assert tok.shape == (128, 32)
+    assert set(np.unique(lab)) <= {0, 1, 2}
+    tok2, lab2, _ = data.text_dataset("mnli-syn", n=128, seed=1)
+    np.testing.assert_array_equal(tok, tok2)
+
+
+def test_batches_cover_and_shuffle():
+    x = np.arange(100)[:, None]
+    y = np.arange(100)
+    seen = []
+    for xb, yb in data.batches(x, y, 10, seed=0):
+        seen.extend(yb.tolist())
+    assert len(seen) == 100
+    assert sorted(seen) == list(range(100))
+    assert seen != list(range(100))  # shuffled
+
+
+def test_fp32_training_learns():
+    cfg = make("resnet18", num_classes=4, width=8)
+    tr = data.image_dataset(4, n=256, size=16, seed=0, noise=0.2)
+    te = data.image_dataset(4, n=128, size=16, seed=0, split="test", noise=0.2)
+    res = train.train(cfg, tr, te, train.TrainConfig(
+        epochs=5, batch_size=32, use_hessian=False, log_every=10), quant=False)
+    assert res.eval_acc > 0.45, f"fp32 failed to learn: {res.eval_acc}"
+    assert res.history[0][1] > res.history[-1][1], "loss did not decrease"
+
+
+def test_qat_refresh_applies_ratio():
+    cfg = make("resnet18", num_classes=4, width=8)
+    tr = data.image_dataset(4, n=128, size=16, seed=0, noise=0.2)
+    te = data.image_dataset(4, n=64, size=16, seed=0, split="test", noise=0.2)
+    res = train.train(cfg, tr, te, train.TrainConfig(
+        epochs=1, batch_size=32, ratio=(65, 30, 5), use_hessian=False),
+        quant=True)
+    hist = assignment.scheme_histogram(res.qstates)
+    for name, (na, nb, nc) in hist.items():
+        rows = na + nb + nc
+        want = assignment.ratio_counts(rows, (65, 30, 5))
+        assert (na, nb, nc) == want, f"{name}: {(na, nb, nc)} != {want}"
+    # activation clips were calibrated (not the default 4.0 everywhere)
+    alphas = {float(q["a_alpha"]) for q in res.qstates.values()}
+    assert len(alphas) > 1
+
+
+def test_qat_with_hessian_runs():
+    cfg = make("resnet18", num_classes=4, width=8)
+    tr = data.image_dataset(4, n=64, size=16, seed=0, noise=0.2)
+    te = data.image_dataset(4, n=32, size=16, seed=0, split="test", noise=0.2)
+    res = train.train(cfg, tr, te, train.TrainConfig(
+        epochs=1, batch_size=32, ratio=(60, 35, 5), use_hessian=True,
+        hessian_iters=2, hessian_batch=16), quant=True)
+    assert np.isfinite(res.eval_acc)
+
+
+def test_train_deterministic():
+    cfg = make("resnet18", num_classes=4, width=8)
+    tr = data.image_dataset(4, n=64, size=16, seed=0)
+    te = data.image_dataset(4, n=32, size=16, seed=0, split="test")
+    tcfg = train.TrainConfig(epochs=1, batch_size=16, use_hessian=False, seed=7)
+    a = train.train(cfg, tr, te, tcfg, quant=True)
+    b = train.train(cfg, tr, te, tcfg, quant=True)
+    assert a.eval_acc == b.eval_acc
+    np.testing.assert_allclose(np.asarray(a.params["stem"]["w"]),
+                               np.asarray(b.params["stem"]["w"]), atol=0)

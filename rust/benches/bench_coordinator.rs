@@ -1,0 +1,77 @@
+//! Coordinator benchmarks: batcher mechanics (no model), and — when
+//! artifacts exist — serving latency/throughput at several batch policies,
+//! the L3 analogue of Table 6's latency column.
+//!
+//! Run after `make artifacts`: `cargo bench --bench bench_coordinator`
+
+use std::hint::black_box;
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+use rmsmp::coordinator::batcher::{BatchPolicy, Batcher, Pending};
+use rmsmp::coordinator::{Server, ServerConfig};
+use rmsmp::model::{Manifest, ModelWeights};
+use rmsmp::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("coordinator");
+
+    // --- batcher mechanics (no model) --------------------------------------
+    b.case("submit_dispatch_100", || {
+        let batcher: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(100),
+            queue_cap: 1024,
+        });
+        let (tx, _rx) = mpsc::channel();
+        for i in 0..100u64 {
+            batcher
+                .submit(Pending { id: i, payload: 0, enqueued: Instant::now(), respond: tx.clone() })
+                .unwrap();
+        }
+        let mut n = 0;
+        while n < 100 {
+            n += batcher.next_batch().unwrap().requests.len();
+        }
+        black_box(n);
+    });
+
+    // --- end-to-end serving (needs artifacts) -------------------------------
+    let dir = rmsmp::runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench coordinator/serve_*: skipped (run `make artifacts`)");
+        return;
+    }
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let weights = ModelWeights::load(&dir.join("weights.bin")).unwrap();
+    let image_len =
+        manifest.input_shape[1] * manifest.input_shape[2] * manifest.input_shape[3];
+
+    for (name, max_batch) in [("serve_batch1", 1usize), ("serve_batch8", 8)] {
+        let server = Server::start(
+            manifest.clone(),
+            weights.clone(),
+            ServerConfig {
+                workers: 1,
+                policy: BatchPolicy {
+                    max_batch,
+                    max_wait: Duration::from_millis(1),
+                    queue_cap: 256,
+                },
+            },
+        )
+        .unwrap();
+        let img: Vec<f32> = (0..image_len).map(|i| (i % 13) as f32 / 13.0).collect();
+        // one request per iteration, measured end to end (batch=8 submits 8)
+        b.case_ops(name, Some(max_batch as f64), || {
+            let rxs: Vec<_> = (0..max_batch)
+                .map(|_| server.submit(img.clone()).unwrap())
+                .collect();
+            for rx in rxs {
+                black_box(rx.recv().unwrap());
+            }
+        });
+        println!("  {}", server.metrics.summary());
+        server.shutdown();
+    }
+}

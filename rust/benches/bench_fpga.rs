@@ -1,0 +1,63 @@
+//! FPGA simulator benchmarks + the Table 6 regeneration timing.
+//!
+//! The simulator itself is microseconds per config; this bench pins that
+//! (so sweeps stay interactive) and regenerates the headline speedup.
+//!
+//! Run: `cargo bench --bench bench_fpga`
+
+use std::hint::black_box;
+
+use rmsmp::fpga::{simulate, Board, CoreCosts, Design, QuantConfig};
+use rmsmp::quant::Ratio;
+use rmsmp::util::bench::Bench;
+
+fn main() {
+    let mut b = Bench::new("fpga");
+    let layers = rmsmp::fpga::sim::resnet18_imagenet_layers();
+
+    b.case("allocate", || {
+        black_box(Design::allocate(
+            Board::XC7Z045,
+            QuantConfig { ratio: Ratio::RMSMP2, first_last_8bit: false, apot: false },
+            CoreCosts::default(),
+        ));
+    });
+
+    let d = Design::allocate(
+        Board::XC7Z045,
+        QuantConfig { ratio: Ratio::RMSMP2, first_last_8bit: false, apot: false },
+        CoreCosts::default(),
+    );
+    b.case("simulate_resnet18", || {
+        black_box(simulate(black_box(&d), black_box(&layers)));
+    });
+
+    b.case("ratio_sweep_21", || {
+        for pot in 0..21u32 {
+            let d = Design::allocate(
+                Board::XC7Z045,
+                QuantConfig {
+                    ratio: Ratio::new(pot * 4 + 5, 90 - pot * 4, 5),
+                    first_last_8bit: false,
+                    apot: false,
+                },
+                CoreCosts::default(),
+            );
+            black_box(simulate(&d, &layers));
+        }
+    });
+
+    // headline numbers, printed for EXPERIMENTS.md
+    let fixed = Design::allocate(
+        Board::XC7Z045,
+        QuantConfig { ratio: Ratio::new(0, 100, 0), first_last_8bit: true, apot: false },
+        CoreCosts::default(),
+    );
+    let r_fixed = simulate(&fixed, &layers);
+    let r_rmsmp = simulate(&d, &layers);
+    println!(
+        "table6/headline: RMSMP-2 {:.1} GOP/s {:.1} ms vs Fixed {:.1} GOP/s {:.1} ms => {:.2}x (paper 3.65x)",
+        r_rmsmp.gops, r_rmsmp.latency_ms, r_fixed.gops, r_fixed.latency_ms,
+        r_fixed.latency_ms / r_rmsmp.latency_ms
+    );
+}

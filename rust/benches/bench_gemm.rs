@@ -1,0 +1,82 @@
+//! GEMM core benchmarks — the software twins of Table 6's heterogeneous
+//! cores, at the paper's ResNet-18 layer shapes. Reports Gmac/s per core
+//! (ops = MACs here) and the end-to-end mixed GEMM at the RMSMP ratio.
+//!
+//! Run: `cargo bench --bench bench_gemm`
+
+use std::hint::black_box;
+
+use rmsmp::gemm::cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
+use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights, RowPartition};
+use rmsmp::quant::{default_alpha, Mat, Scheme};
+use rmsmp::util::bench::Bench;
+use rmsmp::util::rng::Rng;
+
+fn problem(rows: usize, cols: usize, batch: usize, scheme: Option<Scheme>, seed: u64)
+    -> (PackedActs, PackedWeights, RowPartition) {
+    let mut rng = Rng::new(seed);
+    let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect());
+    let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.5));
+    let alpha: Vec<f32> = (0..rows).map(|r| default_alpha(w.row(r))).collect();
+    let schemes: Vec<Scheme> = match scheme {
+        Some(s) => vec![s; rows],
+        None => (0..rows)
+            .map(|r| {
+                // 65:30:5 layout
+                if r * 100 < rows * 65 {
+                    Scheme::PotW4A4
+                } else if r * 100 < rows * 95 {
+                    Scheme::FixedW4A4
+                } else {
+                    Scheme::FixedW8A4
+                }
+            })
+            .collect(),
+    };
+    let acts = PackedActs::quantize(&x, 1.0, 4);
+    let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+    let part = RowPartition::from_schemes(&schemes);
+    (acts, pw, part)
+}
+
+fn main() {
+    let mut b = Bench::new("gemm");
+    // s2b0.conv2-like layer at CIFAR scale: 64 filters x 576, 256 positions
+    let (rows, cols, batch) = (64, 576, 256);
+    let macs = (rows * cols * batch) as f64;
+
+    for (name, scheme) in [
+        ("fixed4_core", Scheme::FixedW4A4),
+        ("fixed8_core", Scheme::FixedW8A4),
+        ("pot4_core", Scheme::PotW4A4),
+    ] {
+        let (acts, pw, _) = problem(rows, cols, batch, Some(scheme), 7);
+        let core: &dyn GemmCore = match scheme {
+            Scheme::FixedW4A4 => &GemmFixed4,
+            Scheme::FixedW8A4 => &GemmFixed8,
+            _ => &GemmPoT4,
+        };
+        let mut out = vec![0.0f32; batch];
+        b.case_ops(name, Some(macs), || {
+            for r in 0..rows {
+                out.iter_mut().for_each(|v| *v = 0.0);
+                core.run_row(black_box(&acts), black_box(&pw), r, &mut out);
+            }
+            black_box(&out);
+        });
+    }
+
+    // mixed GEMM at the RMSMP ratio (the serving hot path)
+    let (acts, pw, part) = problem(rows, cols, batch, None, 9);
+    let g = MixedGemm::new();
+    b.case_ops("mixed_65_30_5", Some(macs), || {
+        black_box(g.run_partitioned(black_box(&acts), black_box(&pw), &part));
+    });
+
+    // packing cost (quantize activations + weights)
+    let mut rng = Rng::new(11);
+    let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect());
+    b.case_ops("pack_acts", Some((batch * cols) as f64), || {
+        black_box(PackedActs::quantize(black_box(&x), 1.0, 4));
+    });
+}

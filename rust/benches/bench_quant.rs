@@ -1,0 +1,73 @@
+//! Quantizer microbenchmarks: per-element cost of each scheme's quantizer
+//! and the row-wise mixed projector (the training-side hot path of Alg. 1).
+//!
+//! Run: `cargo bench --bench bench_quant` (RMSMP_BENCH_FAST=1 for CI).
+
+use std::hint::black_box;
+
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::bench::Bench;
+use rmsmp::util::rng::Rng;
+
+fn main() {
+    let mut b = Bench::new("quant");
+    let n = 64 * 1024;
+    let mut rng = Rng::new(1);
+    let w: Vec<f32> = rng.normal_vec(n, 0.5);
+
+    b.case_ops("fixed4", Some(n as f64), || {
+        let mut acc = 0.0f32;
+        for &v in &w {
+            acc += quant::fixed_quant(black_box(v), 1.0, 4);
+        }
+        black_box(acc);
+    });
+    b.case_ops("fixed8", Some(n as f64), || {
+        let mut acc = 0.0f32;
+        for &v in &w {
+            acc += quant::fixed_quant(black_box(v), 1.0, 8);
+        }
+        black_box(acc);
+    });
+    b.case_ops("pot4", Some(n as f64), || {
+        let mut acc = 0.0f32;
+        for &v in &w {
+            acc += quant::pot_quant(black_box(v), 1.0, 4);
+        }
+        black_box(acc);
+    });
+    let apot = quant::apot::ApotQuantizer::new(4);
+    b.case_ops("apot4", Some(n as f64), || {
+        let mut acc = 0.0f32;
+        for &v in &w {
+            acc += apot.quant(black_box(v), 1.0);
+        }
+        black_box(acc);
+    });
+    b.case_ops("act4", Some(n as f64), || {
+        let mut acc = 0.0f32;
+        for &v in &w {
+            acc += quant::act_quant(black_box(v), 1.0, 4);
+        }
+        black_box(acc);
+    });
+
+    // row-wise mixed projector on a realistic layer (64 x 576 @ 65:30:5)
+    let (rows, cols) = (64, 576);
+    let wm = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.5));
+    let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(wm.row(r))).collect();
+    let schemes: Vec<Scheme> = (0..rows)
+        .map(|r| {
+            if r < 42 {
+                Scheme::PotW4A4
+            } else if r < 61 {
+                Scheme::FixedW4A4
+            } else {
+                Scheme::FixedW8A4
+            }
+        })
+        .collect();
+    b.case_ops("rowwise/64x576", Some((rows * cols) as f64), || {
+        black_box(quant::rowwise_quant(black_box(&wm), &alpha, &schemes));
+    });
+}

@@ -1,0 +1,66 @@
+//! Runtime benchmarks: PJRT artifact execution (the float reference path)
+//! vs the integer executor on the same model — the L3 "two backends"
+//! comparison, plus HLO compile time.
+//!
+//! Run after `make artifacts`: `cargo bench --bench bench_runtime`
+
+use std::hint::black_box;
+
+use rmsmp::model::{Executor, Manifest, ModelWeights};
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::runtime::Runtime;
+use rmsmp::util::bench::Bench;
+use rmsmp::util::rng::Rng;
+
+fn main() {
+    let dir = rmsmp::runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench runtime: skipped (run `make artifacts`)");
+        return;
+    }
+    let mut b = Bench::new("runtime");
+    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let weights = ModelWeights::load(&dir.join("weights.bin")).unwrap();
+    let shape = manifest.input_shape.clone();
+    let (n, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
+    let imgs_per_iter = n as f64;
+
+    // compile time (fresh runtime each iteration measures parse+compile)
+    let t0 = std::time::Instant::now();
+    let rt = Runtime::cpu().unwrap();
+    let exe = rt.load(&dir.join("model.hlo.txt")).unwrap();
+    println!("runtime/compile_model_hlo: {:.1} ms (once)", t0.elapsed().as_secs_f64() * 1e3);
+
+    let mut rng = Rng::new(5);
+    let input: Vec<f32> = (0..n * c * h * w).map(|_| rng.uniform(0.0, 1.0)).collect();
+    b.case_ops("pjrt_execute_batch", Some(imgs_per_iter), || {
+        black_box(exe.run_f32(&[(black_box(&input), &shape)]).unwrap());
+    });
+
+    let mut exec = Executor::new(manifest, weights).unwrap();
+    b.case_ops("integer_execute_batch", Some(imgs_per_iter), || {
+        let mut x = Tensor4::zeros(n, c, h, w);
+        x.data.copy_from_slice(&input);
+        black_box(exec.infer(x).unwrap());
+    });
+
+    let gemm_exe = rt.load(&dir.join("gemm.hlo.txt")).unwrap();
+    let (gb, gr, gc) = (8usize, 64usize, 576usize);
+    let x: Vec<f32> = (0..gb * gc).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let wmat: Vec<f32> = rng.normal_vec(gr * gc, 0.4);
+    let alpha = vec![1.0f32; gr];
+    let scheme: Vec<i32> = (0..gr as i32).map(|r| r % 3).collect();
+    b.case_ops("pjrt_pallas_gemm", Some((gb * gr * gc) as f64), || {
+        use rmsmp::runtime::ArtifactInput as A;
+        black_box(
+            gemm_exe
+                .run_mixed(&[
+                    A::F32(&x, &[gb, gc]),
+                    A::F32(&wmat, &[gr, gc]),
+                    A::F32(&alpha, &[gr]),
+                    A::I32(&scheme, &[gr]),
+                ])
+                .unwrap(),
+        );
+    });
+}

@@ -1,0 +1,158 @@
+//! Row-wise scheme/precision assignment engine (paper Alg. 1, lines 2-14).
+//!
+//! The Rust twin of `python/compile/assignment.py`: given per-row
+//! sensitivity scores (Hessian eigenvalue/trace estimates from the L2
+//! artifacts, or the weight-norm proxy) and the layer's weight rows, it
+//! produces scheme codes honouring the layer-wise-uniform A:B:C ratio
+//! exactly. Used at artifact-load time to re-derive / validate the
+//! manifest's assignment, and by `rmsmp assign` to re-quantize weights
+//! under a different ratio without touching Python.
+
+use crate::quant::{Mat, Ratio, Scheme};
+
+/// Sensitivity source for the Fixed-W8A4 (top-C%) selection.
+#[derive(Clone, Debug)]
+pub enum Sensitivity<'a> {
+    /// Per-row Hessian max-eigenvalue / block-trace estimates (from L2).
+    Hessian(&'a [f32]),
+    /// Zeroth-order proxy: per-row weight L2 norm.
+    WeightNorm,
+}
+
+/// Assign schemes for one layer.
+///
+/// 1. top-C% rows by sensitivity -> Fixed-W8A4
+/// 2. of the rest, the A/(A+B) lowest-variance rows -> `nonlinear`
+/// 3. remainder -> Fixed-W4A4
+pub fn assign_layer(
+    w: &Mat,
+    ratio: Ratio,
+    sens: Sensitivity<'_>,
+    nonlinear: Scheme,
+) -> Vec<Scheme> {
+    let rows = w.rows;
+    let (na, _nb, nc) = ratio.counts(rows);
+
+    let scores: Vec<f32> = match sens {
+        Sensitivity::Hessian(s) => {
+            assert_eq!(s.len(), rows, "sensitivity length");
+            s.to_vec()
+        }
+        Sensitivity::WeightNorm => w.row_norms(),
+    };
+
+    let mut scheme = vec![Scheme::FixedW4A4; rows];
+
+    // 1. top-C% most sensitive rows — stable sort descending.
+    let mut by_sens: Vec<usize> = (0..rows).collect();
+    by_sens.sort_by(|&i, &j| scores[j].partial_cmp(&scores[i]).unwrap().then(i.cmp(&j)));
+    let hi: Vec<usize> = by_sens[..nc].to_vec();
+    for &r in &hi {
+        scheme[r] = Scheme::FixedW8A4;
+    }
+
+    // 2. remaining rows by ascending variance -> nonlinear class.
+    let var = w.row_variances();
+    let mut rest: Vec<usize> = (0..rows).filter(|r| !hi.contains(r)).collect();
+    rest.sort_by(|&i, &j| var[i].partial_cmp(&var[j]).unwrap().then(i.cmp(&j)));
+    for &r in rest.iter().take(na) {
+        scheme[r] = nonlinear;
+    }
+    scheme
+}
+
+/// Verify a scheme vector matches the ratio exactly (layer-wise
+/// uniformality check used at artifact load).
+pub fn validate_ratio(schemes: &[Scheme], ratio: Ratio) -> Result<(), String> {
+    let (na, nb, nc) = ratio.counts(schemes.len());
+    let a = schemes.iter().filter(|s| s.is_shift_based()).count();
+    let b = schemes.iter().filter(|&&s| s == Scheme::FixedW4A4).count();
+    let c = schemes.iter().filter(|&&s| s == Scheme::FixedW8A4).count();
+    if (a, b, c) != (na, nb, nc) {
+        return Err(format!(
+            "scheme counts ({a},{b},{c}) != ratio {ratio} counts ({na},{nb},{nc}) for {} rows",
+            schemes.len()
+        ));
+    }
+    Ok(())
+}
+
+/// Equivalent weight precision (bits/weight) of an assignment — the
+/// paper's "W4A4*" accounting.
+pub fn equivalent_bits(schemes: &[Scheme], cols: usize) -> f64 {
+    if schemes.is_empty() {
+        return 0.0;
+    }
+    let bits: usize = schemes
+        .iter()
+        .map(|s| s.weight_bits() as usize * cols)
+        .sum();
+    bits as f64 / (schemes.len() * cols) as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_mat(rows: usize, cols: usize, seed: u64) -> Mat {
+        let mut rng = Rng::new(seed);
+        Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() * 0.5).collect())
+    }
+
+    #[test]
+    fn ratio_exact() {
+        let w = rand_mat(100, 32, 1);
+        let s = assign_layer(&w, Ratio::RMSMP2, Sensitivity::WeightNorm, Scheme::PotW4A4);
+        assert!(validate_ratio(&s, Ratio::RMSMP2).is_ok());
+        assert_eq!(s.iter().filter(|&&x| x == Scheme::FixedW8A4).count(), 5);
+        assert_eq!(s.iter().filter(|&&x| x == Scheme::PotW4A4).count(), 65);
+    }
+
+    #[test]
+    fn hessian_rows_get_high_precision() {
+        let w = rand_mat(20, 8, 2);
+        let mut sens = vec![0.0f32; 20];
+        sens[3] = 10.0; // most sensitive row
+        let s = assign_layer(&w, Ratio::RMSMP2, Sensitivity::Hessian(&sens), Scheme::PotW4A4);
+        assert_eq!(s[3], Scheme::FixedW8A4);
+        assert!(validate_ratio(&s, Ratio::RMSMP2).is_ok());
+    }
+
+    #[test]
+    fn low_variance_rows_become_pot() {
+        // Row 0 constant (variance 0) must land in the PoT class.
+        let mut w = rand_mat(10, 16, 3);
+        for v in w.row_mut(0) {
+            *v = 0.2;
+        }
+        let s = assign_layer(&w, Ratio::new(50, 50, 0), Sensitivity::WeightNorm, Scheme::PotW4A4);
+        assert_eq!(s[0], Scheme::PotW4A4);
+    }
+
+    #[test]
+    fn nonlinear_class_is_configurable() {
+        let w = rand_mat(10, 8, 4);
+        let s = assign_layer(&w, Ratio::new(60, 40, 0), Sensitivity::WeightNorm, Scheme::ApotW4A4);
+        assert_eq!(s.iter().filter(|&&x| x == Scheme::ApotW4A4).count(), 6);
+    }
+
+    #[test]
+    fn validate_rejects_wrong_mix() {
+        let schemes = vec![Scheme::FixedW4A4; 10];
+        assert!(validate_ratio(&schemes, Ratio::RMSMP2).is_err());
+        assert!(validate_ratio(&schemes, Ratio::new(0, 100, 0)).is_ok());
+    }
+
+    #[test]
+    fn equivalent_bits_accounting() {
+        let s = vec![
+            Scheme::PotW4A4,
+            Scheme::FixedW4A4,
+            Scheme::FixedW8A4,
+            Scheme::FixedW4A4,
+        ];
+        // (4+4+8+4)/4 = 5 bits
+        assert!((equivalent_bits(&s, 16) - 5.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,237 @@
+//! Dynamic batcher: coalesce single-image requests into executor batches.
+//!
+//! Policy: dispatch when `max_batch` requests are waiting, or when the
+//! oldest waiting request has been queued for `max_wait` — the classic
+//! latency/throughput knob. The queue applies backpressure at
+//! `queue_cap` (submissions fail fast instead of growing unboundedly).
+
+use std::collections::VecDeque;
+use std::sync::{Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One enqueued request: flat NCHW image + response channel.
+pub struct Pending<T> {
+    pub id: u64,
+    pub payload: T,
+    pub enqueued: Instant,
+    pub respond: std::sync::mpsc::Sender<Response>,
+}
+
+/// Completed response.
+#[derive(Clone, Debug)]
+pub struct Response {
+    pub id: u64,
+    pub logits: Vec<f32>,
+    pub queue_ms: f64,
+    pub total_ms: f64,
+    pub batch_size: usize,
+}
+
+/// A dispatched batch.
+pub struct Batch<T> {
+    pub requests: Vec<Pending<T>>,
+}
+
+/// Batching policy knobs.
+#[derive(Clone, Copy, Debug)]
+pub struct BatchPolicy {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub queue_cap: usize,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> BatchPolicy {
+        BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(2),
+            queue_cap: 1024,
+        }
+    }
+}
+
+struct State<T> {
+    queue: VecDeque<Pending<T>>,
+    closed: bool,
+}
+
+/// Thread-safe batching queue.
+pub struct Batcher<T> {
+    policy: BatchPolicy,
+    state: Mutex<State<T>>,
+    cv: Condvar,
+}
+
+/// Submission failure modes.
+#[derive(Debug, PartialEq, Eq)]
+pub enum SubmitError {
+    /// Queue at capacity — the backpressure signal.
+    Full,
+    /// Batcher shut down.
+    Closed,
+}
+
+impl<T> Batcher<T> {
+    pub fn new(policy: BatchPolicy) -> Batcher<T> {
+        Batcher {
+            policy,
+            state: Mutex::new(State { queue: VecDeque::new(), closed: false }),
+            cv: Condvar::new(),
+        }
+    }
+
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Enqueue a request (non-blocking; `Full` = backpressure).
+    pub fn submit(&self, req: Pending<T>) -> Result<(), SubmitError> {
+        let mut s = self.state.lock().unwrap();
+        if s.closed {
+            return Err(SubmitError::Closed);
+        }
+        if s.queue.len() >= self.policy.queue_cap {
+            return Err(SubmitError::Full);
+        }
+        s.queue.push_back(req);
+        self.cv.notify_one();
+        Ok(())
+    }
+
+    /// Current queue depth.
+    pub fn depth(&self) -> usize {
+        self.state.lock().unwrap().queue.len()
+    }
+
+    /// Block until a batch is ready (or `None` after close + drain).
+    pub fn next_batch(&self) -> Option<Batch<T>> {
+        let mut s = self.state.lock().unwrap();
+        loop {
+            if !s.queue.is_empty() {
+                let oldest = s.queue.front().unwrap().enqueued;
+                let full = s.queue.len() >= self.policy.max_batch;
+                let expired = oldest.elapsed() >= self.policy.max_wait;
+                if full || expired || s.closed {
+                    let n = s.queue.len().min(self.policy.max_batch);
+                    let requests = s.queue.drain(..n).collect();
+                    return Some(Batch { requests });
+                }
+                // wait the remaining deadline of the oldest request
+                let remaining = self.policy.max_wait.saturating_sub(oldest.elapsed());
+                let (ns, _) = self.cv.wait_timeout(s, remaining).unwrap();
+                s = ns;
+            } else if s.closed {
+                return None;
+            } else {
+                s = self.cv.wait(s).unwrap();
+            }
+        }
+    }
+
+    /// Close: wake all workers; queued requests still drain.
+    pub fn close(&self) {
+        self.state.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc;
+    use std::sync::Arc;
+
+    fn req(id: u64) -> (Pending<u32>, mpsc::Receiver<Response>) {
+        let (tx, rx) = mpsc::channel();
+        (
+            Pending { id, payload: id as u32, enqueued: Instant::now(), respond: tx },
+            rx,
+        )
+    }
+
+    #[test]
+    fn dispatches_full_batch_immediately() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 3,
+            max_wait: Duration::from_secs(10),
+            queue_cap: 10,
+        });
+        for i in 0..3 {
+            b.submit(req(i).0).unwrap();
+        }
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(b.depth(), 0);
+    }
+
+    #[test]
+    fn dispatches_partial_batch_on_deadline() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 10,
+        });
+        b.submit(req(1).0).unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.requests.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn backpressure_at_cap() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_secs(1),
+            queue_cap: 2,
+        });
+        b.submit(req(1).0).unwrap();
+        b.submit(req(2).0).unwrap();
+        assert_eq!(b.submit(req(3).0), Err(SubmitError::Full));
+    }
+
+    #[test]
+    fn close_drains_then_none() {
+        let b: Arc<Batcher<u32>> = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(10),
+            queue_cap: 10,
+        }));
+        b.submit(req(1).0).unwrap();
+        b.close();
+        assert_eq!(b.next_batch().unwrap().requests.len(), 1);
+        assert!(b.next_batch().is_none());
+        assert_eq!(b.submit(req(2).0), Err(SubmitError::Closed));
+    }
+
+    #[test]
+    fn concurrent_producers_consumers() {
+        let b: Arc<Batcher<u32>> = Arc::new(Batcher::new(BatchPolicy {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            queue_cap: 1000,
+        }));
+        let n = 200;
+        let prod = {
+            let b = Arc::clone(&b);
+            std::thread::spawn(move || {
+                for i in 0..n {
+                    loop {
+                        match b.submit(req(i).0) {
+                            Ok(()) => break,
+                            Err(SubmitError::Full) => std::thread::yield_now(),
+                            Err(e) => panic!("{e:?}"),
+                        }
+                    }
+                }
+                b.close();
+            })
+        };
+        let mut got = 0;
+        while let Some(batch) = b.next_batch() {
+            got += batch.requests.len();
+        }
+        prod.join().unwrap();
+        assert_eq!(got, n as usize);
+    }
+}

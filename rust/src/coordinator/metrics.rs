@@ -1,0 +1,98 @@
+//! Serving metrics: counters + latency reservoirs, shared across workers.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::util::stats::{Reservoir, Welford};
+
+/// Aggregated serving metrics (thread-safe).
+#[derive(Debug)]
+pub struct Metrics {
+    pub requests: AtomicU64,
+    pub responses: AtomicU64,
+    pub rejected: AtomicU64,
+    pub batches: AtomicU64,
+    latency_ms: Mutex<Reservoir>,
+    queue_ms: Mutex<Reservoir>,
+    batch_size: Mutex<Welford>,
+}
+
+impl Default for Metrics {
+    fn default() -> Metrics {
+        Metrics::new()
+    }
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics {
+            requests: AtomicU64::new(0),
+            responses: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            batches: AtomicU64::new(0),
+            latency_ms: Mutex::new(Reservoir::new(4096)),
+            queue_ms: Mutex::new(Reservoir::new(4096)),
+            batch_size: Mutex::new(Welford::new()),
+        }
+    }
+
+    pub fn record_batch(&self, size: usize) {
+        self.batches.fetch_add(1, Ordering::Relaxed);
+        self.batch_size.lock().unwrap().push(size as f64);
+    }
+
+    pub fn record_response(&self, total_ms: f64, queue_ms: f64) {
+        self.responses.fetch_add(1, Ordering::Relaxed);
+        self.latency_ms.lock().unwrap().push(total_ms);
+        self.queue_ms.lock().unwrap().push(queue_ms);
+    }
+
+    pub fn latency_percentile(&self, p: f64) -> f64 {
+        self.latency_ms.lock().unwrap().percentile(p)
+    }
+
+    pub fn queue_percentile(&self, p: f64) -> f64 {
+        self.queue_ms.lock().unwrap().percentile(p)
+    }
+
+    pub fn mean_batch_size(&self) -> f64 {
+        self.batch_size.lock().unwrap().mean()
+    }
+
+    pub fn summary(&self) -> String {
+        format!(
+            "requests={} responses={} rejected={} batches={} mean_batch={:.2} \
+             p50={:.2}ms p95={:.2}ms p99={:.2}ms queue_p95={:.2}ms",
+            self.requests.load(Ordering::Relaxed),
+            self.responses.load(Ordering::Relaxed),
+            self.rejected.load(Ordering::Relaxed),
+            self.batches.load(Ordering::Relaxed),
+            self.mean_batch_size(),
+            self.latency_percentile(50.0),
+            self.latency_percentile(95.0),
+            self.latency_percentile(99.0),
+            self.queue_percentile(95.0),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn records_and_summarizes() {
+        let m = Metrics::new();
+        m.requests.fetch_add(3, Ordering::Relaxed);
+        m.record_batch(2);
+        m.record_batch(4);
+        m.record_response(10.0, 1.0);
+        m.record_response(20.0, 2.0);
+        m.record_response(30.0, 3.0);
+        assert_eq!(m.responses.load(Ordering::Relaxed), 3);
+        assert!((m.mean_batch_size() - 3.0).abs() < 1e-9);
+        assert!((m.latency_percentile(50.0) - 20.0).abs() < 1e-9);
+        let s = m.summary();
+        assert!(s.contains("responses=3"), "{s}");
+    }
+}

@@ -1,0 +1,21 @@
+//! Serving coordinator: router → dynamic batcher → worker pool → metrics.
+//!
+//! The L3 request path (Python never appears here): clients submit single
+//! images; the [`batcher`] coalesces them under a max-batch / max-wait
+//! policy (the standard dynamic-batching tradeoff); [`server`] workers run
+//! the integer [`crate::model::Executor`] layer by layer and complete the
+//! per-request responses; [`metrics`] tracks queue depth, batch sizes, and
+//! latency percentiles. [`workload`] generates Poisson open-loop traffic
+//! for the serving benchmarks.
+
+pub mod batcher;
+pub mod metrics;
+pub mod router;
+pub mod server;
+pub mod workload;
+
+pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use metrics::Metrics;
+pub use router::Router;
+pub use server::{Server, ServerConfig};
+pub use workload::{OpenLoopGen, TraceEvent};

@@ -1,0 +1,85 @@
+//! Multi-model router: front door over several [`Server`] instances.
+//!
+//! The paper ships different quantization configurations per board
+//! (RMSMP-1 at 60:35:5, RMSMP-2 at 65:30:5); a deployment serves several
+//! such variants side by side. The router owns one server per variant,
+//! routes by model name, exposes aggregate metrics, and implements a
+//! default-variant fallback — the vLLM-router-shaped front of the stack.
+
+use std::collections::BTreeMap;
+use std::sync::mpsc;
+
+use anyhow::{anyhow, Result};
+
+use super::batcher::{Response, SubmitError};
+use super::server::{Server, ServerConfig};
+use crate::model::{Manifest, ModelWeights};
+
+/// A named model variant under one router.
+pub struct Variant {
+    pub name: String,
+    pub server: Server,
+}
+
+/// Routes requests to model variants by name.
+pub struct Router {
+    variants: BTreeMap<String, Variant>,
+    default: String,
+}
+
+impl Router {
+    /// Build from (name, manifest, weights, config) tuples; the first
+    /// entry becomes the default variant.
+    pub fn start(models: Vec<(String, Manifest, ModelWeights, ServerConfig)>) -> Result<Router> {
+        anyhow::ensure!(!models.is_empty(), "router needs at least one variant");
+        let default = models[0].0.clone();
+        let mut variants = BTreeMap::new();
+        for (name, manifest, weights, cfg) in models {
+            let server = Server::start(manifest, weights, cfg)?;
+            variants.insert(name.clone(), Variant { name, server });
+        }
+        Ok(Router { variants, default })
+    }
+
+    /// Route a request; `model = None` selects the default variant.
+    pub fn submit(&self, model: Option<&str>, image: Vec<f32>)
+        -> Result<mpsc::Receiver<Response>> {
+        let name = model.unwrap_or(&self.default);
+        let v = self
+            .variants
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown model {name:?} (have: {:?})",
+                                   self.variants.keys().collect::<Vec<_>>()))?;
+        v.server
+            .submit(image)
+            .map_err(|e: SubmitError| anyhow!("{name}: submit failed: {e:?}"))
+    }
+
+    /// Blocking convenience.
+    pub fn infer(&self, model: Option<&str>, image: Vec<f32>) -> Result<Response> {
+        Ok(self.submit(model, image)?.recv()?)
+    }
+
+    pub fn variant(&self, name: &str) -> Option<&Variant> {
+        self.variants.get(name)
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        self.variants.keys().map(|s| s.as_str()).collect()
+    }
+
+    /// Aggregate metrics summary across variants.
+    pub fn summary(&self) -> String {
+        self.variants
+            .iter()
+            .map(|(n, v)| format!("[{n}] {}", v.server.metrics.summary()))
+            .collect::<Vec<_>>()
+            .join("\n")
+    }
+
+    pub fn shutdown(self) {
+        for (_, v) in self.variants {
+            v.server.shutdown();
+        }
+    }
+}

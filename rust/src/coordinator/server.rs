@@ -1,0 +1,165 @@
+//! The serving loop: batcher → per-worker integer executors → responses.
+//!
+//! Each worker owns its own [`Executor`] (weights are shared via the
+//! packed-weight clone; the executor's scratch is worker-local) and pulls
+//! batches off the shared [`Batcher`] until shutdown — a miniature of the
+//! vLLM-style router/worker split, with the paper's quantized engine as
+//! the backend.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use super::batcher::{Batch, BatchPolicy, Batcher, Pending, Response, SubmitError};
+use super::metrics::Metrics;
+use crate::model::{Executor, Manifest, ModelWeights};
+use crate::quant::tensor::Tensor4;
+
+/// Server configuration.
+#[derive(Clone, Debug)]
+pub struct ServerConfig {
+    pub workers: usize,
+    pub policy: BatchPolicy,
+}
+
+impl Default for ServerConfig {
+    fn default() -> ServerConfig {
+        ServerConfig { workers: 1, policy: BatchPolicy::default() }
+    }
+}
+
+/// A running server instance.
+pub struct Server {
+    batcher: Arc<Batcher<Vec<f32>>>,
+    pub metrics: Arc<Metrics>,
+    next_id: AtomicU64,
+    input_chw: (usize, usize, usize),
+    num_classes: usize,
+    workers: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl Server {
+    /// Spawn workers over the manifest + weights.
+    pub fn start(manifest: Manifest, weights: ModelWeights, cfg: ServerConfig) -> Result<Server> {
+        let batcher = Arc::new(Batcher::new(cfg.policy));
+        let metrics = Arc::new(Metrics::new());
+        let shape = &manifest.input_shape;
+        anyhow::ensure!(shape.len() == 4, "manifest input_shape must be NCHW");
+        let input_chw = (shape[1], shape[2], shape[3]);
+        let num_classes = manifest.num_classes;
+
+        let mut workers = Vec::new();
+        for wi in 0..cfg.workers.max(1) {
+            let b = Arc::clone(&batcher);
+            let m = Arc::clone(&metrics);
+            let mut exec = Executor::new(manifest.clone(), weights.clone())?;
+            let chw = input_chw;
+            workers.push(
+                std::thread::Builder::new()
+                    .name(format!("rmsmp-serve-{wi}"))
+                    .spawn(move || worker_loop(&b, &m, &mut exec, chw))
+                    .expect("spawn server worker"),
+            );
+        }
+        Ok(Server {
+            batcher,
+            metrics,
+            next_id: AtomicU64::new(0),
+            input_chw,
+            num_classes,
+            workers,
+        })
+    }
+
+    pub fn input_len(&self) -> usize {
+        let (c, h, w) = self.input_chw;
+        c * h * w
+    }
+
+    pub fn num_classes(&self) -> usize {
+        self.num_classes
+    }
+
+    /// Submit one image (flat CHW floats); returns a receiver for the
+    /// response. `Err` = backpressure or shutdown.
+    pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        assert_eq!(image.len(), self.input_len(), "image length");
+        let (tx, rx) = mpsc::channel();
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.metrics.requests.fetch_add(1, Ordering::Relaxed);
+        let res = self.batcher.submit(Pending {
+            id,
+            payload: image,
+            enqueued: Instant::now(),
+            respond: tx,
+        });
+        if res.is_err() {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+        }
+        res.map(|()| rx)
+    }
+
+    /// Blocking convenience: submit and wait.
+    pub fn infer(&self, image: Vec<f32>) -> Result<Response> {
+        let rx = self
+            .submit(image)
+            .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
+        Ok(rx.recv()?)
+    }
+
+    /// Graceful shutdown: drain the queue, join workers.
+    pub fn shutdown(mut self) {
+        self.batcher.close();
+        for w in self.workers.drain(..) {
+            let _ = w.join();
+        }
+    }
+
+    pub fn queue_depth(&self) -> usize {
+        self.batcher.depth()
+    }
+}
+
+fn worker_loop(
+    batcher: &Batcher<Vec<f32>>,
+    metrics: &Metrics,
+    exec: &mut Executor,
+    (c, h, w): (usize, usize, usize),
+) {
+    while let Some(Batch { requests }) = batcher.next_batch() {
+        let n = requests.len();
+        metrics.record_batch(n);
+        let t0 = Instant::now();
+        // pack into one NCHW tensor
+        let mut x = Tensor4::zeros(n, c, h, w);
+        for (i, r) in requests.iter().enumerate() {
+            let off = i * c * h * w;
+            x.data[off..off + c * h * w].copy_from_slice(&r.payload);
+        }
+        match exec.infer(x) {
+            Ok(logits) => {
+                let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
+                for (i, r) in requests.into_iter().enumerate() {
+                    let queue_ms =
+                        (t0.duration_since(r.enqueued)).as_secs_f64() * 1e3;
+                    let total_ms = queue_ms + infer_ms;
+                    metrics.record_response(total_ms, queue_ms);
+                    let _ = r.respond.send(Response {
+                        id: r.id,
+                        logits: logits.row(i).to_vec(),
+                        queue_ms,
+                        total_ms,
+                        batch_size: n,
+                    });
+                }
+            }
+            Err(e) => {
+                // fail the whole batch: drop senders (clients see RecvError)
+                eprintln!("[server] batch failed: {e:#}");
+            }
+        }
+    }
+}

@@ -1,0 +1,77 @@
+//! Serving workload generation: open-loop Poisson arrivals over synthetic
+//! images (the serving-benchmark harness's traffic source).
+
+use crate::util::rng::Rng;
+
+/// One scheduled request in an open-loop trace.
+#[derive(Clone, Debug)]
+pub struct TraceEvent {
+    /// Arrival offset from trace start, seconds.
+    pub at_s: f64,
+    /// Flat CHW image payload.
+    pub image: Vec<f32>,
+}
+
+/// Open-loop generator: Poisson arrivals at `rate_rps`, synthetic images.
+pub struct OpenLoopGen {
+    rng: Rng,
+    rate_rps: f64,
+    image_len: usize,
+    clock_s: f64,
+}
+
+impl OpenLoopGen {
+    pub fn new(seed: u64, rate_rps: f64, image_len: usize) -> OpenLoopGen {
+        OpenLoopGen { rng: Rng::new(seed), rate_rps, image_len, clock_s: 0.0 }
+    }
+
+    /// Generate the next arrival.
+    pub fn next_event(&mut self) -> TraceEvent {
+        self.clock_s += self.rng.exponential(self.rate_rps);
+        let image = (0..self.image_len)
+            .map(|_| self.rng.uniform(0.0, 1.0))
+            .collect();
+        TraceEvent { at_s: self.clock_s, image }
+    }
+
+    /// Generate a complete trace of `n` requests.
+    pub fn trace(&mut self, n: usize) -> Vec<TraceEvent> {
+        (0..n).map(|_| self.next_event()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn arrivals_are_monotone_and_rate_matches() {
+        let mut g = OpenLoopGen::new(1, 100.0, 4);
+        let tr = g.trace(2000);
+        for w in tr.windows(2) {
+            assert!(w[1].at_s > w[0].at_s);
+        }
+        let span = tr.last().unwrap().at_s;
+        let rate = 2000.0 / span;
+        assert!((rate - 100.0).abs() < 10.0, "rate {rate}");
+    }
+
+    #[test]
+    fn images_have_requested_len_and_range() {
+        let mut g = OpenLoopGen::new(2, 10.0, 12);
+        let e = g.next_event();
+        assert_eq!(e.image.len(), 12);
+        assert!(e.image.iter().all(|&v| (0.0..1.0).contains(&v)));
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let a = OpenLoopGen::new(7, 50.0, 3).trace(10);
+        let b = OpenLoopGen::new(7, 50.0, 3).trace(10);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.at_s, y.at_s);
+            assert_eq!(x.image, y.image);
+        }
+    }
+}

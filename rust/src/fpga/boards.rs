@@ -1,0 +1,60 @@
+//! Board presets (paper §4.1/§4.3).
+
+/// An FPGA board's relevant resource budget.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Board {
+    pub name: &'static str,
+    /// Look-up tables (the GEMM_PoT fabric + glue logic).
+    pub luts: u64,
+    /// DSP slices (the GEMM_Fixed multipliers).
+    pub dsps: u64,
+    /// Clock frequency (the paper fixes 100 MHz for all implementations).
+    pub freq_hz: f64,
+}
+
+impl Board {
+    /// Zynq XC7Z020: 53.2K LUTs, 220 DSPs (Table 6 caption).
+    pub const XC7Z020: Board = Board {
+        name: "XC7Z020",
+        luts: 53_200,
+        dsps: 220,
+        freq_hz: 100e6,
+    };
+
+    /// Zynq XC7Z045: 218.6K LUTs, 900 DSPs (Table 6 caption).
+    pub const XC7Z045: Board = Board {
+        name: "XC7Z045",
+        luts: 218_600,
+        dsps: 900,
+        freq_hz: 100e6,
+    };
+
+    pub fn by_name(name: &str) -> Option<Board> {
+        match name.to_ascii_uppercase().as_str() {
+            "XC7Z020" | "Z020" | "7Z020" => Some(Board::XC7Z020),
+            "XC7Z045" | "Z045" | "7Z045" => Some(Board::XC7Z045),
+            _ => None,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_match_paper_caption() {
+        assert_eq!(Board::XC7Z020.luts, 53_200);
+        assert_eq!(Board::XC7Z020.dsps, 220);
+        assert_eq!(Board::XC7Z045.luts, 218_600);
+        assert_eq!(Board::XC7Z045.dsps, 900);
+        assert_eq!(Board::XC7Z045.freq_hz, 100e6);
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        assert_eq!(Board::by_name("xc7z020"), Some(Board::XC7Z020));
+        assert_eq!(Board::by_name("Z045"), Some(Board::XC7Z045));
+        assert_eq!(Board::by_name("virtex"), None);
+    }
+}

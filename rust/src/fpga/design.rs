@@ -1,0 +1,242 @@
+//! PE-array allocation: turn (board, quant config) into a concrete design.
+//!
+//! The paper: "Different ratios of quantization schemes/precisions are
+//! realized by adjusting the ratio among the processing element (PE) array
+//! sizes in the GEMM cores." This allocator does exactly that:
+//!
+//! 1. All DSPs go to the Fixed cores (the paper keeps DSP utilization at
+//!    100% whenever any Fixed rows exist), split between Fixed-4 and
+//!    Fixed-8 in proportion to their MAC share x per-MAC DSP cost.
+//! 2. The PoT (or APoT) core gets LUT PEs sized to *balance the makespan*
+//!    with the Fixed cores at the configured row ratio — more LUT PEs than
+//!    balance would idle, fewer would bottleneck — capped by the LUT
+//!    budget after glue/control overhead.
+
+use super::boards::Board;
+use crate::quant::Ratio;
+
+/// Calibrated per-PE resource costs and sustained efficiencies.
+///
+/// Calibration (EXPERIMENTS.md §Table-6): `eff_fixed` from Table 6 row (2)
+/// (900 DSPs -> 142.7 GOP/s => 0.79), `pot_fabric_frac` + `eff_pot` from
+/// row (4) (43% LUT, 352.6 GOP/s), `w8a8_rate` from the (1)/(2) gap,
+/// `eff_apot` from the MSQ rows. The mixed rows (RMSMP-1/2) are then
+/// *predictions* of the model, not fits.
+#[derive(Clone, Copy, Debug)]
+pub struct CoreCosts {
+    /// DSP slices per Fixed-W4A4 MAC/cycle.
+    pub dsp_per_fixed4: f64,
+    /// DSP slices per Fixed-W8A4 MAC/cycle (8x4 product still fits one DSP48).
+    pub dsp_per_fixed8: f64,
+    /// Glue LUTs accompanying each DSP PE (operand mux, accumulator tail).
+    pub lut_per_fixed_pe: f64,
+    /// LUTs per PoT shift-add PE.
+    pub lut_per_pot_pe: f64,
+    /// LUTs per APoT PE: two shift-add terms per weight => ~2x the PoT PE.
+    pub lut_per_apot_pe: f64,
+    /// Fixed control/DMA/BRAM-interface overhead (fraction of board LUTs).
+    pub control_lut_frac: f64,
+    /// Fraction of the board's LUTs routable as PoT/APoT PE array at
+    /// 100 MHz (timing closure limit; from row (4)'s 43% utilization).
+    pub pot_fabric_frac: f64,
+    /// Sustained efficiency of the DSP (Fixed) cores.
+    pub eff_fixed: f64,
+    /// Sustained efficiency of the LUT shift-add (PoT) core.
+    pub eff_pot: f64,
+    /// Sustained efficiency of the APoT core (two serialized shift terms).
+    pub eff_apot: f64,
+    /// Rate factor for whole layers in W8A8 (first/last-8bit variant):
+    /// doubled activation bandwidth halves the sustained MAC rate.
+    pub w8a8_rate: f64,
+    /// Per-layer setup cycles (weight DMA; no core reconfiguration thanks
+    /// to layer-wise uniformality).
+    pub setup_cycles: f64,
+}
+
+impl Default for CoreCosts {
+    fn default() -> CoreCosts {
+        CoreCosts {
+            dsp_per_fixed4: 1.0,
+            dsp_per_fixed8: 1.0,
+            lut_per_fixed_pe: 36.0,
+            lut_per_pot_pe: 48.0,
+            lut_per_apot_pe: 96.0,
+            control_lut_frac: 0.045,
+            pot_fabric_frac: 0.45,
+            eff_fixed: 0.80,
+            eff_pot: 0.95,
+            eff_apot: 0.95,
+            w8a8_rate: 0.25,
+            setup_cycles: 3_000.0,
+        }
+    }
+}
+
+/// A quantization configuration to implement (one Table 6 row).
+#[derive(Clone, Copy, Debug)]
+pub struct QuantConfig {
+    /// Scheme ratio PoT4 : Fixed4 : Fixed8 (the nonlinear share goes to
+    /// APoT PEs when `apot` is set — the MSQ baseline rows).
+    pub ratio: Ratio,
+    /// First/last layers in 8-bit Fixed (rows (1)(3)(5)(7)(8)) instead of
+    /// quantized like the rest (✓ rows).
+    pub first_last_8bit: bool,
+    /// Use APoT instead of PoT for the nonlinear class (MSQ rows).
+    pub apot: bool,
+}
+
+/// A concrete allocation of PE arrays on a board.
+#[derive(Clone, Debug)]
+pub struct Design {
+    pub board: Board,
+    pub cfg: QuantConfig,
+    pub costs: CoreCosts,
+    /// MAC/cycle capacity of each core.
+    pub pot_pes: f64,
+    pub fixed4_pes: f64,
+    pub fixed8_pes: f64,
+    pub lut_used: f64,
+    pub dsp_used: f64,
+}
+
+impl Design {
+    /// Allocate PE arrays for `cfg` on `board`.
+    pub fn allocate(board: Board, cfg: QuantConfig, costs: CoreCosts) -> Design {
+        let Ratio { pot4, fixed4, fixed8 } = cfg.ratio;
+        let (a, b, c) = (pot4 as f64 / 100.0, fixed4 as f64 / 100.0, fixed8 as f64 / 100.0);
+        let lut_pot = if cfg.apot { costs.lut_per_apot_pe } else { costs.lut_per_pot_pe };
+
+        let control = costs.control_lut_frac * board.luts as f64;
+        let lut_budget = board.luts as f64 - control;
+
+        // --- DSPs: all to the Fixed cores, split by cost-weighted share.
+        let fixed_share = b * costs.dsp_per_fixed4 + c * costs.dsp_per_fixed8;
+        let (fixed4_pes, fixed8_pes, dsp_used_raw) = if fixed_share > 0.0 {
+            let dsps = board.dsps as f64;
+            // PEs proportional to MAC share so both Fixed cores finish
+            // together: pe4/pe8 = b/c.
+            let denom = b * costs.dsp_per_fixed4 + c * costs.dsp_per_fixed8;
+            let unit = dsps / denom; // PEs per unit share
+            (unit * b, unit * c, dsps)
+        } else {
+            (0.0, 0.0, 0.0)
+        };
+        let fixed_glue = (fixed4_pes + fixed8_pes) * costs.lut_per_fixed_pe;
+
+        // --- PoT core: balance the makespan with the Fixed cores, capped
+        // by the routable fabric fraction AND the remaining LUT budget.
+        let lut_for_pot = (lut_budget - fixed_glue)
+            .min(costs.pot_fabric_frac * board.luts as f64)
+            .max(0.0);
+        let pot_cap = lut_for_pot / lut_pot;
+        let eff_nl = if cfg.apot { costs.eff_apot } else { costs.eff_pot };
+        let pot_pes = if a <= 0.0 {
+            0.0
+        } else if fixed_share <= 0.0 {
+            pot_cap // PoT-only design: fill the routable fabric
+        } else {
+            // balance finish times: a/(pot_pes*eff_nl) == b/(fixed4_pes*eff_fixed)
+            let balanced = a * fixed4_pes * costs.eff_fixed / (b.max(1e-9) * eff_nl);
+            balanced.min(pot_cap)
+        };
+
+        let lut_used = control + fixed_glue + pot_pes * lut_pot;
+        // A PoT-only design keeps a token DSP block for the first/last
+        // 8-bit path when configured (matches row (3) vs (4) in Table 6).
+        let dsp_used = if fixed_share <= 0.0 {
+            if cfg.first_last_8bit {
+                board.dsps as f64 // row (3): 8-bit first/last on DSPs
+            } else {
+                0.03 * board.dsps as f64 // row (4): residual scalar units
+            }
+        } else {
+            dsp_used_raw
+        };
+
+        Design {
+            board,
+            cfg,
+            costs,
+            pot_pes,
+            fixed4_pes,
+            fixed8_pes,
+            lut_used: lut_used.min(board.luts as f64),
+            dsp_used,
+        }
+    }
+
+    pub fn lut_util(&self) -> f64 {
+        self.lut_used / self.board.luts as f64
+    }
+
+    pub fn dsp_util(&self) -> f64 {
+        self.dsp_used / self.board.dsps as f64
+    }
+
+    /// Total MAC/cycle at full occupancy (upper bound; the sim applies the
+    /// per-layer makespan and pipeline efficiency).
+    pub fn peak_macs_per_cycle(&self) -> f64 {
+        self.pot_pes + self.fixed4_pes + self.fixed8_pes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cfg(ratio: Ratio) -> QuantConfig {
+        QuantConfig { ratio, first_last_8bit: false, apot: false }
+    }
+
+    #[test]
+    fn fixed_only_uses_all_dsps_no_pot() {
+        let d = Design::allocate(Board::XC7Z045, cfg(Ratio::new(0, 100, 0)), CoreCosts::default());
+        assert_eq!(d.pot_pes, 0.0);
+        assert!((d.fixed4_pes - 900.0).abs() < 1e-6);
+        assert!((d.dsp_util() - 1.0).abs() < 1e-9);
+        assert!(d.lut_util() < 0.30, "lut util {}", d.lut_util());
+    }
+
+    #[test]
+    fn pot_only_fills_routable_fabric() {
+        let d = Design::allocate(Board::XC7Z045, cfg(Ratio::new(100, 0, 0)), CoreCosts::default());
+        let c = CoreCosts::default();
+        assert!(d.pot_pes > 1000.0);
+        assert_eq!(d.fixed4_pes, 0.0);
+        assert!(d.dsp_util() < 0.1);
+        // fabric cap + control overhead (paper row (4): 43% LUT)
+        let expect = c.pot_fabric_frac + c.control_lut_frac;
+        assert!((d.lut_util() - expect).abs() < 0.02, "lut {}", d.lut_util());
+    }
+
+    #[test]
+    fn rmsmp_balances_and_fits() {
+        let c = CoreCosts::default();
+        let d = Design::allocate(Board::XC7Z045, cfg(Ratio::RMSMP2), c);
+        assert!((d.dsp_util() - 1.0).abs() < 1e-9, "100% DSP (paper)");
+        assert!(d.lut_util() > 0.4 && d.lut_util() <= 1.0, "lut {}", d.lut_util());
+        // makespan balance (with per-core efficiencies): pot ~= fixed4
+        let t_pot = 0.65 / (d.pot_pes * c.eff_pot);
+        let t_fix = 0.30 / (d.fixed4_pes * c.eff_fixed);
+        assert!(
+            (t_pot / t_fix - 1.0).abs() < 0.05 || d.lut_util() > 0.99,
+            "t_pot/t_fix = {}",
+            t_pot / t_fix
+        );
+    }
+
+    #[test]
+    fn apot_pes_cost_more_luts() {
+        let pot = Design::allocate(Board::XC7Z020, cfg(Ratio::new(60, 40, 0)), CoreCosts::default());
+        let mut qc = cfg(Ratio::new(60, 40, 0));
+        qc.apot = true;
+        let apot = Design::allocate(Board::XC7Z020, qc, CoreCosts::default());
+        assert!(apot.lut_used > pot.lut_used);
+    }
+
+    #[test]
+    fn small_board_caps_pot_at_budget() {
+        let d = Design::allocate(Board::XC7Z020, cfg(Ratio::new(90, 10, 0)), CoreCosts::default());
+        assert!(d.lut_util() <= 1.0 + 1e-9);
+    }
+}

@@ -1,0 +1,30 @@
+//! FPGA resource + cycle simulator (paper §4.3, Table 6).
+//!
+//! The paper implements three heterogeneous GEMM cores on Zynq boards:
+//! GEMM_PoT-4 built from LUT shift-add PEs, GEMM_Fixed-4 / GEMM_Fixed-8
+//! from DSP-slice MAC PEs, all at 100 MHz. We have no FPGA, so this module
+//! reproduces the *architecture model* (DESIGN.md §3 substitution):
+//!
+//! * [`boards`]  — resource budgets of XC7Z020 (53.2K LUT / 220 DSP) and
+//!   XC7Z045 (218.6K LUT / 900 DSP).
+//! * [`design`]  — the allocator: sizes the PE arrays so the per-layer
+//!   makespan is balanced across cores at the configured scheme ratio
+//!   (the paper's "adjusting the ratio among the PE array sizes"), under
+//!   the LUT/DSP budgets; reports utilization.
+//! * [`sim`]     — the cycle model: per layer, each core processes its row
+//!   class; the layer takes the max over cores (layer-wise uniformality
+//!   means no cross-layer reconfiguration), plus pipeline fill/drain and
+//!   DMA setup; aggregates GOP/s and per-image latency.
+//!
+//! Cost constants are calibrated once against the paper's measured
+//! single-scheme rows ((2) Fixed-W4A4 and (4) PoT-W4A4 in Table 6) and
+//! then *predict* the mixed rows; see `EXPERIMENTS.md` §Table-6 for the
+//! paper-vs-simulated comparison.
+
+pub mod boards;
+pub mod design;
+pub mod sim;
+
+pub use boards::Board;
+pub use design::{CoreCosts, Design, QuantConfig};
+pub use sim::{simulate, LayerShape, SimResult};

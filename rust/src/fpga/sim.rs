@@ -1,0 +1,207 @@
+//! Cycle model: layer-by-layer execution of a quantized CNN on a [`Design`].
+//!
+//! Per layer: each core processes its row class's MACs in parallel; the
+//! layer finishes when the slowest core does (layer-wise uniformality means
+//! the split is identical in every layer, so no core re-balancing between
+//! layers). Pipeline fill/drain and DMA setup are charged per layer. The
+//! first/last-8-bit variant routes those two layers entirely through the
+//! Fixed-8 core (paper rows (1)(3)(5)(7)(8)).
+
+use super::design::Design;
+
+/// Shape of one GEMM-lowered layer (from the AOT manifest).
+#[derive(Clone, Debug)]
+pub struct LayerShape {
+    pub name: String,
+    /// Output filters (= weight-matrix rows).
+    pub rows: usize,
+    /// Inner dimension (in_ch * kh * kw for conv; in_dim for linear).
+    pub cols: usize,
+    /// GEMM batch: output spatial positions per image (out_h*out_w), or 1.
+    pub positions: usize,
+}
+
+impl LayerShape {
+    /// MACs per image for this layer.
+    pub fn macs(&self) -> f64 {
+        self.rows as f64 * self.cols as f64 * self.positions as f64
+    }
+}
+
+/// Simulation output for one (design, model, batch).
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    pub total_cycles: f64,
+    pub latency_ms: f64,
+    /// End-to-end throughput, counting 2 ops per MAC (the paper's GOP/s).
+    pub gops: f64,
+    pub total_gop: f64,
+    pub per_layer_cycles: Vec<(String, f64)>,
+    pub lut_util: f64,
+    pub dsp_util: f64,
+}
+
+/// Simulate one image (batch = 1, as in the paper's latency column).
+pub fn simulate(design: &Design, layers: &[LayerShape]) -> SimResult {
+    simulate_batch(design, layers, 1)
+}
+
+/// Simulate a batch of images executed back-to-back (weights stay
+/// resident; per-layer setup is amortized across the batch).
+pub fn simulate_batch(design: &Design, layers: &[LayerShape], batch: usize) -> SimResult {
+    let c = &design.costs;
+    let r = design.cfg.ratio;
+    let (a, b, f8) = (
+        r.pot4 as f64 / 100.0,
+        r.fixed4 as f64 / 100.0,
+        r.fixed8 as f64 / 100.0,
+    );
+    let n = layers.len();
+    let mut total_cycles = 0.0;
+    let mut per_layer = Vec::with_capacity(n);
+    let mut total_macs = 0.0;
+
+    for (i, l) in layers.iter().enumerate() {
+        let macs = l.macs() * batch as f64;
+        total_macs += macs;
+        let first_or_last = i == 0 || i == n - 1;
+
+        let eff_nl = if design.cfg.apot { c.eff_apot } else { c.eff_pot };
+        let compute = if design.cfg.first_last_8bit && first_or_last {
+            // entire layer in W8A8 on the DSP block (all DSPs repurposed
+            // for these two layers; layer-wise uniformality is broken here,
+            // which is exactly the overhead the paper's ✓ rows avoid).
+            let pes8 = (design.board.dsps as f64 / c.dsp_per_fixed8).max(1.0);
+            macs / (pes8 * c.eff_fixed * c.w8a8_rate)
+        } else {
+            // row classes in parallel; makespan = slowest core.
+            let mut t: f64 = 0.0;
+            if a > 0.0 {
+                t = t.max(macs * a / (design.pot_pes * eff_nl).max(1e-9));
+            }
+            if b > 0.0 {
+                t = t.max(macs * b / (design.fixed4_pes * c.eff_fixed).max(1e-9));
+            }
+            if f8 > 0.0 {
+                t = t.max(macs * f8 / (design.fixed8_pes * c.eff_fixed).max(1e-9));
+            }
+            t
+        };
+        let cycles = compute + c.setup_cycles;
+        per_layer.push((l.name.clone(), cycles));
+        total_cycles += cycles;
+    }
+
+    let secs = total_cycles / design.board.freq_hz;
+    let total_gop = 2.0 * total_macs / 1e9;
+    SimResult {
+        total_cycles,
+        latency_ms: secs * 1e3 / batch as f64,
+        gops: total_gop / secs,
+        total_gop,
+        per_layer_cycles: per_layer,
+        lut_util: design.lut_util(),
+        dsp_util: design.dsp_util(),
+    }
+}
+
+/// The paper's benchmark model: ResNet-18 on ImageNet (224x224), the layer
+/// table used for every Table 6 row. (Our end-to-end integer executor runs
+/// the CIFAR-scale model from the manifest; this table reproduces the
+/// paper's workload for the hardware comparison.)
+pub fn resnet18_imagenet_layers() -> Vec<LayerShape> {
+    let mut v = Vec::new();
+    let mut push = |name: &str, rows: usize, in_ch: usize, k: usize, out_hw: usize| {
+        v.push(LayerShape {
+            name: name.to_string(),
+            rows,
+            cols: in_ch * k * k,
+            positions: out_hw * out_hw,
+        });
+    };
+    push("conv1", 64, 3, 7, 112);
+    for blk in 0..2 {
+        push(&format!("s1b{blk}.conv1"), 64, 64, 3, 56);
+        push(&format!("s1b{blk}.conv2"), 64, 64, 3, 56);
+    }
+    push("s2b0.conv1", 128, 64, 3, 28);
+    push("s2b0.conv2", 128, 128, 3, 28);
+    push("s2b0.down", 128, 64, 1, 28);
+    push("s2b1.conv1", 128, 128, 3, 28);
+    push("s2b1.conv2", 128, 128, 3, 28);
+    push("s3b0.conv1", 256, 128, 3, 14);
+    push("s3b0.conv2", 256, 256, 3, 14);
+    push("s3b0.down", 256, 128, 1, 14);
+    push("s3b1.conv1", 256, 256, 3, 14);
+    push("s3b1.conv2", 256, 256, 3, 14);
+    push("s4b0.conv1", 512, 256, 3, 7);
+    push("s4b0.conv2", 512, 512, 3, 7);
+    push("s4b0.down", 512, 256, 1, 7);
+    push("s4b1.conv1", 512, 512, 3, 7);
+    push("s4b1.conv2", 512, 512, 3, 7);
+    push("fc", 1000, 512, 1, 1);
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::fpga::design::{CoreCosts, QuantConfig};
+    use crate::fpga::Board;
+    use crate::quant::Ratio;
+
+    fn design(ratio: Ratio, first_last_8bit: bool) -> Design {
+        Design::allocate(
+            Board::XC7Z045,
+            QuantConfig { ratio, first_last_8bit, apot: false },
+            CoreCosts::default(),
+        )
+    }
+
+    #[test]
+    fn resnet18_total_ops_near_paper() {
+        // ResNet-18/224 is ~1.82 GMAC = 3.6 GOP; Table 6's latency x GOP/s
+        // products sit at ~3.6 GOP too.
+        let layers = resnet18_imagenet_layers();
+        let total: f64 = layers.iter().map(|l| l.macs()).sum();
+        let gop = 2.0 * total / 1e9;
+        assert!((3.0..4.2).contains(&gop), "GOP {gop}");
+    }
+
+    #[test]
+    fn rmsmp_beats_fixed_only() {
+        let layers = resnet18_imagenet_layers();
+        let fixed = simulate(&design(Ratio::new(0, 100, 0), true), &layers);
+        let rmsmp = simulate(&design(Ratio::RMSMP2, false), &layers);
+        let speedup = fixed.latency_ms / rmsmp.latency_ms;
+        // paper: 3.65x on XC7Z045 (row (1) vs RMSMP-2)
+        assert!(speedup > 2.5 && speedup < 5.0, "speedup {speedup}");
+    }
+
+    #[test]
+    fn first_last_8bit_slows_down() {
+        let layers = resnet18_imagenet_layers();
+        let relaxed = simulate(&design(Ratio::new(0, 100, 0), true), &layers);
+        let uniform = simulate(&design(Ratio::new(0, 100, 0), false), &layers);
+        assert!(relaxed.latency_ms > uniform.latency_ms);
+    }
+
+    #[test]
+    fn batch_amortizes_setup() {
+        let layers = resnet18_imagenet_layers();
+        let d = design(Ratio::RMSMP2, false);
+        let one = simulate_batch(&d, &layers, 1);
+        let eight = simulate_batch(&d, &layers, 8);
+        assert!(eight.latency_ms < one.latency_ms);
+        assert!(eight.gops > one.gops);
+    }
+
+    #[test]
+    fn gops_consistent_with_latency() {
+        let layers = resnet18_imagenet_layers();
+        let d = design(Ratio::RMSMP2, false);
+        let r = simulate(&d, &layers);
+        let recomputed = r.total_gop / (r.latency_ms / 1e3);
+        assert!((recomputed - r.gops).abs() / r.gops < 1e-9);
+    }
+}

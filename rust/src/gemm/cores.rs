@@ -1,0 +1,258 @@
+//! The three GEMM cores (paper §4.1: GEMM_PoT-4, GEMM_Fixed-4, GEMM_Fixed-8).
+//!
+//! Each core computes `y[b][r] = scale_a * scale_w[r] * Σ_c A[b][c]·W[r][c]`
+//! over integer codes for the row subset it owns. The Fixed cores MAC in
+//! i32; the PoT core shift-adds (`acc += ±(a << (6 - shift))` in a fixed-
+//! point frame), exactly mirroring the DSP-vs-LUT datapath split on the
+//! FPGA.
+
+use super::packed::{PackedActs, PackedWeights};
+use crate::quant::apot::ApotQuantizer;
+use crate::quant::{Mat, Scheme};
+
+/// A GEMM core processes the rows of one scheme class.
+pub trait GemmCore {
+    /// The scheme class this core accepts.
+    fn scheme(&self) -> Scheme;
+
+    /// Compute output column `y[:, r]` for one weight row `r` into `out`
+    /// (length = batch). `out[b] += dequantized dot(acts[b], w[r])`.
+    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]);
+
+    /// Ops per MAC for the efficiency accounting (2 = mul+add).
+    fn ops_per_mac(&self) -> f64 {
+        2.0
+    }
+}
+
+/// Integer multiply-accumulate core for Fixed-W4A4 rows (DSP PEs).
+pub struct GemmFixed4;
+/// Integer multiply-accumulate core for Fixed-W8A4 rows (DSP PEs, 8-bit).
+pub struct GemmFixed8;
+/// Shift-add core for PoT-W4A4 rows (LUT PEs): no multiplier anywhere.
+pub struct GemmPoT4;
+/// Shift-add (two-term) core for APoT-W4A4 baseline rows.
+pub struct GemmApot4 {
+    quant: ApotQuantizer,
+}
+
+impl Default for GemmApot4 {
+    fn default() -> Self {
+        GemmApot4 { quant: ApotQuantizer::new(4) }
+    }
+}
+
+#[inline]
+fn fixed_row_scale(acts: &PackedActs, w: &PackedWeights, r: usize, denom: f32) -> f32 {
+    acts.scale() * w.alpha[r] / denom
+}
+
+impl GemmCore for GemmFixed4 {
+    fn scheme(&self) -> Scheme {
+        Scheme::FixedW4A4
+    }
+
+    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
+        debug_assert_eq!(w.scheme[r], Scheme::FixedW4A4);
+        let wr = w.row(r);
+        let s = fixed_row_scale(acts, w, r, 7.0);
+        for (b, o) in out.iter_mut().enumerate() {
+            let ar = acts.row(b);
+            let mut acc: i32 = 0;
+            for (&a, &c) in ar.iter().zip(wr) {
+                acc += a as i32 * c as i32;
+            }
+            *o += s * acc as f32;
+        }
+    }
+}
+
+impl GemmCore for GemmFixed8 {
+    fn scheme(&self) -> Scheme {
+        Scheme::FixedW8A4
+    }
+
+    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
+        debug_assert_eq!(w.scheme[r], Scheme::FixedW8A4);
+        let wr = w.row(r);
+        let s = fixed_row_scale(acts, w, r, 127.0);
+        for (b, o) in out.iter_mut().enumerate() {
+            let ar = acts.row(b);
+            let mut acc: i32 = 0;
+            for (&a, &c) in ar.iter().zip(wr) {
+                acc += a as i32 * c as i32;
+            }
+            *o += s * acc as f32;
+        }
+    }
+}
+
+/// Per-code fixed-point multipliers for the PoT shift-add core: code c
+/// (pot_pack format) maps to `±2^(6-shift)` in the 2^6-scaled frame, so
+/// `acc += a * POT_MULT[c]` is arithmetically identical to the shift-add
+/// `acc ±= a << (6 - shift)`. The LUT is how we *simulate* the hardware's
+/// shifter on a CPU without a per-element branch + variable shift; the
+/// integer results are bit-identical.
+#[allow(dead_code)] // consumed by the pot_mult cache validation test
+static POT_MULT: [i32; 256] = build_pot_mult();
+
+const fn build_pot_mult() -> [i32; 256] {
+    let mut t = [0i32; 256];
+    let mut code: i32 = -128;
+    while code < 128 {
+        let idx = (code as i8) as u8 as usize;
+        if code != 0 {
+            let sign = if code < 0 { -1 } else { 1 };
+            let shift = if code < 0 { -code - 1 } else { code - 1 };
+            if shift <= 6 {
+                t[idx] = sign * (1 << (6 - shift));
+            }
+        }
+        code += 1;
+    }
+    t
+}
+
+impl GemmCore for GemmPoT4 {
+    fn scheme(&self) -> Scheme {
+        Scheme::PotW4A4
+    }
+
+    /// Shift-add datapath: weights are `±2^-shift`, shift in 0..=6,
+    /// accumulated in a 2^6-scaled integer frame (see [`POT_MULT`] for the
+    /// branchless CPU realization). i32 accumulation is safe: |term| <=
+    /// 15 * 64 = 960, so K up to ~2.2M columns fits i32.
+    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
+        debug_assert_eq!(w.scheme[r], Scheme::PotW4A4);
+        // The precomputed multiplier row (`pot_mult`) is the decoded weight
+        // register of the LUT PE: an i8 in ±2^(6-shift). The u8 x i8 -> i32
+        // loop has the same shape as the Fixed cores and vectorizes.
+        let mr = w.pot_mult_row(r);
+        let s = acts.scale() * w.alpha[r] / 64.0;
+        for (b, o) in out.iter_mut().enumerate() {
+            let ar = acts.row(b);
+            let mut acc: i32 = 0;
+            for (&a, &m) in ar.iter().zip(mr) {
+                acc += a as i32 * m as i32;
+            }
+            *o += s * acc as f32;
+        }
+    }
+
+    fn ops_per_mac(&self) -> f64 {
+        // shift + add; no multiply
+        2.0
+    }
+}
+
+impl GemmCore for GemmApot4 {
+    fn scheme(&self) -> Scheme {
+        Scheme::ApotW4A4
+    }
+
+    /// APoT = sum of two PoT terms -> two shift-adds per MAC. We go through
+    /// the dequantized level table (the hardware equivalent: a 3-bit LUT
+    /// into shift pairs).
+    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
+        debug_assert_eq!(w.scheme[r], Scheme::ApotW4A4);
+        let wr = w.row(r);
+        let lv = self.quant.levels();
+        let sa = acts.scale();
+        let aw = w.alpha[r];
+        for (b, o) in out.iter_mut().enumerate() {
+            let ar = acts.row(b);
+            let mut acc = 0.0f32;
+            for (&a, &c) in ar.iter().zip(wr) {
+                let sign = if c < 0 { -1.0 } else { 1.0 };
+                acc += a as f32 * sign * lv[c.unsigned_abs() as usize];
+            }
+            *o += sa * aw * acc;
+        }
+    }
+
+    fn ops_per_mac(&self) -> f64 {
+        3.0 // two shifts + adds
+    }
+}
+
+/// Float reference GEMM over dequantized operands (oracle for the cores).
+pub fn reference_gemm(acts: &PackedActs, w: &PackedWeights) -> Mat {
+    let a = acts.dequant();
+    let wd = w.dequant();
+    a.matmul_nt(&wd)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(scheme: Scheme, rows: usize, cols: usize, batch: usize)
+        -> (PackedActs, PackedWeights) {
+        let mut rng = Rng::new(42);
+        let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect());
+        let w = Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() * 0.4).collect());
+        let alpha: Vec<f32> = (0..rows).map(|r| crate::quant::default_alpha(w.row(r))).collect();
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &vec![scheme; rows], &alpha);
+        (acts, pw)
+    }
+
+    fn check_core(core: &dyn GemmCore) {
+        let (acts, w) = setup(core.scheme(), 5, 33, 4);
+        let want = reference_gemm(&acts, &w);
+        let mut got = Mat::zeros(acts.rows, w.rows);
+        for r in 0..w.rows {
+            let mut col = vec![0.0f32; acts.rows];
+            core.run_row(&acts, &w, r, &mut col);
+            for b in 0..acts.rows {
+                got.set(b, r, col[b]);
+            }
+        }
+        let err = got.max_abs_err(&want);
+        assert!(err < 1e-4, "{} core err {err}", core.scheme());
+    }
+
+    #[test]
+    fn fixed4_matches_reference() {
+        check_core(&GemmFixed4);
+    }
+
+    #[test]
+    fn fixed8_matches_reference() {
+        check_core(&GemmFixed8);
+    }
+
+    #[test]
+    fn pot4_matches_reference() {
+        check_core(&GemmPoT4);
+    }
+
+    #[test]
+    fn apot4_matches_reference() {
+        check_core(&GemmApot4::default());
+    }
+
+    #[test]
+    fn pot_mult_cache_matches_code_table() {
+        // the precomputed multiplier row must equal POT_MULT[code] per
+        // element (i.e. caching never changes the arithmetic).
+        let (_, w) = setup(Scheme::PotW4A4, 3, 97, 1);
+        for r in 0..w.rows {
+            for (c, m) in w.row(r).iter().zip(w.pot_mult_row(r)) {
+                assert_eq!(*m as i32, POT_MULT[*c as u8 as usize], "code {c}");
+            }
+        }
+    }
+
+    #[test]
+    fn pot_core_is_pure_integer() {
+        // The PoT accumulation of max-magnitude operands must not overflow
+        // i64 for realistic K: a=15, shift=0 -> term = 15<<6 = 960; K=1e6
+        // -> ~1e9, far below i64::MAX.
+        let (acts, w) = setup(Scheme::PotW4A4, 1, 64, 1);
+        let mut out = vec![0.0f32];
+        GemmPoT4.run_row(&acts, &w, 0, &mut out);
+        assert!(out[0].is_finite());
+    }
+}

@@ -1,0 +1,216 @@
+//! The row-partitioned mixed GEMM (the paper's core §3 computation).
+//!
+//! Rows of a layer's weight matrix are grouped by scheme class into a
+//! [`RowPartition`]; [`MixedGemm`] dispatches each class to its core —
+//! exactly how the FPGA feeds filter classes to the GEMM_PoT-4 /
+//! GEMM_Fixed-4 / GEMM_Fixed-8 PE arrays. Because the ratio is layer-wise
+//! uniform, the partition shape (and thus per-layer schedule) is identical
+//! in every layer.
+
+use super::cores::{GemmApot4, GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
+use super::packed::{PackedActs, PackedWeights};
+use crate::quant::{Mat, Scheme};
+
+/// Row indices grouped by scheme class.
+#[derive(Clone, Debug, Default)]
+pub struct RowPartition {
+    pub pot4: Vec<usize>,
+    pub fixed4: Vec<usize>,
+    pub fixed8: Vec<usize>,
+    pub apot4: Vec<usize>,
+}
+
+impl RowPartition {
+    pub fn from_schemes(schemes: &[Scheme]) -> RowPartition {
+        let mut p = RowPartition::default();
+        for (i, s) in schemes.iter().enumerate() {
+            match s {
+                Scheme::PotW4A4 => p.pot4.push(i),
+                Scheme::FixedW4A4 => p.fixed4.push(i),
+                Scheme::FixedW8A4 => p.fixed8.push(i),
+                Scheme::ApotW4A4 => p.apot4.push(i),
+            }
+        }
+        p
+    }
+
+    pub fn total(&self) -> usize {
+        self.pot4.len() + self.fixed4.len() + self.fixed8.len() + self.apot4.len()
+    }
+
+    /// (pot4, fixed4, fixed8) fractions — checked against the configured
+    /// ratio by the coordinator's admission tests.
+    pub fn fractions(&self) -> (f64, f64, f64) {
+        let t = self.total().max(1) as f64;
+        (
+            self.pot4.len() as f64 / t,
+            self.fixed4.len() as f64 / t,
+            self.fixed8.len() as f64 / t,
+        )
+    }
+}
+
+/// The mixed GEMM engine: owns the four cores and a row partition cache.
+pub struct MixedGemm {
+    fixed4: GemmFixed4,
+    fixed8: GemmFixed8,
+    pot4: GemmPoT4,
+    apot4: GemmApot4,
+}
+
+impl Default for MixedGemm {
+    fn default() -> Self {
+        MixedGemm {
+            fixed4: GemmFixed4,
+            fixed8: GemmFixed8,
+            pot4: GemmPoT4,
+            apot4: GemmApot4::default(),
+        }
+    }
+}
+
+impl MixedGemm {
+    pub fn new() -> MixedGemm {
+        MixedGemm::default()
+    }
+
+    /// `y = Qa(x) @ Qw(w)^T` over integer codes. Output is (batch, rows).
+    pub fn run(&self, acts: &PackedActs, w: &PackedWeights) -> Mat {
+        let part = RowPartition::from_schemes(&w.scheme);
+        self.run_partitioned(acts, w, &part)
+    }
+
+    /// Run with a precomputed partition (the executor caches it per layer).
+    pub fn run_partitioned(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        part: &RowPartition,
+    ) -> Mat {
+        assert_eq!(acts.cols, w.cols, "inner dims");
+        let mut out = Mat::zeros(acts.rows, w.rows);
+        let mut col = vec![0.0f32; acts.rows];
+        for (core, rows) in [
+            (&self.pot4 as &dyn GemmCore, &part.pot4),
+            (&self.fixed4, &part.fixed4),
+            (&self.fixed8, &part.fixed8),
+            (&self.apot4, &part.apot4),
+        ] {
+            for &r in rows {
+                col.iter_mut().for_each(|v| *v = 0.0);
+                core.run_row(acts, w, r, &mut col);
+                for b in 0..acts.rows {
+                    out.set(b, r, col[b]);
+                }
+            }
+        }
+        out
+    }
+
+    /// Float-path equivalent: fake-quant the operands and matmul. Used by
+    /// tests to pin integer == fake-quant and by the runtime comparison
+    /// against the AOT HLO artifact.
+    pub fn run_float(&self, x: &Mat, w: &Mat, schemes: &[Scheme], alpha: &[f32],
+                     act_alpha: f32, act_bits: u32) -> Mat {
+        let mut xq = x.clone();
+        for v in xq.data.iter_mut() {
+            *v = crate::quant::act_quant(*v, act_alpha, act_bits);
+        }
+        let wq = crate::quant::rowwise_quant(w, alpha, schemes);
+        xq.matmul_nt(&wq)
+    }
+}
+
+/// MAC counts per scheme class for one GEMM — feeds the FPGA cycle model
+/// and the GOP/s accounting in Table 6.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct MacCounts {
+    pub pot4: u64,
+    pub fixed4: u64,
+    pub fixed8: u64,
+    pub apot4: u64,
+}
+
+impl MacCounts {
+    pub fn of(part: &RowPartition, batch: usize, cols: usize) -> MacCounts {
+        let per_row = (batch * cols) as u64;
+        MacCounts {
+            pot4: part.pot4.len() as u64 * per_row,
+            fixed4: part.fixed4.len() as u64 * per_row,
+            fixed8: part.fixed8.len() as u64 * per_row,
+            apot4: part.apot4.len() as u64 * per_row,
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.pot4 + self.fixed4 + self.fixed8 + self.apot4
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::default_alpha;
+    use crate::util::rng::Rng;
+
+    fn rand_problem(rows: usize, cols: usize, batch: usize, seed: u64)
+        -> (Mat, Mat, Vec<Scheme>, Vec<f32>) {
+        let mut rng = Rng::new(seed);
+        let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.2)).collect());
+        let w = Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() * 0.5).collect());
+        let schemes: Vec<Scheme> = (0..rows)
+            .map(|_| match rng.below(4) {
+                0 => Scheme::PotW4A4,
+                1 => Scheme::FixedW4A4,
+                2 => Scheme::FixedW8A4,
+                _ => Scheme::ApotW4A4,
+            })
+            .collect();
+        let alpha: Vec<f32> = (0..rows).map(|r| default_alpha(w.row(r))).collect();
+        (x, w, schemes, alpha)
+    }
+
+    #[test]
+    fn integer_equals_fake_quant() {
+        let (x, w, schemes, alpha) = rand_problem(17, 29, 5, 7);
+        let g = MixedGemm::new();
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let int_out = g.run(&acts, &pw);
+        let float_out = g.run_float(&x, &w, &schemes, &alpha, 1.0, 4);
+        let err = int_out.max_abs_err(&float_out);
+        assert!(err < 1e-3, "int vs fake-quant err {err}");
+    }
+
+    #[test]
+    fn partition_covers_all_rows() {
+        let (_, _, schemes, _) = rand_problem(100, 4, 1, 3);
+        let p = RowPartition::from_schemes(&schemes);
+        assert_eq!(p.total(), 100);
+        let mut all: Vec<usize> =
+            [&p.pot4[..], &p.fixed4[..], &p.fixed8[..], &p.apot4[..]].concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mac_accounting() {
+        let schemes = vec![Scheme::PotW4A4, Scheme::PotW4A4, Scheme::FixedW4A4];
+        let p = RowPartition::from_schemes(&schemes);
+        let m = MacCounts::of(&p, 8, 16);
+        assert_eq!(m.pot4, 2 * 8 * 16);
+        assert_eq!(m.fixed4, 8 * 16);
+        assert_eq!(m.total(), 3 * 8 * 16);
+    }
+
+    #[test]
+    fn empty_batch_ok() {
+        let (x, w, schemes, alpha) = rand_problem(4, 8, 1, 1);
+        let g = MixedGemm::new();
+        let acts = PackedActs::quantize(&Mat::zeros(0, 8), 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let out = g.run(&acts, &pw);
+        assert_eq!(out.rows, 0);
+        let _ = (x, w); // silence
+    }
+}

@@ -1,0 +1,26 @@
+//! Integer GEMM cores — the software twins of the paper's heterogeneous
+//! FPGA GEMM cores (§3.1, §4.1):
+//!
+//! * [`GemmFixed4`] / [`GemmFixed8`] — DSP-style multiply-accumulate over
+//!   integer codes (i8 x u4 -> i32).
+//! * [`GemmPoT4`] — LUT-style shift-add: each weight is (sign, shift), so
+//!   a MAC is `acc += sign * (a << shift_adjust)`.
+//! * [`mixed`] — the row-partitioned mixed GEMM: rows are grouped by
+//!   scheme class and dispatched to their core, exactly like the FPGA
+//!   routes filter classes to PE arrays.
+//!
+//! All cores operate on *quantized codes* plus per-row scales, and their
+//! float results are bit-identical to fake-quant matmuls over the same
+//! data (see `rust/tests/test_gemm_vs_fake.rs`), which is the property
+//! that makes "simulated quantized inference" equal to "integer hardware
+//! inference".
+
+pub mod cores;
+pub mod mixed;
+pub mod nibble;
+pub mod packed;
+
+pub use cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
+pub use mixed::{MixedGemm, RowPartition};
+pub use nibble::NibblePacked;
+pub use packed::{PackedActs, PackedWeights};

@@ -1,0 +1,152 @@
+//! 4-bit nibble packing — the memory format the hardware actually stores.
+//!
+//! The paper's model-size and bandwidth numbers assume 4-bit rows occupy
+//! 4 bits in DRAM/BRAM (two codes per byte) and 8-bit rows one byte. This
+//! module implements that packing for both row classes:
+//!
+//! * Fixed-4 / APoT-4 rows: the signed code in `[-7, 7]` is stored as a
+//!   sign-magnitude nibble (sign bit + 3 magnitude bits).
+//! * PoT-4 rows: the [`super::packed::pot_pack`] code in `[-7, 7]` uses
+//!   the same nibble encoding (sign + shift-index).
+//! * Fixed-8 rows: raw `i8` bytes.
+//!
+//! Round-trip exactness is the contract (`unpack(pack(x)) == x`), and the
+//! packed stream length matches `PackedWeights::storage_bits`.
+
+use super::packed::PackedWeights;
+use crate::quant::Scheme;
+
+/// Encode an i8 code in [-7, 7] as a sign-magnitude nibble (0..=15).
+#[inline]
+pub fn to_nibble(code: i8) -> u8 {
+    debug_assert!((-7..=7).contains(&code), "nibble range: {code}");
+    if code < 0 {
+        0x8 | (-code) as u8
+    } else {
+        code as u8
+    }
+}
+
+/// Decode a sign-magnitude nibble back to i8.
+#[inline]
+pub fn from_nibble(n: u8) -> i8 {
+    let mag = (n & 0x7) as i8;
+    if n & 0x8 != 0 {
+        -mag
+    } else {
+        mag
+    }
+}
+
+/// A layer's weights in the deployment bit format.
+#[derive(Clone, Debug)]
+pub struct NibblePacked {
+    pub rows: usize,
+    pub cols: usize,
+    pub scheme: Vec<Scheme>,
+    /// Per-row byte streams: 4-bit rows hold ceil(cols/2) bytes (low
+    /// nibble first), 8-bit rows hold cols bytes.
+    pub rows_data: Vec<Vec<u8>>,
+}
+
+impl NibblePacked {
+    /// Pack from the integer-code form.
+    pub fn pack(w: &PackedWeights) -> NibblePacked {
+        let rows_data = (0..w.rows)
+            .map(|r| {
+                let codes = w.row(r);
+                match w.scheme[r] {
+                    Scheme::FixedW8A4 => codes.iter().map(|&c| c as u8).collect(),
+                    _ => {
+                        let mut out = Vec::with_capacity(w.cols.div_ceil(2));
+                        for pair in codes.chunks(2) {
+                            let lo = to_nibble(pair[0]);
+                            let hi = pair.get(1).map(|&c| to_nibble(c)).unwrap_or(0);
+                            out.push(lo | (hi << 4));
+                        }
+                        out
+                    }
+                }
+            })
+            .collect();
+        NibblePacked { rows: w.rows, cols: w.cols, scheme: w.scheme.clone(), rows_data }
+    }
+
+    /// Unpack row `r` back to i8 codes.
+    pub fn unpack_row(&self, r: usize) -> Vec<i8> {
+        let data = &self.rows_data[r];
+        match self.scheme[r] {
+            Scheme::FixedW8A4 => data.iter().map(|&b| b as i8).collect(),
+            _ => {
+                let mut out = Vec::with_capacity(self.cols);
+                for &b in data {
+                    out.push(from_nibble(b & 0xF));
+                    if out.len() < self.cols {
+                        out.push(from_nibble(b >> 4));
+                    }
+                }
+                out
+            }
+        }
+    }
+
+    /// Total packed bytes (the DRAM footprint).
+    pub fn bytes(&self) -> usize {
+        self.rows_data.iter().map(|r| r.len()).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{default_alpha, Mat};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn nibble_roundtrip_all_codes() {
+        for c in -7i8..=7 {
+            assert_eq!(from_nibble(to_nibble(c)), c, "code {c}");
+        }
+    }
+
+    fn packed(rows: usize, cols: usize, seed: u64) -> PackedWeights {
+        let mut rng = Rng::new(seed);
+        let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.5));
+        let schemes: Vec<Scheme> = (0..rows)
+            .map(|r| match r % 3 {
+                0 => Scheme::PotW4A4,
+                1 => Scheme::FixedW4A4,
+                _ => Scheme::FixedW8A4,
+            })
+            .collect();
+        let alpha: Vec<f32> = (0..rows).map(|r| default_alpha(w.row(r))).collect();
+        PackedWeights::quantize(&w, &schemes, &alpha)
+    }
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        for cols in [1usize, 2, 7, 16, 33] {
+            let pw = packed(6, cols, cols as u64);
+            let np = NibblePacked::pack(&pw);
+            for r in 0..pw.rows {
+                assert_eq!(np.unpack_row(r), pw.row(r).to_vec(), "row {r} cols {cols}");
+            }
+        }
+    }
+
+    #[test]
+    fn footprint_matches_storage_bits() {
+        let pw = packed(9, 16, 3); // even cols: bits exact
+        let np = NibblePacked::pack(&pw);
+        assert_eq!(np.bytes() * 8, pw.storage_bits());
+    }
+
+    #[test]
+    fn odd_cols_pad_half_byte() {
+        let pw = packed(3, 7, 4);
+        let np = NibblePacked::pack(&pw);
+        // 4-bit rows: ceil(7/2)=4 bytes; 8-bit row: 7 bytes
+        assert_eq!(np.rows_data[0].len(), 4);
+        assert_eq!(np.rows_data[2].len(), 7);
+    }
+}

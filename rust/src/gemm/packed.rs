@@ -1,0 +1,264 @@
+//! Quantized operand containers: integer codes + scales.
+//!
+//! `PackedWeights` stores one layer's weight matrix in code form, row-major,
+//! with per-row (scheme, alpha). Fixed rows hold i8 codes; PoT rows hold
+//! (sign, shift) pairs packed as i8 `sign * (shift + 1)` with 0 = zero
+//! weight — i.e. the 4-bit field a real LUT core would consume.
+
+use crate::quant::{self, Mat, Scheme};
+
+/// Activations quantized to unsigned m-bit codes with a shared scale.
+#[derive(Clone, Debug)]
+pub struct PackedActs {
+    pub rows: usize,
+    pub cols: usize,
+    /// u8 codes (0..=2^bits-1), row-major.
+    pub codes: Vec<u8>,
+    pub alpha: f32,
+    pub bits: u32,
+}
+
+impl PackedActs {
+    /// Quantize a float activation matrix (batch x cols).
+    ///
+    /// Hot path (runs on every layer's im2col output): one multiply by the
+    /// precomputed `n/alpha` instead of a divide per element, clamp in the
+    /// code domain. Bit-identical to `quant::act_code` (same rounding, and
+    /// clamping before/after the affine map commutes for alpha > 0).
+    pub fn quantize(x: &Mat, alpha: f32, bits: u32) -> PackedActs {
+        let n = ((1u32 << bits) - 1) as f32;
+        let inv = n / alpha;
+        let codes = x
+            .data
+            .iter()
+            .map(|&v| (v * inv).clamp(0.0, n).round_ties_even() as u8)
+            .collect();
+        PackedActs { rows: x.rows, cols: x.cols, codes, alpha, bits }
+    }
+
+    /// Dequantized float value of code `c`.
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        self.alpha / ((1u32 << self.bits) - 1) as f32
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[u8] {
+        &self.codes[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Dequantize back to float (for testing).
+    pub fn dequant(&self) -> Mat {
+        let s = self.scale();
+        Mat::from_vec(
+            self.rows,
+            self.cols,
+            self.codes.iter().map(|&c| c as f32 * s).collect(),
+        )
+    }
+}
+
+/// PoT weight code: `0` encodes zero; otherwise `sign * (shift + 1)` where
+/// `shift = -exponent` in `0..=6` for 4-bit PoT. Fits in an i8 (and in the
+/// 4-bit sign-magnitude field of the hardware).
+#[inline]
+pub fn pot_pack(sign: i32, exp: i32) -> i8 {
+    if sign == 0 {
+        0
+    } else {
+        (sign * (-exp + 1)) as i8
+    }
+}
+
+/// Inverse of [`pot_pack`]: returns (sign, shift).
+#[inline]
+pub fn pot_unpack(code: i8) -> (i32, i32) {
+    if code == 0 {
+        (0, 0)
+    } else {
+        let sign = if code < 0 { -1 } else { 1 };
+        (sign, code.unsigned_abs() as i32 - 1)
+    }
+}
+
+/// One layer's weights in integer-code form with per-row metadata.
+#[derive(Clone, Debug)]
+pub struct PackedWeights {
+    pub rows: usize,
+    pub cols: usize,
+    /// Row-major codes: Fixed rows hold the signed level index; PoT rows
+    /// hold [`pot_pack`] codes.
+    pub codes: Vec<i8>,
+    /// PoT rows only: the per-weight shift realized as an i8 multiplier in
+    /// the 2^6-scaled frame (`±2^(6-shift)`, in −64..=64). This is the
+    /// weight register a LUT PE would hold after decoding its 4-bit code;
+    /// precomputing it keeps the CPU inner loop branch-free and
+    /// vectorizable. Zero-filled for non-PoT rows.
+    pub pot_mult: Vec<i8>,
+    pub scheme: Vec<Scheme>,
+    pub alpha: Vec<f32>,
+}
+
+impl PackedWeights {
+    /// Quantize a float weight matrix given per-row scheme/alpha.
+    pub fn quantize(w: &Mat, scheme: &[Scheme], alpha: &[f32]) -> PackedWeights {
+        assert_eq!(w.rows, scheme.len());
+        assert_eq!(w.rows, alpha.len());
+        let mut codes = vec![0i8; w.rows * w.cols];
+        let mut pot_mult = vec![0i8; w.rows * w.cols];
+        for r in 0..w.rows {
+            let (a, s) = (alpha[r], scheme[r]);
+            let src = w.row(r);
+            let dst = &mut codes[r * w.cols..(r + 1) * w.cols];
+            match s {
+                Scheme::PotW4A4 => {
+                    let mdst = &mut pot_mult[r * w.cols..(r + 1) * w.cols];
+                    for ((d, m), &v) in dst.iter_mut().zip(mdst).zip(src) {
+                        let (sg, e) = quant::pot_code(v, a, 4);
+                        *d = pot_pack(sg, e);
+                        // ±2^(6 - shift) with shift = -e in 0..=6
+                        *m = (sg << (6 + e)) as i8;
+                    }
+                }
+                Scheme::FixedW4A4 => {
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d = quant::fixed_code(v, a, 4) as i8;
+                    }
+                }
+                Scheme::FixedW8A4 => {
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        *d = quant::fixed_code(v, a, 8) as i8;
+                    }
+                }
+                Scheme::ApotW4A4 => {
+                    // Baseline scheme: stored as an 8-bit fixed *code* of the
+                    // APoT-projected value (the APoT level grid is a subset
+                    // of no uniform grid, so codes are synthesized via the
+                    // dequant table in `mixed`). Here we store the level
+                    // index with sign.
+                    let q = quant::apot::ApotQuantizer::new(4);
+                    for (d, &v) in dst.iter_mut().zip(src) {
+                        let (sg, idx) = q.code(v, a);
+                        *d = (sg * idx as i32) as i8;
+                    }
+                }
+            }
+        }
+        PackedWeights {
+            rows: w.rows,
+            cols: w.cols,
+            codes,
+            pot_mult,
+            scheme: scheme.to_vec(),
+            alpha: alpha.to_vec(),
+        }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i8] {
+        &self.codes[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// PoT multiplier row (see `pot_mult`).
+    #[inline]
+    pub fn pot_mult_row(&self, r: usize) -> &[i8] {
+        &self.pot_mult[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Dequantize row `r` to floats (testing / reference path).
+    pub fn dequant_row(&self, r: usize) -> Vec<f32> {
+        let a = self.alpha[r];
+        match self.scheme[r] {
+            Scheme::PotW4A4 => self
+                .row(r)
+                .iter()
+                .map(|&c| {
+                    let (s, shift) = pot_unpack(c);
+                    a * s as f32 * (2.0f32).powi(-shift)
+                })
+                .collect(),
+            Scheme::FixedW4A4 => self.row(r).iter().map(|&c| a * c as f32 / 7.0).collect(),
+            Scheme::FixedW8A4 => self.row(r).iter().map(|&c| a * c as f32 / 127.0).collect(),
+            Scheme::ApotW4A4 => {
+                let q = quant::apot::ApotQuantizer::new(4);
+                let lv = q.levels();
+                self.row(r)
+                    .iter()
+                    .map(|&c| {
+                        let sign = if c < 0 { -1.0 } else { 1.0 };
+                        a * sign * lv[c.unsigned_abs() as usize]
+                    })
+                    .collect()
+            }
+        }
+    }
+
+    /// Full dequantized matrix (testing).
+    pub fn dequant(&self) -> Mat {
+        let mut out = Mat::zeros(self.rows, self.cols);
+        for r in 0..self.rows {
+            out.row_mut(r).copy_from_slice(&self.dequant_row(r));
+        }
+        out
+    }
+
+    /// Total weight storage in bits (4b for PoT/Fixed4/APoT rows, 8b for
+    /// Fixed8 rows) — the model-size numbers in EXPERIMENTS.md.
+    pub fn storage_bits(&self) -> usize {
+        self.scheme
+            .iter()
+            .map(|s| s.weight_bits() as usize * self.cols)
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pot_pack_roundtrip() {
+        for sign in [-1i32, 1] {
+            for e in -6i32..=0 {
+                let c = pot_pack(sign, e);
+                let (s2, shift) = pot_unpack(c);
+                assert_eq!(s2, sign);
+                assert_eq!(shift, -e);
+            }
+        }
+        assert_eq!(pot_unpack(pot_pack(0, 0)), (0, 0));
+    }
+
+    #[test]
+    fn acts_dequant_error_bounded() {
+        let x = Mat::from_vec(2, 3, vec![0.0, 0.3, 0.61, 0.99, 1.5, -0.2]);
+        let p = PackedActs::quantize(&x, 1.0, 4);
+        let d = p.dequant();
+        for (orig, deq) in x.data.iter().zip(&d.data) {
+            let clipped = orig.clamp(0.0, 1.0);
+            assert!((clipped - deq).abs() <= 0.5 / 15.0 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn packed_weights_match_fake_quant() {
+        let w = Mat::from_rows(&[
+            vec![0.9, -0.4, 0.1, 0.02],
+            vec![0.9, -0.4, 0.1, 0.02],
+            vec![0.9, -0.4, 0.1, 0.02],
+        ]);
+        let schemes = [Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4];
+        let alpha = [1.0f32, 1.0, 1.0];
+        let p = PackedWeights::quantize(&w, &schemes, &alpha);
+        let fake = crate::quant::rowwise_quant(&w, &alpha, &schemes);
+        assert!(p.dequant().max_abs_err(&fake) < 1e-6);
+    }
+
+    #[test]
+    fn storage_accounting() {
+        let w = Mat::zeros(4, 10);
+        let schemes = [Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4, Scheme::PotW4A4];
+        let p = PackedWeights::quantize(&w, &schemes, &[1.0; 4]);
+        assert_eq!(p.storage_bits(), 10 * (4 + 4 + 8 + 4));
+    }
+}

@@ -1,0 +1,41 @@
+//! # RMSMP — Row-wise Mixed-Scheme Multi-Precision quantization
+//!
+//! Rust reproduction of the RMSMP system (Chang et al., 2021): a DNN
+//! quantization framework that assigns a quantization *scheme*
+//! (Power-of-Two vs Fixed-point) and a *precision* (W4A4 vs W8A4) to each
+//! row of every weight matrix, with a layer-wise-uniform ratio so the
+//! heterogeneous GEMM cores of the inference hardware see the same workload
+//! split in every layer.
+//!
+//! This crate is Layer 3 of the three-layer stack (see DESIGN.md): the
+//! Python/JAX/Pallas layers author and AOT-lower the model; this crate owns
+//! everything on the request path:
+//!
+//! * [`quant`] — bit-exact integer quantizers (Fixed, PoT, APoT) matching
+//!   the JAX oracles.
+//! * [`assign`] — the row-wise scheme/precision assignment engine
+//!   (variance split + sensitivity top-K, Alg. 1).
+//! * [`gemm`] — integer GEMM cores: `GemmFixed4`, `GemmFixed8` (i8 MAC)
+//!   and `GemmPoT4` (shift-add), plus the row-partitioned mixed GEMM.
+//! * [`model`] — the layer-graph representation loaded from the AOT
+//!   manifest, im2col, and the integer layer-by-layer executor.
+//! * [`fpga`] — the FPGA resource/cycle simulator that reproduces Table 6
+//!   (Zynq XC7Z020 / XC7Z045 presets).
+//! * [`runtime`] — PJRT wrapper: loads `artifacts/*.hlo.txt`, compiles on
+//!   the CPU client, executes the float reference paths.
+//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
+//!   worker pool, metrics.
+//! * [`util`] — substrates built in-repo because the build is offline:
+//!   deterministic PRNG, CLI parsing, JSON, stats, a thread pool, and the
+//!   bench/property-test harnesses.
+
+pub mod assign;
+pub mod coordinator;
+pub mod fpga;
+pub mod gemm;
+pub mod model;
+pub mod quant;
+pub mod runtime;
+pub mod util;
+
+pub use quant::scheme::Scheme;

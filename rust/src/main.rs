@@ -1,0 +1,241 @@
+//! `rmsmp` — the L3 coordinator binary.
+//!
+//! Subcommands:
+//!   info       artifact + model summary (layers, schemes, sizes)
+//!   infer      run integer inference on synthetic images, report logits
+//!   parity     integer executor vs AOT HLO artifact vs recorded JAX logits
+//!   serve      dynamic-batching serving loop over a Poisson workload
+//!   simulate   FPGA resource/cycle simulation for a quantization config
+//!   assign     re-assign schemes under a new ratio and report the split
+//!
+//! Table/figure regeneration lives in the `table` binary (`cargo run
+//! --release --bin table -- <n>`).
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use rmsmp::coordinator::{OpenLoopGen, Server, ServerConfig};
+use rmsmp::coordinator::batcher::BatchPolicy;
+use rmsmp::fpga::{simulate, Board, CoreCosts, Design, QuantConfig};
+use rmsmp::model::{Executor, Manifest, ModelWeights};
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::Ratio;
+use rmsmp::runtime::{artifacts_dir, Runtime};
+use rmsmp::util::cli::{help, Args, FlagSpec};
+use rmsmp::util::rng::Rng;
+
+fn flag_specs() -> Vec<FlagSpec> {
+    vec![
+        FlagSpec { name: "artifacts", help: "artifacts directory", default: Some("artifacts"), takes_value: true },
+        FlagSpec { name: "ratio", help: "PoT4:Fixed4:Fixed8 ratio", default: Some("65:30:5"), takes_value: true },
+        FlagSpec { name: "board", help: "FPGA board (XC7Z020|XC7Z045)", default: Some("XC7Z045"), takes_value: true },
+        FlagSpec { name: "batch", help: "inference batch size", default: Some("4"), takes_value: true },
+        FlagSpec { name: "requests", help: "serve: number of requests", default: Some("64"), takes_value: true },
+        FlagSpec { name: "rate", help: "serve: arrival rate (req/s)", default: Some("50"), takes_value: true },
+        FlagSpec { name: "workers", help: "serve: worker threads", default: Some("1"), takes_value: true },
+        FlagSpec { name: "max-batch", help: "serve: dynamic batch cap", default: Some("8"), takes_value: true },
+        FlagSpec { name: "max-wait-ms", help: "serve: batch deadline", default: Some("2"), takes_value: true },
+        FlagSpec { name: "first-last-8bit", help: "simulate: 8-bit first/last layers", default: None, takes_value: false },
+        FlagSpec { name: "apot", help: "simulate: APoT nonlinear core (MSQ)", default: None, takes_value: false },
+        FlagSpec { name: "imagenet", help: "simulate: paper's ResNet-18/224 layer table", default: None, takes_value: false },
+        FlagSpec { name: "seed", help: "PRNG seed", default: Some("0"), takes_value: true },
+        FlagSpec { name: "help", help: "show help", default: None, takes_value: false },
+    ]
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse(std::env::args().skip(1), &flag_specs())?;
+    if args.has("help") || args.positional.is_empty() {
+        print!(
+            "{}",
+            help(
+                "rmsmp",
+                "row-wise mixed-scheme multi-precision quantized inference",
+                &flag_specs()
+            )
+        );
+        println!("\nSubcommands: info | infer | parity | serve | simulate | assign");
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(args.get_or("artifacts", artifacts_dir().to_str().unwrap()));
+    match args.positional[0].as_str() {
+        "info" => cmd_info(&artifacts),
+        "infer" => cmd_infer(&artifacts, &args),
+        "parity" => cmd_parity(&artifacts),
+        "serve" => cmd_serve(&artifacts, &args),
+        "simulate" => cmd_simulate(&args),
+        "assign" => cmd_assign(&artifacts, &args),
+        other => bail!("unknown subcommand {other:?} (see --help)"),
+    }
+}
+
+fn load_artifacts(dir: &PathBuf) -> Result<(Manifest, ModelWeights)> {
+    let manifest = Manifest::load(&dir.join("manifest.json"))
+        .context("loading manifest (run `make artifacts` first)")?;
+    let weights = ModelWeights::load(&dir.join("weights.bin"))?;
+    Ok((manifest, weights))
+}
+
+fn cmd_info(dir: &PathBuf) -> Result<()> {
+    let (m, w) = load_artifacts(dir)?;
+    println!("model {} ({}) classes={} input={:?} ratio={}",
+             m.model, m.arch, m.num_classes, m.input_shape, m.ratio);
+    println!("{:<16} {:>6} {:>7} {:>8}  scheme counts [PoT4,F4,F8,APoT]", "layer", "rows", "cols", "kind");
+    for l in &m.layers {
+        println!("{:<16} {:>6} {:>7} {:>8}  {:?}", l.name, l.rows, l.cols, l.kind, l.scheme_counts);
+    }
+    println!(
+        "float {} KiB -> quantized {} KiB ({:.2}x compression)",
+        w.float_bytes() / 1024,
+        w.quantized_bytes() / 1024,
+        w.float_bytes() as f64 / w.quantized_bytes() as f64
+    );
+    Ok(())
+}
+
+fn cmd_infer(dir: &PathBuf, args: &Args) -> Result<()> {
+    let (m, w) = load_artifacts(dir)?;
+    let batch = args.get_usize("batch", 4)?;
+    let (c, h, wd) = (m.input_shape[1], m.input_shape[2], m.input_shape[3]);
+    let mut exec = Executor::new(m, w)?;
+    let mut rng = Rng::new(args.get_usize("seed", 0)? as u64);
+    let mut x = Tensor4::zeros(batch, c, h, wd);
+    for v in x.data.iter_mut() {
+        *v = rng.uniform(0.0, 1.0);
+    }
+    let t0 = std::time::Instant::now();
+    let logits = exec.infer(x)?;
+    let dt = t0.elapsed();
+    println!("integer inference: batch={batch} in {:.1}ms ({:.2}ms/img, {} MMACs)",
+             dt.as_secs_f64() * 1e3,
+             dt.as_secs_f64() * 1e3 / batch as f64,
+             exec.macs / 1_000_000);
+    for b in 0..batch.min(4) {
+        let row = logits.row(b);
+        let argmax = row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        println!("  img{b}: argmax={argmax} logits[..4]={:?}", &row[..row.len().min(4)]);
+    }
+    Ok(())
+}
+
+fn cmd_parity(dir: &PathBuf) -> Result<()> {
+    use rmsmp::util::json::Json;
+
+    let (m, w) = load_artifacts(dir)?;
+    let parity = Json::load(&dir.join("parity.json"))?;
+    let input = parity.get("input")?.as_f32_vec()?;
+    let shape = parity.get("input_shape")?.as_usize_vec()?;
+    let want = parity.get("logits")?.as_f32_vec()?;
+
+    // 1. integer executor vs recorded JAX logits
+    let mut exec = Executor::new(m.clone(), w)?;
+    let mut x = Tensor4::zeros(shape[0], shape[1], shape[2], shape[3]);
+    x.data.copy_from_slice(&input);
+    let got = exec.infer(x)?;
+    let max_err = got
+        .data
+        .iter()
+        .zip(&want)
+        .fold(0.0f32, |e, (a, b)| e.max((a - b).abs()));
+    let scale = want.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
+    println!("integer-vs-jax: max |err| = {max_err:.5} (rel {:.4})", max_err / scale);
+
+    // 2. HLO artifact via PJRT vs recorded JAX logits
+    let rt = Runtime::cpu()?;
+    println!("pjrt platform: {} ({} devices)", rt.platform(), rt.device_count());
+    let exe = rt.load(&dir.join("model.hlo.txt"))?;
+    let out = exe.run_f32(&[(&input, &shape)])?;
+    let hlo_err = out
+        .iter()
+        .zip(&want)
+        .fold(0.0f32, |e, (a, b)| e.max((a - b).abs()));
+    println!("hlo-vs-jax:     max |err| = {hlo_err:.6}");
+    anyhow::ensure!(hlo_err < 1e-3 * scale.max(1.0), "HLO parity failure");
+    anyhow::ensure!(max_err / scale < 0.05, "integer parity failure");
+    println!("parity OK");
+    Ok(())
+}
+
+fn cmd_serve(dir: &PathBuf, args: &Args) -> Result<()> {
+    let (m, w) = load_artifacts(dir)?;
+    let n = args.get_usize("requests", 64)?;
+    let rate = args.get_f64("rate", 50.0)?;
+    let cfg = ServerConfig {
+        workers: args.get_usize("workers", 1)?,
+        policy: BatchPolicy {
+            max_batch: args.get_usize("max-batch", 8)?,
+            max_wait: std::time::Duration::from_millis(args.get_usize("max-wait-ms", 2)? as u64),
+            queue_cap: 1024,
+        },
+    };
+    let image_len = m.input_shape[1] * m.input_shape[2] * m.input_shape[3];
+    let server = Server::start(m, w, cfg)?;
+    let mut gen = OpenLoopGen::new(args.get_usize("seed", 0)? as u64, rate, image_len);
+    let trace = gen.trace(n);
+
+    println!("serving {n} requests at {rate} req/s (open loop)...");
+    let t0 = std::time::Instant::now();
+    let mut receivers = Vec::with_capacity(n);
+    for ev in &trace {
+        let target = std::time::Duration::from_secs_f64(ev.at_s);
+        if let Some(sleep) = target.checked_sub(t0.elapsed()) {
+            std::thread::sleep(sleep);
+        }
+        match server.submit(ev.image.clone()) {
+            Ok(rx) => receivers.push(rx),
+            Err(e) => println!("  rejected: {e:?}"),
+        }
+    }
+    for rx in receivers {
+        let _ = rx.recv();
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    println!("done in {wall:.2}s -> {:.1} req/s", n as f64 / wall);
+    println!("{}", server.metrics.summary());
+    server.shutdown();
+    Ok(())
+}
+
+fn cmd_simulate(args: &Args) -> Result<()> {
+    let board = Board::by_name(&args.get_or("board", "XC7Z045"))
+        .ok_or_else(|| anyhow::anyhow!("unknown board"))?;
+    let ratio = Ratio::parse(&args.get_or("ratio", "65:30:5"))?;
+    let qc = QuantConfig {
+        ratio,
+        first_last_8bit: args.has("first-last-8bit"),
+        apot: args.has("apot"),
+    };
+    let design = Design::allocate(board, qc, CoreCosts::default());
+    let layers = rmsmp::fpga::sim::resnet18_imagenet_layers();
+    let r = simulate(&design, &layers);
+    println!("board {} ratio {} first/last-8bit={} apot={}",
+             board.name, ratio, qc.first_last_8bit, qc.apot);
+    println!("  PEs: pot={:.0} fixed4={:.0} fixed8={:.0}",
+             design.pot_pes, design.fixed4_pes, design.fixed8_pes);
+    println!("  LUT {:.0}%  DSP {:.0}%  throughput {:.1} GOP/s  latency {:.1} ms",
+             100.0 * r.lut_util, 100.0 * r.dsp_util, r.gops, r.latency_ms);
+    Ok(())
+}
+
+fn cmd_assign(dir: &PathBuf, args: &Args) -> Result<()> {
+    use rmsmp::assign::{assign_layer, equivalent_bits, Sensitivity};
+    use rmsmp::quant::Scheme;
+
+    let (_, w) = load_artifacts(dir)?;
+    let ratio = Ratio::parse(&args.get_or("ratio", "65:30:5"))?;
+    println!("re-assigning under ratio {ratio} (weight-norm sensitivity):");
+    let mut total_bits = 0.0;
+    let mut total_rows = 0usize;
+    for l in &w.layers {
+        let s = assign_layer(&l.w, ratio, Sensitivity::WeightNorm, Scheme::PotW4A4);
+        let pot = s.iter().filter(|&&x| x == Scheme::PotW4A4).count();
+        let f4 = s.iter().filter(|&&x| x == Scheme::FixedW4A4).count();
+        let f8 = s.iter().filter(|&&x| x == Scheme::FixedW8A4).count();
+        println!("  {:<16} rows={:<4} -> PoT4={pot} F4={f4} F8={f8}", l.name, l.rows);
+        total_bits += equivalent_bits(&s, l.cols) * l.rows as f64;
+        total_rows += l.rows;
+    }
+    println!("equivalent weight precision: {:.3} bits", total_bits / total_rows as f64);
+    Ok(())
+}

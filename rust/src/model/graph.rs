@@ -1,0 +1,235 @@
+//! Graph-program interpreter: layer-by-layer integer inference.
+//!
+//! Executes the manifest's op program over the packed weights using the
+//! mixed GEMM cores — the software model of the FPGA's layer-by-layer
+//! execution. Every conv/linear quantizes its input activations (A4) and
+//! dispatches row classes to the scheme cores; adds/GAP/ReLU run in float
+//! (they are elementwise / accumulation stages on the hardware too).
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, Result};
+
+use super::im2col::{col2im, im2col, im2col_group};
+use super::manifest::{Manifest, OpMeta};
+use super::weights::{LayerWeights, ModelWeights};
+use crate::gemm::{MixedGemm, PackedActs, RowPartition};
+use crate::quant::tensor::Tensor4;
+use crate::quant::Mat;
+
+/// Re-export for the coordinator's type surface.
+pub type Op = OpMeta;
+
+/// A buffer flowing through the program: 4-D feature map or 2-D matrix.
+#[derive(Clone, Debug)]
+pub enum Buf {
+    T4(Tensor4),
+    M(Mat),
+}
+
+impl Buf {
+    fn t4(&self) -> Result<&Tensor4> {
+        match self {
+            Buf::T4(t) => Ok(t),
+            Buf::M(_) => Err(anyhow!("expected 4-D buffer")),
+        }
+    }
+
+    fn mat(&self) -> Result<&Mat> {
+        match self {
+            Buf::M(m) => Ok(m),
+            Buf::T4(_) => Err(anyhow!("expected 2-D buffer")),
+        }
+    }
+}
+
+/// Per-layer cached execution state.
+struct LayerExec {
+    part: RowPartition,
+}
+
+/// The integer inference executor.
+pub struct Executor {
+    pub manifest: Manifest,
+    pub weights: ModelWeights,
+    gemm: MixedGemm,
+    cache: HashMap<String, LayerExec>,
+    /// MACs executed since construction (for GOP accounting).
+    pub macs: u64,
+}
+
+impl Executor {
+    pub fn new(manifest: Manifest, weights: ModelWeights) -> Result<Executor> {
+        // validate: every program layer exists in both tables
+        for op in &manifest.program {
+            if let OpMeta::Conv { layer, .. } | OpMeta::Linear { layer, .. } = op {
+                manifest.layer(layer)?;
+                weights.layer(layer)?;
+            }
+        }
+        let cache = weights
+            .layers
+            .iter()
+            .map(|l| {
+                (
+                    l.name.clone(),
+                    LayerExec { part: RowPartition::from_schemes(&l.scheme) },
+                )
+            })
+            .collect();
+        Ok(Executor { manifest, weights, gemm: MixedGemm::new(), cache, macs: 0 })
+    }
+
+    /// Run one batch (NCHW input) through the program; returns logits
+    /// (batch, num_classes).
+    pub fn infer(&mut self, x: Tensor4) -> Result<Mat> {
+        let mut bufs: HashMap<String, Buf> = HashMap::new();
+        bufs.insert("in0".to_string(), Buf::T4(x));
+        let program = self.manifest.program.clone();
+        for op in &program {
+            match op {
+                OpMeta::Conv { layer, input, out, relu } => {
+                    let t = bufs
+                        .get(input)
+                        .ok_or_else(|| anyhow!("missing buffer {input}"))?
+                        .t4()?;
+                    let y = self.conv(layer, t, *relu)?;
+                    bufs.insert(out.clone(), Buf::T4(y));
+                }
+                OpMeta::Linear { layer, input, out } => {
+                    let m = bufs
+                        .get(input)
+                        .ok_or_else(|| anyhow!("missing buffer {input}"))?
+                        .mat()?;
+                    let y = self.linear(layer, m)?;
+                    bufs.insert(out.clone(), Buf::M(y));
+                }
+                OpMeta::Add { a, b, out, relu } => {
+                    let ta = bufs.get(a).ok_or_else(|| anyhow!("missing {a}"))?.t4()?;
+                    let tb = bufs.get(b).ok_or_else(|| anyhow!("missing {b}"))?.t4()?;
+                    anyhow::ensure!(
+                        ta.data.len() == tb.data.len(),
+                        "add shape mismatch {a} {b}"
+                    );
+                    let mut t = ta.clone();
+                    for (v, w) in t.data.iter_mut().zip(&tb.data) {
+                        *v += w;
+                        if *relu && *v < 0.0 {
+                            *v = 0.0;
+                        }
+                    }
+                    bufs.insert(out.clone(), Buf::T4(t));
+                }
+                OpMeta::Gap { input, out } => {
+                    let t = bufs.get(input).ok_or_else(|| anyhow!("missing {input}"))?.t4()?;
+                    let mut m = Mat::zeros(t.n, t.c);
+                    let hw = (t.h * t.w) as f32;
+                    for n in 0..t.n {
+                        for c in 0..t.c {
+                            let mut s = 0.0;
+                            for y in 0..t.h {
+                                for x in 0..t.w {
+                                    s += t.at(n, c, y, x);
+                                }
+                            }
+                            m.set(n, c, s / hw);
+                        }
+                    }
+                    bufs.insert(out.clone(), Buf::M(m));
+                }
+            }
+        }
+        match bufs.remove("logits") {
+            Some(Buf::M(m)) => Ok(m),
+            _ => Err(anyhow!("program produced no 'logits' matrix")),
+        }
+    }
+
+    fn conv(&mut self, name: &str, x: &Tensor4, relu: bool) -> Result<Tensor4> {
+        let lw: &LayerWeights = self.weights.layer(name)?;
+        let part = &self.cache[name].part;
+        let k = lw.kh;
+        let out_ch = lw.out_ch;
+        let groups = lw.groups.max(1);
+
+        let (mut y, oh, ow) = if groups == 1 {
+            let (patches, oh, ow) = im2col(x, k, lw.stride, lw.pad);
+            let acts = PackedActs::quantize(&patches, lw.a_alpha, self.manifest.act_bits);
+            self.macs += (patches.rows * lw.rows * lw.cols) as u64;
+            (self.gemm.run_partitioned(&acts, &lw.packed, part), oh, ow)
+        } else {
+            // grouped conv: run each group's filters over its channel slice.
+            let ch_per_group = x.c / groups;
+            let filt_per_group = out_ch / groups;
+            let mut y: Option<Mat> = None;
+            let (mut oh, mut ow) = (0, 0);
+            for g in 0..groups {
+                let (patches, o_h, o_w) = im2col_group(x, g, ch_per_group, k, lw.stride, lw.pad);
+                oh = o_h;
+                ow = o_w;
+                let acts = PackedActs::quantize(&patches, lw.a_alpha, self.manifest.act_bits);
+                let y_all = y.get_or_insert_with(|| Mat::zeros(patches.rows, out_ch));
+                // rows of this group's filters in the global weight matrix
+                for fi in 0..filt_per_group {
+                    let r = g * filt_per_group + fi;
+                    let mut col = vec![0.0f32; acts.rows];
+                    self.gemm.run_partitioned_row(&acts, &lw.packed, r, &mut col);
+                    for bidx in 0..acts.rows {
+                        y_all.set(bidx, r, col[bidx]);
+                    }
+                }
+                self.macs += (patches.rows * filt_per_group * lw.cols) as u64;
+            }
+            (y.unwrap(), oh, ow)
+        };
+
+        // bias + relu
+        for r in 0..y.rows {
+            let row = y.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v += lw.bias[c];
+                if relu && *v < 0.0 {
+                    *v = 0.0;
+                }
+            }
+        }
+        Ok(col2im(&y, x.n, out_ch, oh, ow))
+    }
+
+    fn linear(&mut self, name: &str, x: &Mat) -> Result<Mat> {
+        let lw = self.weights.layer(name)?;
+        let part = &self.cache[name].part;
+        let acts = PackedActs::quantize(x, lw.a_alpha, self.manifest.act_bits);
+        self.macs += (x.rows * lw.rows * lw.cols) as u64;
+        let mut y = self.gemm.run_partitioned(&acts, &lw.packed, part);
+        for r in 0..y.rows {
+            let row = y.row_mut(r);
+            for (c, v) in row.iter_mut().enumerate() {
+                *v += lw.bias[c];
+            }
+        }
+        Ok(y)
+    }
+}
+
+impl MixedGemm {
+    /// Single-row dispatch used by the grouped-conv path.
+    pub fn run_partitioned_row(
+        &self,
+        acts: &PackedActs,
+        w: &crate::gemm::PackedWeights,
+        r: usize,
+        out: &mut [f32],
+    ) {
+        use crate::gemm::cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
+        use crate::quant::Scheme;
+        match w.scheme[r] {
+            Scheme::PotW4A4 => GemmPoT4.run_row(acts, w, r, out),
+            Scheme::FixedW4A4 => GemmFixed4.run_row(acts, w, r, out),
+            Scheme::FixedW8A4 => GemmFixed8.run_row(acts, w, r, out),
+            Scheme::ApotW4A4 => {
+                crate::gemm::cores::GemmApot4::default().run_row(acts, w, r, out)
+            }
+        }
+    }
+}

@@ -1,0 +1,225 @@
+//! im2col: lower NCHW conv to the row-wise mixed GEMM.
+//!
+//! The FPGA (and this executor) runs convolutions as GEMMs over unrolled
+//! patches: output position (y, x) of image n becomes one GEMM row whose
+//! columns are the receptive-field values; the weight matrix rows are the
+//! filters. Grouped conv (MobileNet depthwise) unrolls per group.
+
+use crate::quant::tensor::Tensor4;
+use crate::quant::Mat;
+
+/// Output spatial size for SAME-style padding.
+pub fn out_dim(in_dim: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (in_dim + 2 * pad - k) / stride + 1
+}
+
+/// Unroll `x` into patch rows for a (k x k, stride, pad) conv.
+///
+/// Returns (patches, out_h, out_w): patches is (n*out_h*out_w, in_ch*k*k)
+/// with the same column order as the OIHW weight reshape (ch-major, then
+/// ky, kx) — matching `w.reshape(out_ch, -1)` on the Python side.
+pub fn im2col(x: &Tensor4, k: usize, stride: usize, pad: usize) -> (Mat, usize, usize) {
+    let oh = out_dim(x.h, k, stride, pad);
+    let ow = out_dim(x.w, k, stride, pad);
+    let cols = x.c * k * k;
+    let mut m = Mat::zeros(x.n * oh * ow, cols);
+    for n in 0..x.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (n * oh + oy) * ow + ox;
+                let dst = m.row_mut(row);
+                let mut ci = 0;
+                for c in 0..x.c {
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            dst[ci] = if iy >= 0
+                                && (iy as usize) < x.h
+                                && ix >= 0
+                                && (ix as usize) < x.w
+                            {
+                                x.at(n, c, iy as usize, ix as usize)
+                            } else {
+                                0.0
+                            };
+                            ci += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (m, oh, ow)
+}
+
+/// im2col restricted to one channel group (depthwise: group g = channel g).
+pub fn im2col_group(
+    x: &Tensor4,
+    group: usize,
+    ch_per_group: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> (Mat, usize, usize) {
+    let oh = out_dim(x.h, k, stride, pad);
+    let ow = out_dim(x.w, k, stride, pad);
+    let cols = ch_per_group * k * k;
+    let mut m = Mat::zeros(x.n * oh * ow, cols);
+    let c0 = group * ch_per_group;
+    for n in 0..x.n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (n * oh + oy) * ow + ox;
+                let dst = m.row_mut(row);
+                let mut ci = 0;
+                for dc in 0..ch_per_group {
+                    let c = c0 + dc;
+                    for ky in 0..k {
+                        let iy = (oy * stride + ky) as isize - pad as isize;
+                        for kx in 0..k {
+                            let ix = (ox * stride + kx) as isize - pad as isize;
+                            dst[ci] = if iy >= 0
+                                && (iy as usize) < x.h
+                                && ix >= 0
+                                && (ix as usize) < x.w
+                            {
+                                x.at(n, c, iy as usize, ix as usize)
+                            } else {
+                                0.0
+                            };
+                            ci += 1;
+                        }
+                    }
+                }
+            }
+        }
+    }
+    (m, oh, ow)
+}
+
+/// Fold GEMM output (n*oh*ow, out_ch) back into NCHW.
+pub fn col2im(y: &Mat, n: usize, out_ch: usize, oh: usize, ow: usize) -> Tensor4 {
+    assert_eq!(y.rows, n * oh * ow);
+    assert_eq!(y.cols, out_ch);
+    let mut t = Tensor4::zeros(n, out_ch, oh, ow);
+    for img in 0..n {
+        for oy in 0..oh {
+            for ox in 0..ow {
+                let row = (img * oh + oy) * ow + ox;
+                for c in 0..out_ch {
+                    t.set(img, c, oy, ox, y.at(row, c));
+                }
+            }
+        }
+    }
+    t
+}
+
+/// Reference float conv (oracle for the GEMM path).
+pub fn conv_ref(x: &Tensor4, w: &[f32], out_ch: usize, in_ch: usize, k: usize,
+                stride: usize, pad: usize) -> Tensor4 {
+    assert_eq!(w.len(), out_ch * in_ch * k * k);
+    let oh = out_dim(x.h, k, stride, pad);
+    let ow = out_dim(x.w, k, stride, pad);
+    let mut out = Tensor4::zeros(x.n, out_ch, oh, ow);
+    for n in 0..x.n {
+        for oc in 0..out_ch {
+            for oy in 0..oh {
+                for ox in 0..ow {
+                    let mut acc = 0.0f32;
+                    for ic in 0..in_ch {
+                        for ky in 0..k {
+                            let iy = (oy * stride + ky) as isize - pad as isize;
+                            if iy < 0 || iy as usize >= x.h {
+                                continue;
+                            }
+                            for kx in 0..k {
+                                let ix = (ox * stride + kx) as isize - pad as isize;
+                                if ix < 0 || ix as usize >= x.w {
+                                    continue;
+                                }
+                                acc += x.at(n, ic, iy as usize, ix as usize)
+                                    * w[((oc * in_ch + ic) * k + ky) * k + kx];
+                            }
+                        }
+                    }
+                    out.set(n, oc, oy, ox, acc);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rand_t4(n: usize, c: usize, h: usize, w: usize, seed: u64) -> Tensor4 {
+        let mut rng = Rng::new(seed);
+        let mut t = Tensor4::zeros(n, c, h, w);
+        for v in t.data.iter_mut() {
+            *v = rng.normal();
+        }
+        t
+    }
+
+    #[test]
+    fn out_dim_same_padding() {
+        assert_eq!(out_dim(32, 3, 1, 1), 32);
+        assert_eq!(out_dim(32, 3, 2, 1), 16);
+        assert_eq!(out_dim(8, 1, 1, 0), 8);
+    }
+
+    #[test]
+    fn im2col_gemm_equals_direct_conv() {
+        let x = rand_t4(2, 3, 8, 8, 1);
+        let (out_ch, in_ch, k) = (4, 3, 3);
+        let mut rng = Rng::new(2);
+        let w: Vec<f32> = (0..out_ch * in_ch * k * k).map(|_| rng.normal()).collect();
+
+        let want = conv_ref(&x, &w, out_ch, in_ch, k, 1, 1);
+
+        let (patches, oh, ow) = im2col(&x, k, 1, 1);
+        let wmat = Mat::from_vec(out_ch, in_ch * k * k, w);
+        let y = patches.matmul_nt(&wmat);
+        let got = col2im(&y, 2, out_ch, oh, ow);
+
+        let err = got
+            .data
+            .iter()
+            .zip(&want.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(err < 1e-4, "err {err}");
+    }
+
+    #[test]
+    fn strided_conv_matches() {
+        let x = rand_t4(1, 2, 9, 9, 3);
+        let (out_ch, in_ch, k) = (3, 2, 3);
+        let mut rng = Rng::new(4);
+        let w: Vec<f32> = (0..out_ch * in_ch * k * k).map(|_| rng.normal()).collect();
+        let want = conv_ref(&x, &w, out_ch, in_ch, k, 2, 1);
+        let (patches, oh, ow) = im2col(&x, k, 2, 1);
+        let y = patches.matmul_nt(&Mat::from_vec(out_ch, in_ch * k * k, w));
+        let got = col2im(&y, 1, out_ch, oh, ow);
+        assert_eq!((got.h, got.w), (want.h, want.w));
+        let err = got
+            .data
+            .iter()
+            .zip(&want.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
+        assert!(err < 1e-4);
+    }
+
+    #[test]
+    fn group_unroll_shape() {
+        let x = rand_t4(1, 4, 6, 6, 5);
+        let (m, oh, ow) = im2col_group(&x, 2, 1, 3, 1, 1);
+        assert_eq!(m.rows, oh * ow);
+        assert_eq!(m.cols, 9);
+        assert_eq!((oh, ow), (6, 6));
+    }
+}

@@ -1,0 +1,219 @@
+//! AOT manifest loader (`artifacts/manifest.json`).
+
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::fpga::LayerShape;
+use crate::quant::Ratio;
+use crate::util::json::Json;
+
+/// One layer's static description.
+#[derive(Clone, Debug)]
+pub struct LayerMeta {
+    pub name: String,
+    pub kind: String, // "conv" | "linear"
+    pub rows: usize,
+    pub cols: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+    pub a_alpha: f32,
+    /// Counts per scheme code [pot4, fixed4, fixed8, apot4].
+    pub scheme_counts: [usize; 4],
+}
+
+/// One op of the graph program.
+#[derive(Clone, Debug)]
+pub enum OpMeta {
+    Conv { layer: String, input: String, out: String, relu: bool },
+    Linear { layer: String, input: String, out: String },
+    Add { a: String, b: String, out: String, relu: bool },
+    Gap { input: String, out: String },
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub model: String,
+    pub arch: String,
+    pub num_classes: usize,
+    pub input_shape: Vec<usize>,
+    pub ratio: Ratio,
+    pub act_bits: u32,
+    pub layers: Vec<LayerMeta>,
+    pub program: Vec<OpMeta>,
+    pub gemm_shape: Option<(usize, usize, usize)>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let j = Json::load(path)?;
+        Manifest::from_json(&j).with_context(|| format!("manifest {}", path.display()))
+    }
+
+    pub fn from_json(j: &Json) -> Result<Manifest> {
+        let ratio_v = j.get("ratio")?.as_usize_vec()?;
+        if ratio_v.len() != 3 {
+            bail!("ratio must have 3 entries");
+        }
+        let mut layers = Vec::new();
+        for l in j.get("layers")?.as_arr()? {
+            let sc = l.get("scheme_counts")?.as_usize_vec()?;
+            layers.push(LayerMeta {
+                name: l.get("name")?.as_str()?.to_string(),
+                kind: l.get("kind")?.as_str()?.to_string(),
+                rows: l.get("rows")?.as_usize()?,
+                cols: l.get("cols")?.as_usize()?,
+                stride: l.get("stride")?.as_usize()?,
+                pad: l.get("pad")?.as_usize()?,
+                groups: l.get("groups")?.as_usize()?,
+                a_alpha: l.get("a_alpha")?.as_f64()? as f32,
+                scheme_counts: [
+                    sc.first().copied().unwrap_or(0),
+                    sc.get(1).copied().unwrap_or(0),
+                    sc.get(2).copied().unwrap_or(0),
+                    sc.get(3).copied().unwrap_or(0),
+                ],
+            });
+        }
+        let mut program = Vec::new();
+        for op in j.get("program")?.as_arr()? {
+            let kind = op.get("op")?.as_str()?;
+            let relu = op
+                .opt("relu")
+                .map(|v| v.as_bool().unwrap_or(false))
+                .unwrap_or(false);
+            program.push(match kind {
+                "conv" => OpMeta::Conv {
+                    layer: op.get("layer")?.as_str()?.to_string(),
+                    input: op.get("in")?.as_str()?.to_string(),
+                    out: op.get("out")?.as_str()?.to_string(),
+                    relu,
+                },
+                "linear" => OpMeta::Linear {
+                    layer: op.get("layer")?.as_str()?.to_string(),
+                    input: op.get("in")?.as_str()?.to_string(),
+                    out: op.get("out")?.as_str()?.to_string(),
+                },
+                "add" => OpMeta::Add {
+                    a: op.get("a")?.as_str()?.to_string(),
+                    b: op.get("b")?.as_str()?.to_string(),
+                    out: op.get("out")?.as_str()?.to_string(),
+                    relu,
+                },
+                "gap" => OpMeta::Gap {
+                    input: op.get("in")?.as_str()?.to_string(),
+                    out: op.get("out")?.as_str()?.to_string(),
+                },
+                other => bail!("unknown op {other:?}"),
+            });
+        }
+        let gemm_shape = match j.opt("gemm_shape") {
+            Some(v) => {
+                let g = v.as_usize_vec()?;
+                Some((g[0], g[1], g[2]))
+            }
+            None => None,
+        };
+        Ok(Manifest {
+            model: j.get("model")?.as_str()?.to_string(),
+            arch: j.get("arch")?.as_str()?.to_string(),
+            num_classes: j.get("num_classes")?.as_usize()?,
+            input_shape: j.get("input_shape")?.as_usize_vec()?,
+            ratio: Ratio::new(ratio_v[0] as u32, ratio_v[1] as u32, ratio_v[2] as u32),
+            act_bits: j.get("act_bits")?.as_usize()? as u32,
+            layers,
+            program,
+            gemm_shape,
+        })
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&LayerMeta> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow::anyhow!("layer {name:?} not in manifest"))
+    }
+
+    /// Layer shapes for the FPGA simulator, with output spatial positions
+    /// derived by walking the program over the input resolution.
+    pub fn layer_shapes(&self) -> Vec<LayerShape> {
+        let mut hw = *self.input_shape.get(2).unwrap_or(&32);
+        let mut shapes = Vec::new();
+        for op in &self.program {
+            if let OpMeta::Conv { layer, .. } = op {
+                let l = self.layer(layer).expect("program references manifest layer");
+                // SAME padding: out = ceil(in / stride). 'down' convs run in
+                // parallel to the main path at the same stride, so only the
+                // main chain advances the tracked resolution.
+                if !layer.ends_with(".down") {
+                    hw = hw.div_ceil(l.stride.max(1));
+                }
+                shapes.push(LayerShape {
+                    name: layer.clone(),
+                    rows: l.rows,
+                    cols: l.cols,
+                    positions: hw * hw,
+                });
+            } else if let OpMeta::Linear { layer, .. } = op {
+                let l = self.layer(layer).expect("manifest layer");
+                shapes.push(LayerShape {
+                    name: layer.clone(),
+                    rows: l.rows,
+                    cols: l.cols,
+                    positions: 1,
+                });
+            }
+        }
+        shapes
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Json {
+        Json::parse(
+            r#"{
+          "model": "resnet18", "arch": "resnet", "num_classes": 10,
+          "input_shape": [8, 3, 32, 32], "ratio": [65, 30, 5], "act_bits": 4,
+          "layers": [
+            {"name": "stem", "kind": "conv", "rows": 16, "cols": 27,
+             "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
+             "scheme_counts": [10, 5, 1, 0]},
+            {"name": "fc", "kind": "linear", "rows": 10, "cols": 64,
+             "stride": 0, "pad": 0, "groups": 1, "a_alpha": 2.0,
+             "scheme_counts": [7, 3, 0, 0]}
+          ],
+          "program": [
+            {"op": "conv", "layer": "stem", "in": "in0", "out": "b0", "relu": true},
+            {"op": "gap", "in": "b0", "out": "b1"},
+            {"op": "linear", "layer": "fc", "in": "b1", "out": "logits"}
+          ]
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn parses_fields() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        assert_eq!(m.model, "resnet18");
+        assert_eq!(m.ratio, Ratio::RMSMP2);
+        assert_eq!(m.layers.len(), 2);
+        assert_eq!(m.layer("stem").unwrap().rows, 16);
+        assert!(m.layer("nope").is_err());
+        assert_eq!(m.program.len(), 3);
+    }
+
+    #[test]
+    fn layer_shapes_track_spatial() {
+        let m = Manifest::from_json(&sample()).unwrap();
+        let shapes = m.layer_shapes();
+        assert_eq!(shapes.len(), 2);
+        assert_eq!(shapes[0].positions, 32 * 32);
+        assert_eq!(shapes[1].positions, 1);
+    }
+}

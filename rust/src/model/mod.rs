@@ -1,0 +1,19 @@
+//! Model representation + integer inference executor.
+//!
+//! * [`manifest`] — parses `artifacts/manifest.json` (graph program, layer
+//!   table, ratio) via the in-repo JSON parser.
+//! * [`weights`]  — loads `artifacts/weights.bin` (folded weights, schemes,
+//!   alphas) and packs them into [`crate::gemm::PackedWeights`].
+//! * [`im2col`]   — conv -> GEMM lowering for the integer path.
+//! * [`graph`]    — the op-program interpreter: executes conv/linear/add/
+//!   gap over the mixed GEMM cores, layer by layer — the deployment path
+//!   the FPGA simulator models, runnable on CPU.
+
+pub mod graph;
+pub mod im2col;
+pub mod manifest;
+pub mod weights;
+
+pub use graph::{Executor, Op};
+pub use manifest::Manifest;
+pub use weights::{LayerWeights, ModelWeights};

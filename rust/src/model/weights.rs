@@ -1,0 +1,236 @@
+//! `weights.bin` loader (format documented in `python/compile/export.py`).
+
+use std::io::Read;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::gemm::PackedWeights;
+use crate::quant::{Mat, Scheme};
+
+/// One folded layer: float weights + quantization metadata + packed codes.
+#[derive(Clone, Debug)]
+pub struct LayerWeights {
+    pub name: String,
+    pub kind: String, // "conv" | "linear"
+    pub rows: usize,
+    pub cols: usize,
+    // conv geometry (zeros for linear)
+    pub out_ch: usize,
+    pub in_ch: usize,
+    pub kh: usize,
+    pub kw: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub groups: usize,
+    pub a_alpha: f32,
+    pub scheme: Vec<Scheme>,
+    pub alpha: Vec<f32>,
+    pub bias: Vec<f32>,
+    /// Float folded weights, (rows, cols) row-major.
+    pub w: Mat,
+    /// Integer codes for the GEMM cores.
+    pub packed: PackedWeights,
+}
+
+/// All layers of one model, in manifest order.
+#[derive(Clone, Debug)]
+pub struct ModelWeights {
+    pub layers: Vec<LayerWeights>,
+}
+
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.i + n > self.b.len() {
+            bail!("weights.bin truncated at byte {}", self.i);
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn f32_vec(&mut self, n: usize) -> Result<Vec<f32>> {
+        let raw = self.take(4 * n)?;
+        Ok(raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect())
+    }
+}
+
+impl ModelWeights {
+    pub fn load(path: &Path) -> Result<ModelWeights> {
+        let mut buf = Vec::new();
+        std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?
+            .read_to_end(&mut buf)?;
+        Self::parse(&buf).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn parse(buf: &[u8]) -> Result<ModelWeights> {
+        let mut c = Cursor { b: buf, i: 0 };
+        if c.take(4)? != b"RMSW" {
+            bail!("bad magic (want RMSW)");
+        }
+        let version = c.u32()?;
+        if version != 1 {
+            bail!("unsupported weights.bin version {version}");
+        }
+        let n_layers = c.u32()? as usize;
+        let mut layers = Vec::with_capacity(n_layers);
+        for _ in 0..n_layers {
+            let name_len = c.u32()? as usize;
+            let name = String::from_utf8(c.take(name_len)?.to_vec())?;
+            let kind_code = c.u8()?;
+            let _relu = c.u8()?;
+            let rows = c.u32()? as usize;
+            let cols = c.u32()? as usize;
+            let out_ch = c.u32()? as usize;
+            let in_ch = c.u32()? as usize;
+            let kh = c.u32()? as usize;
+            let kw = c.u32()? as usize;
+            let stride = c.u32()? as usize;
+            let pad = c.u32()? as usize;
+            let groups = c.u32()? as usize;
+            let a_alpha = c.f32()?;
+            let scheme_raw = c.take(rows)?;
+            let scheme: Vec<Scheme> = scheme_raw
+                .iter()
+                .map(|&b| Scheme::from_code(b).ok_or_else(|| anyhow::anyhow!("bad scheme {b}")))
+                .collect::<Result<_>>()?;
+            let alpha = c.f32_vec(rows)?;
+            let bias = c.f32_vec(rows)?;
+            let w = Mat::from_vec(rows, cols, c.f32_vec(rows * cols)?);
+            let packed = PackedWeights::quantize(&w, &scheme, &alpha);
+            layers.push(LayerWeights {
+                name,
+                kind: if kind_code == 0 { "conv" } else { "linear" }.to_string(),
+                rows,
+                cols,
+                out_ch,
+                in_ch,
+                kh,
+                kw,
+                stride,
+                pad,
+                groups,
+                a_alpha,
+                scheme,
+                alpha,
+                bias,
+                w,
+                packed,
+            });
+        }
+        if c.i != buf.len() {
+            bail!("{} trailing bytes in weights.bin", buf.len() - c.i);
+        }
+        Ok(ModelWeights { layers })
+    }
+
+    pub fn layer(&self, name: &str) -> Result<&LayerWeights> {
+        self.layers
+            .iter()
+            .find(|l| l.name == name)
+            .ok_or_else(|| anyhow::anyhow!("layer {name:?} not in weights.bin"))
+    }
+
+    /// Total quantized model size in bytes (the compression headline).
+    pub fn quantized_bytes(&self) -> usize {
+        self.layers
+            .iter()
+            .map(|l| l.packed.storage_bits() / 8)
+            .sum()
+    }
+
+    /// Float32 model size in bytes.
+    pub fn float_bytes(&self) -> usize {
+        self.layers.iter().map(|l| 4 * l.rows * l.cols).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Hand-build a tiny weights.bin in memory.
+    fn tiny_bin() -> Vec<u8> {
+        let mut v = Vec::new();
+        v.extend_from_slice(b"RMSW");
+        v.extend_from_slice(&1u32.to_le_bytes());
+        v.extend_from_slice(&1u32.to_le_bytes()); // one layer
+        let name = b"fc";
+        v.extend_from_slice(&(name.len() as u32).to_le_bytes());
+        v.extend_from_slice(name);
+        v.push(1); // linear
+        v.push(0);
+        let (rows, cols) = (2u32, 3u32);
+        v.extend_from_slice(&rows.to_le_bytes());
+        v.extend_from_slice(&cols.to_le_bytes());
+        for x in [rows, cols, 1, 1, 0, 0, 1] {
+            v.extend_from_slice(&x.to_le_bytes());
+        }
+        v.extend_from_slice(&1.0f32.to_le_bytes()); // a_alpha
+        v.extend_from_slice(&[1u8, 0u8]); // schemes: Fixed4, PoT4
+        for a in [1.0f32, 1.0] {
+            v.extend_from_slice(&a.to_le_bytes());
+        }
+        for b in [0.1f32, -0.2] {
+            v.extend_from_slice(&b.to_le_bytes());
+        }
+        for w in [0.5f32, -0.25, 1.0, 0.7, 0.0, -1.0] {
+            v.extend_from_slice(&w.to_le_bytes());
+        }
+        v
+    }
+
+    #[test]
+    fn parses_tiny_model() {
+        let m = ModelWeights::parse(&tiny_bin()).unwrap();
+        assert_eq!(m.layers.len(), 1);
+        let l = &m.layers[0];
+        assert_eq!(l.name, "fc");
+        assert_eq!(l.kind, "linear");
+        assert_eq!(l.scheme, vec![Scheme::FixedW4A4, Scheme::PotW4A4]);
+        assert_eq!(l.w.at(0, 0), 0.5);
+        assert_eq!(l.bias, vec![0.1, -0.2]);
+        assert!(m.layer("fc").is_ok());
+        assert!(m.layer("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_magic_and_truncation() {
+        let mut b = tiny_bin();
+        b[0] = b'X';
+        assert!(ModelWeights::parse(&b).is_err());
+        let b = tiny_bin();
+        assert!(ModelWeights::parse(&b[..b.len() - 3]).is_err());
+        let mut b = tiny_bin();
+        b.push(0);
+        assert!(ModelWeights::parse(&b).is_err()); // trailing bytes
+    }
+
+    #[test]
+    fn size_accounting() {
+        let m = ModelWeights::parse(&tiny_bin()).unwrap();
+        assert_eq!(m.float_bytes(), 4 * 6);
+        assert_eq!(m.quantized_bytes(), (4 * 3 + 4 * 3) / 8);
+    }
+}

@@ -1,0 +1,149 @@
+//! Additive-Power-of-Two quantizer (Li et al. 2020) — baseline scheme.
+//!
+//! Used by the Table 1 / Table 6 baseline methods (APoT-W4A4 and the
+//! MSQ-style APoT+Fixed mixes); mirrors `ref.apot_quant`.
+
+use super::clip_scale;
+
+/// Nonnegative APoT levels for m bits, max-normalized (mirrors
+/// `ref.apot_levels`). For m = 4: 2-bit term {0, 1, 2^-2, 2^-4} + 1-bit
+/// term {0, 2^-1} -> 8 distinct sums.
+pub fn apot_levels(m: u32) -> Vec<f32> {
+    if m <= 2 {
+        return vec![0.0, 1.0];
+    }
+    let (p0, p1): (Vec<f32>, Vec<f32>) = if m == 4 {
+        (
+            vec![0.0, 1.0, 0.25, 0.0625],
+            vec![0.0, 0.5],
+        )
+    } else {
+        let b0 = m / 2; // == (m-1+1)/2
+        let b1 = (m - 1) - b0;
+        let mut g0 = vec![0.0f32];
+        for i in 0..(1u32 << b0) - 1 {
+            g0.push((2.0f32).powi(-(2 * i as i32)));
+        }
+        let mut g1 = vec![0.0f32];
+        for i in 0..(1u32 << b1) - 1 {
+            g1.push((2.0f32).powi(-(2 * i as i32 + 1)));
+        }
+        (g0, g1)
+    };
+    let mut lv: Vec<f32> = p0
+        .iter()
+        .flat_map(|a| p1.iter().map(move |b| a + b))
+        .collect();
+    lv.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    lv.dedup_by(|a, b| (*a - *b).abs() < 1e-9);
+    let max = *lv.last().unwrap();
+    lv.iter().map(|v| v / max).collect()
+}
+
+/// Project onto the nearest of `±alpha * levels`.
+pub fn project_levels(w: f32, alpha: f32, levels: &[f32]) -> f32 {
+    let t = clip_scale(w, alpha);
+    let mag = t.abs();
+    let mut best = levels[0];
+    let mut err = (mag - best).abs();
+    for &lv in &levels[1..] {
+        let e = (mag - lv).abs();
+        if e < err {
+            err = e;
+            best = lv;
+        }
+    }
+    alpha * t.signum() * best
+}
+
+/// APoT fake quant (allocates the level table per call; use
+/// [`ApotQuantizer`] in hot loops).
+pub fn apot_quant(w: f32, alpha: f32, m: u32) -> f32 {
+    project_levels(w, alpha, &apot_levels(m))
+}
+
+/// Reusable APoT quantizer with a precomputed level table.
+pub struct ApotQuantizer {
+    levels: Vec<f32>,
+}
+
+impl ApotQuantizer {
+    pub fn new(m: u32) -> ApotQuantizer {
+        ApotQuantizer { levels: apot_levels(m) }
+    }
+
+    #[inline]
+    pub fn quant(&self, w: f32, alpha: f32) -> f32 {
+        project_levels(w, alpha, &self.levels)
+    }
+
+    /// Level index code (sign stored separately by the caller).
+    pub fn code(&self, w: f32, alpha: f32) -> (i32, usize) {
+        let t = clip_scale(w, alpha);
+        let mag = t.abs();
+        let mut best = 0usize;
+        let mut err = f32::MAX;
+        for (i, &lv) in self.levels.iter().enumerate() {
+            let e = (mag - lv).abs();
+            if e < err {
+                err = e;
+                best = i;
+            }
+        }
+        (t.signum() as i32, best)
+    }
+
+    pub fn levels(&self) -> &[f32] {
+        &self.levels
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn four_bit_levels_count_and_range() {
+        let lv = apot_levels(4);
+        assert_eq!(lv.len(), 8);
+        assert_eq!(lv[0], 0.0);
+        assert_eq!(*lv.last().unwrap(), 1.0);
+        for w in lv.windows(2) {
+            assert!(w[0] < w[1], "levels must be strictly increasing");
+        }
+    }
+
+    #[test]
+    fn denser_than_pot_at_tail() {
+        // second-largest APoT level > second-largest PoT level (0.5)
+        let lv = apot_levels(4);
+        assert!(lv[lv.len() - 2] > 0.5);
+    }
+
+    #[test]
+    fn idempotent() {
+        let q = ApotQuantizer::new(4);
+        for i in 0..200 {
+            let w = -1.0 + 2.0 * (i as f32) / 199.0;
+            let q1 = q.quant(w, 1.0);
+            assert!((q.quant(q1, 1.0) - q1).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn projection_is_nearest() {
+        let q = ApotQuantizer::new(4);
+        let lv = q.levels().to_vec();
+        // midpoint between two levels must go to one of them
+        let w = (lv[3] + lv[4]) / 2.0 + 1e-4;
+        assert_eq!(q.quant(w, 1.0), lv[4]);
+    }
+
+    #[test]
+    fn code_identifies_level() {
+        let q = ApotQuantizer::new(4);
+        let (s, i) = q.code(-0.6, 1.0);
+        assert_eq!(s, -1);
+        assert!((q.levels()[i] - q.quant(-0.6, 1.0).abs()).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,109 @@
+//! Fixed-point quantizer (paper Eq. 1-3) — bit-exact with `ref.fixed_quant`.
+
+use super::clip_scale;
+
+/// Round-half-away-from-zero, matching `jnp.round`'s behaviour on the
+/// grid values produced here (IEEE round-half-even differs only on exact
+/// .5 ties; numpy rounds .5 to even as well, so we use the same rule).
+#[inline]
+pub fn round_ties_even(x: f32) -> f32 {
+    // f32::round_ties_even is stable since 1.77
+    x.round_ties_even()
+}
+
+/// Project `w` onto `Q^Fixed(m, alpha)` (Eq. 1-3): symmetric m-bit grid.
+#[inline]
+pub fn fixed_quant(w: f32, alpha: f32, m: u32) -> f32 {
+    let n = ((1i64 << (m - 1)) - 1) as f32;
+    let t = clip_scale(w, alpha);
+    alpha * round_ties_even(t * n) / n
+}
+
+/// Integer weight code in `[-(2^{m-1}-1), +(2^{m-1}-1)]`.
+#[inline]
+pub fn fixed_code(w: f32, alpha: f32, m: u32) -> i32 {
+    let n = ((1i64 << (m - 1)) - 1) as f32;
+    round_ties_even(clip_scale(w, alpha) * n) as i32
+}
+
+/// Unsigned activation quantizer: m-bit Fixed over `[0, alpha]`.
+#[inline]
+pub fn act_quant(x: f32, alpha: f32, m: u32) -> f32 {
+    let n = ((1i64 << m) - 1) as f32;
+    let t = (x / alpha).clamp(0.0, 1.0);
+    alpha * round_ties_even(t * n) / n
+}
+
+/// Unsigned activation code in `[0, 2^m - 1]`.
+#[inline]
+pub fn act_code(x: f32, alpha: f32, m: u32) -> i32 {
+    let n = ((1i64 << m) - 1) as f32;
+    round_ties_even((x / alpha).clamp(0.0, 1.0) * n) as i32
+}
+
+/// Signed activation code (transformer path): `[-(2^{m-1}-1), 2^{m-1}-1]`.
+#[inline]
+pub fn act_code_signed(x: f32, alpha: f32, m: u32) -> i32 {
+    fixed_code(x, alpha, m)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_endpoints() {
+        assert_eq!(fixed_quant(1.0, 1.0, 4), 1.0);
+        assert_eq!(fixed_quant(-1.0, 1.0, 4), -1.0);
+        assert_eq!(fixed_quant(0.0, 1.0, 4), 0.0);
+        assert_eq!(fixed_quant(5.0, 1.0, 4), 1.0); // clipped
+    }
+
+    #[test]
+    fn four_bit_levels() {
+        // 4-bit symmetric grid: k/7 for k in -7..=7
+        for k in -7i32..=7 {
+            let v = k as f32 / 7.0;
+            assert!((fixed_quant(v, 1.0, 4) - v).abs() < 1e-7);
+            assert_eq!(fixed_code(v, 1.0, 4), k);
+        }
+    }
+
+    #[test]
+    fn error_bound_half_step() {
+        let step = 1.0 / 7.0;
+        for i in 0..1000 {
+            let w = -1.0 + 2.0 * (i as f32) / 999.0;
+            let q = fixed_quant(w, 1.0, 4);
+            assert!((w - q).abs() <= step / 2.0 + 1e-6, "w={w} q={q}");
+        }
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        for i in 0..100 {
+            let w = -1.5 + 3.0 * (i as f32) / 99.0;
+            let c = fixed_code(w, 1.2, 8);
+            let q = fixed_quant(w, 1.2, 8);
+            assert!((1.2 * c as f32 / 127.0 - q).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn act_unsigned_range() {
+        assert_eq!(act_quant(-0.5, 1.0, 4), 0.0);
+        assert_eq!(act_quant(2.0, 1.0, 4), 1.0);
+        assert_eq!(act_code(2.0, 1.0, 4), 15);
+        assert_eq!(act_code(-1.0, 1.0, 4), 0);
+    }
+
+    #[test]
+    fn scale_equivariance() {
+        for i in 0..50 {
+            let w = -1.0 + 2.0 * (i as f32) / 49.0;
+            let a = fixed_quant(2.0 * w, 2.0 * 1.1, 4);
+            let b = 2.0 * fixed_quant(w, 1.1, 4);
+            assert!((a - b).abs() < 1e-6);
+        }
+    }
+}

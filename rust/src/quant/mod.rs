@@ -1,0 +1,95 @@
+//! Bit-exact quantizers (paper §3.1.1-§3.1.2, Eq. 1-5).
+//!
+//! Every function here mirrors a pure-jnp oracle in
+//! `python/compile/kernels/ref.py`; the cross-language agreement is pinned
+//! by the shared test vectors under `artifacts/testvec/` (see
+//! `rust/tests/test_testvec.rs` and `python -m compile.testvec`).
+
+pub mod apot;
+pub mod fixed;
+pub mod pot;
+pub mod scheme;
+pub mod tensor;
+
+pub use apot::{apot_levels, apot_quant};
+pub use fixed::{act_code, act_quant, fixed_code, fixed_quant};
+pub use pot::{pot_code, pot_quant};
+pub use scheme::{Ratio, Scheme};
+pub use tensor::Mat;
+
+/// Clip `w` into `[-1, 1]` in units of `alpha` (Eq. 3).
+#[inline]
+pub fn clip_scale(w: f32, alpha: f32) -> f32 {
+    (w / alpha).clamp(-1.0, 1.0)
+}
+
+/// Per-row scaling factor: `max |w|` over the row (floored away from zero).
+pub fn default_alpha(row: &[f32]) -> f32 {
+    row.iter().fold(0.0f32, |m, &v| m.max(v.abs())).max(1e-8)
+}
+
+/// Row-wise mixed-scheme fake quantization of a row-major `(rows, cols)`
+/// weight matrix — the Rust twin of `ref.rowwise_quant`.
+pub fn rowwise_quant(w: &Mat, alpha: &[f32], scheme: &[Scheme]) -> Mat {
+    assert_eq!(w.rows, alpha.len());
+    assert_eq!(w.rows, scheme.len());
+    let mut out = Mat::zeros(w.rows, w.cols);
+    for r in 0..w.rows {
+        let (a, s) = (alpha[r], scheme[r]);
+        let src = w.row(r);
+        let dst = out.row_mut(r);
+        match s {
+            Scheme::PotW4A4 => {
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = pot_quant(v, a, 4);
+                }
+            }
+            Scheme::FixedW4A4 => {
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = fixed_quant(v, a, 4);
+                }
+            }
+            Scheme::FixedW8A4 => {
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = fixed_quant(v, a, 8);
+                }
+            }
+            Scheme::ApotW4A4 => {
+                for (d, &v) in dst.iter_mut().zip(src) {
+                    *d = apot_quant(v, a, 4);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn clip_scale_bounds() {
+        assert_eq!(clip_scale(10.0, 1.0), 1.0);
+        assert_eq!(clip_scale(-10.0, 1.0), -1.0);
+        assert_eq!(clip_scale(0.5, 1.0), 0.5);
+        assert_eq!(clip_scale(0.5, 2.0), 0.25);
+    }
+
+    #[test]
+    fn default_alpha_floor() {
+        assert!(default_alpha(&[0.0, 0.0]) >= 1e-8);
+        assert_eq!(default_alpha(&[-3.0, 2.0]), 3.0);
+    }
+
+    #[test]
+    fn rowwise_dispatches_per_row() {
+        let w = Mat::from_rows(&[vec![0.7, -0.3], vec![0.7, -0.3]]);
+        let alpha = [1.0, 1.0];
+        let q = rowwise_quant(&w, &alpha, &[Scheme::PotW4A4, Scheme::FixedW4A4]);
+        // PoT rounds 0.7 -> 0.5 or 1.0 (log2 space); Fixed-4 -> 5/7.
+        assert_eq!(q.row(0)[0], pot_quant(0.7, 1.0, 4));
+        assert_eq!(q.row(1)[0], fixed_quant(0.7, 1.0, 4));
+        assert_ne!(q.row(0)[0], q.row(1)[0]);
+    }
+}

@@ -1,0 +1,101 @@
+//! Power-of-Two quantizer (paper Eq. 4-5) — bit-exact with `ref.pot_quant`.
+
+use super::clip_scale;
+use super::fixed::round_ties_even;
+
+/// Smallest exponent magnitude for m-bit PoT: `k = 2^{m-1} - 2`.
+#[inline]
+pub fn pot_min_exp(m: u32) -> i32 {
+    (1i32 << (m - 1)) - 2
+}
+
+/// Project `w` onto `Q^PoT(m, alpha)` (Eq. 4-5): nearest power of two in
+/// log2 space; magnitudes below half the smallest level snap to 0.
+#[inline]
+pub fn pot_quant(w: f32, alpha: f32, m: u32) -> f32 {
+    let k = pot_min_exp(m);
+    let t = clip_scale(w, alpha);
+    let mag = t.abs();
+    let min_level = (2.0f32).powi(-k);
+    if mag < min_level / 2.0 {
+        return 0.0;
+    }
+    let safe = mag.max((2.0f32).powi(-k - 4));
+    let e = round_ties_even(safe.log2()).clamp(-(k as f32), 0.0);
+    alpha * t.signum() * (2.0f32).powf(e)
+}
+
+/// `(sign, exponent)` code: sign in {-1, 0, +1}, exponent in `[-k, 0]`.
+/// Hardware stores the sign bit plus the shift amount `s = -e`.
+#[inline]
+pub fn pot_code(w: f32, alpha: f32, m: u32) -> (i32, i32) {
+    let k = pot_min_exp(m);
+    let t = clip_scale(w, alpha);
+    let mag = t.abs();
+    let min_level = (2.0f32).powi(-k);
+    if mag < min_level / 2.0 {
+        return (0, 0);
+    }
+    let safe = mag.max((2.0f32).powi(-k - 4));
+    let e = round_ties_even(safe.log2()).clamp(-(k as f32), 0.0) as i32;
+    (t.signum() as i32, e)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn min_exp_values() {
+        assert_eq!(pot_min_exp(4), 6); // levels 2^-6 .. 2^0
+        assert_eq!(pot_min_exp(3), 2);
+    }
+
+    #[test]
+    fn levels_are_powers_of_two() {
+        for i in 0..2000 {
+            let w = -1.0 + 2.0 * (i as f32) / 1999.0;
+            let q = pot_quant(w, 1.0, 4);
+            if q != 0.0 {
+                let e = q.abs().log2();
+                assert!((e - e.round()).abs() < 1e-6, "q={q} not PoT");
+                assert!((-6.0..=0.0).contains(&e));
+            }
+        }
+    }
+
+    #[test]
+    fn zero_basin() {
+        // below half of 2^-6 -> 0
+        assert_eq!(pot_quant(2.0f32.powi(-6) * 0.49, 1.0, 4), 0.0);
+        assert_ne!(pot_quant(2.0f32.powi(-6) * 0.51, 1.0, 4), 0.0);
+    }
+
+    #[test]
+    fn rigid_resolution() {
+        // 0.75 rounds to 2^0 at every bit-width (the paper's §2.1.2 point):
+        // log2(0.75) = -0.415 -> rounds to 0 -> level 1.0.
+        assert_eq!(pot_quant(0.75, 1.0, 4), 1.0);
+        assert_eq!(pot_quant(0.75, 1.0, 8), 1.0);
+    }
+
+    #[test]
+    fn code_roundtrip() {
+        for i in 0..500 {
+            let w = -1.2 + 2.4 * (i as f32) / 499.0;
+            let (s, e) = pot_code(w, 0.8, 4);
+            let recon = 0.8 * s as f32 * (2.0f32).powi(e);
+            assert!((recon - pot_quant(w, 0.8, 4)).abs() < 1e-6);
+        }
+    }
+
+    #[test]
+    fn idempotent() {
+        for i in 0..200 {
+            let w = -1.0 + 2.0 * (i as f32) / 199.0;
+            let q1 = pot_quant(w, 1.0, 4);
+            let q2 = pot_quant(q1, 1.0, 4);
+            assert!((q1 - q2).abs() < 1e-7);
+        }
+    }
+}

@@ -1,0 +1,173 @@
+//! Scheme codes and the layer-wise-uniform ratio (paper §3.2).
+
+use std::fmt;
+
+/// Quantization scheme + precision of one weight row.
+///
+/// Codes 0-2 are the RMSMP classes executed by the heterogeneous GEMM
+/// cores; code 3 (APoT) exists for the baseline methods of Tables 1/6.
+/// The numeric values are shared with the Python side
+/// (`compile/kernels/ref.py`) and the AOT manifest.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, Debug)]
+#[repr(u8)]
+pub enum Scheme {
+    /// Power-of-Two weights, 4-bit; activations 4-bit Fixed. Multiplies
+    /// become shifts (LUT fabric on the FPGA).
+    PotW4A4 = 0,
+    /// Fixed-point 4-bit weights/activations (DSP multipliers).
+    FixedW4A4 = 1,
+    /// Fixed-point 8-bit weights, 4-bit activations — the higher-precision
+    /// class that absorbs the most sensitive 5% of rows.
+    FixedW8A4 = 2,
+    /// Additive-Power-of-Two 4-bit (baseline schemes only).
+    ApotW4A4 = 3,
+}
+
+impl Scheme {
+    /// All RMSMP classes (the ones the hardware kernel implements).
+    pub const RMSMP: [Scheme; 3] = [Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4];
+
+    /// Parse the shared numeric code.
+    pub fn from_code(c: u8) -> Option<Scheme> {
+        match c {
+            0 => Some(Scheme::PotW4A4),
+            1 => Some(Scheme::FixedW4A4),
+            2 => Some(Scheme::FixedW8A4),
+            3 => Some(Scheme::ApotW4A4),
+            _ => None,
+        }
+    }
+
+    /// Weight bit-width of this class.
+    pub fn weight_bits(self) -> u32 {
+        match self {
+            Scheme::FixedW8A4 => 8,
+            _ => 4,
+        }
+    }
+
+    /// Whether the class multiplies via shift-add (no DSP multiplier).
+    pub fn is_shift_based(self) -> bool {
+        matches!(self, Scheme::PotW4A4 | Scheme::ApotW4A4)
+    }
+}
+
+impl fmt::Display for Scheme {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Scheme::PotW4A4 => "PoT-W4A4",
+            Scheme::FixedW4A4 => "Fixed-W4A4",
+            Scheme::FixedW8A4 => "Fixed-W8A4",
+            Scheme::ApotW4A4 => "APoT-W4A4",
+        };
+        f.write_str(s)
+    }
+}
+
+/// The offline-determined scheme ratio `PoT-4 : Fixed-4 : Fixed-8 = A:B:C`
+/// (A+B+C = 100), identical across layers (layer-wise uniformality).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Ratio {
+    pub pot4: u32,
+    pub fixed4: u32,
+    pub fixed8: u32,
+}
+
+impl Ratio {
+    /// The paper's optimal ratios: 60:35:5 on XC7Z020 (RMSMP-1) and
+    /// 65:30:5 on XC7Z045 (RMSMP-2).
+    pub const RMSMP1: Ratio = Ratio { pot4: 60, fixed4: 35, fixed8: 5 };
+    pub const RMSMP2: Ratio = Ratio { pot4: 65, fixed4: 30, fixed8: 5 };
+
+    pub fn new(pot4: u32, fixed4: u32, fixed8: u32) -> Ratio {
+        assert_eq!(pot4 + fixed4 + fixed8, 100, "ratio must sum to 100");
+        Ratio { pot4, fixed4, fixed8 }
+    }
+
+    /// Largest-remainder split of `rows` into exact per-class counts —
+    /// must match `assignment.ratio_counts` on the Python side.
+    pub fn counts(&self, rows: usize) -> (usize, usize, usize) {
+        let shares = [self.pot4 as f64, self.fixed4 as f64, self.fixed8 as f64];
+        let exact: Vec<f64> = shares.iter().map(|s| rows as f64 * s / 100.0).collect();
+        let mut base: Vec<usize> = exact.iter().map(|e| e.floor() as usize).collect();
+        let mut rem = rows - base.iter().sum::<usize>();
+        let mut order: Vec<usize> = (0..3).collect();
+        order.sort_by(|&i, &j| {
+            (exact[j] - base[j] as f64)
+                .partial_cmp(&(exact[i] - base[i] as f64))
+                .unwrap()
+        });
+        for &i in &order {
+            if rem == 0 {
+                break;
+            }
+            base[i] += 1;
+            rem -= 1;
+        }
+        (base[0], base[1], base[2])
+    }
+
+    /// Parse `"65:30:5"`.
+    pub fn parse(s: &str) -> anyhow::Result<Ratio> {
+        let parts: Vec<u32> = s
+            .split(':')
+            .map(|p| p.trim().parse::<u32>())
+            .collect::<Result<_, _>>()
+            .map_err(|e| anyhow::anyhow!("bad ratio {s:?}: {e}"))?;
+        anyhow::ensure!(parts.len() == 3, "ratio needs 3 parts, got {s:?}");
+        anyhow::ensure!(parts.iter().sum::<u32>() == 100, "ratio must sum to 100");
+        Ok(Ratio::new(parts[0], parts[1], parts[2]))
+    }
+}
+
+impl fmt::Display for Ratio {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}:{}:{}", self.pot4, self.fixed4, self.fixed8)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_sum_to_rows() {
+        for rows in [1usize, 7, 20, 64, 100, 317] {
+            let (a, b, c) = Ratio::RMSMP2.counts(rows);
+            assert_eq!(a + b + c, rows, "rows={rows}");
+        }
+    }
+
+    #[test]
+    fn counts_exact_at_100() {
+        assert_eq!(Ratio::RMSMP2.counts(100), (65, 30, 5));
+        assert_eq!(Ratio::RMSMP1.counts(100), (60, 35, 5));
+        assert_eq!(Ratio::new(50, 50, 0).counts(10), (5, 5, 0));
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        let r = Ratio::parse("65:30:5").unwrap();
+        assert_eq!(r, Ratio::RMSMP2);
+        assert_eq!(r.to_string(), "65:30:5");
+        assert!(Ratio::parse("60:30:5").is_err());
+        assert!(Ratio::parse("banana").is_err());
+    }
+
+    #[test]
+    fn scheme_codes_shared_with_python() {
+        assert_eq!(Scheme::from_code(0), Some(Scheme::PotW4A4));
+        assert_eq!(Scheme::from_code(1), Some(Scheme::FixedW4A4));
+        assert_eq!(Scheme::from_code(2), Some(Scheme::FixedW8A4));
+        assert_eq!(Scheme::from_code(3), Some(Scheme::ApotW4A4));
+        assert_eq!(Scheme::from_code(4), None);
+    }
+
+    #[test]
+    fn scheme_properties() {
+        assert!(Scheme::PotW4A4.is_shift_based());
+        assert!(!Scheme::FixedW8A4.is_shift_based());
+        assert_eq!(Scheme::FixedW8A4.weight_bits(), 8);
+        assert_eq!(Scheme::PotW4A4.weight_bits(), 4);
+    }
+}

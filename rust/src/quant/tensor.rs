@@ -1,0 +1,203 @@
+//! Minimal dense row-major matrix/tensor types used across the crate.
+//!
+//! Built in-repo (offline build, no ndarray): just enough structure for the
+//! quantizers, GEMM cores, im2col, and the executor — contiguous `Vec`
+//! storage, explicit strides, zero-copy row views.
+
+/// Dense row-major f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Mat {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<f32>,
+}
+
+impl Mat {
+    pub fn zeros(rows: usize, cols: usize) -> Mat {
+        Mat { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Mat {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
+        Mat { rows, cols, data }
+    }
+
+    pub fn from_rows(rows: &[Vec<f32>]) -> Mat {
+        let r = rows.len();
+        let c = rows.first().map_or(0, |v| v.len());
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c, "ragged rows");
+            data.extend_from_slice(row);
+        }
+        Mat { rows: r, cols: c, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[f32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [f32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> f32 {
+        self.data[r * self.cols + c]
+    }
+
+    #[inline]
+    pub fn set(&mut self, r: usize, c: usize, v: f32) {
+        self.data[r * self.cols + c] = v;
+    }
+
+    /// `self @ other^T` — the natural layout for row-major weights.
+    pub fn matmul_nt(&self, other: &Mat) -> Mat {
+        assert_eq!(self.cols, other.cols, "inner dims");
+        let mut out = Mat::zeros(self.rows, other.rows);
+        for i in 0..self.rows {
+            let a = self.row(i);
+            for j in 0..other.rows {
+                let b = other.row(j);
+                let mut s = 0.0f32;
+                for k in 0..self.cols {
+                    s += a[k] * b[k];
+                }
+                out.set(i, j, s);
+            }
+        }
+        out
+    }
+
+    /// Per-row variance (population), used by the assignment engine.
+    pub fn row_variances(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| {
+                let row = self.row(r);
+                let n = row.len() as f32;
+                let mean = row.iter().sum::<f32>() / n;
+                row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / n
+            })
+            .collect()
+    }
+
+    /// Per-row L2 norms (sensitivity proxy when no Hessian is available).
+    pub fn row_norms(&self) -> Vec<f32> {
+        (0..self.rows)
+            .map(|r| self.row(r).iter().map(|v| v * v).sum::<f32>().sqrt())
+            .collect()
+    }
+
+    pub fn max_abs_err(&self, other: &Mat) -> f32 {
+        assert_eq!(self.rows, other.rows);
+        assert_eq!(self.cols, other.cols);
+        self.data
+            .iter()
+            .zip(&other.data)
+            .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()))
+    }
+}
+
+/// Dense i32 matrix (integer codes / accumulators).
+#[derive(Clone, Debug, PartialEq)]
+pub struct MatI32 {
+    pub rows: usize,
+    pub cols: usize,
+    pub data: Vec<i32>,
+}
+
+impl MatI32 {
+    pub fn zeros(rows: usize, cols: usize) -> MatI32 {
+        MatI32 { rows, cols, data: vec![0; rows * cols] }
+    }
+
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<i32>) -> MatI32 {
+        assert_eq!(data.len(), rows * cols);
+        MatI32 { rows, cols, data }
+    }
+
+    #[inline]
+    pub fn row(&self, r: usize) -> &[i32] {
+        &self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn row_mut(&mut self, r: usize) -> &mut [i32] {
+        &mut self.data[r * self.cols..(r + 1) * self.cols]
+    }
+
+    #[inline]
+    pub fn at(&self, r: usize, c: usize) -> i32 {
+        self.data[r * self.cols + c]
+    }
+}
+
+/// NCHW f32 tensor for the conv path.
+#[derive(Clone, Debug)]
+pub struct Tensor4 {
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub data: Vec<f32>,
+}
+
+impl Tensor4 {
+    pub fn zeros(n: usize, c: usize, h: usize, w: usize) -> Tensor4 {
+        Tensor4 { n, c, h, w, data: vec![0.0; n * c * h * w] }
+    }
+
+    #[inline]
+    pub fn idx(&self, n: usize, c: usize, y: usize, x: usize) -> usize {
+        ((n * self.c + c) * self.h + y) * self.w + x
+    }
+
+    #[inline]
+    pub fn at(&self, n: usize, c: usize, y: usize, x: usize) -> f32 {
+        self.data[self.idx(n, c, y, x)]
+    }
+
+    #[inline]
+    pub fn set(&mut self, n: usize, c: usize, y: usize, x: usize, v: f32) {
+        let i = self.idx(n, c, y, x);
+        self.data[i] = v;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mat_roundtrip() {
+        let m = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        assert_eq!(m.at(0, 1), 2.0);
+        assert_eq!(m.row(1), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn matmul_nt_small() {
+        // a = [[1,2],[3,4]], b = [[1,0],[0,1]] -> a @ b^T = a
+        let a = Mat::from_rows(&[vec![1.0, 2.0], vec![3.0, 4.0]]);
+        let b = Mat::from_rows(&[vec![1.0, 0.0], vec![0.0, 1.0]]);
+        assert_eq!(a.matmul_nt(&b), a);
+    }
+
+    #[test]
+    fn row_variance_basic() {
+        let m = Mat::from_rows(&[vec![1.0, 1.0, 1.0], vec![0.0, 3.0, 0.0]]);
+        let v = m.row_variances();
+        assert_eq!(v[0], 0.0);
+        assert!(v[1] > 1.0);
+    }
+
+    #[test]
+    fn tensor4_indexing() {
+        let mut t = Tensor4::zeros(1, 2, 3, 3);
+        t.set(0, 1, 2, 2, 5.0);
+        assert_eq!(t.at(0, 1, 2, 2), 5.0);
+        assert_eq!(t.data.iter().filter(|&&v| v != 0.0).count(), 1);
+    }
+}

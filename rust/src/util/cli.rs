@@ -1,0 +1,153 @@
+//! Tiny CLI argument parser (offline build — no clap).
+//!
+//! Supports `--flag value`, `--flag=value`, boolean `--flag`, positional
+//! args, and generated help text.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Result};
+
+/// Declarative flag spec for help text.
+#[derive(Clone, Debug)]
+pub struct FlagSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    pub default: Option<&'static str>,
+    pub takes_value: bool,
+}
+
+/// Parsed arguments.
+#[derive(Clone, Debug, Default)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse from an iterator of argument strings (excluding argv[0]).
+    pub fn parse<I: IntoIterator<Item = String>>(argv: I, specs: &[FlagSpec]) -> Result<Args> {
+        let takes: BTreeMap<&str, bool> =
+            specs.iter().map(|s| (s.name, s.takes_value)).collect();
+        let mut out = Args::default();
+        let mut it = argv.into_iter();
+        while let Some(a) = it.next() {
+            if let Some(rest) = a.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                match takes.get(name.as_str()) {
+                    None => bail!("unknown flag --{name} (try --help)"),
+                    Some(false) => {
+                        if inline.is_some() {
+                            bail!("flag --{name} takes no value");
+                        }
+                        out.flags.insert(name, "true".to_string());
+                    }
+                    Some(true) => {
+                        let v = match inline {
+                            Some(v) => v,
+                            None => it
+                                .next()
+                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?,
+                        };
+                        out.flags.insert(name, v);
+                    }
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+        }
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.contains_key(name)
+    }
+}
+
+/// Render help text for a subcommand.
+pub fn help(cmd: &str, about: &str, specs: &[FlagSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\nFlags:\n");
+    for f in specs {
+        let val = if f.takes_value { " <value>" } else { "" };
+        let def = f
+            .default
+            .map(|d| format!(" (default: {d})"))
+            .unwrap_or_default();
+        s.push_str(&format!("  --{}{val}\n      {}{def}\n", f.name, f.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn specs() -> Vec<FlagSpec> {
+        vec![
+            FlagSpec { name: "ratio", help: "", default: Some("65:30:5"), takes_value: true },
+            FlagSpec { name: "verbose", help: "", default: None, takes_value: false },
+            FlagSpec { name: "n", help: "", default: Some("4"), takes_value: true },
+        ]
+    }
+
+    fn parse(args: &[&str]) -> Result<Args> {
+        Args::parse(args.iter().map(|s| s.to_string()), &specs())
+    }
+
+    #[test]
+    fn parses_values_and_positionals() {
+        let a = parse(&["serve", "--ratio", "60:35:5", "--verbose", "x"]).unwrap();
+        assert_eq!(a.positional, vec!["serve", "x"]);
+        assert_eq!(a.get("ratio"), Some("60:35:5"));
+        assert!(a.has("verbose"));
+    }
+
+    #[test]
+    fn equals_form() {
+        let a = parse(&["--ratio=50:45:5"]).unwrap();
+        assert_eq!(a.get("ratio"), Some("50:45:5"));
+    }
+
+    #[test]
+    fn typed_getters() {
+        let a = parse(&["--n", "9"]).unwrap();
+        assert_eq!(a.get_usize("n", 4).unwrap(), 9);
+        assert_eq!(a.get_usize("missing", 4).unwrap(), 4);
+        assert!(parse(&["--n", "x"]).unwrap().get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(parse(&["--bogus"]).is_err());
+        assert!(parse(&["--verbose=1"]).is_err());
+        assert!(parse(&["--ratio"]).is_err()); // missing value
+    }
+}

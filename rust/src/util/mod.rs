@@ -1,0 +1,22 @@
+//! In-repo substrates (the build is fully offline, so everything a crate
+//! would normally pull in is implemented here):
+//!
+//! * [`rng`] — deterministic SplitMix64/xoshiro256** PRNG with normal /
+//!   uniform helpers (no `rand`).
+//! * [`json`] — a small recursive-descent JSON parser + writer for the AOT
+//!   manifest and experiment outputs (no `serde`).
+//! * [`cli`] — flag parsing for the `rmsmp` binary (no `clap`).
+//! * [`stats`] — streaming mean/percentile accumulators for metrics.
+//! * [`bench`] — the measurement harness behind `cargo bench`
+//!   (no `criterion`): warmup, adaptive iteration, median/MAD reporting.
+//! * [`prop`] — a property-testing mini-framework (no `proptest`):
+//!   seeded generators + failure-case reporting.
+//! * [`pool`] — a fixed-size thread pool for the coordinator workers.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prop;
+pub mod rng;
+pub mod stats;

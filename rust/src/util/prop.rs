@@ -1,0 +1,164 @@
+//! Property-testing mini-framework (offline build — no proptest).
+//!
+//! Seeded generators over a deterministic [`Rng`], N cases per property,
+//! and on failure a report of the failing case index + seed so the case
+//! reproduces exactly. Shrinking is intentionally simple: we re-run the
+//! failing generator at decreasing size parameters and report the smallest
+//! size that still fails.
+//!
+//! ```ignore
+//! prop(|g| {
+//!     let v = g.vec_f32(1..=64, -2.0, 2.0);
+//!     let q: Vec<f32> = v.iter().map(|&x| fixed_quant(x, 1.0, 4)).collect();
+//!     prop_assert!(q.iter().all(|x| x.abs() <= 1.0));
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Generator context handed to each property case.
+pub struct Gen {
+    pub rng: Rng,
+    /// Size knob in [0.0, 1.0]; generators scale ranges by it during shrink.
+    pub size: f64,
+}
+
+impl Gen {
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        self.rng.uniform(lo, hi)
+    }
+
+    pub fn usize_in(&mut self, lo: usize, hi_inclusive: usize) -> usize {
+        let span = hi_inclusive - lo;
+        let scaled = ((span as f64 * self.size).ceil() as usize).min(span);
+        lo + self.rng.below(scaled as u64 + 1) as usize
+    }
+
+    pub fn vec_f32(&mut self, lo_len: usize, hi_len: usize, lo: f32, hi: f32) -> Vec<f32> {
+        let n = self.usize_in(lo_len, hi_len);
+        (0..n).map(|_| self.f32_in(lo, hi)).collect()
+    }
+
+    pub fn vec_normal(&mut self, lo_len: usize, hi_len: usize, scale: f32) -> Vec<f32> {
+        let n = self.usize_in(lo_len, hi_len);
+        (0..n).map(|_| self.rng.normal() * scale).collect()
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.below(2) == 1
+    }
+
+    pub fn choice<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.rng.below(xs.len() as u64) as usize]
+    }
+}
+
+/// Failure report.
+#[derive(Debug)]
+pub struct PropFailure {
+    pub case: usize,
+    pub seed: u64,
+    pub size: f64,
+    pub message: String,
+}
+
+impl std::fmt::Display for PropFailure {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "property failed at case {} (seed {}, size {:.2}): {}",
+            self.case, self.seed, self.size, self.message
+        )
+    }
+}
+
+/// Run `n` cases of `prop`; panic with a reproducible report on failure.
+pub fn check<F>(name: &str, n: usize, mut prop: F)
+where
+    F: FnMut(&mut Gen) -> Result<(), String>,
+{
+    let base_seed = env_seed().unwrap_or(0xC0FFEE);
+    for case in 0..n {
+        let seed = base_seed ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut g = Gen { rng: Rng::new(seed), size: 1.0 };
+        if let Err(msg) = prop(&mut g) {
+            // shrink: decrease size until it passes; report smallest failure
+            let mut smallest = PropFailure { case, seed, size: 1.0, message: msg };
+            let mut size = 0.5;
+            while size > 0.05 {
+                let mut g = Gen { rng: Rng::new(seed), size };
+                match prop(&mut g) {
+                    Err(m) => {
+                        smallest = PropFailure { case, seed, size, message: m };
+                        size *= 0.5;
+                    }
+                    Ok(()) => break,
+                }
+            }
+            panic!("[{name}] {smallest}");
+        }
+    }
+}
+
+fn env_seed() -> Option<u64> {
+    std::env::var("RMSMP_PROP_SEED").ok()?.parse().ok()
+}
+
+/// Assert inside a property, returning Err for `check` to handle.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(format!("assertion failed: {}", stringify!($cond)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("trivial", 50, |g| {
+            count += 1;
+            let v = g.vec_f32(1, 8, 0.0, 1.0);
+            prop_assert!(v.iter().all(|&x| (0.0..1.0).contains(&x)));
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_seed() {
+        check("fails", 10, |g| {
+            let x = g.f32_in(0.0, 1.0);
+            prop_assert!(x < 0.0, "x = {x}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn generators_are_deterministic_per_seed() {
+        std::env::remove_var("RMSMP_PROP_SEED");
+        let mut a = Vec::new();
+        check("collect-a", 3, |g| {
+            a.push(g.f32_in(0.0, 1.0));
+            Ok(())
+        });
+        let mut b = Vec::new();
+        check("collect-b", 3, |g| {
+            b.push(g.f32_in(0.0, 1.0));
+            Ok(())
+        });
+        assert_eq!(a, b);
+    }
+}

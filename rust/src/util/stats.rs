@@ -1,0 +1,188 @@
+//! Streaming statistics: mean/variance (Welford), percentiles, histograms.
+//! Used by the coordinator's latency metrics and the bench harness.
+
+/// Online mean/variance accumulator.
+#[derive(Clone, Debug, Default)]
+pub struct Welford {
+    n: u64,
+    mean: f64,
+    m2: f64,
+    min: f64,
+    max: f64,
+}
+
+impl Welford {
+    pub fn new() -> Welford {
+        Welford { n: 0, mean: 0.0, m2: 0.0, min: f64::INFINITY, max: f64::NEG_INFINITY }
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.n += 1;
+        let d = x - self.mean;
+        self.mean += d / self.n as f64;
+        self.m2 += d * (x - self.mean);
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        self.mean
+    }
+
+    pub fn variance(&self) -> f64 {
+        if self.n < 2 {
+            0.0
+        } else {
+            self.m2 / (self.n - 1) as f64
+        }
+    }
+
+    pub fn std(&self) -> f64 {
+        self.variance().sqrt()
+    }
+
+    pub fn min(&self) -> f64 {
+        self.min
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max
+    }
+}
+
+/// Reservoir of samples for exact percentiles (bounded memory).
+#[derive(Clone, Debug)]
+pub struct Reservoir {
+    cap: usize,
+    seen: u64,
+    samples: Vec<f64>,
+    rng_state: u64,
+}
+
+impl Reservoir {
+    pub fn new(cap: usize) -> Reservoir {
+        Reservoir { cap, seen: 0, samples: Vec::with_capacity(cap), rng_state: 0x9E3779B9 }
+    }
+
+    fn next_u64(&mut self) -> u64 {
+        // splitmix64 step (self-contained; no dependency on util::rng)
+        self.rng_state = self.rng_state.wrapping_add(0x9E3779B97F4A7C15);
+        let mut z = self.rng_state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    pub fn push(&mut self, x: f64) {
+        self.seen += 1;
+        if self.samples.len() < self.cap {
+            self.samples.push(x);
+        } else {
+            let j = self.next_u64() % self.seen;
+            if (j as usize) < self.cap {
+                self.samples[j as usize] = x;
+            }
+        }
+    }
+
+    /// Percentile in [0, 100] (linear interpolation over the reservoir).
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        percentile_sorted(&s, p)
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+}
+
+/// Percentile of an already-sorted slice, linear interpolation.
+pub fn percentile_sorted(sorted: &[f64], p: f64) -> f64 {
+    assert!(!sorted.is_empty());
+    if sorted.len() == 1 {
+        return sorted[0];
+    }
+    let rank = (p / 100.0).clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    let frac = rank - lo as f64;
+    sorted[lo] * (1.0 - frac) + sorted[hi] * frac
+}
+
+/// Median + median-absolute-deviation of a sample (robust bench summary).
+pub fn median_mad(xs: &[f64]) -> (f64, f64) {
+    assert!(!xs.is_empty());
+    let mut s = xs.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = percentile_sorted(&s, 50.0);
+    let mut dev: Vec<f64> = s.iter().map(|x| (x - med).abs()).collect();
+    dev.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (med, percentile_sorted(&dev, 50.0))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn welford_matches_direct() {
+        let xs = [1.0, 2.0, 3.0, 4.0, 10.0];
+        let mut w = Welford::new();
+        for &x in &xs {
+            w.push(x);
+        }
+        assert!((w.mean() - 4.0).abs() < 1e-12);
+        let var = xs.iter().map(|x| (x - 4.0) * (x - 4.0)).sum::<f64>() / 4.0;
+        assert!((w.variance() - var).abs() < 1e-9);
+        assert_eq!(w.min(), 1.0);
+        assert_eq!(w.max(), 10.0);
+    }
+
+    #[test]
+    fn percentile_interpolates() {
+        let s = [0.0, 10.0];
+        assert_eq!(percentile_sorted(&s, 0.0), 0.0);
+        assert_eq!(percentile_sorted(&s, 100.0), 10.0);
+        assert_eq!(percentile_sorted(&s, 50.0), 5.0);
+    }
+
+    #[test]
+    fn reservoir_exact_under_cap() {
+        let mut r = Reservoir::new(100);
+        for i in 0..50 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 50);
+        assert!((r.percentile(50.0) - 24.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn reservoir_bounded_over_cap() {
+        let mut r = Reservoir::new(64);
+        for i in 0..10_000 {
+            r.push(i as f64);
+        }
+        assert_eq!(r.len(), 64);
+        let p50 = r.percentile(50.0);
+        assert!(p50 > 2000.0 && p50 < 8000.0, "p50 {p50}");
+    }
+
+    #[test]
+    fn median_mad_basic() {
+        let (m, mad) = median_mad(&[1.0, 2.0, 3.0, 4.0, 100.0]);
+        assert_eq!(m, 3.0);
+        assert_eq!(mad, 1.0); // deviations 2,1,0,1,97 -> median 1
+    }
+}

@@ -1,0 +1,189 @@
+//! Property-based tests (in-repo `util::prop` framework) over the
+//! coordinator-facing invariants: quantizers, assignment, row partitioning,
+//! GEMM consistency, batching policy, and the FPGA design allocator.
+
+use rmsmp::assign::{assign_layer, validate_ratio, Sensitivity};
+use rmsmp::fpga::{Board, CoreCosts, Design, QuantConfig};
+use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights, RowPartition};
+use rmsmp::prop_assert;
+use rmsmp::quant::{self, Mat, Ratio, Scheme};
+use rmsmp::util::prop::{check, Gen};
+
+fn gen_ratio(g: &mut Gen) -> Ratio {
+    let a = g.usize_in(0, 100) as u32;
+    let c = g.usize_in(0, (100 - a as usize).min(20)) as u32;
+    Ratio::new(a, 100 - a - c, c)
+}
+
+fn gen_mat(g: &mut Gen, max_rows: usize, max_cols: usize) -> Mat {
+    let rows = g.usize_in(1, max_rows);
+    let cols = g.usize_in(1, max_cols);
+    Mat::from_vec(rows, cols, g.vec_normal(rows * cols, rows * cols, 0.6))
+}
+
+#[test]
+fn prop_fixed_quant_on_grid_and_bounded() {
+    check("fixed-grid", 200, |g| {
+        let m = *g.choice(&[2u32, 3, 4, 8]);
+        let alpha = g.f32_in(0.05, 4.0);
+        let w = g.f32_in(-6.0, 6.0);
+        let q = quant::fixed_quant(w, alpha, m);
+        prop_assert!(q.abs() <= alpha + 1e-6, "|q|={} > alpha={alpha}", q.abs());
+        let n = ((1i64 << (m - 1)) - 1) as f32;
+        let steps = q / alpha * n;
+        prop_assert!((steps - steps.round()).abs() < 1e-4,
+                     "off grid: q={q} alpha={alpha} m={m}");
+        // idempotent
+        prop_assert!((quant::fixed_quant(q, alpha, m) - q).abs() < 1e-6);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_pot_levels_are_powers_of_two() {
+    check("pot-grid", 200, |g| {
+        let m = *g.choice(&[3u32, 4, 5]);
+        let alpha = g.f32_in(0.05, 4.0);
+        let w = g.f32_in(-6.0, 6.0);
+        let q = quant::pot_quant(w, alpha, m);
+        if q != 0.0 {
+            let e = (q.abs() / alpha).log2();
+            prop_assert!((e - e.round()).abs() < 1e-5, "not PoT: q={q} alpha={alpha}");
+        }
+        prop_assert!((quant::pot_quant(q, alpha, m) - q).abs() < 1e-6);
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_quant_error_half_step_bound() {
+    // |w - Q(w)| <= alpha / (2 * (2^{m-1} - 1)) inside the clip range.
+    // (Note: NOT "e8 <= e4 pointwise" — the 4- and 8-bit symmetric grids
+    // are not nested (7 does not divide 127), so 8-bit can be locally
+    // worse; only the bound — and hence the MSE — improves with bits.)
+    check("err-bound", 300, |g| {
+        let alpha = g.f32_in(0.1, 3.0);
+        let w = g.f32_in(-1.0, 1.0) * alpha; // inside clip range
+        for m in [4u32, 8] {
+            let e = (w - quant::fixed_quant(w, alpha, m)).abs();
+            let bound = alpha / (2.0 * ((1 << (m - 1)) - 1) as f32);
+            prop_assert!(e <= bound + 1e-6,
+                         "w={w} alpha={alpha} m={m} e={e} bound={bound}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_assignment_ratio_exact_and_stable() {
+    check("assign-ratio", 60, |g| {
+        let w = gen_mat(g, 128, 32);
+        let ratio = gen_ratio(g);
+        let s = assign_layer(&w, ratio, Sensitivity::WeightNorm, Scheme::PotW4A4);
+        prop_assert!(validate_ratio(&s, ratio).is_ok(),
+                     "ratio {ratio} rows {}: {:?}", w.rows,
+                     validate_ratio(&s, ratio).err());
+        // determinism
+        let s2 = assign_layer(&w, ratio, Sensitivity::WeightNorm, Scheme::PotW4A4);
+        prop_assert!(s == s2, "assignment not deterministic");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_partition_is_a_permutation() {
+    check("partition", 100, |g| {
+        let n = g.usize_in(1, 200);
+        let schemes: Vec<Scheme> = (0..n)
+            .map(|_| *g.choice(&[Scheme::PotW4A4, Scheme::FixedW4A4,
+                                 Scheme::FixedW8A4, Scheme::ApotW4A4]))
+            .collect();
+        let p = RowPartition::from_schemes(&schemes);
+        prop_assert!(p.total() == n);
+        let mut all: Vec<usize> =
+            [&p.pot4[..], &p.fixed4[..], &p.fixed8[..], &p.apot4[..]].concat();
+        all.sort_unstable();
+        prop_assert!(all == (0..n).collect::<Vec<_>>(), "not a permutation");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_integer_gemm_equals_fake_quant() {
+    check("gemm-consistency", 25, |g| {
+        let batch = g.usize_in(1, 6);
+        let rows = g.usize_in(1, 12);
+        let cols = g.usize_in(1, 48);
+        let x = Mat::from_vec(batch, cols,
+                              g.vec_f32(batch * cols, batch * cols, 0.0, 1.5));
+        let w = Mat::from_vec(rows, cols, g.vec_normal(rows * cols, rows * cols, 0.5));
+        let schemes: Vec<Scheme> = (0..rows)
+            .map(|_| *g.choice(&[Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4]))
+            .collect();
+        let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
+        let act_alpha = g.f32_in(0.3, 2.0);
+
+        let gm = MixedGemm::new();
+        let acts = PackedActs::quantize(&x, act_alpha, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let int_out = gm.run(&acts, &pw);
+        let f_out = gm.run_float(&x, &w, &schemes, &alpha, act_alpha, 4);
+        let scale = f_out.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
+        let err = int_out.max_abs_err(&f_out);
+        prop_assert!(err / scale < 1e-3,
+                     "int vs fake-quant err {err} (batch={batch} rows={rows} cols={cols})");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_storage_bits_match_ratio() {
+    check("storage", 60, |g| {
+        let rows = g.usize_in(1, 100);
+        let cols = g.usize_in(1, 64);
+        let ratio = gen_ratio(g);
+        let w = Mat::from_vec(rows, cols, g.vec_normal(rows * cols, rows * cols, 0.5));
+        let s = assign_layer(&w, ratio, Sensitivity::WeightNorm, Scheme::PotW4A4);
+        let alpha = vec![1.0f32; rows];
+        let p = PackedWeights::quantize(&w, &s, &alpha);
+        let (_, _, nc) = ratio.counts(rows);
+        let expect = cols * (4 * (rows - nc) + 8 * nc);
+        prop_assert!(p.storage_bits() == expect,
+                     "bits {} != {expect}", p.storage_bits());
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fpga_design_within_budget() {
+    check("fpga-budget", 80, |g| {
+        let board = *g.choice(&[Board::XC7Z020, Board::XC7Z045]);
+        let ratio = gen_ratio(g);
+        let cfg = QuantConfig { ratio, first_last_8bit: g.bool(), apot: g.bool() };
+        let d = Design::allocate(board, cfg, CoreCosts::default());
+        prop_assert!(d.lut_util() <= 1.0 + 1e-9, "LUT over budget: {}", d.lut_util());
+        prop_assert!(d.dsp_util() <= 1.0 + 1e-9, "DSP over budget: {}", d.dsp_util());
+        prop_assert!(d.pot_pes >= 0.0 && d.fixed4_pes >= 0.0 && d.fixed8_pes >= 0.0);
+        // some capacity must exist whenever any class has share > 0
+        if ratio.pot4 > 0 || ratio.fixed4 > 0 || ratio.fixed8 > 0 {
+            prop_assert!(d.peak_macs_per_cycle() > 0.0);
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_fpga_more_resources_never_slower() {
+    check("fpga-monotone", 40, |g| {
+        let ratio = gen_ratio(g);
+        let cfg = QuantConfig { ratio, first_last_8bit: false, apot: false };
+        let small = Design::allocate(Board::XC7Z020, cfg, CoreCosts::default());
+        let big = Design::allocate(Board::XC7Z045, cfg, CoreCosts::default());
+        let layers = rmsmp::fpga::sim::resnet18_imagenet_layers();
+        let rs = rmsmp::fpga::simulate(&small, &layers);
+        let rb = rmsmp::fpga::simulate(&big, &layers);
+        prop_assert!(rb.latency_ms <= rs.latency_ms * 1.001,
+                     "bigger board slower: {} vs {}", rb.latency_ms, rs.latency_ms);
+        Ok(())
+    });
+}

@@ -1,0 +1,108 @@
+//! Multi-model router over two in-memory variants (no artifacts needed).
+
+use rmsmp::coordinator::batcher::BatchPolicy;
+use rmsmp::coordinator::{Router, ServerConfig};
+use rmsmp::gemm::PackedWeights;
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::rng::Rng;
+
+fn tiny(seed: u64, schemes: Vec<Scheme>) -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(
+        &Json::parse(
+            r#"{
+        "model": "tiny", "arch": "resnet", "num_classes": 3,
+        "input_shape": [1, 2, 4, 4], "ratio": [65, 30, 5], "act_bits": 4,
+        "layers": [
+          {"name": "fc", "kind": "linear", "rows": 3, "cols": 2,
+           "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [1, 1, 1, 0]}
+        ],
+        "program": [
+          {"op": "gap", "in": "in0", "out": "b0"},
+          {"op": "linear", "layer": "fc", "in": "b0", "out": "logits"}
+        ]
+      }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    // graph: gap reduces (1,2,4,4) -> (1,2); fc is 3x2.
+    let mut rng = Rng::new(seed);
+    let w = Mat::from_vec(3, 2, rng.normal_vec(6, 0.5));
+    let alpha: Vec<f32> = (0..3).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let weights = ModelWeights {
+        layers: vec![LayerWeights {
+            name: "fc".into(),
+            kind: "linear".into(),
+            rows: 3,
+            cols: 2,
+            out_ch: 3,
+            in_ch: 2,
+            kh: 1,
+            kw: 1,
+            stride: 0,
+            pad: 0,
+            groups: 1,
+            a_alpha: 1.0,
+            scheme: schemes,
+            alpha,
+            bias: vec![0.0; 3],
+            w,
+            packed,
+        }],
+    };
+    (manifest, weights)
+}
+
+fn router() -> Router {
+    let (m1, w1) = tiny(1, vec![Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4]);
+    let (m2, w2) = tiny(2, vec![Scheme::FixedW4A4; 3]);
+    let cfg = ServerConfig { workers: 1, policy: BatchPolicy::default() };
+    Router::start(vec![
+        ("rmsmp".to_string(), m1, w1, cfg.clone()),
+        ("fixed".to_string(), m2, w2, cfg),
+    ])
+    .unwrap()
+}
+
+#[test]
+fn routes_by_name_and_default() {
+    let r = router();
+    assert_eq!(r.names(), vec!["fixed", "rmsmp"]);
+    let img = vec![0.5f32; 32];
+    let a = r.infer(Some("rmsmp"), img.clone()).unwrap();
+    let b = r.infer(Some("fixed"), img.clone()).unwrap();
+    let d = r.infer(None, img).unwrap(); // default = first registered = rmsmp
+    assert_eq!(a.logits.len(), 3);
+    assert_ne!(a.logits, b.logits, "different weights must differ");
+    assert_eq!(a.logits, d.logits, "default routes to first variant");
+    r.shutdown();
+}
+
+#[test]
+fn unknown_model_is_an_error() {
+    let r = router();
+    assert!(r.infer(Some("nope"), vec![0.0; 32]).is_err());
+    r.shutdown();
+}
+
+#[test]
+fn per_variant_metrics() {
+    let r = router();
+    for _ in 0..3 {
+        r.infer(Some("fixed"), vec![0.1; 32]).unwrap();
+    }
+    let s = r.summary();
+    assert!(s.contains("[fixed]"), "{s}");
+    assert!(s.contains("responses=3"), "{s}");
+    let v = r.variant("rmsmp").unwrap();
+    assert_eq!(
+        v.server.metrics.responses.load(std::sync::atomic::Ordering::Relaxed),
+        0
+    );
+    r.shutdown();
+}

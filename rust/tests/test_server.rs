@@ -1,0 +1,156 @@
+//! Coordinator end-to-end: dynamic batching server over the real artifacts
+//! (integer executor backend), plus failure/backpressure behaviour.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use rmsmp::coordinator::batcher::BatchPolicy;
+use rmsmp::coordinator::{OpenLoopGen, Server, ServerConfig};
+use rmsmp::model::{Manifest, ModelWeights};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = rmsmp::runtime::artifacts_dir();
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn load() -> Option<(Manifest, ModelWeights)> {
+    let dir = artifacts()?;
+    Some((
+        Manifest::load(&dir.join("manifest.json")).unwrap(),
+        ModelWeights::load(&dir.join("weights.bin")).unwrap(),
+    ))
+}
+
+macro_rules! require {
+    () => {
+        match load() {
+            Some(x) => x,
+            None => {
+                eprintln!("skipping: artifacts missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn serves_requests_and_batches() {
+    let (m, w) = require!();
+    let num_classes = m.num_classes;
+    let server = Server::start(
+        m,
+        w,
+        ServerConfig {
+            workers: 1,
+            policy: BatchPolicy {
+                max_batch: 4,
+                max_wait: Duration::from_millis(5),
+                queue_cap: 64,
+            },
+        },
+    )
+    .unwrap();
+
+    let mut gen = OpenLoopGen::new(3, 1000.0, server.input_len());
+    let n = 12;
+    let mut rxs = Vec::new();
+    for _ in 0..n {
+        rxs.push(server.submit(gen.next_event().image).unwrap());
+    }
+    let mut seen = 0;
+    for rx in rxs {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(resp.logits.len(), num_classes);
+        assert!(resp.total_ms >= 0.0);
+        assert!(resp.batch_size >= 1 && resp.batch_size <= 4);
+        seen += 1;
+    }
+    assert_eq!(seen, n);
+    assert_eq!(
+        server.metrics.responses.load(std::sync::atomic::Ordering::Relaxed),
+        n as u64
+    );
+    // batching actually happened (12 requests at 1000 rps into batch=4)
+    assert!(server.metrics.mean_batch_size() > 1.0);
+    server.shutdown();
+}
+
+#[test]
+fn identical_inputs_get_identical_logits() {
+    let (m, w) = require!();
+    let server = Server::start(m, w, ServerConfig::default()).unwrap();
+    let img: Vec<f32> = (0..server.input_len())
+        .map(|i| (i % 17) as f32 / 17.0)
+        .collect();
+    let a = server.infer(img.clone()).unwrap();
+    let b = server.infer(img).unwrap();
+    assert_eq!(a.logits, b.logits, "determinism across batches");
+    server.shutdown();
+}
+
+#[test]
+fn backpressure_rejects_when_full() {
+    let (m, w) = require!();
+    let server = Server::start(
+        m,
+        w,
+        ServerConfig {
+            workers: 1,
+            policy: BatchPolicy {
+                max_batch: 2,
+                max_wait: Duration::from_millis(50),
+                queue_cap: 2,
+            },
+        },
+    )
+    .unwrap();
+    let img = vec![0.5f32; server.input_len()];
+    // flood faster than the worker drains
+    let mut rejected = 0;
+    let mut rxs = Vec::new();
+    for _ in 0..64 {
+        match server.submit(img.clone()) {
+            Ok(rx) => rxs.push(rx),
+            Err(_) => rejected += 1,
+        }
+    }
+    assert!(rejected > 0, "expected backpressure rejections");
+    for rx in rxs {
+        let _ = rx.recv_timeout(Duration::from_secs(120));
+    }
+    assert_eq!(
+        server.metrics.rejected.load(std::sync::atomic::Ordering::Relaxed),
+        rejected
+    );
+    server.shutdown();
+}
+
+#[test]
+fn multi_worker_consistency() {
+    let (m, w) = require!();
+    let server = Server::start(
+        m,
+        w,
+        ServerConfig {
+            workers: 2,
+            policy: BatchPolicy {
+                max_batch: 1, // force per-request batches across workers
+                max_wait: Duration::from_millis(1),
+                queue_cap: 64,
+            },
+        },
+    )
+    .unwrap();
+    let img: Vec<f32> = (0..server.input_len())
+        .map(|i| ((i * 7) % 23) as f32 / 23.0)
+        .collect();
+    let first = server.infer(img.clone()).unwrap().logits;
+    let rxs: Vec<_> = (0..6)
+        .map(|_| server.submit(img.clone()).unwrap())
+        .collect();
+    for rx in rxs {
+        let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(r.logits, first, "workers disagree");
+    }
+    server.shutdown();
+}

@@ -1,0 +1,163 @@
+//! Cross-language bit-exactness: Rust quantizers vs the JAX oracles, via
+//! the shared test vectors in `artifacts/testvec/` (emitted by
+//! `python -m compile.testvec` during `make artifacts`).
+//!
+//! These tests are skipped (with a notice) when the artifacts are absent,
+//! so `cargo test` works before `make artifacts`; CI runs them after.
+
+use std::path::PathBuf;
+
+use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights};
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+
+fn testvec_dir() -> Option<PathBuf> {
+    let dir = rmsmp::runtime::artifacts_dir().join("testvec");
+    dir.exists().then_some(dir)
+}
+
+macro_rules! require_testvec {
+    () => {
+        match testvec_dir() {
+            Some(d) => d,
+            None => {
+                eprintln!("skipping: artifacts/testvec missing (run `make artifacts`)");
+                return;
+            }
+        }
+    };
+}
+
+#[test]
+fn fixed_quant_bit_exact() {
+    let dir = require_testvec!();
+    let cases = Json::load(&dir.join("fixed.json")).unwrap();
+    for case in cases.as_arr().unwrap() {
+        let m = case.get("m").unwrap().as_usize().unwrap() as u32;
+        let alpha = case.get("alpha").unwrap().as_f64().unwrap() as f32;
+        let w = case.get("w").unwrap().as_f32_vec().unwrap();
+        let q = case.get("q").unwrap().as_f32_vec().unwrap();
+        let code = case.get("code").unwrap().as_f32_vec().unwrap();
+        for i in 0..w.len() {
+            let got = quant::fixed_quant(w[i], alpha, m);
+            assert!(
+                (got - q[i]).abs() < 1e-6,
+                "fixed m={m} alpha={alpha} w={} got {got} want {}",
+                w[i],
+                q[i]
+            );
+            assert_eq!(quant::fixed_code(w[i], alpha, m), code[i] as i32,
+                       "code m={m} w={}", w[i]);
+        }
+    }
+}
+
+#[test]
+fn pot_quant_bit_exact() {
+    let dir = require_testvec!();
+    let cases = Json::load(&dir.join("pot.json")).unwrap();
+    for case in cases.as_arr().unwrap() {
+        let m = case.get("m").unwrap().as_usize().unwrap() as u32;
+        let alpha = case.get("alpha").unwrap().as_f64().unwrap() as f32;
+        let w = case.get("w").unwrap().as_f32_vec().unwrap();
+        let q = case.get("q").unwrap().as_f32_vec().unwrap();
+        let sign = case.get("sign").unwrap().as_f32_vec().unwrap();
+        let exp = case.get("exp").unwrap().as_f32_vec().unwrap();
+        for i in 0..w.len() {
+            let got = quant::pot_quant(w[i], alpha, m);
+            assert!(
+                (got - q[i]).abs() < 1e-6,
+                "pot m={m} alpha={alpha} w={} got {got} want {}",
+                w[i],
+                q[i]
+            );
+            let (s, e) = quant::pot_code(w[i], alpha, m);
+            assert_eq!((s, e), (sign[i] as i32, exp[i] as i32),
+                       "pot code m={m} w={}", w[i]);
+        }
+    }
+}
+
+#[test]
+fn apot_quant_bit_exact() {
+    let dir = require_testvec!();
+    let cases = Json::load(&dir.join("apot.json")).unwrap();
+    for case in cases.as_arr().unwrap() {
+        let alpha = case.get("alpha").unwrap().as_f64().unwrap() as f32;
+        let w = case.get("w").unwrap().as_f32_vec().unwrap();
+        let q = case.get("q").unwrap().as_f32_vec().unwrap();
+        for i in 0..w.len() {
+            let got = quant::apot_quant(w[i], alpha, 4);
+            assert!(
+                (got - q[i]).abs() < 2e-6,
+                "apot alpha={alpha} w={} got {got} want {}",
+                w[i],
+                q[i]
+            );
+        }
+    }
+}
+
+#[test]
+fn act_quant_bit_exact() {
+    let dir = require_testvec!();
+    let cases = Json::load(&dir.join("act.json")).unwrap();
+    for case in cases.as_arr().unwrap() {
+        let m = case.get("m").unwrap().as_usize().unwrap() as u32;
+        let alpha = case.get("alpha").unwrap().as_f64().unwrap() as f32;
+        let x = case.get("x").unwrap().as_f32_vec().unwrap();
+        let q = case.get("q").unwrap().as_f32_vec().unwrap();
+        let code = case.get("code").unwrap().as_f32_vec().unwrap();
+        for i in 0..x.len() {
+            assert!((quant::act_quant(x[i], alpha, m) - q[i]).abs() < 1e-6);
+            assert_eq!(quant::act_code(x[i], alpha, m), code[i] as i32);
+        }
+    }
+}
+
+fn parse_schemes(v: &[f32]) -> Vec<Scheme> {
+    v.iter().map(|&c| Scheme::from_code(c as u8).unwrap()).collect()
+}
+
+#[test]
+fn rowwise_quant_bit_exact() {
+    let dir = require_testvec!();
+    let tv = Json::load(&dir.join("rowwise.json")).unwrap();
+    let rows = tv.get("rows").unwrap().as_usize().unwrap();
+    let cols = tv.get("cols").unwrap().as_usize().unwrap();
+    let w = Mat::from_vec(rows, cols, tv.get("w").unwrap().as_f32_vec().unwrap());
+    let alpha = tv.get("alpha").unwrap().as_f32_vec().unwrap();
+    let schemes = parse_schemes(&tv.get("scheme").unwrap().as_f32_vec().unwrap());
+    let want = Mat::from_vec(rows, cols, tv.get("q").unwrap().as_f32_vec().unwrap());
+    let got = quant::rowwise_quant(&w, &alpha, &schemes);
+    let err = got.max_abs_err(&want);
+    assert!(err < 2e-6, "rowwise err {err}");
+}
+
+#[test]
+fn mixed_gemm_matches_jax() {
+    let dir = require_testvec!();
+    let tv = Json::load(&dir.join("gemm.json")).unwrap();
+    let batch = tv.get("batch").unwrap().as_usize().unwrap();
+    let rows = tv.get("rows").unwrap().as_usize().unwrap();
+    let cols = tv.get("cols").unwrap().as_usize().unwrap();
+    let x = Mat::from_vec(batch, cols, tv.get("x").unwrap().as_f32_vec().unwrap());
+    let w = Mat::from_vec(rows, cols, tv.get("w").unwrap().as_f32_vec().unwrap());
+    let alpha = tv.get("alpha").unwrap().as_f32_vec().unwrap();
+    let schemes = parse_schemes(&tv.get("scheme").unwrap().as_f32_vec().unwrap());
+    let act_alpha = tv.get("act_alpha").unwrap().as_f64().unwrap() as f32;
+    let want = Mat::from_vec(batch, rows, tv.get("y").unwrap().as_f32_vec().unwrap());
+
+    // integer cores
+    let g = MixedGemm::new();
+    let acts = PackedActs::quantize(&x, act_alpha, 4);
+    let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+    let int_out = g.run(&acts, &pw);
+    let err = int_out.max_abs_err(&want);
+    assert!(err < 5e-4, "integer gemm vs jax err {err}");
+
+    // float fake-quant path
+    let f_out = g.run_float(&x, &w, &schemes, &alpha, act_alpha, 4);
+    let err = f_out.max_abs_err(&want);
+    assert!(err < 5e-5, "float gemm vs jax err {err}");
+}
