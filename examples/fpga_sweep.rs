@@ -26,15 +26,15 @@ fn main() {
                 CoreCosts::default(),
             );
             let r = simulate(&d, &layers);
+            let rs = ratio.to_string();
             println!(
-                "{:>10} {:>6.0}% {:>6.0}% {:>12.1} {:>10.2}",
-                ratio.to_string(),
+                "{rs:>10} {:>6.0}% {:>6.0}% {:>12.1} {:>10.2}",
                 100.0 * r.lut_util,
                 100.0 * r.dsp_util,
                 r.gops,
                 r.latency_ms
             );
-            if best.is_none() || r.gops > best.unwrap().1 {
+            if best.is_none_or(|(_, g)| r.gops > g) {
                 best = Some((ratio, r.gops));
             }
         }

@@ -41,7 +41,8 @@ fn main() {
     );
 
     let batch = 8;
-    let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect());
+    let xd: Vec<f32> = (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let x = Mat::from_vec(batch, cols, xd);
     let acts = PackedActs::quantize(&x, 1.0, 4);
     let gemm = MixedGemm::new();
     let y = gemm.run(&acts, &packed);

@@ -12,8 +12,9 @@ use rmsmp::coordinator::batcher::BatchPolicy;
 use rmsmp::coordinator::{OpenLoopGen, Server, ServerConfig};
 use rmsmp::model::{Manifest, ModelWeights};
 use rmsmp::runtime::artifacts_dir;
+use rmsmp::ParallelConfig;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> rmsmp::Result<()> {
     let args: Vec<String> = std::env::args().collect();
     let rate: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(20.0);
     let n: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(80);
@@ -39,6 +40,7 @@ fn main() -> anyhow::Result<()> {
                 max_wait: Duration::from_millis(4),
                 queue_cap: 512,
             },
+            parallel: ParallelConfig::default(),
         },
     )?;
 

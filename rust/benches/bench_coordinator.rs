@@ -10,6 +10,7 @@ use std::time::{Duration, Instant};
 
 use rmsmp::coordinator::batcher::{BatchPolicy, Batcher, Pending};
 use rmsmp::coordinator::{Server, ServerConfig};
+use rmsmp::gemm::ParallelConfig;
 use rmsmp::model::{Manifest, ModelWeights};
 use rmsmp::util::bench::Bench;
 
@@ -25,9 +26,8 @@ fn main() {
         });
         let (tx, _rx) = mpsc::channel();
         for i in 0..100u64 {
-            batcher
-                .submit(Pending { id: i, payload: 0, enqueued: Instant::now(), respond: tx.clone() })
-                .unwrap();
+            let req = Pending { id: i, payload: 0, enqueued: Instant::now(), respond: tx.clone() };
+            batcher.submit(req).unwrap();
         }
         let mut n = 0;
         while n < 100 {
@@ -58,6 +58,7 @@ fn main() {
                     max_wait: Duration::from_millis(1),
                     queue_cap: 256,
                 },
+                parallel: ParallelConfig::sequential(),
             },
         )
         .unwrap();

@@ -1,21 +1,31 @@
 //! GEMM core benchmarks — the software twins of Table 6's heterogeneous
-//! cores, at the paper's ResNet-18 layer shapes. Reports Gmac/s per core
-//! (ops = MACs here) and the end-to-end mixed GEMM at the RMSMP ratio.
+//! cores, at the paper's ResNet-18 layer shapes, plus the parallel
+//! mixed-GEMM speedup that the CI bench-regression job tracks.
 //!
-//! Run: `cargo bench --bench bench_gemm`
+//! Emits `BENCH_gemm.json` (ns/op per case, per scheme class, sequential
+//! vs parallel, plus the 512^3 speedup) via `util::bench::Bench`.
+//!
+//! Run: `cargo bench --bench bench_gemm` (RMSMP_BENCH_FAST=1 for CI).
 
 use std::hint::black_box;
 
 use rmsmp::gemm::cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
-use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights, RowPartition};
+use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights, ParallelConfig, RowPartition};
 use rmsmp::quant::{default_alpha, Mat, Scheme};
 use rmsmp::util::bench::Bench;
+use rmsmp::util::json::num;
 use rmsmp::util::rng::Rng;
 
-fn problem(rows: usize, cols: usize, batch: usize, scheme: Option<Scheme>, seed: u64)
-    -> (PackedActs, PackedWeights, RowPartition) {
+fn problem(
+    rows: usize,
+    cols: usize,
+    batch: usize,
+    scheme: Option<Scheme>,
+    seed: u64,
+) -> (PackedActs, PackedWeights, RowPartition) {
     let mut rng = Rng::new(seed);
-    let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect());
+    let xd: Vec<f32> = (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let x = Mat::from_vec(batch, cols, xd);
     let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.5));
     let alpha: Vec<f32> = (0..rows).map(|r| default_alpha(w.row(r))).collect();
     let schemes: Vec<Scheme> = match scheme {
@@ -57,26 +67,55 @@ fn main() {
             _ => &GemmPoT4,
         };
         let mut out = vec![0.0f32; batch];
+        let mut acc = vec![0i32; batch];
         b.case_ops(name, Some(macs), || {
             for r in 0..rows {
-                out.iter_mut().for_each(|v| *v = 0.0);
-                core.run_row(black_box(&acts), black_box(&pw), r, &mut out);
+                out.fill(0.0);
+                core.run_row_tiled(black_box(&acts), black_box(&pw), r, 256, &mut acc, &mut out);
             }
             black_box(&out);
         });
     }
 
-    // mixed GEMM at the RMSMP ratio (the serving hot path)
-    let (acts, pw, part) = problem(rows, cols, batch, None, 9);
-    let g = MixedGemm::new();
-    b.case_ops("mixed_65_30_5", Some(macs), || {
-        black_box(g.run_partitioned(black_box(&acts), black_box(&pw), &part));
-    });
+    // mixed GEMM at the RMSMP ratio (the serving hot path), seq vs parallel
+    let threads = ParallelConfig::default().resolved_threads();
+    let par = MixedGemm::with_config(ParallelConfig::default());
+    {
+        let (acts, pw, part) = problem(rows, cols, batch, None, 9);
+        b.case_ops("mixed_65_30_5_seq", Some(macs), || {
+            black_box(par.run_partitioned_seq(black_box(&acts), black_box(&pw), &part));
+        });
+        b.case_ops("mixed_65_30_5_par", Some(macs), || {
+            black_box(par.run_partitioned(black_box(&acts), black_box(&pw), &part));
+        });
+    }
 
-    // packing cost (quantize activations + weights)
+    // the acceptance shape: 512 x 512 x 512 mixed-scheme GEMM
+    let (b512, r512, c512) = (512, 512, 512);
+    let macs512 = (b512 * r512 * c512) as f64;
+    let (acts, pw, part) = problem(r512, c512, b512, None, 13);
+    b.case_ops("mixed512_seq", Some(macs512), || {
+        black_box(par.run_partitioned_seq(black_box(&acts), black_box(&pw), &part));
+    });
+    b.case_ops("mixed512_par", Some(macs512), || {
+        black_box(par.run_partitioned(black_box(&acts), black_box(&pw), &part));
+    });
+    let seq_ns = b.get("mixed512_seq").map(|m| m.ns_per_iter()).unwrap_or(f64::NAN);
+    let par_ns = b.get("mixed512_par").map(|m| m.ns_per_iter()).unwrap_or(f64::NAN);
+    let speedup = seq_ns / par_ns;
+    println!("bench gemm/mixed512 speedup: {speedup:.2}x at {threads} threads");
+
+    // packing cost (quantize activations)
     let mut rng = Rng::new(11);
-    let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect());
+    let xd: Vec<f32> = (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect();
+    let x = Mat::from_vec(batch, cols, xd);
     b.case_ops("pack_acts", Some((batch * cols) as f64), || {
         black_box(PackedActs::quantize(black_box(&x), 1.0, 4));
     });
+
+    let extra = vec![("threads", num(threads as f64)), ("speedup_512", num(speedup))];
+    match b.write_json(extra) {
+        Ok(path) => println!("bench gemm: wrote {}", path.display()),
+        Err(e) => eprintln!("bench gemm: could not write JSON: {e}"),
+    }
 }

@@ -1,6 +1,8 @@
 //! Quantizer microbenchmarks: per-element cost of each scheme's quantizer
 //! and the row-wise mixed projector (the training-side hot path of Alg. 1).
 //!
+//! Emits `BENCH_quant.json` for the CI bench-regression artifact.
+//!
 //! Run: `cargo bench --bench bench_quant` (RMSMP_BENCH_FAST=1 for CI).
 
 use std::hint::black_box;
@@ -70,4 +72,9 @@ fn main() {
     b.case_ops("rowwise/64x576", Some((rows * cols) as f64), || {
         black_box(quant::rowwise_quant(black_box(&wm), &alpha, &schemes));
     });
+
+    match b.write_json(vec![]) {
+        Ok(path) => println!("bench quant: wrote {}", path.display()),
+        Err(e) => eprintln!("bench quant: could not write JSON: {e}"),
+    }
 }

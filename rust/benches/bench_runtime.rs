@@ -1,66 +1,150 @@
-//! Runtime benchmarks: PJRT artifact execution (the float reference path)
-//! vs the integer executor on the same model — the L3 "two backends"
-//! comparison, plus HLO compile time.
+//! Runtime benchmarks: the integer executor through the native runtime,
+//! sequential vs parallel, on a synthetic CNN (no artifacts needed) and —
+//! when artifacts exist — on the shipped model. (The PJRT/XLA float leg
+//! moved to the Python side with the zero-dependency build.)
 //!
-//! Run after `make artifacts`: `cargo bench --bench bench_runtime`
+//! Run: `cargo bench --bench bench_runtime` (RMSMP_BENCH_FAST=1 for CI).
 
 use std::hint::black_box;
 
-use rmsmp::model::{Executor, Manifest, ModelWeights};
+use rmsmp::gemm::{PackedWeights, ParallelConfig};
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::model::Executor;
 use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::{self, Mat, Scheme};
 use rmsmp::runtime::Runtime;
 use rmsmp::util::bench::Bench;
+use rmsmp::util::json::Json;
 use rmsmp::util::rng::Rng;
 
-fn main() {
-    let dir = rmsmp::runtime::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
-        println!("bench runtime: skipped (run `make artifacts`)");
-        return;
+fn layer(
+    name: &str,
+    kind: &str,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    w: Mat,
+    schemes: Vec<Scheme>,
+    alpha: Vec<f32>,
+) -> LayerWeights {
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    LayerWeights {
+        name: name.into(),
+        kind: kind.into(),
+        rows: w.rows,
+        cols: w.cols,
+        out_ch: conv.0,
+        in_ch: conv.1,
+        kh: conv.2,
+        kw: conv.3,
+        stride,
+        pad,
+        groups: 1,
+        a_alpha: 1.0,
+        scheme: schemes,
+        alpha,
+        bias: vec![0.0; w.rows],
+        w,
+        packed,
     }
-    let mut b = Bench::new("runtime");
-    let manifest = Manifest::load(&dir.join("manifest.json")).unwrap();
-    let weights = ModelWeights::load(&dir.join("weights.bin")).unwrap();
-    let shape = manifest.input_shape.clone();
-    let (n, c, h, w) = (shape[0], shape[1], shape[2], shape[3]);
-    let imgs_per_iter = n as f64;
+}
 
-    // compile time (fresh runtime each iteration measures parse+compile)
-    let t0 = std::time::Instant::now();
-    let rt = Runtime::cpu().unwrap();
-    let exe = rt.load(&dir.join("model.hlo.txt")).unwrap();
-    println!("runtime/compile_model_hlo: {:.1} ms (once)", t0.elapsed().as_secs_f64() * 1e3);
+/// A conv -> gap -> linear model big enough to time: 32ch 16x16 input,
+/// 64-filter 3x3 conv, 10-way classifier.
+fn synthetic_model() -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(
+        &Json::parse(
+            r#"{
+        "model": "bench", "arch": "resnet", "num_classes": 10,
+        "input_shape": [4, 32, 16, 16], "ratio": [65, 30, 5], "act_bits": 4,
+        "layers": [
+          {"name": "c1", "kind": "conv", "rows": 64, "cols": 288,
+           "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [42, 19, 3, 0]},
+          {"name": "fc", "kind": "linear", "rows": 10, "cols": 64,
+           "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [7, 3, 0, 0]}
+        ],
+        "program": [
+          {"op": "conv", "layer": "c1", "in": "in0", "out": "b0", "relu": true},
+          {"op": "gap", "in": "b0", "out": "b1"},
+          {"op": "linear", "layer": "fc", "in": "b1", "out": "logits"}
+        ]
+      }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
 
+    let mut rng = Rng::new(3);
+    let mk = |rows: usize, cols: usize, rng: &mut Rng| -> (Mat, Vec<Scheme>, Vec<f32>) {
+        let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.4));
+        let schemes: Vec<Scheme> = (0..rows)
+            .map(|r| {
+                if r * 100 < rows * 65 {
+                    Scheme::PotW4A4
+                } else if r * 100 < rows * 95 {
+                    Scheme::FixedW4A4
+                } else {
+                    Scheme::FixedW8A4
+                }
+            })
+            .collect();
+        let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
+        (w, schemes, alpha)
+    };
+    let (wc, sc, ac) = mk(64, 288, &mut rng);
+    let (wf, sf, af) = mk(10, 64, &mut rng);
+    let layers = vec![
+        layer("c1", "conv", (64, 32, 3, 3), 1, 1, wc, sc, ac),
+        layer("fc", "linear", (10, 64, 1, 1), 0, 0, wf, sf, af),
+    ];
+    (manifest, ModelWeights { layers })
+}
+
+fn bench_executor(
+    b: &mut Bench,
+    name: &str,
+    exec: &mut Executor,
+    shape: (usize, usize, usize, usize),
+) {
+    let (n, c, h, w) = shape;
     let mut rng = Rng::new(5);
     let input: Vec<f32> = (0..n * c * h * w).map(|_| rng.uniform(0.0, 1.0)).collect();
-    b.case_ops("pjrt_execute_batch", Some(imgs_per_iter), || {
-        black_box(exe.run_f32(&[(black_box(&input), &shape)]).unwrap());
-    });
-
-    let mut exec = Executor::new(manifest, weights).unwrap();
-    b.case_ops("integer_execute_batch", Some(imgs_per_iter), || {
+    b.case_ops(name, Some(n as f64), || {
         let mut x = Tensor4::zeros(n, c, h, w);
         x.data.copy_from_slice(&input);
         black_box(exec.infer(x).unwrap());
     });
+}
 
-    let gemm_exe = rt.load(&dir.join("gemm.hlo.txt")).unwrap();
-    let (gb, gr, gc) = (8usize, 64usize, 576usize);
-    let x: Vec<f32> = (0..gb * gc).map(|_| rng.uniform(0.0, 1.0)).collect();
-    let wmat: Vec<f32> = rng.normal_vec(gr * gc, 0.4);
-    let alpha = vec![1.0f32; gr];
-    let scheme: Vec<i32> = (0..gr as i32).map(|r| r % 3).collect();
-    b.case_ops("pjrt_pallas_gemm", Some((gb * gr * gc) as f64), || {
-        use rmsmp::runtime::ArtifactInput as A;
-        black_box(
-            gemm_exe
-                .run_mixed(&[
-                    A::F32(&x, &[gb, gc]),
-                    A::F32(&wmat, &[gr, gc]),
-                    A::F32(&alpha, &[gr]),
-                    A::I32(&scheme, &[gr]),
-                ])
-                .unwrap(),
-        );
-    });
+fn main() {
+    let mut b = Bench::new("runtime");
+
+    let seq_rt = Runtime::sequential();
+    let par_rt = Runtime::new(ParallelConfig::default());
+    println!("runtime: {} thread(s) in parallel config", par_rt.threads());
+
+    let (manifest, weights) = synthetic_model();
+    let shape = (4usize, 32usize, 16usize, 16usize);
+    let mut seq = seq_rt.executor(manifest.clone(), weights.clone()).unwrap();
+    let mut par = par_rt.executor(manifest, weights).unwrap();
+    bench_executor(&mut b, "synthetic_seq", &mut seq, shape);
+    bench_executor(&mut b, "synthetic_par", &mut par, shape);
+
+    // the shipped model, when artifacts are present
+    let dir = rmsmp::runtime::artifacts_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("bench runtime/model_*: skipped (run `make artifacts`)");
+        return;
+    }
+    let manifest = rmsmp::model::Manifest::load(&dir.join("manifest.json")).unwrap();
+    let weights = ModelWeights::load(&dir.join("weights.bin")).unwrap();
+    let s = manifest.input_shape.clone();
+    let shape = (s[0], s[1], s[2], s[3]);
+    let mut seq = seq_rt.executor(manifest.clone(), weights.clone()).unwrap();
+    let mut par = par_rt.executor(manifest, weights).unwrap();
+    bench_executor(&mut b, "model_seq", &mut seq, shape);
+    bench_executor(&mut b, "model_par", &mut par, shape);
 }

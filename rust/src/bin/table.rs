@@ -17,11 +17,13 @@
 
 use std::path::Path;
 
+use rmsmp::bail;
 use rmsmp::fpga::{simulate, Board, CoreCosts, Design, QuantConfig};
 use rmsmp::quant::Ratio;
+use rmsmp::util::error::Result;
 use rmsmp::util::json::Json;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<()> {
     let which = std::env::args().nth(1).unwrap_or_else(|| "all".to_string());
     match which.as_str() {
         "2" => table_sota(2),
@@ -36,46 +38,57 @@ fn main() -> anyhow::Result<()> {
             table6();
             fig3()?;
         }
-        other => anyhow::bail!("unknown table {other:?} (want 2|3|4|6|fig3|all)"),
+        other => bail!("unknown table {other:?} (want 2|3|4|6|fig3|all)"),
     }
     Ok(())
 }
 
 /// Published rows of Tables 2-4: (method, approach, bits, top1, top5).
-fn cited(table: usize) -> (&'static str, Vec<(&'static str, &'static str, &'static str, f64, f64)>) {
+type SotaRow = (&'static str, &'static str, &'static str, f64, f64);
+
+fn cited(table: usize) -> (&'static str, Vec<SotaRow>) {
     match table {
-        2 => ("ResNet-18 on ImageNet", vec![
-            ("Baseline", "-", "W32A32", 70.25, 89.48),
-            ("Dorefa", "Linear", "W4A4", 68.10, 88.10),
-            ("PACT", "Linear", "W4A4", 69.20, 89.00),
-            ("DSQ", "Linear", "W4A4", 69.56, f64::NAN),
-            ("QIL", "Linear", "W4A4", 70.10, f64::NAN),
-            ("uL2Q", "Linear", "W4A4", 65.92, 86.72),
-            ("APoT", "Non-Lin.", "W4A4", 70.70, 89.60),
-            ("LQ-Nets", "Non-Lin.", "W4A4", 69.30, 88.80),
-            ("DNAS", "MP-Lin.", "Mixed", 70.64, f64::NAN),
-            ("MPDNN", "MP-Lin.", "Mixed", 70.08, f64::NAN),
-            ("MSQ", "MS", "W4A4", 70.27, 89.42),
-            ("RMSMP (paper)", "MP-MS", "W4A4*", 70.73, 89.62),
-        ]),
-        3 => ("ResNet-50 on ImageNet", vec![
-            ("Baseline", "-", "W32A32", 76.51, 93.09),
-            ("Dorefa", "Linear", "W4A4", 71.40, 88.10),
-            ("PACT", "Linear", "W4A4", 76.50, 93.30),
-            ("APoT", "Non-Lin.", "W4A4", 76.60, 93.10),
-            ("LQ-Nets", "Non-Lin.", "W4A4", 75.40, 92.40),
-            ("HAQ", "MP-Lin.", "Mixed", 76.15, 92.89),
-            ("MSQ", "MS", "W4A4", 76.22, 92.86),
-            ("RMSMP (paper)", "MP-MS", "W4A4*", 76.62, 93.36),
-        ]),
-        4 => ("MobileNet-V2 on ImageNet", vec![
-            ("Baseline", "-", "W32A32", 71.88, 90.29),
-            ("PACT", "Linear", "W4A4", 61.40, f64::NAN),
-            ("DSQ", "Non-Lin.", "W4A4", 64.80, f64::NAN),
-            ("HAQ", "MP-Lin.", "Mixed", 67.01, 87.46),
-            ("MSQ", "MS", "W4A4", 68.99, 88.04),
-            ("RMSMP (paper)", "MP-MS", "W4A4*", 69.02, 89.07),
-        ]),
+        2 => (
+            "ResNet-18 on ImageNet",
+            vec![
+                ("Baseline", "-", "W32A32", 70.25, 89.48),
+                ("Dorefa", "Linear", "W4A4", 68.10, 88.10),
+                ("PACT", "Linear", "W4A4", 69.20, 89.00),
+                ("DSQ", "Linear", "W4A4", 69.56, f64::NAN),
+                ("QIL", "Linear", "W4A4", 70.10, f64::NAN),
+                ("uL2Q", "Linear", "W4A4", 65.92, 86.72),
+                ("APoT", "Non-Lin.", "W4A4", 70.70, 89.60),
+                ("LQ-Nets", "Non-Lin.", "W4A4", 69.30, 88.80),
+                ("DNAS", "MP-Lin.", "Mixed", 70.64, f64::NAN),
+                ("MPDNN", "MP-Lin.", "Mixed", 70.08, f64::NAN),
+                ("MSQ", "MS", "W4A4", 70.27, 89.42),
+                ("RMSMP (paper)", "MP-MS", "W4A4*", 70.73, 89.62),
+            ],
+        ),
+        3 => (
+            "ResNet-50 on ImageNet",
+            vec![
+                ("Baseline", "-", "W32A32", 76.51, 93.09),
+                ("Dorefa", "Linear", "W4A4", 71.40, 88.10),
+                ("PACT", "Linear", "W4A4", 76.50, 93.30),
+                ("APoT", "Non-Lin.", "W4A4", 76.60, 93.10),
+                ("LQ-Nets", "Non-Lin.", "W4A4", 75.40, 92.40),
+                ("HAQ", "MP-Lin.", "Mixed", 76.15, 92.89),
+                ("MSQ", "MS", "W4A4", 76.22, 92.86),
+                ("RMSMP (paper)", "MP-MS", "W4A4*", 76.62, 93.36),
+            ],
+        ),
+        4 => (
+            "MobileNet-V2 on ImageNet",
+            vec![
+                ("Baseline", "-", "W32A32", 71.88, 90.29),
+                ("PACT", "Linear", "W4A4", 61.40, f64::NAN),
+                ("DSQ", "Non-Lin.", "W4A4", 64.80, f64::NAN),
+                ("HAQ", "MP-Lin.", "Mixed", 67.01, 87.46),
+                ("MSQ", "MS", "W4A4", 68.99, 88.04),
+                ("RMSMP (paper)", "MP-MS", "W4A4*", 69.02, 89.07),
+            ],
+        ),
         _ => unreachable!(),
     }
 }
@@ -93,9 +106,16 @@ fn measured_rows(model: &str) -> Option<(f64, f64)> {
 fn table_sota(n: usize) {
     let (title, rows) = cited(n);
     println!("\n=== Table {n} — {title} (equivalent 4-bit) ===");
-    println!("{:<16} {:<9} {:<8} {:>7} {:>7}", "method", "approach", "bits", "top-1", "top-5");
+    println!(
+        "{:<16} {:<9} {:<8} {:>7} {:>7}",
+        "method", "approach", "bits", "top-1", "top-5"
+    );
     for (m, a, b, t1, t5) in &rows {
-        let t5s = if t5.is_nan() { "    N/A".to_string() } else { format!("{t5:>7.2}") };
+        let t5s = if t5.is_nan() {
+            "    N/A".to_string()
+        } else {
+            format!("{t5:>7.2}")
+        };
         println!("{m:<16} {a:<9} {b:<8} {t1:>7.2} {t5s}");
     }
     let model = match n {
@@ -106,12 +126,20 @@ fn table_sota(n: usize) {
     match measured_rows(model) {
         Some((base, rmsmp)) => {
             println!("--- measured on substituted workload (results/table1.json) ---");
-            println!("{:<16} {:<9} {:<8} {:>7.2}   (delta vs our baseline: {:+.2})",
-                     "RMSMP (ours)", "MP-MS", "W4A4*", rmsmp, rmsmp - base);
+            println!(
+                "{:<16} {:<9} {:<8} {:>7.2}   (delta vs our baseline: {:+.2})",
+                "RMSMP (ours)",
+                "MP-MS",
+                "W4A4*",
+                rmsmp,
+                rmsmp - base
+            );
             let paper_delta = rows.last().unwrap().3 - rows[0].3;
-            println!("paper delta vs baseline: {paper_delta:+.2} — shape check: both deltas ~0 or positive");
+            println!("paper delta vs baseline: {paper_delta:+.2} (shape check: ~0 or positive)");
         }
-        None => println!("(run `python -m compile.experiments table1 --models {model}` for the measured row)"),
+        None => {
+            println!("(run `python -m compile.experiments table1 --models {model}` for this row)")
+        }
     }
 }
 
@@ -125,32 +153,48 @@ struct T6Row {
     paper: (f64, f64, f64, f64), // LUT%, DSP%, GOP/s, ms
 }
 
+#[allow(clippy::fn_params_excessive_bools)]
+fn t6(
+    label: &'static str,
+    board: Board,
+    ratio: (u32, u32, u32),
+    first_last_8bit: bool,
+    apot: bool,
+    paper: (f64, f64, f64, f64),
+) -> T6Row {
+    T6Row { label, board, ratio, first_last_8bit, apot, paper }
+}
+
 fn table6() {
+    let z20 = Board::XC7Z020;
+    let z45 = Board::XC7Z045;
     let rows = [
-        T6Row { label: "(1) Fixed, 8b f/l", board: Board::XC7Z020, ratio: (0, 100, 0), first_last_8bit: true, apot: false, paper: (26.0, 100.0, 29.6, 122.6) },
-        T6Row { label: "(2) Fixed", board: Board::XC7Z020, ratio: (0, 100, 0), first_last_8bit: false, apot: false, paper: (23.0, 100.0, 36.5, 99.3) },
-        T6Row { label: "(3) PoT, 8b f/l", board: Board::XC7Z020, ratio: (100, 0, 0), first_last_8bit: true, apot: false, paper: (41.0, 100.0, 62.4, 58.1) },
-        T6Row { label: "(4) PoT", board: Board::XC7Z020, ratio: (100, 0, 0), first_last_8bit: false, apot: false, paper: (43.0, 12.0, 72.2, 50.2) },
-        T6Row { label: "(5) PoT+Fixed, 8b f/l", board: Board::XC7Z020, ratio: (50, 50, 0), first_last_8bit: true, apot: false, paper: (50.0, 100.0, 50.3, 72.0) },
-        T6Row { label: "(6) PoT+Fixed", board: Board::XC7Z020, ratio: (50, 50, 0), first_last_8bit: false, apot: false, paper: (46.0, 100.0, 75.8, 47.8) },
-        T6Row { label: "(7) 60:40, 8b f/l", board: Board::XC7Z020, ratio: (60, 40, 0), first_last_8bit: true, apot: false, paper: (52.0, 100.0, 57.0, 63.6) },
-        T6Row { label: "MSQ-1 (APoT 60:40)", board: Board::XC7Z020, ratio: (60, 40, 0), first_last_8bit: false, apot: true, paper: (53.0, 100.0, 77.0, 47.1) },
-        T6Row { label: "RMSMP-1 (60:35:5)", board: Board::XC7Z020, ratio: (60, 35, 5), first_last_8bit: false, apot: false, paper: (57.0, 100.0, 89.0, 40.7) },
-        T6Row { label: "(1) Fixed, 8b f/l", board: Board::XC7Z045, ratio: (0, 100, 0), first_last_8bit: true, apot: false, paper: (21.0, 100.0, 115.6, 31.4) },
-        T6Row { label: "(2) Fixed", board: Board::XC7Z045, ratio: (0, 100, 0), first_last_8bit: false, apot: false, paper: (19.0, 100.0, 142.7, 25.4) },
-        T6Row { label: "(3) PoT, 8b f/l", board: Board::XC7Z045, ratio: (100, 0, 0), first_last_8bit: true, apot: false, paper: (40.0, 100.0, 290.5, 12.5) },
-        T6Row { label: "(4) PoT", board: Board::XC7Z045, ratio: (100, 0, 0), first_last_8bit: false, apot: false, paper: (43.0, 3.0, 352.6, 10.3) },
-        T6Row { label: "(5) PoT+Fixed, 8b f/l", board: Board::XC7Z045, ratio: (50, 50, 0), first_last_8bit: true, apot: false, paper: (48.0, 100.0, 196.8, 18.4) },
-        T6Row { label: "(6) PoT+Fixed", board: Board::XC7Z045, ratio: (50, 50, 0), first_last_8bit: false, apot: false, paper: (45.0, 100.0, 296.3, 12.2) },
-        T6Row { label: "(8) 67:33, 8b f/l", board: Board::XC7Z045, ratio: (67, 33, 0), first_last_8bit: true, apot: false, paper: (63.0, 100.0, 245.8, 14.8) },
-        T6Row { label: "MSQ-2 (APoT 67:33)", board: Board::XC7Z045, ratio: (67, 33, 0), first_last_8bit: false, apot: true, paper: (66.0, 100.0, 359.2, 10.1) },
-        T6Row { label: "RMSMP-2 (65:30:5)", board: Board::XC7Z045, ratio: (65, 30, 5), first_last_8bit: false, apot: false, paper: (67.0, 100.0, 421.1, 8.6) },
+        t6("(1) Fixed, 8b f/l", z20, (0, 100, 0), true, false, (26.0, 100.0, 29.6, 122.6)),
+        t6("(2) Fixed", z20, (0, 100, 0), false, false, (23.0, 100.0, 36.5, 99.3)),
+        t6("(3) PoT, 8b f/l", z20, (100, 0, 0), true, false, (41.0, 100.0, 62.4, 58.1)),
+        t6("(4) PoT", z20, (100, 0, 0), false, false, (43.0, 12.0, 72.2, 50.2)),
+        t6("(5) PoT+Fixed, 8b f/l", z20, (50, 50, 0), true, false, (50.0, 100.0, 50.3, 72.0)),
+        t6("(6) PoT+Fixed", z20, (50, 50, 0), false, false, (46.0, 100.0, 75.8, 47.8)),
+        t6("(7) 60:40, 8b f/l", z20, (60, 40, 0), true, false, (52.0, 100.0, 57.0, 63.6)),
+        t6("MSQ-1 (APoT 60:40)", z20, (60, 40, 0), false, true, (53.0, 100.0, 77.0, 47.1)),
+        t6("RMSMP-1 (60:35:5)", z20, (60, 35, 5), false, false, (57.0, 100.0, 89.0, 40.7)),
+        t6("(1) Fixed, 8b f/l", z45, (0, 100, 0), true, false, (21.0, 100.0, 115.6, 31.4)),
+        t6("(2) Fixed", z45, (0, 100, 0), false, false, (19.0, 100.0, 142.7, 25.4)),
+        t6("(3) PoT, 8b f/l", z45, (100, 0, 0), true, false, (40.0, 100.0, 290.5, 12.5)),
+        t6("(4) PoT", z45, (100, 0, 0), false, false, (43.0, 3.0, 352.6, 10.3)),
+        t6("(5) PoT+Fixed, 8b f/l", z45, (50, 50, 0), true, false, (48.0, 100.0, 196.8, 18.4)),
+        t6("(6) PoT+Fixed", z45, (50, 50, 0), false, false, (45.0, 100.0, 296.3, 12.2)),
+        t6("(8) 67:33, 8b f/l", z45, (67, 33, 0), true, false, (63.0, 100.0, 245.8, 14.8)),
+        t6("MSQ-2 (APoT 67:33)", z45, (67, 33, 0), false, true, (66.0, 100.0, 359.2, 10.1)),
+        t6("RMSMP-2 (65:30:5)", z45, (65, 30, 5), false, false, (67.0, 100.0, 421.1, 8.6)),
     ];
     let layers = rmsmp::fpga::sim::resnet18_imagenet_layers();
     println!("\n=== Table 6 — FPGA implementations, ResNet-18/ImageNet (sim vs paper) ===");
     println!("{:<22} {:<9} | {:^29} | {:^29}", "", "", "simulated", "paper (measured)");
-    println!("{:<22} {:<9} | {:>5} {:>5} {:>9} {:>7} | {:>5} {:>5} {:>9} {:>7}",
-             "config", "board", "LUT%", "DSP%", "GOP/s", "ms", "LUT%", "DSP%", "GOP/s", "ms");
+    println!(
+        "{:<22} {:<9} | {:>5} {:>5} {:>9} {:>7} | {:>5} {:>5} {:>9} {:>7}",
+        "config", "board", "LUT%", "DSP%", "GOP/s", "ms", "LUT%", "DSP%", "GOP/s", "ms"
+    );
     let mut fixed_ms = (0.0f64, 0.0f64);
     let mut rmsmp_ms = (0.0f64, 0.0f64);
     for r in &rows {
@@ -166,25 +210,44 @@ fn table6() {
         let s = simulate(&d, &layers);
         println!(
             "{:<22} {:<9} | {:>4.0}% {:>4.0}% {:>9.1} {:>7.1} | {:>4.0}% {:>4.0}% {:>9.1} {:>7.1}",
-            r.label, r.board.name,
-            100.0 * s.lut_util, 100.0 * s.dsp_util, s.gops, s.latency_ms,
-            r.paper.0, r.paper.1, r.paper.2, r.paper.3
+            r.label,
+            r.board.name,
+            100.0 * s.lut_util,
+            100.0 * s.dsp_util,
+            s.gops,
+            s.latency_ms,
+            r.paper.0,
+            r.paper.1,
+            r.paper.2,
+            r.paper.3
         );
         if r.label.starts_with("(1)") {
-            if r.board == Board::XC7Z020 { fixed_ms.0 = s.latency_ms } else { fixed_ms.1 = s.latency_ms }
+            if r.board == Board::XC7Z020 {
+                fixed_ms.0 = s.latency_ms
+            } else {
+                fixed_ms.1 = s.latency_ms
+            }
         }
         if r.label.starts_with("RMSMP") {
-            if r.board == Board::XC7Z020 { rmsmp_ms.0 = s.latency_ms } else { rmsmp_ms.1 = s.latency_ms }
+            if r.board == Board::XC7Z020 {
+                rmsmp_ms.0 = s.latency_ms
+            } else {
+                rmsmp_ms.1 = s.latency_ms
+            }
         }
     }
-    println!("\nspeedup RMSMP vs (1) Fixed:  XC7Z020 {:.2}x (paper 3.01x) | XC7Z045 {:.2}x (paper 3.65x)",
-             fixed_ms.0 / rmsmp_ms.0, fixed_ms.1 / rmsmp_ms.1);
+    println!(
+        "\nspeedup RMSMP vs (1) Fixed:  XC7Z020 {:.2}x (paper 3.01x) | XC7Z045 {:.2}x (paper 3.65x)",
+        fixed_ms.0 / rmsmp_ms.0,
+        fixed_ms.1 / rmsmp_ms.1
+    );
 }
 
-fn fig3() -> anyhow::Result<()> {
+fn fig3() -> Result<()> {
     let path = Path::new("results/fig3.json");
     if !path.exists() {
-        println!("\n=== Figure 3 ===\n(run `python -m compile.experiments fig3` first — results/fig3.json missing)");
+        println!("\n=== Figure 3 ===");
+        println!("(run `python -m compile.experiments fig3` first — results/fig3.json missing)");
         return Ok(());
     }
     let j = Json::load(path)?;
@@ -198,6 +261,6 @@ fn fig3() -> anyhow::Result<()> {
         }
         println!();
     }
-    println!("(series semantics + QAT-vs-PTQ caveat: see results/fig3.md and EXPERIMENTS.md §Figure-3)");
+    println!("(series semantics + QAT-vs-PTQ caveat: see results/fig3.md and EXPERIMENTS.md)");
     Ok(())
 }

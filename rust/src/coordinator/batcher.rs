@@ -50,6 +50,19 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Batch-level vs row-level parallelism for one dispatched batch.
+///
+/// Each worker drives its batch through one executor, so the batch
+/// dimension only fills the machine *across* concurrently-running
+/// workers — a wide batch on a single worker still wants the pool's
+/// threads back inside the GEMM. Row-level dispatch is skipped only when
+/// the workers alone can saturate the pool AND the batch is wide enough
+/// that per-task overhead would not be repaid. The server consults this
+/// per dispatched batch.
+pub fn row_parallel_for_batch(batch_size: usize, workers: usize, threads: usize) -> bool {
+    threads > 1 && (workers < threads || batch_size < threads)
+}
+
 struct State<T> {
     queue: VecDeque<Pending<T>>,
     closed: bool,
@@ -147,6 +160,25 @@ mod tests {
             Pending { id, payload: id as u32, enqueued: Instant::now(), respond: tx },
             rx,
         )
+    }
+
+    #[test]
+    fn row_parallel_decision() {
+        // sequential executor: never row-parallel
+        assert!(!row_parallel_for_batch(1, 1, 1));
+        assert!(!row_parallel_for_batch(8, 4, 1));
+        // a lone worker always wants the threads inside the GEMM,
+        // regardless of batch width (the batch runs sequentially in it)
+        assert!(row_parallel_for_batch(1, 1, 4));
+        assert!(row_parallel_for_batch(16, 1, 4));
+        // under-subscribed workers: still row-parallel
+        assert!(row_parallel_for_batch(8, 2, 4));
+        // workers saturate the pool and the batch is wide: stay sequential
+        assert!(!row_parallel_for_batch(8, 4, 4));
+        assert!(!row_parallel_for_batch(16, 8, 4));
+        // workers saturate the pool but the batch is narrow: the batch
+        // drains fast and frees the worker, so row-level still pays
+        assert!(row_parallel_for_batch(2, 4, 4));
     }
 
     #[test]

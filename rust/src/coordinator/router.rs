@@ -9,7 +9,9 @@
 use std::collections::BTreeMap;
 use std::sync::mpsc;
 
-use anyhow::{anyhow, Result};
+use crate::ensure;
+use crate::err;
+use crate::util::error::Result;
 
 use super::batcher::{Response, SubmitError};
 use super::server::{Server, ServerConfig};
@@ -31,7 +33,7 @@ impl Router {
     /// Build from (name, manifest, weights, config) tuples; the first
     /// entry becomes the default variant.
     pub fn start(models: Vec<(String, Manifest, ModelWeights, ServerConfig)>) -> Result<Router> {
-        anyhow::ensure!(!models.is_empty(), "router needs at least one variant");
+        ensure!(!models.is_empty(), "router needs at least one variant");
         let default = models[0].0.clone();
         let mut variants = BTreeMap::new();
         for (name, manifest, weights, cfg) in models {
@@ -42,17 +44,17 @@ impl Router {
     }
 
     /// Route a request; `model = None` selects the default variant.
-    pub fn submit(&self, model: Option<&str>, image: Vec<f32>)
-        -> Result<mpsc::Receiver<Response>> {
+    pub fn submit(&self, model: Option<&str>, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
         let name = model.unwrap_or(&self.default);
-        let v = self
-            .variants
-            .get(name)
-            .ok_or_else(|| anyhow!("unknown model {name:?} (have: {:?})",
-                                   self.variants.keys().collect::<Vec<_>>()))?;
+        let v = self.variants.get(name).ok_or_else(|| {
+            err!(
+                "unknown model {name:?} (have: {:?})",
+                self.variants.keys().collect::<Vec<_>>()
+            )
+        })?;
         v.server
             .submit(image)
-            .map_err(|e: SubmitError| anyhow!("{name}: submit failed: {e:?}"))
+            .map_err(|e: SubmitError| err!("{name}: submit failed: {e:?}"))
     }
 
     /// Blocking convenience.

@@ -5,29 +5,48 @@
 //! batches off the shared [`Batcher`] until shutdown — a miniature of the
 //! vLLM-style router/worker split, with the paper's quantized engine as
 //! the backend.
+//!
+//! All workers' executors share one [`ThreadPool`] sized by
+//! [`ServerConfig::parallel`]; per batch, the worker asks
+//! [`super::batcher::row_parallel_for_batch`] whether to spend those
+//! threads inside the GEMM or leave them to the other concurrently
+//! running workers, so the machine is filled either way.
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
 use std::time::Instant;
 
-use anyhow::Result;
-
-use super::batcher::{Batch, BatchPolicy, Batcher, Pending, Response, SubmitError};
-use super::metrics::Metrics;
+use crate::ensure;
+use crate::err;
+use crate::gemm::{ParallelConfig, RowPartition};
 use crate::model::{Executor, Manifest, ModelWeights};
 use crate::quant::tensor::Tensor4;
+use crate::util::error::Result;
+use crate::util::pool::ThreadPool;
+
+use super::batcher::{
+    row_parallel_for_batch, Batch, BatchPolicy, Batcher, Pending, Response, SubmitError,
+};
+use super::metrics::Metrics;
 
 /// Server configuration.
 #[derive(Clone, Debug)]
 pub struct ServerConfig {
     pub workers: usize,
     pub policy: BatchPolicy,
+    /// Execution config for the shared GEMM pool. Defaults to sequential
+    /// (no pool); `ParallelConfig::default()` enables one thread per core.
+    pub parallel: ParallelConfig,
 }
 
 impl Default for ServerConfig {
     fn default() -> ServerConfig {
-        ServerConfig { workers: 1, policy: BatchPolicy::default() }
+        ServerConfig {
+            workers: 1,
+            policy: BatchPolicy::default(),
+            parallel: ParallelConfig::sequential(),
+        }
     }
 }
 
@@ -41,26 +60,59 @@ pub struct Server {
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
+/// Admission check: every layer's row partition must cover all rows with
+/// class fractions summing to 1 (all four classes counted — APoT rows
+/// used to be dropped from the fractions and broke this invariant).
+fn admit(weights: &ModelWeights) -> Result<()> {
+    for l in &weights.layers {
+        let part = RowPartition::from_schemes(&l.scheme);
+        ensure!(
+            part.total() == l.rows,
+            "layer {}: partition covers {} of {} rows",
+            l.name,
+            part.total(),
+            l.rows
+        );
+        let sum: f64 = part.fractions().iter().sum();
+        ensure!(
+            l.rows == 0 || (sum - 1.0).abs() < 1e-9,
+            "layer {}: scheme fractions sum to {sum}, want 1",
+            l.name
+        );
+    }
+    Ok(())
+}
+
 impl Server {
     /// Spawn workers over the manifest + weights.
     pub fn start(manifest: Manifest, weights: ModelWeights, cfg: ServerConfig) -> Result<Server> {
         let batcher = Arc::new(Batcher::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
         let shape = &manifest.input_shape;
-        anyhow::ensure!(shape.len() == 4, "manifest input_shape must be NCHW");
+        ensure!(shape.len() == 4, "manifest input_shape must be NCHW");
         let input_chw = (shape[1], shape[2], shape[3]);
         let num_classes = manifest.num_classes;
+        admit(&weights)?;
+
+        let threads = cfg.parallel.resolved_threads();
+        let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
 
         let mut workers = Vec::new();
-        for wi in 0..cfg.workers.max(1) {
+        let n_workers = cfg.workers.max(1);
+        for wi in 0..n_workers {
             let b = Arc::clone(&batcher);
             let m = Arc::clone(&metrics);
-            let mut exec = Executor::new(manifest.clone(), weights.clone())?;
+            let mut exec = Executor::with_parallel(
+                manifest.clone(),
+                weights.clone(),
+                cfg.parallel,
+                pool.clone(),
+            )?;
             let chw = input_chw;
             workers.push(
                 std::thread::Builder::new()
                     .name(format!("rmsmp-serve-{wi}"))
-                    .spawn(move || worker_loop(&b, &m, &mut exec, chw))
+                    .spawn(move || worker_loop(&b, &m, &mut exec, chw, (n_workers, threads)))
                     .expect("spawn server worker"),
             );
         }
@@ -106,7 +158,7 @@ impl Server {
     pub fn infer(&self, image: Vec<f32>) -> Result<Response> {
         let rx = self
             .submit(image)
-            .map_err(|e| anyhow::anyhow!("submit failed: {e:?}"))?;
+            .map_err(|e| err!("submit failed: {e:?}"))?;
         Ok(rx.recv()?)
     }
 
@@ -128,10 +180,13 @@ fn worker_loop(
     metrics: &Metrics,
     exec: &mut Executor,
     (c, h, w): (usize, usize, usize),
+    (workers, threads): (usize, usize),
 ) {
     while let Some(Batch { requests }) = batcher.next_batch() {
         let n = requests.len();
         metrics.record_batch(n);
+        // batch-level vs row-level parallelism (see row_parallel_for_batch)
+        exec.set_row_parallel(row_parallel_for_batch(n, workers, threads));
         let t0 = Instant::now();
         // pack into one NCHW tensor
         let mut x = Tensor4::zeros(n, c, h, w);
@@ -143,8 +198,7 @@ fn worker_loop(
             Ok(logits) => {
                 let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
                 for (i, r) in requests.into_iter().enumerate() {
-                    let queue_ms =
-                        (t0.duration_since(r.enqueued)).as_secs_f64() * 1e3;
+                    let queue_ms = t0.duration_since(r.enqueued).as_secs_f64() * 1e3;
                     let total_ms = queue_ms + infer_ms;
                     metrics.record_response(total_ms, queue_ms);
                     let _ = r.respond.send(Response {
@@ -158,7 +212,7 @@ fn worker_loop(
             }
             Err(e) => {
                 // fail the whole batch: drop senders (clients see RecvError)
-                eprintln!("[server] batch failed: {e:#}");
+                eprintln!("[server] batch failed: {e}");
             }
         }
     }

@@ -104,7 +104,11 @@ impl Design {
     pub fn allocate(board: Board, cfg: QuantConfig, costs: CoreCosts) -> Design {
         let Ratio { pot4, fixed4, fixed8 } = cfg.ratio;
         let (a, b, c) = (pot4 as f64 / 100.0, fixed4 as f64 / 100.0, fixed8 as f64 / 100.0);
-        let lut_pot = if cfg.apot { costs.lut_per_apot_pe } else { costs.lut_per_pot_pe };
+        let lut_pot = if cfg.apot {
+            costs.lut_per_apot_pe
+        } else {
+            costs.lut_per_pot_pe
+        };
 
         let control = costs.control_lut_frac * board.luts as f64;
         let lut_budget = board.luts as f64 - control;
@@ -129,7 +133,11 @@ impl Design {
             .min(costs.pot_fabric_frac * board.luts as f64)
             .max(0.0);
         let pot_cap = lut_for_pot / lut_pot;
-        let eff_nl = if cfg.apot { costs.eff_apot } else { costs.eff_pot };
+        let eff_nl = if cfg.apot {
+            costs.eff_apot
+        } else {
+            costs.eff_pot
+        };
         let pot_pes = if a <= 0.0 {
             0.0
         } else if fixed_share <= 0.0 {
@@ -227,7 +235,8 @@ mod tests {
 
     #[test]
     fn apot_pes_cost_more_luts() {
-        let pot = Design::allocate(Board::XC7Z020, cfg(Ratio::new(60, 40, 0)), CoreCosts::default());
+        let costs = CoreCosts::default();
+        let pot = Design::allocate(Board::XC7Z020, cfg(Ratio::new(60, 40, 0)), costs);
         let mut qc = cfg(Ratio::new(60, 40, 0));
         qc.apot = true;
         let apot = Design::allocate(Board::XC7Z020, qc, CoreCosts::default());

@@ -66,7 +66,11 @@ pub fn simulate_batch(design: &Design, layers: &[LayerShape], batch: usize) -> S
         total_macs += macs;
         let first_or_last = i == 0 || i == n - 1;
 
-        let eff_nl = if design.cfg.apot { c.eff_apot } else { c.eff_pot };
+        let eff_nl = if design.cfg.apot {
+            c.eff_apot
+        } else {
+            c.eff_pot
+        };
         let compute = if design.cfg.first_last_8bit && first_or_last {
             // entire layer in W8A8 on the DSP block (all DSPs repurposed
             // for these two layers; layer-wise uniformality is broken here,

@@ -5,19 +5,48 @@
 //! i32; the PoT core shift-adds (`acc += ±(a << (6 - shift))` in a fixed-
 //! point frame), exactly mirroring the DSP-vs-LUT datapath split on the
 //! FPGA.
+//!
+//! The inner loops are blocked over the column dimension
+//! ([`GemmCore::run_row_tiled`]): one weight-row tile stays hot in L1
+//! while it is swept across every batch row, and the per-(batch, row) i32
+//! accumulator survives across tiles so the dequantizing multiply happens
+//! exactly once per output element. Integer accumulation is associative,
+//! so any tile size produces bit-identical results for the three RMSMP
+//! cores; the APoT baseline core accumulates in f32 and is deterministic
+//! for a *fixed* tile size (which is all the parallel executor needs).
 
 use super::packed::{PackedActs, PackedWeights};
 use crate::quant::apot::ApotQuantizer;
 use crate::quant::{Mat, Scheme};
 
 /// A GEMM core processes the rows of one scheme class.
-pub trait GemmCore {
+///
+/// Cores are `Sync`: the parallel mixed GEMM shares one core instance
+/// across all worker tasks of its class.
+pub trait GemmCore: Sync {
     /// The scheme class this core accepts.
     fn scheme(&self) -> Scheme;
 
-    /// Compute output column `y[:, r]` for one weight row `r` into `out`
-    /// (length = batch). `out[b] += dequantized dot(acts[b], w[r])`.
-    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]);
+    /// Compute `out[b] += dequant(dot(acts[b], w[r]))` for one weight row
+    /// `r`, with the column loop blocked at `tile_cols` (0 = untiled).
+    /// `acc` is caller-provided i32 scratch; both slices have length =
+    /// batch. The scratch is zeroed here, so callers only reset `out`.
+    fn run_row_tiled(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        r: usize,
+        tile_cols: usize,
+        acc: &mut [i32],
+        out: &mut [f32],
+    );
+
+    /// Untiled convenience wrapper (tests and one-off rows); allocates the
+    /// scratch internally.
+    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
+        let mut acc = vec![0i32; out.len()];
+        self.run_row_tiled(acts, w, r, 0, &mut acc, out);
+    }
 
     /// Ops per MAC for the efficiency accounting (2 = mul+add).
     fn ops_per_mac(&self) -> f64 {
@@ -47,23 +76,61 @@ fn fixed_row_scale(acts: &PackedActs, w: &PackedWeights, r: usize, denom: f32) -
     acts.scale() * w.alpha[r] / denom
 }
 
+/// Shared tiled u8 x i8 -> i32 MAC kernel: accumulate the full row in i32
+/// (exact), then apply the dequantizing multiply once per batch element.
+/// `wr` is the weight-code (or PoT-multiplier) row; tile = 0 means one
+/// tile spanning all columns.
+#[inline]
+fn mac_i32_tiled(
+    acts: &PackedActs,
+    wr: &[i8],
+    scale: f32,
+    tile_cols: usize,
+    acc: &mut [i32],
+    out: &mut [f32],
+) {
+    let batch = acts.rows;
+    let cols = acts.cols;
+    debug_assert_eq!(acc.len(), batch);
+    debug_assert_eq!(out.len(), batch);
+    acc.fill(0);
+    let tile = if tile_cols == 0 { cols } else { tile_cols };
+    let mut start = 0usize;
+    while start < cols {
+        let end = cols.min(start.saturating_add(tile));
+        let wt = &wr[start..end];
+        for (b, a) in acc.iter_mut().enumerate() {
+            let at = &acts.row(b)[start..end];
+            let mut t = 0i32;
+            for (&x, &c) in at.iter().zip(wt) {
+                t += x as i32 * c as i32;
+            }
+            *a += t;
+        }
+        start = end;
+    }
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+        *o += scale * a as f32;
+    }
+}
+
 impl GemmCore for GemmFixed4 {
     fn scheme(&self) -> Scheme {
         Scheme::FixedW4A4
     }
 
-    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
+    fn run_row_tiled(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        r: usize,
+        tile_cols: usize,
+        acc: &mut [i32],
+        out: &mut [f32],
+    ) {
         debug_assert_eq!(w.scheme[r], Scheme::FixedW4A4);
-        let wr = w.row(r);
         let s = fixed_row_scale(acts, w, r, 7.0);
-        for (b, o) in out.iter_mut().enumerate() {
-            let ar = acts.row(b);
-            let mut acc: i32 = 0;
-            for (&a, &c) in ar.iter().zip(wr) {
-                acc += a as i32 * c as i32;
-            }
-            *o += s * acc as f32;
-        }
+        mac_i32_tiled(acts, w.row(r), s, tile_cols, acc, out);
     }
 }
 
@@ -72,18 +139,18 @@ impl GemmCore for GemmFixed8 {
         Scheme::FixedW8A4
     }
 
-    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
+    fn run_row_tiled(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        r: usize,
+        tile_cols: usize,
+        acc: &mut [i32],
+        out: &mut [f32],
+    ) {
         debug_assert_eq!(w.scheme[r], Scheme::FixedW8A4);
-        let wr = w.row(r);
         let s = fixed_row_scale(acts, w, r, 127.0);
-        for (b, o) in out.iter_mut().enumerate() {
-            let ar = acts.row(b);
-            let mut acc: i32 = 0;
-            for (&a, &c) in ar.iter().zip(wr) {
-                acc += a as i32 * c as i32;
-            }
-            *o += s * acc as f32;
-        }
+        mac_i32_tiled(acts, w.row(r), s, tile_cols, acc, out);
     }
 }
 
@@ -122,21 +189,21 @@ impl GemmCore for GemmPoT4 {
     /// accumulated in a 2^6-scaled integer frame (see [`POT_MULT`] for the
     /// branchless CPU realization). i32 accumulation is safe: |term| <=
     /// 15 * 64 = 960, so K up to ~2.2M columns fits i32.
-    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
+    fn run_row_tiled(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        r: usize,
+        tile_cols: usize,
+        acc: &mut [i32],
+        out: &mut [f32],
+    ) {
         debug_assert_eq!(w.scheme[r], Scheme::PotW4A4);
         // The precomputed multiplier row (`pot_mult`) is the decoded weight
         // register of the LUT PE: an i8 in ±2^(6-shift). The u8 x i8 -> i32
         // loop has the same shape as the Fixed cores and vectorizes.
-        let mr = w.pot_mult_row(r);
         let s = acts.scale() * w.alpha[r] / 64.0;
-        for (b, o) in out.iter_mut().enumerate() {
-            let ar = acts.row(b);
-            let mut acc: i32 = 0;
-            for (&a, &m) in ar.iter().zip(mr) {
-                acc += a as i32 * m as i32;
-            }
-            *o += s * acc as f32;
-        }
+        mac_i32_tiled(acts, w.pot_mult_row(r), s, tile_cols, acc, out);
     }
 
     fn ops_per_mac(&self) -> f64 {
@@ -152,21 +219,37 @@ impl GemmCore for GemmApot4 {
 
     /// APoT = sum of two PoT terms -> two shift-adds per MAC. We go through
     /// the dequantized level table (the hardware equivalent: a 3-bit LUT
-    /// into shift pairs).
-    fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
+    /// into shift pairs). The level grid is not dyadic, so accumulation is
+    /// f32 per tile; results are deterministic for a fixed tile size.
+    fn run_row_tiled(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        r: usize,
+        tile_cols: usize,
+        _acc: &mut [i32],
+        out: &mut [f32],
+    ) {
         debug_assert_eq!(w.scheme[r], Scheme::ApotW4A4);
         let wr = w.row(r);
         let lv = self.quant.levels();
-        let sa = acts.scale();
-        let aw = w.alpha[r];
-        for (b, o) in out.iter_mut().enumerate() {
-            let ar = acts.row(b);
-            let mut acc = 0.0f32;
-            for (&a, &c) in ar.iter().zip(wr) {
-                let sign = if c < 0 { -1.0 } else { 1.0 };
-                acc += a as f32 * sign * lv[c.unsigned_abs() as usize];
+        let cols = acts.cols;
+        let s = acts.scale() * w.alpha[r];
+        let tile = if tile_cols == 0 { cols } else { tile_cols };
+        let mut start = 0usize;
+        while start < cols {
+            let end = cols.min(start.saturating_add(tile));
+            let wt = &wr[start..end];
+            for (b, o) in out.iter_mut().enumerate() {
+                let at = &acts.row(b)[start..end];
+                let mut t = 0.0f32;
+                for (&a, &c) in at.iter().zip(wt) {
+                    let sign = if c < 0 { -1.0 } else { 1.0 };
+                    t += a as f32 * sign * lv[c.unsigned_abs() as usize];
+                }
+                *o += s * t;
             }
-            *o += sa * aw * acc;
+            start = end;
         }
     }
 
@@ -187,14 +270,20 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    fn setup(scheme: Scheme, rows: usize, cols: usize, batch: usize)
-        -> (PackedActs, PackedWeights) {
+    fn setup(
+        scheme: Scheme,
+        rows: usize,
+        cols: usize,
+        batch: usize,
+    ) -> (PackedActs, PackedWeights) {
         let mut rng = Rng::new(42);
-        let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect());
-        let w = Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() * 0.4).collect());
+        let xd: Vec<f32> = (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let x = Mat::from_vec(batch, cols, xd);
+        let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.4));
         let alpha: Vec<f32> = (0..rows).map(|r| crate::quant::default_alpha(w.row(r))).collect();
+        let schemes = vec![scheme; rows];
         let acts = PackedActs::quantize(&x, 1.0, 4);
-        let pw = PackedWeights::quantize(&w, &vec![scheme; rows], &alpha);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
         (acts, pw)
     }
 
@@ -231,6 +320,42 @@ mod tests {
     #[test]
     fn apot4_matches_reference() {
         check_core(&GemmApot4::default());
+    }
+
+    #[test]
+    fn tiling_is_exact_for_integer_cores() {
+        // i32 accumulation is associative: every tile size must produce
+        // bit-identical output for the three RMSMP cores.
+        for scheme in [Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4] {
+            let (acts, w) = setup(scheme, 4, 97, 3);
+            let core: &dyn GemmCore = match scheme {
+                Scheme::PotW4A4 => &GemmPoT4,
+                Scheme::FixedW4A4 => &GemmFixed4,
+                _ => &GemmFixed8,
+            };
+            let mut want = vec![0.0f32; acts.rows];
+            core.run_row(&acts, &w, 1, &mut want);
+            for tile in [1usize, 7, 16, 96, 97, 1000] {
+                let mut acc = vec![0i32; acts.rows];
+                let mut got = vec![0.0f32; acts.rows];
+                core.run_row_tiled(&acts, &w, 1, tile, &mut acc, &mut got);
+                assert_eq!(got, want, "{scheme} tile {tile}");
+            }
+        }
+    }
+
+    #[test]
+    fn apot_tiling_is_deterministic() {
+        let (acts, w) = setup(Scheme::ApotW4A4, 3, 64, 2);
+        let core = GemmApot4::default();
+        for tile in [1usize, 8, 33] {
+            let mut acc = vec![0i32; acts.rows];
+            let mut a = vec![0.0f32; acts.rows];
+            let mut b = vec![0.0f32; acts.rows];
+            core.run_row_tiled(&acts, &w, 0, tile, &mut acc, &mut a);
+            core.run_row_tiled(&acts, &w, 0, tile, &mut acc, &mut b);
+            assert_eq!(a, b, "tile {tile}");
+        }
     }
 
     #[test]

@@ -6,10 +6,26 @@
 //! GEMM_Fixed-4 / GEMM_Fixed-8 PE arrays. Because the ratio is layer-wise
 //! uniform, the partition shape (and thus per-layer schedule) is identical
 //! in every layer.
+//!
+//! # Parallel execution
+//!
+//! Row classes are embarrassingly parallel: every output cell `(b, r)` is
+//! produced by exactly one weight row `r`. [`MixedGemm::run_partitioned`]
+//! therefore splits each class's row list into chunks of
+//! `min_rows_per_task` rows, interleaves the chunks round-robin across
+//! classes (so cheap PoT shift-add rows and expensive Fixed-8 MAC rows
+//! load-balance instead of convoying per class), and drains the task list
+//! on the shared [`ThreadPool`] via its work-pulling `scoped_for`. Each
+//! task writes a disjoint set of output cells, and per-row arithmetic is
+//! identical to the sequential path, so parallel output is bit-exact
+//! regardless of thread count or scheduling order.
+
+use std::sync::Arc;
 
 use super::cores::{GemmApot4, GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
 use super::packed::{PackedActs, PackedWeights};
 use crate::quant::{Mat, Scheme};
+use crate::util::pool::ThreadPool;
 
 /// Row indices grouped by scheme class.
 #[derive(Clone, Debug, Default)]
@@ -38,40 +54,134 @@ impl RowPartition {
         self.pot4.len() + self.fixed4.len() + self.fixed8.len() + self.apot4.len()
     }
 
-    /// (pot4, fixed4, fixed8) fractions — checked against the configured
-    /// ratio by the coordinator's admission tests.
-    pub fn fractions(&self) -> (f64, f64, f64) {
+    /// Per-class fractions `[pot4, fixed4, fixed8, apot4]` — checked
+    /// against the configured ratio by the coordinator's admission tests.
+    /// All four classes are reported so the fractions sum to 1 whenever
+    /// the partition is non-empty (the earlier 3-tuple silently dropped
+    /// the APoT share).
+    pub fn fractions(&self) -> [f64; 4] {
         let t = self.total().max(1) as f64;
-        (
+        [
             self.pot4.len() as f64 / t,
             self.fixed4.len() as f64 / t,
             self.fixed8.len() as f64 / t,
-        )
+            self.apot4.len() as f64 / t,
+        ]
     }
 }
 
-/// The mixed GEMM engine: owns the four cores and a row partition cache.
+/// Execution knobs for the parallel mixed GEMM, threaded from the CLI
+/// through the runtime, the layer executor, and the coordinator.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ParallelConfig {
+    /// Worker threads; 0 = one per available core.
+    pub threads: usize,
+    /// Column-tile width for the packed inner loops (0 = untiled). 256
+    /// i8 codes keep a weight-row tile comfortably inside L1 next to the
+    /// activation tile.
+    pub tile_cols: usize,
+    /// Minimum rows per parallel task: the chunk granularity of the
+    /// per-class queues (smaller = better balance, more overhead).
+    pub min_rows_per_task: usize,
+}
+
+impl Default for ParallelConfig {
+    fn default() -> ParallelConfig {
+        ParallelConfig { threads: 0, tile_cols: 256, min_rows_per_task: 8 }
+    }
+}
+
+impl ParallelConfig {
+    /// Single-threaded config (the seed's behaviour).
+    pub fn sequential() -> ParallelConfig {
+        ParallelConfig { threads: 1, ..ParallelConfig::default() }
+    }
+
+    /// `threads` with 0 resolved to the machine's available parallelism.
+    pub fn resolved_threads(&self) -> usize {
+        if self.threads == 0 {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+        } else {
+            self.threads
+        }
+    }
+}
+
+/// Raw output pointer shared across GEMM tasks. Each task writes a
+/// disjoint set of `(batch, row)` cells — rows are partitioned across
+/// tasks — so unsynchronized writes are sound; the pool's join barrier
+/// publishes them to the caller.
+struct SyncOutPtr {
+    p: *mut f32,
+}
+
+unsafe impl Send for SyncOutPtr {}
+unsafe impl Sync for SyncOutPtr {}
+
+/// The mixed GEMM engine: owns the four cores plus the execution config
+/// and (optionally) a thread pool.
 pub struct MixedGemm {
     fixed4: GemmFixed4,
     fixed8: GemmFixed8,
     pot4: GemmPoT4,
     apot4: GemmApot4,
+    cfg: ParallelConfig,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl Default for MixedGemm {
     fn default() -> Self {
+        MixedGemm::with_config(ParallelConfig::sequential())
+    }
+}
+
+impl MixedGemm {
+    /// Sequential engine (no pool) — the drop-in default.
+    pub fn new() -> MixedGemm {
+        MixedGemm::default()
+    }
+
+    /// Engine with its own pool when `cfg` resolves to >1 thread.
+    pub fn with_config(cfg: ParallelConfig) -> MixedGemm {
+        let threads = cfg.resolved_threads();
+        let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+        MixedGemm::build(cfg, pool)
+    }
+
+    /// Engine sharing an existing pool (one pool per server, shared by
+    /// every worker's executor).
+    pub fn with_shared_pool(cfg: ParallelConfig, pool: Arc<ThreadPool>) -> MixedGemm {
+        MixedGemm::build(cfg, Some(pool))
+    }
+
+    fn build(cfg: ParallelConfig, pool: Option<Arc<ThreadPool>>) -> MixedGemm {
         MixedGemm {
             fixed4: GemmFixed4,
             fixed8: GemmFixed8,
             pot4: GemmPoT4,
             apot4: GemmApot4::default(),
+            cfg,
+            pool,
         }
     }
-}
 
-impl MixedGemm {
-    pub fn new() -> MixedGemm {
-        MixedGemm::default()
+    pub fn config(&self) -> ParallelConfig {
+        self.cfg
+    }
+
+    /// Whether a pool is attached (i.e. parallel dispatch is possible).
+    pub fn is_parallel(&self) -> bool {
+        self.pool.is_some()
+    }
+
+    /// The core owning `scheme`'s rows.
+    pub fn core_for(&self, scheme: Scheme) -> &dyn GemmCore {
+        match scheme {
+            Scheme::PotW4A4 => &self.pot4,
+            Scheme::FixedW4A4 => &self.fixed4,
+            Scheme::FixedW8A4 => &self.fixed8,
+            Scheme::ApotW4A4 => &self.apot4,
+        }
     }
 
     /// `y = Qa(x) @ Qw(w)^T` over integer codes. Output is (batch, rows).
@@ -80,38 +190,146 @@ impl MixedGemm {
         self.run_partitioned(acts, w, &part)
     }
 
-    /// Run with a precomputed partition (the executor caches it per layer).
+    /// Run with a precomputed partition (the executor caches it per
+    /// layer), parallel when a pool is attached and the shape is worth it.
     pub fn run_partitioned(
         &self,
         acts: &PackedActs,
         w: &PackedWeights,
         part: &RowPartition,
     ) -> Mat {
+        self.run_partitioned_with(acts, w, part, true)
+    }
+
+    /// Sequential reference path — bit-exact oracle for the parallel one.
+    pub fn run_partitioned_seq(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        part: &RowPartition,
+    ) -> Mat {
+        self.run_partitioned_with(acts, w, part, false)
+    }
+
+    /// `parallel = false` forces the sequential path (the coordinator
+    /// disables row-level parallelism for batches that already fill the
+    /// machine via the batch dimension).
+    pub fn run_partitioned_with(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        part: &RowPartition,
+        parallel: bool,
+    ) -> Mat {
         assert_eq!(acts.cols, w.cols, "inner dims");
         let mut out = Mat::zeros(acts.rows, w.rows);
-        let mut col = vec![0.0f32; acts.rows];
-        for (core, rows) in [
-            (&self.pot4 as &dyn GemmCore, &part.pot4),
+        let tasks = self.class_tasks(part);
+        let use_pool = parallel
+            && self.pool.is_some()
+            && tasks.len() > 1
+            && part.total() >= 2 * self.cfg.min_rows_per_task.max(1);
+        self.run_tasks(acts, w, &tasks, &mut out, use_pool);
+        out
+    }
+
+    /// Single-row dispatch used by the grouped-conv path: `out[b] += ...`
+    /// with the engine's tile size. `acc` is i32 scratch (len = batch).
+    pub fn run_row_into(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        r: usize,
+        acc: &mut [i32],
+        out: &mut [f32],
+    ) {
+        self.core_for(w.scheme[r]).run_row_tiled(acts, w, r, self.cfg.tile_cols, acc, out);
+    }
+
+    /// Build the task list: per-class row chunks, interleaved round-robin
+    /// across the four per-class queues.
+    fn class_tasks<'a>(&'a self, part: &'a RowPartition) -> Vec<(&'a dyn GemmCore, &'a [usize])> {
+        let classes: [(&dyn GemmCore, &[usize]); 4] = [
+            (&self.pot4, &part.pot4),
             (&self.fixed4, &part.fixed4),
             (&self.fixed8, &part.fixed8),
             (&self.apot4, &part.apot4),
-        ] {
-            for &r in rows {
-                col.iter_mut().for_each(|v| *v = 0.0);
-                core.run_row(acts, w, r, &mut col);
-                for b in 0..acts.rows {
-                    out.set(b, r, col[b]);
+        ];
+        let chunk = self.cfg.min_rows_per_task.max(1);
+        let mut tasks = Vec::new();
+        let mut offset = [0usize; 4];
+        loop {
+            let mut pushed = false;
+            for (i, (core, rows)) in classes.iter().enumerate() {
+                let o = offset[i];
+                if o < rows.len() {
+                    let end = rows.len().min(o + chunk);
+                    tasks.push((*core, &rows[o..end]));
+                    offset[i] = end;
+                    pushed = true;
                 }
             }
+            if !pushed {
+                return tasks;
+            }
         }
-        out
+    }
+
+    fn run_tasks(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        tasks: &[(&dyn GemmCore, &[usize])],
+        out: &mut Mat,
+        use_pool: bool,
+    ) {
+        let batch = acts.rows;
+        let out_cols = out.cols;
+        let tile = self.cfg.tile_cols;
+        if !use_pool {
+            let mut col = vec![0.0f32; batch];
+            let mut acc = vec![0i32; batch];
+            for &(core, rows) in tasks {
+                for &r in rows {
+                    col.fill(0.0);
+                    core.run_row_tiled(acts, w, r, tile, &mut acc, &mut col);
+                    for (b, &v) in col.iter().enumerate() {
+                        out.set(b, r, v);
+                    }
+                }
+            }
+            return;
+        }
+        let pool = self.pool.as_ref().expect("use_pool implies a pool");
+        let ptr = SyncOutPtr { p: out.data.as_mut_ptr() };
+        pool.scoped_for(tasks.len(), |ti| {
+            let (core, rows) = tasks[ti];
+            let mut col = vec![0.0f32; batch];
+            let mut acc = vec![0i32; batch];
+            for &r in rows {
+                col.fill(0.0);
+                core.run_row_tiled(acts, w, r, tile, &mut acc, &mut col);
+                for (b, &v) in col.iter().enumerate() {
+                    // SAFETY: row `r` belongs to exactly one task, so no
+                    // other task writes cell (b, r); the scoped_for join
+                    // orders these writes before the caller's reads.
+                    unsafe { *ptr.p.add(b * out_cols + r) = v };
+                }
+            }
+        });
     }
 
     /// Float-path equivalent: fake-quant the operands and matmul. Used by
     /// tests to pin integer == fake-quant and by the runtime comparison
-    /// against the AOT HLO artifact.
-    pub fn run_float(&self, x: &Mat, w: &Mat, schemes: &[Scheme], alpha: &[f32],
-                     act_alpha: f32, act_bits: u32) -> Mat {
+    /// against the AOT reference outputs.
+    pub fn run_float(
+        &self,
+        x: &Mat,
+        w: &Mat,
+        schemes: &[Scheme],
+        alpha: &[f32],
+        act_alpha: f32,
+        act_bits: u32,
+    ) -> Mat {
         let mut xq = x.clone();
         for v in xq.data.iter_mut() {
             *v = crate::quant::act_quant(*v, act_alpha, act_bits);
@@ -153,11 +371,17 @@ mod tests {
     use crate::quant::default_alpha;
     use crate::util::rng::Rng;
 
-    fn rand_problem(rows: usize, cols: usize, batch: usize, seed: u64)
-        -> (Mat, Mat, Vec<Scheme>, Vec<f32>) {
+    fn rand_problem(
+        rows: usize,
+        cols: usize,
+        batch: usize,
+        seed: u64,
+    ) -> (Mat, Mat, Vec<Scheme>, Vec<f32>) {
         let mut rng = Rng::new(seed);
-        let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.2)).collect());
-        let w = Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() * 0.5).collect());
+        let xd: Vec<f32> = (0..batch * cols).map(|_| rng.uniform(0.0, 1.2)).collect();
+        let x = Mat::from_vec(batch, cols, xd);
+        let wd: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 0.5).collect();
+        let w = Mat::from_vec(rows, cols, wd);
         let schemes: Vec<Scheme> = (0..rows)
             .map(|_| match rng.below(4) {
                 0 => Scheme::PotW4A4,
@@ -191,6 +415,64 @@ mod tests {
             [&p.pot4[..], &p.fixed4[..], &p.fixed8[..], &p.apot4[..]].concat();
         all.sort_unstable();
         assert_eq!(all, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn fractions_cover_all_four_classes() {
+        let schemes = vec![
+            Scheme::PotW4A4,
+            Scheme::FixedW4A4,
+            Scheme::FixedW8A4,
+            Scheme::ApotW4A4,
+            Scheme::ApotW4A4,
+            Scheme::ApotW4A4,
+            Scheme::PotW4A4,
+            Scheme::PotW4A4,
+        ];
+        let p = RowPartition::from_schemes(&schemes);
+        let f = p.fractions();
+        assert_eq!(f, [3.0 / 8.0, 1.0 / 8.0, 1.0 / 8.0, 3.0 / 8.0]);
+        // the regression the 3-tuple version had: APoT rows must not make
+        // the fractions sum fall short of 1.
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert_eq!(RowPartition::default().fractions(), [0.0; 4]);
+    }
+
+    #[test]
+    fn parallel_is_bit_exact_vs_sequential() {
+        let (x, w, schemes, alpha) = rand_problem(67, 41, 6, 11);
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let part = RowPartition::from_schemes(&schemes);
+        let cfg = ParallelConfig { threads: 4, tile_cols: 16, min_rows_per_task: 3 };
+        let par = MixedGemm::with_config(cfg);
+        let want = par.run_partitioned_seq(&acts, &pw, &part);
+        for _ in 0..3 {
+            let got = par.run_partitioned(&acts, &pw, &part);
+            assert_eq!(got.data, want.data, "parallel output diverged");
+        }
+    }
+
+    #[test]
+    fn class_tasks_interleave_and_cover() {
+        let schemes = [
+            vec![Scheme::PotW4A4; 10],
+            vec![Scheme::FixedW4A4; 5],
+            vec![Scheme::FixedW8A4; 1],
+        ]
+        .concat();
+        let part = RowPartition::from_schemes(&schemes);
+        let cfg = ParallelConfig { threads: 1, tile_cols: 0, min_rows_per_task: 4 };
+        let g = MixedGemm::with_config(cfg);
+        let tasks = g.class_tasks(&part);
+        // chunks: pot 4+4+2, fixed4 4+1, fixed8 1 — interleaved
+        assert_eq!(tasks.len(), 6);
+        let covered: usize = tasks.iter().map(|(_, rows)| rows.len()).sum();
+        assert_eq!(covered, 16);
+        // round-robin: first three tasks are one chunk per class
+        assert_eq!(tasks[0].0.scheme(), Scheme::PotW4A4);
+        assert_eq!(tasks[1].0.scheme(), Scheme::FixedW4A4);
+        assert_eq!(tasks[2].0.scheme(), Scheme::FixedW8A4);
     }
 
     #[test]

@@ -7,11 +7,13 @@
 //!   a MAC is `acc += sign * (a << shift_adjust)`.
 //! * [`mixed`] — the row-partitioned mixed GEMM: rows are grouped by
 //!   scheme class and dispatched to their core, exactly like the FPGA
-//!   routes filter classes to PE arrays.
+//!   routes filter classes to PE arrays. Dispatch is multi-threaded and
+//!   cache-blocked (see [`ParallelConfig`]), bit-exact vs the sequential
+//!   path.
 //!
 //! All cores operate on *quantized codes* plus per-row scales, and their
 //! float results are bit-identical to fake-quant matmuls over the same
-//! data (see `rust/tests/test_gemm_vs_fake.rs`), which is the property
+//! data (see the gemm-consistency property tests), which is the property
 //! that makes "simulated quantized inference" equal to "integer hardware
 //! inference".
 
@@ -21,6 +23,6 @@ pub mod nibble;
 pub mod packed;
 
 pub use cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
-pub use mixed::{MixedGemm, RowPartition};
+pub use mixed::{MixedGemm, ParallelConfig, RowPartition};
 pub use nibble::NibblePacked;
 pub use packed::{PackedActs, PackedWeights};

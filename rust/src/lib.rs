@@ -16,18 +16,54 @@
 //! * [`assign`] — the row-wise scheme/precision assignment engine
 //!   (variance split + sensitivity top-K, Alg. 1).
 //! * [`gemm`] — integer GEMM cores: `GemmFixed4`, `GemmFixed8` (i8 MAC)
-//!   and `GemmPoT4` (shift-add), plus the row-partitioned mixed GEMM.
+//!   and `GemmPoT4` (shift-add), plus the row-partitioned mixed GEMM with
+//!   tile-blocked inner loops and multi-threaded row dispatch.
 //! * [`model`] — the layer-graph representation loaded from the AOT
 //!   manifest, im2col, and the integer layer-by-layer executor.
 //! * [`fpga`] — the FPGA resource/cycle simulator that reproduces Table 6
 //!   (Zynq XC7Z020 / XC7Z045 presets).
-//! * [`runtime`] — PJRT wrapper: loads `artifacts/*.hlo.txt`, compiles on
-//!   the CPU client, executes the float reference paths.
+//! * [`runtime`] — the native execution runtime: resolves the
+//!   [`gemm::ParallelConfig`] and owns the shared thread pool that every
+//!   executor fans GEMM work onto.
 //! * [`coordinator`] — the serving layer: request router, dynamic batcher,
 //!   worker pool, metrics.
 //! * [`util`] — substrates built in-repo because the build is offline:
-//!   deterministic PRNG, CLI parsing, JSON, stats, a thread pool, and the
-//!   bench/property-test harnesses.
+//!   deterministic PRNG, CLI parsing, JSON, stats, a thread pool, error
+//!   plumbing, and the bench/property-test harnesses.
+//!
+//! ## Parallel execution model
+//!
+//! The hot path is the row-partitioned mixed GEMM, and its unit of work
+//! is one weight row: every output cell `(batch, row)` is produced by
+//! exactly one row's dot products, so rows parallelize with no shared
+//! accumulation.
+//!
+//! * **Task granularity** — each scheme class's row list is split into
+//!   chunks of `ParallelConfig::min_rows_per_task` rows. Chunks are
+//!   interleaved round-robin across the four per-class queues so cheap
+//!   PoT shift-add chunks and expensive Fixed-8 MAC chunks alternate in
+//!   the task list instead of convoying per class.
+//! * **Scheduling** — tasks drain through
+//!   [`util::pool::ThreadPool::scoped_for`]: workers (plus the calling
+//!   thread) pull the next task index from a shared atomic cursor, which
+//!   self-balances heterogeneous task costs. The call joins before
+//!   returning, so borrowed operands stay valid and all writes are
+//!   published to the caller.
+//! * **Cache blocking** — inner loops are tiled at
+//!   `ParallelConfig::tile_cols` codes so one weight-row tile stays in L1
+//!   while it sweeps the batch; per-cell accumulation is a single i32
+//!   that survives across tiles, and the dequantizing multiply happens
+//!   once per output cell.
+//! * **Determinism** — per-row arithmetic is identical in the sequential
+//!   and parallel paths, tasks write disjoint output cells, and i32
+//!   accumulation is associative, so parallel output is bit-exact vs
+//!   sequential for every thread count, task size, and (for the three
+//!   RMSMP classes) tile size. The f32-accumulating APoT baseline core is
+//!   bit-exact for a fixed `tile_cols`, which the config pins.
+//! * **Batch vs row parallelism** — a coordinator worker keeps the GEMM
+//!   sequential only when its sibling workers already saturate the pool
+//!   and its batch is wide; otherwise the threads go inside the GEMM
+//!   (row-level); see `coordinator::batcher::row_parallel_for_batch`.
 
 pub mod assign;
 pub mod coordinator;
@@ -38,4 +74,6 @@ pub mod quant;
 pub mod runtime;
 pub mod util;
 
+pub use gemm::ParallelConfig;
 pub use quant::scheme::Scheme;
+pub use util::error::{Error, Result};

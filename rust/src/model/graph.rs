@@ -5,17 +5,27 @@
 //! execution. Every conv/linear quantizes its input activations (A4) and
 //! dispatches row classes to the scheme cores; adds/GAP/ReLU run in float
 //! (they are elementwise / accumulation stages on the hardware too).
+//!
+//! The executor owns one [`MixedGemm`]; when built via
+//! [`Executor::with_parallel`] the GEMM fans row chunks out over a thread
+//! pool (optionally shared with other executors — the coordinator gives
+//! every worker the same pool). `set_row_parallel` lets the coordinator
+//! toggle row-level parallelism per batch without rebuilding anything.
 
 use std::collections::HashMap;
+use std::sync::Arc;
 
-use anyhow::{anyhow, Result};
+use crate::ensure;
+use crate::err;
+use crate::gemm::{MixedGemm, PackedActs, ParallelConfig, RowPartition};
+use crate::quant::tensor::Tensor4;
+use crate::quant::Mat;
+use crate::util::error::Result;
+use crate::util::pool::ThreadPool;
 
 use super::im2col::{col2im, im2col, im2col_group};
 use super::manifest::{Manifest, OpMeta};
 use super::weights::{LayerWeights, ModelWeights};
-use crate::gemm::{MixedGemm, PackedActs, RowPartition};
-use crate::quant::tensor::Tensor4;
-use crate::quant::Mat;
 
 /// Re-export for the coordinator's type surface.
 pub type Op = OpMeta;
@@ -31,14 +41,14 @@ impl Buf {
     fn t4(&self) -> Result<&Tensor4> {
         match self {
             Buf::T4(t) => Ok(t),
-            Buf::M(_) => Err(anyhow!("expected 4-D buffer")),
+            Buf::M(_) => Err(err!("expected 4-D buffer")),
         }
     }
 
     fn mat(&self) -> Result<&Mat> {
         match self {
             Buf::M(m) => Ok(m),
-            Buf::T4(_) => Err(anyhow!("expected 2-D buffer")),
+            Buf::T4(_) => Err(err!("expected 2-D buffer")),
         }
     }
 }
@@ -54,12 +64,26 @@ pub struct Executor {
     pub weights: ModelWeights,
     gemm: MixedGemm,
     cache: HashMap<String, LayerExec>,
+    row_parallel: bool,
     /// MACs executed since construction (for GOP accounting).
     pub macs: u64,
 }
 
 impl Executor {
+    /// Sequential executor (the seed's behaviour).
     pub fn new(manifest: Manifest, weights: ModelWeights) -> Result<Executor> {
+        Executor::with_parallel(manifest, weights, ParallelConfig::sequential(), None)
+    }
+
+    /// Executor with a parallel mixed GEMM. Pass a pool to share threads
+    /// with other executors, or `None` to let the GEMM own one (when the
+    /// config resolves to more than one thread).
+    pub fn with_parallel(
+        manifest: Manifest,
+        weights: ModelWeights,
+        cfg: ParallelConfig,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Executor> {
         // validate: every program layer exists in both tables
         for op in &manifest.program {
             if let OpMeta::Conv { layer, .. } | OpMeta::Linear { layer, .. } = op {
@@ -77,7 +101,24 @@ impl Executor {
                 )
             })
             .collect();
-        Ok(Executor { manifest, weights, gemm: MixedGemm::new(), cache, macs: 0 })
+        let gemm = match pool {
+            Some(p) => MixedGemm::with_shared_pool(cfg, p),
+            None => MixedGemm::with_config(cfg),
+        };
+        let row_parallel = gemm.is_parallel();
+        Ok(Executor { manifest, weights, gemm, cache, row_parallel, macs: 0 })
+    }
+
+    /// Toggle row-level GEMM parallelism for subsequent `infer` calls.
+    /// No-op when the executor has no pool. The coordinator turns this
+    /// off for batches wide enough to fill the machine by themselves.
+    pub fn set_row_parallel(&mut self, on: bool) {
+        self.row_parallel = on && self.gemm.is_parallel();
+    }
+
+    /// Whether the next `infer` will use row-level parallelism.
+    pub fn row_parallel(&self) -> bool {
+        self.row_parallel
     }
 
     /// Run one batch (NCHW input) through the program; returns logits
@@ -91,7 +132,7 @@ impl Executor {
                 OpMeta::Conv { layer, input, out, relu } => {
                     let t = bufs
                         .get(input)
-                        .ok_or_else(|| anyhow!("missing buffer {input}"))?
+                        .ok_or_else(|| err!("missing buffer {input}"))?
                         .t4()?;
                     let y = self.conv(layer, t, *relu)?;
                     bufs.insert(out.clone(), Buf::T4(y));
@@ -99,18 +140,15 @@ impl Executor {
                 OpMeta::Linear { layer, input, out } => {
                     let m = bufs
                         .get(input)
-                        .ok_or_else(|| anyhow!("missing buffer {input}"))?
+                        .ok_or_else(|| err!("missing buffer {input}"))?
                         .mat()?;
                     let y = self.linear(layer, m)?;
                     bufs.insert(out.clone(), Buf::M(y));
                 }
                 OpMeta::Add { a, b, out, relu } => {
-                    let ta = bufs.get(a).ok_or_else(|| anyhow!("missing {a}"))?.t4()?;
-                    let tb = bufs.get(b).ok_or_else(|| anyhow!("missing {b}"))?.t4()?;
-                    anyhow::ensure!(
-                        ta.data.len() == tb.data.len(),
-                        "add shape mismatch {a} {b}"
-                    );
+                    let ta = bufs.get(a).ok_or_else(|| err!("missing {a}"))?.t4()?;
+                    let tb = bufs.get(b).ok_or_else(|| err!("missing {b}"))?.t4()?;
+                    ensure!(ta.data.len() == tb.data.len(), "add shape mismatch {a} {b}");
                     let mut t = ta.clone();
                     for (v, w) in t.data.iter_mut().zip(&tb.data) {
                         *v += w;
@@ -121,7 +159,7 @@ impl Executor {
                     bufs.insert(out.clone(), Buf::T4(t));
                 }
                 OpMeta::Gap { input, out } => {
-                    let t = bufs.get(input).ok_or_else(|| anyhow!("missing {input}"))?.t4()?;
+                    let t = bufs.get(input).ok_or_else(|| err!("missing {input}"))?.t4()?;
                     let mut m = Mat::zeros(t.n, t.c);
                     let hw = (t.h * t.w) as f32;
                     for n in 0..t.n {
@@ -141,8 +179,12 @@ impl Executor {
         }
         match bufs.remove("logits") {
             Some(Buf::M(m)) => Ok(m),
-            _ => Err(anyhow!("program produced no 'logits' matrix")),
+            _ => Err(err!("program produced no 'logits' matrix")),
         }
+    }
+
+    fn run_gemm(&self, acts: &PackedActs, lw: &LayerWeights, part: &RowPartition) -> Mat {
+        self.gemm.run_partitioned_with(acts, &lw.packed, part, self.row_parallel)
     }
 
     fn conv(&mut self, name: &str, x: &Tensor4, relu: bool) -> Result<Tensor4> {
@@ -156,7 +198,7 @@ impl Executor {
             let (patches, oh, ow) = im2col(x, k, lw.stride, lw.pad);
             let acts = PackedActs::quantize(&patches, lw.a_alpha, self.manifest.act_bits);
             self.macs += (patches.rows * lw.rows * lw.cols) as u64;
-            (self.gemm.run_partitioned(&acts, &lw.packed, part), oh, ow)
+            (self.run_gemm(&acts, lw, part), oh, ow)
         } else {
             // grouped conv: run each group's filters over its channel slice.
             let ch_per_group = x.c / groups;
@@ -170,10 +212,12 @@ impl Executor {
                 let acts = PackedActs::quantize(&patches, lw.a_alpha, self.manifest.act_bits);
                 let y_all = y.get_or_insert_with(|| Mat::zeros(patches.rows, out_ch));
                 // rows of this group's filters in the global weight matrix
+                let mut col = vec![0.0f32; acts.rows];
+                let mut acc = vec![0i32; acts.rows];
                 for fi in 0..filt_per_group {
                     let r = g * filt_per_group + fi;
-                    let mut col = vec![0.0f32; acts.rows];
-                    self.gemm.run_partitioned_row(&acts, &lw.packed, r, &mut col);
+                    col.fill(0.0);
+                    self.gemm.run_row_into(&acts, &lw.packed, r, &mut acc, &mut col);
                     for bidx in 0..acts.rows {
                         y_all.set(bidx, r, col[bidx]);
                     }
@@ -201,7 +245,7 @@ impl Executor {
         let part = &self.cache[name].part;
         let acts = PackedActs::quantize(x, lw.a_alpha, self.manifest.act_bits);
         self.macs += (x.rows * lw.rows * lw.cols) as u64;
-        let mut y = self.gemm.run_partitioned(&acts, &lw.packed, part);
+        let mut y = self.run_gemm(&acts, lw, part);
         for r in 0..y.rows {
             let row = y.row_mut(r);
             for (c, v) in row.iter_mut().enumerate() {
@@ -209,27 +253,5 @@ impl Executor {
             }
         }
         Ok(y)
-    }
-}
-
-impl MixedGemm {
-    /// Single-row dispatch used by the grouped-conv path.
-    pub fn run_partitioned_row(
-        &self,
-        acts: &PackedActs,
-        w: &crate::gemm::PackedWeights,
-        r: usize,
-        out: &mut [f32],
-    ) {
-        use crate::gemm::cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
-        use crate::quant::Scheme;
-        match w.scheme[r] {
-            Scheme::PotW4A4 => GemmPoT4.run_row(acts, w, r, out),
-            Scheme::FixedW4A4 => GemmFixed4.run_row(acts, w, r, out),
-            Scheme::FixedW8A4 => GemmFixed8.run_row(acts, w, r, out),
-            Scheme::ApotW4A4 => {
-                crate::gemm::cores::GemmApot4::default().run_row(acts, w, r, out)
-            }
-        }
     }
 }

@@ -117,8 +117,15 @@ pub fn col2im(y: &Mat, n: usize, out_ch: usize, oh: usize, ow: usize) -> Tensor4
 }
 
 /// Reference float conv (oracle for the GEMM path).
-pub fn conv_ref(x: &Tensor4, w: &[f32], out_ch: usize, in_ch: usize, k: usize,
-                stride: usize, pad: usize) -> Tensor4 {
+pub fn conv_ref(
+    x: &Tensor4,
+    w: &[f32],
+    out_ch: usize,
+    in_ch: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+) -> Tensor4 {
     assert_eq!(w.len(), out_ch * in_ch * k * k);
     let oh = out_dim(x.h, k, stride, pad);
     let ow = out_dim(x.w, k, stride, pad);

@@ -2,10 +2,11 @@
 
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::err;
 use crate::fpga::LayerShape;
 use crate::quant::Ratio;
+use crate::util::error::{Context, Result};
 use crate::util::json::Json;
 
 /// One layer's static description.
@@ -133,7 +134,7 @@ impl Manifest {
         self.layers
             .iter()
             .find(|l| l.name == name)
-            .ok_or_else(|| anyhow::anyhow!("layer {name:?} not in manifest"))
+            .ok_or_else(|| err!("layer {name:?} not in manifest"))
     }
 
     /// Layer shapes for the FPGA simulator, with output spatial positions

@@ -3,10 +3,11 @@
 use std::io::Read;
 use std::path::Path;
 
-use anyhow::{bail, Context, Result};
-
+use crate::bail;
+use crate::err;
 use crate::gemm::PackedWeights;
 use crate::quant::{Mat, Scheme};
+use crate::util::error::{Context, Result};
 
 /// One folded layer: float weights + quantization metadata + packed codes.
 #[derive(Clone, Debug)]
@@ -113,7 +114,7 @@ impl ModelWeights {
             let scheme_raw = c.take(rows)?;
             let scheme: Vec<Scheme> = scheme_raw
                 .iter()
-                .map(|&b| Scheme::from_code(b).ok_or_else(|| anyhow::anyhow!("bad scheme {b}")))
+                .map(|&b| Scheme::from_code(b).ok_or_else(|| err!("bad scheme {b}")))
                 .collect::<Result<_>>()?;
             let alpha = c.f32_vec(rows)?;
             let bias = c.f32_vec(rows)?;
@@ -149,7 +150,7 @@ impl ModelWeights {
         self.layers
             .iter()
             .find(|l| l.name == name)
-            .ok_or_else(|| anyhow::anyhow!("layer {name:?} not in weights.bin"))
+            .ok_or_else(|| err!("layer {name:?} not in weights.bin"))
     }
 
     /// Total quantized model size in bytes (the compression headline).

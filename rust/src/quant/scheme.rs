@@ -108,14 +108,14 @@ impl Ratio {
     }
 
     /// Parse `"65:30:5"`.
-    pub fn parse(s: &str) -> anyhow::Result<Ratio> {
+    pub fn parse(s: &str) -> crate::util::error::Result<Ratio> {
         let parts: Vec<u32> = s
             .split(':')
             .map(|p| p.trim().parse::<u32>())
             .collect::<Result<_, _>>()
-            .map_err(|e| anyhow::anyhow!("bad ratio {s:?}: {e}"))?;
-        anyhow::ensure!(parts.len() == 3, "ratio needs 3 parts, got {s:?}");
-        anyhow::ensure!(parts.iter().sum::<u32>() == 100, "ratio must sum to 100");
+            .map_err(|e| crate::err!("bad ratio {s:?}: {e}"))?;
+        crate::ensure!(parts.len() == 3, "ratio needs 3 parts, got {s:?}");
+        crate::ensure!(parts.iter().sum::<u32>() == 100, "ratio must sum to 100");
         Ok(Ratio::new(parts[0], parts[1], parts[2]))
     }
 }

@@ -1,122 +1,65 @@
-//! PJRT runtime: load AOT HLO-text artifacts and execute them on the CPU
-//! client (the float reference path next to the integer executor).
+//! Native execution runtime: the parallel substrate shared by everything
+//! that runs inference.
 //!
-//! Wraps the `xla` crate: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `compile` → `execute`, with an
-//! executable cache keyed by artifact path. HLO *text* is the interchange
-//! format (jax ≥ 0.5 emits 64-bit instruction ids that xla_extension 0.5.1
-//! rejects; the text parser reassigns ids — see /opt/xla-example/README.md).
+//! Owns the resolved [`ParallelConfig`] and (when it resolves to more
+//! than one thread) the process-wide [`ThreadPool`] that the parallel
+//! mixed GEMM fans row chunks out onto. The CLI and the serving
+//! coordinator both build their executors through [`Runtime::executor`],
+//! so one pool serves every model instance instead of each spawning its
+//! own threads.
+//!
+//! Historical note: this module used to wrap PJRT via the external `xla`
+//! crate to execute AOT HLO artifacts. The build is offline and
+//! zero-dependency, so the float-reference parity against the HLO
+//! artifacts now lives on the Python side (`python -m compile.aot`);
+//! `rmsmp parity` checks the integer executor against the recorded JAX
+//! logits directly.
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::Mutex;
+use std::path::PathBuf;
+use std::sync::Arc;
 
-use anyhow::{Context, Result};
+use crate::gemm::ParallelConfig;
+use crate::model::{Executor, Manifest, ModelWeights};
+use crate::util::error::Result;
+use crate::util::pool::ThreadPool;
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    exe: xla::PjRtLoadedExecutable,
-    pub path: PathBuf,
-}
-
-/// The PJRT CPU runtime with a compile cache.
+/// Process-wide execution context: config + shared thread pool.
 pub struct Runtime {
-    client: xla::PjRtClient,
-    cache: Mutex<HashMap<PathBuf, usize>>,
-    executables: Mutex<Vec<std::sync::Arc<Executable>>>,
+    cfg: ParallelConfig,
+    pool: Option<Arc<ThreadPool>>,
 }
 
 impl Runtime {
-    pub fn cpu() -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            cache: Mutex::new(HashMap::new()),
-            executables: Mutex::new(Vec::new()),
-        })
+    /// Build a runtime; spawns a pool when `cfg` resolves to >1 thread.
+    pub fn new(cfg: ParallelConfig) -> Runtime {
+        let threads = cfg.resolved_threads();
+        let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+        Runtime { cfg, pool }
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// Single-threaded runtime (the seed's behaviour).
+    pub fn sequential() -> Runtime {
+        Runtime::new(ParallelConfig::sequential())
     }
 
-    pub fn device_count(&self) -> usize {
-        self.client.device_count()
+    pub fn config(&self) -> ParallelConfig {
+        self.cfg
     }
 
-    /// Load + compile an HLO text artifact (cached by path).
-    pub fn load(&self, path: &Path) -> Result<std::sync::Arc<Executable>> {
-        {
-            let cache = self.cache.lock().unwrap();
-            if let Some(&i) = cache.get(path) {
-                return Ok(std::sync::Arc::clone(&self.executables.lock().unwrap()[i]));
-            }
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().context("artifact path not utf-8")?,
-        )
-        .with_context(|| format!("parsing HLO text {}", path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling {}", path.display()))?;
-        let arc = std::sync::Arc::new(Executable { exe, path: path.to_path_buf() });
-        let mut exes = self.executables.lock().unwrap();
-        exes.push(std::sync::Arc::clone(&arc));
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(path.to_path_buf(), exes.len() - 1);
-        Ok(arc)
-    }
-}
-
-impl Executable {
-    /// Execute with f32 inputs of the given shapes; returns the flat f32
-    /// outputs of the (single-tuple) result.
-    pub fn run_f32(&self, inputs: &[(&[f32], &[usize])]) -> Result<Vec<f32>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for (data, shape) in inputs {
-            let lit = xla::Literal::vec1(data);
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            literals.push(lit.reshape(&dims).context("reshaping input literal")?);
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        // jax lowering uses return_tuple=True -> 1-tuple
-        let out = result.to_tuple1().context("unwrapping result tuple")?;
-        out.to_vec::<f32>().context("reading f32 output")
+    /// Worker threads backing the GEMM (1 = sequential).
+    pub fn threads(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.threads())
     }
 
-    /// Execute with mixed f32/i32 inputs (the standalone GEMM artifact
-    /// takes an i32 scheme vector).
-    pub fn run_mixed(&self, inputs: &[ArtifactInput<'_>]) -> Result<Vec<f32>> {
-        let mut literals = Vec::with_capacity(inputs.len());
-        for inp in inputs {
-            let lit = match inp {
-                ArtifactInput::F32(data, shape) => {
-                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(data).reshape(&dims)?
-                }
-                ArtifactInput::I32(data, shape) => {
-                    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-                    xla::Literal::vec1(data).reshape(&dims)?
-                }
-            };
-            literals.push(lit);
-        }
-        let result = self.exe.execute::<xla::Literal>(&literals)?[0][0]
-            .to_literal_sync()?;
-        let out = result.to_tuple1()?;
-        out.to_vec::<f32>().context("reading f32 output")
+    /// Handle to the shared pool, if any.
+    pub fn pool(&self) -> Option<Arc<ThreadPool>> {
+        self.pool.clone()
     }
-}
 
-/// Typed input for [`Executable::run_mixed`].
-pub enum ArtifactInput<'a> {
-    F32(&'a [f32], &'a [usize]),
-    I32(&'a [i32], &'a [usize]),
+    /// Build an integer executor wired to this runtime's pool + config.
+    pub fn executor(&self, manifest: Manifest, weights: ModelWeights) -> Result<Executor> {
+        Executor::with_parallel(manifest, weights, self.cfg, self.pool())
+    }
 }
 
 /// Locate the artifacts directory: $RMSMP_ARTIFACTS or ./artifacts.
@@ -124,4 +67,33 @@ pub fn artifacts_dir() -> PathBuf {
     std::env::var("RMSMP_ARTIFACTS")
         .map(PathBuf::from)
         .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sequential_runtime_has_no_pool() {
+        let rt = Runtime::sequential();
+        assert_eq!(rt.threads(), 1);
+        assert!(rt.pool().is_none());
+    }
+
+    #[test]
+    fn explicit_thread_count_spawns_pool() {
+        let rt = Runtime::new(ParallelConfig { threads: 3, ..ParallelConfig::default() });
+        assert_eq!(rt.threads(), 3);
+        assert!(rt.pool().is_some());
+        // shared handles point at the same pool
+        let a = rt.pool().unwrap();
+        let b = rt.pool().unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn auto_threads_resolve_to_at_least_one() {
+        let cfg = ParallelConfig::default();
+        assert!(cfg.resolved_threads() >= 1);
+    }
 }

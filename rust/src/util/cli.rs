@@ -5,7 +5,9 @@
 
 use std::collections::BTreeMap;
 
-use anyhow::{bail, Result};
+use crate::bail;
+use crate::err;
+use crate::util::error::Result;
 
 /// Declarative flag spec for help text.
 #[derive(Clone, Debug)]
@@ -49,7 +51,7 @@ impl Args {
                             Some(v) => v,
                             None => it
                                 .next()
-                                .ok_or_else(|| anyhow::anyhow!("--{name} needs a value"))?,
+                                .ok_or_else(|| err!("--{name} needs a value"))?,
                         };
                         out.flags.insert(name, v);
                     }
@@ -72,18 +74,14 @@ impl Args {
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+            Some(v) => v.parse().map_err(|e| err!("--{name}={v}: {e}")),
         }
     }
 
     pub fn get_f64(&self, name: &str, default: f64) -> Result<f64> {
         match self.get(name) {
             None => Ok(default),
-            Some(v) => v
-                .parse()
-                .map_err(|e| anyhow::anyhow!("--{name}={v}: {e}")),
+            Some(v) => v.parse().map_err(|e| err!("--{name}={v}: {e}")),
         }
     }
 

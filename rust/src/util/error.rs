@@ -1,0 +1,157 @@
+//! Minimal error type + context plumbing (offline build — no `anyhow`).
+//!
+//! The crate is zero-dependency, so the ergonomic error surface the code
+//! was written against (`err!`, `bail!`, `ensure!`, `.context(..)`) is
+//! provided here: a single string-backed [`Error`], a [`Result`] alias
+//! with a defaulted error parameter, and a [`Context`] extension trait
+//! for both `Result` and `Option`.
+
+use std::fmt;
+
+/// String-backed error. Context wraps are joined as `outer: inner`.
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    /// Build an error from anything displayable.
+    pub fn msg(m: impl Into<String>) -> Error {
+        Error { msg: m.into() }
+    }
+
+    /// Wrap with an outer context message.
+    pub fn context(self, outer: impl fmt::Display) -> Error {
+        Error { msg: format!("{outer}: {}", self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Debug mirrors Display so `fn main() -> Result<()>` prints readable
+// messages through the `Termination` impl.
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+// Like `anyhow::Error`, `Error` deliberately does NOT implement
+// `std::error::Error`: that keeps this blanket conversion coherent
+// (no overlap with the reflexive `From<Error> for Error`).
+impl<E: std::error::Error> From<E> for Error {
+    fn from(e: E) -> Error {
+        Error { msg: e.to_string() }
+    }
+}
+
+/// Crate-wide result alias; the error parameter defaults to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Attach context to failures, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error with a fixed message.
+    fn context(self, msg: impl fmt::Display) -> Result<T>;
+
+    /// Wrap the error with a lazily-built message.
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> Context<T> for Result<T, E> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{msg}: {e}")))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f())))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl fmt::Display) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg.to_string()))
+    }
+
+    fn with_context<C: fmt::Display>(self, f: impl FnOnce() -> C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f().to_string()))
+    }
+}
+
+/// Build an [`Error`] from a format string: `err!("bad layer {name}")`.
+#[macro_export]
+macro_rules! err {
+    ($($arg:tt)*) => {
+        $crate::util::error::Error::msg(format!($($arg)*))
+    };
+}
+
+/// Return early with a formatted [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::err!($($arg)*))
+    };
+}
+
+/// Return early with an error unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !($cond) {
+            $crate::bail!($($arg)*);
+        }
+    };
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            $crate::bail!("condition failed: {}", stringify!($cond));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<u32> {
+        bail!("boom {}", 7);
+    }
+
+    #[test]
+    fn macros_build_messages() {
+        assert_eq!(fails().unwrap_err().to_string(), "boom 7");
+        let e: Error = err!("x = {}", 1);
+        assert_eq!(e.to_string(), "x = 1");
+    }
+
+    #[test]
+    fn ensure_passes_and_fails() {
+        fn check(n: u32) -> Result<u32> {
+            ensure!(n < 10, "n too big: {n}");
+            Ok(n)
+        }
+        assert_eq!(check(3).unwrap(), 3);
+        assert_eq!(check(30).unwrap_err().to_string(), "n too big: 30");
+    }
+
+    #[test]
+    fn context_wraps_results_and_options() {
+        let r: Result<(), std::num::ParseIntError> = "x".parse::<i32>().map(|_| ());
+        let e = r.context("parsing flag").unwrap_err();
+        assert!(e.to_string().starts_with("parsing flag: "), "{e}");
+
+        let o: Option<u32> = None;
+        let e = o.with_context(|| format!("missing {}", "key")).unwrap_err();
+        assert_eq!(e.to_string(), "missing key");
+    }
+
+    #[test]
+    fn from_std_errors() {
+        fn io_fail() -> Result<String> {
+            Ok(std::fs::read_to_string("/definitely/not/a/path")?)
+        }
+        assert!(io_fail().is_err());
+    }
+}

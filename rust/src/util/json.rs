@@ -8,7 +8,9 @@
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
 
-use anyhow::{anyhow, bail, Context, Result};
+use crate::bail;
+use crate::err;
+use crate::util::error::{Context, Result};
 
 /// A parsed JSON value.
 #[derive(Clone, Debug, PartialEq)]
@@ -36,7 +38,7 @@ impl Json {
     // ---- typed accessors -------------------------------------------------
     pub fn get(&self, key: &str) -> Result<&Json> {
         match self {
-            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            Json::Obj(m) => m.get(key).ok_or_else(|| err!("missing key {key:?}")),
             _ => bail!("not an object (looking up {key:?})"),
         }
     }
@@ -188,13 +190,17 @@ impl<'a> Parser<'a> {
         self.b
             .get(self.i)
             .copied()
-            .ok_or_else(|| anyhow!("unexpected end of input"))
+            .ok_or_else(|| err!("unexpected end of input"))
     }
 
     fn eat(&mut self, c: u8) -> Result<()> {
         if self.peek()? != c {
-            bail!("expected {:?} at byte {}, found {:?}",
-                  c as char, self.i, self.peek()? as char);
+            bail!(
+                "expected {:?} at byte {}, found {:?}",
+                c as char,
+                self.i,
+                self.peek()? as char
+            );
         }
         self.i += 1;
         Ok(())

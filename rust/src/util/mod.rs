@@ -8,13 +8,18 @@
 //! * [`cli`] — flag parsing for the `rmsmp` binary (no `clap`).
 //! * [`stats`] — streaming mean/percentile accumulators for metrics.
 //! * [`bench`] — the measurement harness behind `cargo bench`
-//!   (no `criterion`): warmup, adaptive iteration, median/MAD reporting.
+//!   (no `criterion`): warmup, adaptive iteration, median/MAD reporting,
+//!   JSON emission for the CI bench-regression artifacts.
 //! * [`prop`] — a property-testing mini-framework (no `proptest`):
 //!   seeded generators + failure-case reporting.
-//! * [`pool`] — a fixed-size thread pool for the coordinator workers.
+//! * [`pool`] — a fixed-size thread pool for the coordinator workers and
+//!   the scoped parallel-for that drives the parallel mixed GEMM.
+//! * [`error`] — string-backed error type + `err!`/`bail!`/`ensure!`
+//!   macros and a `Context` trait (no `anyhow`).
 
 pub mod bench;
 pub mod cli;
+pub mod error;
 pub mod json;
 pub mod pool;
 pub mod prop;

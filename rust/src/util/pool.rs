@@ -1,11 +1,26 @@
-//! Fixed-size thread pool (offline build — no tokio/rayon).
+//! Fixed-size thread pool + scoped parallel-for (offline build — no
+//! tokio/rayon).
 //!
-//! The coordinator's worker threads and the batch executor run on this.
-//! Jobs are boxed closures over an MPMC channel built from
-//! `Mutex<VecDeque>` + `Condvar`; shutdown drains gracefully.
+//! Two layers:
+//!
+//! * [`ThreadPool::execute`] / [`ThreadPool::scoped`] — boxed `'static`
+//!   jobs over an MPMC channel built from `Mutex<VecDeque>` + `Condvar`;
+//!   the coordinator's worker threads run on this. Shutdown drains
+//!   gracefully.
+//! * [`ThreadPool::scoped_for`] / [`ThreadPool::parallel_chunks`] — a
+//!   scoped parallel-for over an index space for *borrowed* closures (the
+//!   parallel mixed GEMM's substrate). Tasks are pulled from a shared
+//!   atomic cursor, so fast workers steal the remaining tail from slow
+//!   ones instead of convoying on a static split; the calling thread
+//!   participates in the drain, and the call does not return until every
+//!   enqueued helper has finished (which is what makes the borrow sound).
+//!
+//! `scoped_for` must not be called from inside a pool job: a job that
+//! blocks on the pool it runs on can deadlock once all workers block.
 
 use std::collections::VecDeque;
-use std::sync::atomic::{AtomicBool, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
@@ -75,6 +90,93 @@ impl ThreadPool {
         while *g < n {
             g = cv.wait(g).unwrap();
         }
+    }
+
+    /// Scoped parallel-for: run `f(i)` for every `i in 0..n_tasks`, with
+    /// dynamic load balancing over the pool's workers plus the calling
+    /// thread. `f` may borrow from the caller's stack — the call blocks
+    /// until every task (and every helper job) has finished. Panics in
+    /// tasks are captured and re-raised here after the join.
+    pub fn scoped_for<F>(&self, n_tasks: usize, f: F)
+    where
+        F: Fn(usize) + Sync,
+    {
+        if n_tasks == 0 {
+            return;
+        }
+
+        struct Ctx<'a, F> {
+            f: &'a F,
+            next: AtomicUsize,
+            n: usize,
+            panicked: AtomicBool,
+        }
+
+        fn drain<F: Fn(usize) + Sync>(ctx: &Ctx<'_, F>) {
+            loop {
+                let i = ctx.next.fetch_add(1, Ordering::Relaxed);
+                if i >= ctx.n {
+                    return;
+                }
+                if catch_unwind(AssertUnwindSafe(|| (ctx.f)(i))).is_err() {
+                    ctx.panicked.store(true, Ordering::SeqCst);
+                }
+            }
+        }
+
+        let ctx = Ctx {
+            f: &f,
+            next: AtomicUsize::new(0),
+            n: n_tasks,
+            panicked: AtomicBool::new(false),
+        };
+
+        // The caller drains too, so tasks complete even on a busy pool;
+        // n_tasks - 1 helpers is therefore always enough.
+        let helpers = self.threads().min(n_tasks - 1);
+        let task: &(dyn Fn() + Sync) = &|| drain(&ctx);
+        // SAFETY: the join barrier below keeps `task` (and everything it
+        // borrows) alive until every helper job has returned.
+        let task = unsafe {
+            std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(task)
+        };
+        let done = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for _ in 0..helpers {
+            let done = Arc::clone(&done);
+            self.execute(move || {
+                task();
+                let (lock, cv) = &*done;
+                *lock.lock().unwrap() += 1;
+                cv.notify_all();
+            });
+        }
+
+        drain(&ctx);
+
+        let (lock, cv) = &*done;
+        let mut g = lock.lock().unwrap();
+        while *g < helpers {
+            g = cv.wait(g).unwrap();
+        }
+        drop(g);
+
+        if ctx.panicked.load(Ordering::SeqCst) {
+            panic!("ThreadPool::scoped_for: a task panicked");
+        }
+    }
+
+    /// Chunked parallel-for over `0..total`: `f` receives half-open index
+    /// ranges of at most `chunk` elements. Built on [`Self::scoped_for`],
+    /// so the same borrow/join rules apply.
+    pub fn parallel_chunks<F>(&self, total: usize, chunk: usize, f: F)
+    where
+        F: Fn(std::ops::Range<usize>) + Sync,
+    {
+        let chunk = chunk.max(1);
+        self.scoped_for(total.div_ceil(chunk), |i| {
+            let start = i * chunk;
+            f(start..total.min(start + chunk));
+        });
     }
 }
 
@@ -156,5 +258,75 @@ mod tests {
             c2.fetch_add(7, Ordering::SeqCst);
         }]);
         assert_eq!(c.load(Ordering::SeqCst), 7);
+    }
+
+    #[test]
+    fn scoped_for_visits_every_index_once() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..257).map(|_| AtomicUsize::new(0)).collect();
+        pool.scoped_for(hits.len(), |i| {
+            hits[i].fetch_add(1, Ordering::SeqCst);
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn scoped_for_borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let input: Vec<u64> = (0..1000).collect();
+        let total = AtomicUsize::new(0);
+        pool.scoped_for(input.len(), |i| {
+            total.fetch_add(input[i] as usize, Ordering::Relaxed);
+        });
+        assert_eq!(total.load(Ordering::SeqCst), 999 * 1000 / 2);
+    }
+
+    #[test]
+    fn parallel_chunks_cover_range_exactly() {
+        let pool = ThreadPool::new(4);
+        let hits: Vec<AtomicUsize> = (0..103).map(|_| AtomicUsize::new(0)).collect();
+        pool.parallel_chunks(hits.len(), 8, |range| {
+            assert!(range.len() <= 8);
+            for i in range {
+                hits[i].fetch_add(1, Ordering::SeqCst);
+            }
+        });
+        assert!(hits.iter().all(|h| h.load(Ordering::SeqCst) == 1));
+    }
+
+    #[test]
+    fn scoped_for_empty_and_single() {
+        let pool = ThreadPool::new(2);
+        pool.scoped_for(0, |_| panic!("must not run"));
+        let c = AtomicUsize::new(0);
+        pool.scoped_for(1, |i| {
+            c.fetch_add(i + 1, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 1);
+    }
+
+    #[test]
+    #[should_panic(expected = "a task panicked")]
+    fn scoped_for_propagates_panics() {
+        let pool = ThreadPool::new(2);
+        pool.scoped_for(8, |i| {
+            if i == 3 {
+                panic!("inner failure");
+            }
+        });
+    }
+
+    #[test]
+    fn scoped_for_reusable_after_panic() {
+        let pool = ThreadPool::new(2);
+        let caught = catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_for(4, |_| panic!("boom"));
+        }));
+        assert!(caught.is_err());
+        let c = AtomicUsize::new(0);
+        pool.scoped_for(16, |_| {
+            c.fetch_add(1, Ordering::SeqCst);
+        });
+        assert_eq!(c.load(Ordering::SeqCst), 16);
     }
 }

@@ -1,20 +1,16 @@
 //! Full-stack integration over the AOT artifacts: manifest/weights loading,
-//! integer executor vs recorded JAX logits, HLO artifact execution via
-//! PJRT, layer-wise uniformality of the shipped assignment, and the
-//! standalone Pallas GEMM artifact vs the Rust cores.
+//! integer executor vs recorded JAX logits, and layer-wise uniformality of
+//! the shipped assignment. (HLO-artifact parity via PJRT moved to the
+//! Python side with the zero-dependency build — `python -m compile.aot`.)
 //!
 //! Skipped with a notice when `artifacts/` is missing.
 
 use std::path::PathBuf;
 
 use rmsmp::assign::validate_ratio;
-use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights};
 use rmsmp::model::{Executor, Manifest, ModelWeights};
 use rmsmp::quant::tensor::Tensor4;
-use rmsmp::quant::{Mat, Scheme};
-use rmsmp::runtime::{ArtifactInput, Runtime};
 use rmsmp::util::json::Json;
-use rmsmp::util::rng::Rng;
 
 fn artifacts() -> Option<PathBuf> {
     let dir = rmsmp::runtime::artifacts_dir();
@@ -46,11 +42,7 @@ fn manifest_and_weights_agree() {
         assert_eq!(lm.kind, lw.kind);
         // manifest scheme counts match the packed schemes
         for (i, count) in lm.scheme_counts.iter().enumerate() {
-            let got = lw
-                .scheme
-                .iter()
-                .filter(|&&s| s as usize == i)
-                .count();
+            let got = lw.scheme.iter().filter(|&&s| s as usize == i).count();
             assert_eq!(got, *count, "layer {} scheme {i}", lm.name);
         }
     }
@@ -92,64 +84,23 @@ fn integer_executor_matches_recorded_jax_logits() {
 }
 
 #[test]
-fn hlo_artifact_matches_recorded_jax_logits() {
+fn parallel_executor_matches_sequential_on_artifacts() {
     let dir = require_artifacts!();
+    let m = Manifest::load(&dir.join("manifest.json")).unwrap();
+    let w = ModelWeights::load(&dir.join("weights.bin")).unwrap();
     let parity = Json::load(&dir.join("parity.json")).unwrap();
     let input = parity.get("input").unwrap().as_f32_vec().unwrap();
     let shape = parity.get("input_shape").unwrap().as_usize_vec().unwrap();
-    let want = parity.get("logits").unwrap().as_f32_vec().unwrap();
 
-    let rt = Runtime::cpu().unwrap();
-    let exe = rt.load(&dir.join("model.hlo.txt")).unwrap();
-    let out = exe.run_f32(&[(&input, &shape)]).unwrap();
-    let err = out
-        .iter()
-        .zip(&want)
-        .fold(0.0f32, |e, (a, b)| e.max((a - b).abs()));
-    assert!(err < 1e-3, "hlo artifact err {err}");
-}
-
-#[test]
-fn pallas_gemm_artifact_matches_rust_cores() {
-    let dir = require_artifacts!();
-    let m = Manifest::load(&dir.join("manifest.json")).unwrap();
-    let Some((batch, rows, cols)) = m.gemm_shape else {
-        eprintln!("skipping: manifest has no gemm_shape");
-        return;
-    };
-    let mut rng = Rng::new(11);
-    let x = Mat::from_vec(batch, cols, (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect());
-    let w = Mat::from_vec(rows, cols, (0..rows * cols).map(|_| rng.normal() * 0.4).collect());
-    let alpha: Vec<f32> = (0..rows)
-        .map(|r| rmsmp::quant::default_alpha(w.row(r)))
-        .collect();
-    let schemes: Vec<Scheme> = (0..rows)
-        .map(|r| Scheme::from_code((r % 3) as u8).unwrap())
-        .collect();
-    let scheme_codes: Vec<i32> = schemes.iter().map(|&s| s as i32).collect();
-
-    // run the Pallas-lowered HLO artifact
-    let rt = Runtime::cpu().unwrap();
-    let exe = rt.load(&dir.join("gemm.hlo.txt")).unwrap();
-    let out = exe
-        .run_mixed(&[
-            ArtifactInput::F32(&x.data, &[batch, cols]),
-            ArtifactInput::F32(&w.data, &[rows, cols]),
-            ArtifactInput::F32(&alpha, &[rows]),
-            ArtifactInput::I32(&scheme_codes, &[rows]),
-        ])
-        .unwrap();
-
-    // vs the Rust integer cores (act_alpha = 1.0, matching aot.py)
-    let g = MixedGemm::new();
-    let acts = PackedActs::quantize(&x, 1.0, 4);
-    let pw = PackedWeights::quantize(&w, &schemes, &alpha);
-    let int_out = g.run(&acts, &pw);
-    assert_eq!(out.len(), int_out.data.len());
-    let scale = int_out.data.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1.0);
-    let err = out
-        .iter()
-        .zip(&int_out.data)
-        .fold(0.0f32, |e, (a, b)| e.max((a - b).abs()));
-    assert!(err / scale < 1e-3, "pallas artifact vs rust cores err {err}");
+    let rt = rmsmp::runtime::Runtime::new(rmsmp::ParallelConfig {
+        threads: 4,
+        ..rmsmp::ParallelConfig::default()
+    });
+    let mut seq = Executor::new(m.clone(), w.clone()).unwrap();
+    let mut par = rt.executor(m, w).unwrap();
+    let mut x = Tensor4::zeros(shape[0], shape[1], shape[2], shape[3]);
+    x.data.copy_from_slice(&input);
+    let a = seq.infer(x.clone()).unwrap();
+    let b = par.infer(x).unwrap();
+    assert_eq!(a.data, b.data, "parallel executor diverged on real model");
 }

@@ -12,8 +12,16 @@ use rmsmp::quant::{self, Mat, Scheme};
 use rmsmp::util::json::Json;
 use rmsmp::util::rng::Rng;
 
-fn layer(name: &str, kind: &str, w: Mat, conv: (usize, usize, usize, usize),
-         stride: usize, pad: usize, groups: usize, schemes: Vec<Scheme>) -> LayerWeights {
+fn layer(
+    name: &str,
+    kind: &str,
+    w: Mat,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    schemes: Vec<Scheme>,
+) -> LayerWeights {
     let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
     let packed = PackedWeights::quantize(&w, &schemes, &alpha);
     LayerWeights {
@@ -65,11 +73,16 @@ fn tiny_model() -> (Manifest, ModelWeights) {
     let mut rng = Rng::new(5);
     let wc = Mat::from_vec(4, 18, rng.normal_vec(4 * 18, 0.5));
     let wf = Mat::from_vec(3, 4, rng.normal_vec(12, 0.5));
+    let conv_schemes = vec![
+        Scheme::PotW4A4,
+        Scheme::PotW4A4,
+        Scheme::FixedW4A4,
+        Scheme::FixedW8A4,
+    ];
+    let fc_schemes = vec![Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW4A4];
     let layers = vec![
-        layer("c1", "conv", wc, (4, 2, 3, 3), 1, 1, 1,
-              vec![Scheme::PotW4A4, Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4]),
-        layer("fc", "linear", wf, (3, 4, 1, 1), 0, 0, 1,
-              vec![Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW4A4]),
+        layer("c1", "conv", wc, (4, 2, 3, 3), 1, 1, 1, conv_schemes),
+        layer("fc", "linear", wf, (3, 4, 1, 1), 0, 0, 1, fc_schemes),
     ];
     (tiny_manifest(""), ModelWeights { layers })
 }
@@ -150,21 +163,16 @@ fn residual_add_and_relu() {
     // conv (identity-ish) + add(b0, b0) doubles activations before gap
     let (manifest, weights) = tiny_model();
     let mut m2 = manifest.clone();
-    let add = Json::parse(
-        r#"{"op": "add", "a": "b0", "b": "b0", "out": "b2", "relu": true}"#,
-    )
-    .unwrap();
-    // splice: conv -> add(b0,b0)->b2 -> gap(b2)
-    let mut prog = m2.program.clone();
-    prog.insert(1, match Manifest::from_json(&Json::parse(&format!(
+    // splice: conv -> add(b0,b0)->b2 -> gap(b2), via a one-op manifest
+    let add_src = format!(
         r#"{{"model":"t","arch":"resnet","num_classes":3,"input_shape":[2,2,6,6],
             "ratio":[65,30,5],"act_bits":4,"layers":[],
             "program":[{}]}}"#,
-        add.to_string_compact()
-    )).unwrap()) {
-        Ok(m) => m.program[0].clone(),
-        Err(e) => panic!("{e}"),
-    });
+        r#"{"op": "add", "a": "b0", "b": "b0", "out": "b2", "relu": true}"#
+    );
+    let add_manifest = Manifest::from_json(&Json::parse(&add_src).unwrap()).unwrap();
+    let mut prog = m2.program.clone();
+    prog.insert(1, add_manifest.program[0].clone());
     if let rmsmp::model::manifest::OpMeta::Gap { input, .. } = &mut prog[2] {
         *input = "b2".into();
     }

@@ -1,0 +1,214 @@
+//! Parallel-execution invariants: the multi-threaded mixed GEMM must be
+//! bit-exact vs the sequential path across random row/scheme/batch shapes
+//! and thread counts, and the coordinator must stay consistent under
+//! concurrent requests through the parallel executor.
+
+use std::sync::Arc;
+
+use rmsmp::coordinator::batcher::BatchPolicy;
+use rmsmp::coordinator::{Server, ServerConfig};
+use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights, ParallelConfig, RowPartition};
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::prop_assert;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::prop::{check, Gen};
+use rmsmp::util::rng::Rng;
+
+const SCHEMES: [Scheme; 4] = [
+    Scheme::PotW4A4,
+    Scheme::FixedW4A4,
+    Scheme::FixedW8A4,
+    Scheme::ApotW4A4,
+];
+
+fn gen_problem(g: &mut Gen) -> (PackedActs, PackedWeights, RowPartition) {
+    let batch = g.usize_in(0, 7);
+    let rows = g.usize_in(1, 96);
+    let cols = g.usize_in(1, 80);
+    let x = Mat::from_vec(batch, cols, g.vec_f32(batch * cols, batch * cols, 0.0, 1.5));
+    let w = Mat::from_vec(rows, cols, g.vec_normal(rows * cols, rows * cols, 0.5));
+    let schemes: Vec<Scheme> = (0..rows).map(|_| *g.choice(&SCHEMES)).collect();
+    let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let acts = PackedActs::quantize(&x, g.f32_in(0.3, 2.0), 4);
+    let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+    let part = RowPartition::from_schemes(&schemes);
+    (acts, pw, part)
+}
+
+#[test]
+fn prop_parallel_bit_exact_across_threads() {
+    // shared pools: one engine per thread count, reused across cases
+    let engines: Vec<MixedGemm> = [1usize, 2, 8]
+        .iter()
+        .map(|&threads| {
+            MixedGemm::with_config(ParallelConfig {
+                threads,
+                tile_cols: 32,
+                min_rows_per_task: 4,
+            })
+        })
+        .collect();
+    check("parallel-bit-exact", 40, |g| {
+        let (acts, pw, part) = gen_problem(g);
+        let want = engines[0].run_partitioned_seq(&acts, &pw, &part);
+        for e in &engines {
+            let got = e.run_partitioned(&acts, &pw, &part);
+            prop_assert!(
+                got.data == want.data,
+                "diverged at {} threads (batch={} rows={})",
+                e.config().resolved_threads(),
+                acts.rows,
+                pw.rows
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_task_granularity_does_not_change_results() {
+    let pool_cfg = ParallelConfig { threads: 4, tile_cols: 16, min_rows_per_task: 1 };
+    let coarse_cfg = ParallelConfig { threads: 4, tile_cols: 16, min_rows_per_task: 64 };
+    let fine = MixedGemm::with_config(pool_cfg);
+    let coarse = MixedGemm::with_config(coarse_cfg);
+    check("task-granularity", 25, |g| {
+        let (acts, pw, part) = gen_problem(g);
+        let a = fine.run_partitioned(&acts, &pw, &part);
+        let b = coarse.run_partitioned(&acts, &pw, &part);
+        prop_assert!(a.data == b.data, "task size changed results");
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_tile_size_exact_for_rmsmp_classes() {
+    // integer accumulation: any tile size is bit-exact for the three
+    // hardware classes (APoT is float and pinned per tile size instead).
+    let rmsmp_only = [Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4];
+    check("tile-exact", 25, |g| {
+        let rows = g.usize_in(1, 48);
+        let cols = g.usize_in(1, 120);
+        let batch = g.usize_in(1, 5);
+        let x = Mat::from_vec(batch, cols, g.vec_f32(batch * cols, batch * cols, 0.0, 1.0));
+        let w = Mat::from_vec(rows, cols, g.vec_normal(rows * cols, rows * cols, 0.5));
+        let schemes: Vec<Scheme> = (0..rows).map(|_| *g.choice(&rmsmp_only)).collect();
+        let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let part = RowPartition::from_schemes(&schemes);
+
+        let untiled = MixedGemm::with_config(ParallelConfig {
+            threads: 1,
+            tile_cols: 0,
+            min_rows_per_task: 8,
+        });
+        let want = untiled.run_partitioned(&acts, &pw, &part);
+        for tile in [1usize, 13, 64] {
+            let tiled = MixedGemm::with_config(ParallelConfig {
+                threads: 1,
+                tile_cols: tile,
+                min_rows_per_task: 8,
+            });
+            let got = tiled.run_partitioned(&acts, &pw, &part);
+            prop_assert!(got.data == want.data, "tile {tile} changed integer results");
+        }
+        Ok(())
+    });
+}
+
+/// Tiny linear model (gap -> fc) that needs no artifacts.
+fn tiny_model(seed: u64) -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(
+        &Json::parse(
+            r#"{
+        "model": "tiny", "arch": "resnet", "num_classes": 3,
+        "input_shape": [1, 2, 4, 4], "ratio": [65, 30, 5], "act_bits": 4,
+        "layers": [
+          {"name": "fc", "kind": "linear", "rows": 3, "cols": 2,
+           "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [1, 1, 1, 0]}
+        ],
+        "program": [
+          {"op": "gap", "in": "in0", "out": "b0"},
+          {"op": "linear", "layer": "fc", "in": "b0", "out": "logits"}
+        ]
+      }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let schemes = vec![Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4];
+    let mut rng = Rng::new(seed);
+    let w = Mat::from_vec(3, 2, rng.normal_vec(6, 0.5));
+    let alpha: Vec<f32> = (0..3).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let weights = ModelWeights {
+        layers: vec![LayerWeights {
+            name: "fc".into(),
+            kind: "linear".into(),
+            rows: 3,
+            cols: 2,
+            out_ch: 3,
+            in_ch: 2,
+            kh: 1,
+            kw: 1,
+            stride: 0,
+            pad: 0,
+            groups: 1,
+            a_alpha: 1.0,
+            scheme: schemes,
+            alpha,
+            bias: vec![0.0; 3],
+            w,
+            packed,
+        }],
+    };
+    (manifest, weights)
+}
+
+#[test]
+fn coordinator_concurrent_requests_through_parallel_executor() {
+    let (m, w) = tiny_model(9);
+    let server = Arc::new(
+        Server::start(
+            m,
+            w,
+            ServerConfig {
+                workers: 2,
+                policy: BatchPolicy {
+                    max_batch: 4,
+                    max_wait: std::time::Duration::from_millis(1),
+                    queue_cap: 256,
+                },
+                parallel: ParallelConfig { threads: 2, ..ParallelConfig::default() },
+            },
+        )
+        .unwrap(),
+    );
+
+    let img: Vec<f32> = (0..server.input_len()).map(|i| (i % 5) as f32 / 5.0).collect();
+    let want = server.infer(img.clone()).unwrap().logits;
+
+    let mut clients = Vec::new();
+    for _ in 0..4 {
+        let server = Arc::clone(&server);
+        let img = img.clone();
+        let want = want.clone();
+        clients.push(std::thread::spawn(move || {
+            let rxs: Vec<_> = (0..8).map(|_| server.submit(img.clone()).unwrap()).collect();
+            for rx in rxs {
+                let r = rx.recv_timeout(std::time::Duration::from_secs(120)).unwrap();
+                assert_eq!(r.logits, want, "concurrent request diverged");
+            }
+        }));
+    }
+    for c in clients {
+        c.join().unwrap();
+    }
+    match Arc::try_unwrap(server) {
+        Ok(s) => s.shutdown(),
+        Err(_) => panic!("server still shared after client joins"),
+    }
+}

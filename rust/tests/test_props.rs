@@ -9,6 +9,13 @@ use rmsmp::prop_assert;
 use rmsmp::quant::{self, Mat, Ratio, Scheme};
 use rmsmp::util::prop::{check, Gen};
 
+const ALL_SCHEMES: [Scheme; 4] = [
+    Scheme::PotW4A4,
+    Scheme::FixedW4A4,
+    Scheme::FixedW8A4,
+    Scheme::ApotW4A4,
+];
+
 fn gen_ratio(g: &mut Gen) -> Ratio {
     let a = g.usize_in(0, 100) as u32;
     let c = g.usize_in(0, (100 - a as usize).min(20)) as u32;
@@ -31,8 +38,10 @@ fn prop_fixed_quant_on_grid_and_bounded() {
         prop_assert!(q.abs() <= alpha + 1e-6, "|q|={} > alpha={alpha}", q.abs());
         let n = ((1i64 << (m - 1)) - 1) as f32;
         let steps = q / alpha * n;
-        prop_assert!((steps - steps.round()).abs() < 1e-4,
-                     "off grid: q={q} alpha={alpha} m={m}");
+        prop_assert!(
+            (steps - steps.round()).abs() < 1e-4,
+            "off grid: q={q} alpha={alpha} m={m}"
+        );
         // idempotent
         prop_assert!((quant::fixed_quant(q, alpha, m) - q).abs() < 1e-6);
         Ok(())
@@ -67,8 +76,10 @@ fn prop_quant_error_half_step_bound() {
         for m in [4u32, 8] {
             let e = (w - quant::fixed_quant(w, alpha, m)).abs();
             let bound = alpha / (2.0 * ((1 << (m - 1)) - 1) as f32);
-            prop_assert!(e <= bound + 1e-6,
-                         "w={w} alpha={alpha} m={m} e={e} bound={bound}");
+            prop_assert!(
+                e <= bound + 1e-6,
+                "w={w} alpha={alpha} m={m} e={e} bound={bound}"
+            );
         }
         Ok(())
     });
@@ -80,9 +91,12 @@ fn prop_assignment_ratio_exact_and_stable() {
         let w = gen_mat(g, 128, 32);
         let ratio = gen_ratio(g);
         let s = assign_layer(&w, ratio, Sensitivity::WeightNorm, Scheme::PotW4A4);
-        prop_assert!(validate_ratio(&s, ratio).is_ok(),
-                     "ratio {ratio} rows {}: {:?}", w.rows,
-                     validate_ratio(&s, ratio).err());
+        prop_assert!(
+            validate_ratio(&s, ratio).is_ok(),
+            "ratio {ratio} rows {}: {:?}",
+            w.rows,
+            validate_ratio(&s, ratio).err()
+        );
         // determinism
         let s2 = assign_layer(&w, ratio, Sensitivity::WeightNorm, Scheme::PotW4A4);
         prop_assert!(s == s2, "assignment not deterministic");
@@ -91,19 +105,25 @@ fn prop_assignment_ratio_exact_and_stable() {
 }
 
 #[test]
-fn prop_partition_is_a_permutation() {
+fn prop_partition_is_a_permutation_with_unit_fractions() {
     check("partition", 100, |g| {
         let n = g.usize_in(1, 200);
-        let schemes: Vec<Scheme> = (0..n)
-            .map(|_| *g.choice(&[Scheme::PotW4A4, Scheme::FixedW4A4,
-                                 Scheme::FixedW8A4, Scheme::ApotW4A4]))
-            .collect();
+        let schemes: Vec<Scheme> = (0..n).map(|_| *g.choice(&ALL_SCHEMES)).collect();
         let p = RowPartition::from_schemes(&schemes);
         prop_assert!(p.total() == n);
         let mut all: Vec<usize> =
             [&p.pot4[..], &p.fixed4[..], &p.fixed8[..], &p.apot4[..]].concat();
         all.sort_unstable();
         prop_assert!(all == (0..n).collect::<Vec<_>>(), "not a permutation");
+        // all four class fractions are reported and sum to 1 (the old
+        // 3-tuple silently dropped the APoT share)
+        let f = p.fractions();
+        let sum: f64 = f.iter().sum();
+        prop_assert!((sum - 1.0).abs() < 1e-9, "fractions sum {sum} != 1");
+        prop_assert!(
+            (f[3] - p.apot4.len() as f64 / n as f64).abs() < 1e-12,
+            "apot fraction missing"
+        );
         Ok(())
     });
 }
@@ -114,8 +134,7 @@ fn prop_integer_gemm_equals_fake_quant() {
         let batch = g.usize_in(1, 6);
         let rows = g.usize_in(1, 12);
         let cols = g.usize_in(1, 48);
-        let x = Mat::from_vec(batch, cols,
-                              g.vec_f32(batch * cols, batch * cols, 0.0, 1.5));
+        let x = Mat::from_vec(batch, cols, g.vec_f32(batch * cols, batch * cols, 0.0, 1.5));
         let w = Mat::from_vec(rows, cols, g.vec_normal(rows * cols, rows * cols, 0.5));
         let schemes: Vec<Scheme> = (0..rows)
             .map(|_| *g.choice(&[Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4]))
@@ -130,8 +149,10 @@ fn prop_integer_gemm_equals_fake_quant() {
         let f_out = gm.run_float(&x, &w, &schemes, &alpha, act_alpha, 4);
         let scale = f_out.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
         let err = int_out.max_abs_err(&f_out);
-        prop_assert!(err / scale < 1e-3,
-                     "int vs fake-quant err {err} (batch={batch} rows={rows} cols={cols})");
+        prop_assert!(
+            err / scale < 1e-3,
+            "int vs fake-quant err {err} (batch={batch} rows={rows} cols={cols})"
+        );
         Ok(())
     });
 }
@@ -148,8 +169,7 @@ fn prop_storage_bits_match_ratio() {
         let p = PackedWeights::quantize(&w, &s, &alpha);
         let (_, _, nc) = ratio.counts(rows);
         let expect = cols * (4 * (rows - nc) + 8 * nc);
-        prop_assert!(p.storage_bits() == expect,
-                     "bits {} != {expect}", p.storage_bits());
+        prop_assert!(p.storage_bits() == expect, "bits {} != {expect}", p.storage_bits());
         Ok(())
     });
 }
@@ -182,8 +202,12 @@ fn prop_fpga_more_resources_never_slower() {
         let layers = rmsmp::fpga::sim::resnet18_imagenet_layers();
         let rs = rmsmp::fpga::simulate(&small, &layers);
         let rb = rmsmp::fpga::simulate(&big, &layers);
-        prop_assert!(rb.latency_ms <= rs.latency_ms * 1.001,
-                     "bigger board slower: {} vs {}", rb.latency_ms, rs.latency_ms);
+        prop_assert!(
+            rb.latency_ms <= rs.latency_ms * 1.001,
+            "bigger board slower: {} vs {}",
+            rb.latency_ms,
+            rs.latency_ms
+        );
         Ok(())
     });
 }

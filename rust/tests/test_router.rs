@@ -1,6 +1,5 @@
 //! Multi-model router over two in-memory variants (no artifacts needed).
 
-use rmsmp::coordinator::batcher::BatchPolicy;
 use rmsmp::coordinator::{Router, ServerConfig};
 use rmsmp::gemm::PackedWeights;
 use rmsmp::model::manifest::Manifest;
@@ -61,7 +60,7 @@ fn tiny(seed: u64, schemes: Vec<Scheme>) -> (Manifest, ModelWeights) {
 fn router() -> Router {
     let (m1, w1) = tiny(1, vec![Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4]);
     let (m2, w2) = tiny(2, vec![Scheme::FixedW4A4; 3]);
-    let cfg = ServerConfig { workers: 1, policy: BatchPolicy::default() };
+    let cfg = ServerConfig::default();
     Router::start(vec![
         ("rmsmp".to_string(), m1, w1, cfg.clone()),
         ("fixed".to_string(), m2, w2, cfg),

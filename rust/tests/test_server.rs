@@ -6,6 +6,7 @@ use std::time::Duration;
 
 use rmsmp::coordinator::batcher::BatchPolicy;
 use rmsmp::coordinator::{OpenLoopGen, Server, ServerConfig};
+use rmsmp::gemm::ParallelConfig;
 use rmsmp::model::{Manifest, ModelWeights};
 
 fn artifacts() -> Option<PathBuf> {
@@ -47,6 +48,7 @@ fn serves_requests_and_batches() {
                 max_wait: Duration::from_millis(5),
                 queue_cap: 64,
             },
+            parallel: ParallelConfig::sequential(),
         },
     )
     .unwrap();
@@ -101,6 +103,7 @@ fn backpressure_rejects_when_full() {
                 max_wait: Duration::from_millis(50),
                 queue_cap: 2,
             },
+            parallel: ParallelConfig::sequential(),
         },
     )
     .unwrap();
@@ -138,6 +141,7 @@ fn multi_worker_consistency() {
                 max_wait: Duration::from_millis(1),
                 queue_cap: 64,
             },
+            parallel: ParallelConfig { threads: 2, ..ParallelConfig::default() },
         },
     )
     .unwrap();

@@ -46,8 +46,12 @@ fn fixed_quant_bit_exact() {
                 w[i],
                 q[i]
             );
-            assert_eq!(quant::fixed_code(w[i], alpha, m), code[i] as i32,
-                       "code m={m} w={}", w[i]);
+            assert_eq!(
+                quant::fixed_code(w[i], alpha, m),
+                code[i] as i32,
+                "code m={m} w={}",
+                w[i]
+            );
         }
     }
 }
@@ -72,8 +76,12 @@ fn pot_quant_bit_exact() {
                 q[i]
             );
             let (s, e) = quant::pot_code(w[i], alpha, m);
-            assert_eq!((s, e), (sign[i] as i32, exp[i] as i32),
-                       "pot code m={m} w={}", w[i]);
+            assert_eq!(
+                (s, e),
+                (sign[i] as i32, exp[i] as i32),
+                "pot code m={m} w={}",
+                w[i]
+            );
         }
     }
 }
