@@ -58,7 +58,7 @@ fn main() -> rmsmp::Result<()> {
     let mut exec = Executor::new(manifest.clone(), weights.clone())?;
     let mut x0 = Tensor4::zeros(n_in, c, h, w);
     x0.data.copy_from_slice(&input);
-    let got = exec.infer(x0)?;
+    let got = exec.infer(&x0)?;
     let int_err = got.data.iter().zip(&want).fold(0.0f32, |e, (a, b)| e.max((a - b).abs()));
     println!("[2] parity: integer-vs-jax {int_err:.6}");
     ensure!(int_err < 1e-3, "parity failure");
@@ -74,7 +74,7 @@ fn main() -> rmsmp::Result<()> {
         for v in x.data.iter_mut() {
             *v = rng.uniform(0.0, 1.0);
         }
-        int_logits.push(exec.infer(x)?);
+        int_logits.push(exec.infer(&x)?.clone());
     }
     let int_dt = t0.elapsed().as_secs_f64();
     let gmacs = exec.macs as f64 / 1e9;
@@ -95,7 +95,7 @@ fn main() -> rmsmp::Result<()> {
         for v in x.data.iter_mut() {
             *v = rng.uniform(0.0, 1.0);
         }
-        let y = par.infer(x)?;
+        let y = par.infer(&x)?;
         exact &= y.data == batch_logits.data;
     }
     let par_dt = t1.elapsed().as_secs_f64();

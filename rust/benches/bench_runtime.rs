@@ -1,7 +1,9 @@
-//! Runtime benchmarks: the integer executor through the native runtime,
-//! sequential vs parallel, on a synthetic CNN (no artifacts needed) and —
-//! when artifacts exist — on the shipped model. (The PJRT/XLA float leg
-//! moved to the Python side with the zero-dependency build.)
+//! Runtime benchmarks: the integer executor through the native runtime —
+//! compiled plan vs the reference interpreter at batch 1 and 8, and
+//! sequential vs parallel — on a synthetic CNN (no artifacts needed)
+//! and, when artifacts exist, on the shipped model. Writes
+//! `BENCH_runtime.json` (per-inference latency + plan-vs-interpreter
+//! speedups) for the CI bench-smoke artifact.
 //!
 //! Run: `cargo bench --bench bench_runtime` (RMSMP_BENCH_FAST=1 for CI).
 
@@ -15,7 +17,7 @@ use rmsmp::quant::tensor::Tensor4;
 use rmsmp::quant::{self, Mat, Scheme};
 use rmsmp::runtime::Runtime;
 use rmsmp::util::bench::Bench;
-use rmsmp::util::json::Json;
+use rmsmp::util::json::{num, Json};
 use rmsmp::util::rng::Rng;
 
 fn layer(
@@ -103,20 +105,32 @@ fn synthetic_model() -> (Manifest, ModelWeights) {
     (manifest, ModelWeights { layers })
 }
 
-fn bench_executor(
-    b: &mut Bench,
-    name: &str,
-    exec: &mut Executor,
-    shape: (usize, usize, usize, usize),
-) {
+fn rand_input(shape: (usize, usize, usize, usize), seed: u64) -> Tensor4 {
     let (n, c, h, w) = shape;
-    let mut rng = Rng::new(5);
-    let input: Vec<f32> = (0..n * c * h * w).map(|_| rng.uniform(0.0, 1.0)).collect();
-    b.case_ops(name, Some(n as f64), || {
-        let mut x = Tensor4::zeros(n, c, h, w);
-        x.data.copy_from_slice(&input);
-        black_box(exec.infer(x).unwrap());
+    let mut rng = Rng::new(seed);
+    let mut x = Tensor4::zeros(n, c, h, w);
+    for v in x.data.iter_mut() {
+        *v = rng.uniform(0.0, 1.0);
+    }
+    x
+}
+
+/// Plan-based inference (the production path).
+fn bench_plan(b: &mut Bench, name: &str, exec: &mut Executor, x: &Tensor4) {
+    b.case_ops(name, Some(x.n as f64), || {
+        black_box(exec.infer(black_box(x)).unwrap());
     });
+}
+
+/// The name-resolving interpreter (the seed's per-call-allocating path).
+fn bench_interp(b: &mut Bench, name: &str, exec: &mut Executor, x: &Tensor4) {
+    b.case_ops(name, Some(x.n as f64), || {
+        black_box(exec.reference_infer(black_box(x)).unwrap());
+    });
+}
+
+fn ns(b: &Bench, name: &str) -> f64 {
+    b.get(name).map(|m| m.ns_per_iter()).unwrap_or(f64::NAN)
 }
 
 fn main() {
@@ -127,24 +141,49 @@ fn main() {
     println!("runtime: {} thread(s) in parallel config", par_rt.threads());
 
     let (manifest, weights) = synthetic_model();
-    let shape = (4usize, 32usize, 16usize, 16usize);
+
+    // plan vs interpreter, batch 1 and 8, sequential engine: the
+    // compile-then-run payoff per inference
     let mut seq = seq_rt.executor(manifest.clone(), weights.clone()).unwrap();
+    let x1 = rand_input((1, 32, 16, 16), 5);
+    let x8 = rand_input((8, 32, 16, 16), 6);
+    bench_interp(&mut b, "interp_b1", &mut seq, &x1);
+    bench_plan(&mut b, "plan_b1", &mut seq, &x1);
+    bench_interp(&mut b, "interp_b8", &mut seq, &x8);
+    bench_plan(&mut b, "plan_b8", &mut seq, &x8);
+    let speedup_b1 = ns(&b, "interp_b1") / ns(&b, "plan_b1");
+    let speedup_b8 = ns(&b, "interp_b8") / ns(&b, "plan_b8");
+    println!("bench runtime: plan speedup {speedup_b1:.2}x @ batch 1, {speedup_b8:.2}x @ batch 8");
+
+    // sequential vs parallel plan execution at the manifest batch
+    let x4 = rand_input((4, 32, 16, 16), 7);
     let mut par = par_rt.executor(manifest, weights).unwrap();
-    bench_executor(&mut b, "synthetic_seq", &mut seq, shape);
-    bench_executor(&mut b, "synthetic_par", &mut par, shape);
+    bench_plan(&mut b, "synthetic_seq", &mut seq, &x4);
+    bench_plan(&mut b, "synthetic_par", &mut par, &x4);
 
     // the shipped model, when artifacts are present
     let dir = rmsmp::runtime::artifacts_dir();
-    if !dir.join("manifest.json").exists() {
+    if dir.join("manifest.json").exists() {
+        let manifest = rmsmp::model::Manifest::load(&dir.join("manifest.json")).unwrap();
+        let weights = ModelWeights::load(&dir.join("weights.bin")).unwrap();
+        let s = manifest.input_shape.clone();
+        let shape = (s[0], s[1], s[2], s[3]);
+        let mut seq = seq_rt.executor(manifest.clone(), weights.clone()).unwrap();
+        let mut par = par_rt.executor(manifest, weights).unwrap();
+        let xm = rand_input(shape, 8);
+        bench_plan(&mut b, "model_seq", &mut seq, &xm);
+        bench_plan(&mut b, "model_par", &mut par, &xm);
+    } else {
         println!("bench runtime/model_*: skipped (run `make artifacts`)");
-        return;
     }
-    let manifest = rmsmp::model::Manifest::load(&dir.join("manifest.json")).unwrap();
-    let weights = ModelWeights::load(&dir.join("weights.bin")).unwrap();
-    let s = manifest.input_shape.clone();
-    let shape = (s[0], s[1], s[2], s[3]);
-    let mut seq = seq_rt.executor(manifest.clone(), weights.clone()).unwrap();
-    let mut par = par_rt.executor(manifest, weights).unwrap();
-    bench_executor(&mut b, "model_seq", &mut seq, shape);
-    bench_executor(&mut b, "model_par", &mut par, shape);
+
+    let extra = vec![
+        ("threads", num(par_rt.threads() as f64)),
+        ("plan_speedup_b1", num(speedup_b1)),
+        ("plan_speedup_b8", num(speedup_b8)),
+    ];
+    match b.write_json(extra) {
+        Ok(path) => println!("bench runtime: wrote {}", path.display()),
+        Err(e) => eprintln!("bench runtime: could not write JSON: {e}"),
+    }
 }

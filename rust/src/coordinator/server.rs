@@ -1,10 +1,14 @@
 //! The serving loop: batcher → per-worker integer executors → responses.
 //!
-//! Each worker owns its own [`Executor`] (weights are shared via the
-//! packed-weight clone; the executor's scratch is worker-local) and pulls
-//! batches off the shared [`Batcher`] until shutdown — a miniature of the
-//! vLLM-style router/worker split, with the paper's quantized engine as
-//! the backend.
+//! The model is loaded and compiled **once**: one `Arc<ModelWeights>`,
+//! one `Arc<Manifest>`, and one compiled `Arc<Plan>` (sized for the
+//! batcher's `max_batch`) are shared by every worker, so an N-worker
+//! server holds ~1x the weights — not N clones. Each worker owns only
+//! its private mutable state: an [`Executor`] whose preallocated
+//! [`crate::model::Workspace`] is reused across batches, so the
+//! steady-state request path allocates no inference buffers (see the
+//! library docs for the exact zero-allocation guarantee per execution
+//! mode).
 //!
 //! All workers' executors share one [`ThreadPool`] sized by
 //! [`ServerConfig::parallel`]; per batch, the worker asks
@@ -20,7 +24,7 @@ use std::time::Instant;
 use crate::ensure;
 use crate::err;
 use crate::gemm::{ParallelConfig, RowPartition};
-use crate::model::{Executor, Manifest, ModelWeights};
+use crate::model::{Executor, Manifest, ModelWeights, Plan};
 use crate::quant::tensor::Tensor4;
 use crate::util::error::Result;
 use crate::util::pool::ThreadPool;
@@ -84,7 +88,9 @@ fn admit(weights: &ModelWeights) -> Result<()> {
 }
 
 impl Server {
-    /// Spawn workers over the manifest + weights.
+    /// Spawn workers over the manifest + weights: compile the plan once,
+    /// share weights/manifest/plan via `Arc`, give each worker a private
+    /// preallocated workspace.
     pub fn start(manifest: Manifest, weights: ModelWeights, cfg: ServerConfig) -> Result<Server> {
         let batcher = Arc::new(Batcher::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
@@ -94,6 +100,17 @@ impl Server {
         let num_classes = manifest.num_classes;
         admit(&weights)?;
 
+        // compile once; size workspaces for the largest batch the
+        // batcher will ever hand a worker
+        let plan = Arc::new(Plan::compile(
+            &manifest,
+            &weights,
+            cfg.policy.max_batch.max(1),
+            &cfg.parallel,
+        )?);
+        let manifest = Arc::new(manifest);
+        let weights = Arc::new(weights);
+
         let threads = cfg.parallel.resolved_threads();
         let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
 
@@ -102,9 +119,10 @@ impl Server {
         for wi in 0..n_workers {
             let b = Arc::clone(&batcher);
             let m = Arc::clone(&metrics);
-            let mut exec = Executor::with_parallel(
-                manifest.clone(),
-                weights.clone(),
+            let mut exec = Executor::from_shared(
+                Arc::clone(&manifest),
+                Arc::clone(&weights),
+                Arc::clone(&plan),
                 cfg.parallel,
                 pool.clone(),
             )?;
@@ -182,6 +200,10 @@ fn worker_loop(
     (c, h, w): (usize, usize, usize),
     (workers, threads): (usize, usize),
 ) {
+    // the packing tensor is reused across batches (grows to the batch
+    // high-water once, then the request path stays allocation-free
+    // through the executor's workspace)
+    let mut x = Tensor4::zeros(0, c, h, w);
     while let Some(Batch { requests }) = batcher.next_batch() {
         let n = requests.len();
         metrics.record_batch(n);
@@ -189,12 +211,13 @@ fn worker_loop(
         exec.set_row_parallel(row_parallel_for_batch(n, workers, threads));
         let t0 = Instant::now();
         // pack into one NCHW tensor
-        let mut x = Tensor4::zeros(n, c, h, w);
+        x.n = n;
+        x.data.resize(n * c * h * w, 0.0);
         for (i, r) in requests.iter().enumerate() {
             let off = i * c * h * w;
             x.data[off..off + c * h * w].copy_from_slice(&r.payload);
         }
-        match exec.infer(x) {
+        match exec.infer(&x) {
             Ok(logits) => {
                 let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
                 for (i, r) in requests.into_iter().enumerate() {

@@ -54,6 +54,16 @@ impl RowPartition {
         self.pot4.len() + self.fixed4.len() + self.fixed8.len() + self.apot4.len()
     }
 
+    /// The row list of one scheme class.
+    pub fn class(&self, s: Scheme) -> &[usize] {
+        match s {
+            Scheme::PotW4A4 => &self.pot4,
+            Scheme::FixedW4A4 => &self.fixed4,
+            Scheme::FixedW8A4 => &self.fixed8,
+            Scheme::ApotW4A4 => &self.apot4,
+        }
+    }
+
     /// Per-class fractions `[pot4, fixed4, fixed8, apot4]` — checked
     /// against the configured ratio by the coordinator's admission tests.
     /// All four classes are reported so the fractions sum to 1 whenever
@@ -105,6 +115,130 @@ impl ParallelConfig {
             self.threads
         }
     }
+
+    /// GEMM scratch lanes an engine built from this config will use:
+    /// the calling thread plus every pool worker when a pool is spawned
+    /// (>1 resolved thread), else just the caller. Must agree with
+    /// [`MixedGemm::lanes`] for a pool of `resolved_threads()` workers —
+    /// `rmsmp plan` sizes footprints with this without building an
+    /// engine.
+    pub fn lanes(&self) -> usize {
+        let threads = self.resolved_threads();
+        if threads > 1 {
+            threads + 1
+        } else {
+            1
+        }
+    }
+}
+
+/// One schedulable unit of the mixed GEMM: rows `start..end` of one
+/// scheme class's row list in a [`RowPartition`]. Chunk lists are
+/// compiled once (per layer, by the plan compiler, or per call by the
+/// compatibility wrappers) and replayed on every dispatch.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TaskChunk {
+    pub scheme: Scheme,
+    pub start: usize,
+    pub end: usize,
+}
+
+/// Build the task list for a partition: per-class row chunks of at most
+/// `chunk_rows` rows, interleaved round-robin across the four per-class
+/// queues (so cheap PoT shift-add chunks and expensive Fixed-8 MAC chunks
+/// alternate in the task list instead of convoying per class).
+pub fn chunk_tasks(part: &RowPartition, chunk_rows: usize) -> Vec<TaskChunk> {
+    let classes = [
+        Scheme::PotW4A4,
+        Scheme::FixedW4A4,
+        Scheme::FixedW8A4,
+        Scheme::ApotW4A4,
+    ];
+    let chunk = chunk_rows.max(1);
+    let mut tasks = Vec::new();
+    let mut offset = [0usize; 4];
+    loop {
+        let mut pushed = false;
+        for (i, &scheme) in classes.iter().enumerate() {
+            let rows = part.class(scheme);
+            let o = offset[i];
+            if o < rows.len() {
+                let end = rows.len().min(o + chunk);
+                tasks.push(TaskChunk { scheme, start: o, end });
+                offset[i] = end;
+                pushed = true;
+            }
+        }
+        if !pushed {
+            return tasks;
+        }
+    }
+}
+
+/// Per-lane reusable row scratch for the GEMM dispatch: a float column
+/// (`out` accumulation target of one weight row across the batch) and the
+/// i32 accumulator the cores MAC into. One lane per drain loop of the
+/// pool's `scoped_for_indexed` (lane 0 = caller, 1..=threads = helpers);
+/// preallocating them in the inference [`crate::model::Workspace`] is
+/// what makes steady-state dispatch allocation-free.
+pub struct GemmScratch {
+    lanes: Vec<(Vec<f32>, Vec<i32>)>,
+}
+
+impl GemmScratch {
+    /// `lanes` empty lanes (grown per dispatch as batches demand).
+    pub fn new(lanes: usize) -> GemmScratch {
+        GemmScratch::with_capacity(lanes, 0)
+    }
+
+    /// `lanes` lanes preallocated for batches up to `batch` rows.
+    pub fn with_capacity(lanes: usize, batch: usize) -> GemmScratch {
+        GemmScratch {
+            lanes: (0..lanes.max(1))
+                .map(|_| (Vec::with_capacity(batch), Vec::with_capacity(batch)))
+                .collect(),
+        }
+    }
+
+    /// Resize the first `lanes` lanes to `batch` elements, creating them
+    /// if missing; allocation-free when within the preallocated
+    /// capacities. Lanes beyond `lanes` are left untouched — the
+    /// sequential path only pays for lane 0 even when the engine owns a
+    /// wide pool.
+    fn ensure(&mut self, lanes: usize, batch: usize) {
+        let lanes = lanes.max(1);
+        while self.lanes.len() < lanes {
+            self.lanes.push((Vec::with_capacity(batch), Vec::with_capacity(batch)));
+        }
+        for (col, acc) in self.lanes[..lanes].iter_mut() {
+            col.resize(batch, 0.0);
+            acc.resize(batch, 0);
+        }
+    }
+
+    /// Lane 0 (the sequential / calling-thread lane), resized to `batch`.
+    pub fn lane0(&mut self, batch: usize) -> (&mut [f32], &mut [i32]) {
+        self.ensure(1, batch);
+        let (col, acc) = &mut self.lanes[0];
+        (col, acc)
+    }
+
+    /// Data pointers of every lane buffer (steady-state reuse tests pin
+    /// these across calls).
+    pub fn buffer_ptrs(&self) -> Vec<usize> {
+        self.lanes
+            .iter()
+            .flat_map(|(col, acc)| [col.as_ptr() as usize, acc.as_ptr() as usize])
+            .collect()
+    }
+
+    /// Bytes currently reserved across all lanes.
+    pub fn allocated_bytes(&self) -> usize {
+        self.lanes
+            .iter()
+            .map(|(col, acc)| 4 * col.capacity() + 4 * acc.capacity())
+            .sum()
+    }
 }
 
 /// Raw output pointer shared across GEMM tasks. Each task writes a
@@ -117,6 +251,17 @@ struct SyncOutPtr {
 
 unsafe impl Send for SyncOutPtr {}
 unsafe impl Sync for SyncOutPtr {}
+
+/// Raw pointer to the scratch lanes, shared across GEMM tasks. Lane `i`
+/// is only ever touched by the drain loop that `scoped_for_indexed`
+/// reports as lane `i`, and those run on distinct threads, so access is
+/// exclusive per lane.
+struct SyncLanesPtr {
+    p: *mut (Vec<f32>, Vec<i32>),
+}
+
+unsafe impl Send for SyncLanesPtr {}
+unsafe impl Sync for SyncLanesPtr {}
 
 /// The mixed GEMM engine: owns the four cores plus the execution config
 /// and (optionally) a thread pool.
@@ -213,7 +358,9 @@ impl MixedGemm {
 
     /// `parallel = false` forces the sequential path (the coordinator
     /// disables row-level parallelism for batches that already fill the
-    /// machine via the batch dimension).
+    /// machine via the batch dimension). Compatibility wrapper around
+    /// [`MixedGemm::run_partitioned_into`]: chunks the partition and
+    /// allocates the output and scratch per call.
     pub fn run_partitioned_with(
         &self,
         acts: &PackedActs,
@@ -221,15 +368,93 @@ impl MixedGemm {
         part: &RowPartition,
         parallel: bool,
     ) -> Mat {
-        assert_eq!(acts.cols, w.cols, "inner dims");
+        let chunks = chunk_tasks(part, self.cfg.min_rows_per_task);
+        let mut scratch = GemmScratch::new(self.lanes());
         let mut out = Mat::zeros(acts.rows, w.rows);
-        let tasks = self.class_tasks(part);
+        self.run_partitioned_into(acts, w, part, &chunks, parallel, &mut scratch, &mut out);
+        out
+    }
+
+    /// Scratch lanes this engine's dispatch can use concurrently: the
+    /// calling thread plus every pool worker.
+    pub fn lanes(&self) -> usize {
+        self.pool.as_ref().map_or(1, |p| p.threads() + 1)
+    }
+
+    /// The allocation-free dispatch at the bottom of the compiled-plan
+    /// path: run the partitioned mixed GEMM over a precompiled `chunks`
+    /// schedule (see [`chunk_tasks`]), MACing through caller-provided
+    /// `scratch` lanes and writing the caller-provided `out`, which must
+    /// already be sized to `(acts.rows, w.rows)`. No heap allocation
+    /// happens here once `scratch` has warmed up to the batch size.
+    ///
+    /// Cells of rows absent from `part` are zeroed; every partitioned row
+    /// is written by exactly one chunk, so the result is bit-exact vs the
+    /// sequential path for any chunk schedule and thread count.
+    pub fn run_partitioned_into(
+        &self,
+        acts: &PackedActs,
+        w: &PackedWeights,
+        part: &RowPartition,
+        chunks: &[TaskChunk],
+        parallel: bool,
+        scratch: &mut GemmScratch,
+        out: &mut Mat,
+    ) {
+        assert_eq!(acts.cols, w.cols, "inner dims");
+        assert_eq!((out.rows, out.cols), (acts.rows, w.rows), "output shape");
+        let batch = acts.rows;
+        let tile = self.cfg.tile_cols;
+        // a full partition (each row exactly once — the only shape the
+        // plan compiler and `from_schemes` produce) overwrites every
+        // cell, so zeroing is only needed for partial partitions
+        if part.total() < w.rows {
+            out.data.fill(0.0);
+        }
         let use_pool = parallel
             && self.pool.is_some()
-            && tasks.len() > 1
+            && chunks.len() > 1
             && part.total() >= 2 * self.cfg.min_rows_per_task.max(1);
-        self.run_tasks(acts, w, &tasks, &mut out, use_pool);
-        out
+
+        if !use_pool {
+            let (col, acc) = scratch.lane0(batch);
+            for chunk in chunks {
+                let core = self.core_for(chunk.scheme);
+                for &r in &part.class(chunk.scheme)[chunk.start..chunk.end] {
+                    col.fill(0.0);
+                    core.run_row_tiled(acts, w, r, tile, acc, col);
+                    for (b, &v) in col.iter().enumerate() {
+                        out.set(b, r, v);
+                    }
+                }
+            }
+            return;
+        }
+
+        let pool = self.pool.as_ref().expect("use_pool implies a pool");
+        scratch.ensure(pool.threads() + 1, batch);
+        let out_cols = out.cols;
+        let ptr = SyncOutPtr { p: out.data.as_mut_ptr() };
+        let lanes = SyncLanesPtr { p: scratch.lanes.as_mut_ptr() };
+        pool.scoped_for_indexed(chunks.len(), |ti, lane| {
+            let chunk = chunks[ti];
+            let core = self.core_for(chunk.scheme);
+            // SAFETY: `lane` is exclusive to this drain loop for the
+            // duration of the scoped_for (see `scoped_for_indexed`), and
+            // `ensure` above sized the lane list to every lane the pool
+            // can hand out.
+            let (col, acc) = unsafe { &mut *lanes.p.add(lane) };
+            for &r in &part.class(chunk.scheme)[chunk.start..chunk.end] {
+                col.fill(0.0);
+                core.run_row_tiled(acts, w, r, tile, acc, col);
+                for (b, &v) in col.iter().enumerate() {
+                    // SAFETY: row `r` belongs to exactly one chunk, so no
+                    // other task writes cell (b, r); the scoped join
+                    // orders these writes before the caller's reads.
+                    unsafe { *ptr.p.add(b * out_cols + r) = v };
+                }
+            }
+        });
     }
 
     /// Single-row dispatch used by the grouped-conv path: `out[b] += ...`
@@ -243,79 +468,6 @@ impl MixedGemm {
         out: &mut [f32],
     ) {
         self.core_for(w.scheme[r]).run_row_tiled(acts, w, r, self.cfg.tile_cols, acc, out);
-    }
-
-    /// Build the task list: per-class row chunks, interleaved round-robin
-    /// across the four per-class queues.
-    fn class_tasks<'a>(&'a self, part: &'a RowPartition) -> Vec<(&'a dyn GemmCore, &'a [usize])> {
-        let classes: [(&dyn GemmCore, &[usize]); 4] = [
-            (&self.pot4, &part.pot4),
-            (&self.fixed4, &part.fixed4),
-            (&self.fixed8, &part.fixed8),
-            (&self.apot4, &part.apot4),
-        ];
-        let chunk = self.cfg.min_rows_per_task.max(1);
-        let mut tasks = Vec::new();
-        let mut offset = [0usize; 4];
-        loop {
-            let mut pushed = false;
-            for (i, (core, rows)) in classes.iter().enumerate() {
-                let o = offset[i];
-                if o < rows.len() {
-                    let end = rows.len().min(o + chunk);
-                    tasks.push((*core, &rows[o..end]));
-                    offset[i] = end;
-                    pushed = true;
-                }
-            }
-            if !pushed {
-                return tasks;
-            }
-        }
-    }
-
-    fn run_tasks(
-        &self,
-        acts: &PackedActs,
-        w: &PackedWeights,
-        tasks: &[(&dyn GemmCore, &[usize])],
-        out: &mut Mat,
-        use_pool: bool,
-    ) {
-        let batch = acts.rows;
-        let out_cols = out.cols;
-        let tile = self.cfg.tile_cols;
-        if !use_pool {
-            let mut col = vec![0.0f32; batch];
-            let mut acc = vec![0i32; batch];
-            for &(core, rows) in tasks {
-                for &r in rows {
-                    col.fill(0.0);
-                    core.run_row_tiled(acts, w, r, tile, &mut acc, &mut col);
-                    for (b, &v) in col.iter().enumerate() {
-                        out.set(b, r, v);
-                    }
-                }
-            }
-            return;
-        }
-        let pool = self.pool.as_ref().expect("use_pool implies a pool");
-        let ptr = SyncOutPtr { p: out.data.as_mut_ptr() };
-        pool.scoped_for(tasks.len(), |ti| {
-            let (core, rows) = tasks[ti];
-            let mut col = vec![0.0f32; batch];
-            let mut acc = vec![0i32; batch];
-            for &r in rows {
-                col.fill(0.0);
-                core.run_row_tiled(acts, w, r, tile, &mut acc, &mut col);
-                for (b, &v) in col.iter().enumerate() {
-                    // SAFETY: row `r` belongs to exactly one task, so no
-                    // other task writes cell (b, r); the scoped_for join
-                    // orders these writes before the caller's reads.
-                    unsafe { *ptr.p.add(b * out_cols + r) = v };
-                }
-            }
-        });
     }
 
     /// Float-path equivalent: fake-quant the operands and matmul. Used by
@@ -454,7 +606,7 @@ mod tests {
     }
 
     #[test]
-    fn class_tasks_interleave_and_cover() {
+    fn chunk_tasks_interleave_and_cover() {
         let schemes = [
             vec![Scheme::PotW4A4; 10],
             vec![Scheme::FixedW4A4; 5],
@@ -462,17 +614,40 @@ mod tests {
         ]
         .concat();
         let part = RowPartition::from_schemes(&schemes);
-        let cfg = ParallelConfig { threads: 1, tile_cols: 0, min_rows_per_task: 4 };
-        let g = MixedGemm::with_config(cfg);
-        let tasks = g.class_tasks(&part);
+        let tasks = chunk_tasks(&part, 4);
         // chunks: pot 4+4+2, fixed4 4+1, fixed8 1 — interleaved
         assert_eq!(tasks.len(), 6);
-        let covered: usize = tasks.iter().map(|(_, rows)| rows.len()).sum();
+        let covered: usize = tasks.iter().map(|t| t.end - t.start).sum();
         assert_eq!(covered, 16);
         // round-robin: first three tasks are one chunk per class
-        assert_eq!(tasks[0].0.scheme(), Scheme::PotW4A4);
-        assert_eq!(tasks[1].0.scheme(), Scheme::FixedW4A4);
-        assert_eq!(tasks[2].0.scheme(), Scheme::FixedW8A4);
+        assert_eq!(tasks[0].scheme, Scheme::PotW4A4);
+        assert_eq!(tasks[1].scheme, Scheme::FixedW4A4);
+        assert_eq!(tasks[2].scheme, Scheme::FixedW8A4);
+        // chunk ranges index into the class row lists and cover them
+        assert_eq!((tasks[0].start, tasks[0].end), (0, 4));
+        assert_eq!((tasks[5].start, tasks[5].end), (8, 10));
+    }
+
+    #[test]
+    fn run_partitioned_into_matches_allocating_path() {
+        let (x, w, schemes, alpha) = rand_problem(33, 24, 5, 21);
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let part = RowPartition::from_schemes(&schemes);
+        let g = MixedGemm::with_config(ParallelConfig {
+            threads: 3,
+            tile_cols: 16,
+            min_rows_per_task: 4,
+        });
+        let want = g.run_partitioned_seq(&acts, &pw, &part);
+        let chunks = chunk_tasks(&part, 4);
+        let mut scratch = GemmScratch::with_capacity(g.lanes(), acts.rows);
+        let mut out = Mat::zeros(acts.rows, pw.rows);
+        for parallel in [false, true] {
+            out.data.fill(f32::NAN); // must be fully overwritten
+            g.run_partitioned_into(&acts, &pw, &part, &chunks, parallel, &mut scratch, &mut out);
+            assert_eq!(out.data, want.data, "parallel={parallel}");
+        }
     }
 
     #[test]

@@ -23,6 +23,6 @@ pub mod nibble;
 pub mod packed;
 
 pub use cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
-pub use mixed::{MixedGemm, ParallelConfig, RowPartition};
+pub use mixed::{chunk_tasks, GemmScratch, MixedGemm, ParallelConfig, RowPartition, TaskChunk};
 pub use nibble::NibblePacked;
 pub use packed::{PackedActs, PackedWeights};

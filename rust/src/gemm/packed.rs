@@ -26,14 +26,52 @@ impl PackedActs {
     /// code domain. Bit-identical to `quant::act_code` (same rounding, and
     /// clamping before/after the affine map commutes for alpha > 0).
     pub fn quantize(x: &Mat, alpha: f32, bits: u32) -> PackedActs {
+        let mut out = PackedActs::empty();
+        PackedActs::quantize_into(x, alpha, bits, &mut out);
+        out
+    }
+
+    /// An empty container suitable as a [`PackedActs::quantize_into`]
+    /// target. `with_capacity` preallocates the code buffer so repeated
+    /// `quantize_into` calls up to `cap` elements never allocate.
+    pub fn empty() -> PackedActs {
+        PackedActs::with_capacity(0)
+    }
+
+    /// See [`PackedActs::empty`].
+    pub fn with_capacity(cap: usize) -> PackedActs {
+        PackedActs { rows: 0, cols: 0, codes: Vec::with_capacity(cap), alpha: 1.0, bits: 4 }
+    }
+
+    /// Allocation-free variant of [`PackedActs::quantize`]: writes into
+    /// `out`, reusing its code buffer (grows it only when the capacity is
+    /// insufficient). Bit-identical to `quantize`.
+    pub fn quantize_into(x: &Mat, alpha: f32, bits: u32, out: &mut PackedActs) {
+        PackedActs::quantize_slice_into(&x.data, x.rows, x.cols, alpha, bits, out);
+    }
+
+    /// [`PackedActs::quantize_into`] over a raw row-major slice — the
+    /// workspace slots store activations as flat `Vec<f32>` buffers.
+    pub fn quantize_slice_into(
+        data: &[f32],
+        rows: usize,
+        cols: usize,
+        alpha: f32,
+        bits: u32,
+        out: &mut PackedActs,
+    ) {
+        assert_eq!(data.len(), rows * cols, "shape/data mismatch");
         let n = ((1u32 << bits) - 1) as f32;
         let inv = n / alpha;
-        let codes = x
-            .data
-            .iter()
-            .map(|&v| (v * inv).clamp(0.0, n).round_ties_even() as u8)
-            .collect();
-        PackedActs { rows: x.rows, cols: x.cols, codes, alpha, bits }
+        out.rows = rows;
+        out.cols = cols;
+        out.alpha = alpha;
+        out.bits = bits;
+        out.codes.clear();
+        out.codes.extend(
+            data.iter()
+                .map(|&v| (v * inv).clamp(0.0, n).round_ties_even() as u8),
+        );
     }
 
     /// Dequantized float value of code `c`.

@@ -19,7 +19,9 @@
 //!   and `GemmPoT4` (shift-add), plus the row-partitioned mixed GEMM with
 //!   tile-blocked inner loops and multi-threaded row dispatch.
 //! * [`model`] — the layer-graph representation loaded from the AOT
-//!   manifest, im2col, and the integer layer-by-layer executor.
+//!   manifest, im2col, the plan compiler ([`model::Plan`]), the reusable
+//!   [`model::Workspace`], and the integer executor that walks compiled
+//!   plans.
 //! * [`fpga`] — the FPGA resource/cycle simulator that reproduces Table 6
 //!   (Zynq XC7Z020 / XC7Z045 presets).
 //! * [`runtime`] — the native execution runtime: resolves the
@@ -31,6 +33,42 @@
 //!   deterministic PRNG, CLI parsing, JSON, stats, a thread pool, error
 //!   plumbing, and the bench/property-test harnesses.
 //!
+//! ## Execution model: compile, then run
+//!
+//! RMSMP's layer-wise-uniform row mixing makes a model's compute
+//! structure fully static, so inference is split into a one-time compile
+//! and an allocation-free run:
+//!
+//! * **Plan** ([`model::Plan`]) — at load time the manifest's op program
+//!   is compiled once: buffer names resolve to dense slot ids, per-op
+//!   geometry (im2col output dims, patch-matrix shapes, group slicing)
+//!   is precomputed and shape-checked, each layer's row partition is
+//!   chunked into a GEMM task schedule, and a high-water memory
+//!   footprint is derived (`rmsmp plan` prints it). The plan is
+//!   immutable and shared (`Arc<Plan>`).
+//! * **Workspace** ([`model::Workspace`]) — the mutable half: slot
+//!   buffers, im2col scratch, quantized-activation codes, GEMM staging,
+//!   per-lane row scratch, and the logits matrix, all preallocated from
+//!   the plan's footprint and reused across `infer` calls. Batches at
+//!   or below the plan capacity only `resize` within reserved capacity
+//!   and overwrite in place (a larger batch grows the buffers once,
+//!   then that size is the new steady state). **Sequential steady-state
+//!   `infer` performs zero heap allocation** (pinned by a
+//!   counting-allocator test); with a thread pool attached, every
+//!   buffer is still reused (pinned by a pointer-stability test) and
+//!   the only per-call allocations left are the O(threads) job handles
+//!   the pool boxes per GEMM dispatch.
+//! * **Worker ownership** — the serving coordinator loads weights and
+//!   compiles the plan once, then shares `Arc<ModelWeights>` /
+//!   `Arc<Manifest>` / `Arc<Plan>` across workers; each worker privately
+//!   owns only an executor with its workspace, so an N-worker server
+//!   holds ~1x the model, not Nx.
+//! * **Reference interpreter** — the original name-resolving,
+//!   per-call-allocating interpreter survives as
+//!   `Executor::reference_infer`, the bit-exact oracle for the
+//!   differential property tests (plan output must equal it exactly,
+//!   including grouped conv and residual topologies).
+//!
 //! ## Parallel execution model
 //!
 //! The hot path is the row-partitioned mixed GEMM, and its unit of work
@@ -39,14 +77,17 @@
 //! accumulation.
 //!
 //! * **Task granularity** — each scheme class's row list is split into
-//!   chunks of `ParallelConfig::min_rows_per_task` rows. Chunks are
+//!   chunks of `ParallelConfig::min_rows_per_task` rows (precompiled
+//!   into the plan as [`gemm::TaskChunk`] schedules). Chunks are
 //!   interleaved round-robin across the four per-class queues so cheap
 //!   PoT shift-add chunks and expensive Fixed-8 MAC chunks alternate in
 //!   the task list instead of convoying per class.
 //! * **Scheduling** — tasks drain through
-//!   [`util::pool::ThreadPool::scoped_for`]: workers (plus the calling
-//!   thread) pull the next task index from a shared atomic cursor, which
-//!   self-balances heterogeneous task costs. The call joins before
+//!   [`util::pool::ThreadPool::scoped_for_indexed`]: workers (plus the
+//!   calling thread) pull the next task index from a shared atomic
+//!   cursor, which self-balances heterogeneous task costs; each drain
+//!   loop's lane index selects a preallocated scratch lane, keeping the
+//!   parallel dispatch free of per-task buffers. The call joins before
 //!   returning, so borrowed operands stay valid and all writes are
 //!   published to the caller.
 //! * **Cache blocking** — inner loops are tiled at

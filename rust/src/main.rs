@@ -2,6 +2,7 @@
 //!
 //! Subcommands:
 //!   info       artifact + model summary (layers, schemes, sizes)
+//!   plan       print the compiled execution plan (slots, ops, footprint)
 //!   infer      run integer inference on synthetic images, report logits
 //!   parity     integer executor vs recorded JAX logits
 //!   serve      dynamic-batching serving loop over a Poisson workload
@@ -140,12 +141,13 @@ fn main() -> Result<()> {
                 &flag_specs()
             )
         );
-        println!("\nSubcommands: info | infer | parity | serve | simulate | assign");
+        println!("\nSubcommands: info | plan | infer | parity | serve | simulate | assign");
         return Ok(());
     }
     let artifacts = PathBuf::from(args.get_or("artifacts", artifacts_dir().to_str().unwrap()));
     match args.positional[0].as_str() {
         "info" => cmd_info(&artifacts),
+        "plan" => cmd_plan(&artifacts, &args),
         "infer" => cmd_infer(&artifacts, &args),
         "parity" => cmd_parity(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
@@ -187,6 +189,17 @@ fn cmd_info(dir: &Path) -> Result<()> {
     Ok(())
 }
 
+fn cmd_plan(dir: &Path, args: &Args) -> Result<()> {
+    use rmsmp::model::Plan;
+
+    let (m, w) = load_artifacts(dir)?;
+    let cfg = parallel_cfg(args)?;
+    let capacity = args.get_usize("batch", m.input_shape.first().copied().unwrap_or(1))?;
+    let plan = Plan::compile(&m, &w, capacity, &cfg)?;
+    print!("{}", plan.describe(&w, cfg.lanes()));
+    Ok(())
+}
+
 fn cmd_infer(dir: &Path, args: &Args) -> Result<()> {
     let (m, w) = load_artifacts(dir)?;
     let batch = args.get_usize("batch", 4)?;
@@ -199,7 +212,7 @@ fn cmd_infer(dir: &Path, args: &Args) -> Result<()> {
         *v = rng.uniform(0.0, 1.0);
     }
     let t0 = std::time::Instant::now();
-    let logits = exec.infer(x)?;
+    let logits = exec.infer(&x)?.clone();
     let dt = t0.elapsed();
     println!(
         "integer inference: batch={batch} threads={} in {:.1}ms ({:.2}ms/img, {} MMACs)",
@@ -236,7 +249,7 @@ fn cmd_parity(dir: &Path, args: &Args) -> Result<()> {
     let mut exec = rt.executor(m, w)?;
     let mut x = Tensor4::zeros(shape[0], shape[1], shape[2], shape[3]);
     x.data.copy_from_slice(&input);
-    let got = exec.infer(x)?;
+    let got = exec.infer(&x)?;
     let max_err = got
         .data
         .iter()

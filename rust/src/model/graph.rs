@@ -1,10 +1,20 @@
-//! Graph-program interpreter: layer-by-layer integer inference.
+//! The integer inference executor: compiled-plan runner + reference
+//! interpreter.
 //!
-//! Executes the manifest's op program over the packed weights using the
-//! mixed GEMM cores — the software model of the FPGA's layer-by-layer
-//! execution. Every conv/linear quantizes its input activations (A4) and
-//! dispatches row classes to the scheme cores; adds/GAP/ReLU run in float
-//! (they are elementwise / accumulation stages on the hardware too).
+//! Inference is split compile-then-run (see [`super::plan`]): at load
+//! time the manifest's op program is compiled into a slot-indexed
+//! [`Plan`] and a preallocated [`Workspace`]; at request time
+//! [`Executor::infer`] walks the precompiled ops against the workspace
+//! buffers — no name resolution, no shape discovery, and no
+//! steady-state buffer allocation (batches at or below the plan's
+//! capacity reuse every buffer in place; sequential execution performs
+//! zero heap allocation outright, parallel dispatch additionally boxes
+//! O(threads) pool jobs per GEMM).
+//!
+//! The original name-resolving interpreter survives as
+//! [`Executor::reference_infer`]: the bit-exact oracle the differential
+//! tests pin the plan path against (and the baseline the runtime bench
+//! reports the plan speedup over).
 //!
 //! The executor owns one [`MixedGemm`]; when built via
 //! [`Executor::with_parallel`] the GEMM fans row chunks out over a thread
@@ -17,20 +27,23 @@ use std::sync::Arc;
 
 use crate::ensure;
 use crate::err;
-use crate::gemm::{MixedGemm, PackedActs, ParallelConfig, RowPartition};
+use crate::gemm::{MixedGemm, PackedActs, ParallelConfig};
 use crate::quant::tensor::Tensor4;
 use crate::quant::Mat;
 use crate::util::error::Result;
 use crate::util::pool::ThreadPool;
 
-use super::im2col::{col2im, im2col, im2col_group};
+use super::im2col::{col2im, col2im_slice_into, im2col, im2col_group, im2col_range_into};
 use super::manifest::{Manifest, OpMeta};
+use super::plan::{Plan, PlanOp};
 use super::weights::{LayerWeights, ModelWeights};
+use super::workspace::Workspace;
 
 /// Re-export for the coordinator's type surface.
 pub type Op = OpMeta;
 
-/// A buffer flowing through the program: 4-D feature map or 2-D matrix.
+/// A buffer flowing through the reference interpreter: 4-D feature map
+/// or 2-D matrix.
 #[derive(Clone, Debug)]
 pub enum Buf {
     T4(Tensor4),
@@ -53,17 +66,13 @@ impl Buf {
     }
 }
 
-/// Per-layer cached execution state.
-struct LayerExec {
-    part: RowPartition,
-}
-
-/// The integer inference executor.
+/// The integer inference executor (see module docs).
 pub struct Executor {
-    pub manifest: Manifest,
-    pub weights: ModelWeights,
+    manifest: Arc<Manifest>,
+    weights: Arc<ModelWeights>,
+    plan: Arc<Plan>,
+    ws: Workspace,
     gemm: MixedGemm,
-    cache: HashMap<String, LayerExec>,
     row_parallel: bool,
     /// MACs executed since construction (for GOP accounting).
     pub macs: u64,
@@ -75,38 +84,77 @@ impl Executor {
         Executor::with_parallel(manifest, weights, ParallelConfig::sequential(), None)
     }
 
-    /// Executor with a parallel mixed GEMM. Pass a pool to share threads
-    /// with other executors, or `None` to let the GEMM own one (when the
-    /// config resolves to more than one thread).
+    /// Executor with a parallel mixed GEMM: compiles the plan (sized for
+    /// the manifest's batch dimension) and preallocates the workspace.
+    /// Pass a pool to share threads with other executors, or `None` to
+    /// let the GEMM own one (when the config resolves to more than one
+    /// thread).
     pub fn with_parallel(
         manifest: Manifest,
         weights: ModelWeights,
         cfg: ParallelConfig,
         pool: Option<Arc<ThreadPool>>,
     ) -> Result<Executor> {
-        // validate: every program layer exists in both tables
-        for op in &manifest.program {
-            if let OpMeta::Conv { layer, .. } | OpMeta::Linear { layer, .. } = op {
-                manifest.layer(layer)?;
-                weights.layer(layer)?;
-            }
+        let capacity = manifest.input_shape.first().copied().unwrap_or(1);
+        let plan = Arc::new(Plan::compile(&manifest, &weights, capacity, &cfg)?);
+        Executor::from_shared(Arc::new(manifest), Arc::new(weights), plan, cfg, pool)
+    }
+
+    /// Executor over already-shared model state: the serving coordinator
+    /// compiles one [`Plan`] and loads one [`ModelWeights`], then gives
+    /// every worker its own executor (private [`Workspace`]) over the
+    /// same three `Arc`s — an N-worker server holds ~1x the weights, not
+    /// Nx.
+    pub fn from_shared(
+        manifest: Arc<Manifest>,
+        weights: Arc<ModelWeights>,
+        plan: Arc<Plan>,
+        cfg: ParallelConfig,
+        pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Executor> {
+        // the plan bakes in layer indices and row partitions; reject a
+        // weights table it was not compiled against before an op can
+        // index out of bounds or run with the wrong geometry
+        ensure!(
+            plan.layer_parts.len() == weights.layers.len(),
+            "plan compiled for {} layers, weights have {}",
+            plan.layer_parts.len(),
+            weights.layers.len()
+        );
+        for (part, lw) in plan.layer_parts.iter().zip(&weights.layers) {
+            ensure!(
+                part.total() == lw.rows,
+                "plan/weights mismatch at layer {}: partition covers {} of {} rows",
+                lw.name,
+                part.total(),
+                lw.rows
+            );
         }
-        let cache = weights
-            .layers
-            .iter()
-            .map(|l| {
-                (
-                    l.name.clone(),
-                    LayerExec { part: RowPartition::from_schemes(&l.scheme) },
-                )
-            })
-            .collect();
         let gemm = match pool {
             Some(p) => MixedGemm::with_shared_pool(cfg, p),
             None => MixedGemm::with_config(cfg),
         };
         let row_parallel = gemm.is_parallel();
-        Ok(Executor { manifest, weights, gemm, cache, row_parallel, macs: 0 })
+        let ws = Workspace::new(&plan, gemm.lanes());
+        Ok(Executor { manifest, weights, plan, ws, gemm, row_parallel, macs: 0 })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn weights(&self) -> &ModelWeights {
+        &self.weights
+    }
+
+    /// The compiled execution plan this executor runs.
+    pub fn plan(&self) -> &Plan {
+        &self.plan
+    }
+
+    /// The executor's reusable workspace (introspection / footprint).
+    pub fn workspace(&self) -> &Workspace {
+        &self.ws
     }
 
     /// Toggle row-level GEMM parallelism for subsequent `infer` calls.
@@ -121,33 +169,244 @@ impl Executor {
         self.row_parallel
     }
 
-    /// Run one batch (NCHW input) through the program; returns logits
-    /// (batch, num_classes).
-    pub fn infer(&mut self, x: Tensor4) -> Result<Mat> {
-        let mut bufs: HashMap<String, Buf> = HashMap::new();
-        bufs.insert("in0".to_string(), Buf::T4(x));
-        let program = self.manifest.program.clone();
-        for op in &program {
+    /// Run one batch (NCHW input) through the compiled plan; returns the
+    /// logits (batch, num_classes), borrowed from the workspace (valid
+    /// until the next `infer`). For batches at or below the plan
+    /// capacity (after a first warm-up call when the batch exceeds it),
+    /// no buffer is allocated: sequential execution touches the heap
+    /// zero times; parallel dispatch additionally boxes O(threads) pool
+    /// jobs per GEMM.
+    pub fn infer(&mut self, x: &Tensor4) -> Result<&Mat> {
+        let plan = Arc::clone(&self.plan);
+        let weights = Arc::clone(&self.weights);
+        let (pc, ph, pw) = plan.input_chw;
+        ensure!(
+            (x.c, x.h, x.w) == (pc, ph, pw),
+            "input shape {}x{}x{} != manifest {pc}x{ph}x{pw}",
+            x.c,
+            x.h,
+            x.w
+        );
+        let n = x.n;
+        let act_bits = plan.act_bits;
+        let row_parallel = self.row_parallel;
+        let gemm = &self.gemm;
+        let ws = &mut self.ws;
+        let mut macs = 0u64;
+
+        ws.slots[plan.input_slot].resize(x.data.len(), 0.0);
+        ws.slots[plan.input_slot].copy_from_slice(&x.data);
+
+        for op in &plan.ops {
+            match op {
+                PlanOp::Conv {
+                    layer,
+                    input,
+                    out,
+                    relu,
+                    in_c,
+                    in_h,
+                    in_w,
+                    oh,
+                    ow,
+                    k,
+                    stride,
+                    pad,
+                    groups,
+                    ch_per_group,
+                    filt_per_group,
+                    chunks,
+                } => {
+                    let lw = &weights.layers[*layer];
+                    let part = &plan.layer_parts[*layer];
+                    let inp_len = n * in_c * in_h * in_w;
+                    if *groups == 1 {
+                        im2col_range_into(
+                            &ws.slots[*input][..inp_len],
+                            n,
+                            *in_c,
+                            *in_h,
+                            *in_w,
+                            0,
+                            *in_c,
+                            *k,
+                            *stride,
+                            *pad,
+                            &mut ws.patches,
+                        );
+                        PackedActs::quantize_into(&ws.patches, lw.a_alpha, act_bits, &mut ws.acts);
+                        ws.stage.resize(ws.patches.rows, lw.rows);
+                        gemm.run_partitioned_into(
+                            &ws.acts,
+                            &lw.packed,
+                            part,
+                            chunks,
+                            row_parallel,
+                            &mut ws.scratch,
+                            &mut ws.stage,
+                        );
+                        macs += (ws.patches.rows * lw.rows * lw.cols) as u64;
+                    } else {
+                        // grouped conv: run each group's filters over its
+                        // channel slice, row by row.
+                        ws.stage.resize(n * oh * ow, lw.rows);
+                        for g in 0..*groups {
+                            im2col_range_into(
+                                &ws.slots[*input][..inp_len],
+                                n,
+                                *in_c,
+                                *in_h,
+                                *in_w,
+                                g * ch_per_group,
+                                *ch_per_group,
+                                *k,
+                                *stride,
+                                *pad,
+                                &mut ws.patches,
+                            );
+                            PackedActs::quantize_into(
+                                &ws.patches,
+                                lw.a_alpha,
+                                act_bits,
+                                &mut ws.acts,
+                            );
+                            let batch = ws.patches.rows;
+                            let (col, acc) = ws.scratch.lane0(batch);
+                            for fi in 0..*filt_per_group {
+                                let r = g * filt_per_group + fi;
+                                col.fill(0.0);
+                                gemm.run_row_into(&ws.acts, &lw.packed, r, acc, col);
+                                for (b, &v) in col.iter().enumerate() {
+                                    ws.stage.set(b, r, v);
+                                }
+                            }
+                            macs += (batch * filt_per_group * lw.cols) as u64;
+                        }
+                    }
+
+                    // bias + relu, then fold back into the output slot
+                    for r in 0..ws.stage.rows {
+                        let row = ws.stage.row_mut(r);
+                        for (c, v) in row.iter_mut().enumerate() {
+                            *v += lw.bias[c];
+                            if *relu && *v < 0.0 {
+                                *v = 0.0;
+                            }
+                        }
+                    }
+                    let out_len = n * lw.out_ch * oh * ow;
+                    ws.slots[*out].resize(out_len, 0.0);
+                    col2im_slice_into(
+                        &ws.stage,
+                        n,
+                        lw.out_ch,
+                        *oh,
+                        *ow,
+                        &mut ws.slots[*out][..out_len],
+                    );
+                }
+                PlanOp::Linear { layer, input, out, in_cols, out_cols, chunks } => {
+                    let lw = &weights.layers[*layer];
+                    let part = &plan.layer_parts[*layer];
+                    let in_len = n * in_cols;
+                    PackedActs::quantize_slice_into(
+                        &ws.slots[*input][..in_len],
+                        n,
+                        *in_cols,
+                        lw.a_alpha,
+                        act_bits,
+                        &mut ws.acts,
+                    );
+                    ws.stage.resize(n, lw.rows);
+                    gemm.run_partitioned_into(
+                        &ws.acts,
+                        &lw.packed,
+                        part,
+                        chunks,
+                        row_parallel,
+                        &mut ws.scratch,
+                        &mut ws.stage,
+                    );
+                    macs += (n * lw.rows * lw.cols) as u64;
+                    for r in 0..ws.stage.rows {
+                        let row = ws.stage.row_mut(r);
+                        for (c, v) in row.iter_mut().enumerate() {
+                            *v += lw.bias[c];
+                        }
+                    }
+                    let out_len = n * out_cols;
+                    ws.slots[*out].resize(out_len, 0.0);
+                    ws.slots[*out][..out_len].copy_from_slice(&ws.stage.data[..out_len]);
+                }
+                PlanOp::Add { a, b, out, relu, per_image } => {
+                    add_slots(&mut ws.slots, *a, *b, *out, n * per_image, *relu);
+                }
+                PlanOp::Gap { input, out, c, h, w } => {
+                    // stage through the GEMM staging matrix so in-place
+                    // (input == out) programs stay correct
+                    ws.stage.resize(n, *c);
+                    {
+                        let inp = &ws.slots[*input];
+                        let hw = (h * w) as f32;
+                        for img in 0..n {
+                            for ch in 0..*c {
+                                let base = (img * c + ch) * h * w;
+                                let mut s = 0.0;
+                                for y in 0..*h {
+                                    for xx in 0..*w {
+                                        s += inp[base + y * w + xx];
+                                    }
+                                }
+                                ws.stage.set(img, ch, s / hw);
+                            }
+                        }
+                    }
+                    let out_len = n * c;
+                    ws.slots[*out].resize(out_len, 0.0);
+                    ws.slots[*out][..out_len].copy_from_slice(&ws.stage.data[..out_len]);
+                }
+            }
+        }
+
+        let out_len = n * plan.logits_cols;
+        ws.logits.resize(n, plan.logits_cols);
+        ws.logits
+            .data
+            .copy_from_slice(&ws.slots[plan.logits_slot][..out_len]);
+        self.macs += macs;
+        Ok(&self.ws.logits)
+    }
+
+    /// The original name-resolving interpreter: re-discovers shapes and
+    /// allocates per layer on every call. Kept as the bit-exact oracle
+    /// for the differential tests (plan output must equal this exactly)
+    /// and as the baseline for the plan-vs-interpreter bench.
+    pub fn reference_infer(&mut self, x: &Tensor4) -> Result<Mat> {
+        let manifest = Arc::clone(&self.manifest);
+        let mut bufs: HashMap<&str, Buf> =
+            HashMap::with_capacity(manifest.program.len() + 1);
+        bufs.insert("in0", Buf::T4(x.clone()));
+        for op in &manifest.program {
             match op {
                 OpMeta::Conv { layer, input, out, relu } => {
                     let t = bufs
-                        .get(input)
+                        .get(input.as_str())
                         .ok_or_else(|| err!("missing buffer {input}"))?
                         .t4()?;
-                    let y = self.conv(layer, t, *relu)?;
-                    bufs.insert(out.clone(), Buf::T4(y));
+                    let y = self.ref_conv(layer, t, *relu)?;
+                    bufs.insert(out.as_str(), Buf::T4(y));
                 }
                 OpMeta::Linear { layer, input, out } => {
                     let m = bufs
-                        .get(input)
+                        .get(input.as_str())
                         .ok_or_else(|| err!("missing buffer {input}"))?
                         .mat()?;
-                    let y = self.linear(layer, m)?;
-                    bufs.insert(out.clone(), Buf::M(y));
+                    let y = self.ref_linear(layer, m)?;
+                    bufs.insert(out.as_str(), Buf::M(y));
                 }
                 OpMeta::Add { a, b, out, relu } => {
-                    let ta = bufs.get(a).ok_or_else(|| err!("missing {a}"))?.t4()?;
-                    let tb = bufs.get(b).ok_or_else(|| err!("missing {b}"))?.t4()?;
+                    let ta = bufs.get(a.as_str()).ok_or_else(|| err!("missing {a}"))?.t4()?;
+                    let tb = bufs.get(b.as_str()).ok_or_else(|| err!("missing {b}"))?.t4()?;
                     ensure!(ta.data.len() == tb.data.len(), "add shape mismatch {a} {b}");
                     let mut t = ta.clone();
                     for (v, w) in t.data.iter_mut().zip(&tb.data) {
@@ -156,10 +415,13 @@ impl Executor {
                             *v = 0.0;
                         }
                     }
-                    bufs.insert(out.clone(), Buf::T4(t));
+                    bufs.insert(out.as_str(), Buf::T4(t));
                 }
                 OpMeta::Gap { input, out } => {
-                    let t = bufs.get(input).ok_or_else(|| err!("missing {input}"))?.t4()?;
+                    let t = bufs
+                        .get(input.as_str())
+                        .ok_or_else(|| err!("missing {input}"))?
+                        .t4()?;
                     let mut m = Mat::zeros(t.n, t.c);
                     let hw = (t.h * t.w) as f32;
                     for n in 0..t.n {
@@ -173,7 +435,7 @@ impl Executor {
                             m.set(n, c, s / hw);
                         }
                     }
-                    bufs.insert(out.clone(), Buf::M(m));
+                    bufs.insert(out.as_str(), Buf::M(m));
                 }
             }
         }
@@ -183,13 +445,10 @@ impl Executor {
         }
     }
 
-    fn run_gemm(&self, acts: &PackedActs, lw: &LayerWeights, part: &RowPartition) -> Mat {
-        self.gemm.run_partitioned_with(acts, &lw.packed, part, self.row_parallel)
-    }
-
-    fn conv(&mut self, name: &str, x: &Tensor4, relu: bool) -> Result<Tensor4> {
-        let lw: &LayerWeights = self.weights.layer(name)?;
-        let part = &self.cache[name].part;
+    fn ref_conv(&mut self, name: &str, x: &Tensor4, relu: bool) -> Result<Tensor4> {
+        let li = self.weights.layer_index(name)?;
+        let lw: &LayerWeights = &self.weights.layers[li];
+        let part = &self.plan.layer_parts[li];
         let k = lw.kh;
         let out_ch = lw.out_ch;
         let groups = lw.groups.max(1);
@@ -198,7 +457,10 @@ impl Executor {
             let (patches, oh, ow) = im2col(x, k, lw.stride, lw.pad);
             let acts = PackedActs::quantize(&patches, lw.a_alpha, self.manifest.act_bits);
             self.macs += (patches.rows * lw.rows * lw.cols) as u64;
-            (self.run_gemm(&acts, lw, part), oh, ow)
+            let y = self
+                .gemm
+                .run_partitioned_with(&acts, &lw.packed, part, self.row_parallel);
+            (y, oh, ow)
         } else {
             // grouped conv: run each group's filters over its channel slice.
             let ch_per_group = x.c / groups;
@@ -240,12 +502,15 @@ impl Executor {
         Ok(col2im(&y, x.n, out_ch, oh, ow))
     }
 
-    fn linear(&mut self, name: &str, x: &Mat) -> Result<Mat> {
-        let lw = self.weights.layer(name)?;
-        let part = &self.cache[name].part;
+    fn ref_linear(&mut self, name: &str, x: &Mat) -> Result<Mat> {
+        let li = self.weights.layer_index(name)?;
+        let lw = &self.weights.layers[li];
+        let part = &self.plan.layer_parts[li];
         let acts = PackedActs::quantize(x, lw.a_alpha, self.manifest.act_bits);
         self.macs += (x.rows * lw.rows * lw.cols) as u64;
-        let mut y = self.run_gemm(&acts, lw, part);
+        let mut y = self
+            .gemm
+            .run_partitioned_with(&acts, &lw.packed, part, self.row_parallel);
         for r in 0..y.rows {
             let row = y.row_mut(r);
             for (c, v) in row.iter_mut().enumerate() {
@@ -253,5 +518,63 @@ impl Executor {
             }
         }
         Ok(y)
+    }
+}
+
+/// Elementwise `out = a + b` (optionally ReLU-clamped) over flat slot
+/// buffers, handling every aliasing pattern without copies or
+/// allocation. Arithmetic matches the reference interpreter exactly
+/// (`a[i] + b[i]`, then clamp).
+fn add_slots(slots: &mut [Vec<f32>], a: usize, b: usize, out: usize, len: usize, relu: bool) {
+    let fuse = |v: f32| if relu && v < 0.0 { 0.0 } else { v };
+    if out == a && out == b {
+        let o = &mut slots[out];
+        o.resize(len, 0.0);
+        for v in o[..len].iter_mut() {
+            *v = fuse(*v + *v);
+        }
+    } else if out == a {
+        let (o, rhs) = two_slots(slots, out, b);
+        o.resize(len, 0.0);
+        for (v, &w) in o[..len].iter_mut().zip(&rhs[..len]) {
+            *v = fuse(*v + w);
+        }
+    } else if out == b {
+        let (o, lhs) = two_slots(slots, out, a);
+        o.resize(len, 0.0);
+        for (v, &w) in o[..len].iter_mut().zip(&lhs[..len]) {
+            *v = fuse(w + *v);
+        }
+    } else if a == b {
+        let (o, lhs) = two_slots(slots, out, a);
+        o.resize(len, 0.0);
+        for (v, &w) in o[..len].iter_mut().zip(&lhs[..len]) {
+            *v = fuse(w + w);
+        }
+    } else {
+        // three distinct slots: move the target out (no allocation — the
+        // Vec's buffer moves with it) so all three can be viewed at once
+        let mut o = std::mem::take(&mut slots[out]);
+        o.resize(len, 0.0);
+        for ((v, &x), &y) in o[..len]
+            .iter_mut()
+            .zip(&slots[a][..len])
+            .zip(&slots[b][..len])
+        {
+            *v = fuse(x + y);
+        }
+        slots[out] = o;
+    }
+}
+
+/// Disjoint (mutable, shared) borrows of two slots, `w != r`.
+fn two_slots(slots: &mut [Vec<f32>], w: usize, r: usize) -> (&mut Vec<f32>, &Vec<f32>) {
+    debug_assert_ne!(w, r);
+    if w < r {
+        let (lo, hi) = slots.split_at_mut(r);
+        (&mut lo[w], &hi[0])
+    } else {
+        let (lo, hi) = slots.split_at_mut(w);
+        (&mut hi[0], &lo[r])
     }
 }

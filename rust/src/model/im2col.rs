@@ -19,38 +19,39 @@ pub fn out_dim(in_dim: usize, k: usize, stride: usize, pad: usize) -> usize {
 /// with the same column order as the OIHW weight reshape (ch-major, then
 /// ky, kx) — matching `w.reshape(out_ch, -1)` on the Python side.
 pub fn im2col(x: &Tensor4, k: usize, stride: usize, pad: usize) -> (Mat, usize, usize) {
-    let oh = out_dim(x.h, k, stride, pad);
-    let ow = out_dim(x.w, k, stride, pad);
-    let cols = x.c * k * k;
-    let mut m = Mat::zeros(x.n * oh * ow, cols);
-    for n in 0..x.n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = (n * oh + oy) * ow + ox;
-                let dst = m.row_mut(row);
-                let mut ci = 0;
-                for c in 0..x.c {
-                    for ky in 0..k {
-                        let iy = (oy * stride + ky) as isize - pad as isize;
-                        for kx in 0..k {
-                            let ix = (ox * stride + kx) as isize - pad as isize;
-                            dst[ci] = if iy >= 0
-                                && (iy as usize) < x.h
-                                && ix >= 0
-                                && (ix as usize) < x.w
-                            {
-                                x.at(n, c, iy as usize, ix as usize)
-                            } else {
-                                0.0
-                            };
-                            ci += 1;
-                        }
-                    }
-                }
-            }
-        }
-    }
+    let mut m = Mat::zeros(0, 0);
+    let (oh, ow) = im2col_into(x, k, stride, pad, &mut m);
     (m, oh, ow)
+}
+
+/// Allocation-free [`im2col`]: unrolls into `out` (resized in place, so a
+/// preallocated matrix is reused across calls). Returns (out_h, out_w).
+pub fn im2col_into(
+    x: &Tensor4,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Mat,
+) -> (usize, usize) {
+    im2col_slice_into(&x.data, x.n, x.c, x.h, x.w, k, stride, pad, out)
+}
+
+/// [`im2col_into`] over a raw NCHW slice — the workspace slots store
+/// feature maps as flat `Vec<f32>` buffers. Every element of `out` is
+/// written (padding positions are written as literal zeros), so the
+/// target never needs pre-zeroing.
+pub fn im2col_slice_into(
+    data: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Mat,
+) -> (usize, usize) {
+    im2col_range_into(data, n, c, h, w, 0, c, k, stride, pad, out)
 }
 
 /// im2col restricted to one channel group (depthwise: group g = channel g).
@@ -62,29 +63,76 @@ pub fn im2col_group(
     stride: usize,
     pad: usize,
 ) -> (Mat, usize, usize) {
-    let oh = out_dim(x.h, k, stride, pad);
-    let ow = out_dim(x.w, k, stride, pad);
-    let cols = ch_per_group * k * k;
-    let mut m = Mat::zeros(x.n * oh * ow, cols);
-    let c0 = group * ch_per_group;
-    for n in 0..x.n {
+    let mut m = Mat::zeros(0, 0);
+    let (oh, ow) = im2col_group_into(x, group, ch_per_group, k, stride, pad, &mut m);
+    (m, oh, ow)
+}
+
+/// Allocation-free [`im2col_group`]; see [`im2col_into`].
+pub fn im2col_group_into(
+    x: &Tensor4,
+    group: usize,
+    ch_per_group: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Mat,
+) -> (usize, usize) {
+    im2col_range_into(
+        &x.data,
+        x.n,
+        x.c,
+        x.h,
+        x.w,
+        group * ch_per_group,
+        ch_per_group,
+        k,
+        stride,
+        pad,
+        out,
+    )
+}
+
+/// Shared kernel: unroll channels `c0..c0+nc` of an NCHW slice into patch
+/// rows of `(n*oh*ow, nc*k*k)`.
+pub fn im2col_range_into(
+    data: &[f32],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    c0: usize,
+    nc: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Mat,
+) -> (usize, usize) {
+    assert_eq!(data.len(), n * c * h * w, "NCHW shape/data mismatch");
+    assert!(c0 + nc <= c, "channel range out of bounds");
+    let oh = out_dim(h, k, stride, pad);
+    let ow = out_dim(w, k, stride, pad);
+    let cols = nc * k * k;
+    out.resize(n * oh * ow, cols);
+    for img in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
-                let row = (n * oh + oy) * ow + ox;
-                let dst = m.row_mut(row);
+                let row = (img * oh + oy) * ow + ox;
+                let dst = out.row_mut(row);
                 let mut ci = 0;
-                for dc in 0..ch_per_group {
-                    let c = c0 + dc;
+                for dc in 0..nc {
+                    let ch = c0 + dc;
+                    let plane = (img * c + ch) * h * w;
                     for ky in 0..k {
                         let iy = (oy * stride + ky) as isize - pad as isize;
                         for kx in 0..k {
                             let ix = (ox * stride + kx) as isize - pad as isize;
                             dst[ci] = if iy >= 0
-                                && (iy as usize) < x.h
+                                && (iy as usize) < h
                                 && ix >= 0
-                                && (ix as usize) < x.w
+                                && (ix as usize) < w
                             {
-                                x.at(n, c, iy as usize, ix as usize)
+                                data[plane + iy as usize * w + ix as usize]
                             } else {
                                 0.0
                             };
@@ -95,25 +143,39 @@ pub fn im2col_group(
             }
         }
     }
-    (m, oh, ow)
+    (oh, ow)
 }
 
 /// Fold GEMM output (n*oh*ow, out_ch) back into NCHW.
 pub fn col2im(y: &Mat, n: usize, out_ch: usize, oh: usize, ow: usize) -> Tensor4 {
+    let mut t = Tensor4::zeros(n, out_ch, oh, ow);
+    col2im_slice_into(y, n, out_ch, oh, ow, &mut t.data);
+    t
+}
+
+/// Allocation-free [`col2im`]: folds into a flat NCHW slice (a workspace
+/// slot). Every element of `dst` is written.
+pub fn col2im_slice_into(
+    y: &Mat,
+    n: usize,
+    out_ch: usize,
+    oh: usize,
+    ow: usize,
+    dst: &mut [f32],
+) {
     assert_eq!(y.rows, n * oh * ow);
     assert_eq!(y.cols, out_ch);
-    let mut t = Tensor4::zeros(n, out_ch, oh, ow);
+    assert_eq!(dst.len(), n * out_ch * oh * ow);
     for img in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
                 let row = (img * oh + oy) * ow + ox;
                 for c in 0..out_ch {
-                    t.set(img, c, oy, ox, y.at(row, c));
+                    dst[((img * out_ch + c) * oh + oy) * ow + ox] = y.at(row, c);
                 }
             }
         }
     }
-    t
 }
 
 /// Reference float conv (oracle for the GEMM path).

@@ -1,19 +1,30 @@
-//! Model representation + integer inference executor.
+//! Model representation + compiled-plan integer inference.
 //!
-//! * [`manifest`] — parses `artifacts/manifest.json` (graph program, layer
-//!   table, ratio) via the in-repo JSON parser.
-//! * [`weights`]  — loads `artifacts/weights.bin` (folded weights, schemes,
-//!   alphas) and packs them into [`crate::gemm::PackedWeights`].
-//! * [`im2col`]   — conv -> GEMM lowering for the integer path.
-//! * [`graph`]    — the op-program interpreter: executes conv/linear/add/
-//!   gap over the mixed GEMM cores, layer by layer — the deployment path
-//!   the FPGA simulator models, runnable on CPU.
+//! * [`manifest`]  — parses `artifacts/manifest.json` (graph program,
+//!   layer table, ratio) via the in-repo JSON parser.
+//! * [`weights`]   — loads `artifacts/weights.bin` (folded weights,
+//!   schemes, alphas) and packs them into [`crate::gemm::PackedWeights`].
+//! * [`im2col`]    — conv -> GEMM lowering for the integer path, with
+//!   `_into` variants that reuse workspace buffers.
+//! * [`plan`]      — the plan compiler: program names resolved to dense
+//!   slot ids, per-op geometry precomputed and shape-checked, GEMM task
+//!   schedules chunked, memory footprint sized — all once, at load time.
+//! * [`workspace`] — the preallocated mutable buffers one inference
+//!   stream reuses across calls (zero steady-state allocation).
+//! * [`graph`]     — the executor: walks the compiled plan against the
+//!   workspace (`infer`), and keeps the original name-resolving
+//!   interpreter as the differential-test oracle (`reference_infer`) —
+//!   the deployment path the FPGA simulator models, runnable on CPU.
 
 pub mod graph;
 pub mod im2col;
 pub mod manifest;
+pub mod plan;
 pub mod weights;
+pub mod workspace;
 
 pub use graph::{Executor, Op};
 pub use manifest::Manifest;
+pub use plan::{Plan, PlanOp};
 pub use weights::{LayerWeights, ModelWeights};
+pub use workspace::Workspace;

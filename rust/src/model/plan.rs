@@ -1,0 +1,533 @@
+//! The plan compiler: `manifest.program` → a slot-indexed [`Plan`].
+//!
+//! RMSMP's layer-wise-uniform row mixing makes the compute structure of a
+//! model fully static: every buffer shape, im2col geometry, group slice,
+//! and GEMM partition is derivable from the manifest + weights at load
+//! time. This module does that derivation **once** — resolving buffer
+//! names to dense slot ids, precomputing per-op geometry, shape-checking
+//! the whole program, chunking each layer's row partition into a GEMM
+//! task schedule, and sizing a high-water memory footprint — so that the
+//! executor's steady-state `infer` is a plain walk over precompiled ops
+//! against preallocated [`super::workspace::Workspace`] buffers, with no
+//! name resolution, no shape discovery, and no buffer allocation (see
+//! the crate docs for the exact per-mode zero-allocation guarantee).
+//!
+//! A `Plan` is immutable and shareable (`Arc<Plan>`): the serving
+//! coordinator compiles one per model and hands every worker the same
+//! plan next to its private workspace.
+
+use std::collections::HashMap;
+use std::fmt::Write as _;
+
+use crate::ensure;
+use crate::err;
+use crate::gemm::{chunk_tasks, ParallelConfig, RowPartition, TaskChunk};
+use crate::util::error::Result;
+
+use super::im2col::out_dim;
+use super::manifest::{Manifest, OpMeta};
+use super::weights::ModelWeights;
+
+/// Dense index of a program buffer ("in0", "b3", "logits", ...).
+pub type SlotId = usize;
+
+/// Shape of a slot's contents, per batch image (T4) or batch row (M).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SlotKind {
+    /// Feature map: (channels, height, width) per image.
+    T4 { c: usize, h: usize, w: usize },
+    /// Matrix: `cols` values per batch row.
+    M { cols: usize },
+}
+
+impl SlotKind {
+    /// Elements per batch image.
+    pub fn per_image(&self) -> usize {
+        match *self {
+            SlotKind::T4 { c, h, w } => c * h * w,
+            SlotKind::M { cols } => cols,
+        }
+    }
+}
+
+/// One resolved program buffer.
+#[derive(Clone, Debug)]
+pub struct SlotSpec {
+    pub name: String,
+    /// Shape of the last write (programs may reuse a name; the per-op
+    /// geometry below is what the runner actually consumes).
+    pub kind: SlotKind,
+    /// High-water elements per batch image across every write.
+    pub per_image: usize,
+}
+
+/// One compiled op: slot ids + all geometry the runner needs, resolved
+/// and shape-checked at load time.
+#[derive(Clone, Debug)]
+pub enum PlanOp {
+    Conv {
+        /// Index into `ModelWeights::layers` (== `Plan::layer_parts`).
+        layer: usize,
+        input: SlotId,
+        out: SlotId,
+        relu: bool,
+        /// Input feature-map dims per image.
+        in_c: usize,
+        in_h: usize,
+        in_w: usize,
+        /// Output spatial dims.
+        oh: usize,
+        ow: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+        groups: usize,
+        ch_per_group: usize,
+        filt_per_group: usize,
+        /// Precompiled GEMM task schedule (empty for grouped conv, which
+        /// dispatches row-by-row per group).
+        chunks: Vec<TaskChunk>,
+    },
+    Linear {
+        layer: usize,
+        input: SlotId,
+        out: SlotId,
+        in_cols: usize,
+        out_cols: usize,
+        chunks: Vec<TaskChunk>,
+    },
+    Add {
+        a: SlotId,
+        b: SlotId,
+        out: SlotId,
+        relu: bool,
+        /// Elements per image of each operand (shapes checked equal).
+        per_image: usize,
+    },
+    Gap {
+        input: SlotId,
+        out: SlotId,
+        c: usize,
+        h: usize,
+        w: usize,
+    },
+}
+
+/// Preallocation sizes for one workspace instance, all at `capacity`
+/// batch images. Single source of truth for [`super::Workspace`] and the
+/// `rmsmp plan` footprint report.
+#[derive(Clone, Debug)]
+pub struct Footprint {
+    pub capacity: usize,
+    pub lanes: usize,
+    /// Per-slot f32 elements.
+    pub slot_elems: Vec<usize>,
+    /// im2col patch-matrix f32 elements.
+    pub patch_elems: usize,
+    /// Quantized activation codes (u8).
+    pub acts_elems: usize,
+    /// GEMM/Gap staging matrix f32 elements.
+    pub gemm_out_elems: usize,
+    /// Per-lane scratch length (one f32 column + one i32 accumulator).
+    pub lane_elems: usize,
+    /// Logits output matrix f32 elements.
+    pub logits_elems: usize,
+}
+
+impl Footprint {
+    pub fn slot_bytes(&self, slot: SlotId) -> usize {
+        4 * self.slot_elems[slot]
+    }
+
+    pub fn total_slot_bytes(&self) -> usize {
+        4 * self.slot_elems.iter().sum::<usize>()
+    }
+
+    /// Bytes of the shared scratch (patches + acts + staging + lanes +
+    /// logits).
+    pub fn scratch_bytes(&self) -> usize {
+        4 * self.patch_elems
+            + self.acts_elems
+            + 4 * self.gemm_out_elems
+            + self.lanes * self.lane_elems * (4 + 4)
+            + 4 * self.logits_elems
+    }
+
+    /// Total workspace bytes.
+    pub fn total_bytes(&self) -> usize {
+        self.total_slot_bytes() + self.scratch_bytes()
+    }
+}
+
+/// A compiled, immutable execution plan (see module docs).
+#[derive(Clone, Debug)]
+pub struct Plan {
+    pub model: String,
+    /// Batch images the workspace preallocates for; larger batches still
+    /// run correctly, growing the buffers once (a warm-up event).
+    pub capacity: usize,
+    /// GEMM rows per task chunk the schedules were compiled with.
+    pub chunk_rows: usize,
+    pub act_bits: u32,
+    pub input_slot: SlotId,
+    /// Expected (c, h, w) of the inference input.
+    pub input_chw: (usize, usize, usize),
+    pub logits_slot: SlotId,
+    pub logits_cols: usize,
+    pub slots: Vec<SlotSpec>,
+    pub ops: Vec<PlanOp>,
+    /// Row partition of every weights layer, in `ModelWeights::layers`
+    /// order.
+    pub layer_parts: Vec<RowPartition>,
+    /// High-water per-image scratch geometry (see [`Footprint`]).
+    pub max_patch_per_image: usize,
+    pub max_acts_per_image: usize,
+    pub max_gemm_rows_per_image: usize,
+    pub max_gemm_out_per_image: usize,
+}
+
+impl Plan {
+    /// Compile `manifest.program` against `weights`. `capacity` sizes the
+    /// workspace high-water marks (batch images); `cfg` fixes the GEMM
+    /// task granularity so plan schedules match the engine's chunking.
+    pub fn compile(
+        manifest: &Manifest,
+        weights: &ModelWeights,
+        capacity: usize,
+        cfg: &ParallelConfig,
+    ) -> Result<Plan> {
+        ensure!(
+            manifest.input_shape.len() == 4,
+            "manifest input_shape must be NCHW, got {:?}",
+            manifest.input_shape
+        );
+        let capacity = capacity.max(1);
+        let chunk_rows = cfg.min_rows_per_task.max(1);
+        let input_chw = (
+            manifest.input_shape[1],
+            manifest.input_shape[2],
+            manifest.input_shape[3],
+        );
+
+        let layer_parts: Vec<RowPartition> = weights
+            .layers
+            .iter()
+            .map(|l| RowPartition::from_schemes(&l.scheme))
+            .collect();
+
+        let mut slots: Vec<SlotSpec> = Vec::new();
+        let mut index: HashMap<String, SlotId> = HashMap::new();
+
+        // The program input is pre-seeded under the fixed name "in0",
+        // mirroring the interpreter's calling convention.
+        let input_kind = SlotKind::T4 { c: input_chw.0, h: input_chw.1, w: input_chw.2 };
+        let input_slot = 0;
+        slots.push(SlotSpec {
+            name: "in0".to_string(),
+            kind: input_kind,
+            per_image: input_kind.per_image(),
+        });
+        index.insert("in0".to_string(), input_slot);
+
+        // Every id in `index` has been written (define records the shape
+        // of the latest write in slots[id].kind), so lookup is the only
+        // failure mode.
+        let read = |slots: &[SlotSpec],
+                    index: &HashMap<String, SlotId>,
+                    name: &str|
+         -> Result<(SlotId, SlotKind)> {
+            let id = *index
+                .get(name)
+                .ok_or_else(|| err!("missing buffer {name}"))?;
+            Ok((id, slots[id].kind))
+        };
+
+        let mut ops = Vec::with_capacity(manifest.program.len());
+        let mut max_patch = 0usize;
+        let mut max_acts = 0usize;
+        let mut max_gemm_rows = 0usize;
+        let mut max_gemm_out = 0usize;
+
+        for op in &manifest.program {
+            match op {
+                OpMeta::Conv { layer, input, out, relu } => {
+                    manifest.layer(layer)?;
+                    let li = weights.layer_index(layer)?;
+                    let lw = &weights.layers[li];
+                    let (in_id, kind) = read(&slots, &index, input)?;
+                    let SlotKind::T4 { c, h, w } = kind else {
+                        return Err(err!("conv {layer}: input {input} is not a 4-D buffer"));
+                    };
+                    let k = lw.kh;
+                    let stride = lw.stride;
+                    let pad = lw.pad;
+                    let groups = lw.groups.max(1);
+                    ensure!(stride >= 1, "conv {layer}: stride must be >= 1");
+                    ensure!(
+                        h + 2 * pad >= k && w + 2 * pad >= k,
+                        "conv {layer}: {k}x{k} kernel exceeds padded {h}x{w} input"
+                    );
+                    ensure!(
+                        c % groups == 0,
+                        "conv {layer}: {c} input channels not divisible by {groups} groups"
+                    );
+                    ensure!(
+                        lw.out_ch % groups == 0,
+                        "conv {layer}: {} filters not divisible by {groups} groups",
+                        lw.out_ch
+                    );
+                    ensure!(
+                        lw.rows == lw.out_ch,
+                        "conv {layer}: weight rows {} != out channels {}",
+                        lw.rows,
+                        lw.out_ch
+                    );
+                    let ch_per_group = c / groups;
+                    ensure!(
+                        ch_per_group * k * k == lw.cols,
+                        "conv {layer}: im2col cols {} != weight cols {}",
+                        ch_per_group * k * k,
+                        lw.cols
+                    );
+                    let oh = out_dim(h, k, stride, pad);
+                    let ow = out_dim(w, k, stride, pad);
+                    let out_kind = SlotKind::T4 { c: lw.out_ch, h: oh, w: ow };
+                    let out_id = define(&mut slots, &mut index, out, out_kind);
+                    max_patch = max_patch.max(oh * ow * lw.cols);
+                    max_acts = max_acts.max(oh * ow * lw.cols);
+                    max_gemm_rows = max_gemm_rows.max(oh * ow);
+                    max_gemm_out = max_gemm_out.max(oh * ow * lw.out_ch);
+                    let chunks = if groups == 1 {
+                        chunk_tasks(&layer_parts[li], chunk_rows)
+                    } else {
+                        Vec::new()
+                    };
+                    ops.push(PlanOp::Conv {
+                        layer: li,
+                        input: in_id,
+                        out: out_id,
+                        relu: *relu,
+                        in_c: c,
+                        in_h: h,
+                        in_w: w,
+                        oh,
+                        ow,
+                        k,
+                        stride,
+                        pad,
+                        groups,
+                        ch_per_group,
+                        filt_per_group: lw.out_ch / groups,
+                        chunks,
+                    });
+                }
+                OpMeta::Linear { layer, input, out } => {
+                    manifest.layer(layer)?;
+                    let li = weights.layer_index(layer)?;
+                    let lw = &weights.layers[li];
+                    let (in_id, kind) = read(&slots, &index, input)?;
+                    let SlotKind::M { cols } = kind else {
+                        return Err(err!("linear {layer}: input {input} is not a 2-D buffer"));
+                    };
+                    ensure!(
+                        cols == lw.cols,
+                        "linear {layer}: input cols {cols} != weight cols {}",
+                        lw.cols
+                    );
+                    let out_id =
+                        define(&mut slots, &mut index, out, SlotKind::M {
+                            cols: lw.rows,
+                        });
+                    max_acts = max_acts.max(lw.cols);
+                    max_gemm_rows = max_gemm_rows.max(1);
+                    max_gemm_out = max_gemm_out.max(lw.rows);
+                    ops.push(PlanOp::Linear {
+                        layer: li,
+                        input: in_id,
+                        out: out_id,
+                        in_cols: lw.cols,
+                        out_cols: lw.rows,
+                        chunks: chunk_tasks(&layer_parts[li], chunk_rows),
+                    });
+                }
+                OpMeta::Add { a, b, out, relu } => {
+                    let (a_id, ka) = read(&slots, &index, a)?;
+                    let (b_id, kb) = read(&slots, &index, b)?;
+                    let (SlotKind::T4 { .. }, SlotKind::T4 { .. }) = (ka, kb) else {
+                        return Err(err!("add {a}+{b}: operands must be 4-D buffers"));
+                    };
+                    ensure!(
+                        ka.per_image() == kb.per_image(),
+                        "add shape mismatch {a} {b}"
+                    );
+                    let out_id = define(&mut slots, &mut index, out, ka);
+                    ops.push(PlanOp::Add {
+                        a: a_id,
+                        b: b_id,
+                        out: out_id,
+                        relu: *relu,
+                        per_image: ka.per_image(),
+                    });
+                }
+                OpMeta::Gap { input, out } => {
+                    let (in_id, kind) = read(&slots, &index, input)?;
+                    let SlotKind::T4 { c, h, w } = kind else {
+                        return Err(err!("gap: input {input} is not a 4-D buffer"));
+                    };
+                    let out_id =
+                        define(&mut slots, &mut index, out, SlotKind::M { cols: c });
+                    // gap stages its output through the GEMM staging
+                    // matrix (aliasing-safe), so it contributes to it
+                    max_gemm_out = max_gemm_out.max(c);
+                    ops.push(PlanOp::Gap { input: in_id, out: out_id, c, h, w });
+                }
+            }
+        }
+
+        let logits_slot = *index
+            .get("logits")
+            .ok_or_else(|| err!("program produced no 'logits' matrix"))?;
+        let SlotKind::M { cols: logits_cols } = slots[logits_slot].kind else {
+            return Err(err!("program produced no 'logits' matrix"));
+        };
+
+        Ok(Plan {
+            model: manifest.model.clone(),
+            capacity,
+            chunk_rows,
+            act_bits: manifest.act_bits,
+            input_slot,
+            input_chw,
+            logits_slot,
+            logits_cols,
+            slots,
+            ops,
+            layer_parts,
+            max_patch_per_image: max_patch,
+            max_acts_per_image: max_acts,
+            max_gemm_rows_per_image: max_gemm_rows,
+            max_gemm_out_per_image: max_gemm_out,
+        })
+    }
+
+    /// Preallocation sizes for a workspace with `lanes` GEMM scratch
+    /// lanes (see [`crate::gemm::MixedGemm::lanes`]).
+    pub fn footprint(&self, lanes: usize) -> Footprint {
+        let n = self.capacity;
+        Footprint {
+            capacity: n,
+            lanes: lanes.max(1),
+            slot_elems: self.slots.iter().map(|s| s.per_image * n).collect(),
+            patch_elems: self.max_patch_per_image * n,
+            acts_elems: self.max_acts_per_image * n,
+            gemm_out_elems: self.max_gemm_out_per_image * n,
+            lane_elems: self.max_gemm_rows_per_image * n,
+            logits_elems: self.logits_cols * n,
+        }
+    }
+
+    /// Human-readable plan dump for `rmsmp plan`: ops, slot assignments,
+    /// per-slot bytes, and the total workspace footprint — the numbers
+    /// an FPGA BRAM budget would be sized from.
+    pub fn describe(&self, weights: &ModelWeights, lanes: usize) -> String {
+        let fp = self.footprint(lanes);
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "plan {}: {} ops, {} slots, capacity batch {}, chunk rows {}, act bits {}",
+            self.model,
+            self.ops.len(),
+            self.slots.len(),
+            self.capacity,
+            self.chunk_rows,
+            self.act_bits
+        );
+        let _ = writeln!(s, "slots:");
+        for (i, spec) in self.slots.iter().enumerate() {
+            let kind = match spec.kind {
+                SlotKind::T4 { c, h, w } => format!("T4 {c}x{h}x{w}"),
+                SlotKind::M { cols } => format!("M  {cols}"),
+            };
+            let _ = writeln!(
+                s,
+                "  s{i:<3} {:<12} {kind:<16} {:>9} elems/img {:>12} B",
+                spec.name,
+                spec.per_image,
+                fp.slot_bytes(i)
+            );
+        }
+        let _ = writeln!(s, "ops:");
+        for (i, op) in self.ops.iter().enumerate() {
+            let line = match op {
+                PlanOp::Conv {
+                    layer, input, out, relu, oh, ow, k, stride, pad, groups, chunks, ..
+                } => {
+                    let lw = &weights.layers[*layer];
+                    format!(
+                        "conv   {:<12} s{input} -> s{out}  {}x{} k{k} s{stride} p{pad} g{groups} \
+                         oh={oh} ow={ow} chunks={}{}",
+                        lw.name,
+                        lw.rows,
+                        lw.cols,
+                        chunks.len(),
+                        if *relu { " relu" } else { "" }
+                    )
+                }
+                PlanOp::Linear { layer, input, out, in_cols, out_cols, chunks } => {
+                    let lw = &weights.layers[*layer];
+                    format!(
+                        "linear {:<12} s{input} -> s{out}  {out_cols}x{in_cols} chunks={}",
+                        lw.name,
+                        chunks.len()
+                    )
+                }
+                PlanOp::Add { a, b, out, relu, per_image } => format!(
+                    "add    {:<12} s{a} + s{b} -> s{out}  {per_image} elems/img{}",
+                    "",
+                    if *relu { " relu" } else { "" }
+                ),
+                PlanOp::Gap { input, out, c, h, w } => {
+                    format!("gap    {:<12} s{input} -> s{out}  {c}x{h}x{w} -> {c}", "")
+                }
+            };
+            let _ = writeln!(s, "  {i:<3} {line}");
+        }
+        let _ = writeln!(
+            s,
+            "workspace (lanes={}): slots {} B + patches {} B + acts {} B + staging {} B + \
+             lane scratch {} B + logits {} B = {} B total",
+            fp.lanes,
+            fp.total_slot_bytes(),
+            4 * fp.patch_elems,
+            fp.acts_elems,
+            4 * fp.gemm_out_elems,
+            fp.lanes * fp.lane_elems * 8,
+            4 * fp.logits_elems,
+            fp.total_bytes()
+        );
+        s
+    }
+}
+
+/// Record a write of `kind` to slot `name`, creating the slot on first
+/// use and widening its high-water footprint.
+fn define(
+    slots: &mut Vec<SlotSpec>,
+    index: &mut HashMap<String, SlotId>,
+    name: &str,
+    kind: SlotKind,
+) -> SlotId {
+    match index.get(name) {
+        Some(&id) => {
+            slots[id].kind = kind;
+            slots[id].per_image = slots[id].per_image.max(kind.per_image());
+            id
+        }
+        None => {
+            let id = slots.len();
+            slots.push(SlotSpec { name: name.to_string(), kind, per_image: kind.per_image() });
+            index.insert(name.to_string(), id);
+            id
+        }
+    }
+}

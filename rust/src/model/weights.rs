@@ -153,6 +153,15 @@ impl ModelWeights {
             .ok_or_else(|| err!("layer {name:?} not in weights.bin"))
     }
 
+    /// Index of a layer in [`ModelWeights::layers`] — the plan compiler
+    /// resolves names to indices once so the runner never string-matches.
+    pub fn layer_index(&self, name: &str) -> Result<usize> {
+        self.layers
+            .iter()
+            .position(|l| l.name == name)
+            .ok_or_else(|| err!("layer {name:?} not in weights.bin"))
+    }
+
     /// Total quantized model size in bytes (the compression headline).
     pub fn quantized_bytes(&self) -> usize {
         self.layers

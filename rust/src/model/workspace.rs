@@ -1,0 +1,85 @@
+//! Reusable inference workspace: every buffer `infer` touches, owned and
+//! preallocated once per executor.
+//!
+//! A [`Workspace`] is the mutable half of the compile-then-run split (the
+//! immutable half is the [`super::plan::Plan`]): slot buffers for every
+//! program value, the im2col patch matrix, the quantized-activation code
+//! buffer, the GEMM/Gap staging matrix, the per-lane GEMM row scratch,
+//! and the logits output. All of them are sized from the plan's
+//! high-water [`super::plan::Footprint`] at construction, so a
+//! steady-state `infer` call at or below the plan's batch capacity never
+//! allocates a buffer — everything is `resize`d (a length change inside
+//! existing capacity) and overwritten in place; sequentially that means
+//! zero heap allocation outright, while parallel dispatch still boxes
+//! O(threads) pool jobs per GEMM. Batches beyond capacity run
+//! correctly: the buffers grow once and the new capacity becomes the
+//! steady state.
+//!
+//! One workspace per concurrent inference stream: the serving coordinator
+//! gives every worker its own, next to the shared `Arc<Plan>` and
+//! `Arc<ModelWeights>`.
+
+use crate::gemm::{GemmScratch, PackedActs};
+use crate::quant::Mat;
+
+use super::plan::Plan;
+
+/// Preallocated mutable state for one inference stream (see module docs).
+pub struct Workspace {
+    /// One flat f32 buffer per plan slot.
+    pub(crate) slots: Vec<Vec<f32>>,
+    /// im2col patch matrix, reused by every conv.
+    pub(crate) patches: Mat,
+    /// Quantized activation codes, reused by every conv/linear.
+    pub(crate) acts: PackedActs,
+    /// GEMM output / Gap staging matrix.
+    pub(crate) stage: Mat,
+    /// Per-lane GEMM row scratch (column + i32 accumulator).
+    pub(crate) scratch: GemmScratch,
+    /// Logits returned by `infer` (borrowed out, overwritten per call).
+    pub(crate) logits: Mat,
+}
+
+fn mat_with_capacity(cap: usize) -> Mat {
+    Mat { rows: 0, cols: 0, data: Vec::with_capacity(cap) }
+}
+
+impl Workspace {
+    /// Preallocate for `plan` with `lanes` GEMM scratch lanes (see
+    /// [`crate::gemm::MixedGemm::lanes`]).
+    pub fn new(plan: &Plan, lanes: usize) -> Workspace {
+        let fp = plan.footprint(lanes);
+        Workspace {
+            slots: fp.slot_elems.iter().map(|&n| Vec::with_capacity(n)).collect(),
+            patches: mat_with_capacity(fp.patch_elems),
+            acts: PackedActs::with_capacity(fp.acts_elems),
+            stage: mat_with_capacity(fp.gemm_out_elems),
+            scratch: GemmScratch::with_capacity(fp.lanes, fp.lane_elems),
+            logits: mat_with_capacity(fp.logits_elems),
+        }
+    }
+
+    /// Data pointers of every owned buffer. Steady-state reuse tests pin
+    /// these across `infer` calls: if no buffer reallocates, the pointers
+    /// are identical call over call.
+    pub fn buffer_ptrs(&self) -> Vec<usize> {
+        let mut p: Vec<usize> = self.slots.iter().map(|s| s.as_ptr() as usize).collect();
+        p.push(self.patches.data.as_ptr() as usize);
+        p.push(self.acts.codes.as_ptr() as usize);
+        p.push(self.stage.data.as_ptr() as usize);
+        p.push(self.logits.data.as_ptr() as usize);
+        p.extend(self.scratch.buffer_ptrs());
+        p
+    }
+
+    /// Bytes currently reserved across all buffers.
+    pub fn allocated_bytes(&self) -> usize {
+        let slots: usize = self.slots.iter().map(|s| 4 * s.capacity()).sum();
+        slots
+            + 4 * self.patches.data.capacity()
+            + self.acts.codes.capacity()
+            + 4 * self.stage.data.capacity()
+            + 4 * self.logits.data.capacity()
+            + self.scratch.allocated_bytes()
+    }
+}

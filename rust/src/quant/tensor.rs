@@ -22,6 +22,17 @@ impl Mat {
         Mat { rows, cols, data }
     }
 
+    /// Reshape in place, reusing the existing allocation whenever the
+    /// capacity allows (the workspace path sizes matrices once and then
+    /// `resize`s them per layer without touching the allocator). Newly
+    /// exposed elements are zero; surviving elements keep their old
+    /// values — callers are expected to overwrite every cell.
+    pub fn resize(&mut self, rows: usize, cols: usize) {
+        self.rows = rows;
+        self.cols = cols;
+        self.data.resize(rows * cols, 0.0);
+    }
+
     pub fn from_rows(rows: &[Vec<f32>]) -> Mat {
         let r = rows.len();
         let c = rows.first().map_or(0, |v| v.len());

@@ -3,10 +3,11 @@
 //!
 //! Owns the resolved [`ParallelConfig`] and (when it resolves to more
 //! than one thread) the process-wide [`ThreadPool`] that the parallel
-//! mixed GEMM fans row chunks out onto. The CLI and the serving
-//! coordinator both build their executors through [`Runtime::executor`],
-//! so one pool serves every model instance instead of each spawning its
-//! own threads.
+//! mixed GEMM fans row chunks out onto. Executors built here run the
+//! compiled-plan path: [`Runtime::executor`] compiles the model's plan
+//! and preallocates its workspace, [`Runtime::executor_shared`] reuses
+//! an already-compiled plan across workers. One pool serves every model
+//! instance instead of each spawning its own threads.
 //!
 //! Historical note: this module used to wrap PJRT via the external `xla`
 //! crate to execute AOT HLO artifacts. The build is offline and
@@ -56,9 +57,24 @@ impl Runtime {
         self.pool.clone()
     }
 
-    /// Build an integer executor wired to this runtime's pool + config.
+    /// Build an integer executor wired to this runtime's pool + config:
+    /// compiles the manifest's program into a [`crate::model::Plan`] and
+    /// preallocates the executor's [`crate::model::Workspace`], so the
+    /// returned executor runs the compiled plan-based path.
     pub fn executor(&self, manifest: Manifest, weights: ModelWeights) -> Result<Executor> {
         Executor::with_parallel(manifest, weights, self.cfg, self.pool())
+    }
+
+    /// Plan-based executor over already-shared model state (see
+    /// [`Executor::from_shared`]): the multi-worker entry point — one
+    /// weights/plan allocation, one private workspace per executor.
+    pub fn executor_shared(
+        &self,
+        manifest: std::sync::Arc<Manifest>,
+        weights: std::sync::Arc<ModelWeights>,
+        plan: std::sync::Arc<crate::model::Plan>,
+    ) -> Result<Executor> {
+        Executor::from_shared(manifest, weights, plan, self.cfg, self.pool())
     }
 }
 

@@ -101,6 +101,20 @@ impl ThreadPool {
     where
         F: Fn(usize) + Sync,
     {
+        self.scoped_for_indexed(n_tasks, |i, _lane| f(i));
+    }
+
+    /// [`Self::scoped_for`] that additionally hands each task the *lane*
+    /// of its executing drain loop: lane 0 is the calling thread, lanes
+    /// `1..=helpers` are the enqueued helper jobs (`helpers <=
+    /// self.threads()`). Two tasks can observe the same lane only
+    /// sequentially, never concurrently — which makes the lane a sound
+    /// index into caller-preallocated per-lane scratch buffers (the
+    /// zero-allocation GEMM dispatch relies on exactly this).
+    pub fn scoped_for_indexed<F>(&self, n_tasks: usize, f: F)
+    where
+        F: Fn(usize, usize) + Sync,
+    {
         if n_tasks == 0 {
             return;
         }
@@ -112,13 +126,13 @@ impl ThreadPool {
             panicked: AtomicBool,
         }
 
-        fn drain<F: Fn(usize) + Sync>(ctx: &Ctx<'_, F>) {
+        fn drain<F: Fn(usize, usize) + Sync>(ctx: &Ctx<'_, F>, lane: usize) {
             loop {
                 let i = ctx.next.fetch_add(1, Ordering::Relaxed);
                 if i >= ctx.n {
                     return;
                 }
-                if catch_unwind(AssertUnwindSafe(|| (ctx.f)(i))).is_err() {
+                if catch_unwind(AssertUnwindSafe(|| (ctx.f)(i, lane))).is_err() {
                     ctx.panicked.store(true, Ordering::SeqCst);
                 }
             }
@@ -134,24 +148,24 @@ impl ThreadPool {
         // The caller drains too, so tasks complete even on a busy pool;
         // n_tasks - 1 helpers is therefore always enough.
         let helpers = self.threads().min(n_tasks - 1);
-        let task: &(dyn Fn() + Sync) = &|| drain(&ctx);
+        let task: &(dyn Fn(usize) + Sync) = &|lane| drain(&ctx, lane);
         // SAFETY: the join barrier below keeps `task` (and everything it
         // borrows) alive until every helper job has returned.
         let task = unsafe {
-            std::mem::transmute::<&(dyn Fn() + Sync), &'static (dyn Fn() + Sync)>(task)
+            std::mem::transmute::<&(dyn Fn(usize) + Sync), &'static (dyn Fn(usize) + Sync)>(task)
         };
         let done = Arc::new((Mutex::new(0usize), Condvar::new()));
-        for _ in 0..helpers {
+        for lane in 1..=helpers {
             let done = Arc::clone(&done);
             self.execute(move || {
-                task();
+                task(lane);
                 let (lock, cv) = &*done;
                 *lock.lock().unwrap() += 1;
                 cv.notify_all();
             });
         }
 
-        drain(&ctx);
+        drain(&ctx, 0);
 
         let (lock, cv) = &*done;
         let mut g = lock.lock().unwrap();

@@ -1,0 +1,186 @@
+//! Steady-state zero-allocation guard for the compiled-plan executor.
+//!
+//! A counting global allocator wraps `System`; after one warm-up call,
+//! repeated `infer` calls over the preallocated workspace must perform
+//! **zero** heap allocations (sequential path — the parallel path boxes
+//! one pool job per helper per dispatch, and is covered by the
+//! buffer-pointer-stability test in `test_plan.rs` instead).
+//!
+//! This file contains exactly one test so no concurrent test can
+//! allocate while the steady-state window is being counted.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+use rmsmp::gemm::PackedWeights;
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::model::Executor;
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::rng::Rng;
+
+static ALLOCS: AtomicUsize = AtomicUsize::new(0);
+
+struct CountingAlloc;
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(layout)
+    }
+
+    unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+        System.dealloc(ptr, layout)
+    }
+
+    unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(ptr, layout, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+        ALLOCS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(layout)
+    }
+}
+
+#[global_allocator]
+static COUNTER: CountingAlloc = CountingAlloc;
+
+fn layer(
+    name: &str,
+    kind: &str,
+    w: Mat,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    schemes: Vec<Scheme>,
+) -> LayerWeights {
+    let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    LayerWeights {
+        name: name.into(),
+        kind: kind.into(),
+        rows: w.rows,
+        cols: w.cols,
+        out_ch: conv.0,
+        in_ch: conv.1,
+        kh: conv.2,
+        kw: conv.3,
+        stride,
+        pad,
+        groups,
+        a_alpha: 1.0,
+        scheme: schemes,
+        alpha,
+        bias: vec![0.01; w.rows],
+        w,
+        packed,
+    }
+}
+
+/// Every op kind in one model: conv → depthwise conv → residual add →
+/// gap → linear.
+fn model() -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(
+        &Json::parse(
+            r#"{
+        "model": "alloc", "arch": "resnet", "num_classes": 3,
+        "input_shape": [2, 2, 6, 6], "ratio": [65, 30, 5], "act_bits": 4,
+        "layers": [
+          {"name": "c1", "kind": "conv", "rows": 4, "cols": 18,
+           "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [0, 0, 0, 0]},
+          {"name": "dw", "kind": "conv", "rows": 4, "cols": 9,
+           "stride": 1, "pad": 1, "groups": 4, "a_alpha": 1.0,
+           "scheme_counts": [0, 0, 0, 0]},
+          {"name": "fc", "kind": "linear", "rows": 3, "cols": 4,
+           "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [0, 0, 0, 0]}
+        ],
+        "program": [
+          {"op": "conv", "layer": "c1", "in": "in0", "out": "b0", "relu": true},
+          {"op": "conv", "layer": "dw", "in": "b0", "out": "b1", "relu": false},
+          {"op": "add", "a": "b0", "b": "b1", "out": "b2", "relu": true},
+          {"op": "gap", "in": "b2", "out": "g0"},
+          {"op": "linear", "layer": "fc", "in": "g0", "out": "logits"}
+        ]
+      }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(7);
+    let schemes4 = vec![
+        Scheme::PotW4A4,
+        Scheme::FixedW4A4,
+        Scheme::FixedW8A4,
+        Scheme::ApotW4A4,
+    ];
+    let layers = vec![
+        layer(
+            "c1",
+            "conv",
+            Mat::from_vec(4, 18, rng.normal_vec(4 * 18, 0.5)),
+            (4, 2, 3, 3),
+            1,
+            1,
+            1,
+            schemes4.clone(),
+        ),
+        layer(
+            "dw",
+            "conv",
+            Mat::from_vec(4, 9, rng.normal_vec(4 * 9, 0.5)),
+            (4, 4, 3, 3),
+            1,
+            1,
+            4,
+            schemes4,
+        ),
+        layer(
+            "fc",
+            "linear",
+            Mat::from_vec(3, 4, rng.normal_vec(12, 0.5)),
+            (3, 4, 1, 1),
+            0,
+            0,
+            1,
+            vec![Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4],
+        ),
+    ];
+    (manifest, ModelWeights { layers })
+}
+
+#[test]
+fn steady_state_infer_performs_zero_allocations() {
+    let (manifest, weights) = model();
+    let mut exec = Executor::new(manifest, weights).unwrap();
+    let mut rng = Rng::new(9);
+    let mut x = Tensor4::zeros(2, 2, 6, 6);
+    for v in x.data.iter_mut() {
+        *v = rng.uniform(0.0, 1.0);
+    }
+
+    // warm-up: first call may touch the allocator (it should not, given
+    // the plan-sized preallocation, but that is pinned by the assert on
+    // the steady-state window below, not here)
+    let warm = exec.infer(&x).unwrap().clone();
+
+    let before = ALLOCS.load(Ordering::Relaxed);
+    for _ in 0..5 {
+        let y = exec.infer(&x).unwrap();
+        assert_eq!(y.data, warm.data);
+    }
+    let after = ALLOCS.load(Ordering::Relaxed);
+    assert_eq!(
+        after - before,
+        0,
+        "steady-state infer touched the allocator {} times",
+        after - before
+    );
+}

@@ -72,7 +72,7 @@ fn integer_executor_matches_recorded_jax_logits() {
     let mut exec = Executor::new(m, w).unwrap();
     let mut x = Tensor4::zeros(shape[0], shape[1], shape[2], shape[3]);
     x.data.copy_from_slice(&input);
-    let got = exec.infer(x).unwrap();
+    let got = exec.infer(&x).unwrap();
     let scale = want.iter().fold(0.0f32, |m, v| m.max(v.abs())).max(1e-6);
     let err = got
         .data
@@ -100,7 +100,7 @@ fn parallel_executor_matches_sequential_on_artifacts() {
     let mut par = rt.executor(m, w).unwrap();
     let mut x = Tensor4::zeros(shape[0], shape[1], shape[2], shape[3]);
     x.data.copy_from_slice(&input);
-    let a = seq.infer(x.clone()).unwrap();
-    let b = par.infer(x).unwrap();
+    let a = seq.infer(&x).unwrap();
+    let b = par.infer(&x).unwrap();
     assert_eq!(a.data, b.data, "parallel executor diverged on real model");
 }

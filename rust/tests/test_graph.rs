@@ -130,7 +130,7 @@ fn executor_matches_float_reference() {
     let (manifest, weights) = tiny_model();
     let mut exec = Executor::new(manifest, weights.clone()).unwrap();
     let x = rand_input(3);
-    let got = exec.infer(x.clone()).unwrap();
+    let got = exec.infer(&x).unwrap();
     let want = reference(&weights, &x);
     let err = got.max_abs_err(&want);
     assert!(err < 1e-3, "executor vs reference err {err}");
@@ -142,8 +142,8 @@ fn executor_is_deterministic() {
     let (manifest, weights) = tiny_model();
     let mut e1 = Executor::new(manifest.clone(), weights.clone()).unwrap();
     let mut e2 = Executor::new(manifest, weights).unwrap();
-    let a = e1.infer(rand_input(9)).unwrap();
-    let b = e2.infer(rand_input(9)).unwrap();
+    let a = e1.infer(&rand_input(9)).unwrap();
+    let b = e2.infer(&rand_input(9)).unwrap();
     assert_eq!(a.data, b.data);
 }
 
@@ -180,8 +180,8 @@ fn residual_add_and_relu() {
     let mut exec = Executor::new(m2, weights.clone()).unwrap();
     let mut base = Executor::new(manifest, weights).unwrap();
     let x = rand_input(4);
-    let doubled = exec.infer(x.clone()).unwrap();
-    let single = base.infer(x).unwrap();
+    let doubled = exec.infer(&x).unwrap();
+    let single = base.infer(&x).unwrap();
     // GAP is linear; doubling pre-GAP doubles the fc input, and the fc
     // quantizes *activations* so equality is approximate
     let scale = single.data.iter().fold(0.0f32, |m, v| m.max(v.abs()));

@@ -1,0 +1,335 @@
+//! Compiled-plan invariants: the plan-walking executor must be bit-exact
+//! vs the reference interpreter (`reference_infer`) across randomized
+//! programs — conv with stride/pad, grouped conv, residual Add+ReLU, Gap,
+//! linear head — and thread counts {1, 8}; the `_into` buffer-reuse
+//! variants must equal their allocating originals; and steady-state
+//! workspace buffers must stay pointer-stable across calls.
+
+use rmsmp::gemm::{PackedActs, PackedWeights, ParallelConfig};
+use rmsmp::model::im2col::{im2col, im2col_group, im2col_group_into, im2col_into};
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::model::{Executor, Plan};
+use rmsmp::prop_assert;
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::prop::{check, Gen};
+use rmsmp::util::rng::Rng;
+
+const SCHEMES: [Scheme; 4] = [
+    Scheme::PotW4A4,
+    Scheme::FixedW4A4,
+    Scheme::FixedW8A4,
+    Scheme::ApotW4A4,
+];
+
+fn layer(
+    name: &str,
+    kind: &str,
+    w: Mat,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    schemes: Vec<Scheme>,
+    bias: Vec<f32>,
+) -> LayerWeights {
+    let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    LayerWeights {
+        name: name.into(),
+        kind: kind.into(),
+        rows: w.rows,
+        cols: w.cols,
+        out_ch: conv.0,
+        in_ch: conv.1,
+        kh: conv.2,
+        kw: conv.3,
+        stride,
+        pad,
+        groups,
+        a_alpha: 1.0,
+        scheme: schemes,
+        alpha,
+        bias,
+        w,
+        packed,
+    }
+}
+
+fn rand_layer(
+    g: &mut Gen,
+    name: &str,
+    kind: &str,
+    rows: usize,
+    cols: usize,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> LayerWeights {
+    let w = Mat::from_vec(rows, cols, g.vec_normal(rows * cols, rows * cols, 0.5));
+    let schemes: Vec<Scheme> = (0..rows).map(|_| *g.choice(&SCHEMES)).collect();
+    let bias = g.vec_normal(rows, rows, 0.1);
+    layer(name, kind, w, conv, stride, pad, groups, schemes, bias)
+}
+
+/// Build a random model of one of three topologies:
+///   0 — conv(k3, random stride/pad) → gap → fc
+///   1 — conv(k3 s1 p1) → depthwise conv (groups = channels) → gap → fc
+///   2 — conv(k3 s1 p1, relu) → conv(k3 s1 p1) → add(+relu) → gap → fc
+fn build_model(g: &mut Gen, topo: usize) -> (Manifest, ModelWeights, Tensor4) {
+    let n = g.usize_in(1, 3);
+    let c_in = *g.choice(&[2usize, 3]);
+    let hw = *g.choice(&[6usize, 7]);
+    let c1 = 4usize;
+    let classes = 3usize;
+    let (stride, pad) = if topo == 0 {
+        (*g.choice(&[1usize, 2]), *g.choice(&[0usize, 1]))
+    } else {
+        (1, 1)
+    };
+
+    let mut layers = vec![rand_layer(
+        g,
+        "c1",
+        "conv",
+        c1,
+        c_in * 9,
+        (c1, c_in, 3, 3),
+        stride,
+        pad,
+        1,
+    )];
+    let mut meta = format!(
+        r#"{{"name":"c1","kind":"conv","rows":{c1},"cols":{},"stride":{stride},"pad":{pad},"groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#,
+        c_in * 9
+    );
+    let mut prog =
+        r#"{"op":"conv","layer":"c1","in":"in0","out":"b0","relu":true}"#.to_string();
+
+    let gap_in = match topo {
+        1 => {
+            layers.push(rand_layer(g, "dw", "conv", c1, 9, (c1, c1, 3, 3), 1, 1, c1));
+            meta.push_str(&format!(
+                r#",{{"name":"dw","kind":"conv","rows":{c1},"cols":9,"stride":1,"pad":1,"groups":{c1},"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#
+            ));
+            prog.push_str(r#",{"op":"conv","layer":"dw","in":"b0","out":"b1","relu":false}"#);
+            "b1"
+        }
+        2 => {
+            layers.push(rand_layer(
+                g,
+                "c2",
+                "conv",
+                c1,
+                c1 * 9,
+                (c1, c1, 3, 3),
+                1,
+                1,
+                1,
+            ));
+            meta.push_str(&format!(
+                r#",{{"name":"c2","kind":"conv","rows":{c1},"cols":{},"stride":1,"pad":1,"groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#,
+                c1 * 9
+            ));
+            prog.push_str(r#",{"op":"conv","layer":"c2","in":"b0","out":"b1","relu":false}"#);
+            prog.push_str(r#",{"op":"add","a":"b0","b":"b1","out":"b2","relu":true}"#);
+            "b2"
+        }
+        _ => "b0",
+    };
+
+    layers.push(rand_layer(g, "fc", "linear", classes, c1, (classes, c1, 1, 1), 0, 0, 1));
+    meta.push_str(&format!(
+        r#",{{"name":"fc","kind":"linear","rows":{classes},"cols":{c1},"stride":0,"pad":0,"groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#
+    ));
+    prog.push_str(&format!(
+        r#",{{"op":"gap","in":"{gap_in}","out":"g0"}},{{"op":"linear","layer":"fc","in":"g0","out":"logits"}}"#
+    ));
+
+    let json = format!(
+        r#"{{"model":"prop","arch":"resnet","num_classes":{classes},
+            "input_shape":[{n},{c_in},{hw},{hw}],"ratio":[65,30,5],"act_bits":4,
+            "layers":[{meta}],"program":[{prog}]}}"#
+    );
+    let manifest = Manifest::from_json(&Json::parse(&json).unwrap()).unwrap();
+
+    let mut x = Tensor4::zeros(n, c_in, hw, hw);
+    for v in x.data.iter_mut() {
+        *v = g.f32_in(0.0, 1.2);
+    }
+    (manifest, ModelWeights { layers }, x)
+}
+
+#[test]
+fn prop_plan_bit_exact_vs_reference_interpreter() {
+    check("plan-vs-reference", 24, |g| {
+        let topo = g.usize_in(0, 2);
+        let (manifest, weights, x) = build_model(g, topo);
+        let mut per_thread: Vec<Vec<f32>> = Vec::new();
+        for &threads in &[1usize, 8] {
+            let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+            let mut exec =
+                Executor::with_parallel(manifest.clone(), weights.clone(), cfg, None)
+                    .map_err(|e| format!("compile failed (topo {topo}): {e}"))?;
+            let plan_out = exec.infer(&x).unwrap().clone();
+            let ref_out = exec.reference_infer(&x).unwrap();
+            prop_assert!(
+                plan_out.data == ref_out.data,
+                "plan != reference at {threads} threads (topo {topo})"
+            );
+            // second call over warm buffers must not drift
+            let again = exec.infer(&x).unwrap().clone();
+            prop_assert!(again.data == plan_out.data, "warm re-run drifted (topo {topo})");
+            per_thread.push(plan_out.data);
+        }
+        prop_assert!(
+            per_thread[0] == per_thread[1],
+            "thread count changed plan output (topo {topo})"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_handles_aliased_add() {
+    // add writing one of its own operands (out == a == b) must match the
+    // interpreter's copy semantics
+    let mut g = Gen { rng: Rng::new(17), size: 1.0 };
+    let (manifest, weights, x) = build_model(&mut g, 0);
+    let mut m2 = manifest.clone();
+    let alias = Manifest::from_json(
+        &Json::parse(
+            r#"{"model":"t","arch":"resnet","num_classes":3,"input_shape":[1,2,6,6],
+                "ratio":[65,30,5],"act_bits":4,"layers":[],
+                "program":[{"op":"add","a":"b0","b":"b0","out":"b0","relu":false}]}"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    m2.program.insert(1, alias.program[0].clone());
+    let mut exec = Executor::new(m2, weights).unwrap();
+    let plan_out = exec.infer(&x).unwrap().clone();
+    let ref_out = exec.reference_infer(&x).unwrap();
+    assert_eq!(plan_out.data, ref_out.data, "aliased add diverged");
+}
+
+#[test]
+fn im2col_into_matches_im2col() {
+    let mut rng = Rng::new(3);
+    let mut x = Tensor4::zeros(2, 3, 7, 7);
+    for v in x.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let mut got = Mat::zeros(5, 4); // deliberately dirty + wrong-shaped
+    for (k, s, p) in [(3, 1, 1), (3, 2, 0), (1, 1, 0), (5, 2, 2)] {
+        let (want, oh, ow) = im2col(&x, k, s, p);
+        let (oh2, ow2) = im2col_into(&x, k, s, p, &mut got);
+        assert_eq!((oh, ow), (oh2, ow2), "k={k} s={s} p={p}");
+        assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+        assert_eq!(got.data, want.data, "k={k} s={s} p={p}");
+    }
+}
+
+#[test]
+fn im2col_group_into_matches_im2col_group() {
+    let mut rng = Rng::new(4);
+    let mut x = Tensor4::zeros(1, 4, 6, 6);
+    for v in x.data.iter_mut() {
+        *v = rng.normal();
+    }
+    let mut got = Mat::zeros(0, 0);
+    for group in 0..2 {
+        let (want, oh, ow) = im2col_group(&x, group, 2, 3, 1, 1);
+        let (oh2, ow2) = im2col_group_into(&x, group, 2, 3, 1, 1, &mut got);
+        assert_eq!((oh, ow), (oh2, ow2));
+        assert_eq!(got.data, want.data, "group {group}");
+    }
+}
+
+#[test]
+fn quantize_into_matches_quantize() {
+    let mut rng = Rng::new(5);
+    let x = Mat::from_vec(3, 5, (0..15).map(|_| rng.uniform(-0.2, 1.4)).collect());
+    let want = PackedActs::quantize(&x, 0.9, 4);
+    let mut got = PackedActs::with_capacity(2); // must grow correctly
+    PackedActs::quantize_into(&x, 0.9, 4, &mut got);
+    assert_eq!((got.rows, got.cols), (want.rows, want.cols));
+    assert_eq!(got.codes, want.codes);
+    assert_eq!((got.alpha, got.bits), (want.alpha, want.bits));
+    // reuse the same buffer for a different shape/alpha
+    let y = Mat::from_vec(2, 4, (0..8).map(|_| rng.uniform(0.0, 2.0)).collect());
+    let want2 = PackedActs::quantize(&y, 1.7, 4);
+    PackedActs::quantize_into(&y, 1.7, 4, &mut got);
+    assert_eq!(got.codes, want2.codes);
+    assert_eq!((got.rows, got.cols), (2, 4));
+}
+
+#[test]
+fn workspace_buffers_are_stable_across_calls() {
+    for threads in [1usize, 8] {
+        let mut g = Gen { rng: Rng::new(11), size: 1.0 };
+        let (manifest, weights, x) = build_model(&mut g, 2);
+        let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+        let mut exec = Executor::with_parallel(manifest, weights, cfg, None).unwrap();
+        let _ = exec.infer(&x).unwrap(); // warm-up
+        let ptrs = exec.workspace().buffer_ptrs();
+        let out1 = exec.infer(&x).unwrap().clone();
+        let out2 = exec.infer(&x).unwrap().clone();
+        assert_eq!(out1.data, out2.data);
+        assert_eq!(
+            ptrs,
+            exec.workspace().buffer_ptrs(),
+            "workspace reallocated in steady state ({threads} threads)"
+        );
+    }
+}
+
+#[test]
+fn plan_compile_rejects_bad_programs() {
+    let mut g = Gen { rng: Rng::new(23), size: 1.0 };
+    let (manifest, weights, _) = build_model(&mut g, 0);
+    let cfg = ParallelConfig::sequential();
+
+    // program reading a buffer nothing produced
+    let mut m = manifest.clone();
+    if let rmsmp::model::manifest::OpMeta::Conv { input, .. } = &mut m.program[0] {
+        *input = "bogus".into();
+    }
+    assert!(Plan::compile(&m, &weights, 1, &cfg).is_err());
+
+    // program that never produces logits
+    let mut m = manifest.clone();
+    if let rmsmp::model::manifest::OpMeta::Linear { out, .. } = &mut m.program[2] {
+        *out = "not_logits".into();
+    }
+    assert!(Plan::compile(&m, &weights, 1, &cfg).is_err());
+
+    // well-formed program compiles
+    assert!(Plan::compile(&manifest, &weights, 1, &cfg).is_ok());
+}
+
+#[test]
+fn plan_reports_footprint_and_describe() {
+    let mut g = Gen { rng: Rng::new(29), size: 1.0 };
+    let (manifest, weights, _x) = build_model(&mut g, 2);
+    let plan = Plan::compile(&manifest, &weights, 4, &ParallelConfig::sequential()).unwrap();
+    let fp = plan.footprint(1);
+    assert_eq!(fp.slot_elems.len(), plan.slots.len());
+    assert!(fp.total_bytes() > 0);
+    assert!(fp.total_slot_bytes() + fp.scratch_bytes() == fp.total_bytes());
+    let desc = plan.describe(&weights, 1);
+    assert!(desc.contains("slots:"), "{desc}");
+    assert!(desc.contains("ops:"), "{desc}");
+    assert!(desc.contains("workspace"), "{desc}");
+    // the executor's workspace reserves at least the promised footprint
+    let exec = Executor::new(manifest, weights).unwrap();
+    let promised = exec.plan().footprint(1).total_bytes();
+    assert!(
+        exec.workspace().allocated_bytes() >= promised,
+        "workspace under-reserves: {} < {promised}",
+        exec.workspace().allocated_bytes()
+    );
+}
