@@ -1,19 +1,25 @@
 //! GEMM core benchmarks — the software twins of Table 6's heterogeneous
 //! cores, at the paper's ResNet-18 layer shapes, plus the parallel
-//! mixed-GEMM speedup that the CI bench-regression job tracks.
+//! mixed-GEMM speedup and the scalar-vs-SIMD / row-vs-block kernel
+//! comparisons the CI bench-regression job tracks.
 //!
 //! Emits `BENCH_gemm.json` (ns/op per case, per scheme class, sequential
-//! vs parallel, plus the 512^3 speedup) via `util::bench::Bench`.
+//! vs parallel, the 512^3 parallel speedup, and `simd_speedup` — the
+//! single-thread 512^3 win of the class-sorted SIMD block kernels over
+//! the row-at-a-time scalar baseline) via `util::bench::Bench`.
 //!
 //! Run: `cargo bench --bench bench_gemm` (RMSMP_BENCH_FAST=1 for CI).
 
 use std::hint::black_box;
 
 use rmsmp::gemm::cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
-use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights, ParallelConfig, RowPartition};
+use rmsmp::gemm::{
+    chunk_tasks, GemmScratch, Isa, MixedGemm, PackedActs, PackedWeights, ParallelConfig,
+    RowPartition, SortedWeights,
+};
 use rmsmp::quant::{default_alpha, Mat, Scheme};
 use rmsmp::util::bench::Bench;
-use rmsmp::util::json::num;
+use rmsmp::util::json::{num, s};
 use rmsmp::util::rng::Rng;
 
 fn problem(
@@ -105,6 +111,75 @@ fn main() {
     let speedup = seq_ns / par_ns;
     println!("bench gemm/mixed512 speedup: {speedup:.2}x at {threads} threads");
 
+    // kernel-generation comparison at 512^3, all single-thread:
+    //   row_scalar   — the PR 2 baseline: run_row_tiled per row, unsorted
+    //   block_scalar — class-sorted layout + micro-kernel blocks, scalar dot
+    //   block_simd   — same blocks on the detected SIMD ISA
+    let isa = Isa::detect();
+    let single = ParallelConfig { threads: 1, ..ParallelConfig::default() };
+    let mut scalar_engine = MixedGemm::with_config(single);
+    scalar_engine.set_isa(Isa::Scalar);
+    let mut simd_engine = MixedGemm::with_config(single);
+    simd_engine.set_isa(isa);
+    let sw = SortedWeights::from_packed(&pw);
+    let chunks = chunk_tasks(sw.partition(), single.min_rows_per_task);
+    let mut scratch = GemmScratch::new(1);
+    let mut out = Mat::zeros(b512, r512);
+    {
+        let mut acc = vec![0i32; b512];
+        let mut col = vec![0.0f32; b512];
+        b.case_ops("mixed512_row_scalar", Some(macs512), || {
+            for r in 0..r512 {
+                col.fill(0.0);
+                scalar_engine.core_for(pw.scheme[r]).run_row_tiled(
+                    black_box(&acts),
+                    black_box(&pw),
+                    r,
+                    single.tile_cols,
+                    &mut acc,
+                    &mut col,
+                );
+                for (bi, &v) in col.iter().enumerate() {
+                    out.set(bi, r, v);
+                }
+            }
+            black_box(&out);
+        });
+    }
+    b.case_ops("mixed512_block_scalar", Some(macs512), || {
+        scalar_engine.run_partitioned_into(
+            black_box(&acts),
+            black_box(&sw),
+            &chunks,
+            false,
+            &mut scratch,
+            &mut out,
+        );
+        black_box(&out);
+    });
+    b.case_ops("mixed512_block_simd", Some(macs512), || {
+        simd_engine.run_partitioned_into(
+            black_box(&acts),
+            black_box(&sw),
+            &chunks,
+            false,
+            &mut scratch,
+            &mut out,
+        );
+        black_box(&out);
+    });
+    let ns_of = |name: &str| b.get(name).map(|m| m.ns_per_iter()).unwrap_or(f64::NAN);
+    let row_scalar_ns = ns_of("mixed512_row_scalar");
+    let block_scalar_ns = ns_of("mixed512_block_scalar");
+    let block_simd_ns = ns_of("mixed512_block_simd");
+    // the acceptance metric: sorted blocks + SIMD vs the PR 2 scalar kernels
+    let simd_speedup = row_scalar_ns / block_simd_ns;
+    let block_speedup = row_scalar_ns / block_scalar_ns;
+    println!(
+        "bench gemm/mixed512 kernels ({isa:?}): block {block_speedup:.2}x, \
+         block+simd {simd_speedup:.2}x vs row-scalar"
+    );
+
     // packing cost (quantize activations)
     let mut rng = Rng::new(11);
     let xd: Vec<f32> = (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect();
@@ -113,7 +188,13 @@ fn main() {
         black_box(PackedActs::quantize(black_box(&x), 1.0, 4));
     });
 
-    let extra = vec![("threads", num(threads as f64)), ("speedup_512", num(speedup))];
+    let extra = vec![
+        ("threads", num(threads as f64)),
+        ("speedup_512", num(speedup)),
+        ("isa", s(&format!("{isa:?}"))),
+        ("simd_speedup", num(simd_speedup)),
+        ("block_speedup", num(block_speedup)),
+    ];
     match b.write_json(extra) {
         Ok(path) => println!("bench gemm: wrote {}", path.display()),
         Err(e) => eprintln!("bench gemm: could not write JSON: {e}"),

@@ -9,7 +9,7 @@
 
 use std::hint::black_box;
 
-use rmsmp::gemm::{PackedWeights, ParallelConfig};
+use rmsmp::gemm::{PackedWeights, ParallelConfig, SortedWeights};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
 use rmsmp::model::Executor;
@@ -31,6 +31,7 @@ fn layer(
     alpha: Vec<f32>,
 ) -> LayerWeights {
     let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
     LayerWeights {
         name: name.into(),
         kind: kind.into(),
@@ -49,6 +50,7 @@ fn layer(
         bias: vec![0.0; w.rows],
         w,
         packed,
+        sorted,
     }
 }
 

@@ -6,16 +6,30 @@
 //! point frame), exactly mirroring the DSP-vs-LUT datapath split on the
 //! FPGA.
 //!
-//! The inner loops are blocked over the column dimension
-//! ([`GemmCore::run_row_tiled`]): one weight-row tile stays hot in L1
-//! while it is swept across every batch row, and the per-(batch, row) i32
-//! accumulator survives across tiles so the dequantizing multiply happens
-//! exactly once per output element. Integer accumulation is associative,
-//! so any tile size produces bit-identical results for the three RMSMP
-//! cores; the APoT baseline core accumulates in f32 and is deterministic
-//! for a *fixed* tile size (which is all the parallel executor needs).
+//! Two kernel shapes per core:
+//!
+//! * [`GemmCore::run_row_tiled`] — one weight row at a time over the
+//!   model-order [`PackedWeights`] (the grouped-conv path and the
+//!   row-at-a-time baseline the benches compare against).
+//! * [`GemmCore::run_block_tiled`] — the hot path: up to
+//!   [`MICRO_ROWS`] same-class rows of the class-sorted
+//!   [`SortedWeights`] layout per call, with the inner dot product
+//!   dispatched to the runtime-selected SIMD kernel
+//!   ([`super::simd::dot_block`]). One activation tile load feeds the
+//!   whole row block.
+//!
+//! Both shapes block the column dimension at `tile_cols` codes so one
+//! weight tile stays hot in L1 while it is swept across every batch row,
+//! and the per-(batch, row) i32 accumulator survives across tiles so the
+//! dequantizing multiply happens exactly once per output element.
+//! Integer accumulation is associative, so any tile size, block size, or
+//! kernel ISA produces bit-identical results for the three RMSMP cores;
+//! the APoT baseline core accumulates in f32 and is deterministic for a
+//! *fixed* tile size (which is all the parallel executor needs).
 
 use super::packed::{PackedActs, PackedWeights};
+use super::simd::{self, Isa, MICRO_ROWS};
+use super::sorted::SortedWeights;
 use crate::quant::apot::ApotQuantizer;
 use crate::quant::{Mat, Scheme};
 
@@ -41,6 +55,26 @@ pub trait GemmCore: Sync {
         out: &mut [f32],
     );
 
+    /// Micro-kernel block over the class-sorted layout: compute `nr`
+    /// (1..=[`MICRO_ROWS`]) sorted rows `r0..r0 + nr` — all of this
+    /// core's class — against every batch row, writing
+    /// `out[j * batch + b] = dequant(dot(acts[b], sorted row r0 + j))`
+    /// (overwrite, not accumulate). `acc` is i32 scratch; both slices
+    /// must hold at least `nr * batch` elements. The integer cores
+    /// dispatch the inner dot to `isa`; every ISA is bit-exact vs the
+    /// scalar [`GemmCore::run_row_tiled`] path at the same `tile_cols`.
+    fn run_block_tiled(
+        &self,
+        acts: &PackedActs,
+        sw: &SortedWeights,
+        r0: usize,
+        nr: usize,
+        tile_cols: usize,
+        isa: Isa,
+        acc: &mut [i32],
+        out: &mut [f32],
+    );
+
     /// Untiled convenience wrapper (tests and one-off rows); allocates the
     /// scratch internally.
     fn run_row(&self, acts: &PackedActs, w: &PackedWeights, r: usize, out: &mut [f32]) {
@@ -60,14 +94,32 @@ pub struct GemmFixed4;
 pub struct GemmFixed8;
 /// Shift-add core for PoT-W4A4 rows (LUT PEs): no multiplier anywhere.
 pub struct GemmPoT4;
+
 /// Shift-add (two-term) core for APoT-W4A4 baseline rows.
 pub struct GemmApot4 {
-    quant: ApotQuantizer,
+    /// Signed dequantized level per stored code byte, indexed by the i8
+    /// code reinterpreted as u8: `slev[c as u8] = sign(c) * level[|c|]`.
+    /// Precomputing the sign into the table drops the per-element sign
+    /// branch and the `levels()` bounds-checked indirection from the
+    /// inner loop (the hardware equivalent: the decoded shift-pair
+    /// register of the APoT PE).
+    slev: [f32; 256],
 }
 
 impl Default for GemmApot4 {
     fn default() -> Self {
-        GemmApot4 { quant: ApotQuantizer::new(4) }
+        let lv = ApotQuantizer::new(4).levels().to_vec();
+        let mut slev = [0.0f32; 256];
+        for code in -128i32..128 {
+            let idx = (code as i8) as u8 as usize;
+            let mag = code.unsigned_abs() as usize;
+            if mag < lv.len() {
+                // multiplying by the exact ±1 sign preserves bit-exactness
+                // vs the branchy `sign * level` form
+                slev[idx] = if code < 0 { -lv[mag] } else { lv[mag] };
+            }
+        }
+        GemmApot4 { slev }
     }
 }
 
@@ -114,6 +166,62 @@ fn mac_i32_tiled(
     }
 }
 
+/// Shared block kernel of the three integer cores: `nr` sorted operand
+/// rows x the whole batch, i32 accumulation through the runtime-selected
+/// SIMD dot ([`simd::dot_block`]), one dequantizing multiply per output
+/// cell with the same `(act_scale * alpha) / denom` expression as the
+/// row kernels — hence bit-exact vs [`mac_i32_tiled`] for every ISA.
+fn mac_block_i32(
+    acts: &PackedActs,
+    sw: &SortedWeights,
+    r0: usize,
+    nr: usize,
+    denom: f32,
+    tile_cols: usize,
+    isa: Isa,
+    acc: &mut [i32],
+    out: &mut [f32],
+) {
+    let batch = acts.rows;
+    let cols = acts.cols;
+    debug_assert!(nr >= 1 && nr <= MICRO_ROWS);
+    debug_assert!(acc.len() >= nr * batch);
+    debug_assert!(out.len() >= nr * batch);
+    let acc = &mut acc[..nr * batch];
+    acc.fill(0);
+    // Activation codes above 127 would saturate the 16-bit intermediate
+    // of the maddubs-based SIMD paths; this repo quantizes activations to
+    // 4 bits, but the dispatch stays correct for any width by clamping to
+    // the scalar kernel.
+    let isa = if acts.bits > 7 { Isa::Scalar } else { isa };
+    let wblock = sw.op_rows(r0, nr);
+    let tile = if tile_cols == 0 { cols } else { tile_cols };
+    let mut start = 0usize;
+    while start < cols {
+        let end = cols.min(start.saturating_add(tile));
+        let wt = &wblock[start..];
+        let mut sums = [0i32; MICRO_ROWS];
+        for b in 0..batch {
+            let at = &acts.row(b)[start..end];
+            simd::dot_block(isa, at, wt, cols, nr, &mut sums);
+            for (j, &s) in sums.iter().enumerate().take(nr) {
+                acc[j * batch + b] += s;
+            }
+        }
+        start = end;
+    }
+    let ascale = acts.scale();
+    for j in 0..nr {
+        // same expression shape as `fixed_row_scale` so block == row
+        // bit-exactly
+        let s = ascale * sw.alpha[r0 + j] / denom;
+        let accj = &acc[j * batch..(j + 1) * batch];
+        for (o, &a) in out[j * batch..(j + 1) * batch].iter_mut().zip(accj) {
+            *o = s * a as f32;
+        }
+    }
+}
+
 impl GemmCore for GemmFixed4 {
     fn scheme(&self) -> Scheme {
         Scheme::FixedW4A4
@@ -131,6 +239,21 @@ impl GemmCore for GemmFixed4 {
         debug_assert_eq!(w.scheme[r], Scheme::FixedW4A4);
         let s = fixed_row_scale(acts, w, r, 7.0);
         mac_i32_tiled(acts, w.row(r), s, tile_cols, acc, out);
+    }
+
+    fn run_block_tiled(
+        &self,
+        acts: &PackedActs,
+        sw: &SortedWeights,
+        r0: usize,
+        nr: usize,
+        tile_cols: usize,
+        isa: Isa,
+        acc: &mut [i32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(sw.scheme_of(r0), Scheme::FixedW4A4);
+        mac_block_i32(acts, sw, r0, nr, 7.0, tile_cols, isa, acc, out);
     }
 }
 
@@ -151,6 +274,21 @@ impl GemmCore for GemmFixed8 {
         debug_assert_eq!(w.scheme[r], Scheme::FixedW8A4);
         let s = fixed_row_scale(acts, w, r, 127.0);
         mac_i32_tiled(acts, w.row(r), s, tile_cols, acc, out);
+    }
+
+    fn run_block_tiled(
+        &self,
+        acts: &PackedActs,
+        sw: &SortedWeights,
+        r0: usize,
+        nr: usize,
+        tile_cols: usize,
+        isa: Isa,
+        acc: &mut [i32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(sw.scheme_of(r0), Scheme::FixedW8A4);
+        mac_block_i32(acts, sw, r0, nr, 127.0, tile_cols, isa, acc, out);
     }
 }
 
@@ -206,9 +344,59 @@ impl GemmCore for GemmPoT4 {
         mac_i32_tiled(acts, w.pot_mult_row(r), s, tile_cols, acc, out);
     }
 
+    /// The sorted layout stores PoT rows pre-decoded to their
+    /// `±2^(6-shift)` multipliers, so the block kernel is the same u8 x
+    /// i8 SIMD MAC as the Fixed cores, in the 2^6-scaled frame.
+    fn run_block_tiled(
+        &self,
+        acts: &PackedActs,
+        sw: &SortedWeights,
+        r0: usize,
+        nr: usize,
+        tile_cols: usize,
+        isa: Isa,
+        acc: &mut [i32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(sw.scheme_of(r0), Scheme::PotW4A4);
+        mac_block_i32(acts, sw, r0, nr, 64.0, tile_cols, isa, acc, out);
+    }
+
     fn ops_per_mac(&self) -> f64 {
         // shift + add; no multiply
         2.0
+    }
+}
+
+impl GemmApot4 {
+    /// The tiled APoT inner loop shared by the row and block shapes:
+    /// `out[b] += s * Σ tile`, f32 per-tile accumulation over the signed
+    /// level table — deterministic (and row/block bit-identical) for a
+    /// fixed `tile_cols`.
+    fn apot_row_tiled(
+        &self,
+        acts: &PackedActs,
+        wr: &[i8],
+        s: f32,
+        tile_cols: usize,
+        out: &mut [f32],
+    ) {
+        let cols = acts.cols;
+        let tile = if tile_cols == 0 { cols } else { tile_cols };
+        let mut start = 0usize;
+        while start < cols {
+            let end = cols.min(start.saturating_add(tile));
+            let wt = &wr[start..end];
+            for (b, o) in out.iter_mut().enumerate() {
+                let at = &acts.row(b)[start..end];
+                let mut t = 0.0f32;
+                for (&a, &c) in at.iter().zip(wt) {
+                    t += a as f32 * self.slev[c as u8 as usize];
+                }
+                *o += s * t;
+            }
+            start = end;
+        }
     }
 }
 
@@ -217,9 +405,9 @@ impl GemmCore for GemmApot4 {
         Scheme::ApotW4A4
     }
 
-    /// APoT = sum of two PoT terms -> two shift-adds per MAC. We go through
-    /// the dequantized level table (the hardware equivalent: a 3-bit LUT
-    /// into shift pairs). The level grid is not dyadic, so accumulation is
+    /// APoT = sum of two PoT terms -> two shift-adds per MAC. The signed
+    /// level table (`slev`) is the hardware equivalent of a 3-bit LUT
+    /// into shift pairs. The level grid is not dyadic, so accumulation is
     /// f32 per tile; results are deterministic for a fixed tile size.
     fn run_row_tiled(
         &self,
@@ -231,25 +419,34 @@ impl GemmCore for GemmApot4 {
         out: &mut [f32],
     ) {
         debug_assert_eq!(w.scheme[r], Scheme::ApotW4A4);
-        let wr = w.row(r);
-        let lv = self.quant.levels();
-        let cols = acts.cols;
         let s = acts.scale() * w.alpha[r];
-        let tile = if tile_cols == 0 { cols } else { tile_cols };
-        let mut start = 0usize;
-        while start < cols {
-            let end = cols.min(start.saturating_add(tile));
-            let wt = &wr[start..end];
-            for (b, o) in out.iter_mut().enumerate() {
-                let at = &acts.row(b)[start..end];
-                let mut t = 0.0f32;
-                for (&a, &c) in at.iter().zip(wt) {
-                    let sign = if c < 0 { -1.0 } else { 1.0 };
-                    t += a as f32 * sign * lv[c.unsigned_abs() as usize];
-                }
-                *o += s * t;
-            }
-            start = end;
+        self.apot_row_tiled(acts, w.row(r), s, tile_cols, out);
+    }
+
+    /// Row-at-a-time over the sorted codes (the APoT baseline core gets
+    /// no SIMD path — it is not one of the paper's hardware classes);
+    /// identical tile walk as [`GemmCore::run_row_tiled`], so block ==
+    /// row bit-exactly for a fixed `tile_cols`.
+    fn run_block_tiled(
+        &self,
+        acts: &PackedActs,
+        sw: &SortedWeights,
+        r0: usize,
+        nr: usize,
+        tile_cols: usize,
+        _isa: Isa,
+        _acc: &mut [i32],
+        out: &mut [f32],
+    ) {
+        debug_assert_eq!(sw.scheme_of(r0), Scheme::ApotW4A4);
+        let batch = acts.rows;
+        debug_assert!(out.len() >= nr * batch);
+        for j in 0..nr {
+            let r = r0 + j;
+            let s = acts.scale() * sw.alpha[r];
+            let outj = &mut out[j * batch..(j + 1) * batch];
+            outj.fill(0.0);
+            self.apot_row_tiled(acts, sw.op_row(r), s, tile_cols, outj);
         }
     }
 
@@ -345,6 +542,50 @@ mod tests {
     }
 
     #[test]
+    fn block_kernel_matches_row_kernel_per_scheme() {
+        // single-scheme layers: the sorted layout is the identity, so the
+        // block kernel must reproduce run_row_tiled cell for cell, for
+        // every ISA, block size, and tile size.
+        let apot = GemmApot4::default();
+        for scheme in [
+            Scheme::PotW4A4,
+            Scheme::FixedW4A4,
+            Scheme::FixedW8A4,
+            Scheme::ApotW4A4,
+        ] {
+            let (acts, w) = setup(scheme, 6, 70, 3);
+            let sw = SortedWeights::from_packed(&w);
+            let core: &dyn GemmCore = match scheme {
+                Scheme::PotW4A4 => &GemmPoT4,
+                Scheme::FixedW4A4 => &GemmFixed4,
+                Scheme::FixedW8A4 => &GemmFixed8,
+                _ => &apot,
+            };
+            let batch = acts.rows;
+            for tile in [0usize, 7, 33, 70] {
+                for (r0, nr) in [(0usize, 1usize), (0, 4), (2, 4), (4, 2), (5, 1)] {
+                    let mut acc = vec![0i32; MICRO_ROWS * batch];
+                    let mut block = vec![f32::NAN; MICRO_ROWS * batch];
+                    for isa in [Isa::Scalar, Isa::Sse41.available(), Isa::Avx2.available()] {
+                        core.run_block_tiled(&acts, &sw, r0, nr, tile, isa, &mut acc, &mut block);
+                        for j in 0..nr {
+                            let mut racc = vec![0i32; batch];
+                            let mut want = vec![0.0f32; batch];
+                            let orig = sw.perm[r0 + j];
+                            core.run_row_tiled(&acts, &w, orig, tile, &mut racc, &mut want);
+                            assert_eq!(
+                                &block[j * batch..(j + 1) * batch],
+                                &want[..],
+                                "{scheme} isa {isa:?} tile {tile} r0 {r0} nr {nr} j {j}"
+                            );
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
     fn apot_tiling_is_deterministic() {
         let (acts, w) = setup(Scheme::ApotW4A4, 3, 64, 2);
         let core = GemmApot4::default();
@@ -355,6 +596,22 @@ mod tests {
             core.run_row_tiled(&acts, &w, 0, tile, &mut acc, &mut a);
             core.run_row_tiled(&acts, &w, 0, tile, &mut acc, &mut b);
             assert_eq!(a, b, "tile {tile}");
+        }
+    }
+
+    #[test]
+    fn apot_signed_level_table_matches_levels() {
+        let core = GemmApot4::default();
+        let q = ApotQuantizer::new(4);
+        let lv = q.levels();
+        for code in -7i32..=7 {
+            let idx = (code as i8) as u8 as usize;
+            let want = if code < 0 {
+                -lv[(-code) as usize]
+            } else {
+                lv[code as usize]
+            };
+            assert_eq!(core.slev[idx], want, "code {code}");
         }
     }
 

@@ -7,61 +7,103 @@
 //! uniform, the partition shape (and thus per-layer schedule) is identical
 //! in every layer.
 //!
+//! # Class-sorted execution
+//!
+//! The engine runs on the [`SortedWeights`] layout: rows are permuted at
+//! load time so every class is one contiguous block, and a partition is
+//! just four ranges over that sorted row space. Dispatch walks
+//! [`TaskChunk`] ranges (no per-row index lists), hands each chunk to its
+//! core's [`GemmCore::run_block_tiled`] micro-kernel in [`MICRO_ROWS`]-row
+//! blocks, and scatters the block outputs back to model row order through
+//! the stored permutation.
+//!
 //! # Parallel execution
 //!
 //! Row classes are embarrassingly parallel: every output cell `(b, r)` is
 //! produced by exactly one weight row `r`. [`MixedGemm::run_partitioned`]
-//! therefore splits each class's row list into chunks of
+//! therefore splits each class's sorted range into chunks of
 //! `min_rows_per_task` rows, interleaves the chunks round-robin across
 //! classes (so cheap PoT shift-add rows and expensive Fixed-8 MAC rows
 //! load-balance instead of convoying per class), and drains the task list
 //! on the shared [`ThreadPool`] via its work-pulling `scoped_for`. Each
-//! task writes a disjoint set of output cells, and per-row arithmetic is
-//! identical to the sequential path, so parallel output is bit-exact
-//! regardless of thread count or scheduling order.
+//! task writes a disjoint set of output cells (the row permutation is a
+//! bijection), and per-row arithmetic is identical to the sequential
+//! path, so parallel output is bit-exact regardless of thread count or
+//! scheduling order.
 
+use std::ops::Range;
 use std::sync::Arc;
 
 use super::cores::{GemmApot4, GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
 use super::packed::{PackedActs, PackedWeights};
+use super::simd::{Isa, MICRO_ROWS};
+use super::sorted::SortedWeights;
 use crate::quant::{Mat, Scheme};
 use crate::util::pool::ThreadPool;
 
-/// Row indices grouped by scheme class.
-#[derive(Clone, Debug, Default)]
+/// Contiguous class ranges over the class-sorted row space: sorted rows
+/// `bounds[k]..bounds[k + 1]` belong to class `k` of
+/// [`RowPartition::CLASS_ORDER`]. (Until the class-sorted layout landed
+/// this held four per-class `Vec<usize>` index lists; ranges carry the
+/// same information once rows are contiguous, at zero per-row storage.)
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct RowPartition {
-    pub pot4: Vec<usize>,
-    pub fixed4: Vec<usize>,
-    pub fixed8: Vec<usize>,
-    pub apot4: Vec<usize>,
+    bounds: [usize; 5],
 }
 
 impl RowPartition {
+    /// Scheme classes in sorted-layout order (== the numeric scheme
+    /// codes shared with the Python side).
+    pub const CLASS_ORDER: [Scheme; 4] = [
+        Scheme::PotW4A4,
+        Scheme::FixedW4A4,
+        Scheme::FixedW8A4,
+        Scheme::ApotW4A4,
+    ];
+
     pub fn from_schemes(schemes: &[Scheme]) -> RowPartition {
-        let mut p = RowPartition::default();
-        for (i, s) in schemes.iter().enumerate() {
-            match s {
-                Scheme::PotW4A4 => p.pot4.push(i),
-                Scheme::FixedW4A4 => p.fixed4.push(i),
-                Scheme::FixedW8A4 => p.fixed8.push(i),
-                Scheme::ApotW4A4 => p.apot4.push(i),
-            }
+        let mut counts = [0usize; 4];
+        for s in schemes {
+            counts[*s as usize] += 1;
         }
-        p
+        RowPartition::from_counts(counts)
+    }
+
+    /// Partition from per-class row counts (in [`RowPartition::CLASS_ORDER`]
+    /// order).
+    pub fn from_counts(counts: [usize; 4]) -> RowPartition {
+        let mut bounds = [0usize; 5];
+        for k in 0..4 {
+            bounds[k + 1] = bounds[k] + counts[k];
+        }
+        RowPartition { bounds }
     }
 
     pub fn total(&self) -> usize {
-        self.pot4.len() + self.fixed4.len() + self.fixed8.len() + self.apot4.len()
+        self.bounds[4]
     }
 
-    /// The row list of one scheme class.
-    pub fn class(&self, s: Scheme) -> &[usize] {
-        match s {
-            Scheme::PotW4A4 => &self.pot4,
-            Scheme::FixedW4A4 => &self.fixed4,
-            Scheme::FixedW8A4 => &self.fixed8,
-            Scheme::ApotW4A4 => &self.apot4,
+    /// The sorted-row range of one scheme class.
+    #[inline]
+    pub fn range(&self, s: Scheme) -> Range<usize> {
+        self.bounds[s as usize]..self.bounds[s as usize + 1]
+    }
+
+    /// Rows in one scheme class.
+    #[inline]
+    pub fn len_of(&self, s: Scheme) -> usize {
+        self.range(s).len()
+    }
+
+    /// Scheme class owning sorted row `sr`.
+    #[inline]
+    pub fn scheme_of(&self, sr: usize) -> Scheme {
+        for s in RowPartition::CLASS_ORDER {
+            if sr < self.bounds[s as usize + 1] {
+                return s;
+            }
         }
+        panic!("sorted row {sr} outside partition of {} rows", self.total());
     }
 
     /// Per-class fractions `[pot4, fixed4, fixed8, apot4]` — checked
@@ -72,10 +114,10 @@ impl RowPartition {
     pub fn fractions(&self) -> [f64; 4] {
         let t = self.total().max(1) as f64;
         [
-            self.pot4.len() as f64 / t,
-            self.fixed4.len() as f64 / t,
-            self.fixed8.len() as f64 / t,
-            self.apot4.len() as f64 / t,
+            self.len_of(Scheme::PotW4A4) as f64 / t,
+            self.len_of(Scheme::FixedW4A4) as f64 / t,
+            self.len_of(Scheme::FixedW8A4) as f64 / t,
+            self.len_of(Scheme::ApotW4A4) as f64 / t,
         ]
     }
 }
@@ -87,8 +129,8 @@ pub struct ParallelConfig {
     /// Worker threads; 0 = one per available core.
     pub threads: usize,
     /// Column-tile width for the packed inner loops (0 = untiled). 256
-    /// i8 codes keep a weight-row tile comfortably inside L1 next to the
-    /// activation tile.
+    /// i8 codes keep a [`MICRO_ROWS`]-row weight tile comfortably inside
+    /// L1 next to the activation tile.
     pub tile_cols: usize,
     /// Minimum rows per parallel task: the chunk granularity of the
     /// per-class queues (smaller = better balance, more overhead).
@@ -132,40 +174,40 @@ impl ParallelConfig {
     }
 }
 
-/// One schedulable unit of the mixed GEMM: rows `start..end` of one
-/// scheme class's row list in a [`RowPartition`]. Chunk lists are
-/// compiled once (per layer, by the plan compiler, or per call by the
-/// compatibility wrappers) and replayed on every dispatch.
+/// One schedulable unit of the mixed GEMM: sorted rows `start..end`, all
+/// of one scheme class (a sub-range of that class's contiguous range in
+/// the [`SortedWeights`] layout). Chunk lists are compiled once (per
+/// layer, by the plan compiler, or per call by the compatibility
+/// wrappers) and replayed on every dispatch.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TaskChunk {
     pub scheme: Scheme,
+    /// First sorted row of the chunk (absolute index).
     pub start: usize,
+    /// One past the last sorted row.
     pub end: usize,
 }
 
 /// Build the task list for a partition: per-class row chunks of at most
-/// `chunk_rows` rows, interleaved round-robin across the four per-class
-/// queues (so cheap PoT shift-add chunks and expensive Fixed-8 MAC chunks
+/// `chunk_rows` rows, interleaved round-robin across the four class
+/// ranges (so cheap PoT shift-add chunks and expensive Fixed-8 MAC chunks
 /// alternate in the task list instead of convoying per class).
 pub fn chunk_tasks(part: &RowPartition, chunk_rows: usize) -> Vec<TaskChunk> {
-    let classes = [
-        Scheme::PotW4A4,
-        Scheme::FixedW4A4,
-        Scheme::FixedW8A4,
-        Scheme::ApotW4A4,
-    ];
     let chunk = chunk_rows.max(1);
     let mut tasks = Vec::new();
-    let mut offset = [0usize; 4];
+    let mut offset: [usize; 4] = [0; 4];
+    for (k, s) in RowPartition::CLASS_ORDER.iter().enumerate() {
+        offset[k] = part.range(*s).start;
+    }
     loop {
         let mut pushed = false;
-        for (i, &scheme) in classes.iter().enumerate() {
-            let rows = part.class(scheme);
-            let o = offset[i];
-            if o < rows.len() {
-                let end = rows.len().min(o + chunk);
+        for (k, &scheme) in RowPartition::CLASS_ORDER.iter().enumerate() {
+            let class_end = part.range(scheme).end;
+            let o = offset[k];
+            if o < class_end {
+                let end = class_end.min(o + chunk);
                 tasks.push(TaskChunk { scheme, start: o, end });
-                offset[i] = end;
+                offset[k] = end;
                 pushed = true;
             }
         }
@@ -175,10 +217,11 @@ pub fn chunk_tasks(part: &RowPartition, chunk_rows: usize) -> Vec<TaskChunk> {
     }
 }
 
-/// Per-lane reusable row scratch for the GEMM dispatch: a float column
-/// (`out` accumulation target of one weight row across the batch) and the
-/// i32 accumulator the cores MAC into. One lane per drain loop of the
-/// pool's `scoped_for_indexed` (lane 0 = caller, 1..=threads = helpers);
+/// Per-lane reusable block scratch for the GEMM dispatch: a float block
+/// (`out` target of one [`MICRO_ROWS`]-row micro-kernel block across the
+/// batch, row-major `[j * batch + b]`) and the i32 accumulator block the
+/// cores MAC into. One lane per drain loop of the pool's
+/// `scoped_for_indexed` (lane 0 = caller, 1..=threads = helpers);
 /// preallocating them in the inference [`crate::model::Workspace`] is
 /// what makes steady-state dispatch allocation-free.
 pub struct GemmScratch {
@@ -191,36 +234,47 @@ impl GemmScratch {
         GemmScratch::with_capacity(lanes, 0)
     }
 
-    /// `lanes` lanes preallocated for batches up to `batch` rows.
-    pub fn with_capacity(lanes: usize, batch: usize) -> GemmScratch {
+    /// `lanes` lanes preallocated for `elems` scratch elements each
+    /// (i.e. [`MICRO_ROWS`] x the largest batch).
+    pub fn with_capacity(lanes: usize, elems: usize) -> GemmScratch {
         GemmScratch {
             lanes: (0..lanes.max(1))
-                .map(|_| (Vec::with_capacity(batch), Vec::with_capacity(batch)))
+                .map(|_| (Vec::with_capacity(elems), Vec::with_capacity(elems)))
                 .collect(),
         }
     }
 
-    /// Resize the first `lanes` lanes to `batch` elements, creating them
-    /// if missing; allocation-free when within the preallocated
-    /// capacities. Lanes beyond `lanes` are left untouched — the
-    /// sequential path only pays for lane 0 even when the engine owns a
-    /// wide pool.
+    /// Resize the first `lanes` lanes to one micro-kernel block
+    /// (`MICRO_ROWS * batch` elements), creating them if missing;
+    /// allocation-free when within the preallocated capacities. Lanes
+    /// beyond `lanes` are left untouched — the sequential path only pays
+    /// for lane 0 even when the engine owns a wide pool.
     fn ensure(&mut self, lanes: usize, batch: usize) {
         let lanes = lanes.max(1);
+        let elems = MICRO_ROWS * batch;
         while self.lanes.len() < lanes {
-            self.lanes.push((Vec::with_capacity(batch), Vec::with_capacity(batch)));
+            self.lanes.push((Vec::with_capacity(elems), Vec::with_capacity(elems)));
         }
         for (col, acc) in self.lanes[..lanes].iter_mut() {
-            col.resize(batch, 0.0);
-            acc.resize(batch, 0);
+            col.resize(elems, 0.0);
+            acc.resize(elems, 0);
         }
     }
 
-    /// Lane 0 (the sequential / calling-thread lane), resized to `batch`.
+    /// Lane 0 sliced to a single row of `batch` elements (the grouped-conv
+    /// row path).
     pub fn lane0(&mut self, batch: usize) -> (&mut [f32], &mut [i32]) {
         self.ensure(1, batch);
         let (col, acc) = &mut self.lanes[0];
-        (col, acc)
+        (&mut col[..batch], &mut acc[..batch])
+    }
+
+    /// Lane 0 as a full `MICRO_ROWS * batch` block (the sequential block
+    /// dispatch).
+    fn lane0_block(&mut self, batch: usize) -> (&mut [f32], &mut [i32]) {
+        self.ensure(1, batch);
+        let (col, acc) = &mut self.lanes[0];
+        (&mut col[..], &mut acc[..])
     }
 
     /// Data pointers of every lane buffer (steady-state reuse tests pin
@@ -242,9 +296,10 @@ impl GemmScratch {
 }
 
 /// Raw output pointer shared across GEMM tasks. Each task writes a
-/// disjoint set of `(batch, row)` cells — rows are partitioned across
-/// tasks — so unsynchronized writes are sound; the pool's join barrier
-/// publishes them to the caller.
+/// disjoint set of `(batch, row)` cells — sorted rows are partitioned
+/// across tasks and the row permutation is a bijection — so
+/// unsynchronized writes are sound; the pool's join barrier publishes
+/// them to the caller.
 struct SyncOutPtr {
     p: *mut f32,
 }
@@ -263,14 +318,15 @@ struct SyncLanesPtr {
 unsafe impl Send for SyncLanesPtr {}
 unsafe impl Sync for SyncLanesPtr {}
 
-/// The mixed GEMM engine: owns the four cores plus the execution config
-/// and (optionally) a thread pool.
+/// The mixed GEMM engine: owns the four cores plus the execution config,
+/// the resolved SIMD ISA, and (optionally) a thread pool.
 pub struct MixedGemm {
     fixed4: GemmFixed4,
     fixed8: GemmFixed8,
     pot4: GemmPoT4,
     apot4: GemmApot4,
     cfg: ParallelConfig,
+    isa: Isa,
     pool: Option<Arc<ThreadPool>>,
 }
 
@@ -306,12 +362,25 @@ impl MixedGemm {
             pot4: GemmPoT4,
             apot4: GemmApot4::default(),
             cfg,
+            isa: Isa::detect(),
             pool,
         }
     }
 
     pub fn config(&self) -> ParallelConfig {
         self.cfg
+    }
+
+    /// The SIMD ISA the integer micro-kernels run on.
+    pub fn isa(&self) -> Isa {
+        self.isa
+    }
+
+    /// Force a kernel ISA (benchmarks and differential tests). Requests
+    /// wider than the hardware supports are clamped (never UB); every
+    /// ISA produces bit-identical output.
+    pub fn set_isa(&mut self, isa: Isa) {
+        self.isa = isa.available();
     }
 
     /// Whether a pool is attached (i.e. parallel dispatch is possible).
@@ -330,13 +399,16 @@ impl MixedGemm {
     }
 
     /// `y = Qa(x) @ Qw(w)^T` over integer codes. Output is (batch, rows).
+    /// Convenience wrapper: sorts the layout per call — the serving path
+    /// uses a load-time [`SortedWeights`] with
+    /// [`MixedGemm::run_partitioned_into`] instead.
     pub fn run(&self, acts: &PackedActs, w: &PackedWeights) -> Mat {
         let part = RowPartition::from_schemes(&w.scheme);
         self.run_partitioned(acts, w, &part)
     }
 
-    /// Run with a precomputed partition (the executor caches it per
-    /// layer), parallel when a pool is attached and the shape is worth it.
+    /// Run with a precomputed partition, parallel when a pool is
+    /// attached and the shape is worth it.
     pub fn run_partitioned(
         &self,
         acts: &PackedActs,
@@ -359,8 +431,9 @@ impl MixedGemm {
     /// `parallel = false` forces the sequential path (the coordinator
     /// disables row-level parallelism for batches that already fill the
     /// machine via the batch dimension). Compatibility wrapper around
-    /// [`MixedGemm::run_partitioned_into`]: chunks the partition and
-    /// allocates the output and scratch per call.
+    /// [`MixedGemm::run_partitioned_into`]: sorts the weight layout,
+    /// chunks the partition, and allocates the output and scratch per
+    /// call.
     pub fn run_partitioned_with(
         &self,
         acts: &PackedActs,
@@ -368,10 +441,14 @@ impl MixedGemm {
         part: &RowPartition,
         parallel: bool,
     ) -> Mat {
-        let chunks = chunk_tasks(part, self.cfg.min_rows_per_task);
+        let sw = SortedWeights::from_packed(w);
+        // fail loudly on a partition built from different weights — this
+        // wrapper sorts per call, so the check is off the hot path
+        assert_eq!(sw.partition(), part, "partition does not match weights");
+        let chunks = chunk_tasks(sw.partition(), self.cfg.min_rows_per_task);
         let mut scratch = GemmScratch::new(self.lanes());
         let mut out = Mat::zeros(acts.rows, w.rows);
-        self.run_partitioned_into(acts, w, part, &chunks, parallel, &mut scratch, &mut out);
+        self.run_partitioned_into(acts, &sw, &chunks, parallel, &mut scratch, &mut out);
         out
     }
 
@@ -382,79 +459,107 @@ impl MixedGemm {
     }
 
     /// The allocation-free dispatch at the bottom of the compiled-plan
-    /// path: run the partitioned mixed GEMM over a precompiled `chunks`
-    /// schedule (see [`chunk_tasks`]), MACing through caller-provided
-    /// `scratch` lanes and writing the caller-provided `out`, which must
-    /// already be sized to `(acts.rows, w.rows)`. No heap allocation
-    /// happens here once `scratch` has warmed up to the batch size.
+    /// path: run the mixed GEMM over the class-sorted layout `sw` with a
+    /// precompiled `chunks` schedule (see [`chunk_tasks`]), MACing
+    /// through caller-provided `scratch` lanes in [`MICRO_ROWS`]-row
+    /// micro-kernel blocks and scattering into the caller-provided `out`
+    /// (model row order, via the stored permutation), which must already
+    /// be sized to `(acts.rows, sw.rows)`. No heap allocation happens
+    /// here once `scratch` has warmed up to the batch size.
     ///
-    /// Cells of rows absent from `part` are zeroed; every partitioned row
-    /// is written by exactly one chunk, so the result is bit-exact vs the
-    /// sequential path for any chunk schedule and thread count.
+    /// Cells of rows absent from `chunks` are zeroed; every chunked row
+    /// is written by exactly one chunk, so the result is bit-exact vs
+    /// the sequential path for any chunk schedule, thread count, and
+    /// kernel ISA.
     pub fn run_partitioned_into(
         &self,
         acts: &PackedActs,
-        w: &PackedWeights,
-        part: &RowPartition,
+        sw: &SortedWeights,
         chunks: &[TaskChunk],
         parallel: bool,
         scratch: &mut GemmScratch,
         out: &mut Mat,
     ) {
-        assert_eq!(acts.cols, w.cols, "inner dims");
-        assert_eq!((out.rows, out.cols), (acts.rows, w.rows), "output shape");
+        assert_eq!(acts.cols, sw.cols, "inner dims");
+        assert_eq!((out.rows, out.cols), (acts.rows, sw.rows), "output shape");
         let batch = acts.rows;
-        let tile = self.cfg.tile_cols;
-        // a full partition (each row exactly once — the only shape the
-        // plan compiler and `from_schemes` produce) overwrites every
-        // cell, so zeroing is only needed for partial partitions
-        if part.total() < w.rows {
+        // a full schedule (each sorted row exactly once — the only shape
+        // `chunk_tasks` produces) overwrites every cell, so zeroing is
+        // only needed for partial schedules
+        let covered: usize = chunks.iter().map(|c| c.end - c.start).sum();
+        if covered < sw.rows {
             out.data.fill(0.0);
         }
         let use_pool = parallel
             && self.pool.is_some()
             && chunks.len() > 1
-            && part.total() >= 2 * self.cfg.min_rows_per_task.max(1);
+            && covered >= 2 * self.cfg.min_rows_per_task.max(1);
+
+        let out_cols = out.cols;
+        let ptr = SyncOutPtr { p: out.data.as_mut_ptr() };
 
         if !use_pool {
-            let (col, acc) = scratch.lane0(batch);
+            let (col, acc) = scratch.lane0_block(batch);
             for chunk in chunks {
-                let core = self.core_for(chunk.scheme);
-                for &r in &part.class(chunk.scheme)[chunk.start..chunk.end] {
-                    col.fill(0.0);
-                    core.run_row_tiled(acts, w, r, tile, acc, col);
-                    for (b, &v) in col.iter().enumerate() {
-                        out.set(b, r, v);
-                    }
-                }
+                // SAFETY: `ptr` points into `out`, exclusively borrowed
+                // for this call; chunks cover disjoint sorted rows.
+                unsafe { self.run_chunk(acts, sw, *chunk, acc, col, &ptr, out_cols) };
             }
             return;
         }
 
         let pool = self.pool.as_ref().expect("use_pool implies a pool");
         scratch.ensure(pool.threads() + 1, batch);
-        let out_cols = out.cols;
-        let ptr = SyncOutPtr { p: out.data.as_mut_ptr() };
         let lanes = SyncLanesPtr { p: scratch.lanes.as_mut_ptr() };
         pool.scoped_for_indexed(chunks.len(), |ti, lane| {
             let chunk = chunks[ti];
-            let core = self.core_for(chunk.scheme);
             // SAFETY: `lane` is exclusive to this drain loop for the
             // duration of the scoped_for (see `scoped_for_indexed`), and
             // `ensure` above sized the lane list to every lane the pool
-            // can hand out.
-            let (col, acc) = unsafe { &mut *lanes.p.add(lane) };
-            for &r in &part.class(chunk.scheme)[chunk.start..chunk.end] {
-                col.fill(0.0);
-                core.run_row_tiled(acts, w, r, tile, acc, col);
-                for (b, &v) in col.iter().enumerate() {
-                    // SAFETY: row `r` belongs to exactly one chunk, so no
-                    // other task writes cell (b, r); the scoped join
-                    // orders these writes before the caller's reads.
-                    unsafe { *ptr.p.add(b * out_cols + r) = v };
-                }
+            // can hand out. Each chunk owns a disjoint sorted-row range,
+            // and the permutation is a bijection, so the output cells
+            // written through `ptr` are disjoint across tasks; the
+            // scoped join orders them before the caller's reads.
+            unsafe {
+                let (col, acc) = &mut *lanes.p.add(lane);
+                self.run_chunk(acts, sw, chunk, acc, col, &ptr, out_cols);
             }
         });
+    }
+
+    /// Run one chunk in [`MICRO_ROWS`]-row micro-kernel blocks, scattering
+    /// each block's output to model row order through `sw.perm`.
+    ///
+    /// # Safety
+    ///
+    /// `out.p` must point at a `(batch, out_cols)` row-major f32 matrix
+    /// that outlives the call, and no other thread may concurrently
+    /// write the cells of this chunk's (permuted) rows.
+    unsafe fn run_chunk(
+        &self,
+        acts: &PackedActs,
+        sw: &SortedWeights,
+        chunk: TaskChunk,
+        acc: &mut [i32],
+        col: &mut [f32],
+        out: &SyncOutPtr,
+        out_cols: usize,
+    ) {
+        let batch = acts.rows;
+        let core = self.core_for(chunk.scheme);
+        let tile = self.cfg.tile_cols;
+        let mut r = chunk.start;
+        while r < chunk.end {
+            let nr = MICRO_ROWS.min(chunk.end - r);
+            core.run_block_tiled(acts, sw, r, nr, tile, self.isa, acc, col);
+            for j in 0..nr {
+                let orig = sw.perm[r + j];
+                for (b, &v) in col[j * batch..(j + 1) * batch].iter().enumerate() {
+                    *out.p.add(b * out_cols + orig) = v;
+                }
+            }
+            r += nr;
+        }
     }
 
     /// Single-row dispatch used by the grouped-conv path: `out[b] += ...`
@@ -505,10 +610,10 @@ impl MacCounts {
     pub fn of(part: &RowPartition, batch: usize, cols: usize) -> MacCounts {
         let per_row = (batch * cols) as u64;
         MacCounts {
-            pot4: part.pot4.len() as u64 * per_row,
-            fixed4: part.fixed4.len() as u64 * per_row,
-            fixed8: part.fixed8.len() as u64 * per_row,
-            apot4: part.apot4.len() as u64 * per_row,
+            pot4: part.len_of(Scheme::PotW4A4) as u64 * per_row,
+            fixed4: part.len_of(Scheme::FixedW4A4) as u64 * per_row,
+            fixed8: part.len_of(Scheme::FixedW8A4) as u64 * per_row,
+            apot4: part.len_of(Scheme::ApotW4A4) as u64 * per_row,
         }
     }
 
@@ -559,14 +664,21 @@ mod tests {
     }
 
     #[test]
-    fn partition_covers_all_rows() {
+    fn partition_ranges_tile_all_rows() {
         let (_, _, schemes, _) = rand_problem(100, 4, 1, 3);
         let p = RowPartition::from_schemes(&schemes);
         assert_eq!(p.total(), 100);
-        let mut all: Vec<usize> =
-            [&p.pot4[..], &p.fixed4[..], &p.fixed8[..], &p.apot4[..]].concat();
-        all.sort_unstable();
-        assert_eq!(all, (0..100).collect::<Vec<_>>());
+        let mut next = 0usize;
+        for s in RowPartition::CLASS_ORDER {
+            let r = p.range(s);
+            assert_eq!(r.start, next, "{s} range not contiguous");
+            assert_eq!(r.len(), schemes.iter().filter(|x| **x == s).count());
+            for sr in r.clone() {
+                assert_eq!(p.scheme_of(sr), s);
+            }
+            next = r.end;
+        }
+        assert_eq!(next, 100);
     }
 
     #[test]
@@ -623,9 +735,17 @@ mod tests {
         assert_eq!(tasks[0].scheme, Scheme::PotW4A4);
         assert_eq!(tasks[1].scheme, Scheme::FixedW4A4);
         assert_eq!(tasks[2].scheme, Scheme::FixedW8A4);
-        // chunk ranges index into the class row lists and cover them
+        // chunk ranges are absolute sorted rows: pot rows 0..10, fixed4
+        // rows 10..15, fixed8 row 15
         assert_eq!((tasks[0].start, tasks[0].end), (0, 4));
+        assert_eq!((tasks[1].start, tasks[1].end), (10, 14));
+        assert_eq!((tasks[2].start, tasks[2].end), (15, 16));
         assert_eq!((tasks[5].start, tasks[5].end), (8, 10));
+        // chunks stay inside their class range
+        for t in &tasks {
+            let r = part.range(t.scheme);
+            assert!(t.start >= r.start && t.end <= r.end, "{t:?} outside {r:?}");
+        }
     }
 
     #[test]
@@ -640,13 +760,43 @@ mod tests {
             min_rows_per_task: 4,
         });
         let want = g.run_partitioned_seq(&acts, &pw, &part);
-        let chunks = chunk_tasks(&part, 4);
-        let mut scratch = GemmScratch::with_capacity(g.lanes(), acts.rows);
+        let sw = SortedWeights::from_packed(&pw);
+        let chunks = chunk_tasks(sw.partition(), 4);
+        let mut scratch = GemmScratch::with_capacity(g.lanes(), MICRO_ROWS * acts.rows);
         let mut out = Mat::zeros(acts.rows, pw.rows);
         for parallel in [false, true] {
             out.data.fill(f32::NAN); // must be fully overwritten
-            g.run_partitioned_into(&acts, &pw, &part, &chunks, parallel, &mut scratch, &mut out);
+            g.run_partitioned_into(&acts, &sw, &chunks, parallel, &mut scratch, &mut out);
             assert_eq!(out.data, want.data, "parallel={parallel}");
+        }
+    }
+
+    #[test]
+    fn partial_schedules_zero_unchunked_rows() {
+        let (x, w, schemes, alpha) = rand_problem(12, 9, 3, 31);
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let sw = SortedWeights::from_packed(&pw);
+        let full = chunk_tasks(sw.partition(), 3);
+        let g = MixedGemm::new();
+        let mut scratch = GemmScratch::new(1);
+        let mut want = Mat::zeros(3, 12);
+        g.run_partitioned_into(&acts, &sw, &full, false, &mut scratch, &mut want);
+        // drop the last chunk: its rows must come back zeroed
+        let partial = &full[..full.len() - 1];
+        let dropped = full[full.len() - 1];
+        let mut got = Mat::zeros(3, 12);
+        got.data.fill(f32::NAN);
+        g.run_partitioned_into(&acts, &sw, partial, false, &mut scratch, &mut got);
+        for sr in 0..12 {
+            let orig = sw.perm[sr];
+            for b in 0..3 {
+                if sr >= dropped.start && sr < dropped.end {
+                    assert_eq!(got.at(b, orig), 0.0, "dropped row {sr} not zeroed");
+                } else {
+                    assert_eq!(got.at(b, orig), want.at(b, orig));
+                }
+            }
         }
     }
 

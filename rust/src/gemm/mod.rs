@@ -10,6 +10,12 @@
 //!   routes filter classes to PE arrays. Dispatch is multi-threaded and
 //!   cache-blocked (see [`ParallelConfig`]), bit-exact vs the sequential
 //!   path.
+//! * [`sorted`] — the class-sorted kernel layout ([`SortedWeights`]):
+//!   rows permuted once at load so each class is one contiguous block,
+//!   with the permutation kept for output scatter.
+//! * [`simd`] — runtime-dispatched AVX2/SSE/scalar micro-kernels
+//!   ([`dot_block`], [`MICRO_ROWS`] rows per block); every ISA is
+//!   bit-exact, `RMSMP_NO_SIMD=1` forces the portable scalar path.
 //!
 //! All cores operate on *quantized codes* plus per-row scales, and their
 //! float results are bit-identical to fake-quant matmuls over the same
@@ -21,8 +27,12 @@ pub mod cores;
 pub mod mixed;
 pub mod nibble;
 pub mod packed;
+pub mod simd;
+pub mod sorted;
 
 pub use cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
 pub use mixed::{chunk_tasks, GemmScratch, MixedGemm, ParallelConfig, RowPartition, TaskChunk};
 pub use nibble::NibblePacked;
 pub use packed::{PackedActs, PackedWeights};
+pub use simd::{dot_block, Isa, MICRO_ROWS};
+pub use sorted::SortedWeights;

@@ -131,7 +131,10 @@ pub struct PackedWeights {
     /// the 2^6-scaled frame (`±2^(6-shift)`, in −64..=64). This is the
     /// weight register a LUT PE would hold after decoding its 4-bit code;
     /// precomputing it keeps the CPU inner loop branch-free and
-    /// vectorizable. Zero-filled for non-PoT rows.
+    /// vectorizable. Zero-filled for non-PoT rows, and **empty** when the
+    /// layer has no PoT rows at all — all-Fixed layers pay zero extra
+    /// weight memory for it ([`PackedWeights::pot_mult_row`] must only be
+    /// called for PoT rows).
     pub pot_mult: Vec<i8>,
     pub scheme: Vec<Scheme>,
     pub alpha: Vec<f32>,
@@ -143,7 +146,13 @@ impl PackedWeights {
         assert_eq!(w.rows, scheme.len());
         assert_eq!(w.rows, alpha.len());
         let mut codes = vec![0i8; w.rows * w.cols];
-        let mut pot_mult = vec![0i8; w.rows * w.cols];
+        // the multiplier plane only exists when some row needs it — an
+        // all-Fixed layer would otherwise double its weight memory
+        let mut pot_mult = if scheme.contains(&Scheme::PotW4A4) {
+            vec![0i8; w.rows * w.cols]
+        } else {
+            Vec::new()
+        };
         for r in 0..w.rows {
             let (a, s) = (alpha[r], scheme[r]);
             let src = w.row(r);
@@ -197,9 +206,11 @@ impl PackedWeights {
         &self.codes[r * self.cols..(r + 1) * self.cols]
     }
 
-    /// PoT multiplier row (see `pot_mult`).
+    /// PoT multiplier row (see `pot_mult`). Panics if the layer has no
+    /// PoT rows (the plane is not allocated then).
     #[inline]
     pub fn pot_mult_row(&self, r: usize) -> &[i8] {
+        debug_assert_eq!(self.scheme[r], Scheme::PotW4A4, "pot_mult_row of a non-PoT row");
         &self.pot_mult[r * self.cols..(r + 1) * self.cols]
     }
 
@@ -290,6 +301,18 @@ mod tests {
         let p = PackedWeights::quantize(&w, &schemes, &alpha);
         let fake = crate::quant::rowwise_quant(&w, &alpha, &schemes);
         assert!(p.dequant().max_abs_err(&fake) < 1e-6);
+    }
+
+    #[test]
+    fn pot_mult_plane_only_allocated_when_pot_rows_exist() {
+        let w = Mat::from_vec(2, 3, vec![0.5, -0.25, 1.0, 0.7, 0.0, -1.0]);
+        let all_fixed =
+            PackedWeights::quantize(&w, &[Scheme::FixedW4A4, Scheme::FixedW8A4], &[1.0; 2]);
+        assert!(all_fixed.pot_mult.is_empty(), "all-Fixed layer allocated pot_mult");
+        let mixed =
+            PackedWeights::quantize(&w, &[Scheme::PotW4A4, Scheme::FixedW4A4], &[1.0; 2]);
+        assert_eq!(mixed.pot_mult.len(), 2 * 3);
+        assert!(mixed.pot_mult_row(0).iter().any(|&m| m != 0));
     }
 
     #[test]

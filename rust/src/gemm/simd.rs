@@ -1,0 +1,391 @@
+//! Runtime-dispatched SIMD micro-kernels for the integer GEMM cores.
+//!
+//! The unit of work is a **row block**: up to [`MICRO_ROWS`] weight rows
+//! of one scheme class, dotted against one activation row per call. The
+//! multi-row form is what makes the class-sorted layout pay off — one
+//! 32-byte activation load feeds four weight rows, so the activation
+//! bandwidth of the inner loop drops 4x versus the row-at-a-time kernel.
+//!
+//! Three implementations sit behind [`dot_block`]:
+//!
+//! * **AVX2** — `vpmaddubsw` + `vpmaddwd` over 32 u8xI8 lanes, four i32
+//!   vector accumulators (one per row), horizontal sum per tile.
+//! * **SSE (SSSE3/SSE4.1)** — the same shape over 16 lanes.
+//! * **Scalar** — the portable fallback, and the oracle the property
+//!   tests pin the SIMD paths against.
+//!
+//! All three accumulate the dot product exactly in i32, so they are
+//! **bit-identical** for any vector width, remainder handling, or ISA —
+//! integer addition is associative. The only numeric caveat is the
+//! 16-bit intermediate of `maddubs`: a pair sum `a0*w0 + a1*w1` with
+//! `a <= 2^bits - 1`, `|w| <= 128` saturates only for activation codes
+//! above 127, so callers route `bits > 7` activations to the scalar
+//! kernel (this repo quantizes activations to 4 bits; the headroom is
+//! ~8.5x).
+//!
+//! ISA selection is runtime-only (`is_x86_feature_detected!`), never a
+//! compile-time feature, so one binary serves every x86_64 machine and
+//! non-x86 targets compile straight to the scalar kernel. Setting
+//! `RMSMP_NO_SIMD=1` forces the scalar kernel everywhere — the CI leg
+//! that keeps the portable fallback green uses exactly this override.
+
+/// Weight rows per micro-kernel block. Four rows keep the AVX2 kernel at
+/// four vector accumulators plus one activation register — comfortably
+/// inside the 16 ymm registers — while quartering activation reloads.
+pub const MICRO_ROWS: usize = 4;
+
+/// Instruction-set choice for the integer dot kernels, resolved once per
+/// [`crate::gemm::MixedGemm`] (see [`Isa::detect`]).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Isa {
+    /// 256-bit `vpmaddubsw`-based kernels (x86_64 with AVX2).
+    Avx2,
+    /// 128-bit kernels (x86_64 with SSSE3 + SSE4.1).
+    Sse41,
+    /// Portable scalar kernels — correct everywhere, and the bit-exact
+    /// oracle for the vector paths.
+    Scalar,
+}
+
+impl Isa {
+    /// Pick the widest ISA this process should use: the `RMSMP_NO_SIMD`
+    /// environment override (any non-empty value other than `"0"`) wins,
+    /// then CPU feature detection, else scalar.
+    pub fn detect() -> Isa {
+        let disabled = std::env::var("RMSMP_NO_SIMD")
+            .map(|v| !v.is_empty() && v != "0")
+            .unwrap_or(false);
+        if disabled {
+            return Isa::Scalar;
+        }
+        Isa::detect_cpu()
+    }
+
+    /// CPU feature detection only (ignores the environment override).
+    pub fn detect_cpu() -> Isa {
+        #[cfg(target_arch = "x86_64")]
+        {
+            if is_x86_feature_detected!("avx2") {
+                return Isa::Avx2;
+            }
+            if is_x86_feature_detected!("ssse3") && is_x86_feature_detected!("sse4.1") {
+                return Isa::Sse41;
+            }
+        }
+        Isa::Scalar
+    }
+
+    /// Width rank for clamping (scalar < sse < avx2).
+    fn rank(self) -> u8 {
+        match self {
+            Isa::Scalar => 0,
+            Isa::Sse41 => 1,
+            Isa::Avx2 => 2,
+        }
+    }
+
+    /// `self`, clamped to what this CPU actually supports. Forcing a
+    /// wider ISA than the hardware has degrades to the hardware's best —
+    /// an [`crate::gemm::MixedGemm::set_isa`] caller can never reach an
+    /// illegal-instruction fault.
+    pub fn available(self) -> Isa {
+        let hw = Isa::detect_cpu();
+        if self.rank() <= hw.rank() {
+            self
+        } else {
+            hw
+        }
+    }
+}
+
+/// `sums[j] = Σ_i a[i] * w[j * stride + i]` for `j in 0..nr` — the block
+/// dot product at the bottom of every integer GEMM core. `a` holds
+/// unsigned activation codes (callers guarantee `<= 127` on the SIMD
+/// paths), `w` holds `nr` signed operand rows laid out `stride` apart
+/// (`w[j * stride..j * stride + a.len()]` is row `j`). Entries of `sums`
+/// beyond `nr` are left untouched.
+///
+/// Every ISA produces bit-identical results (i32 accumulation is exact);
+/// the `isa` argument only selects speed.
+#[inline]
+pub fn dot_block(
+    isa: Isa,
+    a: &[u8],
+    w: &[i8],
+    stride: usize,
+    nr: usize,
+    sums: &mut [i32; MICRO_ROWS],
+) {
+    debug_assert!(nr >= 1 && nr <= MICRO_ROWS);
+    debug_assert!(nr == 1 || stride >= a.len());
+    debug_assert!(w.len() >= (nr - 1) * stride + a.len());
+    // Clamp to the hardware so a caller-constructed Isa::Avx2 can never
+    // execute AVX2 code on a CPU without it (std's feature detection is
+    // cached, so this is an atomic load + bit test).
+    let isa = isa.available();
+    match isa {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `available()` above clamped the variant to what the
+        // runtime CPU feature check allows; slice bounds are asserted.
+        Isa::Avx2 => unsafe {
+            if nr == MICRO_ROWS {
+                x86::dot4_avx2(a, w, stride, sums);
+            } else {
+                for (j, s) in sums.iter_mut().enumerate().take(nr) {
+                    *s = x86::dot1_avx2(a, &w[j * stride..j * stride + a.len()]);
+                }
+            }
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — the clamp proved SSSE3/SSE4.1 are present.
+        Isa::Sse41 => unsafe {
+            if nr == MICRO_ROWS {
+                x86::dot4_sse(a, w, stride, sums);
+            } else {
+                for (j, s) in sums.iter_mut().enumerate().take(nr) {
+                    *s = x86::dot1_sse(a, &w[j * stride..j * stride + a.len()]);
+                }
+            }
+        },
+        _ => dot_block_scalar(a, w, stride, nr, sums),
+    }
+}
+
+/// The portable kernel (also the oracle the SIMD property tests compare
+/// against).
+fn dot_block_scalar(a: &[u8], w: &[i8], stride: usize, nr: usize, sums: &mut [i32; MICRO_ROWS]) {
+    for (j, s) in sums.iter_mut().enumerate().take(nr) {
+        let wj = &w[j * stride..j * stride + a.len()];
+        let mut t = 0i32;
+        for (&x, &c) in a.iter().zip(wj) {
+            t += x as i32 * c as i32;
+        }
+        *s = t;
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use super::MICRO_ROWS;
+    use std::arch::x86_64::*;
+
+    /// Horizontal sum of the four i32 lanes of `v`. SSE2-only ops, which
+    /// x86_64 guarantees statically.
+    #[inline]
+    unsafe fn hsum_epi32_sse(v: __m128i) -> i32 {
+        let hi64 = _mm_unpackhi_epi64(v, v);
+        let s = _mm_add_epi32(v, hi64);
+        let hi32 = _mm_shuffle_epi32::<0x55>(s);
+        _mm_cvtsi128_si32(_mm_add_epi32(s, hi32))
+    }
+
+    /// Horizontal sum of the eight i32 lanes of `v`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn hsum_epi32_avx2(v: __m256i) -> i32 {
+        let lo = _mm256_castsi256_si128(v);
+        let hi = _mm256_extracti128_si256::<1>(v);
+        hsum_epi32_sse(_mm_add_epi32(lo, hi))
+    }
+
+    /// One 32-lane u8 x i8 dot-product step: widen-multiply adjacent
+    /// pairs to i16 (`maddubs`), pair-sum to i32 (`madd` with ones), add
+    /// into `acc`.
+    #[inline]
+    #[target_feature(enable = "avx2")]
+    unsafe fn fma_step_avx2(acc: __m256i, a: __m256i, w: __m256i, ones: __m256i) -> __m256i {
+        _mm256_add_epi32(acc, _mm256_madd_epi16(_mm256_maddubs_epi16(a, w), ones))
+    }
+
+    /// Four-row fused AVX2 dot: one activation load per 32 bytes feeds
+    /// all four weight rows.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot4_avx2(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MICRO_ROWS]) {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let w0 = w.as_ptr();
+        let w1 = w0.add(stride);
+        let w2 = w0.add(2 * stride);
+        let w3 = w0.add(3 * stride);
+        let ones = _mm256_set1_epi16(1);
+        let mut acc0 = _mm256_setzero_si256();
+        let mut acc1 = _mm256_setzero_si256();
+        let mut acc2 = _mm256_setzero_si256();
+        let mut acc3 = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            acc0 = fma_step_avx2(acc0, av, _mm256_loadu_si256(w0.add(i) as *const __m256i), ones);
+            acc1 = fma_step_avx2(acc1, av, _mm256_loadu_si256(w1.add(i) as *const __m256i), ones);
+            acc2 = fma_step_avx2(acc2, av, _mm256_loadu_si256(w2.add(i) as *const __m256i), ones);
+            acc3 = fma_step_avx2(acc3, av, _mm256_loadu_si256(w3.add(i) as *const __m256i), ones);
+            i += 32;
+        }
+        let mut s = [
+            hsum_epi32_avx2(acc0),
+            hsum_epi32_avx2(acc1),
+            hsum_epi32_avx2(acc2),
+            hsum_epi32_avx2(acc3),
+        ];
+        while i < n {
+            let x = *ap.add(i) as i32;
+            s[0] += x * *w0.add(i) as i32;
+            s[1] += x * *w1.add(i) as i32;
+            s[2] += x * *w2.add(i) as i32;
+            s[3] += x * *w3.add(i) as i32;
+            i += 1;
+        }
+        *sums = s;
+    }
+
+    /// Single-row AVX2 dot (block remainders).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot1_avx2(a: &[u8], w: &[i8]) -> i32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let wp = w.as_ptr();
+        let ones = _mm256_set1_epi16(1);
+        let mut acc = _mm256_setzero_si256();
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let wv = _mm256_loadu_si256(wp.add(i) as *const __m256i);
+            acc = fma_step_avx2(acc, av, wv, ones);
+            i += 32;
+        }
+        let mut s = hsum_epi32_avx2(acc);
+        while i < n {
+            s += *ap.add(i) as i32 * *wp.add(i) as i32;
+            i += 1;
+        }
+        s
+    }
+
+    /// One 16-lane u8 x i8 dot-product step (SSSE3 `maddubs` + SSE2
+    /// `madd`).
+    #[inline]
+    #[target_feature(enable = "ssse3,sse4.1")]
+    unsafe fn fma_step_sse(acc: __m128i, a: __m128i, w: __m128i, ones: __m128i) -> __m128i {
+        _mm_add_epi32(acc, _mm_madd_epi16(_mm_maddubs_epi16(a, w), ones))
+    }
+
+    /// Four-row fused SSE dot.
+    #[target_feature(enable = "ssse3,sse4.1")]
+    pub unsafe fn dot4_sse(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MICRO_ROWS]) {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let w0 = w.as_ptr();
+        let w1 = w0.add(stride);
+        let w2 = w0.add(2 * stride);
+        let w3 = w0.add(3 * stride);
+        let ones = _mm_set1_epi16(1);
+        let mut acc0 = _mm_setzero_si128();
+        let mut acc1 = _mm_setzero_si128();
+        let mut acc2 = _mm_setzero_si128();
+        let mut acc3 = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let av = _mm_loadu_si128(ap.add(i) as *const __m128i);
+            acc0 = fma_step_sse(acc0, av, _mm_loadu_si128(w0.add(i) as *const __m128i), ones);
+            acc1 = fma_step_sse(acc1, av, _mm_loadu_si128(w1.add(i) as *const __m128i), ones);
+            acc2 = fma_step_sse(acc2, av, _mm_loadu_si128(w2.add(i) as *const __m128i), ones);
+            acc3 = fma_step_sse(acc3, av, _mm_loadu_si128(w3.add(i) as *const __m128i), ones);
+            i += 16;
+        }
+        let mut s = [
+            hsum_epi32_sse(acc0),
+            hsum_epi32_sse(acc1),
+            hsum_epi32_sse(acc2),
+            hsum_epi32_sse(acc3),
+        ];
+        while i < n {
+            let x = *ap.add(i) as i32;
+            s[0] += x * *w0.add(i) as i32;
+            s[1] += x * *w1.add(i) as i32;
+            s[2] += x * *w2.add(i) as i32;
+            s[3] += x * *w3.add(i) as i32;
+            i += 1;
+        }
+        *sums = s;
+    }
+
+    /// Single-row SSE dot (block remainders).
+    #[target_feature(enable = "ssse3,sse4.1")]
+    pub unsafe fn dot1_sse(a: &[u8], w: &[i8]) -> i32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let wp = w.as_ptr();
+        let ones = _mm_set1_epi16(1);
+        let mut acc = _mm_setzero_si128();
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let av = _mm_loadu_si128(ap.add(i) as *const __m128i);
+            let wv = _mm_loadu_si128(wp.add(i) as *const __m128i);
+            acc = fma_step_sse(acc, av, wv, ones);
+            i += 16;
+        }
+        let mut s = hsum_epi32_sse(acc);
+        while i < n {
+            s += *ap.add(i) as i32 * *wp.add(i) as i32;
+            i += 1;
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn problem(n: usize, seed: u64) -> (Vec<u8>, Vec<i8>) {
+        let mut rng = Rng::new(seed);
+        let a: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
+        let w: Vec<i8> = (0..MICRO_ROWS * n)
+            .map(|_| (rng.below(256) as i64 - 128) as i8)
+            .collect();
+        (a, w)
+    }
+
+    #[test]
+    fn all_isas_agree_with_scalar_at_awkward_lengths() {
+        // lengths straddling the 16- and 32-lane widths, incl. 0
+        for n in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 257] {
+            let (a, w) = problem(n, 11 + n as u64);
+            for nr in 1..=MICRO_ROWS {
+                let mut want = [i32::MIN; MICRO_ROWS];
+                dot_block_scalar(&a, &w, n, nr, &mut want);
+                for isa in [Isa::Avx2, Isa::Sse41, Isa::Scalar] {
+                    let isa = isa.available();
+                    let mut got = [i32::MIN; MICRO_ROWS];
+                    dot_block(isa, &a, &w, n, nr, &mut got);
+                    assert_eq!(got[..nr], want[..nr], "isa {isa:?} n {n} nr {nr}");
+                    // lanes beyond nr stay untouched
+                    assert!(got[nr..].iter().all(|&v| v == i32::MIN));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn saturating_inputs_are_scalar_only_by_contract() {
+        // codes <= 127 never saturate the i16 intermediate: the extreme
+        // pair 127*(-128) + 127*(-128) = -32512 fits i16.
+        let a = vec![127u8; 34];
+        let w = vec![-128i8; 34];
+        let mut want = [0i32; MICRO_ROWS];
+        dot_block_scalar(&a, &w, 34, 1, &mut want);
+        let mut got = [0i32; MICRO_ROWS];
+        dot_block(Isa::detect_cpu(), &a, &w, 34, 1, &mut got);
+        assert_eq!(got[0], want[0]);
+        assert_eq!(want[0], 34 * 127 * -128);
+    }
+
+    #[test]
+    fn available_clamps_to_hardware() {
+        let hw = Isa::detect_cpu();
+        assert_eq!(Isa::Scalar.available(), Isa::Scalar);
+        assert!(Isa::Avx2.available().rank() <= hw.rank());
+        assert_eq!(hw.available(), hw);
+    }
+}

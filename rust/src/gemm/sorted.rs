@@ -1,0 +1,174 @@
+//! Class-sorted kernel layout for one layer's weights.
+//!
+//! [`super::PackedWeights`] keeps rows in model order, which scatters the
+//! rows of each scheme class across memory; dispatching through per-row
+//! index lists made every micro-kernel block gather from disjoint cache
+//! lines. [`SortedWeights`] is the layout the GEMM actually runs on: the
+//! rows are **permuted once at load time** so each class occupies one
+//! contiguous block (PoT-4, Fixed-4, Fixed-8, APoT-4 — the scheme-code
+//! order), matching how the FPGA streams each class's filters into its
+//! PE array back-to-back (paper §4.1).
+//!
+//! The stored codes are the **kernel operands**, not the storage codes:
+//! PoT rows are pre-decoded to their `±2^(6-shift)` i8 multipliers so the
+//! inner loop is the same u8 x i8 MAC for all three RMSMP classes. The
+//! permutation (`perm`: sorted → original) and its inverse (`inv`:
+//! original → sorted) are kept so outputs scatter back to model row
+//! order; because `perm` is a bijection, every output cell is still
+//! written by exactly one task in the parallel dispatch.
+
+use super::mixed::RowPartition;
+use super::packed::PackedWeights;
+use crate::quant::Scheme;
+
+/// One layer's weights in class-sorted kernel form (see module docs).
+#[derive(Clone, Debug)]
+pub struct SortedWeights {
+    pub rows: usize,
+    pub cols: usize,
+    /// Kernel operand codes, row-major in **sorted** row order: Fixed
+    /// rows hold signed level codes, PoT rows the decoded `±2^(6-shift)`
+    /// multipliers, APoT rows signed level indices.
+    ops: Vec<i8>,
+    /// `perm[sorted_row] = original_row` — the output scatter map.
+    pub perm: Vec<usize>,
+    /// `inv[original_row] = sorted_row`.
+    pub inv: Vec<usize>,
+    /// Per-row clip scale, sorted order (`alpha[r] == packed.alpha[perm[r]]`).
+    pub alpha: Vec<f32>,
+    /// Contiguous class ranges over the sorted row space.
+    part: RowPartition,
+}
+
+impl SortedWeights {
+    /// Build the sorted layout from packed weights. Rows keep their
+    /// original relative order within each class (a stable sort), so the
+    /// permutation is deterministic.
+    pub fn from_packed(pw: &PackedWeights) -> SortedWeights {
+        let (rows, cols) = (pw.rows, pw.cols);
+        let part = RowPartition::from_schemes(&pw.scheme);
+        let mut perm = Vec::with_capacity(rows);
+        for class in RowPartition::CLASS_ORDER {
+            for (i, s) in pw.scheme.iter().enumerate() {
+                if *s == class {
+                    perm.push(i);
+                }
+            }
+        }
+        debug_assert_eq!(perm.len(), rows);
+        let mut inv = vec![0usize; rows];
+        let mut ops = vec![0i8; rows * cols];
+        let mut alpha = Vec::with_capacity(rows);
+        for (sr, &orig) in perm.iter().enumerate() {
+            inv[orig] = sr;
+            let src = match pw.scheme[orig] {
+                Scheme::PotW4A4 => pw.pot_mult_row(orig),
+                _ => pw.row(orig),
+            };
+            ops[sr * cols..(sr + 1) * cols].copy_from_slice(src);
+            alpha.push(pw.alpha[orig]);
+        }
+        SortedWeights { rows, cols, ops, perm, inv, alpha, part }
+    }
+
+    /// Operand row `sr` (sorted index).
+    #[inline]
+    pub fn op_row(&self, sr: usize) -> &[i8] {
+        &self.ops[sr * self.cols..(sr + 1) * self.cols]
+    }
+
+    /// `nr` contiguous operand rows starting at sorted row `r0` — the
+    /// micro-kernel block slab (row `j` of the slab starts at
+    /// `j * self.cols`).
+    #[inline]
+    pub fn op_rows(&self, r0: usize, nr: usize) -> &[i8] {
+        &self.ops[r0 * self.cols..(r0 + nr) * self.cols]
+    }
+
+    /// Scheme class of sorted row `sr`.
+    #[inline]
+    pub fn scheme_of(&self, sr: usize) -> Scheme {
+        self.part.scheme_of(sr)
+    }
+
+    /// The class partition (contiguous ranges in sorted row space).
+    #[inline]
+    pub fn partition(&self) -> &RowPartition {
+        &self.part
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{default_alpha, Mat};
+    use crate::util::rng::Rng;
+
+    fn mixed_packed(rows: usize, cols: usize, seed: u64) -> PackedWeights {
+        let mut rng = Rng::new(seed);
+        let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.5));
+        let schemes: Vec<Scheme> = (0..rows)
+            .map(|_| match rng.below(4) {
+                0 => Scheme::PotW4A4,
+                1 => Scheme::FixedW4A4,
+                2 => Scheme::FixedW8A4,
+                _ => Scheme::ApotW4A4,
+            })
+            .collect();
+        let alpha: Vec<f32> = (0..rows).map(|r| default_alpha(w.row(r))).collect();
+        PackedWeights::quantize(&w, &schemes, &alpha)
+    }
+
+    #[test]
+    fn perm_is_a_bijection_with_inverse() {
+        let pw = mixed_packed(37, 5, 3);
+        let sw = SortedWeights::from_packed(&pw);
+        assert_eq!(sw.perm.len(), 37);
+        for orig in 0..37 {
+            assert_eq!(sw.perm[sw.inv[orig]], orig);
+        }
+        let mut seen = sw.perm.clone();
+        seen.sort_unstable();
+        assert_eq!(seen, (0..37).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn classes_are_contiguous_and_rows_match_source() {
+        let pw = mixed_packed(41, 7, 9);
+        let sw = SortedWeights::from_packed(&pw);
+        for sr in 0..sw.rows {
+            let orig = sw.perm[sr];
+            // the sorted class equals the source scheme
+            assert_eq!(sw.scheme_of(sr), pw.scheme[orig]);
+            // the operand row is the kernel operand of the source row
+            let want: &[i8] = match pw.scheme[orig] {
+                Scheme::PotW4A4 => pw.pot_mult_row(orig),
+                _ => pw.row(orig),
+            };
+            assert_eq!(sw.op_row(sr), want, "sorted row {sr}");
+            assert_eq!(sw.alpha[sr], pw.alpha[orig]);
+        }
+        // ranges tile 0..rows in class order
+        let part = sw.partition();
+        let mut next = 0usize;
+        for class in RowPartition::CLASS_ORDER {
+            let r = part.range(class);
+            assert_eq!(r.start, next);
+            next = r.end;
+        }
+        assert_eq!(next, sw.rows);
+    }
+
+    #[test]
+    fn stable_within_class() {
+        let pw = mixed_packed(23, 3, 21);
+        let sw = SortedWeights::from_packed(&pw);
+        for class in RowPartition::CLASS_ORDER {
+            let r = sw.partition().range(class);
+            let origs: Vec<usize> = sw.perm[r].to_vec();
+            let mut sorted = origs.clone();
+            sorted.sort_unstable();
+            assert_eq!(origs, sorted, "{class} rows not in stable order");
+        }
+    }
+}

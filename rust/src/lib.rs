@@ -16,8 +16,11 @@
 //! * [`assign`] — the row-wise scheme/precision assignment engine
 //!   (variance split + sensitivity top-K, Alg. 1).
 //! * [`gemm`] — integer GEMM cores: `GemmFixed4`, `GemmFixed8` (i8 MAC)
-//!   and `GemmPoT4` (shift-add), plus the row-partitioned mixed GEMM with
-//!   tile-blocked inner loops and multi-threaded row dispatch.
+//!   and `GemmPoT4` (shift-add), plus the row-partitioned mixed GEMM:
+//!   class-sorted weight layout ([`gemm::SortedWeights`]), multi-row
+//!   SIMD micro-kernels with runtime AVX2/SSE/scalar dispatch
+//!   ([`gemm::Isa`]), tile-blocked inner loops, and multi-threaded row
+//!   dispatch.
 //! * [`model`] — the layer-graph representation loaded from the AOT
 //!   manifest, im2col, the plan compiler ([`model::Plan`]), the reusable
 //!   [`model::Workspace`], and the integer executor that walks compiled
@@ -76,12 +79,12 @@
 //! exactly one row's dot products, so rows parallelize with no shared
 //! accumulation.
 //!
-//! * **Task granularity** — each scheme class's row list is split into
-//!   chunks of `ParallelConfig::min_rows_per_task` rows (precompiled
-//!   into the plan as [`gemm::TaskChunk`] schedules). Chunks are
-//!   interleaved round-robin across the four per-class queues so cheap
-//!   PoT shift-add chunks and expensive Fixed-8 MAC chunks alternate in
-//!   the task list instead of convoying per class.
+//! * **Task granularity** — each scheme class's contiguous sorted-row
+//!   range is split into chunks of `ParallelConfig::min_rows_per_task`
+//!   rows (precompiled into the plan as [`gemm::TaskChunk`] schedules).
+//!   Chunks are interleaved round-robin across the four class ranges so
+//!   cheap PoT shift-add chunks and expensive Fixed-8 MAC chunks
+//!   alternate in the task list instead of convoying per class.
 //! * **Scheduling** — tasks drain through
 //!   [`util::pool::ThreadPool::scoped_for_indexed`]: workers (plus the
 //!   calling thread) pull the next task index from a shared atomic
@@ -105,6 +108,42 @@
 //!   sequential only when its sibling workers already saturate the pool
 //!   and its batch is wide; otherwise the threads go inside the GEMM
 //!   (row-level); see `coordinator::batcher::row_parallel_for_batch`.
+//!
+//! ## Kernel architecture
+//!
+//! The GEMM kernel layer is built from three pieces:
+//!
+//! * **Class-sorted layout** ([`gemm::SortedWeights`]) — at load time
+//!   each layer's rows are permuted so every scheme class occupies one
+//!   contiguous block (the scheme-code order PoT-4, Fixed-4, Fixed-8,
+//!   APoT-4), exactly how the FPGA streams one class's filters into its
+//!   PE array back-to-back. PoT rows are pre-decoded to their
+//!   `±2^(6-shift)` i8 multipliers so all three RMSMP classes share one
+//!   u8 x i8 inner loop. A [`gemm::RowPartition`] is then just four
+//!   ranges; the permutation and its inverse are stored so outputs
+//!   scatter back to model row order (a bijection, so parallel tasks
+//!   still write disjoint cells).
+//! * **Micro-kernel blocking** — dispatch hands each task chunk to
+//!   `GemmCore::run_block_tiled` in blocks of [`gemm::MICRO_ROWS`] (4)
+//!   rows: one activation tile load feeds the whole row block, cutting
+//!   activation bandwidth 4x vs the row-at-a-time kernel, with the
+//!   column loop still tiled at `ParallelConfig::tile_cols`.
+//! * **Runtime SIMD dispatch** ([`gemm::Isa`]) — the inner block dot
+//!   ([`gemm::dot_block`]) is selected once per engine from CPUID:
+//!   AVX2 (`vpmaddubsw`/`vpmaddwd`, 32 lanes), SSSE3/SSE4.1 (16 lanes),
+//!   or the portable scalar loop. No compile-time features, zero new
+//!   dependencies; non-x86 targets compile straight to scalar, and
+//!   `RMSMP_NO_SIMD=1` forces scalar (a dedicated CI leg runs the whole
+//!   test suite this way).
+//!
+//! **Bit-exactness guarantee:** the three RMSMP cores accumulate dot
+//! products exactly in i32 and apply one dequantizing multiply per
+//! output cell with the same expression in every kernel shape, so
+//! scalar vs SSE vs AVX2, row vs block, any tile size, any chunk
+//! schedule, and any thread count all produce bit-identical outputs
+//! (pinned by `tests/test_simd.rs`). The f32-accumulating APoT baseline
+//! core stays on the scalar row loop and is bit-exact for a fixed
+//! `tile_cols`, which the config pins.
 
 pub mod assign;
 pub mod coordinator;

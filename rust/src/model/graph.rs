@@ -21,6 +21,11 @@
 //! pool (optionally shared with other executors — the coordinator gives
 //! every worker the same pool). `set_row_parallel` lets the coordinator
 //! toggle row-level parallelism per batch without rebuilding anything.
+//! The compiled-plan path dispatches every GEMM over the layer's
+//! load-time class-sorted layout (`LayerWeights::sorted`) so the SIMD
+//! micro-kernels stream contiguous same-scheme weight blocks; the
+//! reference interpreter keeps sorting per call through the
+//! compatibility wrappers, staying bit-exact.
 
 use std::collections::HashMap;
 use std::sync::Arc;
@@ -129,6 +134,14 @@ impl Executor {
                 part.total(),
                 lw.rows
             );
+            // the plan's chunk schedules index the sorted layout; a
+            // weights table with a different class mix would make them
+            // dispatch rows to the wrong cores
+            ensure!(
+                part == lw.sorted.partition(),
+                "plan/weights mismatch at layer {}: scheme class mix differs",
+                lw.name
+            );
         }
         let gemm = match pool {
             Some(p) => MixedGemm::with_shared_pool(cfg, p),
@@ -218,7 +231,6 @@ impl Executor {
                     chunks,
                 } => {
                     let lw = &weights.layers[*layer];
-                    let part = &plan.layer_parts[*layer];
                     let inp_len = n * in_c * in_h * in_w;
                     if *groups == 1 {
                         im2col_range_into(
@@ -238,8 +250,7 @@ impl Executor {
                         ws.stage.resize(ws.patches.rows, lw.rows);
                         gemm.run_partitioned_into(
                             &ws.acts,
-                            &lw.packed,
-                            part,
+                            &lw.sorted,
                             chunks,
                             row_parallel,
                             &mut ws.scratch,
@@ -307,7 +318,6 @@ impl Executor {
                 }
                 PlanOp::Linear { layer, input, out, in_cols, out_cols, chunks } => {
                     let lw = &weights.layers[*layer];
-                    let part = &plan.layer_parts[*layer];
                     let in_len = n * in_cols;
                     PackedActs::quantize_slice_into(
                         &ws.slots[*input][..in_len],
@@ -320,8 +330,7 @@ impl Executor {
                     ws.stage.resize(n, lw.rows);
                     gemm.run_partitioned_into(
                         &ws.acts,
-                        &lw.packed,
-                        part,
+                        &lw.sorted,
                         chunks,
                         row_parallel,
                         &mut ws.scratch,

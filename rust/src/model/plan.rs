@@ -21,7 +21,7 @@ use std::fmt::Write as _;
 
 use crate::ensure;
 use crate::err;
-use crate::gemm::{chunk_tasks, ParallelConfig, RowPartition, TaskChunk};
+use crate::gemm::{chunk_tasks, ParallelConfig, RowPartition, TaskChunk, MICRO_ROWS};
 use crate::util::error::Result;
 
 use super::im2col::out_dim;
@@ -128,7 +128,9 @@ pub struct Footprint {
     pub acts_elems: usize,
     /// GEMM/Gap staging matrix f32 elements.
     pub gemm_out_elems: usize,
-    /// Per-lane scratch length (one f32 column + one i32 accumulator).
+    /// Per-lane scratch length: one [`MICRO_ROWS`]-row micro-kernel
+    /// block (an f32 output block + an i32 accumulator block of this
+    /// many elements each).
     pub lane_elems: usize,
     /// Logits output matrix f32 elements.
     pub logits_elems: usize,
@@ -421,7 +423,7 @@ impl Plan {
             patch_elems: self.max_patch_per_image * n,
             acts_elems: self.max_acts_per_image * n,
             gemm_out_elems: self.max_gemm_out_per_image * n,
-            lane_elems: self.max_gemm_rows_per_image * n,
+            lane_elems: MICRO_ROWS * self.max_gemm_rows_per_image * n,
             logits_elems: self.logits_cols * n,
         }
     }

@@ -5,7 +5,7 @@ use std::path::Path;
 
 use crate::bail;
 use crate::err;
-use crate::gemm::PackedWeights;
+use crate::gemm::{PackedWeights, SortedWeights};
 use crate::quant::{Mat, Scheme};
 use crate::util::error::{Context, Result};
 
@@ -30,8 +30,13 @@ pub struct LayerWeights {
     pub bias: Vec<f32>,
     /// Float folded weights, (rows, cols) row-major.
     pub w: Mat,
-    /// Integer codes for the GEMM cores.
+    /// Integer codes for the GEMM cores (model row order).
     pub packed: PackedWeights,
+    /// Class-sorted kernel layout: `packed` permuted once at load so each
+    /// scheme class is one contiguous block, plus the permutation and its
+    /// inverse for output scatter. This is what the compiled-plan
+    /// executor's mixed GEMM actually runs on.
+    pub sorted: SortedWeights,
 }
 
 /// All layers of one model, in manifest order.
@@ -120,6 +125,7 @@ impl ModelWeights {
             let bias = c.f32_vec(rows)?;
             let w = Mat::from_vec(rows, cols, c.f32_vec(rows * cols)?);
             let packed = PackedWeights::quantize(&w, &scheme, &alpha);
+            let sorted = SortedWeights::from_packed(&packed);
             layers.push(LayerWeights {
                 name,
                 kind: if kind_code == 0 { "conv" } else { "linear" }.to_string(),
@@ -138,6 +144,7 @@ impl ModelWeights {
                 bias,
                 w,
                 packed,
+                sorted,
             });
         }
         if c.i != buf.len() {
@@ -221,6 +228,11 @@ mod tests {
         assert_eq!(l.scheme, vec![Scheme::FixedW4A4, Scheme::PotW4A4]);
         assert_eq!(l.w.at(0, 0), 0.5);
         assert_eq!(l.bias, vec![0.1, -0.2]);
+        // the class-sorted layout is built at load: PoT row 1 sorts ahead
+        // of Fixed row 0
+        assert_eq!(l.sorted.perm, vec![1, 0]);
+        assert_eq!(l.sorted.inv, vec![1, 0]);
+        assert_eq!(l.sorted.partition().total(), 2);
         assert!(m.layer("fc").is_ok());
         assert!(m.layer("missing").is_err());
     }

@@ -34,7 +34,8 @@ pub struct Workspace {
     pub(crate) acts: PackedActs,
     /// GEMM output / Gap staging matrix.
     pub(crate) stage: Mat,
-    /// Per-lane GEMM row scratch (column + i32 accumulator).
+    /// Per-lane GEMM micro-kernel scratch (a `MICRO_ROWS x batch` f32
+    /// output block + i32 accumulator block per lane).
     pub(crate) scratch: GemmScratch,
     /// Logits returned by `infer` (borrowed out, overwritten per call).
     pub(crate) logits: Mat,

@@ -12,7 +12,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
-use rmsmp::gemm::PackedWeights;
+use rmsmp::gemm::{PackedWeights, SortedWeights};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
 use rmsmp::model::Executor;
@@ -61,6 +61,7 @@ fn layer(
 ) -> LayerWeights {
     let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
     let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
     LayerWeights {
         name: name.into(),
         kind: kind.into(),
@@ -79,6 +80,7 @@ fn layer(
         bias: vec![0.01; w.rows],
         w,
         packed,
+        sorted,
     }
 }
 

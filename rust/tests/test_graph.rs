@@ -2,7 +2,7 @@
 //! artifacts needed): conv -> relu -> gap -> linear, with residual-add and
 //! grouped-conv variants, checked against a float fake-quant reference.
 
-use rmsmp::gemm::{MixedGemm, PackedWeights};
+use rmsmp::gemm::{MixedGemm, PackedWeights, SortedWeights};
 use rmsmp::model::im2col::{col2im, im2col};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
@@ -24,6 +24,7 @@ fn layer(
 ) -> LayerWeights {
     let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
     let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
     LayerWeights {
         name: name.into(),
         kind: kind.into(),
@@ -42,6 +43,7 @@ fn layer(
         bias: vec![0.0; w.rows],
         w,
         packed,
+        sorted,
     }
 }
 

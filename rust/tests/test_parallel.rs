@@ -7,7 +7,9 @@ use std::sync::Arc;
 
 use rmsmp::coordinator::batcher::BatchPolicy;
 use rmsmp::coordinator::{Server, ServerConfig};
-use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights, ParallelConfig, RowPartition};
+use rmsmp::gemm::{
+    MixedGemm, PackedActs, PackedWeights, ParallelConfig, RowPartition, SortedWeights,
+};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
 use rmsmp::prop_assert;
@@ -144,6 +146,7 @@ fn tiny_model(seed: u64) -> (Manifest, ModelWeights) {
     let w = Mat::from_vec(3, 2, rng.normal_vec(6, 0.5));
     let alpha: Vec<f32> = (0..3).map(|r| quant::default_alpha(w.row(r))).collect();
     let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
     let weights = ModelWeights {
         layers: vec![LayerWeights {
             name: "fc".into(),
@@ -163,6 +166,7 @@ fn tiny_model(seed: u64) -> (Manifest, ModelWeights) {
             bias: vec![0.0; 3],
             w,
             packed,
+            sorted,
         }],
     };
     (manifest, weights)

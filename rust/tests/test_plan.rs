@@ -5,7 +5,7 @@
 //! variants must equal their allocating originals; and steady-state
 //! workspace buffers must stay pointer-stable across calls.
 
-use rmsmp::gemm::{PackedActs, PackedWeights, ParallelConfig};
+use rmsmp::gemm::{PackedActs, PackedWeights, ParallelConfig, SortedWeights};
 use rmsmp::model::im2col::{im2col, im2col_group, im2col_group_into, im2col_into};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
@@ -37,6 +37,7 @@ fn layer(
 ) -> LayerWeights {
     let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
     let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
     LayerWeights {
         name: name.into(),
         kind: kind.into(),
@@ -55,6 +56,7 @@ fn layer(
         bias,
         w,
         packed,
+        sorted,
     }
 }
 

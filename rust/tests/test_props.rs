@@ -105,23 +105,33 @@ fn prop_assignment_ratio_exact_and_stable() {
 }
 
 #[test]
-fn prop_partition_is_a_permutation_with_unit_fractions() {
+fn prop_partition_ranges_tile_rows_with_unit_fractions() {
     check("partition", 100, |g| {
         let n = g.usize_in(1, 200);
         let schemes: Vec<Scheme> = (0..n).map(|_| *g.choice(&ALL_SCHEMES)).collect();
         let p = RowPartition::from_schemes(&schemes);
         prop_assert!(p.total() == n);
-        let mut all: Vec<usize> =
-            [&p.pot4[..], &p.fixed4[..], &p.fixed8[..], &p.apot4[..]].concat();
-        all.sort_unstable();
-        prop_assert!(all == (0..n).collect::<Vec<_>>(), "not a permutation");
+        // class ranges are contiguous, tile 0..n in CLASS_ORDER, and
+        // each holds exactly that class's row count
+        let mut next = 0usize;
+        for s in RowPartition::CLASS_ORDER {
+            let r = p.range(s);
+            prop_assert!(r.start == next, "{s} range not contiguous");
+            prop_assert!(
+                r.len() == schemes.iter().filter(|x| **x == s).count(),
+                "{s} range holds the wrong row count"
+            );
+            next = r.end;
+        }
+        prop_assert!(next == n, "ranges do not tile 0..{n}");
         // all four class fractions are reported and sum to 1 (the old
         // 3-tuple silently dropped the APoT share)
         let f = p.fractions();
         let sum: f64 = f.iter().sum();
         prop_assert!((sum - 1.0).abs() < 1e-9, "fractions sum {sum} != 1");
+        let apot = schemes.iter().filter(|s| **s == Scheme::ApotW4A4).count();
         prop_assert!(
-            (f[3] - p.apot4.len() as f64 / n as f64).abs() < 1e-12,
+            (f[3] - apot as f64 / n as f64).abs() < 1e-12,
             "apot fraction missing"
         );
         Ok(())

@@ -1,7 +1,7 @@
 //! Multi-model router over two in-memory variants (no artifacts needed).
 
 use rmsmp::coordinator::{Router, ServerConfig};
-use rmsmp::gemm::PackedWeights;
+use rmsmp::gemm::{PackedWeights, SortedWeights};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
 use rmsmp::quant::{self, Mat, Scheme};
@@ -33,6 +33,7 @@ fn tiny(seed: u64, schemes: Vec<Scheme>) -> (Manifest, ModelWeights) {
     let w = Mat::from_vec(3, 2, rng.normal_vec(6, 0.5));
     let alpha: Vec<f32> = (0..3).map(|r| quant::default_alpha(w.row(r))).collect();
     let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
     let weights = ModelWeights {
         layers: vec![LayerWeights {
             name: "fc".into(),
@@ -52,6 +53,7 @@ fn tiny(seed: u64, schemes: Vec<Scheme>) -> (Manifest, ModelWeights) {
             bias: vec![0.0; 3],
             w,
             packed,
+            sorted,
         }],
     };
     (manifest, weights)

@@ -1,0 +1,195 @@
+//! SIMD / micro-kernel invariants (the class-sorted kernel layer).
+//!
+//! The block micro-kernels behind `run_block_tiled` — scalar, SSE, and
+//! AVX2 — must be **bit-exact** against the scalar row-at-a-time
+//! `run_row_tiled` path for every scheme, batch size, tile size, and
+//! column count (including lengths that are not multiples of the vector
+//! width, which exercise the remainder loops); and the class-sorted
+//! layout's permutation must scatter outputs back to exactly the
+//! unsorted row order. Integer accumulation makes the first guarantee
+//! exact; the bijective permutation makes the second one.
+
+use rmsmp::gemm::{
+    chunk_tasks, GemmScratch, Isa, MixedGemm, PackedActs, PackedWeights, ParallelConfig,
+    SortedWeights, MICRO_ROWS,
+};
+use rmsmp::prop_assert;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::prop::{check, Gen};
+use rmsmp::util::rng::Rng;
+
+const SCHEMES: [Scheme; 4] = [
+    Scheme::PotW4A4,
+    Scheme::FixedW4A4,
+    Scheme::FixedW8A4,
+    Scheme::ApotW4A4,
+];
+
+fn problem(
+    rows: usize,
+    cols: usize,
+    batch: usize,
+    seed: u64,
+) -> (PackedActs, PackedWeights) {
+    let mut rng = Rng::new(seed);
+    let xd: Vec<f32> = (0..batch * cols).map(|_| rng.uniform(0.0, 1.3)).collect();
+    let x = Mat::from_vec(batch, cols, xd);
+    let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.5));
+    let schemes: Vec<Scheme> =
+        (0..rows).map(|r| SCHEMES[(rng.below(4) as usize + r) % 4]).collect();
+    let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let acts = PackedActs::quantize(&x, 1.0, 4);
+    let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+    (acts, pw)
+}
+
+/// The PR-2-era scalar baseline: one `run_row_tiled` call per weight row
+/// over the unsorted layout.
+fn rowwise_reference(
+    engine: &MixedGemm,
+    acts: &PackedActs,
+    pw: &PackedWeights,
+    tile: usize,
+) -> Mat {
+    let mut out = Mat::zeros(acts.rows, pw.rows);
+    let mut acc = vec![0i32; acts.rows];
+    let mut col = vec![0.0f32; acts.rows];
+    for r in 0..pw.rows {
+        col.fill(0.0);
+        engine
+            .core_for(pw.scheme[r])
+            .run_row_tiled(acts, pw, r, tile, &mut acc, &mut col);
+        for (b, &v) in col.iter().enumerate() {
+            out.set(b, r, v);
+        }
+    }
+    out
+}
+
+/// The new path: class-sorted layout + block micro-kernels at `isa`.
+fn sorted_block(
+    acts: &PackedActs,
+    pw: &PackedWeights,
+    tile: usize,
+    chunk_rows: usize,
+    isa: Isa,
+) -> Mat {
+    let mut engine = MixedGemm::with_config(ParallelConfig {
+        threads: 1,
+        tile_cols: tile,
+        min_rows_per_task: chunk_rows,
+    });
+    engine.set_isa(isa);
+    let sw = SortedWeights::from_packed(pw);
+    let chunks = chunk_tasks(sw.partition(), chunk_rows);
+    let mut scratch = GemmScratch::new(1);
+    let mut out = Mat::zeros(acts.rows, pw.rows);
+    out.data.fill(f32::NAN); // every cell must be overwritten
+    engine.run_partitioned_into(acts, &sw, &chunks, false, &mut scratch, &mut out);
+    out
+}
+
+#[test]
+fn block_simd_bit_exact_vs_scalar_rows_at_fixed_shapes() {
+    // The acceptance grid: batch 1/5/8, column counts that are not
+    // multiples of the 16/32-byte vector widths, several tile sizes.
+    let seq = MixedGemm::with_config(ParallelConfig::sequential());
+    let mut seed = 100u64;
+    for &batch in &[1usize, 5, 8] {
+        for &cols in &[3usize, 31, 33, 64, 257] {
+            for &tile in &[0usize, 7, 48] {
+                seed += 1;
+                let (acts, pw) = problem(13, cols, batch, seed);
+                let want = rowwise_reference(&seq, &acts, &pw, tile);
+                for isa in [Isa::Scalar, Isa::Sse41.available(), Isa::Avx2.available()] {
+                    for chunk_rows in [1usize, MICRO_ROWS, 64] {
+                        let got = sorted_block(&acts, &pw, tile, chunk_rows, isa);
+                        assert_eq!(
+                            got.data, want.data,
+                            "isa {isa:?} batch {batch} cols {cols} tile {tile} chunk {chunk_rows}"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn prop_block_simd_bit_exact_vs_scalar_rows() {
+    let seq = MixedGemm::with_config(ParallelConfig::sequential());
+    check("simd-block-exact", 40, |g: &mut Gen| {
+        let rows = g.usize_in(1, 40);
+        let cols = g.usize_in(1, 130);
+        let batch = g.usize_in(0, 9);
+        let tile = *g.choice(&[0usize, 5, 32, 100]);
+        let chunk_rows = g.usize_in(1, 9);
+        let (acts, pw) = problem(rows, cols, batch, g.usize_in(0, 1 << 30) as u64);
+        let want = rowwise_reference(&seq, &acts, &pw, tile);
+        for isa in [Isa::Scalar, Isa::detect_cpu()] {
+            let got = sorted_block(&acts, &pw, tile, chunk_rows, isa);
+            prop_assert!(
+                got.data == want.data,
+                "isa {isa:?} rows {rows} cols {cols} batch {batch} tile {tile}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn prop_sorted_permutation_round_trips() {
+    check("sorted-perm", 60, |g: &mut Gen| {
+        let rows = g.usize_in(1, 120);
+        let (_, pw) = problem(rows, 6, 1, g.usize_in(0, 1 << 30) as u64);
+        let sw = SortedWeights::from_packed(&pw);
+        // perm and inv are mutually inverse bijections
+        for orig in 0..rows {
+            prop_assert!(sw.perm[sw.inv[orig]] == orig, "perm . inv != id at {orig}");
+            prop_assert!(sw.inv[sw.perm[orig]] == orig, "inv . perm != id at {orig}");
+        }
+        // the sorted class of each row matches its source scheme, and the
+        // class ranges are exactly the partition's
+        for sr in 0..rows {
+            prop_assert!(
+                sw.scheme_of(sr) == pw.scheme[sw.perm[sr]],
+                "scheme mismatch at sorted row {sr}"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn parallel_simd_dispatch_is_bit_exact_vs_scalar_sequential() {
+    let (acts, pw) = problem(57, 67, 6, 77);
+    let seq = MixedGemm::with_config(ParallelConfig::sequential());
+    let want = rowwise_reference(&seq, &acts, &pw, 16);
+    let mut par = MixedGemm::with_config(ParallelConfig {
+        threads: 4,
+        tile_cols: 16,
+        min_rows_per_task: 3,
+    });
+    par.set_isa(Isa::detect_cpu());
+    let sw = SortedWeights::from_packed(&pw);
+    let chunks = chunk_tasks(sw.partition(), 3);
+    let mut scratch = GemmScratch::new(par.lanes());
+    let mut out = Mat::zeros(acts.rows, pw.rows);
+    for _ in 0..3 {
+        out.data.fill(f32::NAN);
+        par.run_partitioned_into(&acts, &sw, &chunks, true, &mut scratch, &mut out);
+        assert_eq!(out.data, want.data, "parallel SIMD dispatch diverged");
+    }
+}
+
+#[test]
+fn no_simd_env_value_is_respected_by_engines_built_now() {
+    // Engines resolve the ISA at construction; whatever RMSMP_NO_SIMD
+    // says for this process, a freshly built engine must agree with
+    // Isa::detect(), and a forced-scalar engine must report Scalar.
+    let engine = MixedGemm::new();
+    assert_eq!(engine.isa(), Isa::detect());
+    let mut forced = MixedGemm::new();
+    forced.set_isa(Isa::Scalar);
+    assert_eq!(forced.isa(), Isa::Scalar);
+}
