@@ -1,18 +1,20 @@
 //! Runtime benchmarks: the integer executor through the native runtime —
-//! compiled plan vs the reference interpreter at batch 1 and 8, and
-//! sequential vs parallel — on a synthetic CNN (no artifacts needed)
-//! and, when artifacts exist, on the shipped model. Writes
+//! compiled plan vs the reference interpreter at batch 1 and 8,
+//! integer-resident vs f32-resident dataflow (the requantization-fusion
+//! win), and sequential vs parallel — on a synthetic CNN (no artifacts
+//! needed) and, when artifacts exist, on the shipped model. Writes
 //! `BENCH_runtime.json` (per-inference latency + plan-vs-interpreter
-//! speedups) for the CI bench-smoke artifact.
+//! + requant-fusion speedups) for the CI bench-smoke artifact.
 //!
 //! Run: `cargo bench --bench bench_runtime` (RMSMP_BENCH_FAST=1 for CI).
 
 use std::hint::black_box;
+use std::sync::Arc;
 
 use rmsmp::gemm::{PackedWeights, ParallelConfig, SortedWeights};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
-use rmsmp::model::Executor;
+use rmsmp::model::{Executor, Plan};
 use rmsmp::quant::tensor::Tensor4;
 use rmsmp::quant::{self, Mat, Scheme};
 use rmsmp::runtime::Runtime;
@@ -54,8 +56,10 @@ fn layer(
     }
 }
 
-/// A conv -> gap -> linear model big enough to time: 32ch 16x16 input,
-/// 64-filter 3x3 conv, 10-way classifier.
+/// A conv -> conv -> gap -> linear model big enough to time: 32ch 16x16
+/// input, two 64-filter 3x3 convs (the conv→conv edge is where the
+/// integer-resident pipeline keeps activations as u8 codes), 10-way
+/// classifier.
 fn synthetic_model() -> (Manifest, ModelWeights) {
     let manifest = Manifest::from_json(
         &Json::parse(
@@ -66,14 +70,18 @@ fn synthetic_model() -> (Manifest, ModelWeights) {
           {"name": "c1", "kind": "conv", "rows": 64, "cols": 288,
            "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
            "scheme_counts": [42, 19, 3, 0]},
+          {"name": "c2", "kind": "conv", "rows": 64, "cols": 576,
+           "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [42, 19, 3, 0]},
           {"name": "fc", "kind": "linear", "rows": 10, "cols": 64,
            "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
            "scheme_counts": [7, 3, 0, 0]}
         ],
         "program": [
           {"op": "conv", "layer": "c1", "in": "in0", "out": "b0", "relu": true},
-          {"op": "gap", "in": "b0", "out": "b1"},
-          {"op": "linear", "layer": "fc", "in": "b1", "out": "logits"}
+          {"op": "conv", "layer": "c2", "in": "b0", "out": "b1", "relu": true},
+          {"op": "gap", "in": "b1", "out": "b2"},
+          {"op": "linear", "layer": "fc", "in": "b2", "out": "logits"}
         ]
       }"#,
         )
@@ -99,9 +107,11 @@ fn synthetic_model() -> (Manifest, ModelWeights) {
         (w, schemes, alpha)
     };
     let (wc, sc, ac) = mk(64, 288, &mut rng);
+    let (wc2, sc2, ac2) = mk(64, 576, &mut rng);
     let (wf, sf, af) = mk(10, 64, &mut rng);
     let layers = vec![
         layer("c1", "conv", (64, 32, 3, 3), 1, 1, wc, sc, ac),
+        layer("c2", "conv", (64, 64, 3, 3), 1, 1, wc2, sc2, ac2),
         layer("fc", "linear", (10, 64, 1, 1), 0, 0, wf, sf, af),
     ];
     (manifest, ModelWeights { layers })
@@ -157,6 +167,30 @@ fn main() {
     let speedup_b8 = ns(&b, "interp_b8") / ns(&b, "plan_b8");
     println!("bench runtime: plan speedup {speedup_b1:.2}x @ batch 1, {speedup_b8:.2}x @ batch 8");
 
+    // integer-resident (the default plan above) vs f32-resident dataflow:
+    // the end-to-end win of fusing requantization into the GEMM epilogue
+    // (same engine, same kernels — only the inter-layer domain differs)
+    let cfg = seq_rt.config();
+    let capacity = manifest.input_shape.first().copied().unwrap_or(1);
+    let f32_plan =
+        Arc::new(Plan::compile_with(&manifest, &weights, capacity, &cfg, false).unwrap());
+    let mut f32_seq = Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        f32_plan,
+        cfg,
+        None,
+    )
+    .unwrap();
+    bench_plan(&mut b, "f32res_b1", &mut f32_seq, &x1);
+    bench_plan(&mut b, "f32res_b8", &mut f32_seq, &x8);
+    let requant_speedup_b1 = ns(&b, "f32res_b1") / ns(&b, "plan_b1");
+    let requant_speedup_b8 = ns(&b, "f32res_b8") / ns(&b, "plan_b8");
+    println!(
+        "bench runtime: requant-fusion speedup {requant_speedup_b1:.2}x @ batch 1, \
+         {requant_speedup_b8:.2}x @ batch 8"
+    );
+
     // sequential vs parallel plan execution at the manifest batch
     let x4 = rand_input((4, 32, 16, 16), 7);
     let mut par = par_rt.executor(manifest, weights).unwrap();
@@ -183,6 +217,8 @@ fn main() {
         ("threads", num(par_rt.threads() as f64)),
         ("plan_speedup_b1", num(speedup_b1)),
         ("plan_speedup_b8", num(speedup_b8)),
+        ("requant_speedup_b1", num(requant_speedup_b1)),
+        ("requant_speedup_b8", num(requant_speedup_b8)),
     ];
     match b.write_json(extra) {
         Ok(path) => println!("bench runtime: wrote {}", path.display()),

@@ -1,8 +1,14 @@
-//! Serving metrics: counters + latency reservoirs, shared across workers.
+//! Serving metrics: counters + latency reservoirs, shared across
+//! workers, plus the per-stage inference-time breakdown (quantize /
+//! im2col / gemm / epilogue) the workers drain from their executors
+//! after every batch — the stats line that shows where batch time goes
+//! (and, on the integer-resident pipeline, that the quantize and
+//! epilogue stages have collapsed into the fused GEMM).
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 
+use crate::model::StageTimes;
 use crate::util::stats::{Reservoir, Welford};
 
 /// Aggregated serving metrics (thread-safe).
@@ -15,6 +21,11 @@ pub struct Metrics {
     latency_ms: Mutex<Reservoir>,
     queue_ms: Mutex<Reservoir>,
     batch_size: Mutex<Welford>,
+    /// Cumulative executor stage time across all workers, nanoseconds.
+    stage_quantize_ns: AtomicU64,
+    stage_im2col_ns: AtomicU64,
+    stage_gemm_ns: AtomicU64,
+    stage_epilogue_ns: AtomicU64,
 }
 
 impl Default for Metrics {
@@ -33,12 +44,36 @@ impl Metrics {
             latency_ms: Mutex::new(Reservoir::new(4096)),
             queue_ms: Mutex::new(Reservoir::new(4096)),
             batch_size: Mutex::new(Welford::new()),
+            stage_quantize_ns: AtomicU64::new(0),
+            stage_im2col_ns: AtomicU64::new(0),
+            stage_gemm_ns: AtomicU64::new(0),
+            stage_epilogue_ns: AtomicU64::new(0),
         }
     }
 
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_size.lock().unwrap().push(size as f64);
+    }
+
+    /// Fold one executor's drained per-stage timings into the totals
+    /// (workers call this with [`crate::model::Executor::take_stage_times`]
+    /// after each batch).
+    pub fn record_stages(&self, st: &StageTimes) {
+        self.stage_quantize_ns.fetch_add(st.quantize_ns, Ordering::Relaxed);
+        self.stage_im2col_ns.fetch_add(st.im2col_ns, Ordering::Relaxed);
+        self.stage_gemm_ns.fetch_add(st.gemm_ns, Ordering::Relaxed);
+        self.stage_epilogue_ns.fetch_add(st.epilogue_ns, Ordering::Relaxed);
+    }
+
+    /// Cumulative stage breakdown across all workers.
+    pub fn stage_totals(&self) -> StageTimes {
+        StageTimes {
+            quantize_ns: self.stage_quantize_ns.load(Ordering::Relaxed),
+            im2col_ns: self.stage_im2col_ns.load(Ordering::Relaxed),
+            gemm_ns: self.stage_gemm_ns.load(Ordering::Relaxed),
+            epilogue_ns: self.stage_epilogue_ns.load(Ordering::Relaxed),
+        }
     }
 
     pub fn record_response(&self, total_ms: f64, queue_ms: f64) {
@@ -60,9 +95,12 @@ impl Metrics {
     }
 
     pub fn summary(&self) -> String {
+        let st = self.stage_totals();
+        let ms = |ns: u64| ns as f64 / 1e6;
         format!(
             "requests={} responses={} rejected={} batches={} mean_batch={:.2} \
-             p50={:.2}ms p95={:.2}ms p99={:.2}ms queue_p95={:.2}ms",
+             p50={:.2}ms p95={:.2}ms p99={:.2}ms queue_p95={:.2}ms \
+             stages[quantize={:.2}ms im2col={:.2}ms gemm={:.2}ms epilogue={:.2}ms]",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
@@ -72,6 +110,10 @@ impl Metrics {
             self.latency_percentile(95.0),
             self.latency_percentile(99.0),
             self.queue_percentile(95.0),
+            ms(st.quantize_ns),
+            ms(st.im2col_ns),
+            ms(st.gemm_ns),
+            ms(st.epilogue_ns),
         )
     }
 }
@@ -94,5 +136,25 @@ mod tests {
         assert!((m.latency_percentile(50.0) - 20.0).abs() < 1e-9);
         let s = m.summary();
         assert!(s.contains("responses=3"), "{s}");
+    }
+
+    #[test]
+    fn accumulates_stage_breakdown() {
+        let m = Metrics::new();
+        m.record_stages(&StageTimes {
+            quantize_ns: 1_000_000,
+            im2col_ns: 2_000_000,
+            gemm_ns: 30_000_000,
+            epilogue_ns: 500_000,
+        });
+        m.record_stages(&StageTimes { gemm_ns: 10_000_000, ..StageTimes::default() });
+        let st = m.stage_totals();
+        assert_eq!(st.quantize_ns, 1_000_000);
+        assert_eq!(st.im2col_ns, 2_000_000);
+        assert_eq!(st.gemm_ns, 40_000_000);
+        assert_eq!(st.epilogue_ns, 500_000);
+        assert_eq!(st.total_ns(), 43_500_000);
+        let s = m.summary();
+        assert!(s.contains("gemm=40.00ms"), "{s}");
     }
 }

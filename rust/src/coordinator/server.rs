@@ -238,5 +238,8 @@ fn worker_loop(
                 eprintln!("[server] batch failed: {e}");
             }
         }
+        // drain the executor's per-stage breakdown into the shared
+        // metrics so the stats line shows where batch time goes
+        metrics.record_stages(&exec.take_stage_times());
     }
 }

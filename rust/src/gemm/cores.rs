@@ -33,6 +33,78 @@ use super::sorted::SortedWeights;
 use crate::quant::apot::ApotQuantizer;
 use crate::quant::{Mat, Scheme};
 
+/// Fused requantization parameters for the integer-resident epilogue:
+/// the affine map from a dequantized f32 output value to the *consumer
+/// layer's* activation code. Built once per op at plan-compile time from
+/// the consumer's clip scale and the global activation width.
+///
+/// `code(v)` is bit-identical to storing `v` to f32 and running
+/// [`super::packed::PackedActs::quantize_slice_into`] over it at the top
+/// of the next layer (same `n / alpha` division, same multiply, same
+/// clamp, same `round_ties_even`). The clamp's lower bound of zero also
+/// subsumes ReLU: `max(v, 0)` before the map cannot change the code, so
+/// the integer-resident path gets ReLU for free.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Requant {
+    /// `n / alpha` — the consumer's code-domain scale.
+    pub inv: f32,
+    /// `(1 << bits) - 1` as f32 — the top of the code range.
+    pub n: f32,
+}
+
+impl Requant {
+    /// Epilogue for a consumer quantizing to `bits`-bit codes with clip
+    /// scale `alpha`.
+    pub fn new(alpha: f32, bits: u32) -> Requant {
+        let n = ((1u32 << bits) - 1) as f32;
+        Requant { inv: n / alpha, n }
+    }
+
+    /// The consumer's activation code of output value `v`.
+    #[inline]
+    pub fn code(self, v: f32) -> u8 {
+        (v * self.inv).clamp(0.0, self.n).round_ties_even() as u8
+    }
+}
+
+/// Block epilogue of the integer-resident pipeline: map one micro-kernel
+/// block of dequantized outputs (`nr` rows x `batch`, as produced by
+/// [`GemmCore::run_block_tiled`]) to the consumer's activation codes —
+/// `codes[j * batch + b] = rq.code(col[j * batch + b] + bias[j])`.
+///
+/// The bias add here is the same f32 add the f32-resident path performs
+/// on its staging matrix, so the codes are bit-exact vs
+/// dequant-store-requantize; ReLU needs no term (see [`Requant`]).
+pub fn requant_block(
+    col: &[f32],
+    nr: usize,
+    batch: usize,
+    bias: &[f32; MICRO_ROWS],
+    rq: Requant,
+    codes: &mut [u8],
+) {
+    debug_assert!(nr <= MICRO_ROWS);
+    debug_assert!(col.len() >= nr * batch && codes.len() >= nr * batch);
+    for j in 0..nr {
+        requant_row(
+            &col[j * batch..(j + 1) * batch],
+            bias[j],
+            rq,
+            &mut codes[j * batch..(j + 1) * batch],
+        );
+    }
+}
+
+/// Row epilogue of the integer-resident pipeline (the grouped-conv
+/// path): requantize one weight row's dequantized outputs, all sharing
+/// one bias, into consumer activation codes.
+pub fn requant_row(col: &[f32], bias: f32, rq: Requant, codes: &mut [u8]) {
+    debug_assert_eq!(col.len(), codes.len());
+    for (d, &v) in codes.iter_mut().zip(col) {
+        *d = rq.code(v + bias);
+    }
+}
+
 /// A GEMM core processes the rows of one scheme class.
 ///
 /// Cores are `Sync`: the parallel mixed GEMM shares one core instance
@@ -625,6 +697,51 @@ mod tests {
                 assert_eq!(*m as i32, POT_MULT[*c as u8 as usize], "code {c}");
             }
         }
+    }
+
+    #[test]
+    fn requant_code_matches_activation_quantizer() {
+        // the fused epilogue must reproduce PackedActs::quantize (and
+        // thus quant::act_code) bit for bit, including the free ReLU:
+        // max(v, 0) before the map never changes the code.
+        let mut rng = Rng::new(11);
+        for &(alpha, bits) in &[(1.0f32, 4u32), (0.73, 4), (1.9, 8)] {
+            let rq = Requant::new(alpha, bits);
+            let vals: Vec<f32> = (0..257)
+                .map(|i| match i {
+                    0 => 0.0,
+                    1 => -0.0,
+                    2 => alpha,
+                    3 => -alpha,
+                    _ => rng.uniform(-1.5 * alpha, 1.5 * alpha),
+                })
+                .collect();
+            let x = Mat::from_vec(1, vals.len(), vals.clone());
+            let want = PackedActs::quantize(&x, alpha, bits);
+            for (i, &v) in vals.iter().enumerate() {
+                assert_eq!(rq.code(v), want.codes[i], "alpha {alpha} v {v}");
+                let relu = if v < 0.0 { 0.0 } else { v };
+                assert_eq!(rq.code(relu), want.codes[i], "relu changed code of {v}");
+            }
+        }
+    }
+
+    #[test]
+    fn requant_block_and_row_agree() {
+        let mut rng = Rng::new(13);
+        let (nr, batch) = (3usize, 5usize);
+        let col: Vec<f32> = (0..MICRO_ROWS * batch).map(|_| rng.normal()).collect();
+        let bias = [0.1f32, -0.2, 0.0, 0.3];
+        let rq = Requant::new(0.9, 4);
+        let mut block = vec![0xffu8; MICRO_ROWS * batch];
+        requant_block(&col, nr, batch, &bias, rq, &mut block);
+        for j in 0..nr {
+            let mut row = vec![0u8; batch];
+            requant_row(&col[j * batch..(j + 1) * batch], bias[j], rq, &mut row);
+            assert_eq!(&block[j * batch..(j + 1) * batch], &row[..], "row {j}");
+        }
+        // rows beyond nr untouched
+        assert!(block[nr * batch..].iter().all(|&c| c == 0xff));
     }
 
     #[test]

@@ -34,7 +34,9 @@
 use std::ops::Range;
 use std::sync::Arc;
 
-use super::cores::{GemmApot4, GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
+use super::cores::{
+    requant_block, GemmApot4, GemmCore, GemmFixed4, GemmFixed8, GemmPoT4, Requant,
+};
 use super::packed::{PackedActs, PackedWeights};
 use super::simd::{Isa, MICRO_ROWS};
 use super::sorted::SortedWeights;
@@ -217,15 +219,34 @@ pub fn chunk_tasks(part: &RowPartition, chunk_rows: usize) -> Vec<TaskChunk> {
     }
 }
 
-/// Per-lane reusable block scratch for the GEMM dispatch: a float block
-/// (`out` target of one [`MICRO_ROWS`]-row micro-kernel block across the
-/// batch, row-major `[j * batch + b]`) and the i32 accumulator block the
-/// cores MAC into. One lane per drain loop of the pool's
-/// `scoped_for_indexed` (lane 0 = caller, 1..=threads = helpers);
-/// preallocating them in the inference [`crate::model::Workspace`] is
-/// what makes steady-state dispatch allocation-free.
+/// One lane of GEMM dispatch scratch: the f32 output block of one
+/// [`MICRO_ROWS`]-row micro-kernel block across the batch (row-major
+/// `[j * batch + b]`), the i32 accumulator block the cores MAC into, and
+/// the u8 code block the fused requantization epilogue writes before the
+/// scatter (integer-resident dispatch only).
+struct Lane {
+    col: Vec<f32>,
+    acc: Vec<i32>,
+    codes: Vec<u8>,
+}
+
+impl Lane {
+    fn with_capacity(elems: usize) -> Lane {
+        Lane {
+            col: Vec::with_capacity(elems),
+            acc: Vec::with_capacity(elems),
+            codes: Vec::with_capacity(elems),
+        }
+    }
+}
+
+/// Per-lane reusable block scratch for the GEMM dispatch (see [`Lane`]).
+/// One lane per drain loop of the pool's `scoped_for_indexed` (lane 0 =
+/// caller, 1..=threads = helpers); preallocating them in the inference
+/// [`crate::model::Workspace`] is what makes steady-state dispatch
+/// allocation-free.
 pub struct GemmScratch {
-    lanes: Vec<(Vec<f32>, Vec<i32>)>,
+    lanes: Vec<Lane>,
 }
 
 impl GemmScratch {
@@ -238,9 +259,7 @@ impl GemmScratch {
     /// (i.e. [`MICRO_ROWS`] x the largest batch).
     pub fn with_capacity(lanes: usize, elems: usize) -> GemmScratch {
         GemmScratch {
-            lanes: (0..lanes.max(1))
-                .map(|_| (Vec::with_capacity(elems), Vec::with_capacity(elems)))
-                .collect(),
+            lanes: (0..lanes.max(1)).map(|_| Lane::with_capacity(elems)).collect(),
         }
     }
 
@@ -253,11 +272,12 @@ impl GemmScratch {
         let lanes = lanes.max(1);
         let elems = MICRO_ROWS * batch;
         while self.lanes.len() < lanes {
-            self.lanes.push((Vec::with_capacity(elems), Vec::with_capacity(elems)));
+            self.lanes.push(Lane::with_capacity(elems));
         }
-        for (col, acc) in self.lanes[..lanes].iter_mut() {
-            col.resize(elems, 0.0);
-            acc.resize(elems, 0);
+        for lane in self.lanes[..lanes].iter_mut() {
+            lane.col.resize(elems, 0.0);
+            lane.acc.resize(elems, 0);
+            lane.codes.resize(elems, 0);
         }
     }
 
@@ -265,16 +285,15 @@ impl GemmScratch {
     /// row path).
     pub fn lane0(&mut self, batch: usize) -> (&mut [f32], &mut [i32]) {
         self.ensure(1, batch);
-        let (col, acc) = &mut self.lanes[0];
-        (&mut col[..batch], &mut acc[..batch])
+        let lane = &mut self.lanes[0];
+        (&mut lane.col[..batch], &mut lane.acc[..batch])
     }
 
     /// Lane 0 as a full `MICRO_ROWS * batch` block (the sequential block
     /// dispatch).
-    fn lane0_block(&mut self, batch: usize) -> (&mut [f32], &mut [i32]) {
+    fn lane0_block(&mut self, batch: usize) -> &mut Lane {
         self.ensure(1, batch);
-        let (col, acc) = &mut self.lanes[0];
-        (&mut col[..], &mut acc[..])
+        &mut self.lanes[0]
     }
 
     /// Data pointers of every lane buffer (steady-state reuse tests pin
@@ -282,7 +301,13 @@ impl GemmScratch {
     pub fn buffer_ptrs(&self) -> Vec<usize> {
         self.lanes
             .iter()
-            .flat_map(|(col, acc)| [col.as_ptr() as usize, acc.as_ptr() as usize])
+            .flat_map(|l| {
+                [
+                    l.col.as_ptr() as usize,
+                    l.acc.as_ptr() as usize,
+                    l.codes.as_ptr() as usize,
+                ]
+            })
             .collect()
     }
 
@@ -290,29 +315,79 @@ impl GemmScratch {
     pub fn allocated_bytes(&self) -> usize {
         self.lanes
             .iter()
-            .map(|(col, acc)| 4 * col.capacity() + 4 * acc.capacity())
+            .map(|l| 4 * l.col.capacity() + 4 * l.acc.capacity() + l.codes.capacity())
             .sum()
     }
 }
 
-/// Raw output pointer shared across GEMM tasks. Each task writes a
-/// disjoint set of `(batch, row)` cells — sorted rows are partitioned
-/// across tasks and the row permutation is a bijection — so
-/// unsynchronized writes are sound; the pool's join barrier publishes
-/// them to the caller.
-struct SyncOutPtr {
-    p: *mut f32,
+/// How integer-resident GEMM output codes land in the destination
+/// buffer. `Nchw` fuses the col2im fold into the epilogue scatter: the
+/// conv path writes each output channel's codes straight into the NCHW
+/// code slot, so the f32 staging matrix *and* the separate col2im pass
+/// both disappear from the integer path.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum OutLayout {
+    /// Row-major (batch, cols) matrix: cell `(b, r)` at `b * cols + r`
+    /// (the linear-layer path).
+    RowMajor { cols: usize },
+    /// NCHW feature map with `hw` spatial positions per image: GEMM
+    /// batch index `b = img * hw + pos` and row `r` (the output channel)
+    /// land at `((img * channels) + r) * hw + pos`.
+    Nchw { channels: usize, hw: usize },
 }
 
-unsafe impl Send for SyncOutPtr {}
-unsafe impl Sync for SyncOutPtr {}
+impl OutLayout {
+    /// Total output elements for a GEMM of (`batch`, `rows`). Hard
+    /// asserts (not debug): these invariants gate the unchecked
+    /// raw-pointer scatter of the quant dispatch, and this runs once
+    /// per dispatch, not per cell.
+    fn len(self, batch: usize, rows: usize) -> usize {
+        match self {
+            OutLayout::RowMajor { cols } => {
+                assert_eq!(cols, rows, "layout cols != weight rows");
+                batch * cols
+            }
+            OutLayout::Nchw { channels, hw } => {
+                assert_eq!(channels, rows, "layout channels != weight rows");
+                assert!(hw > 0 && batch % hw == 0, "batch not a multiple of hw");
+                (batch / hw) * channels * hw
+            }
+        }
+    }
+
+    /// Destination offset of GEMM cell (batch row `b`, weight row `r`)
+    /// — the one copy of the layout's index math, shared by the
+    /// epilogue scatter and the partial-schedule pre-fill (for `Nchw`,
+    /// cells of one row are contiguous per image: `index(img * hw, r)`
+    /// is the base of an `hw`-length run).
+    #[inline]
+    fn index(self, b: usize, r: usize) -> usize {
+        match self {
+            OutLayout::RowMajor { cols } => b * cols + r,
+            OutLayout::Nchw { channels, hw } => ((b / hw) * channels + r) * hw + b % hw,
+        }
+    }
+}
+
+/// Raw output pointer shared across GEMM tasks. Each task writes a
+/// disjoint set of output cells — sorted rows are partitioned across
+/// tasks and the row permutation is a bijection (in both the row-major
+/// and the NCHW layout, a row owns its cells exclusively) — so
+/// unsynchronized writes are sound; the pool's join barrier publishes
+/// them to the caller.
+struct SyncOutPtr<T> {
+    p: *mut T,
+}
+
+unsafe impl<T> Send for SyncOutPtr<T> {}
+unsafe impl<T> Sync for SyncOutPtr<T> {}
 
 /// Raw pointer to the scratch lanes, shared across GEMM tasks. Lane `i`
 /// is only ever touched by the drain loop that `scoped_for_indexed`
 /// reports as lane `i`, and those run on distinct threads, so access is
 /// exclusive per lane.
 struct SyncLanesPtr {
-    p: *mut (Vec<f32>, Vec<i32>),
+    p: *mut Lane,
 }
 
 unsafe impl Send for SyncLanesPtr {}
@@ -499,11 +574,13 @@ impl MixedGemm {
         let ptr = SyncOutPtr { p: out.data.as_mut_ptr() };
 
         if !use_pool {
-            let (col, acc) = scratch.lane0_block(batch);
+            let lane = scratch.lane0_block(batch);
             for chunk in chunks {
                 // SAFETY: `ptr` points into `out`, exclusively borrowed
                 // for this call; chunks cover disjoint sorted rows.
-                unsafe { self.run_chunk(acts, sw, *chunk, acc, col, &ptr, out_cols) };
+                unsafe {
+                    self.run_chunk(acts, sw, *chunk, &mut lane.acc, &mut lane.col, &ptr, out_cols)
+                };
             }
             return;
         }
@@ -521,10 +598,147 @@ impl MixedGemm {
             // written through `ptr` are disjoint across tasks; the
             // scoped join orders them before the caller's reads.
             unsafe {
-                let (col, acc) = &mut *lanes.p.add(lane);
-                self.run_chunk(acts, sw, chunk, acc, col, &ptr, out_cols);
+                let l = &mut *lanes.p.add(lane);
+                self.run_chunk(acts, sw, chunk, &mut l.acc, &mut l.col, &ptr, out_cols);
             }
         });
+    }
+
+    /// The integer-resident twin of [`MixedGemm::run_partitioned_into`]:
+    /// run the mixed GEMM and map every accumulator straight to the
+    /// *consumer layer's* activation code — `rq.code(dequant + bias)`,
+    /// the fused dequant → bias → ReLU → requantize epilogue
+    /// ([`requant_block`]) — scattering codes into `out` in the
+    /// requested [`OutLayout`]. For the conv layout (`Nchw`) this also
+    /// fuses the col2im fold, so the integer path writes the next
+    /// layer's NCHW code slot directly: no f32 staging matrix, no
+    /// separate bias/ReLU pass, no col2im, no requantize pass.
+    ///
+    /// `bias` is in model row order (the epilogue gathers it through the
+    /// sorted layout's permutation). Codes are bit-exact vs running the
+    /// f32-resident path and quantizing its stored output at the top of
+    /// the next layer, for any chunk schedule, thread count, and kernel
+    /// ISA (same argument as the f32 dispatch: disjoint cells, identical
+    /// per-row arithmetic, and the epilogue is per-cell). Rows absent
+    /// from a partial schedule hold `rq.code(bias[row])` — the code the
+    /// f32 path's zeroed accumulator would produce after its bias pass.
+    pub fn run_partitioned_quant_into(
+        &self,
+        acts: &PackedActs,
+        sw: &SortedWeights,
+        chunks: &[TaskChunk],
+        bias: &[f32],
+        rq: Requant,
+        layout: OutLayout,
+        parallel: bool,
+        scratch: &mut GemmScratch,
+        out: &mut [u8],
+    ) {
+        assert_eq!(acts.cols, sw.cols, "inner dims");
+        assert_eq!(bias.len(), sw.rows, "bias length");
+        assert_eq!(out.len(), layout.len(acts.rows, sw.rows), "output length");
+        let batch = acts.rows;
+        let covered: usize = chunks.iter().map(|c| c.end - c.start).sum();
+        if covered < sw.rows {
+            // match the f32 path's semantics for rows absent from the
+            // schedule: their accumulator is zero, so their cells hold
+            // the code of the bias alone. Pre-fill every row (chunked
+            // rows are overwritten) — this path never runs on the plan's
+            // full schedules.
+            for orig in 0..sw.rows {
+                let c = rq.code(bias[orig]);
+                for b in 0..batch {
+                    out[layout.index(b, orig)] = c;
+                }
+            }
+        }
+        let use_pool = parallel
+            && self.pool.is_some()
+            && chunks.len() > 1
+            && covered >= 2 * self.cfg.min_rows_per_task.max(1);
+
+        let ptr = SyncOutPtr { p: out.as_mut_ptr() };
+
+        if !use_pool {
+            let lane = scratch.lane0_block(batch);
+            for chunk in chunks {
+                // SAFETY: `ptr` points into `out`, exclusively borrowed
+                // for this call; chunks cover disjoint sorted rows.
+                unsafe { self.run_chunk_quant(acts, sw, *chunk, bias, rq, layout, lane, &ptr) };
+            }
+            return;
+        }
+
+        let pool = self.pool.as_ref().expect("use_pool implies a pool");
+        scratch.ensure(pool.threads() + 1, batch);
+        let lanes = SyncLanesPtr { p: scratch.lanes.as_mut_ptr() };
+        pool.scoped_for_indexed(chunks.len(), |ti, lane| {
+            let chunk = chunks[ti];
+            // SAFETY: as in `run_partitioned_into` — exclusive lane per
+            // drain loop, disjoint output cells per chunk in either
+            // layout, join barrier publishes the writes.
+            unsafe {
+                let l = &mut *lanes.p.add(lane);
+                self.run_chunk_quant(acts, sw, chunk, bias, rq, layout, l, &ptr);
+            }
+        });
+    }
+
+    /// Run one chunk through the fused requantization epilogue: block
+    /// GEMM into the lane's f32 block, [`requant_block`] into the lane's
+    /// code block, then scatter codes through `sw.perm` in the output
+    /// layout.
+    ///
+    /// # Safety
+    ///
+    /// `out.p` must point at a buffer of `layout.len(batch, sw.rows)`
+    /// u8 elements that outlives the call, and no other thread may
+    /// concurrently write the cells of this chunk's (permuted) rows.
+    #[allow(clippy::too_many_arguments)]
+    unsafe fn run_chunk_quant(
+        &self,
+        acts: &PackedActs,
+        sw: &SortedWeights,
+        chunk: TaskChunk,
+        bias: &[f32],
+        rq: Requant,
+        layout: OutLayout,
+        lane: &mut Lane,
+        out: &SyncOutPtr<u8>,
+    ) {
+        let batch = acts.rows;
+        let core = self.core_for(chunk.scheme);
+        let tile = self.cfg.tile_cols;
+        let mut r = chunk.start;
+        while r < chunk.end {
+            let nr = MICRO_ROWS.min(chunk.end - r);
+            core.run_block_tiled(acts, sw, r, nr, tile, self.isa, &mut lane.acc, &mut lane.col);
+            let mut bias_block = [0.0f32; MICRO_ROWS];
+            for (j, b) in bias_block.iter_mut().enumerate().take(nr) {
+                *b = bias[sw.perm[r + j]];
+            }
+            requant_block(&lane.col, nr, batch, &bias_block, rq, &mut lane.codes);
+            for j in 0..nr {
+                let orig = sw.perm[r + j];
+                let src = &lane.codes[j * batch..(j + 1) * batch];
+                match layout {
+                    OutLayout::RowMajor { .. } => {
+                        for (b, &c) in src.iter().enumerate() {
+                            *out.p.add(layout.index(b, orig)) = c;
+                        }
+                    }
+                    OutLayout::Nchw { hw, .. } => {
+                        // one contiguous copy per image: this row's hw
+                        // codes land at the channel's NCHW plane
+                        for img in 0..batch / hw {
+                            let dst = out.p.add(layout.index(img * hw, orig));
+                            std::ptr::copy_nonoverlapping(src.as_ptr().add(img * hw), dst, hw);
+                        }
+                    }
+                }
+            }
+            r += nr;
+        }
     }
 
     /// Run one chunk in [`MICRO_ROWS`]-row micro-kernel blocks, scattering
@@ -542,7 +756,7 @@ impl MixedGemm {
         chunk: TaskChunk,
         acc: &mut [i32],
         col: &mut [f32],
-        out: &SyncOutPtr,
+        out: &SyncOutPtr<f32>,
         out_cols: usize,
     ) {
         let batch = acts.rows;
@@ -796,6 +1010,104 @@ mod tests {
                 } else {
                     assert_eq!(got.at(b, orig), want.at(b, orig));
                 }
+            }
+        }
+    }
+
+    #[test]
+    fn quant_dispatch_matches_f32_path_then_requantize() {
+        // the fused epilogue must equal: f32 dispatch -> +bias ->
+        // quantize with the consumer scale — bit-exact, in both layouts,
+        // sequential and parallel.
+        let (x, w, schemes, alpha) = rand_problem(24, 27, 6, 41);
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let sw = SortedWeights::from_packed(&pw);
+        let chunks = chunk_tasks(sw.partition(), 3);
+        let bias: Vec<f32> = (0..24).map(|r| (r as f32 - 11.0) * 0.01).collect();
+        let rq = Requant::new(0.8, 4);
+        let g = MixedGemm::with_config(ParallelConfig {
+            threads: 3,
+            tile_cols: 16,
+            min_rows_per_task: 4,
+        });
+        let mut scratch = GemmScratch::new(g.lanes());
+
+        // reference: f32 dispatch, then the separate bias + requantize
+        let mut stage = Mat::zeros(6, 24);
+        g.run_partitioned_into(&acts, &sw, &chunks, false, &mut scratch, &mut stage);
+        let mut want_rm = vec![0u8; 6 * 24];
+        for b in 0..6 {
+            for r in 0..24 {
+                want_rm[b * 24 + r] = rq.code(stage.at(b, r) + bias[r]);
+            }
+        }
+        // NCHW reference: batch 6 = 2 images x 3 spatial positions
+        let (channels, hw) = (24usize, 3usize);
+        let mut want_nchw = vec![0u8; 2 * channels * hw];
+        for img in 0..2 {
+            for r in 0..channels {
+                for pos in 0..hw {
+                    want_nchw[((img * channels) + r) * hw + pos] =
+                        want_rm[(img * hw + pos) * 24 + r];
+                }
+            }
+        }
+
+        for parallel in [false, true] {
+            let mut got = vec![0xffu8; 6 * 24];
+            g.run_partitioned_quant_into(
+                &acts,
+                &sw,
+                &chunks,
+                &bias,
+                rq,
+                OutLayout::RowMajor { cols: 24 },
+                parallel,
+                &mut scratch,
+                &mut got,
+            );
+            assert_eq!(got, want_rm, "row-major parallel={parallel}");
+            let mut got = vec![0xffu8; 2 * channels * hw];
+            g.run_partitioned_quant_into(
+                &acts,
+                &sw,
+                &chunks,
+                &bias,
+                rq,
+                OutLayout::Nchw { channels, hw },
+                parallel,
+                &mut scratch,
+                &mut got,
+            );
+            assert_eq!(got, want_nchw, "nchw parallel={parallel}");
+        }
+
+        // partial schedule: dropped rows come back as code(bias) — what
+        // the f32 path's zeroed accumulator yields after its bias pass
+        let partial = &chunks[..chunks.len() - 1];
+        let dropped = chunks[chunks.len() - 1];
+        let mut got = vec![0xffu8; 6 * 24];
+        g.run_partitioned_quant_into(
+            &acts,
+            &sw,
+            partial,
+            &bias,
+            rq,
+            OutLayout::RowMajor { cols: 24 },
+            false,
+            &mut scratch,
+            &mut got,
+        );
+        for sr in 0..24 {
+            let orig = sw.perm[sr];
+            for b in 0..6 {
+                let want = if sr >= dropped.start && sr < dropped.end {
+                    rq.code(bias[orig])
+                } else {
+                    want_rm[b * 24 + orig]
+                };
+                assert_eq!(got[b * 24 + orig], want, "partial sr {sr} b {b}");
             }
         }
     }

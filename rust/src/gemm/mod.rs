@@ -30,8 +30,10 @@ pub mod packed;
 pub mod simd;
 pub mod sorted;
 
-pub use cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
-pub use mixed::{chunk_tasks, GemmScratch, MixedGemm, ParallelConfig, RowPartition, TaskChunk};
+pub use cores::{requant_block, requant_row, GemmCore, GemmFixed4, GemmFixed8, GemmPoT4, Requant};
+pub use mixed::{
+    chunk_tasks, GemmScratch, MixedGemm, OutLayout, ParallelConfig, RowPartition, TaskChunk,
+};
 pub use nibble::NibblePacked;
 pub use packed::{PackedActs, PackedWeights};
 pub use simd::{dot_block, Isa, MICRO_ROWS};

@@ -74,6 +74,35 @@ impl PackedActs {
         );
     }
 
+    /// Stamp shape + quantization metadata after the code buffer has
+    /// been filled externally (the integer-resident path writes codes
+    /// straight into `codes` — u8 im2col from a code slot, or a plain
+    /// copy for linear inputs — instead of quantizing floats).
+    pub fn set_meta(&mut self, rows: usize, cols: usize, alpha: f32, bits: u32) {
+        debug_assert_eq!(self.codes.len(), rows * cols, "codes/shape mismatch");
+        self.rows = rows;
+        self.cols = cols;
+        self.alpha = alpha;
+        self.bits = bits;
+    }
+
+    /// Fill from an existing code buffer (reusing `self.codes`'
+    /// capacity): the integer-resident linear path, where the producing
+    /// GEMM already wrote the consumer's codes row-major.
+    pub fn copy_codes_into(
+        codes: &[u8],
+        rows: usize,
+        cols: usize,
+        alpha: f32,
+        bits: u32,
+        out: &mut PackedActs,
+    ) {
+        assert_eq!(codes.len(), rows * cols, "shape/code mismatch");
+        out.codes.clear();
+        out.codes.extend_from_slice(codes);
+        out.set_meta(rows, cols, alpha, bits);
+    }
+
     /// Dequantized float value of code `c`.
     #[inline]
     pub fn scale(&self) -> f32 {

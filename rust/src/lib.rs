@@ -36,7 +36,7 @@
 //!   deterministic PRNG, CLI parsing, JSON, stats, a thread pool, error
 //!   plumbing, and the bench/property-test harnesses.
 //!
-//! ## Execution model: compile, then run
+//! ## Execution model: compile, then run — integer-resident
 //!
 //! RMSMP's layer-wise-uniform row mixing makes a model's compute
 //! structure fully static, so inference is split into a one-time compile
@@ -46,31 +46,63 @@
 //!   is compiled once: buffer names resolve to dense slot ids, per-op
 //!   geometry (im2col output dims, patch-matrix shapes, group slicing)
 //!   is precomputed and shape-checked, each layer's row partition is
-//!   chunked into a GEMM task schedule, and a high-water memory
-//!   footprint is derived (`rmsmp plan` prints it). The plan is
-//!   immutable and shared (`Arc<Plan>`).
-//! * **Workspace** ([`model::Workspace`]) — the mutable half: slot
-//!   buffers, im2col scratch, quantized-activation codes, GEMM staging,
-//!   per-lane row scratch, and the logits matrix, all preallocated from
-//!   the plan's footprint and reused across `infer` calls. Batches at
-//!   or below the plan capacity only `resize` within reserved capacity
-//!   and overwrite in place (a larger batch grows the buffers once,
-//!   then that size is the new steady state). **Sequential steady-state
-//!   `infer` performs zero heap allocation** (pinned by a
-//!   counting-allocator test); with a thread pool attached, every
-//!   buffer is still reused (pinned by a pointer-stability test) and
-//!   the only per-call allocations left are the O(threads) job handles
-//!   the pool boxes per GEMM dispatch.
+//!   chunked into a GEMM task schedule, every inter-layer edge gets an
+//!   **output domain** (u8 codes or f32 — see below), and a high-water
+//!   memory footprint is derived (`rmsmp plan` prints it, including
+//!   each slot's domain). The plan is immutable and shared
+//!   (`Arc<Plan>`).
+//! * **Integer-resident dataflow** — the paper's hardware never
+//!   dequantizes activations between layers (they are 4-bit Fixed
+//!   everywhere), and neither does this executor: where a value's only
+//!   consumers are quantized GEMMs agreeing on a clip scale, the
+//!   producing GEMM runs a **fused epilogue**
+//!   ([`gemm::MixedGemm::run_partitioned_quant_into`]) that maps each
+//!   i32 accumulator straight to the *next* layer's activation code —
+//!   one dequantizing multiply, the bias add, and the consumer's
+//!   requantization ([`gemm::Requant`]), with ReLU free because the
+//!   code clamp's lower bound is zero, and with the NCHW col2im fold
+//!   fused into the code scatter. The consumer's im2col then unrolls
+//!   the u8 code slot directly (padding is the literal code 0, which is
+//!   the code of 0.0 — the quantizer is unsigned and zero-point-free).
+//!   The f32 round-trip (dequant → store → im2col → requantize) exists
+//!   only on edges that need it: the network input, Add operands, Gap
+//!   input, and the logits.
+//! * **Bit-exactness contract** — the fused epilogue performs exactly
+//!   the f32 operations of the fallback path in the same order (scale
+//!   multiply, bias add, `n/alpha` scale, clamp, `round_ties_even`), so
+//!   integer-resident activation codes and logits are **bit-identical**
+//!   to the f32-resident dataflow and to the reference interpreter, for
+//!   every batch, thread count, chunk schedule, and kernel ISA (pinned
+//!   by `tests/test_requant.rs`).
+//! * **Workspace** ([`model::Workspace`]) — the mutable half: f32 slot
+//!   buffers *and* u8 code slots (each allocated only for the domains
+//!   its slot actually holds), im2col scratch, quantized-activation
+//!   codes, GEMM staging, per-lane block scratch (f32 + i32 + u8), and
+//!   the logits matrix, all preallocated from the plan's footprint and
+//!   reused across `infer` calls. Batches at or below the plan capacity
+//!   only `resize` within reserved capacity and overwrite in place (a
+//!   larger batch grows the buffers once, then that size is the new
+//!   steady state). **Sequential steady-state `infer` performs zero
+//!   heap allocation on both dataflows** (pinned by a counting-allocator
+//!   test); with a thread pool attached, every buffer is still reused
+//!   (pinned by a pointer-stability test) and the only per-call
+//!   allocations left are the O(threads) job handles the pool boxes per
+//!   GEMM dispatch.
 //! * **Worker ownership** — the serving coordinator loads weights and
 //!   compiles the plan once, then shares `Arc<ModelWeights>` /
 //!   `Arc<Manifest>` / `Arc<Plan>` across workers; each worker privately
 //!   owns only an executor with its workspace, so an N-worker server
-//!   holds ~1x the model, not Nx.
+//!   holds ~1x the model, not Nx. Workers drain a per-stage timing
+//!   breakdown (quantize / im2col / gemm / epilogue,
+//!   [`model::StageTimes`]) into the shared metrics after every batch.
 //! * **Reference interpreter** — the original name-resolving,
 //!   per-call-allocating interpreter survives as
 //!   `Executor::reference_infer`, the bit-exact oracle for the
 //!   differential property tests (plan output must equal it exactly,
-//!   including grouped conv and residual topologies).
+//!   including grouped conv and residual topologies). The pre-fusion
+//!   f32-resident plan is also still compilable
+//!   (`Plan::compile_with(.., false)`) — it is the baseline
+//!   `bench_runtime` reports the `requant_speedup` against.
 //!
 //! ## Parallel execution model
 //!

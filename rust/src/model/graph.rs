@@ -11,10 +11,19 @@
 //! zero heap allocation outright, parallel dispatch additionally boxes
 //! O(threads) pool jobs per GEMM).
 //!
+//! The plan path is **integer-resident**: where the plan's output-domain
+//! inference proved a value's only consumers are quantized GEMMs, the
+//! GEMM runs with the fused requantization epilogue
+//! ([`crate::gemm::MixedGemm::run_partitioned_quant_into`]) and the
+//! value flows to the next layer as u8 activation codes (u8 im2col on
+//! the way in, `PlanOp::{Conv,Linear}::out_quant` on the way out); only
+//! the input edge, Add/Gap operands, and the logits run through f32.
+//!
 //! The original name-resolving interpreter survives as
 //! [`Executor::reference_infer`]: the bit-exact oracle the differential
 //! tests pin the plan path against (and the baseline the runtime bench
-//! reports the plan speedup over).
+//! reports the plan speedup over). Integer-resident codes and logits
+//! are pinned bit-exact against it by `tests/test_requant.rs`.
 //!
 //! The executor owns one [`MixedGemm`]; when built via
 //! [`Executor::with_parallel`] the GEMM fans row chunks out over a thread
@@ -29,16 +38,19 @@
 
 use std::collections::HashMap;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::ensure;
 use crate::err;
-use crate::gemm::{MixedGemm, PackedActs, ParallelConfig};
+use crate::gemm::{requant_row, Isa, MixedGemm, OutLayout, PackedActs, ParallelConfig};
 use crate::quant::tensor::Tensor4;
 use crate::quant::Mat;
 use crate::util::error::Result;
 use crate::util::pool::ThreadPool;
 
-use super::im2col::{col2im, col2im_slice_into, im2col, im2col_group, im2col_range_into};
+use super::im2col::{
+    col2im, col2im_slice_into, im2col, im2col_codes_range_into, im2col_group, im2col_range_into,
+};
 use super::manifest::{Manifest, OpMeta};
 use super::plan::{Plan, PlanOp};
 use super::weights::{LayerWeights, ModelWeights};
@@ -71,6 +83,44 @@ impl Buf {
     }
 }
 
+/// Cumulative wall time of the compiled-plan executor's pipeline
+/// stages, in nanoseconds. `infer` accumulates these per call; the
+/// serving loop drains them into the shared metrics
+/// ([`crate::coordinator::Metrics`]) so the stats line shows where
+/// batch time goes. On the integer-resident path the requantization
+/// epilogue is fused into the GEMM, so `quantize_ns` and `epilogue_ns`
+/// collapse toward zero and their cost appears (much reduced) inside
+/// `gemm_ns`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct StageTimes {
+    /// Activation quantization (f32 → u8 codes) ahead of a GEMM, and
+    /// the linear path's code copy.
+    pub quantize_ns: u64,
+    /// im2col patch unrolling (f32 or u8-code).
+    pub im2col_ns: u64,
+    /// Mixed-GEMM dispatch (includes the fused requantization epilogue
+    /// on integer-resident ops).
+    pub gemm_ns: u64,
+    /// The f32 fallback's separate bias/ReLU pass + col2im fold +
+    /// linear copy-out.
+    pub epilogue_ns: u64,
+}
+
+impl StageTimes {
+    /// Accumulate another sample into this one.
+    pub fn add(&mut self, o: &StageTimes) {
+        self.quantize_ns += o.quantize_ns;
+        self.im2col_ns += o.im2col_ns;
+        self.gemm_ns += o.gemm_ns;
+        self.epilogue_ns += o.epilogue_ns;
+    }
+
+    /// Total across all four stages.
+    pub fn total_ns(&self) -> u64 {
+        self.quantize_ns + self.im2col_ns + self.gemm_ns + self.epilogue_ns
+    }
+}
+
 /// The integer inference executor (see module docs).
 pub struct Executor {
     manifest: Arc<Manifest>,
@@ -81,6 +131,9 @@ pub struct Executor {
     row_parallel: bool,
     /// MACs executed since construction (for GOP accounting).
     pub macs: u64,
+    /// Per-stage wall time accumulated by `infer` since the last
+    /// [`Executor::take_stage_times`].
+    stages: StageTimes,
 }
 
 impl Executor {
@@ -143,13 +196,25 @@ impl Executor {
                 lw.name
             );
         }
+        // the integer-resident epilogues bake the consumers' clip scales
+        // in; reject weights they would requantize with a stale scale
+        plan.validate_domains(&weights)?;
         let gemm = match pool {
             Some(p) => MixedGemm::with_shared_pool(cfg, p),
             None => MixedGemm::with_config(cfg),
         };
         let row_parallel = gemm.is_parallel();
         let ws = Workspace::new(&plan, gemm.lanes());
-        Ok(Executor { manifest, weights, plan, ws, gemm, row_parallel, macs: 0 })
+        Ok(Executor {
+            manifest,
+            weights,
+            plan,
+            ws,
+            gemm,
+            row_parallel,
+            macs: 0,
+            stages: StageTimes::default(),
+        })
     }
 
     pub fn manifest(&self) -> &Manifest {
@@ -182,6 +247,29 @@ impl Executor {
         self.row_parallel
     }
 
+    /// Force the GEMM kernel ISA (differential tests and benches).
+    /// Requests wider than the hardware supports are clamped.
+    pub fn set_isa(&mut self, isa: Isa) {
+        self.gemm.set_isa(isa);
+    }
+
+    /// The SIMD ISA the GEMM micro-kernels run on.
+    pub fn isa(&self) -> Isa {
+        self.gemm.isa()
+    }
+
+    /// Per-stage wall time accumulated by `infer` since construction or
+    /// the last [`Executor::take_stage_times`].
+    pub fn stage_times(&self) -> StageTimes {
+        self.stages
+    }
+
+    /// Drain the accumulated per-stage timings (the serving loop calls
+    /// this after each batch and feeds the sample to the metrics).
+    pub fn take_stage_times(&mut self) -> StageTimes {
+        std::mem::take(&mut self.stages)
+    }
+
     /// Run one batch (NCHW input) through the compiled plan; returns the
     /// logits (batch, num_classes), borrowed from the workspace (valid
     /// until the next `infer`). For batches at or below the plan
@@ -206,6 +294,7 @@ impl Executor {
         let gemm = &self.gemm;
         let ws = &mut self.ws;
         let mut macs = 0u64;
+        let mut st = StageTimes::default();
 
         ws.slots[plan.input_slot].resize(x.data.len(), 0.0);
         ws.slots[plan.input_slot].copy_from_slice(&x.data);
@@ -229,123 +318,278 @@ impl Executor {
                     ch_per_group,
                     filt_per_group,
                     chunks,
+                    in_codes,
+                    out_quant,
                 } => {
                     let lw = &weights.layers[*layer];
                     let inp_len = n * in_c * in_h * in_w;
+                    let hw = oh * ow;
+                    let batch = n * hw;
                     if *groups == 1 {
-                        im2col_range_into(
-                            &ws.slots[*input][..inp_len],
-                            n,
-                            *in_c,
-                            *in_h,
-                            *in_w,
-                            0,
-                            *in_c,
-                            *k,
-                            *stride,
-                            *pad,
-                            &mut ws.patches,
-                        );
-                        PackedActs::quantize_into(&ws.patches, lw.a_alpha, act_bits, &mut ws.acts);
-                        ws.stage.resize(ws.patches.rows, lw.rows);
-                        gemm.run_partitioned_into(
-                            &ws.acts,
-                            &lw.sorted,
-                            chunks,
-                            row_parallel,
-                            &mut ws.scratch,
-                            &mut ws.stage,
-                        );
-                        macs += (ws.patches.rows * lw.rows * lw.cols) as u64;
-                    } else {
-                        // grouped conv: run each group's filters over its
-                        // channel slice, row by row.
-                        ws.stage.resize(n * oh * ow, lw.rows);
-                        for g in 0..*groups {
+                        if *in_codes {
+                            // integer-resident input: unroll the u8 code
+                            // slot straight into the GEMM operand — no
+                            // f32 im2col, no requantize pass
+                            let t = Instant::now();
+                            im2col_codes_range_into(
+                                &ws.code_slots[*input][..inp_len],
+                                n,
+                                *in_c,
+                                *in_h,
+                                *in_w,
+                                0,
+                                *in_c,
+                                *k,
+                                *stride,
+                                *pad,
+                                &mut ws.acts.codes,
+                            );
+                            ws.acts.set_meta(batch, lw.cols, lw.a_alpha, act_bits);
+                            st.im2col_ns += t.elapsed().as_nanos() as u64;
+                        } else {
+                            let t = Instant::now();
                             im2col_range_into(
                                 &ws.slots[*input][..inp_len],
                                 n,
                                 *in_c,
                                 *in_h,
                                 *in_w,
-                                g * ch_per_group,
-                                *ch_per_group,
+                                0,
+                                *in_c,
                                 *k,
                                 *stride,
                                 *pad,
                                 &mut ws.patches,
                             );
+                            st.im2col_ns += t.elapsed().as_nanos() as u64;
+                            let t = Instant::now();
                             PackedActs::quantize_into(
                                 &ws.patches,
                                 lw.a_alpha,
                                 act_bits,
                                 &mut ws.acts,
                             );
-                            let batch = ws.patches.rows;
+                            st.quantize_ns += t.elapsed().as_nanos() as u64;
+                        }
+                        match out_quant {
+                            Some(rq) => {
+                                // fused epilogue: accumulator → consumer
+                                // code, bias + ReLU + requantize + NCHW
+                                // scatter all inside the GEMM dispatch
+                                let t = Instant::now();
+                                let out_len = n * lw.out_ch * hw;
+                                ws.code_slots[*out].resize(out_len, 0);
+                                gemm.run_partitioned_quant_into(
+                                    &ws.acts,
+                                    &lw.sorted,
+                                    chunks,
+                                    &lw.bias,
+                                    *rq,
+                                    OutLayout::Nchw { channels: lw.out_ch, hw },
+                                    row_parallel,
+                                    &mut ws.scratch,
+                                    &mut ws.code_slots[*out][..out_len],
+                                );
+                                st.gemm_ns += t.elapsed().as_nanos() as u64;
+                            }
+                            None => {
+                                let t = Instant::now();
+                                ws.stage.resize(batch, lw.rows);
+                                gemm.run_partitioned_into(
+                                    &ws.acts,
+                                    &lw.sorted,
+                                    chunks,
+                                    row_parallel,
+                                    &mut ws.scratch,
+                                    &mut ws.stage,
+                                );
+                                st.gemm_ns += t.elapsed().as_nanos() as u64;
+                            }
+                        }
+                        macs += (batch * lw.rows * lw.cols) as u64;
+                    } else {
+                        // grouped conv: run each group's filters over its
+                        // channel slice, row by row.
+                        match out_quant {
+                            Some(_) => ws.code_slots[*out].resize(n * lw.out_ch * hw, 0),
+                            None => ws.stage.resize(batch, lw.rows),
+                        }
+                        for g in 0..*groups {
+                            if *in_codes {
+                                let t = Instant::now();
+                                im2col_codes_range_into(
+                                    &ws.code_slots[*input][..inp_len],
+                                    n,
+                                    *in_c,
+                                    *in_h,
+                                    *in_w,
+                                    g * ch_per_group,
+                                    *ch_per_group,
+                                    *k,
+                                    *stride,
+                                    *pad,
+                                    &mut ws.acts.codes,
+                                );
+                                ws.acts.set_meta(batch, lw.cols, lw.a_alpha, act_bits);
+                                st.im2col_ns += t.elapsed().as_nanos() as u64;
+                            } else {
+                                let t = Instant::now();
+                                im2col_range_into(
+                                    &ws.slots[*input][..inp_len],
+                                    n,
+                                    *in_c,
+                                    *in_h,
+                                    *in_w,
+                                    g * ch_per_group,
+                                    *ch_per_group,
+                                    *k,
+                                    *stride,
+                                    *pad,
+                                    &mut ws.patches,
+                                );
+                                st.im2col_ns += t.elapsed().as_nanos() as u64;
+                                let t = Instant::now();
+                                PackedActs::quantize_into(
+                                    &ws.patches,
+                                    lw.a_alpha,
+                                    act_bits,
+                                    &mut ws.acts,
+                                );
+                                st.quantize_ns += t.elapsed().as_nanos() as u64;
+                            }
+                            let t = Instant::now();
                             let (col, acc) = ws.scratch.lane0(batch);
                             for fi in 0..*filt_per_group {
                                 let r = g * filt_per_group + fi;
                                 col.fill(0.0);
                                 gemm.run_row_into(&ws.acts, &lw.packed, r, acc, col);
-                                for (b, &v) in col.iter().enumerate() {
-                                    ws.stage.set(b, r, v);
+                                match out_quant {
+                                    Some(rq) => {
+                                        // row epilogue: requantize this
+                                        // filter's outputs straight into
+                                        // its NCHW code plane
+                                        for img in 0..n {
+                                            let base = ((img * lw.out_ch) + r) * hw;
+                                            requant_row(
+                                                &col[img * hw..(img + 1) * hw],
+                                                lw.bias[r],
+                                                *rq,
+                                                &mut ws.code_slots[*out][base..base + hw],
+                                            );
+                                        }
+                                    }
+                                    None => {
+                                        for (b, &v) in col.iter().enumerate() {
+                                            ws.stage.set(b, r, v);
+                                        }
+                                    }
                                 }
                             }
+                            st.gemm_ns += t.elapsed().as_nanos() as u64;
                             macs += (batch * filt_per_group * lw.cols) as u64;
                         }
                     }
-
-                    // bias + relu, then fold back into the output slot
-                    for r in 0..ws.stage.rows {
-                        let row = ws.stage.row_mut(r);
-                        for (c, v) in row.iter_mut().enumerate() {
-                            *v += lw.bias[c];
-                            if *relu && *v < 0.0 {
-                                *v = 0.0;
-                            }
-                        }
+                    if out_quant.is_none() {
+                        // f32 fallback epilogue, shared by the grouped
+                        // and non-grouped paths: bias + relu over the
+                        // staging matrix, then fold into the output slot
+                        // (the integer path fused all of this into the
+                        // GEMM dispatch above)
+                        let t = Instant::now();
+                        conv_bias_relu(&mut ws.stage, &lw.bias, *relu);
+                        let out_len = n * lw.out_ch * hw;
+                        ws.slots[*out].resize(out_len, 0.0);
+                        col2im_slice_into(
+                            &ws.stage,
+                            n,
+                            lw.out_ch,
+                            *oh,
+                            *ow,
+                            &mut ws.slots[*out][..out_len],
+                        );
+                        st.epilogue_ns += t.elapsed().as_nanos() as u64;
                     }
-                    let out_len = n * lw.out_ch * oh * ow;
-                    ws.slots[*out].resize(out_len, 0.0);
-                    col2im_slice_into(
-                        &ws.stage,
-                        n,
-                        lw.out_ch,
-                        *oh,
-                        *ow,
-                        &mut ws.slots[*out][..out_len],
-                    );
                 }
-                PlanOp::Linear { layer, input, out, in_cols, out_cols, chunks } => {
+                PlanOp::Linear {
+                    layer,
+                    input,
+                    out,
+                    in_cols,
+                    out_cols,
+                    chunks,
+                    in_codes,
+                    out_quant,
+                } => {
                     let lw = &weights.layers[*layer];
                     let in_len = n * in_cols;
-                    PackedActs::quantize_slice_into(
-                        &ws.slots[*input][..in_len],
-                        n,
-                        *in_cols,
-                        lw.a_alpha,
-                        act_bits,
-                        &mut ws.acts,
-                    );
-                    ws.stage.resize(n, lw.rows);
-                    gemm.run_partitioned_into(
-                        &ws.acts,
-                        &lw.sorted,
-                        chunks,
-                        row_parallel,
-                        &mut ws.scratch,
-                        &mut ws.stage,
-                    );
-                    macs += (n * lw.rows * lw.cols) as u64;
-                    for r in 0..ws.stage.rows {
-                        let row = ws.stage.row_mut(r);
-                        for (c, v) in row.iter_mut().enumerate() {
-                            *v += lw.bias[c];
+                    let t = Instant::now();
+                    if *in_codes {
+                        // the producer already wrote this layer's codes
+                        // row-major — a straight copy replaces quantize
+                        PackedActs::copy_codes_into(
+                            &ws.code_slots[*input][..in_len],
+                            n,
+                            *in_cols,
+                            lw.a_alpha,
+                            act_bits,
+                            &mut ws.acts,
+                        );
+                    } else {
+                        PackedActs::quantize_slice_into(
+                            &ws.slots[*input][..in_len],
+                            n,
+                            *in_cols,
+                            lw.a_alpha,
+                            act_bits,
+                            &mut ws.acts,
+                        );
+                    }
+                    st.quantize_ns += t.elapsed().as_nanos() as u64;
+                    match out_quant {
+                        Some(rq) => {
+                            let t = Instant::now();
+                            let out_len = n * out_cols;
+                            ws.code_slots[*out].resize(out_len, 0);
+                            gemm.run_partitioned_quant_into(
+                                &ws.acts,
+                                &lw.sorted,
+                                chunks,
+                                &lw.bias,
+                                *rq,
+                                OutLayout::RowMajor { cols: *out_cols },
+                                row_parallel,
+                                &mut ws.scratch,
+                                &mut ws.code_slots[*out][..out_len],
+                            );
+                            st.gemm_ns += t.elapsed().as_nanos() as u64;
+                        }
+                        None => {
+                            let t = Instant::now();
+                            ws.stage.resize(n, lw.rows);
+                            gemm.run_partitioned_into(
+                                &ws.acts,
+                                &lw.sorted,
+                                chunks,
+                                row_parallel,
+                                &mut ws.scratch,
+                                &mut ws.stage,
+                            );
+                            st.gemm_ns += t.elapsed().as_nanos() as u64;
+                            let t = Instant::now();
+                            for r in 0..ws.stage.rows {
+                                let row = ws.stage.row_mut(r);
+                                for (c, v) in row.iter_mut().enumerate() {
+                                    *v += lw.bias[c];
+                                }
+                            }
+                            let out_len = n * out_cols;
+                            ws.slots[*out].resize(out_len, 0.0);
+                            ws.slots[*out][..out_len]
+                                .copy_from_slice(&ws.stage.data[..out_len]);
+                            st.epilogue_ns += t.elapsed().as_nanos() as u64;
                         }
                     }
-                    let out_len = n * out_cols;
-                    ws.slots[*out].resize(out_len, 0.0);
-                    ws.slots[*out][..out_len].copy_from_slice(&ws.stage.data[..out_len]);
+                    macs += (n * lw.rows * lw.cols) as u64;
                 }
                 PlanOp::Add { a, b, out, relu, per_image } => {
                     add_slots(&mut ws.slots, *a, *b, *out, n * per_image, *relu);
@@ -383,6 +627,7 @@ impl Executor {
             .data
             .copy_from_slice(&ws.slots[plan.logits_slot][..out_len]);
         self.macs += macs;
+        self.stages.add(&st);
         Ok(&self.ws.logits)
     }
 
@@ -476,6 +721,11 @@ impl Executor {
             let filt_per_group = out_ch / groups;
             let mut y: Option<Mat> = None;
             let (mut oh, mut ow) = (0, 0);
+            // row-dispatch scratch, hoisted out of the group loop (every
+            // group has the same patch-row count, so these allocate once
+            // instead of per group)
+            let mut col: Vec<f32> = Vec::new();
+            let mut acc: Vec<i32> = Vec::new();
             for g in 0..groups {
                 let (patches, o_h, o_w) = im2col_group(x, g, ch_per_group, k, lw.stride, lw.pad);
                 oh = o_h;
@@ -483,8 +733,8 @@ impl Executor {
                 let acts = PackedActs::quantize(&patches, lw.a_alpha, self.manifest.act_bits);
                 let y_all = y.get_or_insert_with(|| Mat::zeros(patches.rows, out_ch));
                 // rows of this group's filters in the global weight matrix
-                let mut col = vec![0.0f32; acts.rows];
-                let mut acc = vec![0i32; acts.rows];
+                col.resize(acts.rows, 0.0);
+                acc.resize(acts.rows, 0);
                 for fi in 0..filt_per_group {
                     let r = g * filt_per_group + fi;
                     col.fill(0.0);
@@ -527,6 +777,21 @@ impl Executor {
             }
         }
         Ok(y)
+    }
+}
+
+/// The f32 fallback's conv epilogue: add per-channel bias and clamp at
+/// zero across the staging matrix — arithmetic identical to the
+/// reference interpreter's bias/ReLU pass.
+fn conv_bias_relu(stage: &mut Mat, bias: &[f32], relu: bool) {
+    for r in 0..stage.rows {
+        let row = stage.row_mut(r);
+        for (c, v) in row.iter_mut().enumerate() {
+            *v += bias[c];
+            if relu && *v < 0.0 {
+                *v = 0.0;
+            }
+        }
     }
 }
 

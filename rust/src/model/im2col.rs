@@ -108,17 +108,71 @@ pub fn im2col_range_into(
     pad: usize,
     out: &mut Mat,
 ) -> (usize, usize) {
+    let oh = out_dim(h, k, stride, pad);
+    let ow = out_dim(w, k, stride, pad);
+    out.resize(n * oh * ow, nc * k * k);
+    im2col_range_generic(data, 0.0f32, n, c, h, w, c0, nc, k, stride, pad, &mut out.data);
+    (oh, ow)
+}
+
+/// [`im2col_range_into`] over **activation codes**: unrolls a u8 NCHW
+/// code slot into GEMM-ready patch rows, written into `out` (resized in
+/// place, reused across calls). This is the integer-resident datapath's
+/// im2col — the codes flow through untouched, and padding positions get
+/// the literal code `0`, which *is* the code of the value 0.0 (the
+/// activation quantizer is unsigned with its zero point at code 0), so
+/// no zero-point arithmetic is needed. Returns (out_h, out_w).
+pub fn im2col_codes_range_into(
+    data: &[u8],
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    c0: usize,
+    nc: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut Vec<u8>,
+) -> (usize, usize) {
+    let oh = out_dim(h, k, stride, pad);
+    let ow = out_dim(w, k, stride, pad);
+    out.resize(n * oh * ow * nc * k * k, 0);
+    im2col_range_generic(data, 0u8, n, c, h, w, c0, nc, k, stride, pad, out);
+    (oh, ow)
+}
+
+/// The element-type-generic im2col kernel behind the f32 and u8-code
+/// fronts: identical loop structure, so the code path produces exactly
+/// the patch the float path would (value for value / code for code).
+/// `out` must be pre-sized to `n*oh*ow * nc*k*k`; every element is
+/// written (`zero` at padding positions).
+#[allow(clippy::too_many_arguments)]
+fn im2col_range_generic<T: Copy>(
+    data: &[T],
+    zero: T,
+    n: usize,
+    c: usize,
+    h: usize,
+    w: usize,
+    c0: usize,
+    nc: usize,
+    k: usize,
+    stride: usize,
+    pad: usize,
+    out: &mut [T],
+) {
     assert_eq!(data.len(), n * c * h * w, "NCHW shape/data mismatch");
     assert!(c0 + nc <= c, "channel range out of bounds");
     let oh = out_dim(h, k, stride, pad);
     let ow = out_dim(w, k, stride, pad);
     let cols = nc * k * k;
-    out.resize(n * oh * ow, cols);
+    assert_eq!(out.len(), n * oh * ow * cols, "output size mismatch");
     for img in 0..n {
         for oy in 0..oh {
             for ox in 0..ow {
                 let row = (img * oh + oy) * ow + ox;
-                let dst = out.row_mut(row);
+                let dst = &mut out[row * cols..(row + 1) * cols];
                 let mut ci = 0;
                 for dc in 0..nc {
                     let ch = c0 + dc;
@@ -134,7 +188,7 @@ pub fn im2col_range_into(
                             {
                                 data[plane + iy as usize * w + ix as usize]
                             } else {
-                                0.0
+                                zero
                             };
                             ci += 1;
                         }
@@ -143,7 +197,6 @@ pub fn im2col_range_into(
             }
         }
     }
-    (oh, ow)
 }
 
 /// Fold GEMM output (n*oh*ow, out_ch) back into NCHW.
@@ -281,6 +334,36 @@ mod tests {
             .zip(&want.data)
             .fold(0.0f32, |m, (a, b)| m.max((a - b).abs()));
         assert!(err < 1e-4);
+    }
+
+    #[test]
+    fn code_im2col_matches_float_im2col_cell_for_cell() {
+        // quantize-then-im2col must equal im2col-then-quantize: the code
+        // kernel moves codes exactly where the float kernel moves values,
+        // and padding's code 0 is the code of 0.0 (zero-point-free).
+        let mut rng = Rng::new(9);
+        let (n, c, h, w) = (2usize, 3usize, 5usize, 6usize);
+        let vals: Vec<f32> = (0..n * c * h * w).map(|_| rng.uniform(0.0, 1.3)).collect();
+        let inv = 15.0f32 / 0.9;
+        let codes: Vec<u8> = vals
+            .iter()
+            .map(|&v| (v * inv).clamp(0.0, 15.0).round_ties_even() as u8)
+            .collect();
+        let cases = [(3, 1, 1, 0, 3), (3, 2, 0, 0, 3), (1, 1, 0, 1, 1), (3, 1, 1, 2, 1)];
+        for (k, s, p, c0, nc) in cases {
+            let mut fpatch = Mat::zeros(0, 0);
+            let (oh, ow) =
+                im2col_range_into(&vals, n, c, h, w, c0, nc, k, s, p, &mut fpatch);
+            let mut cpatch = Vec::new();
+            let (oh2, ow2) =
+                im2col_codes_range_into(&codes, n, c, h, w, c0, nc, k, s, p, &mut cpatch);
+            assert_eq!((oh, ow), (oh2, ow2));
+            assert_eq!(cpatch.len(), fpatch.data.len());
+            for (got, &v) in cpatch.iter().zip(&fpatch.data) {
+                let want = (v * inv).clamp(0.0, 15.0).round_ties_even() as u8;
+                assert_eq!(*got, want, "k={k} s={s} p={p} c0={c0}");
+            }
+        }
     }
 
     #[test]

@@ -23,7 +23,7 @@ pub mod plan;
 pub mod weights;
 pub mod workspace;
 
-pub use graph::{Executor, Op};
+pub use graph::{Executor, Op, StageTimes};
 pub use manifest::Manifest;
 pub use plan::{Plan, PlanOp};
 pub use weights::{LayerWeights, ModelWeights};

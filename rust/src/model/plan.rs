@@ -21,7 +21,7 @@ use std::fmt::Write as _;
 
 use crate::ensure;
 use crate::err;
-use crate::gemm::{chunk_tasks, ParallelConfig, RowPartition, TaskChunk, MICRO_ROWS};
+use crate::gemm::{chunk_tasks, ParallelConfig, Requant, RowPartition, TaskChunk, MICRO_ROWS};
 use crate::util::error::Result;
 
 use super::im2col::out_dim;
@@ -59,6 +59,13 @@ pub struct SlotSpec {
     pub kind: SlotKind,
     /// High-water elements per batch image across every write.
     pub per_image: usize,
+    /// Some write leaves this slot in the f32 domain (the workspace
+    /// allocates its f32 buffer). Set by the output-domain inference.
+    pub holds_f32: bool,
+    /// Some write leaves this slot integer-resident — u8 activation
+    /// codes of the consuming layer's quantizer (the workspace allocates
+    /// its u8 code buffer).
+    pub holds_codes: bool,
 }
 
 /// One compiled op: slot ids + all geometry the runner needs, resolved
@@ -87,6 +94,15 @@ pub enum PlanOp {
         /// Precompiled GEMM task schedule (empty for grouped conv, which
         /// dispatches row-by-row per group).
         chunks: Vec<TaskChunk>,
+        /// The input slot is integer-resident: im2col reads u8 codes
+        /// directly, skipping the f32 unroll + requantize.
+        in_codes: bool,
+        /// Integer-resident output: the GEMM epilogue maps accumulators
+        /// straight to the consumer layer's activation codes (fused
+        /// dequant → bias → ReLU → requantize → NCHW scatter). `None` =
+        /// f32 fallback (consumer is Add/Gap/logits or consumers
+        /// disagree on scale).
+        out_quant: Option<Requant>,
     },
     Linear {
         layer: usize,
@@ -95,6 +111,10 @@ pub enum PlanOp {
         in_cols: usize,
         out_cols: usize,
         chunks: Vec<TaskChunk>,
+        /// See [`PlanOp::Conv::in_codes`].
+        in_codes: bool,
+        /// See [`PlanOp::Conv::out_quant`].
+        out_quant: Option<Requant>,
     },
     Add {
         a: SlotId,
@@ -120,8 +140,11 @@ pub enum PlanOp {
 pub struct Footprint {
     pub capacity: usize,
     pub lanes: usize,
-    /// Per-slot f32 elements.
+    /// Per-slot f32 elements (0 for slots that are only ever
+    /// integer-resident).
     pub slot_elems: Vec<usize>,
+    /// Per-slot u8 activation-code elements (0 for f32-only slots).
+    pub code_slot_elems: Vec<usize>,
     /// im2col patch-matrix f32 elements.
     pub patch_elems: usize,
     /// Quantized activation codes (u8).
@@ -137,21 +160,23 @@ pub struct Footprint {
 }
 
 impl Footprint {
+    /// Bytes of one slot: its f32 buffer plus its u8 code buffer.
     pub fn slot_bytes(&self, slot: SlotId) -> usize {
-        4 * self.slot_elems[slot]
+        4 * self.slot_elems[slot] + self.code_slot_elems[slot]
     }
 
     pub fn total_slot_bytes(&self) -> usize {
-        4 * self.slot_elems.iter().sum::<usize>()
+        4 * self.slot_elems.iter().sum::<usize>() + self.code_slot_elems.iter().sum::<usize>()
     }
 
     /// Bytes of the shared scratch (patches + acts + staging + lanes +
-    /// logits).
+    /// logits). Each GEMM lane holds an f32 block, an i32 block, and a
+    /// u8 code block for the fused requantization epilogue.
     pub fn scratch_bytes(&self) -> usize {
         4 * self.patch_elems
             + self.acts_elems
             + 4 * self.gemm_out_elems
-            + self.lanes * self.lane_elems * (4 + 4)
+            + self.lanes * self.lane_elems * (4 + 4 + 1)
             + 4 * self.logits_elems
     }
 
@@ -170,6 +195,10 @@ pub struct Plan {
     pub capacity: usize,
     /// GEMM rows per task chunk the schedules were compiled with.
     pub chunk_rows: usize,
+    /// Whether output-domain inference ran: integer-resident edges carry
+    /// u8 activation codes between GEMMs (`false` = every edge f32, the
+    /// pre-fusion baseline kept for benchmarking).
+    pub integer_resident: bool,
     pub act_bits: u32,
     pub input_slot: SlotId,
     /// Expected (c, h, w) of the inference input.
@@ -197,6 +226,21 @@ impl Plan {
         weights: &ModelWeights,
         capacity: usize,
         cfg: &ParallelConfig,
+    ) -> Result<Plan> {
+        Plan::compile_with(manifest, weights, capacity, cfg, true)
+    }
+
+    /// [`Plan::compile`] with the integer-resident dataflow toggleable:
+    /// `integer_resident = false` skips output-domain inference, keeping
+    /// every inter-layer edge in f32 (the pre-fusion dataflow — the
+    /// baseline `bench_runtime` reports the requantization-fusion
+    /// speedup against, and the f32 side of the differential tests).
+    pub fn compile_with(
+        manifest: &Manifest,
+        weights: &ModelWeights,
+        capacity: usize,
+        cfg: &ParallelConfig,
+        integer_resident: bool,
     ) -> Result<Plan> {
         ensure!(
             manifest.input_shape.len() == 4,
@@ -228,6 +272,10 @@ impl Plan {
             name: "in0".to_string(),
             kind: input_kind,
             per_image: input_kind.per_image(),
+            // `infer` seeds the input as floats — the first conv always
+            // quantizes (the f32 entry edge of the pipeline)
+            holds_f32: true,
+            holds_codes: false,
         });
         index.insert("in0".to_string(), input_slot);
 
@@ -321,6 +369,8 @@ impl Plan {
                         ch_per_group,
                         filt_per_group: lw.out_ch / groups,
                         chunks,
+                        in_codes: false,
+                        out_quant: None,
                     });
                 }
                 OpMeta::Linear { layer, input, out } => {
@@ -350,6 +400,8 @@ impl Plan {
                         in_cols: lw.cols,
                         out_cols: lw.rows,
                         chunks: chunk_tasks(&layer_parts[li], chunk_rows),
+                        in_codes: false,
+                        out_quant: None,
                     });
                 }
                 OpMeta::Add { a, b, out, relu } => {
@@ -393,10 +445,19 @@ impl Plan {
             return Err(err!("program produced no 'logits' matrix"));
         };
 
+        if integer_resident {
+            infer_domains(&mut ops, &mut slots, weights, manifest.act_bits, logits_slot);
+        } else {
+            for op in &ops {
+                slots[op_write(op).0].holds_f32 = true;
+            }
+        }
+
         Ok(Plan {
             model: manifest.model.clone(),
             capacity,
             chunk_rows,
+            integer_resident,
             act_bits: manifest.act_bits,
             input_slot,
             input_chw,
@@ -412,6 +473,36 @@ impl Plan {
         })
     }
 
+    /// Check that the plan's baked integer-resident epilogue scales
+    /// still match `weights`: a plan compiled against a different
+    /// weights table could otherwise requantize inter-layer activations
+    /// with a stale consumer clip scale (the f32 fallback reads the
+    /// scale from the weights at run time and cannot go stale).
+    /// `Executor::from_shared` runs this next to its partition checks.
+    pub fn validate_domains(&self, weights: &ModelWeights) -> Result<()> {
+        for i in 0..self.ops.len() {
+            let rq = match &self.ops[i] {
+                PlanOp::Conv { out_quant, .. } | PlanOp::Linear { out_quant, .. } => *out_quant,
+                _ => None,
+            };
+            let Some(rq) = rq else { continue };
+            let (s, _) = op_write(&self.ops[i]);
+            // the exact reader set the scale was baked for, re-derived
+            // with the same live-range scan the inference used
+            let (reads, _) = live_range_reads(&self.ops, i, weights);
+            for (_, q) in reads {
+                let alpha = q
+                    .ok_or_else(|| err!("integer-resident slot {s} read by a non-GEMM op"))?;
+                ensure!(
+                    rq == Requant::new(alpha, self.act_bits),
+                    "plan/weights mismatch: integer-resident epilogue scale of slot \
+                     {s} differs from the consumer's clip scale"
+                );
+            }
+        }
+        Ok(())
+    }
+
     /// Preallocation sizes for a workspace with `lanes` GEMM scratch
     /// lanes (see [`crate::gemm::MixedGemm::lanes`]).
     pub fn footprint(&self, lanes: usize) -> Footprint {
@@ -419,7 +510,16 @@ impl Plan {
         Footprint {
             capacity: n,
             lanes: lanes.max(1),
-            slot_elems: self.slots.iter().map(|s| s.per_image * n).collect(),
+            slot_elems: self
+                .slots
+                .iter()
+                .map(|s| if s.holds_f32 { s.per_image * n } else { 0 })
+                .collect(),
+            code_slot_elems: self
+                .slots
+                .iter()
+                .map(|s| if s.holds_codes { s.per_image * n } else { 0 })
+                .collect(),
             patch_elems: self.max_patch_per_image * n,
             acts_elems: self.max_acts_per_image * n,
             gemm_out_elems: self.max_gemm_out_per_image * n,
@@ -436,13 +536,15 @@ impl Plan {
         let mut s = String::new();
         let _ = writeln!(
             s,
-            "plan {}: {} ops, {} slots, capacity batch {}, chunk rows {}, act bits {}",
+            "plan {}: {} ops, {} slots, capacity batch {}, chunk rows {}, act bits {}, \
+             dataflow {}",
             self.model,
             self.ops.len(),
             self.slots.len(),
             self.capacity,
             self.chunk_rows,
-            self.act_bits
+            self.act_bits,
+            if self.integer_resident { "integer-resident" } else { "f32-resident" }
         );
         let _ = writeln!(s, "slots:");
         for (i, spec) in self.slots.iter().enumerate() {
@@ -450,9 +552,14 @@ impl Plan {
                 SlotKind::T4 { c, h, w } => format!("T4 {c}x{h}x{w}"),
                 SlotKind::M { cols } => format!("M  {cols}"),
             };
+            let domain = match (spec.holds_f32, spec.holds_codes) {
+                (true, true) => "f32+u8",
+                (false, true) => "u8",
+                _ => "f32",
+            };
             let _ = writeln!(
                 s,
-                "  s{i:<3} {:<12} {kind:<16} {:>9} elems/img {:>12} B",
+                "  s{i:<3} {:<12} {kind:<16} {domain:<7} {:>9} elems/img {:>12} B",
                 spec.name,
                 spec.per_image,
                 fp.slot_bytes(i)
@@ -462,24 +569,43 @@ impl Plan {
         for (i, op) in self.ops.iter().enumerate() {
             let line = match op {
                 PlanOp::Conv {
-                    layer, input, out, relu, oh, ow, k, stride, pad, groups, chunks, ..
+                    layer,
+                    input,
+                    out,
+                    relu,
+                    oh,
+                    ow,
+                    k,
+                    stride,
+                    pad,
+                    groups,
+                    chunks,
+                    in_codes,
+                    out_quant,
+                    ..
                 } => {
                     let lw = &weights.layers[*layer];
                     format!(
-                        "conv   {:<12} s{input} -> s{out}  {}x{} k{k} s{stride} p{pad} g{groups} \
-                         oh={oh} ow={ow} chunks={}{}",
+                        "conv   {:<12} s{input}{} -> s{out}{}  {}x{} k{k} s{stride} p{pad} \
+                         g{groups} oh={oh} ow={ow} chunks={}{}",
                         lw.name,
+                        if *in_codes { "[u8]" } else { "" },
+                        if out_quant.is_some() { "[u8]" } else { "" },
                         lw.rows,
                         lw.cols,
                         chunks.len(),
                         if *relu { " relu" } else { "" }
                     )
                 }
-                PlanOp::Linear { layer, input, out, in_cols, out_cols, chunks } => {
+                PlanOp::Linear {
+                    layer, input, out, in_cols, out_cols, chunks, in_codes, out_quant,
+                } => {
                     let lw = &weights.layers[*layer];
                     format!(
-                        "linear {:<12} s{input} -> s{out}  {out_cols}x{in_cols} chunks={}",
+                        "linear {:<12} s{input}{} -> s{out}{}  {out_cols}x{in_cols} chunks={}",
                         lw.name,
+                        if *in_codes { "[u8]" } else { "" },
+                        if out_quant.is_some() { "[u8]" } else { "" },
                         chunks.len()
                     )
                 }
@@ -503,7 +629,7 @@ impl Plan {
             4 * fp.patch_elems,
             fp.acts_elems,
             4 * fp.gemm_out_elems,
-            fp.lanes * fp.lane_elems * 8,
+            fp.lanes * fp.lane_elems * 9,
             4 * fp.logits_elems,
             fp.total_bytes()
         );
@@ -527,9 +653,132 @@ fn define(
         }
         None => {
             let id = slots.len();
-            slots.push(SlotSpec { name: name.to_string(), kind, per_image: kind.per_image() });
+            slots.push(SlotSpec {
+                name: name.to_string(),
+                kind,
+                per_image: kind.per_image(),
+                // domains are assigned by the inference pass once every
+                // write and read is known
+                holds_f32: false,
+                holds_codes: false,
+            });
             index.insert(name.to_string(), id);
             id
+        }
+    }
+}
+
+/// The slot an op writes, and whether that op's GEMM epilogue can emit
+/// activation codes (only the GEMM ops can; Add and Gap stay f32).
+fn op_write(op: &PlanOp) -> (SlotId, bool) {
+    match op {
+        PlanOp::Conv { out, .. } | PlanOp::Linear { out, .. } => (*out, true),
+        PlanOp::Add { out, .. } | PlanOp::Gap { out, .. } => (*out, false),
+    }
+}
+
+/// The slots an op reads: `Some(a_alpha)` for the quantized GEMM input
+/// of a conv/linear (a read that can consume codes quantized with that
+/// clip scale), `None` for an f32-only read (Add operands, Gap input).
+fn op_reads(op: &PlanOp, weights: &ModelWeights) -> Vec<(SlotId, Option<f32>)> {
+    match op {
+        PlanOp::Conv { layer, input, .. } | PlanOp::Linear { layer, input, .. } => {
+            vec![(*input, Some(weights.layers[*layer].a_alpha))]
+        }
+        PlanOp::Add { a, b, .. } => vec![(*a, None), (*b, None)],
+        PlanOp::Gap { input, .. } => vec![(*input, None)],
+    }
+}
+
+/// The readers of the write `ops[i]` makes: every read of its output
+/// slot by later ops, up to and including the next op that overwrites
+/// the slot (an op's reads happen before its own write, so the
+/// overwriting op's reads still belong to this range). Returns
+/// `(reader op index, read kind)` pairs plus whether a later op
+/// overwrites the slot. Shared by the domain inference and by
+/// [`Plan::validate_domains`], so the baked epilogue scales and the
+/// staleness check always agree on the reader set.
+fn live_range_reads(
+    ops: &[PlanOp],
+    i: usize,
+    weights: &ModelWeights,
+) -> (Vec<(usize, Option<f32>)>, bool) {
+    let s = op_write(&ops[i]).0;
+    let mut reads = Vec::new();
+    let mut overwritten = false;
+    for j in i + 1..ops.len() {
+        for (rs, q) in op_reads(&ops[j], weights) {
+            if rs == s {
+                reads.push((j, q));
+            }
+        }
+        if op_write(&ops[j]).0 == s {
+            overwritten = true;
+            break;
+        }
+    }
+    (reads, overwritten)
+}
+
+/// Output-domain inference: decide, per op write, whether the value can
+/// stay integer-resident (u8 activation codes) between layers.
+///
+/// A write's readers are its [`live_range_reads`]; the final write to
+/// the logits slot additionally has the implicit f32 read of the
+/// logits copy-out. The write is integer-resident iff the producing op
+/// is a GEMM, the range has at least one reader, every reader is a
+/// quantized GEMM input, and all readers agree on the clip scale — the
+/// epilogue then requantizes with exactly the scale those consumers
+/// would have used on an f32 buffer, which is what keeps the codes
+/// bit-exact vs the dequant-store-requantize dataflow. Anything else
+/// (Add operand, Gap input, logits, scale disagreement) falls back to
+/// f32 for that edge only.
+fn infer_domains(
+    ops: &mut [PlanOp],
+    slots: &mut [SlotSpec],
+    weights: &ModelWeights,
+    act_bits: u32,
+    logits_slot: SlotId,
+) {
+    for i in 0..ops.len() {
+        let (s, mut can_quant) = op_write(&ops[i]);
+        // a grouped conv re-reads its input slot per group *after*
+        // emitting earlier groups' outputs, so an in == out alias would
+        // corrupt later groups on the integer path (the f32 path stages
+        // through the GEMM matrix and only writes the slot at the end);
+        // keep such writes f32
+        if let PlanOp::Conv { groups, input, out, .. } = &ops[i] {
+            if *groups > 1 && input == out {
+                can_quant = false;
+            }
+        }
+        let (reads, overwritten) = live_range_reads(ops, i, weights);
+        let mut read_kinds: Vec<Option<f32>> = reads.iter().map(|&(_, q)| q).collect();
+        if !overwritten && s == logits_slot {
+            read_kinds.push(None);
+        }
+        let integer = can_quant
+            && !read_kinds.is_empty()
+            && read_kinds.iter().all(|k| k.is_some() && *k == read_kinds[0]);
+        if integer {
+            let rq = Requant::new(read_kinds[0].expect("all readers quantized"), act_bits);
+            match &mut ops[i] {
+                PlanOp::Conv { out_quant, .. } | PlanOp::Linear { out_quant, .. } => {
+                    *out_quant = Some(rq)
+                }
+                _ => unreachable!("only GEMM ops can emit codes"),
+            }
+            for &(j, _) in &reads {
+                match &mut ops[j] {
+                    PlanOp::Conv { in_codes, .. } | PlanOp::Linear { in_codes, .. } => {
+                        *in_codes = true
+                    }
+                    _ => unreachable!("integer readers are GEMM ops"),
+                }
+            }
+            slots[s].holds_codes = true;
+        } else {
+            slots[s].holds_f32 = true;
         }
     }
 }

@@ -28,6 +28,11 @@ use super::plan::Plan;
 pub struct Workspace {
     /// One flat f32 buffer per plan slot.
     pub(crate) slots: Vec<Vec<f32>>,
+    /// One flat u8 code buffer per plan slot — the integer-resident
+    /// inter-layer currency. Zero-capacity for slots the plan's domain
+    /// inference keeps in f32 (and vice versa: a codes-only slot's f32
+    /// buffer stays empty).
+    pub(crate) code_slots: Vec<Vec<u8>>,
     /// im2col patch matrix, reused by every conv.
     pub(crate) patches: Mat,
     /// Quantized activation codes, reused by every conv/linear.
@@ -52,6 +57,11 @@ impl Workspace {
         let fp = plan.footprint(lanes);
         Workspace {
             slots: fp.slot_elems.iter().map(|&n| Vec::with_capacity(n)).collect(),
+            code_slots: fp
+                .code_slot_elems
+                .iter()
+                .map(|&n| Vec::with_capacity(n))
+                .collect(),
             patches: mat_with_capacity(fp.patch_elems),
             acts: PackedActs::with_capacity(fp.acts_elems),
             stage: mat_with_capacity(fp.gemm_out_elems),
@@ -65,6 +75,7 @@ impl Workspace {
     /// are identical call over call.
     pub fn buffer_ptrs(&self) -> Vec<usize> {
         let mut p: Vec<usize> = self.slots.iter().map(|s| s.as_ptr() as usize).collect();
+        p.extend(self.code_slots.iter().map(|s| s.as_ptr() as usize));
         p.push(self.patches.data.as_ptr() as usize);
         p.push(self.acts.codes.as_ptr() as usize);
         p.push(self.stage.data.as_ptr() as usize);
@@ -76,11 +87,24 @@ impl Workspace {
     /// Bytes currently reserved across all buffers.
     pub fn allocated_bytes(&self) -> usize {
         let slots: usize = self.slots.iter().map(|s| 4 * s.capacity()).sum();
+        let code_slots: usize = self.code_slots.iter().map(|s| s.capacity()).sum();
         slots
+            + code_slots
             + 4 * self.patches.data.capacity()
             + self.acts.codes.capacity()
             + 4 * self.stage.data.capacity()
             + 4 * self.logits.data.capacity()
             + self.scratch.allocated_bytes()
+    }
+
+    /// The current f32 contents of a plan slot (differential tests pin
+    /// integer-resident activations against these).
+    pub fn slot_f32(&self, id: usize) -> &[f32] {
+        &self.slots[id]
+    }
+
+    /// The current u8 activation codes of an integer-resident plan slot.
+    pub fn slot_codes(&self, id: usize) -> &[u8] {
+        &self.code_slots[id]
     }
 }

@@ -4,7 +4,10 @@
 //! repeated `infer` calls over the preallocated workspace must perform
 //! **zero** heap allocations (sequential path — the parallel path boxes
 //! one pool job per helper per dispatch, and is covered by the
-//! buffer-pointer-stability test in `test_plan.rs` instead).
+//! buffer-pointer-stability test in `test_plan.rs` instead). Both
+//! dataflows are pinned: the mixed-domain model (residual add forces
+//! f32 edges) and an integer-resident chain where activations flow as
+//! u8 codes through the fused requantization epilogues.
 //!
 //! This file contains exactly one test so no concurrent test can
 //! allocate while the steady-state window is being counted.
@@ -158,9 +161,95 @@ fn model() -> (Manifest, ModelWeights) {
     (manifest, ModelWeights { layers })
 }
 
-#[test]
-fn steady_state_infer_performs_zero_allocations() {
-    let (manifest, weights) = model();
+/// Integer-resident chain: every inter-layer edge up to the gap carries
+/// u8 codes (c1 → depthwise dw → c2 consume/produce codes via the fused
+/// epilogues; c2 → gap falls back to f32).
+fn integer_chain_model() -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(
+        &Json::parse(
+            r#"{
+        "model": "alloc-int", "arch": "resnet", "num_classes": 3,
+        "input_shape": [2, 2, 6, 6], "ratio": [65, 30, 5], "act_bits": 4,
+        "layers": [
+          {"name": "c1", "kind": "conv", "rows": 4, "cols": 18,
+           "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [0, 0, 0, 0]},
+          {"name": "dw", "kind": "conv", "rows": 4, "cols": 9,
+           "stride": 1, "pad": 1, "groups": 4, "a_alpha": 1.0,
+           "scheme_counts": [0, 0, 0, 0]},
+          {"name": "c2", "kind": "conv", "rows": 4, "cols": 36,
+           "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [0, 0, 0, 0]},
+          {"name": "fc", "kind": "linear", "rows": 3, "cols": 4,
+           "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [0, 0, 0, 0]}
+        ],
+        "program": [
+          {"op": "conv", "layer": "c1", "in": "in0", "out": "b0", "relu": true},
+          {"op": "conv", "layer": "dw", "in": "b0", "out": "b1", "relu": false},
+          {"op": "conv", "layer": "c2", "in": "b1", "out": "b2", "relu": true},
+          {"op": "gap", "in": "b2", "out": "g0"},
+          {"op": "linear", "layer": "fc", "in": "g0", "out": "logits"}
+        ]
+      }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+
+    let mut rng = Rng::new(13);
+    let schemes4 = vec![
+        Scheme::PotW4A4,
+        Scheme::FixedW4A4,
+        Scheme::FixedW8A4,
+        Scheme::ApotW4A4,
+    ];
+    let layers = vec![
+        layer(
+            "c1",
+            "conv",
+            Mat::from_vec(4, 18, rng.normal_vec(4 * 18, 0.5)),
+            (4, 2, 3, 3),
+            1,
+            1,
+            1,
+            schemes4.clone(),
+        ),
+        layer(
+            "dw",
+            "conv",
+            Mat::from_vec(4, 9, rng.normal_vec(4 * 9, 0.5)),
+            (4, 4, 3, 3),
+            1,
+            1,
+            4,
+            schemes4.clone(),
+        ),
+        layer(
+            "c2",
+            "conv",
+            Mat::from_vec(4, 36, rng.normal_vec(4 * 36, 0.5)),
+            (4, 4, 3, 3),
+            1,
+            1,
+            1,
+            schemes4,
+        ),
+        layer(
+            "fc",
+            "linear",
+            Mat::from_vec(3, 4, rng.normal_vec(12, 0.5)),
+            (3, 4, 1, 1),
+            0,
+            0,
+            1,
+            vec![Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4],
+        ),
+    ];
+    (manifest, ModelWeights { layers })
+}
+
+fn assert_zero_alloc_steady_state(label: &str, manifest: Manifest, weights: ModelWeights) {
     let mut exec = Executor::new(manifest, weights).unwrap();
     let mut rng = Rng::new(9);
     let mut x = Tensor4::zeros(2, 2, 6, 6);
@@ -182,7 +271,29 @@ fn steady_state_infer_performs_zero_allocations() {
     assert_eq!(
         after - before,
         0,
-        "steady-state infer touched the allocator {} times",
+        "{label}: steady-state infer touched the allocator {} times",
         after - before
     );
+}
+
+#[test]
+fn steady_state_infer_performs_zero_allocations() {
+    // mixed-domain model: the residual add keeps b0/b1 in f32
+    let (manifest, weights) = model();
+    assert_zero_alloc_steady_state("mixed-domain", manifest, weights);
+
+    // integer-resident chain: u8 codes flow through the fused epilogues
+    let (manifest, weights) = integer_chain_model();
+    {
+        // sanity: the chain really compiles to an integer-resident path
+        let exec = Executor::new(manifest.clone(), weights.clone()).unwrap();
+        let codes_slots = exec
+            .plan()
+            .slots
+            .iter()
+            .filter(|s| s.holds_codes && !s.holds_f32)
+            .count();
+        assert!(codes_slots >= 2, "expected b0/b1 integer-resident, got {codes_slots}");
+    }
+    assert_zero_alloc_steady_state("integer-resident", manifest, weights);
 }

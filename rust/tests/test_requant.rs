@@ -1,0 +1,473 @@
+//! Integer-resident pipeline invariants: the plan executor with fused
+//! requantization epilogues must produce **bit-identical** activation
+//! codes and logits to the f32-resident dataflow and to the reference
+//! interpreter (`Executor::reference_infer`), across conv stride/pad,
+//! grouped conv, residual Add+ReLU, Gap, the linear head, batch
+//! {1, 5, 8}, threads {1, 8}, and the scalar (`RMSMP_NO_SIMD`) vs
+//! native SIMD kernels.
+//!
+//! Activation codes are pinned directly: for every op the plan marked
+//! integer-resident, the u8 code slot after `infer` must equal the
+//! elementwise requantization of the f32-resident executor's slot
+//! values — i.e. exactly what the consumer's quantizer would have
+//! produced from the f32 buffer.
+
+use std::sync::Arc;
+
+use rmsmp::gemm::{Isa, PackedWeights, ParallelConfig, Requant, SortedWeights};
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::model::{Executor, Plan, PlanOp};
+use rmsmp::prop_assert;
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::prop::{check, Gen};
+use rmsmp::util::rng::Rng;
+
+const SCHEMES: [Scheme; 4] = [
+    Scheme::PotW4A4,
+    Scheme::FixedW4A4,
+    Scheme::FixedW8A4,
+    Scheme::ApotW4A4,
+];
+
+#[allow(clippy::too_many_arguments)]
+fn layer(
+    name: &str,
+    kind: &str,
+    w: Mat,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    groups: usize,
+    schemes: Vec<Scheme>,
+    bias: Vec<f32>,
+    a_alpha: f32,
+) -> LayerWeights {
+    let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
+    LayerWeights {
+        name: name.into(),
+        kind: kind.into(),
+        rows: w.rows,
+        cols: w.cols,
+        out_ch: conv.0,
+        in_ch: conv.1,
+        kh: conv.2,
+        kw: conv.3,
+        stride,
+        pad,
+        groups,
+        a_alpha,
+        scheme: schemes,
+        alpha,
+        bias,
+        w,
+        packed,
+        sorted,
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+fn rand_layer(
+    g: &mut Gen,
+    name: &str,
+    kind: &str,
+    rows: usize,
+    cols: usize,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> LayerWeights {
+    let w = Mat::from_vec(rows, cols, g.vec_normal(rows * cols, rows * cols, 0.5));
+    let schemes: Vec<Scheme> = (0..rows).map(|_| *g.choice(&SCHEMES)).collect();
+    let bias = g.vec_normal(rows, rows, 0.1);
+    // non-unit, per-layer activation clip scales so the fused epilogue's
+    // requantization scale actually differs per edge
+    let a_alpha = g.f32_in(0.6, 1.4);
+    layer(name, kind, w, conv, stride, pad, groups, schemes, bias, a_alpha)
+}
+
+/// Build a random model of one of three topologies, all containing at
+/// least one integer-resident edge:
+///   0 — conv(k3, random stride/pad, relu) → conv → gap → fc
+///   1 — conv → depthwise conv (groups = channels) → conv → gap → fc
+///   2 — conv(relu) → conv → add(+relu) → conv → conv → gap → fc
+///       (b0 feeds both a conv and the add, so it must stay f32; the
+///        add's output is produced by Add, which cannot emit codes, so
+///        it stays f32 too; the conv→conv pair after the residual is
+///        the topology's one integer-resident edge)
+fn build_model(g: &mut Gen, topo: usize, n: usize) -> (Manifest, ModelWeights, Tensor4) {
+    let c_in = *g.choice(&[2usize, 3]);
+    let hw = *g.choice(&[6usize, 7]);
+    let c1 = 4usize;
+    let classes = 3usize;
+    let (stride, pad) = if topo == 0 {
+        (*g.choice(&[1usize, 2]), *g.choice(&[0usize, 1]))
+    } else {
+        (1, 1)
+    };
+
+    let mut layers = vec![rand_layer(
+        g,
+        "c1",
+        "conv",
+        c1,
+        c_in * 9,
+        (c1, c_in, 3, 3),
+        stride,
+        pad,
+        1,
+    )];
+    let mut meta = format!(
+        r#"{{"name":"c1","kind":"conv","rows":{c1},"cols":{},"stride":{stride},"pad":{pad},"groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#,
+        c_in * 9
+    );
+    let mut prog =
+        r#"{"op":"conv","layer":"c1","in":"in0","out":"b0","relu":true}"#.to_string();
+
+    let conv_meta = |name: &str, rows: usize, cols: usize, groups: usize| {
+        format!(
+            r#",{{"name":"{name}","kind":"conv","rows":{rows},"cols":{cols},"stride":1,"pad":1,"groups":{groups},"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#
+        )
+    };
+
+    let gap_in = match topo {
+        1 => {
+            layers.push(rand_layer(g, "dw", "conv", c1, 9, (c1, c1, 3, 3), 1, 1, c1));
+            meta.push_str(&conv_meta("dw", c1, 9, c1));
+            prog.push_str(r#",{"op":"conv","layer":"dw","in":"b0","out":"b1","relu":false}"#);
+            layers.push(rand_layer(
+                g,
+                "c2",
+                "conv",
+                c1,
+                c1 * 9,
+                (c1, c1, 3, 3),
+                1,
+                1,
+                1,
+            ));
+            meta.push_str(&conv_meta("c2", c1, c1 * 9, 1));
+            prog.push_str(r#",{"op":"conv","layer":"c2","in":"b1","out":"b2","relu":true}"#);
+            "b2"
+        }
+        2 => {
+            layers.push(rand_layer(
+                g,
+                "c2",
+                "conv",
+                c1,
+                c1 * 9,
+                (c1, c1, 3, 3),
+                1,
+                1,
+                1,
+            ));
+            meta.push_str(&conv_meta("c2", c1, c1 * 9, 1));
+            prog.push_str(r#",{"op":"conv","layer":"c2","in":"b0","out":"b1","relu":false}"#);
+            prog.push_str(r#",{"op":"add","a":"b0","b":"b1","out":"b2","relu":true}"#);
+            layers.push(rand_layer(
+                g,
+                "c3",
+                "conv",
+                c1,
+                c1 * 9,
+                (c1, c1, 3, 3),
+                1,
+                1,
+                1,
+            ));
+            meta.push_str(&conv_meta("c3", c1, c1 * 9, 1));
+            prog.push_str(r#",{"op":"conv","layer":"c3","in":"b2","out":"b3","relu":false}"#);
+            layers.push(rand_layer(
+                g,
+                "c4",
+                "conv",
+                c1,
+                c1 * 9,
+                (c1, c1, 3, 3),
+                1,
+                1,
+                1,
+            ));
+            meta.push_str(&conv_meta("c4", c1, c1 * 9, 1));
+            prog.push_str(r#",{"op":"conv","layer":"c4","in":"b3","out":"b4","relu":true}"#);
+            "b4"
+        }
+        _ => {
+            layers.push(rand_layer(
+                g,
+                "c2",
+                "conv",
+                c1,
+                c1 * 9,
+                (c1, c1, 3, 3),
+                1,
+                1,
+                1,
+            ));
+            meta.push_str(&conv_meta("c2", c1, c1 * 9, 1));
+            prog.push_str(r#",{"op":"conv","layer":"c2","in":"b0","out":"b1","relu":false}"#);
+            "b1"
+        }
+    };
+
+    layers.push(rand_layer(g, "fc", "linear", classes, c1, (classes, c1, 1, 1), 0, 0, 1));
+    meta.push_str(&format!(
+        r#",{{"name":"fc","kind":"linear","rows":{classes},"cols":{c1},"stride":0,"pad":0,"groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#
+    ));
+    prog.push_str(&format!(
+        r#",{{"op":"gap","in":"{gap_in}","out":"g0"}},{{"op":"linear","layer":"fc","in":"g0","out":"logits"}}"#
+    ));
+
+    let json = format!(
+        r#"{{"model":"requant","arch":"resnet","num_classes":{classes},
+            "input_shape":[{n},{c_in},{hw},{hw}],"ratio":[65,30,5],"act_bits":4,
+            "layers":[{meta}],"program":[{prog}]}}"#
+    );
+    let manifest = Manifest::from_json(&Json::parse(&json).unwrap()).unwrap();
+
+    let mut x = Tensor4::zeros(n, c_in, hw, hw);
+    for v in x.data.iter_mut() {
+        *v = g.f32_in(0.0, 1.2);
+    }
+    (manifest, ModelWeights { layers }, x)
+}
+
+/// The f32-resident twin of an integer-resident executor: same
+/// manifest/weights/config, plan compiled with domain inference off.
+fn f32_resident_executor(
+    manifest: &Manifest,
+    weights: &ModelWeights,
+    cfg: ParallelConfig,
+) -> Executor {
+    let capacity = manifest.input_shape.first().copied().unwrap_or(1);
+    let plan =
+        Arc::new(Plan::compile_with(manifest, weights, capacity, &cfg, false).unwrap());
+    Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        plan,
+        cfg,
+        None,
+    )
+    .unwrap()
+}
+
+/// Elements the plan op wrote to its output slot for batch `n`.
+fn out_len(op: &PlanOp, weights: &ModelWeights, n: usize) -> (usize, usize) {
+    match op {
+        PlanOp::Conv { layer, out, oh, ow, .. } => {
+            (*out, n * weights.layers[*layer].out_ch * oh * ow)
+        }
+        PlanOp::Linear { out, out_cols, .. } => (*out, n * out_cols),
+        PlanOp::Add { out, per_image, .. } => (*out, n * per_image),
+        PlanOp::Gap { out, c, .. } => (*out, n * c),
+    }
+}
+
+/// Pin every integer-resident slot's codes against the f32-resident
+/// executor's values run through the consumer quantizer, and return how
+/// many integer-resident ops the plan holds.
+fn assert_codes_pinned(int_exec: &Executor, f32_exec: &Executor, n: usize) -> usize {
+    let weights = int_exec.weights();
+    let mut integer_ops = 0;
+    for op in &int_exec.plan().ops {
+        let rq: Option<Requant> = match op {
+            PlanOp::Conv { out_quant, .. } | PlanOp::Linear { out_quant, .. } => *out_quant,
+            _ => None,
+        };
+        let Some(rq) = rq else { continue };
+        integer_ops += 1;
+        let (slot, len) = out_len(op, weights, n);
+        let codes = &int_exec.workspace().slot_codes(slot)[..len];
+        let vals = &f32_exec.workspace().slot_f32(slot)[..len];
+        for (i, (&c, &v)) in codes.iter().zip(vals).enumerate() {
+            assert_eq!(
+                c,
+                rq.code(v),
+                "slot {slot} elem {i}: integer-resident code diverged from requantized f32"
+            );
+        }
+    }
+    integer_ops
+}
+
+#[test]
+fn prop_integer_resident_bit_exact_across_grid() {
+    check("requant-pipeline", 18, |g| {
+        let topo = g.usize_in(0, 2);
+        let n = *g.choice(&[1usize, 5, 8]);
+        let (manifest, weights, x) = build_model(g, topo, n);
+        let isas = [Isa::Scalar, Isa::detect()];
+        for &threads in &[1usize, 8] {
+            let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+            let mut int_exec =
+                Executor::with_parallel(manifest.clone(), weights.clone(), cfg, None)
+                    .map_err(|e| format!("compile failed (topo {topo}): {e}"))?;
+            let mut f32_exec = f32_resident_executor(&manifest, &weights, cfg);
+            prop_assert!(
+                int_exec.plan().integer_resident && !f32_exec.plan().integer_resident,
+                "plan domain flags wrong"
+            );
+            for &isa in &isas {
+                int_exec.set_isa(isa);
+                f32_exec.set_isa(isa);
+                let int_out = int_exec.infer(&x).unwrap().clone();
+                let f32_out = f32_exec.infer(&x).unwrap().clone();
+                let ref_out = int_exec.reference_infer(&x).unwrap();
+                prop_assert!(
+                    int_out.data == ref_out.data,
+                    "integer path != reference (topo {topo}, {threads} thr, {isa:?})"
+                );
+                prop_assert!(
+                    int_out.data == f32_out.data,
+                    "integer path != f32-resident path (topo {topo}, {threads} thr, {isa:?})"
+                );
+                // warm re-run over reused buffers must not drift
+                let again = int_exec.infer(&x).unwrap().clone();
+                prop_assert!(again.data == int_out.data, "warm re-run drifted (topo {topo})");
+                let pinned = assert_codes_pinned(&int_exec, &f32_exec, n);
+                prop_assert!(
+                    pinned >= 1,
+                    "topology {topo} produced no integer-resident edge"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn domain_inference_marks_expected_edges() {
+    let mut g = Gen { rng: Rng::new(31), size: 1.0 };
+    // topo 2: b0 feeds conv AND add → f32; b1 feeds add → f32; b2 is
+    // produced by Add (cannot emit codes) → f32; b3 (c3 → c4) is the
+    // one integer edge; b4 feeds gap → f32.
+    let (manifest, weights, _) = build_model(&mut g, 2, 2);
+    let plan = Plan::compile(
+        &manifest,
+        &weights,
+        2,
+        &ParallelConfig::sequential(),
+    )
+    .unwrap();
+    assert!(plan.integer_resident);
+    let mut by_layer: Vec<(String, bool, bool)> = Vec::new();
+    for op in &plan.ops {
+        if let PlanOp::Conv { layer, in_codes, out_quant, .. }
+        | PlanOp::Linear { layer, in_codes, out_quant, .. } = op
+        {
+            by_layer.push((
+                weights.layers[*layer].name.clone(),
+                *in_codes,
+                out_quant.is_some(),
+            ));
+        }
+    }
+    let find = |name: &str| by_layer.iter().find(|(n, _, _)| n == name).unwrap().clone();
+    // c1 -> b0 is read by c2 (quant) and add (f32): stays f32
+    assert_eq!(find("c1"), ("c1".into(), false, false));
+    // c2 reads f32 b0, writes b1 read by add: f32 out
+    assert_eq!(find("c2"), ("c2".into(), false, false));
+    // c3 reads the f32 add output, writes b3 read only by c4: u8 out
+    assert_eq!(find("c3"), ("c3".into(), false, true));
+    // c4 consumes codes, writes b4 read only by gap: f32 out
+    assert_eq!(find("c4"), ("c4".into(), true, false));
+    // fc reads the f32 gap output and writes logits: f32 everywhere
+    assert_eq!(find("fc"), ("fc".into(), false, false));
+
+    // topo 0 is the positive case: c1 -> b0 read only by c2
+    let (manifest, weights, _) = build_model(&mut g, 0, 2);
+    let plan =
+        Plan::compile(&manifest, &weights, 2, &ParallelConfig::sequential()).unwrap();
+    let mut marked = 0;
+    for op in &plan.ops {
+        if let PlanOp::Conv { layer, in_codes, out_quant, .. } = op {
+            let name = &weights.layers[*layer].name;
+            if name == "c1" {
+                assert!(out_quant.is_some(), "c1 -> c2 edge not integer-resident");
+                let want = Requant::new(weights.layer("c2").unwrap().a_alpha, 4);
+                assert_eq!(out_quant.unwrap(), want, "epilogue scale != consumer scale");
+                marked += 1;
+            }
+            if name == "c2" {
+                assert!(*in_codes, "c2 does not consume codes");
+                assert!(out_quant.is_none(), "c2 -> gap must stay f32");
+                marked += 1;
+            }
+        }
+    }
+    assert_eq!(marked, 2);
+    // slot domains: b0 codes-only (no f32 buffer), in0 f32
+    let b0 = plan.slots.iter().find(|s| s.name == "b0").unwrap();
+    assert!(b0.holds_codes && !b0.holds_f32, "b0 domains: {b0:?}");
+    let fp = plan.footprint(1);
+    let b0_id = plan.slots.iter().position(|s| s.name == "b0").unwrap();
+    assert_eq!(fp.slot_elems[b0_id], 0, "codes-only slot still budgets f32");
+    assert!(fp.code_slot_elems[b0_id] > 0);
+}
+
+#[test]
+fn grouped_conv_integer_edges_bit_exact_batch8() {
+    // fixed heavy case: depthwise chain (codes in *and* codes out of a
+    // grouped conv) at batch 8 across thread counts
+    for seed in [3u64, 17] {
+        let mut g = Gen { rng: Rng::new(seed), size: 1.0 };
+        let (manifest, weights, x) = build_model(&mut g, 1, 8);
+        for threads in [1usize, 8] {
+            let cfg = ParallelConfig { threads, tile_cols: 16, min_rows_per_task: 2 };
+            let mut int_exec =
+                Executor::with_parallel(manifest.clone(), weights.clone(), cfg, None).unwrap();
+            let mut f32_exec = f32_resident_executor(&manifest, &weights, cfg);
+            let int_out = int_exec.infer(&x).unwrap().clone();
+            let f32_out = f32_exec.infer(&x).unwrap().clone();
+            let ref_out = int_exec.reference_infer(&x).unwrap();
+            assert_eq!(int_out.data, ref_out.data, "seed {seed} threads {threads}");
+            assert_eq!(int_out.data, f32_out.data, "seed {seed} threads {threads}");
+            // dw consumes and produces codes; c2 consumes codes
+            let pinned = assert_codes_pinned(&int_exec, &f32_exec, 8);
+            assert!(pinned >= 2, "expected dw + c1 integer edges, got {pinned}");
+        }
+    }
+}
+
+#[test]
+fn from_shared_rejects_stale_epilogue_scales() {
+    let mut g = Gen { rng: Rng::new(41), size: 1.0 };
+    let (manifest, weights, _) = build_model(&mut g, 0, 2);
+    let cfg = ParallelConfig::sequential();
+    let plan = Arc::new(Plan::compile(&manifest, &weights, 2, &cfg).unwrap());
+    // same geometry + scheme mix, different consumer clip scale: the
+    // baked epilogue scale is stale for these weights
+    let mut w2 = weights.clone();
+    for l in w2.layers.iter_mut() {
+        if l.name == "c2" {
+            l.a_alpha *= 2.0;
+        }
+    }
+    assert!(
+        Executor::from_shared(
+            Arc::new(manifest.clone()),
+            Arc::new(w2),
+            Arc::clone(&plan),
+            cfg,
+            None
+        )
+        .is_err(),
+        "stale epilogue scale accepted"
+    );
+    // the original weights still pass
+    assert!(Executor::from_shared(
+        Arc::new(manifest),
+        Arc::new(weights),
+        plan,
+        cfg,
+        None
+    )
+    .is_ok());
+}
