@@ -14,7 +14,7 @@ use std::sync::Arc;
 use rmsmp::gemm::{PackedWeights, ParallelConfig, SortedWeights};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
-use rmsmp::model::{Executor, Plan};
+use rmsmp::model::{Executor, Plan, PlanOptions};
 use rmsmp::quant::tensor::Tensor4;
 use rmsmp::quant::{self, Mat, Scheme};
 use rmsmp::runtime::Runtime;
@@ -191,6 +191,51 @@ fn main() {
          {requant_speedup_b8:.2}x @ batch 8"
     );
 
+    // implicit GEMM (the default plan above) vs the explicit-im2col conv
+    // path: same integer-resident domain, same kernels — only the
+    // activation staging differs (per-lane panels vs the materialized
+    // patch matrix)
+    let exp_plan = Arc::new(
+        Plan::compile_opts(
+            &manifest,
+            &weights,
+            capacity,
+            &cfg,
+            PlanOptions { implicit: false, ..PlanOptions::default() },
+        )
+        .unwrap(),
+    );
+    let mut exp_seq = Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        Arc::clone(&exp_plan),
+        cfg,
+        None,
+    )
+    .unwrap();
+    bench_plan(&mut b, "explicit_b1", &mut exp_seq, &x1);
+    bench_plan(&mut b, "explicit_b8", &mut exp_seq, &x8);
+    let implicit_speedup_b1 = ns(&b, "explicit_b1") / ns(&b, "plan_b1");
+    let implicit_speedup_b8 = ns(&b, "explicit_b8") / ns(&b, "plan_b8");
+    let lanes = cfg.lanes();
+    let implicit_fp = seq.plan().footprint(lanes).total_bytes();
+    let explicit_fp = exp_plan.footprint(lanes).total_bytes();
+    println!(
+        "bench runtime: implicit-GEMM speedup {implicit_speedup_b1:.2}x @ batch 1, \
+         {implicit_speedup_b8:.2}x @ batch 8; workspace {implicit_fp} B vs explicit \
+         {explicit_fp} B ({} B saved)",
+        explicit_fp as i64 - implicit_fp as i64
+    );
+    // the compiled-plan dump (the `rmsmp plan` output for this model):
+    // CI shows and uploads it so footprint regressions are visible per
+    // PR. Same target directory convention as Bench::write_json.
+    let plan_dir = std::env::var("RMSMP_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let plan_path = std::path::Path::new(&plan_dir).join("PLAN_runtime.txt");
+    match std::fs::write(&plan_path, seq.plan().describe(&weights, lanes)) {
+        Ok(()) => println!("bench runtime: wrote {}", plan_path.display()),
+        Err(e) => eprintln!("bench runtime: could not write {}: {e}", plan_path.display()),
+    }
+
     // sequential vs parallel plan execution at the manifest batch
     let x4 = rand_input((4, 32, 16, 16), 7);
     let mut par = par_rt.executor(manifest, weights).unwrap();
@@ -219,6 +264,11 @@ fn main() {
         ("plan_speedup_b8", num(speedup_b8)),
         ("requant_speedup_b1", num(requant_speedup_b1)),
         ("requant_speedup_b8", num(requant_speedup_b8)),
+        ("implicit_speedup_b1", num(implicit_speedup_b1)),
+        ("implicit_speedup_b8", num(implicit_speedup_b8)),
+        ("implicit_fp_bytes", num(implicit_fp as f64)),
+        ("explicit_fp_bytes", num(explicit_fp as f64)),
+        ("fp_saved_bytes", num(explicit_fp as f64 - implicit_fp as f64)),
     ];
     match b.write_json(extra) {
         Ok(path) => println!("bench runtime: wrote {}", path.display()),

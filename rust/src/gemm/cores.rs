@@ -27,7 +27,7 @@
 //! the APoT baseline core accumulates in f32 and is deterministic for a
 //! *fixed* tile size (which is all the parallel executor needs).
 
-use super::packed::{PackedActs, PackedWeights};
+use super::packed::{code_map, ActsView, PackedActs, PackedWeights};
 use super::simd::{self, Isa, MICRO_ROWS};
 use super::sorted::SortedWeights;
 use crate::quant::apot::ApotQuantizer;
@@ -60,10 +60,12 @@ impl Requant {
         Requant { inv: n / alpha, n }
     }
 
-    /// The consumer's activation code of output value `v`.
+    /// The consumer's activation code of output value `v` — the shared
+    /// hoisted-constant [`code_map`], so the epilogue and the activation
+    /// quantizer agree bit for bit.
     #[inline]
     pub fn code(self, v: f32) -> u8 {
-        (v * self.inv).clamp(0.0, self.n).round_ties_even() as u8
+        code_map(v, self.inv, self.n)
     }
 }
 
@@ -129,7 +131,8 @@ pub trait GemmCore: Sync {
 
     /// Micro-kernel block over the class-sorted layout: compute `nr`
     /// (1..=[`MICRO_ROWS`]) sorted rows `r0..r0 + nr` — all of this
-    /// core's class — against every batch row, writing
+    /// core's class — against every batch row of the activation view
+    /// (the full matrix, or one implicit-GEMM panel), writing
     /// `out[j * batch + b] = dequant(dot(acts[b], sorted row r0 + j))`
     /// (overwrite, not accumulate). `acc` is i32 scratch; both slices
     /// must hold at least `nr * batch` elements. The integer cores
@@ -137,7 +140,7 @@ pub trait GemmCore: Sync {
     /// scalar [`GemmCore::run_row_tiled`] path at the same `tile_cols`.
     fn run_block_tiled(
         &self,
-        acts: &PackedActs,
+        acts: ActsView<'_>,
         sw: &SortedWeights,
         r0: usize,
         nr: usize,
@@ -244,7 +247,7 @@ fn mac_i32_tiled(
 /// cell with the same `(act_scale * alpha) / denom` expression as the
 /// row kernels — hence bit-exact vs [`mac_i32_tiled`] for every ISA.
 fn mac_block_i32(
-    acts: &PackedActs,
+    acts: ActsView<'_>,
     sw: &SortedWeights,
     r0: usize,
     nr: usize,
@@ -315,7 +318,7 @@ impl GemmCore for GemmFixed4 {
 
     fn run_block_tiled(
         &self,
-        acts: &PackedActs,
+        acts: ActsView<'_>,
         sw: &SortedWeights,
         r0: usize,
         nr: usize,
@@ -350,7 +353,7 @@ impl GemmCore for GemmFixed8 {
 
     fn run_block_tiled(
         &self,
-        acts: &PackedActs,
+        acts: ActsView<'_>,
         sw: &SortedWeights,
         r0: usize,
         nr: usize,
@@ -421,7 +424,7 @@ impl GemmCore for GemmPoT4 {
     /// i8 SIMD MAC as the Fixed cores, in the 2^6-scaled frame.
     fn run_block_tiled(
         &self,
-        acts: &PackedActs,
+        acts: ActsView<'_>,
         sw: &SortedWeights,
         r0: usize,
         nr: usize,
@@ -447,7 +450,7 @@ impl GemmApot4 {
     /// fixed `tile_cols`.
     fn apot_row_tiled(
         &self,
-        acts: &PackedActs,
+        acts: ActsView<'_>,
         wr: &[i8],
         s: f32,
         tile_cols: usize,
@@ -492,7 +495,7 @@ impl GemmCore for GemmApot4 {
     ) {
         debug_assert_eq!(w.scheme[r], Scheme::ApotW4A4);
         let s = acts.scale() * w.alpha[r];
-        self.apot_row_tiled(acts, w.row(r), s, tile_cols, out);
+        self.apot_row_tiled(acts.view(), w.row(r), s, tile_cols, out);
     }
 
     /// Row-at-a-time over the sorted codes (the APoT baseline core gets
@@ -501,7 +504,7 @@ impl GemmCore for GemmApot4 {
     /// row bit-exactly for a fixed `tile_cols`.
     fn run_block_tiled(
         &self,
-        acts: &PackedActs,
+        acts: ActsView<'_>,
         sw: &SortedWeights,
         r0: usize,
         nr: usize,
@@ -639,7 +642,16 @@ mod tests {
                     let mut acc = vec![0i32; MICRO_ROWS * batch];
                     let mut block = vec![f32::NAN; MICRO_ROWS * batch];
                     for isa in [Isa::Scalar, Isa::Sse41.available(), Isa::Avx2.available()] {
-                        core.run_block_tiled(&acts, &sw, r0, nr, tile, isa, &mut acc, &mut block);
+                        core.run_block_tiled(
+                            acts.view(),
+                            &sw,
+                            r0,
+                            nr,
+                            tile,
+                            isa,
+                            &mut acc,
+                            &mut block,
+                        );
                         for j in 0..nr {
                             let mut racc = vec![0i32; batch];
                             let mut want = vec![0.0f32; batch];

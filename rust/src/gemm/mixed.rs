@@ -30,6 +30,19 @@
 //! bijection), and per-row arithmetic is identical to the sequential
 //! path, so parallel output is bit-exact regardless of thread count or
 //! scheduling order.
+//!
+//! # Implicit-GEMM execution
+//!
+//! Convolutions run *implicitly*: instead of materializing the full
+//! im2col matrix, [`MixedGemm::run_implicit_into`] /
+//! [`MixedGemm::run_implicit_quant_into`] walk the output positions in
+//! column tiles, ask a [`ColTileSource`] to pack each tile into a
+//! per-lane cache-resident panel (gathering from the NCHW code slot, or
+//! quantizing f32 on the fly), and sweep the hot panel with every row
+//! class and micro-kernel block of the layer before moving on.
+//! Parallelism is over tiles — each tile owns a disjoint set of output
+//! positions, so tasks still write disjoint cells — and outputs stay
+//! bit-exact for any panel width.
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -37,7 +50,8 @@ use std::sync::Arc;
 use super::cores::{
     requant_block, GemmApot4, GemmCore, GemmFixed4, GemmFixed8, GemmPoT4, Requant,
 };
-use super::packed::{PackedActs, PackedWeights};
+use super::packed::{ActsView, PackedActs, PackedWeights};
+use super::panels::ColTileSource;
 use super::simd::{Isa, MICRO_ROWS};
 use super::sorted::SortedWeights;
 use crate::quant::{Mat, Scheme};
@@ -221,21 +235,25 @@ pub fn chunk_tasks(part: &RowPartition, chunk_rows: usize) -> Vec<TaskChunk> {
 
 /// One lane of GEMM dispatch scratch: the f32 output block of one
 /// [`MICRO_ROWS`]-row micro-kernel block across the batch (row-major
-/// `[j * batch + b]`), the i32 accumulator block the cores MAC into, and
-/// the u8 code block the fused requantization epilogue writes before the
-/// scatter (integer-resident dispatch only).
+/// `[j * batch + b]`), the i32 accumulator block the cores MAC into,
+/// the u8 code block the fused requantization epilogue writes before
+/// the scatter (integer-resident dispatch only), and the u8 activation
+/// panel the implicit-GEMM path packs column tiles into (implicit
+/// dispatch only — the explicit path reads a prebuilt [`PackedActs`]).
 struct Lane {
     col: Vec<f32>,
     acc: Vec<i32>,
     codes: Vec<u8>,
+    panel: Vec<u8>,
 }
 
 impl Lane {
-    fn with_capacity(elems: usize) -> Lane {
+    fn with_capacity(elems: usize, panel_elems: usize) -> Lane {
         Lane {
             col: Vec::with_capacity(elems),
             acc: Vec::with_capacity(elems),
             codes: Vec::with_capacity(elems),
+            panel: Vec::with_capacity(panel_elems),
         }
     }
 }
@@ -252,27 +270,32 @@ pub struct GemmScratch {
 impl GemmScratch {
     /// `lanes` empty lanes (grown per dispatch as batches demand).
     pub fn new(lanes: usize) -> GemmScratch {
-        GemmScratch::with_capacity(lanes, 0)
+        GemmScratch::with_capacity(lanes, 0, 0)
     }
 
     /// `lanes` lanes preallocated for `elems` scratch elements each
-    /// (i.e. [`MICRO_ROWS`] x the largest batch).
-    pub fn with_capacity(lanes: usize, elems: usize) -> GemmScratch {
+    /// (i.e. [`MICRO_ROWS`] x the largest batch or panel tile) plus
+    /// `panel_elems` u8 codes of implicit-GEMM panel space.
+    pub fn with_capacity(lanes: usize, elems: usize, panel_elems: usize) -> GemmScratch {
         GemmScratch {
-            lanes: (0..lanes.max(1)).map(|_| Lane::with_capacity(elems)).collect(),
+            lanes: (0..lanes.max(1))
+                .map(|_| Lane::with_capacity(elems, panel_elems))
+                .collect(),
         }
     }
 
     /// Resize the first `lanes` lanes to one micro-kernel block
     /// (`MICRO_ROWS * batch` elements), creating them if missing;
-    /// allocation-free when within the preallocated capacities. Lanes
-    /// beyond `lanes` are left untouched — the sequential path only pays
-    /// for lane 0 even when the engine owns a wide pool.
+    /// allocation-free when within the preallocated capacities. The
+    /// panel buffer is left alone — the packer resizes it per tile,
+    /// inside its reserved capacity. Lanes beyond `lanes` are left
+    /// untouched — the sequential path only pays for lane 0 even when
+    /// the engine owns a wide pool.
     fn ensure(&mut self, lanes: usize, batch: usize) {
         let lanes = lanes.max(1);
         let elems = MICRO_ROWS * batch;
         while self.lanes.len() < lanes {
-            self.lanes.push(Lane::with_capacity(elems));
+            self.lanes.push(Lane::with_capacity(elems, 0));
         }
         for lane in self.lanes[..lanes].iter_mut() {
             lane.col.resize(elems, 0.0);
@@ -306,6 +329,7 @@ impl GemmScratch {
                     l.col.as_ptr() as usize,
                     l.acc.as_ptr() as usize,
                     l.codes.as_ptr() as usize,
+                    l.panel.as_ptr() as usize,
                 ]
             })
             .collect()
@@ -315,7 +339,12 @@ impl GemmScratch {
     pub fn allocated_bytes(&self) -> usize {
         self.lanes
             .iter()
-            .map(|l| 4 * l.col.capacity() + 4 * l.acc.capacity() + l.codes.capacity())
+            .map(|l| {
+                4 * l.col.capacity()
+                    + 4 * l.acc.capacity()
+                    + l.codes.capacity()
+                    + l.panel.capacity()
+            })
             .sum()
     }
 }
@@ -572,6 +601,7 @@ impl MixedGemm {
 
         let out_cols = out.cols;
         let ptr = SyncOutPtr { p: out.data.as_mut_ptr() };
+        let view = acts.view();
 
         if !use_pool {
             let lane = scratch.lane0_block(batch);
@@ -579,7 +609,16 @@ impl MixedGemm {
                 // SAFETY: `ptr` points into `out`, exclusively borrowed
                 // for this call; chunks cover disjoint sorted rows.
                 unsafe {
-                    self.run_chunk(acts, sw, *chunk, &mut lane.acc, &mut lane.col, &ptr, out_cols)
+                    self.run_chunk(
+                        view,
+                        sw,
+                        *chunk,
+                        0,
+                        &mut lane.acc,
+                        &mut lane.col,
+                        &ptr,
+                        out_cols,
+                    )
                 };
             }
             return;
@@ -599,7 +638,7 @@ impl MixedGemm {
             // scoped join orders them before the caller's reads.
             unsafe {
                 let l = &mut *lanes.p.add(lane);
-                self.run_chunk(acts, sw, chunk, &mut l.acc, &mut l.col, &ptr, out_cols);
+                self.run_chunk(view, sw, chunk, 0, &mut l.acc, &mut l.col, &ptr, out_cols);
             }
         });
     }
@@ -658,13 +697,28 @@ impl MixedGemm {
             && covered >= 2 * self.cfg.min_rows_per_task.max(1);
 
         let ptr = SyncOutPtr { p: out.as_mut_ptr() };
+        let view = acts.view();
 
         if !use_pool {
             let lane = scratch.lane0_block(batch);
             for chunk in chunks {
                 // SAFETY: `ptr` points into `out`, exclusively borrowed
                 // for this call; chunks cover disjoint sorted rows.
-                unsafe { self.run_chunk_quant(acts, sw, *chunk, bias, rq, layout, lane, &ptr) };
+                unsafe {
+                    self.run_chunk_quant(
+                        view,
+                        sw,
+                        *chunk,
+                        0,
+                        bias,
+                        rq,
+                        layout,
+                        &mut lane.acc,
+                        &mut lane.col,
+                        &mut lane.codes,
+                        &ptr,
+                    )
+                };
             }
             return;
         }
@@ -679,7 +733,203 @@ impl MixedGemm {
             // layout, join barrier publishes the writes.
             unsafe {
                 let l = &mut *lanes.p.add(lane);
-                self.run_chunk_quant(acts, sw, chunk, bias, rq, layout, l, &ptr);
+                self.run_chunk_quant(
+                    view,
+                    sw,
+                    chunk,
+                    0,
+                    bias,
+                    rq,
+                    layout,
+                    &mut l.acc,
+                    &mut l.col,
+                    &mut l.codes,
+                    &ptr,
+                );
+            }
+        });
+    }
+
+    /// Positions per packed panel for an implicit dispatch: the compiled
+    /// width, clamped to the batch and (when a pool drains the tiles)
+    /// halved — never below 8 — until there are at least two tiles per
+    /// lane to pull. Panel width never changes any output bit: every
+    /// cell's arithmetic is independent of how positions are grouped.
+    fn panel_tile(batch: usize, panel_positions: usize, lanes: usize) -> usize {
+        let mut tb = panel_positions.max(1).min(batch.max(1));
+        while lanes > 1 && batch.div_ceil(tb) < 2 * lanes && tb > 8 {
+            tb = (tb / 2).max(8);
+        }
+        tb
+    }
+
+    /// The implicit-GEMM dispatch: like
+    /// [`MixedGemm::run_partitioned_into`], but the activation matrix is
+    /// never materialized — the batch dimension (conv output positions)
+    /// is walked in `panel_positions`-wide column tiles, each packed by
+    /// `src` into a per-lane L1/L2-sized panel
+    /// ([`ColTileSource::view`]) that **every** chunk and micro-kernel
+    /// block of the layer then sweeps while it is hot. Parallelism moves
+    /// to the tile axis: tiles own disjoint output positions (every row
+    /// of every position), so tasks write disjoint cells for any
+    /// schedule.
+    ///
+    /// Bit-exact vs packing the full matrix and calling
+    /// `run_partitioned_into`: the panel rows hold exactly the codes the
+    /// explicit im2col + quantize would produce (shared gather kernel),
+    /// and per-cell arithmetic is identical — same K tiling, same i32
+    /// accumulation, same dequant expression — for any panel width,
+    /// thread count, and ISA.
+    pub fn run_implicit_into(
+        &self,
+        src: &ColTileSource,
+        sw: &SortedWeights,
+        chunks: &[TaskChunk],
+        panel_positions: usize,
+        parallel: bool,
+        scratch: &mut GemmScratch,
+        out: &mut Mat,
+    ) {
+        let batch = src.batch();
+        assert_eq!(src.cols(), sw.cols, "inner dims");
+        assert_eq!((out.rows, out.cols), (batch, sw.rows), "output shape");
+        let covered: usize = chunks.iter().map(|c| c.end - c.start).sum();
+        if covered < sw.rows {
+            out.data.fill(0.0);
+        }
+        if batch == 0 || chunks.is_empty() {
+            return;
+        }
+        let out_cols = out.cols;
+        let ptr = SyncOutPtr { p: out.data.as_mut_ptr() };
+        let use_pool = parallel && self.pool.is_some() && batch > 1;
+
+        if !use_pool {
+            let tb = MixedGemm::panel_tile(batch, panel_positions, 1);
+            scratch.ensure(1, tb);
+            let Lane { col, acc, panel, .. } = &mut scratch.lanes[0];
+            let mut b0 = 0usize;
+            while b0 < batch {
+                let nb = tb.min(batch - b0);
+                let view = src.view(b0, nb, panel);
+                for chunk in chunks {
+                    // SAFETY: `ptr` points into `out`, exclusively
+                    // borrowed for this call; sequential tiles write
+                    // disjoint position ranges.
+                    unsafe { self.run_chunk(view, sw, *chunk, b0, acc, col, &ptr, out_cols) };
+                }
+                b0 += nb;
+            }
+            return;
+        }
+
+        let pool = self.pool.as_ref().expect("use_pool implies a pool");
+        let lanes_n = pool.threads() + 1;
+        let tb = MixedGemm::panel_tile(batch, panel_positions, lanes_n);
+        let ntiles = batch.div_ceil(tb);
+        scratch.ensure(lanes_n, tb);
+        let lanes = SyncLanesPtr { p: scratch.lanes.as_mut_ptr() };
+        pool.scoped_for_indexed(ntiles, |ti, lane| {
+            // SAFETY: the lane is exclusive to this drain loop (see
+            // `scoped_for_indexed`) and `ensure` sized the lane list;
+            // tile `ti` owns positions `b0..b0 + nb` exclusively, so all
+            // cells written through `ptr` are disjoint across tasks and
+            // the scoped join publishes them.
+            unsafe {
+                let Lane { col, acc, panel, .. } = &mut *lanes.p.add(lane);
+                let b0 = ti * tb;
+                let nb = tb.min(batch - b0);
+                let view = src.view(b0, nb, panel);
+                for chunk in chunks {
+                    self.run_chunk(view, sw, *chunk, b0, acc, col, &ptr, out_cols);
+                }
+            }
+        });
+    }
+
+    /// The integer-resident twin of [`MixedGemm::run_implicit_into`]:
+    /// implicit column-tile packing on the way in, the fused
+    /// dequant → bias → ReLU → requantize epilogue and layout scatter
+    /// ([`MixedGemm::run_partitioned_quant_into`]) on the way out — the
+    /// conv hot path touches neither a col buffer nor an f32 staging
+    /// matrix. Same bit-exactness contract as both parents.
+    #[allow(clippy::too_many_arguments)]
+    pub fn run_implicit_quant_into(
+        &self,
+        src: &ColTileSource,
+        sw: &SortedWeights,
+        chunks: &[TaskChunk],
+        bias: &[f32],
+        rq: Requant,
+        layout: OutLayout,
+        panel_positions: usize,
+        parallel: bool,
+        scratch: &mut GemmScratch,
+        out: &mut [u8],
+    ) {
+        let batch = src.batch();
+        assert_eq!(src.cols(), sw.cols, "inner dims");
+        assert_eq!(bias.len(), sw.rows, "bias length");
+        assert_eq!(out.len(), layout.len(batch, sw.rows), "output length");
+        let covered: usize = chunks.iter().map(|c| c.end - c.start).sum();
+        if covered < sw.rows {
+            // rows absent from the schedule hold the code of their bias,
+            // matching the f32 path's zeroed accumulator (see
+            // `run_partitioned_quant_into`)
+            for orig in 0..sw.rows {
+                let c = rq.code(bias[orig]);
+                for b in 0..batch {
+                    out[layout.index(b, orig)] = c;
+                }
+            }
+        }
+        if batch == 0 || chunks.is_empty() {
+            return;
+        }
+        let ptr = SyncOutPtr { p: out.as_mut_ptr() };
+        let use_pool = parallel && self.pool.is_some() && batch > 1;
+
+        if !use_pool {
+            let tb = MixedGemm::panel_tile(batch, panel_positions, 1);
+            scratch.ensure(1, tb);
+            let Lane { col, acc, codes, panel } = &mut scratch.lanes[0];
+            let mut b0 = 0usize;
+            while b0 < batch {
+                let nb = tb.min(batch - b0);
+                let view = src.view(b0, nb, panel);
+                for chunk in chunks {
+                    // SAFETY: as in `run_implicit_into`.
+                    unsafe {
+                        self.run_chunk_quant(
+                            view, sw, *chunk, b0, bias, rq, layout, acc, col, codes, &ptr,
+                        )
+                    };
+                }
+                b0 += nb;
+            }
+            return;
+        }
+
+        let pool = self.pool.as_ref().expect("use_pool implies a pool");
+        let lanes_n = pool.threads() + 1;
+        let tb = MixedGemm::panel_tile(batch, panel_positions, lanes_n);
+        let ntiles = batch.div_ceil(tb);
+        scratch.ensure(lanes_n, tb);
+        let lanes = SyncLanesPtr { p: scratch.lanes.as_mut_ptr() };
+        pool.scoped_for_indexed(ntiles, |ti, lane| {
+            // SAFETY: as in `run_implicit_into` — exclusive lane per
+            // drain loop, disjoint position ranges per tile in either
+            // layout, join barrier publishes the writes.
+            unsafe {
+                let Lane { col, acc, codes, panel } = &mut *lanes.p.add(lane);
+                let b0 = ti * tb;
+                let nb = tb.min(batch - b0);
+                let view = src.view(b0, nb, panel);
+                for chunk in chunks {
+                    self.run_chunk_quant(
+                        view, sw, *chunk, b0, bias, rq, layout, acc, col, codes, &ptr,
+                    );
+                }
             }
         });
     }
@@ -687,23 +937,30 @@ impl MixedGemm {
     /// Run one chunk through the fused requantization epilogue: block
     /// GEMM into the lane's f32 block, [`requant_block`] into the lane's
     /// code block, then scatter codes through `sw.perm` in the output
-    /// layout.
+    /// layout. `acts` is the activation view the chunk sweeps — the
+    /// whole matrix (explicit dispatch, `b_base = 0`) or one packed
+    /// column-tile panel whose rows are global positions
+    /// `b_base..b_base + acts.rows` (implicit dispatch).
     ///
     /// # Safety
     ///
-    /// `out.p` must point at a buffer of `layout.len(batch, sw.rows)`
-    /// u8 elements that outlives the call, and no other thread may
-    /// concurrently write the cells of this chunk's (permuted) rows.
+    /// `out.p` must point at a buffer of `layout.len(total batch,
+    /// sw.rows)` u8 elements that outlives the call, and no other thread
+    /// may concurrently write the cells this (chunk × position-range)
+    /// task owns.
     #[allow(clippy::too_many_arguments)]
     unsafe fn run_chunk_quant(
         &self,
-        acts: &PackedActs,
+        acts: ActsView<'_>,
         sw: &SortedWeights,
         chunk: TaskChunk,
+        b_base: usize,
         bias: &[f32],
         rq: Requant,
         layout: OutLayout,
-        lane: &mut Lane,
+        acc: &mut [i32],
+        col: &mut [f32],
+        codes: &mut [u8],
         out: &SyncOutPtr<u8>,
     ) {
         let batch = acts.rows;
@@ -712,27 +969,33 @@ impl MixedGemm {
         let mut r = chunk.start;
         while r < chunk.end {
             let nr = MICRO_ROWS.min(chunk.end - r);
-            core.run_block_tiled(acts, sw, r, nr, tile, self.isa, &mut lane.acc, &mut lane.col);
+            core.run_block_tiled(acts, sw, r, nr, tile, self.isa, acc, col);
             let mut bias_block = [0.0f32; MICRO_ROWS];
             for (j, b) in bias_block.iter_mut().enumerate().take(nr) {
                 *b = bias[sw.perm[r + j]];
             }
-            requant_block(&lane.col, nr, batch, &bias_block, rq, &mut lane.codes);
+            requant_block(col, nr, batch, &bias_block, rq, codes);
             for j in 0..nr {
                 let orig = sw.perm[r + j];
-                let src = &lane.codes[j * batch..(j + 1) * batch];
+                let src = &codes[j * batch..(j + 1) * batch];
                 match layout {
                     OutLayout::RowMajor { .. } => {
                         for (b, &c) in src.iter().enumerate() {
-                            *out.p.add(layout.index(b, orig)) = c;
+                            *out.p.add(layout.index(b_base + b, orig)) = c;
                         }
                     }
                     OutLayout::Nchw { hw, .. } => {
-                        // one contiguous copy per image: this row's hw
-                        // codes land at the channel's NCHW plane
-                        for img in 0..batch / hw {
-                            let dst = out.p.add(layout.index(img * hw, orig));
-                            std::ptr::copy_nonoverlapping(src.as_ptr().add(img * hw), dst, hw);
+                        // contiguous per-image runs: this row's codes for
+                        // the positions of one image land back to back in
+                        // the channel's NCHW plane, even when a panel
+                        // straddles an image boundary
+                        let mut b = 0usize;
+                        while b < batch {
+                            let gb = b_base + b;
+                            let run = (hw - gb % hw).min(batch - b);
+                            let dst = out.p.add(layout.index(gb, orig));
+                            std::ptr::copy_nonoverlapping(src.as_ptr().add(b), dst, run);
+                            b += run;
                         }
                     }
                 }
@@ -742,18 +1005,22 @@ impl MixedGemm {
     }
 
     /// Run one chunk in [`MICRO_ROWS`]-row micro-kernel blocks, scattering
-    /// each block's output to model row order through `sw.perm`.
+    /// each block's output to model row order through `sw.perm`. `acts`
+    /// and `b_base` as in [`MixedGemm::run_chunk_quant`].
     ///
     /// # Safety
     ///
-    /// `out.p` must point at a `(batch, out_cols)` row-major f32 matrix
-    /// that outlives the call, and no other thread may concurrently
-    /// write the cells of this chunk's (permuted) rows.
+    /// `out.p` must point at a `(total batch, out_cols)` row-major f32
+    /// matrix that outlives the call, and no other thread may
+    /// concurrently write the cells this (chunk × position-range) task
+    /// owns.
+    #[allow(clippy::too_many_arguments)]
     unsafe fn run_chunk(
         &self,
-        acts: &PackedActs,
+        acts: ActsView<'_>,
         sw: &SortedWeights,
         chunk: TaskChunk,
+        b_base: usize,
         acc: &mut [i32],
         col: &mut [f32],
         out: &SyncOutPtr<f32>,
@@ -769,7 +1036,7 @@ impl MixedGemm {
             for j in 0..nr {
                 let orig = sw.perm[r + j];
                 for (b, &v) in col[j * batch..(j + 1) * batch].iter().enumerate() {
-                    *out.p.add(b * out_cols + orig) = v;
+                    *out.p.add((b_base + b) * out_cols + orig) = v;
                 }
             }
             r += nr;
@@ -976,7 +1243,7 @@ mod tests {
         let want = g.run_partitioned_seq(&acts, &pw, &part);
         let sw = SortedWeights::from_packed(&pw);
         let chunks = chunk_tasks(sw.partition(), 4);
-        let mut scratch = GemmScratch::with_capacity(g.lanes(), MICRO_ROWS * acts.rows);
+        let mut scratch = GemmScratch::with_capacity(g.lanes(), MICRO_ROWS * acts.rows, 0);
         let mut out = Mat::zeros(acts.rows, pw.rows);
         for parallel in [false, true] {
             out.data.fill(f32::NAN); // must be fully overwritten
@@ -1108,6 +1375,159 @@ mod tests {
                     want_rm[b * 24 + orig]
                 };
                 assert_eq!(got[b * 24 + orig], want, "partial sr {sr} b {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn implicit_dispatch_matches_explicit_for_any_panel_width() {
+        use crate::gemm::panels::{ColTileSource, PatchGeometry};
+        // a real conv shape: gather panels from an NCHW f32 map and from
+        // its code twin; both must equal explicit im2col + quantize +
+        // run_partitioned_into bit for bit, for every panel width,
+        // sequentially and in parallel.
+        let (n, c, h, w, k, stride, pad) = (2usize, 3usize, 6usize, 5usize, 3usize, 1usize, 1usize);
+        let mut rng = Rng::new(91);
+        let data: Vec<f32> = (0..n * c * h * w).map(|_| rng.uniform(-0.2, 1.2)).collect();
+        let geo = PatchGeometry::new(n, c, h, w, 0, c, k, stride, pad);
+        let (batch, cols) = (geo.batch(), geo.cols());
+        let (alpha, bits) = (1.1f32, 4u32);
+
+        // explicit reference operand
+        let mut patches = vec![0.0f32; batch * cols];
+        crate::gemm::panels::pack_patch_rows(&data, 0.0, &geo, 0, batch, &mut patches);
+        let acts = PackedActs::quantize(&Mat::from_vec(batch, cols, patches), alpha, bits);
+
+        let rows = 13usize;
+        let wd: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 0.5).collect();
+        let wmat = Mat::from_vec(rows, cols, wd);
+        let schemes: Vec<Scheme> = (0..rows)
+            .map(|r| match r % 4 {
+                0 => Scheme::PotW4A4,
+                1 => Scheme::FixedW4A4,
+                2 => Scheme::FixedW8A4,
+                _ => Scheme::ApotW4A4,
+            })
+            .collect();
+        let av: Vec<f32> = (0..rows).map(|r| default_alpha(wmat.row(r))).collect();
+        let pw = PackedWeights::quantize(&wmat, &schemes, &av);
+        let sw = SortedWeights::from_packed(&pw);
+        let chunks = chunk_tasks(sw.partition(), 3);
+
+        let g = MixedGemm::with_config(ParallelConfig {
+            threads: 3,
+            tile_cols: 16,
+            min_rows_per_task: 3,
+        });
+        let mut scratch = GemmScratch::new(g.lanes());
+        let mut want = Mat::zeros(batch, rows);
+        g.run_partitioned_into(&acts, &sw, &chunks, false, &mut scratch, &mut want);
+
+        let codes: Vec<u8> = acts.codes.clone();
+        // NCHW codes for the Codes source: quantize the map itself
+        let top = ((1u32 << bits) - 1) as f32;
+        let inv = top / alpha;
+        let nchw_codes: Vec<u8> = data
+            .iter()
+            .map(|&v| (v * inv).clamp(0.0, top).round_ties_even() as u8)
+            .collect();
+
+        for panel_positions in [1usize, 5, 8, 64, 1024] {
+            for parallel in [false, true] {
+                let sources = [
+                    ColTileSource::F32 { data: &data, geo, alpha, bits },
+                    ColTileSource::Codes { data: &nchw_codes, geo, alpha, bits },
+                    ColTileSource::Packed { codes: &codes, rows: batch, cols, alpha, bits },
+                ];
+                for (si, src) in sources.iter().enumerate() {
+                    let mut got = Mat::zeros(batch, rows);
+                    got.data.fill(f32::NAN);
+                    g.run_implicit_into(
+                        src,
+                        &sw,
+                        &chunks,
+                        panel_positions,
+                        parallel,
+                        &mut scratch,
+                        &mut got,
+                    );
+                    assert_eq!(
+                        got.data, want.data,
+                        "src {si} panel {panel_positions} parallel {parallel}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn implicit_quant_dispatch_matches_explicit_in_both_layouts() {
+        use crate::gemm::panels::{ColTileSource, PatchGeometry};
+        let (n, c, h, w) = (2usize, 2usize, 4usize, 6usize);
+        let mut rng = Rng::new(77);
+        let data: Vec<f32> = (0..n * c * h * w).map(|_| rng.uniform(0.0, 1.1)).collect();
+        let geo = PatchGeometry::new(n, c, h, w, 0, c, 3, 1, 1);
+        let (batch, cols) = (geo.batch(), geo.cols());
+        let hw = geo.oh * geo.ow;
+        let (alpha, bits) = (0.9f32, 4u32);
+
+        let mut patches = vec![0.0f32; batch * cols];
+        crate::gemm::panels::pack_patch_rows(&data, 0.0, &geo, 0, batch, &mut patches);
+        let acts = PackedActs::quantize(&Mat::from_vec(batch, cols, patches), alpha, bits);
+
+        let rows = 9usize;
+        let wd: Vec<f32> = (0..rows * cols).map(|_| rng.normal() * 0.4).collect();
+        let wmat = Mat::from_vec(rows, cols, wd);
+        let schemes: Vec<Scheme> = (0..rows)
+            .map(|r| match r % 3 {
+                0 => Scheme::PotW4A4,
+                1 => Scheme::FixedW4A4,
+                _ => Scheme::FixedW8A4,
+            })
+            .collect();
+        let av: Vec<f32> = (0..rows).map(|r| default_alpha(wmat.row(r))).collect();
+        let pw = PackedWeights::quantize(&wmat, &schemes, &av);
+        let sw = SortedWeights::from_packed(&pw);
+        let chunks = chunk_tasks(sw.partition(), 2);
+        let bias: Vec<f32> = (0..rows).map(|r| (r as f32 - 4.0) * 0.02).collect();
+        let rq = Requant::new(0.8, 4);
+
+        let g = MixedGemm::with_config(ParallelConfig {
+            threads: 2,
+            tile_cols: 8,
+            min_rows_per_task: 2,
+        });
+        let mut scratch = GemmScratch::new(g.lanes());
+
+        for (layout, len) in [
+            (OutLayout::RowMajor { cols: rows }, batch * rows),
+            (OutLayout::Nchw { channels: rows, hw }, n * rows * hw),
+        ] {
+            let mut want = vec![0u8; len];
+            g.run_partitioned_quant_into(
+                &acts, &sw, &chunks, &bias, rq, layout, false, &mut scratch, &mut want,
+            );
+            let src = ColTileSource::F32 { data: &data, geo, alpha, bits };
+            for panel_positions in [1usize, 3, 7, 512] {
+                for parallel in [false, true] {
+                    let mut got = vec![0xffu8; len];
+                    g.run_implicit_quant_into(
+                        &src,
+                        &sw,
+                        &chunks,
+                        &bias,
+                        rq,
+                        layout,
+                        panel_positions,
+                        parallel,
+                        &mut scratch,
+                        &mut got,
+                    );
+                    assert_eq!(
+                        got, want,
+                        "layout {layout:?} panel {panel_positions} parallel {parallel}"
+                    );
+                }
             }
         }
     }

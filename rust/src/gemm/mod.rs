@@ -13,6 +13,10 @@
 //! * [`sorted`] — the class-sorted kernel layout ([`SortedWeights`]):
 //!   rows permuted once at load so each class is one contiguous block,
 //!   with the permutation kept for output scatter.
+//! * [`panels`] — implicit-GEMM column-tile panel packing
+//!   ([`ColTileSource`]): conv activations stream into per-lane
+//!   cache-resident panels (gathered from NCHW codes or quantized from
+//!   f32 on the fly) instead of a materialized im2col buffer.
 //! * [`simd`] — runtime-dispatched AVX2/SSE/scalar micro-kernels
 //!   ([`dot_block`], [`MICRO_ROWS`] rows per block); every ISA is
 //!   bit-exact, `RMSMP_NO_SIMD=1` forces the portable scalar path.
@@ -27,6 +31,7 @@ pub mod cores;
 pub mod mixed;
 pub mod nibble;
 pub mod packed;
+pub mod panels;
 pub mod simd;
 pub mod sorted;
 
@@ -35,6 +40,7 @@ pub use mixed::{
     chunk_tasks, GemmScratch, MixedGemm, OutLayout, ParallelConfig, RowPartition, TaskChunk,
 };
 pub use nibble::NibblePacked;
-pub use packed::{PackedActs, PackedWeights};
+pub use packed::{ActsView, PackedActs, PackedWeights};
+pub use panels::{pack_patch_rows, pack_quant_patch_rows, ColTileSource, PatchGeometry};
 pub use simd::{dot_block, Isa, MICRO_ROWS};
 pub use sorted::SortedWeights;

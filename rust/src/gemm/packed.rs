@@ -7,6 +7,50 @@
 
 use crate::quant::{self, Mat, Scheme};
 
+/// The activation quantizer's per-element code map with its constants
+/// hoisted: `inv` is the precomputed `n / alpha` reciprocal and `top`
+/// the code ceiling `(1 << bits) - 1`, so the inner loops of every
+/// caller do one multiply and one clamp per element — never a divide,
+/// never a bound recomputation. Shared by the full-matrix quantize
+/// ([`PackedActs::quantize_slice_into`]), the fused panel gather
+/// (`super::panels::pack_quant_patch_rows`), and the requantization
+/// epilogue (`super::cores::Requant::code`), which is what keeps all
+/// three bit-identical by construction.
+#[inline(always)]
+pub(crate) fn code_map(v: f32, inv: f32, top: f32) -> u8 {
+    (v * inv).clamp(0.0, top).round_ties_even() as u8
+}
+
+/// A borrowed view of quantized activations — what the block
+/// micro-kernels actually consume. A [`PackedActs`] views as its full
+/// matrix ([`PackedActs::view`]); the implicit-GEMM dispatch views one
+/// packed column-tile panel at a time, so the kernels never know whether
+/// the operand was materialized or streamed.
+#[derive(Clone, Copy, Debug)]
+pub struct ActsView<'a> {
+    /// u8 codes, row-major (`rows` x `cols`).
+    pub codes: &'a [u8],
+    pub rows: usize,
+    pub cols: usize,
+    pub alpha: f32,
+    pub bits: u32,
+}
+
+impl<'a> ActsView<'a> {
+    #[inline]
+    pub fn row(&self, r: usize) -> &'a [u8] {
+        &self.codes[r * self.cols..(r + 1) * self.cols]
+    }
+
+    /// Dequantized float value of one code step — the same expression as
+    /// [`PackedActs::scale`], so view-based kernels dequantize
+    /// bit-identically to the packed path.
+    #[inline]
+    pub fn scale(&self) -> f32 {
+        self.alpha / ((1u32 << self.bits) - 1) as f32
+    }
+}
+
 /// Activations quantized to unsigned m-bit codes with a shared scale.
 #[derive(Clone, Debug)]
 pub struct PackedActs {
@@ -61,17 +105,16 @@ impl PackedActs {
         out: &mut PackedActs,
     ) {
         assert_eq!(data.len(), rows * cols, "shape/data mismatch");
-        let n = ((1u32 << bits) - 1) as f32;
-        let inv = n / alpha;
+        // reciprocal and clamp ceiling hoisted once per call (see
+        // `code_map`) — the inner loop is multiply + clamp + round only
+        let top = ((1u32 << bits) - 1) as f32;
+        let inv = top / alpha;
         out.rows = rows;
         out.cols = cols;
         out.alpha = alpha;
         out.bits = bits;
         out.codes.clear();
-        out.codes.extend(
-            data.iter()
-                .map(|&v| (v * inv).clamp(0.0, n).round_ties_even() as u8),
-        );
+        out.codes.extend(data.iter().map(|&v| code_map(v, inv, top)));
     }
 
     /// Stamp shape + quantization metadata after the code buffer has
@@ -107,6 +150,18 @@ impl PackedActs {
     #[inline]
     pub fn scale(&self) -> f32 {
         self.alpha / ((1u32 << self.bits) - 1) as f32
+    }
+
+    /// The kernel-facing view of the whole matrix (see [`ActsView`]).
+    #[inline]
+    pub fn view(&self) -> ActsView<'_> {
+        ActsView {
+            codes: &self.codes,
+            rows: self.rows,
+            cols: self.cols,
+            alpha: self.alpha,
+            bits: self.bits,
+        }
     }
 
     #[inline]

@@ -1,0 +1,398 @@
+//! Implicit-GEMM panel packing: the conv activation operand, one
+//! column tile at a time.
+//!
+//! The explicit im2col path materializes the full `(N·OH·OW, C·k·k)`
+//! patch matrix in DRAM before the mixed GEMM reads a single code — the
+//! largest buffer in the workspace, written once and then re-streamed
+//! from memory by every 4-row micro-kernel block. This module is the
+//! software analogue of the FPGA's streaming datapath: a
+//! [`ColTileSource`] describes where a conv's activation matrix comes
+//! from (an NCHW code slot, an f32 feature map, or an already row-major
+//! code buffer), and the GEMM dispatch asks it to *pack one
+//! `panel_positions`-wide panel at a time* into a small per-lane scratch
+//! buffer. The panel — a handful of output positions × the full patch
+//! width, in u8 codes — fits in L1/L2 and is swept by **every** row
+//! class and micro-kernel block of the layer while it is hot, so the
+//! giant col buffer never exists.
+//!
+//! Three sources, one contract (the packed panel holds exactly the rows
+//! the explicit path would have built, code for code):
+//!
+//! * [`ColTileSource::Codes`] — gather patch rows straight from a u8
+//!   NCHW code slot (the integer-resident path). Padding packs the
+//!   literal code 0 == the code of 0.0 (the activation quantizer is
+//!   unsigned and zero-point-free).
+//! * [`ColTileSource::F32`] — gather from an f32 NCHW slot and quantize
+//!   **on the fly**, fusing the `PackedActs` pass into the gather (one
+//!   multiply by the precomputed `n/alpha` reciprocal per element, clamp
+//!   bounds hoisted out of the loop).
+//! * [`ColTileSource::Packed`] — the 1×1 stride-1 pad-0 fast path: when
+//!   the plan proves a code slot is only ever consumed by unit convs, the
+//!   producer stores it NHWC (row-major positions × channels), and the
+//!   "panel" is a plain subslice of the slot — no gather, no copy.
+//!
+//! The per-tile packer ([`pack_patch_rows`]) is also the kernel behind
+//! the explicit `model::im2col` fronts (they pack the full row range in
+//! one call), so the reference path and the implicit path share one
+//! gather loop and stay bit-exact by construction.
+
+use super::packed::{code_map, ActsView};
+
+/// Output spatial size of one dimension for a (k, stride, pad) conv.
+pub fn out_dim(in_dim: usize, k: usize, stride: usize, pad: usize) -> usize {
+    (in_dim + 2 * pad - k) / stride + 1
+}
+
+/// The compiled gather geometry of one conv's activation operand: maps a
+/// patch-matrix cell (GEMM row = output position, GEMM col = channel ×
+/// kernel offset) to its NCHW source element. Carried per conv op by the
+/// plan; `n` is the runtime batch, so instances are built per call.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PatchGeometry {
+    /// Source NCHW dims.
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    /// Channel range `c0..c0 + nc` (grouped conv packs one group).
+    pub c0: usize,
+    pub nc: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    /// Output spatial dims (derived from h/w/k/stride/pad).
+    pub oh: usize,
+    pub ow: usize,
+}
+
+impl PatchGeometry {
+    #[allow(clippy::too_many_arguments)]
+    pub fn new(
+        n: usize,
+        c: usize,
+        h: usize,
+        w: usize,
+        c0: usize,
+        nc: usize,
+        k: usize,
+        stride: usize,
+        pad: usize,
+    ) -> PatchGeometry {
+        PatchGeometry {
+            n,
+            c,
+            h,
+            w,
+            c0,
+            nc,
+            k,
+            stride,
+            pad,
+            oh: out_dim(h, k, stride, pad),
+            ow: out_dim(w, k, stride, pad),
+        }
+    }
+
+    /// GEMM batch rows (output positions across the batch).
+    #[inline]
+    pub fn batch(&self) -> usize {
+        self.n * self.oh * self.ow
+    }
+
+    /// GEMM inner dim (patch width).
+    #[inline]
+    pub fn cols(&self) -> usize {
+        self.nc * self.k * self.k
+    }
+}
+
+/// Gather patch rows `b0..b0 + nb` of the im2col matrix from an NCHW
+/// slice into `out` (`nb * g.cols()` elements, every one written;
+/// padding positions get `zero`). This is the one copy of the gather
+/// loop: the explicit `im2col_*` fronts call it over the full row range,
+/// the implicit-GEMM dispatch per column tile — so both paths move the
+/// same element to the same cell by construction.
+pub fn pack_patch_rows<T: Copy>(
+    data: &[T],
+    zero: T,
+    g: &PatchGeometry,
+    b0: usize,
+    nb: usize,
+    out: &mut [T],
+) {
+    pack_rows_map(data, zero, g, b0, nb, out, |v| v)
+}
+
+/// [`pack_patch_rows`] fused with activation quantization: gather f32
+/// values and write the consumer's u8 codes directly, skipping the f32
+/// patch staging entirely. The reciprocal `n/alpha` and the clamp
+/// ceiling are hoisted out of the gather loop; the per-element map is
+/// [`code_map`], the same expression `PackedActs::quantize` applies, so
+/// the packed codes are bit-identical to gather-then-quantize (padding's
+/// 0.0 maps to code 0 for any positive alpha).
+pub fn pack_quant_patch_rows(
+    data: &[f32],
+    g: &PatchGeometry,
+    b0: usize,
+    nb: usize,
+    alpha: f32,
+    bits: u32,
+    out: &mut [u8],
+) {
+    let top = ((1u32 << bits) - 1) as f32;
+    let inv = top / alpha;
+    pack_rows_map(data, 0u8, g, b0, nb, out, move |v| code_map(v, inv, top))
+}
+
+/// The generic gather behind both packers: per-element map `f` applied
+/// on the way through (identity for the plain copy, the hoisted
+/// quantizer for the fused one).
+fn pack_rows_map<S: Copy, D: Copy>(
+    data: &[S],
+    zero: D,
+    g: &PatchGeometry,
+    b0: usize,
+    nb: usize,
+    out: &mut [D],
+    f: impl Fn(S) -> D,
+) {
+    assert_eq!(data.len(), g.n * g.c * g.h * g.w, "NCHW shape/data mismatch");
+    assert!(g.c0 + g.nc <= g.c, "channel range out of bounds");
+    assert!(b0 + nb <= g.batch(), "patch row range out of bounds");
+    let cols = g.cols();
+    assert_eq!(out.len(), nb * cols, "panel size mismatch");
+    let hw = g.oh * g.ow;
+    for i in 0..nb {
+        let b = b0 + i;
+        let img = b / hw;
+        let rem = b % hw;
+        let oy = rem / g.ow;
+        let ox = rem % g.ow;
+        let dst = &mut out[i * cols..(i + 1) * cols];
+        if g.k == 1 && g.pad == 0 {
+            // unit-kernel gather: one in-bounds element per channel
+            // (oy*stride <= h-1 because oh = (h-1)/stride + 1), so the
+            // padding checks vanish and the row is a strided channel walk
+            let base = (img * g.c + g.c0) * g.h * g.w + (oy * g.stride) * g.w + ox * g.stride;
+            for (dc, d) in dst.iter_mut().enumerate() {
+                *d = f(data[base + dc * g.h * g.w]);
+            }
+        } else {
+            let mut ci = 0;
+            for dc in 0..g.nc {
+                let plane = (img * g.c + g.c0 + dc) * g.h * g.w;
+                for ky in 0..g.k {
+                    let iy = (oy * g.stride + ky) as isize - g.pad as isize;
+                    for kx in 0..g.k {
+                        let ix = (ox * g.stride + kx) as isize - g.pad as isize;
+                        dst[ci] = if iy >= 0
+                            && (iy as usize) < g.h
+                            && ix >= 0
+                            && (ix as usize) < g.w
+                        {
+                            f(data[plane + iy as usize * g.w + ix as usize])
+                        } else {
+                            zero
+                        };
+                        ci += 1;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Where a GEMM's activation operand comes from (see module docs). The
+/// dispatch never sees a whole activation matrix — it asks the source
+/// for one column tile at a time via [`ColTileSource::view`].
+pub enum ColTileSource<'a> {
+    /// Already row-major u8 activation codes (positions × cols): a code
+    /// slot the plan retargeted to NHWC for the unit-conv fast path.
+    /// Panels are subslices — no gather, no copy.
+    Packed {
+        codes: &'a [u8],
+        rows: usize,
+        cols: usize,
+        alpha: f32,
+        bits: u32,
+    },
+    /// Implicit im2col over a u8 NCHW code slot (integer-resident input).
+    Codes {
+        data: &'a [u8],
+        geo: PatchGeometry,
+        alpha: f32,
+        bits: u32,
+    },
+    /// Implicit im2col over an f32 NCHW slot with on-the-fly
+    /// quantization (the network input and other f32-resident edges).
+    F32 {
+        data: &'a [f32],
+        geo: PatchGeometry,
+        alpha: f32,
+        bits: u32,
+    },
+}
+
+impl<'a> ColTileSource<'a> {
+    /// GEMM batch rows (output positions) this source produces.
+    pub fn batch(&self) -> usize {
+        match self {
+            ColTileSource::Packed { rows, .. } => *rows,
+            ColTileSource::Codes { geo, .. } | ColTileSource::F32 { geo, .. } => geo.batch(),
+        }
+    }
+
+    /// GEMM inner dim (patch width).
+    pub fn cols(&self) -> usize {
+        match self {
+            ColTileSource::Packed { cols, .. } => *cols,
+            ColTileSource::Codes { geo, .. } | ColTileSource::F32 { geo, .. } => geo.cols(),
+        }
+    }
+
+    /// The consumer's activation clip scale / width the codes carry.
+    pub fn alpha(&self) -> f32 {
+        match self {
+            ColTileSource::Packed { alpha, .. }
+            | ColTileSource::Codes { alpha, .. }
+            | ColTileSource::F32 { alpha, .. } => *alpha,
+        }
+    }
+
+    pub fn bits(&self) -> u32 {
+        match self {
+            ColTileSource::Packed { bits, .. }
+            | ColTileSource::Codes { bits, .. }
+            | ColTileSource::F32 { bits, .. } => *bits,
+        }
+    }
+
+    /// Pack positions `b0..b0 + nb` into `scratch` (resized in place,
+    /// allocation-free within its reserved capacity) and return the
+    /// panel as a kernel-ready [`ActsView`]. The `Packed` source returns
+    /// a subslice of its backing slot and never touches `scratch`.
+    pub fn view<'p>(&'p self, b0: usize, nb: usize, scratch: &'p mut Vec<u8>) -> ActsView<'p> {
+        let cols = self.cols();
+        let codes: &[u8] = match self {
+            ColTileSource::Packed { codes, rows, .. } => {
+                assert!(b0 + nb <= *rows, "panel range out of bounds");
+                &codes[b0 * cols..(b0 + nb) * cols]
+            }
+            ColTileSource::Codes { data, geo, .. } => {
+                scratch.resize(nb * cols, 0);
+                pack_patch_rows(data, 0u8, geo, b0, nb, scratch);
+                scratch
+            }
+            ColTileSource::F32 { data, geo, alpha, bits } => {
+                scratch.resize(nb * cols, 0);
+                pack_quant_patch_rows(data, geo, b0, nb, *alpha, *bits, scratch);
+                scratch
+            }
+        };
+        ActsView { codes, rows: nb, cols, alpha: self.alpha(), bits: self.bits() }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::gemm::packed::PackedActs;
+    use crate::quant::Mat;
+    use crate::util::rng::Rng;
+
+    fn rand_nchw(n: usize, c: usize, h: usize, w: usize, seed: u64) -> Vec<f32> {
+        let mut rng = Rng::new(seed);
+        (0..n * c * h * w).map(|_| rng.uniform(-0.2, 1.3)).collect()
+    }
+
+    #[test]
+    fn tiled_packing_equals_full_gather() {
+        // packing any tile decomposition must reproduce the full-range
+        // gather row for row
+        let (n, c, h, w) = (2usize, 3usize, 7usize, 6usize);
+        let data = rand_nchw(n, c, h, w, 5);
+        let cases = [(3, 1, 1, 0, 3), (3, 2, 0, 1, 2), (1, 1, 0, 0, 3), (1, 2, 0, 0, 3)];
+        for (k, s, p, c0, nc) in cases {
+            let g = PatchGeometry::new(n, c, h, w, c0, nc, k, s, p);
+            let mut full = vec![0.0f32; g.batch() * g.cols()];
+            pack_patch_rows(&data, 0.0, &g, 0, g.batch(), &mut full);
+            for tile in [1usize, 3, 5, g.batch()] {
+                let mut b0 = 0;
+                while b0 < g.batch() {
+                    let nb = tile.min(g.batch() - b0);
+                    let mut panel = vec![f32::NAN; nb * g.cols()];
+                    pack_patch_rows(&data, 0.0, &g, b0, nb, &mut panel);
+                    assert_eq!(
+                        &panel[..],
+                        &full[b0 * g.cols()..(b0 + nb) * g.cols()],
+                        "k{k} s{s} p{p} tile {tile} b0 {b0}"
+                    );
+                    b0 += nb;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fused_quant_pack_equals_gather_then_quantize() {
+        let (n, c, h, w) = (1usize, 2usize, 5usize, 5usize);
+        let data = rand_nchw(n, c, h, w, 9);
+        let (alpha, bits) = (0.9f32, 4u32);
+        let g = PatchGeometry::new(n, c, h, w, 0, c, 3, 1, 1);
+        let mut fpatch = vec![0.0f32; g.batch() * g.cols()];
+        pack_patch_rows(&data, 0.0, &g, 0, g.batch(), &mut fpatch);
+        let want = PackedActs::quantize(
+            &Mat::from_vec(g.batch(), g.cols(), fpatch),
+            alpha,
+            bits,
+        );
+        let mut got = vec![0xffu8; g.batch() * g.cols()];
+        pack_quant_patch_rows(&data, &g, 0, g.batch(), alpha, bits, &mut got);
+        assert_eq!(got, want.codes);
+    }
+
+    #[test]
+    fn packed_source_views_are_aliases() {
+        let codes: Vec<u8> = (0..24).map(|i| i as u8).collect();
+        let src =
+            ColTileSource::Packed { codes: &codes, rows: 6, cols: 4, alpha: 1.0, bits: 4 };
+        let mut scratch = Vec::new();
+        let v = src.view(2, 3, &mut scratch);
+        assert_eq!(v.rows, 3);
+        assert_eq!(v.codes, &codes[8..20]);
+        // the alias never stages through the scratch buffer
+        assert_eq!(scratch.capacity(), 0);
+    }
+
+    #[test]
+    fn code_source_matches_f32_source_cell_for_cell() {
+        // quantize-then-pack must equal pack-then-quantize: the code
+        // gather moves codes exactly where the fused f32 gather writes
+        // the quantized value (padding's code 0 == code of 0.0)
+        let (n, c, h, w) = (2usize, 2usize, 4usize, 5usize);
+        let data = rand_nchw(n, c, h, w, 13);
+        let (alpha, bits) = (1.1f32, 4u32);
+        let top = ((1u32 << bits) - 1) as f32;
+        let inv = top / alpha;
+        let codes: Vec<u8> = data.iter().map(|&v| code_map(v, inv, top)).collect();
+        let g = PatchGeometry::new(n, c, h, w, 0, c, 3, 2, 1);
+        let csrc = ColTileSource::Codes { data: &codes, geo: g, alpha, bits };
+        let fsrc = ColTileSource::F32 { data: &data, geo: g, alpha, bits };
+        let mut s1 = Vec::new();
+        let mut s2 = Vec::new();
+        let batch = g.batch();
+        for b0 in 0..batch {
+            let a = csrc.view(b0, 1, &mut s1);
+            let b = fsrc.view(b0, 1, &mut s2);
+            assert_eq!(a.codes, b.codes, "row {b0}");
+        }
+    }
+
+    #[test]
+    fn unit_geometry_preserves_dims() {
+        let g = PatchGeometry::new(1, 4, 6, 6, 0, 4, 1, 1, 0);
+        assert_eq!((g.oh, g.ow), (6, 6));
+        assert_eq!(g.cols(), 4);
+        assert_eq!(g.batch(), 36);
+    }
+}

@@ -76,10 +76,13 @@
 //!   by `tests/test_requant.rs`).
 //! * **Workspace** ([`model::Workspace`]) — the mutable half: f32 slot
 //!   buffers *and* u8 code slots (each allocated only for the domains
-//!   its slot actually holds), im2col scratch, quantized-activation
-//!   codes, GEMM staging, per-lane block scratch (f32 + i32 + u8), and
-//!   the logits matrix, all preallocated from the plan's footprint and
-//!   reused across `infer` calls. Batches at or below the plan capacity
+//!   its slot actually holds), the explicit-fallback im2col scratch
+//!   (grouped convs only — implicit convs stream per-lane panels, so
+//!   the former largest buffer shrinks to the fallback high-water
+//!   mark), quantized-activation codes, GEMM staging, per-lane block
+//!   scratch (f32 + i32 + u8 + panel), and the logits matrix, all
+//!   preallocated from the plan's footprint and reused across `infer`
+//!   calls. Batches at or below the plan capacity
 //!   only `resize` within reserved capacity and overwrite in place (a
 //!   larger batch grows the buffers once, then that size is the new
 //!   steady state). **Sequential steady-state `infer` performs zero
@@ -143,8 +146,26 @@
 //!
 //! ## Kernel architecture
 //!
-//! The GEMM kernel layer is built from three pieces:
+//! The GEMM kernel layer is built from four pieces:
 //!
+//! * **Implicit-GEMM panel packing** ([`gemm::ColTileSource`],
+//!   `gemm/panels.rs`) — convolutions never materialize the
+//!   `(N·OH·OW, C·k·k)` im2col matrix. The dispatch
+//!   ([`gemm::MixedGemm::run_implicit_into`] /
+//!   `run_implicit_quant_into`) walks the output positions in column
+//!   tiles; each tile is packed into a per-lane, cache-sized u8 panel —
+//!   gathered straight from the producer's NCHW code slot, quantized on
+//!   the fly from an f32 slot (the `n/alpha` reciprocal and clamp
+//!   bounds hoisted out of the gather), or, for 1×1 stride-1 pad-0
+//!   convs over a plan-retargeted **NHWC** code slot, aliased with no
+//!   gather and no copy. Every row class and micro-kernel block of the
+//!   layer sweeps the panel while it is L1/L2-hot, then the next tile
+//!   is packed — consumer-driven tiling instead of producer-driven
+//!   staging, the software analogue of streaming patches into the MAC
+//!   array. Parallelism rides the tile axis (tiles own disjoint output
+//!   positions). Grouped and in-place convs keep the explicit staged
+//!   path, so the workspace patch buffer shrinks to that fallback's
+//!   high-water mark (zero when every conv is implicit).
 //! * **Class-sorted layout** ([`gemm::SortedWeights`]) — at load time
 //!   each layer's rows are permuted so every scheme class occupies one
 //!   contiguous block (the scheme-code order PoT-4, Fixed-4, Fixed-8,
@@ -157,9 +178,11 @@
 //!   still write disjoint cells).
 //! * **Micro-kernel blocking** — dispatch hands each task chunk to
 //!   `GemmCore::run_block_tiled` in blocks of [`gemm::MICRO_ROWS`] (4)
-//!   rows: one activation tile load feeds the whole row block, cutting
-//!   activation bandwidth 4x vs the row-at-a-time kernel, with the
-//!   column loop still tiled at `ParallelConfig::tile_cols`.
+//!   rows over an [`gemm::ActsView`] (the full matrix or one packed
+//!   panel — the kernels cannot tell): one activation tile load feeds
+//!   the whole row block, cutting activation bandwidth 4x vs the
+//!   row-at-a-time kernel, with the column loop still tiled at
+//!   `ParallelConfig::tile_cols`.
 //! * **Runtime SIMD dispatch** ([`gemm::Isa`]) — the inner block dot
 //!   ([`gemm::dot_block`]) is selected once per engine from CPUID:
 //!   AVX2 (`vpmaddubsw`/`vpmaddwd`, 32 lanes), SSSE3/SSE4.1 (16 lanes),
@@ -170,11 +193,14 @@
 //!
 //! **Bit-exactness guarantee:** the three RMSMP cores accumulate dot
 //! products exactly in i32 and apply one dequantizing multiply per
-//! output cell with the same expression in every kernel shape, so
-//! scalar vs SSE vs AVX2, row vs block, any tile size, any chunk
-//! schedule, and any thread count all produce bit-identical outputs
-//! (pinned by `tests/test_simd.rs`). The f32-accumulating APoT baseline
-//! core stays on the scalar row loop and is bit-exact for a fixed
+//! output cell with the same expression in every kernel shape, and the
+//! implicit panel packer shares its gather loop (and its quantizer
+//! expression) with the explicit im2col fronts — so scalar vs SSE vs
+//! AVX2, row vs block, implicit vs explicit, any tile size, any panel
+//! width, any chunk schedule, and any thread count all produce
+//! bit-identical outputs (pinned by `tests/test_simd.rs` and
+//! `tests/test_implicit.rs`). The f32-accumulating APoT baseline core
+//! stays on the scalar row loop and is bit-exact for a fixed
 //! `tile_cols`, which the config pins.
 
 pub mod assign;

@@ -15,9 +15,20 @@
 //! inference proved a value's only consumers are quantized GEMMs, the
 //! GEMM runs with the fused requantization epilogue
 //! ([`crate::gemm::MixedGemm::run_partitioned_quant_into`]) and the
-//! value flows to the next layer as u8 activation codes (u8 im2col on
-//! the way in, `PlanOp::{Conv,Linear}::out_quant` on the way out); only
-//! the input edge, Add/Gap operands, and the logits run through f32.
+//! value flows to the next layer as u8 activation codes
+//! (`PlanOp::{Conv,Linear}::in_codes`/`out_quant`); only the input
+//! edge, Add/Gap operands, and the logits run through f32.
+//!
+//! Convolutions are also **implicit**: non-grouped convs never
+//! materialize an im2col matrix. The executor hands the GEMM a
+//! [`ColTileSource`] over the input slot and the dispatch
+//! ([`crate::gemm::MixedGemm::run_implicit_into`] /
+//! `run_implicit_quant_into`) packs cache-resident column-tile panels
+//! on the fly — gathering u8 codes from the NCHW slot, quantizing f32
+//! during the gather, or (1×1 stride-1 pad-0 convs over an
+//! NHWC-retargeted slot) aliasing the slot outright with no copy.
+//! Grouped convs and in-place (input == out) convs keep the explicit
+//! staged path through the workspace patch buffer.
 //!
 //! The original name-resolving interpreter survives as
 //! [`Executor::reference_infer`]: the bit-exact oracle the differential
@@ -42,7 +53,10 @@ use std::time::Instant;
 
 use crate::ensure;
 use crate::err;
-use crate::gemm::{requant_row, Isa, MixedGemm, OutLayout, PackedActs, ParallelConfig};
+use crate::gemm::{
+    requant_row, ColTileSource, Isa, MixedGemm, OutLayout, PackedActs, ParallelConfig,
+    PatchGeometry,
+};
 use crate::quant::tensor::Tensor4;
 use crate::quant::Mat;
 use crate::util::error::Result;
@@ -90,7 +104,10 @@ impl Buf {
 /// batch time goes. On the integer-resident path the requantization
 /// epilogue is fused into the GEMM, so `quantize_ns` and `epilogue_ns`
 /// collapse toward zero and their cost appears (much reduced) inside
-/// `gemm_ns`.
+/// `gemm_ns`; on the implicit-GEMM conv path the im2col gather (and the
+/// f32 path's quantize) are fused into the dispatch's panel packing
+/// too, so for non-grouped convs `im2col_ns` also collapses into
+/// `gemm_ns` and only the grouped fallback still reports it.
 #[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
 pub struct StageTimes {
     /// Activation quantization (f32 → u8 codes) ahead of a GEMM, and
@@ -320,12 +337,118 @@ impl Executor {
                     chunks,
                     in_codes,
                     out_quant,
+                    implicit,
+                    panel_positions,
+                    in_nhwc,
+                    out_nhwc,
                 } => {
                     let lw = &weights.layers[*layer];
                     let inp_len = n * in_c * in_h * in_w;
                     let hw = oh * ow;
                     let batch = n * hw;
-                    if *groups == 1 {
+                    if *implicit {
+                        // implicit GEMM: no materialized im2col, no f32
+                        // staging on the integer path — the dispatch
+                        // streams the input through per-lane panels
+                        // (aliasing the slot outright when it is NHWC)
+                        let geo = PatchGeometry::new(
+                            n, *in_c, *in_h, *in_w, 0, *in_c, *k, *stride, *pad,
+                        );
+                        let t = Instant::now();
+                        match out_quant {
+                            Some(rq) => {
+                                let layout = if *out_nhwc {
+                                    OutLayout::RowMajor { cols: lw.out_ch }
+                                } else {
+                                    OutLayout::Nchw { channels: lw.out_ch, hw }
+                                };
+                                let out_len = n * lw.out_ch * hw;
+                                if *in_codes {
+                                    let (inp, outv) =
+                                        slot_pair(&mut ws.code_slots, *input, *out);
+                                    outv.resize(out_len, 0);
+                                    let src = code_source(
+                                        &inp[..inp_len],
+                                        geo,
+                                        *in_nhwc,
+                                        lw.a_alpha,
+                                        act_bits,
+                                    );
+                                    gemm.run_implicit_quant_into(
+                                        &src,
+                                        &lw.sorted,
+                                        chunks,
+                                        &lw.bias,
+                                        *rq,
+                                        layout,
+                                        *panel_positions,
+                                        row_parallel,
+                                        &mut ws.scratch,
+                                        &mut outv[..out_len],
+                                    );
+                                } else {
+                                    ws.code_slots[*out].resize(out_len, 0);
+                                    let src = ColTileSource::F32 {
+                                        data: &ws.slots[*input][..inp_len],
+                                        geo,
+                                        alpha: lw.a_alpha,
+                                        bits: act_bits,
+                                    };
+                                    gemm.run_implicit_quant_into(
+                                        &src,
+                                        &lw.sorted,
+                                        chunks,
+                                        &lw.bias,
+                                        *rq,
+                                        layout,
+                                        *panel_positions,
+                                        row_parallel,
+                                        &mut ws.scratch,
+                                        &mut ws.code_slots[*out][..out_len],
+                                    );
+                                }
+                            }
+                            None => {
+                                ws.stage.resize(batch, lw.rows);
+                                if *in_codes {
+                                    let src = code_source(
+                                        &ws.code_slots[*input][..inp_len],
+                                        geo,
+                                        *in_nhwc,
+                                        lw.a_alpha,
+                                        act_bits,
+                                    );
+                                    gemm.run_implicit_into(
+                                        &src,
+                                        &lw.sorted,
+                                        chunks,
+                                        *panel_positions,
+                                        row_parallel,
+                                        &mut ws.scratch,
+                                        &mut ws.stage,
+                                    );
+                                } else {
+                                    let src = ColTileSource::F32 {
+                                        data: &ws.slots[*input][..inp_len],
+                                        geo,
+                                        alpha: lw.a_alpha,
+                                        bits: act_bits,
+                                    };
+                                    gemm.run_implicit_into(
+                                        &src,
+                                        &lw.sorted,
+                                        chunks,
+                                        *panel_positions,
+                                        row_parallel,
+                                        &mut ws.scratch,
+                                        &mut ws.stage,
+                                    );
+                                }
+                            }
+                        }
+                        st.gemm_ns += t.elapsed().as_nanos() as u64;
+                        macs += (batch * lw.rows * lw.cols) as u64;
+                    } else if *groups == 1 {
                         if *in_codes {
                             // integer-resident input: unroll the u8 code
                             // slot straight into the GEMM operand — no
@@ -842,7 +965,7 @@ fn add_slots(slots: &mut [Vec<f32>], a: usize, b: usize, out: usize, len: usize,
 }
 
 /// Disjoint (mutable, shared) borrows of two slots, `w != r`.
-fn two_slots(slots: &mut [Vec<f32>], w: usize, r: usize) -> (&mut Vec<f32>, &Vec<f32>) {
+fn two_slots<T>(slots: &mut [Vec<T>], w: usize, r: usize) -> (&mut Vec<T>, &Vec<T>) {
     debug_assert_ne!(w, r);
     if w < r {
         let (lo, hi) = slots.split_at_mut(r);
@@ -850,5 +973,33 @@ fn two_slots(slots: &mut [Vec<f32>], w: usize, r: usize) -> (&mut Vec<f32>, &Vec
     } else {
         let (lo, hi) = slots.split_at_mut(w);
         (&mut hi[0], &lo[r])
+    }
+}
+
+/// Disjoint (shared input, mutable output) borrows of two code slots —
+/// the implicit GEMM reads the producer slot while its epilogue writes
+/// the consumer slot (`input != out`, enforced at plan compile: aliased
+/// convs fall back to the staged path).
+fn slot_pair<T>(slots: &mut [Vec<T>], input: usize, out: usize) -> (&Vec<T>, &mut Vec<T>) {
+    let (w, r) = two_slots(slots, out, input);
+    (r, w)
+}
+
+/// The implicit-GEMM activation source for an integer-resident conv
+/// input: the no-copy NHWC alias when the plan retargeted the slot
+/// (unit convs), else the NCHW code gather.
+fn code_source<'a>(
+    codes: &'a [u8],
+    geo: PatchGeometry,
+    nhwc: bool,
+    alpha: f32,
+    bits: u32,
+) -> ColTileSource<'a> {
+    if nhwc {
+        // a unit conv's patch matrix IS the NHWC buffer: positions are
+        // rows, channels are columns
+        ColTileSource::Packed { codes, rows: geo.batch(), cols: geo.cols(), alpha, bits }
+    } else {
+        ColTileSource::Codes { data: codes, geo, alpha, bits }
     }
 }

@@ -5,12 +5,14 @@
 //! columns are the receptive-field values; the weight matrix rows are the
 //! filters. Grouped conv (MobileNet depthwise) unrolls per group.
 
+use crate::gemm::panels::{pack_patch_rows, PatchGeometry};
 use crate::quant::tensor::Tensor4;
 use crate::quant::Mat;
 
-/// Output spatial size for SAME-style padding.
+/// Output spatial size for SAME-style padding (the panel packer's
+/// formula — one definition shared with the implicit-GEMM path).
 pub fn out_dim(in_dim: usize, k: usize, stride: usize, pad: usize) -> usize {
-    (in_dim + 2 * pad - k) / stride + 1
+    crate::gemm::panels::out_dim(in_dim, k, stride, pad)
 }
 
 /// Unroll `x` into patch rows for a (k x k, stride, pad) conv.
@@ -108,20 +110,26 @@ pub fn im2col_range_into(
     pad: usize,
     out: &mut Mat,
 ) -> (usize, usize) {
-    let oh = out_dim(h, k, stride, pad);
-    let ow = out_dim(w, k, stride, pad);
-    out.resize(n * oh * ow, nc * k * k);
-    im2col_range_generic(data, 0.0f32, n, c, h, w, c0, nc, k, stride, pad, &mut out.data);
-    (oh, ow)
+    let g = PatchGeometry::new(n, c, h, w, c0, nc, k, stride, pad);
+    out.resize(g.batch(), g.cols());
+    pack_patch_rows(data, 0.0f32, &g, 0, g.batch(), &mut out.data);
+    (g.oh, g.ow)
 }
 
 /// [`im2col_range_into`] over **activation codes**: unrolls a u8 NCHW
 /// code slot into GEMM-ready patch rows, written into `out` (resized in
-/// place, reused across calls). This is the integer-resident datapath's
-/// im2col — the codes flow through untouched, and padding positions get
-/// the literal code `0`, which *is* the code of the value 0.0 (the
-/// activation quantizer is unsigned with its zero point at code 0), so
-/// no zero-point arithmetic is needed. Returns (out_h, out_w).
+/// place, reused across calls). This is the explicit fallback of the
+/// integer-resident datapath's im2col — the codes flow through
+/// untouched, and padding positions get the literal code `0`, which
+/// *is* the code of the value 0.0 (the activation quantizer is unsigned
+/// with its zero point at code 0), so no zero-point arithmetic is
+/// needed. Returns (out_h, out_w).
+///
+/// Both fronts delegate to the per-tile panel packer
+/// ([`pack_patch_rows`]) over the full row range — the same gather loop
+/// the implicit-GEMM dispatch runs per column tile — so the explicit
+/// and implicit paths move the same element to the same cell by
+/// construction.
 pub fn im2col_codes_range_into(
     data: &[u8],
     n: usize,
@@ -135,68 +143,10 @@ pub fn im2col_codes_range_into(
     pad: usize,
     out: &mut Vec<u8>,
 ) -> (usize, usize) {
-    let oh = out_dim(h, k, stride, pad);
-    let ow = out_dim(w, k, stride, pad);
-    out.resize(n * oh * ow * nc * k * k, 0);
-    im2col_range_generic(data, 0u8, n, c, h, w, c0, nc, k, stride, pad, out);
-    (oh, ow)
-}
-
-/// The element-type-generic im2col kernel behind the f32 and u8-code
-/// fronts: identical loop structure, so the code path produces exactly
-/// the patch the float path would (value for value / code for code).
-/// `out` must be pre-sized to `n*oh*ow * nc*k*k`; every element is
-/// written (`zero` at padding positions).
-#[allow(clippy::too_many_arguments)]
-fn im2col_range_generic<T: Copy>(
-    data: &[T],
-    zero: T,
-    n: usize,
-    c: usize,
-    h: usize,
-    w: usize,
-    c0: usize,
-    nc: usize,
-    k: usize,
-    stride: usize,
-    pad: usize,
-    out: &mut [T],
-) {
-    assert_eq!(data.len(), n * c * h * w, "NCHW shape/data mismatch");
-    assert!(c0 + nc <= c, "channel range out of bounds");
-    let oh = out_dim(h, k, stride, pad);
-    let ow = out_dim(w, k, stride, pad);
-    let cols = nc * k * k;
-    assert_eq!(out.len(), n * oh * ow * cols, "output size mismatch");
-    for img in 0..n {
-        for oy in 0..oh {
-            for ox in 0..ow {
-                let row = (img * oh + oy) * ow + ox;
-                let dst = &mut out[row * cols..(row + 1) * cols];
-                let mut ci = 0;
-                for dc in 0..nc {
-                    let ch = c0 + dc;
-                    let plane = (img * c + ch) * h * w;
-                    for ky in 0..k {
-                        let iy = (oy * stride + ky) as isize - pad as isize;
-                        for kx in 0..k {
-                            let ix = (ox * stride + kx) as isize - pad as isize;
-                            dst[ci] = if iy >= 0
-                                && (iy as usize) < h
-                                && ix >= 0
-                                && (ix as usize) < w
-                            {
-                                data[plane + iy as usize * w + ix as usize]
-                            } else {
-                                zero
-                            };
-                            ci += 1;
-                        }
-                    }
-                }
-            }
-        }
-    }
+    let g = PatchGeometry::new(n, c, h, w, c0, nc, k, stride, pad);
+    out.resize(g.batch() * g.cols(), 0);
+    pack_patch_rows(data, 0u8, &g, 0, g.batch(), out);
+    (g.oh, g.ow)
 }
 
 /// Fold GEMM output (n*oh*ow, out_ch) back into NCHW.

@@ -25,6 +25,6 @@ pub mod workspace;
 
 pub use graph::{Executor, Op, StageTimes};
 pub use manifest::Manifest;
-pub use plan::{Plan, PlanOp};
+pub use plan::{Plan, PlanOp, PlanOptions};
 pub use weights::{LayerWeights, ModelWeights};
 pub use workspace::Workspace;

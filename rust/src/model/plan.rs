@@ -66,6 +66,12 @@ pub struct SlotSpec {
     /// codes of the consuming layer's quantizer (the workspace allocates
     /// its u8 code buffer).
     pub holds_codes: bool,
+    /// The code buffer is stored NHWC (row-major positions × channels)
+    /// instead of NCHW: the layout-retarget pass proved every code
+    /// writer is a non-grouped implicit conv and every code reader a
+    /// 1×1 stride-1 pad-0 conv, so the readers alias the slot directly
+    /// as their GEMM activation panel — no gather, no copy.
+    pub code_nhwc: bool,
 }
 
 /// One compiled op: slot ids + all geometry the runner needs, resolved
@@ -94,7 +100,7 @@ pub enum PlanOp {
         /// Precompiled GEMM task schedule (empty for grouped conv, which
         /// dispatches row-by-row per group).
         chunks: Vec<TaskChunk>,
-        /// The input slot is integer-resident: im2col reads u8 codes
+        /// The input slot is integer-resident: the GEMM reads u8 codes
         /// directly, skipping the f32 unroll + requantize.
         in_codes: bool,
         /// Integer-resident output: the GEMM epilogue maps accumulators
@@ -103,6 +109,22 @@ pub enum PlanOp {
         /// f32 fallback (consumer is Add/Gap/logits or consumers
         /// disagree on scale).
         out_quant: Option<Requant>,
+        /// Run as an implicit GEMM: the executor streams the input
+        /// through column-tile panels
+        /// ([`crate::gemm::MixedGemm::run_implicit_into`]) instead of
+        /// materializing the im2col matrix. Compiled for non-grouped,
+        /// non-aliased (input != out) convs of an implicit-enabled plan.
+        implicit: bool,
+        /// Packed panel width (output positions per column tile), sized
+        /// so one panel (`panel_positions * cols` u8 codes) stays
+        /// cache-resident. 0 on the explicit path.
+        panel_positions: usize,
+        /// The input code slot is stored NHWC (see
+        /// [`SlotSpec::code_nhwc`]): alias it as the activation panel.
+        in_nhwc: bool,
+        /// Emit output codes NHWC (RowMajor scatter) instead of NCHW —
+        /// every consumer is a unit conv that will alias them.
+        out_nhwc: bool,
     },
     Linear {
         layer: usize,
@@ -145,9 +167,15 @@ pub struct Footprint {
     pub slot_elems: Vec<usize>,
     /// Per-slot u8 activation-code elements (0 for f32-only slots).
     pub code_slot_elems: Vec<usize>,
-    /// im2col patch-matrix f32 elements.
+    /// im2col patch-matrix f32 elements — only the ops still on the
+    /// explicit path (grouped convs, or every conv when the plan was
+    /// compiled without implicit GEMM) stage through it, so for an
+    /// implicit plan this is the grouped-conv fallback high-water mark
+    /// (0 when every conv runs implicitly).
     pub patch_elems: usize,
-    /// Quantized activation codes (u8).
+    /// Quantized activation codes (u8) — explicit-path convs and the
+    /// linear ops; implicit convs stream through per-lane panels
+    /// instead.
     pub acts_elems: usize,
     /// GEMM/Gap staging matrix f32 elements.
     pub gemm_out_elems: usize,
@@ -155,6 +183,9 @@ pub struct Footprint {
     /// block (an f32 output block + an i32 accumulator block of this
     /// many elements each).
     pub lane_elems: usize,
+    /// Per-lane implicit-GEMM panel bytes (u8 activation codes for one
+    /// `panel_positions`-wide column tile of the widest implicit conv).
+    pub panel_elems: usize,
     /// Logits output matrix f32 elements.
     pub logits_elems: usize,
 }
@@ -170,13 +201,14 @@ impl Footprint {
     }
 
     /// Bytes of the shared scratch (patches + acts + staging + lanes +
-    /// logits). Each GEMM lane holds an f32 block, an i32 block, and a
-    /// u8 code block for the fused requantization epilogue.
+    /// logits). Each GEMM lane holds an f32 block, an i32 block, a u8
+    /// code block for the fused requantization epilogue, and a u8
+    /// implicit-GEMM panel.
     pub fn scratch_bytes(&self) -> usize {
         4 * self.patch_elems
             + self.acts_elems
             + 4 * self.gemm_out_elems
-            + self.lanes * self.lane_elems * (4 + 4 + 1)
+            + self.lanes * (self.lane_elems * (4 + 4 + 1) + self.panel_elems)
             + 4 * self.logits_elems
     }
 
@@ -199,6 +231,10 @@ pub struct Plan {
     /// u8 activation codes between GEMMs (`false` = every edge f32, the
     /// pre-fusion baseline kept for benchmarking).
     pub integer_resident: bool,
+    /// Whether non-grouped convs were compiled for the implicit-GEMM
+    /// path (`false` = the explicit-im2col baseline kept for
+    /// benchmarking).
+    pub implicit: bool,
     pub act_bits: u32,
     pub input_slot: SlotId,
     /// Expected (c, h, w) of the inference input.
@@ -215,7 +251,35 @@ pub struct Plan {
     pub max_acts_per_image: usize,
     pub max_gemm_rows_per_image: usize,
     pub max_gemm_out_per_image: usize,
+    /// Widest implicit-GEMM panel (u8 elements, absolute — a panel's
+    /// size is batch-independent) and its position count.
+    pub max_panel_elems: usize,
+    pub max_panel_positions: usize,
 }
+
+/// Compile-time dataflow toggles (both default on — the production
+/// path). The off positions keep the older dataflows compilable as
+/// benchmark baselines and differential-test twins.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct PlanOptions {
+    /// Run output-domain inference (u8 codes between GEMMs).
+    pub integer_resident: bool,
+    /// Compile non-grouped convs for the implicit-GEMM panel path
+    /// (`false` = explicit im2col through the workspace patch buffer).
+    pub implicit: bool,
+}
+
+impl Default for PlanOptions {
+    fn default() -> PlanOptions {
+        PlanOptions { integer_resident: true, implicit: true }
+    }
+}
+
+/// Target size of one implicit-GEMM activation panel: positions are
+/// chosen so `panel_positions * patch_cols` u8 codes land around half an
+/// L1d next to the weight tiles, clamped to keep at least a micro-
+/// kernel block's worth of positions and at most a reasonable tile.
+const PANEL_BYTES: usize = 32 * 1024;
 
 impl Plan {
     /// Compile `manifest.program` against `weights`. `capacity` sizes the
@@ -227,14 +291,14 @@ impl Plan {
         capacity: usize,
         cfg: &ParallelConfig,
     ) -> Result<Plan> {
-        Plan::compile_with(manifest, weights, capacity, cfg, true)
+        Plan::compile_opts(manifest, weights, capacity, cfg, PlanOptions::default())
     }
 
-    /// [`Plan::compile`] with the integer-resident dataflow toggleable:
-    /// `integer_resident = false` skips output-domain inference, keeping
-    /// every inter-layer edge in f32 (the pre-fusion dataflow — the
-    /// baseline `bench_runtime` reports the requantization-fusion
-    /// speedup against, and the f32 side of the differential tests).
+    /// [`Plan::compile`] with the integer-resident dataflow toggleable
+    /// (the implicit-GEMM path stays on): `integer_resident = false`
+    /// skips output-domain inference, keeping every inter-layer edge in
+    /// f32 — the f32 side of the differential tests and the
+    /// requantization-fusion bench baseline.
     pub fn compile_with(
         manifest: &Manifest,
         weights: &ModelWeights,
@@ -242,6 +306,27 @@ impl Plan {
         cfg: &ParallelConfig,
         integer_resident: bool,
     ) -> Result<Plan> {
+        Plan::compile_opts(
+            manifest,
+            weights,
+            capacity,
+            cfg,
+            PlanOptions { integer_resident, ..PlanOptions::default() },
+        )
+    }
+
+    /// [`Plan::compile`] with every dataflow toggle explicit (see
+    /// [`PlanOptions`]); `implicit = false` compiles the
+    /// explicit-im2col conv path — the baseline `bench_runtime` reports
+    /// the implicit-GEMM speedup against.
+    pub fn compile_opts(
+        manifest: &Manifest,
+        weights: &ModelWeights,
+        capacity: usize,
+        cfg: &ParallelConfig,
+        opts: PlanOptions,
+    ) -> Result<Plan> {
+        let integer_resident = opts.integer_resident;
         ensure!(
             manifest.input_shape.len() == 4,
             "manifest input_shape must be NCHW, got {:?}",
@@ -276,6 +361,7 @@ impl Plan {
             // quantizes (the f32 entry edge of the pipeline)
             holds_f32: true,
             holds_codes: false,
+            code_nhwc: false,
         });
         index.insert("in0".to_string(), input_slot);
 
@@ -297,6 +383,8 @@ impl Plan {
         let mut max_acts = 0usize;
         let mut max_gemm_rows = 0usize;
         let mut max_gemm_out = 0usize;
+        let mut max_panel_elems = 0usize;
+        let mut max_panel_positions = 0usize;
 
         for op in &manifest.program {
             match op {
@@ -343,9 +431,30 @@ impl Plan {
                     let ow = out_dim(w, k, stride, pad);
                     let out_kind = SlotKind::T4 { c: lw.out_ch, h: oh, w: ow };
                     let out_id = define(&mut slots, &mut index, out, out_kind);
-                    max_patch = max_patch.max(oh * ow * lw.cols);
-                    max_acts = max_acts.max(oh * ow * lw.cols);
-                    max_gemm_rows = max_gemm_rows.max(oh * ow);
+                    // an in-place conv (input slot == output slot) cannot
+                    // stream: the implicit GEMM reads the input while
+                    // writing the output, so it keeps the staged path
+                    let implicit = opts.implicit && groups == 1 && in_id != out_id;
+                    let panel_positions = if implicit {
+                        // cache-sized, but never wider than the op's
+                        // whole batch at plan capacity — a panel bigger
+                        // than the operand is pure waste
+                        (PANEL_BYTES / lw.cols.max(1))
+                            .clamp(8, 256)
+                            .min((oh * ow * capacity).max(1))
+                    } else {
+                        0
+                    };
+                    if implicit {
+                        // implicit convs never touch the patch/acts
+                        // staging — they stream per-lane panels
+                        max_panel_elems = max_panel_elems.max(panel_positions * lw.cols);
+                        max_panel_positions = max_panel_positions.max(panel_positions);
+                    } else {
+                        max_patch = max_patch.max(oh * ow * lw.cols);
+                        max_acts = max_acts.max(oh * ow * lw.cols);
+                        max_gemm_rows = max_gemm_rows.max(oh * ow);
+                    }
                     max_gemm_out = max_gemm_out.max(oh * ow * lw.out_ch);
                     let chunks = if groups == 1 {
                         chunk_tasks(&layer_parts[li], chunk_rows)
@@ -371,6 +480,10 @@ impl Plan {
                         chunks,
                         in_codes: false,
                         out_quant: None,
+                        implicit,
+                        panel_positions,
+                        in_nhwc: false,
+                        out_nhwc: false,
                     });
                 }
                 OpMeta::Linear { layer, input, out } => {
@@ -447,6 +560,9 @@ impl Plan {
 
         if integer_resident {
             infer_domains(&mut ops, &mut slots, weights, manifest.act_bits, logits_slot);
+            if opts.implicit {
+                infer_code_layouts(&mut ops, &mut slots);
+            }
         } else {
             for op in &ops {
                 slots[op_write(op).0].holds_f32 = true;
@@ -458,6 +574,7 @@ impl Plan {
             capacity,
             chunk_rows,
             integer_resident,
+            implicit: opts.implicit,
             act_bits: manifest.act_bits,
             input_slot,
             input_chw,
@@ -470,6 +587,8 @@ impl Plan {
             max_acts_per_image: max_acts,
             max_gemm_rows_per_image: max_gemm_rows,
             max_gemm_out_per_image: max_gemm_out,
+            max_panel_elems,
+            max_panel_positions,
         })
     }
 
@@ -523,7 +642,12 @@ impl Plan {
             patch_elems: self.max_patch_per_image * n,
             acts_elems: self.max_acts_per_image * n,
             gemm_out_elems: self.max_gemm_out_per_image * n,
-            lane_elems: MICRO_ROWS * self.max_gemm_rows_per_image * n,
+            // lanes serve both the explicit blocks (MICRO_ROWS x full
+            // batch) and the implicit blocks (MICRO_ROWS x panel
+            // positions) — size for whichever is wider
+            lane_elems: MICRO_ROWS
+                * (self.max_gemm_rows_per_image * n).max(self.max_panel_positions),
+            panel_elems: self.max_panel_elems,
             logits_elems: self.logits_cols * n,
         }
     }
@@ -537,14 +661,15 @@ impl Plan {
         let _ = writeln!(
             s,
             "plan {}: {} ops, {} slots, capacity batch {}, chunk rows {}, act bits {}, \
-             dataflow {}",
+             dataflow {}, conv {}",
             self.model,
             self.ops.len(),
             self.slots.len(),
             self.capacity,
             self.chunk_rows,
             self.act_bits,
-            if self.integer_resident { "integer-resident" } else { "f32-resident" }
+            if self.integer_resident { "integer-resident" } else { "f32-resident" },
+            if self.implicit { "implicit-gemm" } else { "explicit-im2col" }
         );
         let _ = writeln!(s, "slots:");
         for (i, spec) in self.slots.iter().enumerate() {
@@ -552,9 +677,13 @@ impl Plan {
                 SlotKind::T4 { c, h, w } => format!("T4 {c}x{h}x{w}"),
                 SlotKind::M { cols } => format!("M  {cols}"),
             };
-            let domain = match (spec.holds_f32, spec.holds_codes) {
-                (true, true) => "f32+u8",
-                (false, true) => "u8",
+            let domain = match (spec.holds_f32, spec.holds_codes, spec.code_nhwc) {
+                (true, true, false) => "f32+u8",
+                (true, true, true) => "f32+u8~",
+                (false, true, false) => "u8",
+                // '~' marks an NHWC-retargeted code buffer (unit-conv
+                // alias fast path)
+                (false, true, true) => "u8~",
                 _ => "f32",
             };
             let _ = writeln!(
@@ -582,15 +711,28 @@ impl Plan {
                     chunks,
                     in_codes,
                     out_quant,
+                    implicit,
+                    panel_positions,
+                    in_nhwc,
+                    out_nhwc,
                     ..
                 } => {
                     let lw = &weights.layers[*layer];
+                    let path = match (implicit, in_nhwc) {
+                        (true, true) => format!(" alias panel={panel_positions}"),
+                        (true, false) => format!(" implicit panel={panel_positions}"),
+                        (false, _) => String::new(),
+                    };
                     format!(
                         "conv   {:<12} s{input}{} -> s{out}{}  {}x{} k{k} s{stride} p{pad} \
-                         g{groups} oh={oh} ow={ow} chunks={}{}",
+                         g{groups} oh={oh} ow={ow} chunks={}{}{path}",
                         lw.name,
                         if *in_codes { "[u8]" } else { "" },
-                        if out_quant.is_some() { "[u8]" } else { "" },
+                        match (out_quant.is_some(), *out_nhwc) {
+                            (true, true) => "[u8~]",
+                            (true, false) => "[u8]",
+                            _ => "",
+                        },
                         lw.rows,
                         lw.cols,
                         chunks.len(),
@@ -623,13 +765,14 @@ impl Plan {
         let _ = writeln!(
             s,
             "workspace (lanes={}): slots {} B + patches {} B + acts {} B + staging {} B + \
-             lane scratch {} B + logits {} B = {} B total",
+             lane scratch {} B + panels {} B + logits {} B = {} B total",
             fp.lanes,
             fp.total_slot_bytes(),
             4 * fp.patch_elems,
             fp.acts_elems,
             4 * fp.gemm_out_elems,
             fp.lanes * fp.lane_elems * 9,
+            fp.lanes * fp.panel_elems,
             4 * fp.logits_elems,
             fp.total_bytes()
         );
@@ -657,10 +800,11 @@ fn define(
                 name: name.to_string(),
                 kind,
                 per_image: kind.per_image(),
-                // domains are assigned by the inference pass once every
-                // write and read is known
+                // domains and code layouts are assigned by the inference
+                // passes once every write and read is known
                 holds_f32: false,
                 holds_codes: false,
+                code_nhwc: false,
             });
             index.insert(name.to_string(), id);
             id
@@ -779,6 +923,75 @@ fn infer_domains(
             slots[s].holds_codes = true;
         } else {
             slots[s].holds_f32 = true;
+        }
+    }
+}
+
+/// Code-layout retargeting: after domain inference, decide per code slot
+/// whether the u8 buffer can be stored **NHWC** (row-major positions ×
+/// channels) instead of NCHW. NHWC is the 1×1 stride-1 pad-0 fast path:
+/// a unit conv's im2col matrix *is* the NHWC buffer, so an NHWC code
+/// slot is aliased directly as the consumer's GEMM activation panel —
+/// no gather, no copy, and the producer pays nothing (its fused
+/// epilogue scatters RowMajor instead of NCHW, the same number of
+/// writes).
+///
+/// A slot is retargeted iff every op that writes codes into it is a
+/// non-grouped implicit conv (its block epilogue can scatter either
+/// layout) and every op that reads codes from it is a non-grouped
+/// implicit unit conv. Any other participant — grouped conv (writes
+/// row-by-row NCHW planes / gathers per channel group), k > 1 reader,
+/// strided or padded reader — pins the slot to NCHW and the implicit
+/// gather path.
+fn infer_code_layouts(ops: &mut [PlanOp], slots: &mut [SlotSpec]) {
+    let mut nhwc: Vec<bool> = slots.iter().map(|s| s.holds_codes).collect();
+    for op in ops.iter() {
+        match op {
+            PlanOp::Conv {
+                input,
+                out,
+                out_quant,
+                in_codes,
+                implicit,
+                groups,
+                k,
+                stride,
+                pad,
+                ..
+            } => {
+                if out_quant.is_some() && !(*implicit && *groups == 1) {
+                    nhwc[*out] = false;
+                }
+                let unit_reader =
+                    *implicit && *groups == 1 && *k == 1 && *stride == 1 && *pad == 0;
+                if *in_codes && !unit_reader {
+                    nhwc[*input] = false;
+                }
+            }
+            PlanOp::Linear { input, out, out_quant, in_codes, .. } => {
+                // linear code buffers are already row-major and consumed
+                // by the linear copy path; leave their layout alone
+                if out_quant.is_some() {
+                    nhwc[*out] = false;
+                }
+                if *in_codes {
+                    nhwc[*input] = false;
+                }
+            }
+            PlanOp::Add { .. } | PlanOp::Gap { .. } => {}
+        }
+    }
+    for (spec, flag) in slots.iter_mut().zip(&nhwc) {
+        spec.code_nhwc = *flag;
+    }
+    for op in ops.iter_mut() {
+        if let PlanOp::Conv { input, out, out_quant, in_codes, in_nhwc, out_nhwc, .. } = op {
+            if out_quant.is_some() {
+                *out_nhwc = nhwc[*out];
+            }
+            if *in_codes {
+                *in_nhwc = nhwc[*input];
+            }
         }
     }
 }

@@ -33,14 +33,17 @@ pub struct Workspace {
     /// inference keeps in f32 (and vice versa: a codes-only slot's f32
     /// buffer stays empty).
     pub(crate) code_slots: Vec<Vec<u8>>,
-    /// im2col patch matrix, reused by every conv.
+    /// im2col patch matrix — the explicit-path fallback (grouped convs;
+    /// empty-capacity when every conv in the plan runs implicitly).
     pub(crate) patches: Mat,
-    /// Quantized activation codes, reused by every conv/linear.
+    /// Quantized activation codes, reused by the explicit-path convs
+    /// and the linear ops (implicit convs stream per-lane panels).
     pub(crate) acts: PackedActs,
     /// GEMM output / Gap staging matrix.
     pub(crate) stage: Mat,
     /// Per-lane GEMM micro-kernel scratch (a `MICRO_ROWS x batch` f32
-    /// output block + i32 accumulator block per lane).
+    /// output block + i32 accumulator block + u8 code block per lane,
+    /// plus the implicit-GEMM activation panel).
     pub(crate) scratch: GemmScratch,
     /// Logits returned by `infer` (borrowed out, overwritten per call).
     pub(crate) logits: Mat,
@@ -65,7 +68,7 @@ impl Workspace {
             patches: mat_with_capacity(fp.patch_elems),
             acts: PackedActs::with_capacity(fp.acts_elems),
             stage: mat_with_capacity(fp.gemm_out_elems),
-            scratch: GemmScratch::with_capacity(fp.lanes, fp.lane_elems),
+            scratch: GemmScratch::with_capacity(fp.lanes, fp.lane_elems, fp.panel_elems),
             logits: mat_with_capacity(fp.logits_elems),
         }
     }

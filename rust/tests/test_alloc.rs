@@ -294,6 +294,19 @@ fn steady_state_infer_performs_zero_allocations() {
             .filter(|s| s.holds_codes && !s.holds_f32)
             .count();
         assert!(codes_slots >= 2, "expected b0/b1 integer-resident, got {codes_slots}");
+        // ...and that its non-grouped convs run the implicit-GEMM panel
+        // path, so the zero-allocation window below pins the implicit
+        // packer (per-lane panel reuse included), not just the explicit
+        // staging buffers
+        let implicit_convs = exec
+            .plan()
+            .ops
+            .iter()
+            .filter(|op| {
+                matches!(op, rmsmp::model::PlanOp::Conv { implicit: true, .. })
+            })
+            .count();
+        assert!(implicit_convs >= 2, "expected implicit convs, got {implicit_convs}");
     }
     assert_zero_alloc_steady_state("integer-resident", manifest, weights);
 }

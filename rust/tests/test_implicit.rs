@@ -1,0 +1,455 @@
+//! Implicit-GEMM pipeline invariants: the panel-packed conv path (no
+//! materialized im2col buffer) must produce **bit-identical** logits and
+//! per-slot activation codes to the reference interpreter and to the
+//! explicit-im2col plan (`PlanOptions { implicit: false }` — the PR 4
+//! dataflow), across conv stride/pad, grouped conv, the 1×1 stride-1
+//! pad-0 NHWC alias fast path, batch {1, 5, 8}, threads {1, 8}, and the
+//! scalar vs native SIMD kernels. Also pins the plan-compile decisions
+//! (which convs run implicitly, which slots retarget to NHWC) and the
+//! workspace footprint win from dropping the patches slot.
+
+use std::sync::Arc;
+
+use rmsmp::gemm::{Isa, PackedWeights, ParallelConfig, SortedWeights};
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::model::{Executor, Plan, PlanOp, PlanOptions};
+use rmsmp::prop_assert;
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::prop::{check, Gen};
+use rmsmp::util::rng::Rng;
+
+const SCHEMES: [Scheme; 4] = [
+    Scheme::PotW4A4,
+    Scheme::FixedW4A4,
+    Scheme::FixedW8A4,
+    Scheme::ApotW4A4,
+];
+
+#[allow(clippy::too_many_arguments)]
+fn rand_layer(
+    g: &mut Gen,
+    name: &str,
+    kind: &str,
+    rows: usize,
+    cols: usize,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> LayerWeights {
+    let w = Mat::from_vec(rows, cols, g.vec_normal(rows * cols, rows * cols, 0.5));
+    let schemes: Vec<Scheme> = (0..rows).map(|_| *g.choice(&SCHEMES)).collect();
+    let bias = g.vec_normal(rows, rows, 0.1);
+    let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
+    LayerWeights {
+        name: name.into(),
+        kind: kind.into(),
+        rows,
+        cols,
+        out_ch: conv.0,
+        in_ch: conv.1,
+        kh: conv.2,
+        kw: conv.3,
+        stride,
+        pad,
+        groups,
+        // non-unit clip scales so the fused epilogues' requantization
+        // scale actually differs per edge
+        a_alpha: g.f32_in(0.6, 1.4),
+        scheme: schemes,
+        alpha,
+        bias,
+        w,
+        packed,
+        sorted,
+    }
+}
+
+/// Three topologies, each exercising a different implicit-path shape:
+///   0 — conv(k3, random stride/pad, relu) → conv(k3) → gap → fc
+///       (plain implicit chain with one integer edge)
+///   1 — conv(k3) → depthwise conv (groups = channels, explicit
+///       fallback) → conv(k3) → gap → fc (codes in and out of the
+///       grouped fallback)
+///   2 — conv(k3) → conv(k1 s1 p0) → conv(k1 s1 p0) → gap → fc
+///       (the NHWC alias fast path: both unit convs read their input
+///       slot with no gather and no copy)
+fn build_model(g: &mut Gen, topo: usize, n: usize) -> (Manifest, ModelWeights, Tensor4) {
+    let c_in = *g.choice(&[2usize, 3]);
+    let hw = *g.choice(&[6usize, 7]);
+    let c1 = 4usize;
+    let classes = 3usize;
+    let (stride, pad) = if topo == 0 {
+        (*g.choice(&[1usize, 2]), *g.choice(&[0usize, 1]))
+    } else {
+        (1, 1)
+    };
+
+    let mut layers = vec![rand_layer(
+        g,
+        "c1",
+        "conv",
+        c1,
+        c_in * 9,
+        (c1, c_in, 3, 3),
+        stride,
+        pad,
+        1,
+    )];
+    let mut meta = format!(
+        r#"{{"name":"c1","kind":"conv","rows":{c1},"cols":{},"stride":{stride},"pad":{pad},"groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#,
+        c_in * 9
+    );
+    let mut prog =
+        r#"{"op":"conv","layer":"c1","in":"in0","out":"b0","relu":true}"#.to_string();
+
+    let conv_meta = |name: &str, rows: usize, cols: usize, s: usize, p: usize, groups: usize| {
+        format!(
+            r#",{{"name":"{name}","kind":"conv","rows":{rows},"cols":{cols},"stride":{s},"pad":{p},"groups":{groups},"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#
+        )
+    };
+
+    let gap_in = match topo {
+        1 => {
+            layers.push(rand_layer(g, "dw", "conv", c1, 9, (c1, c1, 3, 3), 1, 1, c1));
+            meta.push_str(&conv_meta("dw", c1, 9, 1, 1, c1));
+            prog.push_str(r#",{"op":"conv","layer":"dw","in":"b0","out":"b1","relu":false}"#);
+            layers.push(rand_layer(
+                g,
+                "c2",
+                "conv",
+                c1,
+                c1 * 9,
+                (c1, c1, 3, 3),
+                1,
+                1,
+                1,
+            ));
+            meta.push_str(&conv_meta("c2", c1, c1 * 9, 1, 1, 1));
+            prog.push_str(r#",{"op":"conv","layer":"c2","in":"b1","out":"b2","relu":true}"#);
+            "b2"
+        }
+        2 => {
+            layers.push(rand_layer(g, "u1", "conv", c1, c1, (c1, c1, 1, 1), 1, 0, 1));
+            meta.push_str(&conv_meta("u1", c1, c1, 1, 0, 1));
+            prog.push_str(r#",{"op":"conv","layer":"u1","in":"b0","out":"b1","relu":false}"#);
+            layers.push(rand_layer(g, "u2", "conv", c1, c1, (c1, c1, 1, 1), 1, 0, 1));
+            meta.push_str(&conv_meta("u2", c1, c1, 1, 0, 1));
+            prog.push_str(r#",{"op":"conv","layer":"u2","in":"b1","out":"b2","relu":true}"#);
+            "b2"
+        }
+        _ => {
+            layers.push(rand_layer(
+                g,
+                "c2",
+                "conv",
+                c1,
+                c1 * 9,
+                (c1, c1, 3, 3),
+                1,
+                1,
+                1,
+            ));
+            meta.push_str(&conv_meta("c2", c1, c1 * 9, 1, 1, 1));
+            prog.push_str(r#",{"op":"conv","layer":"c2","in":"b0","out":"b1","relu":false}"#);
+            "b1"
+        }
+    };
+
+    layers.push(rand_layer(g, "fc", "linear", classes, c1, (classes, c1, 1, 1), 0, 0, 1));
+    meta.push_str(&format!(
+        r#",{{"name":"fc","kind":"linear","rows":{classes},"cols":{c1},"stride":0,"pad":0,"groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#
+    ));
+    prog.push_str(&format!(
+        r#",{{"op":"gap","in":"{gap_in}","out":"g0"}},{{"op":"linear","layer":"fc","in":"g0","out":"logits"}}"#
+    ));
+
+    let json = format!(
+        r#"{{"model":"implicit","arch":"resnet","num_classes":{classes},
+            "input_shape":[{n},{c_in},{hw},{hw}],"ratio":[65,30,5],"act_bits":4,
+            "layers":[{meta}],"program":[{prog}]}}"#
+    );
+    let manifest = Manifest::from_json(&Json::parse(&json).unwrap()).unwrap();
+
+    let mut x = Tensor4::zeros(n, c_in, hw, hw);
+    for v in x.data.iter_mut() {
+        *v = g.f32_in(0.0, 1.2);
+    }
+    (manifest, ModelWeights { layers }, x)
+}
+
+/// Executor over a plan compiled with the requested dataflow toggles.
+fn executor_with(
+    manifest: &Manifest,
+    weights: &ModelWeights,
+    cfg: ParallelConfig,
+    opts: PlanOptions,
+) -> Executor {
+    let capacity = manifest.input_shape.first().copied().unwrap_or(1);
+    let plan =
+        Arc::new(Plan::compile_opts(manifest, weights, capacity, &cfg, opts).unwrap());
+    Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        plan,
+        cfg,
+        None,
+    )
+    .unwrap()
+}
+
+/// The slot and element count a GEMM op wrote for batch `n`.
+fn out_len(op: &PlanOp, weights: &ModelWeights, n: usize) -> Option<(usize, usize)> {
+    match op {
+        PlanOp::Conv { layer, out, oh, ow, out_quant, .. } => out_quant
+            .map(|_| (*out, n * weights.layers[*layer].out_ch * oh * ow)),
+        PlanOp::Linear { out, out_cols, out_quant, .. } => {
+            out_quant.map(|_| (*out, n * out_cols))
+        }
+        _ => None,
+    }
+}
+
+/// Pin every integer-resident slot's codes of the implicit executor
+/// against the explicit executor's, translating NHWC-retargeted slots
+/// back to NCHW order. Returns the number of integer-resident ops.
+fn assert_codes_match(imp: &Executor, exp: &Executor, n: usize) -> Result<usize, String> {
+    let weights = imp.weights();
+    let mut integer_ops = 0;
+    for op in &imp.plan().ops {
+        let Some((slot, len)) = out_len(op, weights, n) else { continue };
+        integer_ops += 1;
+        let got = &imp.workspace().slot_codes(slot)[..len];
+        let want = &exp.workspace().slot_codes(slot)[..len];
+        let spec = &imp.plan().slots[slot];
+        if !spec.code_nhwc {
+            if got != want {
+                return Err(format!("slot {slot}: implicit codes diverged"));
+            }
+            continue;
+        }
+        // NHWC slot: implicit[(img*hw + pos)*c + ch] vs explicit
+        // NCHW[((img*c) + ch)*hw + pos]
+        let rmsmp::model::plan::SlotKind::T4 { c, h, w } = spec.kind else {
+            return Err(format!("slot {slot}: NHWC slot is not 4-D"));
+        };
+        let hw = h * w;
+        for img in 0..n {
+            for ch in 0..c {
+                for pos in 0..hw {
+                    let gv = got[(img * hw + pos) * c + ch];
+                    let wv = want[((img * c) + ch) * hw + pos];
+                    if gv != wv {
+                        return Err(format!(
+                            "slot {slot} img {img} ch {ch} pos {pos}: NHWC code {gv} != {wv}"
+                        ));
+                    }
+                }
+            }
+        }
+    }
+    Ok(integer_ops)
+}
+
+#[test]
+fn prop_implicit_bit_exact_across_grid() {
+    check("implicit-gemm", 18, |g| {
+        let topo = g.usize_in(0, 2);
+        let n = *g.choice(&[1usize, 5, 8]);
+        let (manifest, weights, x) = build_model(g, topo, n);
+        let isas = [Isa::Scalar, Isa::detect()];
+        for &threads in &[1usize, 8] {
+            let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+            let mut imp = executor_with(&manifest, &weights, cfg, PlanOptions::default());
+            let mut exp = executor_with(
+                &manifest,
+                &weights,
+                cfg,
+                PlanOptions { implicit: false, ..PlanOptions::default() },
+            );
+            prop_assert!(
+                imp.plan().implicit && !exp.plan().implicit,
+                "plan implicit flags wrong"
+            );
+            for &isa in &isas {
+                imp.set_isa(isa);
+                exp.set_isa(isa);
+                let imp_out = imp.infer(&x).unwrap().clone();
+                let exp_out = exp.infer(&x).unwrap().clone();
+                let ref_out = imp.reference_infer(&x).unwrap();
+                prop_assert!(
+                    imp_out.data == ref_out.data,
+                    "implicit != reference (topo {topo}, {threads} thr, {isa:?})"
+                );
+                prop_assert!(
+                    imp_out.data == exp_out.data,
+                    "implicit != explicit-im2col (topo {topo}, {threads} thr, {isa:?})"
+                );
+                // warm re-run over reused buffers must not drift
+                let again = imp.infer(&x).unwrap().clone();
+                prop_assert!(again.data == imp_out.data, "warm re-run drifted (topo {topo})");
+                let pinned = assert_codes_match(&imp, &exp, n)?;
+                prop_assert!(
+                    pinned >= 1,
+                    "topology {topo} produced no integer-resident edge"
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn plan_marks_implicit_convs_and_nhwc_slots() {
+    let mut g = Gen { rng: Rng::new(7), size: 1.0 };
+    // topo 2: c1 (k3) feeds u1 (1×1) feeds u2 (1×1) — both unit edges
+    // must retarget to NHWC and both unit convs must alias their input
+    let (manifest, weights, _) = build_model(&mut g, 2, 2);
+    let cfg = ParallelConfig::sequential();
+    let plan = Plan::compile(&manifest, &weights, 2, &cfg).unwrap();
+    assert!(plan.implicit && plan.integer_resident);
+    let mut seen = 0;
+    for op in &plan.ops {
+        if let PlanOp::Conv {
+            layer, implicit, panel_positions, in_nhwc, out_nhwc, in_codes, out_quant, groups, ..
+        } = op
+        {
+            let name = weights.layers[*layer].name.as_str();
+            assert_eq!(*groups, 1);
+            assert!(*implicit, "{name} not implicit");
+            assert!(*panel_positions >= 8, "{name} panel unset");
+            match name {
+                "c1" => {
+                    // c1 -> b0 is read only by the unit conv u1: emit NHWC
+                    assert!(out_quant.is_some() && *out_nhwc, "c1 must emit NHWC codes");
+                    assert!(!*in_codes, "c1 reads the f32 input");
+                }
+                "u1" => {
+                    assert!(*in_codes && *in_nhwc, "u1 must alias its NHWC input");
+                    assert!(out_quant.is_some() && *out_nhwc, "u1 must emit NHWC codes");
+                }
+                "u2" => {
+                    assert!(*in_codes && *in_nhwc, "u2 must alias its NHWC input");
+                    // b2 feeds gap: f32 fallback
+                    assert!(out_quant.is_none(), "u2 -> gap must stay f32");
+                }
+                other => panic!("unexpected conv {other}"),
+            }
+            seen += 1;
+        }
+    }
+    assert_eq!(seen, 3);
+    let b0 = plan.slots.iter().find(|s| s.name == "b0").unwrap();
+    let b1 = plan.slots.iter().find(|s| s.name == "b1").unwrap();
+    assert!(b0.code_nhwc && b1.code_nhwc, "unit-conv inputs not NHWC");
+
+    // the explicit twin must keep NCHW everywhere
+    let exp = Plan::compile_opts(
+        &manifest,
+        &weights,
+        2,
+        &cfg,
+        PlanOptions { implicit: false, ..PlanOptions::default() },
+    )
+    .unwrap();
+    assert!(exp.slots.iter().all(|s| !s.code_nhwc));
+
+    // topo 1: the grouped conv pins its input and output slots to NCHW
+    let (manifest, weights, _) = build_model(&mut g, 1, 2);
+    let plan = Plan::compile(&manifest, &weights, 2, &cfg).unwrap();
+    for op in &plan.ops {
+        if let PlanOp::Conv { layer, implicit, groups, in_nhwc, out_nhwc, .. } = op {
+            let name = weights.layers[*layer].name.as_str();
+            if name == "dw" {
+                assert!(*groups > 1 && !*implicit, "grouped conv must stay explicit");
+            }
+            assert!(!*in_nhwc && !*out_nhwc, "{name}: 3x3/grouped edges must stay NCHW");
+        }
+    }
+}
+
+#[test]
+fn implicit_plan_drops_the_patches_slot() {
+    let mut g = Gen { rng: Rng::new(19), size: 1.0 };
+    // topo 0: every conv is implicit-capable, so the patch buffer (and
+    // its activation staging) must vanish from the footprint entirely
+    let (manifest, weights, _) = build_model(&mut g, 0, 8);
+    let cfg = ParallelConfig::sequential();
+    let imp = Plan::compile(&manifest, &weights, 8, &cfg).unwrap();
+    let exp = Plan::compile_opts(
+        &manifest,
+        &weights,
+        8,
+        &cfg,
+        PlanOptions { implicit: false, ..PlanOptions::default() },
+    )
+    .unwrap();
+    let fpi = imp.footprint(1);
+    let fpe = exp.footprint(1);
+    assert_eq!(fpi.patch_elems, 0, "implicit plan still budgets a patch buffer");
+    assert!(fpe.patch_elems > 0, "explicit baseline lost its patch buffer");
+    assert!(fpi.panel_elems > 0, "implicit plan budgets no panel");
+    // the panel is a small constant; the patch matrix scales with the
+    // batch — at capacity 8 the implicit workspace must be smaller by at
+    // least the patch buffer it dropped
+    assert!(
+        fpi.total_bytes() + 4 * fpe.patch_elems <= fpe.total_bytes() + fpi.lanes * fpi.panel_elems,
+        "footprint shrank less than the dropped patch buffer: implicit {} B vs explicit {} B",
+        fpi.total_bytes(),
+        fpe.total_bytes()
+    );
+    assert!(
+        fpi.total_bytes() < fpe.total_bytes(),
+        "implicit workspace not smaller: {} vs {}",
+        fpi.total_bytes(),
+        fpe.total_bytes()
+    );
+
+    // topo 1 keeps the grouped conv on the explicit path: the patches
+    // slot shrinks to the grouped fallback's high-water mark
+    let (manifest, weights, _) = build_model(&mut g, 1, 8);
+    let imp = Plan::compile(&manifest, &weights, 8, &cfg).unwrap();
+    let fpi = imp.footprint(1);
+    let dw = weights.layer("dw").unwrap();
+    let hw = manifest.input_shape[2] * manifest.input_shape[3];
+    assert_eq!(
+        imp.max_patch_per_image,
+        hw * dw.cols,
+        "patches high-water != grouped-conv fallback"
+    );
+    assert!(fpi.patch_elems > 0);
+}
+
+#[test]
+fn grouped_and_strided_fixed_cases_bit_exact_batch8() {
+    // fixed heavy cases on top of the property grid: stride-2 no-pad
+    // (topo 0 shapes) and the depthwise chain, batch 8, both thread
+    // counts
+    for topo in [0usize, 1] {
+        for seed in [3u64, 17] {
+            let mut g = Gen { rng: Rng::new(seed), size: 1.0 };
+            let (manifest, weights, x) = build_model(&mut g, topo, 8);
+            for threads in [1usize, 8] {
+                let cfg = ParallelConfig { threads, tile_cols: 16, min_rows_per_task: 2 };
+                let mut imp = executor_with(&manifest, &weights, cfg, PlanOptions::default());
+                let mut exp = executor_with(
+                    &manifest,
+                    &weights,
+                    cfg,
+                    PlanOptions { implicit: false, ..PlanOptions::default() },
+                );
+                let imp_out = imp.infer(&x).unwrap().clone();
+                let exp_out = exp.infer(&x).unwrap().clone();
+                let ref_out = imp.reference_infer(&x).unwrap();
+                assert_eq!(imp_out.data, ref_out.data, "topo {topo} seed {seed} t{threads}");
+                assert_eq!(imp_out.data, exp_out.data, "topo {topo} seed {seed} t{threads}");
+                assert_codes_match(&imp, &exp, 8).unwrap();
+            }
+        }
+    }
+}
