@@ -11,7 +11,10 @@
 
 use rmsmp::assign::{assign_layer, equivalent_bits, Sensitivity};
 use rmsmp::fpga::{simulate, Board, CoreCosts, Design, QuantConfig};
-use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights};
+use rmsmp::gemm::{
+    chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, MixedGemm, PackedActs,
+    PackedWeights, SortedWeights,
+};
 use rmsmp::quant::{default_alpha, Mat, Ratio, Scheme};
 use rmsmp::util::rng::Rng;
 
@@ -45,7 +48,23 @@ fn main() {
     let x = Mat::from_vec(batch, cols, xd);
     let acts = PackedActs::quantize(&x, 1.0, 4);
     let gemm = MixedGemm::new();
-    let y = gemm.run(&acts, &packed);
+    // sort the rows class-contiguous once, chunk the partition into a
+    // task schedule, and dispatch — the one mixed-GEMM entry point
+    let sorted = SortedWeights::from_packed(&packed);
+    let chunks = chunk_tasks(sorted.partition(), gemm.config().min_rows_per_task);
+    let mut scratch = GemmScratch::new(gemm.lanes());
+    let mut y = Mat::zeros(batch, rows);
+    gemm.dispatch(
+        GemmCall {
+            acts: GemmActs::Packed(&acts),
+            weights: &sorted,
+            chunks: &chunks,
+            parallel: false,
+            fill: true,
+            out: GemmOut::F32(&mut y),
+        },
+        &mut scratch,
+    );
 
     // --- 3. verify against the float fake-quant reference -----------------
     let y_ref = gemm.run_float(&x, &w, &schemes, &alpha, 1.0, 4);

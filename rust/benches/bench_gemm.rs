@@ -14,8 +14,8 @@ use std::hint::black_box;
 
 use rmsmp::gemm::cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
 use rmsmp::gemm::{
-    chunk_tasks, GemmScratch, Isa, MixedGemm, PackedActs, PackedWeights, ParallelConfig,
-    RowPartition, SortedWeights,
+    chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, Isa, MixedGemm, PackedActs,
+    PackedWeights, ParallelConfig, RowPartition, SortedWeights, TaskChunk,
 };
 use rmsmp::quant::{default_alpha, Mat, Scheme};
 use rmsmp::util::bench::Bench;
@@ -55,6 +55,31 @@ fn problem(
     (acts, pw, part)
 }
 
+/// One mixed-GEMM dispatch through the single public entry point, into
+/// a preallocated output (the benches never time the allocator).
+#[allow(clippy::too_many_arguments)]
+fn run_mixed(
+    g: &MixedGemm,
+    acts: &PackedActs,
+    sw: &SortedWeights,
+    chunks: &[TaskChunk],
+    parallel: bool,
+    scratch: &mut GemmScratch,
+    out: &mut Mat,
+) {
+    g.dispatch(
+        GemmCall {
+            acts: GemmActs::Packed(acts),
+            weights: sw,
+            chunks,
+            parallel,
+            fill: true,
+            out: GemmOut::F32(out),
+        },
+        scratch,
+    );
+}
+
 fn main() {
     let mut b = Bench::new("gemm");
     // s2b0.conv2-like layer at CIFAR scale: 64 filters x 576, 256 positions
@@ -86,25 +111,36 @@ fn main() {
     // mixed GEMM at the RMSMP ratio (the serving hot path), seq vs parallel
     let threads = ParallelConfig::default().resolved_threads();
     let par = MixedGemm::with_config(ParallelConfig::default());
+    let mut par_scratch = GemmScratch::new(par.lanes());
     {
-        let (acts, pw, part) = problem(rows, cols, batch, None, 9);
+        let (acts, pw, _) = problem(rows, cols, batch, None, 9);
+        let sw = SortedWeights::from_packed(&pw);
+        let chunks = chunk_tasks(sw.partition(), par.config().min_rows_per_task);
+        let mut out = Mat::zeros(batch, rows);
         b.case_ops("mixed_65_30_5_seq", Some(macs), || {
-            black_box(par.run_partitioned_seq(black_box(&acts), black_box(&pw), &part));
+            run_mixed(&par, black_box(&acts), &sw, &chunks, false, &mut par_scratch, &mut out);
+            black_box(&out);
         });
         b.case_ops("mixed_65_30_5_par", Some(macs), || {
-            black_box(par.run_partitioned(black_box(&acts), black_box(&pw), &part));
+            run_mixed(&par, black_box(&acts), &sw, &chunks, true, &mut par_scratch, &mut out);
+            black_box(&out);
         });
     }
 
     // the acceptance shape: 512 x 512 x 512 mixed-scheme GEMM
     let (b512, r512, c512) = (512, 512, 512);
     let macs512 = (b512 * r512 * c512) as f64;
-    let (acts, pw, part) = problem(r512, c512, b512, None, 13);
+    let (acts, pw, _) = problem(r512, c512, b512, None, 13);
+    let sw512 = SortedWeights::from_packed(&pw);
+    let chunks512 = chunk_tasks(sw512.partition(), par.config().min_rows_per_task);
+    let mut out512 = Mat::zeros(b512, r512);
     b.case_ops("mixed512_seq", Some(macs512), || {
-        black_box(par.run_partitioned_seq(black_box(&acts), black_box(&pw), &part));
+        run_mixed(&par, black_box(&acts), &sw512, &chunks512, false, &mut par_scratch, &mut out512);
+        black_box(&out512);
     });
     b.case_ops("mixed512_par", Some(macs512), || {
-        black_box(par.run_partitioned(black_box(&acts), black_box(&pw), &part));
+        run_mixed(&par, black_box(&acts), &sw512, &chunks512, true, &mut par_scratch, &mut out512);
+        black_box(&out512);
     });
     let seq_ns = b.get("mixed512_seq").map(|m| m.ns_per_iter()).unwrap_or(f64::NAN);
     let par_ns = b.get("mixed512_par").map(|m| m.ns_per_iter()).unwrap_or(f64::NAN);
@@ -147,25 +183,11 @@ fn main() {
         });
     }
     b.case_ops("mixed512_block_scalar", Some(macs512), || {
-        scalar_engine.run_partitioned_into(
-            black_box(&acts),
-            black_box(&sw),
-            &chunks,
-            false,
-            &mut scratch,
-            &mut out,
-        );
+        run_mixed(&scalar_engine, black_box(&acts), &sw, &chunks, false, &mut scratch, &mut out);
         black_box(&out);
     });
     b.case_ops("mixed512_block_simd", Some(macs512), || {
-        simd_engine.run_partitioned_into(
-            black_box(&acts),
-            black_box(&sw),
-            &chunks,
-            false,
-            &mut scratch,
-            &mut out,
-        );
+        run_mixed(&simd_engine, black_box(&acts), &sw, &chunks, false, &mut scratch, &mut out);
         black_box(&out);
     });
     let ns_of = |name: &str| b.get(name).map(|m| m.ns_per_iter()).unwrap_or(f64::NAN);

@@ -1,10 +1,12 @@
 //! Runtime benchmarks: the integer executor through the native runtime —
-//! compiled plan vs the reference interpreter at batch 1 and 8,
-//! integer-resident vs f32-resident dataflow (the requantization-fusion
-//! win), and sequential vs parallel — on a synthetic CNN (no artifacts
-//! needed) and, when artifacts exist, on the shipped model. Writes
-//! `BENCH_runtime.json` (per-inference latency + plan-vs-interpreter
-//! + requant-fusion speedups) for the CI bench-smoke artifact.
+//! compiled plan vs the reference interpreter at batch 1 and 8, plus one
+//! ablation per optimizer pass (integer-resident vs f32-resident,
+//! implicit vs explicit-im2col, fused vs standalone residual add,
+//! depthwise specialization vs the grouped fallback), and sequential vs
+//! parallel — on a synthetic residual CNN (no artifacts needed) and,
+//! when artifacts exist, on the shipped model. Writes
+//! `BENCH_runtime.json` (per-inference latency + the pass-ablation
+//! speedups) for the CI bench-smoke artifact.
 //!
 //! Run: `cargo bench --bench bench_runtime` (RMSMP_BENCH_FAST=1 for CI).
 
@@ -14,7 +16,7 @@ use std::sync::Arc;
 use rmsmp::gemm::{PackedWeights, ParallelConfig, SortedWeights};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
-use rmsmp::model::{Executor, Plan, PlanOptions};
+use rmsmp::model::{Executor, Plan};
 use rmsmp::quant::tensor::Tensor4;
 use rmsmp::quant::{self, Mat, Scheme};
 use rmsmp::runtime::Runtime;
@@ -22,12 +24,14 @@ use rmsmp::util::bench::Bench;
 use rmsmp::util::json::{num, Json};
 use rmsmp::util::rng::Rng;
 
+#[allow(clippy::too_many_arguments)]
 fn layer(
     name: &str,
     kind: &str,
     conv: (usize, usize, usize, usize),
     stride: usize,
     pad: usize,
+    groups: usize,
     w: Mat,
     schemes: Vec<Scheme>,
     alpha: Vec<f32>,
@@ -45,7 +49,7 @@ fn layer(
         kw: conv.3,
         stride,
         pad,
-        groups: 1,
+        groups,
         a_alpha: 1.0,
         scheme: schemes,
         alpha,
@@ -56,10 +60,12 @@ fn layer(
     }
 }
 
-/// A conv -> conv -> gap -> linear model big enough to time: 32ch 16x16
-/// input, two 64-filter 3x3 convs (the conv→conv edge is where the
-/// integer-resident pipeline keeps activations as u8 codes), 10-way
-/// classifier.
+/// A residual CNN big enough to time and wide enough to exercise every
+/// optimizer pass: 32ch 16x16 input, a residual block (c1 -> c2, add
+/// c1's output back with ReLU — the add the `epilogue_fusion` pass folds
+/// into c2), a 64-group depthwise conv (the `depthwise` pass target),
+/// one more 3x3 conv (its two integer-resident edges around the
+/// depthwise conv carry u8 codes), gap, 10-way classifier.
 fn synthetic_model() -> (Manifest, ModelWeights) {
     let manifest = Manifest::from_json(
         &Json::parse(
@@ -73,15 +79,24 @@ fn synthetic_model() -> (Manifest, ModelWeights) {
           {"name": "c2", "kind": "conv", "rows": 64, "cols": 576,
            "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
            "scheme_counts": [42, 19, 3, 0]},
+          {"name": "dw", "kind": "conv", "rows": 64, "cols": 9,
+           "stride": 1, "pad": 1, "groups": 64, "a_alpha": 1.0,
+           "scheme_counts": [42, 19, 3, 0]},
+          {"name": "c3", "kind": "conv", "rows": 64, "cols": 576,
+           "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [42, 19, 3, 0]},
           {"name": "fc", "kind": "linear", "rows": 10, "cols": 64,
            "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
            "scheme_counts": [7, 3, 0, 0]}
         ],
         "program": [
           {"op": "conv", "layer": "c1", "in": "in0", "out": "b0", "relu": true},
-          {"op": "conv", "layer": "c2", "in": "b0", "out": "b1", "relu": true},
-          {"op": "gap", "in": "b1", "out": "b2"},
-          {"op": "linear", "layer": "fc", "in": "b2", "out": "logits"}
+          {"op": "conv", "layer": "c2", "in": "b0", "out": "b1", "relu": false},
+          {"op": "add", "a": "b0", "b": "b1", "out": "b2", "relu": true},
+          {"op": "conv", "layer": "dw", "in": "b2", "out": "b3", "relu": false},
+          {"op": "conv", "layer": "c3", "in": "b3", "out": "b4", "relu": true},
+          {"op": "gap", "in": "b4", "out": "b5"},
+          {"op": "linear", "layer": "fc", "in": "b5", "out": "logits"}
         ]
       }"#,
         )
@@ -108,11 +123,15 @@ fn synthetic_model() -> (Manifest, ModelWeights) {
     };
     let (wc, sc, ac) = mk(64, 288, &mut rng);
     let (wc2, sc2, ac2) = mk(64, 576, &mut rng);
+    let (wd, sd, ad) = mk(64, 9, &mut rng);
+    let (wc3, sc3, ac3) = mk(64, 576, &mut rng);
     let (wf, sf, af) = mk(10, 64, &mut rng);
     let layers = vec![
-        layer("c1", "conv", (64, 32, 3, 3), 1, 1, wc, sc, ac),
-        layer("c2", "conv", (64, 64, 3, 3), 1, 1, wc2, sc2, ac2),
-        layer("fc", "linear", (10, 64, 1, 1), 0, 0, wf, sf, af),
+        layer("c1", "conv", (64, 32, 3, 3), 1, 1, 1, wc, sc, ac),
+        layer("c2", "conv", (64, 64, 3, 3), 1, 1, 1, wc2, sc2, ac2),
+        layer("dw", "conv", (64, 64, 3, 3), 1, 1, 64, wd, sd, ad),
+        layer("c3", "conv", (64, 64, 3, 3), 1, 1, 1, wc3, sc3, ac3),
+        layer("fc", "linear", (10, 64, 1, 1), 0, 0, 1, wf, sf, af),
     ];
     (manifest, ModelWeights { layers })
 }
@@ -145,6 +164,33 @@ fn ns(b: &Bench, name: &str) -> f64 {
     b.get(name).map(|m| m.ns_per_iter()).unwrap_or(f64::NAN)
 }
 
+/// An executor over the full plan minus one optimizer pass — the
+/// per-pass ablation baseline.
+fn ablated(
+    manifest: &Manifest,
+    weights: &ModelWeights,
+    capacity: usize,
+    cfg: ParallelConfig,
+    pass: &str,
+) -> Executor {
+    let plan = Arc::new(
+        Plan::builder(manifest, weights)
+            .capacity(capacity)
+            .config(&cfg)
+            .disable_pass(pass)
+            .build()
+            .unwrap(),
+    );
+    Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        plan,
+        cfg,
+        None,
+    )
+    .unwrap()
+}
+
 fn main() {
     let mut b = Bench::new("runtime");
 
@@ -167,21 +213,15 @@ fn main() {
     let speedup_b8 = ns(&b, "interp_b8") / ns(&b, "plan_b8");
     println!("bench runtime: plan speedup {speedup_b1:.2}x @ batch 1, {speedup_b8:.2}x @ batch 8");
 
-    // integer-resident (the default plan above) vs f32-resident dataflow:
-    // the end-to-end win of fusing requantization into the GEMM epilogue
-    // (same engine, same kernels — only the inter-layer domain differs)
+    // per-pass ablations: the full plan above vs the same plan with one
+    // optimizer pass disabled (same engine, same kernels — only the
+    // rewrite under test differs)
     let cfg = seq_rt.config();
     let capacity = manifest.input_shape.first().copied().unwrap_or(1);
-    let f32_plan =
-        Arc::new(Plan::compile_with(&manifest, &weights, capacity, &cfg, false).unwrap());
-    let mut f32_seq = Executor::from_shared(
-        Arc::new(manifest.clone()),
-        Arc::new(weights.clone()),
-        f32_plan,
-        cfg,
-        None,
-    )
-    .unwrap();
+
+    // integer-resident dataflow: the end-to-end win of fusing
+    // requantization into the GEMM epilogue
+    let mut f32_seq = ablated(&manifest, &weights, capacity, cfg, "integer_resident");
     bench_plan(&mut b, "f32res_b1", &mut f32_seq, &x1);
     bench_plan(&mut b, "f32res_b8", &mut f32_seq, &x8);
     let requant_speedup_b1 = ns(&b, "f32res_b1") / ns(&b, "plan_b1");
@@ -191,44 +231,53 @@ fn main() {
          {requant_speedup_b8:.2}x @ batch 8"
     );
 
-    // implicit GEMM (the default plan above) vs the explicit-im2col conv
-    // path: same integer-resident domain, same kernels — only the
-    // activation staging differs (per-lane panels vs the materialized
-    // patch matrix)
-    let exp_plan = Arc::new(
-        Plan::compile_opts(
-            &manifest,
-            &weights,
-            capacity,
-            &cfg,
-            PlanOptions { implicit: false, ..PlanOptions::default() },
-        )
-        .unwrap(),
-    );
-    let mut exp_seq = Executor::from_shared(
-        Arc::new(manifest.clone()),
-        Arc::new(weights.clone()),
-        Arc::clone(&exp_plan),
-        cfg,
-        None,
-    )
-    .unwrap();
+    // implicit GEMM vs the explicit-im2col conv path: same
+    // integer-resident domains — only the activation staging differs
+    // (per-lane panels vs the materialized patch matrix)
+    let mut exp_seq = ablated(&manifest, &weights, capacity, cfg, "implicit");
     bench_plan(&mut b, "explicit_b1", &mut exp_seq, &x1);
     bench_plan(&mut b, "explicit_b8", &mut exp_seq, &x8);
     let implicit_speedup_b1 = ns(&b, "explicit_b1") / ns(&b, "plan_b1");
     let implicit_speedup_b8 = ns(&b, "explicit_b8") / ns(&b, "plan_b8");
     let lanes = cfg.lanes();
     let implicit_fp = seq.plan().footprint(lanes).total_bytes();
-    let explicit_fp = exp_plan.footprint(lanes).total_bytes();
+    let explicit_fp = exp_seq.plan().footprint(lanes).total_bytes();
     println!(
         "bench runtime: implicit-GEMM speedup {implicit_speedup_b1:.2}x @ batch 1, \
          {implicit_speedup_b8:.2}x @ batch 8; workspace {implicit_fp} B vs explicit \
          {explicit_fp} B ({} B saved)",
         explicit_fp as i64 - implicit_fp as i64
     );
-    // the compiled-plan dump (the `rmsmp plan` output for this model):
-    // CI shows and uploads it so footprint regressions are visible per
-    // PR. Same target directory convention as Bench::write_json.
+
+    // epilogue fusion: the residual add folded into c2's epilogue vs the
+    // standalone Add op (which forces the conv output and both operands
+    // through f32 slots)
+    let mut nofuse_seq = ablated(&manifest, &weights, capacity, cfg, "epilogue_fusion");
+    bench_plan(&mut b, "nofuse_b1", &mut nofuse_seq, &x1);
+    bench_plan(&mut b, "nofuse_b8", &mut nofuse_seq, &x8);
+    let fusion_speedup_b1 = ns(&b, "nofuse_b1") / ns(&b, "plan_b1");
+    let fusion_speedup_b8 = ns(&b, "nofuse_b8") / ns(&b, "plan_b8");
+    println!(
+        "bench runtime: epilogue-fusion speedup {fusion_speedup_b1:.2}x @ batch 1, \
+         {fusion_speedup_b8:.2}x @ batch 8"
+    );
+
+    // depthwise specialization: per-group streamed panel GEMMs vs the
+    // row-by-row explicit grouped fallback
+    let mut nodw_seq = ablated(&manifest, &weights, capacity, cfg, "depthwise");
+    bench_plan(&mut b, "nodw_b1", &mut nodw_seq, &x1);
+    bench_plan(&mut b, "nodw_b8", &mut nodw_seq, &x8);
+    let depthwise_speedup_b1 = ns(&b, "nodw_b1") / ns(&b, "plan_b1");
+    let depthwise_speedup_b8 = ns(&b, "nodw_b8") / ns(&b, "plan_b8");
+    println!(
+        "bench runtime: depthwise speedup {depthwise_speedup_b1:.2}x @ batch 1, \
+         {depthwise_speedup_b8:.2}x @ batch 8"
+    );
+
+    // the compiled-plan dump (the `rmsmp plan` output for this model,
+    // including the per-pass optimizer report): CI shows and uploads it
+    // so footprint regressions are visible per PR. Same target directory
+    // convention as Bench::write_json.
     let plan_dir = std::env::var("RMSMP_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
     let plan_path = std::path::Path::new(&plan_dir).join("PLAN_runtime.txt");
     match std::fs::write(&plan_path, seq.plan().describe(&weights, lanes)) {
@@ -266,6 +315,10 @@ fn main() {
         ("requant_speedup_b8", num(requant_speedup_b8)),
         ("implicit_speedup_b1", num(implicit_speedup_b1)),
         ("implicit_speedup_b8", num(implicit_speedup_b8)),
+        ("fusion_speedup_b1", num(fusion_speedup_b1)),
+        ("fusion_speedup_b8", num(fusion_speedup_b8)),
+        ("depthwise_speedup_b1", num(depthwise_speedup_b1)),
+        ("depthwise_speedup_b8", num(depthwise_speedup_b8)),
         ("implicit_fp_bytes", num(implicit_fp as f64)),
         ("explicit_fp_bytes", num(explicit_fp as f64)),
         ("fp_saved_bytes", num(explicit_fp as f64 - implicit_fp as f64)),

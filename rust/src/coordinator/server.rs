@@ -102,12 +102,12 @@ impl Server {
 
         // compile once; size workspaces for the largest batch the
         // batcher will ever hand a worker
-        let plan = Arc::new(Plan::compile(
-            &manifest,
-            &weights,
-            cfg.policy.max_batch.max(1),
-            &cfg.parallel,
-        )?);
+        let plan = Arc::new(
+            Plan::builder(&manifest, &weights)
+                .capacity(cfg.policy.max_batch.max(1))
+                .config(&cfg.parallel)
+                .build()?,
+        );
         let manifest = Arc::new(manifest);
         let weights = Arc::new(weights);
 

@@ -43,7 +43,10 @@ use crate::quant::{Mat, Scheme};
 /// of the next layer (same `n / alpha` division, same multiply, same
 /// clamp, same `round_ties_even`). The clamp's lower bound of zero also
 /// subsumes ReLU: `max(v, 0)` before the map cannot change the code, so
-/// the integer-resident path gets ReLU for free.
+/// the integer-resident path gets ReLU for free — which is also what
+/// lets the `epilogue_fusion` pass fold a residual `Add + ReLU` into a
+/// quantizing epilogue: the fused addend joins `v` before `code(v)` and
+/// the ReLU costs nothing.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct Requant {
     /// `n / alpha` — the consumer's code-domain scale.

@@ -1,0 +1,123 @@
+//! Grouped / depthwise convolution driver.
+//!
+//! A grouped conv is G independent small GEMMs: group `g`'s filters see
+//! only input channels `g * ch_per_group ..`. Rather than materializing
+//! per-group im2col buffers (the old explicit fallback), the driver runs
+//! one implicit-GEMM dispatch per group: a [`PatchGeometry`] restricted
+//! to the group's channel window streams column tiles straight from the
+//! NCHW map (f32 or codes), and a per-group [`TaskChunk`] schedule —
+//! compiled by the `depthwise` plan pass over the *full* class-sorted
+//! layout — selects exactly the group's filter rows. All groups scatter
+//! into one shared output through the full layout's permutation, each
+//! call with `fill = false`: the group schedules partition the row space,
+//! so their union writes every cell exactly once.
+//!
+//! Bit-exactness follows from the implicit kernel's own contract (same
+//! per-cell arithmetic as explicit im2col + GEMM, for any panel width,
+//! thread count, and ISA) plus the disjoint per-group row coverage.
+
+use super::mixed::{
+    GemmActs, GemmCall, GemmOut, GemmScratch, MixedGemm, OutLayout, QuantEpilogue, TaskChunk,
+};
+use super::panels::{ColTileSource, PatchGeometry};
+use super::sorted::SortedWeights;
+use crate::gemm::cores::Requant;
+use crate::quant::Mat;
+
+/// The NCHW activation map a depthwise conv reads: stored f32 (quantized
+/// into panels on the fly) or the integer-resident code slot.
+pub(crate) enum DwSource<'a> {
+    F32(&'a [f32]),
+    Codes(&'a [u8]),
+}
+
+/// Where the depthwise conv writes: the f32 staging matrix `(n*oh*ow,
+/// out_ch)` (bias/ReLU/col2im applied by the caller), or activation
+/// codes through the fused requantization epilogue.
+pub(crate) enum DwOut<'a> {
+    F32(&'a mut Mat),
+    Quant {
+        out: &'a mut [u8],
+        bias: &'a [f32],
+        rq: Requant,
+        layout: OutLayout,
+    },
+}
+
+/// One grouped conv, fully described — geometry, operands, and the
+/// per-group schedules the `depthwise` plan pass compiled.
+pub(crate) struct DwConv<'a> {
+    pub src: DwSource<'a>,
+    pub n: usize,
+    pub c: usize,
+    pub h: usize,
+    pub w: usize,
+    pub k: usize,
+    pub stride: usize,
+    pub pad: usize,
+    pub ch_per_group: usize,
+    /// Activation quantizer of the panel gather (the conv input's scale).
+    pub alpha: f32,
+    pub bits: u32,
+    /// The layer's full class-sorted layout (all groups).
+    pub weights: &'a SortedWeights,
+    /// `group_chunks[g]` covers exactly group `g`'s sorted rows; the
+    /// union over groups is a partition of `0..weights.rows`.
+    pub group_chunks: &'a [Vec<TaskChunk>],
+    pub panel_positions: usize,
+    pub parallel: bool,
+}
+
+impl MixedGemm {
+    /// Run a grouped/depthwise conv as per-group implicit dispatches
+    /// (see module docs). No heap allocation once `scratch` has warmed
+    /// up to the panel size.
+    pub(crate) fn run_depthwise(
+        &self,
+        call: DwConv<'_>,
+        scratch: &mut GemmScratch,
+        mut out: DwOut<'_>,
+    ) {
+        for (g, chunks) in call.group_chunks.iter().enumerate() {
+            let geo = PatchGeometry::new(
+                call.n,
+                call.c,
+                call.h,
+                call.w,
+                g * call.ch_per_group,
+                call.ch_per_group,
+                call.k,
+                call.stride,
+                call.pad,
+            );
+            let src = match call.src {
+                DwSource::F32(data) => {
+                    ColTileSource::F32 { data, geo, alpha: call.alpha, bits: call.bits }
+                }
+                DwSource::Codes(data) => {
+                    ColTileSource::Codes { data, geo, alpha: call.alpha, bits: call.bits }
+                }
+            };
+            let gout = match &mut out {
+                DwOut::F32(m) => GemmOut::F32(m),
+                DwOut::Quant { out, bias, rq, layout } => GemmOut::Quant {
+                    out,
+                    epi: QuantEpilogue { bias, rq: *rq, layout: *layout, addend: None },
+                },
+            };
+            self.dispatch(
+                GemmCall {
+                    acts: GemmActs::Tiles { src: &src, positions: call.panel_positions },
+                    weights: call.weights,
+                    chunks,
+                    parallel: call.parallel,
+                    // the group schedules partition the rows: no cell is
+                    // left for a standalone fill to own
+                    fill: false,
+                    out: gout,
+                },
+                scratch,
+            );
+        }
+    }
+}

@@ -20,29 +20,29 @@
 //! # Parallel execution
 //!
 //! Row classes are embarrassingly parallel: every output cell `(b, r)` is
-//! produced by exactly one weight row `r`. [`MixedGemm::run_partitioned`]
-//! therefore splits each class's sorted range into chunks of
-//! `min_rows_per_task` rows, interleaves the chunks round-robin across
-//! classes (so cheap PoT shift-add rows and expensive Fixed-8 MAC rows
-//! load-balance instead of convoying per class), and drains the task list
-//! on the shared [`ThreadPool`] via its work-pulling `scoped_for`. Each
-//! task writes a disjoint set of output cells (the row permutation is a
-//! bijection), and per-row arithmetic is identical to the sequential
-//! path, so parallel output is bit-exact regardless of thread count or
-//! scheduling order.
+//! produced by exactly one weight row `r`. [`chunk_tasks`] therefore
+//! splits each class's sorted range into chunks of `min_rows_per_task`
+//! rows and interleaves the chunks round-robin across classes (so cheap
+//! PoT shift-add rows and expensive Fixed-8 MAC rows load-balance instead
+//! of convoying per class); dispatch drains the task list on the shared
+//! [`ThreadPool`] via its work-pulling `scoped_for`. Each task writes a
+//! disjoint set of output cells (the row permutation is a bijection), and
+//! per-row arithmetic is identical to the sequential path, so parallel
+//! output is bit-exact regardless of thread count or scheduling order.
 //!
-//! # Implicit-GEMM execution
+//! # One entry point
 //!
-//! Convolutions run *implicitly*: instead of materializing the full
-//! im2col matrix, [`MixedGemm::run_implicit_into`] /
-//! [`MixedGemm::run_implicit_quant_into`] walk the output positions in
-//! column tiles, ask a [`ColTileSource`] to pack each tile into a
-//! per-lane cache-resident panel (gathering from the NCHW code slot, or
-//! quantizing f32 on the fly), and sweep the hot panel with every row
-//! class and micro-kernel block of the layer before moving on.
-//! Parallelism is over tiles — each tile owns a disjoint set of output
-//! positions, so tasks still write disjoint cells — and outputs stay
-//! bit-exact for any panel width.
+//! All of the above is reached through [`MixedGemm::dispatch`], which
+//! takes a [`GemmCall`] describing the full GEMM: where activations come
+//! from ([`GemmActs`] — a materialized [`PackedActs`] matrix, or
+//! implicit column tiles packed on the fly by a [`ColTileSource`] into
+//! per-lane cache-resident panels), and where output goes ([`GemmOut`] —
+//! an f32 matrix, or activation codes through the fused
+//! [`QuantEpilogue`]: dequant → bias → add → requantize → layout
+//! scatter). On the implicit path, parallelism moves to the tile axis —
+//! each tile owns a disjoint set of output positions, so tasks still
+//! write disjoint cells — and outputs stay bit-exact for any panel
+//! width.
 
 use std::ops::Range;
 use std::sync::Arc;
@@ -422,6 +422,77 @@ struct SyncLanesPtr {
 unsafe impl Send for SyncLanesPtr {}
 unsafe impl Sync for SyncLanesPtr {}
 
+/// Where a [`GemmCall`]'s activation operand comes from.
+pub enum GemmActs<'a> {
+    /// A materialized, quantized activation matrix (the staged explicit
+    /// path: explicit-im2col convs and the linear layers).
+    Packed(&'a PackedActs),
+    /// Implicit column-tile streaming: the batch dimension is walked in
+    /// `positions`-wide tiles, each packed on the fly into a per-lane
+    /// cache-resident panel (the implicit-GEMM conv path and the
+    /// depthwise per-group kernel).
+    Tiles {
+        src: &'a ColTileSource<'a>,
+        /// Compiled panel width (output positions per column tile).
+        positions: usize,
+    },
+}
+
+/// The fused integer-resident epilogue of a [`GemmCall`]:
+/// dequant → bias → (add) → requantize → layout scatter, mapping every
+/// accumulator straight to the *consumer layer's* activation code.
+pub struct QuantEpilogue<'a> {
+    /// Per-row bias, model row order (gathered through the sorted
+    /// layout's permutation).
+    pub bias: &'a [f32],
+    /// The consumer's requantizer (its clamp at 0 subsumes ReLU).
+    pub rq: Requant,
+    /// Where codes land (see [`OutLayout`]).
+    pub layout: OutLayout,
+    /// Fused elementwise addend (the epilogue-fusion rewrite): an f32
+    /// buffer indexed exactly like the output — `layout.index` — whose
+    /// cell is added after the bias, before requantization. Must have
+    /// the output's length. f32 addition is commutative bit-for-bit, so
+    /// `(acc + bias) + addend` equals the unfused `addend + (acc + bias)`.
+    pub addend: Option<&'a [f32]>,
+}
+
+/// Where a [`GemmCall`]'s output goes: a plain f32 matrix (model row
+/// order, `(batch, rows)`) or activation codes through the fused
+/// [`QuantEpilogue`].
+pub enum GemmOut<'a> {
+    F32(&'a mut Mat),
+    Quant {
+        out: &'a mut [u8],
+        epi: QuantEpilogue<'a>,
+    },
+}
+
+/// One mixed-GEMM dispatch, fully described: the single public entry
+/// point ([`MixedGemm::dispatch`]) replacing the old
+/// `run_partitioned*_into` / `run_implicit*_into` family. The four
+/// (acts × out) combinations select the explicit/implicit × f32/quant
+/// kernels; every combination is bit-exact against every other way of
+/// computing the same GEMM (see the dispatch docs).
+pub struct GemmCall<'a> {
+    pub acts: GemmActs<'a>,
+    /// Class-sorted weight layout (built once at load).
+    pub weights: &'a SortedWeights,
+    /// Precompiled task schedule (see [`chunk_tasks`]); chunks must
+    /// cover disjoint sorted-row ranges.
+    pub chunks: &'a [TaskChunk],
+    /// Allow pool dispatch (the caller's row-parallel policy).
+    pub parallel: bool,
+    /// Handling of rows **absent** from `chunks`: `true` gives them the
+    /// standalone-call semantics (f32 cells zeroed; quant cells hold the
+    /// code of bias [+ addend] alone, the value a zeroed accumulator
+    /// produces) — `false` leaves them untouched, for callers that
+    /// schedule complementary calls covering every row exactly once (the
+    /// depthwise per-group dispatch).
+    pub fill: bool,
+    pub out: GemmOut<'a>,
+}
+
 /// The mixed GEMM engine: owns the four cores plus the execution config,
 /// the resolved SIMD ISA, and (optionally) a thread pool.
 pub struct MixedGemm {
@@ -503,17 +574,19 @@ impl MixedGemm {
     }
 
     /// `y = Qa(x) @ Qw(w)^T` over integer codes. Output is (batch, rows).
-    /// Convenience wrapper: sorts the layout per call — the serving path
-    /// uses a load-time [`SortedWeights`] with
-    /// [`MixedGemm::run_partitioned_into`] instead.
-    pub fn run(&self, acts: &PackedActs, w: &PackedWeights) -> Mat {
+    /// Test convenience wrapper: sorts the layout per call — the serving
+    /// path uses a load-time [`SortedWeights`] with
+    /// [`MixedGemm::dispatch`] instead.
+    #[cfg(test)]
+    pub(crate) fn run(&self, acts: &PackedActs, w: &PackedWeights) -> Mat {
         let part = RowPartition::from_schemes(&w.scheme);
         self.run_partitioned(acts, w, &part)
     }
 
     /// Run with a precomputed partition, parallel when a pool is
     /// attached and the shape is worth it.
-    pub fn run_partitioned(
+    #[cfg(test)]
+    pub(crate) fn run_partitioned(
         &self,
         acts: &PackedActs,
         w: &PackedWeights,
@@ -523,7 +596,8 @@ impl MixedGemm {
     }
 
     /// Sequential reference path — bit-exact oracle for the parallel one.
-    pub fn run_partitioned_seq(
+    #[cfg(test)]
+    pub(crate) fn run_partitioned_seq(
         &self,
         acts: &PackedActs,
         w: &PackedWeights,
@@ -535,10 +609,10 @@ impl MixedGemm {
     /// `parallel = false` forces the sequential path (the coordinator
     /// disables row-level parallelism for batches that already fill the
     /// machine via the batch dimension). Compatibility wrapper around
-    /// [`MixedGemm::run_partitioned_into`]: sorts the weight layout,
-    /// chunks the partition, and allocates the output and scratch per
-    /// call.
-    pub fn run_partitioned_with(
+    /// [`MixedGemm::dispatch`] for the reference interpreter: sorts the
+    /// weight layout, chunks the partition, and allocates the output and
+    /// scratch per call.
+    pub(crate) fn run_partitioned_with(
         &self,
         acts: &PackedActs,
         w: &PackedWeights,
@@ -552,8 +626,54 @@ impl MixedGemm {
         let chunks = chunk_tasks(sw.partition(), self.cfg.min_rows_per_task);
         let mut scratch = GemmScratch::new(self.lanes());
         let mut out = Mat::zeros(acts.rows, w.rows);
-        self.run_partitioned_into(acts, &sw, &chunks, parallel, &mut scratch, &mut out);
+        self.dispatch(
+            GemmCall {
+                acts: GemmActs::Packed(acts),
+                weights: &sw,
+                chunks: &chunks,
+                parallel,
+                fill: true,
+                out: GemmOut::F32(&mut out),
+            },
+            &mut scratch,
+        );
         out
+    }
+
+    /// Run one fully-described mixed GEMM (see [`GemmCall`]) — the
+    /// single public dispatch entry point. The (acts × out) combination
+    /// selects the kernel:
+    ///
+    /// * `Packed` + `F32` — the staged explicit GEMM.
+    /// * `Packed` + `Quant` — explicit GEMM with the fused
+    ///   requantization epilogue.
+    /// * `Tiles` + `F32` — implicit column-tile streaming.
+    /// * `Tiles` + `Quant` — implicit streaming + fused epilogue (the
+    ///   conv hot path: no col buffer, no f32 staging matrix).
+    ///
+    /// All four are bit-exact against each other and against the
+    /// sequential scalar path, for any chunk schedule, panel width,
+    /// thread count, and kernel ISA: per-cell arithmetic is identical
+    /// (same K tiling, same i32 accumulation, same dequant expression,
+    /// per-cell epilogue), tasks write disjoint cells, and the pool's
+    /// join barrier publishes them. No heap allocation once `scratch`
+    /// has warmed up to the batch/panel size.
+    pub fn dispatch(&self, call: GemmCall<'_>, scratch: &mut GemmScratch) {
+        let GemmCall { acts, weights: sw, chunks, parallel, fill, out } = call;
+        match (acts, out) {
+            (GemmActs::Packed(acts), GemmOut::F32(out)) => {
+                self.run_packed_f32(acts, sw, chunks, parallel, fill, scratch, out)
+            }
+            (GemmActs::Packed(acts), GemmOut::Quant { out, epi }) => {
+                self.run_packed_quant(acts, sw, chunks, &epi, parallel, fill, scratch, out)
+            }
+            (GemmActs::Tiles { src, positions }, GemmOut::F32(out)) => {
+                self.run_tiles_f32(src, sw, chunks, positions, parallel, fill, scratch, out)
+            }
+            (GemmActs::Tiles { src, positions }, GemmOut::Quant { out, epi }) => {
+                self.run_tiles_quant(src, sw, chunks, &epi, positions, parallel, fill, scratch, out)
+            }
+        }
     }
 
     /// Scratch lanes this engine's dispatch can use concurrently: the
@@ -562,25 +682,28 @@ impl MixedGemm {
         self.pool.as_ref().map_or(1, |p| p.threads() + 1)
     }
 
-    /// The allocation-free dispatch at the bottom of the compiled-plan
-    /// path: run the mixed GEMM over the class-sorted layout `sw` with a
-    /// precompiled `chunks` schedule (see [`chunk_tasks`]), MACing
-    /// through caller-provided `scratch` lanes in [`MICRO_ROWS`]-row
-    /// micro-kernel blocks and scattering into the caller-provided `out`
-    /// (model row order, via the stored permutation), which must already
-    /// be sized to `(acts.rows, sw.rows)`. No heap allocation happens
-    /// here once `scratch` has warmed up to the batch size.
+    /// [`GemmCall`] kernel: explicit packed activations, f32 output.
+    /// Allocation-free: runs the mixed GEMM over the class-sorted layout
+    /// `sw` with a precompiled `chunks` schedule (see [`chunk_tasks`]),
+    /// MACing through caller-provided `scratch` lanes in
+    /// [`MICRO_ROWS`]-row micro-kernel blocks and scattering into the
+    /// caller-provided `out` (model row order, via the stored
+    /// permutation), which must already be sized to `(acts.rows,
+    /// sw.rows)`. No heap allocation happens here once `scratch` has
+    /// warmed up to the batch size.
     ///
-    /// Cells of rows absent from `chunks` are zeroed; every chunked row
-    /// is written by exactly one chunk, so the result is bit-exact vs
-    /// the sequential path for any chunk schedule, thread count, and
-    /// kernel ISA.
-    pub fn run_partitioned_into(
+    /// With `fill`, cells of rows absent from `chunks` are zeroed; every
+    /// chunked row is written by exactly one chunk, so the result is
+    /// bit-exact vs the sequential path for any chunk schedule, thread
+    /// count, and kernel ISA.
+    #[allow(clippy::too_many_arguments)]
+    fn run_packed_f32(
         &self,
         acts: &PackedActs,
         sw: &SortedWeights,
         chunks: &[TaskChunk],
         parallel: bool,
+        fill: bool,
         scratch: &mut GemmScratch,
         out: &mut Mat,
     ) {
@@ -589,9 +712,10 @@ impl MixedGemm {
         let batch = acts.rows;
         // a full schedule (each sorted row exactly once — the only shape
         // `chunk_tasks` produces) overwrites every cell, so zeroing is
-        // only needed for partial schedules
+        // only needed for partial standalone schedules; `fill = false`
+        // callers (the depthwise per-group loop) own the union contract
         let covered: usize = chunks.iter().map(|c| c.end - c.start).sum();
-        if covered < sw.rows {
+        if fill && covered < sw.rows {
             out.data.fill(0.0);
         }
         let use_pool = parallel
@@ -643,53 +767,72 @@ impl MixedGemm {
         });
     }
 
-    /// The integer-resident twin of [`MixedGemm::run_partitioned_into`]:
-    /// run the mixed GEMM and map every accumulator straight to the
-    /// *consumer layer's* activation code — `rq.code(dequant + bias)`,
-    /// the fused dequant → bias → ReLU → requantize epilogue
-    /// ([`requant_block`]) — scattering codes into `out` in the
-    /// requested [`OutLayout`]. For the conv layout (`Nchw`) this also
-    /// fuses the col2im fold, so the integer path writes the next
-    /// layer's NCHW code slot directly: no f32 staging matrix, no
-    /// separate bias/ReLU pass, no col2im, no requantize pass.
+    /// Pre-fill every output cell with the code its row would hold under
+    /// a zero accumulator: `rq.code(bias[row])`, or `rq.code(bias[row] +
+    /// addend[cell])` when the epilogue carries a fused residual. This
+    /// matches the f32 path's semantics for rows absent from a partial
+    /// standalone schedule (zeroed accumulator, then the bias/add
+    /// epilogue); chunked rows are simply overwritten.
+    fn prefill_quant(epi: &QuantEpilogue<'_>, batch: usize, rows: usize, out: &mut [u8]) {
+        for orig in 0..rows {
+            match epi.addend {
+                None => {
+                    let c = epi.rq.code(epi.bias[orig]);
+                    for b in 0..batch {
+                        out[epi.layout.index(b, orig)] = c;
+                    }
+                }
+                Some(add) => {
+                    for b in 0..batch {
+                        let idx = epi.layout.index(b, orig);
+                        out[idx] = epi.rq.code(epi.bias[orig] + add[idx]);
+                    }
+                }
+            }
+        }
+    }
+
+    /// [`GemmCall`] kernel: explicit packed activations, quantized
+    /// output. Runs the mixed GEMM and maps every accumulator straight
+    /// to the *consumer layer's* activation code — `rq.code(dequant +
+    /// bias [+ addend])`, the fused dequant → bias → add → ReLU →
+    /// requantize epilogue ([`requant_block`]) — scattering codes into
+    /// `out` in the requested [`OutLayout`]. For the conv layout
+    /// (`Nchw`) this also fuses the col2im fold, so the integer path
+    /// writes the next layer's NCHW code slot directly: no f32 staging
+    /// matrix, no separate bias/ReLU pass, no col2im, no requantize
+    /// pass.
     ///
-    /// `bias` is in model row order (the epilogue gathers it through the
-    /// sorted layout's permutation). Codes are bit-exact vs running the
-    /// f32-resident path and quantizing its stored output at the top of
-    /// the next layer, for any chunk schedule, thread count, and kernel
-    /// ISA (same argument as the f32 dispatch: disjoint cells, identical
-    /// per-row arithmetic, and the epilogue is per-cell). Rows absent
-    /// from a partial schedule hold `rq.code(bias[row])` — the code the
-    /// f32 path's zeroed accumulator would produce after its bias pass.
-    pub fn run_partitioned_quant_into(
+    /// `epi.bias` is in model row order (the epilogue gathers it through
+    /// the sorted layout's permutation). Codes are bit-exact vs running
+    /// the f32-resident path and quantizing its stored output at the top
+    /// of the next layer, for any chunk schedule, thread count, and
+    /// kernel ISA (same argument as the f32 dispatch: disjoint cells,
+    /// identical per-row arithmetic, and the epilogue is per-cell). With
+    /// `fill`, rows absent from a partial schedule hold the
+    /// zero-accumulator code (see [`MixedGemm::prefill_quant`]).
+    #[allow(clippy::too_many_arguments)]
+    fn run_packed_quant(
         &self,
         acts: &PackedActs,
         sw: &SortedWeights,
         chunks: &[TaskChunk],
-        bias: &[f32],
-        rq: Requant,
-        layout: OutLayout,
+        epi: &QuantEpilogue<'_>,
         parallel: bool,
+        fill: bool,
         scratch: &mut GemmScratch,
         out: &mut [u8],
     ) {
         assert_eq!(acts.cols, sw.cols, "inner dims");
-        assert_eq!(bias.len(), sw.rows, "bias length");
-        assert_eq!(out.len(), layout.len(acts.rows, sw.rows), "output length");
+        assert_eq!(epi.bias.len(), sw.rows, "bias length");
+        assert_eq!(out.len(), epi.layout.len(acts.rows, sw.rows), "output length");
+        if let Some(add) = epi.addend {
+            assert_eq!(add.len(), out.len(), "addend length");
+        }
         let batch = acts.rows;
         let covered: usize = chunks.iter().map(|c| c.end - c.start).sum();
-        if covered < sw.rows {
-            // match the f32 path's semantics for rows absent from the
-            // schedule: their accumulator is zero, so their cells hold
-            // the code of the bias alone. Pre-fill every row (chunked
-            // rows are overwritten) — this path never runs on the plan's
-            // full schedules.
-            for orig in 0..sw.rows {
-                let c = rq.code(bias[orig]);
-                for b in 0..batch {
-                    out[layout.index(b, orig)] = c;
-                }
-            }
+        if fill && covered < sw.rows {
+            MixedGemm::prefill_quant(epi, batch, sw.rows, out);
         }
         let use_pool = parallel
             && self.pool.is_some()
@@ -698,6 +841,7 @@ impl MixedGemm {
 
         let ptr = SyncOutPtr { p: out.as_mut_ptr() };
         let view = acts.view();
+        let (bias, rq, layout, addend) = (epi.bias, epi.rq, epi.layout, epi.addend);
 
         if !use_pool {
             let lane = scratch.lane0_block(batch);
@@ -713,6 +857,7 @@ impl MixedGemm {
                         bias,
                         rq,
                         layout,
+                        addend,
                         &mut lane.acc,
                         &mut lane.col,
                         &mut lane.codes,
@@ -728,9 +873,9 @@ impl MixedGemm {
         let lanes = SyncLanesPtr { p: scratch.lanes.as_mut_ptr() };
         pool.scoped_for_indexed(chunks.len(), |ti, lane| {
             let chunk = chunks[ti];
-            // SAFETY: as in `run_partitioned_into` — exclusive lane per
-            // drain loop, disjoint output cells per chunk in either
-            // layout, join barrier publishes the writes.
+            // SAFETY: as in `run_packed_f32` — exclusive lane per drain
+            // loop, disjoint output cells per chunk in either layout,
+            // join barrier publishes the writes.
             unsafe {
                 let l = &mut *lanes.p.add(lane);
                 self.run_chunk_quant(
@@ -741,6 +886,7 @@ impl MixedGemm {
                     bias,
                     rq,
                     layout,
+                    addend,
                     &mut l.acc,
                     &mut l.col,
                     &mut l.codes,
@@ -763,8 +909,8 @@ impl MixedGemm {
         tb
     }
 
-    /// The implicit-GEMM dispatch: like
-    /// [`MixedGemm::run_partitioned_into`], but the activation matrix is
+    /// [`GemmCall`] kernel: implicit column tiles, f32 output. Like
+    /// [`MixedGemm::run_packed_f32`], but the activation matrix is
     /// never materialized — the batch dimension (conv output positions)
     /// is walked in `panel_positions`-wide column tiles, each packed by
     /// `src` into a per-lane L1/L2-sized panel
@@ -774,19 +920,21 @@ impl MixedGemm {
     /// of every position), so tasks write disjoint cells for any
     /// schedule.
     ///
-    /// Bit-exact vs packing the full matrix and calling
-    /// `run_partitioned_into`: the panel rows hold exactly the codes the
-    /// explicit im2col + quantize would produce (shared gather kernel),
-    /// and per-cell arithmetic is identical — same K tiling, same i32
+    /// Bit-exact vs packing the full matrix and running the explicit
+    /// kernel: the panel rows hold exactly the codes the explicit
+    /// im2col + quantize would produce (shared gather kernel), and
+    /// per-cell arithmetic is identical — same K tiling, same i32
     /// accumulation, same dequant expression — for any panel width,
     /// thread count, and ISA.
-    pub fn run_implicit_into(
+    #[allow(clippy::too_many_arguments)]
+    fn run_tiles_f32(
         &self,
         src: &ColTileSource,
         sw: &SortedWeights,
         chunks: &[TaskChunk],
         panel_positions: usize,
         parallel: bool,
+        fill: bool,
         scratch: &mut GemmScratch,
         out: &mut Mat,
     ) {
@@ -794,7 +942,7 @@ impl MixedGemm {
         assert_eq!(src.cols(), sw.cols, "inner dims");
         assert_eq!((out.rows, out.cols), (batch, sw.rows), "output shape");
         let covered: usize = chunks.iter().map(|c| c.end - c.start).sum();
-        if covered < sw.rows {
+        if fill && covered < sw.rows {
             out.data.fill(0.0);
         }
         if batch == 0 || chunks.is_empty() {
@@ -847,47 +995,42 @@ impl MixedGemm {
         });
     }
 
-    /// The integer-resident twin of [`MixedGemm::run_implicit_into`]:
-    /// implicit column-tile packing on the way in, the fused
-    /// dequant → bias → ReLU → requantize epilogue and layout scatter
-    /// ([`MixedGemm::run_partitioned_quant_into`]) on the way out — the
-    /// conv hot path touches neither a col buffer nor an f32 staging
+    /// [`GemmCall`] kernel: implicit column tiles, quantized output —
+    /// implicit packing on the way in ([`MixedGemm::run_tiles_f32`]),
+    /// the fused dequant → bias → add → ReLU → requantize epilogue and
+    /// layout scatter ([`MixedGemm::run_packed_quant`]) on the way out.
+    /// The conv hot path touches neither a col buffer nor an f32 staging
     /// matrix. Same bit-exactness contract as both parents.
     #[allow(clippy::too_many_arguments)]
-    pub fn run_implicit_quant_into(
+    fn run_tiles_quant(
         &self,
         src: &ColTileSource,
         sw: &SortedWeights,
         chunks: &[TaskChunk],
-        bias: &[f32],
-        rq: Requant,
-        layout: OutLayout,
+        epi: &QuantEpilogue<'_>,
         panel_positions: usize,
         parallel: bool,
+        fill: bool,
         scratch: &mut GemmScratch,
         out: &mut [u8],
     ) {
         let batch = src.batch();
         assert_eq!(src.cols(), sw.cols, "inner dims");
-        assert_eq!(bias.len(), sw.rows, "bias length");
-        assert_eq!(out.len(), layout.len(batch, sw.rows), "output length");
+        assert_eq!(epi.bias.len(), sw.rows, "bias length");
+        assert_eq!(out.len(), epi.layout.len(batch, sw.rows), "output length");
+        if let Some(add) = epi.addend {
+            assert_eq!(add.len(), out.len(), "addend length");
+        }
         let covered: usize = chunks.iter().map(|c| c.end - c.start).sum();
-        if covered < sw.rows {
-            // rows absent from the schedule hold the code of their bias,
-            // matching the f32 path's zeroed accumulator (see
-            // `run_partitioned_quant_into`)
-            for orig in 0..sw.rows {
-                let c = rq.code(bias[orig]);
-                for b in 0..batch {
-                    out[layout.index(b, orig)] = c;
-                }
-            }
+        if fill && covered < sw.rows {
+            MixedGemm::prefill_quant(epi, batch, sw.rows, out);
         }
         if batch == 0 || chunks.is_empty() {
             return;
         }
         let ptr = SyncOutPtr { p: out.as_mut_ptr() };
         let use_pool = parallel && self.pool.is_some() && batch > 1;
+        let (bias, rq, layout, addend) = (epi.bias, epi.rq, epi.layout, epi.addend);
 
         if !use_pool {
             let tb = MixedGemm::panel_tile(batch, panel_positions, 1);
@@ -898,10 +1041,10 @@ impl MixedGemm {
                 let nb = tb.min(batch - b0);
                 let view = src.view(b0, nb, panel);
                 for chunk in chunks {
-                    // SAFETY: as in `run_implicit_into`.
+                    // SAFETY: as in `run_tiles_f32`.
                     unsafe {
                         self.run_chunk_quant(
-                            view, sw, *chunk, b0, bias, rq, layout, acc, col, codes, &ptr,
+                            view, sw, *chunk, b0, bias, rq, layout, addend, acc, col, codes, &ptr,
                         )
                     };
                 }
@@ -917,9 +1060,9 @@ impl MixedGemm {
         scratch.ensure(lanes_n, tb);
         let lanes = SyncLanesPtr { p: scratch.lanes.as_mut_ptr() };
         pool.scoped_for_indexed(ntiles, |ti, lane| {
-            // SAFETY: as in `run_implicit_into` — exclusive lane per
-            // drain loop, disjoint position ranges per tile in either
-            // layout, join barrier publishes the writes.
+            // SAFETY: as in `run_tiles_f32` — exclusive lane per drain
+            // loop, disjoint position ranges per tile in either layout,
+            // join barrier publishes the writes.
             unsafe {
                 let Lane { col, acc, codes, panel } = &mut *lanes.p.add(lane);
                 let b0 = ti * tb;
@@ -927,7 +1070,7 @@ impl MixedGemm {
                 let view = src.view(b0, nb, panel);
                 for chunk in chunks {
                     self.run_chunk_quant(
-                        view, sw, *chunk, b0, bias, rq, layout, acc, col, codes, &ptr,
+                        view, sw, *chunk, b0, bias, rq, layout, addend, acc, col, codes, &ptr,
                     );
                 }
             }
@@ -941,6 +1084,14 @@ impl MixedGemm {
     /// whole matrix (explicit dispatch, `b_base = 0`) or one packed
     /// column-tile panel whose rows are global positions
     /// `b_base..b_base + acts.rows` (implicit dispatch).
+    ///
+    /// With a fused `addend` the per-cell expression becomes
+    /// `rq.code(dequant + bias + addend[cell])` — requantize and
+    /// scatter collapse into one per-cell pass since the addend is
+    /// indexed in output layout. IEEE f32 addition is commutative, so
+    /// the sum is bit-identical to adding the addend to the stored f32
+    /// output afterwards; the unsigned quantizer's clamp at zero
+    /// subsumes a fused ReLU.
     ///
     /// # Safety
     ///
@@ -958,6 +1109,7 @@ impl MixedGemm {
         bias: &[f32],
         rq: Requant,
         layout: OutLayout,
+        addend: Option<&[f32]>,
         acc: &mut [i32],
         col: &mut [f32],
         codes: &mut [u8],
@@ -970,6 +1122,20 @@ impl MixedGemm {
         while r < chunk.end {
             let nr = MICRO_ROWS.min(chunk.end - r);
             core.run_block_tiled(acts, sw, r, nr, tile, self.isa, acc, col);
+            if let Some(add) = addend {
+                // fused-residual epilogue: per-cell, straight from the
+                // dequantized block — the codes staging buffer is idle
+                for j in 0..nr {
+                    let orig = sw.perm[r + j];
+                    let brow = bias[orig];
+                    for b in 0..batch {
+                        let idx = layout.index(b_base + b, orig);
+                        *out.p.add(idx) = rq.code(col[j * batch + b] + brow + add[idx]);
+                    }
+                }
+                r += nr;
+                continue;
+            }
             let mut bias_block = [0.0f32; MICRO_ROWS];
             for (j, b) in bias_block.iter_mut().enumerate().take(nr) {
                 *b = bias[sw.perm[r + j]];
@@ -1043,9 +1209,10 @@ impl MixedGemm {
         }
     }
 
-    /// Single-row dispatch used by the grouped-conv path: `out[b] += ...`
-    /// with the engine's tile size. `acc` is i32 scratch (len = batch).
-    pub fn run_row_into(
+    /// Single-row dispatch used by the reference interpreter's grouped
+    /// path: `out[b] += ...` with the engine's tile size. `acc` is i32
+    /// scratch (len = batch).
+    pub(crate) fn run_row_into(
         &self,
         acts: &PackedActs,
         w: &PackedWeights,
@@ -1130,6 +1297,49 @@ mod tests {
             .collect();
         let alpha: Vec<f32> = (0..rows).map(|r| default_alpha(w.row(r))).collect();
         (x, w, schemes, alpha)
+    }
+
+    // thin GemmCall builders so the grids below stay readable
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_f32(
+        g: &MixedGemm,
+        acts: GemmActs<'_>,
+        sw: &SortedWeights,
+        chunks: &[TaskChunk],
+        parallel: bool,
+        fill: bool,
+        scratch: &mut GemmScratch,
+        out: &mut Mat,
+    ) {
+        g.dispatch(
+            GemmCall { acts, weights: sw, chunks, parallel, fill, out: GemmOut::F32(out) },
+            scratch,
+        );
+    }
+
+    #[allow(clippy::too_many_arguments)]
+    fn dispatch_quant(
+        g: &MixedGemm,
+        acts: GemmActs<'_>,
+        sw: &SortedWeights,
+        chunks: &[TaskChunk],
+        epi: QuantEpilogue<'_>,
+        parallel: bool,
+        fill: bool,
+        scratch: &mut GemmScratch,
+        out: &mut [u8],
+    ) {
+        g.dispatch(
+            GemmCall {
+                acts,
+                weights: sw,
+                chunks,
+                parallel,
+                fill,
+                out: GemmOut::Quant { out, epi },
+            },
+            scratch,
+        );
     }
 
     #[test]
@@ -1230,7 +1440,7 @@ mod tests {
     }
 
     #[test]
-    fn run_partitioned_into_matches_allocating_path() {
+    fn dispatch_matches_allocating_path() {
         let (x, w, schemes, alpha) = rand_problem(33, 24, 5, 21);
         let acts = PackedActs::quantize(&x, 1.0, 4);
         let pw = PackedWeights::quantize(&w, &schemes, &alpha);
@@ -1247,7 +1457,16 @@ mod tests {
         let mut out = Mat::zeros(acts.rows, pw.rows);
         for parallel in [false, true] {
             out.data.fill(f32::NAN); // must be fully overwritten
-            g.run_partitioned_into(&acts, &sw, &chunks, parallel, &mut scratch, &mut out);
+            dispatch_f32(
+                &g,
+                GemmActs::Packed(&acts),
+                &sw,
+                &chunks,
+                parallel,
+                true,
+                &mut scratch,
+                &mut out,
+            );
             assert_eq!(out.data, want.data, "parallel={parallel}");
         }
     }
@@ -1262,13 +1481,22 @@ mod tests {
         let g = MixedGemm::new();
         let mut scratch = GemmScratch::new(1);
         let mut want = Mat::zeros(3, 12);
-        g.run_partitioned_into(&acts, &sw, &full, false, &mut scratch, &mut want);
+        dispatch_f32(&g, GemmActs::Packed(&acts), &sw, &full, false, true, &mut scratch, &mut want);
         // drop the last chunk: its rows must come back zeroed
         let partial = &full[..full.len() - 1];
         let dropped = full[full.len() - 1];
         let mut got = Mat::zeros(3, 12);
         got.data.fill(f32::NAN);
-        g.run_partitioned_into(&acts, &sw, partial, false, &mut scratch, &mut got);
+        dispatch_f32(
+            &g,
+            GemmActs::Packed(&acts),
+            &sw,
+            partial,
+            false,
+            true,
+            &mut scratch,
+            &mut got,
+        );
         for sr in 0..12 {
             let orig = sw.perm[sr];
             for b in 0..3 {
@@ -1276,6 +1504,188 @@ mod tests {
                     assert_eq!(got.at(b, orig), 0.0, "dropped row {sr} not zeroed");
                 } else {
                     assert_eq!(got.at(b, orig), want.at(b, orig));
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn no_fill_leaves_unchunked_cells_untouched() {
+        // the depthwise per-group contract: a fill=false call writes its
+        // chunks' rows and nothing else, so complementary calls compose
+        let (x, w, schemes, alpha) = rand_problem(12, 9, 3, 57);
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let sw = SortedWeights::from_packed(&pw);
+        let full = chunk_tasks(sw.partition(), 3);
+        let g = MixedGemm::new();
+        let mut scratch = GemmScratch::new(1);
+        let mut want = Mat::zeros(3, 12);
+        dispatch_f32(&g, GemmActs::Packed(&acts), &sw, &full, false, true, &mut scratch, &mut want);
+        // run the schedule one chunk at a time with fill=false: the
+        // sentinel must survive in every not-yet-written cell, and the
+        // union must equal the single full-schedule call
+        let mut got = Mat::zeros(3, 12);
+        got.data.fill(f32::NAN);
+        for (i, chunk) in full.iter().enumerate() {
+            let one = [*chunk];
+            dispatch_f32(
+                &g,
+                GemmActs::Packed(&acts),
+                &sw,
+                &one,
+                false,
+                false,
+                &mut scratch,
+                &mut got,
+            );
+            let written: usize = full[..=i].iter().map(|c| c.end - c.start).sum();
+            let nans = got.data.iter().filter(|v| v.is_nan()).count();
+            assert_eq!(nans, 3 * (12 - written), "chunk {i} touched foreign cells");
+        }
+        assert_eq!(got.data, want.data);
+
+        // quant flavor: bias-only cells must also survive
+        let bias: Vec<f32> = (0..12).map(|r| r as f32 * 0.01).collect();
+        let rq = Requant::new(0.9, 4);
+        let layout = OutLayout::RowMajor { cols: 12 };
+        let mut want_q = vec![0u8; 3 * 12];
+        dispatch_quant(
+            &g,
+            GemmActs::Packed(&acts),
+            &sw,
+            &full,
+            QuantEpilogue { bias: &bias, rq, layout, addend: None },
+            false,
+            true,
+            &mut scratch,
+            &mut want_q,
+        );
+        let mut got_q = vec![0xffu8; 3 * 12];
+        for chunk in &full {
+            let one = [*chunk];
+            dispatch_quant(
+                &g,
+                GemmActs::Packed(&acts),
+                &sw,
+                &one,
+                QuantEpilogue { bias: &bias, rq, layout, addend: None },
+                false,
+                false,
+                &mut scratch,
+                &mut got_q,
+            );
+        }
+        assert_eq!(got_q, want_q);
+    }
+
+    #[test]
+    fn fused_addend_matches_separate_add_then_requantize() {
+        // the epilogue-fusion contract: code(acc + bias + addend) must
+        // equal adding the addend to the stored f32 output and then
+        // requantizing — bit-exact in both layouts, seq and parallel,
+        // explicit and implicit
+        let (x, w, schemes, alpha) = rand_problem(16, 18, 6, 63);
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+        let sw = SortedWeights::from_packed(&pw);
+        let chunks = chunk_tasks(sw.partition(), 3);
+        let bias: Vec<f32> = (0..16).map(|r| (r as f32 - 7.0) * 0.02).collect();
+        let rq = Requant::new(0.7, 4);
+        let g = MixedGemm::with_config(ParallelConfig {
+            threads: 3,
+            tile_cols: 16,
+            min_rows_per_task: 3,
+        });
+        let mut scratch = GemmScratch::new(g.lanes());
+
+        let mut stage = Mat::zeros(6, 16);
+        dispatch_f32(
+            &g,
+            GemmActs::Packed(&acts),
+            &sw,
+            &chunks,
+            false,
+            true,
+            &mut scratch,
+            &mut stage,
+        );
+
+        let (channels, hw) = (16usize, 3usize); // batch 6 = 2 images x 3 positions
+        let mut rng = Rng::new(7);
+        for (layout, len) in [
+            (OutLayout::RowMajor { cols: 16 }, 6 * 16),
+            (OutLayout::Nchw { channels, hw }, 2 * channels * hw),
+        ] {
+            let addend: Vec<f32> = (0..len).map(|_| rng.uniform(-0.3, 0.3)).collect();
+            let mut want = vec![0u8; len];
+            for b in 0..6 {
+                for r in 0..16 {
+                    let idx = layout.index(b, r);
+                    want[idx] = rq.code(stage.at(b, r) + bias[r] + addend[idx]);
+                }
+            }
+            for parallel in [false, true] {
+                let mut got = vec![0xffu8; len];
+                dispatch_quant(
+                    &g,
+                    GemmActs::Packed(&acts),
+                    &sw,
+                    &chunks,
+                    QuantEpilogue { bias: &bias, rq, layout, addend: Some(&addend) },
+                    parallel,
+                    true,
+                    &mut scratch,
+                    &mut got,
+                );
+                assert_eq!(got, want, "explicit {layout:?} parallel={parallel}");
+                // implicit flavor: same epilogue over column tiles
+                let src = ColTileSource::Packed {
+                    codes: &acts.codes,
+                    rows: acts.rows,
+                    cols: acts.cols,
+                    alpha: 1.0,
+                    bits: 4,
+                };
+                let mut got = vec![0xffu8; len];
+                dispatch_quant(
+                    &g,
+                    GemmActs::Tiles { src: &src, positions: 4 },
+                    &sw,
+                    &chunks,
+                    QuantEpilogue { bias: &bias, rq, layout, addend: Some(&addend) },
+                    parallel,
+                    true,
+                    &mut scratch,
+                    &mut got,
+                );
+                assert_eq!(got, want, "implicit {layout:?} parallel={parallel}");
+            }
+            // partial schedule: dropped rows hold code(bias + addend)
+            let partial = &chunks[..chunks.len() - 1];
+            let dropped = chunks[chunks.len() - 1];
+            let mut got = vec![0xffu8; len];
+            dispatch_quant(
+                &g,
+                GemmActs::Packed(&acts),
+                &sw,
+                partial,
+                QuantEpilogue { bias: &bias, rq, layout, addend: Some(&addend) },
+                false,
+                true,
+                &mut scratch,
+                &mut got,
+            );
+            for sr in 0..16 {
+                let orig = sw.perm[sr];
+                for b in 0..6 {
+                    let idx = layout.index(b, orig);
+                    let w = if sr >= dropped.start && sr < dropped.end {
+                        rq.code(bias[orig] + addend[idx])
+                    } else {
+                        want[idx]
+                    };
+                    assert_eq!(got[idx], w, "partial sr {sr} b {b}");
                 }
             }
         }
@@ -1302,7 +1712,16 @@ mod tests {
 
         // reference: f32 dispatch, then the separate bias + requantize
         let mut stage = Mat::zeros(6, 24);
-        g.run_partitioned_into(&acts, &sw, &chunks, false, &mut scratch, &mut stage);
+        dispatch_f32(
+            &g,
+            GemmActs::Packed(&acts),
+            &sw,
+            &chunks,
+            false,
+            true,
+            &mut scratch,
+            &mut stage,
+        );
         let mut want_rm = vec![0u8; 6 * 24];
         for b in 0..6 {
             for r in 0..24 {
@@ -1323,27 +1742,37 @@ mod tests {
 
         for parallel in [false, true] {
             let mut got = vec![0xffu8; 6 * 24];
-            g.run_partitioned_quant_into(
-                &acts,
+            dispatch_quant(
+                &g,
+                GemmActs::Packed(&acts),
                 &sw,
                 &chunks,
-                &bias,
-                rq,
-                OutLayout::RowMajor { cols: 24 },
+                QuantEpilogue {
+                    bias: &bias,
+                    rq,
+                    layout: OutLayout::RowMajor { cols: 24 },
+                    addend: None,
+                },
                 parallel,
+                true,
                 &mut scratch,
                 &mut got,
             );
             assert_eq!(got, want_rm, "row-major parallel={parallel}");
             let mut got = vec![0xffu8; 2 * channels * hw];
-            g.run_partitioned_quant_into(
-                &acts,
+            dispatch_quant(
+                &g,
+                GemmActs::Packed(&acts),
                 &sw,
                 &chunks,
-                &bias,
-                rq,
-                OutLayout::Nchw { channels, hw },
+                QuantEpilogue {
+                    bias: &bias,
+                    rq,
+                    layout: OutLayout::Nchw { channels, hw },
+                    addend: None,
+                },
                 parallel,
+                true,
                 &mut scratch,
                 &mut got,
             );
@@ -1355,14 +1784,19 @@ mod tests {
         let partial = &chunks[..chunks.len() - 1];
         let dropped = chunks[chunks.len() - 1];
         let mut got = vec![0xffu8; 6 * 24];
-        g.run_partitioned_quant_into(
-            &acts,
+        dispatch_quant(
+            &g,
+            GemmActs::Packed(&acts),
             &sw,
             partial,
-            &bias,
-            rq,
-            OutLayout::RowMajor { cols: 24 },
+            QuantEpilogue {
+                bias: &bias,
+                rq,
+                layout: OutLayout::RowMajor { cols: 24 },
+                addend: None,
+            },
             false,
+            true,
             &mut scratch,
             &mut got,
         );
@@ -1421,7 +1855,16 @@ mod tests {
         });
         let mut scratch = GemmScratch::new(g.lanes());
         let mut want = Mat::zeros(batch, rows);
-        g.run_partitioned_into(&acts, &sw, &chunks, false, &mut scratch, &mut want);
+        dispatch_f32(
+            &g,
+            GemmActs::Packed(&acts),
+            &sw,
+            &chunks,
+            false,
+            true,
+            &mut scratch,
+            &mut want,
+        );
 
         let codes: Vec<u8> = acts.codes.clone();
         // NCHW codes for the Codes source: quantize the map itself
@@ -1442,12 +1885,13 @@ mod tests {
                 for (si, src) in sources.iter().enumerate() {
                     let mut got = Mat::zeros(batch, rows);
                     got.data.fill(f32::NAN);
-                    g.run_implicit_into(
-                        src,
+                    dispatch_f32(
+                        &g,
+                        GemmActs::Tiles { src, positions: panel_positions },
                         &sw,
                         &chunks,
-                        panel_positions,
                         parallel,
+                        true,
                         &mut scratch,
                         &mut got,
                     );
@@ -1504,22 +1948,29 @@ mod tests {
             (OutLayout::Nchw { channels: rows, hw }, n * rows * hw),
         ] {
             let mut want = vec![0u8; len];
-            g.run_partitioned_quant_into(
-                &acts, &sw, &chunks, &bias, rq, layout, false, &mut scratch, &mut want,
+            dispatch_quant(
+                &g,
+                GemmActs::Packed(&acts),
+                &sw,
+                &chunks,
+                QuantEpilogue { bias: &bias, rq, layout, addend: None },
+                false,
+                true,
+                &mut scratch,
+                &mut want,
             );
             let src = ColTileSource::F32 { data: &data, geo, alpha, bits };
             for panel_positions in [1usize, 3, 7, 512] {
                 for parallel in [false, true] {
                     let mut got = vec![0xffu8; len];
-                    g.run_implicit_quant_into(
-                        &src,
+                    dispatch_quant(
+                        &g,
+                        GemmActs::Tiles { src: &src, positions: panel_positions },
                         &sw,
                         &chunks,
-                        &bias,
-                        rq,
-                        layout,
-                        panel_positions,
+                        QuantEpilogue { bias: &bias, rq, layout, addend: None },
                         parallel,
+                        true,
                         &mut scratch,
                         &mut got,
                     );

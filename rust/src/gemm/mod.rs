@@ -7,9 +7,14 @@
 //!   a MAC is `acc += sign * (a << shift_adjust)`.
 //! * [`mixed`] — the row-partitioned mixed GEMM: rows are grouped by
 //!   scheme class and dispatched to their core, exactly like the FPGA
-//!   routes filter classes to PE arrays. Dispatch is multi-threaded and
-//!   cache-blocked (see [`ParallelConfig`]), bit-exact vs the sequential
-//!   path.
+//!   routes filter classes to PE arrays. One entry point
+//!   ([`MixedGemm::dispatch`] over a [`GemmCall`] descriptor) covers the
+//!   explicit/implicit × f32/quantized kernel matrix; dispatch is
+//!   multi-threaded and cache-blocked (see [`ParallelConfig`]),
+//!   bit-exact vs the sequential path.
+//! * [`depthwise`] — the grouped/depthwise conv driver: per-group
+//!   implicit-GEMM dispatches over per-group task schedules, no
+//!   materialized patch buffer.
 //! * [`sorted`] — the class-sorted kernel layout ([`SortedWeights`]):
 //!   rows permuted once at load so each class is one contiguous block,
 //!   with the permutation kept for output scatter.
@@ -28,6 +33,7 @@
 //! inference".
 
 pub mod cores;
+pub(crate) mod depthwise;
 pub mod mixed;
 pub mod nibble;
 pub mod packed;
@@ -37,7 +43,8 @@ pub mod sorted;
 
 pub use cores::{requant_block, requant_row, GemmCore, GemmFixed4, GemmFixed8, GemmPoT4, Requant};
 pub use mixed::{
-    chunk_tasks, GemmScratch, MixedGemm, OutLayout, ParallelConfig, RowPartition, TaskChunk,
+    chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, MixedGemm, OutLayout, ParallelConfig,
+    QuantEpilogue, RowPartition, TaskChunk,
 };
 pub use nibble::NibblePacked;
 pub use packed::{ActsView, PackedActs, PackedWeights};

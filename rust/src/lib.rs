@@ -42,26 +42,35 @@
 //! structure fully static, so inference is split into a one-time compile
 //! and an allocation-free run:
 //!
-//! * **Plan** ([`model::Plan`]) — at load time the manifest's op program
-//!   is compiled once: buffer names resolve to dense slot ids, per-op
-//!   geometry (im2col output dims, patch-matrix shapes, group slicing)
-//!   is precomputed and shape-checked, each layer's row partition is
-//!   chunked into a GEMM task schedule, every inter-layer edge gets an
-//!   **output domain** (u8 codes or f32 — see below), and a high-water
-//!   memory footprint is derived (`rmsmp plan` prints it, including
-//!   each slot's domain). The plan is immutable and shared
-//!   (`Arc<Plan>`).
+//! * **Plan** ([`model::Plan`], built by [`model::PlanBuilder`] — the
+//!   single entry point, `Plan::builder(..).capacity(..).config(..)
+//!   .build()`) — at load time the manifest's op program is **lowered**
+//!   to a typed IR (`model::ir`: buffer names resolve to dense slot
+//!   ids, per-op geometry is precomputed and shape-checked, each
+//!   layer's row partition is chunked into a GEMM task schedule — no
+//!   optimization), then rewritten by the **pass pipeline**
+//!   ([`model::passes`], see the table below): epilogue fusion, output
+//!   **domain** inference (u8 codes or f32 per inter-layer edge),
+//!   implicit-GEMM strategy, depthwise scheduling, dead-slot
+//!   elimination. Each pass is a pure IR rewrite, individually
+//!   toggleable via `PlanBuilder::disable_pass`, and reports what it
+//!   did ([`model::PassReport`] — `rmsmp plan` prints the per-pass
+//!   rewrite log next to each slot's domain and the footprint). The
+//!   high-water memory footprint is computed strictly **after** the
+//!   pipeline, from the optimized ops. The plan is immutable and
+//!   shared (`Arc<Plan>`).
 //! * **Integer-resident dataflow** — the paper's hardware never
 //!   dequantizes activations between layers (they are 4-bit Fixed
 //!   everywhere), and neither does this executor: where a value's only
 //!   consumers are quantized GEMMs agreeing on a clip scale, the
-//!   producing GEMM runs a **fused epilogue**
-//!   ([`gemm::MixedGemm::run_partitioned_quant_into`]) that maps each
-//!   i32 accumulator straight to the *next* layer's activation code —
-//!   one dequantizing multiply, the bias add, and the consumer's
-//!   requantization ([`gemm::Requant`]), with ReLU free because the
-//!   code clamp's lower bound is zero, and with the NCHW col2im fold
-//!   fused into the code scatter. The consumer's im2col then unrolls
+//!   producing GEMM runs a **fused epilogue** (a
+//!   [`gemm::QuantEpilogue`] in its [`gemm::MixedGemm::dispatch`]
+//!   descriptor) that maps each i32 accumulator straight to the *next*
+//!   layer's activation code — one dequantizing multiply, the bias
+//!   add, an optional fused residual addend (see epilogue fusion
+//!   below), and the consumer's requantization ([`gemm::Requant`]),
+//!   with ReLU free because the code clamp's lower bound is zero, and
+//!   with the NCHW col2im fold fused into the code scatter. The consumer's im2col then unrolls
 //!   the u8 code slot directly (padding is the literal code 0, which is
 //!   the code of 0.0 — the quantizer is unsigned and zero-point-free).
 //!   The f32 round-trip (dequant → store → im2col → requantize) exists
@@ -102,10 +111,34 @@
 //!   per-call-allocating interpreter survives as
 //!   `Executor::reference_infer`, the bit-exact oracle for the
 //!   differential property tests (plan output must equal it exactly,
-//!   including grouped conv and residual topologies). The pre-fusion
-//!   f32-resident plan is also still compilable
-//!   (`Plan::compile_with(.., false)`) — it is the baseline
-//!   `bench_runtime` reports the `requant_speedup` against.
+//!   including grouped conv and residual topologies). Every older
+//!   dataflow is still compilable by switching off the pass that
+//!   introduced it (`Plan::builder(..).disable_pass(..)`) — the
+//!   ablated twins are the baselines `bench_runtime` reports the
+//!   `requant_speedup` / `implicit_speedup` / `fusion_speedup` /
+//!   `depthwise_speedup` numbers against, and every pass subset is
+//!   differential-tested bit-exact in `tests/test_passes.rs`.
+//!
+//! ## Plan optimizer: rewrite passes over a typed IR
+//!
+//! Plan compilation is `Ir::lower` (resolve + shape-check only)
+//! followed by a fixed pipeline of graph-rewrite passes, each a pure
+//! `fn(&mut Ir) -> Result<PassReport>`:
+//!
+//! | pass | introduced | rewrite | bit-exactness obligation |
+//! |------|-----------|---------|--------------------------|
+//! | `epilogue_fusion` | PR 6 | folds `Add(+ReLU)` after a conv into the conv's GEMM epilogue (the addend joins the bias add; the orphaned Add and its slot disappear) | IEEE f32 `+` is commutative in `(acc+bias)+addend`; the requant clamp-at-0 subsumes ReLU |
+//! | `integer_resident` | PR 4 | marks edges whose consumers are all quantized GEMMs sharing a clip scale as u8-code-resident; bakes the consumer's [`gemm::Requant`] into the producer's epilogue | the fused epilogue performs the fallback's f32 ops in the same order |
+//! | `implicit` | PR 5 | switches non-grouped convs to streamed column-tile panels (no im2col matrix); retargets 1×1-only code slots to NHWC so unit convs alias them | the panel packer shares its gather/quantizer expressions with explicit im2col |
+//! | `depthwise` | PR 6 | gives grouped convs a per-group streamed panel GEMM schedule (replacing the row-by-row fallback) | per-group GEMMs reuse the same cores/chunks; groups write disjoint rows |
+//! | `dead_slot_elim` | PR 6 | drops domains from slots with no remaining readers or writers (fusion orphans) | dead slots are never read |
+//!
+//! Pass order is fixed: fusion first (so domain inference sees the
+//! fused graph), elimination last. A `finalize` step (not a pass, not
+//! skippable) then assigns f32 domains to every non-quantized write,
+//! and the footprint is recomputed from the rewritten ops — so a slot
+//! that became codes-only or dead after fusion budgets no f32 bytes,
+//! and streamed convs budget panels instead of patch matrices.
 //!
 //! ## Parallel execution model
 //!
@@ -146,13 +179,18 @@
 //!
 //! ## Kernel architecture
 //!
-//! The GEMM kernel layer is built from four pieces:
+//! Every mixed GEMM — packed activations or streamed conv panels, f32
+//! or quantizing output — goes through **one public entry point**:
+//! [`gemm::MixedGemm::dispatch`], taking a [`gemm::GemmCall`]
+//! descriptor (activation source [`gemm::GemmActs`], sorted weights,
+//! chunk schedule, output sink [`gemm::GemmOut`] with an optional
+//! [`gemm::QuantEpilogue`]). The kernel layer under it is built from
+//! five pieces:
 //!
 //! * **Implicit-GEMM panel packing** ([`gemm::ColTileSource`],
 //!   `gemm/panels.rs`) — convolutions never materialize the
-//!   `(N·OH·OW, C·k·k)` im2col matrix. The dispatch
-//!   ([`gemm::MixedGemm::run_implicit_into`] /
-//!   `run_implicit_quant_into`) walks the output positions in column
+//!   `(N·OH·OW, C·k·k)` im2col matrix. The `GemmActs::Tiles` dispatch
+//!   walks the output positions in column
 //!   tiles; each tile is packed into a per-lane, cache-sized u8 panel —
 //!   gathered straight from the producer's NCHW code slot, quantized on
 //!   the fly from an f32 slot (the `n/alpha` reciprocal and clamp
@@ -163,9 +201,18 @@
 //!   is packed — consumer-driven tiling instead of producer-driven
 //!   staging, the software analogue of streaming patches into the MAC
 //!   array. Parallelism rides the tile axis (tiles own disjoint output
-//!   positions). Grouped and in-place convs keep the explicit staged
-//!   path, so the workspace patch buffer shrinks to that fallback's
-//!   high-water mark (zero when every conv is implicit).
+//!   positions). In-place convs keep the explicit staged path, so the
+//!   workspace patch buffer shrinks to that fallback's high-water mark
+//!   (zero when every conv is streamed).
+//! * **Depthwise per-group streaming** (`gemm/depthwise.rs`) — grouped
+//!   convs get the same panel treatment instead of the old row-by-row
+//!   scalar fallback: the `depthwise` pass precompiles one chunk
+//!   schedule per group over the layer's class-sorted layout (group
+//!   rows stay contiguous inside each class block), and the kernel
+//!   runs one panel-streamed GEMM per group with `fill: false`, each
+//!   group writing its disjoint output-channel rows through the same
+//!   micro-kernels and (when the edge is integer-resident) the same
+//!   quantizing epilogue.
 //! * **Class-sorted layout** ([`gemm::SortedWeights`]) — at load time
 //!   each layer's rows are permuted so every scheme class occupies one
 //!   contiguous block (the scheme-code order PoT-4, Fixed-4, Fixed-8,

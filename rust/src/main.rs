@@ -195,7 +195,7 @@ fn cmd_plan(dir: &Path, args: &Args) -> Result<()> {
     let (m, w) = load_artifacts(dir)?;
     let cfg = parallel_cfg(args)?;
     let capacity = args.get_usize("batch", m.input_shape.first().copied().unwrap_or(1))?;
-    let plan = Plan::compile(&m, &w, capacity, &cfg)?;
+    let plan = Plan::builder(&m, &w).capacity(capacity).config(&cfg).build()?;
     print!("{}", plan.describe(&w, cfg.lanes()));
     Ok(())
 }

@@ -11,24 +11,32 @@
 //! zero heap allocation outright, parallel dispatch additionally boxes
 //! O(threads) pool jobs per GEMM).
 //!
-//! The plan path is **integer-resident**: where the plan's output-domain
-//! inference proved a value's only consumers are quantized GEMMs, the
-//! GEMM runs with the fused requantization epilogue
-//! ([`crate::gemm::MixedGemm::run_partitioned_quant_into`]) and the
-//! value flows to the next layer as u8 activation codes
-//! (`PlanOp::{Conv,Linear}::in_codes`/`out_quant`); only the input
-//! edge, Add/Gap operands, and the logits run through f32.
+//! Every GEMM goes through the engine's single entry point,
+//! [`crate::gemm::MixedGemm::dispatch`] over a [`crate::gemm::GemmCall`]
+//! descriptor; the plan's pass pipeline (see [`super::passes`]) decided
+//! at compile time which kernel each op selects:
 //!
-//! Convolutions are also **implicit**: non-grouped convs never
-//! materialize an im2col matrix. The executor hands the GEMM a
-//! [`ColTileSource`] over the input slot and the dispatch
-//! ([`crate::gemm::MixedGemm::run_implicit_into`] /
-//! `run_implicit_quant_into`) packs cache-resident column-tile panels
-//! on the fly — gathering u8 codes from the NCHW slot, quantizing f32
-//! during the gather, or (1×1 stride-1 pad-0 convs over an
-//! NHWC-retargeted slot) aliasing the slot outright with no copy.
-//! Grouped convs and in-place (input == out) convs keep the explicit
-//! staged path through the workspace patch buffer.
+//! * **integer-resident** (`in_codes`/`out_quant`): where output-domain
+//!   inference proved a value's only consumers are quantized GEMMs, the
+//!   GEMM runs with the fused requantization epilogue
+//!   ([`crate::gemm::QuantEpilogue`]) and the value flows to the next
+//!   layer as u8 activation codes; only the input edge, unfused
+//!   Add/Gap operands, and the logits run through f32.
+//! * **implicit** (`implicit`/`panel_positions`): non-grouped convs
+//!   never materialize an im2col matrix — the executor hands the GEMM a
+//!   [`ColTileSource`] over the input slot and the dispatch packs
+//!   cache-resident column-tile panels on the fly (gathering u8 codes
+//!   from the NCHW slot, quantizing f32 during the gather, or aliasing
+//!   NHWC-retargeted slots outright).
+//! * **fused residual** (`fused_add`): a following elementwise
+//!   Add(+ReLU) folded into the conv's epilogue — the addend slot joins
+//!   the fused epilogue on the quant path, or one aliased `add_slots`
+//!   pass on the f32 fallback; the standalone Add op is gone.
+//! * **depthwise** (`group_chunks`): grouped convs run as per-group
+//!   implicit dispatches ([`crate::gemm::MixedGemm::run_depthwise`])
+//!   with per-group task schedules — no materialized patch buffer. The
+//!   explicit per-row fallback survives only for plans compiled with
+//!   the `depthwise` pass disabled.
 //!
 //! The original name-resolving interpreter survives as
 //! [`Executor::reference_infer`]: the bit-exact oracle the differential
@@ -53,9 +61,10 @@ use std::time::Instant;
 
 use crate::ensure;
 use crate::err;
+use crate::gemm::depthwise::{DwConv, DwOut, DwSource};
 use crate::gemm::{
-    requant_row, ColTileSource, Isa, MixedGemm, OutLayout, PackedActs, ParallelConfig,
-    PatchGeometry,
+    requant_row, ColTileSource, GemmActs, GemmCall, GemmOut, Isa, MixedGemm, OutLayout,
+    PackedActs, ParallelConfig, PatchGeometry, QuantEpilogue,
 };
 use crate::quant::tensor::Tensor4;
 use crate::quant::Mat;
@@ -171,7 +180,12 @@ impl Executor {
         pool: Option<Arc<ThreadPool>>,
     ) -> Result<Executor> {
         let capacity = manifest.input_shape.first().copied().unwrap_or(1);
-        let plan = Arc::new(Plan::compile(&manifest, &weights, capacity, &cfg)?);
+        let plan = Arc::new(
+            Plan::builder(&manifest, &weights)
+                .capacity(capacity)
+                .config(&cfg)
+                .build()?,
+        );
         Executor::from_shared(Arc::new(manifest), Arc::new(weights), plan, cfg, pool)
     }
 
@@ -341,11 +355,14 @@ impl Executor {
                     panel_positions,
                     in_nhwc,
                     out_nhwc,
+                    fused_add,
+                    group_chunks,
                 } => {
                     let lw = &weights.layers[*layer];
                     let inp_len = n * in_c * in_h * in_w;
                     let hw = oh * ow;
                     let batch = n * hw;
+                    let out_len = n * lw.out_ch * hw;
                     if *implicit {
                         // implicit GEMM: no materialized im2col, no f32
                         // staging on the integer path — the dispatch
@@ -362,7 +379,12 @@ impl Executor {
                                 } else {
                                     OutLayout::Nchw { channels: lw.out_ch, hw }
                                 };
-                                let out_len = n * lw.out_ch * hw;
+                                // fused residual: the addend slot joins
+                                // the epilogue (it is always f32 — the
+                                // conv reads it elementwise, not as a
+                                // quantized GEMM input)
+                                let addend =
+                                    fused_add.as_ref().map(|fa| &ws.slots[fa.addend][..out_len]);
                                 if *in_codes {
                                     let (inp, outv) =
                                         slot_pair(&mut ws.code_slots, *input, *out);
@@ -374,17 +396,27 @@ impl Executor {
                                         lw.a_alpha,
                                         act_bits,
                                     );
-                                    gemm.run_implicit_quant_into(
-                                        &src,
-                                        &lw.sorted,
-                                        chunks,
-                                        &lw.bias,
-                                        *rq,
-                                        layout,
-                                        *panel_positions,
-                                        row_parallel,
+                                    gemm.dispatch(
+                                        GemmCall {
+                                            acts: GemmActs::Tiles {
+                                                src: &src,
+                                                positions: *panel_positions,
+                                            },
+                                            weights: &lw.sorted,
+                                            chunks,
+                                            parallel: row_parallel,
+                                            fill: true,
+                                            out: GemmOut::Quant {
+                                                out: &mut outv[..out_len],
+                                                epi: QuantEpilogue {
+                                                    bias: &lw.bias,
+                                                    rq: *rq,
+                                                    layout,
+                                                    addend,
+                                                },
+                                            },
+                                        },
                                         &mut ws.scratch,
-                                        &mut outv[..out_len],
                                     );
                                 } else {
                                     ws.code_slots[*out].resize(out_len, 0);
@@ -394,17 +426,27 @@ impl Executor {
                                         alpha: lw.a_alpha,
                                         bits: act_bits,
                                     };
-                                    gemm.run_implicit_quant_into(
-                                        &src,
-                                        &lw.sorted,
-                                        chunks,
-                                        &lw.bias,
-                                        *rq,
-                                        layout,
-                                        *panel_positions,
-                                        row_parallel,
+                                    gemm.dispatch(
+                                        GemmCall {
+                                            acts: GemmActs::Tiles {
+                                                src: &src,
+                                                positions: *panel_positions,
+                                            },
+                                            weights: &lw.sorted,
+                                            chunks,
+                                            parallel: row_parallel,
+                                            fill: true,
+                                            out: GemmOut::Quant {
+                                                out: &mut ws.code_slots[*out][..out_len],
+                                                epi: QuantEpilogue {
+                                                    bias: &lw.bias,
+                                                    rq: *rq,
+                                                    layout,
+                                                    addend,
+                                                },
+                                            },
+                                        },
                                         &mut ws.scratch,
-                                        &mut ws.code_slots[*out][..out_len],
                                     );
                                 }
                             }
@@ -418,14 +460,19 @@ impl Executor {
                                         lw.a_alpha,
                                         act_bits,
                                     );
-                                    gemm.run_implicit_into(
-                                        &src,
-                                        &lw.sorted,
-                                        chunks,
-                                        *panel_positions,
-                                        row_parallel,
+                                    gemm.dispatch(
+                                        GemmCall {
+                                            acts: GemmActs::Tiles {
+                                                src: &src,
+                                                positions: *panel_positions,
+                                            },
+                                            weights: &lw.sorted,
+                                            chunks,
+                                            parallel: row_parallel,
+                                            fill: true,
+                                            out: GemmOut::F32(&mut ws.stage),
+                                        },
                                         &mut ws.scratch,
-                                        &mut ws.stage,
                                     );
                                 } else {
                                     let src = ColTileSource::F32 {
@@ -434,16 +481,122 @@ impl Executor {
                                         alpha: lw.a_alpha,
                                         bits: act_bits,
                                     };
-                                    gemm.run_implicit_into(
-                                        &src,
-                                        &lw.sorted,
-                                        chunks,
-                                        *panel_positions,
-                                        row_parallel,
+                                    gemm.dispatch(
+                                        GemmCall {
+                                            acts: GemmActs::Tiles {
+                                                src: &src,
+                                                positions: *panel_positions,
+                                            },
+                                            weights: &lw.sorted,
+                                            chunks,
+                                            parallel: row_parallel,
+                                            fill: true,
+                                            out: GemmOut::F32(&mut ws.stage),
+                                        },
                                         &mut ws.scratch,
-                                        &mut ws.stage,
                                     );
                                 }
+                            }
+                        }
+                        st.gemm_ns += t.elapsed().as_nanos() as u64;
+                        macs += (batch * lw.rows * lw.cols) as u64;
+                    } else if !group_chunks.is_empty() {
+                        // depthwise/grouped specialization: per-group
+                        // implicit dispatches over the compiled per-group
+                        // schedules — no materialized patch buffer
+                        let t = Instant::now();
+                        match out_quant {
+                            Some(rq) => {
+                                let layout = OutLayout::Nchw { channels: lw.out_ch, hw };
+                                if *in_codes {
+                                    let (inp, outv) =
+                                        slot_pair(&mut ws.code_slots, *input, *out);
+                                    outv.resize(out_len, 0);
+                                    gemm.run_depthwise(
+                                        DwConv {
+                                            src: DwSource::Codes(&inp[..inp_len]),
+                                            n,
+                                            c: *in_c,
+                                            h: *in_h,
+                                            w: *in_w,
+                                            k: *k,
+                                            stride: *stride,
+                                            pad: *pad,
+                                            ch_per_group: *ch_per_group,
+                                            alpha: lw.a_alpha,
+                                            bits: act_bits,
+                                            weights: &lw.sorted,
+                                            group_chunks,
+                                            panel_positions: *panel_positions,
+                                            parallel: row_parallel,
+                                        },
+                                        &mut ws.scratch,
+                                        DwOut::Quant {
+                                            out: &mut outv[..out_len],
+                                            bias: &lw.bias,
+                                            rq: *rq,
+                                            layout,
+                                        },
+                                    );
+                                } else {
+                                    ws.code_slots[*out].resize(out_len, 0);
+                                    let (slots, code_slots) = (&ws.slots, &mut ws.code_slots);
+                                    gemm.run_depthwise(
+                                        DwConv {
+                                            src: DwSource::F32(&slots[*input][..inp_len]),
+                                            n,
+                                            c: *in_c,
+                                            h: *in_h,
+                                            w: *in_w,
+                                            k: *k,
+                                            stride: *stride,
+                                            pad: *pad,
+                                            ch_per_group: *ch_per_group,
+                                            alpha: lw.a_alpha,
+                                            bits: act_bits,
+                                            weights: &lw.sorted,
+                                            group_chunks,
+                                            panel_positions: *panel_positions,
+                                            parallel: row_parallel,
+                                        },
+                                        &mut ws.scratch,
+                                        DwOut::Quant {
+                                            out: &mut code_slots[*out][..out_len],
+                                            bias: &lw.bias,
+                                            rq: *rq,
+                                            layout,
+                                        },
+                                    );
+                                }
+                            }
+                            None => {
+                                ws.stage.resize(batch, lw.rows);
+                                let src = if *in_codes {
+                                    DwSource::Codes(&ws.code_slots[*input][..inp_len])
+                                } else {
+                                    DwSource::F32(&ws.slots[*input][..inp_len])
+                                };
+                                gemm.run_depthwise(
+                                    DwConv {
+                                        src,
+                                        n,
+                                        c: *in_c,
+                                        h: *in_h,
+                                        w: *in_w,
+                                        k: *k,
+                                        stride: *stride,
+                                        pad: *pad,
+                                        ch_per_group: *ch_per_group,
+                                        alpha: lw.a_alpha,
+                                        bits: act_bits,
+                                        weights: &lw.sorted,
+                                        group_chunks,
+                                        panel_positions: *panel_positions,
+                                        parallel: row_parallel,
+                                    },
+                                    &mut ws.scratch,
+                                    DwOut::F32(&mut ws.stage),
+                                );
                             }
                         }
                         st.gemm_ns += t.elapsed().as_nanos() as u64;
@@ -497,34 +650,49 @@ impl Executor {
                         match out_quant {
                             Some(rq) => {
                                 // fused epilogue: accumulator → consumer
-                                // code, bias + ReLU + requantize + NCHW
-                                // scatter all inside the GEMM dispatch
+                                // code, bias + add + ReLU + requantize +
+                                // NCHW scatter all inside the dispatch
                                 let t = Instant::now();
-                                let out_len = n * lw.out_ch * hw;
                                 ws.code_slots[*out].resize(out_len, 0);
-                                gemm.run_partitioned_quant_into(
-                                    &ws.acts,
-                                    &lw.sorted,
-                                    chunks,
-                                    &lw.bias,
-                                    *rq,
-                                    OutLayout::Nchw { channels: lw.out_ch, hw },
-                                    row_parallel,
+                                let addend =
+                                    fused_add.as_ref().map(|fa| &ws.slots[fa.addend][..out_len]);
+                                gemm.dispatch(
+                                    GemmCall {
+                                        acts: GemmActs::Packed(&ws.acts),
+                                        weights: &lw.sorted,
+                                        chunks,
+                                        parallel: row_parallel,
+                                        fill: true,
+                                        out: GemmOut::Quant {
+                                            out: &mut ws.code_slots[*out][..out_len],
+                                            epi: QuantEpilogue {
+                                                bias: &lw.bias,
+                                                rq: *rq,
+                                                layout: OutLayout::Nchw {
+                                                    channels: lw.out_ch,
+                                                    hw,
+                                                },
+                                                addend,
+                                            },
+                                        },
+                                    },
                                     &mut ws.scratch,
-                                    &mut ws.code_slots[*out][..out_len],
                                 );
                                 st.gemm_ns += t.elapsed().as_nanos() as u64;
                             }
                             None => {
                                 let t = Instant::now();
                                 ws.stage.resize(batch, lw.rows);
-                                gemm.run_partitioned_into(
-                                    &ws.acts,
-                                    &lw.sorted,
-                                    chunks,
-                                    row_parallel,
+                                gemm.dispatch(
+                                    GemmCall {
+                                        acts: GemmActs::Packed(&ws.acts),
+                                        weights: &lw.sorted,
+                                        chunks,
+                                        parallel: row_parallel,
+                                        fill: true,
+                                        out: GemmOut::F32(&mut ws.stage),
+                                    },
                                     &mut ws.scratch,
-                                    &mut ws.stage,
                                 );
                                 st.gemm_ns += t.elapsed().as_nanos() as u64;
                             }
@@ -613,14 +781,13 @@ impl Executor {
                         }
                     }
                     if out_quant.is_none() {
-                        // f32 fallback epilogue, shared by the grouped
-                        // and non-grouped paths: bias + relu over the
-                        // staging matrix, then fold into the output slot
-                        // (the integer path fused all of this into the
-                        // GEMM dispatch above)
+                        // f32 fallback epilogue, shared by every path
+                        // that staged through the f32 matrix: bias +
+                        // relu, fold into the output slot, then replay a
+                        // folded residual Add (the integer path fused
+                        // all of this into the GEMM dispatch above)
                         let t = Instant::now();
                         conv_bias_relu(&mut ws.stage, &lw.bias, *relu);
-                        let out_len = n * lw.out_ch * hw;
                         ws.slots[*out].resize(out_len, 0.0);
                         col2im_slice_into(
                             &ws.stage,
@@ -630,6 +797,12 @@ impl Executor {
                             *ow,
                             &mut ws.slots[*out][..out_len],
                         );
+                        if let Some(fa) = fused_add {
+                            // out = addend + conv — f32 addition is
+                            // commutative, so this is bit-identical to
+                            // the standalone Add op it replaced
+                            add_slots(&mut ws.slots, fa.addend, *out, *out, out_len, fa.relu);
+                        }
                         st.epilogue_ns += t.elapsed().as_nanos() as u64;
                     }
                 }
@@ -673,29 +846,40 @@ impl Executor {
                             let t = Instant::now();
                             let out_len = n * out_cols;
                             ws.code_slots[*out].resize(out_len, 0);
-                            gemm.run_partitioned_quant_into(
-                                &ws.acts,
-                                &lw.sorted,
-                                chunks,
-                                &lw.bias,
-                                *rq,
-                                OutLayout::RowMajor { cols: *out_cols },
-                                row_parallel,
+                            gemm.dispatch(
+                                GemmCall {
+                                    acts: GemmActs::Packed(&ws.acts),
+                                    weights: &lw.sorted,
+                                    chunks,
+                                    parallel: row_parallel,
+                                    fill: true,
+                                    out: GemmOut::Quant {
+                                        out: &mut ws.code_slots[*out][..out_len],
+                                        epi: QuantEpilogue {
+                                            bias: &lw.bias,
+                                            rq: *rq,
+                                            layout: OutLayout::RowMajor { cols: *out_cols },
+                                            addend: None,
+                                        },
+                                    },
+                                },
                                 &mut ws.scratch,
-                                &mut ws.code_slots[*out][..out_len],
                             );
                             st.gemm_ns += t.elapsed().as_nanos() as u64;
                         }
                         None => {
                             let t = Instant::now();
                             ws.stage.resize(n, lw.rows);
-                            gemm.run_partitioned_into(
-                                &ws.acts,
-                                &lw.sorted,
-                                chunks,
-                                row_parallel,
+                            gemm.dispatch(
+                                GemmCall {
+                                    acts: GemmActs::Packed(&ws.acts),
+                                    weights: &lw.sorted,
+                                    chunks,
+                                    parallel: row_parallel,
+                                    fill: true,
+                                    out: GemmOut::F32(&mut ws.stage),
+                                },
                                 &mut ws.scratch,
-                                &mut ws.stage,
                             );
                             st.gemm_ns += t.elapsed().as_nanos() as u64;
                             let t = Instant::now();

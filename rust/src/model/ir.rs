@@ -1,0 +1,273 @@
+//! The plan compiler's intermediate representation: `manifest.program`
+//! lowered to slot-indexed ops, before optimization.
+//!
+//! [`Ir::lower`] does name resolution and shape checking **only**: every
+//! buffer name becomes a dense [`SlotId`], every op gets its geometry
+//! (im2col dims, group split, GEMM task schedule) precomputed and
+//! validated, and nothing else. All dataflow decisions — output domains,
+//! conv strategy, epilogue fusion, depthwise specialization, dead-slot
+//! elimination — are rewrites applied afterwards by the pass pipeline in
+//! [`super::passes`]. The lowered IR is therefore the most conservative
+//! legal plan: every edge f32, every conv on the staged explicit path.
+//!
+//! The IR deliberately reuses the executor's op type ([`PlanOp`]): a
+//! pass rewrites exactly the struct the runner will walk, so there is no
+//! separate legalization step between "optimized IR" and "plan" — the
+//! builder seals the IR into a [`super::plan::Plan`] once the pipeline
+//! finishes.
+
+use std::collections::HashMap;
+
+use crate::ensure;
+use crate::err;
+use crate::gemm::{chunk_tasks, ParallelConfig, RowPartition};
+use crate::util::error::Result;
+
+use super::im2col::out_dim;
+use super::manifest::{Manifest, OpMeta};
+use super::plan::{define, PlanOp, SlotId, SlotKind, SlotSpec};
+use super::weights::ModelWeights;
+
+/// The mutable program the pass pipeline rewrites (see module docs).
+/// Slots and ops are exactly the plan's; the rest is the compile context
+/// passes need to make decisions (weights for scales and schemes, the
+/// capacity and chunking the schedules were sized for).
+pub(crate) struct Ir<'w> {
+    pub(crate) weights: &'w ModelWeights,
+    pub(crate) model: String,
+    pub(crate) capacity: usize,
+    pub(crate) chunk_rows: usize,
+    pub(crate) act_bits: u32,
+    pub(crate) input_slot: SlotId,
+    pub(crate) input_chw: (usize, usize, usize),
+    pub(crate) logits_slot: SlotId,
+    pub(crate) logits_cols: usize,
+    pub(crate) slots: Vec<SlotSpec>,
+    pub(crate) ops: Vec<PlanOp>,
+    pub(crate) layer_parts: Vec<RowPartition>,
+}
+
+impl<'w> Ir<'w> {
+    /// Lower `manifest.program` against `weights`: resolve names to slot
+    /// ids, precompute and shape-check per-op geometry, chunk the GEMM
+    /// task schedules. `capacity` (batch images) and `cfg` (task
+    /// granularity) are recorded for the passes that size panels and
+    /// schedules.
+    pub(crate) fn lower(
+        manifest: &Manifest,
+        weights: &'w ModelWeights,
+        capacity: usize,
+        cfg: &ParallelConfig,
+    ) -> Result<Ir<'w>> {
+        ensure!(
+            manifest.input_shape.len() == 4,
+            "manifest input_shape must be NCHW, got {:?}",
+            manifest.input_shape
+        );
+        let capacity = capacity.max(1);
+        let chunk_rows = cfg.min_rows_per_task.max(1);
+        let input_chw = (
+            manifest.input_shape[1],
+            manifest.input_shape[2],
+            manifest.input_shape[3],
+        );
+
+        let layer_parts: Vec<RowPartition> = weights
+            .layers
+            .iter()
+            .map(|l| RowPartition::from_schemes(&l.scheme))
+            .collect();
+
+        let mut slots: Vec<SlotSpec> = Vec::new();
+        let mut index: HashMap<String, SlotId> = HashMap::new();
+
+        // The program input is pre-seeded under the fixed name "in0",
+        // mirroring the interpreter's calling convention.
+        let input_kind = SlotKind::T4 { c: input_chw.0, h: input_chw.1, w: input_chw.2 };
+        let input_slot = 0;
+        slots.push(SlotSpec {
+            name: "in0".to_string(),
+            kind: input_kind,
+            per_image: input_kind.per_image(),
+            // `infer` seeds the input as floats — the first conv always
+            // quantizes (the f32 entry edge of the pipeline)
+            holds_f32: true,
+            holds_codes: false,
+            code_nhwc: false,
+        });
+        index.insert("in0".to_string(), input_slot);
+
+        // Every id in `index` has been written (define records the shape
+        // of the latest write in slots[id].kind), so lookup is the only
+        // failure mode.
+        let read = |slots: &[SlotSpec],
+                    index: &HashMap<String, SlotId>,
+                    name: &str|
+         -> Result<(SlotId, SlotKind)> {
+            let id = *index
+                .get(name)
+                .ok_or_else(|| err!("missing buffer {name}"))?;
+            Ok((id, slots[id].kind))
+        };
+
+        let mut ops = Vec::with_capacity(manifest.program.len());
+
+        for op in &manifest.program {
+            match op {
+                OpMeta::Conv { layer, input, out, relu } => {
+                    manifest.layer(layer)?;
+                    let li = weights.layer_index(layer)?;
+                    let lw = &weights.layers[li];
+                    let (in_id, kind) = read(&slots, &index, input)?;
+                    let SlotKind::T4 { c, h, w } = kind else {
+                        return Err(err!("conv {layer}: input {input} is not a 4-D buffer"));
+                    };
+                    let k = lw.kh;
+                    let stride = lw.stride;
+                    let pad = lw.pad;
+                    let groups = lw.groups.max(1);
+                    ensure!(stride >= 1, "conv {layer}: stride must be >= 1");
+                    ensure!(
+                        h + 2 * pad >= k && w + 2 * pad >= k,
+                        "conv {layer}: {k}x{k} kernel exceeds padded {h}x{w} input"
+                    );
+                    ensure!(
+                        c % groups == 0,
+                        "conv {layer}: {c} input channels not divisible by {groups} groups"
+                    );
+                    ensure!(
+                        lw.out_ch % groups == 0,
+                        "conv {layer}: {} filters not divisible by {groups} groups",
+                        lw.out_ch
+                    );
+                    ensure!(
+                        lw.rows == lw.out_ch,
+                        "conv {layer}: weight rows {} != out channels {}",
+                        lw.rows,
+                        lw.out_ch
+                    );
+                    let ch_per_group = c / groups;
+                    ensure!(
+                        ch_per_group * k * k == lw.cols,
+                        "conv {layer}: im2col cols {} != weight cols {}",
+                        ch_per_group * k * k,
+                        lw.cols
+                    );
+                    let oh = out_dim(h, k, stride, pad);
+                    let ow = out_dim(w, k, stride, pad);
+                    let out_kind = SlotKind::T4 { c: lw.out_ch, h: oh, w: ow };
+                    let out_id = define(&mut slots, &mut index, out, out_kind);
+                    let chunks = if groups == 1 {
+                        chunk_tasks(&layer_parts[li], chunk_rows)
+                    } else {
+                        Vec::new()
+                    };
+                    ops.push(PlanOp::Conv {
+                        layer: li,
+                        input: in_id,
+                        out: out_id,
+                        relu: *relu,
+                        in_c: c,
+                        in_h: h,
+                        in_w: w,
+                        oh,
+                        ow,
+                        k,
+                        stride,
+                        pad,
+                        groups,
+                        ch_per_group,
+                        filt_per_group: lw.out_ch / groups,
+                        chunks,
+                        in_codes: false,
+                        out_quant: None,
+                        implicit: false,
+                        panel_positions: 0,
+                        in_nhwc: false,
+                        out_nhwc: false,
+                        fused_add: None,
+                        group_chunks: Vec::new(),
+                    });
+                }
+                OpMeta::Linear { layer, input, out } => {
+                    manifest.layer(layer)?;
+                    let li = weights.layer_index(layer)?;
+                    let lw = &weights.layers[li];
+                    let (in_id, kind) = read(&slots, &index, input)?;
+                    let SlotKind::M { cols } = kind else {
+                        return Err(err!("linear {layer}: input {input} is not a 2-D buffer"));
+                    };
+                    ensure!(
+                        cols == lw.cols,
+                        "linear {layer}: input cols {cols} != weight cols {}",
+                        lw.cols
+                    );
+                    let out_id =
+                        define(&mut slots, &mut index, out, SlotKind::M {
+                            cols: lw.rows,
+                        });
+                    ops.push(PlanOp::Linear {
+                        layer: li,
+                        input: in_id,
+                        out: out_id,
+                        in_cols: lw.cols,
+                        out_cols: lw.rows,
+                        chunks: chunk_tasks(&layer_parts[li], chunk_rows),
+                        in_codes: false,
+                        out_quant: None,
+                    });
+                }
+                OpMeta::Add { a, b, out, relu } => {
+                    let (a_id, ka) = read(&slots, &index, a)?;
+                    let (b_id, kb) = read(&slots, &index, b)?;
+                    let (SlotKind::T4 { .. }, SlotKind::T4 { .. }) = (ka, kb) else {
+                        return Err(err!("add {a}+{b}: operands must be 4-D buffers"));
+                    };
+                    ensure!(
+                        ka.per_image() == kb.per_image(),
+                        "add shape mismatch {a} {b}"
+                    );
+                    let out_id = define(&mut slots, &mut index, out, ka);
+                    ops.push(PlanOp::Add {
+                        a: a_id,
+                        b: b_id,
+                        out: out_id,
+                        relu: *relu,
+                        per_image: ka.per_image(),
+                    });
+                }
+                OpMeta::Gap { input, out } => {
+                    let (in_id, kind) = read(&slots, &index, input)?;
+                    let SlotKind::T4 { c, h, w } = kind else {
+                        return Err(err!("gap: input {input} is not a 4-D buffer"));
+                    };
+                    let out_id =
+                        define(&mut slots, &mut index, out, SlotKind::M { cols: c });
+                    ops.push(PlanOp::Gap { input: in_id, out: out_id, c, h, w });
+                }
+            }
+        }
+
+        let logits_slot = *index
+            .get("logits")
+            .ok_or_else(|| err!("program produced no 'logits' matrix"))?;
+        let SlotKind::M { cols: logits_cols } = slots[logits_slot].kind else {
+            return Err(err!("program produced no 'logits' matrix"));
+        };
+
+        Ok(Ir {
+            weights,
+            model: manifest.model.clone(),
+            capacity,
+            chunk_rows,
+            act_bits: manifest.act_bits,
+            input_slot,
+            input_chw,
+            logits_slot,
+            logits_cols,
+            slots,
+            ops,
+            layer_parts,
+        })
+    }
+}

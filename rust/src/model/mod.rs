@@ -6,9 +6,14 @@
 //!   schemes, alphas) and packs them into [`crate::gemm::PackedWeights`].
 //! * [`im2col`]    — conv -> GEMM lowering for the integer path, with
 //!   `_into` variants that reuse workspace buffers.
-//! * [`plan`]      — the plan compiler: program names resolved to dense
-//!   slot ids, per-op geometry precomputed and shape-checked, GEMM task
-//!   schedules chunked, memory footprint sized — all once, at load time.
+//! * [`ir`]        — the compiler IR: the manifest lowered to
+//!   slot-indexed ops, shape-checked, with no optimization applied.
+//! * [`passes`]    — the plan optimizer: graph-rewrite passes (epilogue
+//!   fusion, domain inference, implicit-GEMM strategy, depthwise
+//!   specialization, dead-slot elimination), each reporting what it did.
+//! * [`plan`]      — [`plan::PlanBuilder`]: lower + optimize + seal into
+//!   an immutable [`Plan`], with the memory footprint computed from the
+//!   optimized ops — all once, at load time.
 //! * [`workspace`] — the preallocated mutable buffers one inference
 //!   stream reuses across calls (zero steady-state allocation).
 //! * [`graph`]     — the executor: walks the compiled plan against the
@@ -18,13 +23,18 @@
 
 pub mod graph;
 pub mod im2col;
+pub(crate) mod ir;
 pub mod manifest;
+pub mod passes;
 pub mod plan;
 pub mod weights;
 pub mod workspace;
 
 pub use graph::{Executor, Op, StageTimes};
 pub use manifest::Manifest;
-pub use plan::{Plan, PlanOp, PlanOptions};
+pub use passes::{PassReport, PASS_NAMES};
+pub use plan::{FusedAdd, Plan, PlanBuilder, PlanOp};
+#[allow(deprecated)]
+pub use plan::PlanOptions;
 pub use weights::{LayerWeights, ModelWeights};
 pub use workspace::Workspace;

@@ -1,0 +1,601 @@
+//! The plan optimizer: graph-rewrite passes over the lowered IR.
+//!
+//! [`super::plan::PlanBuilder`] lowers the manifest to the conservative
+//! baseline IR (every edge f32, every conv staged through explicit
+//! im2col) and then runs [`run_pipeline`]: a fixed sequence of pure
+//! rewrites, each `fn(&mut Ir) -> Result<PassReport>`. Every pass is
+//! individually optional (`PlanBuilder::disable_pass`) and must preserve
+//! bit-exactness against `reference_infer` — a pass may change *where*
+//! an arithmetic step happens (inside a fused GEMM epilogue, on a
+//! streamed panel, per channel group), never *what* is computed. The
+//! pipeline order is load-bearing:
+//!
+//! 1. [`epilogue_fusion`] — folds `Add(+ReLU)` ops into the producing
+//!    conv's epilogue, so later passes see the fused graph (the fused
+//!    output can then go integer-resident, which is the whole point of
+//!    fusing before domain inference).
+//! 2. [`integer_resident`] — output-domain inference (PR 4): decides per
+//!    GEMM write whether the value stays u8 activation codes.
+//! 3. [`implicit`] — conv-strategy selection (PR 5): non-grouped convs
+//!    stream column-tile panels instead of materializing im2col, plus
+//!    the NHWC code-layout retarget for unit-conv chains.
+//! 4. [`depthwise`] — grouped-conv specialization: per-group panel-GEMM
+//!    schedules replacing the row-by-row explicit fallback.
+//! 5. [`dead_slot_elim`] — slots orphaned by fusion stop being
+//!    allocated, so the footprint reports the true post-optimization
+//!    memory.
+//!
+//! After the pipeline, [`finalize`] marks the f32 domain of every
+//! non-quantized write (the inverse of what `integer_resident` claimed)
+//! and [`high_water`] recomputes the scratch footprint strictly from the
+//! rewritten ops — the pre-pass IR never leaks sizing.
+
+use crate::gemm::{Requant, RowPartition, TaskChunk};
+use crate::quant::Scheme;
+use crate::util::error::Result;
+
+use super::ir::Ir;
+use super::plan::{live_range_reads, op_reads, op_write, FusedAdd, PlanOp};
+
+/// Target size of one streamed activation panel (implicit GEMM and the
+/// depthwise per-group kernel): positions are chosen so
+/// `panel_positions * patch_cols` u8 codes land around half an L1d next
+/// to the weight tiles, clamped to keep at least a micro-kernel block's
+/// worth of positions and at most a reasonable tile.
+pub(crate) const PANEL_BYTES: usize = 32 * 1024;
+
+/// What one pass did to the IR: how many ops/slots it rewrote, plus a
+/// human-readable line per rewrite (printed by `rmsmp plan` and pinned
+/// by the pass-report golden test).
+#[derive(Clone, Debug, PartialEq)]
+pub struct PassReport {
+    /// Pass name, one of [`PASS_NAMES`].
+    pub pass: &'static str,
+    /// `false` when the pass was skipped via `disable_pass`.
+    pub enabled: bool,
+    /// Number of rewrites applied (0 = the pass matched nothing).
+    pub rewrites: usize,
+    /// One line per rewrite, in op order.
+    pub details: Vec<String>,
+}
+
+impl PassReport {
+    fn new(pass: &'static str) -> PassReport {
+        PassReport { pass, enabled: true, rewrites: 0, details: Vec::new() }
+    }
+}
+
+type Pass = fn(&mut Ir) -> Result<PassReport>;
+
+/// The fixed pipeline, in execution order (see module docs for why the
+/// order matters). `PlanBuilder::disable_pass` names entries of
+/// [`PASS_NAMES`].
+const PIPELINE: [(&str, Pass); 5] = [
+    ("epilogue_fusion", epilogue_fusion),
+    ("integer_resident", integer_resident),
+    ("implicit", implicit),
+    ("depthwise", depthwise),
+    ("dead_slot_elim", dead_slot_elim),
+];
+
+/// Names accepted by `PlanBuilder::disable_pass`, in pipeline order.
+pub const PASS_NAMES: [&str; 5] = [
+    "epilogue_fusion",
+    "integer_resident",
+    "implicit",
+    "depthwise",
+    "dead_slot_elim",
+];
+
+/// True iff `name` is a pass the pipeline knows.
+pub(crate) fn is_pass(name: &str) -> bool {
+    PASS_NAMES.contains(&name)
+}
+
+/// Run every enabled pass in pipeline order, then [`finalize`] the slot
+/// domains. Disabled passes still get a (disabled) report entry so the
+/// per-pass output always lists the full pipeline.
+pub(crate) fn run_pipeline(ir: &mut Ir, disabled: &[String]) -> Result<Vec<PassReport>> {
+    let mut reports = Vec::with_capacity(PIPELINE.len());
+    for (name, pass) in PIPELINE {
+        if disabled.iter().any(|d| d == name) {
+            reports.push(PassReport {
+                pass: name,
+                enabled: false,
+                rewrites: 0,
+                details: Vec::new(),
+            });
+        } else {
+            reports.push(pass(ir)?);
+        }
+    }
+    finalize(ir);
+    Ok(reports)
+}
+
+/// Epilogue fusion: fold an elementwise `Add(+ReLU)` into the GEMM
+/// epilogue of the conv immediately producing one of its operands.
+///
+/// `conv(x) -> t; add t + r -> y` becomes `conv(x) [+r] -> y` with
+/// [`FusedAdd`] carried on the conv: the epilogue computes
+/// `(acc*scale + bias) + r` per cell instead of staging `t`. Guards, in
+/// order:
+/// * the operand's producer is the conv **directly before** the add
+///   (adjacency also guarantees the addend's value cannot change
+///   between the conv and the add);
+/// * the conv is non-grouped and has no ReLU of its own (a conv-level
+///   ReLU would clamp before the add — not the program's semantics);
+/// * the add is the **sole** reader of the conv's output (checked with
+///   the same [`live_range_reads`] scan domain inference uses), so
+///   dropping the intermediate slot is observationally invisible;
+/// * no aliasing that would make the fused op read a cell it already
+///   wrote: the addend is not the add's output, the conv's input is not
+///   the add's output, and the two add operands are distinct.
+///
+/// f32 addition is commutative bit-for-bit, so the epilogue order
+/// `(conv + bias) + addend` matches the interpreter's `addend + conv`
+/// exactly; a fused ReLU is `max(0, .)` on the sum either way, and on
+/// the integer-resident path the unsigned activation quantizer's clamp
+/// at 0 subsumes it.
+fn epilogue_fusion(ir: &mut Ir) -> Result<PassReport> {
+    let mut rep = PassReport::new("epilogue_fusion");
+    let mut i = 1;
+    while i < ir.ops.len() {
+        let (a, b, add_out, add_relu) = match ir.ops[i] {
+            PlanOp::Add { a, b, out, relu, .. } => (a, b, out, relu),
+            _ => {
+                i += 1;
+                continue;
+            }
+        };
+        // try the conv directly before the add as producer of either
+        // operand (b first: `x + conv(x)` residuals name the conv second)
+        let fused = [(b, a), (a, b)].into_iter().any(|(operand, addend)| {
+            try_fuse_add(ir, i, operand, addend, add_out, add_relu)
+        });
+        if fused {
+            let layer = match &ir.ops[i - 1] {
+                PlanOp::Conv { layer, .. } => *layer,
+                _ => unreachable!("fusion target is a conv"),
+            };
+            rep.rewrites += 1;
+            rep.details.push(format!(
+                "fold add{} -> conv {} epilogue (out s{add_out})",
+                if add_relu { "+relu" } else { "" },
+                ir.weights.layers[layer].name,
+            ));
+            ir.ops.remove(i);
+        } else {
+            i += 1;
+        }
+    }
+    Ok(rep)
+}
+
+/// Try to fold the add at `ops[add_idx]` into the conv at `add_idx - 1`
+/// producing `operand` (see [`epilogue_fusion`] for the guard set).
+/// Returns whether the conv was rewritten; the caller removes the add.
+fn try_fuse_add(
+    ir: &mut Ir,
+    add_idx: usize,
+    operand: usize,
+    addend: usize,
+    add_out: usize,
+    add_relu: bool,
+) -> bool {
+    let ci = add_idx - 1;
+    match &ir.ops[ci] {
+        PlanOp::Conv { out, input, groups, relu, fused_add, .. } => {
+            // one fused addend per conv: a second fold would clobber the
+            // first (chained adds keep their standalone op)
+            if fused_add.is_some() {
+                return false;
+            }
+            if *out != operand || *groups != 1 || *relu {
+                return false;
+            }
+            if addend == operand || addend == add_out || *input == add_out {
+                return false;
+            }
+        }
+        _ => return false,
+    }
+    // sole-reader check: the conv output's live range must contain
+    // exactly the add (as an f32 read)
+    let (reads, _) = live_range_reads(&ir.ops, ci, ir.weights);
+    if !(reads.len() == 1 && reads[0].0 == add_idx && reads[0].1.is_none()) {
+        return false;
+    }
+    match &mut ir.ops[ci] {
+        PlanOp::Conv { out, fused_add, .. } => {
+            *out = add_out;
+            *fused_add = Some(FusedAdd { addend, relu: add_relu });
+        }
+        _ => unreachable!(),
+    }
+    true
+}
+
+/// Output-domain inference (PR 4's dataflow fusion, as a pass): decide,
+/// per op write, whether the value can stay integer-resident (u8
+/// activation codes) between layers.
+///
+/// A write's readers are its [`live_range_reads`]; the final write to
+/// the logits slot additionally has the implicit f32 read of the logits
+/// copy-out. The write is integer-resident iff the producing op is a
+/// GEMM, the range has at least one reader, every reader is a quantized
+/// GEMM input, and all readers agree on the clip scale — the epilogue
+/// then requantizes with exactly the scale those consumers would have
+/// used on an f32 buffer, which is what keeps the codes bit-exact vs
+/// the dequant-store-requantize dataflow. Anything else (Add operand,
+/// fused-add addend, Gap input, logits, scale disagreement) falls back
+/// to f32 for that edge only; [`finalize`] records those f32 domains.
+fn integer_resident(ir: &mut Ir) -> Result<PassReport> {
+    let mut rep = PassReport::new("integer_resident");
+    for i in 0..ir.ops.len() {
+        let (s, mut can_quant) = op_write(&ir.ops[i]);
+        // a grouped conv re-reads its input slot per group *after*
+        // emitting earlier groups' outputs, so an in == out alias would
+        // corrupt later groups on the integer path (the f32 path stages
+        // through the GEMM matrix and only writes the slot at the end);
+        // keep such writes f32
+        if let PlanOp::Conv { groups, input, out, .. } = &ir.ops[i] {
+            if *groups > 1 && input == out {
+                can_quant = false;
+            }
+        }
+        let (reads, overwritten) = live_range_reads(&ir.ops, i, ir.weights);
+        let mut read_kinds: Vec<Option<f32>> = reads.iter().map(|&(_, q)| q).collect();
+        if !overwritten && s == ir.logits_slot {
+            read_kinds.push(None);
+        }
+        let integer = can_quant
+            && !read_kinds.is_empty()
+            && read_kinds.iter().all(|k| k.is_some() && *k == read_kinds[0]);
+        if integer {
+            let rq =
+                Requant::new(read_kinds[0].expect("all readers quantized"), ir.act_bits);
+            match &mut ir.ops[i] {
+                PlanOp::Conv { out_quant, .. } | PlanOp::Linear { out_quant, .. } => {
+                    *out_quant = Some(rq)
+                }
+                _ => unreachable!("only GEMM ops can emit codes"),
+            }
+            for &(j, _) in &reads {
+                match &mut ir.ops[j] {
+                    PlanOp::Conv { in_codes, .. } | PlanOp::Linear { in_codes, .. } => {
+                        *in_codes = true
+                    }
+                    _ => unreachable!("integer readers are GEMM ops"),
+                }
+            }
+            ir.slots[s].holds_codes = true;
+            rep.rewrites += 1;
+            rep.details.push(format!(
+                "slot s{s} {} integer-resident ({} reader{})",
+                ir.slots[s].name,
+                reads.len(),
+                if reads.len() == 1 { "" } else { "s" },
+            ));
+        }
+    }
+    Ok(rep)
+}
+
+/// Conv-strategy selection (PR 5's implicit GEMM, as a pass): every
+/// non-grouped conv whose input and output slots differ streams
+/// column-tile panels instead of materializing the im2col matrix (an
+/// in-place conv cannot stream: the GEMM would read the input while
+/// writing the output). Panels are sized to [`PANEL_BYTES`].
+///
+/// The pass then retargets code-slot layouts: a code slot written only
+/// by non-grouped implicit convs and read only by implicit **unit**
+/// convs (1×1 stride-1 pad-0) is stored NHWC, so readers alias it
+/// directly as their GEMM activation panel — no gather, no copy. A conv
+/// with a fused addend pins its output NCHW: the addend is an f32
+/// feature map indexed in NCHW, and the fused epilogue indexes both
+/// through one layout.
+fn implicit(ir: &mut Ir) -> Result<PassReport> {
+    let mut rep = PassReport::new("implicit");
+    for op in ir.ops.iter_mut() {
+        if let PlanOp::Conv {
+            layer, input, out, groups, implicit, panel_positions, oh, ow, ..
+        } = op
+        {
+            if *groups == 1 && input != out {
+                *implicit = true;
+                *panel_positions =
+                    panel_width(ir.weights.layers[*layer].cols, *oh * *ow, ir.capacity);
+                rep.rewrites += 1;
+                rep.details.push(format!(
+                    "conv {} implicit (panel {} positions)",
+                    ir.weights.layers[*layer].name, *panel_positions,
+                ));
+            }
+        }
+    }
+    retarget_code_layouts(ir, &mut rep);
+    Ok(rep)
+}
+
+/// Panel width for one streamed conv: cache-sized, but never wider than
+/// the op's whole batch at plan capacity — a panel bigger than the
+/// operand is pure waste.
+fn panel_width(cols: usize, hw: usize, capacity: usize) -> usize {
+    (PANEL_BYTES / cols.max(1))
+        .clamp(8, 256)
+        .min((hw * capacity).max(1))
+}
+
+/// The NHWC retarget half of [`implicit`] (see its docs). Runs on
+/// whatever code slots domain inference produced — none when
+/// `integer_resident` was disabled, making this a no-op.
+fn retarget_code_layouts(ir: &mut Ir, rep: &mut PassReport) {
+    let mut nhwc: Vec<bool> = ir.slots.iter().map(|s| s.holds_codes).collect();
+    for op in ir.ops.iter() {
+        match op {
+            PlanOp::Conv {
+                input,
+                out,
+                out_quant,
+                in_codes,
+                implicit,
+                groups,
+                k,
+                stride,
+                pad,
+                fused_add,
+                ..
+            } => {
+                if out_quant.is_some() && !(*implicit && *groups == 1 && fused_add.is_none())
+                {
+                    nhwc[*out] = false;
+                }
+                let unit_reader =
+                    *implicit && *groups == 1 && *k == 1 && *stride == 1 && *pad == 0;
+                if *in_codes && !unit_reader {
+                    nhwc[*input] = false;
+                }
+            }
+            PlanOp::Linear { input, out, out_quant, in_codes, .. } => {
+                // linear code buffers are already row-major and consumed
+                // by the linear copy path; leave their layout alone
+                if out_quant.is_some() {
+                    nhwc[*out] = false;
+                }
+                if *in_codes {
+                    nhwc[*input] = false;
+                }
+            }
+            PlanOp::Add { .. } | PlanOp::Gap { .. } => {}
+        }
+    }
+    for (i, (spec, flag)) in ir.slots.iter_mut().zip(&nhwc).enumerate() {
+        spec.code_nhwc = *flag;
+        if *flag {
+            rep.details.push(format!("slot s{i} {} codes stored nhwc", spec.name));
+        }
+    }
+    for op in ir.ops.iter_mut() {
+        if let PlanOp::Conv { input, out, out_quant, in_codes, in_nhwc, out_nhwc, .. } = op {
+            if out_quant.is_some() {
+                *out_nhwc = nhwc[*out];
+            }
+            if *in_codes {
+                *in_nhwc = nhwc[*input];
+            }
+        }
+    }
+}
+
+/// Depthwise/grouped-conv specialization: replace the row-by-row
+/// explicit-im2col fallback with per-group streamed panel GEMMs.
+///
+/// The class-sorted weight layout sorts **stably**, so the rows of one
+/// channel group stay contiguous inside each scheme-class block; a
+/// group's GEMM schedule is then just one row range per class, chunked
+/// and interleaved exactly like [`crate::gemm::chunk_tasks`] does for a
+/// whole layer. The executor dispatches the groups sequentially — each
+/// against a column-tile panel source restricted to the group's input
+/// channels — with the partial-schedule prefill disabled, because the
+/// union of the per-group schedules covers every output row exactly
+/// once.
+fn depthwise(ir: &mut Ir) -> Result<PassReport> {
+    let mut rep = PassReport::new("depthwise");
+    for op in ir.ops.iter_mut() {
+        if let PlanOp::Conv {
+            layer, groups, filt_per_group, group_chunks, panel_positions, oh, ow, ..
+        } = op
+        {
+            if *groups > 1 {
+                let lw = &ir.weights.layers[*layer];
+                *group_chunks = group_task_chunks(
+                    &lw.scheme,
+                    &ir.layer_parts[*layer],
+                    *groups,
+                    *filt_per_group,
+                    ir.chunk_rows,
+                );
+                *panel_positions = panel_width(lw.cols, *oh * *ow, ir.capacity);
+                rep.rewrites += 1;
+                rep.details.push(format!(
+                    "conv {} depthwise ({} groups, panel {} positions)",
+                    lw.name, *groups, *panel_positions,
+                ));
+            }
+        }
+    }
+    Ok(rep)
+}
+
+/// Per-group GEMM task schedules over the class-sorted row layout (see
+/// [`depthwise`]): group `g`'s rows of class `c` occupy the sorted range
+/// `class_start(c) + |{r < g*fpg : scheme(r) = c}| ..` of length "class-c
+/// rows inside the group" — prefix counts over the model-order scheme
+/// vector, because the stable sort preserves model order within a class.
+fn group_task_chunks(
+    scheme: &[Scheme],
+    part: &RowPartition,
+    groups: usize,
+    filt_per_group: usize,
+    chunk_rows: usize,
+) -> Vec<Vec<TaskChunk>> {
+    let chunk = chunk_rows.max(1);
+    let mut out = Vec::with_capacity(groups);
+    // class-row counts below the current group boundary
+    let mut below = [0usize; 4];
+    for g in 0..groups {
+        let mut upto = below;
+        for r in g * filt_per_group..(g + 1) * filt_per_group {
+            upto[scheme[r] as usize] += 1;
+        }
+        // round-robin across the group's per-class sorted ranges in
+        // chunk-sized tasks, mirroring `chunk_tasks` for a whole layer
+        let mut offset = [0usize; 4];
+        let mut end = [0usize; 4];
+        for (k, &s) in RowPartition::CLASS_ORDER.iter().enumerate() {
+            let base = part.range(s).start;
+            offset[k] = base + below[k];
+            end[k] = base + upto[k];
+        }
+        let mut tasks = Vec::new();
+        loop {
+            let mut pushed = false;
+            for (k, &s) in RowPartition::CLASS_ORDER.iter().enumerate() {
+                let o = offset[k];
+                if o < end[k] {
+                    let e = end[k].min(o + chunk);
+                    tasks.push(TaskChunk { scheme: s, start: o, end: e });
+                    offset[k] = e;
+                    pushed = true;
+                }
+            }
+            if !pushed {
+                break;
+            }
+        }
+        out.push(tasks);
+        below = upto;
+    }
+    out
+}
+
+/// Dead-slot elimination: a slot neither read nor written by any op
+/// (epilogue fusion orphans the intermediate between a conv and its
+/// folded add) is marked dead — no domain flags, so the footprint
+/// allocates zero bytes for it. The program input and logits slots are
+/// always live.
+fn dead_slot_elim(ir: &mut Ir) -> Result<PassReport> {
+    let mut rep = PassReport::new("dead_slot_elim");
+    let mut live = vec![false; ir.slots.len()];
+    live[ir.input_slot] = true;
+    live[ir.logits_slot] = true;
+    for op in &ir.ops {
+        live[op_write(op).0] = true;
+        for (s, _) in op_reads(op, ir.weights) {
+            live[s] = true;
+        }
+    }
+    for (s, spec) in ir.slots.iter_mut().enumerate() {
+        if !live[s] {
+            spec.holds_f32 = false;
+            spec.holds_codes = false;
+            spec.code_nhwc = false;
+            rep.rewrites += 1;
+            rep.details.push(format!("slot s{s} {} dead", spec.name));
+        }
+    }
+    Ok(rep)
+}
+
+/// Mandatory post-pipeline step (not a pass — correctness, not
+/// optimization): every op write whose epilogue does **not** emit codes
+/// leaves its slot in the f32 domain, so the workspace allocates the f32
+/// buffer. With `integer_resident` disabled this marks every write;
+/// with it enabled, exactly the writes inference left unquantized.
+pub(crate) fn finalize(ir: &mut Ir) {
+    for op in &ir.ops {
+        let quant = matches!(
+            op,
+            PlanOp::Conv { out_quant: Some(_), .. } | PlanOp::Linear { out_quant: Some(_), .. }
+        );
+        if !quant {
+            ir.slots[op_write(op).0].holds_f32 = true;
+        }
+    }
+}
+
+/// Post-pipeline scratch high-water marks, per batch image (see
+/// [`super::plan::Footprint`]). Computed strictly from the rewritten
+/// ops: an op fused away, streamed, or specialized contributes nothing
+/// to the staging buffers it no longer touches.
+pub(crate) struct HighWater {
+    pub(crate) patch: usize,
+    pub(crate) acts: usize,
+    pub(crate) gemm_rows: usize,
+    pub(crate) gemm_out: usize,
+    pub(crate) panel_elems: usize,
+    pub(crate) panel_positions: usize,
+}
+
+pub(crate) fn high_water(ir: &Ir) -> HighWater {
+    let mut hwm = HighWater {
+        patch: 0,
+        acts: 0,
+        gemm_rows: 0,
+        gemm_out: 0,
+        panel_elems: 0,
+        panel_positions: 0,
+    };
+    for op in &ir.ops {
+        match op {
+            PlanOp::Conv {
+                layer,
+                oh,
+                ow,
+                implicit,
+                panel_positions,
+                group_chunks,
+                in_codes,
+                out_quant,
+                ..
+            } => {
+                let lw = &ir.weights.layers[*layer];
+                let hw = oh * ow;
+                if *implicit || !group_chunks.is_empty() {
+                    // streamed paths (implicit / depthwise): per-lane
+                    // panels, no patch/acts staging
+                    hwm.panel_elems = hwm.panel_elems.max(panel_positions * lw.cols);
+                    hwm.panel_positions = hwm.panel_positions.max(*panel_positions);
+                } else {
+                    // staged paths (explicit im2col, grouped row-by-row
+                    // fallback): integer-resident inputs skip the f32
+                    // patch matrix and go straight to codes
+                    if !*in_codes {
+                        hwm.patch = hwm.patch.max(hw * lw.cols);
+                    }
+                    hwm.acts = hwm.acts.max(hw * lw.cols);
+                    hwm.gemm_rows = hwm.gemm_rows.max(hw);
+                }
+                if out_quant.is_none() {
+                    hwm.gemm_out = hwm.gemm_out.max(hw * lw.out_ch);
+                }
+            }
+            PlanOp::Linear { layer, out_quant, .. } => {
+                let lw = &ir.weights.layers[*layer];
+                hwm.acts = hwm.acts.max(lw.cols);
+                hwm.gemm_rows = hwm.gemm_rows.max(1);
+                if out_quant.is_none() {
+                    hwm.gemm_out = hwm.gemm_out.max(lw.rows);
+                }
+            }
+            PlanOp::Add { .. } => {}
+            // gap stages its output through the GEMM staging matrix
+            // (aliasing-safe)
+            PlanOp::Gap { c, .. } => {
+                hwm.gemm_out = hwm.gemm_out.max(*c);
+            }
+        }
+    }
+    hwm
+}

@@ -3,14 +3,24 @@
 //! RMSMP's layer-wise-uniform row mixing makes the compute structure of a
 //! model fully static: every buffer shape, im2col geometry, group slice,
 //! and GEMM partition is derivable from the manifest + weights at load
-//! time. This module does that derivation **once** — resolving buffer
-//! names to dense slot ids, precomputing per-op geometry, shape-checking
-//! the whole program, chunking each layer's row partition into a GEMM
-//! task schedule, and sizing a high-water memory footprint — so that the
-//! executor's steady-state `infer` is a plain walk over precompiled ops
-//! against preallocated [`super::workspace::Workspace`] buffers, with no
-//! name resolution, no shape discovery, and no buffer allocation (see
-//! the crate docs for the exact per-mode zero-allocation guarantee).
+//! time. Compilation is a two-stage pipeline done **once**:
+//!
+//! 1. [`super::ir::Ir::lower`] resolves buffer names to dense slot ids,
+//!    precomputes per-op geometry, shape-checks the whole program, and
+//!    chunks each layer's row partition into a GEMM task schedule — the
+//!    conservative baseline plan (every edge f32, every conv explicit).
+//! 2. [`super::passes`] runs the optimizer: epilogue fusion, output-
+//!    domain inference, implicit-GEMM strategy selection, depthwise
+//!    specialization, dead-slot elimination — each an independently
+//!    toggleable rewrite with a [`PassReport`].
+//!
+//! [`PlanBuilder`] (the only public entry point) drives both stages and
+//! seals the result, recomputing the high-water memory [`Footprint`]
+//! from the *rewritten* ops, so that the executor's steady-state `infer`
+//! is a plain walk over precompiled ops against preallocated
+//! [`super::workspace::Workspace`] buffers, with no name resolution, no
+//! shape discovery, and no buffer allocation (see the crate docs for the
+//! exact per-mode zero-allocation guarantee).
 //!
 //! A `Plan` is immutable and shareable (`Arc<Plan>`): the serving
 //! coordinator compiles one per model and hands every worker the same
@@ -21,11 +31,12 @@ use std::fmt::Write as _;
 
 use crate::ensure;
 use crate::err;
-use crate::gemm::{chunk_tasks, ParallelConfig, Requant, RowPartition, TaskChunk, MICRO_ROWS};
+use crate::gemm::{ParallelConfig, Requant, RowPartition, TaskChunk, MICRO_ROWS};
 use crate::util::error::Result;
 
-use super::im2col::out_dim;
-use super::manifest::{Manifest, OpMeta};
+use super::ir::Ir;
+use super::manifest::Manifest;
+use super::passes::{self, PassReport};
 use super::weights::ModelWeights;
 
 /// Dense index of a program buffer ("in0", "b3", "logits", ...).
@@ -60,18 +71,37 @@ pub struct SlotSpec {
     /// High-water elements per batch image across every write.
     pub per_image: usize,
     /// Some write leaves this slot in the f32 domain (the workspace
-    /// allocates its f32 buffer). Set by the output-domain inference.
+    /// allocates its f32 buffer). Set by the pass pipeline's finalize
+    /// step for every non-quantized write.
     pub holds_f32: bool,
     /// Some write leaves this slot integer-resident — u8 activation
     /// codes of the consuming layer's quantizer (the workspace allocates
-    /// its u8 code buffer).
+    /// its u8 code buffer). Set by the `integer_resident` pass.
     pub holds_codes: bool,
     /// The code buffer is stored NHWC (row-major positions × channels)
-    /// instead of NCHW: the layout-retarget pass proved every code
-    /// writer is a non-grouped implicit conv and every code reader a
-    /// 1×1 stride-1 pad-0 conv, so the readers alias the slot directly
-    /// as their GEMM activation panel — no gather, no copy.
+    /// instead of NCHW: the layout-retarget step of the `implicit` pass
+    /// proved every code writer is a non-grouped implicit conv and every
+    /// code reader a 1×1 stride-1 pad-0 conv, so the readers alias the
+    /// slot directly as their GEMM activation panel — no gather, no
+    /// copy. A slot with no domain flags at all is **dead** (orphaned by
+    /// epilogue fusion): the workspace allocates nothing for it.
     pub code_nhwc: bool,
+}
+
+/// An elementwise `Add(+ReLU)` folded into a conv's GEMM epilogue by the
+/// `epilogue_fusion` pass: the epilogue computes
+/// `(acc * scale + bias) + addend` per output cell (then ReLU /
+/// requantize), instead of staging the conv output and running a
+/// separate Add op.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FusedAdd {
+    /// The f32 slot added cell-wise (NCHW, same shape as the conv
+    /// output). Guaranteed f32-resident: its producer sees an f32 read.
+    pub addend: SlotId,
+    /// Apply ReLU after the add (the fused Add op's relu flag; the conv
+    /// itself never has one — fusion requires `relu: false` on the
+    /// conv).
+    pub relu: bool,
 }
 
 /// One compiled op: slot ids + all geometry the runner needs, resolved
@@ -98,26 +128,26 @@ pub enum PlanOp {
         ch_per_group: usize,
         filt_per_group: usize,
         /// Precompiled GEMM task schedule (empty for grouped conv, which
-        /// dispatches row-by-row per group).
+        /// runs the per-group schedules in `group_chunks` or the
+        /// row-by-row fallback).
         chunks: Vec<TaskChunk>,
         /// The input slot is integer-resident: the GEMM reads u8 codes
         /// directly, skipping the f32 unroll + requantize.
         in_codes: bool,
         /// Integer-resident output: the GEMM epilogue maps accumulators
         /// straight to the consumer layer's activation codes (fused
-        /// dequant → bias → ReLU → requantize → NCHW scatter). `None` =
+        /// dequant → bias → add → ReLU → requantize → scatter). `None` =
         /// f32 fallback (consumer is Add/Gap/logits or consumers
         /// disagree on scale).
         out_quant: Option<Requant>,
         /// Run as an implicit GEMM: the executor streams the input
-        /// through column-tile panels
-        /// ([`crate::gemm::MixedGemm::run_implicit_into`]) instead of
-        /// materializing the im2col matrix. Compiled for non-grouped,
-        /// non-aliased (input != out) convs of an implicit-enabled plan.
+        /// through column-tile panels instead of materializing the
+        /// im2col matrix. Set by the `implicit` pass for non-grouped,
+        /// non-aliased (input != out) convs.
         implicit: bool,
         /// Packed panel width (output positions per column tile), sized
         /// so one panel (`panel_positions * cols` u8 codes) stays
-        /// cache-resident. 0 on the explicit path.
+        /// cache-resident. 0 on the staged explicit path.
         panel_positions: usize,
         /// The input code slot is stored NHWC (see
         /// [`SlotSpec::code_nhwc`]): alias it as the activation panel.
@@ -125,6 +155,13 @@ pub enum PlanOp {
         /// Emit output codes NHWC (RowMajor scatter) instead of NCHW —
         /// every consumer is a unit conv that will alias them.
         out_nhwc: bool,
+        /// Elementwise add folded into the epilogue (see [`FusedAdd`]).
+        fused_add: Option<FusedAdd>,
+        /// Depthwise/grouped specialization: one GEMM task schedule per
+        /// channel group over the class-sorted row layout. Non-empty iff
+        /// the `depthwise` pass specialized this grouped conv; empty
+        /// grouped convs take the row-by-row explicit fallback.
+        group_chunks: Vec<Vec<TaskChunk>>,
     },
     Linear {
         layer: usize,
@@ -157,25 +194,26 @@ pub enum PlanOp {
 
 /// Preallocation sizes for one workspace instance, all at `capacity`
 /// batch images. Single source of truth for [`super::Workspace`] and the
-/// `rmsmp plan` footprint report.
+/// `rmsmp plan` footprint report. Computed strictly **after** the pass
+/// pipeline, so slots that became codes-only or dead and staging an op
+/// no longer touches contribute nothing.
 #[derive(Clone, Debug)]
 pub struct Footprint {
     pub capacity: usize,
     pub lanes: usize,
     /// Per-slot f32 elements (0 for slots that are only ever
-    /// integer-resident).
+    /// integer-resident, and for dead slots).
     pub slot_elems: Vec<usize>,
     /// Per-slot u8 activation-code elements (0 for f32-only slots).
     pub code_slot_elems: Vec<usize>,
     /// im2col patch-matrix f32 elements — only the ops still on the
-    /// explicit path (grouped convs, or every conv when the plan was
-    /// compiled without implicit GEMM) stage through it, so for an
-    /// implicit plan this is the grouped-conv fallback high-water mark
-    /// (0 when every conv runs implicitly).
+    /// staged explicit path with an f32 input (grouped-conv fallback, or
+    /// every conv when the `implicit` pass is disabled) stage through
+    /// it (0 when every conv streams panels).
     pub patch_elems: usize,
-    /// Quantized activation codes (u8) — explicit-path convs and the
-    /// linear ops; implicit convs stream through per-lane panels
-    /// instead.
+    /// Quantized activation codes (u8) — staged explicit-path convs and
+    /// the linear ops; streamed convs (implicit / depthwise) go through
+    /// per-lane panels instead.
     pub acts_elems: usize,
     /// GEMM/Gap staging matrix f32 elements.
     pub gemm_out_elems: usize,
@@ -183,8 +221,9 @@ pub struct Footprint {
     /// block (an f32 output block + an i32 accumulator block of this
     /// many elements each).
     pub lane_elems: usize,
-    /// Per-lane implicit-GEMM panel bytes (u8 activation codes for one
-    /// `panel_positions`-wide column tile of the widest implicit conv).
+    /// Per-lane streamed-panel bytes (u8 activation codes for one
+    /// `panel_positions`-wide column tile of the widest implicit or
+    /// depthwise conv).
     pub panel_elems: usize,
     /// Logits output matrix f32 elements.
     pub logits_elems: usize,
@@ -203,7 +242,7 @@ impl Footprint {
     /// Bytes of the shared scratch (patches + acts + staging + lanes +
     /// logits). Each GEMM lane holds an f32 block, an i32 block, a u8
     /// code block for the fused requantization epilogue, and a u8
-    /// implicit-GEMM panel.
+    /// streamed activation panel.
     pub fn scratch_bytes(&self) -> usize {
         4 * self.patch_elems
             + self.acts_elems
@@ -218,7 +257,8 @@ impl Footprint {
     }
 }
 
-/// A compiled, immutable execution plan (see module docs).
+/// A compiled, immutable execution plan (see module docs). Built by
+/// [`Plan::builder`].
 #[derive(Clone, Debug)]
 pub struct Plan {
     pub model: String,
@@ -227,13 +267,13 @@ pub struct Plan {
     pub capacity: usize,
     /// GEMM rows per task chunk the schedules were compiled with.
     pub chunk_rows: usize,
-    /// Whether output-domain inference ran: integer-resident edges carry
-    /// u8 activation codes between GEMMs (`false` = every edge f32, the
-    /// pre-fusion baseline kept for benchmarking).
+    /// Whether the `integer_resident` pass ran: integer-resident edges
+    /// carry u8 activation codes between GEMMs (`false` = every edge
+    /// f32, the pre-fusion baseline kept for benchmarking).
     pub integer_resident: bool,
-    /// Whether non-grouped convs were compiled for the implicit-GEMM
-    /// path (`false` = the explicit-im2col baseline kept for
-    /// benchmarking).
+    /// Whether the `implicit` pass ran: non-grouped convs stream
+    /// column-tile panels (`false` = the explicit-im2col baseline kept
+    /// for benchmarking).
     pub implicit: bool,
     pub act_bits: u32,
     pub input_slot: SlotId,
@@ -251,16 +291,22 @@ pub struct Plan {
     pub max_acts_per_image: usize,
     pub max_gemm_rows_per_image: usize,
     pub max_gemm_out_per_image: usize,
-    /// Widest implicit-GEMM panel (u8 elements, absolute — a panel's
-    /// size is batch-independent) and its position count.
+    /// Widest streamed panel (u8 elements, absolute — a panel's size is
+    /// batch-independent) and its position count.
     pub max_panel_elems: usize,
     pub max_panel_positions: usize,
+    /// What each optimizer pass did (pipeline order, disabled passes
+    /// included) — printed by `rmsmp plan`.
+    pub pass_reports: Vec<PassReport>,
 }
 
-/// Compile-time dataflow toggles (both default on — the production
-/// path). The off positions keep the older dataflows compilable as
-/// benchmark baselines and differential-test twins.
+/// Compile-time dataflow toggles for the deprecated `compile_*` shims.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[deprecated(
+    since = "0.6.0",
+    note = "use Plan::builder(..).disable_pass(\"integer_resident\") / \
+            .disable_pass(\"implicit\") instead"
+)]
 pub struct PlanOptions {
     /// Run output-domain inference (u8 codes between GEMMs).
     pub integer_resident: bool,
@@ -269,36 +315,125 @@ pub struct PlanOptions {
     pub implicit: bool,
 }
 
+#[allow(deprecated)]
 impl Default for PlanOptions {
     fn default() -> PlanOptions {
         PlanOptions { integer_resident: true, implicit: true }
     }
 }
 
-/// Target size of one implicit-GEMM activation panel: positions are
-/// chosen so `panel_positions * patch_cols` u8 codes land around half an
-/// L1d next to the weight tiles, clamped to keep at least a micro-
-/// kernel block's worth of positions and at most a reasonable tile.
-const PANEL_BYTES: usize = 32 * 1024;
+/// The one way to compile a [`Plan`]: lower the manifest, run the
+/// optimizer pass pipeline (each pass individually toggleable), seal
+/// the result.
+///
+/// ```ignore
+/// let plan = Plan::builder(&manifest, &weights)
+///     .capacity(8)
+///     .config(&cfg)
+///     .disable_pass("epilogue_fusion") // bench baseline
+///     .build()?;
+/// ```
+pub struct PlanBuilder<'a> {
+    manifest: &'a Manifest,
+    weights: &'a ModelWeights,
+    capacity: usize,
+    cfg: ParallelConfig,
+    disabled: Vec<String>,
+}
+
+impl<'a> PlanBuilder<'a> {
+    /// Workspace batch capacity the plan's footprint is sized for
+    /// (default 1).
+    pub fn capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity;
+        self
+    }
+
+    /// GEMM parallel config: fixes the task-chunk granularity so plan
+    /// schedules match the engine's chunking (default
+    /// [`ParallelConfig::sequential`]).
+    pub fn config(mut self, cfg: &ParallelConfig) -> Self {
+        self.cfg = *cfg;
+        self
+    }
+
+    /// Skip one optimizer pass (see
+    /// [`PASS_NAMES`](super::passes::PASS_NAMES)); may be called once
+    /// per pass. Unknown names fail at [`PlanBuilder::build`]. The off
+    /// positions keep the older dataflows compilable as benchmark
+    /// baselines and differential-test twins.
+    pub fn disable_pass(mut self, name: &str) -> Self {
+        self.disabled.push(name.to_string());
+        self
+    }
+
+    /// Lower, optimize, seal (see module docs).
+    pub fn build(self) -> Result<Plan> {
+        for name in &self.disabled {
+            ensure!(
+                passes::is_pass(name),
+                "unknown pass {name:?} (expected one of {:?})",
+                passes::PASS_NAMES
+            );
+        }
+        let mut ir = Ir::lower(self.manifest, self.weights, self.capacity, &self.cfg)?;
+        let pass_reports = passes::run_pipeline(&mut ir, &self.disabled)?;
+        let hwm = passes::high_water(&ir);
+        let off = |name: &str| self.disabled.iter().any(|d| d == name);
+        Ok(Plan {
+            model: ir.model,
+            capacity: ir.capacity,
+            chunk_rows: ir.chunk_rows,
+            integer_resident: !off("integer_resident"),
+            implicit: !off("implicit"),
+            act_bits: ir.act_bits,
+            input_slot: ir.input_slot,
+            input_chw: ir.input_chw,
+            logits_slot: ir.logits_slot,
+            logits_cols: ir.logits_cols,
+            slots: ir.slots,
+            ops: ir.ops,
+            layer_parts: ir.layer_parts,
+            max_patch_per_image: hwm.patch,
+            max_acts_per_image: hwm.acts,
+            max_gemm_rows_per_image: hwm.gemm_rows,
+            max_gemm_out_per_image: hwm.gemm_out,
+            max_panel_elems: hwm.panel_elems,
+            max_panel_positions: hwm.panel_positions,
+            pass_reports,
+        })
+    }
+}
 
 impl Plan {
-    /// Compile `manifest.program` against `weights`. `capacity` sizes the
-    /// workspace high-water marks (batch images); `cfg` fixes the GEMM
-    /// task granularity so plan schedules match the engine's chunking.
+    /// Start building a plan for `manifest.program` against `weights`
+    /// (see [`PlanBuilder`]).
+    pub fn builder<'a>(manifest: &'a Manifest, weights: &'a ModelWeights) -> PlanBuilder<'a> {
+        PlanBuilder {
+            manifest,
+            weights,
+            capacity: 1,
+            cfg: ParallelConfig::sequential(),
+            disabled: Vec::new(),
+        }
+    }
+
+    /// Compile with every optimizer pass enabled.
+    #[deprecated(since = "0.6.0", note = "use Plan::builder(..).capacity(..).config(..).build()")]
     pub fn compile(
         manifest: &Manifest,
         weights: &ModelWeights,
         capacity: usize,
         cfg: &ParallelConfig,
     ) -> Result<Plan> {
-        Plan::compile_opts(manifest, weights, capacity, cfg, PlanOptions::default())
+        Plan::builder(manifest, weights).capacity(capacity).config(cfg).build()
     }
 
-    /// [`Plan::compile`] with the integer-resident dataflow toggleable
-    /// (the implicit-GEMM path stays on): `integer_resident = false`
-    /// skips output-domain inference, keeping every inter-layer edge in
-    /// f32 — the f32 side of the differential tests and the
-    /// requantization-fusion bench baseline.
+    /// Compile with the integer-resident dataflow toggleable.
+    #[deprecated(
+        since = "0.6.0",
+        note = "use Plan::builder(..).disable_pass(\"integer_resident\")"
+    )]
     pub fn compile_with(
         manifest: &Manifest,
         weights: &ModelWeights,
@@ -306,19 +441,19 @@ impl Plan {
         cfg: &ParallelConfig,
         integer_resident: bool,
     ) -> Result<Plan> {
-        Plan::compile_opts(
-            manifest,
-            weights,
-            capacity,
-            cfg,
-            PlanOptions { integer_resident, ..PlanOptions::default() },
-        )
+        let mut b = Plan::builder(manifest, weights).capacity(capacity).config(cfg);
+        if !integer_resident {
+            b = b.disable_pass("integer_resident");
+        }
+        b.build()
     }
 
-    /// [`Plan::compile`] with every dataflow toggle explicit (see
-    /// [`PlanOptions`]); `implicit = false` compiles the
-    /// explicit-im2col conv path — the baseline `bench_runtime` reports
-    /// the implicit-GEMM speedup against.
+    /// Compile with the legacy boolean toggles.
+    #[deprecated(
+        since = "0.6.0",
+        note = "use Plan::builder(..).disable_pass(..) with named passes"
+    )]
+    #[allow(deprecated)]
     pub fn compile_opts(
         manifest: &Manifest,
         weights: &ModelWeights,
@@ -326,270 +461,14 @@ impl Plan {
         cfg: &ParallelConfig,
         opts: PlanOptions,
     ) -> Result<Plan> {
-        let integer_resident = opts.integer_resident;
-        ensure!(
-            manifest.input_shape.len() == 4,
-            "manifest input_shape must be NCHW, got {:?}",
-            manifest.input_shape
-        );
-        let capacity = capacity.max(1);
-        let chunk_rows = cfg.min_rows_per_task.max(1);
-        let input_chw = (
-            manifest.input_shape[1],
-            manifest.input_shape[2],
-            manifest.input_shape[3],
-        );
-
-        let layer_parts: Vec<RowPartition> = weights
-            .layers
-            .iter()
-            .map(|l| RowPartition::from_schemes(&l.scheme))
-            .collect();
-
-        let mut slots: Vec<SlotSpec> = Vec::new();
-        let mut index: HashMap<String, SlotId> = HashMap::new();
-
-        // The program input is pre-seeded under the fixed name "in0",
-        // mirroring the interpreter's calling convention.
-        let input_kind = SlotKind::T4 { c: input_chw.0, h: input_chw.1, w: input_chw.2 };
-        let input_slot = 0;
-        slots.push(SlotSpec {
-            name: "in0".to_string(),
-            kind: input_kind,
-            per_image: input_kind.per_image(),
-            // `infer` seeds the input as floats — the first conv always
-            // quantizes (the f32 entry edge of the pipeline)
-            holds_f32: true,
-            holds_codes: false,
-            code_nhwc: false,
-        });
-        index.insert("in0".to_string(), input_slot);
-
-        // Every id in `index` has been written (define records the shape
-        // of the latest write in slots[id].kind), so lookup is the only
-        // failure mode.
-        let read = |slots: &[SlotSpec],
-                    index: &HashMap<String, SlotId>,
-                    name: &str|
-         -> Result<(SlotId, SlotKind)> {
-            let id = *index
-                .get(name)
-                .ok_or_else(|| err!("missing buffer {name}"))?;
-            Ok((id, slots[id].kind))
-        };
-
-        let mut ops = Vec::with_capacity(manifest.program.len());
-        let mut max_patch = 0usize;
-        let mut max_acts = 0usize;
-        let mut max_gemm_rows = 0usize;
-        let mut max_gemm_out = 0usize;
-        let mut max_panel_elems = 0usize;
-        let mut max_panel_positions = 0usize;
-
-        for op in &manifest.program {
-            match op {
-                OpMeta::Conv { layer, input, out, relu } => {
-                    manifest.layer(layer)?;
-                    let li = weights.layer_index(layer)?;
-                    let lw = &weights.layers[li];
-                    let (in_id, kind) = read(&slots, &index, input)?;
-                    let SlotKind::T4 { c, h, w } = kind else {
-                        return Err(err!("conv {layer}: input {input} is not a 4-D buffer"));
-                    };
-                    let k = lw.kh;
-                    let stride = lw.stride;
-                    let pad = lw.pad;
-                    let groups = lw.groups.max(1);
-                    ensure!(stride >= 1, "conv {layer}: stride must be >= 1");
-                    ensure!(
-                        h + 2 * pad >= k && w + 2 * pad >= k,
-                        "conv {layer}: {k}x{k} kernel exceeds padded {h}x{w} input"
-                    );
-                    ensure!(
-                        c % groups == 0,
-                        "conv {layer}: {c} input channels not divisible by {groups} groups"
-                    );
-                    ensure!(
-                        lw.out_ch % groups == 0,
-                        "conv {layer}: {} filters not divisible by {groups} groups",
-                        lw.out_ch
-                    );
-                    ensure!(
-                        lw.rows == lw.out_ch,
-                        "conv {layer}: weight rows {} != out channels {}",
-                        lw.rows,
-                        lw.out_ch
-                    );
-                    let ch_per_group = c / groups;
-                    ensure!(
-                        ch_per_group * k * k == lw.cols,
-                        "conv {layer}: im2col cols {} != weight cols {}",
-                        ch_per_group * k * k,
-                        lw.cols
-                    );
-                    let oh = out_dim(h, k, stride, pad);
-                    let ow = out_dim(w, k, stride, pad);
-                    let out_kind = SlotKind::T4 { c: lw.out_ch, h: oh, w: ow };
-                    let out_id = define(&mut slots, &mut index, out, out_kind);
-                    // an in-place conv (input slot == output slot) cannot
-                    // stream: the implicit GEMM reads the input while
-                    // writing the output, so it keeps the staged path
-                    let implicit = opts.implicit && groups == 1 && in_id != out_id;
-                    let panel_positions = if implicit {
-                        // cache-sized, but never wider than the op's
-                        // whole batch at plan capacity — a panel bigger
-                        // than the operand is pure waste
-                        (PANEL_BYTES / lw.cols.max(1))
-                            .clamp(8, 256)
-                            .min((oh * ow * capacity).max(1))
-                    } else {
-                        0
-                    };
-                    if implicit {
-                        // implicit convs never touch the patch/acts
-                        // staging — they stream per-lane panels
-                        max_panel_elems = max_panel_elems.max(panel_positions * lw.cols);
-                        max_panel_positions = max_panel_positions.max(panel_positions);
-                    } else {
-                        max_patch = max_patch.max(oh * ow * lw.cols);
-                        max_acts = max_acts.max(oh * ow * lw.cols);
-                        max_gemm_rows = max_gemm_rows.max(oh * ow);
-                    }
-                    max_gemm_out = max_gemm_out.max(oh * ow * lw.out_ch);
-                    let chunks = if groups == 1 {
-                        chunk_tasks(&layer_parts[li], chunk_rows)
-                    } else {
-                        Vec::new()
-                    };
-                    ops.push(PlanOp::Conv {
-                        layer: li,
-                        input: in_id,
-                        out: out_id,
-                        relu: *relu,
-                        in_c: c,
-                        in_h: h,
-                        in_w: w,
-                        oh,
-                        ow,
-                        k,
-                        stride,
-                        pad,
-                        groups,
-                        ch_per_group,
-                        filt_per_group: lw.out_ch / groups,
-                        chunks,
-                        in_codes: false,
-                        out_quant: None,
-                        implicit,
-                        panel_positions,
-                        in_nhwc: false,
-                        out_nhwc: false,
-                    });
-                }
-                OpMeta::Linear { layer, input, out } => {
-                    manifest.layer(layer)?;
-                    let li = weights.layer_index(layer)?;
-                    let lw = &weights.layers[li];
-                    let (in_id, kind) = read(&slots, &index, input)?;
-                    let SlotKind::M { cols } = kind else {
-                        return Err(err!("linear {layer}: input {input} is not a 2-D buffer"));
-                    };
-                    ensure!(
-                        cols == lw.cols,
-                        "linear {layer}: input cols {cols} != weight cols {}",
-                        lw.cols
-                    );
-                    let out_id =
-                        define(&mut slots, &mut index, out, SlotKind::M {
-                            cols: lw.rows,
-                        });
-                    max_acts = max_acts.max(lw.cols);
-                    max_gemm_rows = max_gemm_rows.max(1);
-                    max_gemm_out = max_gemm_out.max(lw.rows);
-                    ops.push(PlanOp::Linear {
-                        layer: li,
-                        input: in_id,
-                        out: out_id,
-                        in_cols: lw.cols,
-                        out_cols: lw.rows,
-                        chunks: chunk_tasks(&layer_parts[li], chunk_rows),
-                        in_codes: false,
-                        out_quant: None,
-                    });
-                }
-                OpMeta::Add { a, b, out, relu } => {
-                    let (a_id, ka) = read(&slots, &index, a)?;
-                    let (b_id, kb) = read(&slots, &index, b)?;
-                    let (SlotKind::T4 { .. }, SlotKind::T4 { .. }) = (ka, kb) else {
-                        return Err(err!("add {a}+{b}: operands must be 4-D buffers"));
-                    };
-                    ensure!(
-                        ka.per_image() == kb.per_image(),
-                        "add shape mismatch {a} {b}"
-                    );
-                    let out_id = define(&mut slots, &mut index, out, ka);
-                    ops.push(PlanOp::Add {
-                        a: a_id,
-                        b: b_id,
-                        out: out_id,
-                        relu: *relu,
-                        per_image: ka.per_image(),
-                    });
-                }
-                OpMeta::Gap { input, out } => {
-                    let (in_id, kind) = read(&slots, &index, input)?;
-                    let SlotKind::T4 { c, h, w } = kind else {
-                        return Err(err!("gap: input {input} is not a 4-D buffer"));
-                    };
-                    let out_id =
-                        define(&mut slots, &mut index, out, SlotKind::M { cols: c });
-                    // gap stages its output through the GEMM staging
-                    // matrix (aliasing-safe), so it contributes to it
-                    max_gemm_out = max_gemm_out.max(c);
-                    ops.push(PlanOp::Gap { input: in_id, out: out_id, c, h, w });
-                }
-            }
+        let mut b = Plan::builder(manifest, weights).capacity(capacity).config(cfg);
+        if !opts.integer_resident {
+            b = b.disable_pass("integer_resident");
         }
-
-        let logits_slot = *index
-            .get("logits")
-            .ok_or_else(|| err!("program produced no 'logits' matrix"))?;
-        let SlotKind::M { cols: logits_cols } = slots[logits_slot].kind else {
-            return Err(err!("program produced no 'logits' matrix"));
-        };
-
-        if integer_resident {
-            infer_domains(&mut ops, &mut slots, weights, manifest.act_bits, logits_slot);
-            if opts.implicit {
-                infer_code_layouts(&mut ops, &mut slots);
-            }
-        } else {
-            for op in &ops {
-                slots[op_write(op).0].holds_f32 = true;
-            }
+        if !opts.implicit {
+            b = b.disable_pass("implicit");
         }
-
-        Ok(Plan {
-            model: manifest.model.clone(),
-            capacity,
-            chunk_rows,
-            integer_resident,
-            implicit: opts.implicit,
-            act_bits: manifest.act_bits,
-            input_slot,
-            input_chw,
-            logits_slot,
-            logits_cols,
-            slots,
-            ops,
-            layer_parts,
-            max_patch_per_image: max_patch,
-            max_acts_per_image: max_acts,
-            max_gemm_rows_per_image: max_gemm_rows,
-            max_gemm_out_per_image: max_gemm_out,
-            max_panel_elems,
-            max_panel_positions,
-        })
+        b.build()
     }
 
     /// Check that the plan's baked integer-resident epilogue scales
@@ -643,7 +522,7 @@ impl Plan {
             acts_elems: self.max_acts_per_image * n,
             gemm_out_elems: self.max_gemm_out_per_image * n,
             // lanes serve both the explicit blocks (MICRO_ROWS x full
-            // batch) and the implicit blocks (MICRO_ROWS x panel
+            // batch) and the streamed blocks (MICRO_ROWS x panel
             // positions) — size for whichever is wider
             lane_elems: MICRO_ROWS
                 * (self.max_gemm_rows_per_image * n).max(self.max_panel_positions),
@@ -652,9 +531,10 @@ impl Plan {
         }
     }
 
-    /// Human-readable plan dump for `rmsmp plan`: ops, slot assignments,
-    /// per-slot bytes, and the total workspace footprint — the numbers
-    /// an FPGA BRAM budget would be sized from.
+    /// Human-readable plan dump for `rmsmp plan`: the per-pass optimizer
+    /// report, ops, slot assignments, per-slot bytes, and the total
+    /// workspace footprint — the numbers an FPGA BRAM budget would be
+    /// sized from.
     pub fn describe(&self, weights: &ModelWeights, lanes: usize) -> String {
         let fp = self.footprint(lanes);
         let mut s = String::new();
@@ -671,6 +551,23 @@ impl Plan {
             if self.integer_resident { "integer-resident" } else { "f32-resident" },
             if self.implicit { "implicit-gemm" } else { "explicit-im2col" }
         );
+        let _ = writeln!(s, "passes:");
+        for r in &self.pass_reports {
+            if !r.enabled {
+                let _ = writeln!(s, "  {:<17} off", r.pass);
+                continue;
+            }
+            let _ = writeln!(
+                s,
+                "  {:<17} {} rewrite{}",
+                r.pass,
+                r.rewrites,
+                if r.rewrites == 1 { "" } else { "s" }
+            );
+            for d in &r.details {
+                let _ = writeln!(s, "      {d}");
+            }
+        }
         let _ = writeln!(s, "slots:");
         for (i, spec) in self.slots.iter().enumerate() {
             let kind = match spec.kind {
@@ -684,7 +581,9 @@ impl Plan {
                 // '~' marks an NHWC-retargeted code buffer (unit-conv
                 // alias fast path)
                 (false, true, true) => "u8~",
-                _ => "f32",
+                (true, false, _) => "f32",
+                // orphaned by epilogue fusion; allocates nothing
+                (false, false, _) => "dead",
             };
             let _ = writeln!(
                 s,
@@ -715,17 +614,30 @@ impl Plan {
                     panel_positions,
                     in_nhwc,
                     out_nhwc,
+                    fused_add,
+                    group_chunks,
                     ..
                 } => {
                     let lw = &weights.layers[*layer];
                     let path = match (implicit, in_nhwc) {
                         (true, true) => format!(" alias panel={panel_positions}"),
                         (true, false) => format!(" implicit panel={panel_positions}"),
+                        (false, _) if !group_chunks.is_empty() => {
+                            format!(" depthwise panel={panel_positions}")
+                        }
                         (false, _) => String::new(),
+                    };
+                    let fused = match fused_add {
+                        Some(fa) => format!(
+                            " fuse(+s{}{})",
+                            fa.addend,
+                            if fa.relu { " relu" } else { "" }
+                        ),
+                        None => String::new(),
                     };
                     format!(
                         "conv   {:<12} s{input}{} -> s{out}{}  {}x{} k{k} s{stride} p{pad} \
-                         g{groups} oh={oh} ow={ow} chunks={}{}{path}",
+                         g{groups} oh={oh} ow={ow} chunks={}{}{fused}{path}",
                         lw.name,
                         if *in_codes { "[u8]" } else { "" },
                         match (out_quant.is_some(), *out_nhwc) {
@@ -782,7 +694,7 @@ impl Plan {
 
 /// Record a write of `kind` to slot `name`, creating the slot on first
 /// use and widening its high-water footprint.
-fn define(
+pub(crate) fn define(
     slots: &mut Vec<SlotSpec>,
     index: &mut HashMap<String, SlotId>,
     name: &str,
@@ -800,8 +712,8 @@ fn define(
                 name: name.to_string(),
                 kind,
                 per_image: kind.per_image(),
-                // domains and code layouts are assigned by the inference
-                // passes once every write and read is known
+                // domains and code layouts are assigned by the pass
+                // pipeline once every write and read is known
                 holds_f32: false,
                 holds_codes: false,
                 code_nhwc: false,
@@ -814,7 +726,7 @@ fn define(
 
 /// The slot an op writes, and whether that op's GEMM epilogue can emit
 /// activation codes (only the GEMM ops can; Add and Gap stay f32).
-fn op_write(op: &PlanOp) -> (SlotId, bool) {
+pub(crate) fn op_write(op: &PlanOp) -> (SlotId, bool) {
     match op {
         PlanOp::Conv { out, .. } | PlanOp::Linear { out, .. } => (*out, true),
         PlanOp::Add { out, .. } | PlanOp::Gap { out, .. } => (*out, false),
@@ -823,10 +735,18 @@ fn op_write(op: &PlanOp) -> (SlotId, bool) {
 
 /// The slots an op reads: `Some(a_alpha)` for the quantized GEMM input
 /// of a conv/linear (a read that can consume codes quantized with that
-/// clip scale), `None` for an f32-only read (Add operands, Gap input).
-fn op_reads(op: &PlanOp, weights: &ModelWeights) -> Vec<(SlotId, Option<f32>)> {
+/// clip scale), `None` for an f32-only read (Add operands, Gap input,
+/// a fused-add addend — the epilogue adds it as floats).
+pub(crate) fn op_reads(op: &PlanOp, weights: &ModelWeights) -> Vec<(SlotId, Option<f32>)> {
     match op {
-        PlanOp::Conv { layer, input, .. } | PlanOp::Linear { layer, input, .. } => {
+        PlanOp::Conv { layer, input, fused_add, .. } => {
+            let mut r = vec![(*input, Some(weights.layers[*layer].a_alpha))];
+            if let Some(fa) = fused_add {
+                r.push((fa.addend, None));
+            }
+            r
+        }
+        PlanOp::Linear { layer, input, .. } => {
             vec![(*input, Some(weights.layers[*layer].a_alpha))]
         }
         PlanOp::Add { a, b, .. } => vec![(*a, None), (*b, None)],
@@ -839,10 +759,10 @@ fn op_reads(op: &PlanOp, weights: &ModelWeights) -> Vec<(SlotId, Option<f32>)> {
 /// the slot (an op's reads happen before its own write, so the
 /// overwriting op's reads still belong to this range). Returns
 /// `(reader op index, read kind)` pairs plus whether a later op
-/// overwrites the slot. Shared by the domain inference and by
+/// overwrites the slot. Shared by the pass pipeline and by
 /// [`Plan::validate_domains`], so the baked epilogue scales and the
 /// staleness check always agree on the reader set.
-fn live_range_reads(
+pub(crate) fn live_range_reads(
     ops: &[PlanOp],
     i: usize,
     weights: &ModelWeights,
@@ -862,136 +782,4 @@ fn live_range_reads(
         }
     }
     (reads, overwritten)
-}
-
-/// Output-domain inference: decide, per op write, whether the value can
-/// stay integer-resident (u8 activation codes) between layers.
-///
-/// A write's readers are its [`live_range_reads`]; the final write to
-/// the logits slot additionally has the implicit f32 read of the
-/// logits copy-out. The write is integer-resident iff the producing op
-/// is a GEMM, the range has at least one reader, every reader is a
-/// quantized GEMM input, and all readers agree on the clip scale — the
-/// epilogue then requantizes with exactly the scale those consumers
-/// would have used on an f32 buffer, which is what keeps the codes
-/// bit-exact vs the dequant-store-requantize dataflow. Anything else
-/// (Add operand, Gap input, logits, scale disagreement) falls back to
-/// f32 for that edge only.
-fn infer_domains(
-    ops: &mut [PlanOp],
-    slots: &mut [SlotSpec],
-    weights: &ModelWeights,
-    act_bits: u32,
-    logits_slot: SlotId,
-) {
-    for i in 0..ops.len() {
-        let (s, mut can_quant) = op_write(&ops[i]);
-        // a grouped conv re-reads its input slot per group *after*
-        // emitting earlier groups' outputs, so an in == out alias would
-        // corrupt later groups on the integer path (the f32 path stages
-        // through the GEMM matrix and only writes the slot at the end);
-        // keep such writes f32
-        if let PlanOp::Conv { groups, input, out, .. } = &ops[i] {
-            if *groups > 1 && input == out {
-                can_quant = false;
-            }
-        }
-        let (reads, overwritten) = live_range_reads(ops, i, weights);
-        let mut read_kinds: Vec<Option<f32>> = reads.iter().map(|&(_, q)| q).collect();
-        if !overwritten && s == logits_slot {
-            read_kinds.push(None);
-        }
-        let integer = can_quant
-            && !read_kinds.is_empty()
-            && read_kinds.iter().all(|k| k.is_some() && *k == read_kinds[0]);
-        if integer {
-            let rq = Requant::new(read_kinds[0].expect("all readers quantized"), act_bits);
-            match &mut ops[i] {
-                PlanOp::Conv { out_quant, .. } | PlanOp::Linear { out_quant, .. } => {
-                    *out_quant = Some(rq)
-                }
-                _ => unreachable!("only GEMM ops can emit codes"),
-            }
-            for &(j, _) in &reads {
-                match &mut ops[j] {
-                    PlanOp::Conv { in_codes, .. } | PlanOp::Linear { in_codes, .. } => {
-                        *in_codes = true
-                    }
-                    _ => unreachable!("integer readers are GEMM ops"),
-                }
-            }
-            slots[s].holds_codes = true;
-        } else {
-            slots[s].holds_f32 = true;
-        }
-    }
-}
-
-/// Code-layout retargeting: after domain inference, decide per code slot
-/// whether the u8 buffer can be stored **NHWC** (row-major positions ×
-/// channels) instead of NCHW. NHWC is the 1×1 stride-1 pad-0 fast path:
-/// a unit conv's im2col matrix *is* the NHWC buffer, so an NHWC code
-/// slot is aliased directly as the consumer's GEMM activation panel —
-/// no gather, no copy, and the producer pays nothing (its fused
-/// epilogue scatters RowMajor instead of NCHW, the same number of
-/// writes).
-///
-/// A slot is retargeted iff every op that writes codes into it is a
-/// non-grouped implicit conv (its block epilogue can scatter either
-/// layout) and every op that reads codes from it is a non-grouped
-/// implicit unit conv. Any other participant — grouped conv (writes
-/// row-by-row NCHW planes / gathers per channel group), k > 1 reader,
-/// strided or padded reader — pins the slot to NCHW and the implicit
-/// gather path.
-fn infer_code_layouts(ops: &mut [PlanOp], slots: &mut [SlotSpec]) {
-    let mut nhwc: Vec<bool> = slots.iter().map(|s| s.holds_codes).collect();
-    for op in ops.iter() {
-        match op {
-            PlanOp::Conv {
-                input,
-                out,
-                out_quant,
-                in_codes,
-                implicit,
-                groups,
-                k,
-                stride,
-                pad,
-                ..
-            } => {
-                if out_quant.is_some() && !(*implicit && *groups == 1) {
-                    nhwc[*out] = false;
-                }
-                let unit_reader =
-                    *implicit && *groups == 1 && *k == 1 && *stride == 1 && *pad == 0;
-                if *in_codes && !unit_reader {
-                    nhwc[*input] = false;
-                }
-            }
-            PlanOp::Linear { input, out, out_quant, in_codes, .. } => {
-                // linear code buffers are already row-major and consumed
-                // by the linear copy path; leave their layout alone
-                if out_quant.is_some() {
-                    nhwc[*out] = false;
-                }
-                if *in_codes {
-                    nhwc[*input] = false;
-                }
-            }
-            PlanOp::Add { .. } | PlanOp::Gap { .. } => {}
-        }
-    }
-    for (spec, flag) in slots.iter_mut().zip(&nhwc) {
-        spec.code_nhwc = *flag;
-    }
-    for op in ops.iter_mut() {
-        if let PlanOp::Conv { input, out, out_quant, in_codes, in_nhwc, out_nhwc, .. } = op {
-            if out_quant.is_some() {
-                *out_nhwc = nhwc[*out];
-            }
-            if *in_codes {
-                *in_nhwc = nhwc[*input];
-            }
-        }
-    }
 }

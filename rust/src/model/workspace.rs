@@ -6,7 +6,11 @@
 //! program value, the im2col patch matrix, the quantized-activation code
 //! buffer, the GEMM/Gap staging matrix, the per-lane GEMM row scratch,
 //! and the logits output. All of them are sized from the plan's
-//! high-water [`super::plan::Footprint`] at construction, so a
+//! high-water [`super::plan::Footprint`] at construction — computed
+//! strictly after the optimizer pass pipeline, so slots the passes made
+//! codes-only or dead get no f32 bytes, and streamed (implicit or
+//! depthwise) convs budget per-lane panels instead of patch matrices —
+//! so a
 //! steady-state `infer` call at or below the plan's batch capacity never
 //! allocates a buffer — everything is `resize`d (a length change inside
 //! existing capacity) and overwritten in place; sequentially that means

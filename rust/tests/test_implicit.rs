@@ -1,7 +1,7 @@
 //! Implicit-GEMM pipeline invariants: the panel-packed conv path (no
 //! materialized im2col buffer) must produce **bit-identical** logits and
 //! per-slot activation codes to the reference interpreter and to the
-//! explicit-im2col plan (`PlanOptions { implicit: false }` — the PR 4
+//! explicit-im2col plan (`disable_pass("implicit")` — the PR 4
 //! dataflow), across conv stride/pad, grouped conv, the 1×1 stride-1
 //! pad-0 NHWC alias fast path, batch {1, 5, 8}, threads {1, 8}, and the
 //! scalar vs native SIMD kernels. Also pins the plan-compile decisions
@@ -13,7 +13,7 @@ use std::sync::Arc;
 use rmsmp::gemm::{Isa, PackedWeights, ParallelConfig, SortedWeights};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
-use rmsmp::model::{Executor, Plan, PlanOp, PlanOptions};
+use rmsmp::model::{Executor, Plan, PlanOp};
 use rmsmp::prop_assert;
 use rmsmp::quant::tensor::Tensor4;
 use rmsmp::quant::{self, Mat, Scheme};
@@ -183,16 +183,19 @@ fn build_model(g: &mut Gen, topo: usize, n: usize) -> (Manifest, ModelWeights, T
     (manifest, ModelWeights { layers }, x)
 }
 
-/// Executor over a plan compiled with the requested dataflow toggles.
+/// Executor over a plan compiled with the named optimizer passes off.
 fn executor_with(
     manifest: &Manifest,
     weights: &ModelWeights,
     cfg: ParallelConfig,
-    opts: PlanOptions,
+    disabled: &[&str],
 ) -> Executor {
     let capacity = manifest.input_shape.first().copied().unwrap_or(1);
-    let plan =
-        Arc::new(Plan::compile_opts(manifest, weights, capacity, &cfg, opts).unwrap());
+    let mut b = Plan::builder(manifest, weights).capacity(capacity).config(&cfg);
+    for pass in disabled {
+        b = b.disable_pass(pass);
+    }
+    let plan = Arc::new(b.build().unwrap());
     Executor::from_shared(
         Arc::new(manifest.clone()),
         Arc::new(weights.clone()),
@@ -265,13 +268,8 @@ fn prop_implicit_bit_exact_across_grid() {
         let isas = [Isa::Scalar, Isa::detect()];
         for &threads in &[1usize, 8] {
             let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
-            let mut imp = executor_with(&manifest, &weights, cfg, PlanOptions::default());
-            let mut exp = executor_with(
-                &manifest,
-                &weights,
-                cfg,
-                PlanOptions { implicit: false, ..PlanOptions::default() },
-            );
+            let mut imp = executor_with(&manifest, &weights, cfg, &[]);
+            let mut exp = executor_with(&manifest, &weights, cfg, &["implicit"]);
             prop_assert!(
                 imp.plan().implicit && !exp.plan().implicit,
                 "plan implicit flags wrong"
@@ -311,7 +309,7 @@ fn plan_marks_implicit_convs_and_nhwc_slots() {
     // must retarget to NHWC and both unit convs must alias their input
     let (manifest, weights, _) = build_model(&mut g, 2, 2);
     let cfg = ParallelConfig::sequential();
-    let plan = Plan::compile(&manifest, &weights, 2, &cfg).unwrap();
+    let plan = Plan::builder(&manifest, &weights).capacity(2).config(&cfg).build().unwrap();
     assert!(plan.implicit && plan.integer_resident);
     let mut seen = 0;
     for op in &plan.ops {
@@ -349,24 +347,25 @@ fn plan_marks_implicit_convs_and_nhwc_slots() {
     assert!(b0.code_nhwc && b1.code_nhwc, "unit-conv inputs not NHWC");
 
     // the explicit twin must keep NCHW everywhere
-    let exp = Plan::compile_opts(
-        &manifest,
-        &weights,
-        2,
-        &cfg,
-        PlanOptions { implicit: false, ..PlanOptions::default() },
-    )
-    .unwrap();
+    let exp = Plan::builder(&manifest, &weights)
+        .capacity(2)
+        .config(&cfg)
+        .disable_pass("implicit")
+        .build()
+        .unwrap();
     assert!(exp.slots.iter().all(|s| !s.code_nhwc));
 
     // topo 1: the grouped conv pins its input and output slots to NCHW
+    // and takes the depthwise per-group streamed schedule
     let (manifest, weights, _) = build_model(&mut g, 1, 2);
-    let plan = Plan::compile(&manifest, &weights, 2, &cfg).unwrap();
+    let plan = Plan::builder(&manifest, &weights).capacity(2).config(&cfg).build().unwrap();
     for op in &plan.ops {
-        if let PlanOp::Conv { layer, implicit, groups, in_nhwc, out_nhwc, .. } = op {
+        if let PlanOp::Conv { layer, implicit, groups, group_chunks, in_nhwc, out_nhwc, .. } = op
+        {
             let name = weights.layers[*layer].name.as_str();
             if name == "dw" {
-                assert!(*groups > 1 && !*implicit, "grouped conv must stay explicit");
+                assert!(*groups > 1 && !*implicit, "grouped conv must not take implicit path");
+                assert!(!group_chunks.is_empty(), "dw missing a depthwise schedule");
             }
             assert!(!*in_nhwc && !*out_nhwc, "{name}: 3x3/grouped edges must stay NCHW");
         }
@@ -380,15 +379,13 @@ fn implicit_plan_drops_the_patches_slot() {
     // its activation staging) must vanish from the footprint entirely
     let (manifest, weights, _) = build_model(&mut g, 0, 8);
     let cfg = ParallelConfig::sequential();
-    let imp = Plan::compile(&manifest, &weights, 8, &cfg).unwrap();
-    let exp = Plan::compile_opts(
-        &manifest,
-        &weights,
-        8,
-        &cfg,
-        PlanOptions { implicit: false, ..PlanOptions::default() },
-    )
-    .unwrap();
+    let imp = Plan::builder(&manifest, &weights).capacity(8).config(&cfg).build().unwrap();
+    let exp = Plan::builder(&manifest, &weights)
+        .capacity(8)
+        .config(&cfg)
+        .disable_pass("implicit")
+        .build()
+        .unwrap();
     let fpi = imp.footprint(1);
     let fpe = exp.footprint(1);
     assert_eq!(fpi.patch_elems, 0, "implicit plan still budgets a patch buffer");
@@ -410,19 +407,42 @@ fn implicit_plan_drops_the_patches_slot() {
         fpe.total_bytes()
     );
 
-    // topo 1 keeps the grouped conv on the explicit path: the patches
-    // slot shrinks to the grouped fallback's high-water mark
+    // topo 1: the depthwise pass streams the grouped conv through the
+    // panel, so the default plan budgets no patch buffer at all
     let (manifest, weights, _) = build_model(&mut g, 1, 8);
-    let imp = Plan::compile(&manifest, &weights, 8, &cfg).unwrap();
-    let fpi = imp.footprint(1);
+    let imp = Plan::builder(&manifest, &weights).capacity(8).config(&cfg).build().unwrap();
     let dw = weights.layer("dw").unwrap();
     let hw = manifest.input_shape[2] * manifest.input_shape[3];
+    assert_eq!(imp.max_patch_per_image, 0, "depthwise-streamed plan still budgets a patch");
+    assert!(imp.footprint(1).panel_elems > 0);
+
+    // with depthwise off the grouped fallback stages the dw conv, but
+    // its input is integer-resident: codes go through the acts buffer,
+    // never the f32 patch matrix
+    let nodw = Plan::builder(&manifest, &weights)
+        .capacity(8)
+        .config(&cfg)
+        .disable_pass("depthwise")
+        .build()
+        .unwrap();
+    assert_eq!(nodw.max_patch_per_image, 0, "in_codes grouped fallback budgets no patch");
+    assert!(nodw.max_acts_per_image >= hw * dw.cols, "staged dw codes missing from acts");
+
+    // only with integer-resident off too does dw stage f32 patches, and
+    // the high-water mark is exactly its im2col matrix
+    let f32dw = Plan::builder(&manifest, &weights)
+        .capacity(8)
+        .config(&cfg)
+        .disable_pass("depthwise")
+        .disable_pass("integer_resident")
+        .build()
+        .unwrap();
     assert_eq!(
-        imp.max_patch_per_image,
+        f32dw.max_patch_per_image,
         hw * dw.cols,
         "patches high-water != grouped-conv fallback"
     );
-    assert!(fpi.patch_elems > 0);
+    assert!(f32dw.footprint(1).patch_elems > 0);
 }
 
 #[test]
@@ -436,13 +456,8 @@ fn grouped_and_strided_fixed_cases_bit_exact_batch8() {
             let (manifest, weights, x) = build_model(&mut g, topo, 8);
             for threads in [1usize, 8] {
                 let cfg = ParallelConfig { threads, tile_cols: 16, min_rows_per_task: 2 };
-                let mut imp = executor_with(&manifest, &weights, cfg, PlanOptions::default());
-                let mut exp = executor_with(
-                    &manifest,
-                    &weights,
-                    cfg,
-                    PlanOptions { implicit: false, ..PlanOptions::default() },
-                );
+                let mut imp = executor_with(&manifest, &weights, cfg, &[]);
+                let mut exp = executor_with(&manifest, &weights, cfg, &["implicit"]);
                 let imp_out = imp.infer(&x).unwrap().clone();
                 let exp_out = exp.infer(&x).unwrap().clone();
                 let ref_out = imp.reference_infer(&x).unwrap();

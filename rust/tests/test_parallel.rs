@@ -8,7 +8,8 @@ use std::sync::Arc;
 use rmsmp::coordinator::batcher::BatchPolicy;
 use rmsmp::coordinator::{Server, ServerConfig};
 use rmsmp::gemm::{
-    MixedGemm, PackedActs, PackedWeights, ParallelConfig, RowPartition, SortedWeights,
+    chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, MixedGemm, PackedActs,
+    PackedWeights, ParallelConfig, SortedWeights,
 };
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
@@ -25,7 +26,7 @@ const SCHEMES: [Scheme; 4] = [
     Scheme::ApotW4A4,
 ];
 
-fn gen_problem(g: &mut Gen) -> (PackedActs, PackedWeights, RowPartition) {
+fn gen_problem(g: &mut Gen) -> (PackedActs, PackedWeights) {
     let batch = g.usize_in(0, 7);
     let rows = g.usize_in(1, 96);
     let cols = g.usize_in(1, 80);
@@ -35,8 +36,27 @@ fn gen_problem(g: &mut Gen) -> (PackedActs, PackedWeights, RowPartition) {
     let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
     let acts = PackedActs::quantize(&x, g.f32_in(0.3, 2.0), 4);
     let pw = PackedWeights::quantize(&w, &schemes, &alpha);
-    let part = RowPartition::from_schemes(&schemes);
-    (acts, pw, part)
+    (acts, pw)
+}
+
+/// One standalone mixed GEMM through the public dispatch descriptor.
+fn run_mixed(engine: &MixedGemm, acts: &PackedActs, pw: &PackedWeights, parallel: bool) -> Mat {
+    let sw = SortedWeights::from_packed(pw);
+    let chunks = chunk_tasks(sw.partition(), engine.config().min_rows_per_task);
+    let mut scratch = GemmScratch::new(engine.lanes());
+    let mut out = Mat::zeros(acts.rows, pw.rows);
+    engine.dispatch(
+        GemmCall {
+            acts: GemmActs::Packed(acts),
+            weights: &sw,
+            chunks: &chunks,
+            parallel,
+            fill: true,
+            out: GemmOut::F32(&mut out),
+        },
+        &mut scratch,
+    );
+    out
 }
 
 #[test]
@@ -53,10 +73,10 @@ fn prop_parallel_bit_exact_across_threads() {
         })
         .collect();
     check("parallel-bit-exact", 40, |g| {
-        let (acts, pw, part) = gen_problem(g);
-        let want = engines[0].run_partitioned_seq(&acts, &pw, &part);
+        let (acts, pw) = gen_problem(g);
+        let want = run_mixed(&engines[0], &acts, &pw, false);
         for e in &engines {
-            let got = e.run_partitioned(&acts, &pw, &part);
+            let got = run_mixed(e, &acts, &pw, true);
             prop_assert!(
                 got.data == want.data,
                 "diverged at {} threads (batch={} rows={})",
@@ -76,9 +96,9 @@ fn prop_task_granularity_does_not_change_results() {
     let fine = MixedGemm::with_config(pool_cfg);
     let coarse = MixedGemm::with_config(coarse_cfg);
     check("task-granularity", 25, |g| {
-        let (acts, pw, part) = gen_problem(g);
-        let a = fine.run_partitioned(&acts, &pw, &part);
-        let b = coarse.run_partitioned(&acts, &pw, &part);
+        let (acts, pw) = gen_problem(g);
+        let a = run_mixed(&fine, &acts, &pw, true);
+        let b = run_mixed(&coarse, &acts, &pw, true);
         prop_assert!(a.data == b.data, "task size changed results");
         Ok(())
     });
@@ -99,21 +119,20 @@ fn prop_tile_size_exact_for_rmsmp_classes() {
         let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
         let acts = PackedActs::quantize(&x, 1.0, 4);
         let pw = PackedWeights::quantize(&w, &schemes, &alpha);
-        let part = RowPartition::from_schemes(&schemes);
 
         let untiled = MixedGemm::with_config(ParallelConfig {
             threads: 1,
             tile_cols: 0,
             min_rows_per_task: 8,
         });
-        let want = untiled.run_partitioned(&acts, &pw, &part);
+        let want = run_mixed(&untiled, &acts, &pw, true);
         for tile in [1usize, 13, 64] {
             let tiled = MixedGemm::with_config(ParallelConfig {
                 threads: 1,
                 tile_cols: tile,
                 min_rows_per_task: 8,
             });
-            let got = tiled.run_partitioned(&acts, &pw, &part);
+            let got = run_mixed(&tiled, &acts, &pw, true);
             prop_assert!(got.data == want.data, "tile {tile} changed integer results");
         }
         Ok(())

@@ -1,0 +1,356 @@
+//! Pass-pipeline invariants: the plan optimizer is a pipeline of five
+//! graph-rewrite passes (`epilogue_fusion`, `integer_resident`,
+//! `implicit`, `depthwise`, `dead_slot_elim`), each individually
+//! toggleable through `PlanBuilder::disable_pass`. Every one of the 32
+//! enable/disable subsets must produce logits **bit-identical** to the
+//! reference interpreter — on a residual topology (exercising epilogue
+//! fusion and dead-slot elimination) and a depthwise chain (exercising
+//! the per-group streamed schedule) — across batch {1, 8}, threads
+//! {1, 8}, and the scalar vs native SIMD kernels. A golden test pins
+//! the per-pass reports (`Plan::pass_reports`) the `rmsmp plan` command
+//! prints.
+
+use std::sync::Arc;
+
+use rmsmp::gemm::{Isa, PackedWeights, ParallelConfig, SortedWeights};
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::model::{Executor, Plan, PlanOp, PASS_NAMES};
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::rng::Rng;
+
+const SCHEMES: [Scheme; 4] = [
+    Scheme::PotW4A4,
+    Scheme::FixedW4A4,
+    Scheme::FixedW8A4,
+    Scheme::ApotW4A4,
+];
+
+#[allow(clippy::too_many_arguments)]
+fn layer(
+    rng: &mut Rng,
+    name: &str,
+    kind: &str,
+    rows: usize,
+    cols: usize,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    groups: usize,
+) -> LayerWeights {
+    let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.5));
+    let schemes: Vec<Scheme> =
+        (0..rows).map(|r| SCHEMES[(rng.below(4) as usize + r) % 4]).collect();
+    let alpha: Vec<f32> = (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let bias: Vec<f32> = (0..rows).map(|_| rng.uniform(-0.1, 0.1)).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
+    LayerWeights {
+        name: name.into(),
+        kind: kind.into(),
+        rows,
+        cols,
+        out_ch: conv.0,
+        in_ch: conv.1,
+        kh: conv.2,
+        kw: conv.3,
+        stride,
+        pad,
+        groups,
+        // non-unit clip scales so requantization differs per edge
+        a_alpha: rng.uniform(0.6, 1.4),
+        scheme: schemes,
+        alpha,
+        bias,
+        w,
+        packed,
+        sorted,
+    }
+}
+
+fn conv_meta(name: &str, rows: usize, cols: usize, s: usize, p: usize, groups: usize) -> String {
+    format!(
+        r#"{{"name":"{name}","kind":"conv","rows":{rows},"cols":{cols},"stride":{s},"pad":{p},"groups":{groups},"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#
+    )
+}
+
+fn finish_model(
+    seed: u64,
+    n: usize,
+    c_in: usize,
+    hw: usize,
+    meta: String,
+    prog: String,
+    layers: Vec<LayerWeights>,
+) -> (Manifest, ModelWeights, Tensor4) {
+    let json = format!(
+        r#"{{"model":"passes","arch":"resnet","num_classes":3,
+            "input_shape":[{n},{c_in},{hw},{hw}],"ratio":[65,30,5],"act_bits":4,
+            "layers":[{meta}],"program":[{prog}]}}"#
+    );
+    let manifest = Manifest::from_json(&Json::parse(&json).unwrap()).unwrap();
+    let mut rng = Rng::new(seed ^ 0x5eed);
+    let mut x = Tensor4::zeros(n, c_in, hw, hw);
+    for v in x.data.iter_mut() {
+        *v = rng.uniform(0.0, 1.2);
+    }
+    (manifest, ModelWeights { layers }, x)
+}
+
+/// Residual topology — the epilogue-fusion shape:
+///   c1 (k3, relu) in0 -> b0
+///   c2 (k3)           b0 -> b1
+///   add b1 + b0 (relu)     -> b2   <- folds into c2's epilogue
+///   c3 (k3, relu)     b2 -> b3
+///   gap -> fc
+/// After fusion b1 has no writer and no reader: dead_slot_elim drops it.
+fn residual_model(seed: u64, n: usize) -> (Manifest, ModelWeights, Tensor4) {
+    let (c_in, hw, c1) = (3usize, 6usize, 4usize);
+    let mut rng = Rng::new(seed);
+    let layers = vec![
+        layer(&mut rng, "c1", "conv", c1, c_in * 9, (c1, c_in, 3, 3), 1, 1, 1),
+        layer(&mut rng, "c2", "conv", c1, c1 * 9, (c1, c1, 3, 3), 1, 1, 1),
+        layer(&mut rng, "c3", "conv", c1, c1 * 9, (c1, c1, 3, 3), 1, 1, 1),
+        layer(&mut rng, "fc", "linear", 3, c1, (3, c1, 1, 1), 0, 0, 1),
+    ];
+    let meta = [
+        conv_meta("c1", c1, c_in * 9, 1, 1, 1),
+        conv_meta("c2", c1, c1 * 9, 1, 1, 1),
+        conv_meta("c3", c1, c1 * 9, 1, 1, 1),
+        format!(
+            r#"{{"name":"fc","kind":"linear","rows":3,"cols":{c1},"stride":0,"pad":0,"groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#
+        ),
+    ]
+    .join(",");
+    let prog = concat!(
+        r#"{"op":"conv","layer":"c1","in":"in0","out":"b0","relu":true},"#,
+        r#"{"op":"conv","layer":"c2","in":"b0","out":"b1","relu":false},"#,
+        r#"{"op":"add","a":"b1","b":"b0","out":"b2","relu":true},"#,
+        r#"{"op":"conv","layer":"c3","in":"b2","out":"b3","relu":true},"#,
+        r#"{"op":"gap","in":"b3","out":"g0"},"#,
+        r#"{"op":"linear","layer":"fc","in":"g0","out":"logits"}"#
+    )
+    .to_string();
+    finish_model(seed, n, c_in, hw, meta, prog, layers)
+}
+
+/// Depthwise chain — the per-group streamed-schedule shape:
+///   c1 (k3, relu) in0 -> b0
+///   dw (k3, groups = channels) b0 -> b1
+///   c2 (k3, relu) b1 -> b2
+///   gap -> fc
+fn depthwise_model(seed: u64, n: usize) -> (Manifest, ModelWeights, Tensor4) {
+    let (c_in, hw, c1) = (3usize, 6usize, 4usize);
+    let mut rng = Rng::new(seed);
+    let layers = vec![
+        layer(&mut rng, "c1", "conv", c1, c_in * 9, (c1, c_in, 3, 3), 1, 1, 1),
+        layer(&mut rng, "dw", "conv", c1, 9, (c1, c1, 3, 3), 1, 1, c1),
+        layer(&mut rng, "c2", "conv", c1, c1 * 9, (c1, c1, 3, 3), 1, 1, 1),
+        layer(&mut rng, "fc", "linear", 3, c1, (3, c1, 1, 1), 0, 0, 1),
+    ];
+    let meta = [
+        conv_meta("c1", c1, c_in * 9, 1, 1, 1),
+        conv_meta("dw", c1, 9, 1, 1, c1),
+        conv_meta("c2", c1, c1 * 9, 1, 1, 1),
+        format!(
+            r#"{{"name":"fc","kind":"linear","rows":3,"cols":{c1},"stride":0,"pad":0,"groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}"#
+        ),
+    ]
+    .join(",");
+    let prog = concat!(
+        r#"{"op":"conv","layer":"c1","in":"in0","out":"b0","relu":true},"#,
+        r#"{"op":"conv","layer":"dw","in":"b0","out":"b1","relu":false},"#,
+        r#"{"op":"conv","layer":"c2","in":"b1","out":"b2","relu":true},"#,
+        r#"{"op":"gap","in":"b2","out":"g0"},"#,
+        r#"{"op":"linear","layer":"fc","in":"g0","out":"logits"}"#
+    )
+    .to_string();
+    finish_model(seed, n, c_in, hw, meta, prog, layers)
+}
+
+/// Executor over a plan with the named passes disabled.
+fn executor_with(
+    manifest: &Manifest,
+    weights: &ModelWeights,
+    cfg: ParallelConfig,
+    disabled: &[&str],
+) -> Executor {
+    let capacity = manifest.input_shape.first().copied().unwrap_or(1);
+    let mut b = Plan::builder(manifest, weights).capacity(capacity).config(&cfg);
+    for pass in disabled {
+        b = b.disable_pass(pass);
+    }
+    let plan = Arc::new(b.build().unwrap());
+    Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        plan,
+        cfg,
+        None,
+    )
+    .unwrap()
+}
+
+#[test]
+fn every_pass_subset_is_bit_exact_vs_reference() {
+    type Build = fn(u64, usize) -> (Manifest, ModelWeights, Tensor4);
+    let topos: [(&str, Build); 2] =
+        [("residual", residual_model), ("depthwise", depthwise_model)];
+    for (tname, build) in topos {
+        for &n in &[1usize, 8] {
+            let (manifest, weights, x) = build(21, n);
+            for mask in 0u32..(1 << PASS_NAMES.len()) {
+                let disabled: Vec<&str> = PASS_NAMES
+                    .iter()
+                    .enumerate()
+                    .filter(|(i, _)| mask & (1 << i) != 0)
+                    .map(|(_, p)| *p)
+                    .collect();
+                for &threads in &[1usize, 8] {
+                    let cfg =
+                        ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+                    let mut ex = executor_with(&manifest, &weights, cfg, &disabled);
+                    // every disabled pass must show up as off in the report
+                    for rep in &ex.plan().pass_reports {
+                        assert_eq!(
+                            rep.enabled,
+                            !disabled.contains(&rep.pass),
+                            "{tname}: pass {} enabled flag wrong for mask {mask:05b}",
+                            rep.pass
+                        );
+                    }
+                    for isa in [Isa::Scalar, Isa::detect()] {
+                        ex.set_isa(isa);
+                        let got = ex.infer(&x).unwrap().clone();
+                        let want = ex.reference_infer(&x).unwrap();
+                        assert_eq!(
+                            got.data, want.data,
+                            "{tname} n={n} mask={mask:05b} threads={threads} {isa:?}: \
+                             pass subset diverged from reference"
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn pass_reports_pin_the_residual_pipeline() {
+    let (manifest, weights, _) = residual_model(5, 2);
+    let cfg = ParallelConfig::sequential();
+    let plan =
+        Plan::builder(&manifest, &weights).capacity(2).config(&cfg).build().unwrap();
+
+    // one report per pass, in pipeline order, all enabled by default
+    let names: Vec<&str> = plan.pass_reports.iter().map(|r| r.pass).collect();
+    assert_eq!(names, PASS_NAMES.to_vec());
+    assert!(plan.pass_reports.iter().all(|r| r.enabled));
+    let by = |p: &str| plan.pass_reports.iter().find(|r| r.pass == p).unwrap();
+
+    // fusion folds exactly the one add (+relu) into c2's epilogue
+    let fusion = by("epilogue_fusion");
+    assert_eq!(fusion.rewrites, 1, "fusion rewrites: {:?}", fusion.details);
+    assert!(
+        fusion.details[0].contains("fold add+relu -> conv c2 epilogue"),
+        "fusion detail: {}",
+        fusion.details[0]
+    );
+    assert!(by("integer_resident").rewrites >= 1);
+    assert_eq!(by("implicit").rewrites, 3, "c1, c2, c3 must all stream");
+    assert_eq!(by("depthwise").rewrites, 0, "no grouped conv here");
+    // b1 lost its only writer (c2 now writes b2) and only reader (the
+    // add): it must be eliminated
+    let dead = by("dead_slot_elim");
+    assert_eq!(dead.rewrites, 1, "dead slots: {:?}", dead.details);
+    assert!(dead.details[0].contains("b1"), "dead detail: {}", dead.details[0]);
+
+    // the fused plan has no standalone Add left, and c2 carries the
+    // addend + relu in its epilogue, retargeted to the add's output
+    assert!(!plan.ops.iter().any(|op| matches!(op, PlanOp::Add { .. })));
+    let b0 = plan.slots.iter().position(|s| s.name == "b0").unwrap();
+    let b1 = plan.slots.iter().position(|s| s.name == "b1").unwrap();
+    let b2 = plan.slots.iter().position(|s| s.name == "b2").unwrap();
+    let fused = plan
+        .ops
+        .iter()
+        .find_map(|op| match op {
+            PlanOp::Conv { layer, out, fused_add: Some(fa), .. }
+                if weights.layers[*layer].name == "c2" =>
+            {
+                Some((*out, fa.clone()))
+            }
+            _ => None,
+        })
+        .expect("c2 lost its fused add");
+    assert_eq!(fused.0, b2, "fused conv must write the add's output");
+    assert_eq!(fused.1.addend, b0);
+    assert!(fused.1.relu);
+    // the dead slot holds neither f32 nor codes and costs no bytes
+    assert!(!plan.slots[b1].holds_f32 && !plan.slots[b1].holds_codes);
+    assert_eq!(plan.footprint(1).slot_bytes(b1), 0);
+
+    // disabling fusion keeps the standalone add and reports the pass off
+    let nofuse = Plan::builder(&manifest, &weights)
+        .capacity(2)
+        .config(&cfg)
+        .disable_pass("epilogue_fusion")
+        .build()
+        .unwrap();
+    let rep = nofuse.pass_reports.iter().find(|r| r.pass == "epilogue_fusion").unwrap();
+    assert!(!rep.enabled && rep.rewrites == 0 && rep.details.is_empty());
+    assert!(nofuse.ops.iter().any(|op| matches!(op, PlanOp::Add { .. })));
+}
+
+#[test]
+fn pass_reports_pin_the_depthwise_schedule() {
+    let (manifest, weights, _) = depthwise_model(11, 2);
+    let cfg = ParallelConfig::sequential();
+    let plan =
+        Plan::builder(&manifest, &weights).capacity(2).config(&cfg).build().unwrap();
+    let by = |p: &str| plan.pass_reports.iter().find(|r| r.pass == p).unwrap();
+    assert_eq!(by("epilogue_fusion").rewrites, 0, "no add to fold");
+    let dw_rep = by("depthwise");
+    assert_eq!(dw_rep.rewrites, 1, "depthwise rewrites: {:?}", dw_rep.details);
+    assert!(
+        dw_rep.details[0].contains("conv dw depthwise (4 groups"),
+        "depthwise detail: {}",
+        dw_rep.details[0]
+    );
+    // the grouped conv carries a per-group schedule and a panel, and
+    // did not take the implicit path
+    let (chunks_len, positions) = plan
+        .ops
+        .iter()
+        .find_map(|op| match op {
+            PlanOp::Conv { layer, implicit, group_chunks, panel_positions, .. }
+                if weights.layers[*layer].name == "dw" =>
+            {
+                assert!(!implicit);
+                Some((group_chunks.len(), *panel_positions))
+            }
+            _ => None,
+        })
+        .expect("dw conv missing");
+    assert!(chunks_len >= 1, "dw has no group schedule");
+    assert!(positions >= 1, "dw has no panel");
+
+    // with the pass off, the schedule disappears and the report says so
+    let nodw = Plan::builder(&manifest, &weights)
+        .capacity(2)
+        .config(&cfg)
+        .disable_pass("depthwise")
+        .build()
+        .unwrap();
+    let rep = nodw.pass_reports.iter().find(|r| r.pass == "depthwise").unwrap();
+    assert!(!rep.enabled && rep.rewrites == 0);
+    for op in &nodw.ops {
+        if let PlanOp::Conv { layer, group_chunks, .. } = op {
+            if weights.layers[*layer].name == "dw" {
+                assert!(group_chunks.is_empty(), "disabled pass left a schedule");
+            }
+        }
+    }
+}

@@ -300,29 +300,67 @@ fn plan_compile_rejects_bad_programs() {
     if let rmsmp::model::manifest::OpMeta::Conv { input, .. } = &mut m.program[0] {
         *input = "bogus".into();
     }
-    assert!(Plan::compile(&m, &weights, 1, &cfg).is_err());
+    assert!(Plan::builder(&m, &weights).config(&cfg).build().is_err());
 
     // program that never produces logits
     let mut m = manifest.clone();
     if let rmsmp::model::manifest::OpMeta::Linear { out, .. } = &mut m.program[2] {
         *out = "not_logits".into();
     }
-    assert!(Plan::compile(&m, &weights, 1, &cfg).is_err());
+    assert!(Plan::builder(&m, &weights).config(&cfg).build().is_err());
+
+    // unknown pass names fail at build
+    assert!(Plan::builder(&manifest, &weights)
+        .config(&cfg)
+        .disable_pass("no_such_pass")
+        .build()
+        .is_err());
 
     // well-formed program compiles
-    assert!(Plan::compile(&manifest, &weights, 1, &cfg).is_ok());
+    assert!(Plan::builder(&manifest, &weights).config(&cfg).build().is_ok());
+}
+
+/// The deprecated one-PR compatibility shims still compile and agree
+/// with the builder they forward to.
+#[test]
+#[allow(deprecated)]
+fn deprecated_compile_shims_match_builder() {
+    let mut g = Gen { rng: Rng::new(31), size: 1.0 };
+    let (manifest, weights, _) = build_model(&mut g, 2);
+    let cfg = ParallelConfig::sequential();
+    let built = Plan::builder(&manifest, &weights).capacity(2).config(&cfg).build().unwrap();
+    let shim = Plan::compile(&manifest, &weights, 2, &cfg).unwrap();
+    assert_eq!(shim.ops.len(), built.ops.len());
+    assert_eq!(shim.footprint(1).total_bytes(), built.footprint(1).total_bytes());
+    let f32res =
+        Plan::compile_with(&manifest, &weights, 2, &cfg, false).unwrap();
+    assert!(!f32res.integer_resident);
+    let explicit = Plan::compile_opts(
+        &manifest,
+        &weights,
+        2,
+        &cfg,
+        rmsmp::model::PlanOptions { implicit: false, ..Default::default() },
+    )
+    .unwrap();
+    assert!(!explicit.implicit);
 }
 
 #[test]
 fn plan_reports_footprint_and_describe() {
     let mut g = Gen { rng: Rng::new(29), size: 1.0 };
     let (manifest, weights, _x) = build_model(&mut g, 2);
-    let plan = Plan::compile(&manifest, &weights, 4, &ParallelConfig::sequential()).unwrap();
+    let plan = Plan::builder(&manifest, &weights)
+        .capacity(4)
+        .config(&ParallelConfig::sequential())
+        .build()
+        .unwrap();
     let fp = plan.footprint(1);
     assert_eq!(fp.slot_elems.len(), plan.slots.len());
     assert!(fp.total_bytes() > 0);
     assert!(fp.total_slot_bytes() + fp.scratch_bytes() == fp.total_bytes());
     let desc = plan.describe(&weights, 1);
+    assert!(desc.contains("passes:"), "{desc}");
     assert!(desc.contains("slots:"), "{desc}");
     assert!(desc.contains("ops:"), "{desc}");
     assert!(desc.contains("workspace"), "{desc}");

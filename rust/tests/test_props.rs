@@ -4,7 +4,10 @@
 
 use rmsmp::assign::{assign_layer, validate_ratio, Sensitivity};
 use rmsmp::fpga::{Board, CoreCosts, Design, QuantConfig};
-use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights, RowPartition};
+use rmsmp::gemm::{
+    chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, MixedGemm, PackedActs,
+    PackedWeights, RowPartition, SortedWeights,
+};
 use rmsmp::prop_assert;
 use rmsmp::quant::{self, Mat, Ratio, Scheme};
 use rmsmp::util::prop::{check, Gen};
@@ -155,7 +158,21 @@ fn prop_integer_gemm_equals_fake_quant() {
         let gm = MixedGemm::new();
         let acts = PackedActs::quantize(&x, act_alpha, 4);
         let pw = PackedWeights::quantize(&w, &schemes, &alpha);
-        let int_out = gm.run(&acts, &pw);
+        let sw = SortedWeights::from_packed(&pw);
+        let chunks = chunk_tasks(sw.partition(), gm.config().min_rows_per_task);
+        let mut scratch = GemmScratch::new(gm.lanes());
+        let mut int_out = Mat::zeros(acts.rows, pw.rows);
+        gm.dispatch(
+            GemmCall {
+                acts: GemmActs::Packed(&acts),
+                weights: &sw,
+                chunks: &chunks,
+                parallel: false,
+                fill: true,
+                out: GemmOut::F32(&mut int_out),
+            },
+            &mut scratch,
+        );
         let f_out = gm.run_float(&x, &w, &schemes, &alpha, act_alpha, 4);
         let scale = f_out.data.iter().fold(1.0f32, |m, v| m.max(v.abs()));
         let err = int_out.max_abs_err(&f_out);

@@ -96,10 +96,11 @@ fn rand_layer(
 ///   0 — conv(k3, random stride/pad, relu) → conv → gap → fc
 ///   1 — conv → depthwise conv (groups = channels) → conv → gap → fc
 ///   2 — conv(relu) → conv → add(+relu) → conv → conv → gap → fc
-///       (b0 feeds both a conv and the add, so it must stay f32; the
-///        add's output is produced by Add, which cannot emit codes, so
-///        it stays f32 too; the conv→conv pair after the residual is
-///        the topology's one integer-resident edge)
+///       (the epilogue_fusion pass folds the add into the second conv,
+///        whose fused output then goes integer-resident into c3; b0
+///        feeds both the conv and the fused addend, so it stays f32;
+///        the conv→conv pair after the residual is the second
+///        integer-resident edge)
 fn build_model(g: &mut Gen, topo: usize, n: usize) -> (Manifest, ModelWeights, Tensor4) {
     let c_in = *g.choice(&[2usize, 3]);
     let hw = *g.choice(&[6usize, 7]);
@@ -246,8 +247,14 @@ fn f32_resident_executor(
     cfg: ParallelConfig,
 ) -> Executor {
     let capacity = manifest.input_shape.first().copied().unwrap_or(1);
-    let plan =
-        Arc::new(Plan::compile_with(manifest, weights, capacity, &cfg, false).unwrap());
+    let plan = Arc::new(
+        Plan::builder(manifest, weights)
+            .capacity(capacity)
+            .config(&cfg)
+            .disable_pass("integer_resident")
+            .build()
+            .unwrap(),
+    );
     Executor::from_shared(
         Arc::new(manifest.clone()),
         Arc::new(weights.clone()),
@@ -345,17 +352,16 @@ fn prop_integer_resident_bit_exact_across_grid() {
 #[test]
 fn domain_inference_marks_expected_edges() {
     let mut g = Gen { rng: Rng::new(31), size: 1.0 };
-    // topo 2: b0 feeds conv AND add → f32; b1 feeds add → f32; b2 is
-    // produced by Add (cannot emit codes) → f32; b3 (c3 → c4) is the
-    // one integer edge; b4 feeds gap → f32.
+    // topo 2 after fusion: the add is folded into c2 (whose output b2
+    // then goes integer-resident into c3); b0 feeds c2's GEMM input
+    // *and* its fused addend → f32; b1 is orphaned by the fold → dead;
+    // b3 (c3 → c4) is the second integer edge; b4 feeds gap → f32.
     let (manifest, weights, _) = build_model(&mut g, 2, 2);
-    let plan = Plan::compile(
-        &manifest,
-        &weights,
-        2,
-        &ParallelConfig::sequential(),
-    )
-    .unwrap();
+    let plan = Plan::builder(&manifest, &weights)
+        .capacity(2)
+        .config(&ParallelConfig::sequential())
+        .build()
+        .unwrap();
     assert!(plan.integer_resident);
     let mut by_layer: Vec<(String, bool, bool)> = Vec::new();
     for op in &plan.ops {
@@ -370,21 +376,48 @@ fn domain_inference_marks_expected_edges() {
         }
     }
     let find = |name: &str| by_layer.iter().find(|(n, _, _)| n == name).unwrap().clone();
-    // c1 -> b0 is read by c2 (quant) and add (f32): stays f32
+    // c1 -> b0 is read by c2's GEMM input (quant) and fused addend
+    // (f32): stays f32
     assert_eq!(find("c1"), ("c1".into(), false, false));
-    // c2 reads f32 b0, writes b1 read by add: f32 out
-    assert_eq!(find("c2"), ("c2".into(), false, false));
-    // c3 reads the f32 add output, writes b3 read only by c4: u8 out
-    assert_eq!(find("c3"), ("c3".into(), false, true));
+    // c2 carries the fused add, reads f32 b0, writes b2 read only by
+    // c3: u8 out through the fused epilogue
+    assert_eq!(find("c2"), ("c2".into(), false, true));
+    let c2 = plan
+        .ops
+        .iter()
+        .find_map(|op| match op {
+            PlanOp::Conv { layer, fused_add, .. }
+                if weights.layers[*layer].name == "c2" =>
+            {
+                Some(*fused_add)
+            }
+            _ => None,
+        })
+        .unwrap();
+    let fa = c2.expect("add not fused into c2");
+    assert!(fa.relu, "fused add lost its relu");
+    // the add op itself is gone
+    assert!(!plan.ops.iter().any(|op| matches!(op, PlanOp::Add { .. })));
+    // c3 consumes c2's codes, writes b3 read only by c4: u8 out
+    assert_eq!(find("c3"), ("c3".into(), true, true));
     // c4 consumes codes, writes b4 read only by gap: f32 out
     assert_eq!(find("c4"), ("c4".into(), true, false));
     // fc reads the f32 gap output and writes logits: f32 everywhere
     assert_eq!(find("fc"), ("fc".into(), false, false));
+    // b1 was orphaned by the fold: dead, zero bytes either domain
+    let b1_id = plan.slots.iter().position(|s| s.name == "b1").unwrap();
+    let b1 = &plan.slots[b1_id];
+    assert!(!b1.holds_f32 && !b1.holds_codes, "b1 not dead: {b1:?}");
+    let fp = plan.footprint(1);
+    assert_eq!(fp.slot_bytes(b1_id), 0, "dead slot still budgets bytes");
 
     // topo 0 is the positive case: c1 -> b0 read only by c2
     let (manifest, weights, _) = build_model(&mut g, 0, 2);
-    let plan =
-        Plan::compile(&manifest, &weights, 2, &ParallelConfig::sequential()).unwrap();
+    let plan = Plan::builder(&manifest, &weights)
+        .capacity(2)
+        .config(&ParallelConfig::sequential())
+        .build()
+        .unwrap();
     let mut marked = 0;
     for op in &plan.ops {
         if let PlanOp::Conv { layer, in_codes, out_quant, .. } = op {
@@ -441,7 +474,8 @@ fn from_shared_rejects_stale_epilogue_scales() {
     let mut g = Gen { rng: Rng::new(41), size: 1.0 };
     let (manifest, weights, _) = build_model(&mut g, 0, 2);
     let cfg = ParallelConfig::sequential();
-    let plan = Arc::new(Plan::compile(&manifest, &weights, 2, &cfg).unwrap());
+    let plan =
+        Arc::new(Plan::builder(&manifest, &weights).capacity(2).config(&cfg).build().unwrap());
     // same geometry + scheme mix, different consumer clip scale: the
     // baked epilogue scale is stale for these weights
     let mut w2 = weights.clone();

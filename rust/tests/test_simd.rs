@@ -10,8 +10,8 @@
 //! exact; the bijective permutation makes the second one.
 
 use rmsmp::gemm::{
-    chunk_tasks, GemmScratch, Isa, MixedGemm, PackedActs, PackedWeights, ParallelConfig,
-    SortedWeights, MICRO_ROWS,
+    chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, Isa, MixedGemm, PackedActs,
+    PackedWeights, ParallelConfig, SortedWeights, MICRO_ROWS,
 };
 use rmsmp::prop_assert;
 use rmsmp::quant::{self, Mat, Scheme};
@@ -85,7 +85,17 @@ fn sorted_block(
     let mut scratch = GemmScratch::new(1);
     let mut out = Mat::zeros(acts.rows, pw.rows);
     out.data.fill(f32::NAN); // every cell must be overwritten
-    engine.run_partitioned_into(acts, &sw, &chunks, false, &mut scratch, &mut out);
+    engine.dispatch(
+        GemmCall {
+            acts: GemmActs::Packed(acts),
+            weights: &sw,
+            chunks: &chunks,
+            parallel: false,
+            fill: true,
+            out: GemmOut::F32(&mut out),
+        },
+        &mut scratch,
+    );
     out
 }
 
@@ -177,7 +187,17 @@ fn parallel_simd_dispatch_is_bit_exact_vs_scalar_sequential() {
     let mut out = Mat::zeros(acts.rows, pw.rows);
     for _ in 0..3 {
         out.data.fill(f32::NAN);
-        par.run_partitioned_into(&acts, &sw, &chunks, true, &mut scratch, &mut out);
+        par.dispatch(
+            GemmCall {
+                acts: GemmActs::Packed(&acts),
+                weights: &sw,
+                chunks: &chunks,
+                parallel: true,
+                fill: true,
+                out: GemmOut::F32(&mut out),
+            },
+            &mut scratch,
+        );
         assert_eq!(out.data, want.data, "parallel SIMD dispatch diverged");
     }
 }

@@ -7,7 +7,10 @@
 
 use std::path::PathBuf;
 
-use rmsmp::gemm::{MixedGemm, PackedActs, PackedWeights};
+use rmsmp::gemm::{
+    chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, MixedGemm, PackedActs,
+    PackedWeights, SortedWeights,
+};
 use rmsmp::quant::{self, Mat, Scheme};
 use rmsmp::util::json::Json;
 
@@ -156,11 +159,25 @@ fn mixed_gemm_matches_jax() {
     let act_alpha = tv.get("act_alpha").unwrap().as_f64().unwrap() as f32;
     let want = Mat::from_vec(batch, rows, tv.get("y").unwrap().as_f32_vec().unwrap());
 
-    // integer cores
+    // integer cores, through the public dispatch descriptor
     let g = MixedGemm::new();
     let acts = PackedActs::quantize(&x, act_alpha, 4);
     let pw = PackedWeights::quantize(&w, &schemes, &alpha);
-    let int_out = g.run(&acts, &pw);
+    let sw = SortedWeights::from_packed(&pw);
+    let chunks = chunk_tasks(sw.partition(), g.config().min_rows_per_task);
+    let mut scratch = GemmScratch::new(g.lanes());
+    let mut int_out = Mat::zeros(acts.rows, pw.rows);
+    g.dispatch(
+        GemmCall {
+            acts: GemmActs::Packed(&acts),
+            weights: &sw,
+            chunks: &chunks,
+            parallel: false,
+            fill: true,
+            out: GemmOut::F32(&mut int_out),
+        },
+        &mut scratch,
+    );
     let err = int_out.max_abs_err(&want);
     assert!(err < 5e-4, "integer gemm vs jax err {err}");
 
