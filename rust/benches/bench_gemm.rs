@@ -4,9 +4,12 @@
 //! comparisons the CI bench-regression job tracks.
 //!
 //! Emits `BENCH_gemm.json` (ns/op per case, per scheme class, sequential
-//! vs parallel, the 512^3 parallel speedup, and `simd_speedup` — the
+//! vs parallel, the 512^3 parallel speedup, `simd_speedup` — the
 //! single-thread 512^3 win of the class-sorted SIMD block kernels over
-//! the row-at-a-time scalar baseline) via `util::bench::Bench`.
+//! the row-at-a-time scalar baseline — plus one
+//! `simd_speedup_<tier>` per ISA tier the host supports and the
+//! blocking parameters the load-time autotuner picks for the 512^3
+//! shape) via `util::bench::Bench`.
 //!
 //! Run: `cargo bench --bench bench_gemm` (RMSMP_BENCH_FAST=1 for CI).
 
@@ -14,8 +17,9 @@ use std::hint::black_box;
 
 use rmsmp::gemm::cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
 use rmsmp::gemm::{
-    chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, Isa, MixedGemm, PackedActs,
-    PackedWeights, ParallelConfig, RowPartition, SortedWeights, TaskChunk,
+    autotune, chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, Isa, MixedGemm,
+    PackedActs, PackedWeights, ParallelConfig, RowPartition, SortedWeights, TaskChunk,
+    TuneShape, ISA_LADDER,
 };
 use rmsmp::quant::{default_alpha, Mat, Scheme};
 use rmsmp::util::bench::Bench;
@@ -190,6 +194,22 @@ fn main() {
         run_mixed(&simd_engine, black_box(&acts), &sw, &chunks, false, &mut scratch, &mut out);
         black_box(&out);
     });
+    // one case per non-scalar ladder tier the host actually supports
+    // (the artifact shows which ran), all single-thread at 512^3
+    let mut tier_cases: Vec<(String, String)> = Vec::new();
+    for tier in ISA_LADDER {
+        if tier == Isa::Scalar || tier.available() != tier {
+            continue;
+        }
+        let mut tier_engine = MixedGemm::with_config(single);
+        tier_engine.set_isa(tier);
+        let case = format!("mixed512_block_{}", tier.name());
+        b.case_ops(&case, Some(macs512), || {
+            run_mixed(&tier_engine, black_box(&acts), &sw, &chunks, false, &mut scratch, &mut out);
+            black_box(&out);
+        });
+        tier_cases.push((format!("simd_speedup_{}", tier.name()), case));
+    }
     let ns_of = |name: &str| b.get(name).map(|m| m.ns_per_iter()).unwrap_or(f64::NAN);
     let row_scalar_ns = ns_of("mixed512_row_scalar");
     let block_scalar_ns = ns_of("mixed512_block_scalar");
@@ -197,6 +217,10 @@ fn main() {
     // the acceptance metric: sorted blocks + SIMD vs the PR 2 scalar kernels
     let simd_speedup = row_scalar_ns / block_simd_ns;
     let block_speedup = row_scalar_ns / block_scalar_ns;
+    let tier_speedups: Vec<(String, f64)> = tier_cases
+        .iter()
+        .map(|(key, case)| (key.clone(), row_scalar_ns / ns_of(case)))
+        .collect();
     println!(
         "bench gemm/mixed512 kernels ({isa:?}): block {block_speedup:.2}x, \
          block+simd {simd_speedup:.2}x vs row-scalar"
@@ -210,13 +234,36 @@ fn main() {
         black_box(PackedActs::quantize(black_box(&x), 1.0, 4));
     });
 
-    let extra = vec![
+    // what the load-time autotuner picks for the acceptance shape on
+    // this machine (per-process cached — a plan compile for a model
+    // with a 512^3-class layer reuses exactly this result)
+    let tuned = autotune::tune(
+        TuneShape::for_layer(r512, c512, b512),
+        &ParallelConfig::default(),
+        false,
+    );
+    println!(
+        "bench gemm: autotuned tile {} / chunk {} / panel {} B ({})",
+        tuned.tile_cols,
+        tuned.min_rows_per_task,
+        tuned.panel_bytes,
+        tuned.source.name()
+    );
+
+    let mut extra = vec![
         ("threads", num(threads as f64)),
         ("speedup_512", num(speedup)),
-        ("isa", s(&format!("{isa:?}"))),
+        ("isa", s(isa.name())),
         ("simd_speedup", num(simd_speedup)),
         ("block_speedup", num(block_speedup)),
+        ("tuned_tile_cols", num(tuned.tile_cols as f64)),
+        ("tuned_min_rows_per_task", num(tuned.min_rows_per_task as f64)),
+        ("tuned_panel_bytes", num(tuned.panel_bytes as f64)),
+        ("tuned_source", s(tuned.source.name())),
     ];
+    for (key, v) in &tier_speedups {
+        extra.push((key.as_str(), num(*v)));
+    }
     match b.write_json(extra) {
         Ok(path) => println!("bench gemm: wrote {}", path.display()),
         Err(e) => eprintln!("bench gemm: could not write JSON: {e}"),

@@ -2,11 +2,13 @@
 //! compiled plan vs the reference interpreter at batch 1 and 8, plus one
 //! ablation per optimizer pass (integer-resident vs f32-resident,
 //! implicit vs explicit-im2col, fused vs standalone residual add,
-//! depthwise specialization vs the grouped fallback), and sequential vs
-//! parallel — on a synthetic residual CNN (no artifacts needed) and,
-//! when artifacts exist, on the shipped model. Writes
-//! `BENCH_runtime.json` (per-inference latency + the pass-ablation
-//! speedups) for the CI bench-smoke artifact.
+//! depthwise specialization vs the grouped fallback), the load-time
+//! autotuner's machine-tuned blocking vs the fixed defaults
+//! (`autotune_speedup_b1/b8`), and sequential vs parallel — on a
+//! synthetic residual CNN (no artifacts needed) and, when artifacts
+//! exist, on the shipped model. Writes `BENCH_runtime.json`
+//! (per-inference latency + the ablation speedups) for the CI
+//! bench-smoke artifact.
 //!
 //! Run: `cargo bench --bench bench_runtime` (RMSMP_BENCH_FAST=1 for CI).
 
@@ -21,7 +23,7 @@ use rmsmp::quant::tensor::Tensor4;
 use rmsmp::quant::{self, Mat, Scheme};
 use rmsmp::runtime::Runtime;
 use rmsmp::util::bench::Bench;
-use rmsmp::util::json::{num, Json};
+use rmsmp::util::json::{num, s, Json};
 use rmsmp::util::rng::Rng;
 
 #[allow(clippy::too_many_arguments)]
@@ -274,6 +276,40 @@ fn main() {
          {depthwise_speedup_b8:.2}x @ batch 8"
     );
 
+    // load-time autotuning: the machine-tuned blocking knobs baked into
+    // the full plan vs the same plan compiled with the fixed defaults
+    // (same passes, same kernels — only tile / chunk / panel sizing
+    // differs; logits are bit-identical either way)
+    let notune_plan = Arc::new(
+        Plan::builder(&manifest, &weights)
+            .capacity(capacity)
+            .config(&cfg)
+            .no_tune()
+            .build()
+            .unwrap(),
+    );
+    let mut notune_seq = Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        notune_plan,
+        cfg,
+        None,
+    )
+    .unwrap();
+    bench_plan(&mut b, "notune_b1", &mut notune_seq, &x1);
+    bench_plan(&mut b, "notune_b8", &mut notune_seq, &x8);
+    let autotune_speedup_b1 = ns(&b, "notune_b1") / ns(&b, "plan_b1");
+    let autotune_speedup_b8 = ns(&b, "notune_b8") / ns(&b, "plan_b8");
+    let tuned = seq.plan().tuned;
+    println!(
+        "bench runtime: autotune speedup {autotune_speedup_b1:.2}x @ batch 1, \
+         {autotune_speedup_b8:.2}x @ batch 8 (tile {} / chunk {} / panel {} B, {})",
+        seq.plan().cfg.tile_cols,
+        seq.plan().cfg.min_rows_per_task,
+        tuned.panel_bytes,
+        tuned.source.name()
+    );
+
     // the compiled-plan dump (the `rmsmp plan` output for this model,
     // including the per-pass optimizer report): CI shows and uploads it
     // so footprint regressions are visible per PR. Same target directory
@@ -322,6 +358,12 @@ fn main() {
         ("implicit_fp_bytes", num(implicit_fp as f64)),
         ("explicit_fp_bytes", num(explicit_fp as f64)),
         ("fp_saved_bytes", num(explicit_fp as f64 - implicit_fp as f64)),
+        ("autotune_speedup_b1", num(autotune_speedup_b1)),
+        ("autotune_speedup_b8", num(autotune_speedup_b8)),
+        ("tuned_tile_cols", num(tuned.tile_cols as f64)),
+        ("tuned_min_rows_per_task", num(tuned.min_rows_per_task as f64)),
+        ("tuned_panel_bytes", num(tuned.panel_bytes as f64)),
+        ("tuned_source", s(tuned.source.name())),
     ];
     match b.write_json(extra) {
         Ok(path) => println!("bench runtime: wrote {}", path.display()),

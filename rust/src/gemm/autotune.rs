@@ -1,0 +1,427 @@
+//! Load-time autotuner: microbench the machine, bake the winners into
+//! the compiled plan.
+//!
+//! The kernel layer's blocking knobs — the column-tile width
+//! (`tile_cols`), the parallel chunk granularity (`min_rows_per_task`),
+//! and the implicit-GEMM panel budget (bytes per streamed column-tile
+//! panel) — encode assumptions about cache sizes and core counts that
+//! hold on the dev box and nowhere else in a heterogeneous fleet. RMSMP's
+//! premise is hardware-informed quantization; this module applies the
+//! same discipline one level down: at plan-compile time
+//! ([`crate::model::PlanBuilder::build`]), [`tune`] runs the real
+//! [`MixedGemm::dispatch`] path over a synthetic workload shaped like the
+//! model's largest layer (same 65:30:5 scheme mix as the benches, same
+//! class-sorted layout, same chunk schedules) for a small candidate grid,
+//! and returns the fastest [`TunedParams`].
+//!
+//! Contracts that keep tuning safe:
+//!
+//! * **Bit-exactness is never at stake.** The integer cores are
+//!   tile-size-independent (i32 accumulation is associative) and panel
+//!   width / chunk schedule never change per-cell arithmetic, so a tuned
+//!   plan produces logits bit-identical to the default plan. The one
+//!   exception — the f32-accumulating APoT baseline core is only
+//!   deterministic for a *fixed* `tile_cols` — is handled by the caller
+//!   pinning the tile (`pin_tile`) whenever the model carries APoT rows.
+//! * **Explicit knobs win.** A [`ParallelConfig`] field that differs from
+//!   its documented default ([`DEFAULT_TILE_COLS`] /
+//!   [`DEFAULT_MIN_ROWS_PER_TASK`]) is a caller decision; [`TunedParams::
+//!   apply_to`] leaves it alone and tuning only fills the knobs still at
+//!   their defaults.
+//! * **A winner must beat the default decisively.** Candidates replace
+//!   the default only on a >2% improvement in the microbench, so noise
+//!   cannot regress the shipped defaults — the tuned plan is >= the
+//!   fixed-default plan by construction (up to microbench noise on real
+//!   workloads).
+//! * **Deterministic escape hatch.** `RMSMP_NO_TUNE=1` (checked by the
+//!   plan builder via [`no_tune_requested`]) skips the microbench and
+//!   keeps today's fixed defaults — reproducible tests and benchable
+//!   ablations.
+//!
+//! Results are cached per process (keyed by workload shape, thread
+//! count, and the pinned/explicit knobs), so a server compiling many
+//! plans pays for the microbench once.
+
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use super::mixed::{
+    chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, MixedGemm, ParallelConfig,
+    DEFAULT_MIN_ROWS_PER_TASK, DEFAULT_TILE_COLS,
+};
+use super::packed::{PackedActs, PackedWeights};
+use super::sorted::SortedWeights;
+use crate::quant::{Mat, Scheme};
+use crate::util::rng::Rng;
+
+/// The untuned implicit-GEMM panel budget: bytes of activation codes per
+/// streamed column-tile panel (the pre-autotuner compile-time constant).
+pub const DEFAULT_PANEL_BYTES: usize = 32 * 1024;
+
+/// Candidate `tile_cols` widths (the default stays in the grid so it is
+/// always measured as the baseline).
+const TILE_CANDIDATES: [usize; 4] = [64, 128, DEFAULT_TILE_COLS, 512];
+/// Candidate parallel chunk granularities.
+const CHUNK_CANDIDATES: [usize; 3] = [4, DEFAULT_MIN_ROWS_PER_TASK, 16];
+/// Candidate panel budgets.
+const PANEL_CANDIDATES: [usize; 3] = [16 * 1024, DEFAULT_PANEL_BYTES, 64 * 1024];
+
+/// A candidate must beat the incumbent by this factor to replace it —
+/// the noise guard that keeps tuning monotone vs the defaults.
+const IMPROVEMENT: f64 = 0.98;
+
+/// Microbench workload shape — the model's largest GEMM layer, clamped
+/// to keep the load-time cost bounded.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct TuneShape {
+    /// Weight rows (output channels) of the synthetic layer.
+    pub rows: usize,
+    /// Columns (reduction depth) of the synthetic layer.
+    pub cols: usize,
+    /// Activation rows per dispatch (batch, or panel positions).
+    pub batch: usize,
+}
+
+impl TuneShape {
+    /// Shape for a model whose largest layer is `rows x cols` with up to
+    /// `batch` activation rows in flight, clamped so one microbench
+    /// dispatch stays in the low-millisecond range.
+    pub fn for_layer(rows: usize, cols: usize, batch: usize) -> TuneShape {
+        TuneShape {
+            rows: rows.clamp(16, 64),
+            cols: cols.clamp(32, 1024),
+            batch: batch.clamp(8, 64),
+        }
+    }
+}
+
+/// Where a plan's blocking parameters came from.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum TuneSource {
+    /// Chosen by the load-time microbench.
+    Tuned,
+    /// The fixed compile-time defaults (`RMSMP_NO_TUNE`, or a builder
+    /// that opted out).
+    Defaults,
+}
+
+impl TuneSource {
+    /// Short label for plan descriptions and bench JSON.
+    pub fn name(self) -> &'static str {
+        match self {
+            TuneSource::Tuned => "tuned",
+            TuneSource::Defaults => "defaults",
+        }
+    }
+}
+
+/// The blocking parameters a compiled plan bakes in.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct TunedParams {
+    /// Column-tile width for the packed inner loops.
+    pub tile_cols: usize,
+    /// Parallel chunk granularity (rows per task).
+    pub min_rows_per_task: usize,
+    /// Implicit-GEMM panel budget in bytes (positions per panel =
+    /// `panel_bytes / layer cols`, clamped as before).
+    pub panel_bytes: usize,
+    /// Whether these came from the microbench or the fixed defaults.
+    pub source: TuneSource,
+}
+
+impl TunedParams {
+    /// The untuned parameters for `cfg` (the `RMSMP_NO_TUNE` path):
+    /// whatever the config says, plus the fixed panel budget.
+    pub fn defaults(cfg: &ParallelConfig) -> TunedParams {
+        TunedParams {
+            tile_cols: cfg.tile_cols,
+            min_rows_per_task: cfg.min_rows_per_task,
+            panel_bytes: DEFAULT_PANEL_BYTES,
+            source: TuneSource::Defaults,
+        }
+    }
+
+    /// Merge into `cfg` under the explicit-wins contract: a knob still at
+    /// its documented default takes the tuned value, anything else was an
+    /// explicit caller choice and is kept.
+    pub fn apply_to(&self, cfg: ParallelConfig) -> ParallelConfig {
+        ParallelConfig {
+            threads: cfg.threads,
+            tile_cols: if cfg.tile_cols == DEFAULT_TILE_COLS {
+                self.tile_cols
+            } else {
+                cfg.tile_cols
+            },
+            min_rows_per_task: if cfg.min_rows_per_task == DEFAULT_MIN_ROWS_PER_TASK {
+                self.min_rows_per_task
+            } else {
+                cfg.min_rows_per_task
+            },
+        }
+    }
+}
+
+/// Whether `RMSMP_NO_TUNE` asks for the deterministic fixed defaults
+/// (any non-empty value other than `"0"`).
+pub fn no_tune_requested() -> bool {
+    std::env::var("RMSMP_NO_TUNE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
+}
+
+type CacheKey = (TuneShape, usize, bool, usize, usize);
+static CACHE: OnceLock<Mutex<Vec<(CacheKey, TunedParams)>>> = OnceLock::new();
+
+/// Microbench the candidate grids for `shape` and return the winners.
+/// `cfg` supplies the baseline knobs (and the thread count: chunk
+/// granularity is only tuned when the config resolves to >1 thread);
+/// `pin_tile` keeps `tile_cols` at the configured value (required when
+/// the model carries f32-accumulating APoT rows, whose results are only
+/// deterministic for a fixed tile). Results are cached per process.
+///
+/// This runs at plan-compile (load) time, so its allocations do not
+/// disturb the zero-steady-state-allocation property of inference.
+pub fn tune(shape: TuneShape, cfg: &ParallelConfig, pin_tile: bool) -> TunedParams {
+    let threads = if cfg.threads == 1 { 1 } else { cfg.resolved_threads() };
+    let key = (shape, threads, pin_tile, cfg.tile_cols, cfg.min_rows_per_task);
+    let cache = CACHE.get_or_init(|| Mutex::new(Vec::new()));
+    if let Ok(hits) = cache.lock() {
+        if let Some((_, p)) = hits.iter().find(|(k, _)| *k == key) {
+            return *p;
+        }
+    }
+    let params = tune_uncached(shape, cfg, threads, pin_tile);
+    if let Ok(mut hits) = cache.lock() {
+        hits.push((key, params));
+    }
+    params
+}
+
+/// One synthetic workload: a 65:30:5 Fixed-4 / PoT-4 / Fixed-8 row mix
+/// (the repo's canonical scheme ratio) in the class-sorted layout, plus
+/// 4-bit activations with `batch` rows.
+struct Workload {
+    acts: PackedActs,
+    sorted: SortedWeights,
+    rows: usize,
+}
+
+impl Workload {
+    fn build(rows: usize, cols: usize, batch: usize) -> Workload {
+        let mut rng = Rng::new(0x7a11e7);
+        let xd: Vec<f32> = (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect();
+        let x = Mat::from_vec(batch, cols, xd);
+        let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.4));
+        let alpha: Vec<f32> =
+            (0..rows).map(|r| crate::quant::default_alpha(w.row(r))).collect();
+        let schemes: Vec<Scheme> = (0..rows)
+            .map(|r| {
+                if r * 20 < rows * 13 {
+                    Scheme::FixedW4A4
+                } else if r * 20 < rows * 19 {
+                    Scheme::PotW4A4
+                } else {
+                    Scheme::FixedW8A4
+                }
+            })
+            .collect();
+        let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+        let sorted = SortedWeights::from_packed(&packed);
+        let acts = PackedActs::quantize(&x, 1.0, 4);
+        Workload { acts, sorted, rows }
+    }
+
+    /// Best-of-`iters` wall time of one full dispatch (after one
+    /// warmup), in nanoseconds.
+    fn time(
+        &self,
+        gemm: &MixedGemm,
+        min_rows: usize,
+        parallel: bool,
+        scratch: &mut GemmScratch,
+        out: &mut Mat,
+    ) -> u64 {
+        let chunks = chunk_tasks(self.sorted.partition(), min_rows);
+        let mut best = u64::MAX;
+        for it in 0..4 {
+            let t = Instant::now();
+            gemm.dispatch(
+                GemmCall {
+                    acts: GemmActs::Packed(&self.acts),
+                    weights: &self.sorted,
+                    chunks: &chunks,
+                    parallel,
+                    fill: true,
+                    out: GemmOut::F32(out),
+                },
+                scratch,
+            );
+            let ns = t.elapsed().as_nanos() as u64;
+            if it > 0 {
+                best = best.min(ns);
+            }
+        }
+        best
+    }
+}
+
+/// Sequential engine with one knob overridden.
+fn engine(tile_cols: usize) -> MixedGemm {
+    MixedGemm::with_config(ParallelConfig {
+        threads: 1,
+        tile_cols,
+        min_rows_per_task: DEFAULT_MIN_ROWS_PER_TASK,
+    })
+}
+
+fn tune_uncached(
+    shape: TuneShape,
+    cfg: &ParallelConfig,
+    threads: usize,
+    pin_tile: bool,
+) -> TunedParams {
+    let wl = Workload::build(shape.rows, shape.cols, shape.batch);
+    let mut scratch = GemmScratch::new(1);
+    let mut out = Mat::zeros(shape.batch, wl.rows);
+
+    // tile_cols: sequential sweep, incumbent = the configured value
+    let mut tile_cols = cfg.tile_cols;
+    if !pin_tile {
+        let mut best =
+            wl.time(&engine(tile_cols), cfg.min_rows_per_task, false, &mut scratch, &mut out);
+        for cand in TILE_CANDIDATES {
+            if cand == cfg.tile_cols {
+                continue;
+            }
+            let ns = wl.time(&engine(cand), cfg.min_rows_per_task, false, &mut scratch, &mut out);
+            if (ns as f64) < best as f64 * IMPROVEMENT {
+                best = ns;
+                tile_cols = cand;
+            }
+        }
+    }
+
+    // panel budget: the implicit-GEMM path processes `panel_bytes / cols`
+    // positions per dispatch; proxy each candidate with a packed GEMM at
+    // that batch height and compare per-element cost (cache-resident
+    // panels win, spilled ones lose, tiny ones waste amortization).
+    let mut panel_bytes = DEFAULT_PANEL_BYTES;
+    {
+        let tile_engine = engine(tile_cols);
+        let positions = |pb: usize| (pb / shape.cols.max(1)).clamp(8, 256);
+        let per_elem = |pb: usize, scratch: &mut GemmScratch| {
+            let p = positions(pb);
+            let pwl = Workload::build(shape.rows, shape.cols, p);
+            let mut pout = Mat::zeros(p, pwl.rows);
+            let ns = pwl.time(&tile_engine, cfg.min_rows_per_task, false, scratch, &mut pout);
+            ns as f64 / (p * shape.rows * shape.cols) as f64
+        };
+        let mut best = per_elem(DEFAULT_PANEL_BYTES, &mut scratch);
+        for cand in PANEL_CANDIDATES {
+            if cand == DEFAULT_PANEL_BYTES || positions(cand) == positions(DEFAULT_PANEL_BYTES) {
+                continue;
+            }
+            let c = per_elem(cand, &mut scratch);
+            if c < best * IMPROVEMENT {
+                best = c;
+                panel_bytes = cand;
+            }
+        }
+    }
+
+    // chunk granularity: only meaningful with a pool; sweep real parallel
+    // dispatches so scheduling overhead vs balance is actually measured
+    let mut min_rows = cfg.min_rows_per_task;
+    if threads > 1 {
+        let par = MixedGemm::with_config(ParallelConfig {
+            threads,
+            tile_cols,
+            min_rows_per_task: cfg.min_rows_per_task,
+        });
+        let mut pscratch = GemmScratch::new(par.lanes());
+        let mut best = wl.time(&par, min_rows, true, &mut pscratch, &mut out);
+        for cand in CHUNK_CANDIDATES {
+            if cand == cfg.min_rows_per_task {
+                continue;
+            }
+            let ns = wl.time(&par, cand, true, &mut pscratch, &mut out);
+            if (ns as f64) < best as f64 * IMPROVEMENT {
+                best = ns;
+                min_rows = cand;
+            }
+        }
+    }
+
+    TunedParams { tile_cols, min_rows_per_task: min_rows, panel_bytes, source: TuneSource::Tuned }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_reflect_config_and_are_marked() {
+        let cfg = ParallelConfig { threads: 1, tile_cols: 33, min_rows_per_task: 5 };
+        let p = TunedParams::defaults(&cfg);
+        assert_eq!(p.tile_cols, 33);
+        assert_eq!(p.min_rows_per_task, 5);
+        assert_eq!(p.panel_bytes, DEFAULT_PANEL_BYTES);
+        assert_eq!(p.source, TuneSource::Defaults);
+        assert_eq!(p.source.name(), "defaults");
+    }
+
+    #[test]
+    fn apply_to_lets_explicit_knobs_win() {
+        let tuned = TunedParams {
+            tile_cols: 128,
+            min_rows_per_task: 16,
+            panel_bytes: 64 * 1024,
+            source: TuneSource::Tuned,
+        };
+        // defaults are replaced by the tuned values
+        let base = ParallelConfig { threads: 3, ..ParallelConfig::default() };
+        let merged = tuned.apply_to(base);
+        assert_eq!(merged.threads, 3);
+        assert_eq!(merged.tile_cols, 128);
+        assert_eq!(merged.min_rows_per_task, 16);
+        // explicit values survive
+        let explicit = ParallelConfig { threads: 1, tile_cols: 48, min_rows_per_task: 2 };
+        let kept = tuned.apply_to(explicit);
+        assert_eq!(kept.tile_cols, 48);
+        assert_eq!(kept.min_rows_per_task, 2);
+    }
+
+    #[test]
+    fn shape_is_clamped_to_the_microbench_budget() {
+        let s = TuneShape::for_layer(4096, 100_000, 9999);
+        assert_eq!(s, TuneShape { rows: 64, cols: 1024, batch: 64 });
+        let t = TuneShape::for_layer(1, 1, 1);
+        assert_eq!(t, TuneShape { rows: 16, cols: 32, batch: 8 });
+    }
+
+    #[test]
+    fn tune_picks_candidates_and_caches() {
+        let cfg = ParallelConfig::sequential();
+        let shape = TuneShape::for_layer(16, 48, 8);
+        let a = tune(shape, &cfg, false);
+        assert_eq!(a.source, TuneSource::Tuned);
+        assert!(
+            TILE_CANDIDATES.contains(&a.tile_cols) || a.tile_cols == cfg.tile_cols,
+            "tile {}",
+            a.tile_cols
+        );
+        assert!(PANEL_CANDIDATES.contains(&a.panel_bytes));
+        // sequential config never tunes the chunk granularity
+        assert_eq!(a.min_rows_per_task, cfg.min_rows_per_task);
+        // second call is a cache hit with an identical answer
+        let b = tune(shape, &cfg, false);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn pinned_tile_is_never_changed() {
+        let cfg = ParallelConfig::sequential();
+        let shape = TuneShape::for_layer(16, 40, 8);
+        let p = tune(shape, &cfg, true);
+        assert_eq!(p.tile_cols, cfg.tile_cols);
+        assert_eq!(p.source, TuneSource::Tuned);
+    }
+}

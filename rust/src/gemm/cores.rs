@@ -28,7 +28,7 @@
 //! *fixed* tile size (which is all the parallel executor needs).
 
 use super::packed::{code_map, ActsView, PackedActs, PackedWeights};
-use super::simd::{self, Isa, MICRO_ROWS};
+use super::simd::{self, KernelIsa, MICRO_ROWS};
 use super::sorted::SortedWeights;
 use crate::quant::apot::ApotQuantizer;
 use crate::quant::{Mat, Scheme};
@@ -139,8 +139,10 @@ pub trait GemmCore: Sync {
     /// `out[j * batch + b] = dequant(dot(acts[b], sorted row r0 + j))`
     /// (overwrite, not accumulate). `acc` is i32 scratch; both slices
     /// must hold at least `nr * batch` elements. The integer cores
-    /// dispatch the inner dot to `isa`; every ISA is bit-exact vs the
-    /// scalar [`GemmCore::run_row_tiled`] path at the same `tile_cols`.
+    /// dispatch the inner dot to `isa` — a pre-validated token (see
+    /// [`KernelIsa`]), so no per-call hardware re-check happens here;
+    /// every ISA is bit-exact vs the scalar
+    /// [`GemmCore::run_row_tiled`] path at the same `tile_cols`.
     fn run_block_tiled(
         &self,
         acts: ActsView<'_>,
@@ -148,7 +150,7 @@ pub trait GemmCore: Sync {
         r0: usize,
         nr: usize,
         tile_cols: usize,
-        isa: Isa,
+        isa: KernelIsa,
         acc: &mut [i32],
         out: &mut [f32],
     );
@@ -256,7 +258,7 @@ fn mac_block_i32(
     nr: usize,
     denom: f32,
     tile_cols: usize,
-    isa: Isa,
+    isa: KernelIsa,
     acc: &mut [i32],
     out: &mut [f32],
 ) {
@@ -268,10 +270,11 @@ fn mac_block_i32(
     let acc = &mut acc[..nr * batch];
     acc.fill(0);
     // Activation codes above 127 would saturate the 16-bit intermediate
-    // of the maddubs-based SIMD paths; this repo quantizes activations to
-    // 4 bits, but the dispatch stays correct for any width by clamping to
-    // the scalar kernel.
-    let isa = if acts.bits > 7 { Isa::Scalar } else { isa };
+    // of the maddubs-based tiers and flip sign under NEON sdot; this repo
+    // quantizes activations to 4 bits, but the dispatch stays correct for
+    // any width: AVX-512 VNNI accumulates u8 codes exactly and keeps its
+    // vector path, every other vector tier degrades to scalar.
+    let isa = if acts.bits > 7 { isa.for_wide_codes() } else { isa };
     let wblock = sw.op_rows(r0, nr);
     let tile = if tile_cols == 0 { cols } else { tile_cols };
     let mut start = 0usize;
@@ -326,7 +329,7 @@ impl GemmCore for GemmFixed4 {
         r0: usize,
         nr: usize,
         tile_cols: usize,
-        isa: Isa,
+        isa: KernelIsa,
         acc: &mut [i32],
         out: &mut [f32],
     ) {
@@ -361,7 +364,7 @@ impl GemmCore for GemmFixed8 {
         r0: usize,
         nr: usize,
         tile_cols: usize,
-        isa: Isa,
+        isa: KernelIsa,
         acc: &mut [i32],
         out: &mut [f32],
     ) {
@@ -432,7 +435,7 @@ impl GemmCore for GemmPoT4 {
         r0: usize,
         nr: usize,
         tile_cols: usize,
-        isa: Isa,
+        isa: KernelIsa,
         acc: &mut [i32],
         out: &mut [f32],
     ) {
@@ -512,7 +515,7 @@ impl GemmCore for GemmApot4 {
         r0: usize,
         nr: usize,
         tile_cols: usize,
-        _isa: Isa,
+        _isa: KernelIsa,
         _acc: &mut [i32],
         out: &mut [f32],
     ) {
@@ -644,14 +647,14 @@ mod tests {
                 for (r0, nr) in [(0usize, 1usize), (0, 4), (2, 4), (4, 2), (5, 1)] {
                     let mut acc = vec![0i32; MICRO_ROWS * batch];
                     let mut block = vec![f32::NAN; MICRO_ROWS * batch];
-                    for isa in [Isa::Scalar, Isa::Sse41.available(), Isa::Avx2.available()] {
+                    for isa in simd::ISA_LADDER {
                         core.run_block_tiled(
                             acts.view(),
                             &sw,
                             r0,
                             nr,
                             tile,
-                            isa,
+                            isa.validated(),
                             &mut acc,
                             &mut block,
                         );

@@ -52,7 +52,7 @@ use super::cores::{
 };
 use super::packed::{ActsView, PackedActs, PackedWeights};
 use super::panels::ColTileSource;
-use super::simd::{Isa, MICRO_ROWS};
+use super::simd::{Isa, KernelIsa, MICRO_ROWS};
 use super::sorted::SortedWeights;
 use crate::quant::{Mat, Scheme};
 use crate::util::pool::ThreadPool;
@@ -153,9 +153,22 @@ pub struct ParallelConfig {
     pub min_rows_per_task: usize,
 }
 
+/// The untuned `tile_cols` default. The plan-compile autotuner treats a
+/// config still holding this value as "not explicitly chosen" and may
+/// replace it with the machine-tuned winner; any other value is an
+/// explicit caller decision and wins over tuning.
+pub const DEFAULT_TILE_COLS: usize = 256;
+/// The untuned `min_rows_per_task` default (same explicit-wins contract
+/// as [`DEFAULT_TILE_COLS`]).
+pub const DEFAULT_MIN_ROWS_PER_TASK: usize = 8;
+
 impl Default for ParallelConfig {
     fn default() -> ParallelConfig {
-        ParallelConfig { threads: 0, tile_cols: 256, min_rows_per_task: 8 }
+        ParallelConfig {
+            threads: 0,
+            tile_cols: DEFAULT_TILE_COLS,
+            min_rows_per_task: DEFAULT_MIN_ROWS_PER_TASK,
+        }
     }
 }
 
@@ -501,7 +514,7 @@ pub struct MixedGemm {
     pot4: GemmPoT4,
     apot4: GemmApot4,
     cfg: ParallelConfig,
-    isa: Isa,
+    isa: KernelIsa,
     pool: Option<Arc<ThreadPool>>,
 }
 
@@ -537,7 +550,7 @@ impl MixedGemm {
             pot4: GemmPoT4,
             apot4: GemmApot4::default(),
             cfg,
-            isa: Isa::detect(),
+            isa: Isa::detect().validated(),
             pool,
         }
     }
@@ -548,14 +561,18 @@ impl MixedGemm {
 
     /// The SIMD ISA the integer micro-kernels run on.
     pub fn isa(&self) -> Isa {
-        self.isa
+        self.isa.get()
     }
 
-    /// Force a kernel ISA (benchmarks and differential tests). Requests
-    /// wider than the hardware supports are clamped (never UB); every
-    /// ISA produces bit-identical output.
+    /// Force a kernel ISA (benchmarks and differential tests). This —
+    /// together with engine construction in [`MixedGemm::with_config`] /
+    /// [`MixedGemm::with_shared_pool`] — is the single point where the
+    /// SIMD safety invariant is resolved: [`Isa::validated`] clamps the
+    /// request to what the hardware supports (never UB), producing the
+    /// [`KernelIsa`] token the kernels then trust without per-call
+    /// re-checks. Every ISA produces bit-identical output.
     pub fn set_isa(&mut self, isa: Isa) {
-        self.isa = isa.available();
+        self.isa = isa.validated();
     }
 
     /// Whether a pool is attached (i.e. parallel dispatch is possible).

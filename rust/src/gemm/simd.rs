@@ -3,55 +3,115 @@
 //! The unit of work is a **row block**: up to [`MICRO_ROWS`] weight rows
 //! of one scheme class, dotted against one activation row per call. The
 //! multi-row form is what makes the class-sorted layout pay off — one
-//! 32-byte activation load feeds four weight rows, so the activation
-//! bandwidth of the inner loop drops 4x versus the row-at-a-time kernel.
+//! vector-width activation load feeds four weight rows, so the
+//! activation bandwidth of the inner loop drops 4x versus the
+//! row-at-a-time kernel.
 //!
-//! Three implementations sit behind [`dot_block`]:
+//! Five implementations sit behind [`dot_block`] — the ISA ladder:
 //!
-//! * **AVX2** — `vpmaddubsw` + `vpmaddwd` over 32 u8xI8 lanes, four i32
+//! * **AVX-512 VNNI** — `vpdpbusd` over 64 u8xi8 lanes: one instruction
+//!   fuses the widen-multiply and the pair sums straight into the i32
+//!   accumulators (collapsing the AVX2 tier's `vpmaddubsw`+`vpmaddwd`
+//!   pair), with a 32-lane `AVX512VL` step for the 32..63-byte
+//!   remainder. Because the accumulation is u8xi8 -> i32 with **no i16
+//!   intermediate**, this tier is exact for the full u8 code range —
+//!   it is the only vector tier that never falls back to scalar for
+//!   activations wider than 7 bits (see [`Isa::wide_code_tier`]).
+//! * **AVX2** — `vpmaddubsw` + `vpmaddwd` over 32 u8xi8 lanes, four i32
 //!   vector accumulators (one per row), horizontal sum per tile.
 //! * **SSE (SSSE3/SSE4.1)** — the same shape over 16 lanes.
+//! * **NEON dot-product** (aarch64) — `sdot` over 16 lanes, so one crate
+//!   builds natively on Graviton-class boxes. The activation codes are
+//!   reinterpreted as i8 (exact for codes `<= 127`, which the
+//!   wide-code clamp guarantees on this tier); `udot` is not usable
+//!   here because the weight operand is signed.
 //! * **Scalar** — the portable fallback, and the oracle the property
 //!   tests pin the SIMD paths against.
 //!
-//! All three accumulate the dot product exactly in i32, so they are
+//! All five accumulate the dot product exactly in i32, so they are
 //! **bit-identical** for any vector width, remainder handling, or ISA —
-//! integer addition is associative. The only numeric caveat is the
-//! 16-bit intermediate of `maddubs`: a pair sum `a0*w0 + a1*w1` with
-//! `a <= 2^bits - 1`, `|w| <= 128` saturates only for activation codes
-//! above 127, so callers route `bits > 7` activations to the scalar
-//! kernel (this repo quantizes activations to 4 bits; the headroom is
-//! ~8.5x).
+//! integer addition is associative. The numeric caveats of the narrow
+//! tiers: the 16-bit intermediate of `maddubs` (AVX2/SSE) saturates for
+//! activation codes above 127, and NEON `sdot` reads the activation
+//! byte as signed — so [`Isa::wide_code_tier`] routes `bits > 7`
+//! activations on those tiers to the scalar kernel (this repo quantizes
+//! activations to 4 bits; the headroom is ~8.5x), while AVX-512 VNNI
+//! keeps the vector path.
 //!
-//! ISA selection is runtime-only (`is_x86_feature_detected!`), never a
-//! compile-time feature, so one binary serves every x86_64 machine and
-//! non-x86 targets compile straight to the scalar kernel. Setting
-//! `RMSMP_NO_SIMD=1` forces the scalar kernel everywhere — the CI leg
-//! that keeps the portable fallback green uses exactly this override.
+//! ISA selection is runtime-only (`is_x86_feature_detected!` /
+//! `is_aarch64_feature_detected!`), never a compile-time feature, so one
+//! binary serves every machine of its architecture and other targets
+//! compile straight to the scalar kernel. `RMSMP_ISA=scalar|sse41|avx2|
+//! avx512vnni|neon` forces a tier (clamped to the hardware, with a
+//! warning for unavailable requests); the legacy `RMSMP_NO_SIMD=1` is a
+//! deprecated alias for `RMSMP_ISA=scalar` — the CI legs that pin the
+//! portable fallback and each vector tier use exactly these overrides.
+//!
+//! The validated-ISA token ([`KernelIsa`]) is the hoisted form of what
+//! used to be a per-call `Isa::available()` clamp inside [`dot_block`]
+//! (an atomic load + branch on every 4-row micro-kernel invocation):
+//! the clamp now runs **once**, where the engine resolves its ISA, and
+//! the token type proves it to the kernel layer.
 
-/// Weight rows per micro-kernel block. Four rows keep the AVX2 kernel at
-/// four vector accumulators plus one activation register — comfortably
-/// inside the 16 ymm registers — while quartering activation reloads.
+/// Weight rows per micro-kernel block. Four rows keep the vector kernels
+/// at four accumulators plus one activation register — comfortably
+/// inside 16 ymm / 32 zmm / 32 NEON registers — while quartering
+/// activation reloads.
 pub const MICRO_ROWS: usize = 4;
 
 /// Instruction-set choice for the integer dot kernels, resolved once per
 /// [`crate::gemm::MixedGemm`] (see [`Isa::detect`]).
-#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub enum Isa {
+    /// 512-bit `vpdpbusd` kernels (x86_64 with AVX-512 F+VL+VNNI);
+    /// exact for the full u8 activation range.
+    Avx512Vnni,
     /// 256-bit `vpmaddubsw`-based kernels (x86_64 with AVX2).
     Avx2,
     /// 128-bit kernels (x86_64 with SSSE3 + SSE4.1).
     Sse41,
+    /// 128-bit `sdot` kernels (aarch64 with the NEON dot-product
+    /// extension).
+    Neon,
     /// Portable scalar kernels — correct everywhere, and the bit-exact
     /// oracle for the vector paths.
     Scalar,
 }
 
+/// Every tier, widest first — the probe order of [`Isa::detect_cpu`]
+/// and the iteration order of tests and benches.
+pub const ISA_LADDER: [Isa; 5] =
+    [Isa::Avx512Vnni, Isa::Avx2, Isa::Sse41, Isa::Neon, Isa::Scalar];
+
 impl Isa {
-    /// Pick the widest ISA this process should use: the `RMSMP_NO_SIMD`
-    /// environment override (any non-empty value other than `"0"`) wins,
-    /// then CPU feature detection, else scalar.
+    /// Pick the ISA this process should use: the `RMSMP_ISA` environment
+    /// override wins (clamped to the hardware, warning once on
+    /// unavailable or unparseable requests), then the deprecated
+    /// `RMSMP_NO_SIMD` alias (any non-empty value other than `"0"`
+    /// means `RMSMP_ISA=scalar`), then CPU feature detection.
     pub fn detect() -> Isa {
+        if let Ok(v) = std::env::var("RMSMP_ISA") {
+            if !v.is_empty() {
+                match Isa::parse(&v) {
+                    Some(want) => {
+                        let got = want.available();
+                        if got != want {
+                            warn_once(&format!(
+                                "rmsmp: RMSMP_ISA={} not available on this CPU, \
+                                 using {}",
+                                want.name(),
+                                got.name()
+                            ));
+                        }
+                        return got;
+                    }
+                    None => warn_once(&format!(
+                        "rmsmp: unknown RMSMP_ISA value {v:?} (expected one of \
+                         scalar|sse41|avx2|avx512vnni|neon), using detection"
+                    )),
+                }
+            }
+        }
         let disabled = std::env::var("RMSMP_NO_SIMD")
             .map(|v| !v.is_empty() && v != "0")
             .unwrap_or(false);
@@ -61,55 +121,150 @@ impl Isa {
         Isa::detect_cpu()
     }
 
-    /// CPU feature detection only (ignores the environment override).
+    /// CPU feature detection only (ignores the environment overrides):
+    /// the widest supported tier of [`ISA_LADDER`].
     pub fn detect_cpu() -> Isa {
-        #[cfg(target_arch = "x86_64")]
-        {
-            if is_x86_feature_detected!("avx2") {
-                return Isa::Avx2;
-            }
-            if is_x86_feature_detected!("ssse3") && is_x86_feature_detected!("sse4.1") {
-                return Isa::Sse41;
+        for isa in ISA_LADDER {
+            if isa.supported() {
+                return isa;
             }
         }
         Isa::Scalar
     }
 
-    /// Width rank for clamping (scalar < sse < avx2).
+    /// The `RMSMP_ISA` spelling of this tier.
+    pub fn name(self) -> &'static str {
+        match self {
+            Isa::Avx512Vnni => "avx512vnni",
+            Isa::Avx2 => "avx2",
+            Isa::Sse41 => "sse41",
+            Isa::Neon => "neon",
+            Isa::Scalar => "scalar",
+        }
+    }
+
+    /// Parse an `RMSMP_ISA` value (case-insensitive).
+    pub fn parse(s: &str) -> Option<Isa> {
+        match s.to_ascii_lowercase().as_str() {
+            "avx512vnni" | "vnni" => Some(Isa::Avx512Vnni),
+            "avx2" => Some(Isa::Avx2),
+            "sse41" | "sse" => Some(Isa::Sse41),
+            "neon" | "dotprod" => Some(Isa::Neon),
+            "scalar" => Some(Isa::Scalar),
+            _ => None,
+        }
+    }
+
+    /// Whether the running CPU can execute this tier's kernels.
+    fn supported(self) -> bool {
+        match self {
+            Isa::Scalar => true,
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx512Vnni => {
+                is_x86_feature_detected!("avx512f")
+                    && is_x86_feature_detected!("avx512vl")
+                    && is_x86_feature_detected!("avx512vnni")
+            }
+            #[cfg(target_arch = "x86_64")]
+            Isa::Avx2 => is_x86_feature_detected!("avx2"),
+            #[cfg(target_arch = "x86_64")]
+            Isa::Sse41 => {
+                is_x86_feature_detected!("ssse3") && is_x86_feature_detected!("sse4.1")
+            }
+            #[cfg(target_arch = "aarch64")]
+            Isa::Neon => std::arch::is_aarch64_feature_detected!("dotprod"),
+            #[allow(unreachable_patterns)]
+            _ => false,
+        }
+    }
+
+    /// Width rank for the clamping tests (scalar narrowest; the x86 and
+    /// aarch64 ladders never compete on one machine).
     fn rank(self) -> u8 {
         match self {
             Isa::Scalar => 0,
             Isa::Sse41 => 1,
-            Isa::Avx2 => 2,
+            Isa::Neon => 2,
+            Isa::Avx2 => 3,
+            Isa::Avx512Vnni => 4,
         }
     }
 
     /// `self`, clamped to what this CPU actually supports. Forcing a
-    /// wider ISA than the hardware has degrades to the hardware's best —
-    /// an [`crate::gemm::MixedGemm::set_isa`] caller can never reach an
+    /// tier the hardware lacks (wider, or the wrong architecture)
+    /// degrades to the hardware's best — an
+    /// [`crate::gemm::MixedGemm::set_isa`] caller can never reach an
     /// illegal-instruction fault.
     pub fn available(self) -> Isa {
-        let hw = Isa::detect_cpu();
-        if self.rank() <= hw.rank() {
+        if self.supported() {
             self
         } else {
-            hw
+            Isa::detect_cpu()
         }
+    }
+
+    /// The tier that handles activation codes wider than 7 bits: the
+    /// `maddubs`-based x86 tiers saturate their i16 intermediate above
+    /// code 127 and NEON `sdot` reads the activation byte as signed, so
+    /// they degrade to scalar; AVX-512 VNNI accumulates u8xi8 directly
+    /// in i32 and keeps the vector path. Pure (no hardware query) —
+    /// [`KernelIsa::for_wide_codes`] is the validated form.
+    pub fn wide_code_tier(self) -> Isa {
+        match self {
+            Isa::Avx512Vnni | Isa::Scalar => self,
+            Isa::Avx2 | Isa::Sse41 | Isa::Neon => Isa::Scalar,
+        }
+    }
+
+    /// Validate against the hardware once, yielding the token the kernel
+    /// layer trusts (see [`KernelIsa`]).
+    pub fn validated(self) -> KernelIsa {
+        KernelIsa(self.available())
+    }
+}
+
+/// A hardware-validated [`Isa`]: the **single resolution point** of the
+/// SIMD safety invariant. The only constructor is [`Isa::validated`],
+/// which clamps through [`Isa::available`], so every `KernelIsa` in the
+/// program names a tier the running CPU supports — [`dot_block`] and the
+/// GEMM cores dispatch on it without re-checking CPU features per call
+/// (the old per-block `available()` clamp cost an atomic load + branch
+/// on every 4-row micro-kernel invocation). [`crate::gemm::MixedGemm`]
+/// resolves its token once at construction / [`set_isa`] and passes it
+/// through pre-validated.
+///
+/// [`set_isa`]: crate::gemm::MixedGemm::set_isa
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct KernelIsa(Isa);
+
+impl KernelIsa {
+    /// The validated tier.
+    pub fn get(self) -> Isa {
+        self.0
+    }
+
+    /// The validated tier for activation codes wider than 7 bits (see
+    /// [`Isa::wide_code_tier`]). Closed over validity: the result is
+    /// either `self` or scalar, both supported.
+    pub fn for_wide_codes(self) -> KernelIsa {
+        KernelIsa(self.0.wide_code_tier())
     }
 }
 
 /// `sums[j] = Σ_i a[i] * w[j * stride + i]` for `j in 0..nr` — the block
 /// dot product at the bottom of every integer GEMM core. `a` holds
-/// unsigned activation codes (callers guarantee `<= 127` on the SIMD
-/// paths), `w` holds `nr` signed operand rows laid out `stride` apart
+/// unsigned activation codes (callers guarantee `<= 127` on every
+/// vector tier except AVX-512 VNNI — see [`KernelIsa::for_wide_codes`]),
+/// `w` holds `nr` signed operand rows laid out `stride` apart
 /// (`w[j * stride..j * stride + a.len()]` is row `j`). Entries of `sums`
 /// beyond `nr` are left untouched.
 ///
 /// Every ISA produces bit-identical results (i32 accumulation is exact);
-/// the `isa` argument only selects speed.
+/// the `isa` token only selects speed, and its type proves the tier was
+/// clamped to the hardware at resolution time.
 #[inline]
 pub fn dot_block(
-    isa: Isa,
+    isa: KernelIsa,
     a: &[u8],
     w: &[i8],
     stride: usize,
@@ -119,14 +274,22 @@ pub fn dot_block(
     debug_assert!(nr >= 1 && nr <= MICRO_ROWS);
     debug_assert!(nr == 1 || stride >= a.len());
     debug_assert!(w.len() >= (nr - 1) * stride + a.len());
-    // Clamp to the hardware so a caller-constructed Isa::Avx2 can never
-    // execute AVX2 code on a CPU without it (std's feature detection is
-    // cached, so this is an atomic load + bit test).
-    let isa = isa.available();
-    match isa {
+    match isa.get() {
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: `available()` above clamped the variant to what the
+        // SAFETY: a KernelIsa can only be constructed through
+        // Isa::validated(), which clamped the variant to what the
         // runtime CPU feature check allows; slice bounds are asserted.
+        Isa::Avx512Vnni => unsafe {
+            if nr == MICRO_ROWS {
+                x86::dot4_vnni(a, w, stride, sums);
+            } else {
+                for (j, s) in sums.iter_mut().enumerate().take(nr) {
+                    *s = x86::dot1_vnni(a, &w[j * stride..j * stride + a.len()]);
+                }
+            }
+        },
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: as above — the token proved AVX2 is present.
         Isa::Avx2 => unsafe {
             if nr == MICRO_ROWS {
                 x86::dot4_avx2(a, w, stride, sums);
@@ -137,13 +300,27 @@ pub fn dot_block(
             }
         },
         #[cfg(target_arch = "x86_64")]
-        // SAFETY: as above — the clamp proved SSSE3/SSE4.1 are present.
+        // SAFETY: as above — the token proved SSSE3/SSE4.1 are present.
         Isa::Sse41 => unsafe {
             if nr == MICRO_ROWS {
                 x86::dot4_sse(a, w, stride, sums);
             } else {
                 for (j, s) in sums.iter_mut().enumerate().take(nr) {
                     *s = x86::dot1_sse(a, &w[j * stride..j * stride + a.len()]);
+                }
+            }
+        },
+        #[cfg(target_arch = "aarch64")]
+        // SAFETY: as above — the token proved the NEON dot-product
+        // extension is present. The caller guarantees codes <= 127 on
+        // this tier (for_wide_codes), so the i8 reinterpretation of the
+        // activation bytes is value-preserving.
+        Isa::Neon => unsafe {
+            if nr == MICRO_ROWS {
+                arm::dot4_neon(a, w, stride, sums);
+            } else {
+                for (j, s) in sums.iter_mut().enumerate().take(nr) {
+                    *s = arm::dot1_neon(a, &w[j * stride..j * stride + a.len()]);
                 }
             }
         },
@@ -161,6 +338,16 @@ fn dot_block_scalar(a: &[u8], w: &[i8], stride: usize, nr: usize, sums: &mut [i3
             t += x as i32 * c as i32;
         }
         *s = t;
+    }
+}
+
+/// Print `msg` to stderr exactly once per process (env-override
+/// diagnostics; engines are built per worker, the warning is not).
+fn warn_once(msg: &str) {
+    use std::sync::atomic::{AtomicBool, Ordering};
+    static WARNED: AtomicBool = AtomicBool::new(false);
+    if !WARNED.swap(true, Ordering::Relaxed) {
+        eprintln!("{msg}");
     }
 }
 
@@ -261,6 +448,94 @@ mod x86 {
         s
     }
 
+    /// Four-row fused AVX-512 VNNI dot: `vpdpbusd` accumulates each
+    /// 4-byte u8xi8 group straight into an i32 lane — no i16
+    /// intermediate, so no saturation for any u8 code. 64-byte main
+    /// loop, one 32-byte `AVX512VL` step for the wide remainder, scalar
+    /// below that.
+    #[target_feature(enable = "avx512f,avx512vl,avx512vnni")]
+    pub unsafe fn dot4_vnni(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MICRO_ROWS]) {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let w0 = w.as_ptr();
+        let w1 = w0.add(stride);
+        let w2 = w0.add(2 * stride);
+        let w3 = w0.add(3 * stride);
+        let mut acc0 = _mm512_setzero_si512();
+        let mut acc1 = _mm512_setzero_si512();
+        let mut acc2 = _mm512_setzero_si512();
+        let mut acc3 = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let av = _mm512_loadu_si512(ap.add(i) as *const _);
+            acc0 = _mm512_dpbusd_epi32(acc0, av, _mm512_loadu_si512(w0.add(i) as *const _));
+            acc1 = _mm512_dpbusd_epi32(acc1, av, _mm512_loadu_si512(w1.add(i) as *const _));
+            acc2 = _mm512_dpbusd_epi32(acc2, av, _mm512_loadu_si512(w2.add(i) as *const _));
+            acc3 = _mm512_dpbusd_epi32(acc3, av, _mm512_loadu_si512(w3.add(i) as *const _));
+            i += 64;
+        }
+        let mut s = [
+            _mm512_reduce_add_epi32(acc0),
+            _mm512_reduce_add_epi32(acc1),
+            _mm512_reduce_add_epi32(acc2),
+            _mm512_reduce_add_epi32(acc3),
+        ];
+        if i + 32 <= n {
+            let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let z = _mm256_setzero_si256();
+            let d0 =
+                _mm256_dpbusd_epi32(z, av, _mm256_loadu_si256(w0.add(i) as *const __m256i));
+            let d1 =
+                _mm256_dpbusd_epi32(z, av, _mm256_loadu_si256(w1.add(i) as *const __m256i));
+            let d2 =
+                _mm256_dpbusd_epi32(z, av, _mm256_loadu_si256(w2.add(i) as *const __m256i));
+            let d3 =
+                _mm256_dpbusd_epi32(z, av, _mm256_loadu_si256(w3.add(i) as *const __m256i));
+            s[0] += hsum_epi32_avx2(d0);
+            s[1] += hsum_epi32_avx2(d1);
+            s[2] += hsum_epi32_avx2(d2);
+            s[3] += hsum_epi32_avx2(d3);
+            i += 32;
+        }
+        while i < n {
+            let x = *ap.add(i) as i32;
+            s[0] += x * *w0.add(i) as i32;
+            s[1] += x * *w1.add(i) as i32;
+            s[2] += x * *w2.add(i) as i32;
+            s[3] += x * *w3.add(i) as i32;
+            i += 1;
+        }
+        *sums = s;
+    }
+
+    /// Single-row AVX-512 VNNI dot (block remainders).
+    #[target_feature(enable = "avx512f,avx512vl,avx512vnni")]
+    pub unsafe fn dot1_vnni(a: &[u8], w: &[i8]) -> i32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let wp = w.as_ptr();
+        let mut acc = _mm512_setzero_si512();
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let av = _mm512_loadu_si512(ap.add(i) as *const _);
+            let wv = _mm512_loadu_si512(wp.add(i) as *const _);
+            acc = _mm512_dpbusd_epi32(acc, av, wv);
+            i += 64;
+        }
+        let mut s = _mm512_reduce_add_epi32(acc);
+        if i + 32 <= n {
+            let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let wv = _mm256_loadu_si256(wp.add(i) as *const __m256i);
+            s += hsum_epi32_avx2(_mm256_dpbusd_epi32(_mm256_setzero_si256(), av, wv));
+            i += 32;
+        }
+        while i < n {
+            s += *ap.add(i) as i32 * *wp.add(i) as i32;
+            i += 1;
+        }
+        s
+    }
+
     /// One 16-lane u8 x i8 dot-product step (SSSE3 `maddubs` + SSE2
     /// `madd`).
     #[inline]
@@ -333,6 +608,76 @@ mod x86 {
     }
 }
 
+#[cfg(target_arch = "aarch64")]
+mod arm {
+    use super::MICRO_ROWS;
+    use std::arch::aarch64::*;
+
+    /// Four-row fused NEON `sdot`: each instruction accumulates four
+    /// 4-byte i8xi8 groups into the i32 lanes of `acc` — exact, like
+    /// VNNI. The activation bytes are reinterpreted u8 -> i8, which is
+    /// value-preserving because callers guarantee codes `<= 127` on
+    /// this tier (see [`super::Isa::wide_code_tier`]).
+    #[target_feature(enable = "neon,dotprod")]
+    pub unsafe fn dot4_neon(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MICRO_ROWS]) {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let w0 = w.as_ptr();
+        let w1 = w0.add(stride);
+        let w2 = w0.add(2 * stride);
+        let w3 = w0.add(3 * stride);
+        let mut acc0 = vdupq_n_s32(0);
+        let mut acc1 = vdupq_n_s32(0);
+        let mut acc2 = vdupq_n_s32(0);
+        let mut acc3 = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let av = vreinterpretq_s8_u8(vld1q_u8(ap.add(i)));
+            acc0 = vdotq_s32(acc0, av, vld1q_s8(w0.add(i)));
+            acc1 = vdotq_s32(acc1, av, vld1q_s8(w1.add(i)));
+            acc2 = vdotq_s32(acc2, av, vld1q_s8(w2.add(i)));
+            acc3 = vdotq_s32(acc3, av, vld1q_s8(w3.add(i)));
+            i += 16;
+        }
+        let mut s = [
+            vaddvq_s32(acc0),
+            vaddvq_s32(acc1),
+            vaddvq_s32(acc2),
+            vaddvq_s32(acc3),
+        ];
+        while i < n {
+            let x = *ap.add(i) as i32;
+            s[0] += x * *w0.add(i) as i32;
+            s[1] += x * *w1.add(i) as i32;
+            s[2] += x * *w2.add(i) as i32;
+            s[3] += x * *w3.add(i) as i32;
+            i += 1;
+        }
+        *sums = s;
+    }
+
+    /// Single-row NEON `sdot` (block remainders).
+    #[target_feature(enable = "neon,dotprod")]
+    pub unsafe fn dot1_neon(a: &[u8], w: &[i8]) -> i32 {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let wp = w.as_ptr();
+        let mut acc = vdupq_n_s32(0);
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let av = vreinterpretq_s8_u8(vld1q_u8(ap.add(i)));
+            acc = vdotq_s32(acc, av, vld1q_s8(wp.add(i)));
+            i += 16;
+        }
+        let mut s = vaddvq_s32(acc);
+        while i < n {
+            s += *ap.add(i) as i32 * *wp.add(i) as i32;
+            i += 1;
+        }
+        s
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -349,14 +694,16 @@ mod tests {
 
     #[test]
     fn all_isas_agree_with_scalar_at_awkward_lengths() {
-        // lengths straddling the 16- and 32-lane widths, incl. 0
-        for n in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 257] {
+        // lengths straddling the 16-, 32-, and 64-lane widths, incl. 0
+        for n in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 95, 97, 127, 129, 257] {
             let (a, w) = problem(n, 11 + n as u64);
             for nr in 1..=MICRO_ROWS {
                 let mut want = [i32::MIN; MICRO_ROWS];
                 dot_block_scalar(&a, &w, n, nr, &mut want);
-                for isa in [Isa::Avx2, Isa::Sse41, Isa::Scalar] {
-                    let isa = isa.available();
+                for isa in ISA_LADDER {
+                    // hosts without a tier degrade it to the hardware's
+                    // best — still a valid (and covered) tier
+                    let isa = isa.validated();
                     let mut got = [i32::MIN; MICRO_ROWS];
                     dot_block(isa, &a, &w, n, nr, &mut got);
                     assert_eq!(got[..nr], want[..nr], "isa {isa:?} n {n} nr {nr}");
@@ -368,17 +715,57 @@ mod tests {
     }
 
     #[test]
-    fn saturating_inputs_are_scalar_only_by_contract() {
+    fn saturation_boundary_codes_are_exact_on_every_tier() {
         // codes <= 127 never saturate the i16 intermediate: the extreme
-        // pair 127*(-128) + 127*(-128) = -32512 fits i16.
+        // pair 127*(-128) + 127*(-128) = -32512 fits i16. Every tier
+        // must agree at the boundary.
         let a = vec![127u8; 34];
         let w = vec![-128i8; 34];
         let mut want = [0i32; MICRO_ROWS];
         dot_block_scalar(&a, &w, 34, 1, &mut want);
-        let mut got = [0i32; MICRO_ROWS];
-        dot_block(Isa::detect_cpu(), &a, &w, 34, 1, &mut got);
-        assert_eq!(got[0], want[0]);
         assert_eq!(want[0], 34 * 127 * -128);
+        for isa in ISA_LADDER {
+            let mut got = [0i32; MICRO_ROWS];
+            dot_block(isa.validated(), &a, &w, 34, 1, &mut got);
+            assert_eq!(got[0], want[0], "isa {isa:?}");
+        }
+    }
+
+    #[test]
+    fn full_u8_codes_are_exact_on_wide_code_tiers() {
+        // codes above 127 (8-bit activations) would saturate maddubs and
+        // flip sign under sdot; the wide-code tiers (scalar, and VNNI
+        // where the hardware has it) must be exact anyway. 255 * -128
+        // pairs are the worst case.
+        let mut rng = Rng::new(99);
+        for n in [1usize, 16, 33, 64, 65, 257] {
+            let a: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
+            let w: Vec<i8> = (0..MICRO_ROWS * n)
+                .map(|_| (rng.below(256) as i64 - 128) as i8)
+                .collect();
+            for nr in 1..=MICRO_ROWS {
+                let mut want = [0i32; MICRO_ROWS];
+                dot_block_scalar(&a, &w, n, nr, &mut want);
+                for isa in ISA_LADDER {
+                    let isa = isa.validated().for_wide_codes();
+                    let mut got = [0i32; MICRO_ROWS];
+                    dot_block(isa, &a, &w, n, nr, &mut got);
+                    assert_eq!(got[..nr], want[..nr], "isa {isa:?} n {n} nr {nr}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn wide_code_tier_keeps_vnni_and_scalar_only() {
+        // the bits > 7 routing is pure and total: VNNI keeps its vector
+        // path (i32-exact vpdpbusd), every narrower vector tier drops to
+        // scalar
+        assert_eq!(Isa::Avx512Vnni.wide_code_tier(), Isa::Avx512Vnni);
+        assert_eq!(Isa::Scalar.wide_code_tier(), Isa::Scalar);
+        assert_eq!(Isa::Avx2.wide_code_tier(), Isa::Scalar);
+        assert_eq!(Isa::Sse41.wide_code_tier(), Isa::Scalar);
+        assert_eq!(Isa::Neon.wide_code_tier(), Isa::Scalar);
     }
 
     #[test]
@@ -386,6 +773,24 @@ mod tests {
         let hw = Isa::detect_cpu();
         assert_eq!(Isa::Scalar.available(), Isa::Scalar);
         assert!(Isa::Avx2.available().rank() <= hw.rank());
+        assert!(Isa::Avx512Vnni.available().rank() <= hw.rank());
         assert_eq!(hw.available(), hw);
+        // a cross-architecture request degrades to this machine's best,
+        // never to an unsupported tier
+        #[cfg(target_arch = "x86_64")]
+        assert_eq!(Isa::Neon.available(), hw);
+        #[cfg(target_arch = "aarch64")]
+        assert_eq!(Isa::Avx512Vnni.available(), hw);
+        // the validated token round-trips the clamp
+        assert_eq!(Isa::Avx512Vnni.validated().get(), Isa::Avx512Vnni.available());
+    }
+
+    #[test]
+    fn isa_names_round_trip() {
+        for isa in ISA_LADDER {
+            assert_eq!(Isa::parse(isa.name()), Some(isa), "{isa:?}");
+        }
+        assert_eq!(Isa::parse("AVX2"), Some(Isa::Avx2));
+        assert_eq!(Isa::parse("nope"), None);
     }
 }

@@ -231,24 +231,54 @@
 //!   row-at-a-time kernel, with the column loop still tiled at
 //!   `ParallelConfig::tile_cols`.
 //! * **Runtime SIMD dispatch** ([`gemm::Isa`]) — the inner block dot
-//!   ([`gemm::dot_block`]) is selected once per engine from CPUID:
-//!   AVX2 (`vpmaddubsw`/`vpmaddwd`, 32 lanes), SSSE3/SSE4.1 (16 lanes),
-//!   or the portable scalar loop. No compile-time features, zero new
-//!   dependencies; non-x86 targets compile straight to scalar, and
-//!   `RMSMP_NO_SIMD=1` forces scalar (a dedicated CI leg runs the whole
-//!   test suite this way).
+//!   ([`gemm::dot_block`]) is selected once per engine from a five-tier
+//!   ladder, best supported tier first:
+//!
+//!   | tier | arch | inner step | u8 code range |
+//!   |---|---|---|---|
+//!   | `avx512vnni` | x86-64 | `vpdpbusd` (u8 x i8 -> i32, 64 lanes) | 0..=255 in-vector |
+//!   | `avx2` | x86-64 | `vpmaddubsw`/`vpmaddwd` (32 lanes) | 0..=127; wider falls to scalar |
+//!   | `sse41` | x86-64 | `pmaddubsw`/`pmaddwd` (16 lanes) | 0..=127; wider falls to scalar |
+//!   | `neon` | aarch64 | `sdot` (i8 x i8 -> i32, 16 lanes) | 0..=127; wider falls to scalar |
+//!   | `scalar` | any | portable i32 loop | 0..=255 |
+//!
+//!   The "wider falls to scalar" rule is the saturation clamp: the
+//!   maddubs tiers saturate an i16 intermediate at codes above 127 and
+//!   NEON `sdot` would misread them as negative, so activation widths
+//!   above 7 bits reroute those tiers to scalar per block
+//!   ([`gemm::Isa::wide_code_tier`]) — VNNI has no i16 intermediate and
+//!   keeps its vector path at full 8-bit range. Hardware support is
+//!   validated **once**, at engine construction, into a
+//!   [`gemm::KernelIsa`] token the kernels trust without per-call
+//!   re-checks. `RMSMP_ISA=scalar|sse41|avx2|avx512vnni|neon` forces a
+//!   tier (clamped to what the host supports, with a one-shot warning),
+//!   `RMSMP_NO_SIMD=1` is the deprecated scalar alias; the CI matrix
+//!   runs the full test suite once per forced tier. No compile-time
+//!   features, zero new dependencies.
+//! * **Load-time autotuning** ([`gemm::autotune`]) — [`model::Plan`]
+//!   compilation microbenchmarks the blocking knobs (`tile_cols`,
+//!   `min_rows_per_task`, implicit-GEMM panel bytes) on a synthetic
+//!   workload shaped like the model's largest layer and bakes the
+//!   winners into the plan's config, chunk schedules, and panel widths;
+//!   executors built from the plan adopt them for any knob the caller
+//!   left at its default. A candidate must beat the incumbent by >2% to
+//!   win, results are cached per process and shape, APoT models keep
+//!   their tile pinned, and `RMSMP_NO_TUNE=1` (or
+//!   `PlanBuilder::no_tune`) compiles with the fixed defaults.
 //!
 //! **Bit-exactness guarantee:** the three RMSMP cores accumulate dot
 //! products exactly in i32 and apply one dequantizing multiply per
 //! output cell with the same expression in every kernel shape, and the
 //! implicit panel packer shares its gather loop (and its quantizer
-//! expression) with the explicit im2col fronts — so scalar vs SSE vs
-//! AVX2, row vs block, implicit vs explicit, any tile size, any panel
-//! width, any chunk schedule, and any thread count all produce
-//! bit-identical outputs (pinned by `tests/test_simd.rs` and
-//! `tests/test_implicit.rs`). The f32-accumulating APoT baseline core
-//! stays on the scalar row loop and is bit-exact for a fixed
-//! `tile_cols`, which the config pins.
+//! expression) with the explicit im2col fronts — so every ISA tier
+//! (scalar, SSE4.1, AVX2, AVX-512 VNNI, NEON), row vs block, implicit
+//! vs explicit, any tile size, any panel width, any chunk schedule, any
+//! thread count, and tuned vs default blocking all produce
+//! bit-identical outputs (pinned by `tests/test_simd.rs`,
+//! `tests/test_implicit.rs`, and `tests/test_autotune.rs`). The
+//! f32-accumulating APoT baseline core stays on the scalar row loop and
+//! is bit-exact for a fixed `tile_cols`, which the config pins and the
+//! autotuner never moves.
 
 pub mod assign;
 pub mod coordinator;

@@ -230,6 +230,10 @@ impl Executor {
         // the integer-resident epilogues bake the consumers' clip scales
         // in; reject weights they would requantize with a stale scale
         plan.validate_domains(&weights)?;
+        // adopt the plan's autotuned blocking knobs for any knob the
+        // caller left at its default, so execution matches the compiled
+        // schedules (explicit caller values still win)
+        let cfg = plan.tuned.apply_to(cfg);
         let gemm = match pool {
             Some(p) => MixedGemm::with_shared_pool(cfg, p),
             None => MixedGemm::with_config(cfg),

@@ -37,6 +37,9 @@ pub(crate) struct Ir<'w> {
     pub(crate) model: String,
     pub(crate) capacity: usize,
     pub(crate) chunk_rows: usize,
+    /// Implicit-GEMM panel budget in bytes (autotuned or the fixed
+    /// default) — the passes that size streamed panels read this.
+    pub(crate) panel_bytes: usize,
     pub(crate) act_bits: u32,
     pub(crate) input_slot: SlotId,
     pub(crate) input_chw: (usize, usize, usize),
@@ -50,14 +53,16 @@ pub(crate) struct Ir<'w> {
 impl<'w> Ir<'w> {
     /// Lower `manifest.program` against `weights`: resolve names to slot
     /// ids, precompute and shape-check per-op geometry, chunk the GEMM
-    /// task schedules. `capacity` (batch images) and `cfg` (task
-    /// granularity) are recorded for the passes that size panels and
+    /// task schedules. `capacity` (batch images), `cfg` (task
+    /// granularity), and `panel_bytes` (the possibly-autotuned panel
+    /// budget) are recorded for the passes that size panels and
     /// schedules.
     pub(crate) fn lower(
         manifest: &Manifest,
         weights: &'w ModelWeights,
         capacity: usize,
         cfg: &ParallelConfig,
+        panel_bytes: usize,
     ) -> Result<Ir<'w>> {
         ensure!(
             manifest.input_shape.len() == 4,
@@ -260,6 +265,7 @@ impl<'w> Ir<'w> {
             model: manifest.model.clone(),
             capacity,
             chunk_rows,
+            panel_bytes: panel_bytes.max(1),
             act_bits: manifest.act_bits,
             input_slot,
             input_chw,

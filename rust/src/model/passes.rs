@@ -37,12 +37,13 @@ use crate::util::error::Result;
 use super::ir::Ir;
 use super::plan::{live_range_reads, op_reads, op_write, FusedAdd, PlanOp};
 
-/// Target size of one streamed activation panel (implicit GEMM and the
-/// depthwise per-group kernel): positions are chosen so
-/// `panel_positions * patch_cols` u8 codes land around half an L1d next
-/// to the weight tiles, clamped to keep at least a micro-kernel block's
-/// worth of positions and at most a reasonable tile.
-pub(crate) const PANEL_BYTES: usize = 32 * 1024;
+// Panel sizing note: one streamed activation panel (implicit GEMM and
+// the depthwise per-group kernel) targets `Ir::panel_bytes` of u8 codes
+// — positions land around half an L1d next to the weight tiles, clamped
+// to keep at least a micro-kernel block's worth of positions and at
+// most a reasonable tile. The budget defaults to
+// `crate::gemm::autotune::DEFAULT_PANEL_BYTES` and may be overridden
+// per machine by the plan builder's load-time autotuner.
 
 /// What one pass did to the IR: how many ops/slots it rewrote, plus a
 /// human-readable line per rewrite (printed by `rmsmp plan` and pinned
@@ -286,7 +287,8 @@ fn integer_resident(ir: &mut Ir) -> Result<PassReport> {
 /// non-grouped conv whose input and output slots differ streams
 /// column-tile panels instead of materializing the im2col matrix (an
 /// in-place conv cannot stream: the GEMM would read the input while
-/// writing the output). Panels are sized to [`PANEL_BYTES`].
+/// writing the output). Panels are sized to the IR's panel budget
+/// (`Ir::panel_bytes` — autotuned or the fixed default).
 ///
 /// The pass then retargets code-slot layouts: a code slot written only
 /// by non-grouped implicit convs and read only by implicit **unit**
@@ -304,8 +306,12 @@ fn implicit(ir: &mut Ir) -> Result<PassReport> {
         {
             if *groups == 1 && input != out {
                 *implicit = true;
-                *panel_positions =
-                    panel_width(ir.weights.layers[*layer].cols, *oh * *ow, ir.capacity);
+                *panel_positions = panel_width(
+                    ir.panel_bytes,
+                    ir.weights.layers[*layer].cols,
+                    *oh * *ow,
+                    ir.capacity,
+                );
                 rep.rewrites += 1;
                 rep.details.push(format!(
                     "conv {} implicit (panel {} positions)",
@@ -320,9 +326,10 @@ fn implicit(ir: &mut Ir) -> Result<PassReport> {
 
 /// Panel width for one streamed conv: cache-sized, but never wider than
 /// the op's whole batch at plan capacity — a panel bigger than the
-/// operand is pure waste.
-fn panel_width(cols: usize, hw: usize, capacity: usize) -> usize {
-    (PANEL_BYTES / cols.max(1))
+/// operand is pure waste. `panel_bytes` is the machine-tuned (or
+/// default) panel budget the IR carries.
+fn panel_width(panel_bytes: usize, cols: usize, hw: usize, capacity: usize) -> usize {
+    (panel_bytes / cols.max(1))
         .clamp(8, 256)
         .min((hw * capacity).max(1))
 }
@@ -416,7 +423,8 @@ fn depthwise(ir: &mut Ir) -> Result<PassReport> {
                     *filt_per_group,
                     ir.chunk_rows,
                 );
-                *panel_positions = panel_width(lw.cols, *oh * *ow, ir.capacity);
+                *panel_positions =
+                    panel_width(ir.panel_bytes, lw.cols, *oh * *ow, ir.capacity);
                 rep.rewrites += 1;
                 rep.details.push(format!(
                     "conv {} depthwise ({} groups, panel {} positions)",

@@ -31,7 +31,11 @@ use std::fmt::Write as _;
 
 use crate::ensure;
 use crate::err;
-use crate::gemm::{ParallelConfig, Requant, RowPartition, TaskChunk, MICRO_ROWS};
+use crate::gemm::{
+    autotune, Isa, ParallelConfig, Requant, RowPartition, TaskChunk, TuneShape, TunedParams,
+    MICRO_ROWS,
+};
+use crate::quant::Scheme;
 use crate::util::error::Result;
 
 use super::ir::Ir;
@@ -267,6 +271,15 @@ pub struct Plan {
     pub capacity: usize,
     /// GEMM rows per task chunk the schedules were compiled with.
     pub chunk_rows: usize,
+    /// Effective GEMM config the plan was compiled with: the builder's
+    /// config with the autotuned knobs merged in (explicit values win —
+    /// see [`TunedParams::apply_to`]). Engines built from this plan
+    /// adopt these knobs so execution matches the compiled schedules.
+    pub cfg: ParallelConfig,
+    /// The blocking parameters the load-time autotuner chose for this
+    /// machine — or the fixed defaults (`RMSMP_NO_TUNE=1`, or
+    /// [`PlanBuilder::no_tune`]).
+    pub tuned: TunedParams,
     /// Whether the `integer_resident` pass ran: integer-resident edges
     /// carry u8 activation codes between GEMMs (`false` = every edge
     /// f32, the pre-fusion baseline kept for benchmarking).
@@ -339,6 +352,7 @@ pub struct PlanBuilder<'a> {
     capacity: usize,
     cfg: ParallelConfig,
     disabled: Vec<String>,
+    tune: bool,
 }
 
 impl<'a> PlanBuilder<'a> {
@@ -367,6 +381,15 @@ impl<'a> PlanBuilder<'a> {
         self
     }
 
+    /// Skip the load-time autotuner and compile with the fixed default
+    /// blocking parameters — the deterministic twin of the
+    /// `RMSMP_NO_TUNE=1` environment escape hatch (reproducible tests,
+    /// tuned-vs-default ablations).
+    pub fn no_tune(mut self) -> Self {
+        self.tune = false;
+        self
+    }
+
     /// Lower, optimize, seal (see module docs).
     pub fn build(self) -> Result<Plan> {
         for name in &self.disabled {
@@ -376,7 +399,34 @@ impl<'a> PlanBuilder<'a> {
                 passes::PASS_NAMES
             );
         }
-        let mut ir = Ir::lower(self.manifest, self.weights, self.capacity, &self.cfg)?;
+        // Resolve the blocking knobs before lowering: the chunk
+        // schedules and panel widths bake them in.
+        let tuned = if !self.tune || autotune::no_tune_requested() {
+            TunedParams::defaults(&self.cfg)
+        } else {
+            // the f32-accumulating APoT baseline core is only
+            // deterministic for a fixed tile, so its presence pins
+            // tile_cols at the configured value
+            let pin_tile = self
+                .weights
+                .layers
+                .iter()
+                .any(|l| l.scheme.iter().any(|&s| s == Scheme::ApotW4A4));
+            let (rows, cols) = self
+                .weights
+                .layers
+                .iter()
+                .map(|l| (l.rows, l.cols))
+                .max_by_key(|&(r, c)| r * c)
+                .unwrap_or((16, 64));
+            // batch proxy: a handful of GEMM rows per capacity image
+            // (panel positions and batch rows land in the same clamp)
+            let shape = TuneShape::for_layer(rows, cols, self.capacity * 16);
+            autotune::tune(shape, &self.cfg, pin_tile)
+        };
+        let cfg = tuned.apply_to(self.cfg);
+        let mut ir =
+            Ir::lower(self.manifest, self.weights, self.capacity, &cfg, tuned.panel_bytes)?;
         let pass_reports = passes::run_pipeline(&mut ir, &self.disabled)?;
         let hwm = passes::high_water(&ir);
         let off = |name: &str| self.disabled.iter().any(|d| d == name);
@@ -384,6 +434,8 @@ impl<'a> PlanBuilder<'a> {
             model: ir.model,
             capacity: ir.capacity,
             chunk_rows: ir.chunk_rows,
+            cfg,
+            tuned,
             integer_resident: !off("integer_resident"),
             implicit: !off("implicit"),
             act_bits: ir.act_bits,
@@ -415,6 +467,7 @@ impl Plan {
             capacity: 1,
             cfg: ParallelConfig::sequential(),
             disabled: Vec::new(),
+            tune: true,
         }
     }
 
@@ -550,6 +603,15 @@ impl Plan {
             self.act_bits,
             if self.integer_resident { "integer-resident" } else { "f32-resident" },
             if self.implicit { "implicit-gemm" } else { "explicit-im2col" }
+        );
+        let _ = writeln!(
+            s,
+            "kernels: isa {}, tile cols {}, min rows/task {}, panel budget {} B ({})",
+            Isa::detect().name(),
+            self.cfg.tile_cols,
+            self.cfg.min_rows_per_task,
+            self.tuned.panel_bytes,
+            self.tuned.source.name()
         );
         let _ = writeln!(s, "passes:");
         for r in &self.pass_reports {

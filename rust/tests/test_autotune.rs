@@ -1,0 +1,211 @@
+//! Load-time autotuner invariants: tuning is an **optimization, never a
+//! semantic**. A plan compiled with tuned blocking knobs must produce
+//! logits bit-identical to the fixed-default plan (`.no_tune()`), the
+//! tuned knobs must come from the advertised candidate sets, an APoT
+//! layer must pin the tile width (its f32-accumulating baseline core is
+//! only deterministic for a fixed tile), and repeated builds in one
+//! process must agree (the per-process cache). All assertions here are
+//! robust to `RMSMP_NO_TUNE=1` in the environment — under the escape
+//! hatch the "tuned" plan degenerates to the defaults, which satisfy
+//! every membership and equality check below.
+
+use std::sync::Arc;
+
+use rmsmp::gemm::{
+    PackedWeights, ParallelConfig, SortedWeights, TuneSource, DEFAULT_MIN_ROWS_PER_TASK,
+    DEFAULT_PANEL_BYTES, DEFAULT_TILE_COLS,
+};
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::model::{Executor, Plan};
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::rng::Rng;
+
+fn layer(
+    name: &str,
+    kind: &str,
+    w: Mat,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    schemes: Vec<Scheme>,
+    bias: Vec<f32>,
+) -> LayerWeights {
+    let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
+    LayerWeights {
+        name: name.into(),
+        kind: kind.into(),
+        rows: w.rows,
+        cols: w.cols,
+        out_ch: conv.0,
+        in_ch: conv.1,
+        kh: conv.2,
+        kw: conv.3,
+        stride,
+        pad,
+        groups: 1,
+        a_alpha: 1.0,
+        scheme: schemes,
+        alpha,
+        bias,
+        w,
+        packed,
+        sorted,
+    }
+}
+
+/// conv(3x3 s1 p1, relu) -> gap -> fc. With `apot` false every row uses
+/// an integer-accumulating scheme, so logits are tile-independent and
+/// the tuned-vs-default comparison below is exact by construction.
+fn model(apot: bool) -> (Manifest, ModelWeights, Tensor4) {
+    let (n, c_in, hw, c1, classes) = (2usize, 3usize, 6usize, 8usize, 4usize);
+    let cc = c_in * 9;
+    let mut rng = Rng::new(if apot { 11 } else { 10 });
+    let pool: [Scheme; 3] = [Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4];
+    let mut schemes: Vec<Scheme> = (0..c1).map(|r| pool[r % 3]).collect();
+    if apot {
+        schemes[0] = Scheme::ApotW4A4;
+    }
+    let w1 = Mat::from_vec(c1, cc, rng.normal_vec(c1 * cc, 0.5));
+    let b1: Vec<f32> = (0..c1).map(|_| rng.normal() * 0.1).collect();
+    let layers = vec![
+        layer("c1", "conv", w1, (c1, c_in, 3, 3), 1, 1, schemes, b1),
+        layer(
+            "fc",
+            "linear",
+            Mat::from_vec(classes, c1, rng.normal_vec(classes * c1, 0.5)),
+            (classes, c1, 1, 1),
+            0,
+            0,
+            (0..classes).map(|r| pool[r % 3]).collect(),
+            (0..classes).map(|_| rng.normal() * 0.1).collect(),
+        ),
+    ];
+    let json = format!(
+        r#"{{"model":"tune","arch":"resnet","num_classes":{classes},
+            "input_shape":[{n},{c_in},{hw},{hw}],"ratio":[65,30,5],"act_bits":4,
+            "layers":[
+              {{"name":"c1","kind":"conv","rows":{c1},"cols":{cc},"stride":1,"pad":1,
+               "groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}},
+              {{"name":"fc","kind":"linear","rows":{classes},"cols":{c1},"stride":0,"pad":0,
+               "groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}],
+            "program":[
+              {{"op":"conv","layer":"c1","in":"in0","out":"b0","relu":true}},
+              {{"op":"gap","in":"b0","out":"g0"}},
+              {{"op":"linear","layer":"fc","in":"g0","out":"logits"}}]}}"#
+    );
+    let manifest = Manifest::from_json(&Json::parse(&json).unwrap()).unwrap();
+    let mut x = Tensor4::zeros(n, c_in, hw, hw);
+    for v in x.data.iter_mut() {
+        *v = rng.uniform(0.0, 1.2);
+    }
+    (manifest, ModelWeights { layers }, x)
+}
+
+fn logits(manifest: &Manifest, weights: &ModelWeights, plan: Plan, x: &Tensor4) -> Vec<f32> {
+    let mut exec = Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        Arc::new(plan),
+        ParallelConfig::sequential(),
+        None,
+    )
+    .unwrap();
+    exec.infer(x).unwrap().data.clone()
+}
+
+#[test]
+fn no_tune_builder_compiles_with_the_fixed_defaults() {
+    let (manifest, weights, _) = model(false);
+    let plan = Plan::builder(&manifest, &weights).capacity(2).no_tune().build().unwrap();
+    assert_eq!(plan.tuned.source, TuneSource::Defaults);
+    assert_eq!(plan.cfg.tile_cols, DEFAULT_TILE_COLS);
+    assert_eq!(plan.cfg.min_rows_per_task, DEFAULT_MIN_ROWS_PER_TASK);
+    assert_eq!(plan.tuned.panel_bytes, DEFAULT_PANEL_BYTES);
+    // deterministic twin of RMSMP_NO_TUNE=1: two builds agree exactly
+    let again = Plan::builder(&manifest, &weights).capacity(2).no_tune().build().unwrap();
+    assert_eq!(plan.tuned, again.tuned);
+    assert_eq!(plan.cfg.tile_cols, again.cfg.tile_cols);
+}
+
+#[test]
+fn tuned_and_default_plans_produce_bit_identical_logits() {
+    // Integer accumulation is tile-independent, panel width and chunk
+    // granularity only reshape the schedule — so whatever the tuner
+    // picked, the logits must not move by even one ulp.
+    let (manifest, weights, x) = model(false);
+    let tuned = Plan::builder(&manifest, &weights).capacity(2).build().unwrap();
+    let fixed =
+        Plan::builder(&manifest, &weights).capacity(2).no_tune().build().unwrap();
+    let got = logits(&manifest, &weights, tuned, &x);
+    let want = logits(&manifest, &weights, fixed, &x);
+    assert_eq!(got, want, "autotuned plan changed the logits");
+}
+
+#[test]
+fn tuned_knobs_are_members_of_the_candidate_sets() {
+    let (manifest, weights, _) = model(false);
+    let plan = Plan::builder(&manifest, &weights).capacity(2).build().unwrap();
+    assert!(
+        [64, 128, 256, 512].contains(&plan.cfg.tile_cols),
+        "tile_cols {} not a tuner candidate",
+        plan.cfg.tile_cols
+    );
+    assert!(
+        [4, 8, 16].contains(&plan.cfg.min_rows_per_task),
+        "min_rows_per_task {} not a tuner candidate",
+        plan.cfg.min_rows_per_task
+    );
+    assert!(
+        [16 * 1024, 32 * 1024, 64 * 1024].contains(&plan.tuned.panel_bytes),
+        "panel_bytes {} not a tuner candidate",
+        plan.tuned.panel_bytes
+    );
+}
+
+#[test]
+fn repeated_tuned_builds_agree_via_the_process_cache() {
+    let (manifest, weights, x) = model(false);
+    let a = Plan::builder(&manifest, &weights).capacity(2).build().unwrap();
+    let b = Plan::builder(&manifest, &weights).capacity(2).build().unwrap();
+    assert_eq!(a.tuned, b.tuned, "same model, same process, different tuning");
+    let la = logits(&manifest, &weights, a, &x);
+    let lb = logits(&manifest, &weights, b, &x);
+    assert_eq!(la, lb);
+}
+
+#[test]
+fn apot_rows_pin_the_tile_width() {
+    // The APoT baseline core accumulates in f32, so its output depends
+    // on the tile split; the builder must keep the configured tile when
+    // any row uses it — tuned and default plans then stay bit-identical
+    // even for APoT models.
+    let (manifest, weights, x) = model(true);
+    let plan = Plan::builder(&manifest, &weights).capacity(2).build().unwrap();
+    assert_eq!(plan.cfg.tile_cols, DEFAULT_TILE_COLS, "APoT model's tile moved");
+    let fixed =
+        Plan::builder(&manifest, &weights).capacity(2).no_tune().build().unwrap();
+    let got = logits(&manifest, &weights, plan, &x);
+    let want = logits(&manifest, &weights, fixed, &x);
+    assert_eq!(got, want, "tuning changed an APoT model's logits");
+}
+
+#[test]
+fn describe_reports_the_resolved_kernel_parameters() {
+    let (manifest, weights, _) = model(false);
+    let plan = Plan::builder(&manifest, &weights).capacity(2).build().unwrap();
+    let desc = plan.describe(&weights, 1);
+    assert!(desc.contains("kernels: isa"), "describe missing kernel line:\n{desc}");
+    assert!(
+        desc.contains(plan.tuned.source.name()),
+        "describe missing tuning source:\n{desc}"
+    );
+    assert!(
+        desc.contains(&format!("tile cols {}", plan.cfg.tile_cols)),
+        "describe missing tile cols:\n{desc}"
+    );
+}

@@ -1,17 +1,20 @@
 //! SIMD / micro-kernel invariants (the class-sorted kernel layer).
 //!
-//! The block micro-kernels behind `run_block_tiled` — scalar, SSE, and
-//! AVX2 — must be **bit-exact** against the scalar row-at-a-time
-//! `run_row_tiled` path for every scheme, batch size, tile size, and
-//! column count (including lengths that are not multiples of the vector
-//! width, which exercise the remainder loops); and the class-sorted
-//! layout's permutation must scatter outputs back to exactly the
-//! unsorted row order. Integer accumulation makes the first guarantee
-//! exact; the bijective permutation makes the second one.
+//! The block micro-kernels behind `run_block_tiled` — the full ISA
+//! ladder: scalar, SSE4.1, AVX2, AVX-512 VNNI, and NEON dot-product
+//! (each clamped to what the host supports, so the grid degrades
+//! gracefully on machines without a tier) — must be **bit-exact**
+//! against the scalar row-at-a-time `run_row_tiled` path for every
+//! scheme, batch size, tile size, activation width, and column count
+//! (including lengths that are not multiples of the vector width, which
+//! exercise the remainder loops); and the class-sorted layout's
+//! permutation must scatter outputs back to exactly the unsorted row
+//! order. Integer accumulation makes the first guarantee exact; the
+//! bijective permutation makes the second one.
 
 use rmsmp::gemm::{
     chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, Isa, MixedGemm, PackedActs,
-    PackedWeights, ParallelConfig, SortedWeights, MICRO_ROWS,
+    PackedWeights, ParallelConfig, SortedWeights, ISA_LADDER, MICRO_ROWS,
 };
 use rmsmp::prop_assert;
 use rmsmp::quant::{self, Mat, Scheme};
@@ -111,7 +114,7 @@ fn block_simd_bit_exact_vs_scalar_rows_at_fixed_shapes() {
                 seed += 1;
                 let (acts, pw) = problem(13, cols, batch, seed);
                 let want = rowwise_reference(&seq, &acts, &pw, tile);
-                for isa in [Isa::Scalar, Isa::Sse41.available(), Isa::Avx2.available()] {
+                for isa in ISA_LADDER.map(Isa::available) {
                     for chunk_rows in [1usize, MICRO_ROWS, 64] {
                         let got = sorted_block(&acts, &pw, tile, chunk_rows, isa);
                         assert_eq!(
@@ -203,13 +206,61 @@ fn parallel_simd_dispatch_is_bit_exact_vs_scalar_sequential() {
 }
 
 #[test]
-fn no_simd_env_value_is_respected_by_engines_built_now() {
-    // Engines resolve the ISA at construction; whatever RMSMP_NO_SIMD
-    // says for this process, a freshly built engine must agree with
-    // Isa::detect(), and a forced-scalar engine must report Scalar.
+fn wide_activation_codes_stay_bit_exact_on_every_tier() {
+    // The saturation boundary: 7-bit activation codes (max 127) are the
+    // widest the maddubs-based tiers handle in-vector; 8-bit codes (max
+    // 255) would saturate their i16 intermediate and flip sign under
+    // NEON sdot, so those tiers must degrade to the scalar kernel —
+    // while AVX-512 VNNI (u8 x i8 -> i32, no i16 intermediate) keeps its
+    // vector path and must be exact anyway. Either way the contract is
+    // the same: bit-exact vs the scalar row path at bits ∈ {7, 8}.
+    // (That VNNI does NOT take the scalar fallback is pinned by the
+    // simd unit tests on Isa::wide_code_tier; here we pin the numbers.)
+    let seq = MixedGemm::with_config(ParallelConfig::sequential());
+    for &bits in &[7u32, 8] {
+        for &cols in &[3usize, 33, 64, 257] {
+            let mut rng = Rng::new(500 + bits as u64 + cols as u64);
+            let batch = 5usize;
+            let rows = 13usize;
+            let xd: Vec<f32> =
+                (0..batch * cols).map(|_| rng.uniform(0.0, 1.3)).collect();
+            let x = Mat::from_vec(batch, cols, xd);
+            let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.5));
+            let schemes: Vec<Scheme> =
+                (0..rows).map(|r| SCHEMES[(rng.below(4) as usize + r) % 4]).collect();
+            let alpha: Vec<f32> =
+                (0..rows).map(|r| quant::default_alpha(w.row(r))).collect();
+            // codes span the full 2^bits range — 8-bit hits the u8 max
+            let acts = PackedActs::quantize(&x, 1.0, bits);
+            let pw = PackedWeights::quantize(&w, &schemes, &alpha);
+            let want = rowwise_reference(&seq, &acts, &pw, 16);
+            for isa in ISA_LADDER.map(Isa::available) {
+                let got = sorted_block(&acts, &pw, 16, MICRO_ROWS, isa);
+                assert_eq!(
+                    got.data, want.data,
+                    "isa {isa:?} bits {bits} cols {cols}"
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn isa_env_overrides_are_respected_by_engines_built_now() {
+    // Engines resolve the ISA at construction; whatever RMSMP_ISA or the
+    // deprecated RMSMP_NO_SIMD alias say for this process (the CI matrix
+    // runs this suite once per forced tier), a freshly built engine must
+    // agree with Isa::detect(), and a forced-scalar engine must report
+    // Scalar.
     let engine = MixedGemm::new();
     assert_eq!(engine.isa(), Isa::detect());
     let mut forced = MixedGemm::new();
     forced.set_isa(Isa::Scalar);
     assert_eq!(forced.isa(), Isa::Scalar);
+    // forcing any rung of the ladder lands on a supported tier
+    for isa in ISA_LADDER {
+        let mut e = MixedGemm::new();
+        e.set_isa(isa);
+        assert_eq!(e.isa(), isa.available(), "forced {isa:?}");
+    }
 }
