@@ -1,15 +1,17 @@
-//! Serving example: load the AOT artifacts, start the dynamic-batching
-//! coordinator, drive it with an open-loop Poisson workload, and report
-//! latency percentiles + throughput — the L3 request path end to end
-//! (Python never runs here).
+//! Serving example: load the AOT artifacts, start the HTTP/1.1
+//! front-end on loopback, and self-query it curl-style — the full L3
+//! request path end to end (socket → lazy JSON parse → batcher →
+//! compiled plan → response), with the Prometheus `/metrics` endpoint
+//! printed at the end. Python never runs here.
 //!
 //! Run after `make artifacts`:
 //!     cargo run --release --example serve_quantized [rate_rps] [n_requests]
 
+use std::fmt::Write as _;
 use std::time::{Duration, Instant};
 
 use rmsmp::coordinator::batcher::BatchPolicy;
-use rmsmp::coordinator::{OpenLoopGen, Server, ServerConfig};
+use rmsmp::coordinator::{HttpConfig, HttpServer, Server, ServerConfig, SimpleClient};
 use rmsmp::model::{Manifest, ModelWeights};
 use rmsmp::runtime::artifacts_dir;
 use rmsmp::ParallelConfig;
@@ -23,7 +25,7 @@ fn main() -> rmsmp::Result<()> {
     let manifest = Manifest::load(&dir.join("manifest.json"))?;
     let weights = ModelWeights::load(&dir.join("weights.bin"))?;
     println!(
-        "serving {} ({} layers, ratio {}) — {n} requests at {rate} req/s",
+        "serving {} ({} layers, ratio {}) — {n} requests at {rate} req/s over HTTP",
         manifest.model,
         manifest.layers.len(),
         manifest.ratio
@@ -43,29 +45,52 @@ fn main() -> rmsmp::Result<()> {
             parallel: ParallelConfig::default(),
         },
     )?;
+    let http = HttpServer::start(server, HttpConfig::default())?;
+    println!("listening on http://{} — try:", http.addr());
+    println!(
+        "  curl -s http://{}/v1/infer -d '{{\"input\": [0.1, ...], \"deadline_ms\": 50}}'",
+        http.addr()
+    );
+    println!("  curl -s http://{}/metrics", http.addr());
 
-    let mut gen = OpenLoopGen::new(7, rate, image_len);
-    let trace = gen.trace(n);
+    // self-query like curl would: one keep-alive connection, POSTing
+    // JSON bodies at the requested open-loop rate
+    let addr = http.addr().to_string();
+    let mut body = String::with_capacity(image_len * 10 + 64);
+    let mut client = SimpleClient::connect(&addr)?;
     let t0 = Instant::now();
-    let mut rxs = Vec::with_capacity(n);
-    for ev in &trace {
-        if let Some(sleep) = Duration::from_secs_f64(ev.at_s).checked_sub(t0.elapsed()) {
+    let mut ok = 0;
+    let mut shed = 0;
+    for k in 0..n {
+        let target = Duration::from_secs_f64(k as f64 / rate);
+        if let Some(sleep) = target.checked_sub(t0.elapsed()) {
             std::thread::sleep(sleep);
         }
-        match server.submit(ev.image.clone()) {
-            Ok(rx) => rxs.push(rx),
-            Err(e) => println!("rejected (backpressure): {e:?}"),
+        body.clear();
+        body.push_str("{\"deadline_ms\": 250, \"input\": [");
+        for i in 0..image_len {
+            if i > 0 {
+                body.push(',');
+            }
+            let _ = write!(body, "{}", ((i + k) % 29) as f32 / 29.0);
         }
-    }
-    let mut ok = 0;
-    for rx in rxs {
-        if rx.recv().is_ok() {
-            ok += 1;
+        body.push_str("]}");
+        let resp = client.request("POST", "/v1/infer", &body)?;
+        match resp.status {
+            200 => ok += 1,
+            504 => shed += 1,
+            s => println!("request {k}: HTTP {s} {}", resp.body.trim_end()),
         }
     }
     let wall = t0.elapsed().as_secs_f64();
-    println!("completed {ok}/{n} in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
-    println!("{}", server.metrics.summary());
-    server.shutdown();
+    println!("completed {ok}/{n} (shed {shed}) in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
+
+    let metrics = client.request("GET", "/metrics", "")?;
+    println!("--- GET /metrics ---");
+    for line in metrics.body.lines().filter(|l| !l.starts_with('#')) {
+        println!("{line}");
+    }
+    println!("{}", http.summary());
+    http.shutdown();
     Ok(())
 }

@@ -26,7 +26,13 @@ fn main() {
         });
         let (tx, _rx) = mpsc::channel();
         for i in 0..100u64 {
-            let req = Pending { id: i, payload: 0, enqueued: Instant::now(), respond: tx.clone() };
+            let req = Pending {
+                id: i,
+                payload: 0,
+                enqueued: Instant::now(),
+                deadline: None,
+                respond: tx.clone(),
+            };
             batcher.submit(req).unwrap();
         }
         let mut n = 0;

@@ -1,0 +1,217 @@
+//! HTTP serving benchmark: concurrent socket clients against the real
+//! front-end, measuring per-request latency (p50/p99) and throughput at
+//! several concurrency levels — the continuous-batching curve. A
+//! synthetic in-memory model keeps the bench artifact-free so CI always
+//! runs it; `RMSMP_BENCH_FAST=1` shrinks the request counts.
+//!
+//! Also measures the lazy JSON field scan against the tree parser on a
+//! realistic request body (the ADR-002 claim: partial extraction should
+//! be an order of magnitude faster than building the tree).
+//!
+//! Writes `BENCH_serve.json` (levels + batching speedup + parse
+//! speedup) for the CI bench artifact upload.
+
+use std::time::{Duration, Instant};
+
+use rmsmp::coordinator::batcher::BatchPolicy;
+use rmsmp::coordinator::{HttpConfig, HttpServer, Server, ServerConfig, SimpleClient};
+use rmsmp::gemm::{PackedWeights, ParallelConfig, SortedWeights};
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::bench::Bench;
+use rmsmp::util::json::{self, Json};
+use rmsmp::util::rng::Rng;
+use rmsmp::util::stats::percentile_sorted;
+
+/// Synthetic gap→linear model (no artifacts needed): input (4, 8, 8),
+/// 10 classes, mixed row schemes like the paper's 65:30:5 split.
+fn synthetic() -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(
+        &Json::parse(
+            r#"{
+        "model": "bench", "arch": "resnet", "num_classes": 10,
+        "input_shape": [1, 4, 8, 8], "ratio": [65, 30, 5], "act_bits": 4,
+        "layers": [
+          {"name": "fc", "kind": "linear", "rows": 10, "cols": 4,
+           "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [6, 3, 1, 0]}
+        ],
+        "program": [
+          {"op": "gap", "in": "in0", "out": "b0"},
+          {"op": "linear", "layer": "fc", "in": "b0", "out": "logits"}
+        ]
+      }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let mut schemes = vec![Scheme::PotW4A4; 6];
+    schemes.extend(vec![Scheme::FixedW4A4; 3]);
+    schemes.push(Scheme::FixedW8A4);
+    let mut rng = Rng::new(7);
+    let w = Mat::from_vec(10, 4, rng.normal_vec(40, 0.5));
+    let alpha: Vec<f32> = (0..10).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
+    let weights = ModelWeights {
+        layers: vec![LayerWeights {
+            name: "fc".into(),
+            kind: "linear".into(),
+            rows: 10,
+            cols: 4,
+            out_ch: 10,
+            in_ch: 4,
+            kh: 1,
+            kw: 1,
+            stride: 0,
+            pad: 0,
+            groups: 1,
+            a_alpha: 1.0,
+            scheme: schemes,
+            alpha,
+            bias: vec![0.0; 10],
+            w,
+            packed,
+            sorted,
+        }],
+    };
+    (manifest, weights)
+}
+
+fn request_body(input_len: usize) -> String {
+    use std::fmt::Write as _;
+    let mut body = String::with_capacity(input_len * 10 + 32);
+    body.push_str("{\"input\":[");
+    for i in 0..input_len {
+        if i > 0 {
+            body.push(',');
+        }
+        let _ = write!(body, "{}", (i % 13) as f32 / 13.0);
+    }
+    body.push_str("]}");
+    body
+}
+
+/// Run `clients` concurrent keep-alive clients, `per_client` requests
+/// each; returns (p50_ms, p99_ms, rps).
+fn run_level(addr: &str, body: &str, clients: usize, per_client: usize) -> (f64, f64, f64) {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            let addr = addr.to_string();
+            let body = body.to_string();
+            std::thread::spawn(move || {
+                let mut c = SimpleClient::connect(&addr).expect("connect");
+                let mut lat = Vec::with_capacity(per_client);
+                for _ in 0..per_client {
+                    let t = Instant::now();
+                    let resp = c.request("POST", "/v1/infer", &body).expect("request");
+                    assert_eq!(resp.status, 200, "{}", resp.body);
+                    lat.push(t.elapsed().as_secs_f64() * 1e3);
+                }
+                lat
+            })
+        })
+        .collect();
+    let mut lat: Vec<f64> = Vec::with_capacity(clients * per_client);
+    for h in handles {
+        lat.extend(h.join().expect("client thread"));
+    }
+    let wall = t0.elapsed().as_secs_f64();
+    lat.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    (
+        percentile_sorted(&lat, 50.0),
+        percentile_sorted(&lat, 99.0),
+        lat.len() as f64 / wall,
+    )
+}
+
+fn main() {
+    let fast = std::env::var("RMSMP_BENCH_FAST").is_ok();
+    let per_client = if fast { 20 } else { 200 };
+    let levels = [1usize, 8, 32];
+
+    // --- lazy JSON scan vs tree parse on a realistic body ------------------
+    let (manifest, weights) = synthetic();
+    let input_len = manifest.input_shape[1] * manifest.input_shape[2] * manifest.input_shape[3];
+    let body = request_body(input_len);
+    let mut b = Bench::new("serve");
+    b.case("parse_tree", || {
+        let j = Json::parse(&body).unwrap();
+        std::hint::black_box(j.get("input").unwrap().as_f32_vec().unwrap());
+    });
+    let mut out = Vec::with_capacity(input_len);
+    b.case("parse_lazy", || {
+        json::lazy_f32_array(body.as_bytes(), "input", &mut out).unwrap();
+        std::hint::black_box(out.len());
+    });
+    let parse_speedup = b.get("parse_tree").unwrap().ns_per_iter()
+        / b.get("parse_lazy").unwrap().ns_per_iter();
+    println!("bench serve/parse_speedup lazy is {parse_speedup:.1}x tree");
+
+    // --- concurrent clients vs the real server -----------------------------
+    let server = Server::start(
+        manifest,
+        weights,
+        ServerConfig {
+            workers: 1,
+            policy: BatchPolicy {
+                max_batch: 32,
+                max_wait: Duration::from_millis(1),
+                queue_cap: 4096,
+            },
+            parallel: ParallelConfig::sequential(),
+        },
+    )
+    .unwrap();
+    let http = HttpServer::start(
+        server,
+        HttpConfig {
+            conn_threads: levels.iter().copied().max().unwrap() + 1,
+            ..HttpConfig::default()
+        },
+    )
+    .unwrap();
+    let addr = http.addr().to_string();
+
+    // warm the connection path + plan before measuring
+    run_level(&addr, &body, 2, 5);
+
+    let mut level_objs = Vec::new();
+    let mut rps_by_level = Vec::new();
+    for &clients in &levels {
+        let (p50, p99, rps) = run_level(&addr, &body, clients, per_client);
+        println!(
+            "bench serve/clients{clients} p50 {p50:.3}ms p99 {p99:.3}ms thrpt {rps:.0} req/s"
+        );
+        level_objs.push(json::obj(vec![
+            ("clients", json::num(clients as f64)),
+            ("requests", json::num((clients * per_client) as f64)),
+            ("p50_ms", json::num(p50)),
+            ("p99_ms", json::num(p99)),
+            ("rps", json::num(rps)),
+        ]));
+        rps_by_level.push((clients, rps));
+    }
+    let rps_at = |n: usize| {
+        rps_by_level
+            .iter()
+            .find(|(c, _)| *c == n)
+            .map(|(_, r)| *r)
+            .unwrap_or(0.0)
+    };
+    let batching_speedup = rps_at(32) / rps_at(1).max(1e-9);
+    println!("bench serve/batching_speedup_32v1 {batching_speedup:.2}x");
+    println!("  {}", http.summary());
+    http.shutdown();
+
+    let path = b
+        .write_json(vec![
+            ("levels", Json::Arr(level_objs)),
+            ("batching_speedup_32v1", json::num(batching_speedup)),
+            ("parse_speedup", json::num(parse_speedup)),
+        ])
+        .unwrap();
+    println!("wrote {}", path.display());
+}

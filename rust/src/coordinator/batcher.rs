@@ -4,6 +4,12 @@
 //! oldest waiting request has been queued for `max_wait` — the classic
 //! latency/throughput knob. The queue applies backpressure at
 //! `queue_cap` (submissions fail fast instead of growing unboundedly).
+//!
+//! Requests may carry an absolute **deadline**: a request whose deadline
+//! has passed while it sat in the queue is *shed at dispatch time* —
+//! removed before the batch is formed, returned in [`Batch::expired`] so
+//! the caller can answer it immediately — instead of wasting GEMM cycles
+//! on logits nobody is waiting for.
 
 use std::collections::VecDeque;
 use std::sync::{Condvar, Mutex};
@@ -14,6 +20,8 @@ pub struct Pending<T> {
     pub id: u64,
     pub payload: T,
     pub enqueued: Instant,
+    /// Absolute completion deadline; `None` = never shed.
+    pub deadline: Option<Instant>,
     pub respond: std::sync::mpsc::Sender<Response>,
 }
 
@@ -25,11 +33,17 @@ pub struct Response {
     pub queue_ms: f64,
     pub total_ms: f64,
     pub batch_size: usize,
+    /// The request was load-shed (deadline expired in queue): `logits`
+    /// is empty and no inference ran for it.
+    pub shed: bool,
 }
 
 /// A dispatched batch.
 pub struct Batch<T> {
     pub requests: Vec<Pending<T>>,
+    /// Requests whose deadline expired while queued — shed before the
+    /// GEMM; the worker answers these without running inference.
+    pub expired: Vec<Pending<T>>,
 }
 
 /// Batching policy knobs.
@@ -75,13 +89,31 @@ pub struct Batcher<T> {
     cv: Condvar,
 }
 
-/// Submission failure modes.
+/// Submission failure modes — granular so a front-end can map each to
+/// the right wire status: `Full` is transient (retry after backoff,
+/// HTTP 429), `Closed` is terminal for this server (503), `Invalid` and
+/// `UnknownModel` are caller errors (400 / 404) that no retry fixes.
 #[derive(Debug, PartialEq, Eq)]
 pub enum SubmitError {
-    /// Queue at capacity — the backpressure signal.
+    /// Queue at capacity — the backpressure signal. Retryable.
     Full,
-    /// Batcher shut down.
+    /// Batcher shut down. Not retryable against this instance.
     Closed,
+    /// Request rejected by validation (wrong shape, bad payload).
+    Invalid(String),
+    /// No model variant by that name is resident.
+    UnknownModel(String),
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::Full => write!(f, "queue full (backpressure)"),
+            SubmitError::Closed => write!(f, "server shutting down"),
+            SubmitError::Invalid(m) => write!(f, "invalid request: {m}"),
+            SubmitError::UnknownModel(m) => write!(f, "unknown model {m:?}"),
+        }
+    }
 }
 
 impl<T> Batcher<T> {
@@ -117,22 +149,51 @@ impl<T> Batcher<T> {
     }
 
     /// Block until a batch is ready (or `None` after close + drain).
+    ///
+    /// Every wake-up first sweeps deadline-expired requests out of the
+    /// queue into [`Batch::expired`] — shedding happens *before* batch
+    /// formation, so an expired request never occupies a GEMM row.
     pub fn next_batch(&self) -> Option<Batch<T>> {
         let mut s = self.state.lock().unwrap();
+        let mut shed = Vec::new();
         loop {
+            let now = Instant::now();
+            let mut i = 0;
+            while i < s.queue.len() {
+                let expired = s.queue[i].deadline.is_some_and(|d| d <= now);
+                if expired {
+                    shed.push(s.queue.remove(i).unwrap());
+                } else {
+                    i += 1;
+                }
+            }
             if !s.queue.is_empty() {
                 let oldest = s.queue.front().unwrap().enqueued;
                 let full = s.queue.len() >= self.policy.max_batch;
-                let expired = oldest.elapsed() >= self.policy.max_wait;
-                if full || expired || s.closed {
+                let waited_out = now.duration_since(oldest) >= self.policy.max_wait;
+                if full || waited_out || s.closed {
                     let n = s.queue.len().min(self.policy.max_batch);
                     let requests = s.queue.drain(..n).collect();
-                    return Some(Batch { requests });
+                    return Some(Batch { requests, expired: shed });
                 }
-                // wait the remaining deadline of the oldest request
-                let remaining = self.policy.max_wait.saturating_sub(oldest.elapsed());
-                let (ns, _) = self.cv.wait_timeout(s, remaining).unwrap();
+                // wake at the oldest request's dispatch time or the
+                // earliest per-request deadline, whichever comes first
+                let mut wake = oldest + self.policy.max_wait;
+                for p in &s.queue {
+                    if let Some(d) = p.deadline {
+                        if d < wake {
+                            wake = d;
+                        }
+                    }
+                }
+                let (ns, _) = self
+                    .cv
+                    .wait_timeout(s, wake.saturating_duration_since(now))
+                    .unwrap();
                 s = ns;
+            } else if !shed.is_empty() {
+                // nothing runnable, but expired requests need answering
+                return Some(Batch { requests: Vec::new(), expired: shed });
             } else if s.closed {
                 return None;
             } else {
@@ -155,9 +216,19 @@ mod tests {
     use std::sync::Arc;
 
     fn req(id: u64) -> (Pending<u32>, mpsc::Receiver<Response>) {
+        req_deadline(id, None)
+    }
+
+    fn req_deadline(id: u64, deadline: Option<Instant>) -> (Pending<u32>, mpsc::Receiver<Response>) {
         let (tx, rx) = mpsc::channel();
         (
-            Pending { id, payload: id as u32, enqueued: Instant::now(), respond: tx },
+            Pending {
+                id,
+                payload: id as u32,
+                enqueued: Instant::now(),
+                deadline,
+                respond: tx,
+            },
             rx,
         )
     }
@@ -208,6 +279,63 @@ mod tests {
         let batch = b.next_batch().unwrap();
         assert_eq!(batch.requests.len(), 1);
         assert!(t0.elapsed() >= Duration::from_millis(4));
+    }
+
+    #[test]
+    fn expired_requests_are_shed_before_dispatch() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            queue_cap: 10,
+        });
+        // one already-expired request, one live one
+        b.submit(req_deadline(1, Some(Instant::now())).0).unwrap();
+        b.submit(req(2).0).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.expired.len(), 1, "expired request shed");
+        assert_eq!(batch.expired[0].id, 1);
+        assert_eq!(batch.requests.len(), 1, "live request dispatched");
+        assert_eq!(batch.requests[0].id, 2);
+    }
+
+    #[test]
+    fn all_expired_yields_empty_batch_with_shed() {
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(10),
+            queue_cap: 10,
+        });
+        b.submit(req_deadline(1, Some(Instant::now())).0).unwrap();
+        b.submit(req_deadline(2, Some(Instant::now())).0).unwrap();
+        let batch = b.next_batch().unwrap();
+        assert!(batch.requests.is_empty());
+        assert_eq!(batch.expired.len(), 2);
+    }
+
+    #[test]
+    fn near_deadline_wakes_before_max_wait() {
+        // deadline (20ms) far sooner than max_wait (10s): next_batch must
+        // wake on the deadline and shed, not sit out the full max_wait
+        let b: Batcher<u32> = Batcher::new(BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_secs(10),
+            queue_cap: 10,
+        });
+        b.submit(req_deadline(1, Some(Instant::now() + Duration::from_millis(20))).0)
+            .unwrap();
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert!(t0.elapsed() < Duration::from_secs(5), "woke on deadline");
+        assert_eq!(batch.expired.len(), 1);
+        assert!(batch.requests.is_empty());
+    }
+
+    #[test]
+    fn submit_error_display_is_granular() {
+        assert!(SubmitError::Full.to_string().contains("backpressure"));
+        assert!(SubmitError::Closed.to_string().contains("shutting down"));
+        assert!(SubmitError::Invalid("len 3".into()).to_string().contains("len 3"));
+        assert!(SubmitError::UnknownModel("m".into()).to_string().contains("m"));
     }
 
     #[test]

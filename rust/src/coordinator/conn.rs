@@ -1,0 +1,450 @@
+//! HTTP/1.1 connection plumbing shared by the serving front-end
+//! ([`super::http`]), the socket tests, and `bench_serve`: a blocking
+//! request reader that tolerates read timeouts (handlers poll a stop
+//! flag between reads without dropping half-read requests), a response
+//! writer that builds the head in a reused scratch buffer, and a tiny
+//! blocking client for tests and benchmarks.
+//!
+//! Only the slice of HTTP/1.1 the serving path needs is implemented:
+//! `Content-Length` bodies (chunked transfer encoding is rejected with
+//! 400), keep-alive, and `Expect: 100-continue`. Every protocol
+//! violation maps to a 4xx answer followed by a close — a malformed
+//! peer can never wedge a handler thread.
+
+use std::io::{self, BufRead, Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicBool, Ordering};
+
+/// Cap on a single head line (request line or header).
+const MAX_LINE_BYTES: usize = 8 * 1024;
+/// Cap on header count per request.
+const MAX_HEADERS: usize = 64;
+
+/// One parsed request.
+#[derive(Debug)]
+pub struct Request {
+    pub method: String,
+    pub path: String,
+    /// Whether the connection should stay open after the response.
+    pub keep_alive: bool,
+    /// `Content-Length` as sent; `None` means the header was absent
+    /// (POST routes answer 411 in that case).
+    pub content_length: Option<usize>,
+    pub body: Vec<u8>,
+}
+
+/// Why [`read_request`] stopped without producing a request.
+#[derive(Debug)]
+pub enum ReadError {
+    /// Clean EOF between requests — the normal end of a keep-alive
+    /// connection.
+    Closed,
+    /// The server's stop flag was raised while this handler was idle.
+    Stopped,
+    /// Transport failure mid-request.
+    Io(io::Error),
+    /// Protocol violation: answer with this status + message, then close.
+    Bad(u16, &'static str),
+}
+
+fn interrupted(kind: io::ErrorKind) -> bool {
+    matches!(
+        kind,
+        io::ErrorKind::WouldBlock | io::ErrorKind::TimedOut | io::ErrorKind::Interrupted
+    )
+}
+
+/// Read one `\n`-terminated line into `line` (cleared first). Retries
+/// read-timeout errors while polling `stop`; `read_until` appends, so a
+/// line split across timeouts is reassembled rather than dropped.
+fn read_line_bytes<R: BufRead>(
+    r: &mut R,
+    stop: &AtomicBool,
+    line: &mut Vec<u8>,
+) -> Result<(), ReadError> {
+    line.clear();
+    loop {
+        match (&mut *r).take(MAX_LINE_BYTES as u64).read_until(b'\n', line) {
+            Ok(0) => {
+                // EOF, or the take-limit ran out with no newline in sight
+                if line.len() >= MAX_LINE_BYTES {
+                    return Err(ReadError::Bad(431, "header line too long"));
+                }
+                return Err(ReadError::Closed);
+            }
+            Ok(_) => {
+                if line.last() == Some(&b'\n') {
+                    return Ok(());
+                }
+                if line.len() >= MAX_LINE_BYTES {
+                    return Err(ReadError::Bad(431, "header line too long"));
+                }
+                // partial line (timeout window or take boundary): keep going
+            }
+            Err(e) if interrupted(e.kind()) => {
+                if stop.load(Ordering::Relaxed) {
+                    return Err(ReadError::Stopped);
+                }
+            }
+            Err(e) => return Err(ReadError::Io(e)),
+        }
+    }
+}
+
+fn trim_ascii(mut b: &[u8]) -> &[u8] {
+    while let [f, rest @ ..] = b {
+        if f.is_ascii_whitespace() {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    while let [rest @ .., l] = b {
+        if l.is_ascii_whitespace() {
+            b = rest;
+        } else {
+            break;
+        }
+    }
+    b
+}
+
+/// Read one request from `r`, writing the interim `100 Continue` to `w`
+/// when the client asks for it. Bodies larger than `max_body` are
+/// refused with 413 *without* being read.
+pub fn read_request<R: BufRead, W: Write>(
+    r: &mut R,
+    w: &mut W,
+    stop: &AtomicBool,
+    max_body: usize,
+) -> Result<Request, ReadError> {
+    let mut line = Vec::with_capacity(256);
+    read_line_bytes(r, stop, &mut line)?;
+    let text =
+        std::str::from_utf8(&line).map_err(|_| ReadError::Bad(400, "non-UTF-8 request line"))?;
+    let mut parts = text.split_whitespace();
+    let method = parts.next().unwrap_or("").to_string();
+    let path = parts.next().unwrap_or("").to_string();
+    let version = parts.next().unwrap_or("");
+    if method.is_empty() || path.is_empty() || !version.starts_with("HTTP/1.") {
+        return Err(ReadError::Bad(400, "malformed request line"));
+    }
+
+    // keep-alive is the HTTP/1.1 default; 1.0 must opt in
+    let mut keep_alive = version != "HTTP/1.0";
+    let mut content_length: Option<usize> = None;
+    let mut expect_continue = false;
+    let mut n_headers = 0;
+    loop {
+        if n_headers > MAX_HEADERS {
+            return Err(ReadError::Bad(431, "too many headers"));
+        }
+        n_headers += 1;
+        read_line_bytes(r, stop, &mut line).map_err(|e| match e {
+            // EOF inside the head is a broken request, not a clean close
+            ReadError::Closed => {
+                ReadError::Io(io::Error::new(io::ErrorKind::UnexpectedEof, "eof in headers"))
+            }
+            other => other,
+        })?;
+        let header = trim_ascii(&line);
+        if header.is_empty() {
+            break;
+        }
+        let Some(colon) = header.iter().position(|&b| b == b':') else {
+            return Err(ReadError::Bad(400, "malformed header"));
+        };
+        let name = &header[..colon];
+        let value = trim_ascii(&header[colon + 1..]);
+        if name.eq_ignore_ascii_case(b"content-length") {
+            match std::str::from_utf8(value).ok().and_then(|s| s.parse::<usize>().ok()) {
+                Some(n) => content_length = Some(n),
+                None => return Err(ReadError::Bad(400, "bad Content-Length")),
+            }
+        } else if name.eq_ignore_ascii_case(b"connection") {
+            if value.eq_ignore_ascii_case(b"close") {
+                keep_alive = false;
+            } else if value.eq_ignore_ascii_case(b"keep-alive") {
+                keep_alive = true;
+            }
+        } else if name.eq_ignore_ascii_case(b"expect") {
+            expect_continue = value.eq_ignore_ascii_case(b"100-continue");
+        } else if name.eq_ignore_ascii_case(b"transfer-encoding") {
+            return Err(ReadError::Bad(400, "chunked transfer encoding unsupported"));
+        }
+    }
+
+    let body = match content_length {
+        None | Some(0) => Vec::new(),
+        Some(n) if n > max_body => return Err(ReadError::Bad(413, "body too large")),
+        Some(n) => {
+            if expect_continue {
+                w.write_all(b"HTTP/1.1 100 Continue\r\n\r\n").map_err(ReadError::Io)?;
+                w.flush().map_err(ReadError::Io)?;
+            }
+            // manual read loop (not read_exact): a timeout mid-body must
+            // resume at the current offset, not abandon the request
+            let mut body = vec![0u8; n];
+            let mut got = 0;
+            while got < n {
+                match r.read(&mut body[got..]) {
+                    Ok(0) => {
+                        return Err(ReadError::Io(io::Error::new(
+                            io::ErrorKind::UnexpectedEof,
+                            "eof in body",
+                        )))
+                    }
+                    Ok(k) => got += k,
+                    Err(e) if interrupted(e.kind()) => {
+                        if stop.load(Ordering::Relaxed) {
+                            return Err(ReadError::Stopped);
+                        }
+                    }
+                    Err(e) => return Err(ReadError::Io(e)),
+                }
+            }
+            body
+        }
+    };
+    Ok(Request { method, path, keep_alive, content_length, body })
+}
+
+pub fn reason_phrase(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        411 => "Length Required",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        431 => "Request Header Fields Too Large",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "Unknown",
+    }
+}
+
+/// Write one full response. The head + body are assembled in `scratch`
+/// (reused across requests, so steady-state responses only write into
+/// existing capacity) and flushed in a single syscall-friendly write.
+pub fn write_response<W: Write>(
+    w: &mut W,
+    scratch: &mut String,
+    status: u16,
+    content_type: &str,
+    extra_headers: &[(&str, &str)],
+    body: &str,
+    keep_alive: bool,
+) -> io::Result<()> {
+    use std::fmt::Write as _;
+    scratch.clear();
+    let _ = write!(scratch, "HTTP/1.1 {status} {}\r\n", reason_phrase(status));
+    let _ = write!(scratch, "Content-Type: {content_type}\r\n");
+    let _ = write!(scratch, "Content-Length: {}\r\n", body.len());
+    for (k, v) in extra_headers {
+        let _ = write!(scratch, "{k}: {v}\r\n");
+    }
+    let conn = if keep_alive { "keep-alive" } else { "close" };
+    let _ = write!(scratch, "Connection: {conn}\r\n\r\n");
+    scratch.push_str(body);
+    w.write_all(scratch.as_bytes())?;
+    w.flush()
+}
+
+/// Minimal blocking HTTP/1.1 client over one keep-alive connection —
+/// what the socket tests, `bench_serve`, and the example's curl-style
+/// self-query speak.
+pub struct SimpleClient {
+    stream: TcpStream,
+    reader: io::BufReader<TcpStream>,
+}
+
+/// A response as seen by [`SimpleClient`].
+#[derive(Debug)]
+pub struct ClientResponse {
+    pub status: u16,
+    pub headers: Vec<(String, String)>,
+    pub body: String,
+}
+
+impl ClientResponse {
+    /// Case-insensitive header lookup.
+    pub fn header(&self, name: &str) -> Option<&str> {
+        self.headers
+            .iter()
+            .find(|(k, _)| k.eq_ignore_ascii_case(name))
+            .map(|(_, v)| v.as_str())
+    }
+}
+
+impl SimpleClient {
+    pub fn connect(addr: &str) -> io::Result<SimpleClient> {
+        let stream = TcpStream::connect(addr)?;
+        stream.set_nodelay(true)?;
+        let reader = io::BufReader::new(stream.try_clone()?);
+        Ok(SimpleClient { stream, reader })
+    }
+
+    /// Send one request and block for its response. The connection is
+    /// keep-alive, so sequential `request` calls reuse the socket.
+    pub fn request(&mut self, method: &str, path: &str, body: &str) -> io::Result<ClientResponse> {
+        use std::fmt::Write as _;
+        let mut head = String::with_capacity(128);
+        let _ = write!(head, "{method} {path} HTTP/1.1\r\nHost: rmsmp\r\n");
+        if method == "POST" || !body.is_empty() {
+            let _ = write!(
+                head,
+                "Content-Type: application/json\r\nContent-Length: {}\r\n",
+                body.len()
+            );
+        }
+        head.push_str("\r\n");
+        self.stream.write_all(head.as_bytes())?;
+        self.stream.write_all(body.as_bytes())?;
+        self.stream.flush()?;
+        self.read_response()
+    }
+
+    /// Write raw bytes verbatim (malformed-request tests), then read one
+    /// response.
+    pub fn send_raw(&mut self, raw: &[u8]) -> io::Result<ClientResponse> {
+        self.stream.write_all(raw)?;
+        self.stream.flush()?;
+        self.read_response()
+    }
+
+    fn read_response(&mut self) -> io::Result<ClientResponse> {
+        let mut line = String::new();
+        if self.reader.read_line(&mut line)? == 0 {
+            return Err(io::Error::new(io::ErrorKind::UnexpectedEof, "server closed"));
+        }
+        let status: u16 = line
+            .split_whitespace()
+            .nth(1)
+            .and_then(|s| s.parse().ok())
+            .ok_or_else(|| {
+                io::Error::new(io::ErrorKind::InvalidData, format!("bad status line {line:?}"))
+            })?;
+        let mut headers = Vec::new();
+        let mut content_length = 0usize;
+        loop {
+            line.clear();
+            if self.reader.read_line(&mut line)? == 0 {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    "eof in response headers",
+                ));
+            }
+            let t = line.trim();
+            if t.is_empty() {
+                break;
+            }
+            if let Some((k, v)) = t.split_once(':') {
+                let (k, v) = (k.trim().to_string(), v.trim().to_string());
+                if k.eq_ignore_ascii_case("content-length") {
+                    content_length = v.parse().unwrap_or(0);
+                }
+                headers.push((k, v));
+            }
+        }
+        if status == 100 {
+            // interim response: the real one follows
+            return self.read_response();
+        }
+        let mut body = vec![0u8; content_length];
+        self.reader.read_exact(&mut body)?;
+        Ok(ClientResponse {
+            status,
+            headers,
+            body: String::from_utf8_lossy(&body).into_owned(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Cursor;
+
+    fn parse(raw: &[u8], max_body: usize) -> Result<Request, ReadError> {
+        let stop = AtomicBool::new(false);
+        let mut r = io::BufReader::new(Cursor::new(raw.to_vec()));
+        let mut sink = Vec::new();
+        read_request(&mut r, &mut sink, &stop, max_body)
+    }
+
+    #[test]
+    fn parses_post_with_body() {
+        let raw = b"POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 4\r\n\r\nabcd";
+        let req = parse(raw, 1024).unwrap();
+        assert_eq!(req.method, "POST");
+        assert_eq!(req.path, "/v1/infer");
+        assert!(req.keep_alive, "HTTP/1.1 defaults to keep-alive");
+        assert_eq!(req.content_length, Some(4));
+        assert_eq!(req.body, b"abcd");
+    }
+
+    #[test]
+    fn connection_close_and_http10_default() {
+        let raw = b"GET /metrics HTTP/1.1\r\nConnection: close\r\n\r\n";
+        assert!(!parse(raw, 1024).unwrap().keep_alive);
+        let raw = b"GET /metrics HTTP/1.0\r\n\r\n";
+        assert!(!parse(raw, 1024).unwrap().keep_alive);
+    }
+
+    #[test]
+    fn oversized_body_is_413_without_reading_it() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 999\r\n\r\n";
+        match parse(raw, 16) {
+            Err(ReadError::Bad(413, _)) => {}
+            other => panic!("want 413, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn chunked_and_garbage_are_400() {
+        let raw = b"POST / HTTP/1.1\r\nTransfer-Encoding: chunked\r\n\r\n";
+        match parse(raw, 1024) {
+            Err(ReadError::Bad(400, _)) => {}
+            other => panic!("want 400, got {other:?}"),
+        }
+        match parse(b"this is not http\r\n\r\n", 1024) {
+            Err(ReadError::Bad(400, _)) => {}
+            other => panic!("want 400, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn clean_eof_is_closed() {
+        match parse(b"", 1024) {
+            Err(ReadError::Closed) => {}
+            other => panic!("want Closed, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn expect_continue_gets_interim_response() {
+        let raw = b"POST / HTTP/1.1\r\nContent-Length: 2\r\nExpect: 100-continue\r\n\r\nok";
+        let stop = AtomicBool::new(false);
+        let mut r = io::BufReader::new(Cursor::new(raw.to_vec()));
+        let mut sink = Vec::new();
+        let req = read_request(&mut r, &mut sink, &stop, 1024).unwrap();
+        assert_eq!(req.body, b"ok");
+        assert!(sink.starts_with(b"HTTP/1.1 100 Continue"));
+    }
+
+    #[test]
+    fn response_writer_formats_head() {
+        let mut out = Vec::new();
+        let mut scratch = String::new();
+        write_response(&mut out, &mut scratch, 429, "application/json", &[("Retry-After", "1")], "{}", true)
+            .unwrap();
+        let text = String::from_utf8(out).unwrap();
+        assert!(text.starts_with("HTTP/1.1 429 Too Many Requests\r\n"), "{text}");
+        assert!(text.contains("Retry-After: 1\r\n"), "{text}");
+        assert!(text.contains("Content-Length: 2\r\n"), "{text}");
+        assert!(text.contains("Connection: keep-alive\r\n\r\n{}"), "{text}");
+    }
+}

@@ -1,0 +1,435 @@
+//! Zero-dependency HTTP/1.1 serving front-end over `std::net`.
+//!
+//! The request path is: accept loop → handler thread (keep-alive) →
+//! lazy JSON field scan ([`crate::util::json::lazy_f32_array`] — no
+//! tree is built for the hot fields) → [`Batcher`] admission
+//! (queue-depth backpressure + per-request deadline) → shared compiled
+//! plan → response. Handlers block inside `rx.recv()` while the batcher
+//! coalesces concurrent requests into one GEMM batch, so throughput
+//! under concurrency comes from batching, not from per-request model
+//! state.
+//!
+//! Status mapping is exact so clients can implement retry policy:
+//! queue full → 429 + `Retry-After`, shutting down → 503 +
+//! `Retry-After`, validation failure → 400, unknown model → 404,
+//! deadline shed → 504, oversized body → 413, missing length → 411.
+//! `GET /metrics` renders the counters, latency quantiles, and the
+//! per-stage executor timers in Prometheus text exposition format;
+//! `GET /healthz` answers `ok`.
+//!
+//! Shutdown raises a stop flag, self-connects to unblock the acceptor,
+//! joins every handler (their 100 ms read timeout bounds the wait), and
+//! finally drains the inference workers.
+
+use std::io::{self, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{self, Receiver};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::util::error::Result;
+use crate::util::json;
+
+use super::batcher::{Response, SubmitError};
+use super::conn::{read_request, write_response, ReadError, Request};
+use super::router::Router;
+use super::server::Server;
+
+/// Front-end configuration.
+#[derive(Clone, Debug)]
+pub struct HttpConfig {
+    /// Bind address; port 0 picks an ephemeral port (see
+    /// [`HttpServer::addr`]).
+    pub addr: String,
+    /// Connection-handler threads; 0 = 4x cores with a floor of 8.
+    /// Handlers spend most of their life blocked on batched inference,
+    /// so oversubscribing well past the core count is what lets the
+    /// batcher see concurrent requests at all.
+    pub conn_threads: usize,
+    /// Request bodies above this are refused with 413 without reading.
+    pub max_body_bytes: usize,
+}
+
+impl Default for HttpConfig {
+    fn default() -> HttpConfig {
+        HttpConfig {
+            addr: "127.0.0.1:0".to_string(),
+            conn_threads: 0,
+            max_body_bytes: 8 << 20,
+        }
+    }
+}
+
+/// What the front-end serves: one model or a multi-model router.
+enum Backend {
+    Single(Server),
+    Multi(Router),
+}
+
+impl Backend {
+    fn submit(
+        &self,
+        model: Option<&str>,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> std::result::Result<Receiver<Response>, SubmitError> {
+        match self {
+            Backend::Single(s) => {
+                if let Some(m) = model {
+                    if m != s.model() {
+                        return Err(SubmitError::UnknownModel(m.to_string()));
+                    }
+                }
+                s.submit_with_deadline(image, deadline)
+            }
+            Backend::Multi(r) => r.submit_with_deadline(model, image, deadline),
+        }
+    }
+
+    fn input_len(&self, model: Option<&str>) -> std::result::Result<usize, SubmitError> {
+        match self {
+            Backend::Single(s) => Ok(s.input_len()),
+            Backend::Multi(r) => r.input_len(model),
+        }
+    }
+
+    fn prometheus(&self) -> String {
+        match self {
+            Backend::Single(s) => {
+                let mut out = String::new();
+                s.metrics.prometheus_into(s.model(), &mut out);
+                out
+            }
+            Backend::Multi(r) => r.prometheus(),
+        }
+    }
+
+    fn summary(&self) -> String {
+        match self {
+            Backend::Single(s) => s.metrics.summary(),
+            Backend::Multi(r) => r.summary(),
+        }
+    }
+
+    fn shutdown(self) {
+        match self {
+            Backend::Single(s) => s.shutdown(),
+            Backend::Multi(r) => r.shutdown(),
+        }
+    }
+}
+
+/// A running HTTP front-end.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    acceptor: Option<JoinHandle<()>>,
+    handlers: Vec<JoinHandle<()>>,
+    backend: Option<Arc<Backend>>,
+}
+
+impl HttpServer {
+    /// Serve one model.
+    pub fn start(server: Server, cfg: HttpConfig) -> Result<HttpServer> {
+        HttpServer::start_backend(Backend::Single(server), cfg)
+    }
+
+    /// Serve a multi-model [`Router`]; requests route on their `model`
+    /// field, absent field = default variant.
+    pub fn start_router(router: Router, cfg: HttpConfig) -> Result<HttpServer> {
+        HttpServer::start_backend(Backend::Multi(router), cfg)
+    }
+
+    fn start_backend(backend: Backend, cfg: HttpConfig) -> Result<HttpServer> {
+        let listener = TcpListener::bind(&cfg.addr)?;
+        let addr = listener.local_addr()?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let backend = Arc::new(backend);
+
+        let n = if cfg.conn_threads > 0 {
+            cfg.conn_threads
+        } else {
+            let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+            (4 * cores).max(8)
+        };
+
+        // acceptor pushes connections into one queue; each handler pops
+        // exactly one, drops the lock, then serves it to completion
+        let (tx, rx) = mpsc::channel::<TcpStream>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handlers = Vec::with_capacity(n);
+        for i in 0..n {
+            let rx = Arc::clone(&rx);
+            let b = Arc::clone(&backend);
+            let stop = Arc::clone(&stop);
+            let max_body = cfg.max_body_bytes;
+            handlers.push(
+                std::thread::Builder::new()
+                    .name(format!("rmsmp-http-{i}"))
+                    .spawn(move || loop {
+                        let stream = rx.lock().unwrap().recv();
+                        match stream {
+                            Ok(s) => handle_connection(s, &b, &stop, max_body),
+                            Err(_) => return, // acceptor dropped the sender
+                        }
+                    })
+                    .expect("spawn http handler"),
+            );
+        }
+
+        let stop_a = Arc::clone(&stop);
+        let acceptor = std::thread::Builder::new()
+            .name("rmsmp-http-accept".to_string())
+            .spawn(move || {
+                for s in listener.incoming() {
+                    if stop_a.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    if let Ok(s) = s {
+                        if tx.send(s).is_err() {
+                            break;
+                        }
+                    }
+                }
+                // tx drops here, ending every idle handler's recv()
+            })
+            .expect("spawn http acceptor");
+
+        Ok(HttpServer { addr, stop, acceptor: Some(acceptor), handlers, backend: Some(backend) })
+    }
+
+    /// The bound address (resolves port 0 to the real ephemeral port).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Human-readable metrics line(s), one per model.
+    pub fn summary(&self) -> String {
+        self.backend.as_ref().map(|b| b.summary()).unwrap_or_default()
+    }
+
+    /// Graceful shutdown: stop accepting, join handlers, drain workers.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // unblock the acceptor's blocking accept with a self-connection
+        let _ = TcpStream::connect(self.addr);
+        if let Some(a) = self.acceptor.take() {
+            let _ = a.join();
+        }
+        for h in self.handlers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(b) = self.backend.take() {
+            if let Ok(b) = Arc::try_unwrap(b) {
+                b.shutdown();
+            }
+        }
+    }
+}
+
+/// HTTP status + optional `Retry-After` seconds for a submit failure.
+/// Queue-full is the retryable case; shutdown tells clients to back off
+/// longer; validation and routing failures are the client's fault.
+fn status_for(e: &SubmitError) -> (u16, Option<u32>) {
+    match e {
+        SubmitError::Full => (429, Some(1)),
+        SubmitError::Closed => (503, Some(5)),
+        SubmitError::Invalid(_) => (400, None),
+        SubmitError::UnknownModel(_) => (404, None),
+    }
+}
+
+fn json_quote(s: &str) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::with_capacity(s.len() + 2);
+    out.push('"');
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => {
+                let _ = write!(out, "\\u{:04x}", c as u32);
+            }
+            c => out.push(c),
+        }
+    }
+    out.push('"');
+    out
+}
+
+fn respond_error<W: Write>(
+    w: &mut W,
+    scratch: &mut String,
+    status: u16,
+    msg: &str,
+    keep: bool,
+    retry_after: Option<u32>,
+) -> io::Result<()> {
+    let body = format!("{{\"error\":{}}}\n", json_quote(msg));
+    let retry = retry_after.map(|secs| secs.to_string());
+    let mut extra: Vec<(&str, &str)> = Vec::new();
+    if let Some(r) = retry.as_deref() {
+        extra.push(("Retry-After", r));
+    }
+    write_response(w, scratch, status, "application/json", &extra, &body, keep)
+}
+
+fn write_infer_response<W: Write>(
+    w: &mut W,
+    scratch: &mut String,
+    resp: &Response,
+    keep: bool,
+) -> io::Result<()> {
+    use std::fmt::Write as _;
+    let mut body = String::with_capacity(resp.logits.len() * 12 + 64);
+    body.push_str("{\"logits\":[");
+    for (i, v) in resp.logits.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        // f32 Display is the shortest roundtrip representation: a client
+        // parsing as f64 and narrowing back to f32 recovers the exact bits
+        let _ = write!(body, "{v}");
+    }
+    let _ = write!(
+        body,
+        "],\"batch_size\":{},\"queue_ms\":{:.3},\"total_ms\":{:.3}}}\n",
+        resp.batch_size, resp.queue_ms, resp.total_ms
+    );
+    write_response(w, scratch, 200, "application/json", &[], &body, keep)
+}
+
+fn infer_route<W: Write>(
+    req: &Request,
+    keep: bool,
+    backend: &Backend,
+    w: &mut W,
+    scratch: &mut String,
+    input: &mut Vec<f32>,
+) -> io::Result<()> {
+    if req.content_length.is_none() {
+        return respond_error(w, scratch, 411, "Content-Length required", keep, None);
+    }
+    let model = match json::lazy_str(&req.body, "model") {
+        Ok(m) => m,
+        Err(e) => return respond_error(w, scratch, 400, &format!("bad JSON: {e}"), keep, None),
+    };
+    let deadline = match json::lazy_f64(&req.body, "deadline_ms") {
+        // non-finite deadlines (overflowing exponents parse to inf) are
+        // treated as already expired rather than panicking from_secs_f64
+        Ok(d) => d.map(|ms| {
+            let secs = ms / 1e3;
+            Duration::from_secs_f64(if secs.is_finite() { secs.max(0.0) } else { 0.0 })
+        }),
+        Err(e) => return respond_error(w, scratch, 400, &format!("bad JSON: {e}"), keep, None),
+    };
+    // size the input buffer up front so the element parse appends into
+    // reserved capacity instead of growing mid-scan
+    if let Ok(n) = backend.input_len(model.as_deref()) {
+        input.clear();
+        input.reserve(n);
+    }
+    match json::lazy_f32_array(&req.body, "input", input) {
+        Ok(true) => {}
+        Ok(false) => {
+            return respond_error(w, scratch, 400, "missing \"input\" array", keep, None)
+        }
+        Err(e) => return respond_error(w, scratch, 400, &format!("bad JSON: {e}"), keep, None),
+    }
+    let rx = match backend.submit(model.as_deref(), std::mem::take(input), deadline) {
+        Ok(rx) => rx,
+        Err(e) => {
+            let (status, retry) = status_for(&e);
+            return respond_error(w, scratch, status, &e.to_string(), keep, retry);
+        }
+    };
+    match rx.recv() {
+        Ok(resp) if resp.shed => respond_error(
+            w,
+            scratch,
+            504,
+            "deadline expired before dispatch; request shed",
+            keep,
+            None,
+        ),
+        Ok(resp) => write_infer_response(w, scratch, &resp, keep),
+        Err(_) => respond_error(w, scratch, 500, "inference batch failed", keep, None),
+    }
+}
+
+fn serve_one<W: Write>(
+    req: &Request,
+    keep: bool,
+    backend: &Backend,
+    w: &mut W,
+    scratch: &mut String,
+    input: &mut Vec<f32>,
+) -> io::Result<()> {
+    match (req.method.as_str(), req.path.as_str()) {
+        ("POST", "/v1/infer") | ("POST", "/infer") => {
+            infer_route(req, keep, backend, w, scratch, input)
+        }
+        ("GET", "/metrics") => {
+            let body = backend.prometheus();
+            write_response(w, scratch, 200, "text/plain; version=0.0.4", &[], &body, keep)
+        }
+        ("GET", "/healthz") => write_response(w, scratch, 200, "text/plain", &[], "ok\n", keep),
+        (_, "/v1/infer") | (_, "/infer") | (_, "/metrics") | (_, "/healthz") => {
+            respond_error(w, scratch, 405, "method not allowed", keep, None)
+        }
+        _ => respond_error(w, scratch, 404, "unknown route", keep, None),
+    }
+}
+
+fn handle_connection(stream: TcpStream, backend: &Backend, stop: &AtomicBool, max_body: usize) {
+    let _ = stream.set_nodelay(true);
+    // short read timeout: idle keep-alive connections poll the stop flag
+    // (read_request reassembles requests split across timeouts)
+    let _ = stream.set_read_timeout(Some(Duration::from_millis(100)));
+    let mut reader = BufReader::new(&stream);
+    let mut writer = &stream;
+    let mut scratch = String::new();
+    let mut input: Vec<f32> = Vec::new();
+    loop {
+        let req = match read_request(&mut reader, &mut writer, stop, max_body) {
+            Ok(req) => req,
+            Err(ReadError::Closed) | Err(ReadError::Stopped) | Err(ReadError::Io(_)) => return,
+            Err(ReadError::Bad(status, msg)) => {
+                let _ = respond_error(&mut writer, &mut scratch, status, msg, false, None);
+                return;
+            }
+        };
+        let keep = req.keep_alive && !stop.load(Ordering::Relaxed);
+        if serve_one(&req, keep, backend, &mut writer, &mut scratch, &mut input).is_err() {
+            return;
+        }
+        if !keep {
+            return;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn status_mapping_is_granular() {
+        assert_eq!(status_for(&SubmitError::Full), (429, Some(1)));
+        assert_eq!(status_for(&SubmitError::Closed), (503, Some(5)));
+        assert_eq!(status_for(&SubmitError::Invalid("len".to_string())), (400, None));
+        assert_eq!(status_for(&SubmitError::UnknownModel("x".to_string())), (404, None));
+    }
+
+    #[test]
+    fn json_quote_escapes() {
+        assert_eq!(json_quote("plain"), "\"plain\"");
+        assert_eq!(json_quote("a\"b\\c\nd"), "\"a\\\"b\\\\c\\nd\"");
+        assert_eq!(json_quote("\u{1}"), "\"\\u0001\"");
+    }
+}

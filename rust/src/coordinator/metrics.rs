@@ -17,6 +17,8 @@ pub struct Metrics {
     pub requests: AtomicU64,
     pub responses: AtomicU64,
     pub rejected: AtomicU64,
+    /// Requests shed in-queue because their deadline expired.
+    pub shed: AtomicU64,
     pub batches: AtomicU64,
     latency_ms: Mutex<Reservoir>,
     queue_ms: Mutex<Reservoir>,
@@ -40,6 +42,7 @@ impl Metrics {
             requests: AtomicU64::new(0),
             responses: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
+            shed: AtomicU64::new(0),
             batches: AtomicU64::new(0),
             latency_ms: Mutex::new(Reservoir::new(4096)),
             queue_ms: Mutex::new(Reservoir::new(4096)),
@@ -54,6 +57,11 @@ impl Metrics {
     pub fn record_batch(&self, size: usize) {
         self.batches.fetch_add(1, Ordering::Relaxed);
         self.batch_size.lock().unwrap().push(size as f64);
+    }
+
+    /// Count one deadline-expired request shed before the GEMM.
+    pub fn record_shed(&self) {
+        self.shed.fetch_add(1, Ordering::Relaxed);
     }
 
     /// Fold one executor's drained per-stage timings into the totals
@@ -98,12 +106,13 @@ impl Metrics {
         let st = self.stage_totals();
         let ms = |ns: u64| ns as f64 / 1e6;
         format!(
-            "requests={} responses={} rejected={} batches={} mean_batch={:.2} \
+            "requests={} responses={} rejected={} shed={} batches={} mean_batch={:.2} \
              p50={:.2}ms p95={:.2}ms p99={:.2}ms queue_p95={:.2}ms \
              stages[quantize={:.2}ms im2col={:.2}ms gemm={:.2}ms epilogue={:.2}ms]",
             self.requests.load(Ordering::Relaxed),
             self.responses.load(Ordering::Relaxed),
             self.rejected.load(Ordering::Relaxed),
+            self.shed.load(Ordering::Relaxed),
             self.batches.load(Ordering::Relaxed),
             self.mean_batch_size(),
             self.latency_percentile(50.0),
@@ -115,6 +124,74 @@ impl Metrics {
             ms(st.gemm_ns),
             ms(st.epilogue_ns),
         )
+    }
+
+    /// Render this model's metrics in Prometheus text exposition format,
+    /// appended to `out` with a `model` label on every sample — counters,
+    /// latency/queue quantiles, mean batch size, and the per-stage
+    /// executor time breakdown (quantize / im2col / gemm / epilogue).
+    pub fn prometheus_into(&self, model: &str, out: &mut String) {
+        use std::fmt::Write as _;
+
+        let counters: [(&str, &str, u64); 5] = [
+            ("rmsmp_requests_total", "Requests submitted", self.requests.load(Ordering::Relaxed)),
+            ("rmsmp_responses_total", "Responses completed", self.responses.load(Ordering::Relaxed)),
+            (
+                "rmsmp_rejected_total",
+                "Requests rejected by admission control or backpressure",
+                self.rejected.load(Ordering::Relaxed),
+            ),
+            (
+                "rmsmp_shed_total",
+                "Requests shed in-queue on deadline expiry",
+                self.shed.load(Ordering::Relaxed),
+            ),
+            ("rmsmp_batches_total", "Batches dispatched", self.batches.load(Ordering::Relaxed)),
+        ];
+        for (name, help, v) in counters {
+            let _ = writeln!(out, "# HELP {name} {help}");
+            let _ = writeln!(out, "# TYPE {name} counter");
+            let _ = writeln!(out, "{name}{{model=\"{model}\"}} {v}");
+        }
+
+        let _ = writeln!(out, "# HELP rmsmp_batch_size_mean Mean dispatched batch size");
+        let _ = writeln!(out, "# TYPE rmsmp_batch_size_mean gauge");
+        let _ = writeln!(out, "rmsmp_batch_size_mean{{model=\"{model}\"}} {}", self.mean_batch_size());
+
+        for (name, help, res) in [
+            ("rmsmp_latency_ms", "End-to-end request latency", &self.latency_ms),
+            ("rmsmp_queue_ms", "Time spent queued before dispatch", &self.queue_ms),
+        ] {
+            let _ = writeln!(out, "# HELP {name} {help} (milliseconds)");
+            let _ = writeln!(out, "# TYPE {name} summary");
+            let r = res.lock().unwrap();
+            for (q, p) in [("0.5", 50.0), ("0.95", 95.0), ("0.99", 99.0)] {
+                let _ = writeln!(
+                    out,
+                    "{name}{{model=\"{model}\",quantile=\"{q}\"}} {}",
+                    r.percentile(p)
+                );
+            }
+        }
+
+        let st = self.stage_totals();
+        let _ = writeln!(
+            out,
+            "# HELP rmsmp_stage_seconds_total Cumulative executor time per inference stage"
+        );
+        let _ = writeln!(out, "# TYPE rmsmp_stage_seconds_total counter");
+        for (stage, ns) in [
+            ("quantize", st.quantize_ns),
+            ("im2col", st.im2col_ns),
+            ("gemm", st.gemm_ns),
+            ("epilogue", st.epilogue_ns),
+        ] {
+            let _ = writeln!(
+                out,
+                "rmsmp_stage_seconds_total{{model=\"{model}\",stage=\"{stage}\"}} {}",
+                ns as f64 / 1e9
+            );
+        }
     }
 }
 
@@ -136,6 +213,34 @@ mod tests {
         assert!((m.latency_percentile(50.0) - 20.0).abs() < 1e-9);
         let s = m.summary();
         assert!(s.contains("responses=3"), "{s}");
+    }
+
+    #[test]
+    fn prometheus_text_exposition() {
+        let m = Metrics::new();
+        m.requests.fetch_add(2, Ordering::Relaxed);
+        m.record_shed();
+        m.record_batch(4);
+        m.record_response(12.0, 3.0);
+        m.record_stages(&StageTimes {
+            quantize_ns: 1_000_000,
+            im2col_ns: 0,
+            gemm_ns: 500_000_000,
+            epilogue_ns: 0,
+        });
+        let mut out = String::new();
+        m.prometheus_into("resnet18", &mut out);
+        assert!(out.contains("rmsmp_requests_total{model=\"resnet18\"} 2"), "{out}");
+        assert!(out.contains("rmsmp_shed_total{model=\"resnet18\"} 1"), "{out}");
+        assert!(
+            out.contains("rmsmp_latency_ms{model=\"resnet18\",quantile=\"0.5\"} 12"),
+            "{out}"
+        );
+        assert!(
+            out.contains("rmsmp_stage_seconds_total{model=\"resnet18\",stage=\"gemm\"} 0.5"),
+            "{out}"
+        );
+        assert!(out.contains("# TYPE rmsmp_requests_total counter"), "{out}");
     }
 
     #[test]

@@ -1,20 +1,29 @@
-//! Serving coordinator: router → dynamic batcher → worker pool → metrics.
+//! Serving coordinator: HTTP front-end → router → dynamic batcher →
+//! worker pool → metrics.
 //!
-//! The L3 request path (Python never appears here): clients submit single
-//! images; the [`batcher`] coalesces them under a max-batch / max-wait
-//! policy (the standard dynamic-batching tradeoff); [`server`] workers run
-//! the integer [`crate::model::Executor`] layer by layer and complete the
-//! per-request responses; [`metrics`] tracks queue depth, batch sizes, and
-//! latency percentiles. [`workload`] generates Poisson open-loop traffic
-//! for the serving benchmarks.
+//! The L3 request path (Python never appears here): [`http`] accepts
+//! real sockets and lazy-parses request JSON; the [`batcher`] coalesces
+//! concurrent requests under a max-batch / max-wait policy (the
+//! standard dynamic-batching tradeoff) and sheds deadline-expired ones
+//! before the GEMM; [`server`] workers run the integer
+//! [`crate::model::Executor`] layer by layer and complete the
+//! per-request responses; [`metrics`] tracks queue depth, batch sizes,
+//! latency percentiles, and the per-stage timers (also rendered in
+//! Prometheus text format for `GET /metrics`). [`conn`] holds the
+//! HTTP/1.1 wire plumbing plus a tiny test/bench client; [`workload`]
+//! generates Poisson open-loop traffic for the serving benchmarks.
 
 pub mod batcher;
+pub mod conn;
+pub mod http;
 pub mod metrics;
 pub mod router;
 pub mod server;
 pub mod workload;
 
-pub use batcher::{Batch, BatchPolicy, Batcher};
+pub use batcher::{Batch, BatchPolicy, Batcher, SubmitError};
+pub use conn::SimpleClient;
+pub use http::{HttpConfig, HttpServer};
 pub use metrics::Metrics;
 pub use router::Router;
 pub use server::{Server, ServerConfig};

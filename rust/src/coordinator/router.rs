@@ -43,23 +43,46 @@ impl Router {
         Ok(Router { variants, default })
     }
 
-    /// Route a request; `model = None` selects the default variant.
-    pub fn submit(&self, model: Option<&str>, image: Vec<f32>) -> Result<mpsc::Receiver<Response>> {
+    fn variant_for(&self, model: Option<&str>) -> Result<&Variant, SubmitError> {
         let name = model.unwrap_or(&self.default);
-        let v = self.variants.get(name).ok_or_else(|| {
-            err!(
-                "unknown model {name:?} (have: {:?})",
-                self.variants.keys().collect::<Vec<_>>()
-            )
-        })?;
-        v.server
-            .submit(image)
-            .map_err(|e: SubmitError| err!("{name}: submit failed: {e:?}"))
+        self.variants
+            .get(name)
+            .ok_or_else(|| SubmitError::UnknownModel(name.to_string()))
+    }
+
+    /// Route a request; `model = None` selects the default variant. The
+    /// typed error keeps the HTTP front-end's status mapping exact:
+    /// unknown model → 404, queue full → 429, shutdown → 503.
+    pub fn submit(
+        &self,
+        model: Option<&str>,
+        image: Vec<f32>,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.submit_with_deadline(model, image, None)
+    }
+
+    /// Route with an optional deadline (see
+    /// [`Server::submit_with_deadline`]).
+    pub fn submit_with_deadline(
+        &self,
+        model: Option<&str>,
+        image: Vec<f32>,
+        deadline: Option<std::time::Duration>,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        self.variant_for(model)?.server.submit_with_deadline(image, deadline)
+    }
+
+    /// Expected flat input length for a variant (`None` = default).
+    pub fn input_len(&self, model: Option<&str>) -> Result<usize, SubmitError> {
+        Ok(self.variant_for(model)?.server.input_len())
     }
 
     /// Blocking convenience.
     pub fn infer(&self, model: Option<&str>, image: Vec<f32>) -> Result<Response> {
-        Ok(self.submit(model, image)?.recv()?)
+        let rx = self
+            .submit(model, image)
+            .map_err(|e| err!("submit failed: {e}"))?;
+        Ok(rx.recv()?)
     }
 
     pub fn variant(&self, name: &str) -> Option<&Variant> {
@@ -77,6 +100,16 @@ impl Router {
             .map(|(n, v)| format!("[{n}] {}", v.server.metrics.summary()))
             .collect::<Vec<_>>()
             .join("\n")
+    }
+
+    /// Prometheus text exposition across all variants, one `model` label
+    /// per variant (what `GET /metrics` serves).
+    pub fn prometheus(&self) -> String {
+        let mut out = String::new();
+        for (n, v) in &self.variants {
+            v.server.metrics.prometheus_into(n, &mut out);
+        }
+        out
     }
 
     pub fn shutdown(self) {

@@ -19,7 +19,7 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use crate::ensure;
 use crate::err;
@@ -61,6 +61,7 @@ pub struct Server {
     next_id: AtomicU64,
     input_chw: (usize, usize, usize),
     num_classes: usize,
+    model: String,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -98,6 +99,7 @@ impl Server {
         ensure!(shape.len() == 4, "manifest input_shape must be NCHW");
         let input_chw = (shape[1], shape[2], shape[3]);
         let num_classes = manifest.num_classes;
+        let model = manifest.model.clone();
         admit(&weights)?;
 
         // compile once; size workspaces for the largest batch the
@@ -140,6 +142,7 @@ impl Server {
             next_id: AtomicU64::new(0),
             input_chw,
             num_classes,
+            model,
             workers,
         })
     }
@@ -153,10 +156,33 @@ impl Server {
         self.num_classes
     }
 
+    /// The manifest's model name (what the HTTP front-end routes on).
+    pub fn model(&self) -> &str {
+        &self.model
+    }
+
     /// Submit one image (flat CHW floats); returns a receiver for the
-    /// response. `Err` = backpressure or shutdown.
+    /// response. `Err` = validation failure, backpressure, or shutdown.
     pub fn submit(&self, image: Vec<f32>) -> Result<mpsc::Receiver<Response>, SubmitError> {
-        assert_eq!(image.len(), self.input_len(), "image length");
+        self.submit_with_deadline(image, None)
+    }
+
+    /// Submit with an optional completion deadline: if the request is
+    /// still queued when the deadline passes, the batcher sheds it
+    /// before the GEMM and the receiver gets a [`Response`] with
+    /// `shed = true` instead of logits.
+    pub fn submit_with_deadline(
+        &self,
+        image: Vec<f32>,
+        deadline: Option<Duration>,
+    ) -> Result<mpsc::Receiver<Response>, SubmitError> {
+        if image.len() != self.input_len() {
+            return Err(SubmitError::Invalid(format!(
+                "input length {} != expected {}",
+                image.len(),
+                self.input_len()
+            )));
+        }
         let (tx, rx) = mpsc::channel();
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
         self.metrics.requests.fetch_add(1, Ordering::Relaxed);
@@ -164,6 +190,7 @@ impl Server {
             id,
             payload: image,
             enqueued: Instant::now(),
+            deadline: deadline.map(|d| Instant::now() + d),
             respond: tx,
         });
         if res.is_err() {
@@ -193,6 +220,26 @@ impl Server {
     }
 }
 
+/// Pack a batch of flat CHW images into one reused NCHW tensor. The
+/// tensor grows to the batch high-water once; at steady state `resize`
+/// stays within capacity and the copy overwrites in place, so the
+/// worker's pack step allocates nothing (pinned by `test_alloc.rs`
+/// alongside the executor's zero-allocation window).
+pub fn pack_batch<'a, I>(x: &mut Tensor4, (c, h, w): (usize, usize, usize), n: usize, images: I)
+where
+    I: Iterator<Item = &'a [f32]>,
+{
+    x.n = n;
+    x.c = c;
+    x.h = h;
+    x.w = w;
+    x.data.resize(n * c * h * w, 0.0);
+    for (i, img) in images.enumerate() {
+        let off = i * c * h * w;
+        x.data[off..off + c * h * w].copy_from_slice(img);
+    }
+}
+
 fn worker_loop(
     batcher: &Batcher<Vec<f32>>,
     metrics: &Metrics,
@@ -204,19 +251,29 @@ fn worker_loop(
     // high-water once, then the request path stays allocation-free
     // through the executor's workspace)
     let mut x = Tensor4::zeros(0, c, h, w);
-    while let Some(Batch { requests }) = batcher.next_batch() {
+    while let Some(Batch { requests, expired }) = batcher.next_batch() {
+        // deadline-shed requests: answer without running the GEMM
+        for r in expired {
+            metrics.record_shed();
+            let queue_ms = r.enqueued.elapsed().as_secs_f64() * 1e3;
+            let _ = r.respond.send(Response {
+                id: r.id,
+                logits: Vec::new(),
+                queue_ms,
+                total_ms: queue_ms,
+                batch_size: 0,
+                shed: true,
+            });
+        }
+        if requests.is_empty() {
+            continue;
+        }
         let n = requests.len();
         metrics.record_batch(n);
         // batch-level vs row-level parallelism (see row_parallel_for_batch)
         exec.set_row_parallel(row_parallel_for_batch(n, workers, threads));
         let t0 = Instant::now();
-        // pack into one NCHW tensor
-        x.n = n;
-        x.data.resize(n * c * h * w, 0.0);
-        for (i, r) in requests.iter().enumerate() {
-            let off = i * c * h * w;
-            x.data[off..off + c * h * w].copy_from_slice(&r.payload);
-        }
+        pack_batch(&mut x, (c, h, w), n, requests.iter().map(|r| r.payload.as_slice()));
         match exec.infer(&x) {
             Ok(logits) => {
                 let infer_ms = t0.elapsed().as_secs_f64() * 1e3;
@@ -230,6 +287,7 @@ fn worker_loop(
                         queue_ms,
                         total_ms,
                         batch_size: n,
+                        shed: false,
                     });
                 }
             }

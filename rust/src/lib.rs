@@ -30,8 +30,9 @@
 //! * [`runtime`] — the native execution runtime: resolves the
 //!   [`gemm::ParallelConfig`] and owns the shared thread pool that every
 //!   executor fans GEMM work onto.
-//! * [`coordinator`] — the serving layer: request router, dynamic batcher,
-//!   worker pool, metrics.
+//! * [`coordinator`] — the serving layer: zero-dependency HTTP/1.1
+//!   front-end, request router, dynamic batcher, worker pool, metrics
+//!   (Prometheus text format on `GET /metrics`).
 //! * [`util`] — substrates built in-repo because the build is offline:
 //!   deterministic PRNG, CLI parsing, JSON, stats, a thread pool, error
 //!   plumbing, and the bench/property-test harnesses.
@@ -176,6 +177,34 @@
 //!   sequential only when its sibling workers already saturate the pool
 //!   and its batch is wide; otherwise the threads go inside the GEMM
 //!   (row-level); see `coordinator::batcher::row_parallel_for_batch`.
+//!
+//! ## Serving: the HTTP request path
+//!
+//! [`coordinator::HttpServer`] puts the compiled plan behind a real
+//! socket with no external dependencies — `std::net` only. One request
+//! travels: **socket** (accept loop hands the connection to one of a
+//! pool of keep-alive handler threads) → **lazy parse**
+//! ([`util::json::lazy_f32_array`] scans the body bytes for exactly
+//! `model` / `input` / `deadline_ms` and parses the input floats
+//! straight into a buffer — no JSON tree is ever built on the hot
+//! path) → **batcher** (admission control: queue-depth backpressure
+//! maps [`coordinator::SubmitError`] to HTTP 429 with `Retry-After`,
+//! shutdown to 503, validation to 400, unknown model to 404; the
+//! batcher coalesces concurrent requests under the max-batch/max-wait
+//! policy and sheds deadline-expired requests *before* the GEMM,
+//! answering 504) → **plan** (the worker packs the batch into one
+//! reused tensor — `coordinator::server::pack_batch`, held to the same
+//! zero-allocation contract as the executor — and runs the compiled
+//! plan) → **response** (logits rendered with f32 `Display`, the
+//! shortest round-trip representation, so a client parsing the JSON
+//! recovers bit-identical values). Handlers block on the response
+//! channel while the batcher fills, so throughput under concurrency
+//! comes from continuous batching — `bench_serve` records the
+//! p50/p99/throughput curve over real loopback sockets, and
+//! `tests/test_server.rs` drives every rejection path through a real
+//! connection. `GET /metrics` renders the counters, latency quantiles,
+//! and the per-stage executor timers in Prometheus text format;
+//! `rmsmp serve --http ADDR` serves from the CLI.
 //!
 //! ## Kernel architecture
 //!

@@ -5,7 +5,8 @@
 //!   plan       print the compiled execution plan (slots, ops, footprint)
 //!   infer      run integer inference on synthetic images, report logits
 //!   parity     integer executor vs recorded JAX logits
-//!   serve      dynamic-batching serving loop over a Poisson workload
+//!   serve      dynamic-batching serving loop: synthetic Poisson workload,
+//!              or a real HTTP/1.1 front-end with `--http ADDR`
 //!   simulate   FPGA resource/cycle simulation for a quantization config
 //!   assign     re-assign schemes under a new ratio and report the split
 //!
@@ -20,7 +21,7 @@ use std::path::{Path, PathBuf};
 
 use rmsmp::bail;
 use rmsmp::coordinator::batcher::BatchPolicy;
-use rmsmp::coordinator::{OpenLoopGen, Server, ServerConfig};
+use rmsmp::coordinator::{HttpConfig, HttpServer, OpenLoopGen, Server, ServerConfig};
 use rmsmp::fpga::{simulate, Board, CoreCosts, Design, QuantConfig};
 use rmsmp::model::{Manifest, ModelWeights};
 use rmsmp::quant::tensor::Tensor4;
@@ -97,6 +98,19 @@ fn flag_specs() -> Vec<FlagSpec> {
             name: "max-wait-ms",
             help: "serve: batch deadline",
             default: Some("2"),
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "http",
+            help: "serve: HTTP/1.1 bind address (e.g. 127.0.0.1:8080); \
+                   omit for the synthetic open-loop run",
+            default: None,
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "http-threads",
+            help: "serve: connection-handler threads (0 = 4x cores)",
+            default: Some("0"),
             takes_value: true,
         },
         FlagSpec {
@@ -278,6 +292,28 @@ fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
     };
     let image_len = m.input_shape[1] * m.input_shape[2] * m.input_shape[3];
     let server = Server::start(m, w, cfg)?;
+
+    // --http ADDR: real-socket front-end instead of the synthetic
+    // open-loop trace; runs until the process is killed
+    let http_addr = args.get_or("http", "");
+    if !http_addr.is_empty() {
+        let http = HttpServer::start(
+            server,
+            HttpConfig {
+                addr: http_addr,
+                conn_threads: args.get_usize("http-threads", 0)?,
+                ..HttpConfig::default()
+            },
+        )?;
+        println!("serving HTTP on http://{}", http.addr());
+        println!("  POST /v1/infer {{\"input\": [...], \"deadline_ms\": 50}}");
+        println!("  GET  /metrics | /healthz");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(30));
+            println!("{}", http.summary());
+        }
+    }
+
     let mut gen = OpenLoopGen::new(args.get_usize("seed", 0)? as u64, rate, image_len);
     let trace = gen.trace(n);
 

@@ -4,6 +4,23 @@
 //! manifest (`artifacts/manifest.json`), the shared test vectors, and the
 //! experiment result files. Numbers parse to f64; helpers extract typed
 //! fields with contextual errors.
+//!
+//! Two parsing fronts share the grammar:
+//!
+//! * [`Json::parse`] builds a full tree — right for config files read
+//!   once at load time.
+//! * The `lazy_*` scanners extract individual top-level fields straight
+//!   from the byte stream without building a tree — right for the HTTP
+//!   request hot path, where a body is dominated by one large `input`
+//!   array and allocating a `Json::Num` per element (plus a `BTreeMap`
+//!   node per key) costs far more than the scan itself.
+//!   [`lazy_f32_array`] parses the array directly into a caller-owned
+//!   `Vec<f32>`; [`lazy_str`] / [`lazy_f64`] skip unrelated values
+//!   (strings, nested containers) byte-wise with no allocation.
+//!   Lazy scanning validates only what it walks over: bytes after the
+//!   last extracted field are never touched, so a body malformed *past*
+//!   every requested key can still be accepted — the tradeoff that
+//!   makes partial extraction cheap.
 
 use std::collections::BTreeMap;
 use std::fmt::Write as _;
@@ -357,6 +374,209 @@ pub fn arr_f32(v: &[f32]) -> Json {
     Json::Arr(v.iter().map(|&x| Json::Num(x as f64)).collect())
 }
 
+// ---- lazy field scanning (no tree) -------------------------------------
+
+/// Byte-wise value skipper for the lazy scanners: moves over one JSON
+/// value (string, number, literal, or arbitrarily nested container)
+/// without decoding it.
+struct Scan<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Scan<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && matches!(self.b[self.i], b' ' | b'\t' | b'\n' | b'\r') {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b
+            .get(self.i)
+            .copied()
+            .ok_or_else(|| err!("unexpected end of input at byte {}", self.i))
+    }
+
+    /// Raw bytes between the quotes of a string (escapes left encoded).
+    fn raw_string(&mut self) -> Result<&'a [u8]> {
+        if self.peek()? != b'"' {
+            bail!("expected string at byte {}", self.i);
+        }
+        self.i += 1;
+        let start = self.i;
+        while self.i < self.b.len() {
+            match self.b[self.i] {
+                b'\\' => self.i += 2,
+                b'"' => {
+                    let raw = &self.b[start..self.i];
+                    self.i += 1;
+                    return Ok(raw);
+                }
+                _ => self.i += 1,
+            }
+        }
+        bail!("unterminated string at byte {start}")
+    }
+
+    fn skip_value(&mut self) -> Result<()> {
+        match self.peek()? {
+            b'"' => {
+                self.raw_string()?;
+            }
+            b'{' | b'[' => self.skip_container()?,
+            b'0'..=b'9' | b'-' | b'+' | b'.' => {
+                while self.i < self.b.len()
+                    && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+                {
+                    self.i += 1;
+                }
+            }
+            b't' | b'f' | b'n' => {
+                while self.i < self.b.len() && self.b[self.i].is_ascii_alphabetic() {
+                    self.i += 1;
+                }
+            }
+            c => bail!("unexpected byte {:?} at {}", c as char, self.i),
+        }
+        Ok(())
+    }
+
+    /// Skip a container by depth counting; strings inside are skipped
+    /// whole so braces in string data cannot unbalance the count.
+    fn skip_container(&mut self) -> Result<()> {
+        let mut depth = 0usize;
+        loop {
+            match self.peek()? {
+                b'"' => {
+                    self.raw_string()?;
+                }
+                b'{' | b'[' => {
+                    depth += 1;
+                    self.i += 1;
+                }
+                b'}' | b']' => {
+                    depth -= 1;
+                    self.i += 1;
+                    if depth == 0 {
+                        return Ok(());
+                    }
+                }
+                _ => self.i += 1,
+            }
+        }
+    }
+}
+
+/// Scan a top-level JSON object for `key` and return its raw value bytes
+/// (still encoded). `Ok(None)` = well-formed object without the key.
+/// Values before the key are skipped byte-wise, values after it are
+/// never visited.
+pub fn lazy_find<'a>(body: &'a [u8], key: &str) -> Result<Option<&'a [u8]>> {
+    let mut s = Scan { b: body, i: 0 };
+    s.ws();
+    if s.peek()? != b'{' {
+        bail!("not a JSON object");
+    }
+    s.i += 1;
+    s.ws();
+    if s.peek()? == b'}' {
+        return Ok(None);
+    }
+    loop {
+        s.ws();
+        let raw_key = s.raw_string()?;
+        s.ws();
+        if s.peek()? != b':' {
+            bail!("expected ':' at byte {}", s.i);
+        }
+        s.i += 1;
+        s.ws();
+        let start = s.i;
+        s.skip_value()?;
+        // escaped keys never match (request field names are plain ASCII)
+        if raw_key == key.as_bytes() {
+            return Ok(Some(&body[start..s.i]));
+        }
+        s.ws();
+        match s.peek()? {
+            b',' => s.i += 1,
+            b'}' => return Ok(None),
+            c => bail!("expected ',' or '}}' at byte {}, found {:?}", s.i, c as char),
+        }
+    }
+}
+
+/// Extract a top-level string field without parsing the rest of the body.
+pub fn lazy_str(body: &[u8], key: &str) -> Result<Option<String>> {
+    let Some(raw) = lazy_find(body, key)? else {
+        return Ok(None);
+    };
+    if raw == b"null" {
+        return Ok(None);
+    }
+    let mut p = Parser { b: raw, i: 0 };
+    let s = p.string().with_context(|| format!("field {key:?}"))?;
+    Ok(Some(s))
+}
+
+/// Extract a top-level numeric field without parsing the rest of the body.
+pub fn lazy_f64(body: &[u8], key: &str) -> Result<Option<f64>> {
+    let Some(raw) = lazy_find(body, key)? else {
+        return Ok(None);
+    };
+    if raw == b"null" {
+        return Ok(None);
+    }
+    let s = std::str::from_utf8(raw)?;
+    Ok(Some(
+        s.parse::<f64>().with_context(|| format!("field {key:?}: bad number {s:?}"))?,
+    ))
+}
+
+/// Parse a top-level numeric-array field straight into `out` (cleared
+/// first, capacity reused) — no per-element tree nodes. Returns `false`
+/// if the key is absent.
+pub fn lazy_f32_array(body: &[u8], key: &str, out: &mut Vec<f32>) -> Result<bool> {
+    out.clear();
+    let Some(raw) = lazy_find(body, key)? else {
+        return Ok(false);
+    };
+    let mut s = Scan { b: raw, i: 0 };
+    if s.peek()? != b'[' {
+        bail!("field {key:?}: not an array");
+    }
+    s.i += 1;
+    s.ws();
+    if s.peek()? == b']' {
+        return Ok(true);
+    }
+    loop {
+        s.ws();
+        let start = s.i;
+        while s.i < s.b.len()
+            && matches!(s.b[s.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            s.i += 1;
+        }
+        let num = std::str::from_utf8(&s.b[start..s.i])?;
+        out.push(
+            num.parse::<f32>()
+                .with_context(|| format!("field {key:?}[{}]: bad number {num:?}", out.len()))?,
+        );
+        s.ws();
+        match s.peek()? {
+            b',' => s.i += 1,
+            b']' => return Ok(true),
+            c => bail!(
+                "field {key:?}: expected ',' or ']' at byte {}, found {:?}",
+                s.i,
+                c as char
+            ),
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -411,5 +631,56 @@ mod tests {
         assert_eq!(j.get("v").unwrap().as_f32_vec().unwrap(), vec![1.5, 2.5]);
         assert!(j.get("missing").is_err());
         assert!(j.get("n").unwrap().as_str().is_err());
+    }
+
+    #[test]
+    fn lazy_extracts_fields_without_tree() {
+        let body = br#"{ "model": "resnet18", "deadline_ms": 12.5,
+                         "input": [0.25, -1.5, 3e2], "extra": {"input": [9]} }"#;
+        assert_eq!(lazy_str(body, "model").unwrap().unwrap(), "resnet18");
+        assert_eq!(lazy_f64(body, "deadline_ms").unwrap().unwrap(), 12.5);
+        let mut v = Vec::new();
+        assert!(lazy_f32_array(body, "input", &mut v).unwrap());
+        assert_eq!(v, vec![0.25, -1.5, 300.0]);
+        assert!(lazy_str(body, "missing").unwrap().is_none());
+        assert!(lazy_f64(body, "missing").unwrap().is_none());
+        assert!(!lazy_f32_array(body, "missing", &mut v).unwrap());
+        assert!(v.is_empty(), "absent key clears the output");
+    }
+
+    #[test]
+    fn lazy_matches_top_level_only() {
+        // a nested "model" must not shadow (or be shadowed by) top level
+        let body = br#"{"a": {"model": "inner"}, "model": "outer", "b": [{"model": 1}]}"#;
+        assert_eq!(lazy_str(body, "model").unwrap().unwrap(), "outer");
+        // braces inside string data must not unbalance the skipper
+        let tricky = br#"{"a": "s}{ll\" }", "n": 7}"#;
+        assert_eq!(lazy_f64(tricky, "n").unwrap().unwrap(), 7.0);
+    }
+
+    #[test]
+    fn lazy_agrees_with_tree_parser() {
+        let body = br#"{"model":"m\n1","deadline_ms":3,"input":[1,2.5,-0.125,1e-3]}"#;
+        let tree = Json::parse(std::str::from_utf8(body).unwrap()).unwrap();
+        assert_eq!(
+            lazy_str(body, "model").unwrap().unwrap(),
+            tree.get("model").unwrap().as_str().unwrap()
+        );
+        let mut v = Vec::new();
+        lazy_f32_array(body, "input", &mut v).unwrap();
+        assert_eq!(v, tree.get("input").unwrap().as_f32_vec().unwrap());
+    }
+
+    #[test]
+    fn lazy_rejects_malformed() {
+        assert!(lazy_find(b"[1,2]", "k").is_err(), "not an object");
+        assert!(lazy_find(b"{\"a\": ", "a").is_err(), "truncated value");
+        assert!(lazy_find(br#"{"a": [1,2"#, "b").is_err(), "unclosed array");
+        let mut v = Vec::new();
+        assert!(lazy_f32_array(br#"{"x": [1, "s"]}"#, "x", &mut v).is_err());
+        assert!(lazy_f32_array(br#"{"x": 3}"#, "x", &mut v).is_err());
+        // null-valued optional fields read as absent
+        assert!(lazy_str(br#"{"model": null}"#, "model").unwrap().is_none());
+        assert!(lazy_f64(br#"{"deadline_ms": null}"#, "deadline_ms").unwrap().is_none());
     }
 }

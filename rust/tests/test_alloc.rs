@@ -7,7 +7,9 @@
 //! buffer-pointer-stability test in `test_plan.rs` instead). Both
 //! dataflows are pinned: the mixed-domain model (residual add forces
 //! f32 edges) and an integer-resident chain where activations flow as
-//! u8 codes through the fused requantization epilogues.
+//! u8 codes through the fused requantization epilogues. The serving
+//! worker loop's batch-packing step (`pack_batch` + infer, the HTTP
+//! request path minus the sockets) is held to the same zero.
 //!
 //! This file contains exactly one test so no concurrent test can
 //! allocate while the steady-state window is being counted.
@@ -15,6 +17,7 @@
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicUsize, Ordering};
 
+use rmsmp::coordinator::server::pack_batch;
 use rmsmp::gemm::{PackedWeights, SortedWeights};
 use rmsmp::model::manifest::Manifest;
 use rmsmp::model::weights::{LayerWeights, ModelWeights};
@@ -281,6 +284,35 @@ fn steady_state_infer_performs_zero_allocations() {
     // mixed-domain model: the residual add keeps b0/b1 in f32
     let (manifest, weights) = model();
     assert_zero_alloc_steady_state("mixed-domain", manifest, weights);
+
+    // serving worker loop: the HTTP path packs request payloads into one
+    // reused tensor before infer (coordinator::server::pack_batch); at
+    // steady state pack + infer together must stay off the allocator, so
+    // the zero-allocation contract extends to the socket request path
+    {
+        let (manifest, weights) = model();
+        let mut exec = Executor::new(manifest, weights).unwrap();
+        let mut rng = Rng::new(11);
+        let payloads: Vec<Vec<f32>> =
+            (0..2).map(|_| (0..72).map(|_| rng.uniform(0.0, 1.0)).collect()).collect();
+        let mut x = Tensor4::zeros(0, 2, 6, 6);
+        // warm-up grows the tensor to the batch high-water once
+        pack_batch(&mut x, (2, 6, 6), 2, payloads.iter().map(|p| p.as_slice()));
+        let warm = exec.infer(&x).unwrap().clone();
+        let before = ALLOCS.load(Ordering::Relaxed);
+        for _ in 0..5 {
+            pack_batch(&mut x, (2, 6, 6), 2, payloads.iter().map(|p| p.as_slice()));
+            let y = exec.infer(&x).unwrap();
+            assert_eq!(y.data, warm.data);
+        }
+        let after = ALLOCS.load(Ordering::Relaxed);
+        assert_eq!(
+            after - before,
+            0,
+            "worker-loop pack+infer touched the allocator {} times",
+            after - before
+        );
+    }
 
     // integer-resident chain: u8 codes flow through the fused epilogues
     let (manifest, weights) = integer_chain_model();

@@ -1,13 +1,21 @@
 //! Coordinator end-to-end: dynamic batching server over the real artifacts
-//! (integer executor backend), plus failure/backpressure behaviour.
+//! (integer executor backend), failure/backpressure behaviour, and the
+//! HTTP/1.1 front-end over real loopback sockets (synthetic in-memory
+//! model, so the socket tests always run).
 
 use std::path::PathBuf;
 use std::time::Duration;
 
 use rmsmp::coordinator::batcher::BatchPolicy;
-use rmsmp::coordinator::{OpenLoopGen, Server, ServerConfig};
-use rmsmp::gemm::ParallelConfig;
-use rmsmp::model::{Manifest, ModelWeights};
+use rmsmp::coordinator::{
+    HttpConfig, HttpServer, OpenLoopGen, Server, ServerConfig, SimpleClient, SubmitError,
+};
+use rmsmp::gemm::{PackedWeights, ParallelConfig, SortedWeights};
+use rmsmp::model::weights::LayerWeights;
+use rmsmp::model::{Executor, Manifest, ModelWeights};
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::rng::Rng;
 
 fn artifacts() -> Option<PathBuf> {
     let dir = rmsmp::runtime::artifacts_dir();
@@ -155,6 +163,303 @@ fn multi_worker_consistency() {
     for rx in rxs {
         let r = rx.recv_timeout(Duration::from_secs(120)).unwrap();
         assert_eq!(r.logits, first, "workers disagree");
+    }
+    server.shutdown();
+}
+
+// --- HTTP front-end over real sockets (synthetic model, always runs) -------
+
+/// Tiny gap→linear model: input (2, 4, 4) → 3 classes, mixed row schemes.
+fn tiny(seed: u64) -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(
+        &Json::parse(
+            r#"{
+        "model": "tiny", "arch": "resnet", "num_classes": 3,
+        "input_shape": [1, 2, 4, 4], "ratio": [65, 30, 5], "act_bits": 4,
+        "layers": [
+          {"name": "fc", "kind": "linear", "rows": 3, "cols": 2,
+           "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [1, 1, 1, 0]}
+        ],
+        "program": [
+          {"op": "gap", "in": "in0", "out": "b0"},
+          {"op": "linear", "layer": "fc", "in": "b0", "out": "logits"}
+        ]
+      }"#,
+        )
+        .unwrap(),
+    )
+    .unwrap();
+    let schemes = vec![Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4];
+    let mut rng = Rng::new(seed);
+    let w = Mat::from_vec(3, 2, rng.normal_vec(6, 0.5));
+    let alpha: Vec<f32> = (0..3).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
+    let weights = ModelWeights {
+        layers: vec![LayerWeights {
+            name: "fc".into(),
+            kind: "linear".into(),
+            rows: 3,
+            cols: 2,
+            out_ch: 3,
+            in_ch: 2,
+            kh: 1,
+            kw: 1,
+            stride: 0,
+            pad: 0,
+            groups: 1,
+            a_alpha: 1.0,
+            scheme: schemes,
+            alpha,
+            bias: vec![0.0; 3],
+            w,
+            packed,
+            sorted,
+        }],
+    };
+    (manifest, weights)
+}
+
+fn boot_http(policy: BatchPolicy, conn_threads: usize, max_body: usize) -> (HttpServer, String) {
+    let (m, w) = tiny(1);
+    let server = Server::start(
+        m,
+        w,
+        ServerConfig { workers: 1, policy, parallel: ParallelConfig::sequential() },
+    )
+    .unwrap();
+    let http = HttpServer::start(
+        server,
+        HttpConfig { conn_threads, max_body_bytes: max_body, ..HttpConfig::default() },
+    )
+    .unwrap();
+    let addr = http.addr().to_string();
+    (http, addr)
+}
+
+fn quick_policy() -> BatchPolicy {
+    BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2), queue_cap: 256 }
+}
+
+fn body_for(img: &[f32], extra: &str) -> String {
+    use std::fmt::Write as _;
+    let mut body = String::from("{");
+    body.push_str(extra);
+    body.push_str("\"input\":[");
+    for (i, v) in img.iter().enumerate() {
+        if i > 0 {
+            body.push(',');
+        }
+        let _ = write!(body, "{v}");
+    }
+    body.push_str("]}");
+    body
+}
+
+#[test]
+fn http_concurrent_clients_get_bit_identical_logits() {
+    let (http, addr) = boot_http(quick_policy(), 8, 1 << 20);
+
+    // reference logits straight from the executor, same weights (seed 1)
+    let (m, w) = tiny(1);
+    let mut exec = Executor::new(m, w).unwrap();
+    let inputs: Vec<Vec<f32>> = (0..4)
+        .map(|k| (0..32).map(|i| ((i * 7 + k * 3) % 19) as f32 / 19.0).collect())
+        .collect();
+    let mut want = Vec::new();
+    for img in &inputs {
+        let mut x = rmsmp::quant::tensor::Tensor4::zeros(1, 2, 4, 4);
+        x.data.copy_from_slice(img);
+        want.push(exec.infer(&x).unwrap().row(0).to_vec());
+    }
+
+    let handles: Vec<_> = inputs
+        .iter()
+        .enumerate()
+        .map(|(k, img)| {
+            let addr = addr.clone();
+            let body = body_for(img, "");
+            std::thread::spawn(move || {
+                let mut c = SimpleClient::connect(&addr).unwrap();
+                let mut out = Vec::new();
+                for _ in 0..3 {
+                    let resp = c.request("POST", "/v1/infer", &body).unwrap();
+                    assert_eq!(resp.status, 200, "{}", resp.body);
+                    let j = Json::parse(&resp.body).unwrap();
+                    out.push(j.get("logits").unwrap().as_f32_vec().unwrap());
+                }
+                (k, out)
+            })
+        })
+        .collect();
+    for h in handles {
+        let (k, got) = h.join().unwrap();
+        for logits in got {
+            // f32 Display roundtrips exactly through the JSON response
+            assert_eq!(logits, want[k], "client {k} logits drifted over HTTP");
+        }
+    }
+    http.shutdown();
+}
+
+#[test]
+fn http_rejects_bad_requests_without_worker_death() {
+    let (http, addr) = boot_http(quick_policy(), 4, 4096);
+
+    // malformed JSON → 400 (keep-alive preserved: app-level error)
+    let mut c = SimpleClient::connect(&addr).unwrap();
+    let resp = c.request("POST", "/v1/infer", "{not json").unwrap();
+    assert_eq!(resp.status, 400);
+
+    // wrong input length → 400 from SubmitError::Invalid, same connection
+    let resp = c.request("POST", "/v1/infer", "{\"input\":[1,2,3]}").unwrap();
+    assert_eq!(resp.status, 400);
+    assert!(resp.body.contains("input length"), "{}", resp.body);
+
+    // unknown model → 404
+    let img = vec![0.5f32; 32];
+    let resp = c.request("POST", "/v1/infer", &body_for(&img, "\"model\":\"nope\",")).unwrap();
+    assert_eq!(resp.status, 404);
+
+    // unknown route → 404; wrong method on a real route → 405
+    let resp = c.request("GET", "/nope", "").unwrap();
+    assert_eq!(resp.status, 404);
+    let resp = c.request("GET", "/v1/infer", "").unwrap();
+    assert_eq!(resp.status, 405);
+
+    // POST without Content-Length → 411
+    let resp = c
+        .send_raw(b"POST /v1/infer HTTP/1.1\r\nHost: x\r\n\r\n")
+        .unwrap();
+    assert_eq!(resp.status, 411);
+
+    // oversized body → 413 (connection closes: body was never read)
+    let mut c2 = SimpleClient::connect(&addr).unwrap();
+    let resp = c2
+        .send_raw(b"POST /v1/infer HTTP/1.1\r\nHost: x\r\nContent-Length: 999999\r\n\r\n")
+        .unwrap();
+    assert_eq!(resp.status, 413);
+
+    // after all of that, a valid request still succeeds: no worker died
+    let resp = c.request("POST", "/v1/infer", &body_for(&img, "")).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    http.shutdown();
+}
+
+#[test]
+fn http_keep_alive_reuses_one_connection() {
+    let (http, addr) = boot_http(quick_policy(), 2, 1 << 20);
+    let img = vec![0.25f32; 32];
+    let body = body_for(&img, "");
+    let mut c = SimpleClient::connect(&addr).unwrap();
+    for _ in 0..3 {
+        // a second/third request on the same socket only works if the
+        // server honoured keep-alive after the first response
+        let resp = c.request("POST", "/v1/infer", &body).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        assert_eq!(resp.header("Connection"), Some("keep-alive"));
+    }
+    http.shutdown();
+}
+
+#[test]
+fn http_expired_deadline_returns_shed_response() {
+    let (http, addr) = boot_http(quick_policy(), 2, 1 << 20);
+    let img = vec![0.5f32; 32];
+    // deadline_ms 0: already expired at submit, so the batcher must shed
+    // it before the GEMM and the front-end answers 504
+    let mut c = SimpleClient::connect(&addr).unwrap();
+    let resp = c
+        .request("POST", "/v1/infer", &body_for(&img, "\"deadline_ms\":0,"))
+        .unwrap();
+    assert_eq!(resp.status, 504, "{}", resp.body);
+    assert!(resp.body.contains("shed"), "{}", resp.body);
+
+    let metrics = c.request("GET", "/metrics", "").unwrap();
+    assert_eq!(metrics.status, 200);
+    assert!(
+        metrics.body.contains("rmsmp_shed_total{model=\"tiny\"} 1"),
+        "{}",
+        metrics.body
+    );
+    http.shutdown();
+}
+
+#[test]
+fn http_backpressure_maps_to_429_with_retry_after() {
+    // queue_cap 2 and a 30ms dispatch delay: 32 near-simultaneous clients
+    // can't all fit — the surplus must see 429 + Retry-After
+    let policy = BatchPolicy {
+        max_batch: 64,
+        max_wait: Duration::from_millis(30),
+        queue_cap: 2,
+    };
+    let (http, addr) = boot_http(policy, 32, 1 << 20);
+    let img = vec![0.5f32; 32];
+    let body = body_for(&img, "");
+    let handles: Vec<_> = (0..32)
+        .map(|_| {
+            let addr = addr.clone();
+            let body = body.clone();
+            std::thread::spawn(move || {
+                let mut c = SimpleClient::connect(&addr).unwrap();
+                let resp = c.request("POST", "/v1/infer", &body).unwrap();
+                let retry = resp.header("Retry-After").map(|s| s.to_string());
+                (resp.status, retry)
+            })
+        })
+        .collect();
+    let results: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let oks = results.iter().filter(|(s, _)| *s == 200).count();
+    let rejected: Vec<_> = results.iter().filter(|(s, _)| *s == 429).collect();
+    assert_eq!(oks + rejected.len(), 32, "unexpected statuses: {results:?}");
+    assert!(oks >= 1, "someone must get through");
+    assert!(!rejected.is_empty(), "queue_cap 2 must reject some of 32 clients");
+    for (_, retry) in &rejected {
+        assert!(retry.is_some(), "429 must carry Retry-After");
+    }
+    http.shutdown();
+}
+
+#[test]
+fn http_metrics_exposes_per_stage_timers() {
+    let (http, addr) = boot_http(quick_policy(), 2, 1 << 20);
+    let img = vec![0.75f32; 32];
+    let mut c = SimpleClient::connect(&addr).unwrap();
+    let resp = c.request("POST", "/v1/infer", &body_for(&img, "")).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+
+    let resp = c.request("GET", "/metrics", "").unwrap();
+    assert_eq!(resp.status, 200);
+    for needle in [
+        "rmsmp_requests_total{model=\"tiny\"} 1",
+        "rmsmp_responses_total{model=\"tiny\"} 1",
+        "rmsmp_latency_ms{model=\"tiny\",quantile=\"0.5\"}",
+        "rmsmp_stage_seconds_total{model=\"tiny\",stage=\"gemm\"}",
+        "rmsmp_stage_seconds_total{model=\"tiny\",stage=\"epilogue\"}",
+    ] {
+        assert!(resp.body.contains(needle), "missing {needle} in:\n{}", resp.body);
+    }
+    let resp = c.request("GET", "/healthz", "").unwrap();
+    assert_eq!(resp.status, 200);
+    assert_eq!(resp.body, "ok\n");
+    http.shutdown();
+}
+
+#[test]
+fn submit_error_granularity_at_the_library_level() {
+    let (m, w) = tiny(1);
+    let server = Server::start(
+        m,
+        w,
+        ServerConfig { workers: 1, policy: quick_policy(), parallel: ParallelConfig::sequential() },
+    )
+    .unwrap();
+    // wrong input length is a validation error, not backpressure
+    match server.submit(vec![0.0; 3]) {
+        Err(SubmitError::Invalid(msg)) => assert!(msg.contains("input length"), "{msg}"),
+        other => panic!("want Invalid, got {other:?}"),
     }
     server.shutdown();
 }
