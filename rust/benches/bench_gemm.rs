@@ -19,7 +19,7 @@ use rmsmp::gemm::cores::{GemmCore, GemmFixed4, GemmFixed8, GemmPoT4};
 use rmsmp::gemm::{
     autotune, chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, Isa, MixedGemm,
     PackedActs, PackedWeights, ParallelConfig, RowPartition, SortedWeights, TaskChunk,
-    TuneShape, ISA_LADDER,
+    TuneShape, ISA_LADDER, MICRO_ROWS_CANDIDATES,
 };
 use rmsmp::quant::{default_alpha, Mat, Scheme};
 use rmsmp::util::bench::Bench;
@@ -209,6 +209,20 @@ fn main() {
             black_box(&out);
         });
         tier_cases.push((format!("simd_speedup_{}", tier.name()), case));
+        // row-height sweep: the same tier at every tuned block height,
+        // so the 4/6/8-row kernel ladder is visible per ISA in the
+        // artifact (mr4 duplicates the default-engine case by design —
+        // it anchors the sweep)
+        for mr in MICRO_ROWS_CANDIDATES {
+            let mut mr_engine =
+                MixedGemm::with_config(ParallelConfig { micro_rows: mr, ..single });
+            mr_engine.set_isa(tier);
+            let case = format!("mixed512_block_{}_mr{}", tier.name(), mr);
+            b.case_ops(&case, Some(macs512), || {
+                run_mixed(&mr_engine, black_box(&acts), &sw, &chunks, false, &mut scratch, &mut out);
+                black_box(&out);
+            });
+        }
     }
     let ns_of = |name: &str| b.get(name).map(|m| m.ns_per_iter()).unwrap_or(f64::NAN);
     let row_scalar_ns = ns_of("mixed512_row_scalar");
@@ -243,7 +257,8 @@ fn main() {
         false,
     );
     println!(
-        "bench gemm: autotuned tile {} / chunk {} / panel {} B ({})",
+        "bench gemm: autotuned mr {} / tile {} / chunk {} / panel {} B ({})",
+        tuned.micro_rows,
         tuned.tile_cols,
         tuned.min_rows_per_task,
         tuned.panel_bytes,
@@ -256,6 +271,7 @@ fn main() {
         ("isa", s(isa.name())),
         ("simd_speedup", num(simd_speedup)),
         ("block_speedup", num(block_speedup)),
+        ("tuned_micro_rows", num(tuned.micro_rows as f64)),
         ("tuned_tile_cols", num(tuned.tile_cols as f64)),
         ("tuned_min_rows_per_task", num(tuned.min_rows_per_task as f64)),
         ("tuned_panel_bytes", num(tuned.panel_bytes as f64)),

@@ -2,9 +2,13 @@
 //! compiled plan vs the reference interpreter at batch 1 and 8, plus one
 //! ablation per optimizer pass (integer-resident vs f32-resident,
 //! implicit vs explicit-im2col, fused vs standalone residual add,
-//! depthwise specialization vs the grouped fallback), the load-time
-//! autotuner's machine-tuned blocking vs the fixed defaults
-//! (`autotune_speedup_b1/b8`), and sequential vs parallel — on a
+//! depthwise specialization vs the grouped fallback), the per-layer
+//! load-time autotuner's machine-tuned blocking vs the fixed defaults
+//! (`autotune_speedup_b1/b8`) and vs a pinned 4-row block height
+//! (`microrows_speedup_b1/b8`), the plan-compile cost and tune-cache
+//! provenance (`plan_build_ms`, `tune_cache_hits/misses` — the CI
+//! bench-smoke double-run asserts `tune_cache_misses == 0` on its
+//! second, warm-cache pass), and sequential vs parallel — on a
 //! synthetic residual CNN (no artifacts needed) and, when artifacts
 //! exist, on the shipped model. Writes `BENCH_runtime.json`
 //! (per-inference latency + the ablation speedups) for the CI
@@ -202,6 +206,28 @@ fn main() {
 
     let (manifest, weights) = synthetic_model();
 
+    // the FIRST plan compile in this process: its tune-cache stats are
+    // the cold/warm provenance signal (with RMSMP_TUNE_CACHE set, a
+    // cold cache microbenches and persists, a warm cache answers every
+    // layer signature with zero microbench dispatches) and its wall
+    // time is the load-time cost a fleet pays per boot
+    let capacity = manifest.input_shape.first().copied().unwrap_or(1);
+    let build_cfg = seq_rt.config();
+    let t0 = std::time::Instant::now();
+    let first_plan = Plan::builder(&manifest, &weights)
+        .capacity(capacity)
+        .config(&build_cfg)
+        .build()
+        .unwrap();
+    let plan_build_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let tune_stats = first_plan.tune_stats;
+    drop(first_plan);
+    println!(
+        "bench runtime: plan build {plan_build_ms:.2} ms ({} tune-cache hit(s), \
+         {} microbenched)",
+        tune_stats.cache_hits, tune_stats.cache_misses
+    );
+
     // plan vs interpreter, batch 1 and 8, sequential engine: the
     // compile-then-run payoff per inference
     let mut seq = seq_rt.executor(manifest.clone(), weights.clone()).unwrap();
@@ -219,7 +245,6 @@ fn main() {
     // optimizer pass disabled (same engine, same kernels — only the
     // rewrite under test differs)
     let cfg = seq_rt.config();
-    let capacity = manifest.input_shape.first().copied().unwrap_or(1);
 
     // integer-resident dataflow: the end-to-end win of fusing
     // requantization into the GEMM epilogue
@@ -303,11 +328,42 @@ fn main() {
     let tuned = seq.plan().tuned;
     println!(
         "bench runtime: autotune speedup {autotune_speedup_b1:.2}x @ batch 1, \
-         {autotune_speedup_b8:.2}x @ batch 8 (tile {} / chunk {} / panel {} B, {})",
+         {autotune_speedup_b8:.2}x @ batch 8 (mr {} / tile {} / chunk {} / panel {} B, {})",
+        seq.plan().cfg.micro_rows,
         seq.plan().cfg.tile_cols,
         seq.plan().cfg.min_rows_per_task,
         tuned.panel_bytes,
         tuned.source.name()
+    );
+
+    // micro-kernel row-height ablation: the same fully-tuned plan with
+    // the block height pinned at the old constant 4 (every other knob
+    // still tunes) vs the free 4/6/8 sweep — isolates what the widened
+    // kernel space itself buys on this machine
+    let mr4_plan = Arc::new(
+        Plan::builder(&manifest, &weights)
+            .capacity(capacity)
+            .config(&cfg)
+            .pin_micro_rows(4)
+            .build()
+            .unwrap(),
+    );
+    let mut mr4_seq = Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        mr4_plan,
+        cfg,
+        None,
+    )
+    .unwrap();
+    bench_plan(&mut b, "mr4_b1", &mut mr4_seq, &x1);
+    bench_plan(&mut b, "mr4_b8", &mut mr4_seq, &x8);
+    let microrows_speedup_b1 = ns(&b, "mr4_b1") / ns(&b, "plan_b1");
+    let microrows_speedup_b8 = ns(&b, "mr4_b8") / ns(&b, "plan_b8");
+    println!(
+        "bench runtime: micro-rows speedup {microrows_speedup_b1:.2}x @ batch 1, \
+         {microrows_speedup_b8:.2}x @ batch 8 (tuned mr {})",
+        seq.plan().cfg.micro_rows
     );
 
     // the compiled-plan dump (the `rmsmp plan` output for this model,
@@ -360,6 +416,12 @@ fn main() {
         ("fp_saved_bytes", num(explicit_fp as f64 - implicit_fp as f64)),
         ("autotune_speedup_b1", num(autotune_speedup_b1)),
         ("autotune_speedup_b8", num(autotune_speedup_b8)),
+        ("microrows_speedup_b1", num(microrows_speedup_b1)),
+        ("microrows_speedup_b8", num(microrows_speedup_b8)),
+        ("plan_build_ms", num(plan_build_ms)),
+        ("tune_cache_hits", num(tune_stats.cache_hits as f64)),
+        ("tune_cache_misses", num(tune_stats.cache_misses as f64)),
+        ("tuned_micro_rows", num(seq.plan().cfg.micro_rows as f64)),
         ("tuned_tile_cols", num(tuned.tile_cols as f64)),
         ("tuned_min_rows_per_task", num(tuned.min_rows_per_task as f64)),
         ("tuned_panel_bytes", num(tuned.panel_bytes as f64)),

@@ -1,33 +1,39 @@
-//! Load-time autotuner: microbench the machine, bake the winners into
-//! the compiled plan.
+//! Load-time autotuner: microbench the machine per layer, bake the
+//! winners into the compiled plan, and persist them across processes.
 //!
-//! The kernel layer's blocking knobs — the column-tile width
-//! (`tile_cols`), the parallel chunk granularity (`min_rows_per_task`),
-//! and the implicit-GEMM panel budget (bytes per streamed column-tile
-//! panel) — encode assumptions about cache sizes and core counts that
-//! hold on the dev box and nowhere else in a heterogeneous fleet. RMSMP's
-//! premise is hardware-informed quantization; this module applies the
-//! same discipline one level down: at plan-compile time
-//! ([`crate::model::PlanBuilder::build`]), [`tune`] runs the real
-//! [`MixedGemm::dispatch`] path over a synthetic workload shaped like the
-//! model's largest layer (same 65:30:5 scheme mix as the benches, same
-//! class-sorted layout, same chunk schedules) for a small candidate grid,
-//! and returns the fastest [`TunedParams`].
+//! The kernel layer's blocking knobs — the micro-kernel row-block
+//! height (`micro_rows`), the column-tile width (`tile_cols`), the
+//! parallel chunk granularity (`min_rows_per_task`), and the
+//! implicit-GEMM panel budget (bytes per streamed column-tile panel) —
+//! encode assumptions about register files, cache sizes, and core
+//! counts that hold on the dev box and nowhere else in a heterogeneous
+//! fleet. RMSMP's premise is hardware-informed quantization; this
+//! module applies the same discipline one level down: at plan-compile
+//! time ([`crate::model::PlanBuilder::build`]), [`tune_layer`] runs the
+//! real [`MixedGemm::dispatch`] path over a synthetic workload shaped
+//! like **each distinct layer** of the model — same row/col/batch
+//! shape (clamped to a microbench budget), same scheme mix, same
+//! class-sorted layout, same chunk schedules — for a small candidate
+//! grid, and returns the fastest [`TunedParams`] per layer signature.
 //!
 //! Contracts that keep tuning safe:
 //!
 //! * **Bit-exactness is never at stake.** The integer cores are
-//!   tile-size-independent (i32 accumulation is associative) and panel
-//!   width / chunk schedule never change per-cell arithmetic, so a tuned
-//!   plan produces logits bit-identical to the default plan. The one
-//!   exception — the f32-accumulating APoT baseline core is only
-//!   deterministic for a *fixed* `tile_cols` — is handled by the caller
-//!   pinning the tile (`pin_tile`) whenever the model carries APoT rows.
-//! * **Explicit knobs win.** A [`ParallelConfig`] field that differs from
-//!   its documented default ([`DEFAULT_TILE_COLS`] /
-//!   [`DEFAULT_MIN_ROWS_PER_TASK`]) is a caller decision; [`TunedParams::
-//!   apply_to`] leaves it alone and tuning only fills the knobs still at
-//!   their defaults.
+//!   blocking-independent (i32 accumulation per cell is associative and
+//!   independent of how rows are grouped into `micro_rows` blocks), and
+//!   panel width / chunk schedule never change per-cell arithmetic, so
+//!   a tuned plan produces logits bit-identical to the default plan.
+//!   The one exception — the f32-accumulating APoT baseline core is
+//!   only deterministic for a *fixed* `tile_cols` — is handled by the
+//!   caller pinning the tile (`pin_tile`) whenever the model carries
+//!   APoT rows. (`micro_rows` is safe even for APoT: its core sweeps
+//!   row-at-a-time inside the block, so per-row accumulation order
+//!   depends only on `tile_cols`.)
+//! * **Explicit knobs win.** A [`ParallelConfig`] field that differs
+//!   from its documented default ([`DEFAULT_TILE_COLS`] /
+//!   [`DEFAULT_MIN_ROWS_PER_TASK`] / [`DEFAULT_MICRO_ROWS`]) is a
+//!   caller decision; [`TunedParams::apply_to`] leaves it alone and
+//!   tuning only fills the knobs still at their defaults.
 //! * **A winner must beat the default decisively.** Candidates replace
 //!   the default only on a >2% improvement in the microbench, so noise
 //!   cannot regress the shipped defaults — the tuned plan is >= the
@@ -38,18 +44,34 @@
 //!   keeps today's fixed defaults — reproducible tests and benchable
 //!   ablations.
 //!
-//! Results are cached per process (keyed by workload shape, thread
-//! count, and the pinned/explicit knobs), so a server compiling many
-//! plans pays for the microbench once.
+//! # Result caching
+//!
+//! Results are cached at two levels:
+//!
+//! * **Per process** (keyed by layer signature, thread count, and the
+//!   pinned/explicit knobs), so a server compiling many plans pays for
+//!   each distinct layer's microbench once.
+//! * **On disk**, when the caller passes a cache path (the plan builder
+//!   forwards `RMSMP_TUNE_CACHE=path` or its `--tune-cache` flag): a
+//!   small versioned text file keyed by kernel ISA tier + layer
+//!   signature + thread count + tuning schema version. A warm cache
+//!   makes the second load of the same model on the same machine type
+//!   skip the microbench entirely — fleets bake the file into the
+//!   machine image once per hardware generation. Corrupt, stale, or
+//!   foreign-version files are ignored (never an error), and writes go
+//!   through a write-to-temp + rename so concurrent writers cannot
+//!   tear the file.
 
+use std::path::{Path, PathBuf};
 use std::sync::{Mutex, OnceLock};
 use std::time::Instant;
 
 use super::mixed::{
     chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, MixedGemm, ParallelConfig,
-    DEFAULT_MIN_ROWS_PER_TASK, DEFAULT_TILE_COLS,
+    RowPartition, DEFAULT_MICRO_ROWS, DEFAULT_MIN_ROWS_PER_TASK, DEFAULT_TILE_COLS,
 };
 use super::packed::{PackedActs, PackedWeights};
+use super::simd::{Isa, MAX_MICRO_ROWS, MICRO_ROWS_CANDIDATES};
 use super::sorted::SortedWeights;
 use crate::quant::{Mat, Scheme};
 use crate::util::rng::Rng;
@@ -70,8 +92,14 @@ const PANEL_CANDIDATES: [usize; 3] = [16 * 1024, DEFAULT_PANEL_BYTES, 64 * 1024]
 /// the noise guard that keeps tuning monotone vs the defaults.
 const IMPROVEMENT: f64 = 0.98;
 
-/// Microbench workload shape — the model's largest GEMM layer, clamped
-/// to keep the load-time cost bounded.
+/// Version tag of the on-disk tune-cache schema. Bump whenever the key
+/// or value layout changes — readers ignore files with any other
+/// header, falling back to the live microbench. v2 = the first
+/// persisted schema (per-layer signatures + `micro_rows` in the value).
+const CACHE_HEADER: &str = "rmsmp-tune-cache v2";
+
+/// Microbench workload shape — one GEMM layer, clamped to keep the
+/// load-time cost bounded.
 #[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
 pub struct TuneShape {
     /// Weight rows (output channels) of the synthetic layer.
@@ -83,9 +111,9 @@ pub struct TuneShape {
 }
 
 impl TuneShape {
-    /// Shape for a model whose largest layer is `rows x cols` with up to
-    /// `batch` activation rows in flight, clamped so one microbench
-    /// dispatch stays in the low-millisecond range.
+    /// Shape for a layer of `rows x cols` with up to `batch` activation
+    /// rows in flight, clamped so one microbench dispatch stays in the
+    /// low-millisecond range.
     pub fn for_layer(rows: usize, cols: usize, batch: usize) -> TuneShape {
         TuneShape {
             rows: rows.clamp(16, 64),
@@ -95,11 +123,68 @@ impl TuneShape {
     }
 }
 
+/// The identity of one layer for tuning purposes: its GEMM shape plus
+/// its per-class row counts (in [`RowPartition::CLASS_ORDER`] order).
+/// Layers sharing a signature share one microbench — the plan builder
+/// dedups by this before calling [`tune_layer`], and it is the layer
+/// part of the on-disk cache key.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct LayerSig {
+    /// Weight rows (output channels).
+    pub rows: usize,
+    /// Columns (reduction depth: `in_ch/groups * k * k` for convs).
+    pub cols: usize,
+    /// Activation rows per dispatch (batch x spatial positions,
+    /// or the linear batch).
+    pub batch: usize,
+    /// Rows per scheme class, [`RowPartition::CLASS_ORDER`] order.
+    pub counts: [usize; 4],
+}
+
+impl LayerSig {
+    /// Signature of a layer with the canonical 65:30:5 Fixed-4 / PoT-4 /
+    /// Fixed-8 mix (the repo's benchmark ratio) — the shape-only entry
+    /// point used when no real scheme assignment is at hand.
+    pub fn canonical(rows: usize, cols: usize, batch: usize) -> LayerSig {
+        let fixed4 = rows * 13 / 20;
+        let pot4 = rows * 19 / 20 - fixed4;
+        let fixed8 = rows - fixed4 - pot4;
+        LayerSig { rows, cols, batch, counts: [pot4, fixed4, fixed8, 0] }
+    }
+
+    /// The clamped microbench shape for this signature.
+    fn shape(&self) -> TuneShape {
+        TuneShape::for_layer(self.rows, self.cols, self.batch)
+    }
+
+    /// Scheme mix for the clamped workload: the layer's class ratios
+    /// scaled to `rows` synthetic rows (largest-class gets the rounding
+    /// remainder so the counts always sum to `rows`).
+    fn scaled_counts(&self, rows: usize) -> [usize; 4] {
+        let total: usize = self.counts.iter().sum();
+        if total == 0 {
+            return LayerSig::canonical(rows, 1, 1).counts;
+        }
+        let mut scaled = [0usize; 4];
+        for k in 0..4 {
+            scaled[k] = self.counts[k] * rows / total;
+        }
+        let used: usize = scaled.iter().sum();
+        let biggest =
+            (0..4).max_by_key(|&k| self.counts[k]).expect("four classes");
+        scaled[biggest] += rows - used;
+        scaled
+    }
+}
+
 /// Where a plan's blocking parameters came from.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum TuneSource {
-    /// Chosen by the load-time microbench.
+    /// Chosen by a live load-time microbench in this process.
     Tuned,
+    /// Loaded from the persisted on-disk tune cache (no microbench ran
+    /// for this signature in this process).
+    DiskCache,
     /// The fixed compile-time defaults (`RMSMP_NO_TUNE`, or a builder
     /// that opted out).
     Defaults,
@@ -110,14 +195,19 @@ impl TuneSource {
     pub fn name(self) -> &'static str {
         match self {
             TuneSource::Tuned => "tuned",
+            TuneSource::DiskCache => "disk-cache",
             TuneSource::Defaults => "defaults",
         }
     }
 }
 
-/// The blocking parameters a compiled plan bakes in.
+/// The blocking parameters a compiled plan bakes in (per layer
+/// signature).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct TunedParams {
+    /// Micro-kernel row-block height (see
+    /// [`ParallelConfig::micro_rows`]).
+    pub micro_rows: usize,
     /// Column-tile width for the packed inner loops.
     pub tile_cols: usize,
     /// Parallel chunk granularity (rows per task).
@@ -125,7 +215,8 @@ pub struct TunedParams {
     /// Implicit-GEMM panel budget in bytes (positions per panel =
     /// `panel_bytes / layer cols`, clamped as before).
     pub panel_bytes: usize,
-    /// Whether these came from the microbench or the fixed defaults.
+    /// Whether these came from a microbench, the disk cache, or the
+    /// fixed defaults.
     pub source: TuneSource,
 }
 
@@ -134,6 +225,7 @@ impl TunedParams {
     /// whatever the config says, plus the fixed panel budget.
     pub fn defaults(cfg: &ParallelConfig) -> TunedParams {
         TunedParams {
+            micro_rows: cfg.micro_rows,
             tile_cols: cfg.tile_cols,
             min_rows_per_task: cfg.min_rows_per_task,
             panel_bytes: DEFAULT_PANEL_BYTES,
@@ -157,8 +249,26 @@ impl TunedParams {
             } else {
                 cfg.min_rows_per_task
             },
+            micro_rows: if cfg.micro_rows == DEFAULT_MICRO_ROWS {
+                self.micro_rows
+            } else {
+                cfg.micro_rows
+            },
         }
     }
+}
+
+/// Per-plan-compile tuning provenance counters: how many distinct layer
+/// signatures were answered from a cache (process or disk) vs by a live
+/// microbench. `cache_misses == 0` is the "warm cache skipped every
+/// microbench" assertion the tests and CI lean on; the runtime bench
+/// reports `cache_hits` as `tune_cache_hits`.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TuneStats {
+    /// Signatures answered without running a microbench.
+    pub cache_hits: usize,
+    /// Signatures that ran the live microbench.
+    pub cache_misses: usize,
 }
 
 /// Whether `RMSMP_NO_TUNE` asks for the deterministic fixed defaults
@@ -167,37 +277,212 @@ pub fn no_tune_requested() -> bool {
     std::env::var("RMSMP_NO_TUNE").map(|v| !v.is_empty() && v != "0").unwrap_or(false)
 }
 
-type CacheKey = (TuneShape, usize, bool, usize, usize);
+/// The tune-cache path from `RMSMP_TUNE_CACHE`, if set (the default the
+/// plan builder uses when no explicit `--tune-cache` was given).
+pub fn env_cache_path() -> Option<PathBuf> {
+    match std::env::var("RMSMP_TUNE_CACHE") {
+        Ok(v) if !v.is_empty() => Some(PathBuf::from(v)),
+        _ => None,
+    }
+}
+
+/// Everything that can change a tuning answer: the layer, the machine
+/// (ISA tier + thread count), the pins, and the baseline knobs the
+/// explicit-wins contract feeds in. One entry in both caches.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+struct CacheKey {
+    isa: Isa,
+    sig: LayerSig,
+    threads: usize,
+    pin_tile: bool,
+    /// Forced row-block height (ablations); 0 = not pinned.
+    pin_micro_rows: usize,
+    base_tile: usize,
+    base_chunk: usize,
+    base_micro_rows: usize,
+}
+
+impl CacheKey {
+    fn new(
+        sig: LayerSig,
+        cfg: &ParallelConfig,
+        threads: usize,
+        pin_tile: bool,
+        pin_micro_rows: Option<usize>,
+    ) -> CacheKey {
+        CacheKey {
+            isa: Isa::detect().validated().get(),
+            sig,
+            threads,
+            pin_tile,
+            pin_micro_rows: pin_micro_rows.unwrap_or(0),
+            base_tile: cfg.tile_cols,
+            base_chunk: cfg.min_rows_per_task,
+            base_micro_rows: cfg.micro_rows,
+        }
+    }
+
+    /// The stable text form used as the on-disk key (one line prefix).
+    fn text(&self) -> String {
+        let c = self.sig.counts;
+        format!(
+            "{} t{} sig {} {} {} mix {} {} {} {} pin {} {} base {} {} {}",
+            self.isa.name(),
+            self.threads,
+            self.sig.rows,
+            self.sig.cols,
+            self.sig.batch,
+            c[0],
+            c[1],
+            c[2],
+            c[3],
+            self.pin_tile as usize,
+            self.pin_micro_rows,
+            self.base_tile,
+            self.base_chunk,
+            self.base_micro_rows,
+        )
+    }
+}
+
 static CACHE: OnceLock<Mutex<Vec<(CacheKey, TunedParams)>>> = OnceLock::new();
 
-/// Microbench the candidate grids for `shape` and return the winners.
-/// `cfg` supplies the baseline knobs (and the thread count: chunk
-/// granularity is only tuned when the config resolves to >1 thread);
-/// `pin_tile` keeps `tile_cols` at the configured value (required when
-/// the model carries f32-accumulating APoT rows, whose results are only
-/// deterministic for a fixed tile). Results are cached per process.
+fn cache() -> &'static Mutex<Vec<(CacheKey, TunedParams)>> {
+    CACHE.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+/// Drop every process-cached tuning result. Tests use this to force the
+/// next [`tune_layer`] through the disk cache (or a fresh microbench);
+/// production code never needs it.
+pub fn clear_process_cache() {
+    if let Ok(mut hits) = cache().lock() {
+        hits.clear();
+    }
+}
+
+/// Read the on-disk cache: `(key text, params)` pairs. Any problem —
+/// missing file, foreign or stale version header, torn or corrupt
+/// lines — yields fewer (or zero) entries, never an error: a bad cache
+/// degrades to the live microbench.
+fn read_disk(path: &Path) -> Vec<(String, TunedParams)> {
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return Vec::new();
+    };
+    let mut lines = text.lines();
+    if lines.next().map(str::trim) != Some(CACHE_HEADER) {
+        return Vec::new();
+    }
+    let mut entries = Vec::new();
+    for line in lines {
+        let Some((key, val)) = line.split_once(" => ") else {
+            continue;
+        };
+        let nums: Vec<usize> =
+            val.split_whitespace().filter_map(|t| t.parse().ok()).collect();
+        let &[mr, tile, chunk, panel] = nums.as_slice() else {
+            continue;
+        };
+        if mr == 0 || mr > MAX_MICRO_ROWS {
+            continue;
+        }
+        entries.push((
+            key.trim().to_string(),
+            TunedParams {
+                micro_rows: mr,
+                tile_cols: tile,
+                min_rows_per_task: chunk,
+                panel_bytes: panel,
+                source: TuneSource::DiskCache,
+            },
+        ));
+    }
+    entries
+}
+
+/// Merge one result into the on-disk cache: read-modify-write through a
+/// temp file + atomic rename, so a reader never sees a torn file and
+/// the last of two racing writers wins with a complete file. Failures
+/// (unwritable path, rename across devices) are swallowed — persisting
+/// is an optimization, never a correctness requirement.
+fn write_disk(path: &Path, key_text: &str, p: &TunedParams) {
+    let mut entries = read_disk(path);
+    entries.retain(|(k, _)| k != key_text);
+    entries.push((key_text.to_string(), *p));
+    let mut text = String::from(CACHE_HEADER);
+    text.push('\n');
+    for (k, e) in &entries {
+        text.push_str(&format!(
+            "{} => {} {} {} {}\n",
+            k, e.micro_rows, e.tile_cols, e.min_rows_per_task, e.panel_bytes
+        ));
+    }
+    let pid = std::process::id();
+    let tmp = path.with_extension(format!("tmp.{pid}"));
+    if std::fs::write(&tmp, text).is_ok() && std::fs::rename(&tmp, path).is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+}
+
+/// Tune one layer signature, answering from the process cache, then the
+/// on-disk cache (`disk`, when given), then a live microbench — in that
+/// order. `cfg` supplies the baseline knobs (and the thread count:
+/// chunk granularity is only tuned when the config resolves to >1
+/// thread); `pin_tile` keeps `tile_cols` at the configured value
+/// (required when the model carries f32-accumulating APoT rows, whose
+/// results are only deterministic for a fixed tile); `pin_micro_rows`
+/// forces the row-block height to one value without sweeping (the
+/// bench ablation twin). `stats` counts the hit/miss provenance per
+/// plan compile.
 ///
 /// This runs at plan-compile (load) time, so its allocations do not
 /// disturb the zero-steady-state-allocation property of inference.
-pub fn tune(shape: TuneShape, cfg: &ParallelConfig, pin_tile: bool) -> TunedParams {
+pub fn tune_layer(
+    sig: LayerSig,
+    cfg: &ParallelConfig,
+    pin_tile: bool,
+    pin_micro_rows: Option<usize>,
+    disk: Option<&Path>,
+    stats: &mut TuneStats,
+) -> TunedParams {
     let threads = if cfg.threads == 1 { 1 } else { cfg.resolved_threads() };
-    let key = (shape, threads, pin_tile, cfg.tile_cols, cfg.min_rows_per_task);
-    let cache = CACHE.get_or_init(|| Mutex::new(Vec::new()));
-    if let Ok(hits) = cache.lock() {
+    let key = CacheKey::new(sig, cfg, threads, pin_tile, pin_micro_rows);
+    if let Ok(hits) = cache().lock() {
         if let Some((_, p)) = hits.iter().find(|(k, _)| *k == key) {
+            stats.cache_hits += 1;
             return *p;
         }
     }
-    let params = tune_uncached(shape, cfg, threads, pin_tile);
-    if let Ok(mut hits) = cache.lock() {
+    if let Some(path) = disk {
+        let key_text = key.text();
+        if let Some((_, p)) = read_disk(path).into_iter().find(|(k, _)| *k == key_text) {
+            if let Ok(mut hits) = cache().lock() {
+                hits.push((key, p));
+            }
+            stats.cache_hits += 1;
+            return p;
+        }
+    }
+    stats.cache_misses += 1;
+    let params = tune_uncached(sig, cfg, threads, pin_tile, pin_micro_rows);
+    if let Ok(mut hits) = cache().lock() {
         hits.push((key, params));
+    }
+    if let Some(path) = disk {
+        write_disk(path, &key.text(), &params);
     }
     params
 }
 
-/// One synthetic workload: a 65:30:5 Fixed-4 / PoT-4 / Fixed-8 row mix
-/// (the repo's canonical scheme ratio) in the class-sorted layout, plus
-/// 4-bit activations with `batch` rows.
+/// Shape-only tuning with the canonical scheme mix and no disk cache —
+/// the benchmark entry point (kept from the one-shape-per-model tuner).
+pub fn tune(shape: TuneShape, cfg: &ParallelConfig, pin_tile: bool) -> TunedParams {
+    let sig = LayerSig::canonical(shape.rows, shape.cols, shape.batch);
+    tune_layer(sig, cfg, pin_tile, None, None, &mut TuneStats::default())
+}
+
+/// One synthetic workload: `counts` rows per scheme class (the tuned
+/// layer's own mix) in the class-sorted layout, plus 4-bit activations
+/// with `batch` rows.
 struct Workload {
     acts: PackedActs,
     sorted: SortedWeights,
@@ -205,24 +490,18 @@ struct Workload {
 }
 
 impl Workload {
-    fn build(rows: usize, cols: usize, batch: usize) -> Workload {
+    fn build(rows: usize, cols: usize, batch: usize, counts: [usize; 4]) -> Workload {
         let mut rng = Rng::new(0x7a11e7);
         let xd: Vec<f32> = (0..batch * cols).map(|_| rng.uniform(0.0, 1.0)).collect();
         let x = Mat::from_vec(batch, cols, xd);
         let w = Mat::from_vec(rows, cols, rng.normal_vec(rows * cols, 0.4));
         let alpha: Vec<f32> =
             (0..rows).map(|r| crate::quant::default_alpha(w.row(r))).collect();
-        let schemes: Vec<Scheme> = (0..rows)
-            .map(|r| {
-                if r * 20 < rows * 13 {
-                    Scheme::FixedW4A4
-                } else if r * 20 < rows * 19 {
-                    Scheme::PotW4A4
-                } else {
-                    Scheme::FixedW8A4
-                }
-            })
-            .collect();
+        let mut schemes = Vec::with_capacity(rows);
+        for (k, s) in RowPartition::CLASS_ORDER.iter().enumerate() {
+            schemes.extend((0..counts[k]).map(|_| *s));
+        }
+        debug_assert_eq!(schemes.len(), rows, "counts must sum to rows");
         let packed = PackedWeights::quantize(&w, &schemes, &alpha);
         let sorted = SortedWeights::from_packed(&packed);
         let acts = PackedActs::quantize(&x, 1.0, 4);
@@ -263,35 +542,81 @@ impl Workload {
     }
 }
 
-/// Sequential engine with one knob overridden.
-fn engine(tile_cols: usize) -> MixedGemm {
+/// Sequential engine with the two block knobs overridden.
+fn engine(micro_rows: usize, tile_cols: usize) -> MixedGemm {
     MixedGemm::with_config(ParallelConfig {
         threads: 1,
         tile_cols,
         min_rows_per_task: DEFAULT_MIN_ROWS_PER_TASK,
+        micro_rows,
     })
 }
 
 fn tune_uncached(
-    shape: TuneShape,
+    sig: LayerSig,
     cfg: &ParallelConfig,
     threads: usize,
     pin_tile: bool,
+    pin_micro_rows: Option<usize>,
 ) -> TunedParams {
-    let wl = Workload::build(shape.rows, shape.cols, shape.batch);
+    let shape = sig.shape();
+    let counts = sig.scaled_counts(shape.rows);
+    let wl = Workload::build(shape.rows, shape.cols, shape.batch, counts);
     let mut scratch = GemmScratch::new(1);
     let mut out = Mat::zeros(shape.batch, wl.rows);
 
-    // tile_cols: sequential sweep, incumbent = the configured value
+    // micro_rows: sequential sweep at the baseline tile, incumbent = the
+    // configured height; a pin (the bench ablation twin) or an explicit
+    // non-default config value skips the sweep entirely
+    let mut micro_rows = pin_micro_rows.unwrap_or(cfg.micro_rows);
+    if pin_micro_rows.is_none() && cfg.micro_rows == DEFAULT_MICRO_ROWS {
+        let mut best = wl.time(
+            &engine(micro_rows, cfg.tile_cols),
+            cfg.min_rows_per_task,
+            false,
+            &mut scratch,
+            &mut out,
+        );
+        for cand in MICRO_ROWS_CANDIDATES {
+            if cand == cfg.micro_rows {
+                continue;
+            }
+            let ns = wl.time(
+                &engine(cand, cfg.tile_cols),
+                cfg.min_rows_per_task,
+                false,
+                &mut scratch,
+                &mut out,
+            );
+            if (ns as f64) < best as f64 * IMPROVEMENT {
+                best = ns;
+                micro_rows = cand;
+            }
+        }
+    }
+
+    // tile_cols: sequential sweep at the winning block height,
+    // incumbent = the configured value
     let mut tile_cols = cfg.tile_cols;
     if !pin_tile {
-        let mut best =
-            wl.time(&engine(tile_cols), cfg.min_rows_per_task, false, &mut scratch, &mut out);
+        let mut best = wl.time(
+            &engine(micro_rows, tile_cols),
+            cfg.min_rows_per_task,
+            false,
+            &mut scratch,
+            &mut out,
+        );
         for cand in TILE_CANDIDATES {
             if cand == cfg.tile_cols {
                 continue;
             }
-            let ns = wl.time(&engine(cand), cfg.min_rows_per_task, false, &mut scratch, &mut out);
+            let ns = wl.time(
+                &engine(micro_rows, cand),
+                cfg.min_rows_per_task,
+                false,
+                &mut scratch,
+                &mut out,
+            );
             if (ns as f64) < best as f64 * IMPROVEMENT {
                 best = ns;
                 tile_cols = cand;
@@ -305,11 +630,11 @@ fn tune_uncached(
     // panels win, spilled ones lose, tiny ones waste amortization).
     let mut panel_bytes = DEFAULT_PANEL_BYTES;
     {
-        let tile_engine = engine(tile_cols);
+        let tile_engine = engine(micro_rows, tile_cols);
         let positions = |pb: usize| (pb / shape.cols.max(1)).clamp(8, 256);
         let per_elem = |pb: usize, scratch: &mut GemmScratch| {
             let p = positions(pb);
-            let pwl = Workload::build(shape.rows, shape.cols, p);
+            let pwl = Workload::build(shape.rows, shape.cols, p, counts);
             let mut pout = Mat::zeros(p, pwl.rows);
             let ns = pwl.time(&tile_engine, cfg.min_rows_per_task, false, scratch, &mut pout);
             ns as f64 / (p * shape.rows * shape.cols) as f64
@@ -335,6 +660,7 @@ fn tune_uncached(
             threads,
             tile_cols,
             min_rows_per_task: cfg.min_rows_per_task,
+            micro_rows,
         });
         let mut pscratch = GemmScratch::new(par.lanes());
         let mut best = wl.time(&par, min_rows, true, &mut pscratch, &mut out);
@@ -350,7 +676,13 @@ fn tune_uncached(
         }
     }
 
-    TunedParams { tile_cols, min_rows_per_task: min_rows, panel_bytes, source: TuneSource::Tuned }
+    TunedParams {
+        micro_rows,
+        tile_cols,
+        min_rows_per_task: min_rows,
+        panel_bytes,
+        source: TuneSource::Tuned,
+    }
 }
 
 #[cfg(test)]
@@ -359,10 +691,16 @@ mod tests {
 
     #[test]
     fn defaults_reflect_config_and_are_marked() {
-        let cfg = ParallelConfig { threads: 1, tile_cols: 33, min_rows_per_task: 5 };
+        let cfg = ParallelConfig {
+            threads: 1,
+            tile_cols: 33,
+            min_rows_per_task: 5,
+            micro_rows: 6,
+        };
         let p = TunedParams::defaults(&cfg);
         assert_eq!(p.tile_cols, 33);
         assert_eq!(p.min_rows_per_task, 5);
+        assert_eq!(p.micro_rows, 6);
         assert_eq!(p.panel_bytes, DEFAULT_PANEL_BYTES);
         assert_eq!(p.source, TuneSource::Defaults);
         assert_eq!(p.source.name(), "defaults");
@@ -371,6 +709,7 @@ mod tests {
     #[test]
     fn apply_to_lets_explicit_knobs_win() {
         let tuned = TunedParams {
+            micro_rows: 8,
             tile_cols: 128,
             min_rows_per_task: 16,
             panel_bytes: 64 * 1024,
@@ -382,11 +721,18 @@ mod tests {
         assert_eq!(merged.threads, 3);
         assert_eq!(merged.tile_cols, 128);
         assert_eq!(merged.min_rows_per_task, 16);
+        assert_eq!(merged.micro_rows, 8);
         // explicit values survive
-        let explicit = ParallelConfig { threads: 1, tile_cols: 48, min_rows_per_task: 2 };
+        let explicit = ParallelConfig {
+            threads: 1,
+            tile_cols: 48,
+            min_rows_per_task: 2,
+            micro_rows: 6,
+        };
         let kept = tuned.apply_to(explicit);
         assert_eq!(kept.tile_cols, 48);
         assert_eq!(kept.min_rows_per_task, 2);
+        assert_eq!(kept.micro_rows, 6);
     }
 
     #[test]
@@ -395,6 +741,19 @@ mod tests {
         assert_eq!(s, TuneShape { rows: 64, cols: 1024, batch: 64 });
         let t = TuneShape::for_layer(1, 1, 1);
         assert_eq!(t, TuneShape { rows: 16, cols: 32, batch: 8 });
+    }
+
+    #[test]
+    fn canonical_sig_counts_sum_and_scale() {
+        let sig = LayerSig::canonical(40, 64, 8);
+        assert_eq!(sig.counts.iter().sum::<usize>(), 40);
+        assert_eq!(sig.counts[3], 0, "canonical mix has no APoT rows");
+        // scaling a real mix preserves totals and keeps every class that
+        // had rows when the clamp budget allows
+        let real = LayerSig { rows: 4096, cols: 4096, batch: 256, counts: [1024, 2048, 512, 512] };
+        let scaled = real.scaled_counts(64);
+        assert_eq!(scaled.iter().sum::<usize>(), 64);
+        assert!(scaled[1] >= scaled[0], "largest class stays largest");
     }
 
     #[test]
@@ -407,6 +766,11 @@ mod tests {
             TILE_CANDIDATES.contains(&a.tile_cols) || a.tile_cols == cfg.tile_cols,
             "tile {}",
             a.tile_cols
+        );
+        assert!(
+            MICRO_ROWS_CANDIDATES.contains(&a.micro_rows),
+            "micro_rows {}",
+            a.micro_rows
         );
         assert!(PANEL_CANDIDATES.contains(&a.panel_bytes));
         // sequential config never tunes the chunk granularity
@@ -423,5 +787,19 @@ mod tests {
         let p = tune(shape, &cfg, true);
         assert_eq!(p.tile_cols, cfg.tile_cols);
         assert_eq!(p.source, TuneSource::Tuned);
+    }
+
+    #[test]
+    fn pinned_micro_rows_skips_the_sweep() {
+        let cfg = ParallelConfig::sequential();
+        let sig = LayerSig::canonical(16, 40, 8);
+        let mut stats = TuneStats::default();
+        let p = tune_layer(sig, &cfg, false, Some(4), None, &mut stats);
+        assert_eq!(p.micro_rows, 4);
+        assert_eq!(stats, TuneStats { cache_hits: 0, cache_misses: 1 });
+        // explicit non-default config heights are honored the same way
+        let explicit = ParallelConfig { micro_rows: 6, ..ParallelConfig::sequential() };
+        let q = tune_layer(sig, &explicit, false, None, None, &mut stats);
+        assert_eq!(q.micro_rows, 6);
     }
 }

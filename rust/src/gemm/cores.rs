@@ -12,9 +12,10 @@
 //!   model-order [`PackedWeights`] (the grouped-conv path and the
 //!   row-at-a-time baseline the benches compare against).
 //! * [`GemmCore::run_block_tiled`] — the hot path: up to
-//!   [`MICRO_ROWS`] same-class rows of the class-sorted
-//!   [`SortedWeights`] layout per call, with the inner dot product
-//!   dispatched to the runtime-selected SIMD kernel
+//!   [`MAX_MICRO_ROWS`] same-class rows of the class-sorted
+//!   [`SortedWeights`] layout per call (the block height is the
+//!   engine's — possibly per-layer-tuned — `micro_rows`), with the
+//!   inner dot product dispatched to the runtime-selected SIMD kernel
 //!   ([`super::simd::dot_block`]). One activation tile load feeds the
 //!   whole row block.
 //!
@@ -28,7 +29,7 @@
 //! *fixed* tile size (which is all the parallel executor needs).
 
 use super::packed::{code_map, ActsView, PackedActs, PackedWeights};
-use super::simd::{self, KernelIsa, MICRO_ROWS};
+use super::simd::{self, KernelIsa, MAX_MICRO_ROWS};
 use super::sorted::SortedWeights;
 use crate::quant::apot::ApotQuantizer;
 use crate::quant::{Mat, Scheme};
@@ -84,11 +85,11 @@ pub fn requant_block(
     col: &[f32],
     nr: usize,
     batch: usize,
-    bias: &[f32; MICRO_ROWS],
+    bias: &[f32; MAX_MICRO_ROWS],
     rq: Requant,
     codes: &mut [u8],
 ) {
-    debug_assert!(nr <= MICRO_ROWS);
+    debug_assert!(nr <= MAX_MICRO_ROWS);
     debug_assert!(col.len() >= nr * batch && codes.len() >= nr * batch);
     for j in 0..nr {
         requant_row(
@@ -133,7 +134,7 @@ pub trait GemmCore: Sync {
     );
 
     /// Micro-kernel block over the class-sorted layout: compute `nr`
-    /// (1..=[`MICRO_ROWS`]) sorted rows `r0..r0 + nr` — all of this
+    /// (1..=[`MAX_MICRO_ROWS`]) sorted rows `r0..r0 + nr` — all of this
     /// core's class — against every batch row of the activation view
     /// (the full matrix, or one implicit-GEMM panel), writing
     /// `out[j * batch + b] = dequant(dot(acts[b], sorted row r0 + j))`
@@ -264,7 +265,7 @@ fn mac_block_i32(
 ) {
     let batch = acts.rows;
     let cols = acts.cols;
-    debug_assert!(nr >= 1 && nr <= MICRO_ROWS);
+    debug_assert!(nr >= 1 && nr <= MAX_MICRO_ROWS);
     debug_assert!(acc.len() >= nr * batch);
     debug_assert!(out.len() >= nr * batch);
     let acc = &mut acc[..nr * batch];
@@ -281,7 +282,7 @@ fn mac_block_i32(
     while start < cols {
         let end = cols.min(start.saturating_add(tile));
         let wt = &wblock[start..];
-        let mut sums = [0i32; MICRO_ROWS];
+        let mut sums = [0i32; MAX_MICRO_ROWS];
         for b in 0..batch {
             let at = &acts.row(b)[start..end];
             simd::dot_block(isa, at, wt, cols, nr, &mut sums);
@@ -626,7 +627,8 @@ mod tests {
     fn block_kernel_matches_row_kernel_per_scheme() {
         // single-scheme layers: the sorted layout is the identity, so the
         // block kernel must reproduce run_row_tiled cell for cell, for
-        // every ISA, block size, and tile size.
+        // every ISA, block size (incl. the fused 6/8-row kernels and
+        // their odd tails), and tile size.
         let apot = GemmApot4::default();
         for scheme in [
             Scheme::PotW4A4,
@@ -634,7 +636,7 @@ mod tests {
             Scheme::FixedW8A4,
             Scheme::ApotW4A4,
         ] {
-            let (acts, w) = setup(scheme, 6, 70, 3);
+            let (acts, w) = setup(scheme, 9, 70, 3);
             let sw = SortedWeights::from_packed(&w);
             let core: &dyn GemmCore = match scheme {
                 Scheme::PotW4A4 => &GemmPoT4,
@@ -644,9 +646,21 @@ mod tests {
             };
             let batch = acts.rows;
             for tile in [0usize, 7, 33, 70] {
-                for (r0, nr) in [(0usize, 1usize), (0, 4), (2, 4), (4, 2), (5, 1)] {
-                    let mut acc = vec![0i32; MICRO_ROWS * batch];
-                    let mut block = vec![f32::NAN; MICRO_ROWS * batch];
+                for (r0, nr) in [
+                    (0usize, 1usize),
+                    (0, 4),
+                    (2, 4),
+                    (4, 2),
+                    (5, 1),
+                    (0, 6),
+                    (1, 6),
+                    (0, 8),
+                    (1, 8),
+                    (2, 7),
+                    (3, 5),
+                ] {
+                    let mut acc = vec![0i32; MAX_MICRO_ROWS * batch];
+                    let mut block = vec![f32::NAN; MAX_MICRO_ROWS * batch];
                     for isa in simd::ISA_LADDER {
                         core.run_block_tiled(
                             acts.view(),
@@ -747,11 +761,11 @@ mod tests {
     #[test]
     fn requant_block_and_row_agree() {
         let mut rng = Rng::new(13);
-        let (nr, batch) = (3usize, 5usize);
-        let col: Vec<f32> = (0..MICRO_ROWS * batch).map(|_| rng.normal()).collect();
-        let bias = [0.1f32, -0.2, 0.0, 0.3];
+        let (nr, batch) = (6usize, 5usize);
+        let col: Vec<f32> = (0..MAX_MICRO_ROWS * batch).map(|_| rng.normal()).collect();
+        let bias = [0.1f32, -0.2, 0.0, 0.3, -0.4, 0.25, 0.0, -0.1];
         let rq = Requant::new(0.9, 4);
-        let mut block = vec![0xffu8; MICRO_ROWS * batch];
+        let mut block = vec![0xffu8; MAX_MICRO_ROWS * batch];
         requant_block(&col, nr, batch, &bias, rq, &mut block);
         for j in 0..nr {
             let mut row = vec![0u8; batch];

@@ -13,9 +13,10 @@
 //! load time so every class is one contiguous block, and a partition is
 //! just four ranges over that sorted row space. Dispatch walks
 //! [`TaskChunk`] ranges (no per-row index lists), hands each chunk to its
-//! core's [`GemmCore::run_block_tiled`] micro-kernel in [`MICRO_ROWS`]-row
-//! blocks, and scatters the block outputs back to model row order through
-//! the stored permutation.
+//! core's [`GemmCore::run_block_tiled`] micro-kernel in
+//! [`ParallelConfig::micro_rows`]-row blocks (a tuned height, 4 by
+//! default, at most [`MAX_MICRO_ROWS`]), and scatters the block outputs
+//! back to model row order through the stored permutation.
 //!
 //! # Parallel execution
 //!
@@ -52,7 +53,7 @@ use super::cores::{
 };
 use super::packed::{ActsView, PackedActs, PackedWeights};
 use super::panels::ColTileSource;
-use super::simd::{Isa, KernelIsa, MICRO_ROWS};
+use super::simd::{Isa, KernelIsa, MAX_MICRO_ROWS, MICRO_ROWS};
 use super::sorted::SortedWeights;
 use crate::quant::{Mat, Scheme};
 use crate::util::pool::ThreadPool;
@@ -145,12 +146,20 @@ pub struct ParallelConfig {
     /// Worker threads; 0 = one per available core.
     pub threads: usize,
     /// Column-tile width for the packed inner loops (0 = untiled). 256
-    /// i8 codes keep a [`MICRO_ROWS`]-row weight tile comfortably inside
+    /// i8 codes keep a `micro_rows`-row weight tile comfortably inside
     /// L1 next to the activation tile.
     pub tile_cols: usize,
     /// Minimum rows per parallel task: the chunk granularity of the
     /// per-class queues (smaller = better balance, more overhead).
     pub min_rows_per_task: usize,
+    /// Micro-kernel row-block height: how many sorted rows each
+    /// [`GemmCore::run_block_tiled`] block sweeps per activation pass.
+    /// Must be in `1..=`[`MAX_MICRO_ROWS`]; the SIMD tiers carry fused
+    /// kernels for the [`super::simd::MICRO_ROWS_CANDIDATES`] heights
+    /// (other values compose 4-row + single-row kernels). Any height
+    /// produces bit-identical output — i32 accumulation per cell is
+    /// independent of how rows are grouped into blocks.
+    pub micro_rows: usize,
 }
 
 /// The untuned `tile_cols` default. The plan-compile autotuner treats a
@@ -161,6 +170,10 @@ pub const DEFAULT_TILE_COLS: usize = 256;
 /// The untuned `min_rows_per_task` default (same explicit-wins contract
 /// as [`DEFAULT_TILE_COLS`]).
 pub const DEFAULT_MIN_ROWS_PER_TASK: usize = 8;
+/// The untuned `micro_rows` default (same explicit-wins contract as
+/// [`DEFAULT_TILE_COLS`]): the classic 4-row block every ISA tier
+/// carries a fused kernel for.
+pub const DEFAULT_MICRO_ROWS: usize = MICRO_ROWS;
 
 impl Default for ParallelConfig {
     fn default() -> ParallelConfig {
@@ -168,6 +181,7 @@ impl Default for ParallelConfig {
             threads: 0,
             tile_cols: DEFAULT_TILE_COLS,
             min_rows_per_task: DEFAULT_MIN_ROWS_PER_TASK,
+            micro_rows: DEFAULT_MICRO_ROWS,
         }
     }
 }
@@ -247,7 +261,7 @@ pub fn chunk_tasks(part: &RowPartition, chunk_rows: usize) -> Vec<TaskChunk> {
 }
 
 /// One lane of GEMM dispatch scratch: the f32 output block of one
-/// [`MICRO_ROWS`]-row micro-kernel block across the batch (row-major
+/// [`MAX_MICRO_ROWS`]-row micro-kernel block across the batch (row-major
 /// `[j * batch + b]`), the i32 accumulator block the cores MAC into,
 /// the u8 code block the fused requantization epilogue writes before
 /// the scatter (integer-resident dispatch only), and the u8 activation
@@ -287,7 +301,7 @@ impl GemmScratch {
     }
 
     /// `lanes` lanes preallocated for `elems` scratch elements each
-    /// (i.e. [`MICRO_ROWS`] x the largest batch or panel tile) plus
+    /// (i.e. [`MAX_MICRO_ROWS`] x the largest batch or panel tile) plus
     /// `panel_elems` u8 codes of implicit-GEMM panel space.
     pub fn with_capacity(lanes: usize, elems: usize, panel_elems: usize) -> GemmScratch {
         GemmScratch {
@@ -298,15 +312,16 @@ impl GemmScratch {
     }
 
     /// Resize the first `lanes` lanes to one micro-kernel block
-    /// (`MICRO_ROWS * batch` elements), creating them if missing;
-    /// allocation-free when within the preallocated capacities. The
-    /// panel buffer is left alone — the packer resizes it per tile,
-    /// inside its reserved capacity. Lanes beyond `lanes` are left
-    /// untouched — the sequential path only pays for lane 0 even when
-    /// the engine owns a wide pool.
+    /// (`MAX_MICRO_ROWS * batch` elements — the widest block any tuned
+    /// `micro_rows` can sweep, so retuning a layer never regrows a
+    /// lane), creating them if missing; allocation-free when within the
+    /// preallocated capacities. The panel buffer is left alone — the
+    /// packer resizes it per tile, inside its reserved capacity. Lanes
+    /// beyond `lanes` are left untouched — the sequential path only
+    /// pays for lane 0 even when the engine owns a wide pool.
     fn ensure(&mut self, lanes: usize, batch: usize) {
         let lanes = lanes.max(1);
-        let elems = MICRO_ROWS * batch;
+        let elems = MAX_MICRO_ROWS * batch;
         while self.lanes.len() < lanes {
             self.lanes.push(Lane::with_capacity(elems, 0));
         }
@@ -325,8 +340,8 @@ impl GemmScratch {
         (&mut lane.col[..batch], &mut lane.acc[..batch])
     }
 
-    /// Lane 0 as a full `MICRO_ROWS * batch` block (the sequential block
-    /// dispatch).
+    /// Lane 0 as a full `MAX_MICRO_ROWS * batch` block (the sequential
+    /// block dispatch).
     fn lane0_block(&mut self, batch: usize) -> &mut Lane {
         self.ensure(1, batch);
         &mut self.lanes[0]
@@ -575,6 +590,18 @@ impl MixedGemm {
         self.isa = isa.validated();
     }
 
+    /// Install one layer's tuned block knobs before its dispatch: the
+    /// micro-kernel row-block height (clamped to
+    /// `1..=`[`MAX_MICRO_ROWS`]) and the column-tile width (0 =
+    /// untiled). The plan executor calls this per op with the knobs the
+    /// per-layer autotuner baked into [`crate::model::PlanOp`]; knobs
+    /// never change output bits (see [`ParallelConfig::micro_rows`] /
+    /// the dispatch docs), only the schedule.
+    pub fn set_block_knobs(&mut self, micro_rows: usize, tile_cols: usize) {
+        self.cfg.micro_rows = micro_rows.clamp(1, MAX_MICRO_ROWS);
+        self.cfg.tile_cols = tile_cols;
+    }
+
     /// Whether a pool is attached (i.e. parallel dispatch is possible).
     pub fn is_parallel(&self) -> bool {
         self.pool.is_some()
@@ -703,7 +730,7 @@ impl MixedGemm {
     /// Allocation-free: runs the mixed GEMM over the class-sorted layout
     /// `sw` with a precompiled `chunks` schedule (see [`chunk_tasks`]),
     /// MACing through caller-provided `scratch` lanes in
-    /// [`MICRO_ROWS`]-row micro-kernel blocks and scattering into the
+    /// [`ParallelConfig::micro_rows`]-row micro-kernel blocks and scattering into the
     /// caller-provided `out` (model row order, via the stored
     /// permutation), which must already be sized to `(acts.rows,
     /// sw.rows)`. No heap allocation happens here once `scratch` has
@@ -1135,9 +1162,10 @@ impl MixedGemm {
         let batch = acts.rows;
         let core = self.core_for(chunk.scheme);
         let tile = self.cfg.tile_cols;
+        let mr = self.cfg.micro_rows.clamp(1, MAX_MICRO_ROWS);
         let mut r = chunk.start;
         while r < chunk.end {
-            let nr = MICRO_ROWS.min(chunk.end - r);
+            let nr = mr.min(chunk.end - r);
             core.run_block_tiled(acts, sw, r, nr, tile, self.isa, acc, col);
             if let Some(add) = addend {
                 // fused-residual epilogue: per-cell, straight from the
@@ -1153,7 +1181,7 @@ impl MixedGemm {
                 r += nr;
                 continue;
             }
-            let mut bias_block = [0.0f32; MICRO_ROWS];
+            let mut bias_block = [0.0f32; MAX_MICRO_ROWS];
             for (j, b) in bias_block.iter_mut().enumerate().take(nr) {
                 *b = bias[sw.perm[r + j]];
             }
@@ -1187,9 +1215,10 @@ impl MixedGemm {
         }
     }
 
-    /// Run one chunk in [`MICRO_ROWS`]-row micro-kernel blocks, scattering
-    /// each block's output to model row order through `sw.perm`. `acts`
-    /// and `b_base` as in [`MixedGemm::run_chunk_quant`].
+    /// Run one chunk in [`ParallelConfig::micro_rows`]-row micro-kernel
+    /// blocks, scattering each block's output to model row order through
+    /// `sw.perm`. `acts` and `b_base` as in
+    /// [`MixedGemm::run_chunk_quant`].
     ///
     /// # Safety
     ///
@@ -1212,9 +1241,10 @@ impl MixedGemm {
         let batch = acts.rows;
         let core = self.core_for(chunk.scheme);
         let tile = self.cfg.tile_cols;
+        let mr = self.cfg.micro_rows.clamp(1, MAX_MICRO_ROWS);
         let mut r = chunk.start;
         while r < chunk.end {
-            let nr = MICRO_ROWS.min(chunk.end - r);
+            let nr = mr.min(chunk.end - r);
             core.run_block_tiled(acts, sw, r, nr, tile, self.isa, acc, col);
             for j in 0..nr {
                 let orig = sw.perm[r + j];
@@ -1416,12 +1446,20 @@ mod tests {
         let acts = PackedActs::quantize(&x, 1.0, 4);
         let pw = PackedWeights::quantize(&w, &schemes, &alpha);
         let part = RowPartition::from_schemes(&schemes);
-        let cfg = ParallelConfig { threads: 4, tile_cols: 16, min_rows_per_task: 3 };
-        let par = MixedGemm::with_config(cfg);
-        let want = par.run_partitioned_seq(&acts, &pw, &part);
-        for _ in 0..3 {
-            let got = par.run_partitioned(&acts, &pw, &part);
-            assert_eq!(got.data, want.data, "parallel output diverged");
+        // every tuned block height must agree with the sequential path
+        for micro_rows in [1usize, 4, 6, 8] {
+            let cfg = ParallelConfig {
+                threads: 4,
+                tile_cols: 16,
+                min_rows_per_task: 3,
+                micro_rows,
+            };
+            let par = MixedGemm::with_config(cfg);
+            let want = par.run_partitioned_seq(&acts, &pw, &part);
+            for _ in 0..3 {
+                let got = par.run_partitioned(&acts, &pw, &part);
+                assert_eq!(got.data, want.data, "mr {micro_rows} parallel output diverged");
+            }
         }
     }
 
@@ -1466,11 +1504,12 @@ mod tests {
             threads: 3,
             tile_cols: 16,
             min_rows_per_task: 4,
+            ..ParallelConfig::default()
         });
         let want = g.run_partitioned_seq(&acts, &pw, &part);
         let sw = SortedWeights::from_packed(&pw);
         let chunks = chunk_tasks(sw.partition(), 4);
-        let mut scratch = GemmScratch::with_capacity(g.lanes(), MICRO_ROWS * acts.rows, 0);
+        let mut scratch = GemmScratch::with_capacity(g.lanes(), MAX_MICRO_ROWS * acts.rows, 0);
         let mut out = Mat::zeros(acts.rows, pw.rows);
         for parallel in [false, true] {
             out.data.fill(f32::NAN); // must be fully overwritten
@@ -1613,6 +1652,7 @@ mod tests {
             threads: 3,
             tile_cols: 16,
             min_rows_per_task: 3,
+            micro_rows: 6,
         });
         let mut scratch = GemmScratch::new(g.lanes());
 
@@ -1724,6 +1764,7 @@ mod tests {
             threads: 3,
             tile_cols: 16,
             min_rows_per_task: 4,
+            ..ParallelConfig::default()
         });
         let mut scratch = GemmScratch::new(g.lanes());
 
@@ -1869,6 +1910,7 @@ mod tests {
             threads: 3,
             tile_cols: 16,
             min_rows_per_task: 3,
+            micro_rows: 6,
         });
         let mut scratch = GemmScratch::new(g.lanes());
         let mut want = Mat::zeros(batch, rows);
@@ -1957,6 +1999,7 @@ mod tests {
             threads: 2,
             tile_cols: 8,
             min_rows_per_task: 2,
+            micro_rows: 8,
         });
         let mut scratch = GemmScratch::new(g.lanes());
 

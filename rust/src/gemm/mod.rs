@@ -22,15 +22,18 @@
 //!   ([`ColTileSource`]): conv activations stream into per-lane
 //!   cache-resident panels (gathered from NCHW codes or quantized from
 //!   f32 on the fly) instead of a materialized im2col buffer.
-//! * [`simd`] — runtime-dispatched micro-kernels ([`dot_block`],
-//!   [`MICRO_ROWS`] rows per block) on a five-tier ISA ladder: AVX-512
-//!   VNNI, AVX2, SSE4.1, NEON dot-product, scalar. Every tier is
-//!   bit-exact; `RMSMP_ISA=<tier>` forces one (clamped to the hardware)
-//!   and `RMSMP_NO_SIMD=1` is a deprecated alias for `RMSMP_ISA=scalar`.
+//! * [`simd`] — runtime-dispatched micro-kernels ([`dot_block`], a
+//!   tuned 4/6/8-row block height up to [`MAX_MICRO_ROWS`] rows) on a
+//!   five-tier ISA ladder: AVX-512 VNNI, AVX2, SSE4.1, NEON
+//!   dot-product, scalar. Every tier and height is bit-exact;
+//!   `RMSMP_ISA=<tier>` forces a tier (clamped to the hardware) and
+//!   `RMSMP_NO_SIMD=1` is a deprecated alias for `RMSMP_ISA=scalar`.
 //! * [`autotune`] — the load-time microbenchmark the plan compiler runs
-//!   to pick `tile_cols` / `min_rows_per_task` / panel bytes for *this*
-//!   machine's cache hierarchy ([`TunedParams`]); `RMSMP_NO_TUNE=1`
-//!   keeps the fixed defaults.
+//!   per distinct layer signature to pick `micro_rows` / `tile_cols` /
+//!   `min_rows_per_task` / panel bytes for *this* machine's registers
+//!   and cache hierarchy ([`TunedParams`]); `RMSMP_NO_TUNE=1` keeps the
+//!   fixed defaults and `RMSMP_TUNE_CACHE=path` persists winners across
+//!   processes.
 //!
 //! All cores operate on *quantized codes* plus per-row scales, and their
 //! float results are bit-identical to fake-quant matmuls over the same
@@ -48,14 +51,19 @@ pub mod panels;
 pub mod simd;
 pub mod sorted;
 
-pub use autotune::{TuneShape, TuneSource, TunedParams, DEFAULT_PANEL_BYTES};
+pub use autotune::{
+    LayerSig, TuneShape, TuneSource, TuneStats, TunedParams, DEFAULT_PANEL_BYTES,
+};
 pub use cores::{requant_block, requant_row, GemmCore, GemmFixed4, GemmFixed8, GemmPoT4, Requant};
 pub use mixed::{
     chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, MixedGemm, OutLayout, ParallelConfig,
-    QuantEpilogue, RowPartition, TaskChunk, DEFAULT_MIN_ROWS_PER_TASK, DEFAULT_TILE_COLS,
+    QuantEpilogue, RowPartition, TaskChunk, DEFAULT_MICRO_ROWS, DEFAULT_MIN_ROWS_PER_TASK,
+    DEFAULT_TILE_COLS,
 };
 pub use nibble::NibblePacked;
 pub use packed::{ActsView, PackedActs, PackedWeights};
 pub use panels::{pack_patch_rows, pack_quant_patch_rows, ColTileSource, PatchGeometry};
-pub use simd::{dot_block, Isa, KernelIsa, ISA_LADDER, MICRO_ROWS};
+pub use simd::{
+    dot_block, Isa, KernelIsa, ISA_LADDER, MAX_MICRO_ROWS, MICRO_ROWS, MICRO_ROWS_CANDIDATES,
+};
 pub use sorted::SortedWeights;

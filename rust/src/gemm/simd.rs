@@ -1,11 +1,16 @@
 //! Runtime-dispatched SIMD micro-kernels for the integer GEMM cores.
 //!
-//! The unit of work is a **row block**: up to [`MICRO_ROWS`] weight rows
-//! of one scheme class, dotted against one activation row per call. The
-//! multi-row form is what makes the class-sorted layout pay off — one
-//! vector-width activation load feeds four weight rows, so the
-//! activation bandwidth of the inner loop drops 4x versus the
-//! row-at-a-time kernel.
+//! The unit of work is a **row block**: up to [`MAX_MICRO_ROWS`] weight
+//! rows of one scheme class, dotted against one activation row per
+//! call. The multi-row form is what makes the class-sorted layout pay
+//! off — one vector-width activation load feeds every weight row of the
+//! block, so the activation bandwidth of the inner loop drops by the
+//! block height versus the row-at-a-time kernel. The height itself is a
+//! **tuned parameter**: fused kernels exist at 4, 6, and 8 rows
+//! ([`MICRO_ROWS_CANDIDATES`]) on the register-rich tiers (AVX-512
+//! VNNI, AVX2, NEON — 6 or 8 accumulators still fit comfortably), the
+//! load-time autotuner picks the winner per layer, and
+//! [`MICRO_ROWS`] (4) stays the default that untuned configs run.
 //!
 //! Five implementations sit behind [`dot_block`] — the ISA ladder:
 //!
@@ -29,14 +34,21 @@
 //!   tests pin the SIMD paths against.
 //!
 //! All five accumulate the dot product exactly in i32, so they are
-//! **bit-identical** for any vector width, remainder handling, or ISA —
-//! integer addition is associative. The numeric caveats of the narrow
-//! tiers: the 16-bit intermediate of `maddubs` (AVX2/SSE) saturates for
-//! activation codes above 127, and NEON `sdot` reads the activation
-//! byte as signed — so [`Isa::wide_code_tier`] routes `bits > 7`
-//! activations on those tiers to the scalar kernel (this repo quantizes
-//! activations to 4 bits; the headroom is ~8.5x), while AVX-512 VNNI
-//! keeps the vector path.
+//! **bit-identical** for any vector width, block height, remainder
+//! handling, or ISA — integer addition is associative. The numeric
+//! caveat is **per 32-bit lane**, not per tier count, so it applies
+//! identically to the 4-, 6-, and 8-row variants of a tier: on the
+//! `maddubs`-based x86 tiers (AVX2, SSE) the 16-bit intermediate
+//! saturates for activation codes above 127, and NEON `sdot` reads the
+//! activation byte as signed (wrong for codes above 127). AVX-512 VNNI
+//! accumulates u8xi8 straight into i32 with no i16 intermediate, so it
+//! is exact for the full u8 range at every block height.
+//! [`Isa::wide_code_tier`] encodes exactly that split across the
+//! five-tier ladder: `bits > 7` activations reroute AVX2, SSE4.1, and
+//! NEON (every `maddubs`/`sdot` tier) to the scalar kernel, while
+//! AVX-512 VNNI and scalar keep their own path. This repo quantizes
+//! activations to 4 bits by default, so the reroute only triggers for
+//! the 8-bit-activation layers.
 //!
 //! ISA selection is runtime-only (`is_x86_feature_detected!` /
 //! `is_aarch64_feature_detected!`), never a compile-time feature, so one
@@ -53,11 +65,24 @@
 //! the clamp now runs **once**, where the engine resolves its ISA, and
 //! the token type proves it to the kernel layer.
 
-/// Weight rows per micro-kernel block. Four rows keep the vector kernels
-/// at four accumulators plus one activation register — comfortably
-/// inside 16 ymm / 32 zmm / 32 NEON registers — while quartering
-/// activation reloads.
+/// Default weight rows per micro-kernel block. Four rows keep the vector
+/// kernels at four accumulators plus one activation register —
+/// comfortably inside 16 ymm / 32 zmm / 32 NEON registers — while
+/// quartering activation reloads. The per-layer autotuner may widen a
+/// block up to [`MAX_MICRO_ROWS`] where the microbench shows a win.
 pub const MICRO_ROWS: usize = 4;
+
+/// The widest row block any kernel accepts (and the height the per-lane
+/// GEMM scratch is sized for). Eight accumulators plus one activation
+/// register still fit the 16-ymm AVX2 budget and leave the 32-register
+/// zmm/NEON files mostly idle.
+pub const MAX_MICRO_ROWS: usize = 8;
+
+/// Block heights with a fused multi-row kernel on the register-rich
+/// tiers — the candidate set the load-time autotuner sweeps per layer.
+/// (SSE4.1 composes 6/8-row blocks from its 4-row kernel: correct, but
+/// never faster, so the tuner naturally keeps 4 there.)
+pub const MICRO_ROWS_CANDIDATES: [usize; 3] = [4, 6, 8];
 
 /// Instruction-set choice for the integer dot kernels, resolved once per
 /// [`crate::gemm::MixedGemm`] (see [`Isa::detect`]).
@@ -269,9 +294,9 @@ pub fn dot_block(
     w: &[i8],
     stride: usize,
     nr: usize,
-    sums: &mut [i32; MICRO_ROWS],
+    sums: &mut [i32; MAX_MICRO_ROWS],
 ) {
-    debug_assert!(nr >= 1 && nr <= MICRO_ROWS);
+    debug_assert!(nr >= 1 && nr <= MAX_MICRO_ROWS);
     debug_assert!(nr == 1 || stride >= a.len());
     debug_assert!(w.len() >= (nr - 1) * stride + a.len());
     match isa.get() {
@@ -280,34 +305,32 @@ pub fn dot_block(
         // Isa::validated(), which clamped the variant to what the
         // runtime CPU feature check allows; slice bounds are asserted.
         Isa::Avx512Vnni => unsafe {
-            if nr == MICRO_ROWS {
-                x86::dot4_vnni(a, w, stride, sums);
-            } else {
-                for (j, s) in sums.iter_mut().enumerate().take(nr) {
-                    *s = x86::dot1_vnni(a, &w[j * stride..j * stride + a.len()]);
-                }
+            match nr {
+                4 => x86::dot4_vnni(a, w, stride, sums),
+                6 => x86::dotn_vnni::<6>(a, w, stride, sums),
+                8 => x86::dotn_vnni::<8>(a, w, stride, sums),
+                _ => x86::dot_any_vnni(a, w, stride, nr, sums),
             }
         },
         #[cfg(target_arch = "x86_64")]
         // SAFETY: as above — the token proved AVX2 is present.
         Isa::Avx2 => unsafe {
-            if nr == MICRO_ROWS {
-                x86::dot4_avx2(a, w, stride, sums);
-            } else {
-                for (j, s) in sums.iter_mut().enumerate().take(nr) {
-                    *s = x86::dot1_avx2(a, &w[j * stride..j * stride + a.len()]);
-                }
+            match nr {
+                4 => x86::dot4_avx2(a, w, stride, sums),
+                6 => x86::dotn_avx2::<6>(a, w, stride, sums),
+                8 => x86::dotn_avx2::<8>(a, w, stride, sums),
+                _ => x86::dot_any_avx2(a, w, stride, nr, sums),
             }
         },
         #[cfg(target_arch = "x86_64")]
         // SAFETY: as above — the token proved SSSE3/SSE4.1 are present.
+        // SSE has no fused 6/8-row kernel (the xmm file is tight):
+        // wider blocks compose 4-row kernels + single-row remainders.
         Isa::Sse41 => unsafe {
             if nr == MICRO_ROWS {
                 x86::dot4_sse(a, w, stride, sums);
             } else {
-                for (j, s) in sums.iter_mut().enumerate().take(nr) {
-                    *s = x86::dot1_sse(a, &w[j * stride..j * stride + a.len()]);
-                }
+                x86::dot_any_sse(a, w, stride, nr, sums);
             }
         },
         #[cfg(target_arch = "aarch64")]
@@ -316,12 +339,11 @@ pub fn dot_block(
         // this tier (for_wide_codes), so the i8 reinterpretation of the
         // activation bytes is value-preserving.
         Isa::Neon => unsafe {
-            if nr == MICRO_ROWS {
-                arm::dot4_neon(a, w, stride, sums);
-            } else {
-                for (j, s) in sums.iter_mut().enumerate().take(nr) {
-                    *s = arm::dot1_neon(a, &w[j * stride..j * stride + a.len()]);
-                }
+            match nr {
+                4 => arm::dot4_neon(a, w, stride, sums),
+                6 => arm::dotn_neon::<6>(a, w, stride, sums),
+                8 => arm::dotn_neon::<8>(a, w, stride, sums),
+                _ => arm::dot_any_neon(a, w, stride, nr, sums),
             }
         },
         _ => dot_block_scalar(a, w, stride, nr, sums),
@@ -330,7 +352,13 @@ pub fn dot_block(
 
 /// The portable kernel (also the oracle the SIMD property tests compare
 /// against).
-fn dot_block_scalar(a: &[u8], w: &[i8], stride: usize, nr: usize, sums: &mut [i32; MICRO_ROWS]) {
+fn dot_block_scalar(
+    a: &[u8],
+    w: &[i8],
+    stride: usize,
+    nr: usize,
+    sums: &mut [i32; MAX_MICRO_ROWS],
+) {
     for (j, s) in sums.iter_mut().enumerate().take(nr) {
         let wj = &w[j * stride..j * stride + a.len()];
         let mut t = 0i32;
@@ -353,7 +381,7 @@ fn warn_once(msg: &str) {
 
 #[cfg(target_arch = "x86_64")]
 mod x86 {
-    use super::MICRO_ROWS;
+    use super::{MAX_MICRO_ROWS, MICRO_ROWS};
     use std::arch::x86_64::*;
 
     /// Horizontal sum of the four i32 lanes of `v`. SSE2-only ops, which
@@ -384,10 +412,80 @@ mod x86 {
         _mm256_add_epi32(acc, _mm256_madd_epi16(_mm256_maddubs_epi16(a, w), ones))
     }
 
+    /// `NR`-row fused AVX2 dot (instantiated at 6 and 8): one activation
+    /// load per 32 bytes feeds all `NR` weight rows. The accumulator
+    /// array is indexed only by constants after unrolling, so it lives
+    /// entirely in ymm registers (8 accumulators + the activation + the
+    /// ones constant still fit the 16-register file).
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dotn_avx2<const NR: usize>(
+        a: &[u8],
+        w: &[i8],
+        stride: usize,
+        sums: &mut [i32; MAX_MICRO_ROWS],
+    ) {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let mut wp = [w.as_ptr(); NR];
+        for (j, p) in wp.iter_mut().enumerate() {
+            *p = p.add(j * stride);
+        }
+        let ones = _mm256_set1_epi16(1);
+        let mut acc = [_mm256_setzero_si256(); NR];
+        let mut i = 0usize;
+        while i + 32 <= n {
+            let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            for j in 0..NR {
+                acc[j] = fma_step_avx2(
+                    acc[j],
+                    av,
+                    _mm256_loadu_si256(wp[j].add(i) as *const __m256i),
+                    ones,
+                );
+            }
+            i += 32;
+        }
+        let mut s = [0i32; NR];
+        for j in 0..NR {
+            s[j] = hsum_epi32_avx2(acc[j]);
+        }
+        while i < n {
+            let x = *ap.add(i) as i32;
+            for j in 0..NR {
+                s[j] += x * *wp[j].add(i) as i32;
+            }
+            i += 1;
+        }
+        sums[..NR].copy_from_slice(&s);
+    }
+
+    /// Any-height AVX2 block (tails and heights without a fused kernel):
+    /// 4-row kernels over full quads, single-row dots for the rest.
+    #[target_feature(enable = "avx2")]
+    pub unsafe fn dot_any_avx2(
+        a: &[u8],
+        w: &[i8],
+        stride: usize,
+        nr: usize,
+        sums: &mut [i32; MAX_MICRO_ROWS],
+    ) {
+        let mut j = 0usize;
+        while nr - j >= MICRO_ROWS {
+            let mut quad = [0i32; MAX_MICRO_ROWS];
+            dot4_avx2(a, &w[j * stride..], stride, &mut quad);
+            sums[j..j + MICRO_ROWS].copy_from_slice(&quad[..MICRO_ROWS]);
+            j += MICRO_ROWS;
+        }
+        while j < nr {
+            sums[j] = dot1_avx2(a, &w[j * stride..j * stride + a.len()]);
+            j += 1;
+        }
+    }
+
     /// Four-row fused AVX2 dot: one activation load per 32 bytes feeds
     /// all four weight rows.
     #[target_feature(enable = "avx2")]
-    pub unsafe fn dot4_avx2(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MICRO_ROWS]) {
+    pub unsafe fn dot4_avx2(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MAX_MICRO_ROWS]) {
         let n = a.len();
         let ap = a.as_ptr();
         let w0 = w.as_ptr();
@@ -422,7 +520,7 @@ mod x86 {
             s[3] += x * *w3.add(i) as i32;
             i += 1;
         }
-        *sums = s;
+        sums[..MICRO_ROWS].copy_from_slice(&s);
     }
 
     /// Single-row AVX2 dot (block remainders).
@@ -448,13 +546,94 @@ mod x86 {
         s
     }
 
+    /// `NR`-row fused AVX-512 VNNI dot (instantiated at 6 and 8): the
+    /// same `vpdpbusd` shape as [`dot4_vnni`] with `NR` zmm accumulators
+    /// — 9 of the 32 zmm registers at the widest block, so register
+    /// pressure never forces a spill. 64-byte main loop, one 32-byte
+    /// `AVX512VL` step for the wide remainder, scalar below that.
+    #[target_feature(enable = "avx512f,avx512vl,avx512vnni")]
+    pub unsafe fn dotn_vnni<const NR: usize>(
+        a: &[u8],
+        w: &[i8],
+        stride: usize,
+        sums: &mut [i32; MAX_MICRO_ROWS],
+    ) {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let mut wp = [w.as_ptr(); NR];
+        for (j, p) in wp.iter_mut().enumerate() {
+            *p = p.add(j * stride);
+        }
+        let mut acc = [_mm512_setzero_si512(); NR];
+        let mut i = 0usize;
+        while i + 64 <= n {
+            let av = _mm512_loadu_si512(ap.add(i) as *const _);
+            for j in 0..NR {
+                acc[j] = _mm512_dpbusd_epi32(
+                    acc[j],
+                    av,
+                    _mm512_loadu_si512(wp[j].add(i) as *const _),
+                );
+            }
+            i += 64;
+        }
+        let mut s = [0i32; NR];
+        for j in 0..NR {
+            s[j] = _mm512_reduce_add_epi32(acc[j]);
+        }
+        if i + 32 <= n {
+            let av = _mm256_loadu_si256(ap.add(i) as *const __m256i);
+            let z = _mm256_setzero_si256();
+            for j in 0..NR {
+                let d = _mm256_dpbusd_epi32(
+                    z,
+                    av,
+                    _mm256_loadu_si256(wp[j].add(i) as *const __m256i),
+                );
+                s[j] += hsum_epi32_avx2(d);
+            }
+            i += 32;
+        }
+        while i < n {
+            let x = *ap.add(i) as i32;
+            for j in 0..NR {
+                s[j] += x * *wp[j].add(i) as i32;
+            }
+            i += 1;
+        }
+        sums[..NR].copy_from_slice(&s);
+    }
+
+    /// Any-height AVX-512 VNNI block (tails and heights without a fused
+    /// kernel): 4-row kernels over full quads, single-row dots after.
+    #[target_feature(enable = "avx512f,avx512vl,avx512vnni")]
+    pub unsafe fn dot_any_vnni(
+        a: &[u8],
+        w: &[i8],
+        stride: usize,
+        nr: usize,
+        sums: &mut [i32; MAX_MICRO_ROWS],
+    ) {
+        let mut j = 0usize;
+        while nr - j >= MICRO_ROWS {
+            let mut quad = [0i32; MAX_MICRO_ROWS];
+            dot4_vnni(a, &w[j * stride..], stride, &mut quad);
+            sums[j..j + MICRO_ROWS].copy_from_slice(&quad[..MICRO_ROWS]);
+            j += MICRO_ROWS;
+        }
+        while j < nr {
+            sums[j] = dot1_vnni(a, &w[j * stride..j * stride + a.len()]);
+            j += 1;
+        }
+    }
+
     /// Four-row fused AVX-512 VNNI dot: `vpdpbusd` accumulates each
     /// 4-byte u8xi8 group straight into an i32 lane — no i16
     /// intermediate, so no saturation for any u8 code. 64-byte main
     /// loop, one 32-byte `AVX512VL` step for the wide remainder, scalar
     /// below that.
     #[target_feature(enable = "avx512f,avx512vl,avx512vnni")]
-    pub unsafe fn dot4_vnni(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MICRO_ROWS]) {
+    pub unsafe fn dot4_vnni(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MAX_MICRO_ROWS]) {
         let n = a.len();
         let ap = a.as_ptr();
         let w0 = w.as_ptr();
@@ -505,7 +684,7 @@ mod x86 {
             s[3] += x * *w3.add(i) as i32;
             i += 1;
         }
-        *sums = s;
+        sums[..MICRO_ROWS].copy_from_slice(&s);
     }
 
     /// Single-row AVX-512 VNNI dot (block remainders).
@@ -544,9 +723,34 @@ mod x86 {
         _mm_add_epi32(acc, _mm_madd_epi16(_mm_maddubs_epi16(a, w), ones))
     }
 
+    /// Any-height SSE block: the 16-xmm file has no room for a fused
+    /// 6/8-row variant, so wider blocks (and tails) compose the 4-row
+    /// kernel over full quads plus single-row dots — bit-identical,
+    /// just not faster, which is why the autotuner keeps 4 on this tier.
+    #[target_feature(enable = "ssse3,sse4.1")]
+    pub unsafe fn dot_any_sse(
+        a: &[u8],
+        w: &[i8],
+        stride: usize,
+        nr: usize,
+        sums: &mut [i32; MAX_MICRO_ROWS],
+    ) {
+        let mut j = 0usize;
+        while nr - j >= MICRO_ROWS {
+            let mut quad = [0i32; MAX_MICRO_ROWS];
+            dot4_sse(a, &w[j * stride..], stride, &mut quad);
+            sums[j..j + MICRO_ROWS].copy_from_slice(&quad[..MICRO_ROWS]);
+            j += MICRO_ROWS;
+        }
+        while j < nr {
+            sums[j] = dot1_sse(a, &w[j * stride..j * stride + a.len()]);
+            j += 1;
+        }
+    }
+
     /// Four-row fused SSE dot.
     #[target_feature(enable = "ssse3,sse4.1")]
-    pub unsafe fn dot4_sse(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MICRO_ROWS]) {
+    pub unsafe fn dot4_sse(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MAX_MICRO_ROWS]) {
         let n = a.len();
         let ap = a.as_ptr();
         let w0 = w.as_ptr();
@@ -581,7 +785,7 @@ mod x86 {
             s[3] += x * *w3.add(i) as i32;
             i += 1;
         }
-        *sums = s;
+        sums[..MICRO_ROWS].copy_from_slice(&s);
     }
 
     /// Single-row SSE dot (block remainders).
@@ -610,8 +814,71 @@ mod x86 {
 
 #[cfg(target_arch = "aarch64")]
 mod arm {
-    use super::MICRO_ROWS;
+    use super::{MAX_MICRO_ROWS, MICRO_ROWS};
     use std::arch::aarch64::*;
+
+    /// `NR`-row fused NEON `sdot` (instantiated at 6 and 8): aarch64's
+    /// 32-register vector file takes 8 accumulators plus the activation
+    /// vector without spilling. Same u8 -> i8 reinterpretation contract
+    /// as [`dot4_neon`].
+    #[target_feature(enable = "neon,dotprod")]
+    pub unsafe fn dotn_neon<const NR: usize>(
+        a: &[u8],
+        w: &[i8],
+        stride: usize,
+        sums: &mut [i32; MAX_MICRO_ROWS],
+    ) {
+        let n = a.len();
+        let ap = a.as_ptr();
+        let mut wp = [w.as_ptr(); NR];
+        for (j, p) in wp.iter_mut().enumerate() {
+            *p = p.add(j * stride);
+        }
+        let mut acc = [vdupq_n_s32(0); NR];
+        let mut i = 0usize;
+        while i + 16 <= n {
+            let av = vreinterpretq_s8_u8(vld1q_u8(ap.add(i)));
+            for j in 0..NR {
+                acc[j] = vdotq_s32(acc[j], av, vld1q_s8(wp[j].add(i)));
+            }
+            i += 16;
+        }
+        let mut s = [0i32; NR];
+        for j in 0..NR {
+            s[j] = vaddvq_s32(acc[j]);
+        }
+        while i < n {
+            let x = *ap.add(i) as i32;
+            for j in 0..NR {
+                s[j] += x * *wp[j].add(i) as i32;
+            }
+            i += 1;
+        }
+        sums[..NR].copy_from_slice(&s);
+    }
+
+    /// Any-height NEON block (tails and heights without a fused kernel):
+    /// 4-row kernels over full quads, single-row dots for the rest.
+    #[target_feature(enable = "neon,dotprod")]
+    pub unsafe fn dot_any_neon(
+        a: &[u8],
+        w: &[i8],
+        stride: usize,
+        nr: usize,
+        sums: &mut [i32; MAX_MICRO_ROWS],
+    ) {
+        let mut j = 0usize;
+        while nr - j >= MICRO_ROWS {
+            let mut quad = [0i32; MAX_MICRO_ROWS];
+            dot4_neon(a, &w[j * stride..], stride, &mut quad);
+            sums[j..j + MICRO_ROWS].copy_from_slice(&quad[..MICRO_ROWS]);
+            j += MICRO_ROWS;
+        }
+        while j < nr {
+            sums[j] = dot1_neon(a, &w[j * stride..j * stride + a.len()]);
+            j += 1;
+        }
+    }
 
     /// Four-row fused NEON `sdot`: each instruction accumulates four
     /// 4-byte i8xi8 groups into the i32 lanes of `acc` — exact, like
@@ -619,7 +886,7 @@ mod arm {
     /// value-preserving because callers guarantee codes `<= 127` on
     /// this tier (see [`super::Isa::wide_code_tier`]).
     #[target_feature(enable = "neon,dotprod")]
-    pub unsafe fn dot4_neon(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MICRO_ROWS]) {
+    pub unsafe fn dot4_neon(a: &[u8], w: &[i8], stride: usize, sums: &mut [i32; MAX_MICRO_ROWS]) {
         let n = a.len();
         let ap = a.as_ptr();
         let w0 = w.as_ptr();
@@ -653,7 +920,7 @@ mod arm {
             s[3] += x * *w3.add(i) as i32;
             i += 1;
         }
-        *sums = s;
+        sums[..MICRO_ROWS].copy_from_slice(&s);
     }
 
     /// Single-row NEON `sdot` (block remainders).
@@ -686,7 +953,7 @@ mod tests {
     fn problem(n: usize, seed: u64) -> (Vec<u8>, Vec<i8>) {
         let mut rng = Rng::new(seed);
         let a: Vec<u8> = (0..n).map(|_| rng.below(16) as u8).collect();
-        let w: Vec<i8> = (0..MICRO_ROWS * n)
+        let w: Vec<i8> = (0..MAX_MICRO_ROWS * n)
             .map(|_| (rng.below(256) as i64 - 128) as i8)
             .collect();
         (a, w)
@@ -694,17 +961,19 @@ mod tests {
 
     #[test]
     fn all_isas_agree_with_scalar_at_awkward_lengths() {
-        // lengths straddling the 16-, 32-, and 64-lane widths, incl. 0
+        // lengths straddling the 16-, 32-, and 64-lane widths, incl. 0;
+        // every block height 1..=8 covers the fused 4/6/8-row kernels
+        // and the composed tails between them
         for n in [0usize, 1, 7, 15, 16, 17, 31, 32, 33, 63, 64, 65, 95, 97, 127, 129, 257] {
             let (a, w) = problem(n, 11 + n as u64);
-            for nr in 1..=MICRO_ROWS {
-                let mut want = [i32::MIN; MICRO_ROWS];
+            for nr in 1..=MAX_MICRO_ROWS {
+                let mut want = [i32::MIN; MAX_MICRO_ROWS];
                 dot_block_scalar(&a, &w, n, nr, &mut want);
                 for isa in ISA_LADDER {
                     // hosts without a tier degrade it to the hardware's
                     // best — still a valid (and covered) tier
                     let isa = isa.validated();
-                    let mut got = [i32::MIN; MICRO_ROWS];
+                    let mut got = [i32::MIN; MAX_MICRO_ROWS];
                     dot_block(isa, &a, &w, n, nr, &mut got);
                     assert_eq!(got[..nr], want[..nr], "isa {isa:?} n {n} nr {nr}");
                     // lanes beyond nr stay untouched
@@ -718,16 +987,22 @@ mod tests {
     fn saturation_boundary_codes_are_exact_on_every_tier() {
         // codes <= 127 never saturate the i16 intermediate: the extreme
         // pair 127*(-128) + 127*(-128) = -32512 fits i16. Every tier
-        // must agree at the boundary.
-        let a = vec![127u8; 34];
-        let w = vec![-128i8; 34];
-        let mut want = [0i32; MICRO_ROWS];
-        dot_block_scalar(&a, &w, 34, 1, &mut want);
-        assert_eq!(want[0], 34 * 127 * -128);
-        for isa in ISA_LADDER {
-            let mut got = [0i32; MICRO_ROWS];
-            dot_block(isa.validated(), &a, &w, 34, 1, &mut got);
-            assert_eq!(got[0], want[0], "isa {isa:?}");
+        // must agree at the boundary — at each fused block height (4,
+        // 6, 8 instantiate separate kernels per tier) and the
+        // single-row remainder kernel.
+        let heights: Vec<usize> =
+            std::iter::once(1).chain(MICRO_ROWS_CANDIDATES).collect();
+        for &nr in &heights {
+            let a = vec![127u8; 34];
+            let w = vec![-128i8; nr * 34];
+            let mut want = [0i32; MAX_MICRO_ROWS];
+            dot_block_scalar(&a, &w, 34, nr, &mut want);
+            assert!(want[..nr].iter().all(|&v| v == 34 * 127 * -128));
+            for isa in ISA_LADDER {
+                let mut got = [0i32; MAX_MICRO_ROWS];
+                dot_block(isa.validated(), &a, &w, 34, nr, &mut got);
+                assert_eq!(got[..nr], want[..nr], "isa {isa:?} nr {nr}");
+            }
         }
     }
 
@@ -735,20 +1010,21 @@ mod tests {
     fn full_u8_codes_are_exact_on_wide_code_tiers() {
         // codes above 127 (8-bit activations) would saturate maddubs and
         // flip sign under sdot; the wide-code tiers (scalar, and VNNI
-        // where the hardware has it) must be exact anyway. 255 * -128
-        // pairs are the worst case.
+        // where the hardware has it) must be exact anyway — at every
+        // block height, since the 6/8-row VNNI kernels share the same
+        // vpdpbusd lane arithmetic. 255 * -128 pairs are the worst case.
         let mut rng = Rng::new(99);
         for n in [1usize, 16, 33, 64, 65, 257] {
             let a: Vec<u8> = (0..n).map(|_| rng.below(256) as u8).collect();
-            let w: Vec<i8> = (0..MICRO_ROWS * n)
+            let w: Vec<i8> = (0..MAX_MICRO_ROWS * n)
                 .map(|_| (rng.below(256) as i64 - 128) as i8)
                 .collect();
-            for nr in 1..=MICRO_ROWS {
-                let mut want = [0i32; MICRO_ROWS];
+            for nr in 1..=MAX_MICRO_ROWS {
+                let mut want = [0i32; MAX_MICRO_ROWS];
                 dot_block_scalar(&a, &w, n, nr, &mut want);
                 for isa in ISA_LADDER {
                     let isa = isa.validated().for_wide_codes();
-                    let mut got = [0i32; MICRO_ROWS];
+                    let mut got = [0i32; MAX_MICRO_ROWS];
                     dot_block(isa, &a, &w, n, nr, &mut got);
                     assert_eq!(got[..nr], want[..nr], "isa {isa:?} n {n} nr {nr}");
                 }

@@ -253,12 +253,16 @@
 //!   scatter back to model row order (a bijection, so parallel tasks
 //!   still write disjoint cells).
 //! * **Micro-kernel blocking** — dispatch hands each task chunk to
-//!   `GemmCore::run_block_tiled` in blocks of [`gemm::MICRO_ROWS`] (4)
-//!   rows over an [`gemm::ActsView`] (the full matrix or one packed
-//!   panel — the kernels cannot tell): one activation tile load feeds
-//!   the whole row block, cutting activation bandwidth 4x vs the
+//!   `GemmCore::run_block_tiled` in blocks of
+//!   `ParallelConfig::micro_rows` rows (default [`gemm::MICRO_ROWS`],
+//!   4; the SIMD tiers carry fused kernels for the whole
+//!   [`gemm::MICRO_ROWS_CANDIDATES`] ladder of 4/6/8) over an
+//!   [`gemm::ActsView`] (the full matrix or one packed panel — the
+//!   kernels cannot tell): one activation tile load feeds the whole
+//!   row block, cutting activation bandwidth 4-8x vs the
 //!   row-at-a-time kernel, with the column loop still tiled at
-//!   `ParallelConfig::tile_cols`.
+//!   `ParallelConfig::tile_cols`. The block height is a tuned
+//!   parameter, not a constant — see load-time autotuning below.
 //! * **Runtime SIMD dispatch** ([`gemm::Isa`]) — the inner block dot
 //!   ([`gemm::dot_block`]) is selected once per engine from a five-tier
 //!   ladder, best supported tier first:
@@ -284,16 +288,36 @@
 //!   `RMSMP_NO_SIMD=1` is the deprecated scalar alias; the CI matrix
 //!   runs the full test suite once per forced tier. No compile-time
 //!   features, zero new dependencies.
-//! * **Load-time autotuning** ([`gemm::autotune`]) — [`model::Plan`]
-//!   compilation microbenchmarks the blocking knobs (`tile_cols`,
-//!   `min_rows_per_task`, implicit-GEMM panel bytes) on a synthetic
-//!   workload shaped like the model's largest layer and bakes the
-//!   winners into the plan's config, chunk schedules, and panel widths;
-//!   executors built from the plan adopt them for any knob the caller
-//!   left at its default. A candidate must beat the incumbent by >2% to
-//!   win, results are cached per process and shape, APoT models keep
-//!   their tile pinned, and `RMSMP_NO_TUNE=1` (or
-//!   `PlanBuilder::no_tune`) compiles with the fixed defaults.
+//! * **Per-layer load-time autotuning** ([`gemm::autotune`]) —
+//!   [`model::Plan`] compilation microbenchmarks the blocking knobs
+//!   (`micro_rows` over the 4/6/8 candidate ladder, `tile_cols`,
+//!   `min_rows_per_task`, implicit-GEMM panel bytes) once per distinct
+//!   layer signature — (rows, cols, batch, scheme-class mix) — on a
+//!   synthetic workload with that layer's own class mix, and bakes the
+//!   per-layer winners into the compiled plan: each GEMM op carries its
+//!   layer's `micro_rows`/`tile_cols`, chunk schedules and panel
+//!   budgets are sized per layer, and the executor installs the baked
+//!   knobs op by op (restoring the engine baseline afterwards).
+//!   Executors built from the plan adopt the largest layer's winners
+//!   for any knob the caller left at its default; explicit config
+//!   values always win. A candidate must beat the incumbent by >2% to
+//!   win, APoT layers keep their tile pinned, and `RMSMP_NO_TUNE=1`
+//!   (or `PlanBuilder::no_tune`) compiles with the fixed defaults.
+//! * **Persisted tune cache** — results are answered from a per-process
+//!   cache, then an on-disk cache (`RMSMP_TUNE_CACHE=path`, or
+//!   `rmsmp plan --tune-cache PATH` / `PlanBuilder::tune_cache`), then
+//!   a live microbench, in that order. The cache key versions the
+//!   tuning schema and spans the ISA tier, thread count, layer
+//!   signature, and baseline knobs, so a file is safely shareable
+//!   across models and invalidates itself across toolchain or hardware
+//!   changes; writes go through a temp file + atomic rename, and a
+//!   corrupt or stale file silently degrades to live tuning. A warm
+//!   cache answers every layer without a single microbench dispatch
+//!   (`Plan::tune_stats` reports the hit/miss provenance, `rmsmp plan`
+//!   prints it per layer). Fleet deployment: run one plan compile per
+//!   machine type at image-build time with `RMSMP_TUNE_CACHE` pointed
+//!   into the image, and every production load boots with tuned
+//!   blocking at zero microbench cost.
 //!
 //! **Bit-exactness guarantee:** the three RMSMP cores accumulate dot
 //! products exactly in i32 and apply one dequantizing multiply per
@@ -302,9 +326,10 @@
 //! expression) with the explicit im2col fronts — so every ISA tier
 //! (scalar, SSE4.1, AVX2, AVX-512 VNNI, NEON), row vs block, implicit
 //! vs explicit, any tile size, any panel width, any chunk schedule, any
-//! thread count, and tuned vs default blocking all produce
-//! bit-identical outputs (pinned by `tests/test_simd.rs`,
-//! `tests/test_implicit.rs`, and `tests/test_autotune.rs`). The
+//! thread count, any micro-kernel block height, and tuned vs default
+//! (vs warm-cache) blocking all produce bit-identical outputs (pinned
+//! by `tests/test_simd.rs`, `tests/test_implicit.rs`,
+//! `tests/test_autotune.rs`, and `tests/test_tunecache.rs`). The
 //! f32-accumulating APoT baseline core stays on the scalar row loop and
 //! is bit-exact for a fixed `tile_cols`, which the config pins and the
 //! autotuner never moves.

@@ -114,6 +114,19 @@ fn flag_specs() -> Vec<FlagSpec> {
             takes_value: true,
         },
         FlagSpec {
+            name: "no-tune",
+            help: "plan: skip the load-time autotuner (fixed default blocking)",
+            default: None,
+            takes_value: false,
+        },
+        FlagSpec {
+            name: "tune-cache",
+            help: "plan: persist/reuse autotune winners at PATH \
+                   (default: $RMSMP_TUNE_CACHE)",
+            default: None,
+            takes_value: true,
+        },
+        FlagSpec {
             name: "first-last-8bit",
             help: "simulate: 8-bit first/last layers",
             default: None,
@@ -209,7 +222,15 @@ fn cmd_plan(dir: &Path, args: &Args) -> Result<()> {
     let (m, w) = load_artifacts(dir)?;
     let cfg = parallel_cfg(args)?;
     let capacity = args.get_usize("batch", m.input_shape.first().copied().unwrap_or(1))?;
-    let plan = Plan::builder(&m, &w).capacity(capacity).config(&cfg).build()?;
+    let mut b = Plan::builder(&m, &w).capacity(capacity).config(&cfg);
+    if args.has("no-tune") {
+        b = b.no_tune();
+    }
+    let cache = args.get_or("tune-cache", "");
+    if !cache.is_empty() {
+        b = b.tune_cache(cache);
+    }
+    let plan = b.build()?;
     print!("{}", plan.describe(&w, cfg.lanes()));
     Ok(())
 }

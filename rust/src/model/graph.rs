@@ -326,8 +326,13 @@ impl Executor {
         let n = x.n;
         let act_bits = plan.act_bits;
         let row_parallel = self.row_parallel;
-        let gemm = &self.gemm;
+        let gemm = &mut self.gemm;
         let ws = &mut self.ws;
+        // per-layer tuned blocking: each GEMM op installs its baked
+        // micro_rows/tile_cols on the engine before dispatch; restore
+        // the engine baseline afterwards so the reference interpreter
+        // (and any later caller) sees the config it was built with
+        let base_cfg = gemm.config();
         let mut macs = 0u64;
         let mut st = StageTimes::default();
 
@@ -361,8 +366,11 @@ impl Executor {
                     out_nhwc,
                     fused_add,
                     group_chunks,
+                    micro_rows,
+                    tile_cols,
                 } => {
                     let lw = &weights.layers[*layer];
+                    gemm.set_block_knobs(*micro_rows, *tile_cols);
                     let inp_len = n * in_c * in_h * in_w;
                     let hw = oh * ow;
                     let batch = n * hw;
@@ -819,8 +827,11 @@ impl Executor {
                     chunks,
                     in_codes,
                     out_quant,
+                    micro_rows,
+                    tile_cols,
                 } => {
                     let lw = &weights.layers[*layer];
+                    gemm.set_block_knobs(*micro_rows, *tile_cols);
                     let in_len = n * in_cols;
                     let t = Instant::now();
                     if *in_codes {
@@ -931,6 +942,8 @@ impl Executor {
                 }
             }
         }
+
+        gemm.set_block_knobs(base_cfg.micro_rows, base_cfg.tile_cols);
 
         let out_len = n * plan.logits_cols;
         ws.logits.resize(n, plan.logits_cols);

@@ -28,6 +28,20 @@ use super::manifest::{Manifest, OpMeta};
 use super::plan::{define, PlanOp, SlotId, SlotKind, SlotSpec};
 use super::weights::ModelWeights;
 
+/// One layer's effective blocking knobs, resolved by the plan builder
+/// (per-layer autotuner winners merged with the caller's config under
+/// the explicit-wins contract) before lowering. The lowering bakes
+/// `micro_rows`/`tile_cols` into the layer's [`PlanOp`] and chunks its
+/// schedule at `chunk_rows`; the `implicit`/`depthwise` passes size the
+/// layer's streamed panels from `panel_bytes`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub(crate) struct LayerKnobs {
+    pub(crate) micro_rows: usize,
+    pub(crate) tile_cols: usize,
+    pub(crate) chunk_rows: usize,
+    pub(crate) panel_bytes: usize,
+}
+
 /// The mutable program the pass pipeline rewrites (see module docs).
 /// Slots and ops are exactly the plan's; the rest is the compile context
 /// passes need to make decisions (weights for scales and schemes, the
@@ -38,8 +52,12 @@ pub(crate) struct Ir<'w> {
     pub(crate) capacity: usize,
     pub(crate) chunk_rows: usize,
     /// Implicit-GEMM panel budget in bytes (autotuned or the fixed
-    /// default) — the passes that size streamed panels read this.
+    /// default) — the global fallback; passes prefer the per-layer
+    /// value in [`Ir::layer_knobs`].
     pub(crate) panel_bytes: usize,
+    /// Per-weights-layer effective blocking knobs (see [`LayerKnobs`]),
+    /// `ModelWeights::layers` order.
+    pub(crate) layer_knobs: Vec<LayerKnobs>,
     pub(crate) act_bits: u32,
     pub(crate) input_slot: SlotId,
     pub(crate) input_chw: (usize, usize, usize),
@@ -56,6 +74,8 @@ impl<'w> Ir<'w> {
     /// task schedules. `capacity` (batch images), `cfg` (task
     /// granularity), and `panel_bytes` (the possibly-autotuned panel
     /// budget) are recorded for the passes that size panels and
+    /// schedules; `layer_knobs` carries the per-layer tuned blocking
+    /// (one entry per weights layer) baked into the layer ops and
     /// schedules.
     pub(crate) fn lower(
         manifest: &Manifest,
@@ -63,7 +83,14 @@ impl<'w> Ir<'w> {
         capacity: usize,
         cfg: &ParallelConfig,
         panel_bytes: usize,
+        layer_knobs: Vec<LayerKnobs>,
     ) -> Result<Ir<'w>> {
+        ensure!(
+            layer_knobs.len() == weights.layers.len(),
+            "layer knobs for {} layers, weights have {}",
+            layer_knobs.len(),
+            weights.layers.len()
+        );
         ensure!(
             manifest.input_shape.len() == 4,
             "manifest input_shape must be NCHW, got {:?}",
@@ -163,11 +190,13 @@ impl<'w> Ir<'w> {
                     let out_kind = SlotKind::T4 { c: lw.out_ch, h: oh, w: ow };
                     let out_id = define(&mut slots, &mut index, out, out_kind);
                     let chunks = if groups == 1 {
-                        chunk_tasks(&layer_parts[li], chunk_rows)
+                        chunk_tasks(&layer_parts[li], layer_knobs[li].chunk_rows)
                     } else {
                         Vec::new()
                     };
                     ops.push(PlanOp::Conv {
+                        micro_rows: layer_knobs[li].micro_rows,
+                        tile_cols: layer_knobs[li].tile_cols,
                         layer: li,
                         input: in_id,
                         out: out_id,
@@ -217,9 +246,11 @@ impl<'w> Ir<'w> {
                         out: out_id,
                         in_cols: lw.cols,
                         out_cols: lw.rows,
-                        chunks: chunk_tasks(&layer_parts[li], chunk_rows),
+                        chunks: chunk_tasks(&layer_parts[li], layer_knobs[li].chunk_rows),
                         in_codes: false,
                         out_quant: None,
+                        micro_rows: layer_knobs[li].micro_rows,
+                        tile_cols: layer_knobs[li].tile_cols,
                     });
                 }
                 OpMeta::Add { a, b, out, relu } => {
@@ -266,6 +297,7 @@ impl<'w> Ir<'w> {
             capacity,
             chunk_rows,
             panel_bytes: panel_bytes.max(1),
+            layer_knobs,
             act_bits: manifest.act_bits,
             input_slot,
             input_chw,

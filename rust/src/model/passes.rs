@@ -38,12 +38,14 @@ use super::ir::Ir;
 use super::plan::{live_range_reads, op_reads, op_write, FusedAdd, PlanOp};
 
 // Panel sizing note: one streamed activation panel (implicit GEMM and
-// the depthwise per-group kernel) targets `Ir::panel_bytes` of u8 codes
-// — positions land around half an L1d next to the weight tiles, clamped
-// to keep at least a micro-kernel block's worth of positions and at
-// most a reasonable tile. The budget defaults to
-// `crate::gemm::autotune::DEFAULT_PANEL_BYTES` and may be overridden
-// per machine by the plan builder's load-time autotuner.
+// the depthwise per-group kernel) targets the layer's panel budget
+// (`Ir::layer_knobs[layer].panel_bytes`, falling back to the global
+// `Ir::panel_bytes`) of u8 codes — positions land around half an L1d
+// next to the weight tiles, clamped to keep at least a micro-kernel
+// block's worth of positions and at most a reasonable tile. The budget
+// defaults to `crate::gemm::autotune::DEFAULT_PANEL_BYTES` and may be
+// overridden per machine and per layer by the plan builder's load-time
+// autotuner.
 
 /// What one pass did to the IR: how many ops/slots it rewrote, plus a
 /// human-readable line per rewrite (printed by `rmsmp plan` and pinned
@@ -307,7 +309,7 @@ fn implicit(ir: &mut Ir) -> Result<PassReport> {
             if *groups == 1 && input != out {
                 *implicit = true;
                 *panel_positions = panel_width(
-                    ir.panel_bytes,
+                    ir.layer_knobs[*layer].panel_bytes,
                     ir.weights.layers[*layer].cols,
                     *oh * *ow,
                     ir.capacity,
@@ -421,10 +423,14 @@ fn depthwise(ir: &mut Ir) -> Result<PassReport> {
                     &ir.layer_parts[*layer],
                     *groups,
                     *filt_per_group,
-                    ir.chunk_rows,
+                    ir.layer_knobs[*layer].chunk_rows,
                 );
-                *panel_positions =
-                    panel_width(ir.panel_bytes, lw.cols, *oh * *ow, ir.capacity);
+                *panel_positions = panel_width(
+                    ir.layer_knobs[*layer].panel_bytes,
+                    lw.cols,
+                    *oh * *ow,
+                    ir.capacity,
+                );
                 rep.rewrites += 1;
                 rep.details.push(format!(
                     "conv {} depthwise ({} groups, panel {} positions)",

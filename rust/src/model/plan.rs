@@ -28,17 +28,18 @@
 
 use std::collections::HashMap;
 use std::fmt::Write as _;
+use std::path::PathBuf;
 
 use crate::ensure;
 use crate::err;
 use crate::gemm::{
-    autotune, Isa, ParallelConfig, Requant, RowPartition, TaskChunk, TuneShape, TunedParams,
-    MICRO_ROWS,
+    autotune, Isa, LayerSig, ParallelConfig, Requant, RowPartition, TaskChunk, TuneStats,
+    TunedParams, MAX_MICRO_ROWS,
 };
 use crate::quant::Scheme;
 use crate::util::error::Result;
 
-use super::ir::Ir;
+use super::ir::{Ir, LayerKnobs};
 use super::manifest::Manifest;
 use super::passes::{self, PassReport};
 use super::weights::ModelWeights;
@@ -166,6 +167,13 @@ pub enum PlanOp {
         /// the `depthwise` pass specialized this grouped conv; empty
         /// grouped convs take the row-by-row explicit fallback.
         group_chunks: Vec<Vec<TaskChunk>>,
+        /// Per-layer tuned micro-kernel row-block height: the executor
+        /// installs it on the engine before this op's dispatch
+        /// ([`crate::gemm::MixedGemm::set_block_knobs`]). Never changes
+        /// output bits — only the blocking schedule.
+        micro_rows: usize,
+        /// Per-layer tuned column-tile width (same installation path).
+        tile_cols: usize,
     },
     Linear {
         layer: usize,
@@ -178,6 +186,10 @@ pub enum PlanOp {
         in_codes: bool,
         /// See [`PlanOp::Conv::out_quant`].
         out_quant: Option<Requant>,
+        /// See [`PlanOp::Conv::micro_rows`].
+        micro_rows: usize,
+        /// See [`PlanOp::Conv::tile_cols`].
+        tile_cols: usize,
     },
     Add {
         a: SlotId,
@@ -221,9 +233,10 @@ pub struct Footprint {
     pub acts_elems: usize,
     /// GEMM/Gap staging matrix f32 elements.
     pub gemm_out_elems: usize,
-    /// Per-lane scratch length: one [`MICRO_ROWS`]-row micro-kernel
+    /// Per-lane scratch length: one [`MAX_MICRO_ROWS`]-row micro-kernel
     /// block (an f32 output block + an i32 accumulator block of this
-    /// many elements each).
+    /// many elements each) — sized at the widest block height any tuned
+    /// layer could use, so per-layer retuning never regrows a lane.
     pub lane_elems: usize,
     /// Per-lane streamed-panel bytes (u8 activation codes for one
     /// `panel_positions`-wide column tile of the widest implicit or
@@ -277,9 +290,22 @@ pub struct Plan {
     /// adopt these knobs so execution matches the compiled schedules.
     pub cfg: ParallelConfig,
     /// The blocking parameters the load-time autotuner chose for this
-    /// machine — or the fixed defaults (`RMSMP_NO_TUNE=1`, or
-    /// [`PlanBuilder::no_tune`]).
+    /// machine's largest layer — or the fixed defaults
+    /// (`RMSMP_NO_TUNE=1`, or [`PlanBuilder::no_tune`]). The engine
+    /// baseline; per-layer winners in [`Plan::layer_tuned`] override it
+    /// op by op.
     pub tuned: TunedParams,
+    /// Effective per-layer blocking (one entry per weights layer,
+    /// `ModelWeights::layers` order): the per-layer autotuner winners
+    /// merged with the builder config under the explicit-wins contract.
+    /// `micro_rows`/`tile_cols` are also baked into each layer's
+    /// [`PlanOp`]; `source` records tuned / disk-cache / defaults
+    /// provenance per layer.
+    pub layer_tuned: Vec<TunedParams>,
+    /// Tuning provenance of this compile: how many layer signatures
+    /// were answered from a cache vs live microbenches
+    /// (`cache_misses == 0` on a warm disk cache).
+    pub tune_stats: TuneStats,
     /// Whether the `integer_resident` pass ran: integer-resident edges
     /// carry u8 activation codes between GEMMs (`false` = every edge
     /// f32, the pre-fusion baseline kept for benchmarking).
@@ -353,6 +379,8 @@ pub struct PlanBuilder<'a> {
     cfg: ParallelConfig,
     disabled: Vec<String>,
     tune: bool,
+    tune_cache: Option<PathBuf>,
+    pin_micro_rows: Option<usize>,
 }
 
 impl<'a> PlanBuilder<'a> {
@@ -390,6 +418,27 @@ impl<'a> PlanBuilder<'a> {
         self
     }
 
+    /// Persist (and reuse) tuning results at `path` — the explicit twin
+    /// of the `RMSMP_TUNE_CACHE=path` environment default the builder
+    /// starts from. A warm cache answers every layer signature without
+    /// a microbench; a corrupt or stale file silently falls back to
+    /// live tuning (see [`crate::gemm::autotune`]).
+    pub fn tune_cache<P: Into<PathBuf>>(mut self, path: P) -> Self {
+        self.tune_cache = Some(path.into());
+        self
+    }
+
+    /// Force every layer's micro-kernel row-block height to `mr`
+    /// instead of sweeping the candidates — the ablation twin the
+    /// runtime bench uses to isolate the 6/8-row kernels
+    /// (`micro_rows_speedup` = pinned-4 time / tuned time). The other
+    /// knobs still tune normally. Output bits are unchanged for any
+    /// height.
+    pub fn pin_micro_rows(mut self, mr: usize) -> Self {
+        self.pin_micro_rows = Some(mr.clamp(1, MAX_MICRO_ROWS));
+        self
+    }
+
     /// Lower, optimize, seal (see module docs).
     pub fn build(self) -> Result<Plan> {
         for name in &self.disabled {
@@ -400,33 +449,96 @@ impl<'a> PlanBuilder<'a> {
             );
         }
         // Resolve the blocking knobs before lowering: the chunk
-        // schedules and panel widths bake them in.
-        let tuned = if !self.tune || autotune::no_tune_requested() {
-            TunedParams::defaults(&self.cfg)
+        // schedules, panel widths, and per-op block knobs bake them in.
+        // Tuning runs per distinct layer signature, answered from the
+        // process cache / on-disk cache / live microbench in that order.
+        let mut tune_stats = TuneStats::default();
+        let layer_raw: Vec<TunedParams> = if !self.tune || autotune::no_tune_requested() {
+            let mut d = TunedParams::defaults(&self.cfg);
+            if let Some(mr) = self.pin_micro_rows {
+                d.micro_rows = mr;
+            }
+            vec![d; self.weights.layers.len()]
         } else {
-            // the f32-accumulating APoT baseline core is only
-            // deterministic for a fixed tile, so its presence pins
-            // tile_cols at the configured value
-            let pin_tile = self
-                .weights
+            let disk = self.tune_cache.as_deref();
+            self.weights
                 .layers
                 .iter()
-                .any(|l| l.scheme.iter().any(|&s| s == Scheme::ApotW4A4));
-            let (rows, cols) = self
-                .weights
-                .layers
-                .iter()
-                .map(|l| (l.rows, l.cols))
-                .max_by_key(|&(r, c)| r * c)
-                .unwrap_or((16, 64));
-            // batch proxy: a handful of GEMM rows per capacity image
-            // (panel positions and batch rows land in the same clamp)
-            let shape = TuneShape::for_layer(rows, cols, self.capacity * 16);
-            autotune::tune(shape, &self.cfg, pin_tile)
+                .map(|l| {
+                    // the f32-accumulating APoT baseline core is only
+                    // deterministic for a fixed tile, so any APoT rows
+                    // pin this layer's tile_cols at the configured value
+                    let pin_tile = l.scheme.iter().any(|&s| s == Scheme::ApotW4A4);
+                    let part = RowPartition::from_schemes(&l.scheme);
+                    let sig = LayerSig {
+                        rows: l.rows,
+                        cols: l.cols,
+                        // batch proxy: a handful of GEMM rows per
+                        // capacity image (panel positions and batch
+                        // rows land in the same clamp)
+                        batch: self.capacity * 16,
+                        counts: [
+                            part.len_of(Scheme::PotW4A4),
+                            part.len_of(Scheme::FixedW4A4),
+                            part.len_of(Scheme::FixedW8A4),
+                            part.len_of(Scheme::ApotW4A4),
+                        ],
+                    };
+                    autotune::tune_layer(
+                        sig,
+                        &self.cfg,
+                        pin_tile,
+                        self.pin_micro_rows,
+                        disk,
+                        &mut tune_stats,
+                    )
+                })
+                .collect()
         };
+        // the plan-global baseline: the largest layer's winner (what the
+        // single-shape tuner used to produce); per-layer knobs override
+        // it op by op at execution time
+        let tuned = self
+            .weights
+            .layers
+            .iter()
+            .zip(&layer_raw)
+            .max_by_key(|(l, _)| l.rows * l.cols)
+            .map(|(_, p)| *p)
+            .unwrap_or_else(|| TunedParams::defaults(&self.cfg));
         let cfg = tuned.apply_to(self.cfg);
-        let mut ir =
-            Ir::lower(self.manifest, self.weights, self.capacity, &cfg, tuned.panel_bytes)?;
+        // per-layer effective knobs: each winner merged with the
+        // *builder's* config (explicit caller knobs win layer-wide)
+        let layer_tuned: Vec<TunedParams> = layer_raw
+            .iter()
+            .map(|p| {
+                let e = p.apply_to(self.cfg);
+                TunedParams {
+                    micro_rows: e.micro_rows,
+                    tile_cols: e.tile_cols,
+                    min_rows_per_task: e.min_rows_per_task,
+                    panel_bytes: p.panel_bytes,
+                    source: p.source,
+                }
+            })
+            .collect();
+        let knobs: Vec<LayerKnobs> = layer_tuned
+            .iter()
+            .map(|p| LayerKnobs {
+                micro_rows: p.micro_rows.clamp(1, MAX_MICRO_ROWS),
+                tile_cols: p.tile_cols,
+                chunk_rows: p.min_rows_per_task.max(1),
+                panel_bytes: p.panel_bytes.max(1),
+            })
+            .collect();
+        let mut ir = Ir::lower(
+            self.manifest,
+            self.weights,
+            self.capacity,
+            &cfg,
+            tuned.panel_bytes,
+            knobs,
+        )?;
         let pass_reports = passes::run_pipeline(&mut ir, &self.disabled)?;
         let hwm = passes::high_water(&ir);
         let off = |name: &str| self.disabled.iter().any(|d| d == name);
@@ -436,6 +548,8 @@ impl<'a> PlanBuilder<'a> {
             chunk_rows: ir.chunk_rows,
             cfg,
             tuned,
+            layer_tuned,
+            tune_stats,
             integer_resident: !off("integer_resident"),
             implicit: !off("implicit"),
             act_bits: ir.act_bits,
@@ -468,6 +582,8 @@ impl Plan {
             cfg: ParallelConfig::sequential(),
             disabled: Vec::new(),
             tune: true,
+            tune_cache: autotune::env_cache_path(),
+            pin_micro_rows: None,
         }
     }
 
@@ -574,10 +690,13 @@ impl Plan {
             patch_elems: self.max_patch_per_image * n,
             acts_elems: self.max_acts_per_image * n,
             gemm_out_elems: self.max_gemm_out_per_image * n,
-            // lanes serve both the explicit blocks (MICRO_ROWS x full
-            // batch) and the streamed blocks (MICRO_ROWS x panel
-            // positions) — size for whichever is wider
-            lane_elems: MICRO_ROWS
+            // lanes serve both the explicit blocks (micro_rows x full
+            // batch) and the streamed blocks (micro_rows x panel
+            // positions) — size for whichever is wider, at the widest
+            // block height the engine can ever run (the dispatch scratch
+            // always resizes to MAX_MICRO_ROWS x batch, whatever the
+            // tuned per-layer height, so this is the zero-alloc bound)
+            lane_elems: MAX_MICRO_ROWS
                 * (self.max_gemm_rows_per_image * n).max(self.max_panel_positions),
             panel_elems: self.max_panel_elems,
             logits_elems: self.logits_cols * n,
@@ -613,6 +732,25 @@ impl Plan {
             self.tuned.panel_bytes,
             self.tuned.source.name()
         );
+        let _ = writeln!(
+            s,
+            "layer knobs ({} cache hit{}, {} microbenched):",
+            self.tune_stats.cache_hits,
+            if self.tune_stats.cache_hits == 1 { "" } else { "s" },
+            self.tune_stats.cache_misses
+        );
+        for (lw, t) in weights.layers.iter().zip(&self.layer_tuned) {
+            let _ = writeln!(
+                s,
+                "  {:<12} mr {} tile {:<4} chunk {:<3} panel {:>6} B ({})",
+                lw.name,
+                t.micro_rows,
+                t.tile_cols,
+                t.min_rows_per_task,
+                t.panel_bytes,
+                t.source.name()
+            );
+        }
         let _ = writeln!(s, "passes:");
         for r in &self.pass_reports {
             if !r.enabled {
@@ -714,7 +852,7 @@ impl Plan {
                     )
                 }
                 PlanOp::Linear {
-                    layer, input, out, in_cols, out_cols, chunks, in_codes, out_quant,
+                    layer, input, out, in_cols, out_cols, chunks, in_codes, out_quant, ..
                 } => {
                     let lw = &weights.layers[*layer];
                     format!(

@@ -45,9 +45,11 @@ pub struct Workspace {
     pub(crate) acts: PackedActs,
     /// GEMM output / Gap staging matrix.
     pub(crate) stage: Mat,
-    /// Per-lane GEMM micro-kernel scratch (a `MICRO_ROWS x batch` f32
-    /// output block + i32 accumulator block + u8 code block per lane,
-    /// plus the implicit-GEMM activation panel).
+    /// Per-lane GEMM micro-kernel scratch (a `MAX_MICRO_ROWS x batch`
+    /// f32 output block + i32 accumulator block + u8 code block per
+    /// lane, plus the implicit-GEMM activation panel) — sized at the
+    /// widest block height any per-layer tuned knob can install, so
+    /// retuning never regrows a lane.
     pub(crate) scratch: GemmScratch,
     /// Logits returned by `infer` (borrowed out, overwritten per call).
     pub(crate) logits: Mat,

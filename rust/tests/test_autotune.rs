@@ -165,6 +165,24 @@ fn tuned_knobs_are_members_of_the_candidate_sets() {
         "panel_bytes {} not a tuner candidate",
         plan.tuned.panel_bytes
     );
+    assert!(
+        [4, 6, 8].contains(&plan.cfg.micro_rows),
+        "micro_rows {} not a tuner candidate",
+        plan.cfg.micro_rows
+    );
+    assert_eq!(plan.layer_tuned.len(), 2, "one tuned entry per weights layer");
+    for t in &plan.layer_tuned {
+        assert!(
+            [4, 6, 8].contains(&t.micro_rows),
+            "layer micro_rows {} not a tuner candidate",
+            t.micro_rows
+        );
+        assert!(
+            t.tile_cols == 0 || t.tile_cols >= 48,
+            "layer tile_cols {} below any candidate",
+            t.tile_cols
+        );
+    }
 }
 
 #[test]
@@ -208,4 +226,13 @@ fn describe_reports_the_resolved_kernel_parameters() {
         desc.contains(&format!("tile cols {}", plan.cfg.tile_cols)),
         "describe missing tile cols:\n{desc}"
     );
+    // the per-layer knob table with its cache-provenance header
+    assert!(desc.contains("layer knobs ("), "describe missing layer knobs:\n{desc}");
+    for lw in &weights.layers {
+        assert!(
+            desc.contains(lw.name.as_str()),
+            "describe missing layer {}:\n{desc}",
+            lw.name
+        );
+    }
 }

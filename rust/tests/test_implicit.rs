@@ -267,7 +267,7 @@ fn prop_implicit_bit_exact_across_grid() {
         let (manifest, weights, x) = build_model(g, topo, n);
         let isas = [Isa::Scalar, Isa::detect()];
         for &threads in &[1usize, 8] {
-            let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+            let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2, ..ParallelConfig::default() };
             let mut imp = executor_with(&manifest, &weights, cfg, &[]);
             let mut exp = executor_with(&manifest, &weights, cfg, &["implicit"]);
             prop_assert!(
@@ -455,7 +455,7 @@ fn grouped_and_strided_fixed_cases_bit_exact_batch8() {
             let mut g = Gen { rng: Rng::new(seed), size: 1.0 };
             let (manifest, weights, x) = build_model(&mut g, topo, 8);
             for threads in [1usize, 8] {
-                let cfg = ParallelConfig { threads, tile_cols: 16, min_rows_per_task: 2 };
+                let cfg = ParallelConfig { threads, tile_cols: 16, min_rows_per_task: 2, ..ParallelConfig::default() };
                 let mut imp = executor_with(&manifest, &weights, cfg, &[]);
                 let mut exp = executor_with(&manifest, &weights, cfg, &["implicit"]);
                 let imp_out = imp.infer(&x).unwrap().clone();

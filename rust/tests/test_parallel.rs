@@ -69,6 +69,7 @@ fn prop_parallel_bit_exact_across_threads() {
                 threads,
                 tile_cols: 32,
                 min_rows_per_task: 4,
+                ..ParallelConfig::default()
             })
         })
         .collect();
@@ -91,8 +92,8 @@ fn prop_parallel_bit_exact_across_threads() {
 
 #[test]
 fn prop_task_granularity_does_not_change_results() {
-    let pool_cfg = ParallelConfig { threads: 4, tile_cols: 16, min_rows_per_task: 1 };
-    let coarse_cfg = ParallelConfig { threads: 4, tile_cols: 16, min_rows_per_task: 64 };
+    let pool_cfg = ParallelConfig { threads: 4, tile_cols: 16, min_rows_per_task: 1, ..ParallelConfig::default() };
+    let coarse_cfg = ParallelConfig { threads: 4, tile_cols: 16, min_rows_per_task: 64, ..ParallelConfig::default() };
     let fine = MixedGemm::with_config(pool_cfg);
     let coarse = MixedGemm::with_config(coarse_cfg);
     check("task-granularity", 25, |g| {
@@ -124,6 +125,7 @@ fn prop_tile_size_exact_for_rmsmp_classes() {
             threads: 1,
             tile_cols: 0,
             min_rows_per_task: 8,
+            ..ParallelConfig::default()
         });
         let want = run_mixed(&untiled, &acts, &pw, true);
         for tile in [1usize, 13, 64] {
@@ -131,6 +133,7 @@ fn prop_tile_size_exact_for_rmsmp_classes() {
                 threads: 1,
                 tile_cols: tile,
                 min_rows_per_task: 8,
+                ..ParallelConfig::default()
             });
             let got = run_mixed(&tiled, &acts, &pw, true);
             prop_assert!(got.data == want.data, "tile {tile} changed integer results");

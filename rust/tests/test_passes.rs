@@ -210,7 +210,7 @@ fn every_pass_subset_is_bit_exact_vs_reference() {
                     .collect();
                 for &threads in &[1usize, 8] {
                     let cfg =
-                        ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+                        ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2, ..ParallelConfig::default() };
                     let mut ex = executor_with(&manifest, &weights, cfg, &disabled);
                     // every disabled pass must show up as off in the report
                     for rep in &ex.plan().pass_reports {

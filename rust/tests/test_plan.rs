@@ -172,7 +172,7 @@ fn prop_plan_bit_exact_vs_reference_interpreter() {
         let (manifest, weights, x) = build_model(g, topo);
         let mut per_thread: Vec<Vec<f32>> = Vec::new();
         for &threads in &[1usize, 8] {
-            let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+            let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2, ..ParallelConfig::default() };
             let mut exec =
                 Executor::with_parallel(manifest.clone(), weights.clone(), cfg, None)
                     .map_err(|e| format!("compile failed (topo {topo}): {e}"))?;
@@ -274,7 +274,7 @@ fn workspace_buffers_are_stable_across_calls() {
     for threads in [1usize, 8] {
         let mut g = Gen { rng: Rng::new(11), size: 1.0 };
         let (manifest, weights, x) = build_model(&mut g, 2);
-        let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+        let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2, ..ParallelConfig::default() };
         let mut exec = Executor::with_parallel(manifest, weights, cfg, None).unwrap();
         let _ = exec.infer(&x).unwrap(); // warm-up
         let ptrs = exec.workspace().buffer_ptrs();

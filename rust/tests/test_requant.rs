@@ -312,7 +312,7 @@ fn prop_integer_resident_bit_exact_across_grid() {
         let (manifest, weights, x) = build_model(g, topo, n);
         let isas = [Isa::Scalar, Isa::detect()];
         for &threads in &[1usize, 8] {
-            let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2 };
+            let cfg = ParallelConfig { threads, tile_cols: 32, min_rows_per_task: 2, ..ParallelConfig::default() };
             let mut int_exec =
                 Executor::with_parallel(manifest.clone(), weights.clone(), cfg, None)
                     .map_err(|e| format!("compile failed (topo {topo}): {e}"))?;
@@ -453,7 +453,7 @@ fn grouped_conv_integer_edges_bit_exact_batch8() {
         let mut g = Gen { rng: Rng::new(seed), size: 1.0 };
         let (manifest, weights, x) = build_model(&mut g, 1, 8);
         for threads in [1usize, 8] {
-            let cfg = ParallelConfig { threads, tile_cols: 16, min_rows_per_task: 2 };
+            let cfg = ParallelConfig { threads, tile_cols: 16, min_rows_per_task: 2, ..ParallelConfig::default() };
             let mut int_exec =
                 Executor::with_parallel(manifest.clone(), weights.clone(), cfg, None).unwrap();
             let mut f32_exec = f32_resident_executor(&manifest, &weights, cfg);

@@ -15,6 +15,7 @@
 use rmsmp::gemm::{
     chunk_tasks, GemmActs, GemmCall, GemmOut, GemmScratch, Isa, MixedGemm, PackedActs,
     PackedWeights, ParallelConfig, SortedWeights, ISA_LADDER, MICRO_ROWS,
+    MICRO_ROWS_CANDIDATES,
 };
 use rmsmp::prop_assert;
 use rmsmp::quant::{self, Mat, Scheme};
@@ -69,18 +70,22 @@ fn rowwise_reference(
     out
 }
 
-/// The new path: class-sorted layout + block micro-kernels at `isa`.
+/// The new path: class-sorted layout + block micro-kernels at `isa`,
+/// `micro_rows` rows per block (the tuned 4/6/8 grid plus degenerate
+/// heights).
 fn sorted_block(
     acts: &PackedActs,
     pw: &PackedWeights,
     tile: usize,
     chunk_rows: usize,
+    micro_rows: usize,
     isa: Isa,
 ) -> Mat {
     let mut engine = MixedGemm::with_config(ParallelConfig {
         threads: 1,
         tile_cols: tile,
         min_rows_per_task: chunk_rows,
+        micro_rows,
     });
     engine.set_isa(isa);
     let sw = SortedWeights::from_packed(pw);
@@ -116,11 +121,16 @@ fn block_simd_bit_exact_vs_scalar_rows_at_fixed_shapes() {
                 let want = rowwise_reference(&seq, &acts, &pw, tile);
                 for isa in ISA_LADDER.map(Isa::available) {
                     for chunk_rows in [1usize, MICRO_ROWS, 64] {
-                        let got = sorted_block(&acts, &pw, tile, chunk_rows, isa);
-                        assert_eq!(
-                            got.data, want.data,
-                            "isa {isa:?} batch {batch} cols {cols} tile {tile} chunk {chunk_rows}"
-                        );
+                        for micro_rows in MICRO_ROWS_CANDIDATES {
+                            let got = sorted_block(
+                                &acts, &pw, tile, chunk_rows, micro_rows, isa,
+                            );
+                            assert_eq!(
+                                got.data, want.data,
+                                "isa {isa:?} batch {batch} cols {cols} tile {tile} \
+                                 chunk {chunk_rows} mr {micro_rows}"
+                            );
+                        }
                     }
                 }
             }
@@ -137,13 +147,15 @@ fn prop_block_simd_bit_exact_vs_scalar_rows() {
         let batch = g.usize_in(0, 9);
         let tile = *g.choice(&[0usize, 5, 32, 100]);
         let chunk_rows = g.usize_in(1, 9);
+        let micro_rows = *g.choice(&[1usize, 4, 6, 8]);
         let (acts, pw) = problem(rows, cols, batch, g.usize_in(0, 1 << 30) as u64);
         let want = rowwise_reference(&seq, &acts, &pw, tile);
         for isa in [Isa::Scalar, Isa::detect_cpu()] {
-            let got = sorted_block(&acts, &pw, tile, chunk_rows, isa);
+            let got = sorted_block(&acts, &pw, tile, chunk_rows, micro_rows, isa);
             prop_assert!(
                 got.data == want.data,
-                "isa {isa:?} rows {rows} cols {cols} batch {batch} tile {tile}"
+                "isa {isa:?} rows {rows} cols {cols} batch {batch} tile {tile} \
+                 mr {micro_rows}"
             );
         }
         Ok(())
@@ -182,6 +194,7 @@ fn parallel_simd_dispatch_is_bit_exact_vs_scalar_sequential() {
         threads: 4,
         tile_cols: 16,
         min_rows_per_task: 3,
+        micro_rows: 6,
     });
     par.set_isa(Isa::detect_cpu());
     let sw = SortedWeights::from_packed(&pw);
@@ -235,11 +248,16 @@ fn wide_activation_codes_stay_bit_exact_on_every_tier() {
             let pw = PackedWeights::quantize(&w, &schemes, &alpha);
             let want = rowwise_reference(&seq, &acts, &pw, 16);
             for isa in ISA_LADDER.map(Isa::available) {
-                let got = sorted_block(&acts, &pw, 16, MICRO_ROWS, isa);
-                assert_eq!(
-                    got.data, want.data,
-                    "isa {isa:?} bits {bits} cols {cols}"
-                );
+                // every tuned block height must reroute (or stay exact)
+                // identically — the 6/8-row variants have their own
+                // wide-code guards
+                for micro_rows in MICRO_ROWS_CANDIDATES {
+                    let got = sorted_block(&acts, &pw, 16, MICRO_ROWS, micro_rows, isa);
+                    assert_eq!(
+                        got.data, want.data,
+                        "isa {isa:?} bits {bits} cols {cols} mr {micro_rows}"
+                    );
+                }
             }
         }
     }

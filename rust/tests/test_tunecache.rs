@@ -1,0 +1,342 @@
+//! On-disk tune-cache invariants: a cold tune writes winners to the
+//! cache file, a warm second load answers every layer signature from it
+//! without a microbench, a corrupt or stale-version file silently
+//! degrades to live tuning, racing writers never leave a torn file, and
+//! explicit config knobs always beat cached winners. These tests live
+//! in their own binary (not `test_autotune.rs`) on purpose: they call
+//! [`rmsmp::gemm::autotune::clear_process_cache`], which would race the
+//! process-cache determinism assertions in the autotune suite if both
+//! shared a test harness.
+//!
+//! Robust to `RMSMP_NO_TUNE=1`: direct `tune_layer` calls ignore the
+//! escape hatch (it is a plan-builder policy), and the plan-level
+//! assertions below only require `cache_misses == 0` on the warm build,
+//! which the no-tune degenerate (zero tuning activity) satisfies.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rmsmp::gemm::autotune::{self, tune_layer};
+use rmsmp::gemm::{
+    LayerSig, PackedWeights, ParallelConfig, SortedWeights, TuneSource, TuneStats,
+    MICRO_ROWS_CANDIDATES,
+};
+use rmsmp::model::manifest::Manifest;
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::model::{Executor, Plan};
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::util::json::Json;
+use rmsmp::util::rng::Rng;
+
+/// The versioned first line of the cache format — the on-disk contract
+/// these tests pin (bump it in `gemm/autotune.rs` and every existing
+/// cache file is deliberately stale).
+const HEADER: &str = "rmsmp-tune-cache v2";
+
+/// A per-test cache file under the system temp dir, deleted on drop so
+/// reruns always start cold.
+struct TmpCache(PathBuf);
+
+impl TmpCache {
+    fn new(name: &str) -> TmpCache {
+        let p = std::env::temp_dir()
+            .join(format!("rmsmp-tunecache-test-{}-{name}", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        TmpCache(p)
+    }
+}
+
+impl Drop for TmpCache {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_file(&self.0);
+    }
+}
+
+fn knobs(p: &rmsmp::gemm::TunedParams) -> (usize, usize, usize, usize) {
+    (p.micro_rows, p.tile_cols, p.min_rows_per_task, p.panel_bytes)
+}
+
+#[test]
+fn cold_tune_writes_the_cache_and_a_warm_tune_reads_it_back() {
+    let tmp = TmpCache::new("roundtrip");
+    let sig = LayerSig::canonical(24, 48, 8);
+    let cfg = ParallelConfig::sequential();
+
+    let mut cold_stats = TuneStats::default();
+    let cold = tune_layer(sig, &cfg, false, None, Some(&tmp.0), &mut cold_stats);
+    assert_eq!(cold_stats.cache_misses, 1, "cold tune must microbench");
+    assert_eq!(cold.source, TuneSource::Tuned);
+    let text = std::fs::read_to_string(&tmp.0).expect("cold tune wrote no cache file");
+    assert!(text.starts_with(HEADER), "bad cache header:\n{text}");
+    assert!(text.contains(" => "), "no cache entry written:\n{text}");
+
+    // drop the process cache so the warm answer can only come from disk
+    autotune::clear_process_cache();
+    let mut warm_stats = TuneStats::default();
+    let warm = tune_layer(sig, &cfg, false, None, Some(&tmp.0), &mut warm_stats);
+    assert_eq!(
+        (warm_stats.cache_hits, warm_stats.cache_misses),
+        (1, 0),
+        "warm tune must answer from the disk cache without a microbench"
+    );
+    assert_eq!(warm.source, TuneSource::DiskCache);
+    assert_eq!(knobs(&warm), knobs(&cold), "disk round-trip changed the winners");
+}
+
+#[test]
+fn corrupt_and_stale_cache_files_fall_back_to_live_tuning() {
+    let cfg = ParallelConfig::sequential();
+
+    // non-UTF-8 garbage: unreadable as text, must not error
+    let tmp = TmpCache::new("corrupt");
+    std::fs::write(&tmp.0, b"\xff\xfe\x00 definitely not a cache").unwrap();
+    let sig = LayerSig::canonical(16, 72, 8);
+    let mut stats = TuneStats::default();
+    let p = tune_layer(sig, &cfg, false, None, Some(&tmp.0), &mut stats);
+    assert_eq!(stats.cache_misses, 1, "corrupt cache must fall back to a microbench");
+    assert_eq!(p.source, TuneSource::Tuned);
+    // ...and the fallback's write repairs the file in place
+    let text = std::fs::read_to_string(&tmp.0).unwrap();
+    assert!(text.starts_with(HEADER), "fallback did not rewrite a valid cache");
+
+    // stale schema version: parseable, but the header gate rejects it
+    let tmp2 = TmpCache::new("stale");
+    std::fs::write(&tmp2.0, "rmsmp-tune-cache v1\nold-key => 4 256 8 32768\n").unwrap();
+    let sig2 = LayerSig::canonical(32, 96, 8);
+    let mut stats2 = TuneStats::default();
+    tune_layer(sig2, &cfg, false, None, Some(&tmp2.0), &mut stats2);
+    assert_eq!(stats2.cache_misses, 1, "stale-version cache must not be trusted");
+    let text2 = std::fs::read_to_string(&tmp2.0).unwrap();
+    assert!(text2.starts_with(HEADER), "rewrite kept the stale version header");
+    assert!(!text2.contains("old-key"), "stale entries survived the version bump");
+
+    // torn / half-garbage entries under a valid header: skipped, not fatal
+    let tmp3 = TmpCache::new("torn");
+    std::fs::write(
+        &tmp3.0,
+        format!("{HEADER}\ngood-looking-key => 4 256\nnoise\nk => a b c d\n"),
+    )
+    .unwrap();
+    // fresh signature: sig2 is already in the process cache by now
+    let sig3 = LayerSig::canonical(48, 96, 8);
+    let mut stats3 = TuneStats::default();
+    tune_layer(sig3, &cfg, false, None, Some(&tmp3.0), &mut stats3);
+    assert_eq!(stats3.cache_misses, 1, "torn entries must read as absent");
+}
+
+#[test]
+fn racing_writers_leave_a_complete_parseable_file() {
+    let tmp = TmpCache::new("race");
+    let cfg = ParallelConfig::sequential();
+    std::thread::scope(|s| {
+        for i in 0..4usize {
+            let path = &tmp.0;
+            let cfg = &cfg;
+            s.spawn(move || {
+                let sig = LayerSig::canonical(16 + 8 * i, 64, 8);
+                let mut stats = TuneStats::default();
+                tune_layer(sig, cfg, false, None, Some(path), &mut stats);
+            });
+        }
+    });
+    // write is temp-file + atomic rename: whatever interleaving the
+    // racing read-merge-rename writers took, the surviving file is a
+    // complete snapshot — header first, every entry line well-formed
+    let text = std::fs::read_to_string(&tmp.0).expect("racing writers lost the file");
+    let mut lines = text.lines();
+    assert_eq!(lines.next().map(str::trim), Some(HEADER));
+    let mut entries = 0;
+    for line in lines {
+        let (_, val) = line.split_once(" => ").expect("torn cache line");
+        let nums: Vec<usize> =
+            val.split_whitespace().map(|t| t.parse().unwrap()).collect();
+        assert_eq!(nums.len(), 4, "entry must carry mr/tile/chunk/panel: {line:?}");
+        entries += 1;
+    }
+    assert!(entries >= 1, "last writer must persist at least its own entry");
+}
+
+#[test]
+fn explicit_config_knobs_override_cached_winners() {
+    let tmp = TmpCache::new("override");
+    // seed the cache from the default baseline, where every knob sweeps
+    let sig = LayerSig::canonical(40, 80, 8);
+    let base = ParallelConfig::sequential();
+    let mut stats = TuneStats::default();
+    tune_layer(sig, &base, false, None, Some(&tmp.0), &mut stats);
+
+    // an explicit non-default height is a caller decision: the sweep is
+    // skipped and the cached winner cannot displace it (the cache key
+    // includes the baseline knobs, so this cannot even alias the seeded
+    // entry)
+    let explicit = ParallelConfig { micro_rows: 8, tile_cols: 64, ..base };
+    let mut stats2 = TuneStats::default();
+    let p = tune_layer(sig, &explicit, false, None, Some(&tmp.0), &mut stats2);
+    assert_eq!(p.micro_rows, 8, "explicit micro_rows lost to the tuner");
+    assert_eq!(p.apply_to(explicit).micro_rows, 8);
+    assert_eq!(p.apply_to(explicit).tile_cols, 64, "explicit tile_cols lost");
+}
+
+// ---------------------------------------------------------------------------
+// Plan-level: the acceptance gate — a second plan compile against a warm
+// cache performs zero microbench dispatches and reproduces the first
+// plan's logits bit for bit.
+// ---------------------------------------------------------------------------
+
+fn layer(
+    name: &str,
+    kind: &str,
+    w: Mat,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    schemes: Vec<Scheme>,
+    bias: Vec<f32>,
+) -> LayerWeights {
+    let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
+    LayerWeights {
+        name: name.into(),
+        kind: kind.into(),
+        rows: w.rows,
+        cols: w.cols,
+        out_ch: conv.0,
+        in_ch: conv.1,
+        kh: conv.2,
+        kw: conv.3,
+        stride,
+        pad,
+        groups: 1,
+        a_alpha: 1.0,
+        scheme: schemes,
+        alpha,
+        bias,
+        w,
+        packed,
+        sorted,
+    }
+}
+
+/// conv(3x3 s1 p1, relu) -> gap -> fc, integer-accumulating schemes
+/// only. Callers pick distinct `(c1, classes)` per test: layer
+/// signatures are part of the tune-cache key, and two tests sharing
+/// one would let the process cache satisfy a build the test needs to
+/// see miss.
+fn model(c1: usize, classes: usize) -> (Manifest, ModelWeights, Tensor4) {
+    let (n, c_in, hw) = (2usize, 3usize, 5usize);
+    let cc = c_in * 9;
+    let mut rng = Rng::new(21);
+    let pool: [Scheme; 3] = [Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW8A4];
+    let w1 = Mat::from_vec(c1, cc, rng.normal_vec(c1 * cc, 0.5));
+    let b1: Vec<f32> = (0..c1).map(|_| rng.normal() * 0.1).collect();
+    let layers = vec![
+        layer(
+            "c1",
+            "conv",
+            w1,
+            (c1, c_in, 3, 3),
+            1,
+            1,
+            (0..c1).map(|r| pool[r % 3]).collect(),
+            b1,
+        ),
+        layer(
+            "fc",
+            "linear",
+            Mat::from_vec(classes, c1, rng.normal_vec(classes * c1, 0.5)),
+            (classes, c1, 1, 1),
+            0,
+            0,
+            (0..classes).map(|r| pool[r % 3]).collect(),
+            (0..classes).map(|_| rng.normal() * 0.1).collect(),
+        ),
+    ];
+    let json = format!(
+        r#"{{"model":"tunecache","arch":"resnet","num_classes":{classes},
+            "input_shape":[{n},{c_in},{hw},{hw}],"ratio":[65,30,5],"act_bits":4,
+            "layers":[
+              {{"name":"c1","kind":"conv","rows":{c1},"cols":{cc},"stride":1,"pad":1,
+               "groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}},
+              {{"name":"fc","kind":"linear","rows":{classes},"cols":{c1},"stride":0,"pad":0,
+               "groups":1,"a_alpha":1.0,"scheme_counts":[0,0,0,0]}}],
+            "program":[
+              {{"op":"conv","layer":"c1","in":"in0","out":"b0","relu":true}},
+              {{"op":"gap","in":"b0","out":"g0"}},
+              {{"op":"linear","layer":"fc","in":"g0","out":"logits"}}]}}"#
+    );
+    let manifest = Manifest::from_json(&Json::parse(&json).unwrap()).unwrap();
+    let mut x = Tensor4::zeros(n, c_in, hw, hw);
+    for v in x.data.iter_mut() {
+        *v = rng.uniform(0.0, 1.2);
+    }
+    (manifest, ModelWeights { layers }, x)
+}
+
+fn logits(manifest: &Manifest, weights: &ModelWeights, plan: Plan, x: &Tensor4) -> Vec<f32> {
+    let mut exec = Executor::from_shared(
+        Arc::new(manifest.clone()),
+        Arc::new(weights.clone()),
+        Arc::new(plan),
+        ParallelConfig::sequential(),
+        None,
+    )
+    .unwrap();
+    exec.infer(x).unwrap().data.clone()
+}
+
+#[test]
+fn warm_cache_plan_compile_skips_every_microbench() {
+    let tmp = TmpCache::new("plan-warm");
+    let (manifest, weights, x) = model(10, 3);
+
+    let cold =
+        Plan::builder(&manifest, &weights).capacity(2).tune_cache(&tmp.0).build().unwrap();
+    // drop the process cache: the warm build below may only use the disk
+    autotune::clear_process_cache();
+    let warm =
+        Plan::builder(&manifest, &weights).capacity(2).tune_cache(&tmp.0).build().unwrap();
+
+    assert_eq!(
+        warm.tune_stats.cache_misses, 0,
+        "warm tune cache still ran a microbench: {:?}",
+        warm.tune_stats
+    );
+    for (c, w) in cold.layer_tuned.iter().zip(&warm.layer_tuned) {
+        assert_eq!(knobs(c), knobs(w), "warm cache changed a layer's winners");
+        assert!(
+            MICRO_ROWS_CANDIDATES.contains(&w.micro_rows),
+            "layer micro_rows {} not a tuner candidate",
+            w.micro_rows
+        );
+    }
+    let a = logits(&manifest, &weights, cold, &x);
+    let b = logits(&manifest, &weights, warm, &x);
+    assert_eq!(a, b, "warm-cache plan changed the logits");
+}
+
+#[test]
+fn explicit_builder_config_beats_the_warm_cache_at_plan_level() {
+    let tmp = TmpCache::new("plan-override");
+    let (manifest, weights, x) = model(12, 4);
+    // warm the cache with the default baseline first
+    let baseline =
+        Plan::builder(&manifest, &weights).capacity(2).tune_cache(&tmp.0).build().unwrap();
+
+    let cfg = ParallelConfig { micro_rows: 6, ..ParallelConfig::sequential() };
+    let plan = Plan::builder(&manifest, &weights)
+        .capacity(2)
+        .config(&cfg)
+        .tune_cache(&tmp.0)
+        .build()
+        .unwrap();
+    assert_eq!(plan.cfg.micro_rows, 6, "explicit micro_rows lost to a cached winner");
+    for t in &plan.layer_tuned {
+        assert_eq!(t.micro_rows, 6, "a layer overrode the explicit micro_rows");
+    }
+    // still purely an optimization: logits match the baseline build
+    let a = logits(&manifest, &weights, baseline, &x);
+    let b = logits(&manifest, &weights, plan, &x);
+    assert_eq!(a, b, "explicit blocking override changed the logits");
+}
