@@ -1,8 +1,15 @@
-//! Serving example: load the AOT artifacts, start the HTTP/1.1
-//! front-end on loopback, and self-query it curl-style — the full L3
-//! request path end to end (socket → lazy JSON parse → batcher →
-//! compiled plan → response), with the Prometheus `/metrics` endpoint
-//! printed at the end. Python never runs here.
+//! Multi-model serving example: pack the AOT artifacts into a `.rmsa`
+//! zero-copy artifact, load it twice (each load is a header validation
+//! plus an `mmap` alias — the float parse-and-quantize pipeline never
+//! runs), and serve both residents behind one HTTP/1.1 front-end. The
+//! self-query loop routes on the request's `model` field, probes the
+//! 404 path for an unknown model, and prints the per-model Prometheus
+//! metrics at the end. Python never runs here.
+//!
+//! Two residents of the same artifact stand in for a fleet's A/B or
+//! canary pair; in production each route would point at its own `.rmsa`
+//! (`rmsmp serve --http ADDR --models a.rmsa,b.rmsa`). The page cache
+//! backs both mappings with one copy of the packed planes.
 //!
 //! Run after `make artifacts`:
 //!     cargo run --release --example serve_quantized [rate_rps] [n_requests]
@@ -11,8 +18,8 @@ use std::fmt::Write as _;
 use std::time::{Duration, Instant};
 
 use rmsmp::coordinator::batcher::BatchPolicy;
-use rmsmp::coordinator::{HttpConfig, HttpServer, Server, ServerConfig, SimpleClient};
-use rmsmp::model::{Manifest, ModelWeights};
+use rmsmp::coordinator::{HttpConfig, HttpServer, Router, ServerConfig, SimpleClient};
+use rmsmp::model::{artifact, ModelWeights};
 use rmsmp::runtime::artifacts_dir;
 use rmsmp::ParallelConfig;
 
@@ -21,42 +28,57 @@ fn main() -> rmsmp::Result<()> {
     let rate: f64 = args.get(1).map(|s| s.parse()).transpose()?.unwrap_or(20.0);
     let n: usize = args.get(2).map(|s| s.parse()).transpose()?.unwrap_or(80);
 
+    // 1. pack: fold the legacy parse path's inputs (manifest.json +
+    //    float weights.bin) into one self-contained artifact — what
+    //    `rmsmp pack` and the Python exporter's write_rmsa both emit.
     let dir = artifacts_dir();
-    let manifest = Manifest::load(&dir.join("manifest.json"))?;
+    let manifest_json = std::fs::read_to_string(dir.join("manifest.json"))?;
     let weights = ModelWeights::load(&dir.join("weights.bin"))?;
-    println!(
-        "serving {} ({} layers, ratio {}) — {n} requests at {rate} req/s over HTTP",
-        manifest.model,
-        manifest.layers.len(),
-        manifest.ratio
-    );
+    let rmsa = dir.join("model.rmsa");
+    let t0 = Instant::now();
+    artifact::pack_to_file(&manifest_json, &weights, &rmsa)?;
+    let pack_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let size = std::fs::metadata(&rmsa)?.len();
+    println!("packed {} layers -> {} ({} KiB, {pack_ms:.1} ms)",
+             weights.layers.len(), rmsa.display(), size / 1024);
 
-    let image_len = manifest.input_shape[1] * manifest.input_shape[2] * manifest.input_shape[3];
-    let server = Server::start(
-        manifest,
-        weights,
-        ServerConfig {
-            workers: 1,
-            policy: BatchPolicy {
-                max_batch: 8,
-                max_wait: Duration::from_millis(4),
-                queue_cap: 512,
-            },
-            parallel: ParallelConfig::default(),
+    // 2. load twice, serve both residents through one router (one
+    //    shared GEMM pool, per-model batchers and metrics)
+    let t0 = Instant::now();
+    let (m_a, w_a) = artifact::load(&rmsa)?;
+    let (m_b, w_b) = artifact::load(&rmsa)?;
+    let load_ms = t0.elapsed().as_secs_f64() * 1e3;
+    let image_len = m_a.input_shape[1] * m_a.input_shape[2] * m_a.input_shape[3];
+    let name_a = m_a.model.clone();
+    let name_b = format!("{name_a}-canary");
+    println!("loaded 2 residents in {load_ms:.2} ms ({} layers each, ratio {})",
+             m_a.layers.len(), m_a.ratio);
+    let cfg = ServerConfig {
+        workers: 1,
+        policy: BatchPolicy {
+            max_batch: 8,
+            max_wait: Duration::from_millis(4),
+            queue_cap: 512,
         },
-    )?;
-    let http = HttpServer::start(server, HttpConfig::default())?;
+        parallel: ParallelConfig::default(),
+    };
+    let router = Router::start(vec![
+        (name_a.clone(), m_a, w_a, cfg.clone()),
+        (name_b.clone(), m_b, w_b, cfg),
+    ])?;
+    let http = HttpServer::start_router(router, HttpConfig::default())?;
     println!("listening on http://{} — try:", http.addr());
     println!(
-        "  curl -s http://{}/v1/infer -d '{{\"input\": [0.1, ...], \"deadline_ms\": 50}}'",
+        "  curl -s http://{}/v1/infer -d '{{\"model\": \"{name_b}\", \"input\": [0.1, ...]}}'",
         http.addr()
     );
     println!("  curl -s http://{}/metrics", http.addr());
 
-    // self-query like curl would: one keep-alive connection, POSTing
-    // JSON bodies at the requested open-loop rate
+    // 3. self-query like curl would: one keep-alive connection, POSTing
+    //    JSON bodies at the requested open-loop rate, alternating the
+    //    routed model per request
     let addr = http.addr().to_string();
-    let mut body = String::with_capacity(image_len * 10 + 64);
+    let mut body = String::with_capacity(image_len * 10 + 96);
     let mut client = SimpleClient::connect(&addr)?;
     let t0 = Instant::now();
     let mut ok = 0;
@@ -66,8 +88,9 @@ fn main() -> rmsmp::Result<()> {
         if let Some(sleep) = target.checked_sub(t0.elapsed()) {
             std::thread::sleep(sleep);
         }
+        let model = if k % 2 == 0 { &name_a } else { &name_b };
         body.clear();
-        body.push_str("{\"deadline_ms\": 250, \"input\": [");
+        let _ = write!(body, "{{\"model\": \"{model}\", \"deadline_ms\": 250, \"input\": [");
         for i in 0..image_len {
             if i > 0 {
                 body.push(',');
@@ -85,8 +108,17 @@ fn main() -> rmsmp::Result<()> {
     let wall = t0.elapsed().as_secs_f64();
     println!("completed {ok}/{n} (shed {shed}) in {wall:.2}s ({:.1} req/s)", ok as f64 / wall);
 
+    // an unrouted model name answers 404 without touching a batcher
+    let resp = client.request(
+        "POST",
+        "/v1/infer",
+        &format!("{{\"model\": \"no-such-model\", \"input\": [{}]}}",
+                 "0,".repeat(image_len - 1) + "0"),
+    )?;
+    println!("unknown model -> HTTP {} {}", resp.status, resp.body.trim_end());
+
     let metrics = client.request("GET", "/metrics", "")?;
-    println!("--- GET /metrics ---");
+    println!("--- GET /metrics (per-model) ---");
     for line in metrics.body.lines().filter(|l| !l.starts_with('#')) {
         println!("{line}");
     }

@@ -11,6 +11,7 @@ Emits into the output directory:
     gemm.hlo.txt       standalone row-wise mixed GEMM kernel (microbench)
     weights.bin        folded weights + schemes + alphas (Rust integer path)
     manifest.json      graph program + layer table + config
+    model.rmsa         packed quantized planes (Rust zero-copy mmap path)
     testvec/*.json     cross-language quantizer test vectors
     parity.json        input/output pair for runtime parity checks
 
@@ -103,9 +104,13 @@ def main():
     export.write_weights_bin(os.path.join(args.out, "weights.bin"), lys)
     manifest = export.manifest_dict(cfg, lys, prog, args.ratio, in_shape)
     manifest["gemm_shape"] = [gb, gr, gc]
+    manifest_json = json.dumps(manifest, indent=1)
     with open(os.path.join(args.out, "manifest.json"), "w") as f:
-        json.dump(manifest, f, indent=1)
-    print(f"[aot] weights.bin + manifest.json ({len(lys)} layers)")
+        f.write(manifest_json)
+    rmsa_path = os.path.join(args.out, "model.rmsa")
+    export.write_rmsa(rmsa_path, lys, manifest_json)
+    print(f"[aot] weights.bin + manifest.json + model.rmsa "
+          f"({len(lys)} layers, {os.path.getsize(rmsa_path)} B packed)")
 
     # 4. parity vector: quantized forward on a fixed input
     x0 = jnp.asarray(probe[: args.batch])

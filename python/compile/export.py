@@ -13,6 +13,9 @@ The deployment pipeline (what `make artifacts` ships to the Rust runtime):
    * ``weights.bin``     — integer-ready weights/schemes/alphas for the Rust
      integer executor (format below).
    * ``manifest.json``   — graph program + layer table + shapes + ratio.
+   * ``model.rmsa``      — the packed artifact: pre-quantized, class-sorted
+     planes the Rust runtime maps and aliases with zero copies
+     (``write_rmsa``; byte layout in ``rust/src/model/artifact.rs``).
 
 The graph *program* is a tiny SSA-ish op list (conv / linear / add / gap)
 interpreted identically by ``infer_folded`` here (for HLO lowering and
@@ -320,6 +323,186 @@ def write_weights_bin(path, lys):
             f.write(np.asarray(l["alpha"], np.float32).tobytes())
             f.write(np.asarray(l["b"], np.float32).tobytes())
             f.write(w2d.astype("<f4").tobytes())
+
+
+# ---------------------------------------------------------------------------
+# `.rmsa` packed artifact writer (zero-copy load path).
+#
+# Mirrors rust/src/model/artifact.rs byte-for-byte: a 64-byte header
+# (magic "RMSA", version, file length, FNV-1a-64 checksum of bytes[24:],
+# layer count, section offsets), fixed 160-byte layer records, and
+# 64-byte-aligned sections holding exactly what the Rust runtime keeps in
+# memory — scheme codes, per-row alphas/biases, the stable class-sort
+# permutation, the quantized code plane, the pre-decoded PoT multiplier
+# plane, and the class-sorted kernel operand plane. Loading on the Rust
+# side is then a header validation plus an mmap alias; no float parse, no
+# re-quantization. The quantizer math below replicates
+# rust/src/quant/{pot,fixed,apot}.rs in float32 numpy so both writers
+# produce the same planes for the same folded weights.
+# ---------------------------------------------------------------------------
+RMSA_MAGIC = b"RMSA"
+RMSA_VERSION = 1
+_RMSA_ALIGN = 64
+_RMSA_HEADER_LEN = 64
+_RMSA_RECORD_LEN = 160
+
+
+def _fnv64(payload: bytes) -> int:
+    """FNV-1a-64 over LE u64 words, zero-padded tail, length mixed in —
+    the artifact checksum (see `checksum` in rust/src/model/artifact.rs)."""
+    prime = 0x100000001B3
+    mask = (1 << 64) - 1
+    h = 0xCBF29CE484222325
+    n = len(payload) & ~7
+    for (word,) in struct.iter_unpack("<Q", payload[:n]):
+        h = ((h ^ word) * prime) & mask
+    rem = payload[n:]
+    if rem:
+        word = int.from_bytes(rem + b"\0" * (8 - len(rem)), "little")
+        h = ((h ^ word) * prime) & mask
+    return ((h ^ len(payload)) * prime) & mask
+
+
+def _pot_row(t):
+    """PoT-4 codes + decoded multipliers for one clipped row `t = w/alpha`.
+
+    Matches quant/pot.rs: magnitudes below half the smallest level snap to
+    zero; otherwise the exponent is round-ties-even(log2) clamped to
+    [-6, 0]; the storage code is sign * (1 - e) and the kernel operand is
+    sign * 2^(6+e) (an i8 in [-64, 64])."""
+    mag = np.abs(t)
+    e = np.clip(np.round(np.log2(np.maximum(mag, np.float32(2.0 ** -10)))),
+                -6.0, 0.0).astype(np.int32)
+    sign = np.where(np.signbit(t), -1, 1).astype(np.int32)
+    zero = mag < np.float32(2.0 ** -7)
+    sign = np.where(zero, 0, sign)
+    e = np.where(zero, 0, e)
+    codes = (sign * (1 - e)).astype(np.int8)
+    mult = (sign * np.left_shift(1, 6 + e)).astype(np.int8)
+    return codes, mult
+
+
+def _fixed_row(t, bits):
+    """Fixed-point codes: round-ties-even(t * (2^(bits-1) - 1))."""
+    n = np.float32((1 << (bits - 1)) - 1)
+    return np.round(t * n).astype(np.int8)
+
+
+def _apot_levels():
+    """The 8 normalized APoT-4 levels (quant/apot.rs): all sums of
+    {0, 1, 1/4, 1/16} x {0, 1/2}, max-normalized, sorted, deduped."""
+    sums = [np.float32(a) + np.float32(b)
+            for a in (0.0, 1.0, 0.25, 0.0625) for b in (0.0, 0.5)]
+    top = np.float32(max(sums))
+    return np.unique(np.asarray([s / top for s in sums], np.float32))
+
+
+_APOT_LEVELS = _apot_levels()
+
+
+def _apot_row(t):
+    """APoT codes: signed index of the nearest level (first minimum wins,
+    like the Rust strict-< scan; np.argmin has the same tie rule)."""
+    mag = np.abs(t)
+    idx = np.argmin(np.abs(mag[:, None] - _APOT_LEVELS[None, :]), axis=1)
+    sign = np.where(np.signbit(t), -1, 1).astype(np.int32)
+    return (sign * idx.astype(np.int32)).astype(np.int8)
+
+
+def _quant_planes(w2d, scheme, alpha):
+    """(codes, pot_mult) planes in model row order, as PackedWeights holds
+    them: pot_mult is full-size and zero-filled outside PoT rows when any
+    row is PoT, and absent (None) when none is."""
+    rows, cols = w2d.shape
+    codes = np.zeros((rows, cols), np.int8)
+    has_pot = bool((np.asarray(scheme) == 0).any())
+    mult = np.zeros((rows, cols), np.int8) if has_pot else None
+    for r in range(rows):
+        t = np.clip(w2d[r] / np.float32(alpha[r]), -1.0, 1.0).astype(np.float32)
+        s = int(scheme[r])
+        if s == 0:
+            codes[r], mult[r] = _pot_row(t)
+        elif s == 1:
+            codes[r] = _fixed_row(t, 4)
+        elif s == 2:
+            codes[r] = _fixed_row(t, 8)
+        elif s == 3:
+            codes[r] = _apot_row(t)
+        else:
+            raise ValueError(f"unknown scheme code {s}")
+    return codes, mult
+
+
+def write_rmsa(path, lys, manifest_json: str):
+    """Serialize the quantized model into one `.rmsa` artifact.
+
+    `manifest_json` is embedded verbatim (the Rust loader parses the
+    embedded copy, so the artifact is self-contained — one file is the
+    whole model)."""
+    out = bytearray(_RMSA_HEADER_LEN + len(lys) * _RMSA_RECORD_LEN)
+
+    def push(sec: bytes) -> int:
+        out.extend(b"\0" * (-len(out) % _RMSA_ALIGN))
+        off = len(out)
+        out.extend(sec)
+        return off
+
+    records = []
+    for l in lys:
+        w = np.asarray(l["w"], np.float32)
+        rows = w.shape[0]
+        w2d = w.reshape(rows, -1)
+        scheme = np.asarray(l["scheme"], np.uint8)
+        alpha = np.asarray(l["alpha"], np.float32)
+        codes, mult = _quant_planes(w2d, scheme, alpha)
+        # stable class sort == SortedWeights::from_packed's permutation
+        perm = np.argsort(scheme, kind="stable").astype(np.uint32)
+        ops = np.empty_like(codes)
+        for sr, orig in enumerate(perm):
+            ops[sr] = mult[orig] if scheme[orig] == 0 else codes[orig]
+        name = l["name"].encode()
+        offs = (
+            push(name),
+            push(scheme.tobytes()),
+            push(alpha.astype("<f4").tobytes()),
+            push(np.asarray(l["b"], "<f4").tobytes()),
+            push(perm.astype("<u4").tobytes()),
+            push(codes.tobytes()),
+            push(mult.tobytes()) if mult is not None else 0,
+            push(ops.tobytes()),
+        )
+        records.append((l, name, w, rows, w2d.shape[1], mult is not None, offs))
+
+    mjson = manifest_json.encode()
+    manifest_off = push(mjson)
+
+    for i, (l, name, w, rows, cols, has_pot, offs) in enumerate(records):
+        r = _RMSA_HEADER_LEN + i * _RMSA_RECORD_LEN
+        name_off, scheme_off, alpha_off, bias_off, perm_off, codes_off, \
+            pot_off, ops_off = offs
+        struct.pack_into("<QI", out, r, name_off, len(name))
+        out[r + 12] = 0 if l["kind"] == "conv" else 1
+        out[r + 13] = 1 if has_pot else 0
+        if l["kind"] == "conv":
+            oc, ic, kh, kw = w.shape
+            geo = (rows, cols, oc, ic, kh, kw,
+                   l["stride"], l["pad"], l["groups"])
+        else:
+            geo = (rows, cols, rows, cols, 1, 1, 0, 0, 1)
+        struct.pack_into("<9I", out, r + 16, *geo)
+        struct.pack_into("<f", out, r + 52, float(l["a_alpha"]))
+        struct.pack_into("<7Q", out, r + 56, scheme_off, alpha_off,
+                         bias_off, perm_off, codes_off, pot_off, ops_off)
+
+    out[0:4] = RMSA_MAGIC
+    struct.pack_into("<I", out, 4, RMSA_VERSION)
+    struct.pack_into("<Q", out, 8, len(out))
+    struct.pack_into("<II", out, 24, len(lys), 0)
+    struct.pack_into("<QQQ", out, 32, _RMSA_HEADER_LEN, manifest_off,
+                     len(mjson))
+    struct.pack_into("<Q", out, 16, _fnv64(bytes(out[24:])))
+    with open(path, "wb") as f:
+        f.write(out)
 
 
 def manifest_dict(cfg, lys, prog, ratio, input_shape):

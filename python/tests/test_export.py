@@ -75,6 +75,47 @@ def test_weights_bin_roundtrip(tmp_path, folded):
     assert raw[16:16 + name_len].decode() == lys[0]["name"]
 
 
+def test_rmsa_artifact_structure(tmp_path, folded):
+    """The packed artifact must carry a valid header: magic, version, file
+    length, the FNV checksum over bytes[24:], and 64-byte-aligned section
+    offsets — the invariants the Rust loader rejects artifacts over."""
+    import json
+
+    cfg, params, qstates, lys, prog, _ = folded
+    m = export.manifest_dict(cfg, lys, prog, [65, 30, 5], (8, 3, 32, 32))
+    mjson = json.dumps(m)
+    path = tmp_path / "model.rmsa"
+    export.write_rmsa(path, lys, mjson)
+    raw = path.read_bytes()
+    assert raw[:4] == b"RMSA"
+    version, = struct.unpack("<I", raw[4:8])
+    file_len, checksum = struct.unpack("<QQ", raw[8:24])
+    n_layers, flags = struct.unpack("<II", raw[24:32])
+    table_off, manifest_off, manifest_len = struct.unpack("<QQQ", raw[32:56])
+    assert version == 1 and flags == 0
+    assert file_len == len(raw)
+    assert checksum == export._fnv64(raw[24:])
+    assert n_layers == len(lys) and table_off == 64
+    assert manifest_off % 64 == 0
+    assert raw[manifest_off:manifest_off + manifest_len].decode() == mjson
+    # every section offset in every 160-byte layer record is 64-aligned,
+    # and the stored permutation is the stable class sort of the schemes
+    for i, l in enumerate(lys):
+        r = table_off + i * 160
+        name_off, name_len = struct.unpack("<QI", raw[r:r + 12])
+        assert name_off % 64 == 0
+        assert raw[name_off:name_off + name_len].decode() == l["name"]
+        rows = struct.unpack("<I", raw[r + 16:r + 20])[0]
+        assert rows == l["w"].shape[0]
+        offs = struct.unpack("<7Q", raw[r + 56:r + 112])
+        for off in offs:
+            assert off % 64 == 0  # pot_mult may be 0 (still aligned)
+        perm_off = offs[3]
+        perm = np.frombuffer(raw[perm_off:perm_off + 4 * rows], "<u4")
+        want = np.argsort(np.asarray(l["scheme"], np.uint8), kind="stable")
+        np.testing.assert_array_equal(perm, want.astype(np.uint32))
+
+
 def test_manifest_dict_schema(folded):
     cfg, params, qstates, lys, prog, _ = folded
     m = export.manifest_dict(cfg, lys, prog, [65, 30, 5], (8, 3, 32, 32))

@@ -8,7 +8,11 @@
 //! (`microrows_speedup_b1/b8`), the plan-compile cost and tune-cache
 //! provenance (`plan_build_ms`, `tune_cache_hits/misses` — the CI
 //! bench-smoke double-run asserts `tune_cache_misses == 0` on its
-//! second, warm-cache pass), and sequential vs parallel — on a
+//! second, warm-cache pass), the model-load comparison between the
+//! legacy parse-and-quantize path and the mapped `.rmsa` artifact
+//! (`json_load_ms` / `artifact_load_ms` / `load_speedup` /
+//! `artifact_bytes` — CI asserts the mapped path stays ≥10× faster),
+//! and sequential vs parallel — on a
 //! synthetic residual CNN (no artifacts needed) and, when artifacts
 //! exist, on the shipped model. Writes `BENCH_runtime.json`
 //! (per-inference latency + the ablation speedups) for the CI
@@ -60,7 +64,7 @@ fn layer(
         scheme: schemes,
         alpha,
         bias: vec![0.0; w.rows],
-        w,
+        w: Some(w),
         packed,
         sorted,
     }
@@ -72,10 +76,7 @@ fn layer(
 /// into c2), a 64-group depthwise conv (the `depthwise` pass target),
 /// one more 3x3 conv (its two integer-resident edges around the
 /// depthwise conv carry u8 codes), gap, 10-way classifier.
-fn synthetic_model() -> (Manifest, ModelWeights) {
-    let manifest = Manifest::from_json(
-        &Json::parse(
-            r#"{
+const SYNTH_JSON: &str = r#"{
         "model": "bench", "arch": "resnet", "num_classes": 10,
         "input_shape": [4, 32, 16, 16], "ratio": [65, 30, 5], "act_bits": 4,
         "layers": [
@@ -104,11 +105,10 @@ fn synthetic_model() -> (Manifest, ModelWeights) {
           {"op": "gap", "in": "b4", "out": "b5"},
           {"op": "linear", "layer": "fc", "in": "b5", "out": "logits"}
         ]
-      }"#,
-        )
-        .unwrap(),
-    )
-    .unwrap();
+      }"#;
+
+fn synthetic_model() -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(&Json::parse(SYNTH_JSON).unwrap()).unwrap();
 
     let mut rng = Rng::new(3);
     let mk = |rows: usize, cols: usize, rng: &mut Rng| -> (Mat, Vec<Scheme>, Vec<f32>) {
@@ -399,6 +399,37 @@ fn main() {
         println!("bench runtime/model_*: skipped (run `make artifacts`)");
     }
 
+    // model load paths: the legacy `weights.bin` parse (read floats,
+    // quantize, class-sort — work re-done on every boot) vs the `.rmsa`
+    // packed artifact (validate header + checksum, then alias the
+    // already-sorted planes). Cold-load wall time per path, best of
+    // several runs; `load_speedup` is the headline artifact win.
+    let (_, weights2) = synthetic_model();
+    let tmp = std::env::temp_dir();
+    let pid = std::process::id();
+    let bin_path = tmp.join(format!("rmsmp-bench-{pid}.bin"));
+    let rmsa_path = tmp.join(format!("rmsmp-bench-{pid}.rmsa"));
+    std::fs::write(&bin_path, weights2.to_weights_bin().unwrap()).unwrap();
+    rmsmp::model::artifact::pack_to_file(SYNTH_JSON, &weights2, &rmsa_path).unwrap();
+    let artifact_bytes = std::fs::metadata(&rmsa_path).unwrap().len();
+    let mut json_load_ms = f64::INFINITY;
+    let mut artifact_load_ms = f64::INFINITY;
+    for _ in 0..20 {
+        let t0 = std::time::Instant::now();
+        black_box(ModelWeights::load(&bin_path).unwrap());
+        json_load_ms = json_load_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+        let t0 = std::time::Instant::now();
+        black_box(rmsmp::model::artifact::load(&rmsa_path).unwrap());
+        artifact_load_ms = artifact_load_ms.min(t0.elapsed().as_secs_f64() * 1e3);
+    }
+    let _ = std::fs::remove_file(&bin_path);
+    let _ = std::fs::remove_file(&rmsa_path);
+    let load_speedup = json_load_ms / artifact_load_ms;
+    println!(
+        "bench runtime: weights load {json_load_ms:.3} ms (parse+quantize) vs \
+         {artifact_load_ms:.3} ms (.rmsa, {artifact_bytes} B) -> {load_speedup:.1}x"
+    );
+
     let extra = vec![
         ("threads", num(par_rt.threads() as f64)),
         ("plan_speedup_b1", num(speedup_b1)),
@@ -426,6 +457,10 @@ fn main() {
         ("tuned_min_rows_per_task", num(tuned.min_rows_per_task as f64)),
         ("tuned_panel_bytes", num(tuned.panel_bytes as f64)),
         ("tuned_source", s(tuned.source.name())),
+        ("json_load_ms", num(json_load_ms)),
+        ("artifact_load_ms", num(artifact_load_ms)),
+        ("load_speedup", num(load_speedup)),
+        ("artifact_bytes", num(artifact_bytes as f64)),
     ];
     match b.write_json(extra) {
         Ok(path) => println!("bench runtime: wrote {}", path.display()),

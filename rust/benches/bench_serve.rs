@@ -71,7 +71,7 @@ fn synthetic() -> (Manifest, ModelWeights) {
             scheme: schemes,
             alpha,
             bias: vec![0.0; 10],
-            w,
+            w: Some(w),
             packed,
             sorted,
         }],

@@ -8,10 +8,12 @@
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
+use std::sync::Arc;
 
 use crate::ensure;
 use crate::err;
 use crate::util::error::Result;
+use crate::util::pool::ThreadPool;
 
 use super::batcher::{Response, SubmitError};
 use super::server::{Server, ServerConfig};
@@ -32,12 +34,26 @@ pub struct Router {
 impl Router {
     /// Build from (name, manifest, weights, config) tuples; the first
     /// entry becomes the default variant.
+    ///
+    /// All variants share **one** GEMM thread pool, sized by the widest
+    /// variant's `parallel` config: N resident models contend for the
+    /// machine's cores through a single scheduler instead of stacking N
+    /// pools (N× oversubscription under concurrent traffic). Each
+    /// variant still resolves its own row-parallel policy per batch.
     pub fn start(models: Vec<(String, Manifest, ModelWeights, ServerConfig)>) -> Result<Router> {
         ensure!(!models.is_empty(), "router needs at least one variant");
         let default = models[0].0.clone();
+        let threads = models
+            .iter()
+            .map(|(_, _, _, cfg)| cfg.parallel.resolved_threads())
+            .max()
+            .unwrap_or(1);
+        let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
         let mut variants = BTreeMap::new();
         for (name, manifest, weights, cfg) in models {
-            let server = Server::start(manifest, weights, cfg)?;
+            // sequential variants keep running with no pool at all
+            let vpool = if cfg.parallel.resolved_threads() > 1 { pool.clone() } else { None };
+            let server = Server::start_with_pool(manifest, weights, cfg, vpool)?;
             variants.insert(name.clone(), Variant { name, server });
         }
         Ok(Router { variants, default })

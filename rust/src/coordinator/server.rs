@@ -93,6 +93,21 @@ impl Server {
     /// share weights/manifest/plan via `Arc`, give each worker a private
     /// preallocated workspace.
     pub fn start(manifest: Manifest, weights: ModelWeights, cfg: ServerConfig) -> Result<Server> {
+        Server::start_with_pool(manifest, weights, cfg, None)
+    }
+
+    /// [`Server::start`] with an externally owned GEMM thread pool. The
+    /// multi-model [`super::Router`] passes one shared pool to every
+    /// resident model so N models contend for the machine's cores
+    /// through one scheduler instead of N oversubscribed ones. `None`
+    /// keeps the single-model behavior: the server builds its own pool
+    /// when `cfg.parallel` resolves to more than one thread.
+    pub fn start_with_pool(
+        manifest: Manifest,
+        weights: ModelWeights,
+        cfg: ServerConfig,
+        shared_pool: Option<Arc<ThreadPool>>,
+    ) -> Result<Server> {
         let batcher = Arc::new(Batcher::new(cfg.policy));
         let metrics = Arc::new(Metrics::new());
         let shape = &manifest.input_shape;
@@ -114,7 +129,10 @@ impl Server {
         let weights = Arc::new(weights);
 
         let threads = cfg.parallel.resolved_threads();
-        let pool = (threads > 1).then(|| Arc::new(ThreadPool::new(threads)));
+        let pool = match shared_pool {
+            Some(p) => Some(p),
+            None => (threads > 1).then(|| Arc::new(ThreadPool::new(threads))),
+        };
 
         let mut workers = Vec::new();
         let n_workers = cfg.workers.max(1);

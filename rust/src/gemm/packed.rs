@@ -5,7 +5,10 @@
 //! (sign, shift) pairs packed as i8 `sign * (shift + 1)` with 0 = zero
 //! weight — i.e. the 4-bit field a real LUT core would consume.
 
+use crate::ensure;
 use crate::quant::{self, Mat, Scheme};
+use crate::util::error::Result;
+use crate::util::mmap::Plane;
 
 /// The activation quantizer's per-element code map with its constants
 /// hoisted: `inv` is the precomputed `n / alpha` reciprocal and `top`
@@ -209,8 +212,9 @@ pub struct PackedWeights {
     pub rows: usize,
     pub cols: usize,
     /// Row-major codes: Fixed rows hold the signed level index; PoT rows
-    /// hold [`pot_pack`] codes.
-    pub codes: Vec<i8>,
+    /// hold [`pot_pack`] codes. A [`Plane`]: owned on the quantize path,
+    /// an aliased artifact section on the mapped load path.
+    pub codes: Plane,
     /// PoT rows only: the per-weight shift realized as an i8 multiplier in
     /// the 2^6-scaled frame (`±2^(6-shift)`, in −64..=64). This is the
     /// weight register a LUT PE would hold after decoding its 4-bit code;
@@ -219,7 +223,7 @@ pub struct PackedWeights {
     /// layer has no PoT rows at all — all-Fixed layers pay zero extra
     /// weight memory for it ([`PackedWeights::pot_mult_row`] must only be
     /// called for PoT rows).
-    pub pot_mult: Vec<i8>,
+    pub pot_mult: Plane,
     pub scheme: Vec<Scheme>,
     pub alpha: Vec<f32>,
 }
@@ -278,11 +282,38 @@ impl PackedWeights {
         PackedWeights {
             rows: w.rows,
             cols: w.cols,
-            codes,
-            pot_mult,
+            codes: Plane::owned(codes),
+            pot_mult: Plane::owned(pot_mult),
             scheme: scheme.to_vec(),
             alpha: alpha.to_vec(),
         }
+    }
+
+    /// Assemble from already-quantized sections — the artifact load path,
+    /// where `codes`/`pot_mult` alias mapped file ranges. Validates the
+    /// section lengths against the shape so every later row slice is in
+    /// bounds.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        codes: Plane,
+        pot_mult: Plane,
+        scheme: Vec<Scheme>,
+        alpha: Vec<f32>,
+    ) -> Result<PackedWeights> {
+        let elems = rows
+            .checked_mul(cols)
+            .ok_or_else(|| crate::err!("weight shape {rows}x{cols} overflows"))?;
+        ensure!(codes.len() == elems, "codes section holds {} of {elems} elements", codes.len());
+        ensure!(scheme.len() == rows, "scheme holds {} of {rows} rows", scheme.len());
+        ensure!(alpha.len() == rows, "alpha holds {} of {rows} rows", alpha.len());
+        let want_mult = if scheme.contains(&Scheme::PotW4A4) { elems } else { 0 };
+        ensure!(
+            pot_mult.len() == want_mult,
+            "pot_mult section holds {} of {want_mult} elements",
+            pot_mult.len()
+        );
+        Ok(PackedWeights { rows, cols, codes, pot_mult, scheme, alpha })
     }
 
     #[inline]

@@ -19,7 +19,10 @@
 
 use super::mixed::RowPartition;
 use super::packed::PackedWeights;
+use crate::ensure;
 use crate::quant::Scheme;
+use crate::util::error::Result;
+use crate::util::mmap::Plane;
 
 /// One layer's weights in class-sorted kernel form (see module docs).
 #[derive(Clone, Debug)]
@@ -28,8 +31,10 @@ pub struct SortedWeights {
     pub cols: usize,
     /// Kernel operand codes, row-major in **sorted** row order: Fixed
     /// rows hold signed level codes, PoT rows the decoded `±2^(6-shift)`
-    /// multipliers, APoT rows signed level indices.
-    ops: Vec<i8>,
+    /// multipliers, APoT rows signed level indices. A [`Plane`]: owned
+    /// when built by [`SortedWeights::from_packed`], an aliased artifact
+    /// section on the mapped load path.
+    ops: Plane,
     /// `perm[sorted_row] = original_row` — the output scatter map.
     pub perm: Vec<usize>,
     /// `inv[original_row] = sorted_row`.
@@ -68,7 +73,38 @@ impl SortedWeights {
             ops[sr * cols..(sr + 1) * cols].copy_from_slice(src);
             alpha.push(pw.alpha[orig]);
         }
-        SortedWeights { rows, cols, ops, perm, inv, alpha, part }
+        SortedWeights { rows, cols, ops: Plane::owned(ops), perm, inv, alpha, part }
+    }
+
+    /// Assemble from precomputed parts — the artifact load path, where
+    /// `ops` aliases a mapped file range and `perm` was validated against
+    /// the stable class sort by the loader. Checks lengths and that
+    /// `perm`/`inv` are mutually inverse bijections (so the output
+    /// scatter stays in bounds and collision-free), and rebuilds the
+    /// partition from the class counts.
+    pub fn from_parts(
+        rows: usize,
+        cols: usize,
+        ops: Plane,
+        perm: Vec<usize>,
+        alpha: Vec<f32>,
+        counts: [usize; 4],
+    ) -> Result<SortedWeights> {
+        let elems = rows
+            .checked_mul(cols)
+            .ok_or_else(|| crate::err!("weight shape {rows}x{cols} overflows"))?;
+        ensure!(ops.len() == elems, "ops section holds {} of {elems} elements", ops.len());
+        ensure!(perm.len() == rows, "perm holds {} of {rows} rows", perm.len());
+        ensure!(alpha.len() == rows, "alpha holds {} of {rows} rows", alpha.len());
+        let part = RowPartition::from_counts(counts);
+        ensure!(part.total() == rows, "class counts cover {} of {rows} rows", part.total());
+        let mut inv = vec![usize::MAX; rows];
+        for (sr, &orig) in perm.iter().enumerate() {
+            ensure!(orig < rows, "perm[{sr}] = {orig} out of {rows} rows");
+            ensure!(inv[orig] == usize::MAX, "perm maps row {orig} twice");
+            inv[orig] = sr;
+        }
+        Ok(SortedWeights { rows, cols, ops, perm, inv, alpha, part })
     }
 
     /// Operand row `sr` (sorted index).

@@ -23,8 +23,9 @@
 //!   dispatch.
 //! * [`model`] — the layer-graph representation loaded from the AOT
 //!   manifest, im2col, the plan compiler ([`model::Plan`]), the reusable
-//!   [`model::Workspace`], and the integer executor that walks compiled
-//!   plans.
+//!   [`model::Workspace`], the integer executor that walks compiled
+//!   plans, and the `.rmsa` packed-artifact reader/writer
+//!   ([`model::artifact`] — see the artifact format section below).
 //! * [`fpga`] — the FPGA resource/cycle simulator that reproduces Table 6
 //!   (Zynq XC7Z020 / XC7Z045 presets).
 //! * [`runtime`] — the native execution runtime: resolves the
@@ -34,8 +35,9 @@
 //!   front-end, request router, dynamic batcher, worker pool, metrics
 //!   (Prometheus text format on `GET /metrics`).
 //! * [`util`] — substrates built in-repo because the build is offline:
-//!   deterministic PRNG, CLI parsing, JSON, stats, a thread pool, error
-//!   plumbing, and the bench/property-test harnesses.
+//!   deterministic PRNG, CLI parsing, JSON, stats, a thread pool,
+//!   raw-syscall `mmap` file mapping, error plumbing, and the
+//!   bench/property-test harnesses.
 //!
 //! ## Execution model: compile, then run — integer-resident
 //!
@@ -205,6 +207,64 @@
 //! connection. `GET /metrics` renders the counters, latency quantiles,
 //! and the per-stage executor timers in Prometheus text format;
 //! `rmsmp serve --http ADDR` serves from the CLI.
+//!
+//! ## Artifact format: pack once, `mmap` forever
+//!
+//! The legacy `weights.bin` (`RMSW`) container stores *float* weights,
+//! so every process start re-runs the whole offline pipeline online:
+//! parse, quantize every element, class-sort every layer. The `.rmsa`
+//! artifact ([`model::artifact`]) stores that pipeline's **results** —
+//! the exact byte planes `PackedWeights`/`SortedWeights` hold in memory
+//! — so loading is a header validation plus an `mmap(2)` alias
+//! ([`util::mmap`], raw syscall, no new dependencies):
+//!
+//! ```text
+//! +----------------------------------------------------------+
+//! | 64 B header: magic "RMSA" | version | file len | FNV-64  |
+//! |   checksum | layer count | flags | table/manifest offsets|
+//! +----------------------------------------------------------+
+//! | n x 160 B layer records: name/kind/geometry/a_alpha +    |
+//! |   offsets of the 7 per-layer sections                    |
+//! +----------------------------------------------------------+
+//! | 64-byte-aligned sections per layer: scheme codes, alphas,|
+//! |   biases, class-sort permutation, quantized code plane,  |
+//! |   pre-decoded PoT multiplier plane, sorted operand plane |
+//! +----------------------------------------------------------+
+//! | manifest JSON, embedded verbatim (self-contained file)   |
+//! +----------------------------------------------------------+
+//! ```
+//!
+//! * **Alignment** — every section offset is a multiple of 64 (one
+//!   cache line, a divisor of the page size), so mapped planes keep the
+//!   alignment the SIMD kernels see on the owned path; the loader
+//!   rejects misaligned offsets.
+//! * **Versioning** — the version field is a hard gate and the `flags`
+//!   word must be zero in v1; growth lives in the reserved header and
+//!   record bytes. Integrity is checked *before* any section is
+//!   touched: magic, version, exact file length, and an FNV-1a-64
+//!   checksum over the entire payload — any single bit flip, any
+//!   truncation, and any trailing garbage fail loading with a typed
+//!   error, never UB (pinned by property tests in
+//!   `tests/test_artifact.rs`).
+//! * **Zero-copy residency** — the O(rows·cols) planes are
+//!   [`util::mmap::Plane`]s aliasing the mapping; only O(rows) metadata
+//!   is copied. Logits are **bit-identical** to the parse path across
+//!   batch, thread count, and ISA tier, and the mapped executor holds
+//!   the same zero-allocation steady state (`tests/test_alloc.rs`).
+//!   Deployment note: the page cache backs every process serving the
+//!   same artifact with one physical copy, so N replicas (or N models
+//!   A/B-paired on one host) cost ~1x the packed bytes, and a warm
+//!   restart touches no disk.
+//! * **Producers** — `rmsmp pack` (from legacy artifacts) and the
+//!   Python exporter (`python/compile/export.py::write_rmsa`) emit the
+//!   same bytes; [`model::ModelWeights::load`] sniffs the magic and
+//!   dispatches, so every existing entry point accepts either format.
+//! * **Multi-model quickstart** —
+//!   `rmsmp serve --http 127.0.0.1:8080 --models a.rmsa,b.rmsa` boots
+//!   one HTTP front-end over a [`coordinator::Router`] with N resident
+//!   models: requests route on their `model` field (404 for unrouted
+//!   names), `/metrics` reports per-model counters, and all variants
+//!   share one GEMM pool (see `examples/serve_quantized.rs`).
 //!
 //! ## Kernel architecture
 //!

@@ -6,7 +6,10 @@
 //!   infer      run integer inference on synthetic images, report logits
 //!   parity     integer executor vs recorded JAX logits
 //!   serve      dynamic-batching serving loop: synthetic Poisson workload,
-//!              or a real HTTP/1.1 front-end with `--http ADDR`
+//!              or a real HTTP/1.1 front-end with `--http ADDR`; add
+//!              `--models a.rmsa,b.rmsa` for multi-model resident serving
+//!   pack       convert manifest.json + weights.bin into one mmap-ready
+//!              `.rmsa` artifact (see `rmsmp::model::artifact`)
 //!   simulate   FPGA resource/cycle simulation for a quantization config
 //!   assign     re-assign schemes under a new ratio and report the split
 //!
@@ -21,7 +24,7 @@ use std::path::{Path, PathBuf};
 
 use rmsmp::bail;
 use rmsmp::coordinator::batcher::BatchPolicy;
-use rmsmp::coordinator::{HttpConfig, HttpServer, OpenLoopGen, Server, ServerConfig};
+use rmsmp::coordinator::{HttpConfig, HttpServer, OpenLoopGen, Router, Server, ServerConfig};
 use rmsmp::fpga::{simulate, Board, CoreCosts, Design, QuantConfig};
 use rmsmp::model::{Manifest, ModelWeights};
 use rmsmp::quant::tensor::Tensor4;
@@ -114,6 +117,19 @@ fn flag_specs() -> Vec<FlagSpec> {
             takes_value: true,
         },
         FlagSpec {
+            name: "models",
+            help: "serve: comma-separated .rmsa artifacts to serve side by \
+                   side (requires --http; routes on the request's model field)",
+            default: None,
+            takes_value: true,
+        },
+        FlagSpec {
+            name: "out",
+            help: "pack: output .rmsa path (default: <artifacts>/model.rmsa)",
+            default: None,
+            takes_value: true,
+        },
+        FlagSpec {
             name: "no-tune",
             help: "plan: skip the load-time autotuner (fixed default blocking)",
             default: None,
@@ -168,7 +184,7 @@ fn main() -> Result<()> {
                 &flag_specs()
             )
         );
-        println!("\nSubcommands: info | plan | infer | parity | serve | simulate | assign");
+        println!("\nSubcommands: info | plan | infer | parity | serve | pack | simulate | assign");
         return Ok(());
     }
     let artifacts = PathBuf::from(args.get_or("artifacts", artifacts_dir().to_str().unwrap()));
@@ -178,6 +194,7 @@ fn main() -> Result<()> {
         "infer" => cmd_infer(&artifacts, &args),
         "parity" => cmd_parity(&artifacts, &args),
         "serve" => cmd_serve(&artifacts, &args),
+        "pack" => cmd_pack(&artifacts, &args),
         "simulate" => cmd_simulate(&args),
         "assign" => cmd_assign(&artifacts, &args),
         other => bail!("unknown subcommand {other:?} (see --help)"),
@@ -299,7 +316,6 @@ fn cmd_parity(dir: &Path, args: &Args) -> Result<()> {
 }
 
 fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
-    let (m, w) = load_artifacts(dir)?;
     let n = args.get_usize("requests", 64)?;
     let rate = args.get_f64("rate", 50.0)?;
     let cfg = ServerConfig {
@@ -311,12 +327,46 @@ fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
         },
         parallel: parallel_cfg(args)?,
     };
+    let http_addr = args.get_or("http", "");
+
+    // --models a.rmsa,b.rmsa: multi-model resident serving. Each `.rmsa`
+    // is mmap-loaded (zero-copy weight planes share the page cache), the
+    // variants share one GEMM thread pool via the Router, and requests
+    // route on their `model` field (unknown model -> 404).
+    let models_arg = args.get_or("models", "");
+    if !models_arg.is_empty() {
+        rmsmp::ensure!(!http_addr.is_empty(), "--models requires --http ADDR");
+        let mut models = Vec::new();
+        for path in models_arg.split(',').filter(|s| !s.is_empty()) {
+            let (m, w) = rmsmp::model::artifact::load(Path::new(path))
+                .with_context(|| format!("loading artifact {path}"))?;
+            println!("resident model {:?} from {path} ({} layers)", m.model, m.layers.len());
+            models.push((m.model.clone(), m, w, cfg.clone()));
+        }
+        let router = Router::start(models)?;
+        let http = HttpServer::start_router(
+            router,
+            HttpConfig {
+                addr: http_addr,
+                conn_threads: args.get_usize("http-threads", 0)?,
+                ..HttpConfig::default()
+            },
+        )?;
+        println!("serving HTTP on http://{}", http.addr());
+        println!("  POST /v1/infer {{\"model\": \"name\", \"input\": [...]}}");
+        println!("  GET  /metrics | /healthz");
+        loop {
+            std::thread::sleep(std::time::Duration::from_secs(30));
+            println!("{}", http.summary());
+        }
+    }
+
+    let (m, w) = load_artifacts(dir)?;
     let image_len = m.input_shape[1] * m.input_shape[2] * m.input_shape[3];
     let server = Server::start(m, w, cfg)?;
 
     // --http ADDR: real-socket front-end instead of the synthetic
     // open-loop trace; runs until the process is killed
-    let http_addr = args.get_or("http", "");
     if !http_addr.is_empty() {
         let http = HttpServer::start(
             server,
@@ -361,6 +411,22 @@ fn cmd_serve(dir: &Path, args: &Args) -> Result<()> {
     Ok(())
 }
 
+fn cmd_pack(dir: &Path, args: &Args) -> Result<()> {
+    let manifest_path = dir.join("manifest.json");
+    let manifest_json = std::fs::read_to_string(&manifest_path)
+        .with_context(|| format!("reading {manifest_path:?} (run `make artifacts` first)"))?;
+    let weights = ModelWeights::load(&dir.join("weights.bin"))?;
+    let out = match args.get_or("out", "") {
+        s if s.is_empty() => dir.join("model.rmsa"),
+        s => PathBuf::from(s),
+    };
+    rmsmp::model::artifact::pack_to_file(&manifest_json, &weights, &out)?;
+    let size = std::fs::metadata(&out).map(|m| m.len()).unwrap_or(0);
+    println!("packed {} layers -> {out:?} ({} KiB)", weights.layers.len(), size / 1024);
+    println!("serve it with: rmsmp serve --http 127.0.0.1:8080 --models {}", out.display());
+    Ok(())
+}
+
 fn cmd_simulate(args: &Args) -> Result<()> {
     let board = Board::by_name(&args.get_or("board", "XC7Z045"))
         .ok_or_else(|| err!("unknown board"))?;
@@ -401,7 +467,11 @@ fn cmd_assign(dir: &Path, args: &Args) -> Result<()> {
     let mut total_bits = 0.0;
     let mut total_rows = 0usize;
     for l in &w.layers {
-        let s = assign_layer(&l.w, ratio, Sensitivity::WeightNorm, Scheme::PotW4A4);
+        let lw = l
+            .w
+            .as_ref()
+            .ok_or_else(|| err!("layer {}: no float weights (artifact load path)", l.name))?;
+        let s = assign_layer(lw, ratio, Sensitivity::WeightNorm, Scheme::PotW4A4);
         let pot = s.iter().filter(|&&x| x == Scheme::PotW4A4).count();
         let f4 = s.iter().filter(|&&x| x == Scheme::FixedW4A4).count();
         let f8 = s.iter().filter(|&&x| x == Scheme::FixedW8A4).count();

@@ -1,0 +1,572 @@
+//! `.rmsa` packed weight artifacts: the class-sorted, PoT-pre-decoded
+//! layout baked at export time and loaded by `mmap` — validate the
+//! header, then alias.
+//!
+//! The legacy `RMSW` container stores float weights, so every load pays
+//! the full online pipeline: parse, quantize every element
+//! (`PackedWeights::quantize` — a log2 / level search per weight), and
+//! permute rows into the class-sorted kernel layout
+//! (`SortedWeights::from_packed`). That work is identical across every
+//! process and every restart. The artifact stores its *results*: the
+//! exact byte planes `PackedWeights` / `SortedWeights` hold in memory,
+//! so loading is a header validation plus O(rows) metadata copies — the
+//! O(rows·cols) quantized planes are aliased straight out of the mapping
+//! ([`crate::util::mmap::Plane`]), and the page cache shares them across
+//! every process serving the same artifact.
+//!
+//! ## Container layout (version 1, all integers little-endian)
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------
+//!      0     4  magic "RMSA"
+//!      4     4  u32  format version (1)
+//!      8     8  u64  file length (must equal the real file size)
+//!     16     8  u64  checksum of bytes[24..file_len] (FNV-1a-64
+//!                    over LE u64 words, zero-padded tail, length
+//!                    mixed into the final state)
+//!     24     4  u32  layer count
+//!     28     4  u32  flags (0 in v1)
+//!     32     8  u64  layer table offset (64)
+//!     40     8  u64  manifest JSON offset
+//!     48     8  u64  manifest JSON length
+//!     56     8  u64  reserved (0)
+//!     64          fixed 160-byte layer records, then the sections
+//! ```
+//!
+//! Each 160-byte layer record:
+//!
+//! ```text
+//! offset  size  field
+//! ------  ----  -----------------------------------------------
+//!      0     8  u64  name offset          (name_len bytes, UTF-8)
+//!      8     4  u32  name length
+//!     12     1  u8   kind (0 = conv, 1 = linear)
+//!     13     1  u8   has_pot (1 iff any row is PoT — the pot_mult
+//!                    plane exists exactly then)
+//!     14     2  reserved (0)
+//!     16    36  nine u32: rows cols out_ch in_ch kh kw stride pad groups
+//!     52     4  f32  a_alpha
+//!     56     8  u64  scheme offset        (rows bytes, scheme codes)
+//!     64     8  u64  alpha offset         (rows f32, model row order)
+//!     72     8  u64  bias offset          (rows f32)
+//!     80     8  u64  perm offset          (rows u32, sorted → original)
+//!     88     8  u64  codes offset         (rows·cols i8, model order)
+//!     96     8  u64  pot_mult offset      (rows·cols i8, or 0 if no PoT rows)
+//!    104     8  u64  ops offset           (rows·cols i8, sorted order)
+//!    112    48  reserved (0)
+//! ```
+//!
+//! **Alignment**: every section offset (names and manifest included) is
+//! a multiple of 64 — one cache line, and a divisor of the page size, so
+//! a mapped section keeps the alignment the SIMD kernels see on the
+//! owned path. The loader rejects misaligned offsets.
+//!
+//! **Versioning**: the major format version is a hard gate — a reader
+//! only accepts versions it was built for. Room to grow lives in the
+//! reserved header/record fields and the `flags` word, which v1 readers
+//! require to be zero (so a future writer can only set a flag by also
+//! bumping the version if old readers must not load the file).
+//!
+//! **Validation**: magic, version, file length, and checksum are checked
+//! before any section is touched; offsets/lengths go through checked
+//! arithmetic against the real file size; scheme bytes must decode, the
+//! stored permutation must equal the stable class sort recomputed from
+//! the scheme plane, and `has_pot` must match the scheme counts. A
+//! corrupt artifact produces a typed [`crate::util::error::Error`] —
+//! never undefined behavior (pinned by bit-flip/truncation property
+//! tests).
+//!
+//! **Design lineage**: the layout follows tract's NNEF tensor container
+//! (the exemplar this repo's roadmap pointed at): one magic + version
+//! header, a table of fixed-size item records up front so a reader can
+//! plan without scanning, all bulk tensor bytes in aligned sections
+//! aliasable directly from the mapping, and the human-readable graph
+//! description (here: the manifest JSON) embedded verbatim next to the
+//! tensors so one file is the whole model.
+
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::gemm::{PackedWeights, RowPartition, SortedWeights};
+use crate::model::{LayerWeights, Manifest, ModelWeights};
+use crate::quant::Scheme;
+use crate::util::error::{Context, Result};
+use crate::util::json::Json;
+use crate::util::mmap::{MappedFile, Plane, SECTION_ALIGN};
+use crate::{bail, ensure, err};
+
+/// Artifact magic (`RMSW` is the legacy float container).
+pub const MAGIC: &[u8; 4] = b"RMSA";
+/// Format version this build writes and accepts.
+pub const VERSION: u32 = 1;
+const HEADER_LEN: usize = 64;
+const RECORD_LEN: usize = 160;
+
+/// FNV-1a-64 over little-endian u64 words (tail zero-padded), with the
+/// payload length mixed into the final state. Every step is a bijection
+/// of the running state, so any single flipped bit — and any truncation
+/// the length mix sees — changes the digest.
+pub fn checksum(payload: &[u8]) -> u64 {
+    const PRIME: u64 = 0x100000001b3;
+    let mut h = 0xcbf29ce484222325u64;
+    let mut words = payload.chunks_exact(8);
+    for w in words.by_ref() {
+        h = (h ^ u64::from_le_bytes(w.try_into().unwrap())).wrapping_mul(PRIME);
+    }
+    let rem = words.remainder();
+    if !rem.is_empty() {
+        let mut w = [0u8; 8];
+        w[..rem.len()].copy_from_slice(rem);
+        h = (h ^ u64::from_le_bytes(w)).wrapping_mul(PRIME);
+    }
+    (h ^ payload.len() as u64).wrapping_mul(PRIME)
+}
+
+// ---- writer -------------------------------------------------------------
+
+fn pad_to_align(v: &mut Vec<u8>) {
+    v.resize(v.len().next_multiple_of(SECTION_ALIGN), 0);
+}
+
+/// Append one aligned section, returning its offset.
+fn push_section(v: &mut Vec<u8>, bytes: &[u8]) -> u64 {
+    pad_to_align(v);
+    let off = v.len() as u64;
+    v.extend_from_slice(bytes);
+    off
+}
+
+#[inline]
+fn i8_bytes(s: &[i8]) -> &[u8] {
+    // i8 and u8 have identical layout; reinterpreting a shared slice is safe.
+    unsafe { std::slice::from_raw_parts(s.as_ptr() as *const u8, s.len()) }
+}
+
+/// Serialize a model into the `.rmsa` container. The manifest JSON is
+/// validated, then embedded verbatim (so the artifact round-trips the
+/// exact document the export produced).
+pub fn pack(manifest_json: &str, weights: &ModelWeights) -> Result<Vec<u8>> {
+    let j = Json::parse(manifest_json).context("manifest JSON for packing")?;
+    Manifest::from_json(&j).context("manifest for packing")?;
+
+    let n = weights.layers.len();
+    let mut v = vec![0u8; HEADER_LEN + n * RECORD_LEN];
+    let mut records = Vec::with_capacity(n);
+    for l in &weights.layers {
+        ensure!(l.rows < u32::MAX as usize, "layer {:?}: too many rows", l.name);
+        let name_off = push_section(&mut v, l.name.as_bytes());
+        let scheme_bytes: Vec<u8> = l.scheme.iter().map(|&s| s as u8).collect();
+        let scheme_off = push_section(&mut v, &scheme_bytes);
+        let alpha_bytes: Vec<u8> = l.alpha.iter().flat_map(|a| a.to_le_bytes()).collect();
+        let alpha_off = push_section(&mut v, &alpha_bytes);
+        let bias_bytes: Vec<u8> = l.bias.iter().flat_map(|b| b.to_le_bytes()).collect();
+        let bias_off = push_section(&mut v, &bias_bytes);
+        let perm_bytes: Vec<u8> = l
+            .sorted
+            .perm
+            .iter()
+            .flat_map(|&p| (p as u32).to_le_bytes())
+            .collect();
+        let perm_off = push_section(&mut v, &perm_bytes);
+        let codes_off = push_section(&mut v, i8_bytes(&l.packed.codes));
+        let has_pot = !l.packed.pot_mult.is_empty();
+        let pot_mult_off = if has_pot {
+            push_section(&mut v, i8_bytes(&l.packed.pot_mult))
+        } else {
+            0
+        };
+        let ops_off = push_section(&mut v, i8_bytes(l.sorted.op_rows(0, l.sorted.rows)));
+        records.push((name_off, has_pot, scheme_off, alpha_off, bias_off, perm_off, codes_off, pot_mult_off, ops_off));
+    }
+    let manifest_off = push_section(&mut v, manifest_json.as_bytes());
+    let manifest_len = manifest_json.len() as u64;
+
+    // layer table
+    for (i, (l, rec)) in weights.layers.iter().zip(&records).enumerate() {
+        let (name_off, has_pot, scheme_off, alpha_off, bias_off, perm_off, codes_off, pot_mult_off, ops_off) = *rec;
+        let r = HEADER_LEN + i * RECORD_LEN;
+        v[r..r + 8].copy_from_slice(&name_off.to_le_bytes());
+        v[r + 8..r + 12].copy_from_slice(&(l.name.len() as u32).to_le_bytes());
+        v[r + 12] = if l.kind == "conv" { 0 } else { 1 };
+        v[r + 13] = has_pot as u8;
+        let geo = [l.rows, l.cols, l.out_ch, l.in_ch, l.kh, l.kw, l.stride, l.pad, l.groups];
+        for (k, g) in geo.iter().enumerate() {
+            let o = r + 16 + 4 * k;
+            v[o..o + 4].copy_from_slice(&(*g as u32).to_le_bytes());
+        }
+        v[r + 52..r + 56].copy_from_slice(&l.a_alpha.to_le_bytes());
+        for (k, off) in [scheme_off, alpha_off, bias_off, perm_off, codes_off, pot_mult_off, ops_off]
+            .iter()
+            .enumerate()
+        {
+            let o = r + 56 + 8 * k;
+            v[o..o + 8].copy_from_slice(&off.to_le_bytes());
+        }
+    }
+
+    // header
+    v[0..4].copy_from_slice(MAGIC);
+    v[4..8].copy_from_slice(&VERSION.to_le_bytes());
+    let file_len = v.len() as u64;
+    v[8..16].copy_from_slice(&file_len.to_le_bytes());
+    v[24..28].copy_from_slice(&(n as u32).to_le_bytes());
+    // flags at 28..32 stay 0
+    v[32..40].copy_from_slice(&(HEADER_LEN as u64).to_le_bytes());
+    v[40..48].copy_from_slice(&manifest_off.to_le_bytes());
+    v[48..56].copy_from_slice(&manifest_len.to_le_bytes());
+    let sum = checksum(&v[24..]);
+    v[16..24].copy_from_slice(&sum.to_le_bytes());
+    Ok(v)
+}
+
+/// [`pack`] straight to a file.
+pub fn pack_to_file(manifest_json: &str, weights: &ModelWeights, out: &Path) -> Result<()> {
+    let bytes = pack(manifest_json, weights)?;
+    std::fs::write(out, &bytes).with_context(|| format!("writing {}", out.display()))?;
+    Ok(())
+}
+
+// ---- reader -------------------------------------------------------------
+
+fn section<'a>(b: &'a [u8], off: usize, len: usize, what: &str) -> Result<&'a [u8]> {
+    let end = off
+        .checked_add(len)
+        .ok_or_else(|| err!("{what} section range overflows ({off} + {len})"))?;
+    b.get(off..end)
+        .ok_or_else(|| err!("{what} section [{off}, {end}) outside the {}-byte artifact", b.len()))
+}
+
+fn aligned(off: usize, what: &str) -> Result<usize> {
+    ensure!(
+        off % SECTION_ALIGN == 0,
+        "{what} section at byte {off} breaks the {SECTION_ALIGN}-byte alignment rule"
+    );
+    Ok(off)
+}
+
+fn rd_u32(b: &[u8], off: usize) -> Result<u32> {
+    Ok(u32::from_le_bytes(section(b, off, 4, "u32 field")?.try_into().unwrap()))
+}
+
+fn rd_u64_usize(b: &[u8], off: usize) -> Result<usize> {
+    let x = u64::from_le_bytes(section(b, off, 8, "u64 field")?.try_into().unwrap());
+    usize::try_from(x).map_err(|_| err!("offset {x} exceeds the address space"))
+}
+
+fn rd_f32_vec(b: &[u8], off: usize, n: usize, what: &str) -> Result<Vec<f32>> {
+    let raw = section(b, off, 4 * n, what)?;
+    Ok(raw
+        .chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Load an artifact: map the file, validate header + checksum, parse the
+/// embedded manifest, and assemble [`ModelWeights`] whose quantized
+/// planes alias the mapping (float weights are `None` on this path).
+pub fn load(path: &Path) -> Result<(Manifest, ModelWeights)> {
+    let map = Arc::new(MappedFile::open(&path.to_string_lossy())?);
+    load_mapped(map).with_context(|| format!("artifact {}", path.display()))
+}
+
+fn load_mapped(map: Arc<MappedFile>) -> Result<(Manifest, ModelWeights)> {
+    let b = map.bytes();
+    ensure!(b.len() >= HEADER_LEN, "truncated: {} bytes is smaller than the header", b.len());
+    ensure!(&b[0..4] == MAGIC, "bad magic (want RMSA)");
+    let version = rd_u32(b, 4)?;
+    ensure!(version == VERSION, "unsupported artifact version {version} (reader speaks {VERSION})");
+    let file_len = rd_u64_usize(b, 8)?;
+    ensure!(
+        file_len == b.len(),
+        "file length mismatch: header says {file_len}, file holds {} bytes",
+        b.len()
+    );
+    let stored_sum = u64::from_le_bytes(b[16..24].try_into().unwrap());
+    let actual_sum = checksum(&b[24..]);
+    ensure!(
+        stored_sum == actual_sum,
+        "checksum mismatch: stored {stored_sum:#018x}, computed {actual_sum:#018x}"
+    );
+    let n_layers = rd_u32(b, 24)? as usize;
+    let flags = rd_u32(b, 28)?;
+    ensure!(flags == 0, "unknown flags {flags:#x} (v1 defines none)");
+    let table_off = aligned(rd_u64_usize(b, 32)?, "layer table")?;
+    let manifest_off = aligned(rd_u64_usize(b, 40)?, "manifest")?;
+    let manifest_len = rd_u64_usize(b, 48)?;
+
+    let mjson = std::str::from_utf8(section(b, manifest_off, manifest_len, "manifest")?)
+        .map_err(|e| err!("manifest is not UTF-8: {e}"))?;
+    let manifest = Manifest::from_json(&Json::parse(mjson)?).context("embedded manifest")?;
+
+    let table_len = n_layers
+        .checked_mul(RECORD_LEN)
+        .ok_or_else(|| err!("layer count {n_layers} overflows"))?;
+    let table = section(b, table_off, table_len, "layer table")?;
+
+    let mut layers = Vec::with_capacity(n_layers);
+    for i in 0..n_layers {
+        let r = &table[i * RECORD_LEN..(i + 1) * RECORD_LEN];
+        let name_off = aligned(rd_u64_usize(r, 0)?, "name")?;
+        let name_len = rd_u32(r, 8)? as usize;
+        let name = std::str::from_utf8(section(b, name_off, name_len, "name")?)
+            .map_err(|e| err!("layer {i} name is not UTF-8: {e}"))?
+            .to_string();
+        let kind = match r[12] {
+            0 => "conv",
+            1 => "linear",
+            k => bail!("layer {name:?}: unknown kind code {k}"),
+        }
+        .to_string();
+        let has_pot = match r[13] {
+            0 => false,
+            1 => true,
+            k => bail!("layer {name:?}: bad has_pot byte {k}"),
+        };
+        let mut geo = [0usize; 9];
+        for (k, g) in geo.iter_mut().enumerate() {
+            *g = rd_u32(r, 16 + 4 * k)? as usize;
+        }
+        let [rows, cols, out_ch, in_ch, kh, kw, stride, pad, groups] = geo;
+        let elems = rows
+            .checked_mul(cols)
+            .ok_or_else(|| err!("layer {name:?}: shape {rows}x{cols} overflows"))?;
+        let a_alpha = f32::from_le_bytes(r[52..56].try_into().unwrap());
+        let scheme_off = aligned(rd_u64_usize(r, 56)?, "scheme")?;
+        let alpha_off = aligned(rd_u64_usize(r, 64)?, "alpha")?;
+        let bias_off = aligned(rd_u64_usize(r, 72)?, "bias")?;
+        let perm_off = aligned(rd_u64_usize(r, 80)?, "perm")?;
+        let codes_off = aligned(rd_u64_usize(r, 88)?, "codes")?;
+        let pot_mult_off = aligned(rd_u64_usize(r, 96)?, "pot_mult")?;
+        let ops_off = aligned(rd_u64_usize(r, 104)?, "ops")?;
+
+        let scheme: Vec<Scheme> = section(b, scheme_off, rows, "scheme")?
+            .iter()
+            .map(|&c| Scheme::from_code(c).ok_or_else(|| err!("layer {name:?}: bad scheme code {c}")))
+            .collect::<Result<_>>()?;
+        let mut counts = [0usize; 4];
+        for s in &scheme {
+            counts[*s as usize] += 1;
+        }
+        ensure!(
+            has_pot == (counts[0] > 0),
+            "layer {name:?}: has_pot flag disagrees with {} PoT rows",
+            counts[0]
+        );
+        let alpha = rd_f32_vec(b, alpha_off, rows, "alpha")?;
+        let bias = rd_f32_vec(b, bias_off, rows, "bias")?;
+        // the stored permutation must be exactly the stable class sort of
+        // the scheme plane — the layout contract every kernel relies on
+        let perm: Vec<usize> = section(b, perm_off, 4 * rows, "perm")?
+            .chunks_exact(4)
+            .map(|c| u32::from_le_bytes(c.try_into().unwrap()) as usize)
+            .collect();
+        let mut want_perm = Vec::with_capacity(rows);
+        for class in RowPartition::CLASS_ORDER {
+            for (ri, s) in scheme.iter().enumerate() {
+                if *s == class {
+                    want_perm.push(ri);
+                }
+            }
+        }
+        ensure!(
+            perm == want_perm,
+            "layer {name:?}: stored permutation is not the stable class sort"
+        );
+
+        let codes = Plane::mapped(map.clone(), codes_off, elems)?;
+        let pot_mult = if has_pot {
+            Plane::mapped(map.clone(), pot_mult_off, elems)?
+        } else {
+            Plane::empty()
+        };
+        let ops = Plane::mapped(map.clone(), ops_off, elems)?;
+        let sorted_alpha: Vec<f32> = perm.iter().map(|&o| alpha[o]).collect();
+        let packed =
+            PackedWeights::from_parts(rows, cols, codes, pot_mult, scheme.clone(), alpha.clone())
+                .with_context(|| format!("layer {name:?} packed planes"))?;
+        let sorted = SortedWeights::from_parts(rows, cols, ops, perm, sorted_alpha, counts)
+            .with_context(|| format!("layer {name:?} sorted plane"))?;
+        layers.push(LayerWeights {
+            name,
+            kind,
+            rows,
+            cols,
+            out_ch,
+            in_ch,
+            kh,
+            kw,
+            stride,
+            pad,
+            groups,
+            a_alpha,
+            scheme,
+            alpha,
+            bias,
+            w: None,
+            packed,
+            sorted,
+        });
+    }
+    Ok((manifest, ModelWeights { layers }))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::quant::{self, Mat};
+    use crate::util::rng::Rng;
+
+    fn tiny_manifest_json() -> String {
+        r#"{
+          "model": "tiny", "arch": "mlp", "num_classes": 3,
+          "input_shape": [1, 2, 1, 1], "ratio": [65, 30, 5], "act_bits": 4,
+          "layers": [
+            {"name": "fc", "kind": "linear", "rows": 3, "cols": 2,
+             "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+             "scheme_counts": [1, 1, 1, 0]}
+          ],
+          "program": [
+            {"op": "gap", "in": "in0", "out": "b0"},
+            {"op": "linear", "layer": "fc", "in": "b0", "out": "logits"}
+          ]
+        }"#
+        .to_string()
+    }
+
+    fn tiny_weights(seed: u64) -> ModelWeights {
+        let mut rng = Rng::new(seed);
+        let w = Mat::from_vec(3, 2, rng.normal_vec(6, 0.5));
+        let scheme = vec![Scheme::FixedW4A4, Scheme::PotW4A4, Scheme::FixedW8A4];
+        let alpha: Vec<f32> = (0..3).map(|r| quant::default_alpha(w.row(r))).collect();
+        let packed = PackedWeights::quantize(&w, &scheme, &alpha);
+        let sorted = SortedWeights::from_packed(&packed);
+        ModelWeights {
+            layers: vec![LayerWeights {
+                name: "fc".into(),
+                kind: "linear".into(),
+                rows: 3,
+                cols: 2,
+                out_ch: 3,
+                in_ch: 2,
+                kh: 0,
+                kw: 0,
+                stride: 0,
+                pad: 0,
+                groups: 1,
+                a_alpha: 1.0,
+                scheme,
+                alpha: alpha.clone(),
+                bias: vec![0.1, -0.2, 0.3],
+                w: Some(w),
+                packed,
+                sorted,
+            }],
+        }
+    }
+
+    fn write_tmp(name: &str, bytes: &[u8]) -> std::path::PathBuf {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rmsmp-artifact-{}-{}.rmsa", std::process::id(), name));
+        std::fs::write(&p, bytes).unwrap();
+        p
+    }
+
+    #[test]
+    fn pack_load_roundtrip_matches() {
+        let weights = tiny_weights(7);
+        let bytes = pack(&tiny_manifest_json(), &weights).unwrap();
+        let p = write_tmp("roundtrip", &bytes);
+        let (m, loaded) = load(&p).unwrap();
+        assert_eq!(m.model, "tiny");
+        assert_eq!(loaded.layers.len(), 1);
+        let (a, b) = (&weights.layers[0], &loaded.layers[0]);
+        assert_eq!(a.name, b.name);
+        assert_eq!(a.kind, b.kind);
+        assert_eq!(a.scheme, b.scheme);
+        assert_eq!(a.alpha, b.alpha);
+        assert_eq!(a.bias, b.bias);
+        assert_eq!(a.packed.codes, b.packed.codes);
+        assert_eq!(a.packed.pot_mult, b.packed.pot_mult);
+        assert_eq!(a.sorted.perm, b.sorted.perm);
+        assert_eq!(a.sorted.inv, b.sorted.inv);
+        assert_eq!(a.sorted.alpha, b.sorted.alpha);
+        assert_eq!(
+            a.sorted.op_rows(0, a.rows),
+            b.sorted.op_rows(0, b.rows)
+        );
+        assert_eq!(a.sorted.partition(), b.sorted.partition());
+        assert!(b.w.is_none(), "artifact path must not fabricate float weights");
+        assert!(b.packed.codes.is_mapped());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn model_weights_load_dispatches_on_magic() {
+        let weights = tiny_weights(9);
+        let bytes = pack(&tiny_manifest_json(), &weights).unwrap();
+        let p = write_tmp("dispatch", &bytes);
+        let via_load = ModelWeights::load(&p).unwrap();
+        assert_eq!(via_load.layers[0].packed.codes, weights.layers[0].packed.codes);
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn rejects_wrong_magic_version_and_length() {
+        let weights = tiny_weights(11);
+        let good = pack(&tiny_manifest_json(), &weights).unwrap();
+
+        let mut bad = good.clone();
+        bad[0] = b'X';
+        let p = write_tmp("magic", &bad);
+        assert!(load(&p).unwrap_err().to_string().contains("magic"));
+
+        let mut bad = good.clone();
+        bad[4] = 99;
+        std::fs::write(&p, &bad).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("version"));
+
+        std::fs::write(&p, &good[..good.len() - 7]).unwrap();
+        assert!(load(&p).unwrap_err().to_string().contains("length mismatch"));
+
+        std::fs::write(&p, &good[..32]).unwrap();
+        assert!(load(&p).is_err());
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn checksum_catches_any_single_bit_flip() {
+        let weights = tiny_weights(13);
+        let good = pack(&tiny_manifest_json(), &weights).unwrap();
+        let p = write_tmp("flip", &good);
+        assert!(load(&p).is_ok());
+        let mut rng = Rng::new(0xF11B);
+        for _ in 0..40 {
+            let byte = 24 + rng.below((good.len() - 24) as u64) as usize;
+            let bit = rng.below(8) as u8;
+            let mut bad = good.clone();
+            bad[byte] ^= 1 << bit;
+            std::fs::write(&p, &bad).unwrap();
+            let e = load(&p).unwrap_err().to_string();
+            assert!(e.contains("checksum"), "flip at byte {byte} bit {bit}: {e}");
+        }
+        std::fs::remove_file(&p).unwrap();
+    }
+
+    #[test]
+    fn misaligned_section_is_rejected() {
+        let weights = tiny_weights(17);
+        let mut bytes = pack(&tiny_manifest_json(), &weights).unwrap();
+        // nudge the codes offset (record field at 88) off alignment and
+        // re-seal the checksum so only the alignment check can fire
+        let r = HEADER_LEN;
+        let off = u64::from_le_bytes(bytes[r + 88..r + 96].try_into().unwrap());
+        bytes[r + 88..r + 96].copy_from_slice(&(off + 1).to_le_bytes());
+        let sum = checksum(&bytes[24..]);
+        bytes[16..24].copy_from_slice(&sum.to_le_bytes());
+        let p = write_tmp("misaligned", &bytes);
+        let e = load(&p).unwrap_err().to_string();
+        assert!(e.contains("alignment"), "{e}");
+        std::fs::remove_file(&p).unwrap();
+    }
+}

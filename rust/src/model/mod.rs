@@ -4,6 +4,9 @@
 //!   layer table, ratio) via the in-repo JSON parser.
 //! * [`weights`]   — loads `artifacts/weights.bin` (folded weights,
 //!   schemes, alphas) and packs them into [`crate::gemm::PackedWeights`].
+//! * [`artifact`]  — the `.rmsa` packed artifact: the class-sorted,
+//!   PoT-pre-decoded planes baked at export time, checksummed, and
+//!   loaded zero-copy by `mmap` (manifest JSON embedded).
 //! * [`im2col`]    — conv -> GEMM lowering for the integer path, with
 //!   `_into` variants that reuse workspace buffers.
 //! * [`ir`]        — the compiler IR: the manifest lowered to
@@ -21,6 +24,7 @@
 //!   interpreter as the differential-test oracle (`reference_infer`) —
 //!   the deployment path the FPGA simulator models, runnable on CPU.
 
+pub mod artifact;
 pub mod graph;
 pub mod im2col;
 pub(crate) mod ir;

@@ -1,4 +1,9 @@
 //! `weights.bin` loader (format documented in `python/compile/export.py`).
+//!
+//! [`ModelWeights::load`] sniffs the magic and dispatches: `RMSW` is the
+//! legacy float-weight container (parse + quantize + sort at load — the
+//! oracle path), `RMSA` is the packed artifact (`super::artifact`) whose
+//! quantized sections are aliased zero-copy from an `mmap`.
 
 use std::io::Read;
 use std::path::Path;
@@ -28,8 +33,11 @@ pub struct LayerWeights {
     pub scheme: Vec<Scheme>,
     pub alpha: Vec<f32>,
     pub bias: Vec<f32>,
-    /// Float folded weights, (rows, cols) row-major.
-    pub w: Mat,
+    /// Float folded weights, (rows, cols) row-major. `None` on the
+    /// artifact load path — the packed `.rmsa` container stores only the
+    /// quantized planes, so float-weight consumers (the assignment
+    /// engine, the RMSW writer) must load the legacy format.
+    pub w: Option<Mat>,
     /// Integer codes for the GEMM cores (model row order).
     pub packed: PackedWeights,
     /// Class-sorted kernel layout: `packed` permuted once at load so each
@@ -43,6 +51,21 @@ pub struct LayerWeights {
 #[derive(Clone, Debug)]
 pub struct ModelWeights {
     pub layers: Vec<LayerWeights>,
+}
+
+/// `Read::read` until `buf` is full or EOF; returns the bytes read
+/// (plain `read_exact` would error on sub-4-byte files before the
+/// format dispatch gets to reject them with a real message).
+fn read_up_to(f: &mut std::fs::File, buf: &mut [u8]) -> Result<usize> {
+    let mut n = 0;
+    while n < buf.len() {
+        let k = f.read(&mut buf[n..])?;
+        if k == 0 {
+            break;
+        }
+        n += k;
+    }
+    Ok(n)
 }
 
 struct Cursor<'a> {
@@ -82,11 +105,22 @@ impl<'a> Cursor<'a> {
 }
 
 impl ModelWeights {
+    /// Load either weights format, dispatching on the magic: `RMSA`
+    /// artifacts go through the zero-copy [`super::artifact`] loader
+    /// (discarding the embedded manifest — use [`super::artifact::load`]
+    /// to get both), anything else through the legacy `RMSW` parser.
     pub fn load(path: &Path) -> Result<ModelWeights> {
-        let mut buf = Vec::new();
-        std::fs::File::open(path)
-            .with_context(|| format!("opening {}", path.display()))?
-            .read_to_end(&mut buf)?;
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening {}", path.display()))?;
+        let mut magic = [0u8; 4];
+        let got = read_up_to(&mut f, &mut magic)?;
+        if got == 4 && magic == *super::artifact::MAGIC {
+            drop(f);
+            let (_, weights) = super::artifact::load(path)?;
+            return Ok(weights);
+        }
+        let mut buf = magic[..got].to_vec();
+        f.read_to_end(&mut buf)?;
         Self::parse(&buf).with_context(|| format!("parsing {}", path.display()))
     }
 
@@ -142,7 +176,7 @@ impl ModelWeights {
                 scheme,
                 alpha,
                 bias,
-                w,
+                w: Some(w),
                 packed,
                 sorted,
             });
@@ -180,6 +214,43 @@ impl ModelWeights {
     /// Float32 model size in bytes.
     pub fn float_bytes(&self) -> usize {
         self.layers.iter().map(|l| 4 * l.rows * l.cols).sum()
+    }
+
+    /// Serialize back to the legacy `RMSW` v1 container (the inverse of
+    /// [`ModelWeights::parse`]). Requires float weights, so it only works
+    /// on legacy-loaded or crate-built models — the bench harness and the
+    /// pack round-trip tests use it to materialize a `weights.bin` for
+    /// models that were never exported from Python.
+    pub fn to_weights_bin(&self) -> Result<Vec<u8>> {
+        let mut v = Vec::new();
+        v.extend_from_slice(b"RMSW");
+        v.extend_from_slice(&1u32.to_le_bytes());
+        v.extend_from_slice(&(self.layers.len() as u32).to_le_bytes());
+        for l in &self.layers {
+            let w = l
+                .w
+                .as_ref()
+                .ok_or_else(|| err!("layer {:?} holds no float weights (artifact-loaded?)", l.name))?;
+            v.extend_from_slice(&(l.name.len() as u32).to_le_bytes());
+            v.extend_from_slice(l.name.as_bytes());
+            v.push(if l.kind == "conv" { 0 } else { 1 });
+            v.push(0); // relu byte (unused by the parser)
+            for x in [l.rows, l.cols, l.out_ch, l.in_ch, l.kh, l.kw, l.stride, l.pad, l.groups] {
+                v.extend_from_slice(&(x as u32).to_le_bytes());
+            }
+            v.extend_from_slice(&l.a_alpha.to_le_bytes());
+            v.extend(l.scheme.iter().map(|&s| s as u8));
+            for &a in &l.alpha {
+                v.extend_from_slice(&a.to_le_bytes());
+            }
+            for &b in &l.bias {
+                v.extend_from_slice(&b.to_le_bytes());
+            }
+            for &x in &w.data {
+                v.extend_from_slice(&x.to_le_bytes());
+            }
+        }
+        Ok(v)
     }
 }
 
@@ -226,7 +297,7 @@ mod tests {
         assert_eq!(l.name, "fc");
         assert_eq!(l.kind, "linear");
         assert_eq!(l.scheme, vec![Scheme::FixedW4A4, Scheme::PotW4A4]);
-        assert_eq!(l.w.at(0, 0), 0.5);
+        assert_eq!(l.w.as_ref().unwrap().at(0, 0), 0.5);
         assert_eq!(l.bias, vec![0.1, -0.2]);
         // the class-sorted layout is built at load: PoT row 1 sorts ahead
         // of Fixed row 0
@@ -247,6 +318,13 @@ mod tests {
         let mut b = tiny_bin();
         b.push(0);
         assert!(ModelWeights::parse(&b).is_err()); // trailing bytes
+    }
+
+    #[test]
+    fn weights_bin_writer_roundtrips() {
+        let bin = tiny_bin();
+        let m = ModelWeights::parse(&bin).unwrap();
+        assert_eq!(m.to_weights_bin().unwrap(), bin);
     }
 
     #[test]

@@ -1,0 +1,377 @@
+//! Zero-dependency file mapping for weight artifacts.
+//!
+//! The artifact loader (`model::artifact`) wants the file bytes resident
+//! at a stable address for the lifetime of the model so quantized-row
+//! sections can be aliased instead of copied. Two providers, one type:
+//!
+//! * **mmap(2)** — on Linux (x86-64 / aarch64) the file is mapped
+//!   `PROT_READ`/`MAP_PRIVATE` through a raw syscall (no libc binding;
+//!   the build is offline and dependency-free). Load cost is a page-table
+//!   operation, and every process mapping the same artifact shares the
+//!   page cache — N servers hold one copy of the weights.
+//! * **aligned read** — everywhere else (or if the syscall fails) the
+//!   file is read once into a 64-byte-aligned heap buffer. Same
+//!   alignment contract, no page sharing.
+//!
+//! [`Plane`] is the aliasing handle the GEMM-side containers store: a
+//! quantized i8 section that is either `Owned` (legacy parse path — the
+//! oracle) or `Mapped` (a range of a shared [`MappedFile`]). It derefs
+//! to `&[i8]`, so the kernels cannot tell the difference.
+
+use std::fs::File;
+use std::io::Read;
+use std::sync::Arc;
+
+use crate::util::error::{Context, Result};
+use crate::{bail, ensure};
+
+/// Alignment every artifact section is placed on (one cache line; also
+/// divides the page size, so mapped sections keep it automatically).
+pub const SECTION_ALIGN: usize = 64;
+
+/// A read-only file resident in memory: `mmap(2)` when available, an
+/// aligned heap copy otherwise. The bytes live until the last clone of
+/// the owning `Arc<MappedFile>` drops.
+pub struct MappedFile {
+    ptr: *const u8,
+    len: usize,
+    /// True when `ptr` came from mmap (drop = munmap); false when it is
+    /// a heap buffer (drop = dealloc with the 64-byte-aligned layout).
+    mapped: bool,
+}
+
+// The mapping is immutable and private for the lifetime of the value;
+// sharing &[u8] views across threads is safe.
+unsafe impl Send for MappedFile {}
+unsafe impl Sync for MappedFile {}
+
+impl MappedFile {
+    /// Map (or read) `path`. Empty files are valid and hold no pages.
+    pub fn open(path: &str) -> Result<MappedFile> {
+        let mut f = File::open(path).with_context(|| format!("opening artifact {path}"))?;
+        let len = f.metadata().context("artifact metadata")?.len();
+        ensure!(
+            usize::try_from(len).is_ok(),
+            "artifact too large for address space: {len} bytes"
+        );
+        let len = len as usize;
+        if len == 0 {
+            return Ok(MappedFile { ptr: std::ptr::NonNull::<u8>::dangling().as_ptr(), len: 0, mapped: false });
+        }
+        #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+        {
+            use std::os::unix::io::AsRawFd;
+            let addr = unsafe { sys_mmap(len, f.as_raw_fd()) };
+            // Linux returns a small negative errno on failure.
+            if !(-4095..0).contains(&addr) {
+                return Ok(MappedFile { ptr: addr as usize as *const u8, len, mapped: true });
+            }
+            // fall through to the read path (e.g. fd on a no-mmap fs)
+        }
+        Self::aligned_read(&mut f, len)
+    }
+
+    /// Fallback provider: one 64-byte-aligned heap buffer holding the file.
+    fn aligned_read(f: &mut File, len: usize) -> Result<MappedFile> {
+        let layout = std::alloc::Layout::from_size_align(len, SECTION_ALIGN)
+            .map_err(|_| crate::err!("bad artifact buffer layout ({len} bytes)"))?;
+        let ptr = unsafe { std::alloc::alloc(layout) };
+        if ptr.is_null() {
+            bail!("artifact buffer allocation failed ({len} bytes)");
+        }
+        let slice = unsafe { std::slice::from_raw_parts_mut(ptr, len) };
+        if let Err(e) = f.read_exact(slice) {
+            unsafe { std::alloc::dealloc(ptr, layout) };
+            return Err(crate::err!("reading artifact: {e}"));
+        }
+        Ok(MappedFile { ptr, len, mapped: false })
+    }
+
+    /// The whole file.
+    #[inline]
+    pub fn bytes(&self) -> &[u8] {
+        if self.len == 0 {
+            return &[];
+        }
+        unsafe { std::slice::from_raw_parts(self.ptr, self.len) }
+    }
+
+    #[inline]
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    #[inline]
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Whether the bytes are a true `mmap` (page-cache-shared) or the
+    /// aligned-read fallback copy.
+    #[inline]
+    pub fn is_mmapped(&self) -> bool {
+        self.mapped
+    }
+}
+
+impl Drop for MappedFile {
+    fn drop(&mut self) {
+        if self.len == 0 {
+            return;
+        }
+        if self.mapped {
+            #[cfg(all(target_os = "linux", any(target_arch = "x86_64", target_arch = "aarch64")))]
+            unsafe {
+                sys_munmap(self.ptr as usize, self.len);
+            }
+        } else {
+            let layout = std::alloc::Layout::from_size_align(self.len, SECTION_ALIGN)
+                .expect("layout validated at construction");
+            unsafe { std::alloc::dealloc(self.ptr as *mut u8, layout) };
+        }
+    }
+}
+
+impl std::fmt::Debug for MappedFile {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "MappedFile({} bytes, {})",
+            self.len,
+            if self.mapped { "mmap" } else { "aligned read" }
+        )
+    }
+}
+
+// ---- raw syscalls (Linux only; no libc) ---------------------------------
+//
+// mmap(NULL, len, PROT_READ, MAP_PRIVATE, fd, 0) / munmap(addr, len).
+// Syscall numbers differ per arch; both return a negative errno in the
+// result register on failure.
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+unsafe fn sys_mmap(len: usize, fd: i32) -> isize {
+    const SYS_MMAP: isize = 9;
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+    let ret: isize;
+    std::arch::asm!(
+        "syscall",
+        inlateout("rax") SYS_MMAP => ret,
+        in("rdi") 0usize,
+        in("rsi") len,
+        in("rdx") PROT_READ,
+        in("r10") MAP_PRIVATE,
+        in("r8") fd as isize,
+        in("r9") 0usize,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack)
+    );
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "x86_64"))]
+unsafe fn sys_munmap(addr: usize, len: usize) -> isize {
+    const SYS_MUNMAP: isize = 11;
+    let ret: isize;
+    std::arch::asm!(
+        "syscall",
+        inlateout("rax") SYS_MUNMAP => ret,
+        in("rdi") addr,
+        in("rsi") len,
+        lateout("rcx") _,
+        lateout("r11") _,
+        options(nostack)
+    );
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+unsafe fn sys_mmap(len: usize, fd: i32) -> isize {
+    const SYS_MMAP: isize = 222;
+    const PROT_READ: usize = 1;
+    const MAP_PRIVATE: usize = 2;
+    let ret: isize;
+    std::arch::asm!(
+        "svc 0",
+        in("x8") SYS_MMAP,
+        inlateout("x0") 0isize => ret,
+        in("x1") len,
+        in("x2") PROT_READ,
+        in("x3") MAP_PRIVATE,
+        in("x4") fd as isize,
+        in("x5") 0usize,
+        options(nostack)
+    );
+    ret
+}
+
+#[cfg(all(target_os = "linux", target_arch = "aarch64"))]
+unsafe fn sys_munmap(addr: usize, len: usize) -> isize {
+    const SYS_MUNMAP: isize = 215;
+    let ret: isize;
+    std::arch::asm!(
+        "svc 0",
+        in("x8") SYS_MUNMAP,
+        inlateout("x0") addr as isize => ret,
+        in("x1") len,
+        options(nostack)
+    );
+    ret
+}
+
+// ---- Plane: owned-or-mapped i8 section ----------------------------------
+
+/// A quantized i8 section: either crate-built (`Owned`, the legacy parse
+/// path) or a borrowed range of a shared artifact mapping (`Mapped`).
+/// Derefs to `&[i8]`; the GEMM kernels never see the difference.
+#[derive(Clone)]
+pub enum Plane {
+    Owned(Vec<i8>),
+    Mapped {
+        map: Arc<MappedFile>,
+        off: usize,
+        len: usize,
+    },
+}
+
+impl Plane {
+    /// An empty owned section (e.g. a layer with no PoT rows).
+    pub fn empty() -> Plane {
+        Plane::Owned(Vec::new())
+    }
+
+    pub fn owned(v: Vec<i8>) -> Plane {
+        Plane::Owned(v)
+    }
+
+    /// Alias `map[off..off + len]` as i8. Bounds are validated here so
+    /// `deref` stays check-free on the hot path.
+    pub fn mapped(map: Arc<MappedFile>, off: usize, len: usize) -> Result<Plane> {
+        let end = off.checked_add(len).ok_or_else(|| crate::err!("section range overflows"))?;
+        ensure!(
+            end <= map.len(),
+            "section [{off}, {end}) out of bounds of {} mapped bytes",
+            map.len()
+        );
+        Ok(Plane::Mapped { map, off, len })
+    }
+
+    #[inline]
+    pub fn as_slice(&self) -> &[i8] {
+        match self {
+            Plane::Owned(v) => v,
+            Plane::Mapped { map, off, len } => {
+                // Bounds were validated in `mapped`; i8 and u8 share layout.
+                unsafe {
+                    std::slice::from_raw_parts(map.bytes().as_ptr().add(*off) as *const i8, *len)
+                }
+            }
+        }
+    }
+
+    #[inline]
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, Plane::Mapped { .. })
+    }
+}
+
+impl std::ops::Deref for Plane {
+    type Target = [i8];
+
+    #[inline]
+    fn deref(&self) -> &[i8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<i8>> for Plane {
+    fn from(v: Vec<i8>) -> Plane {
+        Plane::Owned(v)
+    }
+}
+
+impl PartialEq for Plane {
+    fn eq(&self, other: &Plane) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl std::fmt::Debug for Plane {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Plane::Owned(v) => write!(f, "Plane::Owned({} bytes)", v.len()),
+            Plane::Mapped { off, len, .. } => {
+                write!(f, "Plane::Mapped({len} bytes at {off})")
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write as _;
+
+    fn tmp_path(name: &str) -> String {
+        let mut p = std::env::temp_dir();
+        p.push(format!("rmsmp-mmap-{}-{}", std::process::id(), name));
+        p.to_string_lossy().into_owned()
+    }
+
+    #[test]
+    fn maps_file_bytes_exactly() {
+        let path = tmp_path("basic");
+        let data: Vec<u8> = (0..=255u8).cycle().take(5000).collect();
+        std::fs::File::create(&path).unwrap().write_all(&data).unwrap();
+        let m = MappedFile::open(&path).unwrap();
+        assert_eq!(m.bytes(), &data[..]);
+        assert_eq!(m.len(), data.len());
+        drop(m);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn empty_file_is_valid() {
+        let path = tmp_path("empty");
+        std::fs::File::create(&path).unwrap();
+        let m = MappedFile::open(&path).unwrap();
+        assert!(m.is_empty());
+        assert_eq!(m.bytes(), &[] as &[u8]);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn missing_file_is_a_clean_error() {
+        assert!(MappedFile::open("/nonexistent/rmsmp-artifact").is_err());
+    }
+
+    #[test]
+    fn aligned_read_fallback_matches() {
+        let path = tmp_path("fallback");
+        let data = vec![7u8; 777];
+        std::fs::File::create(&path).unwrap().write_all(&data).unwrap();
+        let mut f = File::open(&path).unwrap();
+        let m = MappedFile::aligned_read(&mut f, data.len()).unwrap();
+        assert!(!m.is_mmapped());
+        assert_eq!(m.bytes(), &data[..]);
+        assert_eq!(m.bytes().as_ptr() as usize % SECTION_ALIGN, 0);
+        std::fs::remove_file(&path).unwrap();
+    }
+
+    #[test]
+    fn plane_owned_and_mapped_agree() {
+        let path = tmp_path("plane");
+        let data: Vec<u8> = (0..128u8).collect();
+        std::fs::File::create(&path).unwrap().write_all(&data).unwrap();
+        let m = Arc::new(MappedFile::open(&path).unwrap());
+        let p = Plane::mapped(m.clone(), 64, 32).unwrap();
+        let o = Plane::owned((64..96).map(|v| v as i8).collect());
+        assert_eq!(p, o);
+        assert_eq!(p.len(), 32);
+        assert!(p.is_mapped() && !o.is_mapped());
+        assert!(Plane::mapped(m, 100, 64).is_err());
+        std::fs::remove_file(&path).unwrap();
+    }
+}

@@ -16,11 +16,15 @@
 //!   the scoped parallel-for that drives the parallel mixed GEMM.
 //! * [`error`] — string-backed error type + `err!`/`bail!`/`ensure!`
 //!   macros and a `Context` trait (no `anyhow`).
+//! * [`mmap`] — raw-syscall `mmap(2)` file mapping (aligned-read
+//!   fallback) and the owned-or-mapped [`mmap::Plane`] i8 sections the
+//!   artifact loader aliases into (no `memmap2`).
 
 pub mod bench;
 pub mod cli;
 pub mod error;
 pub mod json;
+pub mod mmap;
 pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -9,7 +9,10 @@
 //! f32 edges) and an integer-resident chain where activations flow as
 //! u8 codes through the fused requantization epilogues. The serving
 //! worker loop's batch-packing step (`pack_batch` + infer, the HTTP
-//! request path minus the sockets) is held to the same zero.
+//! request path minus the sockets) is held to the same zero, and so is
+//! the `.rmsa` mapped-artifact load path: weights whose code planes
+//! alias an mmap'd file must run the same steady-state window without
+//! copying them out.
 //!
 //! This file contains exactly one test so no concurrent test can
 //! allocate while the steady-state window is being counted.
@@ -84,18 +87,15 @@ fn layer(
         scheme: schemes,
         alpha,
         bias: vec![0.01; w.rows],
-        w,
+        w: Some(w),
         packed,
         sorted,
     }
 }
 
-/// Every op kind in one model: conv → depthwise conv → residual add →
-/// gap → linear.
-fn model() -> (Manifest, ModelWeights) {
-    let manifest = Manifest::from_json(
-        &Json::parse(
-            r#"{
+/// The mixed-domain model's manifest, kept as a raw string so the
+/// mapped-artifact leg can embed it via `artifact::pack`.
+const MODEL_JSON: &str = r#"{
         "model": "alloc", "arch": "resnet", "num_classes": 3,
         "input_shape": [2, 2, 6, 6], "ratio": [65, 30, 5], "act_bits": 4,
         "layers": [
@@ -116,11 +116,12 @@ fn model() -> (Manifest, ModelWeights) {
           {"op": "gap", "in": "b2", "out": "g0"},
           {"op": "linear", "layer": "fc", "in": "g0", "out": "logits"}
         ]
-      }"#,
-        )
-        .unwrap(),
-    )
-    .unwrap();
+      }"#;
+
+/// Every op kind in one model: conv → depthwise conv → residual add →
+/// gap → linear.
+fn model() -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(&Json::parse(MODEL_JSON).unwrap()).unwrap();
 
     let mut rng = Rng::new(7);
     let schemes4 = vec![
@@ -312,6 +313,20 @@ fn steady_state_infer_performs_zero_allocations() {
             "worker-loop pack+infer touched the allocator {} times",
             after - before
         );
+    }
+
+    // mapped-artifact path: the same mixed-domain model packed into a
+    // `.rmsa` file and loaded back with its code planes aliasing the
+    // mapped bytes — the zero-allocation contract must hold with the
+    // weights resident in the page cache, not the heap
+    {
+        let (_, weights) = model();
+        let path = std::env::temp_dir().join(format!("rmsmp-alloc-{}.rmsa", std::process::id()));
+        rmsmp::model::artifact::pack_to_file(MODEL_JSON, &weights, &path).unwrap();
+        let (manifest, mapped) = rmsmp::model::artifact::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert!(mapped.layers.iter().all(|l| l.w.is_none()));
+        assert_zero_alloc_steady_state("mapped-artifact", manifest, mapped);
     }
 
     // integer-resident chain: u8 codes flow through the fused epilogues

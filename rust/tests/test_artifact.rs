@@ -1,0 +1,225 @@
+//! End-to-end `.rmsa` artifact contract.
+//!
+//! Two guarantees, both load-bearing for deployment:
+//!
+//! * **Bit-identical logits** — a model loaded from a packed artifact
+//!   (code planes aliasing the mapped file) must produce exactly the
+//!   same logits as the same model built in memory from float weights,
+//!   across batch {1, 8} x threads {1, 8} x {scalar, native} ISA. Not
+//!   "close": the artifact stores the exact quantized planes, so any
+//!   difference is a format bug.
+//! * **No undefined behavior on corrupt input** — an artifact with any
+//!   single bit flipped, or truncated at any offset, must fail loading
+//!   with a typed error. Property-tested at random offsets.
+
+use std::path::PathBuf;
+
+use rmsmp::gemm::{PackedWeights, ParallelConfig, SortedWeights};
+use rmsmp::model::weights::{LayerWeights, ModelWeights};
+use rmsmp::model::{artifact, Manifest};
+use rmsmp::prop_assert;
+use rmsmp::quant::tensor::Tensor4;
+use rmsmp::quant::{self, Mat, Scheme};
+use rmsmp::runtime::Runtime;
+use rmsmp::util::json::Json;
+use rmsmp::util::prop::check;
+use rmsmp::util::rng::Rng;
+
+const MANIFEST_JSON: &str = r#"{
+    "model": "artifact-test", "arch": "resnet", "num_classes": 3,
+    "input_shape": [8, 2, 6, 6], "ratio": [65, 30, 5], "act_bits": 4,
+    "layers": [
+      {"name": "c1", "kind": "conv", "rows": 4, "cols": 18,
+       "stride": 1, "pad": 1, "groups": 1, "a_alpha": 1.0,
+       "scheme_counts": [1, 1, 1, 1]},
+      {"name": "fc", "kind": "linear", "rows": 3, "cols": 4,
+       "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+       "scheme_counts": [1, 2, 0, 0]}
+    ],
+    "program": [
+      {"op": "conv", "layer": "c1", "in": "in0", "out": "b0", "relu": true},
+      {"op": "gap", "in": "b0", "out": "b1"},
+      {"op": "linear", "layer": "fc", "in": "b1", "out": "logits"}
+    ]
+  }"#;
+
+fn layer(
+    name: &str,
+    kind: &str,
+    w: Mat,
+    conv: (usize, usize, usize, usize),
+    stride: usize,
+    pad: usize,
+    schemes: Vec<Scheme>,
+) -> LayerWeights {
+    let alpha: Vec<f32> = (0..w.rows).map(|r| quant::default_alpha(w.row(r))).collect();
+    let packed = PackedWeights::quantize(&w, &schemes, &alpha);
+    let sorted = SortedWeights::from_packed(&packed);
+    LayerWeights {
+        name: name.into(),
+        kind: kind.into(),
+        rows: w.rows,
+        cols: w.cols,
+        out_ch: conv.0,
+        in_ch: conv.1,
+        kh: conv.2,
+        kw: conv.3,
+        stride,
+        pad,
+        groups: 1,
+        a_alpha: 1.0,
+        scheme: schemes,
+        alpha,
+        bias: vec![0.02; w.rows],
+        w: Some(w),
+        packed,
+        sorted,
+    }
+}
+
+/// conv (all four row schemes, PoT rows included so the artifact carries
+/// a pre-decoded multiplier plane) -> gap -> fc.
+fn model() -> (Manifest, ModelWeights) {
+    let manifest = Manifest::from_json(&Json::parse(MANIFEST_JSON).unwrap()).unwrap();
+    let mut rng = Rng::new(21);
+    let layers = vec![
+        layer(
+            "c1",
+            "conv",
+            Mat::from_vec(4, 18, rng.normal_vec(4 * 18, 0.5)),
+            (4, 2, 3, 3),
+            1,
+            1,
+            vec![
+                Scheme::PotW4A4,
+                Scheme::FixedW4A4,
+                Scheme::FixedW8A4,
+                Scheme::ApotW4A4,
+            ],
+        ),
+        layer(
+            "fc",
+            "linear",
+            Mat::from_vec(3, 4, rng.normal_vec(12, 0.5)),
+            (3, 4, 1, 1),
+            0,
+            0,
+            vec![Scheme::PotW4A4, Scheme::FixedW4A4, Scheme::FixedW4A4],
+        ),
+    ];
+    (manifest, ModelWeights { layers })
+}
+
+fn tmp_path(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rmsmp-test-{tag}-{}.rmsa", std::process::id()))
+}
+
+fn rand_input(n: usize, seed: u64) -> Tensor4 {
+    let mut rng = Rng::new(seed);
+    let mut x = Tensor4::zeros(n, 2, 6, 6);
+    for v in x.data.iter_mut() {
+        *v = rng.uniform(0.0, 1.0);
+    }
+    x
+}
+
+/// The headline acceptance criterion: legacy in-memory weights and the
+/// mapped artifact agree to the bit over every execution configuration.
+/// One test function so the `RMSMP_ISA` override cannot race a
+/// concurrently running executor build in this binary.
+#[test]
+fn artifact_logits_bit_identical_to_legacy() {
+    let (manifest, weights) = model();
+    let path = tmp_path("parity");
+    artifact::pack_to_file(MANIFEST_JSON, &weights, &path).unwrap();
+    let (am, aw) = artifact::load(&path).unwrap();
+    assert_eq!(am.model, manifest.model);
+    assert!(aw.layers.iter().all(|l| l.w.is_none()));
+
+    for isa in [Some("scalar"), None] {
+        match isa {
+            Some(v) => std::env::set_var("RMSMP_ISA", v),
+            None => std::env::remove_var("RMSMP_ISA"),
+        }
+        for threads in [1usize, 8] {
+            let cfg = ParallelConfig { threads, ..ParallelConfig::default() };
+            let rt = Runtime::new(cfg);
+            let mut legacy = rt.executor(manifest.clone(), weights.clone()).unwrap();
+            let (am, aw) = artifact::load(&path).unwrap();
+            let mut mapped = rt.executor(am, aw).unwrap();
+            for batch in [1usize, 8] {
+                let x = rand_input(batch, 31 + batch as u64);
+                let want = legacy.infer(&x).unwrap().clone();
+                let got = mapped.infer(&x).unwrap();
+                let same = want
+                    .data
+                    .iter()
+                    .zip(&got.data)
+                    .all(|(a, b)| a.to_bits() == b.to_bits());
+                assert!(
+                    same && want.data.len() == got.data.len(),
+                    "logits diverge at isa={isa:?} threads={threads} batch={batch}"
+                );
+            }
+        }
+    }
+    std::env::remove_var("RMSMP_ISA");
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Any single bit flip anywhere in the artifact — header fields, layer
+/// table, quantized planes, manifest JSON, padding — must turn the load
+/// into a clean `Err`, never a wrong model or UB.
+#[test]
+fn any_single_bit_flip_fails_to_load() {
+    let (_, weights) = model();
+    let bytes = artifact::pack(MANIFEST_JSON, &weights).unwrap();
+    let path = tmp_path("bitflip");
+    check("artifact-bit-flip", 64, |g| {
+        let bit = g.usize_in(0, bytes.len() * 8 - 1);
+        let mut corrupt = bytes.clone();
+        corrupt[bit / 8] ^= 1 << (bit % 8);
+        std::fs::write(&path, &corrupt).map_err(|e| e.to_string())?;
+        let res = artifact::load(&path);
+        prop_assert!(
+            res.is_err(),
+            "flip of bit {} (byte {} of {}) loaded successfully",
+            bit,
+            bit / 8,
+            corrupt.len()
+        );
+        Ok(())
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Truncating the artifact at any offset — mid-header, mid-plane, or
+/// just shy of the final byte — must fail with a typed error.
+#[test]
+fn any_truncation_fails_to_load() {
+    let (_, weights) = model();
+    let bytes = artifact::pack(MANIFEST_JSON, &weights).unwrap();
+    let path = tmp_path("truncate");
+    check("artifact-truncate", 64, |g| {
+        let keep = g.usize_in(0, bytes.len() - 1);
+        std::fs::write(&path, &bytes[..keep]).map_err(|e| e.to_string())?;
+        let res = artifact::load(&path);
+        prop_assert!(res.is_err(), "truncation to {keep} of {} bytes loaded", bytes.len());
+        Ok(())
+    });
+    let _ = std::fs::remove_file(&path);
+}
+
+/// Appending trailing garbage must also fail: `file_len` in the header
+/// pins the exact byte length, so a concatenated or padded file cannot
+/// silently alias the wrong tail.
+#[test]
+fn trailing_garbage_fails_to_load() {
+    let (_, weights) = model();
+    let mut bytes = artifact::pack(MANIFEST_JSON, &weights).unwrap();
+    bytes.extend_from_slice(&[0xAB; 7]);
+    let path = tmp_path("tail");
+    std::fs::write(&path, &bytes).unwrap();
+    assert!(artifact::load(&path).is_err());
+    let _ = std::fs::remove_file(&path);
+}

@@ -52,7 +52,7 @@ fn layer(
         scheme: schemes,
         alpha,
         bias,
-        w,
+        w: Some(w),
         packed,
         sorted,
     }

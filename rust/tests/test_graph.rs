@@ -41,7 +41,7 @@ fn layer(
         scheme: schemes,
         alpha,
         bias: vec![0.0; w.rows],
-        w,
+        w: Some(w),
         packed,
         sorted,
     }
@@ -103,7 +103,7 @@ fn reference(weights: &ModelWeights, x: &Tensor4) -> Mat {
     let g = MixedGemm::new();
     let c1 = &weights.layers[0];
     let (patches, oh, ow) = im2col(x, 3, 1, 1);
-    let y = g.run_float(&patches, &c1.w, &c1.scheme, &c1.alpha, 1.0, 4);
+    let y = g.run_float(&patches, c1.w.as_ref().unwrap(), &c1.scheme, &c1.alpha, 1.0, 4);
     let mut t = col2im(&y, x.n, 4, oh, ow);
     for v in t.data.iter_mut() {
         if *v < 0.0 {
@@ -124,7 +124,7 @@ fn reference(weights: &ModelWeights, x: &Tensor4) -> Mat {
         }
     }
     let fc = &weights.layers[1];
-    g.run_float(&m, &fc.w, &fc.scheme, &fc.alpha, 1.0, 4)
+    g.run_float(&m, fc.w.as_ref().unwrap(), &fc.scheme, &fc.alpha, 1.0, 4)
 }
 
 #[test]

@@ -64,7 +64,7 @@ fn rand_layer(
         scheme: schemes,
         alpha,
         bias,
-        w,
+        w: Some(w),
         packed,
         sorted,
     }

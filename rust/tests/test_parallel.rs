@@ -186,7 +186,7 @@ fn tiny_model(seed: u64) -> (Manifest, ModelWeights) {
             scheme: schemes,
             alpha,
             bias: vec![0.0; 3],
-            w,
+            w: Some(w),
             packed,
             sorted,
         }],

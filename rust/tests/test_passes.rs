@@ -64,7 +64,7 @@ fn layer(
         scheme: schemes,
         alpha,
         bias,
-        w,
+        w: Some(w),
         packed,
         sorted,
     }

@@ -54,7 +54,7 @@ fn layer(
         scheme: schemes,
         alpha,
         bias,
-        w,
+        w: Some(w),
         packed,
         sorted,
     }

@@ -51,7 +51,7 @@ fn tiny(seed: u64, schemes: Vec<Scheme>) -> (Manifest, ModelWeights) {
             scheme: schemes,
             alpha,
             bias: vec![0.0; 3],
-            w,
+            w: Some(w),
             packed,
             sorted,
         }],

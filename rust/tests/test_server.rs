@@ -8,7 +8,7 @@ use std::time::Duration;
 
 use rmsmp::coordinator::batcher::BatchPolicy;
 use rmsmp::coordinator::{
-    HttpConfig, HttpServer, OpenLoopGen, Server, ServerConfig, SimpleClient, SubmitError,
+    HttpConfig, HttpServer, OpenLoopGen, Router, Server, ServerConfig, SimpleClient, SubmitError,
 };
 use rmsmp::gemm::{PackedWeights, ParallelConfig, SortedWeights};
 use rmsmp::model::weights::LayerWeights;
@@ -213,7 +213,7 @@ fn tiny(seed: u64) -> (Manifest, ModelWeights) {
             scheme: schemes,
             alpha,
             bias: vec![0.0; 3],
-            w,
+            w: Some(w),
             packed,
             sorted,
         }],
@@ -444,6 +444,107 @@ fn http_metrics_exposes_per_stage_timers() {
     let resp = c.request("GET", "/healthz", "").unwrap();
     assert_eq!(resp.status, 200);
     assert_eq!(resp.body, "ok\n");
+    http.shutdown();
+}
+
+/// A `tiny`-shaped model under a caller-chosen name, returned with its
+/// manifest JSON so the multi-model test can pack it into a `.rmsa`.
+fn tiny_named(name: &str, seed: u64) -> (String, ModelWeights) {
+    let json = format!(
+        r#"{{
+        "model": "{name}", "arch": "resnet", "num_classes": 3,
+        "input_shape": [1, 2, 4, 4], "ratio": [65, 30, 5], "act_bits": 4,
+        "layers": [
+          {{"name": "fc", "kind": "linear", "rows": 3, "cols": 2,
+           "stride": 0, "pad": 0, "groups": 1, "a_alpha": 1.0,
+           "scheme_counts": [1, 1, 1, 0]}}
+        ],
+        "program": [
+          {{"op": "gap", "in": "in0", "out": "b0"}},
+          {{"op": "linear", "layer": "fc", "in": "b0", "out": "logits"}}
+        ]
+      }}"#
+    );
+    let (_, weights) = tiny(seed);
+    (json, weights)
+}
+
+/// Multi-model resident serving end to end: two differently named models
+/// packed into `.rmsa` artifacts, loaded back (mapped planes), booted
+/// under one Router sharing a thread pool, and served over real sockets.
+/// Requests route on the `model` field, each model keeps its own
+/// `/metrics` labels, and an unknown model maps to 404.
+#[test]
+fn http_serves_two_resident_rmsa_models() {
+    use rmsmp::model::artifact;
+
+    let tmp = std::env::temp_dir();
+    let mut models = Vec::new();
+    for (name, seed) in [("alpha", 1u64), ("beta", 2)] {
+        let (json, weights) = tiny_named(name, seed);
+        let path = tmp.join(format!("rmsmp-serve-{name}-{}.rmsa", std::process::id()));
+        artifact::pack_to_file(&json, &weights, &path).unwrap();
+        let (m, w) = artifact::load(&path).unwrap();
+        let _ = std::fs::remove_file(&path);
+        assert_eq!(m.model, name);
+        models.push((
+            m.model.clone(),
+            m,
+            w,
+            ServerConfig { workers: 1, policy: quick_policy(), parallel: ParallelConfig::sequential() },
+        ));
+    }
+    let router = Router::start(models).unwrap();
+    let http = HttpServer::start_router(
+        router,
+        HttpConfig { conn_threads: 4, ..HttpConfig::default() },
+    )
+    .unwrap();
+    let addr = http.addr().to_string();
+
+    // per-model reference logits straight from legacy (unpacked) weights
+    let img: Vec<f32> = (0..32).map(|i| ((i * 5) % 13) as f32 / 13.0).collect();
+    let mut want = std::collections::BTreeMap::new();
+    for (name, seed) in [("alpha", 1u64), ("beta", 2)] {
+        let (m, w) = tiny(seed);
+        let mut exec = Executor::new(m, w).unwrap();
+        let mut x = rmsmp::quant::tensor::Tensor4::zeros(1, 2, 4, 4);
+        x.data.copy_from_slice(&img);
+        want.insert(name, exec.infer(&x).unwrap().row(0).to_vec());
+    }
+    assert_ne!(want["alpha"], want["beta"], "seeds must give distinct models");
+
+    let mut c = SimpleClient::connect(&addr).unwrap();
+    for name in ["alpha", "beta"] {
+        let body = body_for(&img, &format!("\"model\":\"{name}\","));
+        let resp = c.request("POST", "/v1/infer", &body).unwrap();
+        assert_eq!(resp.status, 200, "{}", resp.body);
+        let j = Json::parse(&resp.body).unwrap();
+        let got = j.get("logits").unwrap().as_f32_vec().unwrap();
+        assert_eq!(got, want[name], "model {name} served wrong logits");
+    }
+
+    // no model field -> the first registered variant (alpha) answers
+    let resp = c.request("POST", "/v1/infer", &body_for(&img, "")).unwrap();
+    assert_eq!(resp.status, 200, "{}", resp.body);
+    let j = Json::parse(&resp.body).unwrap();
+    assert_eq!(j.get("logits").unwrap().as_f32_vec().unwrap(), want["alpha"]);
+
+    // unknown model -> 404, connection stays usable
+    let resp = c
+        .request("POST", "/v1/infer", &body_for(&img, "\"model\":\"gamma\","))
+        .unwrap();
+    assert_eq!(resp.status, 404, "{}", resp.body);
+
+    // per-model metrics: each variant counts its own traffic
+    let metrics = c.request("GET", "/metrics", "").unwrap();
+    assert_eq!(metrics.status, 200);
+    for needle in [
+        "rmsmp_requests_total{model=\"alpha\"} 2",
+        "rmsmp_requests_total{model=\"beta\"} 1",
+    ] {
+        assert!(metrics.body.contains(needle), "missing {needle} in:\n{}", metrics.body);
+    }
     http.shutdown();
 }
 

@@ -213,7 +213,7 @@ fn layer(
         scheme: schemes,
         alpha,
         bias,
-        w,
+        w: Some(w),
         packed,
         sorted,
     }
